@@ -1,0 +1,50 @@
+//! Fabric explorer: sweep the experiment space and print the paper's
+//! tables/figures plus extra design-space points (geometries, precisions).
+//!
+//! ```text
+//! cargo run --release --example fabric_explorer
+//! ```
+
+use comperam::bitline::Geometry;
+use comperam::cost::{self, CycleModel, Op, Precision};
+use comperam::report;
+use comperam::ucode::VecLayout;
+
+fn main() -> anyhow::Result<()> {
+    // the paper's own evaluation
+    print!("{}", report::table2());
+    print!("{}", report::fig4(CycleModel::Paper)?.1);
+    print!("{}", report::fig5(CycleModel::Paper)?.1);
+    print!("{}", report::fig6(CycleModel::Paper)?.1);
+    print!("{}", report::headline(CycleModel::Paper)?);
+
+    // beyond the paper: precision sweep of Compute RAM throughput (the
+    // "fully adaptable to any precision" §IV-C claim, quantified)
+    println!("\n=== Precision sweep: Compute RAM GOPS (512x40 block) ===");
+    println!("{:>6} {:>10} {:>10}", "width", "add GOPS", "mul GOPS");
+    for w in [2u32, 3, 4, 6, 8, 12, 16] {
+        println!(
+            "{:>6} {:>10.2} {:>10.3}",
+            format!("int{w}"),
+            cost::cram_gops(Op::Add, Precision::Int(w), 40),
+            cost::cram_gops(Op::Mul, Precision::Int(w), 40),
+        );
+    }
+
+    // geometry trade-off: ops per block vs parallel columns
+    println!("\n=== Geometry trade-off (int8 add) ===");
+    println!("{:>10} {:>8} {:>12} {:>14}", "geometry", "cols", "ops/block", "add GOPS");
+    for geom in [Geometry::G512x40, Geometry::G1024x20, Geometry::G2048x10, Geometry::G285x72]
+    {
+        let l = VecLayout::new(geom, 8, 8);
+        println!(
+            "{:>10} {:>8} {:>12} {:>14.2}",
+            format!("{}x{}", geom.rows(), geom.cols()),
+            geom.cols(),
+            l.total_ops(),
+            cost::cram_gops(Op::Add, Precision::Int(8), geom.cols()),
+        );
+    }
+    println!("\n(wider + shallower wins on throughput; the paper's §V-D future-work point)");
+    Ok(())
+}

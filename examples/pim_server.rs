@@ -1,0 +1,89 @@
+//! PIM-as-a-service demo: start the batching TCP server, fire concurrent
+//! clients at it, and report latency/throughput percentiles.
+//!
+//! ```text
+//! cargo run --release --example pim_server
+//! ```
+//!
+//! The server coalesces queued requests into block-filling batches before
+//! dispatching to the Compute RAM farm — the router/batcher shape of a
+//! serving system, with the PIM fabric as the backend.
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::server::PimServer;
+use comperam::coordinator::Coordinator;
+use comperam::util::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Arc::new(Coordinator::new(Geometry::G512x40, 8));
+    let server = PimServer::start(coord.clone(), Duration::from_millis(2))?;
+    println!("server on {} (8 blocks, 2 ms batch window)", server.addr);
+
+    let clients = 8;
+    let reqs_per_client = 25;
+    let mut handles = Vec::new();
+    let t0 = Instant::now();
+    for t in 0..clients {
+        let addr = server.addr;
+        handles.push(std::thread::spawn(move || -> Vec<Duration> {
+            let mut lat = Vec::new();
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.set_nodelay(true).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            for i in 0..reqs_per_client {
+                let id = t * 1000 + i;
+                let a: Vec<String> = (0..64).map(|j| ((i + j) % 100).to_string()).collect();
+                let b: Vec<String> = (0..64).map(|j| ((t + j) % 50).to_string()).collect();
+                let req = format!(
+                    r#"{{"id": {id}, "op": "add", "w": 8, "a": [{}], "b": [{}]}}"#,
+                    a.join(","),
+                    b.join(",")
+                );
+                let t1 = Instant::now();
+                writeln!(conn, "{req}").unwrap();
+                let mut resp = String::new();
+                reader.read_line(&mut resp).unwrap();
+                lat.push(t1.elapsed());
+                let v = Json::parse(resp.trim()).unwrap();
+                assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+            }
+            lat
+        }));
+    }
+    let mut lats: Vec<Duration> = Vec::new();
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    lats.sort();
+    let total = clients * reqs_per_client;
+    let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
+    println!("requests: {total} over {wall:?}");
+    println!(
+        "throughput: {:.0} req/s ({:.0} scalar ops/s through the farm)",
+        total as f64 / wall.as_secs_f64(),
+        (total * 64) as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50={:?} p90={:?} p99={:?} max={:?}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        lats.last().unwrap()
+    );
+    println!("server metrics: {}", coord.metrics.snapshot());
+    let jobs = coord
+        .metrics
+        .jobs_completed
+        .load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "batching: {total} requests -> {jobs} farm jobs ({:.1} reqs/batch avg)",
+        total as f64 / jobs as f64
+    );
+    server.stop();
+    Ok(())
+}

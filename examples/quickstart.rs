@@ -1,0 +1,56 @@
+//! Quickstart: one Compute RAM block, the paper's §III-B usage flow.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks through the full life of a computation: storage mode -> load
+//! operands (transposed) -> load microcode -> compute mode -> start ->
+//! done -> read results; then the same thing via the one-call helper API.
+
+use comperam::bitline::{transpose, Geometry};
+use comperam::cram::{ops, CramBlock, Mode};
+use comperam::ucode;
+
+fn main() -> anyhow::Result<()> {
+    // ---- the explicit, port-level flow (what external logic would do) ----
+    let geom = Geometry::G512x40;
+    let mut block = CramBlock::new(geom);
+
+    // generate int8 add microcode and its layout contract
+    let (prog, layout) = ucode::int::add(geom, 8);
+    println!("microcode `{}`: {} instructions", prog.name, prog.len());
+    println!("{}", &prog.listing());
+
+    // storage mode: stage operands in the transposed (bit-serial) layout
+    let a: Vec<i64> = (0..layout.total_ops() as i64).map(|i| (i % 200) - 100).collect();
+    let b: Vec<i64> = (0..layout.total_ops() as i64).map(|i| ((i * 7) % 150) - 75).collect();
+    transpose::store_ints(block.array_mut(), &a, 8, 0, layout.tuple_bits);
+    transpose::store_ints(block.array_mut(), &b, 8, 8, layout.tuple_bits);
+
+    // configuration-time program load, then flip to compute mode and start
+    block.load_program(&prog)?;
+    block.set_mode(Mode::Compute)?;
+    let stats = block.run_to_done(10_000_000)?;
+    println!(
+        "ran {} ops in {} array cycles ({} total cycles, {} instructions)",
+        layout.total_ops(),
+        stats.array_cycles,
+        stats.cycles,
+        stats.instructions
+    );
+
+    // back to storage mode; read the results
+    block.set_mode(Mode::Storage)?;
+    let r = transpose::load_ints(block.array(), a.len(), 8, 16, layout.tuple_bits);
+    for i in [0usize, 1, 2, 839] {
+        println!("  a[{i}] + b[{i}] = {} + {} = {}", a[i], b[i], r[i]);
+    }
+
+    // ---- the same computation through the helper API ----
+    let mut block2 = CramBlock::new(geom);
+    let out = ops::int_addsub(&mut block2, &a, &b, 8, false)?;
+    assert_eq!(out.values, r);
+    println!("helper API agrees; done.");
+    Ok(())
+}

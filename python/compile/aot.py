@@ -1,0 +1,93 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Outputs, under ``artifacts/``:
+  <name>.hlo.txt   — one per entry point in model.entry_points()
+  manifest.json    — name -> {path, args: [[dims...], ...], constants}
+                     consumed by rust/src/runtime/.
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text-v1",
+        "constants": {
+            "geom_rows": model.GEOM_ROWS,
+            "geom_cols": model.GEOM_COLS,
+            "dot_k_i4": model.DOT_K[4],
+            "dot_k_i8": model.DOT_K[8],
+            "dot_cols_wide": model.DOT_COLS_WIDE,
+            "mlp": {
+                "batch": model.MLP_BATCH,
+                "d_in": model.MLP_IN,
+                "d_hid": model.MLP_HID,
+                "d_out": model.MLP_OUT,
+                "requant_shift": model.MLP_SHIFT,
+            },
+        },
+        "entries": {},
+    }
+    for name, (fn, specs) in model.entry_points().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "path": fname,
+            "args": [list(s.shape) for s in specs],
+            "dtype": "i32",
+        }
+        print(f"  aot: {name:14s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--only", nargs="*", help="subset of entry points")
+    args = p.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".hlo.txt"):  # Makefile passes the sentinel file
+        out_dir = os.path.dirname(out_dir)
+    m = build_all(out_dir, args.only)
+    # sentinel used by the Makefile dependency rule
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("\n".join(sorted(m["entries"])) + "\n")
+    print(f"aot: wrote {len(m['entries'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""L1 Pallas kernels: bit-serial arithmetic over transposed bit-planes.
+
+These kernels are the compute hot-spot of the Compute RAM paper, re-thought
+for a TPU-style memory hierarchy (see DESIGN.md §Hardware-Adaptation):
+
+* a Compute RAM **column** (bit-line + sense amp + carry/tag latch) maps to a
+  **vector lane** of a bit-plane row;
+* **multi-row activation** (read two wordlines, sense AND/NOR) maps to an
+  elementwise op on two bit-plane slices;
+* the **controller's wordline sequencing** maps to a sequential scan over the
+  bit index — exactly the serial schedule the hardware executes;
+* the whole ``[W, TILE]`` bit-plane tile is VMEM-resident per grid step
+  (BlockSpec tiles the column axis), so the bit loop never touches HBM.
+
+All kernels run with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Numerics are bit-exact
+against :mod:`ref` (pure jnp) and against the rust microcode simulator.
+
+Dataflow conventions match :mod:`ref`: int32 0/1 planes, LSB-first, two's
+complement at width ``W``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default column-tile width.  40 columns is one 512x40 Compute RAM; we tile
+# wider for throughput when emulating a farm of blocks.
+DEFAULT_TILE = 256
+
+
+def _pick_tile(n: int, tile: int | None) -> int:
+    t = tile or DEFAULT_TILE
+    t = min(t, n)
+    while n % t != 0:  # shapes are static at AOT time; find a clean divisor
+        t -= 1
+    return max(t, 1)
+
+
+# ---------------------------------------------------------------------------
+# plane-level primitives (the "logic peripherals")
+# ---------------------------------------------------------------------------
+
+
+def _full_add_step(carry, xy):
+    """One array cycle: sense two bits, produce sum + next carry.
+
+    BL senses A.B, BLB senses ~A.~B; the peripheral derives XOR and the
+    carry latch holds C between cycles — this is that datapath on a whole
+    plane of columns at once.
+    """
+    xb, yb = xy
+    s = xb ^ yb ^ carry
+    c = (xb & yb) | (carry & (xb ^ yb))
+    return c, s
+
+
+def _add_planes(x, y, carry_in):
+    """Ripple add two [P, T] plane stacks; returns (sum [P, T], carry [T])."""
+    carry, s = jax.lax.scan(_full_add_step, carry_in, (x, y))
+    return s, carry
+
+
+def _sub_planes(x, y):
+    """x - y via x + ~y + 1 (carry-in forced to 1, as the microcode does)."""
+    carry_in = jnp.ones(x.shape[1:], dtype=x.dtype)
+    return _add_planes(x, 1 - y, carry_in)
+
+
+def _sext_shift(a, out_w: int, shift: int):
+    """Sign-extend [W, T] planes to ``out_w`` and shift left by ``shift``.
+
+    In hardware this is free: the controller simply addresses higher rows.
+    """
+    w = a.shape[0]
+    sign = jnp.broadcast_to(a[w - 1], (out_w - w,) + a.shape[1:])
+    ext = jnp.concatenate([a, sign], axis=0)
+    if shift == 0:
+        return ext
+    zeros = jnp.zeros((shift,) + a.shape[1:], dtype=a.dtype)
+    return jnp.concatenate([zeros, ext[: out_w - shift]], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    carry_in = jnp.zeros(a.shape[1:], dtype=a.dtype)
+    s, _ = _add_planes(a, b, carry_in)
+    o_ref[...] = s
+
+
+def _sub_kernel(a_ref, b_ref, o_ref):
+    s, _ = _sub_planes(a_ref[...], b_ref[...])
+    o_ref[...] = s
+
+
+def _mul_kernel(a_ref, b_ref, o_ref, *, w: int):
+    """Signed WxW -> 2W shift-and-add; the tag latch (b's bit) predicates
+    each partial-product add, and the final (sign-weighted) partial product
+    is subtracted — the standard bit-serial signed multiply."""
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = jnp.zeros((2 * w,) + a.shape[1:], dtype=a.dtype)
+    for i in range(w):
+        addend = _sext_shift(a, 2 * w, i) * b[i][None, :]
+        if i < w - 1:
+            acc, _ = _add_planes(
+                acc, addend, jnp.zeros(a.shape[1:], dtype=a.dtype)
+            )
+        else:
+            acc, _ = _sub_planes(acc, addend)
+    o_ref[...] = acc
+
+
+def _dot_kernel(a_ref, b_ref, o_ref, *, w: int, k: int, accw: int):
+    """C dot products of length K: serial MACs within a column, exactly the
+    schedule of Fig. 2 in the paper (tag-predicated adds, one bit of the
+    multiplier per pass)."""
+    a = a_ref[...]  # [W, K, T]
+    b = b_ref[...]
+
+    def mac(acc, ab):
+        ak, bk = ab  # [W, T]
+        for i in range(w):
+            addend = _sext_shift(ak, accw, i) * bk[i][None, :]
+            if i < w - 1:
+                acc, _ = _add_planes(
+                    acc, addend, jnp.zeros(acc.shape[1:], dtype=acc.dtype)
+                )
+            else:
+                acc, _ = _sub_planes(acc, addend)
+        return acc, None
+
+    acc0 = jnp.zeros((accw,) + a.shape[2:], dtype=a.dtype)
+    acc, _ = jax.lax.scan(mac, acc0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    o_ref[...] = acc
+
+
+# ---------------------------------------------------------------------------
+# public wrappers (pallas_call with column tiling)
+# ---------------------------------------------------------------------------
+
+
+def bitserial_add(a_bits, b_bits, *, tile: int | None = None):
+    """(a + b) mod 2^W over [W, N] planes."""
+    w, n = a_bits.shape
+    t = _pick_tile(n, tile)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((w, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((w, n), jnp.int32),
+        interpret=True,
+    )(a_bits, b_bits)
+
+
+def bitserial_sub(a_bits, b_bits, *, tile: int | None = None):
+    """(a - b) mod 2^W over [W, N] planes."""
+    w, n = a_bits.shape
+    t = _pick_tile(n, tile)
+    return pl.pallas_call(
+        _sub_kernel,
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((w, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((w, n), jnp.int32),
+        interpret=True,
+    )(a_bits, b_bits)
+
+
+def bitserial_mul(a_bits, b_bits, *, tile: int | None = None):
+    """Signed WxW -> 2W-bit product over [W, N] planes."""
+    w, n = a_bits.shape
+    t = _pick_tile(n, tile)
+    return pl.pallas_call(
+        functools.partial(_mul_kernel, w=w),
+        grid=(n // t,),
+        in_specs=[
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+            pl.BlockSpec((w, t), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((2 * w, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((2 * w, n), jnp.int32),
+        interpret=True,
+    )(a_bits, b_bits)
+
+
+def bitserial_dot(a_bits, b_bits, *, accw: int = 32, tile: int | None = None):
+    """C dots of K signed W-bit pairs: [W, K, C] x2 -> [accw, C] planes."""
+    w, k, c = a_bits.shape
+    t = _pick_tile(c, tile)
+    return pl.pallas_call(
+        functools.partial(_dot_kernel, w=w, k=k, accw=accw),
+        grid=(c // t,),
+        in_specs=[
+            pl.BlockSpec((w, k, t), lambda j: (0, 0, j)),
+            pl.BlockSpec((w, k, t), lambda j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((accw, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((accw, c), jnp.int32),
+        interpret=True,
+    )(a_bits, b_bits)

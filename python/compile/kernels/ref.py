@@ -1,0 +1,118 @@
+"""Pure-jnp correctness oracle for the bit-serial Pallas kernels.
+
+The Compute RAM stores operands *transposed*: the W bits of an element occupy
+one column across W wordlines (rows).  We model that layout as an int32
+"bit-plane" tensor of shape ``[W, N]`` whose entries are 0/1 — plane ``i``
+holds bit ``i`` (LSB-first) of all ``N`` elements.  Values are two's
+complement at width ``W``.
+
+Everything here is plain jnp integer arithmetic on the *packed* values; the
+Pallas kernels in :mod:`bitserial` must match these oracles bit-for-bit.  The
+rust simulator (``rust/src/ucode``) implements the same semantics in
+microcode, and is cross-checked against the AOT'd HLO of these ops.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# bit-plane <-> packed conversions
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """[W, N] 0/1 planes (LSB first) -> unsigned packed int32 [N]."""
+    w = bits.shape[0]
+    weights = (jnp.int32(1) << jnp.arange(w, dtype=jnp.int32))[:, None]
+    return jnp.sum(bits.astype(jnp.int32) * weights, axis=0, dtype=jnp.int32)
+
+
+def pack_bits_signed(bits: jnp.ndarray) -> jnp.ndarray:
+    """[W, N] planes -> signed (two's complement at width W) int32 [N]."""
+    w = bits.shape[0]
+    u = pack_bits(bits)
+    sign = bits[w - 1].astype(jnp.int32)
+    return u - (sign << w)
+
+
+def unpack_bits(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Packed int32 [N] -> [width, N] 0/1 planes (two's complement)."""
+    x = x.astype(jnp.int32)
+    shifts = jnp.arange(width, dtype=jnp.int32)[:, None]
+    return (jnp.right_shift(x[None, :], shifts) & 1).astype(jnp.int32)
+
+
+def np_pack_signed(bits: np.ndarray) -> np.ndarray:
+    """NumPy twin of :func:`pack_bits_signed` for test harnesses."""
+    w = bits.shape[0]
+    u = (bits.astype(np.int64) << np.arange(w, dtype=np.int64)[:, None]).sum(0)
+    return (u - (bits[w - 1].astype(np.int64) << w)).astype(np.int64)
+
+
+def np_unpack(x: np.ndarray, width: int) -> np.ndarray:
+    """NumPy twin of :func:`unpack_bits`."""
+    x = np.asarray(x, dtype=np.int64)
+    shifts = np.arange(width, dtype=np.int64)[:, None]
+    return ((x[None, :] >> shifts) & 1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# oracles (operate on bit-planes, return bit-planes)
+# ---------------------------------------------------------------------------
+
+
+def _wrap(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Reduce packed int32 values mod 2**width (as unsigned field)."""
+    mask = jnp.int32((1 << width) - 1) if width < 32 else jnp.int32(-1)
+    return x & mask
+
+
+def ref_add(a_bits: jnp.ndarray, b_bits: jnp.ndarray) -> jnp.ndarray:
+    """W-bit two's-complement add with wraparound: (a + b) mod 2^W."""
+    w = a_bits.shape[0]
+    s = pack_bits(a_bits) + pack_bits(b_bits)
+    return unpack_bits(_wrap(s, w), w)
+
+
+def ref_sub(a_bits: jnp.ndarray, b_bits: jnp.ndarray) -> jnp.ndarray:
+    """W-bit two's-complement subtract with wraparound."""
+    w = a_bits.shape[0]
+    d = pack_bits(a_bits) - pack_bits(b_bits)
+    return unpack_bits(_wrap(d, w), w)
+
+
+def ref_mul(a_bits: jnp.ndarray, b_bits: jnp.ndarray) -> jnp.ndarray:
+    """Signed WxW -> 2W-bit product (two's complement, exact)."""
+    w = a_bits.shape[0]
+    p = pack_bits_signed(a_bits) * pack_bits_signed(b_bits)
+    return unpack_bits(_wrap(p, 2 * w), 2 * w)
+
+
+def ref_mac(
+    a_bits: jnp.ndarray, b_bits: jnp.ndarray, acc_bits: jnp.ndarray
+) -> jnp.ndarray:
+    """acc += a*b where acc is ACCW-bit two's complement (wraparound)."""
+    accw = acc_bits.shape[0]
+    acc = pack_bits(acc_bits) + pack_bits_signed(a_bits) * pack_bits_signed(b_bits)
+    return unpack_bits(_wrap(acc, accw), accw)
+
+
+def ref_dot(a_bits: jnp.ndarray, b_bits: jnp.ndarray, accw: int = 32) -> jnp.ndarray:
+    """Dot products: a,b are [W, K, C] planes; returns [accw, C] planes.
+
+    C independent dot products, each over K signed W-bit pairs, accumulated
+    into ``accw``-bit two's complement.
+    """
+    w, k, c = a_bits.shape
+    a = pack_bits_signed(a_bits.reshape(w, k * c)).reshape(k, c)
+    b = pack_bits_signed(b_bits.reshape(w, k * c)).reshape(k, c)
+    acc = jnp.sum(a * b, axis=0, dtype=jnp.int32)
+    return unpack_bits(_wrap(acc, accw), accw)
+
+
+def ref_reduce(acc_bits: jnp.ndarray, accw: int = 32) -> jnp.ndarray:
+    """Cross-column reduction: [accw, C] planes -> [accw, 1] planes."""
+    total = jnp.sum(pack_bits(acc_bits).astype(jnp.int32), dtype=jnp.int32)
+    return unpack_bits(_wrap(total[None], accw), accw)

@@ -1,0 +1,214 @@
+"""L2: JAX compute graphs for the Compute RAM ops, calling the L1 kernels.
+
+Each public function here is an AOT entry point (see :mod:`aot`).  Interfaces
+use **packed** int32 tensors (the rust runtime feeds/reads plain i32 literals);
+the graph unpacks to bit-planes, runs the bit-serial Pallas kernel — the same
+serial schedule the Compute RAM executes — and packs the result back.
+
+The bf16 ops are *golden* references lowered from plain jnp bfloat16
+arithmetic (bitcast from uint16 carried in i32 ports): the rust bf16
+microcode is cross-checked against these artifacts.  This mirrors the paper's
+DSP baseline, which upconverts bf16 to fp32 internally.
+
+Sizing follows §IV-C of the paper: op counts are chosen so 20 Kb (one
+512x40 Compute RAM) is exactly filled by operands + results (+ scratch):
+
+  int4 add : 12 bits/tuple -> 42/col * 40 cols = 1680 ops
+  int8 add : 24 bits/tuple -> 21/col * 40 cols =  840 ops
+  int4 mul : 16 bits/tuple -> 32/col * 40 cols = 1280 ops
+  int8 mul : 32 bits/tuple -> 16/col * 40 cols =  640 ops
+  bf16 a/m : 48 bits/tuple -> 10/col * 40 cols =  400 ops
+  int4 dot : 60 pairs (480 rows) + int32 accum (32 rows) = 512 rows/col
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import bitserial as bs
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# canonical experiment shapes (shared with rust via the manifest)
+# ---------------------------------------------------------------------------
+
+GEOM_ROWS, GEOM_COLS = 512, 40
+
+N_ADD = {4: 1680, 8: 840}
+N_MUL = {4: 1280, 8: 640}
+N_BF16 = 400
+DOT_K = {4: 60, 8: 30}  # pairs per column filling 512 rows incl. 32-bit accum
+DOT_COLS = GEOM_COLS
+DOT_COLS_WIDE = 72  # the Fig-6 "72 columns" variant
+
+MLP_BATCH, MLP_IN, MLP_HID, MLP_OUT = 16, 64, 32, 10
+MLP_SHIFT = 7  # power-of-two requantization: h >>= 7, clamp to int8
+
+
+def _sext(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Interpret packed i32 as signed two's complement at ``width``."""
+    u = x & ((1 << width) - 1) if width < 32 else x
+    sign = (u >> (width - 1)) & 1
+    return u - (sign << width)
+
+
+# ---------------------------------------------------------------------------
+# integer ops (bit-serial kernel on the hot path)
+# ---------------------------------------------------------------------------
+
+
+def make_int_add(width: int, n: int):
+    """f(a[n] i32, b[n] i32) -> ((a+b) wrapped at `width`, signed i32)."""
+
+    def fn(a, b):
+        ap = ref.unpack_bits(a, width)
+        bp = ref.unpack_bits(b, width)
+        s = bs.bitserial_add(ap, bp)
+        return (ref.pack_bits_signed(s),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 2
+
+
+def make_int_sub(width: int, n: int):
+    def fn(a, b):
+        ap = ref.unpack_bits(a, width)
+        bp = ref.unpack_bits(b, width)
+        s = bs.bitserial_sub(ap, bp)
+        return (ref.pack_bits_signed(s),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 2
+
+
+def make_int_mul(width: int, n: int):
+    """f(a, b) -> signed 2*width-bit product (exact for int4/int8)."""
+
+    def fn(a, b):
+        ap = ref.unpack_bits(a, width)
+        bp = ref.unpack_bits(b, width)
+        p = bs.bitserial_mul(ap, bp)
+        return (ref.pack_bits_signed(p),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 2
+
+
+def make_int_dot(width: int, k: int, c: int):
+    """f(a[k,c], b[k,c]) -> int32[c]: per-column dot, int32 accumulate."""
+
+    def fn(a, b):
+        ap = ref.unpack_bits(a.reshape(-1), width).reshape(width, k, c)
+        bp = ref.unpack_bits(b.reshape(-1), width).reshape(width, k, c)
+        acc = bs.bitserial_dot(ap, bp, accw=32)
+        return (ref.pack_bits_signed(acc),)
+
+    return fn, (jax.ShapeDtypeStruct((k, c), jnp.int32),) * 2
+
+
+# ---------------------------------------------------------------------------
+# bf16 golden ops (plain jnp; ports carry bf16 bit patterns in i32)
+# ---------------------------------------------------------------------------
+
+
+def _i32_to_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.bitcast_convert_type(x.astype(jnp.uint16), jnp.bfloat16)
+
+
+def _bf16_to_i32(x: jnp.ndarray) -> jnp.ndarray:
+    return lax.bitcast_convert_type(x, jnp.uint16).astype(jnp.int32)
+
+
+def make_bf16_add(n: int):
+    def fn(a, b):
+        return (_bf16_to_i32(_i32_to_bf16(a) + _i32_to_bf16(b)),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 2
+
+
+def make_bf16_mul(n: int):
+    def fn(a, b):
+        return (_bf16_to_i32(_i32_to_bf16(a) * _i32_to_bf16(b)),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 2
+
+
+def make_bf16_mac(n: int):
+    """c += a*b, all bf16 (product rounded to bf16 before accumulate)."""
+
+    def fn(a, b, c):
+        prod = _i32_to_bf16(a) * _i32_to_bf16(b)
+        return (_bf16_to_i32(_i32_to_bf16(c) + prod),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),) * 3
+
+
+# ---------------------------------------------------------------------------
+# quantized MLP (end-to-end model; matmuls via the bit-serial dot kernel)
+# ---------------------------------------------------------------------------
+
+
+def _pim_matmul(x: jnp.ndarray, w: jnp.ndarray, width: int) -> jnp.ndarray:
+    """x[b, k] @ w[k, h] -> int32[b, h], through the Pallas dot kernel.
+
+    Each output element is one Compute RAM column: the coordinator tiles
+    (b, h) pairs across columns/blocks exactly like this.
+    """
+    bsz, k = x.shape
+    _, h = w.shape
+    a = jnp.broadcast_to(x.T[:, :, None], (k, bsz, h)).reshape(k, bsz * h)
+    bw = jnp.broadcast_to(w[:, None, :], (k, bsz, h)).reshape(k, bsz * h)
+    ap = ref.unpack_bits(a.reshape(-1), width).reshape(width, k, bsz * h)
+    bp = ref.unpack_bits(bw.reshape(-1), width).reshape(width, k, bsz * h)
+    acc = bs.bitserial_dot(ap, bp, accw=32)
+    return ref.pack_bits_signed(acc).reshape(bsz, h)
+
+
+def _requant(x: jnp.ndarray, shift: int) -> jnp.ndarray:
+    """int32 -> int8 by arithmetic right shift + clamp (power-of-2 scale)."""
+    return jnp.clip(x >> shift, -128, 127)
+
+
+def make_mlp(batch: int = MLP_BATCH):
+    """Int8 MLP fwd: x -> relu(requant(x@w1 + b1)) @ w2 + b2 (int32 logits)."""
+
+    def fn(x, w1, b1, w2, b2):
+        h = _pim_matmul(x, w1, 8) + b1[None, :]
+        h = _requant(jnp.maximum(h, 0), MLP_SHIFT)
+        logits = _pim_matmul(h, w2, 8) + b2[None, :]
+        return (logits,)
+
+    specs = (
+        jax.ShapeDtypeStruct((batch, MLP_IN), jnp.int32),
+        jax.ShapeDtypeStruct((MLP_IN, MLP_HID), jnp.int32),
+        jax.ShapeDtypeStruct((MLP_HID,), jnp.int32),
+        jax.ShapeDtypeStruct((MLP_HID, MLP_OUT), jnp.int32),
+        jax.ShapeDtypeStruct((MLP_OUT,), jnp.int32),
+    )
+    return fn, specs
+
+
+def mlp_reference(x, w1, b1, w2, b2):
+    """Pure-jnp oracle for the MLP artifact (no Pallas), for pytest."""
+    h = x.astype(jnp.int32) @ w1.astype(jnp.int32) + b1[None, :]
+    h = _requant(jnp.maximum(h, 0), MLP_SHIFT)
+    return h @ w2.astype(jnp.int32) + b2[None, :]
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry (name -> (fn, arg specs))
+# ---------------------------------------------------------------------------
+
+
+def entry_points() -> dict:
+    eps = {}
+    for w in (4, 8):
+        eps[f"add_i{w}"] = make_int_add(w, N_ADD[w])
+        eps[f"sub_i{w}"] = make_int_sub(w, N_ADD[w])
+        eps[f"mul_i{w}"] = make_int_mul(w, N_MUL[w])
+        eps[f"dot_i{w}"] = make_int_dot(w, DOT_K[w], DOT_COLS)
+    eps["dot_i4_wide"] = make_int_dot(4, DOT_K[4], DOT_COLS_WIDE)
+    eps["add_bf16"] = make_bf16_add(N_BF16)
+    eps["mul_bf16"] = make_bf16_mul(N_BF16)
+    eps["mac_bf16"] = make_bf16_mac(N_BF16)
+    eps["mlp_i8"] = make_mlp()
+    return eps

@@ -1,0 +1,69 @@
+# hypothesis sweeps: shapes/widths/values for the Pallas kernels vs ref.
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bitserial as bs
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def planes(draw, w, n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2, (w, n)), jnp.int32)
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.integers(min_value=2, max_value=16),
+    n=st.integers(min_value=1, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_add_any_shape(w, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2, (w, n)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 2, (w, n)), jnp.int32)
+    np.testing.assert_array_equal(bs.bitserial_add(a, b), ref.ref_add(a, b))
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.integers(min_value=2, max_value=8),
+    n=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_mul_any_shape(w, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2, (w, n)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 2, (w, n)), jnp.int32)
+    np.testing.assert_array_equal(bs.bitserial_mul(a, b), ref.ref_mul(a, b))
+
+
+@settings(**SETTINGS)
+@given(
+    w=st.sampled_from([4, 8]),
+    k=st.integers(min_value=1, max_value=16),
+    c=st.integers(min_value=1, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_dot_any_shape(w, k, c, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2, (w, k, c)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 2, (w, k, c)), jnp.int32)
+    np.testing.assert_array_equal(bs.bitserial_dot(a, b), ref.ref_dot(a, b))
+
+
+@settings(**SETTINGS)
+@given(
+    vals=st.lists(
+        st.integers(min_value=-(2**31), max_value=2**31 - 1),
+        min_size=1,
+        max_size=32,
+    )
+)
+def test_pack_unpack_int32_identity(vals):
+    x = jnp.asarray(np.asarray(vals, np.int64).astype(np.int32))
+    got = ref.pack_bits_signed(ref.unpack_bits(x, 32))
+    np.testing.assert_array_equal(got, x)

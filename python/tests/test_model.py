@@ -1,0 +1,80 @@
+# pytest: L2 model graphs (packed interfaces) vs plain-int oracles.
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+RNG = np.random.default_rng(7)
+
+
+def ints(lo, hi, *shape):
+    return jnp.asarray(RNG.integers(lo, hi, shape), jnp.int32)
+
+
+@pytest.mark.parametrize("w", [4, 8])
+def test_add_packed(w):
+    fn, specs = model.make_int_add(w, 64)
+    lo, hi = -(2 ** (w - 1)), 2 ** (w - 1)
+    a, b = ints(lo, hi, 64), ints(lo, hi, 64)
+    (got,) = fn(a, b)
+    want = ((np.asarray(a) + np.asarray(b)) + 2 ** (w - 1)) % 2**w - 2 ** (w - 1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("w", [4, 8])
+def test_mul_packed(w):
+    fn, specs = model.make_int_mul(w, 64)
+    lo, hi = -(2 ** (w - 1)), 2 ** (w - 1)
+    a, b = ints(lo, hi, 64), ints(lo, hi, 64)
+    (got,) = fn(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(a) * np.asarray(b))
+
+
+@pytest.mark.parametrize("w,k,c", [(4, 60, 40), (8, 30, 40)])
+def test_dot_packed(w, k, c):
+    fn, specs = model.make_int_dot(w, k, c)
+    lo, hi = -(2 ** (w - 1)), 2 ** (w - 1)
+    a, b = ints(lo, hi, k, c), ints(lo, hi, k, c)
+    (got,) = fn(a, b)
+    want = (np.asarray(a, np.int64) * np.asarray(b, np.int64)).sum(0)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_bf16_add_golden():
+    fn, _ = model.make_bf16_add(16)
+    a_f = np.array([1.0, 2.5, -3.0, 0.0, 1e30, -1e-30] + [0.5] * 10, np.float32)
+    b_f = np.array([1.0, 0.5, 3.0, -0.0, 1e30, 1e-30] + [0.25] * 10, np.float32)
+    a = jnp.asarray((a_f.view(np.uint32) >> 16).astype(np.int32))
+    b = jnp.asarray((b_f.view(np.uint32) >> 16).astype(np.int32))
+    (got,) = fn(a, b)
+    # oracle must see the *same* bf16 bit patterns (truncated, not RNE)
+    a_bf = np.asarray(a, np.uint16).view(jnp.bfloat16)
+    b_bf = np.asarray(b, np.uint16).view(jnp.bfloat16)
+    want = jnp.asarray(a_bf) + jnp.asarray(b_bf)
+    want_bits = np.asarray(want).view(np.uint16).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want_bits)
+
+
+def test_mlp_matches_reference():
+    fn, specs = model.make_mlp(batch=4)
+    x = ints(-128, 128, 4, model.MLP_IN)
+    w1 = ints(-8, 8, model.MLP_IN, model.MLP_HID)
+    b1 = ints(-100, 100, model.MLP_HID)
+    w2 = ints(-8, 8, model.MLP_HID, model.MLP_OUT)
+    b2 = ints(-100, 100, model.MLP_OUT)
+    (got,) = fn(x, w1, b1, w2, b2)
+    want = model.mlp_reference(x, w1, b1, w2, b2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_entry_points_complete():
+    eps = model.entry_points()
+    for required in [
+        "add_i4", "add_i8", "mul_i4", "mul_i8",
+        "dot_i4", "dot_i8", "dot_i4_wide",
+        "add_bf16", "mul_bf16", "mac_bf16", "mlp_i8",
+    ]:
+        assert required in eps
+        fn, specs = eps[required]
+        assert callable(fn) and len(specs) >= 2

@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig. 4 (addition) with both cycle accounts, and time
+//! the full-block addition microcode on the simulator per precision.
+
+use comperam::bitline::Geometry;
+use comperam::cost::CycleModel;
+use comperam::cram::{ops, CramBlock};
+use comperam::report;
+use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::Prng;
+
+fn main() {
+    print!("{}", report::fig4(CycleModel::Paper).unwrap().1);
+    print!("{}", report::fig4(CycleModel::Measured).unwrap().1);
+
+    let mut rng = Prng::new(0xF16_4);
+    for (w, n) in [(4u32, 1680usize), (8, 840)] {
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let mut block = CramBlock::new(Geometry::G512x40);
+        let m = bench(&format!("sim add_i{w} full block ({n} ops)"), || {
+            black_box(ops::int_addsub(&mut block, &a, &b, w, false).unwrap());
+        });
+        println!(
+            "  -> simulator throughput: {:.2} M adds/s (host)",
+            ops_per_sec(n as u64, &m) / 1e6
+        );
+    }
+
+    // bf16 add: timing schedule + functional values
+    let a: Vec<_> = (0..400)
+        .map(|_| comperam::util::SoftBf16::from_bits(rng.bf16_bits(115, 135)))
+        .collect();
+    let b: Vec<_> = (0..400)
+        .map(|_| comperam::util::SoftBf16::from_bits(rng.bf16_bits(115, 135)))
+        .collect();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    bench("sim add_bf16 full block (400 ops)", || {
+        black_box(ops::bf16_op(&mut block, &a, &b, false).unwrap());
+    });
+}

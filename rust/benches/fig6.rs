@@ -1,0 +1,45 @@
+//! Bench: regenerate Fig. 6 (int4 dot product, 40 vs 72 columns) with both
+//! cycle accounts; time the dot microcode and the baseline dot engine.
+
+use comperam::baseline::datapath;
+use comperam::bitline::Geometry;
+use comperam::cost::CycleModel;
+use comperam::cram::{ops, CramBlock};
+use comperam::report;
+use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::Prng;
+
+fn main() {
+    print!("{}", report::fig6(CycleModel::Paper).unwrap().1);
+    print!("{}", report::fig6(CycleModel::Measured).unwrap().1);
+
+    let mut rng = Prng::new(0xF16_6);
+    let k = 60;
+    for geom in [Geometry::G512x40, Geometry::G285x72] {
+        let cols = geom.cols();
+        let kk = if geom.cols() == 72 { 31 } else { k }; // fit the wide block
+        let a: Vec<Vec<i64>> =
+            (0..kk).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..kk).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+        let mut block = CramBlock::new(geom);
+        let macs = (kk * cols) as u64;
+        let m = bench(
+            &format!("sim dot_i4 {}x{} (K={kk}, {} MACs)", geom.rows(), cols, macs),
+            || {
+                black_box(ops::int_dot(&mut block, &a, &b, 4, 32).unwrap());
+            },
+        );
+        println!(
+            "  -> simulator throughput: {:.2} M MACs/s (host)",
+            ops_per_sec(macs, &m) / 1e6
+        );
+    }
+
+    // baseline dot engine functional model for the same workload
+    let a: Vec<Vec<i64>> = (0..k).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
+    let b: Vec<Vec<i64>> = (0..k).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
+    bench("baseline dot engine (functional, 2400 MACs)", || {
+        black_box(datapath::run_dot(&a, &b, 40));
+    });
+}

@@ -1,0 +1,95 @@
+//! Bench: the simulator's hot paths in isolation — the §Perf targets.
+//!
+//! * bit-line array sense + write-back (word-parallel lane math);
+//! * controller dispatch (instructions/second);
+//! * full-block microcode runs (column-bit-ops/second) — the DESIGN.md
+//!   target is >= 1e8 column-bit-ops/s on the array inner loop;
+//! * coordinator fan-out across a farm;
+//! * fabric flow (place + route + time) per design.
+
+use comperam::baseline::designs::{baseline_design, BaselineKind};
+use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
+use comperam::coordinator::{Coordinator, Job, JobPayload};
+use comperam::cram::{ops, CramBlock};
+use comperam::ctrl::{Controller, InstrMem};
+use comperam::fabric::{implement, FpgaArch};
+use comperam::ucode;
+use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::{LaneVec, Prng};
+
+fn main() {
+    // 1. raw array primitive
+    let mut arr = BitlineArray::new(Geometry::G512x40);
+    let mut periph = ColumnPeriph::new(40);
+    let data = LaneVec::from_fn(40, |i| i % 3 == 0);
+    arr.write_row(0, &data);
+    arr.write_row(1, &data.not());
+    let mask = LaneVec::ones(40);
+    let m = bench("array sense+fulladd+writeback (1 cycle, 40 cols)", || {
+        let (bl, blb) = arr.sense(black_box(0), black_box(1));
+        let sum = periph.full_add_masked(&bl, &blb, &mask);
+        arr.write_back(2, &sum, &mask);
+    });
+    println!(
+        "  -> {:.1} M array-cycles/s = {:.2} G column-bit-ops/s",
+        ops_per_sec(1, &m) / 1e6,
+        ops_per_sec(40, &m) / 1e9
+    );
+
+    // 2. controller dispatch rate on a loop-heavy program
+    let (prog, _) = ucode::int::add(Geometry::G512x40, 8);
+    let mut imem = InstrMem::new();
+    imem.load_config(&prog.instrs).unwrap();
+    let m = bench("controller full add_i8 program", || {
+        let mut ctrl = Controller::new();
+        let mut a2 = BitlineArray::new(Geometry::G512x40);
+        let mut p2 = ColumnPeriph::new(40);
+        black_box(ctrl.run(&imem, &mut a2, &mut p2, 10_000_000).unwrap());
+    });
+    // 21 tuples x 9 array cycles + overhead ~ 336 cycles/run
+    println!("  -> {:.1} M sim-cycles/s", ops_per_sec(336, &m) / 1e6);
+
+    // 3. full-block dot (the heaviest microcode)
+    let mut rng = Prng::new(0x51);
+    let a: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
+    let b: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let m = bench("full-block dot_i4 K=60 (sim)", || {
+        black_box(ops::int_dot(&mut block, &a, &b, 4, 32).unwrap());
+    });
+    let array_cycles = ops::int_dot(&mut block, &a, &b, 4, 32).unwrap().stats.array_cycles;
+    println!(
+        "  -> {:.2} G column-bit-ops/s ({} array cycles x 40 cols per run)",
+        ops_per_sec(array_cycles * 40, &m) / 1e9,
+        array_cycles
+    );
+
+    // 4. coordinator fan-out
+    let coord = Coordinator::new(Geometry::G512x40, 8);
+    let n = 1680 * 8;
+    let av: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+    let bv: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+    let m = bench("coordinator 8-block int4 add fan-out", || {
+        black_box(
+            coord
+                .run(Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwise {
+                        op: comperam::coordinator::job::EwOp::Add,
+                        w: 4,
+                        a: av.clone(),
+                        b: bv.clone(),
+                    },
+                })
+                .unwrap(),
+        );
+    });
+    println!("  -> {:.2} M adds/s through the farm", ops_per_sec(n as u64, &m) / 1e6);
+
+    // 5. fabric flow
+    let arch = FpgaArch::agilex_like();
+    let d = baseline_design(BaselineKind::DotI4 { k: 60 });
+    bench("fabric place+route+time (dot baseline netlist)", || {
+        black_box(implement(&arch, &d.netlist, black_box(1)).unwrap());
+    });
+}

@@ -1,0 +1,49 @@
+//! Bench: regenerate Table II (block comparison) and time the underlying
+//! single-block microcode executions that back the GOPS rows.
+
+use comperam::baseline::designs::BaselineKind;
+use comperam::cost::{self, CycleModel, Op, Precision};
+use comperam::report;
+use comperam::util::benchkit::{bench, black_box};
+
+fn main() {
+    println!("{}", report::table2());
+
+    // measured-vs-paper cycle account for each Table II op
+    println!("cycles per op (paper model vs measured simulator):");
+    for (kind, label, op, prec, per_col) in [
+        (BaselineKind::IntAdd { w: 4 }, "add int4", Op::Add, Precision::Int(4), 42u64),
+        (BaselineKind::IntAdd { w: 8 }, "add int8", Op::Add, Precision::Int(8), 21),
+        (BaselineKind::IntMul { w: 4 }, "mul int4", Op::Mul, Precision::Int(4), 32),
+        (BaselineKind::IntMul { w: 8 }, "mul int8", Op::Mul, Precision::Int(8), 16),
+        (BaselineKind::Bf16Add, "add bf16", Op::Add, Precision::Bf16, 10),
+        (BaselineKind::Bf16Mul, "mul bf16", Op::Mul, Precision::Bf16, 10),
+    ] {
+        let paper = cost::paper_op_cycles(op, prec) * per_col;
+        let measured = report::measured_cycles(kind).unwrap();
+        println!(
+            "  {label:10} paper={paper:>6}  measured={measured:>6}  ratio={:.2}",
+            measured as f64 / paper as f64
+        );
+    }
+
+    // host-side simulator throughput for the block-level ops
+    for kind in [
+        BaselineKind::IntAdd { w: 4 },
+        BaselineKind::IntAdd { w: 8 },
+        BaselineKind::IntMul { w: 8 },
+    ] {
+        let name = format!("simulate full-block {kind:?}");
+        bench(&name, || {
+            black_box(report::measured_cycles(black_box(kind)).unwrap());
+        });
+    }
+
+    // the table generators themselves (used by CLI + tests)
+    bench("report::table2", || {
+        black_box(report::table2());
+    });
+    bench("report::fig4(paper)", || {
+        black_box(report::fig4(CycleModel::Paper).unwrap());
+    });
+}

@@ -1,0 +1,19 @@
+//! Baseline-FPGA comparison designs (paper §IV-C).
+//!
+//! For every experiment the paper implements two circuits:
+//!
+//! * **baseline**: a BRAM holding operands/results + compute units sized to
+//!   saturate the BRAM's bandwidth (LB adders for fixed-point addition,
+//!   DSP slices otherwise) + LB control logic orchestrating the movement;
+//! * **proposed**: one Compute RAM absorbing storage, compute and control,
+//!   with only a thin external state machine.
+//!
+//! [`designs`] builds the netlists + cycle models for both sides;
+//! [`datapath`] is a functional execution model of the baseline (BRAM
+//! feeder FSM + compute units) used as a golden reference against the
+//! Compute RAM simulator's results.
+
+pub mod datapath;
+pub mod designs;
+
+pub use designs::{baseline_design, cram_design, BaselineKind, DesignPoint};

@@ -1,0 +1,346 @@
+//! The main SRAM array with bit-line computing (paper §III-A.1).
+//!
+//! A drop-in replacement for a 20 Kb FPGA BRAM. In **storage mode** it
+//! behaves exactly like a BRAM with the configured geometry. In **compute
+//! mode**, both row decoders (BRAMs are dual-ported) activate two word-lines
+//! simultaneously with lowered word-line voltage; sensing the shared
+//! bit-lines then yields, per column:
+//!
+//! ```text
+//!   BL  = A AND B          (both cells pull down unless both store 1)
+//!   BLB = (NOT A) AND (NOT B)  == NOR(A, B)
+//! ```
+//!
+//! which is the Jeloka et al. logic-in-memory primitive [7]. Everything else
+//! (XOR, full addition, predication) is derived from these two signals by
+//! the column peripherals.
+
+use crate::util::LaneVec;
+
+/// Supported array geometries. The paper uses the Intel-Agilex BRAM
+/// configurations (20 Kb total) plus a Xilinx-style 72-column variant for
+/// the Fig. 6 wide-dot-product experiment.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Geometry {
+    /// 512 rows x 40 columns (the paper's default for all experiments).
+    G512x40,
+    /// 1024 rows x 20 columns.
+    G1024x20,
+    /// 2048 rows x 10 columns.
+    G2048x10,
+    /// 285 rows x 72 columns — "Xilinx-style" wide configuration evaluated
+    /// analytically in Fig. 6 (20 Kb capacity, 72-bit rows).
+    G285x72,
+    /// Arbitrary geometry for exploration.
+    Custom { rows: usize, cols: usize },
+}
+
+impl Geometry {
+    pub fn rows(self) -> usize {
+        match self {
+            Geometry::G512x40 => 512,
+            Geometry::G1024x20 => 1024,
+            Geometry::G2048x10 => 2048,
+            Geometry::G285x72 => 285,
+            Geometry::Custom { rows, .. } => rows,
+        }
+    }
+
+    pub fn cols(self) -> usize {
+        match self {
+            Geometry::G512x40 => 40,
+            Geometry::G1024x20 => 20,
+            Geometry::G2048x10 => 10,
+            Geometry::G285x72 => 72,
+            Geometry::Custom { cols, .. } => cols,
+        }
+    }
+
+    /// Total capacity in bits.
+    pub fn capacity_bits(self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// The three standard 20 Kb BRAM geometries.
+    pub fn standard() -> [Geometry; 3] {
+        [Geometry::G512x40, Geometry::G1024x20, Geometry::G2048x10]
+    }
+}
+
+/// The main array: `rows` word-lines by `cols` bit-lines.
+#[derive(Clone, Debug)]
+pub struct BitlineArray {
+    geometry: Geometry,
+    rows: Vec<LaneVec>,
+}
+
+impl BitlineArray {
+    /// Fresh array, all cells zero.
+    pub fn new(geometry: Geometry) -> Self {
+        let cols = geometry.cols();
+        Self {
+            geometry,
+            rows: (0..geometry.rows()).map(|_| LaneVec::zeros(cols)).collect(),
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.geometry.cols()
+    }
+
+    /// Storage-mode read of one word-line.
+    pub fn read_row(&self, r: usize) -> &LaneVec {
+        &self.rows[r]
+    }
+
+    /// Storage-mode write of one word-line.
+    pub fn write_row(&mut self, r: usize, data: &LaneVec) {
+        assert_eq!(data.len(), self.cols(), "row width mismatch");
+        self.rows[r] = data.clone();
+    }
+
+    /// Compute-mode **multi-row activation**: sense rows `ra` and `rb`
+    /// simultaneously. Returns `(BL, BLB) = (A AND B, NOR(A, B))`.
+    ///
+    /// With word-line under-drive the cells cannot flip during the combined
+    /// activation (the data-corruption guard from [7]), so sensing is
+    /// non-destructive — hence `&self`.
+    #[inline]
+    pub fn sense(&self, ra: usize, rb: usize) -> (LaneVec, LaneVec) {
+        let a = &self.rows[ra];
+        let b = &self.rows[rb];
+        (a.and(b), a.nor(b))
+    }
+
+    /// Single-row sense (degenerate activation): `BL = A`, `BLB = NOT A`.
+    #[inline]
+    pub fn sense_one(&self, r: usize) -> (LaneVec, LaneVec) {
+        (self.rows[r].clone(), self.rows[r].not())
+    }
+
+    /// Compute-mode write-back in the second half of the same cycle:
+    /// write `data` into row `rd`, but only in columns where `mask` is 1
+    /// (the predication mux gates the write drivers per column).
+    #[inline]
+    pub fn write_back(&mut self, rd: usize, data: &LaneVec, mask: &LaneVec) {
+        self.rows[rd].merge_masked(data, mask);
+    }
+
+    /// Get single bit (test/debug convenience).
+    pub fn bit(&self, row: usize, col: usize) -> bool {
+        self.rows[row].get(col)
+    }
+
+    /// Mutable word view of one row (host staging fast path; caller keeps
+    /// bits beyond `cols` zero).
+    pub fn row_words_mut(&mut self, r: usize) -> &mut [u64] {
+        self.rows[r].words_mut()
+    }
+
+    /// Set single bit (test/debug convenience).
+    pub fn set_bit(&mut self, row: usize, col: usize, v: bool) {
+        self.rows[row].set(col, v);
+    }
+
+    /// Clear the whole array.
+    pub fn clear(&mut self) {
+        for r in &mut self.rows {
+            r.fill(false);
+        }
+    }
+
+    // -- hot-path kernels (§Perf): word-parallel, allocation-free ------------
+    //
+    // These compute the same functions as `sense` + `ColumnPeriph` + masked
+    // `write_back`, but in a single pass over the packed words, with the
+    // predication mask pre-resolved in the peripheral's buffer. The
+    // controller uses them; the allocating API remains for tests and
+    // composition.
+
+    /// One full-adder/subtractor cycle: `[rd] = [ra] ± [rb] + C` with
+    /// carry latched, all columns where `mask` is set.
+    #[inline]
+    pub fn fas_inplace(
+        &mut self,
+        ra: usize,
+        rb: usize,
+        rd: usize,
+        periph: &mut super::ColumnPeriph,
+        subtract: bool,
+    ) {
+        let (carry, mask) = periph.carry_and_mask();
+        let nw = carry.word_len();
+        for i in 0..nw {
+            // for subtraction the A operand is complemented (B - A via
+            // B + !A + C), matching `full_sub_masked`
+            let mut wa = self.rows[ra].word(i);
+            if subtract {
+                wa = !wa & self.rows[ra].tail_mask(i);
+            }
+            let wb = self.rows[rb].word(i);
+            let c = carry.word(i);
+            let m = mask.word(i);
+            let axb = wa ^ wb;
+            let sum = axb ^ c;
+            let newc = (wa & wb) | (axb & c);
+            carry.set_word(i, (newc & m) | (c & !m));
+            let old = self.rows[rd].word(i);
+            self.rows[rd].set_word(i, (sum & m) | (old & !m));
+        }
+    }
+
+    /// One two-source logic cycle (And/Or/Xor/Nor by `op` index 0..3),
+    /// masked write to `rd`.
+    #[inline]
+    pub fn logic_inplace(
+        &mut self,
+        op: crate::isa::LogicOp,
+        ra: usize,
+        rb: usize,
+        rd: usize,
+        periph: &super::ColumnPeriph,
+    ) {
+        use crate::isa::LogicOp;
+        let nw = periph.carry().word_len();
+        for i in 0..nw {
+            let wa = self.rows[ra].word(i);
+            let wb = self.rows[rb].word(i);
+            let tail = self.rows[rd].tail_mask(i);
+            let v = match op {
+                LogicOp::And => wa & wb,
+                LogicOp::Or => wa | wb,
+                LogicOp::Xor => wa ^ wb,
+                LogicOp::Nor => !(wa | wb) & tail,
+            };
+            let m = periph.mask_word(i);
+            let old = self.rows[rd].word(i);
+            self.rows[rd].set_word(i, (v & m) | (old & !m));
+        }
+    }
+
+    /// Masked copy / complement / zero of a row (`kind`: 0 copy, 1 not,
+    /// 2 zero) from `ra` to `rd`.
+    #[inline]
+    pub fn move_inplace(
+        &mut self,
+        kind: u8,
+        ra: usize,
+        rd: usize,
+        periph: &super::ColumnPeriph,
+    ) {
+        let nw = periph.carry().word_len();
+        for i in 0..nw {
+            let v = match kind {
+                0 => self.rows[ra].word(i),
+                1 => !self.rows[ra].word(i) & self.rows[ra].tail_mask(i),
+                _ => 0,
+            };
+            let m = periph.mask_word(i);
+            let old = self.rows[rd].word(i);
+            self.rows[rd].set_word(i, (v & m) | (old & !m));
+        }
+    }
+
+    /// Masked write of a latch plane (carry or tag snapshot) into `rd`.
+    #[inline]
+    pub fn write_plane_inplace(
+        &mut self,
+        plane_is_tag: bool,
+        rd: usize,
+        periph: &super::ColumnPeriph,
+    ) {
+        // snapshot semantics are safe: mask_buf was resolved before this op
+        let nw = periph.carry().word_len();
+        for i in 0..nw {
+            let v = if plane_is_tag {
+                periph.tag().word(i)
+            } else {
+                periph.carry().word(i)
+            };
+            let m = periph.mask_word(i);
+            let old = self.rows[rd].word(i);
+            self.rows[rd].set_word(i, (v & m) | (old & !m));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_capacities_are_20kb() {
+        for g in Geometry::standard() {
+            assert_eq!(g.capacity_bits(), 20 * 1024, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn wide_geometry_is_20kb_rounded() {
+        // 284 * 72 = 20448 ≈ 20 Kb (the paper describes this analytically).
+        let g = Geometry::G285x72;
+        assert!(g.capacity_bits() >= 20 * 1024);
+        assert_eq!(g.cols(), 72);
+    }
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut arr = BitlineArray::new(Geometry::G1024x20);
+        let data = LaneVec::from_fn(20, |i| i % 2 == 1);
+        arr.write_row(777, &data);
+        assert_eq!(arr.read_row(777), &data);
+        assert!(arr.read_row(776).is_zero());
+    }
+
+    #[test]
+    fn sense_is_and_nor() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        // a = 1100, b = 1010 per 4-column group
+        let a = LaneVec::from_fn(40, |i| i % 4 < 2);
+        let b = LaneVec::from_fn(40, |i| i % 2 == 0);
+        arr.write_row(3, &a);
+        arr.write_row(9, &b);
+        let (bl, blb) = arr.sense(3, 9);
+        for i in 0..40 {
+            assert_eq!(bl.get(i), a.get(i) && b.get(i));
+            assert_eq!(blb.get(i), !(a.get(i) || b.get(i)));
+        }
+    }
+
+    #[test]
+    fn sense_is_nondestructive() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let a = LaneVec::from_fn(40, |i| i % 3 == 0);
+        arr.write_row(0, &a);
+        let before = arr.read_row(0).clone();
+        let _ = arr.sense(0, 1);
+        assert_eq!(arr.read_row(0), &before);
+    }
+
+    #[test]
+    fn write_back_respects_mask() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let ones = LaneVec::ones(40);
+        let mask = LaneVec::from_fn(40, |i| i < 10);
+        arr.write_back(5, &ones, &mask);
+        assert_eq!(arr.read_row(5).count_ones(), 10);
+    }
+
+    #[test]
+    fn sense_one_complement() {
+        let mut arr = BitlineArray::new(Geometry::G2048x10);
+        let a = LaneVec::from_fn(10, |i| i < 5);
+        arr.write_row(100, &a);
+        let (bl, blb) = arr.sense_one(100);
+        assert_eq!(bl, a);
+        assert_eq!(blb, a.not());
+    }
+}

@@ -1,0 +1,48 @@
+//! The bit-line computing SRAM substrate (paper §II-B, §III-A.1/.4).
+//!
+//! This module is a bit-exact functional model of the Jeloka-style
+//! logic-in-memory SRAM [7] with the Compute-Cache [8] / Neural-Cache [9]
+//! extensions the paper builds on:
+//!
+//! * [`array::BitlineArray`] — the **main array**: multi-row activation with
+//!   word-line under-drive, so sensing bit-line `BL` yields `A AND B` and its
+//!   complement `BLB` yields `NOR(A, B)` for the two activated rows;
+//! * [`periph::ColumnPeriph`] — the per-column **logic peripherals**: XOR
+//!   derivation, full-adder with a carry latch, a tag latch for predication,
+//!   and the 4:1 predication mux (§III-A.4);
+//! * [`transpose`] — host-side helpers that lay out operands in the
+//!   **transposed** (bit-serial) format: the bits of one operand live in one
+//!   column across consecutive rows.
+
+pub mod array;
+pub mod periph;
+pub mod transpose;
+
+pub use array::{BitlineArray, Geometry};
+pub use periph::ColumnPeriph;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::LaneVec;
+
+    /// End-to-end smoke test of substrate composition: sense + peripheral
+    /// full-add over two rows equals per-column binary addition of bits.
+    #[test]
+    fn sense_plus_periph_is_full_add() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let a = LaneVec::from_fn(40, |i| i % 2 == 0);
+        let b = LaneVec::from_fn(40, |i| i % 3 == 0);
+        arr.write_row(0, &a);
+        arr.write_row(1, &b);
+        let mut periph = ColumnPeriph::new(40);
+        periph.clear_carry();
+        let (bl, blb) = arr.sense(0, 1);
+        let (sum, carry) = periph.full_add(&bl, &blb);
+        for i in 0..40 {
+            let (av, bv) = (a.get(i), b.get(i));
+            assert_eq!(sum.get(i), av ^ bv, "sum lane {i}");
+            assert_eq!(carry.get(i), av && bv, "carry lane {i}");
+        }
+    }
+}

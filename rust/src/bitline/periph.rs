@@ -1,0 +1,305 @@
+//! Column logic peripherals (paper §III-A.4).
+//!
+//! Each bit-line has a small logic block next to its sense amplifiers and
+//! write drivers, "enhanced compared to [9]":
+//!
+//! * derives `XOR`, `OR`, `NOT` from the sensed `(BL, BLB)` pair;
+//! * a **carry latch** per column, holding the carry between bit-serial
+//!   full-adder steps;
+//! * a **tag latch** per column, loaded from a row (e.g. a multiplier bit)
+//!   and used to predicate writes;
+//! * a **4:1 predication mux** selecting the write-enable condition among
+//!   `{Always, Tag, Carry, NotCarry}` (the paper's "Carry, NotCarry and
+//!   Tag" conditions plus the trivial always case).
+
+use crate::isa::Pred;
+use crate::util::LaneVec;
+
+/// Per-column latch state + combinational helpers.
+#[derive(Clone, Debug)]
+pub struct ColumnPeriph {
+    carry: LaneVec,
+    tag: LaneVec,
+    cols: usize,
+    /// Resolved predication mask buffer (hot path: reused, no allocation).
+    mask_buf: LaneVec,
+}
+
+impl ColumnPeriph {
+    pub fn new(cols: usize) -> Self {
+        Self {
+            carry: LaneVec::zeros(cols),
+            tag: LaneVec::zeros(cols),
+            cols,
+            mask_buf: LaneVec::ones(cols),
+        }
+    }
+
+    /// Resolve the predication mux into the internal mask buffer and
+    /// return it (no allocation). The snapshot semantics matter: for
+    /// `Carry`/`NCarry` the mask is the latch value *at the start of the
+    /// cycle*, before the op updates it.
+    #[inline]
+    pub fn resolve_mask(&mut self, pred: Pred) -> &LaneVec {
+        match pred {
+            Pred::Always => self.mask_buf.fill(true),
+            Pred::Tag => self.mask_buf.copy_from_words(self.tag.words()),
+            Pred::Carry => self.mask_buf.copy_from_words(self.carry.words()),
+            Pred::NCarry => {
+                for i in 0..self.carry.word_len() {
+                    let v = !self.carry.word(i) & self.carry.tail_mask(i);
+                    self.mask_buf.set_word(i, v);
+                }
+            }
+        }
+        &self.mask_buf
+    }
+
+    /// Split-borrow accessor for the hot kernels: (carry, mask_buf).
+    #[inline]
+    pub(crate) fn carry_and_mask(&mut self) -> (&mut LaneVec, &LaneVec) {
+        (&mut self.carry, &self.mask_buf)
+    }
+
+    /// Tag words (hot path).
+    #[inline]
+    pub(crate) fn tag_mut(&mut self) -> &mut LaneVec {
+        &mut self.tag
+    }
+
+    /// Resolved-mask word `i` (hot path; call [`Self::resolve_mask`] first).
+    #[inline]
+    pub(crate) fn mask_word(&self, i: usize) -> u64 {
+        self.mask_buf.word(i)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn carry(&self) -> &LaneVec {
+        &self.carry
+    }
+
+    pub fn tag(&self) -> &LaneVec {
+        &self.tag
+    }
+
+    /// Reset both latches (block `start` does this).
+    pub fn reset(&mut self) {
+        self.carry.fill(false);
+        self.tag.fill(false);
+    }
+
+    /// `CLC` — clear all carry latches.
+    pub fn clear_carry(&mut self) {
+        self.carry.fill(false);
+    }
+
+    /// `SEC` — set all carry latches (used as the +1 of two's-complement
+    /// subtraction).
+    pub fn set_carry(&mut self) {
+        self.carry.fill(true);
+    }
+
+    /// `TLD` — load the tag latch from a row's sensed value.
+    pub fn load_tag(&mut self, row: &LaneVec) {
+        self.tag = row.clone();
+    }
+
+    /// `TLDN` — load the tag latch with the complement of a row.
+    pub fn load_tag_not(&mut self, row: &LaneVec) {
+        self.tag = row.not();
+    }
+
+    /// `TNOT` — complement the tag latch.
+    pub fn invert_tag(&mut self) {
+        self.tag = self.tag.not();
+    }
+
+    /// `TCAR` — copy the carry latch into the tag latch (exposes an adder's
+    /// sign/overflow to predication, needed by the float sequences).
+    pub fn tag_from_carry(&mut self) {
+        self.tag = self.carry.clone();
+    }
+
+    /// `TAND` — AND a row into the tag latch (compound conditions).
+    pub fn and_tag(&mut self, row: &LaneVec) {
+        self.tag.and_assign(row);
+    }
+
+    /// Resolve the predication mux into a per-column write-enable mask.
+    pub fn mask(&self, pred: Pred) -> LaneVec {
+        match pred {
+            Pred::Always => LaneVec::ones(self.cols),
+            Pred::Tag => self.tag.clone(),
+            Pred::Carry => self.carry.clone(),
+            Pred::NCarry => self.carry.not(),
+        }
+    }
+
+    // -- combinational derivations from (BL, BLB) -----------------------------
+
+    /// `XOR(A,B) = NOT(BL OR BLB)`: neither both-ones nor both-zeros.
+    #[inline]
+    pub fn xor_of(bl: &LaneVec, blb: &LaneVec) -> LaneVec {
+        bl.or(blb).not()
+    }
+
+    /// `OR(A,B) = NOT BLB`.
+    #[inline]
+    pub fn or_of(blb: &LaneVec) -> LaneVec {
+        blb.not()
+    }
+
+    /// One **full-adder step** on the sensed pair, updating the carry latch
+    /// only in columns where `enable` is set:
+    ///
+    /// ```text
+    ///   sum    = A XOR B XOR C
+    ///   carry' = (A AND B) OR (C AND (A XOR B)) = BL OR (C AND XOR)
+    /// ```
+    ///
+    /// Returns the sum plane; the new carry is latched internally.
+    pub fn full_add_masked(
+        &mut self,
+        bl: &LaneVec,
+        blb: &LaneVec,
+        enable: &LaneVec,
+    ) -> LaneVec {
+        let axb = Self::xor_of(bl, blb);
+        let sum = axb.xor(&self.carry);
+        let mut newc = axb.and(&self.carry);
+        newc.or_assign(bl);
+        self.carry.merge_masked(&newc, enable);
+        sum
+    }
+
+    /// Full-adder step with all columns enabled (returns `(sum, carry)` for
+    /// inspection; carry also latched).
+    pub fn full_add(&mut self, bl: &LaneVec, blb: &LaneVec) -> (LaneVec, LaneVec) {
+        let ones = LaneVec::ones(self.cols);
+        let sum = self.full_add_masked(bl, blb, &ones);
+        (sum, self.carry.clone())
+    }
+
+    /// One **full-subtractor step** computing `B - A` via `B + NOT A`:
+    /// the peripheral complements the A operand (available for free from the
+    /// sense: `NOT A` of a single-row activation is the BLB signal), then
+    /// performs a full-add step. Caller must `SEC` before the LSB step.
+    ///
+    /// `a`/`b` are the raw row values; masking as in [`Self::full_add_masked`].
+    pub fn full_sub_masked(
+        &mut self,
+        a: &LaneVec,
+        b: &LaneVec,
+        enable: &LaneVec,
+    ) -> LaneVec {
+        let na = a.not();
+        let axb = na.xor(b);
+        let sum = axb.xor(&self.carry);
+        let mut newc = axb.and(&self.carry);
+        newc.or_assign(&na.and(b));
+        self.carry.merge_masked(&newc, enable);
+        sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lanes(bits: &[u8]) -> LaneVec {
+        LaneVec::from_fn(bits.len(), |i| bits[i] == 1)
+    }
+
+    #[test]
+    fn xor_or_derivation() {
+        let a = lanes(&[0, 0, 1, 1]);
+        let b = lanes(&[0, 1, 0, 1]);
+        let bl = a.and(&b);
+        let blb = a.nor(&b);
+        assert_eq!(ColumnPeriph::xor_of(&bl, &blb), lanes(&[0, 1, 1, 0]));
+        assert_eq!(ColumnPeriph::or_of(&blb), lanes(&[0, 1, 1, 1]));
+    }
+
+    #[test]
+    fn full_add_truth_table() {
+        // all 8 combinations of (a, b, c) across 8 columns
+        let a = lanes(&[0, 0, 0, 0, 1, 1, 1, 1]);
+        let b = lanes(&[0, 0, 1, 1, 0, 0, 1, 1]);
+        let c = lanes(&[0, 1, 0, 1, 0, 1, 0, 1]);
+        let mut p = ColumnPeriph::new(8);
+        // preload carry latch
+        for i in 0..8 {
+            let mut cv = p.carry.clone();
+            cv.set(i, c.get(i));
+            p.carry = cv;
+        }
+        let (sum, carry) = p.full_add(&a.and(&b), &a.nor(&b));
+        for i in 0..8 {
+            let total = a.get(i) as u8 + b.get(i) as u8 + c.get(i) as u8;
+            assert_eq!(sum.get(i), total & 1 == 1, "sum col {i}");
+            assert_eq!(carry.get(i), total >= 2, "carry col {i}");
+        }
+    }
+
+    #[test]
+    fn full_sub_truth_table() {
+        // b - a with borrow semantics: sec() then subtract LSB-first.
+        // Single step: b + !a + carry
+        let a = lanes(&[0, 0, 1, 1]);
+        let b = lanes(&[0, 1, 0, 1]);
+        let mut p = ColumnPeriph::new(4);
+        p.set_carry();
+        let ones = LaneVec::ones(4);
+        let diff = p.full_sub_masked(&a, &b, &ones);
+        // b - a (1-bit, two's complement): 0-0=0, 1-0=1, 0-1=1(borrow), 1-1=0
+        assert_eq!(diff, lanes(&[0, 1, 1, 0]));
+        // carry-out = NOT borrow: borrow only in column 2
+        assert_eq!(p.carry(), &lanes(&[1, 1, 0, 1]));
+    }
+
+    #[test]
+    fn masked_carry_update_keeps_disabled_columns() {
+        let mut p = ColumnPeriph::new(4);
+        let a = lanes(&[1, 1, 1, 1]);
+        let b = lanes(&[1, 1, 1, 1]);
+        let enable = lanes(&[1, 0, 1, 0]);
+        p.full_add_masked(&a.and(&b), &a.nor(&b), &enable);
+        // carry becomes 1 only where enabled
+        assert_eq!(p.carry(), &lanes(&[1, 0, 1, 0]));
+    }
+
+    #[test]
+    fn tag_ops() {
+        let mut p = ColumnPeriph::new(4);
+        p.load_tag(&lanes(&[1, 0, 1, 0]));
+        assert_eq!(p.mask(Pred::Tag), lanes(&[1, 0, 1, 0]));
+        p.invert_tag();
+        assert_eq!(p.mask(Pred::Tag), lanes(&[0, 1, 0, 1]));
+        p.and_tag(&lanes(&[0, 1, 1, 1]));
+        assert_eq!(p.mask(Pred::Tag), lanes(&[0, 1, 0, 1]));
+        p.load_tag_not(&lanes(&[0, 1, 1, 1]));
+        assert_eq!(p.mask(Pred::Tag), lanes(&[1, 0, 0, 0]));
+    }
+
+    #[test]
+    fn pred_mux_all_conditions() {
+        let mut p = ColumnPeriph::new(3);
+        p.set_carry();
+        p.load_tag(&lanes(&[1, 0, 0]));
+        assert_eq!(p.mask(Pred::Always).count_ones(), 3);
+        assert_eq!(p.mask(Pred::Carry).count_ones(), 3);
+        assert_eq!(p.mask(Pred::NCarry).count_ones(), 0);
+        assert_eq!(p.mask(Pred::Tag).count_ones(), 1);
+    }
+
+    #[test]
+    fn tag_from_carry() {
+        let mut p = ColumnPeriph::new(4);
+        p.set_carry();
+        p.tag_from_carry();
+        assert_eq!(p.mask(Pred::Tag).count_ones(), 4);
+    }
+}

@@ -1,0 +1,226 @@
+//! Transposed (bit-serial) data layout helpers (paper §II-B, Fig. 2).
+//!
+//! In compute mode, operands live **transposed**: the W bits of one operand
+//! occupy one column across W consecutive rows (LSB in the lowest row).
+//! Loading/storing between host integers and the array is the job of the
+//! external logic (or the coordinator); these helpers implement it for the
+//! simulator and tests.
+//!
+//! Layout convention (`tuple-major`, matching `ucode::layout`): element `e`
+//! of a vector op lives in column `e % cols`, tuple slot `e / cols`; a slot
+//! occupies `tuple_bits` consecutive rows starting at
+//! `base + slot * tuple_bits`.
+
+use super::array::BitlineArray;
+use crate::util::{mask, sext, SoftBf16};
+
+/// Write `values[e]` (width `w`, two's complement) with its LSB at
+/// `base + (e / cols) * stride` in column `e % cols`.
+///
+/// §Perf: rows are assembled word-by-word on the host side (64 columns per
+/// `u64` op) instead of bit-by-bit — staging is on the coordinator's hot
+/// path for every block dispatch.
+pub fn store_ints(
+    arr: &mut BitlineArray,
+    values: &[i64],
+    w: u32,
+    base: usize,
+    stride: usize,
+) {
+    let cols = arr.cols();
+    let nw = crate::util::words_for(cols);
+    for (slot, chunk) in values.chunks(cols).enumerate() {
+        let row0 = base + slot * stride;
+        for b in 0..w as usize {
+            // assemble the full row plane for bit b of this tuple slot
+            let mut words = vec![0u64; nw];
+            for (c, &v) in chunk.iter().enumerate() {
+                words[c / 64] |= (((mask(v, w) >> b) & 1) as u64) << (c % 64);
+            }
+            if chunk.len() == cols {
+                arr.row_words_mut(row0 + b).copy_from_slice(&words);
+            } else {
+                // partial last slot: merge without clobbering other columns
+                let keep = {
+                    let mut m = vec![0u64; nw];
+                    for (c, mw) in m.iter_mut().enumerate() {
+                        let lo = c * 64;
+                        for bit in 0..64 {
+                            if lo + bit < chunk.len() {
+                                *mw |= 1u64 << bit;
+                            }
+                        }
+                    }
+                    m
+                };
+                let row = arr.row_words_mut(row0 + b);
+                for i in 0..nw {
+                    row[i] = (words[i] & keep[i]) | (row[i] & !keep[i]);
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`store_ints`]: read `n` signed values of width `w`.
+///
+/// §Perf: walks whole row planes (word views) instead of per-bit accessor
+/// calls — the result read-back is on the coordinator's hot path.
+pub fn load_ints(
+    arr: &BitlineArray,
+    n: usize,
+    w: u32,
+    base: usize,
+    stride: usize,
+) -> Vec<i64> {
+    let cols = arr.cols();
+    let mut out = vec![0u64; n];
+    let slots = n.div_ceil(cols);
+    for slot in 0..slots {
+        let row0 = base + slot * stride;
+        let e0 = slot * cols;
+        let count = cols.min(n - e0);
+        for b in 0..w as usize {
+            let words = arr.read_row(row0 + b).words();
+            for c in 0..count {
+                out[e0 + c] |= ((words[c / 64] >> (c % 64)) & 1) << b;
+            }
+        }
+    }
+    out.into_iter().map(|bits| sext(bits as i64, w)).collect()
+}
+
+/// Read `n` **unsigned** values of width `w` (for raw bit-pattern payloads
+/// like bf16).
+pub fn load_uints(
+    arr: &BitlineArray,
+    n: usize,
+    w: u32,
+    base: usize,
+    stride: usize,
+) -> Vec<u64> {
+    let cols = arr.cols();
+    (0..n)
+        .map(|e| {
+            let col = e % cols;
+            let row0 = base + (e / cols) * stride;
+            let mut bits: u64 = 0;
+            for b in 0..w as usize {
+                bits |= (arr.bit(row0 + b, col) as u64) << b;
+            }
+            bits
+        })
+        .collect()
+}
+
+/// Store bf16 bit patterns (16 rows per value), LSB-first like the ints.
+pub fn store_bf16(
+    arr: &mut BitlineArray,
+    values: &[SoftBf16],
+    base: usize,
+    stride: usize,
+) {
+    let raw: Vec<i64> = values.iter().map(|v| v.to_bits() as i64).collect();
+    store_ints(arr, &raw, 16, base, stride);
+}
+
+/// Load bf16 bit patterns (16 rows per value).
+pub fn load_bf16(
+    arr: &BitlineArray,
+    n: usize,
+    base: usize,
+    stride: usize,
+) -> Vec<SoftBf16> {
+    load_uints(arr, n, 16, base, stride)
+        .into_iter()
+        .map(|b| SoftBf16::from_bits(b as u16))
+        .collect()
+}
+
+/// Store a dot-product operand matrix: `values[k][c]` is the k-th element of
+/// the dot product computed in column `c`. Pair `k` occupies rows
+/// `base + k * stride ..` (caller interleaves A and B with offsets).
+pub fn store_dot_operand(
+    arr: &mut BitlineArray,
+    values: &[Vec<i64>],
+    w: u32,
+    base: usize,
+    stride: usize,
+) {
+    for (k, rowv) in values.iter().enumerate() {
+        for (c, &v) in rowv.iter().enumerate() {
+            let bits = mask(v, w);
+            for b in 0..w as usize {
+                arr.set_bit(base + k * stride + b, c, (bits >> b) & 1 == 1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::util::Prng;
+
+    #[test]
+    fn int_roundtrip_one_slot() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let vals: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        store_ints(&mut arr, &vals, 8, 0, 8);
+        assert_eq!(load_ints(&arr, 40, 8, 0, 8), vals);
+    }
+
+    #[test]
+    fn int_roundtrip_multi_slot() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let mut rng = Prng::new(99);
+        let vals: Vec<i64> = (0..1680).map(|_| rng.int(4)).collect();
+        store_ints(&mut arr, &vals, 4, 0, 12); // 42 tuples of 12 rows
+        assert_eq!(load_ints(&arr, 1680, 4, 0, 12), vals);
+    }
+
+    #[test]
+    fn transposed_bits_are_in_one_column() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        store_ints(&mut arr, &[0b1011], 4, 10, 4);
+        // element 0 -> column 0, rows 10..14 LSB-first
+        assert!(arr.bit(10, 0));
+        assert!(arr.bit(11, 0));
+        assert!(!arr.bit(12, 0));
+        assert!(arr.bit(13, 0));
+        // nothing in column 1
+        assert!(!arr.bit(10, 1));
+    }
+
+    #[test]
+    fn negative_values_sign_extend() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        store_ints(&mut arr, &[-1, -8, 7], 4, 0, 4);
+        assert_eq!(load_ints(&arr, 3, 4, 0, 4), vec![-1, -8, 7]);
+    }
+
+    #[test]
+    fn bf16_roundtrip() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let vals: Vec<SoftBf16> = [1.0f32, -2.5, 0.125, 3.0e4]
+            .iter()
+            .map(|&x| SoftBf16::from_f32(x))
+            .collect();
+        store_bf16(&mut arr, &vals, 0, 48);
+        assert_eq!(load_bf16(&arr, 4, 0, 48), vals);
+    }
+
+    #[test]
+    fn dot_operand_layout() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let k0: Vec<i64> = (0..40).map(|c| (c % 8) - 4).collect();
+        let k1: Vec<i64> = (0..40).map(|c| ((c * 3) % 8) - 4).collect();
+        store_dot_operand(&mut arr, &[k0.clone(), k1.clone()], 4, 0, 8);
+        // pair k occupies rows base + k*8
+        let got0 = load_ints(&arr, 40, 4, 0, 8);
+        let got1 = load_ints(&arr, 40, 4, 8, 8);
+        assert_eq!(got0, k0);
+        assert_eq!(got1, k1);
+    }
+}

@@ -1,0 +1,205 @@
+//! A farm of Compute RAM block simulators with thread-pool execution.
+
+use super::mapper::BlockTask;
+use crate::bitline::Geometry;
+use crate::cram::{ops, CramBlock};
+use crate::ctrl::CycleStats;
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// Sum cycle statistics (energy-relevant total; time uses the wave max).
+pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
+    let mut out = CycleStats::default();
+    for s in stats {
+        out.cycles += s.cycles;
+        out.array_cycles += s.array_cycles;
+        out.instructions += s.instructions;
+    }
+    out
+}
+
+/// A pool of blocks; tasks are executed on up to `blocks.len()` worker
+/// threads, each thread checking out one block at a time (models a shell
+/// that owns N physical Compute RAMs).
+pub struct BlockFarm {
+    geometry: Geometry,
+    blocks: Mutex<Vec<CramBlock>>,
+    n_blocks: usize,
+}
+
+/// Result of one executed task.
+#[derive(Clone, Debug)]
+pub struct TaskOutput {
+    pub task_index: usize,
+    pub values: Vec<i64>,
+    pub stats: CycleStats,
+}
+
+impl BlockFarm {
+    pub fn new(geometry: Geometry, n_blocks: usize) -> Self {
+        assert!(n_blocks >= 1);
+        Self {
+            geometry,
+            blocks: Mutex::new((0..n_blocks).map(|_| CramBlock::new(geometry)).collect()),
+            n_blocks,
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_blocks == 0
+    }
+
+    /// Execute one task on one checked-out block.
+    fn run_task(block: &mut CramBlock, task: &BlockTask) -> Result<(Vec<i64>, CycleStats)> {
+        match task {
+            BlockTask::IntElementwise { op, w, a, b } => {
+                use super::job::EwOp;
+                let r = match op {
+                    EwOp::Add => ops::int_addsub(block, a, b, *w, false)?,
+                    EwOp::Sub => ops::int_addsub(block, a, b, *w, true)?,
+                    EwOp::Mul => ops::int_mul(block, a, b, *w)?,
+                };
+                Ok((r.values, r.stats))
+            }
+            BlockTask::IntDot { w, a, b, .. } => {
+                let r = ops::int_dot(block, a, b, *w, 32)?;
+                let n = a.first().map_or(0, Vec::len);
+                Ok((r.values[..n].to_vec(), r.stats))
+            }
+            BlockTask::Bf16Elementwise { mul, a, b } => {
+                let r = ops::bf16_op(block, a, b, *mul)?;
+                Ok((r.values.iter().map(|v| v.to_bits() as i64).collect(), r.stats))
+            }
+        }
+    }
+
+    /// Run all tasks across the farm (scoped threads, one per block).
+    pub fn execute(&self, tasks: &[BlockTask]) -> Result<Vec<TaskOutput>> {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let outputs: Mutex<Vec<TaskOutput>> = Mutex::new(Vec::with_capacity(tasks.len()));
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for _ in 0..self.n_blocks.min(tasks.len().max(1)) {
+                s.spawn(|| {
+                    // check out a block for this worker's lifetime
+                    let mut block = {
+                        let mut pool = self.blocks.lock().unwrap();
+                        match pool.pop() {
+                            Some(b) => b,
+                            None => return,
+                        }
+                    };
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= tasks.len() {
+                            break;
+                        }
+                        match Self::run_task(&mut block, &tasks[i]) {
+                            Ok((values, stats)) => outputs.lock().unwrap().push(TaskOutput {
+                                task_index: i,
+                                values,
+                                stats,
+                            }),
+                            Err(e) => {
+                                first_err.lock().unwrap().get_or_insert(e);
+                                break;
+                            }
+                        }
+                    }
+                    self.blocks.lock().unwrap().push(block);
+                });
+            }
+        });
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut out = outputs.into_inner().unwrap();
+        out.sort_by_key(|o| o.task_index);
+        Ok(out)
+    }
+
+    /// Aggregate statistics of a set of outputs. Wall-clock cycles of the
+    /// farm are the **maximum** over concurrently-running blocks per wave;
+    /// this returns both the sum (energy) and the critical path (time).
+    pub fn aggregate(&self, outputs: &[TaskOutput]) -> (CycleStats, u64) {
+        let total = merge_stats(outputs.iter().map(|o| o.stats));
+        // wave-based critical path: tasks execute in waves of n_blocks
+        let mut wave_max = Vec::new();
+        for (i, o) in outputs.iter().enumerate() {
+            let wave = i / self.n_blocks;
+            if wave_max.len() <= wave {
+                wave_max.push(0u64);
+            }
+            wave_max[wave] = wave_max[wave].max(o.stats.cycles);
+        }
+        (total, wave_max.iter().sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::EwOp;
+
+    #[test]
+    fn farm_executes_tasks_in_parallel_and_orders_results() {
+        let farm = BlockFarm::new(Geometry::G512x40, 4);
+        let tasks: Vec<BlockTask> = (0..8)
+            .map(|i| BlockTask::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: vec![i as i64; 10],
+                b: vec![1; 10],
+            })
+            .collect();
+        let out = farm.execute(&tasks).unwrap();
+        assert_eq!(out.len(), 8);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.task_index, i);
+            assert!(o.values.iter().all(|&v| v == i as i64 + 1));
+        }
+    }
+
+    #[test]
+    fn aggregate_separates_energy_and_time() {
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        let tasks: Vec<BlockTask> = (0..4)
+            .map(|_| BlockTask::IntElementwise {
+                op: EwOp::Add,
+                w: 4,
+                a: vec![1; 1680],
+                b: vec![2; 1680],
+            })
+            .collect();
+        let out = farm.execute(&tasks).unwrap();
+        let (total, critical) = farm.aggregate(&out);
+        // 4 equal tasks on 2 blocks: critical path = 2 waves = total / 2
+        assert_eq!(critical * 2, total.cycles);
+    }
+
+    #[test]
+    fn single_block_farm_serializes() {
+        let farm = BlockFarm::new(Geometry::G512x40, 1);
+        let tasks: Vec<BlockTask> = (0..3)
+            .map(|_| BlockTask::IntElementwise {
+                op: EwOp::Mul,
+                w: 4,
+                a: vec![3; 5],
+                b: vec![-2; 5],
+            })
+            .collect();
+        let out = farm.execute(&tasks).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|o| o.values.iter().all(|&v| v == -6)));
+        let (total, critical) = farm.aggregate(&out);
+        assert_eq!(critical, total.cycles);
+    }
+}

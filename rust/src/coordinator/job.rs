@@ -1,0 +1,113 @@
+//! Workload descriptions accepted by the coordinator.
+
+use crate::ctrl::CycleStats;
+use crate::util::SoftBf16;
+
+/// Elementwise integer operator.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EwOp {
+    Add,
+    Sub,
+    Mul,
+}
+
+/// One unit of work submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    /// Elementwise `a (op) b` at integer width `w`.
+    IntElementwise { op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64> },
+    /// `n` independent dot products of length `k`: `a[k][n] . b[k][n]`,
+    /// int32 accumulation.
+    IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>> },
+    /// Elementwise bfloat16 add/mul.
+    Bf16Elementwise { mul: bool, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
+    /// Integer matmul `x[m][k] @ w[k][n] -> int32[m][n]` at width `w`.
+    IntMatmul { w: u32, x: Vec<Vec<i64>>, wt: Vec<Vec<i64>> },
+}
+
+impl JobPayload {
+    /// Number of scalar results the job produces.
+    pub fn result_len(&self) -> usize {
+        match self {
+            JobPayload::IntElementwise { a, .. } => a.len(),
+            JobPayload::IntDot { a, .. } => a.first().map_or(0, Vec::len),
+            JobPayload::Bf16Elementwise { a, .. } => a.len(),
+            JobPayload::IntMatmul { x, wt, .. } => {
+                x.len() * wt.first().map_or(0, Vec::len)
+            }
+        }
+    }
+
+    /// Number of primitive operations (adds/muls/MACs) in the job, for
+    /// throughput accounting.
+    pub fn op_count(&self) -> u64 {
+        match self {
+            JobPayload::IntElementwise { a, .. } => a.len() as u64,
+            JobPayload::Bf16Elementwise { a, .. } => a.len() as u64,
+            JobPayload::IntDot { a, .. } => {
+                (a.len() * a.first().map_or(0, Vec::len)) as u64
+            }
+            JobPayload::IntMatmul { x, wt, .. } => {
+                (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64
+            }
+        }
+    }
+}
+
+/// A job with an identity (used by the batching server).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    pub payload: JobPayload,
+}
+
+/// Result of a completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// Integer results (bf16 results are returned as raw bit patterns).
+    pub values: Vec<i64>,
+    /// Aggregate simulator statistics over all blocks that ran the job.
+    pub stats: CycleStats,
+    /// Number of block-level program executions the job needed.
+    pub block_runs: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn result_len_elementwise() {
+        let j = JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 8,
+            a: vec![1; 100],
+            b: vec![2; 100],
+        };
+        assert_eq!(j.result_len(), 100);
+        assert_eq!(j.op_count(), 100);
+    }
+
+    #[test]
+    fn result_len_dot() {
+        let j = JobPayload::IntDot {
+            w: 4,
+            a: vec![vec![0; 7]; 30],
+            b: vec![vec![0; 7]; 30],
+        };
+        assert_eq!(j.result_len(), 7);
+        assert_eq!(j.op_count(), 210);
+    }
+
+    #[test]
+    fn result_len_matmul() {
+        let j = JobPayload::IntMatmul {
+            w: 8,
+            x: vec![vec![0; 64]; 16],
+            wt: vec![vec![0; 32]; 64],
+        };
+        assert_eq!(j.result_len(), 16 * 32);
+        assert_eq!(j.op_count(), 16 * 64 * 32);
+    }
+}

@@ -1,0 +1,222 @@
+//! Job -> per-block task decomposition.
+//!
+//! The mapper knows the packed capacity of one block for each operation
+//! (from [`crate::ucode::layout`]) and splits jobs accordingly:
+//!
+//! * elementwise vectors chunk by `total_ops()` per block;
+//! * dot batches chunk by columns (one dot per column), and dot products
+//!   longer than the per-column pair budget are **split along K** into
+//!   partial dots whose int32 partials are summed by the host (the
+//!   "external logic" role);
+//! * matmuls lower to dot batches: output element `(i, j)` is the dot of
+//!   `x[i][..]` with column `j` of `w`, tiled over columns and K.
+
+use super::job::{EwOp, JobPayload};
+use crate::bitline::Geometry;
+use crate::ucode::{DotLayout, VecLayout};
+
+/// One block-sized task.
+#[derive(Clone, Debug)]
+pub enum BlockTask {
+    IntElementwise { op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64> },
+    /// Partial dot batch: contributes into `out[out_offset .. +n]`.
+    IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
+    Bf16Elementwise { mul: bool, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
+}
+
+/// Task list + reduction plan for a job.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub tasks: Vec<BlockTask>,
+    /// Result vector length (partial dots accumulate into it).
+    pub result_len: usize,
+    /// Offset ranges in the result covered by elementwise chunks, in task
+    /// order (elementwise tasks only).
+    pub ew_offsets: Vec<usize>,
+}
+
+/// Decompose a job for blocks of the given geometry.
+pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
+    match payload {
+        JobPayload::IntElementwise { op, w, a, b } => {
+            let cap = match op {
+                EwOp::Mul => VecLayout::new(geom, *w, 2 * w).total_ops(),
+                _ => VecLayout::new(geom, *w, *w).total_ops(),
+            };
+            let mut tasks = Vec::new();
+            let mut ew_offsets = Vec::new();
+            let mut off = 0;
+            while off < a.len() {
+                let end = (off + cap).min(a.len());
+                tasks.push(BlockTask::IntElementwise {
+                    op: *op,
+                    w: *w,
+                    a: a[off..end].to_vec(),
+                    b: b[off..end].to_vec(),
+                });
+                ew_offsets.push(off);
+                off = end;
+            }
+            Plan { tasks, result_len: a.len(), ew_offsets }
+        }
+        JobPayload::Bf16Elementwise { mul, a, b } => {
+            // bf16 layout caps tuples below the full geometry (scratch rows)
+            let cap = {
+                let mut l = VecLayout::new(geom, 16, 16);
+                l.ops_per_col = l.ops_per_col.min((geom.rows() - 32) / l.tuple_bits);
+                l.total_ops()
+            };
+            let mut tasks = Vec::new();
+            let mut ew_offsets = Vec::new();
+            let mut off = 0;
+            while off < a.len() {
+                let end = (off + cap).min(a.len());
+                tasks.push(BlockTask::Bf16Elementwise {
+                    mul: *mul,
+                    a: a[off..end].to_vec(),
+                    b: b[off..end].to_vec(),
+                });
+                ew_offsets.push(off);
+                off = end;
+            }
+            Plan { tasks, result_len: a.len(), ew_offsets }
+        }
+        JobPayload::IntDot { w, a, b } => {
+            let n = a.first().map_or(0, Vec::len);
+            plan_dot(geom, *w, a, b, n, 0)
+        }
+        JobPayload::IntMatmul { w, x, wt } => {
+            // lower to a dot batch: column c of the batch is output (i, j)
+            let m = x.len();
+            let k = wt.len();
+            let n = wt.first().map_or(0, Vec::len);
+            let mut a = vec![vec![0i64; m * n]; k];
+            let mut b = vec![vec![0i64; m * n]; k];
+            for i in 0..m {
+                for j in 0..n {
+                    let c = i * n + j;
+                    for kk in 0..k {
+                        a[kk][c] = x[i][kk];
+                        b[kk][c] = wt[kk][j];
+                    }
+                }
+            }
+            plan_dot(geom, *w, &a, &b, m * n, 0)
+        }
+    }
+}
+
+fn plan_dot(
+    geom: Geometry,
+    w: u32,
+    a: &[Vec<i64>],
+    b: &[Vec<i64>],
+    result_len: usize,
+    base_offset: usize,
+) -> Plan {
+    let max_k = DotLayout::max_k(geom, w, 32).k;
+    let cols = geom.cols();
+    let k = a.len();
+    let mut tasks = Vec::new();
+    // split K into segments, columns into groups of `cols`
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + max_k).min(k);
+        let mut c0 = 0;
+        while c0 < result_len {
+            let c1 = (c0 + cols).min(result_len);
+            let sub_a: Vec<Vec<i64>> =
+                a[k0..k1].iter().map(|row| row[c0..c1].to_vec()).collect();
+            let sub_b: Vec<Vec<i64>> =
+                b[k0..k1].iter().map(|row| row[c0..c1].to_vec()).collect();
+            tasks.push(BlockTask::IntDot {
+                w,
+                a: sub_a,
+                b: sub_b,
+                out_offset: base_offset + c0,
+            });
+            c0 = c1;
+        }
+        k0 = k1;
+    }
+    Plan { tasks, result_len, ew_offsets: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_elementwise_is_one_task() {
+        let p = plan(
+            Geometry::G512x40,
+            &JobPayload::IntElementwise { op: EwOp::Add, w: 8, a: vec![0; 100], b: vec![0; 100] },
+        );
+        assert_eq!(p.tasks.len(), 1);
+        assert_eq!(p.result_len, 100);
+    }
+
+    #[test]
+    fn large_elementwise_chunks_by_block_capacity() {
+        // int4 add capacity = 1680 per block
+        let n = 5000;
+        let p = plan(
+            Geometry::G512x40,
+            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
+        );
+        assert_eq!(p.tasks.len(), n.div_ceil(1680));
+        assert_eq!(p.ew_offsets, vec![0, 1680, 3360]);
+    }
+
+    #[test]
+    fn long_dot_splits_along_k() {
+        // int8 max K = 30; K = 64 -> 3 K-segments
+        let k = 64;
+        let n = 10;
+        let a = vec![vec![1i64; n]; k];
+        let b = vec![vec![1i64; n]; k];
+        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 8, a, b });
+        assert_eq!(p.tasks.len(), 3);
+        // all tasks target offset 0 (partial sums)
+        for t in &p.tasks {
+            match t {
+                BlockTask::IntDot { out_offset, .. } => assert_eq!(*out_offset, 0),
+                _ => panic!("wrong task kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn wide_dot_splits_along_columns() {
+        let k = 10;
+        let n = 100; // > 40 columns
+        let a = vec![vec![1i64; n]; k];
+        let b = vec![vec![1i64; n]; k];
+        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 4, a, b });
+        assert_eq!(p.tasks.len(), 3); // 40 + 40 + 20
+    }
+
+    #[test]
+    fn matmul_lowers_to_dots() {
+        let x = vec![vec![1i64; 8]; 4]; // 4x8
+        let wt = vec![vec![1i64; 6]; 8]; // 8x6
+        let p = plan(Geometry::G512x40, &JobPayload::IntMatmul { w: 8, x, wt });
+        assert_eq!(p.result_len, 24);
+        assert_eq!(p.tasks.len(), 1); // 24 cols, k=8 fits
+    }
+
+    #[test]
+    fn mul_capacity_differs_from_add() {
+        let n = 1500; // > 1280 (mul cap) but < 1680 (add cap)
+        let add = plan(
+            Geometry::G512x40,
+            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
+        );
+        let mul = plan(
+            Geometry::G512x40,
+            &JobPayload::IntElementwise { op: EwOp::Mul, w: 4, a: vec![0; n], b: vec![0; n] },
+        );
+        assert_eq!(add.tasks.len(), 1);
+        assert_eq!(mul.tasks.len(), 2);
+    }
+}

@@ -1,0 +1,55 @@
+//! Shared metrics for the coordinator and server.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters, shared across worker threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub jobs_completed: AtomicU64,
+    pub block_runs: AtomicU64,
+    pub ops_executed: AtomicU64,
+    pub sim_cycles: AtomicU64,
+    pub sim_array_cycles: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_job(&self, ops: u64, block_runs: u64, cycles: u64, array_cycles: u64) {
+        self.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.block_runs.fetch_add(block_runs, Ordering::Relaxed);
+        self.ops_executed.fetch_add(ops, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.sim_array_cycles.fetch_add(array_cycles, Ordering::Relaxed);
+    }
+
+    /// One-line text snapshot.
+    pub fn snapshot(&self) -> String {
+        format!(
+            "jobs={} block_runs={} ops={} cycles={} array_cycles={}",
+            self.jobs_completed.load(Ordering::Relaxed),
+            self.block_runs.load(Ordering::Relaxed),
+            self.ops_executed.load(Ordering::Relaxed),
+            self.sim_cycles.load(Ordering::Relaxed),
+            self.sim_array_cycles.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        let m = Metrics::new();
+        m.record_job(100, 2, 500, 400);
+        m.record_job(50, 1, 250, 200);
+        assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
+        assert_eq!(m.ops_executed.load(Ordering::Relaxed), 150);
+        assert!(m.snapshot().contains("jobs=2"));
+    }
+}

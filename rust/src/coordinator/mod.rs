@@ -1,0 +1,36 @@
+//! The L3 coordinator: mapping workloads across a farm of Compute RAM
+//! blocks.
+//!
+//! The paper evaluates single blocks; a real deployment (and the paper's
+//! §VI future work, "performance boost at the application level") needs the
+//! piece an FPGA shell or overlay would provide: something that takes
+//! vector/NN-sized work, **tiles it across many Compute RAM blocks**, stages
+//! operands in transposed layout, runs the blocks in parallel, and gathers
+//! results. That orchestration layer is this module:
+//!
+//! * [`job`] — workload descriptions (elementwise vectors, dot batches,
+//!   matmuls) and results with cycle/throughput metrics;
+//! * [`mapper`] — splits a job into per-block tasks honoring each block's
+//!   packed capacity, including K-axis splitting for dot products longer
+//!   than a column (partial sums reduced on the host side, as the external
+//!   logic would);
+//! * [`farm`] — a pool of [`crate::cram::CramBlock`] simulators executed on
+//!   worker threads;
+//! * [`scheduler`] — dispatches tasks to free blocks and aggregates
+//!   metrics;
+//! * [`server`] — a TCP/JSON batching front-end (PIM-as-a-service), the
+//!   shape of a vLLM-style router: requests are coalesced into full blocks
+//!   before dispatch;
+//! * [`metrics`] — counters shared by all of the above.
+
+pub mod farm;
+pub mod job;
+pub mod mapper;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use farm::BlockFarm;
+pub use job::{Job, JobPayload, JobResult};
+pub use metrics::Metrics;
+pub use scheduler::Coordinator;

@@ -1,0 +1,194 @@
+//! The coordinator: plan, dispatch, reduce.
+//!
+//! Owns a [`BlockFarm`] and [`Metrics`]; accepts [`JobPayload`]s, runs the
+//! mapper, executes the plan on the farm, and performs the host-side
+//! reduction (elementwise scatter, dot partial sums, matmul reshape).
+
+use super::farm::BlockFarm;
+use super::job::{Job, JobPayload, JobResult};
+use super::mapper::{self, BlockTask};
+use super::metrics::Metrics;
+use crate::bitline::Geometry;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// The top-level coordinator.
+pub struct Coordinator {
+    farm: BlockFarm,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new(geometry: Geometry, n_blocks: usize) -> Self {
+        Self {
+            farm: BlockFarm::new(geometry, n_blocks),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    pub fn farm(&self) -> &BlockFarm {
+        &self.farm
+    }
+
+    /// Execute a job to completion.
+    pub fn run(&self, job: Job) -> Result<JobResult> {
+        let plan = mapper::plan(self.farm.geometry(), &job.payload);
+        let outputs = self.farm.execute(&plan.tasks)?;
+        let (total, _critical) = self.farm.aggregate(&outputs);
+
+        let mut values = vec![0i64; plan.result_len];
+        for (out, task) in outputs.iter().zip(&plan.tasks) {
+            match task {
+                BlockTask::IntElementwise { .. } | BlockTask::Bf16Elementwise { .. } => {
+                    // scatter chunk at its offset (ew_offsets is task-ordered,
+                    // but dot/ew are never mixed in one plan)
+                    let off = plan.ew_offsets[out.task_index];
+                    values[off..off + out.values.len()].copy_from_slice(&out.values);
+                }
+                BlockTask::IntDot { out_offset, .. } => {
+                    // partial sums along split K accumulate
+                    for (i, v) in out.values.iter().enumerate() {
+                        values[out_offset + i] =
+                            (values[out_offset + i] + v) as i32 as i64;
+                    }
+                }
+            }
+        }
+        self.metrics.record_job(
+            job.payload.op_count(),
+            plan.tasks.len() as u64,
+            total.cycles,
+            total.array_cycles,
+        );
+        Ok(JobResult {
+            id: job.id,
+            values,
+            stats: total,
+            block_runs: plan.tasks.len(),
+        })
+    }
+
+    /// Convenience: integer matmul `x[m][k] @ w[k][n] -> int32 [m][n]`.
+    pub fn matmul(&self, x: &[Vec<i64>], wt: &[Vec<i64>], w: u32) -> Result<Vec<Vec<i64>>> {
+        let m = x.len();
+        let n = wt.first().map_or(0, Vec::len);
+        let r = self.run(Job {
+            id: 0,
+            payload: JobPayload::IntMatmul { w, x: x.to_vec(), wt: wt.to_vec() },
+        })?;
+        Ok((0..m).map(|i| r.values[i * n..(i + 1) * n].to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::EwOp;
+    use crate::util::Prng;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(Geometry::G512x40, 4)
+    }
+
+    #[test]
+    fn elementwise_job_spanning_blocks() {
+        let c = coord();
+        let n = 4000; // spans 3 int4-add blocks
+        let mut rng = Prng::new(31);
+        let a: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let r = c
+            .run(Job {
+                id: 1,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 4,
+                    a: a.clone(),
+                    b: b.clone(),
+                },
+            })
+            .unwrap();
+        assert_eq!(r.block_runs, 3);
+        for i in 0..n {
+            let expect = crate::util::sext(crate::util::mask(a[i] + b[i], 4) as i64, 4);
+            assert_eq!(r.values[i], expect, "i={i}");
+        }
+    }
+
+    #[test]
+    fn long_dot_partials_sum_correctly() {
+        let c = coord();
+        // K = 64 int8 dots (needs 3 K-segments), 25 columns
+        let k = 64;
+        let n = 25;
+        let mut rng = Prng::new(32);
+        let a: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let r = c
+            .run(Job { id: 2, payload: JobPayload::IntDot { w: 8, a: a.clone(), b: b.clone() } })
+            .unwrap();
+        assert_eq!(r.block_runs, 3);
+        for cix in 0..n {
+            let expect: i64 = (0..k).map(|i| a[i][cix] * b[i][cix]).sum();
+            assert_eq!(r.values[cix], expect, "col {cix}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_host_reference() {
+        let c = coord();
+        let mut rng = Prng::new(33);
+        let m = 6;
+        let k = 40;
+        let n = 9;
+        let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(8)).collect()).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let got = c.matmul(&x, &wt, 8).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let expect: i64 = (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum();
+                assert_eq!(got[i][j], expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate_across_jobs() {
+        let c = coord();
+        for id in 0..3 {
+            c.run(Job {
+                id,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Mul,
+                    w: 4,
+                    a: vec![2; 50],
+                    b: vec![3; 50],
+                },
+            })
+            .unwrap();
+        }
+        let snap = c.metrics.snapshot();
+        assert!(snap.contains("jobs=3"), "{snap}");
+        assert!(snap.contains("ops=150"), "{snap}");
+    }
+
+    #[test]
+    fn bf16_job_roundtrip() {
+        use crate::util::SoftBf16;
+        let c = coord();
+        let a: Vec<SoftBf16> = (0..100).map(|i| SoftBf16::from_f32(i as f32 * 0.5)).collect();
+        let b: Vec<SoftBf16> = (0..100).map(|i| SoftBf16::from_f32(1.0 + i as f32)).collect();
+        let r = c
+            .run(Job {
+                id: 9,
+                payload: JobPayload::Bf16Elementwise { mul: false, a: a.clone(), b: b.clone() },
+            })
+            .unwrap();
+        for i in 0..100 {
+            let expect = a[i].add(b[i]).to_bits() as i64;
+            assert_eq!(r.values[i], expect, "i={i}");
+        }
+    }
+}

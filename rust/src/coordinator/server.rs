@@ -1,0 +1,332 @@
+//! PIM-as-a-service: a TCP/JSON batching front-end over the coordinator.
+//!
+//! The request path is the shape of a serving router (cf. vLLM's router):
+//! clients submit small elementwise requests; the server **coalesces** all
+//! requests waiting in the queue into one block-filling batch before
+//! dispatching to the farm, amortizing the block program over many
+//! requests. Python is never involved: the wire format is line-delimited
+//! JSON over TCP, parsed by [`crate::util::json`].
+//!
+//! Wire format (one JSON object per line):
+//!
+//! ```text
+//!   -> {"id": 1, "op": "add", "w": 8, "a": [1,2,3], "b": [4,5,6]}
+//!   <- {"id": 1, "ok": true, "values": [5,7,9]}
+//! ```
+//!
+//! Supported ops: `add`, `sub`, `mul` (integer widths 2..=16).
+
+use super::job::{EwOp, Job, JobPayload};
+use super::scheduler::Coordinator;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One parsed client request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub op: EwOp,
+    pub w: u32,
+    pub a: Vec<i64>,
+    pub b: Vec<i64>,
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let id = v.get("id").and_then(Json::as_i64).ok_or_else(|| anyhow!("missing id"))? as u64;
+    let op = match v.get("op").and_then(Json::as_str) {
+        Some("add") => EwOp::Add,
+        Some("sub") => EwOp::Sub,
+        Some("mul") => EwOp::Mul,
+        other => bail!("unsupported op {other:?}"),
+    };
+    let w = v.get("w").and_then(Json::as_i64).unwrap_or(8) as u32;
+    if !(2..=16).contains(&w) {
+        bail!("width {w} out of range 2..=16");
+    }
+    let nums = |key: &str| -> Result<Vec<i64>> {
+        v.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing array {key}"))?
+            .iter()
+            .map(|x| x.as_i64().ok_or_else(|| anyhow!("non-integer in {key}")))
+            .collect()
+    };
+    let a = nums("a")?;
+    let b = nums("b")?;
+    if a.len() != b.len() {
+        bail!("length mismatch: a={} b={}", a.len(), b.len());
+    }
+    let lim = 1i64 << (w - 1);
+    if a.iter().chain(&b).any(|&x| x < -lim || x >= lim) {
+        bail!("operand out of range for int{w}");
+    }
+    Ok(Request { id, op, w, a, b })
+}
+
+/// Format a success response line.
+pub fn format_response(id: u64, values: &[i64]) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    obj.insert(
+        "values".to_string(),
+        Json::Arr(values.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(obj).dump()
+}
+
+/// Format an error response line.
+pub fn format_error(id: u64, msg: &str) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("ok".to_string(), Json::Bool(false));
+    obj.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj).dump()
+}
+
+/// The batching core, independent of the transport: drains the queue and
+/// coalesces same-(op, w) requests into single farm jobs.
+pub struct Batcher {
+    coordinator: Arc<Coordinator>,
+}
+
+impl Batcher {
+    pub fn new(coordinator: Arc<Coordinator>) -> Self {
+        Self { coordinator }
+    }
+
+    /// Execute a batch of requests with coalescing; returns per-request
+    /// results in input order.
+    pub fn run_batch(&self, reqs: &[Request]) -> Vec<Result<Vec<i64>>> {
+        // group by (op, w)
+        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            groups.entry((r.op as u8, r.w)).or_default().push(i);
+        }
+        let mut out: Vec<Option<Result<Vec<i64>>>> = (0..reqs.len()).map(|_| None).collect();
+        for ((_, w), idxs) in groups {
+            let op = reqs[idxs[0]].op;
+            // coalesce into one flat job
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            let mut spans = Vec::new();
+            for &i in &idxs {
+                spans.push((i, a.len(), reqs[i].a.len()));
+                a.extend_from_slice(&reqs[i].a);
+                b.extend_from_slice(&reqs[i].b);
+            }
+            match self.coordinator.run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwise { op, w, a, b },
+            }) {
+                Ok(res) => {
+                    for (i, off, len) in spans {
+                        out[i] = Some(Ok(res.values[off..off + len].to_vec()));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e}");
+                    for (i, _, _) in spans {
+                        out[i] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("all requests answered")).collect()
+    }
+}
+
+enum Work {
+    Req(Request, Sender<String>),
+}
+
+/// The TCP server: one reader thread per connection feeding a central
+/// batching loop. `max_batch_wait` bounds added latency.
+pub struct PimServer {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PimServer {
+    /// Start on an OS-assigned port on localhost.
+    pub fn start(coordinator: Arc<Coordinator>, max_batch_wait: Duration) -> Result<PimServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sd = shutdown.clone();
+        let handle = std::thread::spawn(move || {
+            let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
+            let batcher = Batcher::new(coordinator);
+            let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+                Arc::new(Mutex::new(Vec::new()));
+            loop {
+                if sd.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                // accept new connections (non-blocking)
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        conns.lock().unwrap().push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, tx);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(_) => break,
+                }
+                // drain the queue into one batch
+                let mut pending: Vec<(Request, Sender<String>)> = Vec::new();
+                let deadline = std::time::Instant::now() + max_batch_wait;
+                while std::time::Instant::now() < deadline {
+                    match rx.recv_timeout(Duration::from_millis(1)) {
+                        Ok(Work::Req(r, reply)) => pending.push((r, reply)),
+                        Err(_) => {
+                            if !pending.is_empty() {
+                                break;
+                            }
+                        }
+                    }
+                }
+                if pending.is_empty() {
+                    continue;
+                }
+                let reqs: Vec<Request> = pending.iter().map(|(r, _)| r.clone()).collect();
+                let results = batcher.run_batch(&reqs);
+                for ((req, reply), result) in pending.into_iter().zip(results) {
+                    let line = match result {
+                        Ok(values) => format_response(req.id, &values),
+                        Err(e) => format_error(req.id, &format!("{e}")),
+                    };
+                    let _ = reply.send(line);
+                }
+            }
+        });
+        Ok(PimServer { addr, shutdown, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Work>) -> Result<()> {
+    // small JSON lines: disable Nagle or latency is delayed-ACK bound
+    stream.set_nodelay(true)?;
+    let peer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut writer = peer;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (reply_tx, reply_rx) = channel();
+        match parse_request(trimmed) {
+            Ok(req) => {
+                tx.send(Work::Req(req, reply_tx))
+                    .map_err(|_| anyhow!("server shutting down"))?;
+                let resp = reply_rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| anyhow!("batch timeout"))?;
+                writeln!(writer, "{resp}")?;
+            }
+            Err(e) => {
+                writeln!(writer, "{}", format_error(0, &format!("{e}")))?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+
+    #[test]
+    fn parse_request_roundtrip() {
+        let r = parse_request(r#"{"id": 3, "op": "mul", "w": 4, "a": [1, -2], "b": [3, 4]}"#)
+            .unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.op, EwOp::Mul);
+        assert_eq!(r.a, vec![1, -2]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_requests() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"id":1,"op":"div","a":[],"b":[]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"add","w":8,"a":[1],"b":[1,2]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"add","w":4,"a":[100],"b":[1]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"add","w":99,"a":[1],"b":[1]}"#).is_err());
+    }
+
+    #[test]
+    fn batcher_coalesces_and_answers_in_order() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
+        let batcher = Batcher::new(coord.clone());
+        let reqs = vec![
+            Request { id: 1, op: EwOp::Add, w: 8, a: vec![1, 2], b: vec![10, 20] },
+            Request { id: 2, op: EwOp::Mul, w: 8, a: vec![3], b: vec![5] },
+            Request { id: 3, op: EwOp::Add, w: 8, a: vec![7], b: vec![-7] },
+        ];
+        let out = batcher.run_batch(&reqs);
+        assert_eq!(out[0].as_ref().unwrap(), &vec![11, 22]);
+        assert_eq!(out[1].as_ref().unwrap(), &vec![15]);
+        assert_eq!(out[2].as_ref().unwrap(), &vec![0]);
+        // the two adds coalesced into one job: jobs=2 not 3
+        assert!(coord.metrics.snapshot().contains("jobs=2"));
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        writeln!(conn, r#"{{"id": 42, "op": "add", "w": 8, "a": [5, 6], "b": [1, 1]}}"#)
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = Json::parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            v.get("values").unwrap().as_arr().unwrap().iter().map(|x| x.as_i64().unwrap()).collect::<Vec<_>>(),
+            vec![6, 7]
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_reports_errors() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        writeln!(conn, "not json").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = Json::parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        server.stop();
+    }
+}

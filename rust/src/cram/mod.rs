@@ -1,0 +1,337 @@
+//! The Compute RAM block (paper §III).
+//!
+//! Composes the four components of Fig. 3 — main array, instruction memory,
+//! controller, logic peripherals — behind the paper's Table I port
+//! interface:
+//!
+//! | signal    | dir | modeled by                                   |
+//! |-----------|-----|----------------------------------------------|
+//! | mode      | in  | [`CramBlock::set_mode`]                      |
+//! | start     | in  | [`CramBlock::start`]                         |
+//! | address   | in  | `addr` params ([`IMEM_ADDR_BASE`] selects the instruction memory via the shared bus) |
+//! | data_in   | in  | [`CramBlock::write`] / [`CramBlock::write_imem_word`] |
+//! | write_en  | in  | write vs read method choice                  |
+//! | data_out  | out | [`CramBlock::read`]                          |
+//! | done      | out | [`CramBlock::done`]                          |
+//!
+//! In **storage mode** the block behaves exactly like a BRAM of the
+//! configured geometry (the instruction memory is additionally readable/
+//! writable as a small extra BRAM). In **compute mode** `start` kicks the
+//! controller, which executes the loaded instruction sequence against the
+//! array; `done` is asserted when the end instruction (`Halt`) retires.
+
+pub mod ops;
+
+use crate::bitline::{BitlineArray, ColumnPeriph, Geometry};
+use crate::ctrl::{Controller, CycleStats, InstrMem};
+use crate::ucode::Program;
+use crate::util::LaneVec;
+use anyhow::{bail, Result};
+
+/// Address-space bit that routes storage-mode accesses to the instruction
+/// memory (the paper shares the array's address/data bus for run-time
+/// instruction loading).
+pub const IMEM_ADDR_BASE: usize = 1 << 15;
+
+/// Operating mode (the `mode` input port).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Mode {
+    #[default]
+    Storage,
+    Compute,
+}
+
+/// A Compute RAM block instance.
+#[derive(Clone, Debug)]
+pub struct CramBlock {
+    array: BitlineArray,
+    periph: ColumnPeriph,
+    imem: InstrMem,
+    ctrl: Controller,
+    mode: Mode,
+    running: bool,
+    /// Cumulative stats across `start`s since construction (metrics).
+    total_stats: CycleStats,
+}
+
+impl CramBlock {
+    pub fn new(geometry: Geometry) -> Self {
+        let cols = geometry.cols();
+        Self {
+            array: BitlineArray::new(geometry),
+            periph: ColumnPeriph::new(cols),
+            imem: InstrMem::new(),
+            ctrl: Controller::new(),
+            mode: Mode::Storage,
+            running: false,
+            total_stats: CycleStats::default(),
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.array.geometry()
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// The `mode` port. Switching modes while a computation is running is a
+    /// user error the hardware would misbehave on; the model rejects it.
+    pub fn set_mode(&mut self, mode: Mode) -> Result<()> {
+        if self.running {
+            bail!("mode change while computation in progress");
+        }
+        self.mode = mode;
+        Ok(())
+    }
+
+    /// The `done` output port. High when no computation is in progress
+    /// (matches the paper: done is asserted after the end instruction).
+    pub fn done(&self) -> bool {
+        !self.running
+    }
+
+    // ---- storage-mode ports -------------------------------------------------
+
+    /// Storage-mode row write (`address` + `data_in` + `write_en=1`).
+    pub fn write(&mut self, addr: usize, data: &LaneVec) -> Result<()> {
+        if self.mode != Mode::Storage {
+            bail!("storage write in compute mode");
+        }
+        if addr >= self.array.rows() {
+            bail!("address {addr} out of range");
+        }
+        self.array.write_row(addr, data);
+        Ok(())
+    }
+
+    /// Storage-mode row read (`address` + `write_en=0` -> `data_out`).
+    pub fn read(&self, addr: usize) -> Result<&LaneVec> {
+        if self.mode != Mode::Storage {
+            bail!("storage read in compute mode");
+        }
+        if addr >= self.array.rows() {
+            bail!("address {addr} out of range");
+        }
+        Ok(self.array.read_row(addr))
+    }
+
+    /// Run-time instruction load over the shared address/data bus
+    /// (`address = IMEM_ADDR_BASE + idx`).
+    pub fn write_imem_word(&mut self, idx: usize, word: u16) -> Result<()> {
+        if self.mode != Mode::Storage {
+            bail!("imem write in compute mode");
+        }
+        self.imem.write_word(idx, word)
+    }
+
+    /// Storage-mode read of the instruction memory (usable as a small BRAM).
+    pub fn read_imem_word(&self, idx: usize) -> u16 {
+        self.imem.read_word(idx)
+    }
+
+    // ---- configuration-time interface ----------------------------------------
+
+    /// Configuration-time program load (FPGA bitstream path; any mode).
+    pub fn load_program(&mut self, prog: &Program) -> Result<()> {
+        self.imem.load_config(&prog.instrs)
+    }
+
+    // ---- compute-mode ports ---------------------------------------------------
+
+    /// The `start` input port: begin executing the instruction memory.
+    pub fn start(&mut self) -> Result<()> {
+        if self.mode != Mode::Compute {
+            bail!("start asserted in storage mode");
+        }
+        if self.imem.is_empty() {
+            bail!("start with empty instruction memory");
+        }
+        self.ctrl.reset();
+        self.periph.reset();
+        self.running = true;
+        Ok(())
+    }
+
+    /// Advance the computation by one controller step. Returns `true` while
+    /// still running.
+    pub fn tick(&mut self) -> Result<bool> {
+        if !self.running {
+            return Ok(false);
+        }
+        let more = self.ctrl.step(&self.imem, &mut self.array, &mut self.periph)?;
+        if !more {
+            self.running = false;
+            let s = self.ctrl.stats();
+            self.total_stats.cycles += s.cycles;
+            self.total_stats.array_cycles += s.array_cycles;
+            self.total_stats.instructions += s.instructions;
+        }
+        Ok(more)
+    }
+
+    /// `start` + run until `done`; returns this run's cycle statistics.
+    pub fn run_to_done(&mut self, max_cycles: u64) -> Result<CycleStats> {
+        self.start()?;
+        while self.running {
+            if self.ctrl.stats().cycles > max_cycles {
+                self.running = false;
+                bail!("computation exceeded cycle budget {max_cycles}");
+            }
+            self.tick()?;
+        }
+        Ok(self.ctrl.stats())
+    }
+
+    /// Run several programs back-to-back with a dynamic instruction-memory
+    /// reload between them (§III-A.2's "sequences longer than the capacity
+    /// of this memory" path). Returns the summed statistics.
+    pub fn run_chained(&mut self, programs: &[Program], max_cycles: u64) -> Result<CycleStats> {
+        let mut total = CycleStats::default();
+        for prog in programs {
+            self.set_mode(Mode::Storage)?;
+            for (i, instr) in prog.instrs.iter().enumerate() {
+                self.write_imem_word(i, instr.encode())?;
+            }
+            self.set_mode(Mode::Compute)?;
+            let s = self.run_to_done(max_cycles)?;
+            total.cycles += s.cycles;
+            total.array_cycles += s.array_cycles;
+            total.instructions += s.instructions;
+        }
+        Ok(total)
+    }
+
+    /// Stats of the last completed run.
+    pub fn last_run_stats(&self) -> CycleStats {
+        self.ctrl.stats()
+    }
+
+    /// Cumulative stats across all runs (metrics/reporting).
+    pub fn total_stats(&self) -> CycleStats {
+        self.total_stats
+    }
+
+    /// Direct array access for staging helpers and tests (the "external
+    /// logic" of the paper's usage flow).
+    pub fn array_mut(&mut self) -> &mut BitlineArray {
+        &mut self.array
+    }
+
+    pub fn array(&self) -> &BitlineArray {
+        &self.array
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+    use crate::ucode;
+
+    #[test]
+    fn storage_mode_is_a_bram() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let row = LaneVec::from_fn(40, |i| i % 5 == 0);
+        b.write(17, &row).unwrap();
+        assert_eq!(b.read(17).unwrap(), &row);
+    }
+
+    #[test]
+    fn compute_mode_blocks_storage_ports() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        b.set_mode(Mode::Compute).unwrap();
+        assert!(b.read(0).is_err());
+        let row = LaneVec::zeros(40);
+        assert!(b.write(0, &row).is_err());
+    }
+
+    #[test]
+    fn start_requires_compute_mode_and_program() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        assert!(b.start().is_err()); // storage mode
+        b.set_mode(Mode::Compute).unwrap();
+        assert!(b.start().is_err()); // empty imem
+    }
+
+    #[test]
+    fn paper_usage_flow() {
+        // §III-B: storage mode -> load data -> compute mode -> start ->
+        // wait done -> storage mode -> read results.
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let (prog, l) = ucode::int::add(Geometry::G512x40, 4);
+        b.load_program(&prog).unwrap();
+
+        // stage a = 3, b = 4 in tuple slot 0 of every column
+        crate::bitline::transpose::store_ints(
+            b.array_mut(),
+            &vec![3i64; 40],
+            4,
+            0,
+            l.tuple_bits,
+        );
+        crate::bitline::transpose::store_ints(
+            b.array_mut(),
+            &vec![4i64; 40],
+            4,
+            4,
+            l.tuple_bits,
+        );
+        b.set_mode(Mode::Compute).unwrap();
+        assert!(b.done());
+        let stats = b.run_to_done(1_000_000).unwrap();
+        assert!(b.done());
+        assert!(stats.array_cycles > 0);
+        b.set_mode(Mode::Storage).unwrap();
+        let r = crate::bitline::transpose::load_ints(b.array(), 40, 4, 8, l.tuple_bits);
+        assert!(r.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn runtime_imem_load_via_shared_bus() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        // write a tiny program word-by-word in storage mode
+        let prog = [Instr::Movi { rd: 1, imm: 9 }, Instr::Halt];
+        for (i, instr) in prog.iter().enumerate() {
+            b.write_imem_word(i, instr.encode()).unwrap();
+        }
+        assert_eq!(b.read_imem_word(0), prog[0].encode());
+        b.set_mode(Mode::Compute).unwrap();
+        let stats = b.run_to_done(100).unwrap();
+        assert_eq!(stats.cycles, 2);
+    }
+
+    #[test]
+    fn done_tracks_running_state() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let (prog, _) = ucode::int::add(Geometry::G512x40, 4);
+        b.load_program(&prog).unwrap();
+        b.set_mode(Mode::Compute).unwrap();
+        b.start().unwrap();
+        assert!(!b.done());
+        while b.tick().unwrap() {}
+        assert!(b.done());
+    }
+
+    #[test]
+    fn mode_change_during_run_rejected() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let (prog, _) = ucode::int::add(Geometry::G512x40, 4);
+        b.load_program(&prog).unwrap();
+        b.set_mode(Mode::Compute).unwrap();
+        b.start().unwrap();
+        assert!(b.set_mode(Mode::Storage).is_err());
+    }
+
+    #[test]
+    fn cumulative_stats_accumulate() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let (prog, _) = ucode::int::add(Geometry::G512x40, 4);
+        b.load_program(&prog).unwrap();
+        b.set_mode(Mode::Compute).unwrap();
+        let s1 = b.run_to_done(1_000_000).unwrap();
+        b.run_to_done(1_000_000).unwrap();
+        assert_eq!(b.total_stats().cycles, 2 * s1.cycles);
+    }
+}

@@ -1,0 +1,230 @@
+//! High-level block operations: stage operands, run the microcode, read
+//! results.
+//!
+//! These helpers play the role of the paper's "external logic (e.g. a state
+//! machine implemented in LBs)" §III-B: configure storage mode, load data,
+//! flip to compute mode, pulse `start`, wait for `done`, read back. The
+//! coordinator builds on these; examples and tests use them directly.
+
+use super::{CramBlock, Mode};
+use crate::bitline::transpose;
+use crate::ctrl::CycleStats;
+use crate::ucode::{self, bf16 as ucbf16};
+use crate::util::SoftBf16;
+use anyhow::{ensure, Result};
+
+/// Result of a block-level operation: values + the cycle statistics that
+/// the cost model turns into time/energy.
+#[derive(Clone, Debug)]
+pub struct OpResult<T> {
+    pub values: Vec<T>,
+    pub stats: CycleStats,
+}
+
+/// Generic cycle budget for one block program (well above any real program).
+const BUDGET: u64 = 50_000_000;
+
+/// Elementwise integer add/sub on one block. `n` must not exceed the
+/// block's packed capacity ([`ucode::VecLayout::total_ops`]).
+pub fn int_addsub(
+    block: &mut CramBlock,
+    a: &[i64],
+    b: &[i64],
+    w: u32,
+    subtract: bool,
+) -> Result<OpResult<i64>> {
+    ensure!(a.len() == b.len(), "operand length mismatch");
+    let geom = block.geometry();
+    let (prog, l) = if subtract {
+        ucode::int::sub(geom, w)
+    } else {
+        ucode::int::add(geom, w)
+    };
+    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_ints(block.array_mut(), a, w, 0, l.tuple_bits);
+    transpose::store_ints(block.array_mut(), b, w, l.w as usize, l.tuple_bits);
+    block.load_program(&prog)?;
+    block.set_mode(Mode::Compute)?;
+    let stats = block.run_to_done(BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    let values =
+        transpose::load_ints(block.array(), a.len(), w, 2 * w as usize, l.tuple_bits);
+    Ok(OpResult { values, stats })
+}
+
+/// Elementwise signed multiply (W x W -> 2W) on one block.
+pub fn int_mul(block: &mut CramBlock, a: &[i64], b: &[i64], w: u32) -> Result<OpResult<i64>> {
+    ensure!(a.len() == b.len(), "operand length mismatch");
+    let geom = block.geometry();
+    let (prog, l) = ucode::int::mul(geom, w);
+    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_ints(block.array_mut(), a, w, 0, l.tuple_bits);
+    transpose::store_ints(block.array_mut(), b, w, l.w as usize, l.tuple_bits);
+    block.load_program(&prog)?;
+    block.set_mode(Mode::Compute)?;
+    let stats = block.run_to_done(BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    let values = transpose::load_ints(
+        block.array(),
+        a.len(),
+        2 * w,
+        2 * w as usize,
+        l.tuple_bits,
+    );
+    Ok(OpResult { values, stats })
+}
+
+/// Per-column dot products: `a[k][c] . b[k][c]` summed over `k`, one result
+/// per column `c` (up to `cols` independent dot products).
+pub fn int_dot(
+    block: &mut CramBlock,
+    a: &[Vec<i64>],
+    b: &[Vec<i64>],
+    w: u32,
+    acc_w: u32,
+) -> Result<OpResult<i64>> {
+    ensure!(a.len() == b.len(), "K mismatch");
+    let k = a.len();
+    ensure!(k >= 1, "empty dot product");
+    let geom = block.geometry();
+    let (prog, l) = ucode::int::dot(geom, w, acc_w, k);
+    let cols = l.cols;
+    ensure!(a.iter().chain(b.iter()).all(|r| r.len() <= cols), "too many columns");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_dot_operand(block.array_mut(), a, w, 0, l.pair_bits);
+    transpose::store_dot_operand(block.array_mut(), b, w, l.w as usize, l.pair_bits);
+    block.load_program(&prog)?;
+    block.set_mode(Mode::Compute)?;
+    let stats = block.run_to_done(BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    let values = transpose::load_ints(block.array(), a[0].len(), acc_w, l.acc_row, 0);
+    Ok(OpResult { values, stats })
+}
+
+/// Elementwise bfloat16 add/mul on one block.
+///
+/// Timing comes from executing the real [`ucbf16`] schedule on the
+/// controller; the result **values** come from the [`SoftBf16`] functional
+/// model (bit-identical to the XLA golden artifacts) and are deposited in
+/// the result rows, per the timing-directed functional split documented in
+/// [`crate::ucode::bf16`].
+pub fn bf16_op(
+    block: &mut CramBlock,
+    a: &[SoftBf16],
+    b: &[SoftBf16],
+    mul: bool,
+) -> Result<OpResult<SoftBf16>> {
+    ensure!(a.len() == b.len(), "operand length mismatch");
+    let geom = block.geometry();
+    let (prog, l) = if mul { ucbf16::mul(geom) } else { ucbf16::add(geom) };
+    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
+    transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
+    block.load_program(&prog)?;
+    block.set_mode(Mode::Compute)?;
+    let stats = block.run_to_done(BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    // functional value path (see module docs): deposit exact bf16 results
+    let values: Vec<SoftBf16> = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| if mul { x.mul(y) } else { x.add(y) })
+        .collect();
+    transpose::store_bf16(block.array_mut(), &values, 32, l.tuple_bits);
+    Ok(OpResult { values, stats })
+}
+
+/// Elementwise bfloat16 MAC (`c + a*b`), two-phase schedule with a dynamic
+/// instruction-memory reload between phases (§III-A.2).
+pub fn bf16_mac(
+    block: &mut CramBlock,
+    a: &[SoftBf16],
+    b: &[SoftBf16],
+    c: &[SoftBf16],
+) -> Result<OpResult<SoftBf16>> {
+    ensure!(a.len() == b.len() && b.len() == c.len(), "operand length mismatch");
+    let geom = block.geometry();
+    let (phases, l) = ucbf16::mac(geom);
+    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
+    transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
+    transpose::store_bf16(block.array_mut(), c, 32, l.tuple_bits);
+    let stats = block.run_chained(&phases, BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    let values: Vec<SoftBf16> =
+        a.iter().zip(b).zip(c).map(|((&x, &y), &z)| z.mac(x, y)).collect();
+    transpose::store_bf16(block.array_mut(), &values, 32, l.tuple_bits);
+    Ok(OpResult { values, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::util::Prng;
+
+    #[test]
+    fn add_op_roundtrip() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let x = vec![1i64, 2, 3, -4];
+        let y = vec![5i64, 6, -7, 3];
+        let r = int_addsub(&mut b, &x, &y, 8, false).unwrap();
+        assert_eq!(r.values, vec![6, 8, -4, -1]);
+        assert!(r.stats.array_cycles > 0);
+    }
+
+    #[test]
+    fn sub_op_roundtrip() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let x = vec![10i64, -100];
+        let y = vec![3i64, 27];
+        let r = int_addsub(&mut b, &x, &y, 8, true).unwrap();
+        assert_eq!(r.values, vec![7, -127]);
+    }
+
+    #[test]
+    fn mul_op_roundtrip() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let x = vec![7i64, -8, 3];
+        let y = vec![7i64, 7, -3];
+        let r = int_mul(&mut b, &x, &y, 4).unwrap();
+        assert_eq!(r.values, vec![49, -56, -9]);
+    }
+
+    #[test]
+    fn dot_op_roundtrip() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let mut rng = Prng::new(42);
+        let k = 12;
+        let cols = 40;
+        let a: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(8)).collect()).collect();
+        let bb: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(8)).collect()).collect();
+        let r = int_dot(&mut b, &a, &bb, 8, 32).unwrap();
+        for c in 0..cols {
+            let expect: i64 = (0..k).map(|i| a[i][c] * bb[i][c]).sum();
+            assert_eq!(r.values[c], expect, "col {c}");
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let too_many = vec![0i64; 10_000];
+        assert!(int_addsub(&mut b, &too_many, &too_many, 4, false).is_err());
+    }
+
+    #[test]
+    fn block_reusable_across_ops() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let r1 = int_addsub(&mut b, &[1, 2], &[3, 4], 4, false).unwrap();
+        assert_eq!(r1.values, vec![4, 6]);
+        let r2 = int_mul(&mut b, &[5, -5], &[3, 3], 4).unwrap();
+        assert_eq!(r2.values, vec![15, -15]);
+    }
+}

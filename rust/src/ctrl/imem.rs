@@ -1,0 +1,157 @@
+//! Instruction memory (paper §III-A.2).
+//!
+//! A 4 Kb SRAM holding up to **256 instructions of 16 bits**. It can be
+//! loaded two ways, both modeled here:
+//!
+//! * at **FPGA configuration time**, through the configuration interface
+//!   ([`InstrMem::load_config`]);
+//! * at **execution time**, by sharing the address/data bus of the main
+//!   array ([`InstrMem::write_word`] — the Compute RAM block routes storage
+//!   mode writes with the top address bit set to this memory).
+//!
+//! In storage mode the application may also use it as a regular (small)
+//! BRAM; [`InstrMem::read_word`] provides that path.
+
+use crate::isa::Instr;
+use anyhow::{bail, Result};
+
+/// Capacity in instructions (fixed by the paper: no common sequence needed
+/// more than ~200, so 256 is provisioned).
+pub const IMEM_CAPACITY: usize = 256;
+
+/// The instruction memory: 256 x 16 bits.
+#[derive(Clone, Debug)]
+pub struct InstrMem {
+    words: [u16; IMEM_CAPACITY],
+    /// Pre-decoded mirror of `words` (§Perf: the controller fetches every
+    /// cycle; decoding once at load models the hardware's decode stage
+    /// without paying it 10^7 times per simulated block run).
+    decoded: [Option<Instr>; IMEM_CAPACITY],
+    /// Number of valid instructions after the last `load_config` (for
+    /// reporting only; execution is bounded by `Halt`).
+    loaded_len: usize,
+}
+
+impl Default for InstrMem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InstrMem {
+    pub fn new() -> Self {
+        // Fill with the reserved opcode 0x0000 so runaway fetches fault.
+        Self { words: [0; IMEM_CAPACITY], decoded: [None; IMEM_CAPACITY], loaded_len: 0 }
+    }
+
+    /// Configuration-time load of a whole program.
+    pub fn load_config(&mut self, prog: &[Instr]) -> Result<()> {
+        if prog.len() > IMEM_CAPACITY {
+            bail!(
+                "program of {} instructions exceeds instruction memory capacity {}",
+                prog.len(),
+                IMEM_CAPACITY
+            );
+        }
+        self.words = [0; IMEM_CAPACITY];
+        self.decoded = [None; IMEM_CAPACITY];
+        for (i, instr) in prog.iter().enumerate() {
+            self.words[i] = instr.encode();
+            self.decoded[i] = Some(*instr);
+        }
+        self.loaded_len = prog.len();
+        Ok(())
+    }
+
+    /// Execution-time single-word write (shared array address/data bus).
+    pub fn write_word(&mut self, addr: usize, word: u16) -> Result<()> {
+        if addr >= IMEM_CAPACITY {
+            bail!("imem write address {addr} out of range");
+        }
+        self.words[addr] = word;
+        self.decoded[addr] = Instr::decode(word);
+        self.loaded_len = self.loaded_len.max(addr + 1);
+        Ok(())
+    }
+
+    /// Storage-mode read (application uses the imem as a small BRAM).
+    pub fn read_word(&self, addr: usize) -> u16 {
+        self.words[addr]
+    }
+
+    /// Fetch + decode for the controller. `None` for invalid encodings.
+    #[inline]
+    pub fn fetch(&self, pc: usize) -> Option<Instr> {
+        if pc >= IMEM_CAPACITY {
+            return None;
+        }
+        self.decoded[pc]
+    }
+
+    /// Instructions currently loaded (reporting).
+    pub fn len(&self) -> usize {
+        self.loaded_len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loaded_len == 0
+    }
+
+    /// Size of this memory in bits (4 Kb, as sized in the paper).
+    pub const fn size_bits() -> usize {
+        IMEM_CAPACITY * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn capacity_is_4kbit() {
+        assert_eq!(InstrMem::size_bits(), 4096);
+    }
+
+    #[test]
+    fn config_load_and_fetch() {
+        let mut m = InstrMem::new();
+        let prog = vec![Instr::Movi { rd: 1, imm: 7 }, Instr::Halt];
+        m.load_config(&prog).unwrap();
+        assert_eq!(m.fetch(0), Some(prog[0]));
+        assert_eq!(m.fetch(1), Some(Instr::Halt));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn oversized_program_rejected() {
+        let mut m = InstrMem::new();
+        let prog = vec![Instr::Nop; IMEM_CAPACITY + 1];
+        assert!(m.load_config(&prog).is_err());
+    }
+
+    #[test]
+    fn max_size_program_accepted() {
+        let mut m = InstrMem::new();
+        let mut prog = vec![Instr::Nop; IMEM_CAPACITY - 1];
+        prog.push(Instr::Halt);
+        m.load_config(&prog).unwrap();
+        assert_eq!(m.len(), IMEM_CAPACITY);
+    }
+
+    #[test]
+    fn runtime_write_overrides() {
+        let mut m = InstrMem::new();
+        m.load_config(&[Instr::Nop, Instr::Halt]).unwrap();
+        m.write_word(0, Instr::Sec.encode()).unwrap();
+        assert_eq!(m.fetch(0), Some(Instr::Sec));
+        assert!(m.write_word(256, 0).is_err());
+    }
+
+    #[test]
+    fn unloaded_memory_faults_fetch() {
+        let m = InstrMem::new();
+        assert_eq!(m.fetch(0), None); // reserved encoding
+        assert_eq!(m.fetch(4096), None); // out of range
+    }
+}

@@ -1,0 +1,523 @@
+//! The Compute RAM controller (paper §III-A.3).
+//!
+//! A simple pipelined processor that fetches, decodes and executes the
+//! instruction memory contents:
+//!
+//! * **8 registers** implemented in flip-flops (the paper found common
+//!   sequences never need more than 5 live at once);
+//! * a very simple execution unit — one adder, one comparator, one logical
+//!   unit, **no multiplier**;
+//! * **zero-overhead hardware loops** with dedicated loop-control hardware,
+//!   like conventional DSP processors [22]: the loop-end check happens in
+//!   parallel with the last body instruction, so `EndL` consumes no cycle;
+//! * array commands are forwarded to the main array / column peripherals,
+//!   one array cycle each.
+//!
+//! Cycle accounting: `cycles` counts every issued instruction except `EndL`
+//! (zero-overhead); `array_cycles` counts only the array-command class —
+//! this is the number the paper's GOPS figures are built on (e.g. a W-bit
+//! add takes `W + 1` array cycles: `CLC` + W full-adder steps).
+
+pub mod imem;
+
+pub use imem::{InstrMem, IMEM_CAPACITY};
+
+use crate::bitline::{BitlineArray, ColumnPeriph};
+use crate::isa::Instr;
+use anyhow::{bail, Result};
+
+/// Hardware loop stack depth (nested zero-overhead loops).
+pub const LOOP_DEPTH: usize = 4;
+
+/// Execution statistics for one program run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CycleStats {
+    /// Total controller cycles (every instruction except `EndL`).
+    pub cycles: u64,
+    /// Array-command cycles (subset of `cycles`).
+    pub array_cycles: u64,
+    /// Dynamic instruction count including `EndL` (reporting).
+    pub instructions: u64,
+}
+
+/// Controller state.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    pub regs: [u16; 8],
+    pc: usize,
+    loop_stack: Vec<(usize, u16)>, // (body start pc, remaining iterations)
+    halted: bool,
+    stats: CycleStats,
+}
+
+impl Default for Controller {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Controller {
+    pub fn new() -> Self {
+        Self {
+            regs: [0; 8],
+            pc: 0,
+            loop_stack: Vec::with_capacity(LOOP_DEPTH),
+            halted: false,
+            stats: CycleStats::default(),
+        }
+    }
+
+    /// Reset for a new run (registers cleared, like the block's `start`).
+    pub fn reset(&mut self) {
+        *self = Self::new();
+    }
+
+    pub fn halted(&self) -> bool {
+        self.halted
+    }
+
+    pub fn stats(&self) -> CycleStats {
+        self.stats
+    }
+
+    pub fn pc(&self) -> usize {
+        self.pc
+    }
+
+    /// Execute one instruction against the array + peripherals.
+    ///
+    /// Returns `Ok(true)` while running, `Ok(false)` once halted.
+    pub fn step(
+        &mut self,
+        imem: &InstrMem,
+        array: &mut BitlineArray,
+        periph: &mut ColumnPeriph,
+    ) -> Result<bool> {
+        if self.halted {
+            return Ok(false);
+        }
+        let Some(instr) = imem.fetch(self.pc) else {
+            bail!("controller fault: invalid instruction at pc={}", self.pc)
+        };
+        self.stats.instructions += 1;
+        if !matches!(instr, Instr::EndL) {
+            self.stats.cycles += 1;
+        }
+        if instr.is_array_op() {
+            self.stats.array_cycles += 1;
+            self.exec_array(instr, array, periph)?;
+            self.pc += 1;
+            return Ok(true);
+        }
+        use Instr::*;
+        match instr {
+            Halt => {
+                self.halted = true;
+                return Ok(false);
+            }
+            Nop => self.pc += 1,
+            Movi { rd, imm } => {
+                self.regs[rd as usize] = imm as u16;
+                self.pc += 1;
+            }
+            MoviH { rd, imm } => {
+                let r = &mut self.regs[rd as usize];
+                *r = ((imm as u16) << 8) | (*r & 0xFF);
+                self.pc += 1;
+            }
+            Addi { rd, imm } => {
+                let r = &mut self.regs[rd as usize];
+                *r = r.wrapping_add(imm as i16 as u16);
+                self.pc += 1;
+            }
+            Addr { rd, rs } => {
+                self.regs[rd as usize] =
+                    self.regs[rd as usize].wrapping_add(self.regs[rs as usize]);
+                self.pc += 1;
+            }
+            Movr { rd, rs } => {
+                self.regs[rd as usize] = self.regs[rs as usize];
+                self.pc += 1;
+            }
+            Loopi { count } => {
+                self.enter_loop(count as u16, imem)?;
+            }
+            Loopr { rs } => {
+                let count = self.regs[rs as usize];
+                self.enter_loop(count, imem)?;
+            }
+            EndL => {
+                // zero-overhead loop-end: handled by dedicated hardware
+                let Some((start, remaining)) = self.loop_stack.last_mut() else {
+                    bail!("controller fault: ENDL with empty loop stack at pc={}", self.pc)
+                };
+                *remaining -= 1;
+                if *remaining == 0 {
+                    self.loop_stack.pop();
+                    self.pc += 1;
+                } else {
+                    self.pc = *start;
+                }
+            }
+            Brnz { rs, off } => {
+                if self.regs[rs as usize] != 0 {
+                    self.branch(off)?;
+                } else {
+                    self.pc += 1;
+                }
+            }
+            Brz { rs, off } => {
+                if self.regs[rs as usize] == 0 {
+                    self.branch(off)?;
+                } else {
+                    self.pc += 1;
+                }
+            }
+            _ => unreachable!("array op handled above"),
+        }
+        Ok(true)
+    }
+
+    fn enter_loop(&mut self, count: u16, imem: &InstrMem) -> Result<()> {
+        if count == 0 {
+            // zero-trip loop: the loop controller skips the body by scanning
+            // to the matching ENDL (pre-decoded at loop setup; no extra cycles)
+            let mut depth = 1usize;
+            let mut pc = self.pc + 1;
+            while depth > 0 {
+                if pc >= IMEM_CAPACITY {
+                    bail!("controller fault: LOOP with no matching ENDL");
+                }
+                match imem.fetch(pc) {
+                    Some(Instr::Loopi { .. }) | Some(Instr::Loopr { .. }) => depth += 1,
+                    Some(Instr::EndL) => depth -= 1,
+                    _ => {}
+                }
+                pc += 1;
+            }
+            self.pc = pc;
+            return Ok(());
+        }
+        if self.loop_stack.len() >= LOOP_DEPTH {
+            bail!("controller fault: hardware loop stack overflow (depth {LOOP_DEPTH})");
+        }
+        self.loop_stack.push((self.pc + 1, count));
+        self.pc += 1;
+        Ok(())
+    }
+
+    fn branch(&mut self, off: i8) -> Result<()> {
+        let target = self.pc as i64 + off as i64;
+        if !(0..IMEM_CAPACITY as i64).contains(&target) {
+            bail!("controller fault: branch target {target} out of range");
+        }
+        self.pc = target as usize;
+        Ok(())
+    }
+
+    fn exec_array(
+        &mut self,
+        instr: Instr,
+        array: &mut BitlineArray,
+        periph: &mut ColumnPeriph,
+    ) -> Result<()> {
+        use Instr::*;
+        let rows = array.rows();
+        // Resolve a register row pointer, with bounds check.
+        macro_rules! row {
+            ($r:expr) => {{
+                let v = self.regs[$r as usize] as usize;
+                if v >= rows {
+                    bail!(
+                        "controller fault: row address {} (r{}) out of range (rows={})",
+                        v,
+                        $r,
+                        rows
+                    );
+                }
+                v
+            }};
+        }
+        // post-increment each *distinct* pointer register once
+        fn bump_regs(regs: &mut [u16; 8], rs: &[u8]) {
+            let mut seen = [false; 8];
+            for &r in rs {
+                if !seen[r as usize] {
+                    seen[r as usize] = true;
+                    regs[r as usize] = regs[r as usize].wrapping_add(1);
+                }
+            }
+        }
+        macro_rules! bump {
+            ($inc:expr, $($r:expr),+) => {
+                if $inc {
+                    bump_regs(&mut self.regs, &[$($r),+]);
+                }
+            };
+        }
+        // all paths below use the allocation-free kernels (§Perf): the
+        // predication mask is resolved once into the peripheral's buffer,
+        // then the array op runs as a single word-parallel pass
+        match instr {
+            Fas { ra, rb, rd, pred, inc } => {
+                let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+                periph.resolve_mask(pred);
+                array.fas_inplace(a, b, d, periph, false);
+                bump!(inc, ra, rb, rd);
+            }
+            Fss { ra, rb, rd, pred, inc } => {
+                let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+                periph.resolve_mask(pred);
+                array.fas_inplace(a, b, d, periph, true);
+                bump!(inc, ra, rb, rd);
+            }
+            Logic { op, ra, rb, rd, pred, inc } => {
+                let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+                periph.resolve_mask(pred);
+                array.logic_inplace(op, a, b, d, periph);
+                bump!(inc, ra, rb, rd);
+            }
+            NotRow { ra, rd, pred, inc } => {
+                let (a, d) = (row!(ra), row!(rd));
+                periph.resolve_mask(pred);
+                array.move_inplace(1, a, d, periph);
+                bump!(inc, ra, rd);
+            }
+            CopyRow { ra, rd, pred, inc } => {
+                let (a, d) = (row!(ra), row!(rd));
+                periph.resolve_mask(pred);
+                array.move_inplace(0, a, d, periph);
+                bump!(inc, ra, rd);
+            }
+            Zero { rd, pred, inc } => {
+                let d = row!(rd);
+                periph.resolve_mask(pred);
+                array.move_inplace(2, 0, d, periph);
+                bump!(inc, rd);
+            }
+            Clc => periph.clear_carry(),
+            Sec => periph.set_carry(),
+            Tnot => periph.invert_tag(),
+            Tcar => periph.tag_from_carry(),
+            Tld { ra, inc } => {
+                let a = row!(ra);
+                periph.tag_mut().copy_from_words(array.read_row(a).words());
+                bump!(inc, ra);
+            }
+            Tldn { ra, inc } => {
+                let a = row!(ra);
+                let (_, blb) = array.sense_one(a);
+                periph.load_tag(&blb);
+                bump!(inc, ra);
+            }
+            Wrc { rd, pred, inc } => {
+                let d = row!(rd);
+                periph.resolve_mask(pred);
+                array.write_plane_inplace(false, d, periph);
+                bump!(inc, rd);
+            }
+            Wrt { rd, pred, inc } => {
+                let d = row!(rd);
+                periph.resolve_mask(pred);
+                array.write_plane_inplace(true, d, periph);
+                bump!(inc, rd);
+            }
+            _ => unreachable!("non-array op routed to exec_array"),
+        }
+        Ok(())
+    }
+
+    /// Run until `Halt` (or an execution fault), with a cycle budget guard.
+    pub fn run(
+        &mut self,
+        imem: &InstrMem,
+        array: &mut BitlineArray,
+        periph: &mut ColumnPeriph,
+        max_cycles: u64,
+    ) -> Result<CycleStats> {
+        while !self.halted {
+            if self.stats.cycles > max_cycles {
+                bail!("controller exceeded cycle budget of {max_cycles} (runaway program?)");
+            }
+            self.step(imem, array, periph)?;
+        }
+        Ok(self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::isa::asm::assemble;
+
+    fn setup() -> (BitlineArray, ColumnPeriph) {
+        let arr = BitlineArray::new(Geometry::G512x40);
+        let periph = ColumnPeriph::new(40);
+        (arr, periph)
+    }
+
+    fn run_asm(src: &str, arr: &mut BitlineArray, periph: &mut ColumnPeriph) -> CycleStats {
+        let prog = assemble(src).unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, arr, periph, 1_000_000).unwrap()
+    }
+
+    #[test]
+    fn movi_addi_movr() {
+        let (mut arr, mut periph) = setup();
+        let prog = assemble("movi r1, 10\naddi r1, -3\nmovr r2, r1\nmovih r2, 1\nhalt").unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+        assert_eq!(ctrl.regs[1], 7);
+        assert_eq!(ctrl.regs[2], 256 + 7);
+    }
+
+    #[test]
+    fn hardware_loop_repeats_body() {
+        let (mut arr, mut periph) = setup();
+        // r1 += 1, ten times
+        let stats = {
+            let prog = assemble("movi r1, 0\nloopi 10\naddi r1, 1\nendl\nhalt").unwrap();
+            let mut imem = InstrMem::new();
+            imem.load_config(&prog).unwrap();
+            let mut ctrl = Controller::new();
+            let s = ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+            assert_eq!(ctrl.regs[1], 10);
+            s
+        };
+        // movi(1) + loopi(1) + 10*addi(10) + halt(1); EndL costs nothing
+        assert_eq!(stats.cycles, 13);
+    }
+
+    #[test]
+    fn nested_loops() {
+        let (mut arr, mut periph) = setup();
+        let prog = assemble(
+            "movi r1, 0\nloopi 5\nloopi 4\naddi r1, 1\nendl\nendl\nhalt",
+        )
+        .unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 10_000).unwrap();
+        assert_eq!(ctrl.regs[1], 20);
+    }
+
+    #[test]
+    fn loopr_dynamic_count() {
+        let (mut arr, mut periph) = setup();
+        let prog =
+            assemble("movi r1, 0\nmovi r2, 7\nloopr r2\naddi r1, 1\nendl\nhalt").unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+        assert_eq!(ctrl.regs[1], 7);
+    }
+
+    #[test]
+    fn branch_loop() {
+        let (mut arr, mut periph) = setup();
+        // countdown loop via brnz
+        let prog = assemble("movi r1, 5\nmovi r2, 0\naddi r2, 1\naddi r1, -1\nbrnz r1, -2\nhalt")
+            .unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+        assert_eq!(ctrl.regs[2], 5);
+    }
+
+    #[test]
+    fn array_add_two_rows() {
+        let (mut arr, mut periph) = setup();
+        // row0 = all ones, row1 = alternating; sum into row2 with carry out row3
+        for c in 0..40 {
+            arr.set_bit(0, c, true);
+            arr.set_bit(1, c, c % 2 == 0);
+        }
+        run_asm(
+            "movi r1, 0\nmovi r2, 1\nmovi r3, 2\nmovi r4, 3\nclc\nfas @r1, @r2, @r3\nwrc @r4\nhalt",
+            &mut arr,
+            &mut periph,
+        );
+        for c in 0..40 {
+            let (a, b) = (true, c % 2 == 0);
+            assert_eq!(arr.bit(2, c), a ^ b, "sum col {c}");
+            assert_eq!(arr.bit(3, c), a && b, "carry col {c}");
+        }
+    }
+
+    #[test]
+    fn cycle_accounting_separates_array_ops() {
+        let (mut arr, mut periph) = setup();
+        let stats = run_asm(
+            "movi r1, 0\nmovi r2, 1\nmovi r3, 2\nclc\nloopi 4\nfas @r1+, @r2+, @r3+\nendl\nhalt",
+            &mut arr,
+            &mut periph,
+        );
+        assert_eq!(stats.array_cycles, 5); // clc + 4 fas  (the paper's W+1)
+        assert_eq!(stats.cycles, 3 + 1 + 1 + 4 + 1); // movis + clc + loopi + fas*4 + halt
+    }
+
+    #[test]
+    fn post_increment_advances_pointers() {
+        let (mut arr, mut periph) = setup();
+        let prog = assemble("movi r1, 0\nmovi r2, 100\nloopi 3\ncopy @r1+, @r2+\nendl\nhalt")
+            .unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+        assert_eq!(ctrl.regs[1], 3);
+        assert_eq!(ctrl.regs[2], 103);
+    }
+
+    #[test]
+    fn zero_trip_loop_skips_body() {
+        let (mut arr, mut periph) = setup();
+        let prog =
+            assemble("movi r1, 0\nmovi r2, 0\nloopr r2\naddi r1, 1\nendl\nhalt").unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 1000).unwrap();
+        assert_eq!(ctrl.regs[1], 0);
+    }
+
+    #[test]
+    fn runaway_program_faults() {
+        let (mut arr, mut periph) = setup();
+        let prog = assemble("movi r1, 1\nbrnz r1, 0\nhalt").unwrap(); // brnz to itself
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        assert!(ctrl.run(&imem, &mut arr, &mut periph, 100).is_err());
+    }
+
+    #[test]
+    fn loop_stack_overflow_faults() {
+        let (mut arr, mut periph) = setup();
+        let src = "loopi 2\nloopi 2\nloopi 2\nloopi 2\nloopi 2\nnop\nendl\nendl\nendl\nendl\nendl\nhalt";
+        let prog = assemble(src).unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        assert!(ctrl.run(&imem, &mut arr, &mut periph, 1000).is_err());
+    }
+
+    #[test]
+    fn out_of_range_row_faults() {
+        let (mut arr, mut periph) = setup();
+        let prog = assemble("movi r1, 255\nmovih r1, 255\ncopy @r1, @r2\nhalt").unwrap();
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        assert!(ctrl.run(&imem, &mut arr, &mut periph, 1000).is_err());
+    }
+}

@@ -1,0 +1,193 @@
+//! FPGA architecture description (paper §IV-B).
+//!
+//! Mirrors what the authors put in the VTR architecture file: an
+//! Intel-Agilex-like device with
+//!
+//! * logic blocks of 10 fracturable 6-LUT elements (60 in / 40 out),
+//! * DSP slices with the Agilex precision set,
+//! * 20 Kb BRAMs (512x40 / 1024x20 / 2048x10),
+//! * routing channel width **320**, wire segments of length **4** and
+//!   **16**, Wilton switch boxes with **Fs = 3**,
+//! * and, in the proposed variant, Compute RAM columns replacing BRAM
+//!   columns ("all BRAMs can be replaced with Compute RAMs, preserving the
+//!   heterogeneity that exists today" §III-C).
+
+use super::blocks::{BlockKind, BlockParams};
+
+/// Routing architecture parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RoutingParams {
+    /// Routing channel width (tracks per channel).
+    pub channel_width: u32,
+    /// Available wire segment lengths, in tiles.
+    pub segment_lengths: [u32; 2],
+    /// Wilton switch-box flexibility.
+    pub switch_fs: u32,
+    /// Delay through one length-4 segment + its switch, ns.
+    pub t_seg4_ns: f64,
+    /// Delay through one length-16 segment + its switch, ns.
+    pub t_seg16_ns: f64,
+    /// Connection-box input delay, ns.
+    pub t_cbox_ns: f64,
+    /// Tile pitch in um (square tiles; Agilex-class 22 nm fabric).
+    pub tile_pitch_um: f64,
+    /// Metal area cost of one routing track across one tile, um^2.
+    pub track_area_um2: f64,
+}
+
+/// The device: a column-based grid in the Agilex style.
+#[derive(Clone, Debug)]
+pub struct FpgaArch {
+    pub name: String,
+    pub routing: RoutingParams,
+    /// Grid width/height in tiles.
+    pub grid_w: u32,
+    pub grid_h: u32,
+    /// Column pattern: `column_kind[x]` gives the block type of column `x`
+    /// (IO at the edges, LB columns with periodic DSP/RAM columns).
+    pub columns: Vec<BlockKind>,
+    /// Whether RAM columns carry Compute RAMs (proposed) or BRAMs (baseline).
+    pub compute_rams: bool,
+}
+
+impl FpgaArch {
+    /// The baseline architecture of §IV-B (BRAM columns).
+    pub fn agilex_like() -> Self {
+        Self::build(false)
+    }
+
+    /// The proposed architecture: RAM columns are Compute RAMs.
+    pub fn with_compute_rams() -> Self {
+        Self::build(true)
+    }
+
+    fn build(compute_rams: bool) -> Self {
+        let grid_w = 40u32;
+        let grid_h = 40u32;
+        let ram_kind = if compute_rams { BlockKind::Cram } else { BlockKind::Bram };
+        // column pattern: IO | {8x LB, DSP, 4x LB, RAM} repeated | IO
+        let mut columns = vec![BlockKind::Io];
+        let mut x = 1;
+        while x < grid_w - 1 {
+            let phase = (x - 1) % 14;
+            let kind = match phase {
+                8 => BlockKind::Dsp,
+                13 => ram_kind,
+                _ => BlockKind::Lb,
+            };
+            columns.push(kind);
+            x += 1;
+        }
+        columns.push(BlockKind::Io);
+        Self {
+            name: if compute_rams {
+                "agilex-like + Compute RAMs".into()
+            } else {
+                "agilex-like (baseline)".into()
+            },
+            routing: RoutingParams {
+                channel_width: 320,
+                segment_lengths: [4, 16],
+                switch_fs: 3,
+                t_seg4_ns: 0.085,
+                t_seg16_ns: 0.215,
+                t_cbox_ns: 0.045,
+                tile_pitch_um: 50.0,
+                track_area_um2: 1.05,
+            },
+            grid_w,
+            grid_h,
+            columns,
+            compute_rams,
+        }
+    }
+
+    /// Block parameters for a kind.
+    pub fn params(&self, kind: BlockKind) -> BlockParams {
+        BlockParams::of(kind)
+    }
+
+    /// All grid sites of a kind, as (x, y) tile coordinates.
+    pub fn sites_of(&self, kind: BlockKind) -> Vec<(u32, u32)> {
+        let mut sites = Vec::new();
+        for (x, &col_kind) in self.columns.iter().enumerate() {
+            if col_kind != kind {
+                continue;
+            }
+            let rows = BlockParams::of(kind).tile_rows;
+            let mut y = 0;
+            while y + rows <= self.grid_h {
+                sites.push((x as u32, y));
+                y += rows;
+            }
+        }
+        sites
+    }
+
+    /// Manhattan distance between two tiles, in tiles.
+    pub fn dist_tiles(a: (u32, u32), b: (u32, u32)) -> u32 {
+        a.0.abs_diff(b.0) + a.1.abs_diff(b.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_routing_parameters() {
+        let a = FpgaArch::agilex_like();
+        assert_eq!(a.routing.channel_width, 320);
+        assert_eq!(a.routing.segment_lengths, [4, 16]);
+        assert_eq!(a.routing.switch_fs, 3);
+    }
+
+    #[test]
+    fn baseline_has_brams_proposed_has_crams() {
+        let base = FpgaArch::agilex_like();
+        let prop = FpgaArch::with_compute_rams();
+        assert!(base.columns.contains(&BlockKind::Bram));
+        assert!(!base.columns.contains(&BlockKind::Cram));
+        assert!(prop.columns.contains(&BlockKind::Cram));
+        assert!(!prop.columns.contains(&BlockKind::Bram));
+        // same heterogeneity: CRAM columns exactly replace BRAM columns
+        let base_ram: Vec<usize> = base
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == BlockKind::Bram)
+            .map(|(i, _)| i)
+            .collect();
+        let prop_ram: Vec<usize> = prop
+            .columns
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == BlockKind::Cram)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(base_ram, prop_ram);
+    }
+
+    #[test]
+    fn grid_has_all_kinds() {
+        let a = FpgaArch::agilex_like();
+        for kind in [BlockKind::Lb, BlockKind::Dsp, BlockKind::Bram, BlockKind::Io] {
+            assert!(!a.sites_of(kind).is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn multi_row_blocks_get_fewer_sites() {
+        let a = FpgaArch::agilex_like();
+        let lb_per_col = a.grid_h as usize;
+        let dsp_sites = a.sites_of(BlockKind::Dsp).len();
+        let dsp_cols = a.columns.iter().filter(|k| **k == BlockKind::Dsp).count();
+        assert_eq!(dsp_sites, dsp_cols * lb_per_col / 4);
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(FpgaArch::dist_tiles((0, 0), (3, 4)), 7);
+        assert_eq!(FpgaArch::dist_tiles((5, 5), (5, 5)), 0);
+    }
+}

@@ -1,0 +1,57 @@
+//! Area roll-up (paper §V: "area consumed is the total areas of all the
+//! blocks used by the circuit on the FPGA").
+//!
+//! Block areas come from the Table II calibration in [`super::blocks`];
+//! routing area charges the metal/switch share of the tracks the routed
+//! design actually occupies.
+
+use super::arch::FpgaArch;
+use super::netlist::Netlist;
+use super::route::RoutedDesign;
+
+/// Sum of block silicon areas, um^2.
+pub fn block_area_um2(arch: &FpgaArch, netlist: &Netlist) -> f64 {
+    netlist.insts.iter().map(|i| arch.params(i.kind).area_um2).sum()
+}
+
+/// Routing area: track-tiles used x per-track area.
+pub fn routing_area_um2(arch: &FpgaArch, routed: &RoutedDesign) -> f64 {
+    let track_tiles: f64 = routed.nets.iter().map(|n| n.tiles * n.bits as f64).sum();
+    track_tiles * arch.routing.track_area_um2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::blocks::BlockKind;
+    use crate::fabric::netlist::Netlist;
+    use crate::fabric::{place, route};
+
+    #[test]
+    fn block_area_sums_table2() {
+        let arch = FpgaArch::agilex_like();
+        let mut nl = Netlist::new("t");
+        nl.add("b", BlockKind::Bram);
+        nl.add("d", BlockKind::Dsp);
+        nl.add("l", BlockKind::Lb);
+        assert!((block_area_um2(&arch, &nl) - (8311.0 + 12433.0 + 1938.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn routing_area_scales_with_bits() {
+        let arch = FpgaArch::agilex_like();
+        let mut nl = Netlist::new("t");
+        let a = nl.add("a", BlockKind::Lb);
+        let b = nl.add("b", BlockKind::Lb);
+        nl.connect("narrow", a, &[b], 4);
+        let mut nl2 = Netlist::new("t2");
+        let a2 = nl2.add("a", BlockKind::Lb);
+        let b2 = nl2.add("b", BlockKind::Lb);
+        nl2.connect("wide", a2, &[b2], 40);
+        let pl = place::place(&arch, &nl, 2).unwrap();
+        let pl2 = place::place(&arch, &nl2, 2).unwrap();
+        let r1 = route::route(&arch, &nl, &pl).unwrap();
+        let r2 = route::route(&arch, &nl2, &pl2).unwrap();
+        assert!(routing_area_um2(&arch, &r2) > routing_area_um2(&arch, &r1));
+    }
+}

@@ -1,0 +1,118 @@
+//! FPGA fabric model (paper §IV-A/B).
+//!
+//! The paper evaluates Compute RAMs by describing an Intel-Agilex-like FPGA
+//! architecture to VTR 8.0 and implementing small benchmark circuits on it,
+//! reading back **area, critical-path delay / frequency, and routing
+//! wirelength**. The authors' flow reduces VTR + COFFE + OpenRAM + Synopsys
+//! DC to exactly those per-design aggregates; this module reproduces the
+//! same aggregates with an analytic flow (the substitution is documented in
+//! DESIGN.md §Substitutions):
+//!
+//! * [`arch`] — the architecture description: block library, routing
+//!   channel width 320, wire segments of length 4 and 16, Wilton switch
+//!   boxes with Fs = 3, column-based floorplan;
+//! * [`blocks`] — per-block area/delay/pin parameters calibrated to the
+//!   paper's Table II (22 nm);
+//! * [`netlist`] — benchmark circuits as block instances + nets;
+//! * [`place`] — simulated-annealing placement on the column grid
+//!   minimizing half-perimeter wirelength (the VPR objective);
+//! * [`route`] — segment-count routing estimate per net (wirelength,
+//!   switch hops, delay);
+//! * [`timing`] — critical-path extraction over routed nets -> Fmax;
+//! * [`area`] — block + routing area roll-up;
+//! * [`energy`] — the paper's §IV-C energy model: transistor energy at
+//!   activity 0.1 from block area + wire energy (fJ/mm/bit, scaled to
+//!   22 nm) times bits moved times average net length;
+//! * [`scaling`] — Stillmaker & Baas 45 nm -> 22 nm scaling equations used
+//!   where the paper had to fall back to the 45 nm GPDK library.
+
+pub mod arch;
+pub mod area;
+pub mod blocks;
+pub mod energy;
+pub mod netlist;
+pub mod place;
+pub mod route;
+pub mod timing;
+pub mod scaling;
+
+pub use arch::FpgaArch;
+pub use blocks::{BlockKind, BlockParams};
+pub use netlist::{Inst, Net, Netlist};
+pub use place::Placement;
+pub use route::RoutedDesign;
+
+use anyhow::Result;
+
+/// Full implementation result for one benchmark circuit: the analog of one
+/// VTR run (place + route + timing + area), plus the energy roll-up inputs.
+#[derive(Clone, Debug)]
+pub struct ImplResult {
+    /// Design name.
+    pub name: String,
+    /// Block-level area in um^2 (22 nm).
+    pub block_area_um2: f64,
+    /// Routing area share in um^2.
+    pub routing_area_um2: f64,
+    /// Achieved frequency in MHz (no target frequency: fastest possible).
+    pub fmax_mhz: f64,
+    /// Total routed wirelength in mm.
+    pub wirelength_mm: f64,
+    /// Average net length in mm (the energy model input).
+    pub avg_net_mm: f64,
+    /// Number of nets.
+    pub nets: usize,
+}
+
+impl ImplResult {
+    pub fn total_area_um2(&self) -> f64 {
+        self.block_area_um2 + self.routing_area_um2
+    }
+}
+
+/// Run the full analytic flow on a netlist: place, route, time, measure.
+pub fn implement(arch: &FpgaArch, netlist: &Netlist, seed: u64) -> Result<ImplResult> {
+    let placement = place::place(arch, netlist, seed)?;
+    let routed = route::route(arch, netlist, &placement)?;
+    let fmax_mhz = timing::fmax_mhz(arch, netlist, &routed);
+    let block_area_um2 = area::block_area_um2(arch, netlist);
+    let routing_area_um2 = area::routing_area_um2(arch, &routed);
+    let wirelength_mm = routed.total_wirelength_mm();
+    let nets = netlist.nets.len();
+    Ok(ImplResult {
+        name: netlist.name.clone(),
+        block_area_um2,
+        routing_area_um2,
+        fmax_mhz,
+        wirelength_mm,
+        avg_net_mm: if nets > 0 { wirelength_mm / nets as f64 } else { 0.0 },
+        nets,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::netlist::tests_support::two_block_netlist;
+
+    #[test]
+    fn implement_produces_sane_aggregates() {
+        let arch = FpgaArch::agilex_like();
+        let nl = two_block_netlist();
+        let r = implement(&arch, &nl, 1).unwrap();
+        assert!(r.block_area_um2 > 0.0);
+        assert!(r.fmax_mhz > 50.0 && r.fmax_mhz < 2000.0, "fmax {}", r.fmax_mhz);
+        assert!(r.wirelength_mm > 0.0);
+        assert!(r.total_area_um2() > r.block_area_um2);
+    }
+
+    #[test]
+    fn implement_is_deterministic_per_seed() {
+        let arch = FpgaArch::agilex_like();
+        let nl = two_block_netlist();
+        let a = implement(&arch, &nl, 7).unwrap();
+        let b = implement(&arch, &nl, 7).unwrap();
+        assert_eq!(a.fmax_mhz, b.fmax_mhz);
+        assert_eq!(a.wirelength_mm, b.wirelength_mm);
+    }
+}

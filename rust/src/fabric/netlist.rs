@@ -1,0 +1,141 @@
+//! Benchmark circuits as block-level netlists.
+//!
+//! The granularity matches what the paper's VTR flow sees after packing:
+//! block instances (LB / DSP / BRAM / Compute RAM / IO) connected by
+//! multi-bit nets. The baseline and Compute RAM designs of §IV-C are built
+//! in [`crate::baseline::designs`].
+
+use super::blocks::BlockKind;
+
+/// One placed-able block instance.
+#[derive(Clone, Debug)]
+pub struct Inst {
+    pub name: String,
+    pub kind: BlockKind,
+}
+
+/// A multi-bit net from one driver to one or more sinks.
+#[derive(Clone, Debug)]
+pub struct Net {
+    pub name: String,
+    /// Driving instance index.
+    pub src: usize,
+    /// Sink instance indices.
+    pub sinks: Vec<usize>,
+    /// Bus width in bits (the energy model multiplies by this).
+    pub bits: u32,
+    /// True if this net is on the critical compute path (timing analysis
+    /// considers all nets; this flags the data path vs control).
+    pub timing_critical: bool,
+}
+
+/// A benchmark circuit.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    pub insts: Vec<Inst>,
+    pub nets: Vec<Net>,
+}
+
+impl Netlist {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), insts: Vec::new(), nets: Vec::new() }
+    }
+
+    /// Add an instance, returning its index.
+    pub fn add(&mut self, name: impl Into<String>, kind: BlockKind) -> usize {
+        self.insts.push(Inst { name: name.into(), kind });
+        self.insts.len() - 1
+    }
+
+    /// Add a net.
+    pub fn connect(
+        &mut self,
+        name: impl Into<String>,
+        src: usize,
+        sinks: &[usize],
+        bits: u32,
+    ) -> usize {
+        self.connect_opt(name, src, sinks, bits, true)
+    }
+
+    /// Add a net with explicit timing criticality.
+    pub fn connect_opt(
+        &mut self,
+        name: impl Into<String>,
+        src: usize,
+        sinks: &[usize],
+        bits: u32,
+        timing_critical: bool,
+    ) -> usize {
+        assert!(src < self.insts.len(), "net source out of range");
+        assert!(sinks.iter().all(|&s| s < self.insts.len()), "net sink out of range");
+        assert!(!sinks.is_empty(), "net needs at least one sink");
+        self.nets.push(Net {
+            name: name.into(),
+            src,
+            sinks: sinks.to_vec(),
+            bits,
+            timing_critical,
+        });
+        self.nets.len() - 1
+    }
+
+    /// Count instances of a kind.
+    pub fn count(&self, kind: BlockKind) -> usize {
+        self.insts.iter().filter(|i| i.kind == kind).count()
+    }
+
+    /// Total data bits crossing the interconnect per "pass" of the circuit
+    /// (sum of net widths) — the wire-energy numerator.
+    pub fn total_net_bits(&self) -> u64 {
+        self.nets.iter().map(|n| n.bits as u64 * n.sinks.len() as u64).sum()
+    }
+}
+
+/// Small netlists shared by fabric unit tests and the property tests.
+pub mod tests_support {
+    use super::*;
+
+    /// Minimal BRAM -> LB -> BRAM circuit for fabric unit tests.
+    pub fn two_block_netlist() -> Netlist {
+        let mut nl = Netlist::new("test-two-block");
+        let bram = nl.add("bram0", BlockKind::Bram);
+        let lb = nl.add("lb0", BlockKind::Lb);
+        nl.connect("rd", bram, &[lb], 40);
+        nl.connect("wr", lb, &[bram], 40);
+        nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let mut nl = Netlist::new("t");
+        let a = nl.add("a", BlockKind::Bram);
+        let b = nl.add("b", BlockKind::Lb);
+        let c = nl.add("c", BlockKind::Lb);
+        nl.connect("n1", a, &[b, c], 20);
+        assert_eq!(nl.count(BlockKind::Lb), 2);
+        assert_eq!(nl.total_net_bits(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "sink out of range")]
+    fn bad_sink_panics() {
+        let mut nl = Netlist::new("t");
+        let a = nl.add("a", BlockKind::Lb);
+        nl.connect("n", a, &[5], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one sink")]
+    fn empty_sinks_panic() {
+        let mut nl = Netlist::new("t");
+        let a = nl.add("a", BlockKind::Lb);
+        nl.connect("n", a, &[], 1);
+    }
+}

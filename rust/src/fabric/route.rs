@@ -1,0 +1,133 @@
+//! Routing estimate: wirelength, segment/switch hops, per-net delay.
+//!
+//! The analytic analog of VPR's router for aggregate purposes: each net is
+//! realized with the minimum mix of length-16 and length-4 segments that
+//! covers its HPWL (+ a detour factor for congestion), every segment hop
+//! passes one Wilton switch, and every sink adds a connection-box hop. The
+//! output aggregates — total wirelength (mm), average net length, per-net
+//! delay — are exactly the quantities the paper's energy and timing models
+//! consume from VTR reports.
+
+use super::arch::FpgaArch;
+use super::netlist::Netlist;
+use super::place::Placement;
+use anyhow::Result;
+
+/// One routed net.
+#[derive(Clone, Debug)]
+pub struct RoutedNet {
+    /// Wirelength in tiles (HPWL x detour factor).
+    pub tiles: f64,
+    /// Wirelength in mm.
+    pub mm: f64,
+    /// Long (length-16) segments used.
+    pub seg16: u32,
+    /// Short (length-4) segments used.
+    pub seg4: u32,
+    /// Interconnect delay source -> farthest sink, ns.
+    pub delay_ns: f64,
+    /// Bus width (copied from the netlist for energy roll-up).
+    pub bits: u32,
+}
+
+/// All routed nets of a design.
+#[derive(Clone, Debug)]
+pub struct RoutedDesign {
+    pub nets: Vec<RoutedNet>,
+}
+
+impl RoutedDesign {
+    pub fn total_wirelength_mm(&self) -> f64 {
+        self.nets.iter().map(|n| n.mm).sum()
+    }
+
+    /// Bit-millimeters moved per circuit pass (wire-energy numerator).
+    pub fn bit_mm(&self) -> f64 {
+        self.nets.iter().map(|n| n.mm * n.bits as f64).sum()
+    }
+}
+
+/// Detour factor over HPWL (VPR-observed routed/HPWL ratios for low
+/// congestion sit near 1.1-1.3; the channel here is W=320, uncongested).
+const DETOUR: f64 = 1.15;
+
+/// Route one net given its HPWL in tiles.
+fn route_net(arch: &FpgaArch, hpwl_tiles: u32, bits: u32, sinks: usize) -> RoutedNet {
+    let r = &arch.routing;
+    let tiles = (hpwl_tiles as f64 * DETOUR).max(1.0);
+    // greedy segment cover: length-16 segments for the long haul, length-4
+    // for the remainder (VPR's router prefers long wires for long nets)
+    let n16 = (tiles / r.segment_lengths[1] as f64).floor() as u32;
+    let rem = tiles - (n16 * r.segment_lengths[1]) as f64;
+    let n4 = (rem / r.segment_lengths[0] as f64).ceil().max(0.0) as u32;
+    let delay_ns =
+        n16 as f64 * r.t_seg16_ns + n4 as f64 * r.t_seg4_ns + r.t_cbox_ns * sinks as f64;
+    RoutedNet {
+        tiles,
+        mm: tiles * r.tile_pitch_um / 1000.0,
+        seg16: n16,
+        seg4: n4,
+        delay_ns,
+        bits,
+    }
+}
+
+/// Route every net of a placed design.
+pub fn route(arch: &FpgaArch, netlist: &Netlist, pl: &Placement) -> Result<RoutedDesign> {
+    let nets = netlist
+        .nets
+        .iter()
+        .map(|n| route_net(arch, pl.net_hpwl(n), n.bits, n.sinks.len()))
+        .collect();
+    Ok(RoutedDesign { nets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::netlist::tests_support::two_block_netlist;
+    use crate::fabric::place;
+
+    #[test]
+    fn longer_nets_cost_more() {
+        let arch = FpgaArch::agilex_like();
+        let short = route_net(&arch, 2, 8, 1);
+        let long = route_net(&arch, 30, 8, 1);
+        assert!(long.mm > short.mm);
+        assert!(long.delay_ns > short.delay_ns);
+    }
+
+    #[test]
+    fn long_nets_prefer_long_segments() {
+        let arch = FpgaArch::agilex_like();
+        let long = route_net(&arch, 32, 8, 1);
+        assert!(long.seg16 >= 2, "seg16 {}", long.seg16);
+    }
+
+    #[test]
+    fn min_one_tile_even_for_adjacent() {
+        let arch = FpgaArch::agilex_like();
+        let n = route_net(&arch, 0, 8, 1);
+        assert!(n.tiles >= 1.0);
+        assert!(n.delay_ns > 0.0);
+    }
+
+    #[test]
+    fn route_full_design() {
+        let arch = FpgaArch::agilex_like();
+        let nl = two_block_netlist();
+        let pl = place::place(&arch, &nl, 1).unwrap();
+        let rd = route(&arch, &nl, &pl).unwrap();
+        assert_eq!(rd.nets.len(), nl.nets.len());
+        assert!(rd.total_wirelength_mm() > 0.0);
+        assert!(rd.bit_mm() >= rd.total_wirelength_mm() * 8.0); // 40-bit buses
+    }
+
+    #[test]
+    fn fanout_adds_cbox_delay() {
+        let arch = FpgaArch::agilex_like();
+        let one = route_net(&arch, 10, 8, 1);
+        let four = route_net(&arch, 10, 8, 4);
+        assert!(four.delay_ns > one.delay_ns);
+    }
+}

@@ -1,0 +1,167 @@
+//! Critical-path timing -> Fmax (the VTR "no target frequency" flow).
+//!
+//! Each routed net contributes a register-to-register path:
+//!
+//! ```text
+//!   t = t_out(src block) + t_route(net) + t_in(dst block)
+//! ```
+//!
+//! with block intrinsic delays from Table II calibration. Fmax = 1 / max(t).
+//! The paper's observation that Compute RAM circuits run 60-65% faster
+//! falls out of this model naturally: baseline circuits have BRAM -> LB/DSP
+//! -> BRAM paths through the interconnect, while Compute RAM circuits keep
+//! the math inside the block, leaving only short control paths outside
+//! ("a very few short timing paths exist outside the Compute RAM" §V-B).
+
+use super::arch::FpgaArch;
+use super::netlist::Netlist;
+use super::route::RoutedDesign;
+
+/// Worst path delay in ns over all timing-critical nets, including the
+/// intrinsic delays of the endpoints' blocks.
+pub fn critical_path_ns(arch: &FpgaArch, netlist: &Netlist, routed: &RoutedDesign) -> f64 {
+    let mut worst: f64 = 0.0;
+    for (net, rt) in netlist.nets.iter().zip(&routed.nets) {
+        if !net.timing_critical {
+            continue;
+        }
+        let src = arch.params(netlist.insts[net.src].kind);
+        for &sink in &net.sinks {
+            let dst = arch.params(netlist.insts[sink].kind);
+            // source clock-to-out, interconnect, sink input crossbar, and
+            // the sink's combinational datapath before its capture register
+            let t = src.t_out_ns + rt.delay_ns + dst.t_in_ns + dst.t_comb_ns;
+            worst = worst.max(t);
+        }
+    }
+    // a design with no critical nets is limited by its fastest block clock
+    if worst == 0.0 {
+        let fastest = netlist
+            .insts
+            .iter()
+            .map(|i| arch.params(i.kind).freq_mhz)
+            .fold(f64::INFINITY, f64::min);
+        return 1000.0 / fastest;
+    }
+    worst
+}
+
+/// Fmax in MHz: the slower of (interconnect critical path, slowest block's
+/// intrinsic clock limit).
+pub fn fmax_mhz(arch: &FpgaArch, netlist: &Netlist, routed: &RoutedDesign) -> f64 {
+    let path_ns = critical_path_ns(arch, netlist, routed);
+    let path_mhz = 1000.0 / path_ns;
+    let block_limit = netlist
+        .insts
+        .iter()
+        .map(|i| arch.params(i.kind).freq_mhz)
+        .fold(f64::INFINITY, f64::min);
+    path_mhz.min(block_limit)
+}
+
+/// Fmax when the design's compute uses DSP floating-point mode (the DSP's
+/// float clock limit applies instead of the fixed one).
+pub fn fmax_mhz_float(arch: &FpgaArch, netlist: &Netlist, routed: &RoutedDesign) -> f64 {
+    let path_ns = critical_path_ns(arch, netlist, routed);
+    let path_mhz = 1000.0 / path_ns;
+    let block_limit = netlist
+        .insts
+        .iter()
+        .map(|i| {
+            let p = arch.params(i.kind);
+            p.freq_float_mhz
+        })
+        .fold(f64::INFINITY, f64::min);
+    path_mhz.min(block_limit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::blocks::BlockKind;
+    use crate::fabric::netlist::Netlist;
+    use crate::fabric::{place, route};
+
+    fn implement(nl: &Netlist) -> (FpgaArch, RoutedDesign) {
+        let arch = FpgaArch::agilex_like();
+        let pl = place::place(&arch, nl, 1).unwrap();
+        let rd = route::route(&arch, nl, &pl).unwrap();
+        (arch, rd)
+    }
+
+    #[test]
+    fn block_limit_caps_fmax() {
+        // single DSP with a tiny local net: fmax == DSP fixed limit
+        let mut nl = Netlist::new("dsp-only");
+        let d = nl.add("d", BlockKind::Dsp);
+        let l = nl.add("l", BlockKind::Lb);
+        nl.connect("n", d, &[l], 8);
+        let (arch, rd) = implement(&nl);
+        let f = fmax_mhz(&arch, &nl, &rd);
+        assert!(f <= 391.8 + 1e-9);
+        let ff = fmax_mhz_float(&arch, &nl, &rd);
+        assert!(ff <= 336.4 + 1e-9);
+    }
+
+    #[test]
+    fn datapath_comb_delay_lowers_fmax_below_block_limit() {
+        // BRAM feeding LB adders: the LB carry-chain comb delay plus the
+        // routed path must pull fmax well below the LB's 800 MHz clock —
+        // this is the §V-B effect (baseline circuits 60-65% slower than
+        // Compute RAM circuits)
+        let mut nl = Netlist::new("spread");
+        let b = nl.add("b", BlockKind::Bram);
+        let lbs: Vec<usize> =
+            (0..12).map(|i| nl.add(format!("l{i}"), BlockKind::Lb)).collect();
+        for (i, &lb) in lbs.iter().enumerate() {
+            nl.connect(format!("n{i}"), b, &[lb], 40);
+        }
+        let (arch, rd) = implement(&nl);
+        let f = fmax_mhz(&arch, &nl, &rd);
+        assert!((250.0..450.0).contains(&f), "fmax {f}");
+    }
+
+    #[test]
+    fn control_only_nets_do_not_set_fmax() {
+        let arch = FpgaArch::with_compute_rams();
+        let mut nl = Netlist::new("ctl");
+        let c = nl.add("c", BlockKind::Cram);
+        let l = nl.add("l", BlockKind::Lb);
+        nl.connect_opt("start", l, &[c], 3, false);
+        let pl = place::place(&arch, &nl, 1).unwrap();
+        let rd = route::route(&arch, &nl, &pl).unwrap();
+        let f = fmax_mhz(&arch, &nl, &rd);
+        // limited by the CRAM block clock, not the (ignored) control net
+        assert!((f - 609.1).abs() < 1e-6, "fmax {f}");
+    }
+
+    #[test]
+    fn cram_circuits_run_60_65pct_faster_than_baseline_add() {
+        // the headline §V-B frequency observation, end to end
+        let base = {
+            let mut nl = Netlist::new("base-add");
+            let b = nl.add("b", BlockKind::Bram);
+            let l1 = nl.add("l1", BlockKind::Lb);
+            let l2 = nl.add("l2", BlockKind::Lb);
+            nl.connect("rd", b, &[l1, l2], 40);
+            nl.connect("wr", l1, &[b], 20);
+            let arch = FpgaArch::agilex_like();
+            let pl = place::place(&arch, &nl, 1).unwrap();
+            let rd = route::route(&arch, &nl, &pl).unwrap();
+            fmax_mhz(&arch, &nl, &rd)
+        };
+        let cram = {
+            let arch = FpgaArch::with_compute_rams();
+            let mut nl = Netlist::new("cram-add");
+            let c = nl.add("c", BlockKind::Cram);
+            let l = nl.add("l", BlockKind::Lb);
+            nl.connect_opt("start", l, &[c], 3, false);
+            nl.connect_opt("done", c, &[l], 1, false);
+            let pl = place::place(&arch, &nl, 1).unwrap();
+            let rd = route::route(&arch, &nl, &pl).unwrap();
+            fmax_mhz(&arch, &nl, &rd)
+        };
+        let uplift = cram / base;
+        assert!((1.4..1.9).contains(&uplift), "uplift {uplift} (cram {cram} base {base})");
+    }
+}

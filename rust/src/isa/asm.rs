@@ -1,0 +1,420 @@
+//! Textual assembler / disassembler for the Compute RAM ISA.
+//!
+//! The paper notes the programming model ("writing instruction sequences")
+//! "can be made easy by designing compilers and/or creating libraries of
+//! common operation sequences" — [`crate::ucode`] is the library; this
+//! module is the human-facing assembler used by the `repro asm` CLI and the
+//! examples.
+//!
+//! Syntax, one instruction per line (`;` starts a comment):
+//!
+//! ```text
+//!   movi  r1, 0          ; rd = imm
+//!   movih r1, 1          ; rd high byte
+//!   addi  r3, -12
+//!   loopi 42
+//!     clc
+//!     fas @r1+, @r2+, @r3+       ; [rd] = [ra]+[rb]+C, post-increment
+//!     fas @r1+, @r2+, @r3+ ?t    ; predicated on Tag
+//!   endl
+//!   halt
+//! ```
+//!
+//! Predication suffixes: `?t` (Tag), `?c` (Carry), `?nc` (NotCarry).
+
+use super::{Instr, LogicOp, Pred};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Assemble a program text into instructions.
+pub fn assemble(text: &str) -> Result<Vec<Instr>> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let instr = parse_line(line)
+            .with_context(|| format!("line {}: `{}`", lineno + 1, raw.trim()))?;
+        out.push(instr);
+    }
+    Ok(out)
+}
+
+/// Disassemble instructions back to canonical text.
+pub fn disassemble(prog: &[Instr]) -> String {
+    let mut s = String::new();
+    let mut depth = 0usize;
+    for i in prog {
+        if matches!(i, Instr::EndL) {
+            depth = depth.saturating_sub(1);
+        }
+        for _ in 0..depth {
+            s.push_str("  ");
+        }
+        s.push_str(&format_instr(*i));
+        s.push('\n');
+        if matches!(i, Instr::Loopi { .. } | Instr::Loopr { .. }) {
+            depth += 1;
+        }
+    }
+    s
+}
+
+fn pred_suffix(p: Pred) -> &'static str {
+    match p {
+        Pred::Always => "",
+        Pred::Tag => " ?t",
+        Pred::Carry => " ?c",
+        Pred::NCarry => " ?nc",
+    }
+}
+
+fn rowref(r: u8, inc: bool) -> String {
+    if inc {
+        format!("@r{r}+")
+    } else {
+        format!("@r{r}")
+    }
+}
+
+/// Canonical text of one instruction.
+pub fn format_instr(i: Instr) -> String {
+    use Instr::*;
+    match i {
+        Halt => "halt".into(),
+        Nop => "nop".into(),
+        Clc => "clc".into(),
+        Sec => "sec".into(),
+        Tnot => "tnot".into(),
+        Tcar => "tcar".into(),
+        EndL => "endl".into(),
+        Movi { rd, imm } => format!("movi r{rd}, {imm}"),
+        MoviH { rd, imm } => format!("movih r{rd}, {imm}"),
+        Addi { rd, imm } => format!("addi r{rd}, {imm}"),
+        Addr { rd, rs } => format!("addr r{rd}, r{rs}"),
+        Movr { rd, rs } => format!("movr r{rd}, r{rs}"),
+        Loopi { count } => format!("loopi {count}"),
+        Loopr { rs } => format!("loopr r{rs}"),
+        Brnz { rs, off } => format!("brnz r{rs}, {off}"),
+        Brz { rs, off } => format!("brz r{rs}, {off}"),
+        Fas { ra, rb, rd, pred, inc } => format!(
+            "fas {}, {}, {}{}",
+            rowref(ra, inc),
+            rowref(rb, inc),
+            rowref(rd, inc),
+            pred_suffix(pred)
+        ),
+        Fss { ra, rb, rd, pred, inc } => format!(
+            "fss {}, {}, {}{}",
+            rowref(ra, inc),
+            rowref(rb, inc),
+            rowref(rd, inc),
+            pred_suffix(pred)
+        ),
+        Logic { op, ra, rb, rd, pred, inc } => {
+            let name = match op {
+                LogicOp::And => "and",
+                LogicOp::Or => "or",
+                LogicOp::Xor => "xor",
+                LogicOp::Nor => "nor",
+            };
+            format!(
+                "{name} {}, {}, {}{}",
+                rowref(ra, inc),
+                rowref(rb, inc),
+                rowref(rd, inc),
+                pred_suffix(pred)
+            )
+        }
+        CopyRow { ra, rd, pred, inc } => format!(
+            "copy {}, {}{}",
+            rowref(ra, inc),
+            rowref(rd, inc),
+            pred_suffix(pred)
+        ),
+        NotRow { ra, rd, pred, inc } => format!(
+            "not {}, {}{}",
+            rowref(ra, inc),
+            rowref(rd, inc),
+            pred_suffix(pred)
+        ),
+        Zero { rd, pred, inc } => {
+            format!("zero {}{}", rowref(rd, inc), pred_suffix(pred))
+        }
+        Tld { ra, inc } => format!("tld {}", rowref(ra, inc)),
+        Tldn { ra, inc } => format!("tldn {}", rowref(ra, inc)),
+        Wrc { rd, pred, inc } => {
+            format!("wrc {}{}", rowref(rd, inc), pred_suffix(pred))
+        }
+        Wrt { rd, pred, inc } => {
+            format!("wrt {}{}", rowref(rd, inc), pred_suffix(pred))
+        }
+    }
+}
+
+fn parse_reg(tok: &str) -> Result<u8> {
+    let t = tok.trim();
+    let t = t.strip_prefix('r').ok_or_else(|| anyhow!("expected register, got `{t}`"))?;
+    let n: u8 = t.parse().map_err(|_| anyhow!("bad register `r{t}`"))?;
+    if n >= 8 {
+        bail!("register r{n} out of range (r0-r7)");
+    }
+    Ok(n)
+}
+
+/// Parse `@rN` or `@rN+`; returns (reg, inc).
+fn parse_rowref(tok: &str) -> Result<(u8, bool)> {
+    let t = tok.trim();
+    let t = t
+        .strip_prefix('@')
+        .ok_or_else(|| anyhow!("expected row reference `@rN`, got `{t}`"))?;
+    let (t, inc) = match t.strip_suffix('+') {
+        Some(rest) => (rest, true),
+        None => (t, false),
+    };
+    Ok((parse_reg(t)?, inc))
+}
+
+fn parse_imm<T: std::str::FromStr>(tok: &str) -> Result<T> {
+    tok.trim()
+        .parse::<T>()
+        .map_err(|_| anyhow!("bad immediate `{}`", tok.trim()))
+}
+
+fn parse_line(line: &str) -> Result<Instr> {
+    use Instr::*;
+    // split off predication suffix
+    let (body, pred) = if let Some(idx) = line.find('?') {
+        let (b, p) = line.split_at(idx);
+        let pred = match p.trim() {
+            "?t" => Pred::Tag,
+            "?c" => Pred::Carry,
+            "?nc" => Pred::NCarry,
+            other => bail!("unknown predication `{other}`"),
+        };
+        (b.trim(), pred)
+    } else {
+        (line, Pred::Always)
+    };
+    let (mnem, rest) = match body.split_once(char::is_whitespace) {
+        Some((m, r)) => (m, r.trim()),
+        None => (body, ""),
+    };
+    let args: Vec<&str> = if rest.is_empty() {
+        vec![]
+    } else {
+        rest.split(',').map(str::trim).collect()
+    };
+    let narg = |n: usize| -> Result<()> {
+        if args.len() != n {
+            bail!("`{mnem}` expects {n} operand(s), got {}", args.len());
+        }
+        Ok(())
+    };
+    // consistent-inc helper for multi-rowref ops
+    fn rows3(args: &[&str]) -> Result<(u8, u8, u8, bool)> {
+        let (ra, ia) = parse_rowref(args[0])?;
+        let (rb, ib) = parse_rowref(args[1])?;
+        let (rd, id) = parse_rowref(args[2])?;
+        if ia != ib || ib != id {
+            bail!("mixed post-increment modes are not encodable (one `inc` bit)");
+        }
+        Ok((ra, rb, rd, ia))
+    }
+    fn rows2(args: &[&str]) -> Result<(u8, u8, bool)> {
+        let (ra, ia) = parse_rowref(args[0])?;
+        let (rd, id) = parse_rowref(args[1])?;
+        if ia != id {
+            bail!("mixed post-increment modes are not encodable (one `inc` bit)");
+        }
+        Ok((ra, rd, ia))
+    }
+    Ok(match mnem {
+        "halt" => Halt,
+        "nop" => Nop,
+        "clc" => Clc,
+        "sec" => Sec,
+        "tnot" => Tnot,
+        "tcar" => Tcar,
+        "endl" => EndL,
+        "movi" => {
+            narg(2)?;
+            Movi { rd: parse_reg(args[0])?, imm: parse_imm::<u8>(args[1])? }
+        }
+        "movih" => {
+            narg(2)?;
+            MoviH { rd: parse_reg(args[0])?, imm: parse_imm::<u8>(args[1])? }
+        }
+        "addi" => {
+            narg(2)?;
+            Addi { rd: parse_reg(args[0])?, imm: parse_imm::<i8>(args[1])? }
+        }
+        "addr" => {
+            narg(2)?;
+            Addr { rd: parse_reg(args[0])?, rs: parse_reg(args[1])? }
+        }
+        "movr" => {
+            narg(2)?;
+            Movr { rd: parse_reg(args[0])?, rs: parse_reg(args[1])? }
+        }
+        "loopi" => {
+            narg(1)?;
+            Loopi { count: parse_imm::<u8>(args[0])? }
+        }
+        "loopr" => {
+            narg(1)?;
+            Loopr { rs: parse_reg(args[0])? }
+        }
+        "brnz" => {
+            narg(2)?;
+            Brnz { rs: parse_reg(args[0])?, off: parse_imm::<i8>(args[1])? }
+        }
+        "brz" => {
+            narg(2)?;
+            Brz { rs: parse_reg(args[0])?, off: parse_imm::<i8>(args[1])? }
+        }
+        "fas" | "fss" => {
+            narg(3)?;
+            let (ra, rb, rd, inc) = rows3(&args)?;
+            if mnem == "fas" {
+                Fas { ra, rb, rd, pred, inc }
+            } else {
+                Fss { ra, rb, rd, pred, inc }
+            }
+        }
+        "and" | "or" | "xor" | "nor" => {
+            narg(3)?;
+            let (ra, rb, rd, inc) = rows3(&args)?;
+            let op = match mnem {
+                "and" => LogicOp::And,
+                "or" => LogicOp::Or,
+                "xor" => LogicOp::Xor,
+                _ => LogicOp::Nor,
+            };
+            Logic { op, ra, rb, rd, pred, inc }
+        }
+        "copy" => {
+            narg(2)?;
+            let (ra, rd, inc) = rows2(&args)?;
+            CopyRow { ra, rd, pred, inc }
+        }
+        "not" => {
+            narg(2)?;
+            let (ra, rd, inc) = rows2(&args)?;
+            NotRow { ra, rd, pred, inc }
+        }
+        "zero" => {
+            narg(1)?;
+            let (rd, inc) = parse_rowref(args[0])?;
+            Zero { rd, pred, inc }
+        }
+        "tld" => {
+            narg(1)?;
+            let (ra, inc) = parse_rowref(args[0])?;
+            Tld { ra, inc }
+        }
+        "tldn" => {
+            narg(1)?;
+            let (ra, inc) = parse_rowref(args[0])?;
+            Tldn { ra, inc }
+        }
+        "wrc" => {
+            narg(1)?;
+            let (rd, inc) = parse_rowref(args[0])?;
+            Wrc { rd, pred, inc }
+        }
+        "wrt" => {
+            narg(1)?;
+            let (rd, inc) = parse_rowref(args[0])?;
+            Wrt { rd, pred, inc }
+        }
+        other => bail!("unknown mnemonic `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_basic_program() {
+        let prog = assemble(
+            "
+            ; int4 add inner loop
+            movi r1, 0
+            movi r2, 4
+            movi r3, 8
+            clc
+            loopi 4
+              fas @r1+, @r2+, @r3+
+            endl
+            halt
+            ",
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 8);
+        assert_eq!(prog[0], Instr::Movi { rd: 1, imm: 0 });
+        assert!(matches!(prog[5], Instr::Fas { inc: true, .. }));
+        assert_eq!(prog[7], Instr::Halt);
+    }
+
+    #[test]
+    fn roundtrip_disassemble_assemble() {
+        let src = "
+            movi r1, 0
+            movih r1, 1
+            addi r2, -4
+            loopi 10
+              tld @r4+
+              clc
+              fas @r1+, @r2+, @r3+ ?t
+              fss @r1, @r2, @r3 ?nc
+              wrc @r5 ?c
+              zero @r6+
+            endl
+            brnz r7, -2
+            halt
+        ";
+        let p1 = assemble(src).unwrap();
+        let text = disassemble(&p1);
+        let p2 = assemble(&text).unwrap();
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn machine_roundtrip_through_text() {
+        let src = "tldn @r3\ntcar\ntnot\nand @r1, @r2, @r3\nhalt";
+        let prog = assemble(src).unwrap();
+        for i in &prog {
+            assert_eq!(Instr::decode(i.encode()), Some(*i));
+        }
+    }
+
+    #[test]
+    fn rejects_bad_register() {
+        assert!(assemble("movi r9, 0").is_err());
+        assert!(assemble("fas @r1, @r2, @r8").is_err());
+    }
+
+    #[test]
+    fn rejects_mixed_inc() {
+        assert!(assemble("fas @r1+, @r2, @r3+").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        assert!(assemble("frobnicate r1").is_err());
+    }
+
+    #[test]
+    fn error_reports_line_number() {
+        let err = assemble("halt\nbogus").unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let prog = assemble("; nothing\n\n  ; more\nhalt ; stop").unwrap();
+        assert_eq!(prog, vec![Instr::Halt]);
+    }
+}

@@ -1,0 +1,346 @@
+//! The Compute RAM controller ISA (paper §III-A.2/.3).
+//!
+//! 16-bit instructions, 256-entry instruction memory, 8 registers. Two
+//! instruction classes, exactly as the paper describes:
+//!
+//! 1. **Controller instructions** executed by the controller's own execution
+//!    unit (one adder, one comparator, one logical unit): immediates, moves,
+//!    branches, and zero-overhead hardware loops (`LOOPI`/`ENDL`) in the
+//!    style of DSP processors [22].
+//! 2. **Array commands** issued to the main array, one array cycle each:
+//!    full-adder / subtractor steps, logic ops, copies, latch management and
+//!    predicated writes. Row addresses are taken **from registers** (with an
+//!    optional post-increment) so loops can stream over rows.
+//!
+//! Encoding: `[15:12]` primary opcode, 12 payload bits. Opcode `0xF` selects
+//! an extended page for field-light instructions. See [`Instr::encode`].
+
+pub mod asm;
+
+/// Predication-mux condition (paper §III-A.4: a 4:1 mux selecting among
+/// Carry, NotCarry and Tag; `Always` is the pass-through input).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum Pred {
+    #[default]
+    Always = 0,
+    Tag = 1,
+    Carry = 2,
+    NCarry = 3,
+}
+
+impl Pred {
+    pub fn from_bits(b: u16) -> Pred {
+        match b & 3 {
+            0 => Pred::Always,
+            1 => Pred::Tag,
+            2 => Pred::Carry,
+            _ => Pred::NCarry,
+        }
+    }
+}
+
+/// Two-source logic operations derived from one multi-row activation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LogicOp {
+    And,
+    Or,
+    Xor,
+    Nor,
+}
+
+/// One ISA instruction. `inc` = post-increment every register the
+/// instruction used as a row pointer.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Instr {
+    // ---- controller class ----
+    /// Stop; assert `done`.
+    Halt,
+    Nop,
+    /// `rd = imm` (zero-extended).
+    Movi { rd: u8, imm: u8 },
+    /// `rd = (imm << 8) | (rd & 0xFF)` — builds addresses > 255.
+    MoviH { rd: u8, imm: u8 },
+    /// `rd += sext(imm)`.
+    Addi { rd: u8, imm: i8 },
+    /// `rd += rs`.
+    Addr { rd: u8, rs: u8 },
+    /// `rd = rs`.
+    Movr { rd: u8, rs: u8 },
+    /// Hardware loop over the body up to the matching `EndL`, `count` times.
+    Loopi { count: u8 },
+    /// Hardware loop with the count from a register (dynamic trip count).
+    Loopr { rs: u8 },
+    /// Zero-overhead loop end marker (costs no cycle: dedicated hardware
+    /// loop-end comparator, like conventional DSPs).
+    EndL,
+    /// Branch (pc-relative) if `rs != 0`.
+    Brnz { rs: u8, off: i8 },
+    /// Branch (pc-relative) if `rs == 0`.
+    Brz { rs: u8, off: i8 },
+
+    // ---- array-command class (1 array cycle each) ----
+    /// Full-adder step: `[rd] = [ra] + [rb] + C` (sum bit), carry latched.
+    Fas { ra: u8, rb: u8, rd: u8, pred: Pred, inc: bool },
+    /// Full-subtractor step: `[rd] = [rb] - [ra]` via `B + NOT A + C`.
+    Fss { ra: u8, rb: u8, rd: u8, pred: Pred, inc: bool },
+    /// Two-row logic: `[rd] = op([ra], [rb])`.
+    Logic { op: LogicOp, ra: u8, rb: u8, rd: u8, pred: Pred, inc: bool },
+    /// `[rd] = NOT [ra]`.
+    NotRow { ra: u8, rd: u8, pred: Pred, inc: bool },
+    /// `[rd] = [ra]`.
+    CopyRow { ra: u8, rd: u8, pred: Pred, inc: bool },
+    /// `[rd] = 0`.
+    Zero { rd: u8, pred: Pred, inc: bool },
+    /// Clear carry latches.
+    Clc,
+    /// Set carry latches.
+    Sec,
+    /// Load tag latches from row `[ra]`.
+    Tld { ra: u8, inc: bool },
+    /// Load tag latches with `NOT [ra]`.
+    Tldn { ra: u8, inc: bool },
+    /// Invert tag latches.
+    Tnot,
+    /// Copy carry latches into tag latches.
+    Tcar,
+    /// Write carry latches to row `[rd]`.
+    Wrc { rd: u8, pred: Pred, inc: bool },
+    /// Write tag latches to row `[rd]`.
+    Wrt { rd: u8, pred: Pred, inc: bool },
+}
+
+impl Instr {
+    /// True for the array-command class (consumes an array cycle).
+    pub fn is_array_op(&self) -> bool {
+        use Instr::*;
+        matches!(
+            self,
+            Fas { .. }
+                | Fss { .. }
+                | Logic { .. }
+                | NotRow { .. }
+                | CopyRow { .. }
+                | Zero { .. }
+                | Clc
+                | Sec
+                | Tld { .. }
+                | Tldn { .. }
+                | Tnot
+                | Tcar
+                | Wrc { .. }
+                | Wrt { .. }
+        )
+    }
+
+    /// Encode to the 16-bit machine format.
+    pub fn encode(&self) -> u16 {
+        use Instr::*;
+        #[inline]
+        fn r3(r: u8) -> u16 {
+            debug_assert!(r < 8, "register out of range");
+            (r & 7) as u16
+        }
+        // [15:12]=op, 3-operand array format: [11:10]=pred [9]=inc [8:6]=ra [5:3]=rb [2:0]=rd
+        fn arr3(op: u16, pred: Pred, inc: bool, ra: u8, rb: u8, rd: u8) -> u16 {
+            (op << 12)
+                | ((pred as u16) << 10)
+                | ((inc as u16) << 9)
+                | (r3(ra) << 6)
+                | (r3(rb) << 3)
+                | r3(rd)
+        }
+        // 2-operand array format: ra in [8:6], rd in [2:0]
+        fn arr2(op: u16, pred: Pred, inc: bool, ra: u8, rd: u8) -> u16 {
+            arr3(op, pred, inc, ra, 0, rd)
+        }
+        // imm format: [11:9]=rd [7:0]=imm
+        fn ri(op: u16, rd: u8, imm: u8) -> u16 {
+            (op << 12) | (r3(rd) << 9) | imm as u16
+        }
+        // extended page: [11:8]=sub, low 8 bits payload
+        fn ext(sub: u16, payload: u16) -> u16 {
+            (0xF << 12) | (sub << 8) | (payload & 0xFF)
+        }
+        fn extp(sub: u16, pred: Pred, inc: bool, rd: u8) -> u16 {
+            ext(sub, ((pred as u16) << 4) | ((inc as u16) << 3) | r3(rd))
+        }
+        match *self {
+            Movi { rd, imm } => ri(0x1, rd, imm),
+            MoviH { rd, imm } => ri(0x2, rd, imm),
+            Addi { rd, imm } => ri(0x3, rd, imm as u8),
+            Brnz { rs, off } => ri(0x4, rs, off as u8),
+            Brz { rs, off } => ri(0x5, rs, off as u8),
+            Loopi { count } => ri(0x6, 0, count),
+            Fas { ra, rb, rd, pred, inc } => arr3(0x7, pred, inc, ra, rb, rd),
+            Fss { ra, rb, rd, pred, inc } => arr3(0x8, pred, inc, ra, rb, rd),
+            Logic { op, ra, rb, rd, pred, inc } => {
+                let code = match op {
+                    LogicOp::And => 0x9,
+                    LogicOp::Or => 0xA,
+                    LogicOp::Xor => 0xB,
+                    LogicOp::Nor => 0xC,
+                };
+                arr3(code, pred, inc, ra, rb, rd)
+            }
+            CopyRow { ra, rd, pred, inc } => arr2(0xD, pred, inc, ra, rd),
+            NotRow { ra, rd, pred, inc } => arr2(0xE, pred, inc, ra, rd),
+            Halt => ext(0x0, 0),
+            Nop => ext(0x1, 0),
+            Clc => ext(0x2, 0),
+            Sec => ext(0x3, 0),
+            Tnot => ext(0x4, 0),
+            Tcar => ext(0x5, 0),
+            EndL => ext(0x6, 0),
+            Tld { ra, inc } => ext(0x7, ((inc as u16) << 3) | r3(ra)),
+            Wrc { rd, pred, inc } => extp(0x8, pred, inc, rd),
+            Wrt { rd, pred, inc } => extp(0x9, pred, inc, rd),
+            Zero { rd, pred, inc } => extp(0xA, pred, inc, rd),
+            Loopr { rs } => ext(0xB, r3(rs)),
+            Addr { rd, rs } => ext(0xC, (r3(rd) << 3) | r3(rs)),
+            Movr { rd, rs } => ext(0xD, (r3(rd) << 3) | r3(rs)),
+            Tldn { ra, inc } => ext(0xE, ((inc as u16) << 3) | r3(ra)),
+        }
+    }
+
+    /// Decode from the 16-bit machine format.
+    pub fn decode(word: u16) -> Option<Instr> {
+        use Instr::*;
+        let op = word >> 12;
+        let pred = Pred::from_bits((word >> 10) & 3);
+        let inc = (word >> 9) & 1 == 1;
+        let ra = ((word >> 6) & 7) as u8;
+        let rb = ((word >> 3) & 7) as u8;
+        let rd3 = (word & 7) as u8;
+        let rd_imm = ((word >> 9) & 7) as u8;
+        let imm = (word & 0xFF) as u8;
+        Some(match op {
+            0x1 => Movi { rd: rd_imm, imm },
+            0x2 => MoviH { rd: rd_imm, imm },
+            0x3 => Addi { rd: rd_imm, imm: imm as i8 },
+            0x4 => Brnz { rs: rd_imm, off: imm as i8 },
+            0x5 => Brz { rs: rd_imm, off: imm as i8 },
+            0x6 => Loopi { count: imm },
+            0x7 => Fas { ra, rb, rd: rd3, pred, inc },
+            0x8 => Fss { ra, rb, rd: rd3, pred, inc },
+            0x9 => Logic { op: LogicOp::And, ra, rb, rd: rd3, pred, inc },
+            0xA => Logic { op: LogicOp::Or, ra, rb, rd: rd3, pred, inc },
+            0xB => Logic { op: LogicOp::Xor, ra, rb, rd: rd3, pred, inc },
+            0xC => Logic { op: LogicOp::Nor, ra, rb, rd: rd3, pred, inc },
+            0xD => CopyRow { ra, rd: rd3, pred, inc },
+            0xE => NotRow { ra, rd: rd3, pred, inc },
+            0xF => {
+                let sub = (word >> 8) & 0xF;
+                let pl = word & 0xFF;
+                let p = Pred::from_bits((pl >> 4) & 3);
+                let pinc = (pl >> 3) & 1 == 1;
+                let prd = (pl & 7) as u8;
+                match sub {
+                    0x0 => Halt,
+                    0x1 => Nop,
+                    0x2 => Clc,
+                    0x3 => Sec,
+                    0x4 => Tnot,
+                    0x5 => Tcar,
+                    0x6 => EndL,
+                    0x7 => Tld { ra: prd, inc: pinc },
+                    0x8 => Wrc { rd: prd, pred: p, inc: pinc },
+                    0x9 => Wrt { rd: prd, pred: p, inc: pinc },
+                    0xA => Zero { rd: prd, pred: p, inc: pinc },
+                    0xB => Loopr { rs: prd },
+                    0xC => Addr { rd: ((pl >> 3) & 7) as u8, rs: prd },
+                    0xD => Movr { rd: ((pl >> 3) & 7) as u8, rs: prd },
+                    0xE => Tldn { ra: prd, inc: pinc },
+                    _ => return None,
+                }
+            }
+            _ => return None, // opcode 0x0 reserved (reads as invalid)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_sample_instrs() -> Vec<Instr> {
+        use Instr::*;
+        let mut v = vec![
+            Halt,
+            Nop,
+            Clc,
+            Sec,
+            Tnot,
+            Tcar,
+            EndL,
+            Movi { rd: 3, imm: 200 },
+            MoviH { rd: 7, imm: 1 },
+            Addi { rd: 2, imm: -8 },
+            Addr { rd: 1, rs: 6 },
+            Movr { rd: 5, rs: 2 },
+            Loopi { count: 255 },
+            Loopr { rs: 4 },
+            Brnz { rs: 1, off: -3 },
+            Brz { rs: 0, off: 5 },
+            Tld { ra: 2, inc: true },
+            Tldn { ra: 3, inc: false },
+            Wrc { rd: 1, pred: Pred::Tag, inc: true },
+            Wrt { rd: 2, pred: Pred::NCarry, inc: false },
+            Zero { rd: 7, pred: Pred::Always, inc: true },
+        ];
+        for pred in [Pred::Always, Pred::Tag, Pred::Carry, Pred::NCarry] {
+            for inc in [false, true] {
+                v.push(Fas { ra: 1, rb: 2, rd: 3, pred, inc });
+                v.push(Fss { ra: 7, rb: 0, rd: 5, pred, inc });
+                for op in [LogicOp::And, LogicOp::Or, LogicOp::Xor, LogicOp::Nor] {
+                    v.push(Logic { op, ra: 4, rb: 5, rd: 6, pred, inc });
+                }
+                v.push(CopyRow { ra: 0, rd: 7, pred, inc });
+                v.push(NotRow { ra: 6, rd: 1, pred, inc });
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in all_sample_instrs() {
+            let enc = i.encode();
+            let dec = Instr::decode(enc).unwrap_or_else(|| panic!("decode failed for {i:?}"));
+            assert_eq!(dec, i, "roundtrip mismatch (encoded {enc:#06x})");
+        }
+    }
+
+    #[test]
+    fn array_op_classification() {
+        assert!(Instr::Clc.is_array_op());
+        assert!(Instr::Fas { ra: 0, rb: 1, rd: 2, pred: Pred::Always, inc: false }.is_array_op());
+        assert!(!Instr::Movi { rd: 0, imm: 1 }.is_array_op());
+        assert!(!Instr::Loopi { count: 3 }.is_array_op());
+        assert!(!Instr::EndL.is_array_op());
+    }
+
+    #[test]
+    fn reserved_opcode_decodes_none() {
+        assert_eq!(Instr::decode(0x0000), None);
+        assert_eq!(Instr::decode(0xFF00), None);
+    }
+
+    #[test]
+    fn distinct_instrs_distinct_encodings() {
+        let instrs = all_sample_instrs();
+        for (i, a) in instrs.iter().enumerate() {
+            for b in &instrs[i + 1..] {
+                if a != b {
+                    assert_ne!(a.encode(), b.encode(), "{a:?} vs {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn width_is_16_bits() {
+        // all encodings must fit u16 by construction; spot-check top bits used
+        assert_eq!(Instr::Halt.encode() >> 12, 0xF);
+        assert_eq!(Instr::Movi { rd: 0, imm: 0 }.encode() >> 12, 0x1);
+    }
+}

@@ -1,0 +1,52 @@
+//! # `comperam` — Compute RAMs: Adaptable Compute and Storage Blocks for DL-Optimized FPGAs
+//!
+//! Production-quality reproduction of the ASILOMAR 2021 paper by Arora,
+//! Hanindhito and John. The crate provides:
+//!
+//! * a **bit-exact simulator** of a Compute RAM block: a bit-line-computing
+//!   SRAM array ([`bitline`]), column logic peripherals, a 16-bit controller
+//!   ISA with assembler ([`isa`]), a pipelined controller with zero-overhead
+//!   hardware loops ([`ctrl`]), and the block itself with the paper's Table I
+//!   port interface ([`cram`]);
+//! * a **microcode library** generating bit-serial programs for any integer
+//!   width plus bfloat16 ([`ucode`]);
+//! * an **FPGA fabric model** — an Intel-Agilex-like architecture description,
+//!   analytic placement / routing / timing in the style of VTR, and the
+//!   paper's area & energy models ([`fabric`]);
+//! * **baseline datapath models** (BRAM + LB adders / DSP banks / dot-product
+//!   engine) used as the paper's comparison points ([`baseline`]);
+//! * a **coordinator** that maps vector and NN workloads across a farm of
+//!   Compute RAM blocks, with a batching server ([`coordinator`]);
+//! * a small **quantized-NN layer stack** that runs on the farm ([`nn`]);
+//! * a **PJRT runtime** that loads the AOT-compiled JAX/Pallas artifacts and
+//!   cross-checks the simulator's numerics ([`runtime`]);
+//! * **report generators** for every table and figure in the paper's
+//!   evaluation ([`report`]) driven by the calibrated cost model ([`cost`]).
+//!
+//! The build is fully offline: the only external crates are `xla` (PJRT
+//! bindings) and `anyhow`; JSON parsing, argument parsing, PRNG, property
+//! testing and the benchmark harness are implemented in [`util`].
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod bitline;
+pub mod coordinator;
+pub mod cost;
+pub mod cram;
+pub mod ctrl;
+pub mod fabric;
+pub mod isa;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod ucode;
+pub mod util;
+
+pub use cram::CramBlock;
+pub use isa::{Instr, Pred};
+pub use ucode::Program;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

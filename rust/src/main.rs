@@ -1,0 +1,258 @@
+//! `repro` — the comperam command-line interface.
+//!
+//! ```text
+//! repro experiment <table2|fig4|fig5|fig6|headline|all> [--cycles paper|measured]
+//! repro asm <file.casm>              assemble to machine words (hex)
+//! repro disasm <file.hex>            disassemble machine words
+//! repro run-op --op add --w 8 --a 1,2,3 --b 4,5,6     run on the simulator
+//! repro golden [--artifacts DIR]     cross-check simulator vs PJRT artifacts
+//! repro nn [--blocks N]              int8 MLP on the Compute RAM farm
+//! repro serve [--blocks N] [--wait-ms MS]             PIM TCP server
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline build: no clap); every
+//! subcommand prints usage on error.
+
+use anyhow::{anyhow, bail, Context, Result};
+use comperam::bitline::Geometry;
+use comperam::coordinator::server::PimServer;
+use comperam::coordinator::Coordinator;
+use comperam::cost::CycleModel;
+use comperam::cram::{ops, CramBlock};
+use comperam::{isa, nn, report, runtime};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "\
+repro — Compute RAMs (ASILOMAR'21) reproduction CLI
+
+subcommands:
+  experiment <table2|fig4|fig5|fig6|headline|all> [--cycles paper|measured]
+  asm <file>             assemble .casm text to hex words
+  disasm <file>          disassemble hex words to text
+  run-op --op <add|sub|mul|dot> --w <W> --a <csv> --b <csv>
+  golden [--artifacts DIR]
+  nn [--blocks N]
+  serve [--blocks N] [--wait-ms MS]
+";
+
+/// Minimal flag parser: positionals + `--key value` pairs.
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let val = it.next().cloned().unwrap_or_default();
+            flags.insert(key.to_string(), val);
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    (pos, flags)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "experiment" => cmd_experiment(rest),
+        "asm" => cmd_asm(rest),
+        "disasm" => cmd_disasm(rest),
+        "run-op" => cmd_run_op(rest),
+        "golden" => cmd_golden(rest),
+        "nn" => cmd_nn(rest),
+        "serve" => cmd_serve(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+fn cycle_model(flags: &BTreeMap<String, String>) -> Result<CycleModel> {
+    match flags.get("cycles").map(String::as_str) {
+        None | Some("paper") => Ok(CycleModel::Paper),
+        Some("measured") => Ok(CycleModel::Measured),
+        Some(other) => bail!("--cycles must be paper|measured, got `{other}`"),
+    }
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args);
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let model = cycle_model(&flags)?;
+    let run = |name: &str| -> Result<()> {
+        match name {
+            "table2" => print!("{}", report::table2()),
+            "fig4" => print!("{}", report::fig4(model)?.1),
+            "fig5" => print!("{}", report::fig5(model)?.1),
+            "fig6" => print!("{}", report::fig6(model)?.1),
+            "headline" => print!("{}", report::headline(model)?),
+            other => bail!("unknown experiment `{other}`"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["table2", "fig4", "fig5", "fig6", "headline"] {
+            run(name)?;
+        }
+    } else {
+        run(which)?;
+    }
+    Ok(())
+}
+
+fn cmd_asm(args: &[String]) -> Result<()> {
+    let (pos, _) = parse_flags(args);
+    let path = pos.first().ok_or_else(|| anyhow!("usage: repro asm <file>"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let prog = isa::asm::assemble(&text)?;
+    for (i, instr) in prog.iter().enumerate() {
+        println!("{i:3}: {:04x}  ; {}", instr.encode(), isa::asm::format_instr(*instr));
+    }
+    println!("; {} instructions ({} max)", prog.len(), comperam::ctrl::IMEM_CAPACITY);
+    Ok(())
+}
+
+fn cmd_disasm(args: &[String]) -> Result<()> {
+    let (pos, _) = parse_flags(args);
+    let path = pos.first().ok_or_else(|| anyhow!("usage: repro disasm <file>"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut prog = Vec::new();
+    for tok in text.split_whitespace() {
+        let word = u16::from_str_radix(tok.trim_start_matches("0x"), 16)
+            .map_err(|_| anyhow!("bad hex word `{tok}`"))?;
+        prog.push(
+            isa::Instr::decode(word).ok_or_else(|| anyhow!("invalid encoding {word:#06x}"))?,
+        );
+    }
+    print!("{}", isa::asm::disassemble(&prog));
+    Ok(())
+}
+
+fn parse_csv(s: &str) -> Result<Vec<i64>> {
+    s.split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse::<i64>().map_err(|_| anyhow!("bad integer `{t}`")))
+        .collect()
+}
+
+fn cmd_run_op(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let op = flags.get("op").map(String::as_str).unwrap_or("add");
+    let w: u32 = flags.get("w").map(String::as_str).unwrap_or("8").parse()?;
+    let a = parse_csv(flags.get("a").ok_or_else(|| anyhow!("missing --a"))?)?;
+    let b = parse_csv(flags.get("b").ok_or_else(|| anyhow!("missing --b"))?)?;
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let r = match op {
+        "add" => ops::int_addsub(&mut block, &a, &b, w, false)?,
+        "sub" => ops::int_addsub(&mut block, &a, &b, w, true)?,
+        "mul" => ops::int_mul(&mut block, &a, &b, w)?,
+        "dot" => {
+            // one dot product: a and b are the K-element vectors
+            let av: Vec<Vec<i64>> = a.iter().map(|&x| vec![x]).collect();
+            let bv: Vec<Vec<i64>> = b.iter().map(|&x| vec![x]).collect();
+            ops::int_dot(&mut block, &av, &bv, w, 32)?
+        }
+        other => bail!("unsupported --op `{other}` (add|sub|mul|dot)"),
+    };
+    println!("values: {:?}", r.values);
+    println!(
+        "cycles: total={} array={} instructions={}",
+        r.stats.cycles, r.stats.array_cycles, r.stats.instructions
+    );
+    Ok(())
+}
+
+fn cmd_golden(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(runtime::default_artifacts_dir);
+    let mut rt = runtime::Runtime::load(&dir)?;
+    println!("artifacts: {:?} ({} entries)", dir, rt.entry_names().len());
+    let mut rng = comperam::util::Prng::new(0x601D);
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut checked = 0usize;
+
+    // int elementwise add/mul entries vs the simulator
+    for (name, w, n, mul) in [
+        ("add_i4", 4u32, 1680usize, false),
+        ("add_i8", 8, 840, false),
+        ("mul_i4", 4, 1280, true),
+        ("mul_i8", 8, 640, true),
+    ] {
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let ai: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+        let bi: Vec<i32> = b.iter().map(|&x| x as i32).collect();
+        let golden = rt.exec_i32(name, &[ai, bi])?;
+        let sim = if mul {
+            ops::int_mul(&mut block, &a, &b, w)?.values
+        } else {
+            ops::int_addsub(&mut block, &a, &b, w, false)?.values
+        };
+        let sim32: Vec<i32> = sim.iter().map(|&x| x as i32).collect();
+        if sim32 != golden {
+            bail!("{name}: simulator diverges from golden artifact");
+        }
+        println!("  golden OK: {name:10} ({n} ops, bit-exact)");
+        checked += 1;
+    }
+    println!("golden cross-check passed ({checked} entries)");
+    Ok(())
+}
+
+fn cmd_nn(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let blocks: usize = flags.get("blocks").map(String::as_str).unwrap_or("8").parse()?;
+    let coord = Coordinator::new(Geometry::G512x40, blocks);
+    let mlp = nn::MlpInt8::synthetic(64, 32, 10, 2021)?;
+    let mut rng = comperam::util::Prng::new(7);
+    let x: Vec<Vec<i64>> = (0..16).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect();
+    let logits = mlp.forward(&coord, &x)?;
+    let host = mlp.forward_host(&x);
+    println!("int8 MLP on {blocks}-block farm: batch=16 d_in=64 d_hid=32 d_out=10");
+    for (i, row) in logits.iter().enumerate().take(4) {
+        println!("  sample {i}: argmax={} logits={row:?}", argmax(row));
+    }
+    println!("farm == host reference: {}", logits == host);
+    println!("metrics: {}", coord.metrics.snapshot());
+    Ok(())
+}
+
+fn argmax(v: &[i64]) -> usize {
+    v.iter().enumerate().max_by_key(|(_, &x)| x).map(|(i, _)| i).unwrap_or(0)
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args);
+    let blocks: usize = flags.get("blocks").map(String::as_str).unwrap_or("8").parse()?;
+    let wait_ms: u64 = flags.get("wait-ms").map(String::as_str).unwrap_or("2").parse()?;
+    let coord = Arc::new(Coordinator::new(Geometry::G512x40, blocks));
+    let server = PimServer::start(coord.clone(), std::time::Duration::from_millis(wait_ms))?;
+    println!(
+        "pim server listening on {} ({blocks} blocks, batch window {wait_ms} ms)",
+        server.addr
+    );
+    println!("wire format: {{\"id\":1,\"op\":\"add\",\"w\":8,\"a\":[..],\"b\":[..]}} per line");
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(5));
+        println!("metrics: {}", coord.metrics.snapshot());
+    }
+}

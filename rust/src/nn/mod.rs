@@ -1,0 +1,189 @@
+//! Quantized-NN layer stack on the Compute RAM farm (paper §VI future
+//! work: "evaluate the performance boost at the application level").
+//!
+//! Implements the exact int8 MLP the L2 JAX model (`python/compile/model.py`)
+//! AOT-compiles: `logits = requant(relu(x @ w1 + b1)) @ w2 + b2` with
+//! int32 accumulation and power-of-two requantization (`>> 7`, clamp to
+//! int8). The matmuls run on the Compute RAM farm through the coordinator;
+//! ReLU/requant/bias are host-side (the external-logic role). The
+//! `nn_accelerator` example cross-checks the logits against the
+//! `mlp_i8.hlo.txt` PJRT artifact, closing the loop between the simulator
+//! and the golden JAX model.
+
+use crate::coordinator::Coordinator;
+use anyhow::{ensure, Result};
+
+/// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
+pub const REQUANT_SHIFT: u32 = 7;
+
+/// An int8 linear layer (weights `[k][n]`, bias `[n]`, int32 accumulate).
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    pub w: Vec<Vec<i64>>,
+    pub b: Vec<i64>,
+}
+
+impl QuantLinear {
+    pub fn new(w: Vec<Vec<i64>>, b: Vec<i64>) -> Result<Self> {
+        ensure!(!w.is_empty(), "empty weight");
+        ensure!(w[0].len() == b.len(), "bias/width mismatch");
+        ensure!(
+            w.iter().flatten().all(|&v| (-128..=127).contains(&v)),
+            "weights out of int8 range"
+        );
+        Ok(Self { w, b })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.b.len()
+    }
+
+    /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
+    pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        ensure!(
+            x.iter().all(|r| r.len() == self.in_dim()),
+            "input width {} != layer in_dim {}",
+            x.first().map_or(0, Vec::len),
+            self.in_dim()
+        );
+        let mut y = coord.matmul(x, &self.w, 8)?;
+        for row in &mut y {
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v = (*v + bias) as i32 as i64;
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// ReLU then power-of-two requantization to int8 (the L2 model's `_requant`).
+pub fn relu_requant(x: &mut [Vec<i64>], shift: u32) {
+    for row in x {
+        for v in row.iter_mut() {
+            *v = ((*v).max(0) >> shift).clamp(-128, 127);
+        }
+    }
+}
+
+/// The two-layer int8 MLP of the golden artifact.
+#[derive(Clone, Debug)]
+pub struct MlpInt8 {
+    pub l1: QuantLinear,
+    pub l2: QuantLinear,
+}
+
+impl MlpInt8 {
+    pub fn new(l1: QuantLinear, l2: QuantLinear) -> Result<Self> {
+        ensure!(l1.out_dim() == l2.in_dim(), "layer dims mismatch");
+        Ok(Self { l1, l2 })
+    }
+
+    /// Forward pass on the Compute RAM farm -> int32 logits.
+    pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        let mut h = self.l1.forward(coord, x)?;
+        relu_requant(&mut h, REQUANT_SHIFT);
+        self.l2.forward(coord, &h)
+    }
+
+    /// Pure-host reference (same arithmetic; no farm) for differential
+    /// testing against the simulator path.
+    pub fn forward_host(&self, x: &[Vec<i64>]) -> Vec<Vec<i64>> {
+        let matmul = |x: &[Vec<i64>], w: &[Vec<i64>], b: &[i64]| -> Vec<Vec<i64>> {
+            x.iter()
+                .map(|row| {
+                    (0..b.len())
+                        .map(|j| {
+                            let acc: i64 =
+                                row.iter().zip(w).map(|(&xi, wr)| xi * wr[j]).sum();
+                            (acc + b[j]) as i32 as i64
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut h = matmul(x, &self.l1.w, &self.l1.b);
+        relu_requant(&mut h, REQUANT_SHIFT);
+        matmul(&h, &self.l2.w, &self.l2.b)
+    }
+
+    /// Deterministic synthetic weights matching the manifest dims, for
+    /// examples/tests (seeded; same on every run).
+    pub fn synthetic(d_in: usize, d_hid: usize, d_out: usize, seed: u64) -> Result<Self> {
+        let mut rng = crate::util::Prng::new(seed);
+        let mk = |rng: &mut crate::util::Prng, k: usize, n: usize| -> Vec<Vec<i64>> {
+            (0..k).map(|_| (0..n).map(|_| rng.int(4)).collect()).collect()
+        };
+        let w1 = mk(&mut rng, d_in, d_hid);
+        let b1: Vec<i64> = (0..d_hid).map(|_| rng.int(6)).collect();
+        let w2 = mk(&mut rng, d_hid, d_out);
+        let b2: Vec<i64> = (0..d_out).map(|_| rng.int(6)).collect();
+        Self::new(QuantLinear::new(w1, b1)?, QuantLinear::new(w2, b2)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::util::Prng;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(Geometry::G512x40, 4)
+    }
+
+    #[test]
+    fn linear_layer_matches_host() {
+        let c = coord();
+        let mut rng = Prng::new(50);
+        let layer = QuantLinear::new(
+            (0..16).map(|_| (0..8).map(|_| rng.int(8)).collect()).collect(),
+            (0..8).map(|_| rng.int(8)).collect(),
+        )
+        .unwrap();
+        let x: Vec<Vec<i64>> = (0..4).map(|_| (0..16).map(|_| rng.int(8)).collect()).collect();
+        let got = layer.forward(&c, &x).unwrap();
+        for i in 0..4 {
+            for j in 0..8 {
+                let expect: i64 =
+                    (0..16).map(|k| x[i][k] * layer.w[k][j]).sum::<i64>() + layer.b[j];
+                assert_eq!(got[i][j], expect, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_requant_semantics() {
+        let mut x = vec![vec![-500, 0, 127, 128, 100_000]];
+        relu_requant(&mut x, 7);
+        assert_eq!(x[0], vec![0, 0, 0, 1, 127]);
+    }
+
+    #[test]
+    fn mlp_farm_matches_host_reference() {
+        // the key differential test: simulator matmuls == host arithmetic
+        let c = coord();
+        let mlp = MlpInt8::synthetic(64, 32, 10, 99).unwrap();
+        let mut rng = Prng::new(51);
+        let x: Vec<Vec<i64>> =
+            (0..16).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect();
+        let farm = mlp.forward(&c, &x).unwrap();
+        let host = mlp.forward_host(&x);
+        assert_eq!(farm, host);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let l1 = QuantLinear::new(vec![vec![0; 4]; 8], vec![0; 4]).unwrap();
+        let l2 = QuantLinear::new(vec![vec![0; 2]; 5], vec![0; 2]).unwrap();
+        assert!(MlpInt8::new(l1, l2).is_err());
+    }
+
+    #[test]
+    fn weight_range_enforced() {
+        assert!(QuantLinear::new(vec![vec![200i64]], vec![0]).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! Report generators: every table and figure of the paper's evaluation.
+//!
+//! Each generator returns structured rows plus a formatted text table, so
+//! the CLI (`repro experiment ...`), the criterion-style benches and the
+//! integration tests all consume the same code path.
+//!
+//! | paper artifact | generator | regenerates |
+//! |----------------|-----------|-------------|
+//! | Table II       | [`table2`]  | block area / frequency / GOPS comparison |
+//! | Fig. 4         | [`fig4`]    | addition: area, energy, time, fmax |
+//! | Fig. 5         | [`fig5`]    | multiplication: same metrics |
+//! | Fig. 6         | [`fig6`]    | int4 dot product, 40 vs 72 columns |
+//! | §V headline    | [`headline`]| average energy saving + time deltas |
+
+use crate::baseline::designs::{baseline_design, cram_design, BaselineKind, DesignPoint};
+use crate::bitline::Geometry;
+use crate::cost::{self, CycleModel, Op, Precision};
+use crate::cram::{ops, CramBlock};
+use crate::fabric::blocks::BlockKind;
+use crate::fabric::{energy, implement, timing, FpgaArch};
+use crate::ucode::{DotLayout, VecLayout};
+use crate::util::Prng;
+use anyhow::Result;
+
+/// One side (baseline or Compute RAM) of an experiment point.
+#[derive(Clone, Debug)]
+pub struct Side {
+    pub name: String,
+    pub area_um2: f64,
+    pub fmax_mhz: f64,
+    pub cycles: u64,
+    pub time_us: f64,
+    pub energy_nj: f64,
+}
+
+/// One experiment point: a precision/op pair compared across fabrics.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub label: String,
+    pub baseline: Side,
+    pub cram: Side,
+}
+
+impl Point {
+    pub fn energy_ratio(&self) -> f64 {
+        self.cram.energy_nj / self.baseline.energy_nj
+    }
+
+    pub fn time_ratio(&self) -> f64 {
+        self.cram.time_us / self.baseline.time_us
+    }
+
+    pub fn area_ratio(&self) -> f64 {
+        self.cram.area_um2 / self.baseline.area_um2
+    }
+
+    pub fn freq_uplift(&self) -> f64 {
+        self.cram.fmax_mhz / self.baseline.fmax_mhz
+    }
+}
+
+/// Implement one design on its architecture and roll up time + energy.
+fn evaluate(arch: &FpgaArch, d: &DesignPoint, seed: u64) -> Result<Side> {
+    let ir = implement(arch, &d.netlist, seed)?;
+    // float-mode designs are clocked by the DSP float limit
+    let fmax = if d.uses_float_dsp {
+        let pl = crate::fabric::place::place(arch, &d.netlist, seed)?;
+        let rd = crate::fabric::route::route(arch, &d.netlist, &pl)?;
+        timing::fmax_mhz_float(arch, &d.netlist, &rd)
+    } else {
+        ir.fmax_mhz
+    };
+    let time_us = cost::time_us(d.cycles, fmax);
+
+    // energy: per-cycle event model (see fabric::energy docs)
+    let is_cram = d.netlist.count(BlockKind::Cram) > 0;
+    let per_cycle_fj = if is_cram {
+        energy::cram_compute_cycle_fj()
+    } else {
+        // one BRAM access + every compute unit switching each cycle
+        let bram = energy::block_access_fj(crate::fabric::blocks::AREA_BRAM);
+        let dsp = d.netlist.count(BlockKind::Dsp) as f64
+            * energy::block_access_fj(crate::fabric::blocks::AREA_DSP);
+        let lb = d.netlist.count(BlockKind::Lb) as f64
+            * energy::block_access_fj(crate::fabric::blocks::AREA_LB);
+        bram + dsp + lb
+    };
+    let wire_fj = d.interconnect_bits as f64 * ir.avg_net_mm * energy::fpga_wire_fj_per_bit_mm();
+    let energy_nj = (per_cycle_fj * d.cycles as f64 + wire_fj) / 1e6;
+    Ok(Side {
+        name: d.netlist.name.clone(),
+        area_um2: ir.total_area_um2(),
+        fmax_mhz: fmax,
+        cycles: d.cycles,
+        time_us,
+        energy_nj,
+    })
+}
+
+/// Compute RAM cycle count for an experiment kind under a cycle model.
+pub fn cram_cycles(kind: BaselineKind, model: CycleModel) -> u64 {
+    let geom = Geometry::G512x40;
+    match model {
+        CycleModel::Paper => match kind {
+            BaselineKind::IntAdd { w } => {
+                let l = VecLayout::new(geom, w, w);
+                l.ops_per_col as u64 * cost::paper_op_cycles(Op::Add, Precision::Int(w))
+            }
+            BaselineKind::IntMul { w } => {
+                let l = VecLayout::new(geom, w, 2 * w);
+                l.ops_per_col as u64 * cost::paper_op_cycles(Op::Mul, Precision::Int(w))
+            }
+            BaselineKind::Bf16Add => 10 * cost::paper_op_cycles(Op::Add, Precision::Bf16),
+            BaselineKind::Bf16Mul => 10 * cost::paper_op_cycles(Op::Mul, Precision::Bf16),
+            BaselineKind::DotI4 { k } => {
+                cost::paper_op_cycles(Op::Dot { k }, Precision::Int(4))
+            }
+        },
+        CycleModel::Measured => measured_cycles(kind).expect("simulator run failed"),
+    }
+}
+
+/// Run the actual microcode on the bit-exact simulator and report its
+/// array-cycle count (full-block workload, random operands).
+pub fn measured_cycles(kind: BaselineKind) -> Result<u64> {
+    let geom = Geometry::G512x40;
+    let mut rng = Prng::new(0xE0);
+    let mut block = CramBlock::new(geom);
+    let stats = match kind {
+        BaselineKind::IntAdd { w } => {
+            let l = VecLayout::new(geom, w, w);
+            let n = l.total_ops();
+            let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+            let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+            ops::int_addsub(&mut block, &a, &b, w, false)?.stats
+        }
+        BaselineKind::IntMul { w } => {
+            let l = VecLayout::new(geom, w, 2 * w);
+            let n = l.total_ops();
+            let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+            let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+            ops::int_mul(&mut block, &a, &b, w)?.stats
+        }
+        BaselineKind::Bf16Add | BaselineKind::Bf16Mul => {
+            let n = 400;
+            let a: Vec<_> = (0..n)
+                .map(|_| crate::util::SoftBf16::from_bits(rng.bf16_bits(118, 132)))
+                .collect();
+            let b: Vec<_> = (0..n)
+                .map(|_| crate::util::SoftBf16::from_bits(rng.bf16_bits(118, 132)))
+                .collect();
+            ops::bf16_op(&mut block, &a, &b, matches!(kind, BaselineKind::Bf16Mul))?.stats
+        }
+        BaselineKind::DotI4 { k } => {
+            let cols = geom.cols();
+            let a: Vec<Vec<i64>> =
+                (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+            let b: Vec<Vec<i64>> =
+                (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+            ops::int_dot(&mut block, &a, &b, 4, 32)?.stats
+        }
+    };
+    Ok(stats.array_cycles)
+}
+
+/// Build one comparison point.
+pub fn point(kind: BaselineKind, label: &str, model: CycleModel) -> Result<Point> {
+    let base_arch = FpgaArch::agilex_like();
+    let prop_arch = FpgaArch::with_compute_rams();
+    let base = baseline_design(kind);
+    let cram = cram_design(kind, cram_cycles(kind, model));
+    Ok(Point {
+        label: label.to_string(),
+        baseline: evaluate(&base_arch, &base, 1)?,
+        cram: evaluate(&prop_arch, &cram, 1)?,
+    })
+}
+
+fn table_header(title: &str) -> String {
+    format!(
+        "\n=== {title} ===\n{:<14} {:>12} {:>12} {:>10} {:>12} {:>12} | {:>8} {:>8} {:>8}\n",
+        "point", "side", "area um^2", "fmax MHz", "cycles", "energy nJ", "E ratio", "t ratio", "f uplift"
+    )
+}
+
+fn format_points(title: &str, points: &[Point]) -> String {
+    let mut s = table_header(title);
+    for p in points {
+        for (tag, side) in [("baseline", &p.baseline), ("cram", &p.cram)] {
+            s.push_str(&format!(
+                "{:<14} {:>12} {:>12.1} {:>10.1} {:>12} {:>12.3} |",
+                p.label, tag, side.area_um2, side.fmax_mhz, side.cycles, side.energy_nj
+            ));
+            if tag == "cram" {
+                s.push_str(&format!(
+                    " {:>8.3} {:>8.3} {:>8.2}",
+                    p.energy_ratio(),
+                    p.time_ratio(),
+                    p.freq_uplift()
+                ));
+            }
+            s.push('\n');
+        }
+    }
+    s
+}
+
+/// **Table II**: block-level comparison (area, frequency, GOPS).
+pub fn table2() -> String {
+    use crate::fabric::blocks::*;
+    let mut s = String::from(
+        "\n=== Table II: Compute RAM vs DSP vs BRAM vs LB ===\n\
+         metric               ComputeRAM       DSP        BRAM         LB\n",
+    );
+    s.push_str(&format!(
+        "area (um^2)          {:>10.1} {:>10.1} {:>10.1} {:>10.1}\n",
+        AREA_CRAM, AREA_DSP, AREA_BRAM, AREA_LB
+    ));
+    s.push_str(&format!(
+        "freq (MHz)           {:>10.1} {:>10} {:>10.1} {:>10}\n",
+        FREQ_CRAM_COMPUTE,
+        format!("{FREQ_DSP_FIXED}/{FREQ_DSP_FLOAT}"),
+        FREQ_BRAM,
+        "varies"
+    ));
+    for prec in [Precision::Int(4), Precision::Int(8), Precision::Bf16] {
+        s.push_str(&format!(
+            "GOPS {:<12}    {:>10.2} {:>10.2} {:>10.1} {:>10.2}\n",
+            prec.label(),
+            cost::cram_gops(Op::Add, prec, 40),
+            cost::dsp_gops(prec),
+            0.0,
+            cost::lb_gops(prec),
+        ));
+    }
+    s
+}
+
+/// **Fig. 4**: addition (int4/int8/bfloat16).
+pub fn fig4(model: CycleModel) -> Result<(Vec<Point>, String)> {
+    let points = vec![
+        point(BaselineKind::IntAdd { w: 4 }, "add-int4", model)?,
+        point(BaselineKind::IntAdd { w: 8 }, "add-int8", model)?,
+        point(BaselineKind::Bf16Add, "add-bf16", model)?,
+    ];
+    let s = format_points(&format!("Fig 4: addition ({model:?} cycles)"), &points);
+    Ok((points, s))
+}
+
+/// **Fig. 5**: multiplication (int4/int8/bfloat16).
+pub fn fig5(model: CycleModel) -> Result<(Vec<Point>, String)> {
+    let points = vec![
+        point(BaselineKind::IntMul { w: 4 }, "mul-int4", model)?,
+        point(BaselineKind::IntMul { w: 8 }, "mul-int8", model)?,
+        point(BaselineKind::Bf16Mul, "mul-bf16", model)?,
+    ];
+    let s = format_points(&format!("Fig 5: multiplication ({model:?} cycles)"), &points);
+    Ok((points, s))
+}
+
+/// **Fig. 6**: int4 dot product; left half 512x40, right half the
+/// 72-column wide variant (per-dot-product time comparison).
+pub fn fig6(model: CycleModel) -> Result<(Vec<Point>, String)> {
+    let p40 = point(BaselineKind::DotI4 { k: 60 }, "dot-i4 40col", model)?;
+    // wide variant: same K per column, 72 columns -> 72 dots per block run.
+    // Baseline processes the same 72-dot workload with its 5-mult engine.
+    let mut p72 = p40.clone();
+    p72.label = "dot-i4 72col".into();
+    let base72 = {
+        let mut d = baseline_design(BaselineKind::DotI4 { k: 60 });
+        // scale the workload from 40 to 72 dot products
+        let macs = 60 * 72;
+        d.cycles = (macs / 5) as u64 + ((72 * 32) as u64).div_ceil(40) + 7;
+        d.total_ops = macs;
+        d.interconnect_bits = macs as u64 * 8 + 72 * 32;
+        d
+    };
+    let cram72 = {
+        // 285x72 geometry: cycles (same serial schedule, more columns in
+        // flight); Fig-6's analytic evaluation keeps cycle count equal
+        let cycles = match model {
+            CycleModel::Paper => cost::PAPER_DOT_I4_K60_CYCLES,
+            CycleModel::Measured => {
+                // measured on the wide geometry with K limited by rows
+                let geom = Geometry::G285x72;
+                let k = DotLayout::max_k(geom, 4, 32).k.min(60);
+                let mut rng = Prng::new(0xE1);
+                let mut block = CramBlock::new(geom);
+                let a: Vec<Vec<i64>> =
+                    (0..k).map(|_| (0..72).map(|_| rng.int(4)).collect()).collect();
+                let b: Vec<Vec<i64>> =
+                    (0..k).map(|_| (0..72).map(|_| rng.int(4)).collect()).collect();
+                let st = ops::int_dot(&mut block, &a, &b, 4, 32)?.stats;
+                // normalize to K=60 to match the left half's workload
+                st.array_cycles * 60 / k as u64
+            }
+        };
+        cram_design(BaselineKind::DotI4 { k: 60 }, cycles)
+    };
+    let base_arch = FpgaArch::agilex_like();
+    let prop_arch = FpgaArch::with_compute_rams();
+    p72.baseline = evaluate(&base_arch, &base72, 1)?;
+    p72.cram = evaluate(&prop_arch, &cram72, 1)?;
+    let points = vec![p40, p72];
+    let s = format_points(&format!("Fig 6: int4 dot product ({model:?} cycles)"), &points);
+    Ok((points, s))
+}
+
+/// §V headline: average energy saving and the time-delta range across all
+/// experiment points.
+pub fn headline(model: CycleModel) -> Result<String> {
+    let mut all = Vec::new();
+    all.extend(fig4(model)?.0);
+    all.extend(fig5(model)?.0);
+    all.extend(fig6(model)?.0);
+    let avg_saving: f64 =
+        all.iter().map(|p| 1.0 - p.energy_ratio()).sum::<f64>() / all.len() as f64;
+    let mut time_deltas: Vec<(String, f64)> =
+        all.iter().map(|p| (p.label.clone(), 1.0 - p.time_ratio())).collect();
+    time_deltas.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let mut s = format!(
+        "\n=== Headline ({model:?} cycles) ===\naverage energy saving: {:.1}% (paper: ~80%)\n",
+        avg_saving * 100.0
+    );
+    s.push_str("time improvement by experiment (positive = Compute RAM faster):\n");
+    for (label, d) in &time_deltas {
+        s.push_str(&format!("  {:<16} {:>+7.1}%\n", label, d * 100.0));
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_contains_paper_numbers() {
+        let t = table2();
+        assert!(t.contains("11072.5"));
+        assert!(t.contains("609.1"));
+        assert!(t.contains("922.9"));
+    }
+
+    #[test]
+    fn fig4_shapes_match_paper() {
+        let (points, _) = fig4(CycleModel::Paper).unwrap();
+        for p in &points {
+            // energy: Compute RAM well below baseline (paper: ~20% remaining)
+            assert!(p.energy_ratio() < 0.5, "{}: energy ratio {}", p.label, p.energy_ratio());
+            // area: reduced vs baseline
+            assert!(p.area_ratio() < 1.0, "{}: area ratio {}", p.label, p.area_ratio());
+            // frequency: 40-90% higher
+            assert!(
+                (1.3..2.2).contains(&p.freq_uplift()),
+                "{}: uplift {}",
+                p.label,
+                p.freq_uplift()
+            );
+            // time: Compute RAM faster for addition
+            assert!(p.time_ratio() < 1.0, "{}: time ratio {}", p.label, p.time_ratio());
+        }
+    }
+
+    #[test]
+    fn fig5_shapes_match_paper() {
+        let (points, _) = fig5(CycleModel::Paper).unwrap();
+        for p in &points {
+            assert!(p.energy_ratio() < 0.5, "{}: energy {}", p.label, p.energy_ratio());
+        }
+        // multiplication: modest time win (paper: ~12% shorter). int4 and
+        // bf16 reproduce it; int8 is the one point where the Neural-Cache
+        // cycle model (86 cycles/op) cannot be reconciled with the paper's
+        // claim — the Compute RAM loses on time there. See EXPERIMENTS.md.
+        assert!(points[0].time_ratio() < 1.0, "int4 time {}", points[0].time_ratio());
+        assert!(points[2].time_ratio() < 1.0, "bf16 time {}", points[2].time_ratio());
+        assert!(points[1].time_ratio() < 1.6, "int8 time {}", points[1].time_ratio());
+    }
+
+    #[test]
+    fn fig6_crossover_matches_paper() {
+        let (points, _) = fig6(CycleModel::Paper).unwrap();
+        let p40 = &points[0];
+        let p72 = &points[1];
+        // 40 columns: Compute RAM takes MORE time (1470 vs ~519 cycles)
+        assert!(p40.time_ratio() > 1.0, "40col time ratio {}", p40.time_ratio());
+        // 72 columns: Compute RAM pulls ahead (paper: ~20% better)
+        assert!(p72.time_ratio() < 1.0, "72col time ratio {}", p72.time_ratio());
+        // minor impact on energy (both strongly favor Compute RAM)
+        assert!(p40.energy_ratio() < 0.5 && p72.energy_ratio() < 0.5);
+    }
+
+    #[test]
+    fn headline_energy_saving_near_80pct() {
+        let s = headline(CycleModel::Paper).unwrap();
+        // extract the number loosely: assert the banner exists and the
+        // average saving printed is large
+        assert!(s.contains("average energy saving"));
+        let (points4, _) = fig4(CycleModel::Paper).unwrap();
+        let (points5, _) = fig5(CycleModel::Paper).unwrap();
+        let all: Vec<&Point> = points4.iter().chain(points5.iter()).collect();
+        let avg: f64 =
+            all.iter().map(|p| 1.0 - p.energy_ratio()).sum::<f64>() / all.len() as f64;
+        assert!(avg > 0.6, "avg saving {avg}");
+    }
+}

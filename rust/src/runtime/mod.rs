@@ -1,0 +1,193 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs Python **once** at build time, lowering every L2
+//! entry point (bit-serial Pallas kernels wrapped in pack/unpack graphs,
+//! bf16 golden ops, the int8 MLP) to **HLO text** under `artifacts/` plus a
+//! `manifest.json`. This module wraps the `xla` crate's PJRT CPU client to
+//! compile and execute those artifacts from the rust side — Python is never
+//! on the run path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax >= 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `python/compile/aot.py` and
+//! `/opt/xla-example/README.md`).
+//!
+//! Executables are compiled lazily on first use and cached; all entry
+//! points take and return `i32` tensors (`return_tuple=True` 1-tuples).
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest entry: artifact path + expected argument shapes.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub path: PathBuf,
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// The artifact runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    entries: HashMap<String, EntryInfo>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Experiment constants recorded by the AOT pipeline (geometry, dot K,
+    /// MLP dims, requant shift).
+    pub constants: Json,
+}
+
+impl Runtime {
+    /// Load `manifest.json` from an artifacts directory and connect the
+    /// PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        if manifest.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+            bail!("unsupported manifest format (want hlo-text-v1)");
+        }
+        let mut entries = HashMap::new();
+        let emap = manifest
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        for (name, e) in emap {
+            let rel = e
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing path"))?;
+            let arg_shapes = e
+                .get("args")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry {name} missing args"))?
+                .iter()
+                .map(|a| {
+                    a.as_arr()
+                        .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("entry {name}: bad arg shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            entries.insert(
+                name.clone(),
+                EntryInfo { path: dir.join(rel), arg_shapes },
+            );
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let constants = manifest.get("constants").cloned().unwrap_or(Json::Null);
+        Ok(Runtime { client, entries, compiled: HashMap::new(), constants })
+    }
+
+    /// Entry names available.
+    pub fn entry_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Expected argument shapes of an entry.
+    pub fn arg_shapes(&self, name: &str) -> Result<&[Vec<usize>]> {
+        Ok(&self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact entry `{name}`"))?
+            .arg_shapes)
+    }
+
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let info = self
+                .entries
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact entry `{name}`"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                info.path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {:?}: {e:?}", info.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an entry with i32 argument tensors (row-major flattened);
+    /// returns the flattened i32 output of the 1-tuple result.
+    pub fn exec_i32(&mut self, name: &str, args: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let shapes = self.arg_shapes(name)?.to_vec();
+        if shapes.len() != args.len() {
+            bail!("entry {name} expects {} args, got {}", shapes.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, shape) in args.iter().zip(&shapes) {
+            let expect: usize = shape.iter().product();
+            if arg.len() != expect {
+                bail!("entry {name}: arg has {} elements, shape {shape:?} wants {expect}", arg.len());
+            }
+            let lit = xla::Literal::vec1(arg.as_slice());
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // lowered with return_tuple=True -> unwrap the 1-tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Manifest constant lookup helper, e.g. `constant(&["mlp", "d_in"])`.
+    pub fn constant(&self, path: &[&str]) -> Option<i64> {
+        let mut cur = &self.constants;
+        for key in path {
+            cur = cur.get(key)?;
+        }
+        cur.as_i64()
+    }
+}
+
+/// Default artifacts directory: `$COMPERAM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("COMPERAM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need real artifacts live in
+    // rust/tests/integration_golden.rs; here we test the manifest plumbing
+    // against a synthetic manifest without touching PJRT.
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = match Runtime::load("/nonexistent/path") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        // do not set env here (tests run concurrently); just check default
+        if std::env::var_os("COMPERAM_ARTIFACTS").is_none() {
+            assert_eq!(default_artifacts_dir(), PathBuf::from("artifacts"));
+        }
+    }
+}

@@ -1,0 +1,560 @@
+//! bfloat16 microcode schedules (paper §III-A.4, §V-B/D).
+//!
+//! ## Modeling split (documented in DESIGN.md §Fidelity)
+//!
+//! The integer microcode in [`super::int`] is **bit-exact in-array**: results
+//! materialize in the SRAM rows purely through sense/latch/write-back steps.
+//! For bfloat16 this repo uses a **timing-directed functional split**, the
+//! standard simulator technique (cf. gem5): the programs below are real
+//! instruction sequences — they fit the 256-entry instruction memory, use
+//! the documented scratch rows, hardware loops and the predication mux, and
+//! the controller executes them cycle by cycle, so *instruction counts and
+//! cycle counts are measured, not assumed*. The float **values** are
+//! produced by [`crate::util::SoftBf16`] (bit-identical to XLA's bf16 RNE
+//! semantics, cross-checked against the AOT JAX artifacts), because a fully
+//! bit-exact in-array float path does not change any number the paper
+//! reports — the paper evaluates instruction counts, cycles, area and
+//! energy, never float ULPs.
+//!
+//! ## Schedule structure (add)
+//!
+//! Per tuple, the classic float-add pipeline, all data-dependent behaviour
+//! expressed through tag predication (the 4:1 mux of §III-A.4):
+//!
+//! 1. exponent difference (8 FSS + carry writeback);
+//! 2. operand swap so A carries the larger exponent (predicated copies);
+//! 3. recompute the now-positive difference;
+//! 4. hidden-bit recovery (OR-reduce exponents);
+//! 5. binary alignment shifts by 8/4/2/1 with sticky collection, plus the
+//!    "difference >= 16" big-shift case;
+//! 6. two-phase add/subtract of 17-bit extended significands (tag = sign
+//!    XOR, then TNOT for the complementary phase) + conditional negate;
+//! 7. binary normalization (leading-zero shifts by 8/4/2/1 + the carry-out
+//!    right shift), exponent adjust;
+//! 8. pack: truncate to mantissa, clamp exponent overflow/underflow.
+//!
+//! The scratch workspace (extended significands, difference, sticky, flags)
+//! lives in the rows left over by the 10x48-row tuple layout (global rows
+//! 480.. on the 512x40 geometry) plus the current tuple's result rows — the
+//! paper's own note that temporary rows "can be reused across all
+//! computations in a column" §III-C.
+
+use super::{emit_set_reg, Program, VecLayout};
+use crate::bitline::Geometry;
+use crate::isa::{Instr, LogicOp, Pred};
+
+/// Extended significand window: hidden + 7 mantissa + 9 guard/sticky bits.
+const EXT_W: u32 = 17;
+
+/// Emit `count` predicated row-copies walking two pointer registers.
+fn emit_copy_loop(p: &mut Vec<Instr>, ra: u8, rd: u8, count: u32, pred: Pred) {
+    if count == 0 {
+        return;
+    }
+    p.push(Instr::Loopi { count: count as u8 });
+    p.push(Instr::CopyRow { ra, rd, pred, inc: true });
+    p.push(Instr::EndL);
+}
+
+/// Emit an OR-reduction of `count` rows (walking `ra`) into the row at `rd`.
+fn emit_or_reduce(p: &mut Vec<Instr>, ra: u8, rd: u8, count: u32) {
+    if count == 0 {
+        return;
+    }
+    p.push(Instr::Loopi { count: count as u8 });
+    p.push(Instr::Logic { op: LogicOp::Or, ra, rb: rd, rd, pred: Pred::Always, inc: false });
+    p.push(Instr::Addi { rd: ra, imm: 1 });
+    p.push(Instr::EndL);
+}
+
+/// Emit `count` full-adder/subtractor steps walking `ra`/`rb` (sum in place
+/// at `rb`), predicated.
+fn emit_addsub_steps(p: &mut Vec<Instr>, sub: bool, ra: u8, rb: u8, count: u32, pred: Pred) {
+    p.push(if sub { Instr::Sec } else { Instr::Clc });
+    p.push(Instr::Loopi { count: count as u8 });
+    if sub {
+        p.push(Instr::Fss { ra, rb, rd: rb, pred, inc: true });
+    } else {
+        p.push(Instr::Fas { ra, rb, rd: rb, pred, inc: true });
+    }
+    p.push(Instr::EndL);
+}
+
+/// Register plan shared by the schedules:
+/// r1 = tuple base, r2/r3 = walking source/dest, r4/r5 = walking operands,
+/// r6 = fixed row (sign/sticky), r7 = scratch base.
+struct Regs;
+#[allow(dead_code)]
+impl Regs {
+    const TUP: u8 = 1;
+    const SRC: u8 = 2;
+    const DST: u8 = 3;
+    const WA: u8 = 4;
+    const WB: u8 = 5;
+    const FIX: u8 = 6;
+    const SCR: u8 = 7;
+}
+
+/// Scratch rows reserved at the top of the array (the paper §III-C: float
+/// operations "utilize some rows to store temporary results").
+const SCRATCH_ROWS: usize = 32;
+
+/// Clamp the tuple count so the scratch workspace never collides with
+/// operand tuples, and return `(ops_per_col, scratch_base)`.
+fn plan(geom: Geometry, l: &mut VecLayout) -> usize {
+    let scratch = geom.rows() - SCRATCH_ROWS;
+    l.ops_per_col = l.ops_per_col.min(scratch / l.tuple_bits);
+    scratch
+}
+
+/// Set up the per-tuple pointers: r2 -> exponent A, r3 -> exponent B.
+fn emit_tuple_prologue(p: &mut Vec<Instr>) {
+    // exponent fields sit at bit 7 of each 16-bit operand
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 7 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 16 + 7 });
+}
+
+/// Phases 1-3: exponent difference, predicated swap, re-difference.
+fn emit_exponent_phase(p: &mut Vec<Instr>) {
+    emit_tuple_prologue(p);
+    // D = EA - EB into scratch rows [SCR..SCR+8), borrow -> tag
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+    p.push(Instr::Sec);
+    p.push(Instr::Loopi { count: 8 });
+    // scratch <- EA bit; then subtract EB bit in place
+    p.push(Instr::CopyRow { ra: Regs::SRC, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Fss { ra: Regs::DST, rb: Regs::WB, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 1 });
+    p.push(Instr::EndL);
+    // tag <- borrow (EA < EB): carry==1 means no borrow
+    p.push(Instr::Tcar);
+    p.push(Instr::Tnot);
+    // swap the two 16-row operands through the result rows (scratch),
+    // predicated on the tag: rows A <-> B
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 32 });
+    emit_copy_loop(p, Regs::SRC, Regs::DST, 16, Pred::Tag); // A -> R
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    emit_copy_loop(p, Regs::SRC, Regs::DST, 16, Pred::Tag); // B -> A
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 32 });
+    emit_copy_loop(p, Regs::SRC, Regs::DST, 16, Pred::Tag); // R -> B
+    // recompute D = EA - EB (now >= 0)
+    emit_tuple_prologue(p);
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+    p.push(Instr::Sec);
+    p.push(Instr::Loopi { count: 8 });
+    p.push(Instr::CopyRow { ra: Regs::SRC, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Fss { ra: Regs::DST, rb: Regs::WB, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 1 });
+    p.push(Instr::EndL);
+}
+
+/// Phase 4: hidden-bit recovery for both operands (OR-reduce exponent
+/// fields into flag rows at scratch+8, scratch+9).
+fn emit_hidden_bits(p: &mut Vec<Instr>) {
+    for (off, flag) in [(7i8, 8i8), (16 + 7, 9)] {
+        p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+        p.push(Instr::Addi { rd: Regs::WA, imm: off });
+        p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::DST, imm: flag });
+        p.push(Instr::Zero { rd: Regs::DST, pred: Pred::Always, inc: false });
+        emit_or_reduce(p, Regs::WA, Regs::DST, 8);
+    }
+}
+
+/// Phase 5: binary alignment of B's extended significand with sticky
+/// collection (shifts by 8/4/2/1, plus the >=16 big-shift flush).
+fn emit_align(p: &mut Vec<Instr>) {
+    // big-shift flag: OR of D[4..8) -> tag; flush B_ext + collect sticky
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 4 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 10 }); // big flag row
+    p.push(Instr::Zero { rd: Regs::DST, pred: Pred::Always, inc: false });
+    emit_or_reduce(p, Regs::WA, Regs::DST, 4);
+    p.push(Instr::Tld { ra: Regs::DST, inc: false });
+    // sticky row = scratch+11; flush: sticky |= OR(B_ext), B_ext = 0 (?t)
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 12 }); // B_ext at scratch+12..+29
+    p.push(Instr::Movr { rd: Regs::FIX, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::FIX, imm: 11 });
+    p.push(Instr::Loopi { count: EXT_W as u8 });
+    p.push(Instr::Logic {
+        op: LogicOp::Or,
+        ra: Regs::WA,
+        rb: Regs::FIX,
+        rd: Regs::FIX,
+        pred: Pred::Tag,
+        inc: false,
+    });
+    p.push(Instr::Zero { rd: Regs::WA, pred: Pred::Tag, inc: false });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 1 });
+    p.push(Instr::EndL);
+    // shifts by 8, 4, 2, 1 predicated on D's bits 3..0
+    for (bit, s) in [(3i8, 8u32), (2, 4), (1, 2), (0, 1)] {
+        p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::WA, imm: bit });
+        p.push(Instr::Tld { ra: Regs::WA, inc: false });
+        // sticky |= OR of the s low bits about to fall off
+        p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::WA, imm: 12 });
+        p.push(Instr::Loopi { count: s as u8 });
+        p.push(Instr::Logic {
+            op: LogicOp::Or,
+            ra: Regs::WA,
+            rb: Regs::FIX,
+            rd: Regs::FIX,
+            pred: Pred::Tag,
+            inc: false,
+        });
+        p.push(Instr::Addi { rd: Regs::WA, imm: 1 });
+        p.push(Instr::EndL);
+        // shift: B_ext[i] = B_ext[i+s] for i in 0..EXT_W-s, then zero top s
+        p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::SRC, imm: 12 + s as i8 });
+        p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::DST, imm: 12 });
+        emit_copy_loop(p, Regs::SRC, Regs::DST, EXT_W - s, Pred::Tag);
+        p.push(Instr::Loopi { count: s as u8 });
+        p.push(Instr::Zero { rd: Regs::DST, pred: Pred::Tag, inc: true });
+        p.push(Instr::EndL);
+    }
+    // sticky into B_ext LSB (exactness of truncation under subtraction)
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 12 });
+    p.push(Instr::Logic {
+        op: LogicOp::Or,
+        ra: Regs::FIX,
+        rb: Regs::WA,
+        rd: Regs::WA,
+        pred: Pred::Always,
+        inc: false,
+    });
+}
+
+/// Phases 6-8 for add: effective add/sub, conditional negate, normalize, pack.
+fn emit_combine_normalize(p: &mut Vec<Instr>) {
+    // tag <- signA XOR signB (rows tup+15 and tup+31 -> scratch+30)
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 15 });
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 31 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 30 });
+    p.push(Instr::Logic {
+        op: LogicOp::Xor,
+        ra: Regs::WA,
+        rb: Regs::WB,
+        rd: Regs::DST,
+        pred: Pred::Always,
+        inc: false,
+    });
+    p.push(Instr::Tld { ra: Regs::DST, inc: false });
+    // subtract phase (tag = different signs): A_ext -= B_ext
+    // A_ext lives in the tuple's result rows 32..48 minus one -> use rows
+    // r..r+16 as A_ext (16) with the 17th in scratch+31.
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 12 });
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 32 });
+    emit_addsub_steps(p, true, Regs::WA, Regs::WB, EXT_W - 1, Pred::Tag);
+    // conditional negate if borrow: tag &= NOT carry — approximated as
+    // carry-predicated pass then TNOT combination
+    p.push(Instr::Tcar);
+    p.push(Instr::Tnot);
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 32 });
+    p.push(Instr::Sec);
+    p.push(Instr::Loopi { count: (EXT_W - 1) as u8 });
+    p.push(Instr::NotRow { ra: Regs::WB, rd: Regs::WB, pred: Pred::Tag, inc: false });
+    p.push(Instr::Fas { ra: Regs::WB, rb: Regs::WB, rd: Regs::WB, pred: Pred::Tag, inc: true });
+    p.push(Instr::EndL);
+    // add phase (tag flipped: same signs): A_ext += B_ext
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 30 });
+    p.push(Instr::Tldn { ra: Regs::DST, inc: false });
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 12 });
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 32 });
+    emit_addsub_steps(p, false, Regs::WA, Regs::WB, EXT_W - 1, Pred::Tag);
+    // carry-out right shift: predicated on Carry
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 33 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 32 });
+    p.push(Instr::Loopi { count: (EXT_W - 2) as u8 });
+    p.push(Instr::CopyRow { ra: Regs::SRC, rd: Regs::DST, pred: Pred::Carry, inc: true });
+    p.push(Instr::EndL);
+    // exponent increment (8 FAS with the carry flag as +1)
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 7 });
+    p.push(Instr::Loopi { count: 8 });
+    p.push(Instr::Fas { ra: Regs::WA, rb: Regs::WA, rd: Regs::WA, pred: Pred::Carry, inc: true });
+    p.push(Instr::EndL);
+    // linear normalization: up to 9 iterations of "if the top significand
+    // row is zero, shift left by one and decrement the exponent" — a
+    // hardware loop keeps the static footprint small (the binary-shift
+    // variant is faster dynamically but blows the 256-entry imem budget
+    // together with the alignment phase; see EXPERIMENTS.md §bf16).
+    p.push(Instr::Movr { rd: Regs::FIX, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::FIX, imm: 29 }); // constant-zero row
+    p.push(Instr::Zero { rd: Regs::FIX, pred: Pred::Always, inc: false });
+    p.push(Instr::Loopi { count: 9 });
+    // tag <- NOT top row of A_ext
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WA, imm: (32 + EXT_W - 2) as i8 });
+    p.push(Instr::Tldn { ra: Regs::WA, inc: false });
+    // shift left by one (tag-predicated row copies)
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 32 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 33 });
+    emit_copy_loop(p, Regs::SRC, Regs::DST, EXT_W - 2, Pred::Tag);
+    // exponent -= 1 (borrow chain against the zero row, SEC withheld)
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 7 });
+    p.push(Instr::Clc);
+    p.push(Instr::Loopi { count: 8 });
+    p.push(Instr::Fss { ra: Regs::FIX, rb: Regs::WB, rd: Regs::WB, pred: Pred::Tag, inc: false });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 1 });
+    p.push(Instr::EndL);
+    p.push(Instr::EndL);
+    // pack: copy the normalized mantissa window into the result rows
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 41 }); // top of A_ext window
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 32 });
+    emit_copy_loop(p, Regs::SRC, Regs::DST, 7, Pred::Always);
+}
+
+/// bfloat16 addition schedule for a fully-packed block.
+pub fn add(geom: Geometry) -> (Program, VecLayout) {
+    let mut l = VecLayout::new(geom, 16, 16);
+    let scratch = plan(geom, &mut l);
+    let mut p = Vec::new();
+    emit_set_reg(&mut p, Regs::SCR as u8, scratch);
+    emit_set_reg(&mut p, Regs::TUP as u8, 0);
+    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
+    emit_exponent_phase(&mut p);
+    emit_hidden_bits(&mut p);
+    emit_align(&mut p);
+    emit_combine_normalize(&mut p);
+    p.push(Instr::Addi { rd: Regs::TUP, imm: l.tuple_bits as i8 });
+    p.push(Instr::EndL);
+    p.push(Instr::Halt);
+    (
+        Program {
+            name: "add_bf16".into(),
+            instrs: p,
+            ops_per_col: l.ops_per_col,
+            scratch_rows: 32,
+        },
+        l,
+    )
+}
+
+/// bfloat16 multiplication schedule: exponent add + 8x8 bit-serial mantissa
+/// multiply + normalize + pack.
+pub fn mul(geom: Geometry) -> (Program, VecLayout) {
+    let mut l = VecLayout::new(geom, 16, 16);
+    let scratch = plan(geom, &mut l);
+    let mut p = Vec::new();
+    emit_set_reg(&mut p, Regs::SCR as u8, scratch);
+    emit_set_reg(&mut p, Regs::TUP as u8, 0);
+    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
+    emit_hidden_bits(&mut p);
+    // exponent sum: EA + EB - bias, 9-bit chain into scratch
+    emit_tuple_prologue(&mut p);
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+    p.push(Instr::Clc);
+    p.push(Instr::Loopi { count: 8 });
+    p.push(Instr::CopyRow { ra: Regs::SRC, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Fas { ra: Regs::DST, rb: Regs::WB, rd: Regs::WB, pred: Pred::Always, inc: false });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 1 });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 1 });
+    p.push(Instr::EndL);
+    p.push(Instr::Wrc { rd: Regs::WB, pred: Pred::Always, inc: false });
+    // subtract bias 127: one borrow chain over 9 rows
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 10 });
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+    emit_addsub_steps(&mut p, true, Regs::WA, Regs::WB, 9, Pred::Always);
+    // 8x8 -> 16 mantissa multiply: product rows at scratch+12..+28,
+    // multiplicand = A's significand rows, multiplier bits = B's.
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 12 });
+    p.push(Instr::Loopi { count: 16 });
+    p.push(Instr::Zero { rd: Regs::WB, pred: Pred::Always, inc: true });
+    p.push(Instr::EndL);
+    for i in 0..8u32 {
+        // tag <- multiplier bit i (B mantissa rows at tup+16+i; bit 7 = hidden)
+        p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+        p.push(Instr::Addi { rd: Regs::WA, imm: (16 + i) as i8 });
+        p.push(Instr::Tld { ra: Regs::WA, inc: false });
+        p.push(Instr::Clc);
+        p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP }); // A significand
+        p.push(Instr::Movr { rd: Regs::WB, rs: Regs::SCR });
+        p.push(Instr::Addi { rd: Regs::WB, imm: (12 + i) as i8 });
+        p.push(Instr::Loopi { count: 8 });
+        p.push(Instr::Fas { ra: Regs::WA, rb: Regs::WB, rd: Regs::WB, pred: Pred::Tag, inc: true });
+        p.push(Instr::EndL);
+        // carry ripple into remaining product rows
+        p.push(Instr::Loopi { count: (8 - i).max(1) as u8 });
+        p.push(Instr::Wrc { rd: Regs::WB, pred: Pred::Tag, inc: true });
+        p.push(Instr::EndL);
+    }
+    // normalize (product in [1, 4)): conditional 1-bit right shift + exp++
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 27 });
+    p.push(Instr::Tld { ra: Regs::WA, inc: false });
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 13 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 12 });
+    emit_copy_loop(&mut p, Regs::SRC, Regs::DST, 15, Pred::Tag);
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::SCR });
+    p.push(Instr::Loopi { count: 9 });
+    p.push(Instr::Fas { ra: Regs::WA, rb: Regs::WA, rd: Regs::WA, pred: Pred::Tag, inc: true });
+    p.push(Instr::EndL);
+    // pack mantissa + exponent + sign into result rows
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::SCR });
+    p.push(Instr::Addi { rd: Regs::SRC, imm: 20 });
+    p.push(Instr::Movr { rd: Regs::DST, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::DST, imm: 32 });
+    emit_copy_loop(&mut p, Regs::SRC, Regs::DST, 7, Pred::Always);
+    p.push(Instr::Movr { rd: Regs::SRC, rs: Regs::SCR });
+    emit_copy_loop(&mut p, Regs::SRC, Regs::DST, 8, Pred::Always);
+    // sign = signA XOR signB
+    p.push(Instr::Movr { rd: Regs::WA, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WA, imm: 15 });
+    p.push(Instr::Movr { rd: Regs::WB, rs: Regs::TUP });
+    p.push(Instr::Addi { rd: Regs::WB, imm: 31 });
+    p.push(Instr::Logic {
+        op: LogicOp::Xor,
+        ra: Regs::WA,
+        rb: Regs::WB,
+        rd: Regs::DST,
+        pred: Pred::Always,
+        inc: false,
+    });
+    p.push(Instr::Addi { rd: Regs::TUP, imm: l.tuple_bits as i8 });
+    p.push(Instr::EndL);
+    p.push(Instr::Halt);
+    (
+        Program {
+            name: "mul_bf16".into(),
+            instrs: p,
+            ops_per_col: l.ops_per_col,
+            scratch_rows: 32,
+        },
+        l,
+    )
+}
+
+/// bfloat16 MAC schedule (`r = r + a*b`): multiply phase then add phase.
+///
+/// The combined sequence exceeds the 256-entry instruction memory, which is
+/// exactly the situation §III-A.2 anticipates: "when the instruction
+/// sequences are longer than the capacity of this memory", the external
+/// logic reloads the instruction memory at execution time over the shared
+/// address/data bus. The MAC is therefore returned as **two phases**; run
+/// them back-to-back with [`crate::cram::CramBlock::run_chained`], which
+/// models the dynamic reload.
+pub fn mac(geom: Geometry) -> (Vec<Program>, VecLayout) {
+    let (m, l) = mul(geom);
+    let (a, _) = add(geom);
+    (vec![m, a], l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::{BitlineArray, ColumnPeriph};
+    use crate::ctrl::{Controller, InstrMem};
+
+    fn run(prog: &Program) -> crate::ctrl::CycleStats {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let mut periph = ColumnPeriph::new(40);
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog.instrs).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 50_000_000).unwrap()
+    }
+
+    #[test]
+    fn add_schedule_fits_imem() {
+        let (p, _) = add(Geometry::G512x40);
+        assert!(p.len() <= 256, "len {}", p.len());
+    }
+
+    #[test]
+    fn mul_schedule_fits_imem_and_200() {
+        // the paper: "none of the operations was more than 200 instructions"
+        let (p, _) = mul(Geometry::G512x40);
+        assert!(p.len() <= 256, "len {}", p.len());
+        assert!(p.len() <= 200, "len {}", p.len());
+    }
+
+    #[test]
+    fn mac_phases_each_fit_imem() {
+        let (phases, _) = mac(Geometry::G512x40);
+        assert_eq!(phases.len(), 2);
+        for ph in &phases {
+            assert!(ph.len() <= 256, "{} len {}", ph.name, ph.len());
+        }
+    }
+
+    #[test]
+    fn add_schedule_executes_to_halt() {
+        let (p, l) = add(Geometry::G512x40);
+        let stats = run(&p);
+        assert!(stats.array_cycles > 0);
+        // per-tuple cost should be well above the int path (float is
+        // expensive bit-serially) but bounded
+        let per_tuple = stats.array_cycles as usize / l.ops_per_col;
+        assert!(per_tuple > 100 && per_tuple < 2000, "per-tuple {per_tuple}");
+    }
+
+    #[test]
+    fn mul_schedule_executes_to_halt() {
+        let (p, l) = mul(Geometry::G512x40);
+        let stats = run(&p);
+        let per_tuple = stats.array_cycles as usize / l.ops_per_col;
+        assert!(per_tuple > 50 && per_tuple < 2000, "per-tuple {per_tuple}");
+    }
+
+    #[test]
+    fn mac_cycles_are_sum_of_phases() {
+        let (pa, _) = add(Geometry::G512x40);
+        let (pm, _) = mul(Geometry::G512x40);
+        let (phases, _) = mac(Geometry::G512x40);
+        let total: u64 = phases.iter().map(|p| run(p).array_cycles).sum();
+        assert_eq!(total, run(&pm).array_cycles + run(&pa).array_cycles);
+    }
+
+    #[test]
+    fn schedules_stay_in_bounds_on_all_geometries() {
+        // all row addresses must stay within the array on every standard
+        // geometry (the run faults otherwise)
+        for geom in [Geometry::G512x40, Geometry::G1024x20, Geometry::G2048x10] {
+            let (p, _) = add(geom);
+            let mut arr = BitlineArray::new(geom);
+            let mut periph = ColumnPeriph::new(geom.cols());
+            let mut imem = InstrMem::new();
+            imem.load_config(&p.instrs).unwrap();
+            let mut ctrl = Controller::new();
+            ctrl.run(&imem, &mut arr, &mut periph, 50_000_000)
+                .unwrap_or_else(|e| panic!("{geom:?}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,463 @@
+//! Integer bit-serial microcode generators (paper §III, Fig. 2; bit-serial
+//! arithmetic of Neural Cache [9]).
+//!
+//! All programs operate on the tuple-major layouts of [`super::layout`] and
+//! use the register conventions:
+//!
+//! | reg | use                                  |
+//! |-----|--------------------------------------|
+//! | r1  | current tuple/pair base row (A LSB)  |
+//! | r2  | multiplier-bit / operand-B pointer   |
+//! | r3  | result pointer (add/sub)             |
+//! | r4  | addend (A) walking pointer           |
+//! | r5  | accumulator walking pointer          |
+//! | r6  | sign-row pointer (fixed per tuple)   |
+//! | r7  | accumulator base (dot)               |
+//!
+//! Array-cycle counts (the number behind the paper's GOPS):
+//!
+//! * `add`/`sub`: `W + 1` per tuple (`CLC`/`SEC` + W adder steps) — matches
+//!   the paper exactly (Table II: int4 4.8 GOPS = 40 cols / 5 cycles).
+//! * `mul`: `1.5 W^2 + 4.5 W` per tuple (zeroing + W tag-predicated
+//!   partial products with sign extension). The paper's analytic model uses
+//!   Neural Cache's `W^2 + 3W - 2`; see `cost.rs` for both and
+//!   `EXPERIMENTS.md` for the comparison.
+//! * `dot`: per-MAC cost with the accumulator window optimization
+//!   (carries propagate only through the live `2W + log2(K) + 1` rows).
+
+use super::{emit_set_reg, DotLayout, Program, VecLayout};
+use crate::bitline::Geometry;
+use crate::isa::{Instr, Pred};
+
+/// `ceil(log2(n))` for n >= 1.
+fn ceil_log2(n: usize) -> u32 {
+    (usize::BITS - (n - 1).leading_zeros()).max(1)
+}
+
+/// Elementwise `r = a + b` (wrap at W bits), full-block program.
+pub fn add(geom: Geometry, w: u32) -> (Program, VecLayout) {
+    add_sub(geom, w, false)
+}
+
+/// Elementwise `r = a - b` (wrap at W bits), full-block program.
+pub fn sub(geom: Geometry, w: u32) -> (Program, VecLayout) {
+    add_sub(geom, w, true)
+}
+
+fn add_sub(geom: Geometry, w: u32, subtract: bool) -> (Program, VecLayout) {
+    let l = VecLayout::new(geom, w, w);
+    let mut p = Vec::new();
+    emit_set_reg(&mut p, 1, l.a_row(0));
+    emit_set_reg(&mut p, 2, l.b_row(0));
+    emit_set_reg(&mut p, 3, l.r_row(0));
+    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
+    if subtract {
+        // a - b == a + NOT b + 1: SEC preloads the +1
+        p.push(Instr::Sec);
+        p.push(Instr::Loopi { count: w as u8 });
+        // FSS computes [rd] = [rb] - [ra]; we want a - b -> ra = b ptr (r2)
+        p.push(Instr::Fss { ra: 2, rb: 1, rd: 3, pred: Pred::Always, inc: true });
+        p.push(Instr::EndL);
+    } else {
+        p.push(Instr::Clc);
+        p.push(Instr::Loopi { count: w as u8 });
+        p.push(Instr::Fas { ra: 1, rb: 2, rd: 3, pred: Pred::Always, inc: true });
+        p.push(Instr::EndL);
+    }
+    // pointers advanced by w inside the loop; skip the other 2w tuple rows
+    let skip = (2 * w) as i8;
+    p.push(Instr::Addi { rd: 1, imm: skip });
+    p.push(Instr::Addi { rd: 2, imm: skip });
+    p.push(Instr::Addi { rd: 3, imm: skip });
+    p.push(Instr::EndL);
+    p.push(Instr::Halt);
+    (
+        Program {
+            name: format!("{}_i{w}", if subtract { "sub" } else { "add" }),
+            instrs: p,
+            ops_per_col: l.ops_per_col,
+            scratch_rows: 0,
+        },
+        l,
+    )
+}
+
+/// Elementwise signed `r = a * b` (W x W -> 2W bits), full-block program.
+///
+/// Shift-and-add: for each multiplier bit `i`, the tag latch is loaded from
+/// `b[i]` and a sign-extended copy of `a << i` is added into the product
+/// rows, predicated on the tag. The final partial product (sign bit of `b`)
+/// is subtracted, which is exactly two's-complement signed multiplication.
+pub fn mul(geom: Geometry, w: u32) -> (Program, VecLayout) {
+    let l = VecLayout::new(geom, w, 2 * w);
+    let tuple = l.tuple_bits as i8;
+    let mut p = Vec::new();
+    emit_set_reg(&mut p, 1, 0);
+    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
+
+    // b pointer: r2 = r1 + w
+    p.push(Instr::Movr { rd: 2, rs: 1 });
+    p.push(Instr::Addi { rd: 2, imm: w as i8 });
+    // sign row: r6 = r1 + w - 1
+    p.push(Instr::Movr { rd: 6, rs: 1 });
+    p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
+    // zero the product rows: r5 = r1 + 2w
+    p.push(Instr::Movr { rd: 5, rs: 1 });
+    p.push(Instr::Addi { rd: 5, imm: (2 * w) as i8 });
+    p.push(Instr::Loopi { count: (2 * w) as u8 });
+    p.push(Instr::Zero { rd: 5, pred: Pred::Always, inc: true });
+    p.push(Instr::EndL);
+
+    for i in 0..w {
+        let last = i == w - 1;
+        // tag <- b[i] (r2 walks the multiplier bits)
+        p.push(Instr::Tld { ra: 2, inc: true });
+        // carry preset: CLC for add steps, SEC for the final subtract
+        p.push(if last { Instr::Sec } else { Instr::Clc });
+        // a walking pointer r4 = r1; product pointer r5 = r1 + 2w + i
+        p.push(Instr::Movr { rd: 4, rs: 1 });
+        p.push(Instr::Movr { rd: 5, rs: 1 });
+        p.push(Instr::Addi { rd: 5, imm: (2 * w + i) as i8 });
+        // main W adder/subtractor steps over a's bits, tag-predicated
+        p.push(Instr::Loopi { count: w as u8 });
+        if last {
+            p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+        } else {
+            p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+        }
+        p.push(Instr::EndL);
+        // sign extension: add/sub the (fixed) sign row into the remaining
+        // W - i upper product rows, continuing the carry/borrow chain.
+        // `inc` would bump r6 too, so step r5 with an explicit ADDI instead.
+        p.push(Instr::Loopi { count: (w - i) as u8 });
+        if last {
+            p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+        } else {
+            p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+        }
+        p.push(Instr::Addi { rd: 5, imm: 1 });
+        p.push(Instr::EndL);
+    }
+    // next tuple
+    p.push(Instr::Addi { rd: 1, imm: tuple });
+    p.push(Instr::EndL);
+    p.push(Instr::Halt);
+    (
+        Program {
+            name: format!("mul_i{w}"),
+            instrs: p,
+            ops_per_col: l.ops_per_col,
+            scratch_rows: 0,
+        },
+        l,
+    )
+}
+
+/// Per-column dot product of K signed W-bit pairs into an `acc_w`-bit
+/// accumulator (Fig. 2 of the paper; one dot product per column).
+///
+/// The accumulator window optimization keeps the live accumulator at
+/// `ACT = 2W + ceil(log2 K) + 1` rows during the MAC loop (carries cannot
+/// reach higher), then sign-extends to the full `acc_w` rows once at the
+/// end. This is what keeps the cycle count within sight of the paper's
+/// 1470-cycle figure for K=60 int4 (see EXPERIMENTS.md for measured vs
+/// calibrated).
+pub fn dot(geom: Geometry, w: u32, acc_w: u32, k: usize) -> (Program, DotLayout) {
+    let l = DotLayout::with_k(geom, w, acc_w, k);
+    let act = (2 * w + ceil_log2(k.max(2)) + 1).min(acc_w);
+    let mut p = Vec::new();
+    // r7 = accumulator base (can exceed 255 -> MoviH)
+    emit_set_reg(&mut p, 7, l.acc_row);
+    // zero the live accumulator rows
+    p.push(Instr::Movr { rd: 5, rs: 7 });
+    p.push(Instr::Loopi { count: act as u8 });
+    p.push(Instr::Zero { rd: 5, pred: Pred::Always, inc: true });
+    p.push(Instr::EndL);
+    // r1 = pair base
+    emit_set_reg(&mut p, 1, 0);
+    p.push(Instr::Loopi { count: k as u8 });
+    // r2 = b bits, r6 = a sign row
+    p.push(Instr::Movr { rd: 2, rs: 1 });
+    p.push(Instr::Addi { rd: 2, imm: w as i8 });
+    p.push(Instr::Movr { rd: 6, rs: 1 });
+    p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
+    for i in 0..w {
+        let last = i == w - 1;
+        p.push(Instr::Tld { ra: 2, inc: true });
+        p.push(if last { Instr::Sec } else { Instr::Clc });
+        p.push(Instr::Movr { rd: 4, rs: 1 });
+        p.push(Instr::Movr { rd: 5, rs: 7 });
+        if i > 0 {
+            p.push(Instr::Addi { rd: 5, imm: i as i8 });
+        }
+        p.push(Instr::Loopi { count: w as u8 });
+        if last {
+            p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+        } else {
+            p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+        }
+        p.push(Instr::EndL);
+        // propagate through the remaining live accumulator rows
+        let ext = act - w - i;
+        p.push(Instr::Loopi { count: ext as u8 });
+        if last {
+            p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+        } else {
+            p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+        }
+        p.push(Instr::Addi { rd: 5, imm: 1 });
+        p.push(Instr::EndL);
+    }
+    p.push(Instr::Addi { rd: 1, imm: (2 * w) as i8 });
+    p.push(Instr::EndL);
+    // sign-extend the accumulator from ACT rows to acc_w rows:
+    // tag <- sign row, then write tag into each upper row.
+    if act < acc_w {
+        p.push(Instr::Movr { rd: 6, rs: 7 });
+        p.push(Instr::Addi { rd: 6, imm: (act - 1) as i8 });
+        p.push(Instr::Tld { ra: 6, inc: false });
+        p.push(Instr::Movr { rd: 5, rs: 7 });
+        p.push(Instr::Addi { rd: 5, imm: act as i8 });
+        p.push(Instr::Loopi { count: (acc_w - act) as u8 });
+        p.push(Instr::Wrt { rd: 5, pred: Pred::Always, inc: true });
+        p.push(Instr::EndL);
+    }
+    p.push(Instr::Halt);
+    (
+        Program {
+            name: format!("dot_i{w}_k{k}"),
+            instrs: p,
+            ops_per_col: 1,
+            scratch_rows: 0,
+        },
+        l,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::{transpose, BitlineArray, ColumnPeriph};
+    use crate::ctrl::{Controller, InstrMem};
+    use crate::util::{sext, Prng};
+
+    fn run_program(prog: &Program, arr: &mut BitlineArray) -> crate::ctrl::CycleStats {
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog.instrs).unwrap();
+        let mut periph = ColumnPeriph::new(arr.cols());
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, arr, &mut periph, 10_000_000).unwrap()
+    }
+
+    fn wrap(v: i64, w: u32) -> i64 {
+        sext(crate::util::mask(v, w) as i64, w)
+    }
+
+    #[test]
+    fn add_i4_full_block_exact() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = add(geom, 4);
+        let mut rng = Prng::new(1);
+        let n = l.total_ops();
+        let a: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_ints(&mut arr, &a, 4, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, 4, l.w as usize, l.tuple_bits);
+        run_program(&prog, &mut arr);
+        let r = transpose::load_ints(&arr, n, 4, 2 * l.w as usize, l.tuple_bits);
+        for i in 0..n {
+            assert_eq!(r[i], wrap(a[i] + b[i], 4), "op {i}: {} + {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn add_array_cycles_match_paper_model() {
+        // W+1 array cycles per tuple: CLC + W FAS
+        let (prog, l) = add(Geometry::G512x40, 4);
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let stats = run_program(&prog, &mut arr);
+        assert_eq!(stats.array_cycles as usize, l.ops_per_col * 5);
+        let (prog8, l8) = add(Geometry::G512x40, 8);
+        let mut arr8 = BitlineArray::new(Geometry::G512x40);
+        let stats8 = run_program(&prog8, &mut arr8);
+        assert_eq!(stats8.array_cycles as usize, l8.ops_per_col * 9);
+    }
+
+    #[test]
+    fn sub_i8_full_block_exact() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = sub(geom, 8);
+        let mut rng = Prng::new(2);
+        let n = l.total_ops();
+        let a: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_ints(&mut arr, &a, 8, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, 8, 8, l.tuple_bits);
+        run_program(&prog, &mut arr);
+        let r = transpose::load_ints(&arr, n, 8, 16, l.tuple_bits);
+        for i in 0..n {
+            assert_eq!(r[i], wrap(a[i] - b[i], 8), "op {i}: {} - {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn mul_i4_full_block_exact() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = mul(geom, 4);
+        assert!(prog.len() <= 256, "program must fit imem");
+        let mut rng = Prng::new(3);
+        let n = l.total_ops();
+        let a: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_ints(&mut arr, &a, 4, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, 4, 4, l.tuple_bits);
+        run_program(&prog, &mut arr);
+        let r = transpose::load_ints(&arr, n, 8, 8, l.tuple_bits);
+        for i in 0..n {
+            assert_eq!(r[i], a[i] * b[i], "op {i}: {} * {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn mul_i8_exhaustive_corners_and_random() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = mul(geom, 8);
+        assert!(prog.len() <= 256);
+        let mut vals: Vec<(i64, i64)> = vec![
+            (0, 0),
+            (127, 127),
+            (-128, -128),
+            (-128, 127),
+            (127, -128),
+            (-1, -1),
+            (-1, 1),
+            (1, -128),
+        ];
+        let mut rng = Prng::new(4);
+        while vals.len() < l.total_ops() {
+            vals.push((rng.int(8), rng.int(8)));
+        }
+        let a: Vec<i64> = vals.iter().map(|v| v.0).collect();
+        let b: Vec<i64> = vals.iter().map(|v| v.1).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_ints(&mut arr, &a, 8, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, 8, 8, l.tuple_bits);
+        run_program(&prog, &mut arr);
+        let r = transpose::load_ints(&arr, a.len(), 16, 16, l.tuple_bits);
+        for i in 0..a.len() {
+            assert_eq!(r[i], a[i] * b[i], "op {i}: {} * {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn dot_i4_k60_matches_reference() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = dot(geom, 4, 32, 60);
+        assert!(prog.len() <= 256, "program len {}", prog.len());
+        let mut rng = Prng::new(5);
+        let cols = l.cols;
+        let a: Vec<Vec<i64>> =
+            (0..60).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..60).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_dot_operand(&mut arr, &a, 4, 0, l.pair_bits);
+        transpose::store_dot_operand(&mut arr, &b, 4, l.w as usize, l.pair_bits);
+        let stats = run_program(&prog, &mut arr);
+        let acc = transpose::load_ints(&arr, cols, 32, l.acc_row, 0);
+        for c in 0..cols {
+            let expect: i64 = (0..60).map(|k| a[k][c] * b[k][c]).sum();
+            assert_eq!(acc[c], expect, "column {c}");
+        }
+        // record the measured cycle count's order of magnitude (paper: 1470)
+        assert!(stats.array_cycles > 1000 && stats.array_cycles < 6000,
+            "dot_i4 array cycles = {}", stats.array_cycles);
+    }
+
+    #[test]
+    fn dot_i8_k30_matches_reference() {
+        let geom = Geometry::G512x40;
+        let (prog, l) = dot(geom, 8, 32, 30);
+        assert!(prog.len() <= 256, "program len {}", prog.len());
+        let mut rng = Prng::new(6);
+        let cols = l.cols;
+        let a: Vec<Vec<i64>> =
+            (0..30).map(|_| (0..cols).map(|_| rng.int(8)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..30).map(|_| (0..cols).map(|_| rng.int(8)).collect()).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_dot_operand(&mut arr, &a, 8, 0, l.pair_bits);
+        transpose::store_dot_operand(&mut arr, &b, 8, 8, l.pair_bits);
+        run_program(&prog, &mut arr);
+        let acc = transpose::load_ints(&arr, cols, 32, l.acc_row, 0);
+        for c in 0..cols {
+            let expect: i64 = (0..30).map(|k| a[k][c] * b[k][c]).sum();
+            assert_eq!(acc[c], expect, "column {c}");
+        }
+    }
+
+    #[test]
+    fn dot_wide_geometry_72_cols() {
+        let geom = Geometry::G285x72;
+        // 284 rows: 31 pairs * 8 + 32 = 280 rows
+        let (prog, l) = dot(geom, 4, 32, 31);
+        let mut rng = Prng::new(7);
+        let a: Vec<Vec<i64>> =
+            (0..31).map(|_| (0..72).map(|_| rng.int(4)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..31).map(|_| (0..72).map(|_| rng.int(4)).collect()).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_dot_operand(&mut arr, &a, 4, 0, l.pair_bits);
+        transpose::store_dot_operand(&mut arr, &b, 4, 4, l.pair_bits);
+        run_program(&prog, &mut arr);
+        let acc = transpose::load_ints(&arr, 72, 32, l.acc_row, 0);
+        for c in 0..72 {
+            let expect: i64 = (0..31).map(|k| a[k][c] * b[k][c]).sum();
+            assert_eq!(acc[c], expect, "column {c}");
+        }
+    }
+
+    #[test]
+    fn all_programs_fit_instruction_memory() {
+        for w in [2u32, 4, 8, 12, 16] {
+            assert!(add(Geometry::G512x40, w).0.len() <= 256);
+            assert!(sub(Geometry::G512x40, w).0.len() <= 256);
+        }
+        for w in [2u32, 4, 8] {
+            assert!(mul(Geometry::G512x40, w).0.len() <= 256, "mul w={w}");
+        }
+        assert!(dot(Geometry::G512x40, 4, 32, 60).0.len() <= 256);
+        assert!(dot(Geometry::G512x40, 8, 32, 30).0.len() <= 256);
+    }
+
+    #[test]
+    fn programs_under_200_instructions_like_paper() {
+        // "we found that none of the operations was more than 200 instructions"
+        assert!(add(Geometry::G512x40, 8).0.len() <= 200);
+        assert!(mul(Geometry::G512x40, 8).0.len() <= 200);
+        assert!(dot(Geometry::G512x40, 8, 32, 30).0.len() <= 200);
+    }
+
+    #[test]
+    fn arbitrary_precision_int6() {
+        // "The user can perform math in any precision" — int6, not a
+        // standard DSP precision, works out of the box.
+        let geom = Geometry::G512x40;
+        let (prog, l) = mul(geom, 6);
+        let mut rng = Prng::new(8);
+        let n = 40; // one slot per column is enough here
+        let a: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
+        let mut arr = BitlineArray::new(geom);
+        transpose::store_ints(&mut arr, &a, 6, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, 6, 6, l.tuple_bits);
+        run_program(&prog, &mut arr);
+        let r = transpose::load_ints(&arr, n, 12, 12, l.tuple_bits);
+        for i in 0..n {
+            assert_eq!(r[i], a[i] * b[i], "op {i}");
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Row-layout contracts shared between microcode generators and the hosts
+//! that stage data (paper §IV-C sizing).
+//!
+//! All layouts are **tuple-major**: one operation's operands + result occupy
+//! `tuple_bits` consecutive rows of one column; tuple slot `t` starts at row
+//! `t * tuple_bits`. Elementwise vectors place element `e` in column
+//! `e % cols`, slot `e / cols` — exactly how the paper fills a 512x40 block
+//! so that "20 Kilobits is required for storing all the operands and the
+//! results".
+
+use crate::bitline::Geometry;
+
+/// Layout of an elementwise vector operation (add/sub/mul, int or bf16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VecLayout {
+    /// Operand width in bits.
+    pub w: u32,
+    /// Result width in bits (e.g. `2w` for multiplication).
+    pub result_w: u32,
+    /// Rows per tuple: `2w + result_w`.
+    pub tuple_bits: usize,
+    /// Tuple slots that fit per column.
+    pub ops_per_col: usize,
+    /// Columns in the geometry.
+    pub cols: usize,
+}
+
+impl VecLayout {
+    /// Pack as many (a, b, result) tuples as fit the geometry's rows.
+    pub fn new(geom: Geometry, w: u32, result_w: u32) -> Self {
+        let tuple_bits = (2 * w + result_w) as usize;
+        let ops_per_col = geom.rows() / tuple_bits;
+        Self { w, result_w, tuple_bits, ops_per_col, cols: geom.cols() }
+    }
+
+    /// Total elementwise operations in a fully-packed block.
+    pub fn total_ops(&self) -> usize {
+        self.ops_per_col * self.cols
+    }
+
+    /// Row of operand A's LSB within tuple slot `t`.
+    pub fn a_row(&self, t: usize) -> usize {
+        t * self.tuple_bits
+    }
+
+    /// Row of operand B's LSB within tuple slot `t`.
+    pub fn b_row(&self, t: usize) -> usize {
+        t * self.tuple_bits + self.w as usize
+    }
+
+    /// Row of the result's LSB within tuple slot `t`.
+    pub fn r_row(&self, t: usize) -> usize {
+        t * self.tuple_bits + 2 * self.w as usize
+    }
+}
+
+/// Layout of a per-column dot product (Fig. 2): K (a, b) pairs stacked
+/// tuple-major, then one wide accumulator at the top of the column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DotLayout {
+    /// Element width in bits.
+    pub w: u32,
+    /// Accumulator width in bits (32 in the paper: "accumulation is
+    /// performed using 32-bits (typical for DL)").
+    pub acc_w: u32,
+    /// Dot-product length (pairs per column).
+    pub k: usize,
+    /// Rows per (a, b) pair: `2w`.
+    pub pair_bits: usize,
+    /// Row of the accumulator's LSB.
+    pub acc_row: usize,
+    /// Columns (= number of independent dot products).
+    pub cols: usize,
+}
+
+impl DotLayout {
+    /// Maximum-K layout for a geometry: fill rows with pairs, reserving
+    /// `acc_w` rows for the accumulator (paper: 60 int4 pairs + 32-bit
+    /// accumulator fills 512 rows: 60*8 + 32 = 512).
+    pub fn max_k(geom: Geometry, w: u32, acc_w: u32) -> Self {
+        let pair_bits = (2 * w) as usize;
+        let k = (geom.rows() - acc_w as usize) / pair_bits;
+        Self::with_k(geom, w, acc_w, k)
+    }
+
+    /// Fixed-K layout (K pairs from row 0, accumulator right after).
+    pub fn with_k(geom: Geometry, w: u32, acc_w: u32, k: usize) -> Self {
+        let pair_bits = (2 * w) as usize;
+        assert!(
+            k * pair_bits + acc_w as usize <= geom.rows(),
+            "dot layout overflows geometry"
+        );
+        Self {
+            w,
+            acc_w,
+            k,
+            pair_bits,
+            acc_row: k * pair_bits,
+            cols: geom.cols(),
+        }
+    }
+
+    /// Row of pair `k`'s A-element LSB.
+    pub fn a_row(&self, k: usize) -> usize {
+        k * self.pair_bits
+    }
+
+    /// Row of pair `k`'s B-element LSB.
+    pub fn b_row(&self, k: usize) -> usize {
+        k * self.pair_bits + self.w as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizing_int4_add() {
+        // int4 add: 12 bits/tuple -> 42 tuples/col * 40 cols = 1680 ops
+        let l = VecLayout::new(Geometry::G512x40, 4, 4);
+        assert_eq!(l.tuple_bits, 12);
+        assert_eq!(l.ops_per_col, 42);
+        assert_eq!(l.total_ops(), 1680);
+    }
+
+    #[test]
+    fn paper_sizing_int8_add() {
+        let l = VecLayout::new(Geometry::G512x40, 8, 8);
+        assert_eq!(l.ops_per_col, 21);
+        assert_eq!(l.total_ops(), 840);
+    }
+
+    #[test]
+    fn paper_sizing_int4_mul() {
+        // 4+4+8 = 16 bits/tuple -> 32/col -> 1280 ops
+        let l = VecLayout::new(Geometry::G512x40, 4, 8);
+        assert_eq!(l.tuple_bits, 16);
+        assert_eq!(l.total_ops(), 1280);
+    }
+
+    #[test]
+    fn paper_sizing_int8_mul() {
+        let l = VecLayout::new(Geometry::G512x40, 8, 16);
+        assert_eq!(l.total_ops(), 640);
+    }
+
+    #[test]
+    fn paper_sizing_bf16() {
+        // 16+16+16 = 48 bits/tuple -> 10/col -> 400 ops
+        let l = VecLayout::new(Geometry::G512x40, 16, 16);
+        assert_eq!(l.tuple_bits, 48);
+        assert_eq!(l.ops_per_col, 10);
+        assert_eq!(l.total_ops(), 400);
+    }
+
+    #[test]
+    fn paper_sizing_int4_dot() {
+        // 60 pairs (480 rows) + 32-bit acc = 512 rows exactly
+        let l = DotLayout::max_k(Geometry::G512x40, 4, 32);
+        assert_eq!(l.k, 60);
+        assert_eq!(l.acc_row, 480);
+        assert_eq!(l.acc_row + 32, 512);
+    }
+
+    #[test]
+    fn paper_sizing_int8_dot() {
+        let l = DotLayout::max_k(Geometry::G512x40, 8, 32);
+        assert_eq!(l.k, 30);
+    }
+
+    #[test]
+    fn row_accessors_consistent() {
+        let l = VecLayout::new(Geometry::G512x40, 8, 8);
+        assert_eq!(l.a_row(2), 48);
+        assert_eq!(l.b_row(2), 56);
+        assert_eq!(l.r_row(2), 64);
+        let d = DotLayout::with_k(Geometry::G512x40, 4, 32, 10);
+        assert_eq!(d.a_row(3), 24);
+        assert_eq!(d.b_row(3), 28);
+        assert_eq!(d.acc_row, 80);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn overfull_dot_layout_panics() {
+        DotLayout::with_k(Geometry::G512x40, 4, 32, 61);
+    }
+}

@@ -1,0 +1,92 @@
+//! Microcode library for Compute RAM blocks (paper §III, Fig. 2).
+//!
+//! The paper's programming model is "writing instruction sequences"; this
+//! module is the promised **library of common operation sequences**. Every
+//! generator returns a [`Program`]: the instruction sequence plus the row
+//! layout it assumes, so callers (the coordinator, the examples, the tests)
+//! can stage operands and read back results without duplicating layout math.
+//!
+//! Generators:
+//!
+//! * [`int::add`] / [`int::sub`] — W-bit two's-complement, `W + 1` array
+//!   cycles per element column-slot (`CLC` + W full-adder steps), the count
+//!   behind the paper's Table II GOPS;
+//! * [`int::mul`] — signed W x W -> 2W shift-and-add with tag-predicated
+//!   partial products (the bit-serial multiply of Neural Cache [9]);
+//! * [`int::dot`] — K-element dot products, one per column, multiplying
+//!   pair-by-pair and accumulating into a wide accumulator (Fig. 2);
+//! * [`bf16::add`] / [`bf16::mul`] / [`bf16::mac`] — bfloat16 sequences
+//!   using predicated execution for alignment/normalization (§III-A.4's
+//!   predication mux exists for exactly this).
+
+pub mod bf16;
+pub mod int;
+pub mod layout;
+
+pub use layout::{DotLayout, VecLayout};
+
+use crate::isa::Instr;
+
+/// A generated microcode program with its layout contract.
+#[derive(Clone, Debug)]
+pub struct Program {
+    /// Human-readable name, e.g. `add_i4`.
+    pub name: String,
+    /// The instruction sequence (must fit the 256-entry instruction memory).
+    pub instrs: Vec<Instr>,
+    /// Number of tuple slots per column the program processes.
+    pub ops_per_col: usize,
+    /// Rows of scratch the program uses beyond the operand/result layout.
+    pub scratch_rows: usize,
+}
+
+impl Program {
+    /// Static instruction count (the paper: "none of the operations was more
+    /// than 200 instructions").
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Assembly listing (via the disassembler).
+    pub fn listing(&self) -> String {
+        crate::isa::asm::disassemble(&self.instrs)
+    }
+}
+
+/// Helper: emit a `Movi`/`MoviH` pair (or single `Movi`) to set a register
+/// to an arbitrary row address (addresses can exceed 255 on 1024/2048-row
+/// geometries).
+pub(crate) fn emit_set_reg(out: &mut Vec<Instr>, rd: u8, value: usize) {
+    assert!(value < (1 << 16));
+    out.push(Instr::Movi { rd, imm: (value & 0xFF) as u8 });
+    if value > 0xFF {
+        out.push(Instr::MoviH { rd, imm: (value >> 8) as u8 });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn set_reg_small_is_one_instr() {
+        let mut v = Vec::new();
+        emit_set_reg(&mut v, 3, 200);
+        assert_eq!(v, vec![Instr::Movi { rd: 3, imm: 200 }]);
+    }
+
+    #[test]
+    fn set_reg_large_uses_high_byte() {
+        let mut v = Vec::new();
+        emit_set_reg(&mut v, 3, 0x1FE);
+        assert_eq!(
+            v,
+            vec![Instr::Movi { rd: 3, imm: 0xFE }, Instr::MoviH { rd: 3, imm: 1 }]
+        );
+    }
+}

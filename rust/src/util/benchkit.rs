@@ -1,0 +1,107 @@
+//! Tiny benchmark harness (offline build: no criterion).
+//!
+//! Provides warmup + timed iterations with mean / stddev / min reporting in a
+//! stable text format shared by all `rust/benches/*.rs` targets. Each bench
+//! prints one `bench: <name> ...` line per measurement plus the paper-table
+//! rows it regenerates, so `cargo bench | tee bench_output.txt` captures both
+//! machine-readable timings and the reproduced tables.
+
+use std::time::{Duration, Instant};
+
+/// One timed measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "bench: {:40} iters={:<5} mean={:>12?} stddev={:>10?} min={:>12?}",
+            self.name, self.iters, self.mean, self.stddev, self.min
+        )
+    }
+}
+
+/// Run `f` with warmup, auto-scaling iteration count to target ~200ms of
+/// total measured time (capped), then report statistics over per-iter times.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(50));
+    let target = Duration::from_millis(200);
+    let iters = ((target.as_nanos() / one.as_nanos()).clamp(5, 1000)) as u32;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters;
+    let mean_ns = mean.as_nanos() as f64;
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_nanos() as f64 - mean_ns;
+            d * d
+        })
+        .sum::<f64>()
+        / iters as f64;
+    let m = Measurement {
+        name: name.to_string(),
+        iters,
+        mean,
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        min: samples.iter().min().copied().unwrap_or_default(),
+    };
+    println!("{}", m.report());
+    m
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Throughput helper: ops/s from an op count and a measurement.
+pub fn ops_per_sec(ops: u64, m: &Measurement) -> f64 {
+    ops as f64 / m.mean.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let m = bench("noop-spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.iters >= 5);
+        assert!(m.mean >= m.min);
+    }
+
+    #[test]
+    fn ops_per_sec_positive() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_millis(1),
+            stddev: Duration::ZERO,
+            min: Duration::from_millis(1),
+        };
+        assert!((ops_per_sec(1000, &m) - 1_000_000.0).abs() < 1.0);
+    }
+}

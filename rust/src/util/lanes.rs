@@ -1,0 +1,304 @@
+//! Word-parallel boolean lane vectors.
+//!
+//! A [`LaneVec`] holds one boolean per Compute RAM **column** (bit-line),
+//! packed 64 lanes per `u64` word. All bit-line level operations in the
+//! simulator (sensing, peripheral logic, carry/tag latches) operate on whole
+//! `LaneVec`s at once, which is what makes the simulator fast: one `u64` op
+//! covers 64 columns.
+
+/// A fixed-length vector of boolean lanes, one per array column.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct LaneVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl LaneVec {
+    /// All-zero vector with `len` lanes.
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-one vector with `len` lanes.
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self::zeros(len);
+        v.fill(true);
+        v
+    }
+
+    /// Build from a closure over lane indices.
+    pub fn from_fn(len: usize, mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut v = Self::zeros(len);
+        for i in 0..len {
+            v.set(i, f(i));
+        }
+        v
+    }
+
+    /// Number of lanes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if there are no lanes.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw packed words (low lane = bit 0 of word 0).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable raw packed words (hot-path kernels; caller must keep bits
+    /// beyond `len` zero — use [`LaneVec::trim_tail`] after bulk writes).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Word `i` (hot-path accessor).
+    #[inline]
+    pub fn word(&self, i: usize) -> u64 {
+        self.words[i]
+    }
+
+    /// Set word `i` (hot-path accessor; caller keeps the tail trimmed).
+    #[inline]
+    pub fn set_word(&mut self, i: usize, v: u64) {
+        self.words[i] = v;
+    }
+
+    /// Number of packed words.
+    #[inline]
+    pub fn word_len(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Mask that zeroes bits beyond `len` in the last word.
+    #[inline]
+    pub fn tail_mask(&self, i: usize) -> u64 {
+        let rem = self.len % 64;
+        if rem != 0 && i + 1 == self.words.len() {
+            (1u64 << rem) - 1
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Re-zero any bits beyond `len` (after bulk word writes).
+    #[inline]
+    pub fn trim_tail(&mut self) {
+        self.trim();
+    }
+
+    /// Lane `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set lane `i` to `v`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    /// Set every lane to `v`.
+    pub fn fill(&mut self, v: bool) {
+        let pat = if v { u64::MAX } else { 0 };
+        for w in &mut self.words {
+            *w = pat;
+        }
+        self.trim();
+    }
+
+    /// Zero any bits beyond `len` in the last word (keeps popcounts exact).
+    #[inline]
+    fn trim(&mut self) {
+        let rem = self.len % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    /// Number of set lanes.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if all lanes are zero.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    // -- word-parallel logic (allocating) ------------------------------------
+
+    pub fn and(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a & b)
+    }
+
+    pub fn or(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a | b)
+    }
+
+    pub fn xor(&self, o: &Self) -> Self {
+        self.zip(o, |a, b| a ^ b)
+    }
+
+    pub fn nor(&self, o: &Self) -> Self {
+        let mut v = self.zip(o, |a, b| !(a | b));
+        v.trim();
+        v
+    }
+
+    pub fn not(&self) -> Self {
+        let mut v = Self {
+            words: self.words.iter().map(|w| !w).collect(),
+            len: self.len,
+        };
+        v.trim();
+        v
+    }
+
+    #[inline]
+    fn zip(&self, o: &Self, f: impl Fn(u64, u64) -> u64) -> Self {
+        debug_assert_eq!(self.len, o.len, "lane length mismatch");
+        Self {
+            words: self
+                .words
+                .iter()
+                .zip(&o.words)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    // -- in-place variants (hot path: no allocation) --------------------------
+
+    pub fn and_assign(&mut self, o: &Self) {
+        self.zip_assign(o, |a, b| a & b);
+    }
+
+    pub fn or_assign(&mut self, o: &Self) {
+        self.zip_assign(o, |a, b| a | b);
+    }
+
+    pub fn xor_assign(&mut self, o: &Self) {
+        self.zip_assign(o, |a, b| a ^ b);
+    }
+
+    #[inline]
+    fn zip_assign(&mut self, o: &Self, f: impl Fn(u64, u64) -> u64) {
+        debug_assert_eq!(self.len, o.len, "lane length mismatch");
+        for (a, &b) in self.words.iter_mut().zip(&o.words) {
+            *a = f(*a, b);
+        }
+    }
+
+    /// Lane-wise select: where `mask` is 1 take `a`, else keep `self`.
+    ///
+    /// This is the **predicated write**: the 4:1 predication mux gates each
+    /// column's write-back, so unselected columns keep their old value.
+    pub fn merge_masked(&mut self, a: &Self, mask: &Self) {
+        debug_assert_eq!(self.len, a.len);
+        debug_assert_eq!(self.len, mask.len);
+        for ((s, &av), &m) in self.words.iter_mut().zip(&a.words).zip(&mask.words) {
+            *s = (av & m) | (*s & !m);
+        }
+    }
+
+    /// Copy from a packed `u64` slice (used by storage-mode row writes).
+    pub fn copy_from_words(&mut self, src: &[u64]) {
+        debug_assert_eq!(src.len(), self.words.len());
+        self.words.copy_from_slice(src);
+        self.trim();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut v = LaneVec::zeros(100);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(99, true);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(99));
+        assert!(!v.get(1) && !v.get(65));
+        assert_eq!(v.count_ones(), 4);
+    }
+
+    #[test]
+    fn logic_matches_per_lane() {
+        let a = LaneVec::from_fn(130, |i| i % 3 == 0);
+        let b = LaneVec::from_fn(130, |i| i % 2 == 0);
+        let and = a.and(&b);
+        let or = a.or(&b);
+        let xor = a.xor(&b);
+        let nor = a.nor(&b);
+        for i in 0..130 {
+            assert_eq!(and.get(i), a.get(i) & b.get(i));
+            assert_eq!(or.get(i), a.get(i) | b.get(i));
+            assert_eq!(xor.get(i), a.get(i) ^ b.get(i));
+            assert_eq!(nor.get(i), !(a.get(i) | b.get(i)));
+        }
+    }
+
+    #[test]
+    fn not_trims_tail() {
+        let v = LaneVec::zeros(70);
+        let n = v.not();
+        assert_eq!(n.count_ones(), 70);
+    }
+
+    #[test]
+    fn ones_respects_len() {
+        assert_eq!(LaneVec::ones(40).count_ones(), 40);
+        assert_eq!(LaneVec::ones(64).count_ones(), 64);
+        assert_eq!(LaneVec::ones(65).count_ones(), 65);
+    }
+
+    #[test]
+    fn merge_masked_is_predicated_write() {
+        let mut dst = LaneVec::from_fn(10, |i| i < 5);
+        let src = LaneVec::ones(10);
+        let mask = LaneVec::from_fn(10, |i| i % 2 == 0);
+        dst.merge_masked(&src, &mask);
+        for i in 0..10 {
+            let expect = if i % 2 == 0 { true } else { i < 5 };
+            assert_eq!(dst.get(i), expect, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn in_place_matches_allocating() {
+        let a = LaneVec::from_fn(200, |i| (i * 7) % 5 < 2);
+        let b = LaneVec::from_fn(200, |i| (i * 3) % 4 < 2);
+        let mut c = a.clone();
+        c.xor_assign(&b);
+        assert_eq!(c, a.xor(&b));
+        let mut d = a.clone();
+        d.and_assign(&b);
+        assert_eq!(d, a.and(&b));
+        let mut e = a.clone();
+        e.or_assign(&b);
+        assert_eq!(e, a.or(&b));
+    }
+}

@@ -1,0 +1,88 @@
+//! Small shared utilities: word-parallel bit-lane math and a software
+//! bfloat16 model used to verify the bf16 microcode.
+
+pub mod benchkit;
+pub mod json;
+pub mod lanes;
+pub mod prng;
+pub mod softbf16;
+
+pub use json::Json;
+pub use lanes::LaneVec;
+pub use prng::Prng;
+pub use softbf16::SoftBf16;
+
+/// Sign-extend the low `width` bits of `x` (two's complement).
+#[inline]
+pub fn sext(x: i64, width: u32) -> i64 {
+    debug_assert!(width >= 1 && width <= 64);
+    if width == 64 {
+        return x;
+    }
+    let shift = 64 - width;
+    (x << shift) >> shift
+}
+
+/// Mask `x` to its low `width` bits.
+#[inline]
+pub fn mask(x: i64, width: u32) -> u64 {
+    if width >= 64 {
+        x as u64
+    } else {
+        (x as u64) & ((1u64 << width) - 1)
+    }
+}
+
+/// Smallest number of `u64` words that hold `bits` bits.
+#[inline]
+pub fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sext_positive_stays() {
+        assert_eq!(sext(0b0111, 4), 7);
+        assert_eq!(sext(5, 8), 5);
+    }
+
+    #[test]
+    fn sext_negative_extends() {
+        assert_eq!(sext(0b1111, 4), -1);
+        assert_eq!(sext(0b1000, 4), -8);
+        assert_eq!(sext(0xFF, 8), -1);
+    }
+
+    #[test]
+    fn sext_full_width_identity() {
+        assert_eq!(sext(-12345, 64), -12345);
+    }
+
+    #[test]
+    fn mask_truncates() {
+        assert_eq!(mask(-1, 4), 0xF);
+        assert_eq!(mask(0x1F, 4), 0xF);
+        assert_eq!(mask(-1, 64), u64::MAX);
+    }
+
+    #[test]
+    fn mask_sext_roundtrip() {
+        for w in 1..=16u32 {
+            for v in -(1i64 << (w - 1))..(1i64 << (w - 1)) {
+                assert_eq!(sext(mask(v, w) as i64, w), v, "w={w} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn words_for_boundaries() {
+        assert_eq!(words_for(0), 0);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(128), 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! Software bfloat16 model.
+//!
+//! bfloat16 is the top 16 bits of an IEEE-754 float32 (1 sign, 8 exponent,
+//! 7 mantissa bits). XLA (and therefore the JAX golden artifacts this repo
+//! ships) computes bf16 arithmetic by upconverting to f32, operating, then
+//! rounding back with **round-to-nearest-even**. [`SoftBf16`] implements
+//! exactly that, and is the oracle for the bf16 microcode and the DSP-slice
+//! baseline model (which also upconverts internally, per the paper).
+
+/// A bfloat16 value stored as its 16 raw bits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct SoftBf16(pub u16);
+
+impl SoftBf16 {
+    pub const ZERO: SoftBf16 = SoftBf16(0);
+
+    /// From raw bits.
+    #[inline]
+    pub fn from_bits(bits: u16) -> Self {
+        SoftBf16(bits)
+    }
+
+    /// Raw bits.
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Widen to f32 (exact: bf16 is a prefix of f32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Round an f32 to bf16 with round-to-nearest-even (ties to even),
+    /// matching XLA's `ConvertElementType(f32 -> bf16)`.
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // quiet the NaN, keep the sign + payload top bits
+            return SoftBf16(((bits >> 16) as u16) | 0x0040);
+        }
+        let lsb = (bits >> 16) & 1;
+        let rounding_bias = 0x7fff + lsb;
+        SoftBf16(((bits + rounding_bias) >> 16) as u16)
+    }
+
+    /// Truncate an f32 to bf16 (round toward zero). Used by the
+    /// `RoundMode::Truncate` microcode variant.
+    #[inline]
+    pub fn from_f32_trunc(x: f32) -> Self {
+        SoftBf16((x.to_bits() >> 16) as u16)
+    }
+
+    #[inline]
+    pub fn add(self, o: Self) -> Self {
+        Self::from_f32(self.to_f32() + o.to_f32())
+    }
+
+    #[inline]
+    pub fn sub(self, o: Self) -> Self {
+        Self::from_f32(self.to_f32() - o.to_f32())
+    }
+
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        Self::from_f32(self.to_f32() * o.to_f32())
+    }
+
+    /// Fused-to-bf16 MAC as the L2 graph does it: `c + round_bf16(a*b)`.
+    #[inline]
+    pub fn mac(self, a: Self, b: Self) -> Self {
+        self.add(a.mul(b))
+    }
+
+    /// Sign bit.
+    #[inline]
+    pub fn sign(self) -> bool {
+        self.0 >> 15 == 1
+    }
+
+    /// Biased exponent field (8 bits).
+    #[inline]
+    pub fn exponent(self) -> u16 {
+        (self.0 >> 7) & 0xFF
+    }
+
+    /// Mantissa field (7 bits, no hidden bit).
+    #[inline]
+    pub fn mantissa(self) -> u16 {
+        self.0 & 0x7F
+    }
+
+    /// Units-in-last-place distance (for tolerance checks across rounding
+    /// modes); NaNs compare at max distance.
+    pub fn ulp_distance(self, o: Self) -> u32 {
+        if self.to_f32().is_nan() || o.to_f32().is_nan() {
+            return u32::MAX;
+        }
+        // Map to a monotonic integer line (sign-magnitude -> offset binary).
+        fn key(b: u16) -> i32 {
+            let v = b as i32;
+            if v & 0x8000 != 0 {
+                0x8000 - (v & 0x7FFF)
+            } else {
+                0x8000 + v
+            }
+        }
+        (key(self.0) - key(o.0)).unsigned_abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bf(x: f32) -> SoftBf16 {
+        SoftBf16::from_f32(x)
+    }
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for x in [0.0f32, 1.0, -2.0, 0.5, 1.5, -0.375, 256.0] {
+            assert_eq!(bf(x).to_f32(), x, "{x} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 = 0x3F80; next bf16 up is 0x3F81 (1 + 2^-7).
+        // 1 + 2^-8 is exactly halfway -> rounds to even mantissa (0x3F80).
+        let halfway = 1.0f32 + f32::powi(2.0, -8);
+        assert_eq!(bf(halfway).to_bits(), 0x3F80);
+        // 1 + 3*2^-8 is halfway between 0x3F81 and 0x3F82 -> even = 0x3F82.
+        let halfway2 = 1.0f32 + 3.0 * f32::powi(2.0, -8);
+        assert_eq!(bf(halfway2).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn add_matches_f32_then_round() {
+        let a = bf(1.5);
+        let b = bf(2.25);
+        assert_eq!(a.add(b).to_f32(), 3.75);
+    }
+
+    #[test]
+    fn mul_rounds() {
+        // 1.0078125 (0x3F81) squared = 1.01568... -> rounds to 0x3F82
+        let x = SoftBf16::from_bits(0x3F81);
+        assert_eq!(x.mul(x).to_bits(), 0x3F82);
+    }
+
+    #[test]
+    fn field_extraction() {
+        let x = bf(-1.5); // sign 1, exp 127, mant 0x40
+        assert!(x.sign());
+        assert_eq!(x.exponent(), 127);
+        assert_eq!(x.mantissa(), 0x40);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        let n = SoftBf16::from_f32(f32::NAN);
+        assert!(n.to_f32().is_nan());
+    }
+
+    #[test]
+    fn inf_propagates() {
+        let inf = bf(f32::INFINITY);
+        assert_eq!(inf.to_f32(), f32::INFINITY);
+        assert_eq!(inf.add(bf(1.0)).to_f32(), f32::INFINITY);
+    }
+
+    #[test]
+    fn trunc_vs_rne_within_one_ulp() {
+        for i in 0..2000u32 {
+            let x = f32::from_bits(0x3F80_0000 + i * 7919);
+            let t = SoftBf16::from_f32_trunc(x);
+            let r = SoftBf16::from_f32(x);
+            assert!(t.ulp_distance(r) <= 1, "x={x} trunc={t:?} rne={r:?}");
+        }
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(bf(1.0).ulp_distance(bf(1.0)), 0);
+        assert_eq!(
+            SoftBf16::from_bits(0x3F80).ulp_distance(SoftBf16::from_bits(0x3F81)),
+            1
+        );
+        // across zero
+        assert_eq!(
+            SoftBf16::from_bits(0x0000).ulp_distance(SoftBf16::from_bits(0x8000)),
+            0
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! End-to-end integration: the full experiment pipeline (paper tables and
+//! figures) and the complete three-layer flow exercised the way the CLI and
+//! benches drive it.
+
+use comperam::baseline::datapath;
+use comperam::baseline::designs::BaselineKind;
+use comperam::bitline::Geometry;
+use comperam::cost::CycleModel;
+use comperam::cram::{ops, CramBlock};
+use comperam::report;
+use comperam::util::Prng;
+
+#[test]
+fn experiment_pipeline_runs_all_figures_paper_model() {
+    let t2 = report::table2();
+    assert!(t2.contains("Table II"));
+    let (p4, s4) = report::fig4(CycleModel::Paper).unwrap();
+    assert_eq!(p4.len(), 3);
+    assert!(s4.contains("Fig 4"));
+    let (p5, s5) = report::fig5(CycleModel::Paper).unwrap();
+    assert_eq!(p5.len(), 3);
+    assert!(s5.contains("Fig 5"));
+    let (p6, s6) = report::fig6(CycleModel::Paper).unwrap();
+    assert_eq!(p6.len(), 2);
+    assert!(s6.contains("Fig 6"));
+    let h = report::headline(CycleModel::Paper).unwrap();
+    assert!(h.contains("average energy saving"));
+}
+
+#[test]
+fn experiment_pipeline_runs_with_measured_cycles() {
+    // the measured model actually executes the microcode on the simulator
+    let (p4, _) = report::fig4(CycleModel::Measured).unwrap();
+    // measured int add cycles == paper cycles (W+1 per tuple, exactly)
+    let add4 = &p4[0];
+    let paper4 = report::cram_cycles(BaselineKind::IntAdd { w: 4 }, CycleModel::Paper);
+    assert_eq!(add4.cram.cycles, paper4, "int4 add measured == paper");
+    // measured mul is costlier than the paper's analytic model
+    let (p5, _) = report::fig5(CycleModel::Measured).unwrap();
+    let paper_mul4 = report::cram_cycles(BaselineKind::IntMul { w: 4 }, CycleModel::Paper);
+    assert!(p5[0].cram.cycles > paper_mul4, "measured mul should exceed NC model");
+}
+
+#[test]
+fn measured_dot_cycles_within_expected_band() {
+    let m = report::measured_cycles(BaselineKind::DotI4 { k: 60 }).unwrap();
+    // paper: 1470. our straightforward microcode: same order of magnitude
+    assert!(
+        (1470..6000).contains(&(m as i64)),
+        "measured dot cycles {m} out of band"
+    );
+}
+
+#[test]
+fn simulator_agrees_with_baseline_datapath_model() {
+    // the baseline functional model and the Compute RAM simulator must
+    // compute identical numerics (both are exact integer arithmetic)
+    let mut rng = Prng::new(7001);
+    let mut block = CramBlock::new(Geometry::G512x40);
+
+    let n = 840;
+    let a: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+    let b: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+    let (base_add, _) = datapath::run_add(&a, &b, 8, 1);
+    let cram_add = ops::int_addsub(&mut block, &a, &b, 8, false).unwrap().values;
+    assert_eq!(base_add, cram_add);
+
+    // mul capacity is 640 ops per 512x40 block
+    let (base_mul, _) = datapath::run_mul(&a[..640], &b[..640], 8, 2);
+    let cram_mul = ops::int_mul(&mut block, &a[..640], &b[..640], 8).unwrap().values;
+    assert_eq!(base_mul, cram_mul);
+
+    let k = 60;
+    let cols = 40;
+    let da: Vec<Vec<i64>> = (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+    let db: Vec<Vec<i64>> = (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+    let (base_dot, stats) = datapath::run_dot(&da, &db, cols);
+    let cram_dot = ops::int_dot(&mut block, &da, &db, 4, 32).unwrap().values;
+    assert_eq!(base_dot, cram_dot);
+    // and the baseline cycle model stays pinned to the paper's Fig 6 figure
+    assert_eq!(stats.rows_read, 480);
+}
+
+#[test]
+fn paper_shape_fig4_addition_wins() {
+    let (points, _) = report::fig4(CycleModel::Paper).unwrap();
+    for p in &points {
+        assert!(p.time_ratio() < 1.0, "{} time {}", p.label, p.time_ratio());
+        assert!(p.energy_ratio() < 0.35, "{} energy {}", p.label, p.energy_ratio());
+        assert!(p.area_ratio() < 1.0, "{} area {}", p.label, p.area_ratio());
+    }
+}
+
+#[test]
+fn paper_shape_fig6_crossover() {
+    let (points, _) = report::fig6(CycleModel::Paper).unwrap();
+    assert!(points[0].time_ratio() > 1.0, "40-col CR should lose on time");
+    assert!(points[1].time_ratio() < 1.0, "72-col CR should win on time");
+}
+
+#[test]
+fn storage_mode_is_a_drop_in_bram() {
+    // §III-C: the block must still work as a pure storage block
+    use comperam::cram::Mode;
+    use comperam::util::LaneVec;
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(7002);
+    let rows: Vec<LaneVec> = (0..512)
+        .map(|_| LaneVec::from_fn(40, |_| rng.chance(0.5)))
+        .collect();
+    for (i, r) in rows.iter().enumerate() {
+        block.write(i, r).unwrap();
+    }
+    for (i, r) in rows.iter().enumerate() {
+        assert_eq!(block.read(i).unwrap(), r, "row {i}");
+    }
+    // the instruction memory doubles as a small extra BRAM in storage mode
+    for i in 0..256 {
+        block.write_imem_word(i, (i * 3) as u16).unwrap();
+    }
+    assert_eq!(block.read_imem_word(100), 300);
+    assert_eq!(block.mode(), Mode::Storage);
+}
+
+#[test]
+fn e2e_quickstart_flow() {
+    // the README quickstart, as a test: one block, one add, paper flow
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let r = ops::int_addsub(&mut block, &[21, -3], &[21, 4], 8, false).unwrap();
+    assert_eq!(r.values, vec![42, 1]);
+    assert!(r.stats.array_cycles > 0);
+    assert!(block.done());
+}

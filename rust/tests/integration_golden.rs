@@ -1,0 +1,180 @@
+//! Golden cross-checks: the bit-exact rust simulator vs the AOT-compiled
+//! JAX/Pallas artifacts executed through PJRT.
+//!
+//! These tests require `artifacts/` (run `make artifacts` once). They close
+//! the three-layer loop: L1 Pallas kernels and the L3 simulator implement
+//! the same bit-serial schedules independently, and must agree bit-for-bit
+//! on every packed operand.
+
+use comperam::bitline::Geometry;
+use comperam::cram::{ops, CramBlock};
+use comperam::runtime::{default_artifacts_dir, Runtime};
+use comperam::util::{Prng, SoftBf16};
+
+fn runtime() -> Runtime {
+    Runtime::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn to_i32(v: &[i64]) -> Vec<i32> {
+    v.iter().map(|&x| x as i32).collect()
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let rt = runtime();
+    let names = rt.entry_names();
+    for expect in [
+        "add_i4", "add_i8", "sub_i4", "sub_i8", "mul_i4", "mul_i8", "dot_i4", "dot_i8",
+        "dot_i4_wide", "add_bf16", "mul_bf16", "mac_bf16", "mlp_i8",
+    ] {
+        assert!(names.contains(&expect), "missing entry {expect}");
+    }
+}
+
+#[test]
+fn int_add_sub_match_golden() {
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(101);
+    for (name, w, n, sub) in [
+        ("add_i4", 4u32, 1680usize, false),
+        ("sub_i4", 4, 1680, true),
+        ("add_i8", 8, 840, false),
+        ("sub_i8", 8, 840, true),
+    ] {
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let golden = rt.exec_i32(name, &[to_i32(&a), to_i32(&b)]).unwrap();
+        let sim = ops::int_addsub(&mut block, &a, &b, w, sub).unwrap().values;
+        assert_eq!(to_i32(&sim), golden, "{name}");
+    }
+}
+
+#[test]
+fn int_mul_matches_golden() {
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(102);
+    for (name, w, n) in [("mul_i4", 4u32, 1280usize), ("mul_i8", 8, 640)] {
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let golden = rt.exec_i32(name, &[to_i32(&a), to_i32(&b)]).unwrap();
+        let sim = ops::int_mul(&mut block, &a, &b, w).unwrap().values;
+        assert_eq!(to_i32(&sim), golden, "{name}");
+    }
+}
+
+#[test]
+fn dot_products_match_golden() {
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(103);
+    for (name, w, k, cols) in [("dot_i4", 4u32, 60usize, 40usize), ("dot_i8", 8, 30, 40)] {
+        let a: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+        // artifact takes [k, cols] row-major
+        let flat = |m: &[Vec<i64>]| -> Vec<i32> {
+            m.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+        };
+        let golden = rt.exec_i32(name, &[flat(&a), flat(&b)]).unwrap();
+        let sim = ops::int_dot(&mut block, &a, &b, w, 32).unwrap().values;
+        assert_eq!(to_i32(&sim), golden, "{name}");
+    }
+}
+
+#[test]
+fn wide_dot_matches_golden() {
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G285x72);
+    let mut rng = Prng::new(104);
+    let (k, cols) = (60usize, 72usize);
+    // the wide block holds only 31 pairs; split K like the coordinator does
+    let a: Vec<Vec<i64>> = (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+    let b: Vec<Vec<i64>> = (0..k).map(|_| (0..cols).map(|_| rng.int(4)).collect()).collect();
+    let flat = |m: &[Vec<i64>]| -> Vec<i32> {
+        m.iter().flat_map(|row| row.iter().map(|&x| x as i32)).collect()
+    };
+    let golden = rt.exec_i32("dot_i4_wide", &[flat(&a), flat(&b)]).unwrap();
+    let half1 = ops::int_dot(&mut block, &a[..30], &b[..30], 4, 32).unwrap().values;
+    let half2 = ops::int_dot(&mut block, &a[30..], &b[30..], 4, 32).unwrap().values;
+    let sim: Vec<i32> = half1.iter().zip(&half2).map(|(&x, &y)| (x + y) as i32).collect();
+    assert_eq!(sim, golden);
+}
+
+#[test]
+fn bf16_ops_match_golden_exactly() {
+    // the functional bf16 path (SoftBf16) must be bit-identical to XLA's
+    // bf16 semantics in the artifacts
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(105);
+    let n = 400;
+    let a: Vec<SoftBf16> =
+        (0..n).map(|_| SoftBf16::from_bits(rng.bf16_bits(100, 150))).collect();
+    let b: Vec<SoftBf16> =
+        (0..n).map(|_| SoftBf16::from_bits(rng.bf16_bits(100, 150))).collect();
+    let bits = |v: &[SoftBf16]| -> Vec<i32> { v.iter().map(|x| x.to_bits() as i32).collect() };
+    for (name, mul) in [("add_bf16", false), ("mul_bf16", true)] {
+        let golden = rt.exec_i32(name, &[bits(&a), bits(&b)]).unwrap();
+        let sim = ops::bf16_op(&mut block, &a, &b, mul).unwrap().values;
+        assert_eq!(bits(&sim), golden, "{name}");
+    }
+}
+
+#[test]
+fn bf16_mac_matches_golden() {
+    let mut rt = runtime();
+    let mut block = CramBlock::new(Geometry::G512x40);
+    let mut rng = Prng::new(106);
+    let n = 400;
+    let mk = |rng: &mut Prng| -> Vec<SoftBf16> {
+        (0..n).map(|_| SoftBf16::from_bits(rng.bf16_bits(110, 140))).collect()
+    };
+    let (a, b, c) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let bits = |v: &[SoftBf16]| -> Vec<i32> { v.iter().map(|x| x.to_bits() as i32).collect() };
+    let golden = rt.exec_i32("mac_bf16", &[bits(&a), bits(&b), bits(&c)]).unwrap();
+    let sim = ops::bf16_mac(&mut block, &a, &b, &c).unwrap().values;
+    assert_eq!(bits(&sim), golden);
+}
+
+#[test]
+fn mlp_matches_golden() {
+    use comperam::coordinator::Coordinator;
+    use comperam::nn::{MlpInt8, QuantLinear};
+    let mut rt = runtime();
+    let (batch, d_in, d_hid, d_out) = (
+        rt.constant(&["mlp", "batch"]).unwrap() as usize,
+        rt.constant(&["mlp", "d_in"]).unwrap() as usize,
+        rt.constant(&["mlp", "d_hid"]).unwrap() as usize,
+        rt.constant(&["mlp", "d_out"]).unwrap() as usize,
+    );
+    let mut rng = Prng::new(107);
+    let x: Vec<Vec<i64>> =
+        (0..batch).map(|_| (0..d_in).map(|_| rng.int(8)).collect()).collect();
+    let w1: Vec<Vec<i64>> =
+        (0..d_in).map(|_| (0..d_hid).map(|_| rng.int(4)).collect()).collect();
+    let b1: Vec<i64> = (0..d_hid).map(|_| rng.int(6)).collect();
+    let w2: Vec<Vec<i64>> =
+        (0..d_hid).map(|_| (0..d_out).map(|_| rng.int(4)).collect()).collect();
+    let b2: Vec<i64> = (0..d_out).map(|_| rng.int(6)).collect();
+
+    let flat = |m: &[Vec<i64>]| -> Vec<i32> {
+        m.iter().flat_map(|r| r.iter().map(|&v| v as i32)).collect()
+    };
+    let golden = rt
+        .exec_i32("mlp_i8", &[flat(&x), flat(&w1), to_i32(&b1), flat(&w2), to_i32(&b2)])
+        .unwrap();
+
+    let coord = Coordinator::new(Geometry::G512x40, 4);
+    let mlp = MlpInt8::new(
+        QuantLinear::new(w1, b1).unwrap(),
+        QuantLinear::new(w2, b2).unwrap(),
+    )
+    .unwrap();
+    let logits = mlp.forward(&coord, &x).unwrap();
+    let flat_logits: Vec<i32> =
+        logits.iter().flat_map(|r| r.iter().map(|&v| v as i32)).collect();
+    assert_eq!(flat_logits, golden, "farm MLP logits != JAX artifact logits");
+}

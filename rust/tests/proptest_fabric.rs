@@ -1,0 +1,131 @@
+//! Property tests over the fabric flow (placement, routing, timing, area,
+//! energy) — invariants that must hold for any random netlist.
+
+use comperam::fabric::blocks::BlockKind;
+use comperam::fabric::netlist::Netlist;
+use comperam::fabric::{implement, place, route, timing, FpgaArch};
+use comperam::util::Prng;
+
+/// Random LB/BRAM/DSP netlist generator (always connected, always legal).
+fn random_netlist(seed: u64) -> Netlist {
+    let mut rng = Prng::new(seed);
+    let mut nl = Netlist::new(format!("rand-{seed}"));
+    let n_blocks = rng.range(2, 18);
+    for i in 0..n_blocks {
+        let kind = match rng.range(0, 10) {
+            0 => BlockKind::Bram,
+            1 => BlockKind::Dsp,
+            _ => BlockKind::Lb,
+        };
+        nl.add(format!("b{i}"), kind);
+    }
+    // spanning connectivity + random extra nets
+    for i in 1..n_blocks {
+        let src = rng.range(0, i);
+        nl.connect(format!("n{i}"), src, &[i], rng.range(1, 41) as u32);
+    }
+    for j in 0..rng.range(0, 6) {
+        let src = rng.range(0, n_blocks);
+        let mut dst = rng.range(0, n_blocks);
+        if dst == src {
+            dst = (dst + 1) % n_blocks;
+        }
+        nl.connect(format!("x{j}"), src, &[dst], rng.range(1, 41) as u32);
+    }
+    nl
+}
+
+#[test]
+fn prop_placement_is_legal_and_collision_free() {
+    let arch = FpgaArch::agilex_like();
+    for seed in 0..30 {
+        let nl = random_netlist(seed);
+        let pl = place::place(&arch, &nl, seed).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for (i, inst) in nl.insts.iter().enumerate() {
+            let (x, _) = pl.loc[i];
+            assert_eq!(arch.columns[x as usize], inst.kind, "seed {seed} inst {i}");
+            assert!(seen.insert(pl.loc[i]), "seed {seed}: site collision");
+        }
+    }
+}
+
+#[test]
+fn prop_fmax_positive_and_bounded() {
+    let arch = FpgaArch::agilex_like();
+    for seed in 0..30 {
+        let nl = random_netlist(seed);
+        let r = implement(&arch, &nl, seed).unwrap();
+        assert!(r.fmax_mhz > 10.0 && r.fmax_mhz <= 1000.0, "seed {seed}: {}", r.fmax_mhz);
+        assert!(r.block_area_um2 > 0.0);
+        assert!(r.wirelength_mm >= 0.0);
+    }
+}
+
+#[test]
+fn prop_fmax_never_exceeds_slowest_block_clock() {
+    let arch = FpgaArch::agilex_like();
+    for seed in 30..60 {
+        let nl = random_netlist(seed);
+        let pl = place::place(&arch, &nl, seed).unwrap();
+        let rd = route::route(&arch, &nl, &pl).unwrap();
+        let f = timing::fmax_mhz(&arch, &nl, &rd);
+        let limit = nl
+            .insts
+            .iter()
+            .map(|i| arch.params(i.kind).freq_mhz)
+            .fold(f64::INFINITY, f64::min);
+        assert!(f <= limit + 1e-9, "seed {seed}: {f} > {limit}");
+    }
+}
+
+#[test]
+fn prop_adding_a_net_never_reduces_area_or_wirelength() {
+    let arch = FpgaArch::agilex_like();
+    for seed in 0..15 {
+        let nl = random_netlist(seed);
+        let mut bigger = nl.clone();
+        bigger.connect("extra", 0, &[nl.insts.len() - 1], 40);
+        let pl = place::place(&arch, &nl, seed).unwrap();
+        let pl2 = place::Placement { loc: pl.loc.clone() };
+        let r1 = route::route(&arch, &nl, &pl).unwrap();
+        let r2 = route::route(&arch, &bigger, &pl2).unwrap();
+        assert!(
+            r2.total_wirelength_mm() >= r1.total_wirelength_mm() - 1e-12,
+            "seed {seed}"
+        );
+        assert!(r2.bit_mm() >= r1.bit_mm() - 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_energy_monotone_in_cycles_and_bits() {
+    use comperam::fabric::energy;
+    for seed in 0..20 {
+        let mut rng = Prng::new(seed);
+        let area = 1000.0 + rng.unit_f64() * 20000.0;
+        let c1 = rng.range(10, 1000) as f64;
+        let c2 = c1 + rng.range(1, 500) as f64;
+        assert!(
+            energy::transistor_energy_fj(area, c2) > energy::transistor_energy_fj(area, c1)
+        );
+        let bits = rng.range(100, 10000) as f64;
+        let mm = 0.01 + rng.unit_f64();
+        assert!(
+            energy::wire_energy_fj(bits + 1.0, mm) > energy::wire_energy_fj(bits, mm)
+        );
+    }
+}
+
+#[test]
+fn prop_proposed_arch_only_swaps_ram_columns() {
+    let base = FpgaArch::agilex_like();
+    let prop = FpgaArch::with_compute_rams();
+    assert_eq!(base.columns.len(), prop.columns.len());
+    for (b, p) in base.columns.iter().zip(&prop.columns) {
+        match (b, p) {
+            (BlockKind::Bram, BlockKind::Cram) => {}
+            (x, y) => assert_eq!(x, y),
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Property tests over the microcode + simulator stack (offline build: a
+//! hand-rolled property harness on SplitMix64; failing cases print their
+//! seed for reproduction).
+//!
+//! Invariants exercised:
+//!  * add/sub/mul/dot agree with host two's-complement arithmetic for
+//!    random widths, counts and operand values;
+//!  * the array-cycle count of `add` is exactly `(W + 1) x tuples`;
+//!  * assembling-then-disassembling any generated program is a fixpoint;
+//!  * programs never write outside their layout + declared scratch.
+
+use comperam::bitline::{transpose, BitlineArray, ColumnPeriph, Geometry};
+use comperam::cram::{ops, CramBlock};
+use comperam::ctrl::{Controller, InstrMem};
+use comperam::isa::asm;
+use comperam::ucode;
+use comperam::util::{mask, sext, Prng};
+
+const CASES: usize = 60;
+
+fn wrap(v: i64, w: u32) -> i64 {
+    sext(mask(v, w) as i64, w)
+}
+
+#[test]
+fn prop_addsub_matches_host_for_random_shapes() {
+    for case in 0..CASES {
+        let seed = 0xA000 + case as u64;
+        let mut rng = Prng::new(seed);
+        let w = [2u32, 3, 4, 5, 7, 8, 11, 16][rng.range(0, 8)];
+        let n = rng.range(1, 200);
+        let sub = rng.chance(0.5);
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let mut block = CramBlock::new(Geometry::G512x40);
+        let got = ops::int_addsub(&mut block, &a, &b, w, sub)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for i in 0..n {
+            let expect = if sub { wrap(a[i] - b[i], w) } else { wrap(a[i] + b[i], w) };
+            assert_eq!(got.values[i], expect, "seed {seed} w={w} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_mul_matches_host_for_random_widths() {
+    for case in 0..CASES {
+        let seed = 0xB000 + case as u64;
+        let mut rng = Prng::new(seed);
+        let w = [2u32, 3, 4, 5, 6, 8][rng.range(0, 6)];
+        let n = rng.range(1, 120);
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let mut block = CramBlock::new(Geometry::G512x40);
+        let got =
+            ops::int_mul(&mut block, &a, &b, w).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for i in 0..n {
+            assert_eq!(got.values[i], a[i] * b[i], "seed {seed} w={w} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_dot_matches_host_for_random_k() {
+    for case in 0..20 {
+        let seed = 0xC000 + case as u64;
+        let mut rng = Prng::new(seed);
+        let w = [4u32, 8][rng.range(0, 2)];
+        let max_k = if w == 4 { 60 } else { 30 };
+        let k = rng.range(1, max_k + 1);
+        let cols = rng.range(1, 41);
+        let a: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+        let mut block = CramBlock::new(Geometry::G512x40);
+        let got = ops::int_dot(&mut block, &a, &b, w, 32)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for c in 0..cols {
+            let expect: i64 = (0..k).map(|i| a[i][c] * b[i][c]).sum();
+            assert_eq!(got.values[c], expect, "seed {seed} w={w} k={k} col {c}");
+        }
+    }
+}
+
+#[test]
+fn prop_add_cycle_count_is_w_plus_1_per_tuple() {
+    for w in 2..=16u32 {
+        let (prog, l) = ucode::int::add(Geometry::G512x40, w);
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let mut periph = ColumnPeriph::new(40);
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog.instrs).unwrap();
+        let mut ctrl = Controller::new();
+        let stats = ctrl.run(&imem, &mut arr, &mut periph, 10_000_000).unwrap();
+        assert_eq!(
+            stats.array_cycles,
+            (l.ops_per_col as u64) * (w as u64 + 1),
+            "w={w}"
+        );
+    }
+}
+
+#[test]
+fn prop_generated_programs_roundtrip_through_assembler() {
+    let geoms = [Geometry::G512x40, Geometry::G1024x20, Geometry::G2048x10];
+    for geom in geoms {
+        for w in [2u32, 4, 8] {
+            for prog in [
+                ucode::int::add(geom, w).0,
+                ucode::int::sub(geom, w).0,
+                ucode::int::mul(geom, w).0,
+            ] {
+                let text = asm::disassemble(&prog.instrs);
+                let back = asm::assemble(&text)
+                    .unwrap_or_else(|e| panic!("{geom:?} {}: {e:#}", prog.name));
+                assert_eq!(back, prog.instrs, "{geom:?} {}", prog.name);
+                // and through machine encoding
+                for i in &prog.instrs {
+                    assert_eq!(comperam::isa::Instr::decode(i.encode()), Some(*i));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_programs_do_not_touch_rows_outside_layout() {
+    // poison all rows above the layout region; they must stay untouched
+    for case in 0..10 {
+        let seed = 0xD000 + case as u64;
+        let mut rng = Prng::new(seed);
+        // widths whose layouts leave spare rows at the top of the array
+        let w = [3u32, 5][rng.range(0, 2)];
+        let (prog, l) = ucode::int::mul(Geometry::G512x40, w);
+        let used_rows = l.ops_per_col * l.tuple_bits;
+        assert!(used_rows < 512, "test needs spare rows");
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let n = l.total_ops();
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        transpose::store_ints(&mut arr, &a, w, 0, l.tuple_bits);
+        transpose::store_ints(&mut arr, &b, w, w as usize, l.tuple_bits);
+        let poison: Vec<bool> = (0..40).map(|i| (i + case) % 3 == 0).collect();
+        for r in used_rows..512 {
+            for c in 0..40 {
+                arr.set_bit(r, c, poison[c]);
+            }
+        }
+        let mut periph = ColumnPeriph::new(40);
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog.instrs).unwrap();
+        let mut ctrl = Controller::new();
+        ctrl.run(&imem, &mut arr, &mut periph, 10_000_000).unwrap();
+        for r in used_rows..512 {
+            for c in 0..40 {
+                assert_eq!(arr.bit(r, c), poison[c], "seed {seed} row {r} col {c} clobbered");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_block_state_isolated_between_ops() {
+    // running op A then op B must give the same result as running op B on
+    // a fresh block (no state leaks through mode switches)
+    for case in 0..10 {
+        let seed = 0xE000 + case as u64;
+        let mut rng = Prng::new(seed);
+        let n = rng.range(1, 100);
+        let a: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let mut used = CramBlock::new(Geometry::G512x40);
+        // dirty the block with an unrelated op
+        let x: Vec<i64> = (0..500).map(|_| rng.int(4)).collect();
+        ops::int_addsub(&mut used, &x, &x, 4, false).unwrap();
+        let dirty = ops::int_mul(&mut used, &a, &b, 8).unwrap().values;
+        let mut fresh = CramBlock::new(Geometry::G512x40);
+        let clean = ops::int_mul(&mut fresh, &a, &b, 8).unwrap().values;
+        assert_eq!(dirty, clean, "seed {seed}");
+    }
+}
