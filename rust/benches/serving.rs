@@ -1,0 +1,86 @@
+//! Bench: repeated-op serving throughput — the payoff of the compiled-
+//! kernel cache, batch-sized programs and program residency.
+//!
+//! The serving workload is many same-shaped small batches (the coalesced
+//! requests of `coordinator::server`). The pre-refactor path paid, per
+//! batch: microcode assembly + a full instruction-memory load + a
+//! full-block program sweep regardless of batch size. The exec layer
+//! eliminates all three on cache hits; the acceptance target for the
+//! refactor is >= 2x on this benchmark.
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::{Coordinator, Job, JobPayload};
+use comperam::cram::{ops, CramBlock};
+use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::Prng;
+
+fn main() {
+    let geom = Geometry::G512x40;
+    let mut rng = Prng::new(0x5E81);
+
+    // ---- single block: one serving-sized batch (64 int8 adds) ------------
+    let n = 64;
+    let a: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+    let b: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+
+    // pre-refactor path: assemble the full-block program and reload the
+    // instruction memory on every batch (fresh CompiledKernel = fresh
+    // residency id, exactly what every op paid before the cache existed)
+    let key_full = KernelKey::int_ew_full(KernelOp::IntAdd, 8, geom);
+    let mut cold = CramBlock::new(geom);
+    let m_cold = bench("serving add_i8 x64  uncached full-block (assemble+reload)", || {
+        let kernel = CompiledKernel::compile(key_full);
+        black_box(ops::int_ew_compiled(&mut cold, &kernel, &a, &b).unwrap());
+    });
+
+    // cached path: compiled once, sized to the batch, resident thereafter
+    let cache = KernelCache::new();
+    let key_sized = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, n, geom);
+    let mut hot = CramBlock::new(geom);
+    let m_hot = bench("serving add_i8 x64  cached sized kernel (resident)", || {
+        let kernel = cache.get(key_sized);
+        black_box(ops::int_ew_compiled(&mut hot, &kernel, &a, &b).unwrap());
+    });
+    let speedup = m_cold.mean.as_secs_f64() / m_hot.mean.as_secs_f64();
+    println!(
+        "  -> cache speedup: {speedup:.2}x (acceptance target >= 2x); \
+         {} loads on the hot block, cache {:?}",
+        hot.program_loads(),
+        cache.stats(),
+    );
+
+    // ---- farm: a stream of identical coalesced batches --------------------
+    let blocks = 4;
+    let coord = Coordinator::new(geom, blocks);
+    coord.prewarm_serving();
+    let batch = 256; // a coalesced batch spanning several column slots
+    let av: Vec<i64> = (0..batch).map(|_| rng.int(8)).collect();
+    let bv: Vec<i64> = (0..batch).map(|_| rng.int(8)).collect();
+    let m_farm = bench("serving farm 4 blocks, repeated add_i8 x256 batches", || {
+        black_box(
+            coord
+                .run(Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwise {
+                        op: EwOp::Add,
+                        w: 8,
+                        a: av.clone(),
+                        b: bv.clone(),
+                    },
+                })
+                .unwrap(),
+        );
+    });
+    let cache_stats = coord.kernel_cache().stats();
+    println!(
+        "  -> {:.2} M adds/s through the farm; kernel cache {:.1}% hits, \
+         {} imem loads across {} batches",
+        ops_per_sec(batch as u64, &m_farm) / 1e6,
+        cache_stats.hit_rate() * 100.0,
+        coord.farm().program_loads(),
+        m_farm.iters + 1,
+    );
+    println!("  -> metrics: {}", coord.metrics.snapshot());
+}

@@ -12,6 +12,7 @@ use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use comperam::coordinator::{Coordinator, Job, JobPayload};
 use comperam::cram::{ops, CramBlock};
 use comperam::ctrl::{Controller, InstrMem};
+use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
 use comperam::fabric::{implement, FpgaArch};
 use comperam::ucode;
 use comperam::util::benchkit::{bench, black_box, ops_per_sec};
@@ -86,7 +87,19 @@ fn main() {
     });
     println!("  -> {:.2} M adds/s through the farm", ops_per_sec(n as u64, &m) / 1e6);
 
-    // 5. fabric flow
+    // 5. kernel cache: assembly cost vs cached lookup (the exec layer's
+    // setup amortization; see benches/serving.rs for the end-to-end win)
+    let key = KernelKey::int_ew_full(KernelOp::IntMul, 8, Geometry::G512x40);
+    bench("kernel assembly mul_i8 (cache miss path)", || {
+        black_box(CompiledKernel::compile(key));
+    });
+    let cache = KernelCache::new();
+    cache.get(key);
+    bench("kernel cache hit mul_i8 (Arc clone)", || {
+        black_box(cache.get(key));
+    });
+
+    // 6. fabric flow
     let arch = FpgaArch::agilex_like();
     let d = baseline_design(BaselineKind::DotI4 { k: 60 });
     bench("fabric place+route+time (dot baseline netlist)", || {

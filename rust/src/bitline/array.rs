@@ -20,7 +20,7 @@ use crate::util::LaneVec;
 /// Supported array geometries. The paper uses the Intel-Agilex BRAM
 /// configurations (20 Kb total) plus a Xilinx-style 72-column variant for
 /// the Fig. 6 wide-dot-product experiment.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum Geometry {
     /// 512 rows x 40 columns (the paper's default for all experiments).
     G512x40,

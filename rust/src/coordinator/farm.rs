@@ -1,11 +1,20 @@
 //! A farm of Compute RAM block simulators with thread-pool execution.
+//!
+//! Each worker owns one persistent [`CramBlock`] (models a shell that owns
+//! N physical Compute RAMs). Persistence is what makes program residency
+//! pay: a worker that keeps serving tasks with the same [`KernelKey`]
+//! loads the instruction memory once and then only stages data. All
+//! workers resolve tasks against one shared [`KernelCache`], so each
+//! distinct kernel is assembled exactly once per farm regardless of how
+//! many blocks or batches run it.
 
 use super::mapper::BlockTask;
 use crate::bitline::Geometry;
 use crate::cram::{ops, CramBlock};
 use crate::ctrl::CycleStats;
+use crate::exec::{KernelCache, KernelKey};
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Sum cycle statistics (energy-relevant total; time uses the wave max).
 pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
@@ -18,13 +27,12 @@ pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
     out
 }
 
-/// A pool of blocks; tasks are executed on up to `blocks.len()` worker
-/// threads, each thread checking out one block at a time (models a shell
-/// that owns N physical Compute RAMs).
+/// A pool of blocks; tasks are executed on up to `len()` worker threads,
+/// each permanently bound to one block.
 pub struct BlockFarm {
     geometry: Geometry,
-    blocks: Mutex<Vec<CramBlock>>,
-    n_blocks: usize,
+    workers: Vec<Mutex<CramBlock>>,
+    cache: Arc<KernelCache>,
 }
 
 /// Result of one executed task.
@@ -37,11 +45,17 @@ pub struct TaskOutput {
 
 impl BlockFarm {
     pub fn new(geometry: Geometry, n_blocks: usize) -> Self {
+        Self::with_cache(geometry, n_blocks, Arc::new(KernelCache::new()))
+    }
+
+    /// Build a farm sharing an existing kernel cache (several farms — or a
+    /// farm and its server front-end — can amortize one compilation pool).
+    pub fn with_cache(geometry: Geometry, n_blocks: usize, cache: Arc<KernelCache>) -> Self {
         assert!(n_blocks >= 1);
         Self {
             geometry,
-            blocks: Mutex::new((0..n_blocks).map(|_| CramBlock::new(geometry)).collect()),
-            n_blocks,
+            workers: (0..n_blocks).map(|_| Mutex::new(CramBlock::new(geometry))).collect(),
+            cache,
         }
     }
 
@@ -50,32 +64,51 @@ impl BlockFarm {
     }
 
     pub fn len(&self) -> usize {
-        self.n_blocks
+        self.workers.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.n_blocks == 0
+        self.workers.is_empty()
     }
 
-    /// Execute one task on one checked-out block.
-    fn run_task(block: &mut CramBlock, task: &BlockTask) -> Result<(Vec<i64>, CycleStats)> {
+    /// The compiled-kernel cache all workers share.
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        &self.cache
+    }
+
+    /// Total instruction-memory loads across all blocks since construction
+    /// (observability: residency hits keep this flat across batches).
+    pub fn program_loads(&self) -> u64 {
+        self.workers.iter().map(|w| w.lock().unwrap().program_loads()).sum()
+    }
+
+    /// Compile (or fetch) the kernels for `keys` into the shared cache so
+    /// the first batch does not pay assembly.
+    pub fn prewarm(&self, keys: &[KernelKey]) {
+        for &key in keys {
+            self.cache.get(key);
+        }
+    }
+
+    /// Execute one task on one worker's block using cached kernels.
+    fn run_task(
+        block: &mut CramBlock,
+        cache: &KernelCache,
+        task: &BlockTask,
+    ) -> Result<(Vec<i64>, CycleStats)> {
+        let kernel = cache.get(task.key());
         match task {
-            BlockTask::IntElementwise { op, w, a, b } => {
-                use super::job::EwOp;
-                let r = match op {
-                    EwOp::Add => ops::int_addsub(block, a, b, *w, false)?,
-                    EwOp::Sub => ops::int_addsub(block, a, b, *w, true)?,
-                    EwOp::Mul => ops::int_mul(block, a, b, *w)?,
-                };
+            BlockTask::IntElementwise { a, b, .. } => {
+                let r = ops::int_ew_compiled(block, &kernel, a, b)?;
                 Ok((r.values, r.stats))
             }
-            BlockTask::IntDot { w, a, b, .. } => {
-                let r = ops::int_dot(block, a, b, *w, 32)?;
+            BlockTask::IntDot { a, b, .. } => {
+                let r = ops::int_dot_compiled(block, &kernel, a, b)?;
                 let n = a.first().map_or(0, Vec::len);
                 Ok((r.values[..n].to_vec(), r.stats))
             }
-            BlockTask::Bf16Elementwise { mul, a, b } => {
-                let r = ops::bf16_op(block, a, b, *mul)?;
+            BlockTask::Bf16Elementwise { a, b, .. } => {
+                let r = ops::bf16_ew_compiled(block, &kernel, a, b)?;
                 Ok((r.values.iter().map(|v| v.to_bits() as i64).collect(), r.stats))
             }
         }
@@ -87,22 +120,21 @@ impl BlockFarm {
         let outputs: Mutex<Vec<TaskOutput>> = Mutex::new(Vec::with_capacity(tasks.len()));
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
         std::thread::scope(|s| {
-            for _ in 0..self.n_blocks.min(tasks.len().max(1)) {
-                s.spawn(|| {
-                    // check out a block for this worker's lifetime
-                    let mut block = {
-                        let mut pool = self.blocks.lock().unwrap();
-                        match pool.pop() {
-                            Some(b) => b,
-                            None => return,
-                        }
-                    };
+            for worker in self.workers.iter().take(tasks.len().max(1)) {
+                let next = &next;
+                let outputs = &outputs;
+                let first_err = &first_err;
+                let cache = &self.cache;
+                s.spawn(move || {
+                    // this worker's persistent block (residency carries over
+                    // from previous batches)
+                    let mut block = worker.lock().unwrap();
                     loop {
                         let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         if i >= tasks.len() {
                             break;
                         }
-                        match Self::run_task(&mut block, &tasks[i]) {
+                        match Self::run_task(&mut block, cache, &tasks[i]) {
                             Ok((values, stats)) => outputs.lock().unwrap().push(TaskOutput {
                                 task_index: i,
                                 values,
@@ -114,7 +146,6 @@ impl BlockFarm {
                             }
                         }
                     }
-                    self.blocks.lock().unwrap().push(block);
                 });
             }
         });
@@ -131,10 +162,10 @@ impl BlockFarm {
     /// this returns both the sum (energy) and the critical path (time).
     pub fn aggregate(&self, outputs: &[TaskOutput]) -> (CycleStats, u64) {
         let total = merge_stats(outputs.iter().map(|o| o.stats));
-        // wave-based critical path: tasks execute in waves of n_blocks
+        // wave-based critical path: tasks execute in waves of len() blocks
         let mut wave_max = Vec::new();
         for (i, o) in outputs.iter().enumerate() {
-            let wave = i / self.n_blocks;
+            let wave = i / self.workers.len();
             if wave_max.len() <= wave {
                 wave_max.push(0u64);
             }
@@ -148,17 +179,19 @@ impl BlockFarm {
 mod tests {
     use super::*;
     use crate::coordinator::job::EwOp;
+    use crate::coordinator::mapper::ew_kernel_op;
+    use crate::exec::KernelOp;
+
+    fn ew_task(op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64>) -> BlockTask {
+        let key = KernelKey::int_ew_sized(ew_kernel_op(op), w, a.len(), Geometry::G512x40);
+        BlockTask::IntElementwise { key, a, b }
+    }
 
     #[test]
     fn farm_executes_tasks_in_parallel_and_orders_results() {
         let farm = BlockFarm::new(Geometry::G512x40, 4);
         let tasks: Vec<BlockTask> = (0..8)
-            .map(|i| BlockTask::IntElementwise {
-                op: EwOp::Add,
-                w: 8,
-                a: vec![i as i64; 10],
-                b: vec![1; 10],
-            })
+            .map(|i| ew_task(EwOp::Add, 8, vec![i as i64; 10], vec![1; 10]))
             .collect();
         let out = farm.execute(&tasks).unwrap();
         assert_eq!(out.len(), 8);
@@ -172,12 +205,7 @@ mod tests {
     fn aggregate_separates_energy_and_time() {
         let farm = BlockFarm::new(Geometry::G512x40, 2);
         let tasks: Vec<BlockTask> = (0..4)
-            .map(|_| BlockTask::IntElementwise {
-                op: EwOp::Add,
-                w: 4,
-                a: vec![1; 1680],
-                b: vec![2; 1680],
-            })
+            .map(|_| ew_task(EwOp::Add, 4, vec![1; 1680], vec![2; 1680]))
             .collect();
         let out = farm.execute(&tasks).unwrap();
         let (total, critical) = farm.aggregate(&out);
@@ -189,17 +217,42 @@ mod tests {
     fn single_block_farm_serializes() {
         let farm = BlockFarm::new(Geometry::G512x40, 1);
         let tasks: Vec<BlockTask> = (0..3)
-            .map(|_| BlockTask::IntElementwise {
-                op: EwOp::Mul,
-                w: 4,
-                a: vec![3; 5],
-                b: vec![-2; 5],
-            })
+            .map(|_| ew_task(EwOp::Mul, 4, vec![3; 5], vec![-2; 5]))
             .collect();
         let out = farm.execute(&tasks).unwrap();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|o| o.values.iter().all(|&v| v == -6)));
         let (total, critical) = farm.aggregate(&out);
         assert_eq!(critical, total.cycles);
+    }
+
+    #[test]
+    fn kernel_compiled_once_per_farm_and_resident_per_worker() {
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        let tasks: Vec<BlockTask> = (0..6)
+            .map(|_| ew_task(EwOp::Add, 8, vec![1; 40], vec![2; 40]))
+            .collect();
+        farm.execute(&tasks).unwrap();
+        let stats = farm.kernel_cache().stats();
+        assert_eq!(stats.misses, 1, "one shared compilation for 6 same-key tasks");
+        assert_eq!(stats.hits, 5);
+        // each worker loaded the program at most once
+        assert!(farm.program_loads() <= 2, "loads {}", farm.program_loads());
+        // more batches with the same key: zero new compilations, and loads
+        // stay bounded by the worker count (residency survives batches)
+        for _ in 0..3 {
+            farm.execute(&tasks).unwrap();
+        }
+        assert_eq!(farm.kernel_cache().stats().misses, 1);
+        assert!(farm.program_loads() <= 2, "loads {}", farm.program_loads());
+    }
+
+    #[test]
+    fn prewarm_populates_cache_without_running() {
+        let farm = BlockFarm::new(Geometry::G512x40, 1);
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, 8, Geometry::G512x40);
+        farm.prewarm(&[key]);
+        assert!(farm.kernel_cache().peek(key).is_some());
+        assert_eq!(farm.program_loads(), 0);
     }
 }

@@ -68,7 +68,13 @@ pub struct JobResult {
     /// Integer results (bf16 results are returned as raw bit patterns).
     pub values: Vec<i64>,
     /// Aggregate simulator statistics over all blocks that ran the job.
+    /// `stats.cycles` is the **sum** over block runs — the energy-relevant
+    /// total (see [`crate::coordinator::farm::merge_stats`]).
     pub stats: CycleStats,
+    /// Critical-path cycles: the per-wave **maximum** over concurrently
+    /// running blocks, summed over waves — the time-relevant count. For a
+    /// single-block run this equals `stats.cycles`.
+    pub critical_cycles: u64,
     /// Number of block-level program executions the job needed.
     pub block_runs: usize,
 }

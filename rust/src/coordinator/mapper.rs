@@ -13,15 +13,40 @@
 
 use super::job::{EwOp, JobPayload};
 use crate::bitline::Geometry;
-use crate::ucode::{DotLayout, VecLayout};
+use crate::exec::{KernelKey, KernelOp};
+use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
 
-/// One block-sized task.
+/// One block-sized task. Every task carries the [`KernelKey`] of the
+/// program that executes it, so the farm resolves tasks against the shared
+/// kernel cache instead of generating microcode per task. Chunks that fill
+/// a block share the full-block key; the final partial chunk gets a kernel
+/// sized to its element count (cheaper to run, separately cached).
 #[derive(Clone, Debug)]
 pub enum BlockTask {
-    IntElementwise { op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64> },
+    IntElementwise { key: KernelKey, a: Vec<i64>, b: Vec<i64> },
     /// Partial dot batch: contributes into `out[out_offset .. +n]`.
-    IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
-    Bf16Elementwise { mul: bool, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
+    IntDot { key: KernelKey, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
+    Bf16Elementwise { key: KernelKey, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
+}
+
+impl BlockTask {
+    /// The kernel this task runs.
+    pub fn key(&self) -> KernelKey {
+        match self {
+            BlockTask::IntElementwise { key, .. }
+            | BlockTask::IntDot { key, .. }
+            | BlockTask::Bf16Elementwise { key, .. } => *key,
+        }
+    }
+}
+
+/// Integer elementwise operator -> kernel op.
+pub(crate) fn ew_kernel_op(op: EwOp) -> KernelOp {
+    match op {
+        EwOp::Add => KernelOp::IntAdd,
+        EwOp::Sub => KernelOp::IntSub,
+        EwOp::Mul => KernelOp::IntMul,
+    }
 }
 
 /// Task list + reduction plan for a job.
@@ -39,6 +64,7 @@ pub struct Plan {
 pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
     match payload {
         JobPayload::IntElementwise { op, w, a, b } => {
+            let kop = ew_kernel_op(*op);
             let cap = match op {
                 EwOp::Mul => VecLayout::new(geom, *w, 2 * w).total_ops(),
                 _ => VecLayout::new(geom, *w, *w).total_ops(),
@@ -49,8 +75,7 @@ pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
             while off < a.len() {
                 let end = (off + cap).min(a.len());
                 tasks.push(BlockTask::IntElementwise {
-                    op: *op,
-                    w: *w,
+                    key: KernelKey::int_ew_sized(kop, *w, end - off, geom),
                     a: a[off..end].to_vec(),
                     b: b[off..end].to_vec(),
                 });
@@ -61,18 +86,14 @@ pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
         }
         JobPayload::Bf16Elementwise { mul, a, b } => {
             // bf16 layout caps tuples below the full geometry (scratch rows)
-            let cap = {
-                let mut l = VecLayout::new(geom, 16, 16);
-                l.ops_per_col = l.ops_per_col.min((geom.rows() - 32) / l.tuple_bits);
-                l.total_ops()
-            };
+            let cap = ucbf16::max_tuples(geom) * geom.cols();
             let mut tasks = Vec::new();
             let mut ew_offsets = Vec::new();
             let mut off = 0;
             while off < a.len() {
                 let end = (off + cap).min(a.len());
                 tasks.push(BlockTask::Bf16Elementwise {
-                    mul: *mul,
+                    key: KernelKey::bf16_ew_sized(*mul, end - off, geom),
                     a: a[off..end].to_vec(),
                     b: b[off..end].to_vec(),
                 });
@@ -130,7 +151,7 @@ fn plan_dot(
             let sub_b: Vec<Vec<i64>> =
                 b[k0..k1].iter().map(|row| row[c0..c1].to_vec()).collect();
             tasks.push(BlockTask::IntDot {
-                w,
+                key: KernelKey::int_dot(w, 32, k1 - k0, geom),
                 a: sub_a,
                 b: sub_b,
                 out_offset: base_offset + c0,
@@ -203,6 +224,39 @@ mod tests {
         let p = plan(Geometry::G512x40, &JobPayload::IntMatmul { w: 8, x, wt });
         assert_eq!(p.result_len, 24);
         assert_eq!(p.tasks.len(), 1); // 24 cols, k=8 fits
+    }
+
+    #[test]
+    fn chunk_kernels_share_full_block_key_except_tail() {
+        let geom = Geometry::G512x40;
+        let n = 4000; // int4 add: 1680 + 1680 + 640
+        let p = plan(
+            geom,
+            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
+        );
+        let keys: Vec<KernelKey> = p.tasks.iter().map(|t| t.key()).collect();
+        assert_eq!(keys.len(), 3);
+        assert_eq!(keys[0], KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        assert_eq!(keys[0], keys[1], "full chunks share one cached kernel");
+        assert_eq!(keys[2].tuples, 16, "tail chunk right-sized: 640 ops / 40 cols");
+    }
+
+    #[test]
+    fn dot_tasks_carry_segment_k_in_key() {
+        // K = 64 int8: segments of 30, 30, 4
+        let k = 64;
+        let a = vec![vec![1i64; 10]; k];
+        let b = vec![vec![1i64; 10]; k];
+        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 8, a, b });
+        let ks: Vec<u16> = p
+            .tasks
+            .iter()
+            .map(|t| match t.key().op {
+                KernelOp::IntDot { k, .. } => k,
+                other => panic!("wrong kernel op {other:?}"),
+            })
+            .collect();
+        assert_eq!(ks, vec![30, 30, 4]);
     }
 
     #[test]

@@ -8,8 +8,11 @@ pub struct Metrics {
     pub jobs_completed: AtomicU64,
     pub block_runs: AtomicU64,
     pub ops_executed: AtomicU64,
+    /// Summed block cycles (energy-relevant; see `farm::merge_stats`).
     pub sim_cycles: AtomicU64,
     pub sim_array_cycles: AtomicU64,
+    /// Summed per-job critical paths (time-relevant wave maxima).
+    pub sim_critical_cycles: AtomicU64,
 }
 
 impl Metrics {
@@ -17,23 +20,32 @@ impl Metrics {
         Self::default()
     }
 
-    pub fn record_job(&self, ops: u64, block_runs: u64, cycles: u64, array_cycles: u64) {
+    pub fn record_job(
+        &self,
+        ops: u64,
+        block_runs: u64,
+        cycles: u64,
+        array_cycles: u64,
+        critical_cycles: u64,
+    ) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.block_runs.fetch_add(block_runs, Ordering::Relaxed);
         self.ops_executed.fetch_add(ops, Ordering::Relaxed);
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         self.sim_array_cycles.fetch_add(array_cycles, Ordering::Relaxed);
+        self.sim_critical_cycles.fetch_add(critical_cycles, Ordering::Relaxed);
     }
 
     /// One-line text snapshot.
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs={} block_runs={} ops={} cycles={} array_cycles={}",
+            "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
             self.sim_cycles.load(Ordering::Relaxed),
             self.sim_array_cycles.load(Ordering::Relaxed),
+            self.sim_critical_cycles.load(Ordering::Relaxed),
         )
     }
 }
@@ -45,11 +57,13 @@ mod tests {
     #[test]
     fn record_accumulates() {
         let m = Metrics::new();
-        m.record_job(100, 2, 500, 400);
-        m.record_job(50, 1, 250, 200);
+        m.record_job(100, 2, 500, 400, 260);
+        m.record_job(50, 1, 250, 200, 250);
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
         assert_eq!(m.ops_executed.load(Ordering::Relaxed), 150);
+        assert_eq!(m.sim_critical_cycles.load(Ordering::Relaxed), 510);
         assert!(m.snapshot().contains("jobs=2"));
+        assert!(m.snapshot().contains("critical_cycles=510"));
     }
 }

@@ -13,11 +13,13 @@
 //! * [`mapper`] — splits a job into per-block tasks honoring each block's
 //!   packed capacity, including K-axis splitting for dot products longer
 //!   than a column (partial sums reduced on the host side, as the external
-//!   logic would);
-//! * [`farm`] — a pool of [`crate::cram::CramBlock`] simulators executed on
-//!   worker threads;
+//!   logic would); every task carries the [`crate::exec::KernelKey`] of
+//!   the program that executes it;
+//! * [`farm`] — worker threads each bound to one persistent
+//!   [`crate::cram::CramBlock`], resolving tasks against a shared
+//!   [`crate::exec::KernelCache`] with program residency;
 //! * [`scheduler`] — dispatches tasks to free blocks and aggregates
-//!   metrics;
+//!   metrics (summed cycles for energy, wave-max critical path for time);
 //! * [`server`] — a TCP/JSON batching front-end (PIM-as-a-service), the
 //!   shape of a vLLM-style router: requests are coalesced into full blocks
 //!   before dispatch;

@@ -9,7 +9,9 @@ use super::job::{Job, JobPayload, JobResult};
 use super::mapper::{self, BlockTask};
 use super::metrics::Metrics;
 use crate::bitline::Geometry;
+use crate::exec::{KernelCache, KernelKey, KernelOp};
 use anyhow::Result;
+use std::collections::HashSet;
 use std::sync::Arc;
 
 /// The top-level coordinator.
@@ -30,11 +32,49 @@ impl Coordinator {
         &self.farm
     }
 
+    /// The farm's shared compiled-kernel cache.
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        self.farm.kernel_cache()
+    }
+
+    /// Compile every kernel a job of `payload`'s shape will need, without
+    /// running anything. Layers and servers call this at construction so
+    /// the first real batch pays no assembly. Returns the number of
+    /// distinct kernels.
+    pub fn precompile(&self, payload: &JobPayload) -> usize {
+        let plan = mapper::plan(self.farm.geometry(), payload);
+        let mut seen: HashSet<KernelKey> = HashSet::new();
+        for task in &plan.tasks {
+            if seen.insert(task.key()) {
+                self.farm.kernel_cache().get(task.key());
+            }
+        }
+        seen.len()
+    }
+
+    /// Pre-compile the full-block elementwise kernels (add/sub/mul, widths
+    /// 2..=16) that the body chunks of the batching server's coalesced
+    /// requests resolve to. Sub-block tail chunks use batch-sized kernels
+    /// that are compiled on first sight of each size (and cached from then
+    /// on) — their sizes are not knowable ahead of traffic. Returns the
+    /// number of kernels warmed.
+    pub fn prewarm_serving(&self) -> usize {
+        let geom = self.farm.geometry();
+        let mut n = 0;
+        for w in 2..=16u32 {
+            for op in [KernelOp::IntAdd, KernelOp::IntSub, KernelOp::IntMul] {
+                self.farm.kernel_cache().get(KernelKey::int_ew_full(op, w, geom));
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// Execute a job to completion.
     pub fn run(&self, job: Job) -> Result<JobResult> {
         let plan = mapper::plan(self.farm.geometry(), &job.payload);
         let outputs = self.farm.execute(&plan.tasks)?;
-        let (total, _critical) = self.farm.aggregate(&outputs);
+        let (total, critical) = self.farm.aggregate(&outputs);
 
         let mut values = vec![0i64; plan.result_len];
         for (out, task) in outputs.iter().zip(&plan.tasks) {
@@ -59,11 +99,13 @@ impl Coordinator {
             plan.tasks.len() as u64,
             total.cycles,
             total.array_cycles,
+            critical,
         );
         Ok(JobResult {
             id: job.id,
             values,
             stats: total,
+            critical_cycles: critical,
             block_runs: plan.tasks.len(),
         })
     }
@@ -172,6 +214,86 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert!(snap.contains("jobs=3"), "{snap}");
         assert!(snap.contains("ops=150"), "{snap}");
+    }
+
+    #[test]
+    fn job_result_reports_time_and_energy_separately() {
+        // 2 equal full blocks on 1 worker: critical path == summed cycles;
+        // the wave max only diverges from the sum with real concurrency
+        let c = Coordinator::new(Geometry::G512x40, 1);
+        let n = 1680 * 2;
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 4,
+                    a: vec![1; n],
+                    b: vec![1; n],
+                },
+            })
+            .unwrap();
+        assert_eq!(r.block_runs, 2);
+        assert_eq!(r.critical_cycles, r.stats.cycles);
+
+        let c4 = Coordinator::new(Geometry::G512x40, 4);
+        let r4 = c4
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 4,
+                    a: vec![1; 1680 * 4],
+                    b: vec![1; 1680 * 4],
+                },
+            })
+            .unwrap();
+        // 4 equal tasks in one wave of 4 blocks: time = cycles of one block
+        assert_eq!(r4.critical_cycles * 4, r4.stats.cycles);
+        assert!(c4.metrics.snapshot().contains("critical_cycles="));
+    }
+
+    #[test]
+    fn repeated_jobs_hit_the_kernel_cache_without_reloads() {
+        let c = Coordinator::new(Geometry::G512x40, 1);
+        let job = || Job {
+            id: 0,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Mul,
+                w: 8,
+                a: vec![3; 100],
+                b: vec![-2; 100],
+            },
+        };
+        c.run(job()).unwrap();
+        assert_eq!(c.kernel_cache().stats().misses, 1);
+        assert_eq!(c.farm().program_loads(), 1);
+        for _ in 0..4 {
+            c.run(job()).unwrap();
+        }
+        assert_eq!(c.kernel_cache().stats().misses, 1, "no re-assembly on repeats");
+        assert_eq!(c.farm().program_loads(), 1, "no reload on repeats");
+    }
+
+    #[test]
+    fn precompile_covers_a_matmul_without_running() {
+        let c = coord();
+        let payload = JobPayload::IntMatmul {
+            w: 8,
+            x: vec![vec![0; 64]; 1],
+            wt: vec![vec![0; 8]; 64],
+        };
+        let kernels = c.precompile(&payload);
+        // K=64 int8 -> segments 30+30+4; the two K=30 segments share a key
+        assert_eq!(kernels, 2);
+        assert_eq!(c.farm().program_loads(), 0);
+        let misses = c.kernel_cache().stats().misses;
+        // the real job now compiles nothing new
+        let mut rng = Prng::new(5);
+        let x: Vec<Vec<i64>> = (0..4).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect();
+        let wt: Vec<Vec<i64>> = (0..64).map(|_| (0..8).map(|_| rng.int(8)).collect()).collect();
+        c.matmul(&x, &wt, 8).unwrap();
+        assert_eq!(c.kernel_cache().stats().misses, misses);
     }
 
     #[test]

@@ -37,7 +37,22 @@ pub struct Request {
     pub b: Vec<i64>,
 }
 
-/// Parse one request line.
+/// Best-effort extraction of a request id from a line that may otherwise
+/// be invalid, so error responses can carry the client's own id (a client
+/// multiplexing requests over one connection cannot correlate an error
+/// reported against id 0).
+pub fn recover_request_id(line: &str) -> u64 {
+    Json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(Json::as_i64))
+        .map(|id| id as u64)
+        .unwrap_or(0)
+}
+
+/// Parse one request line. Validation (op, width, operand range, and the
+/// `a`/`b` length match) happens here, per request — a malformed request
+/// gets its own JSON error instead of failing deep inside `cram::ops`
+/// where it would poison a whole coalesced batch.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let id = v.get("id").and_then(Json::as_i64).ok_or_else(|| anyhow!("missing id"))? as u64;
@@ -157,8 +172,13 @@ pub struct PimServer {
 }
 
 impl PimServer {
-    /// Start on an OS-assigned port on localhost.
+    /// Start on an OS-assigned port on localhost. The coordinator's kernel
+    /// cache is prewarmed with the full-block elementwise kernels, so the
+    /// block-filling chunks of coalesced batches never pay microcode
+    /// assembly; a batch's tail chunk compiles one sized kernel on first
+    /// sight of that size and is a cache hit thereafter.
     pub fn start(coordinator: Arc<Coordinator>, max_batch_wait: Duration) -> Result<PimServer> {
+        coordinator.prewarm_serving();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -249,7 +269,8 @@ fn handle_conn(stream: TcpStream, tx: Sender<Work>) -> Result<()> {
                 writeln!(writer, "{resp}")?;
             }
             Err(e) => {
-                writeln!(writer, "{}", format_error(0, &format!("{e}")))?;
+                let id = recover_request_id(trimmed);
+                writeln!(writer, "{}", format_error(id, &format!("{e}")))?;
             }
         }
     }
@@ -327,6 +348,51 @@ mod tests {
         reader.read_line(&mut resp).unwrap();
         let v = Json::parse(resp.trim()).unwrap();
         assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        server.stop();
+    }
+
+    #[test]
+    fn length_mismatch_is_a_per_request_error_with_the_request_id() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        // bad request: a/b lengths differ -> its own JSON error, own id
+        writeln!(conn, r#"{{"id": 42, "op": "add", "w": 8, "a": [1, 2], "b": [1]}}"#).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        let v = Json::parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("id").and_then(Json::as_i64), Some(42));
+        assert!(
+            v.get("error").and_then(Json::as_str).unwrap().contains("length mismatch"),
+            "{resp}"
+        );
+        // the connection (and server) survives: a good request still works
+        writeln!(conn, r#"{{"id": 43, "op": "add", "w": 8, "a": [1, 2], "b": [1, 1]}}"#).unwrap();
+        let mut resp2 = String::new();
+        reader.read_line(&mut resp2).unwrap();
+        let v2 = Json::parse(resp2.trim()).unwrap();
+        assert_eq!(v2.get("ok"), Some(&Json::Bool(true)), "{resp2}");
+        assert_eq!(v2.get("id").and_then(Json::as_i64), Some(43));
+        server.stop();
+    }
+
+    #[test]
+    fn recover_request_id_is_best_effort() {
+        assert_eq!(recover_request_id(r#"{"id": 9, "op": "div"}"#), 9);
+        assert_eq!(recover_request_id("not json"), 0);
+        assert_eq!(recover_request_id(r#"{"op": "add"}"#), 0);
+    }
+
+    #[test]
+    fn server_start_prewarms_serving_kernels() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
+        assert!(coord.kernel_cache().is_empty());
+        let server = PimServer::start(coord.clone(), Duration::from_millis(5)).unwrap();
+        // add/sub/mul x widths 2..=16
+        assert_eq!(coord.kernel_cache().len(), 45);
         server.stop();
     }
 }

@@ -24,9 +24,10 @@ pub mod ops;
 
 use crate::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use crate::ctrl::{Controller, CycleStats, InstrMem};
+use crate::exec::CompiledKernel;
 use crate::ucode::Program;
 use crate::util::LaneVec;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Address-space bit that routes storage-mode accesses to the instruction
 /// memory (the paper shares the array's address/data bus for run-time
@@ -52,6 +53,10 @@ pub struct CramBlock {
     running: bool,
     /// Cumulative stats across `start`s since construction (metrics).
     total_stats: CycleStats,
+    /// Instruction-memory loads since construction (any path: config,
+    /// residency-aware, chained). The kernel-cache tests observe this to
+    /// prove cache hits skip `load_program` entirely.
+    program_loads: u64,
 }
 
 impl CramBlock {
@@ -65,6 +70,7 @@ impl CramBlock {
             mode: Mode::Storage,
             running: false,
             total_stats: CycleStats::default(),
+            program_loads: 0,
         }
     }
 
@@ -135,7 +141,38 @@ impl CramBlock {
 
     /// Configuration-time program load (FPGA bitstream path; any mode).
     pub fn load_program(&mut self, prog: &Program) -> Result<()> {
+        self.program_loads += 1;
         self.imem.load_config(&prog.instrs)
+    }
+
+    /// Residency-aware program load: a no-op when the block already holds
+    /// `kernel`'s program (the id comparison is exact — two compilations of
+    /// the same key have distinct ids, so sharing through a
+    /// [`crate::exec::KernelCache`] is what makes hits possible). Returns
+    /// `true` if the instruction memory was actually (re)loaded.
+    ///
+    /// Any other write to the instruction memory — [`Self::load_program`],
+    /// [`Self::write_imem_word`], the chained-phase reloads of
+    /// [`Self::run_chained`] — invalidates residency (see
+    /// [`crate::ctrl::InstrMem`]).
+    pub fn ensure_kernel(&mut self, kernel: &CompiledKernel) -> Result<bool> {
+        ensure!(
+            kernel.phases.len() == 1,
+            "multi-phase kernel {} cannot be made resident; use run_chained",
+            kernel.name()
+        );
+        if self.imem.resident_kernel() == Some(kernel.id()) {
+            return Ok(false);
+        }
+        self.program_loads += 1;
+        self.imem.load_config(&kernel.program().instrs)?;
+        self.imem.mark_resident(kernel.id());
+        Ok(true)
+    }
+
+    /// Instruction-memory loads since construction (cache observability).
+    pub fn program_loads(&self) -> u64 {
+        self.program_loads
     }
 
     // ---- compute-mode ports ---------------------------------------------------
@@ -191,6 +228,7 @@ impl CramBlock {
         let mut total = CycleStats::default();
         for prog in programs {
             self.set_mode(Mode::Storage)?;
+            self.program_loads += 1;
             for (i, instr) in prog.instrs.iter().enumerate() {
                 self.write_imem_word(i, instr.encode())?;
             }
@@ -322,6 +360,26 @@ mod tests {
         b.set_mode(Mode::Compute).unwrap();
         b.start().unwrap();
         assert!(b.set_mode(Mode::Storage).is_err());
+    }
+
+    #[test]
+    fn ensure_kernel_skips_reload_when_resident() {
+        use crate::exec::{CompiledKernel, KernelKey, KernelOp};
+        let geom = Geometry::G512x40;
+        let mut b = CramBlock::new(geom);
+        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        assert!(b.ensure_kernel(&kernel).unwrap());
+        assert_eq!(b.program_loads(), 1);
+        assert!(!b.ensure_kernel(&kernel).unwrap(), "resident kernel must not reload");
+        assert_eq!(b.program_loads(), 1);
+        // a second compilation of the same key has a distinct id: no false hit
+        let other = CompiledKernel::compile(kernel.key);
+        assert!(b.ensure_kernel(&other).unwrap());
+        assert_eq!(b.program_loads(), 2);
+        // any imem write invalidates residency
+        b.write_imem_word(0, Instr::Halt.encode()).unwrap();
+        assert!(b.ensure_kernel(&other).unwrap());
+        assert_eq!(b.program_loads(), 3);
     }
 
     #[test]

@@ -1,15 +1,30 @@
-//! High-level block operations: stage operands, run the microcode, read
+//! High-level block operations: stage operands, run a compiled kernel, read
 //! results.
 //!
 //! These helpers play the role of the paper's "external logic (e.g. a state
 //! machine implemented in LBs)" §III-B: configure storage mode, load data,
 //! flip to compute mode, pulse `start`, wait for `done`, read back. The
 //! coordinator builds on these; examples and tests use them directly.
+//!
+//! ## Plan/execute split
+//!
+//! Each operation comes in two forms:
+//!
+//! * the `*_compiled` entry points take a pre-assembled
+//!   [`CompiledKernel`] (from a [`KernelCache`]) and only **stage + run +
+//!   read back** — no microcode generation on this path, and the
+//!   instruction-memory load is skipped when the block already holds the
+//!   kernel ([`CramBlock::ensure_kernel`]);
+//! * the legacy-named wrappers ([`int_addsub`], [`int_mul`], [`int_dot`],
+//!   [`bf16_op`], [`bf16_mac`]) keep the original signatures and compile
+//!   full-block kernels through the process-wide [`KernelCache::global`],
+//!   so their cycle accounting is unchanged from the pre-cache code while
+//!   repeated calls stop paying assembly.
 
 use super::{CramBlock, Mode};
 use crate::bitline::transpose;
 use crate::ctrl::CycleStats;
-use crate::ucode::{self, bf16 as ucbf16};
+use crate::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
 use crate::util::SoftBf16;
 use anyhow::{ensure, Result};
 
@@ -24,106 +39,108 @@ pub struct OpResult<T> {
 /// Generic cycle budget for one block program (well above any real program).
 const BUDGET: u64 = 50_000_000;
 
-/// Elementwise integer add/sub on one block. `n` must not exceed the
-/// block's packed capacity ([`ucode::VecLayout::total_ops`]).
-pub fn int_addsub(
+/// Check that `kernel` was compiled for `block`'s geometry.
+fn check_geometry(block: &CramBlock, kernel: &CompiledKernel) -> Result<()> {
+    ensure!(
+        kernel.key.geometry == block.geometry(),
+        "kernel {} compiled for {:?}, block is {:?}",
+        kernel.name(),
+        kernel.key.geometry,
+        block.geometry()
+    );
+    Ok(())
+}
+
+/// Integer elementwise add/sub/mul with a pre-compiled kernel: stage the
+/// operands, make the program resident, run, read back.
+pub fn int_ew_compiled(
     block: &mut CramBlock,
+    kernel: &CompiledKernel,
     a: &[i64],
     b: &[i64],
-    w: u32,
-    subtract: bool,
 ) -> Result<OpResult<i64>> {
     ensure!(a.len() == b.len(), "operand length mismatch");
-    let geom = block.geometry();
-    let (prog, l) = if subtract {
-        ucode::int::sub(geom, w)
-    } else {
-        ucode::int::add(geom, w)
-    };
-    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    ensure!(
+        kernel.key.op.is_int_ew(),
+        "kernel {} is not an integer elementwise kernel",
+        kernel.name()
+    );
+    check_geometry(block, kernel)?;
+    let l = kernel.vec_layout()?;
+    ensure!(a.len() <= l.total_ops(), "operands exceed kernel capacity");
     block.set_mode(Mode::Storage)?;
-    transpose::store_ints(block.array_mut(), a, w, 0, l.tuple_bits);
-    transpose::store_ints(block.array_mut(), b, w, l.w as usize, l.tuple_bits);
-    block.load_program(&prog)?;
+    transpose::store_ints(block.array_mut(), a, l.w, 0, l.tuple_bits);
+    transpose::store_ints(block.array_mut(), b, l.w, l.w as usize, l.tuple_bits);
+    block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
     let stats = block.run_to_done(BUDGET)?;
     block.set_mode(Mode::Storage)?;
     let values =
-        transpose::load_ints(block.array(), a.len(), w, 2 * w as usize, l.tuple_bits);
+        transpose::load_ints(block.array(), a.len(), l.result_w, l.r_row(0), l.tuple_bits);
     Ok(OpResult { values, stats })
 }
 
-/// Elementwise signed multiply (W x W -> 2W) on one block.
-pub fn int_mul(block: &mut CramBlock, a: &[i64], b: &[i64], w: u32) -> Result<OpResult<i64>> {
-    ensure!(a.len() == b.len(), "operand length mismatch");
-    let geom = block.geometry();
-    let (prog, l) = ucode::int::mul(geom, w);
-    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
-    block.set_mode(Mode::Storage)?;
-    transpose::store_ints(block.array_mut(), a, w, 0, l.tuple_bits);
-    transpose::store_ints(block.array_mut(), b, w, l.w as usize, l.tuple_bits);
-    block.load_program(&prog)?;
-    block.set_mode(Mode::Compute)?;
-    let stats = block.run_to_done(BUDGET)?;
-    block.set_mode(Mode::Storage)?;
-    let values = transpose::load_ints(
-        block.array(),
-        a.len(),
-        2 * w,
-        2 * w as usize,
-        l.tuple_bits,
-    );
-    Ok(OpResult { values, stats })
-}
-
-/// Per-column dot products: `a[k][c] . b[k][c]` summed over `k`, one result
-/// per column `c` (up to `cols` independent dot products).
-pub fn int_dot(
+/// Per-column dot products with a pre-compiled kernel. The kernel's K must
+/// match `a.len()` exactly (K is part of the [`KernelKey`]).
+pub fn int_dot_compiled(
     block: &mut CramBlock,
+    kernel: &CompiledKernel,
     a: &[Vec<i64>],
     b: &[Vec<i64>],
-    w: u32,
-    acc_w: u32,
 ) -> Result<OpResult<i64>> {
     ensure!(a.len() == b.len(), "K mismatch");
-    let k = a.len();
-    ensure!(k >= 1, "empty dot product");
-    let geom = block.geometry();
-    let (prog, l) = ucode::int::dot(geom, w, acc_w, k);
-    let cols = l.cols;
-    ensure!(a.iter().chain(b.iter()).all(|r| r.len() <= cols), "too many columns");
+    ensure!(!a.is_empty(), "empty dot product");
+    check_geometry(block, kernel)?;
+    let l = kernel.dot_layout()?;
+    ensure!(
+        l.k == a.len(),
+        "kernel {} compiled for K={}, got K={}",
+        kernel.name(),
+        l.k,
+        a.len()
+    );
+    ensure!(
+        a.iter().chain(b.iter()).all(|r| r.len() <= l.cols),
+        "too many columns"
+    );
     block.set_mode(Mode::Storage)?;
-    transpose::store_dot_operand(block.array_mut(), a, w, 0, l.pair_bits);
-    transpose::store_dot_operand(block.array_mut(), b, w, l.w as usize, l.pair_bits);
-    block.load_program(&prog)?;
+    transpose::store_dot_operand(block.array_mut(), a, l.w, 0, l.pair_bits);
+    transpose::store_dot_operand(block.array_mut(), b, l.w, l.w as usize, l.pair_bits);
+    block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
     let stats = block.run_to_done(BUDGET)?;
     block.set_mode(Mode::Storage)?;
-    let values = transpose::load_ints(block.array(), a[0].len(), acc_w, l.acc_row, 0);
+    let values = transpose::load_ints(block.array(), a[0].len(), l.acc_w, l.acc_row, 0);
     Ok(OpResult { values, stats })
 }
 
-/// Elementwise bfloat16 add/mul on one block.
+/// Elementwise bfloat16 add/mul with a pre-compiled kernel.
 ///
-/// Timing comes from executing the real [`ucbf16`] schedule on the
-/// controller; the result **values** come from the [`SoftBf16`] functional
-/// model (bit-identical to the XLA golden artifacts) and are deposited in
-/// the result rows, per the timing-directed functional split documented in
-/// [`crate::ucode::bf16`].
-pub fn bf16_op(
+/// Timing comes from executing the real schedule on the controller; the
+/// result **values** come from the [`SoftBf16`] functional model
+/// (bit-identical to the XLA golden artifacts) and are deposited in the
+/// result rows, per the timing-directed functional split documented in
+/// [`crate::ucode::bf16`] and `DESIGN.md` §Fidelity.
+pub fn bf16_ew_compiled(
     block: &mut CramBlock,
+    kernel: &CompiledKernel,
     a: &[SoftBf16],
     b: &[SoftBf16],
-    mul: bool,
 ) -> Result<OpResult<SoftBf16>> {
     ensure!(a.len() == b.len(), "operand length mismatch");
-    let geom = block.geometry();
-    let (prog, l) = if mul { ucbf16::mul(geom) } else { ucbf16::add(geom) };
-    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
+    ensure!(
+        kernel.key.op.is_bf16_ew(),
+        "kernel {} is not a bf16 elementwise kernel",
+        kernel.name()
+    );
+    check_geometry(block, kernel)?;
+    let l = kernel.vec_layout()?;
+    ensure!(a.len() <= l.total_ops(), "operands exceed kernel capacity");
+    let mul = kernel.key.op == KernelOp::Bf16Mul;
     block.set_mode(Mode::Storage)?;
     transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
     transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
-    block.load_program(&prog)?;
+    block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
     let stats = block.run_to_done(BUDGET)?;
     block.set_mode(Mode::Storage)?;
@@ -137,6 +154,96 @@ pub fn bf16_op(
     Ok(OpResult { values, stats })
 }
 
+/// Elementwise bfloat16 MAC (`c + a*b`) with a pre-compiled two-phase
+/// kernel; the phases run back-to-back with a dynamic instruction-memory
+/// reload between them (§III-A.2), so residency does not apply — only the
+/// assembly is amortized.
+pub fn bf16_mac_compiled(
+    block: &mut CramBlock,
+    kernel: &CompiledKernel,
+    a: &[SoftBf16],
+    b: &[SoftBf16],
+    c: &[SoftBf16],
+) -> Result<OpResult<SoftBf16>> {
+    ensure!(a.len() == b.len() && b.len() == c.len(), "operand length mismatch");
+    ensure!(
+        kernel.key.op == KernelOp::Bf16Mac,
+        "kernel {} is not a bf16 MAC kernel",
+        kernel.name()
+    );
+    check_geometry(block, kernel)?;
+    let l = kernel.vec_layout()?;
+    ensure!(a.len() <= l.total_ops(), "operands exceed kernel capacity");
+    block.set_mode(Mode::Storage)?;
+    transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
+    transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
+    transpose::store_bf16(block.array_mut(), c, 32, l.tuple_bits);
+    let stats = block.run_chained(&kernel.phases, BUDGET)?;
+    block.set_mode(Mode::Storage)?;
+    let values: Vec<SoftBf16> =
+        a.iter().zip(b).zip(c).map(|((&x, &y), &z)| z.mac(x, y)).collect();
+    transpose::store_bf16(block.array_mut(), &values, 32, l.tuple_bits);
+    Ok(OpResult { values, stats })
+}
+
+// ---- legacy-named wrappers (full-block kernels via the global cache) -------
+
+/// Elementwise integer add/sub on one block. `n` must not exceed the
+/// block's packed capacity ([`crate::ucode::VecLayout::total_ops`]).
+pub fn int_addsub(
+    block: &mut CramBlock,
+    a: &[i64],
+    b: &[i64],
+    w: u32,
+    subtract: bool,
+) -> Result<OpResult<i64>> {
+    let op = if subtract { KernelOp::IntSub } else { KernelOp::IntAdd };
+    let kernel = KernelCache::global().get(KernelKey::int_ew_full(op, w, block.geometry()));
+    int_ew_compiled(block, &kernel, a, b)
+}
+
+/// Elementwise signed multiply (W x W -> 2W) on one block.
+pub fn int_mul(block: &mut CramBlock, a: &[i64], b: &[i64], w: u32) -> Result<OpResult<i64>> {
+    let kernel = KernelCache::global()
+        .get(KernelKey::int_ew_full(KernelOp::IntMul, w, block.geometry()));
+    int_ew_compiled(block, &kernel, a, b)
+}
+
+/// Per-column dot products: `a[k][c] . b[k][c]` summed over `k`, one result
+/// per column `c` (up to `cols` independent dot products).
+pub fn int_dot(
+    block: &mut CramBlock,
+    a: &[Vec<i64>],
+    b: &[Vec<i64>],
+    w: u32,
+    acc_w: u32,
+) -> Result<OpResult<i64>> {
+    ensure!(!a.is_empty(), "empty dot product");
+    // validate K up front: the layout/generator assert on overflow, and an
+    // oversized K should be a per-call error, not a panic
+    let max_k = crate::ucode::DotLayout::max_k(block.geometry(), w, acc_w).k;
+    ensure!(
+        a.len() <= max_k,
+        "dot K={} exceeds block capacity {max_k} (w={w}, acc_w={acc_w})",
+        a.len()
+    );
+    let kernel = KernelCache::global()
+        .get(KernelKey::int_dot(w, acc_w, a.len(), block.geometry()));
+    int_dot_compiled(block, &kernel, a, b)
+}
+
+/// Elementwise bfloat16 add/mul on one block (see [`bf16_ew_compiled`] for
+/// the timing/functional split).
+pub fn bf16_op(
+    block: &mut CramBlock,
+    a: &[SoftBf16],
+    b: &[SoftBf16],
+    mul: bool,
+) -> Result<OpResult<SoftBf16>> {
+    let kernel = KernelCache::global().get(KernelKey::bf16_ew_full(mul, block.geometry()));
+    bf16_ew_compiled(block, &kernel, a, b)
+}
+
 /// Elementwise bfloat16 MAC (`c + a*b`), two-phase schedule with a dynamic
 /// instruction-memory reload between phases (§III-A.2).
 pub fn bf16_mac(
@@ -145,20 +252,8 @@ pub fn bf16_mac(
     b: &[SoftBf16],
     c: &[SoftBf16],
 ) -> Result<OpResult<SoftBf16>> {
-    ensure!(a.len() == b.len() && b.len() == c.len(), "operand length mismatch");
-    let geom = block.geometry();
-    let (phases, l) = ucbf16::mac(geom);
-    ensure!(a.len() <= l.total_ops(), "operands exceed block capacity");
-    block.set_mode(Mode::Storage)?;
-    transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
-    transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
-    transpose::store_bf16(block.array_mut(), c, 32, l.tuple_bits);
-    let stats = block.run_chained(&phases, BUDGET)?;
-    block.set_mode(Mode::Storage)?;
-    let values: Vec<SoftBf16> =
-        a.iter().zip(b).zip(c).map(|((&x, &y), &z)| z.mac(x, y)).collect();
-    transpose::store_bf16(block.array_mut(), &values, 32, l.tuple_bits);
-    Ok(OpResult { values, stats })
+    let kernel = KernelCache::global().get(KernelKey::bf16_mac(block.geometry()));
+    bf16_mac_compiled(block, &kernel, a, b, c)
 }
 
 #[cfg(test)]
@@ -226,5 +321,70 @@ mod tests {
         assert_eq!(r1.values, vec![4, 6]);
         let r2 = int_mul(&mut b, &[5, -5], &[3, 3], 4).unwrap();
         assert_eq!(r2.values, vec![15, -15]);
+    }
+
+    #[test]
+    fn compiled_path_skips_reload_on_second_op() {
+        let geom = Geometry::G512x40;
+        let cache = KernelCache::new();
+        let kernel = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
+        let mut b = CramBlock::new(geom);
+        let r1 = int_ew_compiled(&mut b, &kernel, &[1, 2], &[3, 4]).unwrap();
+        assert_eq!(r1.values, vec![4, 6]);
+        let loads = b.program_loads();
+        assert_eq!(loads, 1);
+        // same kernel again: zero re-assembly (cache) and zero reload (residency)
+        let kernel2 = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
+        let r2 = int_ew_compiled(&mut b, &kernel2, &[10, -5], &[1, 5]).unwrap();
+        assert_eq!(r2.values, vec![11, 0]);
+        assert_eq!(b.program_loads(), loads, "second op must not reload imem");
+        assert_eq!(cache.stats().misses, 1, "second op must not re-assemble");
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn sized_kernel_costs_less_than_full_block() {
+        // the plan/execute split right-sizes the program to the batch: a
+        // one-slot kernel must run far fewer array cycles than the
+        // full-block sweep the legacy path uses
+        let geom = Geometry::G512x40;
+        let cache = KernelCache::new();
+        let sized = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
+        let full = cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, geom));
+        let a = vec![3i64; 40];
+        let b = vec![4i64; 40];
+        let mut blk = CramBlock::new(geom);
+        let r_sized = int_ew_compiled(&mut blk, &sized, &a, &b).unwrap();
+        let r_full = int_ew_compiled(&mut blk, &full, &a, &b).unwrap();
+        assert_eq!(r_sized.values, r_full.values);
+        assert_eq!(r_sized.stats.array_cycles, 9); // 1 tuple x (W+1)
+        assert_eq!(r_full.stats.array_cycles, 21 * 9);
+    }
+
+    #[test]
+    fn kernel_geometry_mismatch_rejected() {
+        let cache = KernelCache::new();
+        let kernel = cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, Geometry::G1024x20));
+        let mut b = CramBlock::new(Geometry::G512x40);
+        assert!(int_ew_compiled(&mut b, &kernel, &[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn oversized_dot_k_is_an_error_not_a_panic() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let a = vec![vec![1i64; 4]; 31]; // int8 max K = 30 on 512 rows
+        assert!(int_dot(&mut b, &a, &a, 8, 32).is_err());
+        // the shared cache survives and the block still works
+        assert!(int_addsub(&mut b, &[1], &[2], 8, false).is_ok());
+    }
+
+    #[test]
+    fn dot_kernel_k_mismatch_rejected() {
+        let cache = KernelCache::new();
+        let geom = Geometry::G512x40;
+        let kernel = cache.get(KernelKey::int_dot(8, 32, 4, geom));
+        let mut b = CramBlock::new(geom);
+        let a = vec![vec![1i64; 4]; 3]; // K = 3, kernel wants 4
+        assert!(int_dot_compiled(&mut b, &kernel, &a, &a).is_err());
     }
 }

@@ -30,6 +30,12 @@ pub struct InstrMem {
     /// Number of valid instructions after the last `load_config` (for
     /// reporting only; execution is bounded by `Halt`).
     loaded_len: usize,
+    /// Residency hook for the exec layer: the id of the compiled kernel
+    /// whose program currently occupies this memory, if any. Any write
+    /// (config load or run-time bus write) clears it; only
+    /// [`InstrMem::mark_resident`] sets it. Purely host-side bookkeeping —
+    /// no modeled hardware state.
+    resident: Option<u64>,
 }
 
 impl Default for InstrMem {
@@ -41,7 +47,12 @@ impl Default for InstrMem {
 impl InstrMem {
     pub fn new() -> Self {
         // Fill with the reserved opcode 0x0000 so runaway fetches fault.
-        Self { words: [0; IMEM_CAPACITY], decoded: [None; IMEM_CAPACITY], loaded_len: 0 }
+        Self {
+            words: [0; IMEM_CAPACITY],
+            decoded: [None; IMEM_CAPACITY],
+            loaded_len: 0,
+            resident: None,
+        }
     }
 
     /// Configuration-time load of a whole program.
@@ -60,6 +71,7 @@ impl InstrMem {
             self.decoded[i] = Some(*instr);
         }
         self.loaded_len = prog.len();
+        self.resident = None;
         Ok(())
     }
 
@@ -71,7 +83,20 @@ impl InstrMem {
         self.words[addr] = word;
         self.decoded[addr] = Instr::decode(word);
         self.loaded_len = self.loaded_len.max(addr + 1);
+        self.resident = None;
         Ok(())
+    }
+
+    /// Compiled-kernel id whose program currently occupies this memory.
+    pub fn resident_kernel(&self) -> Option<u64> {
+        self.resident
+    }
+
+    /// Record that the freshly loaded contents belong to kernel `id`
+    /// (called by [`crate::cram::CramBlock::ensure_kernel`] right after a
+    /// successful `load_config`).
+    pub fn mark_resident(&mut self, id: u64) {
+        self.resident = Some(id);
     }
 
     /// Storage-mode read (application uses the imem as a small BRAM).
@@ -146,6 +171,20 @@ mod tests {
         m.write_word(0, Instr::Sec.encode()).unwrap();
         assert_eq!(m.fetch(0), Some(Instr::Sec));
         assert!(m.write_word(256, 0).is_err());
+    }
+
+    #[test]
+    fn residency_cleared_by_any_write() {
+        let mut m = InstrMem::new();
+        assert_eq!(m.resident_kernel(), None);
+        m.load_config(&[Instr::Halt]).unwrap();
+        m.mark_resident(7);
+        assert_eq!(m.resident_kernel(), Some(7));
+        m.write_word(0, Instr::Sec.encode()).unwrap();
+        assert_eq!(m.resident_kernel(), None, "bus write invalidates");
+        m.mark_resident(9);
+        m.load_config(&[Instr::Halt]).unwrap();
+        assert_eq!(m.resident_kernel(), None, "config load invalidates");
     }
 
     #[test]

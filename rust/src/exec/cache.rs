@@ -1,0 +1,139 @@
+//! The compiled-kernel cache.
+
+use super::kernel::{CompiledKernel, KernelKey};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cache effectiveness counters (monotonic; shared across threads).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered without assembling a program.
+    pub hits: u64,
+    /// Lookups that compiled (and inserted) a new kernel.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from the cache (0 when never queried).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// `KernelKey` -> `Arc<CompiledKernel>`. One instance is shared by a whole
+/// farm (every worker, the scheduler, the batching server); the legacy
+/// `cram::ops` entry points use the process-wide [`KernelCache::global`].
+#[derive(Debug, Default)]
+pub struct KernelCache {
+    kernels: Mutex<HashMap<KernelKey, Arc<CompiledKernel>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl KernelCache {
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// The process-wide cache used by the convenience `cram::ops` wrappers.
+    pub fn global() -> &'static KernelCache {
+        static GLOBAL: OnceLock<KernelCache> = OnceLock::new();
+        GLOBAL.get_or_init(KernelCache::new)
+    }
+
+    /// Look up `key`, compiling and inserting on first use. The returned
+    /// `Arc` is shared: every caller with an equal key gets the same
+    /// assembled program (and therefore the same residency id).
+    pub fn get(&self, key: KernelKey) -> Arc<CompiledKernel> {
+        if let Some(kernel) = self.kernels.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return kernel.clone();
+        }
+        // Compile OUTSIDE the lock: the generators assert on impossible
+        // keys (K or tuple count beyond the geometry), and a panic while
+        // holding the mutex would poison the cache for the whole process —
+        // fatal for `KernelCache::global`. Racing compilations of the same
+        // key are possible but harmless; the first insert wins so every
+        // caller still shares one residency id.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let kernel = Arc::new(CompiledKernel::compile(key));
+        self.kernels.lock().unwrap().entry(key).or_insert(kernel).clone()
+    }
+
+    /// Non-compiling lookup (stats untouched).
+    pub fn peek(&self, key: KernelKey) -> Option<Arc<CompiledKernel>> {
+        self.kernels.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Number of distinct kernels compiled so far.
+    pub fn len(&self) -> usize {
+        self.kernels.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::exec::KernelOp;
+
+    #[test]
+    fn second_lookup_is_a_hit_sharing_one_compilation() {
+        let cache = KernelCache::new();
+        let key = KernelKey::int_ew_full(KernelOp::IntAdd, 8, Geometry::G512x40);
+        let a = cache.get(key);
+        let b = cache.get(key);
+        assert!(Arc::ptr_eq(&a, &b), "cache must share one compilation");
+        assert_eq!(a.id(), b.id());
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_compile_distinct_kernels() {
+        let cache = KernelCache::new();
+        let g = Geometry::G512x40;
+        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, g));
+        cache.get(KernelKey::int_ew_full(KernelOp::IntSub, 8, g));
+        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 4, g));
+        cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1, g));
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().misses, 4);
+        assert_eq!(cache.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn peek_never_compiles() {
+        let cache = KernelCache::new();
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, 4, Geometry::G1024x20);
+        assert!(cache.peek(key).is_none());
+        cache.get(key);
+        assert!(cache.peek(key).is_some());
+        assert_eq!(cache.stats().lookups(), 1); // peek not counted
+    }
+
+    #[test]
+    fn global_cache_is_a_singleton() {
+        assert!(std::ptr::eq(KernelCache::global(), KernelCache::global()));
+    }
+}

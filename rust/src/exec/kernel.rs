@@ -1,0 +1,272 @@
+//! Kernel identity ([`KernelKey`]) and the compiled artifact
+//! ([`CompiledKernel`]).
+
+use crate::bitline::Geometry;
+use crate::ucode::{self, bf16 as ucbf16, DotLayout, Program, VecLayout};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The operation a kernel implements.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum KernelOp {
+    IntAdd,
+    IntSub,
+    IntMul,
+    /// Per-column dot product of `k` pairs into an `acc_w`-bit accumulator.
+    IntDot { acc_w: u32, k: u16 },
+    Bf16Add,
+    Bf16Mul,
+    Bf16Mac,
+}
+
+impl KernelOp {
+    /// Integer elementwise add/sub/mul?
+    pub fn is_int_ew(self) -> bool {
+        matches!(self, KernelOp::IntAdd | KernelOp::IntSub | KernelOp::IntMul)
+    }
+
+    /// bfloat16 elementwise add/mul?
+    pub fn is_bf16_ew(self) -> bool {
+        matches!(self, KernelOp::Bf16Add | KernelOp::Bf16Mul)
+    }
+}
+
+/// Result width of an integer elementwise op (`2W` for multiplication).
+fn ew_result_w(op: KernelOp, w: u32) -> u32 {
+    match op {
+        KernelOp::IntMul => 2 * w,
+        _ => w,
+    }
+}
+
+/// Identity of a compiled kernel. Two operations with equal keys can share
+/// one assembled program, one `VecLayout`/`DotLayout`, and — when run
+/// back-to-back on one block — one instruction-memory load.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct KernelKey {
+    pub op: KernelOp,
+    /// Operand width in bits (16 for the bf16 ops).
+    pub w: u32,
+    /// Tuple slots per column the program covers. Sizing the program to the
+    /// batch (instead of always sweeping the full block) is what makes
+    /// small repeated requests cheap; a full-block key is the special case
+    /// `tuples == layout.ops_per_col`. Dot kernels use 1 (the K dimension
+    /// lives in the op).
+    pub tuples: u16,
+    pub geometry: Geometry,
+}
+
+impl KernelKey {
+    /// Full-block integer elementwise kernel (pre-refactor semantics: the
+    /// program sweeps every tuple slot of the geometry).
+    pub fn int_ew_full(op: KernelOp, w: u32, geometry: Geometry) -> KernelKey {
+        assert!(op.is_int_ew(), "not an integer elementwise op: {op:?}");
+        let l = VecLayout::new(geometry, w, ew_result_w(op, w));
+        KernelKey { op, w, tuples: l.ops_per_col as u16, geometry }
+    }
+
+    /// Integer elementwise kernel sized to `n_ops` staged elements.
+    pub fn int_ew_sized(op: KernelOp, w: u32, n_ops: usize, geometry: Geometry) -> KernelKey {
+        assert!(op.is_int_ew(), "not an integer elementwise op: {op:?}");
+        let l = VecLayout::new(geometry, w, ew_result_w(op, w));
+        let tuples = n_ops.div_ceil(geometry.cols()).clamp(1, l.ops_per_col);
+        KernelKey { op, w, tuples: tuples as u16, geometry }
+    }
+
+    /// Dot-product kernel: `k` pairs of width `w`, `acc_w`-bit accumulator.
+    pub fn int_dot(w: u32, acc_w: u32, k: usize, geometry: Geometry) -> KernelKey {
+        KernelKey {
+            op: KernelOp::IntDot { acc_w, k: k as u16 },
+            w,
+            tuples: 1,
+            geometry,
+        }
+    }
+
+    /// Full-block bfloat16 elementwise kernel.
+    pub fn bf16_ew_full(mul: bool, geometry: Geometry) -> KernelKey {
+        let op = if mul { KernelOp::Bf16Mul } else { KernelOp::Bf16Add };
+        KernelKey { op, w: 16, tuples: ucbf16::max_tuples(geometry) as u16, geometry }
+    }
+
+    /// bfloat16 elementwise kernel sized to `n_ops` staged elements.
+    pub fn bf16_ew_sized(mul: bool, n_ops: usize, geometry: Geometry) -> KernelKey {
+        let op = if mul { KernelOp::Bf16Mul } else { KernelOp::Bf16Add };
+        let max = ucbf16::max_tuples(geometry);
+        let tuples = n_ops.div_ceil(geometry.cols()).clamp(1, max);
+        KernelKey { op, w: 16, tuples: tuples as u16, geometry }
+    }
+
+    /// Two-phase bfloat16 MAC kernel (always full-block).
+    pub fn bf16_mac(geometry: Geometry) -> KernelKey {
+        KernelKey {
+            op: KernelOp::Bf16Mac,
+            w: 16,
+            tuples: ucbf16::max_tuples(geometry) as u16,
+            geometry,
+        }
+    }
+}
+
+/// The row-layout contract a kernel was compiled against.
+#[derive(Clone, Copy, Debug)]
+pub enum KernelLayout {
+    Vec(VecLayout),
+    Dot(DotLayout),
+}
+
+/// Unique residency ids (0 is reserved for "nothing resident").
+static NEXT_KERNEL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// An assembled kernel: instruction phases + layout, built once and shared
+/// via `Arc` by every block that runs it.
+#[derive(Debug)]
+pub struct CompiledKernel {
+    /// Identity used by the instruction-memory residency check. Unique per
+    /// compilation, so a freshly compiled duplicate never falsely skips a
+    /// reload.
+    id: u64,
+    pub key: KernelKey,
+    /// Execution phases. One for everything except the bf16 MAC, whose
+    /// combined sequence exceeds the instruction memory (§III-A.2) and is
+    /// run with a dynamic reload between two phases.
+    pub phases: Vec<Program>,
+    pub layout: KernelLayout,
+}
+
+impl CompiledKernel {
+    /// Assemble the microcode for `key`. This is the only place in the
+    /// crate that invokes the `ucode` generators at run time; everything
+    /// above goes through a [`super::KernelCache`].
+    pub fn compile(key: KernelKey) -> CompiledKernel {
+        let geom = key.geometry;
+        let tuples = key.tuples as usize;
+        let (phases, layout) = match key.op {
+            KernelOp::IntAdd => {
+                let (p, l) = ucode::int::add_sized(geom, key.w, tuples);
+                (vec![p], KernelLayout::Vec(l))
+            }
+            KernelOp::IntSub => {
+                let (p, l) = ucode::int::sub_sized(geom, key.w, tuples);
+                (vec![p], KernelLayout::Vec(l))
+            }
+            KernelOp::IntMul => {
+                let (p, l) = ucode::int::mul_sized(geom, key.w, tuples);
+                (vec![p], KernelLayout::Vec(l))
+            }
+            KernelOp::IntDot { acc_w, k } => {
+                let (p, l) = ucode::int::dot(geom, key.w, acc_w, k as usize);
+                (vec![p], KernelLayout::Dot(l))
+            }
+            KernelOp::Bf16Add => {
+                let (p, l) = ucbf16::add_sized(geom, tuples);
+                (vec![p], KernelLayout::Vec(l))
+            }
+            KernelOp::Bf16Mul => {
+                let (p, l) = ucbf16::mul_sized(geom, tuples);
+                (vec![p], KernelLayout::Vec(l))
+            }
+            KernelOp::Bf16Mac => {
+                let (phases, l) = ucbf16::mac(geom);
+                (phases, KernelLayout::Vec(l))
+            }
+        };
+        CompiledKernel {
+            id: NEXT_KERNEL_ID.fetch_add(1, Ordering::Relaxed),
+            key,
+            phases,
+            layout,
+        }
+    }
+
+    /// Residency identity (compilation-unique, not key-unique).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Human-readable name of the (first-phase) program.
+    pub fn name(&self) -> &str {
+        &self.phases[0].name
+    }
+
+    /// The program of a single-phase kernel.
+    pub fn program(&self) -> &Program {
+        &self.phases[0]
+    }
+
+    /// Elementwise layout, or an error for dot kernels.
+    pub fn vec_layout(&self) -> Result<VecLayout> {
+        match self.layout {
+            KernelLayout::Vec(l) => Ok(l),
+            KernelLayout::Dot(_) => bail!("kernel {} has a dot layout", self.name()),
+        }
+    }
+
+    /// Dot layout, or an error for elementwise kernels.
+    pub fn dot_layout(&self) -> Result<DotLayout> {
+        match self.layout {
+            KernelLayout::Dot(l) => Ok(l),
+            KernelLayout::Vec(_) => bail!("kernel {} has a vector layout", self.name()),
+        }
+    }
+
+    /// Operations a fully staged run of this kernel covers.
+    pub fn capacity(&self) -> usize {
+        match self.layout {
+            KernelLayout::Vec(l) => l.total_ops(),
+            KernelLayout::Dot(l) => l.cols,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_key_matches_layout_capacity() {
+        let k = KernelKey::int_ew_full(KernelOp::IntAdd, 4, Geometry::G512x40);
+        assert_eq!(k.tuples, 42); // 512 / 12
+        let c = CompiledKernel::compile(k);
+        assert_eq!(c.capacity(), 1680);
+    }
+
+    #[test]
+    fn sized_key_rounds_up_to_column_slots() {
+        let g = Geometry::G512x40;
+        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 41, g);
+        assert_eq!(k.tuples, 2); // 41 ops > 1 slot of 40 columns
+        assert_eq!(CompiledKernel::compile(k).capacity(), 80);
+        // sizing never exceeds the geometry
+        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1_000_000, g);
+        assert_eq!(k.tuples, 21);
+        // and never goes below one slot
+        assert_eq!(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 0, g).tuples, 1);
+    }
+
+    #[test]
+    fn compile_ids_are_unique_even_for_equal_keys() {
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, 4, Geometry::G512x40);
+        let a = CompiledKernel::compile(key);
+        let b = CompiledKernel::compile(key);
+        assert_eq!(a.key, b.key);
+        assert_ne!(a.id(), b.id());
+        assert_eq!(a.program().instrs, b.program().instrs);
+    }
+
+    #[test]
+    fn dot_key_carries_k_and_acc_width() {
+        let key = KernelKey::int_dot(8, 32, 30, Geometry::G512x40);
+        let c = CompiledKernel::compile(key);
+        let l = c.dot_layout().unwrap();
+        assert_eq!(l.k, 30);
+        assert_eq!(l.acc_w, 32);
+        assert!(c.vec_layout().is_err());
+    }
+
+    #[test]
+    fn mac_kernel_has_two_phases() {
+        let c = CompiledKernel::compile(KernelKey::bf16_mac(Geometry::G512x40));
+        assert_eq!(c.phases.len(), 2);
+    }
+}

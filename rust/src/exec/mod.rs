@@ -1,0 +1,38 @@
+//! The execution layer: compiled kernels and the kernel cache.
+//!
+//! The paper's Compute RAM win comes from amortizing one bit-serial program
+//! over thousands of columns; the serving path additionally needs to
+//! amortize the *setup* of that program over thousands of requests. Before
+//! this layer existed, every block-level operation re-generated its
+//! microcode (`ucode::int::*` / `ucode::bf16::*`) and re-loaded the
+//! instruction memory, paying assembly + `load_program` per task, per
+//! block, per batch.
+//!
+//! The exec layer splits that cost out of the hot path:
+//!
+//! * [`KernelKey`] names a program: operation, width, tuple count,
+//!   geometry. Equal keys are interchangeable programs.
+//! * [`CompiledKernel`] is the assembled artifact: instruction phases plus
+//!   the row-layout contract callers stage operands against. Built once.
+//! * [`KernelCache`] maps keys to `Arc<CompiledKernel>`s, so every farm
+//!   worker, the batching server and the NN layers share one compilation.
+//! * Program **residency** (see [`crate::cram::CramBlock::ensure_kernel`])
+//!   skips the instruction-memory reload entirely when a block already
+//!   holds the requested kernel — the common case for a farm worker
+//!   serving a stream of same-shaped batches.
+//!
+//! Lifecycle (also documented in `DESIGN.md`):
+//!
+//! ```text
+//!   mapper ── KernelKey ──> KernelCache ── Arc<CompiledKernel> ──┐
+//!                             │  (miss: ucode::* assembly, once) │
+//!                             └── hit: no assembly               v
+//!   CramBlock::ensure_kernel: imem reload only if not resident   │
+//!   cram::ops::*_compiled:    stage -> run -> read back  <───────┘
+//! ```
+
+pub mod cache;
+pub mod kernel;
+
+pub use cache::{CacheStats, KernelCache};
+pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};

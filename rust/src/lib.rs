@@ -15,20 +15,25 @@
 //!   paper's area & energy models ([`fabric`]);
 //! * **baseline datapath models** (BRAM + LB adders / DSP banks / dot-product
 //!   engine) used as the paper's comparison points ([`baseline`]);
+//! * an **execution layer** with a compiled-kernel cache and program
+//!   residency, so the serving hot path stages data and runs without
+//!   re-assembling microcode or reloading instruction memories ([`exec`]);
 //! * a **coordinator** that maps vector and NN workloads across a farm of
 //!   Compute RAM blocks, with a batching server ([`coordinator`]);
 //! * a small **quantized-NN layer stack** that runs on the farm ([`nn`]);
 //! * a **PJRT runtime** that loads the AOT-compiled JAX/Pallas artifacts and
-//!   cross-checks the simulator's numerics ([`runtime`]);
+//!   cross-checks the simulator's numerics (`runtime`, behind the
+//!   `xla-runtime` feature — the `xla` bindings are environment-provided);
 //! * **report generators** for every table and figure in the paper's
 //!   evaluation ([`report`]) driven by the calibrated cost model ([`cost`]).
 //!
-//! The build is fully offline: the only external crates are `xla` (PJRT
-//! bindings) and `anyhow`; JSON parsing, argument parsing, PRNG, property
-//! testing and the benchmark harness are implemented in [`util`].
+//! The default build is fully offline: the only external crate is `anyhow`;
+//! JSON parsing, argument parsing, PRNG, property testing and the benchmark
+//! harness are implemented in [`util`].
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the system inventory, the exec-layer diagram and the
+//! kernel-cache lifecycle, and `EXPERIMENTS.md` for paper-vs-measured
+//! results.
 
 pub mod baseline;
 pub mod bitline;
@@ -36,15 +41,18 @@ pub mod coordinator;
 pub mod cost;
 pub mod cram;
 pub mod ctrl;
+pub mod exec;
 pub mod fabric;
 pub mod isa;
 pub mod nn;
 pub mod report;
+#[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod ucode;
 pub mod util;
 
 pub use cram::CramBlock;
+pub use exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
 pub use isa::{Instr, Pred};
 pub use ucode::Program;
 

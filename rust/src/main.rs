@@ -19,7 +19,9 @@ use comperam::coordinator::server::PimServer;
 use comperam::coordinator::Coordinator;
 use comperam::cost::CycleModel;
 use comperam::cram::{ops, CramBlock};
-use comperam::{isa, nn, report, runtime};
+#[cfg(feature = "xla-runtime")]
+use comperam::runtime;
+use comperam::{isa, nn, report};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -177,6 +179,15 @@ fn cmd_run_op(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn cmd_golden(_args: &[String]) -> Result<()> {
+    bail!(
+        "this build has no PJRT runtime; add the environment's `xla` \
+         dependency and rebuild with `--features xla-runtime` (see Cargo.toml)"
+    )
+}
+
+#[cfg(feature = "xla-runtime")]
 fn cmd_golden(args: &[String]) -> Result<()> {
     let (_, flags) = parse_flags(args);
     let dir = flags
@@ -222,6 +233,8 @@ fn cmd_nn(args: &[String]) -> Result<()> {
     let blocks: usize = flags.get("blocks").map(String::as_str).unwrap_or("8").parse()?;
     let coord = Coordinator::new(Geometry::G512x40, blocks);
     let mlp = nn::MlpInt8::synthetic(64, 32, 10, 2021)?;
+    let kernels = mlp.precompile(&coord);
+    println!("pre-compiled {kernels} matmul kernels");
     let mut rng = comperam::util::Prng::new(7);
     let x: Vec<Vec<i64>> = (0..16).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect();
     let logits = mlp.forward(&coord, &x)?;
@@ -253,6 +266,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(5));
-        println!("metrics: {}", coord.metrics.snapshot());
+        let cache = coord.kernel_cache().stats();
+        println!(
+            "metrics: {} | kernel cache: {} kernels, {:.0}% hit rate, {} imem loads",
+            coord.metrics.snapshot(),
+            coord.kernel_cache().len(),
+            cache.hit_rate() * 100.0,
+            coord.farm().program_loads(),
+        );
     }
 }

@@ -10,7 +10,7 @@
 //! `mlp_i8.hlo.txt` PJRT artifact, closing the loop between the simulator
 //! and the golden JAX model.
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, JobPayload};
 use anyhow::{ensure, Result};
 
 /// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
@@ -40,6 +40,18 @@ impl QuantLinear {
 
     pub fn out_dim(&self) -> usize {
         self.b.len()
+    }
+
+    /// Pre-compile the dot-product kernels this layer's matmul lowers to
+    /// on `coord`'s farm (the K-segmentation depends only on `in_dim`, not
+    /// on the batch size, so one warm-up covers every future `forward`).
+    /// Returns the number of distinct kernels.
+    pub fn precompile(&self, coord: &Coordinator) -> usize {
+        coord.precompile(&JobPayload::IntMatmul {
+            w: 8,
+            x: vec![vec![0; self.in_dim()]],
+            wt: vec![vec![0; self.out_dim()]; self.in_dim()],
+        })
     }
 
     /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
@@ -80,6 +92,21 @@ impl MlpInt8 {
     pub fn new(l1: QuantLinear, l2: QuantLinear) -> Result<Self> {
         ensure!(l1.out_dim() == l2.in_dim(), "layer dims mismatch");
         Ok(Self { l1, l2 })
+    }
+
+    /// Construct and immediately pre-compile both layers' kernels on
+    /// `coord`, so the first `forward` pays no microcode assembly.
+    pub fn new_on(coord: &Coordinator, l1: QuantLinear, l2: QuantLinear) -> Result<Self> {
+        let mlp = Self::new(l1, l2)?;
+        mlp.precompile(coord);
+        Ok(mlp)
+    }
+
+    /// Pre-compile both layers' matmul kernels (see
+    /// [`QuantLinear::precompile`]). Returns the number of distinct
+    /// kernels compiled or refreshed.
+    pub fn precompile(&self, coord: &Coordinator) -> usize {
+        self.l1.precompile(coord) + self.l2.precompile(coord)
     }
 
     /// Forward pass on the Compute RAM farm -> int32 logits.
@@ -173,6 +200,24 @@ mod tests {
         let farm = mlp.forward(&c, &x).unwrap();
         let host = mlp.forward_host(&x);
         assert_eq!(farm, host);
+    }
+
+    #[test]
+    fn precompiled_mlp_runs_without_new_compilations() {
+        let c = coord();
+        let mlp = MlpInt8::synthetic(64, 32, 10, 99).unwrap();
+        let kernels = mlp.precompile(&c);
+        // l1: K=64 -> segments 30+30+4 (2 distinct keys); l2: K=32 -> 30+2
+        // (2 distinct keys, the K=30 one shared with l1 via the cache)
+        assert_eq!(kernels, 4);
+        let misses = c.kernel_cache().stats().misses;
+        assert_eq!(misses, 3, "distinct kernels overall: K=30, K=4, K=2");
+        let mut rng = Prng::new(52);
+        let x: Vec<Vec<i64>> =
+            (0..8).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect();
+        let farm = mlp.forward(&c, &x).unwrap();
+        assert_eq!(farm, mlp.forward_host(&x));
+        assert_eq!(c.kernel_cache().stats().misses, misses, "forward compiles nothing");
     }
 
     #[test]

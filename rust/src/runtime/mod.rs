@@ -32,6 +32,10 @@ pub struct Runtime {
     client: xla::PjRtClient,
     entries: HashMap<String, EntryInfo>,
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executable-cache effectiveness (same shape as
+    /// [`crate::exec::CacheStats`]): XLA compilation is the PJRT analogue
+    /// of microcode assembly, amortized the same way.
+    cache_stats: crate::exec::CacheStats,
     /// Experiment constants recorded by the AOT pipeline (geometry, dot K,
     /// MLP dims, requant shift).
     pub constants: Json,
@@ -78,7 +82,13 @@ impl Runtime {
         }
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         let constants = manifest.get("constants").cloned().unwrap_or(Json::Null);
-        Ok(Runtime { client, entries, compiled: HashMap::new(), constants })
+        Ok(Runtime {
+            client,
+            entries,
+            compiled: HashMap::new(),
+            cache_stats: crate::exec::CacheStats::default(),
+            constants,
+        })
     }
 
     /// Entry names available.
@@ -97,8 +107,16 @@ impl Runtime {
             .arg_shapes)
     }
 
+    /// Executable-cache hit/miss counters.
+    pub fn cache_stats(&self) -> crate::exec::CacheStats {
+        self.cache_stats
+    }
+
     fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(name) {
+        if self.compiled.contains_key(name) {
+            self.cache_stats.hits += 1;
+        } else {
+            self.cache_stats.misses += 1;
             let info = self
                 .entries
                 .get(name)

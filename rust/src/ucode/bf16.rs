@@ -107,6 +107,15 @@ fn plan(geom: Geometry, l: &mut VecLayout) -> usize {
     scratch
 }
 
+/// Maximum tuple slots per column a bf16 elementwise schedule can process
+/// on `geom` (scratch-clamped). Shared by the mapper's capacity math and
+/// the exec layer's kernel keys so they can never disagree.
+pub fn max_tuples(geom: Geometry) -> usize {
+    let mut l = VecLayout::new(geom, 16, 16);
+    plan(geom, &mut l);
+    l.ops_per_col
+}
+
 /// Set up the per-tuple pointers: r2 -> exponent A, r3 -> exponent B.
 fn emit_tuple_prologue(p: &mut Vec<Instr>) {
     // exponent fields sit at bit 7 of each 16-bit operand
@@ -338,8 +347,15 @@ fn emit_combine_normalize(p: &mut Vec<Instr>) {
 
 /// bfloat16 addition schedule for a fully-packed block.
 pub fn add(geom: Geometry) -> (Program, VecLayout) {
+    add_sized(geom, usize::MAX)
+}
+
+/// [`add`] sized to at most `tuples` slots per column (clamped to the
+/// scratch-limited maximum; the exec layer compiles batch-sized kernels).
+pub fn add_sized(geom: Geometry, tuples: usize) -> (Program, VecLayout) {
     let mut l = VecLayout::new(geom, 16, 16);
     let scratch = plan(geom, &mut l);
+    l.ops_per_col = tuples.clamp(1, l.ops_per_col);
     let mut p = Vec::new();
     emit_set_reg(&mut p, Regs::SCR as u8, scratch);
     emit_set_reg(&mut p, Regs::TUP as u8, 0);
@@ -365,8 +381,14 @@ pub fn add(geom: Geometry) -> (Program, VecLayout) {
 /// bfloat16 multiplication schedule: exponent add + 8x8 bit-serial mantissa
 /// multiply + normalize + pack.
 pub fn mul(geom: Geometry) -> (Program, VecLayout) {
+    mul_sized(geom, usize::MAX)
+}
+
+/// [`mul`] sized to at most `tuples` slots per column (see [`add_sized`]).
+pub fn mul_sized(geom: Geometry, tuples: usize) -> (Program, VecLayout) {
     let mut l = VecLayout::new(geom, 16, 16);
     let scratch = plan(geom, &mut l);
+    l.ops_per_col = tuples.clamp(1, l.ops_per_col);
     let mut p = Vec::new();
     emit_set_reg(&mut p, Regs::SCR as u8, scratch);
     emit_set_reg(&mut p, Regs::TUP as u8, 0);

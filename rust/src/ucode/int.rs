@@ -25,7 +25,7 @@
 //! * `dot`: per-MAC cost with the accumulator window optimization
 //!   (carries propagate only through the live `2W + log2(K) + 1` rows).
 
-use super::{emit_set_reg, DotLayout, Program, VecLayout};
+use super::{emit_counted_loop, emit_set_reg, DotLayout, Program, VecLayout};
 use crate::bitline::Geometry;
 use crate::isa::{Instr, Pred};
 
@@ -36,46 +36,65 @@ fn ceil_log2(n: usize) -> u32 {
 
 /// Elementwise `r = a + b` (wrap at W bits), full-block program.
 pub fn add(geom: Geometry, w: u32) -> (Program, VecLayout) {
-    add_sub(geom, w, false)
+    add_sub(geom, w, false, None)
 }
 
 /// Elementwise `r = a - b` (wrap at W bits), full-block program.
 pub fn sub(geom: Geometry, w: u32) -> (Program, VecLayout) {
-    add_sub(geom, w, true)
+    add_sub(geom, w, true, None)
 }
 
-fn add_sub(geom: Geometry, w: u32, subtract: bool) -> (Program, VecLayout) {
-    let l = VecLayout::new(geom, w, w);
+/// [`add`] sized to `tuples` slots per column (the exec layer compiles
+/// batch-sized kernels so small serving requests do not pay a full-block
+/// sweep). The returned layout's `ops_per_col` is the sized count.
+pub fn add_sized(geom: Geometry, w: u32, tuples: usize) -> (Program, VecLayout) {
+    add_sub(geom, w, false, Some(tuples))
+}
+
+/// [`sub`] sized to `tuples` slots per column.
+pub fn sub_sized(geom: Geometry, w: u32, tuples: usize) -> (Program, VecLayout) {
+    add_sub(geom, w, true, Some(tuples))
+}
+
+fn add_sub(geom: Geometry, w: u32, subtract: bool, tuples: Option<usize>) -> (Program, VecLayout) {
+    let mut l = VecLayout::new(geom, w, w);
+    let tuples = tuples.unwrap_or(l.ops_per_col);
+    assert!(
+        (1..=l.ops_per_col).contains(&tuples),
+        "tuple count {tuples} outside 1..={}",
+        l.ops_per_col
+    );
+    l.ops_per_col = tuples;
     let mut p = Vec::new();
     emit_set_reg(&mut p, 1, l.a_row(0));
     emit_set_reg(&mut p, 2, l.b_row(0));
     emit_set_reg(&mut p, 3, l.r_row(0));
-    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
-    if subtract {
-        // a - b == a + NOT b + 1: SEC preloads the +1
-        p.push(Instr::Sec);
-        p.push(Instr::Loopi { count: w as u8 });
-        // FSS computes [rd] = [rb] - [ra]; we want a - b -> ra = b ptr (r2)
-        p.push(Instr::Fss { ra: 2, rb: 1, rd: 3, pred: Pred::Always, inc: true });
-        p.push(Instr::EndL);
-    } else {
-        p.push(Instr::Clc);
-        p.push(Instr::Loopi { count: w as u8 });
-        p.push(Instr::Fas { ra: 1, rb: 2, rd: 3, pred: Pred::Always, inc: true });
-        p.push(Instr::EndL);
-    }
-    // pointers advanced by w inside the loop; skip the other 2w tuple rows
-    let skip = (2 * w) as i8;
-    p.push(Instr::Addi { rd: 1, imm: skip });
-    p.push(Instr::Addi { rd: 2, imm: skip });
-    p.push(Instr::Addi { rd: 3, imm: skip });
-    p.push(Instr::EndL);
+    emit_counted_loop(&mut p, tuples, |p| {
+        if subtract {
+            // a - b == a + NOT b + 1: SEC preloads the +1
+            p.push(Instr::Sec);
+            p.push(Instr::Loopi { count: w as u8 });
+            // FSS computes [rd] = [rb] - [ra]; we want a - b -> ra = b ptr (r2)
+            p.push(Instr::Fss { ra: 2, rb: 1, rd: 3, pred: Pred::Always, inc: true });
+            p.push(Instr::EndL);
+        } else {
+            p.push(Instr::Clc);
+            p.push(Instr::Loopi { count: w as u8 });
+            p.push(Instr::Fas { ra: 1, rb: 2, rd: 3, pred: Pred::Always, inc: true });
+            p.push(Instr::EndL);
+        }
+        // pointers advanced by w inside the loop; skip the other 2w tuple rows
+        let skip = (2 * w) as i8;
+        p.push(Instr::Addi { rd: 1, imm: skip });
+        p.push(Instr::Addi { rd: 2, imm: skip });
+        p.push(Instr::Addi { rd: 3, imm: skip });
+    });
     p.push(Instr::Halt);
     (
         Program {
             name: format!("{}_i{w}", if subtract { "sub" } else { "add" }),
             instrs: p,
-            ops_per_col: l.ops_per_col,
+            ops_per_col: tuples,
             scratch_rows: 0,
         },
         l,
@@ -89,64 +108,79 @@ fn add_sub(geom: Geometry, w: u32, subtract: bool) -> (Program, VecLayout) {
 /// rows, predicated on the tag. The final partial product (sign bit of `b`)
 /// is subtracted, which is exactly two's-complement signed multiplication.
 pub fn mul(geom: Geometry, w: u32) -> (Program, VecLayout) {
-    let l = VecLayout::new(geom, w, 2 * w);
+    mul_inner(geom, w, None)
+}
+
+/// [`mul`] sized to `tuples` slots per column (see [`add_sized`]).
+pub fn mul_sized(geom: Geometry, w: u32, tuples: usize) -> (Program, VecLayout) {
+    mul_inner(geom, w, Some(tuples))
+}
+
+fn mul_inner(geom: Geometry, w: u32, tuples: Option<usize>) -> (Program, VecLayout) {
+    let mut l = VecLayout::new(geom, w, 2 * w);
+    let tuples = tuples.unwrap_or(l.ops_per_col);
+    assert!(
+        (1..=l.ops_per_col).contains(&tuples),
+        "tuple count {tuples} outside 1..={}",
+        l.ops_per_col
+    );
+    l.ops_per_col = tuples;
     let tuple = l.tuple_bits as i8;
     let mut p = Vec::new();
     emit_set_reg(&mut p, 1, 0);
-    p.push(Instr::Loopi { count: l.ops_per_col as u8 });
-
-    // b pointer: r2 = r1 + w
-    p.push(Instr::Movr { rd: 2, rs: 1 });
-    p.push(Instr::Addi { rd: 2, imm: w as i8 });
-    // sign row: r6 = r1 + w - 1
-    p.push(Instr::Movr { rd: 6, rs: 1 });
-    p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
-    // zero the product rows: r5 = r1 + 2w
-    p.push(Instr::Movr { rd: 5, rs: 1 });
-    p.push(Instr::Addi { rd: 5, imm: (2 * w) as i8 });
-    p.push(Instr::Loopi { count: (2 * w) as u8 });
-    p.push(Instr::Zero { rd: 5, pred: Pred::Always, inc: true });
-    p.push(Instr::EndL);
-
-    for i in 0..w {
-        let last = i == w - 1;
-        // tag <- b[i] (r2 walks the multiplier bits)
-        p.push(Instr::Tld { ra: 2, inc: true });
-        // carry preset: CLC for add steps, SEC for the final subtract
-        p.push(if last { Instr::Sec } else { Instr::Clc });
-        // a walking pointer r4 = r1; product pointer r5 = r1 + 2w + i
-        p.push(Instr::Movr { rd: 4, rs: 1 });
+    emit_counted_loop(&mut p, tuples, |p| {
+        // b pointer: r2 = r1 + w
+        p.push(Instr::Movr { rd: 2, rs: 1 });
+        p.push(Instr::Addi { rd: 2, imm: w as i8 });
+        // sign row: r6 = r1 + w - 1
+        p.push(Instr::Movr { rd: 6, rs: 1 });
+        p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
+        // zero the product rows: r5 = r1 + 2w
         p.push(Instr::Movr { rd: 5, rs: 1 });
-        p.push(Instr::Addi { rd: 5, imm: (2 * w + i) as i8 });
-        // main W adder/subtractor steps over a's bits, tag-predicated
-        p.push(Instr::Loopi { count: w as u8 });
-        if last {
-            p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
-        } else {
-            p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
-        }
+        p.push(Instr::Addi { rd: 5, imm: (2 * w) as i8 });
+        p.push(Instr::Loopi { count: (2 * w) as u8 });
+        p.push(Instr::Zero { rd: 5, pred: Pred::Always, inc: true });
         p.push(Instr::EndL);
-        // sign extension: add/sub the (fixed) sign row into the remaining
-        // W - i upper product rows, continuing the carry/borrow chain.
-        // `inc` would bump r6 too, so step r5 with an explicit ADDI instead.
-        p.push(Instr::Loopi { count: (w - i) as u8 });
-        if last {
-            p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
-        } else {
-            p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+
+        for i in 0..w {
+            let last = i == w - 1;
+            // tag <- b[i] (r2 walks the multiplier bits)
+            p.push(Instr::Tld { ra: 2, inc: true });
+            // carry preset: CLC for add steps, SEC for the final subtract
+            p.push(if last { Instr::Sec } else { Instr::Clc });
+            // a walking pointer r4 = r1; product pointer r5 = r1 + 2w + i
+            p.push(Instr::Movr { rd: 4, rs: 1 });
+            p.push(Instr::Movr { rd: 5, rs: 1 });
+            p.push(Instr::Addi { rd: 5, imm: (2 * w + i) as i8 });
+            // main W adder/subtractor steps over a's bits, tag-predicated
+            p.push(Instr::Loopi { count: w as u8 });
+            if last {
+                p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+            } else {
+                p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+            }
+            p.push(Instr::EndL);
+            // sign extension: add/sub the (fixed) sign row into the remaining
+            // W - i upper product rows, continuing the carry/borrow chain.
+            // `inc` would bump r6 too, so step r5 with an explicit ADDI instead.
+            p.push(Instr::Loopi { count: (w - i) as u8 });
+            if last {
+                p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+            } else {
+                p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+            }
+            p.push(Instr::Addi { rd: 5, imm: 1 });
+            p.push(Instr::EndL);
         }
-        p.push(Instr::Addi { rd: 5, imm: 1 });
-        p.push(Instr::EndL);
-    }
-    // next tuple
-    p.push(Instr::Addi { rd: 1, imm: tuple });
-    p.push(Instr::EndL);
+        // next tuple
+        p.push(Instr::Addi { rd: 1, imm: tuple });
+    });
     p.push(Instr::Halt);
     (
         Program {
             name: format!("mul_i{w}"),
             instrs: p,
-            ops_per_col: l.ops_per_col,
+            ops_per_col: tuples,
             scratch_rows: 0,
         },
         l,
@@ -175,41 +209,41 @@ pub fn dot(geom: Geometry, w: u32, acc_w: u32, k: usize) -> (Program, DotLayout)
     p.push(Instr::EndL);
     // r1 = pair base
     emit_set_reg(&mut p, 1, 0);
-    p.push(Instr::Loopi { count: k as u8 });
-    // r2 = b bits, r6 = a sign row
-    p.push(Instr::Movr { rd: 2, rs: 1 });
-    p.push(Instr::Addi { rd: 2, imm: w as i8 });
-    p.push(Instr::Movr { rd: 6, rs: 1 });
-    p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
-    for i in 0..w {
-        let last = i == w - 1;
-        p.push(Instr::Tld { ra: 2, inc: true });
-        p.push(if last { Instr::Sec } else { Instr::Clc });
-        p.push(Instr::Movr { rd: 4, rs: 1 });
-        p.push(Instr::Movr { rd: 5, rs: 7 });
-        if i > 0 {
-            p.push(Instr::Addi { rd: 5, imm: i as i8 });
+    emit_counted_loop(&mut p, k, |p| {
+        // r2 = b bits, r6 = a sign row
+        p.push(Instr::Movr { rd: 2, rs: 1 });
+        p.push(Instr::Addi { rd: 2, imm: w as i8 });
+        p.push(Instr::Movr { rd: 6, rs: 1 });
+        p.push(Instr::Addi { rd: 6, imm: (w - 1) as i8 });
+        for i in 0..w {
+            let last = i == w - 1;
+            p.push(Instr::Tld { ra: 2, inc: true });
+            p.push(if last { Instr::Sec } else { Instr::Clc });
+            p.push(Instr::Movr { rd: 4, rs: 1 });
+            p.push(Instr::Movr { rd: 5, rs: 7 });
+            if i > 0 {
+                p.push(Instr::Addi { rd: 5, imm: i as i8 });
+            }
+            p.push(Instr::Loopi { count: w as u8 });
+            if last {
+                p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+            } else {
+                p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
+            }
+            p.push(Instr::EndL);
+            // propagate through the remaining live accumulator rows
+            let ext = act - w - i;
+            p.push(Instr::Loopi { count: ext as u8 });
+            if last {
+                p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+            } else {
+                p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
+            }
+            p.push(Instr::Addi { rd: 5, imm: 1 });
+            p.push(Instr::EndL);
         }
-        p.push(Instr::Loopi { count: w as u8 });
-        if last {
-            p.push(Instr::Fss { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
-        } else {
-            p.push(Instr::Fas { ra: 4, rb: 5, rd: 5, pred: Pred::Tag, inc: true });
-        }
-        p.push(Instr::EndL);
-        // propagate through the remaining live accumulator rows
-        let ext = act - w - i;
-        p.push(Instr::Loopi { count: ext as u8 });
-        if last {
-            p.push(Instr::Fss { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
-        } else {
-            p.push(Instr::Fas { ra: 6, rb: 5, rd: 5, pred: Pred::Tag, inc: false });
-        }
-        p.push(Instr::Addi { rd: 5, imm: 1 });
-        p.push(Instr::EndL);
-    }
-    p.push(Instr::Addi { rd: 1, imm: (2 * w) as i8 });
-    p.push(Instr::EndL);
+        p.push(Instr::Addi { rd: 1, imm: (2 * w) as i8 });
+    });
     // sign-extend the accumulator from ACT rows to acc_w rows:
     // tag <- sign row, then write tag into each upper row.
     if act < acc_w {

@@ -68,6 +68,26 @@ pub(crate) fn emit_set_reg(out: &mut Vec<Instr>, rd: u8, value: usize) {
     }
 }
 
+/// Helper: emit `count` iterations of `body` as hardware loops. `Loopi`
+/// holds an 8-bit iteration count, so counts above 255 (tall geometries:
+/// e.g. 341 int2-add tuples on 2048x10) are emitted as consecutive loop
+/// blocks; the bodies used here advance their row pointers, so execution
+/// continues seamlessly across blocks.
+pub(crate) fn emit_counted_loop(
+    out: &mut Vec<Instr>,
+    count: usize,
+    mut body: impl FnMut(&mut Vec<Instr>),
+) {
+    let mut remaining = count;
+    while remaining > 0 {
+        let chunk = remaining.min(255);
+        out.push(Instr::Loopi { count: chunk as u8 });
+        body(out);
+        out.push(Instr::EndL);
+        remaining -= chunk;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +108,28 @@ mod tests {
             v,
             vec![Instr::Movi { rd: 3, imm: 0xFE }, Instr::MoviH { rd: 3, imm: 1 }]
         );
+    }
+
+    #[test]
+    fn counted_loop_splits_above_hardware_limit() {
+        let mut v = Vec::new();
+        emit_counted_loop(&mut v, 300, |p| p.push(Instr::Nop));
+        assert_eq!(
+            v,
+            vec![
+                Instr::Loopi { count: 255 },
+                Instr::Nop,
+                Instr::EndL,
+                Instr::Loopi { count: 45 },
+                Instr::Nop,
+                Instr::EndL,
+            ]
+        );
+        let mut small = Vec::new();
+        emit_counted_loop(&mut small, 7, |p| p.push(Instr::Nop));
+        assert_eq!(small.len(), 3);
+        let mut zero = Vec::new();
+        emit_counted_loop(&mut zero, 0, |p| p.push(Instr::Nop));
+        assert!(zero.is_empty());
     }
 }

@@ -1,10 +1,12 @@
 //! Golden cross-checks: the bit-exact rust simulator vs the AOT-compiled
 //! JAX/Pallas artifacts executed through PJRT.
 //!
-//! These tests require `artifacts/` (run `make artifacts` once). They close
-//! the three-layer loop: L1 Pallas kernels and the L3 simulator implement
-//! the same bit-serial schedules independently, and must agree bit-for-bit
-//! on every packed operand.
+//! These tests require the `xla-runtime` feature (environment-provided
+//! `xla` bindings, see Cargo.toml) and `artifacts/` (run `make artifacts`
+//! once). They close the three-layer loop: L1 Pallas kernels and the L3
+//! simulator implement the same bit-serial schedules independently, and
+//! must agree bit-for-bit on every packed operand.
+#![cfg(feature = "xla-runtime")]
 
 use comperam::bitline::Geometry;
 use comperam::cram::{ops, CramBlock};

@@ -1,0 +1,170 @@
+//! Property tests for the exec layer: cached-kernel execution must be
+//! bit-exact against freshly assembled programs, across every standard
+//! geometry and width, with program residency active (one block reused for
+//! every cached run).
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_ucode.rs` (offline build; failing cases print their seed).
+
+use comperam::bitline::Geometry;
+use comperam::cram::{ops, CramBlock};
+use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use comperam::util::{mask, sext, Prng};
+
+fn wrap(v: i64, w: u32) -> i64 {
+    sext(mask(v, w) as i64, w)
+}
+
+/// Host reference for an integer elementwise op.
+fn host_ew(op: KernelOp, a: i64, b: i64, w: u32) -> i64 {
+    match op {
+        KernelOp::IntAdd => wrap(a + b, w),
+        KernelOp::IntSub => wrap(a - b, w),
+        KernelOp::IntMul => a * b, // exact in 2W bits
+        other => panic!("not elementwise: {other:?}"),
+    }
+}
+
+/// Run one case: a cached kernel on a reused (residency-warm) block vs a
+/// freshly compiled kernel of the same key on a fresh block. Values and
+/// cycle statistics must agree exactly, and both must match the host.
+fn check_case(
+    cache: &KernelCache,
+    reused: &mut CramBlock,
+    op: KernelOp,
+    w: u32,
+    seed: u64,
+) {
+    let geom = reused.geometry();
+    let mut rng = Prng::new(seed);
+    let full = KernelKey::int_ew_full(op, w, geom);
+    let capacity = CompiledKernel::compile(full).capacity();
+    let n = rng.range(1, capacity + 1);
+    let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+    let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+    let key = KernelKey::int_ew_sized(op, w, n, geom);
+
+    let cached = cache.get(key);
+    let got = ops::int_ew_compiled(reused, &cached, &a, &b)
+        .unwrap_or_else(|e| panic!("seed {seed} {op:?} w={w} {geom:?}: {e}"));
+
+    let fresh_kernel = CompiledKernel::compile(key);
+    let mut fresh_block = CramBlock::new(geom);
+    let fresh = ops::int_ew_compiled(&mut fresh_block, &fresh_kernel, &a, &b)
+        .unwrap_or_else(|e| panic!("seed {seed} {op:?} w={w} {geom:?}: {e}"));
+
+    assert_eq!(
+        got.values, fresh.values,
+        "seed {seed} {op:?} w={w} {geom:?}: cached != fresh"
+    );
+    assert_eq!(
+        got.stats, fresh.stats,
+        "seed {seed} {op:?} w={w} {geom:?}: cycle stats diverge"
+    );
+    for i in 0..n {
+        assert_eq!(
+            got.values[i],
+            host_ew(op, a[i], b[i], w),
+            "seed {seed} {op:?} w={w} {geom:?} i={i}"
+        );
+    }
+}
+
+#[test]
+fn prop_cached_addsub_bit_exact_all_geometries_widths_2_to_16() {
+    let cache = KernelCache::new();
+    for geom in Geometry::standard() {
+        // one reused block per geometry: later cases run with residency
+        // hits and whatever state earlier cases left behind
+        let mut reused = CramBlock::new(geom);
+        for w in 2..=16u32 {
+            for (i, op) in [KernelOp::IntAdd, KernelOp::IntSub].into_iter().enumerate() {
+                let seed = 0xF000 + w as u64 * 16 + i as u64 + geom.rows() as u64;
+                check_case(&cache, &mut reused, op, w, seed);
+            }
+        }
+    }
+    let stats = cache.stats();
+    assert!(stats.misses > 0 && stats.misses <= 3 * 15 * 2, "misses {}", stats.misses);
+}
+
+#[test]
+fn prop_cached_mul_bit_exact_all_geometries() {
+    let cache = KernelCache::new();
+    for geom in Geometry::standard() {
+        let mut reused = CramBlock::new(geom);
+        for w in 2..=8u32 {
+            let seed = 0xF800 + w as u64 + geom.cols() as u64;
+            check_case(&cache, &mut reused, KernelOp::IntMul, w, seed);
+        }
+    }
+}
+
+#[test]
+fn prop_cached_dot_bit_exact_including_chunked_k_loops() {
+    // tall geometries need K above the 255-iteration Loopi limit, which the
+    // generator emits as consecutive loop blocks — cover both sides
+    let cache = KernelCache::new();
+    for (geom, w) in [
+        (Geometry::G512x40, 4u32),
+        (Geometry::G512x40, 8),
+        (Geometry::G2048x10, 2),
+        (Geometry::G1024x20, 4),
+    ] {
+        let mut reused = CramBlock::new(geom);
+        for case in 0..4u64 {
+            let seed = 0xD100 + case + w as u64 * 31 + geom.rows() as u64;
+            let mut rng = Prng::new(seed);
+            let max_k = (geom.rows() - 32) / (2 * w as usize);
+            let k = rng.range(1, max_k + 1);
+            let cols = rng.range(1, geom.cols() + 1);
+            let a: Vec<Vec<i64>> =
+                (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+            let b: Vec<Vec<i64>> =
+                (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
+            let key = KernelKey::int_dot(w, 32, k, geom);
+            let cached = cache.get(key);
+            let got = ops::int_dot_compiled(&mut reused, &cached, &a, &b)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let fresh_kernel = CompiledKernel::compile(key);
+            let mut fresh_block = CramBlock::new(geom);
+            let fresh = ops::int_dot_compiled(&mut fresh_block, &fresh_kernel, &a, &b)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(got.values, fresh.values, "seed {seed}");
+            assert_eq!(got.stats, fresh.stats, "seed {seed}");
+            for c in 0..cols {
+                let expect: i64 = (0..k).map(|i| a[i][c] * b[i][c]).sum();
+                assert_eq!(got.values[c], expect, "seed {seed} k={k} col {c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn second_op_with_same_key_does_zero_assembly_and_zero_loads() {
+    // the unit-level cache contract, end to end: op #2 with an equal
+    // KernelKey must re-use the compiled program (cache hit) and skip
+    // load_program entirely (residency hit), observable via the cache
+    // stats and the block's program-load counter
+    let geom = Geometry::G512x40;
+    let cache = KernelCache::new();
+    let mut block = CramBlock::new(geom);
+    let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, geom);
+
+    let (a1, b1) = (vec![7i64; 80], vec![-3i64; 80]);
+    let k1 = cache.get(key);
+    let r1 = ops::int_ew_compiled(&mut block, &k1, &a1, &b1).unwrap();
+    assert!(r1.values.iter().all(|&v| v == 4));
+    assert_eq!(cache.stats().misses, 1);
+    assert_eq!(block.program_loads(), 1);
+
+    let (a2, b2) = (vec![10i64; 80], vec![20i64; 80]);
+    let k2 = cache.get(key);
+    let r2 = ops::int_ew_compiled(&mut block, &k2, &a2, &b2).unwrap();
+    assert!(r2.values.iter().all(|&v| v == 30));
+    assert_eq!(cache.stats().misses, 1, "second op must not re-assemble");
+    assert_eq!(cache.stats().hits, 1);
+    assert_eq!(block.program_loads(), 1, "second op must not call load_program");
+    // identical program -> identical timing
+    assert_eq!(r1.stats, r2.stats);
+}
