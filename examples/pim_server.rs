@@ -5,9 +5,11 @@
 //! cargo run --release --example pim_server
 //! ```
 //!
-//! The server coalesces queued requests into block-filling batches before
-//! dispatching to the Compute RAM farm — the router/batcher shape of a
-//! serving system, with the PIM fabric as the backend.
+//! The server coalesces queued requests into capacity-capped batches and
+//! keeps several batches in flight on the persistent execution engine —
+//! the router/batcher shape of a serving system, with the PIM fabric as
+//! the backend. The metrics line at the end splits host latency into
+//! queue-wait vs execute time (`queue_us` / `exec_us`).
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::server::PimServer;
@@ -83,6 +85,17 @@ fn main() -> anyhow::Result<()> {
     println!(
         "batching: {total} requests -> {jobs} farm jobs ({:.1} reqs/batch avg)",
         total as f64 / jobs as f64
+    );
+    let queue_us = coord
+        .metrics
+        .queue_wait_micros
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let exec_us = coord.metrics.exec_micros.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "engine latency (summed per-job, jobs overlap under pipelining): \
+         {queue_us} us queued vs {exec_us} us executing across {jobs} jobs; \
+         affinity router {:?}",
+        coord.farm().affinity_stats()
     );
     server.stop();
     Ok(())

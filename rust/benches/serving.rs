@@ -1,16 +1,18 @@
-//! Bench: repeated-op serving throughput — the payoff of the compiled-
-//! kernel cache, batch-sized programs and program residency.
+//! Bench: serving throughput — the payoff of the compiled-kernel cache,
+//! batch-sized programs, program residency, and the pipelined execution
+//! engine.
 //!
-//! The serving workload is many same-shaped small batches (the coalesced
-//! requests of `coordinator::server`). The pre-refactor path paid, per
-//! batch: microcode assembly + a full instruction-memory load + a
-//! full-block program sweep regardless of batch size. The exec layer
-//! eliminates all three on cache hits; the acceptance target for the
-//! refactor is >= 2x on this benchmark.
+//! Two acceptance targets:
+//!
+//! * cached vs uncached single-block serving (the exec layer): >= 2x;
+//! * pipelined multi-batch serving vs one-batch-at-a-time (the engine's
+//!   submit/await split): >= 1.5x on same-shaped request streams, bit-exact
+//!   results, and `program_loads()` flat across repeated same-kernel
+//!   batches (affinity routing keeps residency hits).
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
-use comperam::coordinator::{Coordinator, Job, JobPayload};
+use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload};
 use comperam::cram::{ops, CramBlock};
 use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
 use comperam::util::benchkit::{bench, black_box, ops_per_sec};
@@ -83,4 +85,78 @@ fn main() {
         m_farm.iters + 1,
     );
     println!("  -> metrics: {}", coord.metrics.snapshot());
+
+    // ---- pipelined multi-batch serving vs one-batch-at-a-time -------------
+    // A stream of same-shaped batches, each spanning only 2 of the farm's
+    // 8 blocks: the serialized path leaves 6 blocks idle per batch, the
+    // pipelined path keeps every block fed from the in-flight set.
+    let pblocks = 8;
+    let pcoord = Coordinator::new(geom, pblocks);
+    pcoord.prewarm_serving();
+    let nbatches = 8;
+    let elems = 1680; // 2 full int8-add blocks (840 each)
+    let stream: Vec<(Vec<i64>, Vec<i64>)> = (0..nbatches)
+        .map(|_| {
+            let a: Vec<i64> = (0..elems).map(|_| rng.int(8)).collect();
+            let b: Vec<i64> = (0..elems).map(|_| rng.int(8)).collect();
+            (a, b)
+        })
+        .collect();
+    let mk = |a: &[i64], b: &[i64]| Job {
+        id: 0,
+        payload: JobPayload::IntElementwise { op: EwOp::Add, w: 8, a: a.to_vec(), b: b.to_vec() },
+    };
+
+    // bit-exactness gate before timing: same stream both ways
+    let serial_vals: Vec<Vec<i64>> =
+        stream.iter().map(|(a, b)| pcoord.run(mk(a, b)).unwrap().values).collect();
+    let handles: Vec<JobHandle> = stream.iter().map(|(a, b)| pcoord.submit(mk(a, b))).collect();
+    let piped_vals: Vec<Vec<i64>> =
+        handles.into_iter().map(|h| h.wait().unwrap().values).collect();
+    assert_eq!(serial_vals, piped_vals, "pipelined serving must be bit-exact");
+
+    let m_serial = bench("serving 8 blocks, 8 batches one-at-a-time (barrier)", || {
+        for (a, b) in &stream {
+            black_box(pcoord.run(mk(a, b)).unwrap());
+        }
+    });
+    // spread residency to every worker (work stealing pulls the kernel onto
+    // each block the first time the queues are deep): run pipelined rounds
+    // until a whole round adds zero imem loads. Loads are monotone and
+    // bounded by the worker count for a single kernel, so this terminates.
+    let mut warm_loads = pcoord.farm().program_loads();
+    loop {
+        let handles: Vec<JobHandle> =
+            stream.iter().map(|(a, b)| pcoord.submit(mk(a, b))).collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let loads = pcoord.farm().program_loads();
+        if loads == warm_loads {
+            break;
+        }
+        warm_loads = loads;
+    }
+    let m_piped = bench("serving 8 blocks, 8 batches in flight (pipelined)", || {
+        let handles: Vec<JobHandle> =
+            stream.iter().map(|(a, b)| pcoord.submit(mk(a, b))).collect();
+        for h in handles {
+            black_box(h.wait().unwrap());
+        }
+    });
+    let pipe_speedup = m_serial.mean.as_secs_f64() / m_piped.mean.as_secs_f64();
+    let loads_after = pcoord.farm().program_loads();
+    println!(
+        "  -> pipelined speedup: {pipe_speedup:.2}x (acceptance target >= 1.5x); \
+         imem loads {warm_loads} -> {loads_after} (flat = affinity routing holds)",
+    );
+    assert_eq!(
+        warm_loads, loads_after,
+        "affinity routing must keep program loads flat across same-kernel batches"
+    );
+    println!(
+        "  -> affinity router: {:?}; metrics: {}",
+        pcoord.farm().affinity_stats(),
+        pcoord.metrics.snapshot()
+    );
 }

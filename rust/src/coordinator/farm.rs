@@ -1,20 +1,39 @@
-//! A farm of Compute RAM block simulators with thread-pool execution.
+//! The persistent execution engine: a farm of Compute RAM block simulators
+//! served by long-lived worker threads.
 //!
-//! Each worker owns one persistent [`CramBlock`] (models a shell that owns
-//! N physical Compute RAMs). Persistence is what makes program residency
-//! pay: a worker that keeps serving tasks with the same [`KernelKey`]
-//! loads the instruction memory once and then only stages data. All
+//! Each worker thread permanently owns one [`CramBlock`] (models a shell
+//! that owns N physical Compute RAMs) and drains its own task queue,
+//! **stealing** from the deepest sibling queue when idle. Tasks are placed
+//! by a kernel-**affinity router** ([`ResidencyMap`]): a task goes to the
+//! least-loaded worker whose block already holds its [`KernelKey`] (so the
+//! instruction-memory load is skipped), falling back to the least-loaded
+//! worker overall — load outranks affinity, so deep same-kernel
+//! submissions spread residency across the farm deterministically. All
 //! workers resolve tasks against one shared [`KernelCache`], so each
-//! distinct kernel is assembled exactly once per farm regardless of how
-//! many blocks or batches run it.
+//! distinct kernel is assembled exactly once per farm.
+//!
+//! Unlike the old per-batch scoped-thread barrier, the engine accepts work
+//! from many batches at once: [`BlockFarm::submit`] enqueues a batch and
+//! returns a [`BatchHandle`] immediately, so callers (the coordinator's
+//! [`super::scheduler::JobHandle`], the server's pipelined batcher) can keep
+//! several batches in flight while earlier ones execute. A bounded queue
+//! applies backpressure: `submit` blocks once the farm has
+//! `QUEUE_DEPTH_PER_WORKER x len()` tasks waiting.
 
 use super::mapper::BlockTask;
 use crate::bitline::Geometry;
 use crate::cram::{ops, CramBlock};
 use crate::ctrl::CycleStats;
-use crate::exec::{KernelCache, KernelKey};
-use anyhow::Result;
-use std::sync::{Arc, Mutex};
+use crate::exec::{KernelCache, KernelKey, ResidencyMap, ResidencyStats};
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Queued (not yet running) tasks the farm accepts per worker before
+/// `submit` blocks for backpressure.
+const QUEUE_DEPTH_PER_WORKER: usize = 16;
 
 /// Sum cycle statistics (energy-relevant total; time uses the wave max).
 pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
@@ -27,12 +46,22 @@ pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
     out
 }
 
-/// A pool of blocks; tasks are executed on up to `len()` worker threads,
-/// each permanently bound to one block.
-pub struct BlockFarm {
-    geometry: Geometry,
-    workers: Vec<Mutex<CramBlock>>,
-    cache: Arc<KernelCache>,
+/// Aggregate statistics of a set of task outputs executing on `n_blocks`
+/// concurrent blocks. Wall-clock cycles of the farm are the **maximum**
+/// over concurrently-running blocks per wave; this returns both the sum
+/// (energy) and the critical path (time).
+pub fn aggregate_waves(outputs: &[TaskOutput], n_blocks: usize) -> (CycleStats, u64) {
+    let total = merge_stats(outputs.iter().map(|o| o.stats));
+    // wave-based critical path: tasks execute in waves of n_blocks blocks
+    let mut wave_max = Vec::new();
+    for (i, o) in outputs.iter().enumerate() {
+        let wave = i / n_blocks.max(1);
+        if wave_max.len() <= wave {
+            wave_max.push(0u64);
+        }
+        wave_max[wave] = wave_max[wave].max(o.stats.cycles);
+    }
+    (total, wave_max.iter().sum())
 }
 
 /// Result of one executed task.
@@ -41,6 +70,109 @@ pub struct TaskOutput {
     pub task_index: usize,
     pub values: Vec<i64>,
     pub stats: CycleStats,
+}
+
+/// Queue-wait vs execution latency of a completed batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchTiming {
+    /// Submit -> first task dequeued (time spent waiting behind other work).
+    pub queue_wait: Duration,
+    /// First task dequeued -> last task finished.
+    pub exec: Duration,
+}
+
+/// Per-batch completion state shared between the submitter and the workers.
+struct BatchState {
+    progress: Mutex<BatchProgress>,
+    done_cv: Condvar,
+    submitted_at: Instant,
+}
+
+struct BatchProgress {
+    outputs: Vec<Option<TaskOutput>>,
+    remaining: usize,
+    first_error: Option<anyhow::Error>,
+    started_at: Option<Instant>,
+    finished_at: Option<Instant>,
+}
+
+/// A batch accepted by the engine. Dropping the handle without calling
+/// [`BatchHandle::wait`] is allowed; the tasks still run to completion.
+pub struct BatchHandle {
+    batch: Arc<BatchState>,
+    n_tasks: usize,
+}
+
+impl BatchHandle {
+    /// Number of tasks in the batch.
+    pub fn len(&self) -> usize {
+        self.n_tasks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_tasks == 0
+    }
+
+    /// Block until every task of the batch has run; returns the outputs in
+    /// task order plus the batch's queue/execute latency split. The first
+    /// task error (if any) fails the whole batch.
+    pub fn wait(self) -> Result<(Vec<TaskOutput>, BatchTiming)> {
+        let mut p = self.batch.progress.lock().unwrap();
+        while p.remaining > 0 {
+            p = self.batch.done_cv.wait(p).unwrap();
+        }
+        let started = p.started_at.unwrap_or(self.batch.submitted_at);
+        let finished = p.finished_at.unwrap_or(started);
+        let timing = BatchTiming {
+            queue_wait: started.saturating_duration_since(self.batch.submitted_at),
+            exec: finished.saturating_duration_since(started),
+        };
+        if let Some(e) = p.first_error.take() {
+            return Err(e);
+        }
+        let outputs = p
+            .outputs
+            .iter_mut()
+            .map(|o| o.take().expect("completed batch has every output"))
+            .collect();
+        Ok((outputs, timing))
+    }
+}
+
+/// One task as it travels through the engine.
+struct TaskEnvelope {
+    task: BlockTask,
+    task_index: usize,
+    batch: Arc<BatchState>,
+}
+
+struct EngineState {
+    /// Per-worker FIFO queues; workers pop their own front and steal from
+    /// the deepest sibling's back.
+    queues: Vec<VecDeque<TaskEnvelope>>,
+    /// Total queued (not yet dequeued) tasks, for backpressure.
+    queued: usize,
+}
+
+struct EngineShared {
+    state: Mutex<EngineState>,
+    /// Workers wait here for new tasks.
+    work_cv: Condvar,
+    /// Submitters wait here for queue space.
+    space_cv: Condvar,
+    shutdown: AtomicBool,
+    capacity: usize,
+}
+
+/// A pool of blocks behind persistent worker threads, each permanently
+/// bound to one block.
+pub struct BlockFarm {
+    geometry: Geometry,
+    blocks: Vec<Arc<Mutex<CramBlock>>>,
+    cache: Arc<KernelCache>,
+    residency: Arc<ResidencyMap>,
+    shared: Arc<EngineShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl BlockFarm {
@@ -52,11 +184,33 @@ impl BlockFarm {
     /// farm and its server front-end — can amortize one compilation pool).
     pub fn with_cache(geometry: Geometry, n_blocks: usize, cache: Arc<KernelCache>) -> Self {
         assert!(n_blocks >= 1);
-        Self {
-            geometry,
-            workers: (0..n_blocks).map(|_| Mutex::new(CramBlock::new(geometry))).collect(),
-            cache,
-        }
+        let blocks: Vec<Arc<Mutex<CramBlock>>> = (0..n_blocks)
+            .map(|_| Arc::new(Mutex::new(CramBlock::new(geometry))))
+            .collect();
+        let residency = Arc::new(ResidencyMap::new(n_blocks));
+        let shared = Arc::new(EngineShared {
+            state: Mutex::new(EngineState {
+                queues: (0..n_blocks).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            capacity: QUEUE_DEPTH_PER_WORKER * n_blocks,
+        });
+        let workers = (0..n_blocks)
+            .map(|i| {
+                let shared = shared.clone();
+                let block = blocks[i].clone();
+                let cache = cache.clone();
+                let residency = residency.clone();
+                std::thread::Builder::new()
+                    .name(format!("cram-worker-{i}"))
+                    .spawn(move || worker_loop(i, &shared, &block, &cache, &residency))
+                    .expect("spawn farm worker")
+            })
+            .collect();
+        Self { geometry, blocks, cache, residency, shared, workers }
     }
 
     pub fn geometry(&self) -> Geometry {
@@ -64,11 +218,11 @@ impl BlockFarm {
     }
 
     pub fn len(&self) -> usize {
-        self.workers.len()
+        self.blocks.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.workers.is_empty()
+        self.blocks.is_empty()
     }
 
     /// The compiled-kernel cache all workers share.
@@ -76,10 +230,15 @@ impl BlockFarm {
         &self.cache
     }
 
+    /// Affinity-router effectiveness counters.
+    pub fn affinity_stats(&self) -> ResidencyStats {
+        self.residency.stats()
+    }
+
     /// Total instruction-memory loads across all blocks since construction
     /// (observability: residency hits keep this flat across batches).
     pub fn program_loads(&self) -> u64 {
-        self.workers.iter().map(|w| w.lock().unwrap().program_loads()).sum()
+        self.blocks.iter().map(|b| b.lock().unwrap().program_loads()).sum()
     }
 
     /// Compile (or fetch) the kernels for `keys` into the shared cache so
@@ -90,88 +249,187 @@ impl BlockFarm {
         }
     }
 
-    /// Execute one task on one worker's block using cached kernels.
-    fn run_task(
-        block: &mut CramBlock,
-        cache: &KernelCache,
-        task: &BlockTask,
-    ) -> Result<(Vec<i64>, CycleStats)> {
-        let kernel = cache.get(task.key());
-        match task {
-            BlockTask::IntElementwise { a, b, .. } => {
-                let r = ops::int_ew_compiled(block, &kernel, a, b)?;
-                Ok((r.values, r.stats))
-            }
-            BlockTask::IntDot { a, b, .. } => {
-                let r = ops::int_dot_compiled(block, &kernel, a, b)?;
-                let n = a.first().map_or(0, Vec::len);
-                Ok((r.values[..n].to_vec(), r.stats))
-            }
-            BlockTask::Bf16Elementwise { a, b, .. } => {
-                let r = ops::bf16_ew_compiled(block, &kernel, a, b)?;
-                Ok((r.values.iter().map(|v| v.to_bits() as i64).collect(), r.stats))
-            }
-        }
-    }
-
-    /// Run all tasks across the farm (scoped threads, one per block).
-    pub fn execute(&self, tasks: &[BlockTask]) -> Result<Vec<TaskOutput>> {
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let outputs: Mutex<Vec<TaskOutput>> = Mutex::new(Vec::with_capacity(tasks.len()));
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        std::thread::scope(|s| {
-            for worker in self.workers.iter().take(tasks.len().max(1)) {
-                let next = &next;
-                let outputs = &outputs;
-                let first_err = &first_err;
-                let cache = &self.cache;
-                s.spawn(move || {
-                    // this worker's persistent block (residency carries over
-                    // from previous batches)
-                    let mut block = worker.lock().unwrap();
-                    loop {
-                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= tasks.len() {
-                            break;
-                        }
-                        match Self::run_task(&mut block, cache, &tasks[i]) {
-                            Ok((values, stats)) => outputs.lock().unwrap().push(TaskOutput {
-                                task_index: i,
-                                values,
-                                stats,
-                            }),
-                            Err(e) => {
-                                first_err.lock().unwrap().get_or_insert(e);
-                                break;
-                            }
-                        }
-                    }
-                });
-            }
+    /// Enqueue a batch of tasks and return immediately. Tasks are routed by
+    /// kernel affinity (then least-loaded); blocks when the farm already has
+    /// its full backpressure quota of tasks queued.
+    pub fn submit(&self, tasks: Vec<BlockTask>) -> BatchHandle {
+        let n = tasks.len();
+        let now = Instant::now();
+        let batch = Arc::new(BatchState {
+            progress: Mutex::new(BatchProgress {
+                outputs: (0..n).map(|_| None).collect(),
+                remaining: n,
+                first_error: None,
+                started_at: if n == 0 { Some(now) } else { None },
+                finished_at: if n == 0 { Some(now) } else { None },
+            }),
+            done_cv: Condvar::new(),
+            submitted_at: now,
         });
-        if let Some(e) = first_err.into_inner().unwrap() {
-            return Err(e);
+        let mut depths: Vec<usize> = Vec::with_capacity(self.blocks.len());
+        let mut st = self.shared.state.lock().unwrap();
+        for (task_index, task) in tasks.into_iter().enumerate() {
+            let key = task.key();
+            while st.queued >= self.shared.capacity {
+                // workers were notified for every queued task; wait for
+                // them to drain some before admitting more
+                st = self.shared.space_cv.wait(st).unwrap();
+            }
+            depths.clear();
+            depths.extend(st.queues.iter().map(VecDeque::len));
+            let w = self.residency.route(key, &depths);
+            st.queues[w].push_back(TaskEnvelope { task, task_index, batch: batch.clone() });
+            st.queued += 1;
+            // one task -> one wakeup; the woken worker takes it from its
+            // own queue or steals it, so the target need not be the waiter
+            self.shared.work_cv.notify_one();
         }
-        let mut out = outputs.into_inner().unwrap();
-        out.sort_by_key(|o| o.task_index);
-        Ok(out)
+        drop(st);
+        BatchHandle { batch, n_tasks: n }
     }
 
-    /// Aggregate statistics of a set of outputs. Wall-clock cycles of the
-    /// farm are the **maximum** over concurrently-running blocks per wave;
-    /// this returns both the sum (energy) and the critical path (time).
+    /// Run all tasks across the farm and wait for the results (submit +
+    /// await; kept for call sites that do not pipeline).
+    pub fn execute(&self, tasks: Vec<BlockTask>) -> Result<Vec<TaskOutput>> {
+        let (outputs, _) = self.submit(tasks).wait()?;
+        Ok(outputs)
+    }
+
+    /// Aggregate statistics of a set of outputs (see [`aggregate_waves`]).
     pub fn aggregate(&self, outputs: &[TaskOutput]) -> (CycleStats, u64) {
-        let total = merge_stats(outputs.iter().map(|o| o.stats));
-        // wave-based critical path: tasks execute in waves of len() blocks
-        let mut wave_max = Vec::new();
-        for (i, o) in outputs.iter().enumerate() {
-            let wave = i / self.workers.len();
-            if wave_max.len() <= wave {
-                wave_max.push(0u64);
-            }
-            wave_max[wave] = wave_max[wave].max(o.stats.cycles);
+        aggregate_waves(outputs, self.blocks.len())
+    }
+}
+
+impl Drop for BlockFarm {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Take the state lock while notifying so a worker between its
+        // shutdown check and its wait cannot miss the wakeup.
+        {
+            let _st = self.shared.state.lock().unwrap();
+            self.shared.work_cv.notify_all();
         }
-        (total, wave_max.iter().sum())
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one task on one worker's block using cached kernels.
+fn run_task(
+    block: &mut CramBlock,
+    cache: &KernelCache,
+    task: &BlockTask,
+) -> Result<(Vec<i64>, CycleStats)> {
+    let kernel = cache.get(task.key());
+    match task {
+        BlockTask::IntElementwise { a, b, .. } => {
+            let r = ops::int_ew_compiled(block, &kernel, a, b)?;
+            Ok((r.values, r.stats))
+        }
+        BlockTask::IntDot { a, b, .. } => {
+            let r = ops::int_dot_compiled(block, &kernel, a, b)?;
+            let n = a.first().map_or(0, Vec::len);
+            Ok((r.values[..n].to_vec(), r.stats))
+        }
+        BlockTask::Bf16Elementwise { a, b, .. } => {
+            let r = ops::bf16_ew_compiled(block, &kernel, a, b)?;
+            Ok((r.values.iter().map(|v| v.to_bits() as i64).collect(), r.stats))
+        }
+    }
+}
+
+/// The persistent per-worker loop: drain own queue, steal when idle, exit
+/// when the farm shuts down and no tasks remain.
+fn worker_loop(
+    index: usize,
+    shared: &EngineShared,
+    block: &Mutex<CramBlock>,
+    cache: &KernelCache,
+    residency: &ResidencyMap,
+) {
+    loop {
+        let env = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let mut grabbed = st.queues[index].pop_front();
+                if grabbed.is_none() {
+                    // steal from the deepest sibling queue
+                    let victim = (0..st.queues.len())
+                        .filter(|&j| j != index && !st.queues[j].is_empty())
+                        .max_by_key(|&j| st.queues[j].len());
+                    if let Some(v) = victim {
+                        grabbed = st.queues[v].pop_back();
+                    }
+                }
+                if let Some(env) = grabbed {
+                    st.queued -= 1;
+                    shared.space_cv.notify_all();
+                    break Some(env);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let Some(env) = env else { return };
+
+        let start = Instant::now();
+        {
+            let mut p = env.batch.progress.lock().unwrap();
+            if p.started_at.is_none() {
+                p.started_at = Some(start);
+            }
+        }
+        // record *actual* residency (a stolen task lands here, not where
+        // the router predicted)
+        residency.note(index, env.task.key());
+        let result = {
+            let mut block = block.lock().unwrap();
+            // Contain panics from the ops/ucode path: the unwind stops
+            // here, inside the guard's scope, so the block mutex is not
+            // poisoned, the batch still completes (as an error), and the
+            // worker keeps serving. The old scoped-thread barrier
+            // propagated the panic; a persistent engine must not die.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_task(&mut block, cache, &env.task)
+            }))
+            .unwrap_or_else(|payload| {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                Err(anyhow!("task panicked on worker {index}: {msg}"))
+            })
+        };
+        if result.is_err() {
+            // a failed (or panicked) run can leave the block mid-program
+            // with `running` high, which would wedge this worker's block
+            // in compute mode forever; abort it so the worker keeps
+            // serving (residency and load counts survive the reset)
+            let mut b = block.lock().unwrap();
+            if !b.done() {
+                b.reset();
+            }
+        }
+        let mut p = env.batch.progress.lock().unwrap();
+        match result {
+            Ok((values, stats)) => {
+                p.outputs[env.task_index] =
+                    Some(TaskOutput { task_index: env.task_index, values, stats });
+            }
+            Err(e) => {
+                p.first_error.get_or_insert(e);
+            }
+        }
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            p.finished_at = Some(Instant::now());
+            env.batch.done_cv.notify_all();
+        }
     }
 }
 
@@ -193,7 +451,7 @@ mod tests {
         let tasks: Vec<BlockTask> = (0..8)
             .map(|i| ew_task(EwOp::Add, 8, vec![i as i64; 10], vec![1; 10]))
             .collect();
-        let out = farm.execute(&tasks).unwrap();
+        let out = farm.execute(tasks).unwrap();
         assert_eq!(out.len(), 8);
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.task_index, i);
@@ -207,7 +465,7 @@ mod tests {
         let tasks: Vec<BlockTask> = (0..4)
             .map(|_| ew_task(EwOp::Add, 4, vec![1; 1680], vec![2; 1680]))
             .collect();
-        let out = farm.execute(&tasks).unwrap();
+        let out = farm.execute(tasks).unwrap();
         let (total, critical) = farm.aggregate(&out);
         // 4 equal tasks on 2 blocks: critical path = 2 waves = total / 2
         assert_eq!(critical * 2, total.cycles);
@@ -219,7 +477,7 @@ mod tests {
         let tasks: Vec<BlockTask> = (0..3)
             .map(|_| ew_task(EwOp::Mul, 4, vec![3; 5], vec![-2; 5]))
             .collect();
-        let out = farm.execute(&tasks).unwrap();
+        let out = farm.execute(tasks).unwrap();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|o| o.values.iter().all(|&v| v == -6)));
         let (total, critical) = farm.aggregate(&out);
@@ -232,7 +490,7 @@ mod tests {
         let tasks: Vec<BlockTask> = (0..6)
             .map(|_| ew_task(EwOp::Add, 8, vec![1; 40], vec![2; 40]))
             .collect();
-        farm.execute(&tasks).unwrap();
+        farm.execute(tasks.clone()).unwrap();
         let stats = farm.kernel_cache().stats();
         assert_eq!(stats.misses, 1, "one shared compilation for 6 same-key tasks");
         assert_eq!(stats.hits, 5);
@@ -241,7 +499,7 @@ mod tests {
         // more batches with the same key: zero new compilations, and loads
         // stay bounded by the worker count (residency survives batches)
         for _ in 0..3 {
-            farm.execute(&tasks).unwrap();
+            farm.execute(tasks.clone()).unwrap();
         }
         assert_eq!(farm.kernel_cache().stats().misses, 1);
         assert!(farm.program_loads() <= 2, "loads {}", farm.program_loads());
@@ -254,5 +512,76 @@ mod tests {
         farm.prewarm(&[key]);
         assert!(farm.kernel_cache().peek(key).is_some());
         assert_eq!(farm.program_loads(), 0);
+    }
+
+    #[test]
+    fn affinity_routing_keeps_program_loads_flat_across_batches() {
+        let farm = BlockFarm::new(Geometry::G512x40, 4);
+        let tasks: Vec<BlockTask> = (0..8)
+            .map(|_| ew_task(EwOp::Add, 8, vec![3; 64], vec![4; 64]))
+            .collect();
+        for _ in 0..4 {
+            farm.execute(tasks.clone()).unwrap();
+        }
+        let warm_loads = farm.program_loads();
+        assert!(warm_loads <= 4, "at most one load per worker, got {warm_loads}");
+        for _ in 0..4 {
+            farm.execute(tasks.clone()).unwrap();
+        }
+        assert_eq!(farm.program_loads(), warm_loads, "no reloads once resident");
+        let stats = farm.affinity_stats();
+        assert!(stats.affinity_hits > 0, "router never hit: {stats:?}");
+    }
+
+    #[test]
+    fn multiple_batches_in_flight_complete_with_correct_results() {
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        let handles: Vec<(i64, BatchHandle)> = (0..5)
+            .map(|k| {
+                let tasks: Vec<BlockTask> = (0..3)
+                    .map(|_| ew_task(EwOp::Add, 8, vec![k; 20], vec![10; 20]))
+                    .collect();
+                (k, farm.submit(tasks))
+            })
+            .collect();
+        for (k, h) in handles {
+            assert_eq!(h.len(), 3);
+            let (out, timing) = h.wait().unwrap();
+            assert_eq!(out.len(), 3);
+            for (i, o) in out.iter().enumerate() {
+                assert_eq!(o.task_index, i);
+                assert!(o.values.iter().all(|&v| v == k + 10), "batch {k}");
+            }
+            // a completed 3-task batch spent real time executing
+            assert!(timing.exec > Duration::ZERO, "timing {timing:?}");
+        }
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_never_deadlocks() {
+        // far more tasks than the 1-worker farm's queue capacity: submit
+        // blocks for space while the worker drains, and all complete
+        let farm = BlockFarm::new(Geometry::G512x40, 1);
+        let tasks: Vec<BlockTask> = (0..80)
+            .map(|i| ew_task(EwOp::Add, 4, vec![i % 8; 4], vec![0; 4]))
+            .collect();
+        let out = farm.execute(tasks).unwrap();
+        assert_eq!(out.len(), 80);
+        for (i, o) in out.iter().enumerate() {
+            assert!(o.values.iter().all(|&v| v == i as i64 % 8), "task {i}");
+        }
+    }
+
+    #[test]
+    fn task_error_fails_its_batch_but_farm_survives() {
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        // a task whose staged operands exceed its (1-tuple) kernel capacity
+        let bad_key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1, Geometry::G512x40);
+        let bad = BlockTask::IntElementwise { key: bad_key, a: vec![1; 500], b: vec![1; 500] };
+        let good = ew_task(EwOp::Add, 8, vec![1; 10], vec![2; 10]);
+        assert!(farm.execute(vec![bad, good.clone()]).is_err());
+        // the engine keeps serving after a failed batch
+        let out = farm.execute(vec![good]).unwrap();
+        assert!(out[0].values.iter().all(|&v| v == 3));
     }
 }

@@ -77,6 +77,12 @@ pub struct JobResult {
     pub critical_cycles: u64,
     /// Number of block-level program executions the job needed.
     pub block_runs: usize,
+    /// Host wall-clock the job spent queued behind other work (submit ->
+    /// first task dequeued by a worker).
+    pub queue_wait: std::time::Duration,
+    /// Host wall-clock the job spent executing (first task dequeued ->
+    /// last task finished).
+    pub exec_time: std::time::Duration,
 }
 
 #[cfg(test)]

@@ -40,6 +40,17 @@ impl BlockTask {
     }
 }
 
+/// Packed per-block capacity (elements) of an integer elementwise op: how
+/// many `a (op) b` pairs one block holds at width `w`. Multiplication
+/// stores a double-width result, so its capacity is lower. Shared by the
+/// planner below and the server's coalesced-group cap.
+pub fn ew_capacity(geom: Geometry, op: EwOp, w: u32) -> usize {
+    match op {
+        EwOp::Mul => VecLayout::new(geom, w, 2 * w).total_ops(),
+        _ => VecLayout::new(geom, w, w).total_ops(),
+    }
+}
+
 /// Integer elementwise operator -> kernel op.
 pub(crate) fn ew_kernel_op(op: EwOp) -> KernelOp {
     match op {
@@ -65,10 +76,7 @@ pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
     match payload {
         JobPayload::IntElementwise { op, w, a, b } => {
             let kop = ew_kernel_op(*op);
-            let cap = match op {
-                EwOp::Mul => VecLayout::new(geom, *w, 2 * w).total_ops(),
-                _ => VecLayout::new(geom, *w, *w).total_ops(),
-            };
+            let cap = ew_capacity(geom, *op, *w);
             let mut tasks = Vec::new();
             let mut ew_offsets = Vec::new();
             let mut off = 0;

@@ -13,6 +13,12 @@ pub struct Metrics {
     pub sim_array_cycles: AtomicU64,
     /// Summed per-job critical paths (time-relevant wave maxima).
     pub sim_critical_cycles: AtomicU64,
+    /// Summed host microseconds jobs spent queued before a worker picked
+    /// up their first task (scheduling delay / backpressure signal).
+    pub queue_wait_micros: AtomicU64,
+    /// Summed host microseconds jobs spent executing (first task dequeued
+    /// to last task finished).
+    pub exec_micros: AtomicU64,
 }
 
 impl Metrics {
@@ -20,6 +26,7 @@ impl Metrics {
         Self::default()
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn record_job(
         &self,
         ops: u64,
@@ -27,6 +34,8 @@ impl Metrics {
         cycles: u64,
         array_cycles: u64,
         critical_cycles: u64,
+        queue_wait_micros: u64,
+        exec_micros: u64,
     ) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.block_runs.fetch_add(block_runs, Ordering::Relaxed);
@@ -34,18 +43,23 @@ impl Metrics {
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         self.sim_array_cycles.fetch_add(array_cycles, Ordering::Relaxed);
         self.sim_critical_cycles.fetch_add(critical_cycles, Ordering::Relaxed);
+        self.queue_wait_micros.fetch_add(queue_wait_micros, Ordering::Relaxed);
+        self.exec_micros.fetch_add(exec_micros, Ordering::Relaxed);
     }
 
     /// One-line text snapshot.
     pub fn snapshot(&self) -> String {
         format!(
-            "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={}",
+            "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
+             queue_us={} exec_us={}",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
             self.sim_cycles.load(Ordering::Relaxed),
             self.sim_array_cycles.load(Ordering::Relaxed),
             self.sim_critical_cycles.load(Ordering::Relaxed),
+            self.queue_wait_micros.load(Ordering::Relaxed),
+            self.exec_micros.load(Ordering::Relaxed),
         )
     }
 }
@@ -57,13 +71,17 @@ mod tests {
     #[test]
     fn record_accumulates() {
         let m = Metrics::new();
-        m.record_job(100, 2, 500, 400, 260);
-        m.record_job(50, 1, 250, 200, 250);
+        m.record_job(100, 2, 500, 400, 260, 30, 70);
+        m.record_job(50, 1, 250, 200, 250, 10, 20);
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
         assert_eq!(m.ops_executed.load(Ordering::Relaxed), 150);
         assert_eq!(m.sim_critical_cycles.load(Ordering::Relaxed), 510);
+        assert_eq!(m.queue_wait_micros.load(Ordering::Relaxed), 40);
+        assert_eq!(m.exec_micros.load(Ordering::Relaxed), 90);
         assert!(m.snapshot().contains("jobs=2"));
         assert!(m.snapshot().contains("critical_cycles=510"));
+        assert!(m.snapshot().contains("queue_us=40"));
+        assert!(m.snapshot().contains("exec_us=90"));
     }
 }

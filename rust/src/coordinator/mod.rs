@@ -15,14 +15,19 @@
 //!   than a column (partial sums reduced on the host side, as the external
 //!   logic would); every task carries the [`crate::exec::KernelKey`] of
 //!   the program that executes it;
-//! * [`farm`] — worker threads each bound to one persistent
-//!   [`crate::cram::CramBlock`], resolving tasks against a shared
+//! * [`farm`] — the persistent execution engine: long-lived worker threads
+//!   each bound to one [`crate::cram::CramBlock`], fed by per-worker task
+//!   queues with work stealing and a kernel-affinity router
+//!   ([`crate::exec::ResidencyMap`]), resolving tasks against a shared
 //!   [`crate::exec::KernelCache`] with program residency;
-//! * [`scheduler`] — dispatches tasks to free blocks and aggregates
-//!   metrics (summed cycles for energy, wave-max critical path for time);
+//! * [`scheduler`] — submit/await job handles over the engine
+//!   ([`scheduler::JobHandle`]), host-side reduction, and aggregate
+//!   metrics (summed cycles for energy, wave-max critical path for time,
+//!   queue-wait vs execute host latency);
 //! * [`server`] — a TCP/JSON batching front-end (PIM-as-a-service), the
-//!   shape of a vLLM-style router: requests are coalesced into full blocks
-//!   before dispatch;
+//!   shape of a vLLM-style router: requests are coalesced into
+//!   capacity-capped groups and multiple batches stay in flight while new
+//!   work is admitted;
 //! * [`metrics`] — counters shared by all of the above.
 
 pub mod farm;
@@ -32,7 +37,7 @@ pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
-pub use farm::BlockFarm;
+pub use farm::{BatchHandle, BatchTiming, BlockFarm};
 pub use job::{Job, JobPayload, JobResult};
 pub use metrics::Metrics;
-pub use scheduler::Coordinator;
+pub use scheduler::{Coordinator, JobHandle};

@@ -1,12 +1,18 @@
-//! The coordinator: plan, dispatch, reduce.
+//! The coordinator: plan, dispatch, reduce — now split into submit/await.
 //!
 //! Owns a [`BlockFarm`] and [`Metrics`]; accepts [`JobPayload`]s, runs the
-//! mapper, executes the plan on the farm, and performs the host-side
-//! reduction (elementwise scatter, dot partial sums, matmul reshape).
+//! mapper, hands the plan's tasks to the persistent execution engine, and
+//! performs the host-side reduction (elementwise scatter, dot partial sums,
+//! matmul reshape) when the caller awaits the [`JobHandle`].
+//!
+//! [`Coordinator::submit`] returns immediately, so callers can keep many
+//! jobs in flight — the server's pipelined batcher admits new batches while
+//! earlier ones execute, and the NN layer overlaps one batch's second layer
+//! with the next batch's first. [`Coordinator::run`] is submit + wait.
 
-use super::farm::BlockFarm;
+use super::farm::{aggregate_waves, BatchHandle, BlockFarm};
 use super::job::{Job, JobPayload, JobResult};
-use super::mapper::{self, BlockTask};
+use super::mapper::{self, BlockTask, Plan};
 use super::metrics::Metrics;
 use crate::bitline::Geometry;
 use crate::exec::{KernelCache, KernelKey, KernelOp};
@@ -18,6 +24,88 @@ use std::sync::Arc;
 pub struct Coordinator {
     farm: BlockFarm,
     pub metrics: Arc<Metrics>,
+}
+
+/// Host-side reduction step for one task's output, precomputed at submit so
+/// the handle does not retain the (possibly large) task operands.
+#[derive(Clone, Copy, Debug)]
+enum ReduceStep {
+    /// Scatter the chunk at its offset in the result vector.
+    Scatter { offset: usize },
+    /// Accumulate int32 partial sums at the offset (split-K dots).
+    Accumulate { offset: usize },
+}
+
+fn reduce_steps(plan: &Plan) -> Vec<ReduceStep> {
+    plan.tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| match t {
+            BlockTask::IntElementwise { .. } | BlockTask::Bf16Elementwise { .. } => {
+                // ew_offsets is task-ordered (dot/ew are never mixed in one plan)
+                ReduceStep::Scatter { offset: plan.ew_offsets[i] }
+            }
+            BlockTask::IntDot { out_offset, .. } => ReduceStep::Accumulate { offset: *out_offset },
+        })
+        .collect()
+}
+
+/// An in-flight job. Obtain with [`Coordinator::submit`]; redeem with
+/// [`JobHandle::wait`]. The handle owns everything the reduction needs, so
+/// any number of handles can be held while new jobs are submitted.
+pub struct JobHandle {
+    id: u64,
+    op_count: u64,
+    result_len: usize,
+    steps: Vec<ReduceStep>,
+    batch: BatchHandle,
+    n_blocks: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl JobHandle {
+    /// Number of block-level tasks the job fanned out to.
+    pub fn block_runs(&self) -> usize {
+        self.batch.len()
+    }
+
+    /// Block until the job completes; reduce and record metrics.
+    pub fn wait(self) -> Result<JobResult> {
+        let block_runs = self.batch.len();
+        let (outputs, timing) = self.batch.wait()?;
+        let (total, critical) = aggregate_waves(&outputs, self.n_blocks);
+        let mut values = vec![0i64; self.result_len];
+        for (out, step) in outputs.iter().zip(&self.steps) {
+            match step {
+                ReduceStep::Scatter { offset } => {
+                    values[*offset..*offset + out.values.len()].copy_from_slice(&out.values);
+                }
+                ReduceStep::Accumulate { offset } => {
+                    for (i, v) in out.values.iter().enumerate() {
+                        values[offset + i] = (values[offset + i] + v) as i32 as i64;
+                    }
+                }
+            }
+        }
+        self.metrics.record_job(
+            self.op_count,
+            block_runs as u64,
+            total.cycles,
+            total.array_cycles,
+            critical,
+            timing.queue_wait.as_micros() as u64,
+            timing.exec.as_micros() as u64,
+        );
+        Ok(JobResult {
+            id: self.id,
+            values,
+            stats: total,
+            critical_cycles: critical,
+            block_runs,
+            queue_wait: timing.queue_wait,
+            exec_time: timing.exec,
+        })
+    }
 }
 
 impl Coordinator {
@@ -70,44 +158,29 @@ impl Coordinator {
         n
     }
 
-    /// Execute a job to completion.
-    pub fn run(&self, job: Job) -> Result<JobResult> {
+    /// Plan a job and hand its tasks to the execution engine; returns an
+    /// awaitable handle immediately (backpressure: blocks only when the
+    /// farm's bounded task queue is full).
+    pub fn submit(&self, job: Job) -> JobHandle {
         let plan = mapper::plan(self.farm.geometry(), &job.payload);
-        let outputs = self.farm.execute(&plan.tasks)?;
-        let (total, critical) = self.farm.aggregate(&outputs);
-
-        let mut values = vec![0i64; plan.result_len];
-        for (out, task) in outputs.iter().zip(&plan.tasks) {
-            match task {
-                BlockTask::IntElementwise { .. } | BlockTask::Bf16Elementwise { .. } => {
-                    // scatter chunk at its offset (ew_offsets is task-ordered,
-                    // but dot/ew are never mixed in one plan)
-                    let off = plan.ew_offsets[out.task_index];
-                    values[off..off + out.values.len()].copy_from_slice(&out.values);
-                }
-                BlockTask::IntDot { out_offset, .. } => {
-                    // partial sums along split K accumulate
-                    for (i, v) in out.values.iter().enumerate() {
-                        values[out_offset + i] =
-                            (values[out_offset + i] + v) as i32 as i64;
-                    }
-                }
-            }
-        }
-        self.metrics.record_job(
-            job.payload.op_count(),
-            plan.tasks.len() as u64,
-            total.cycles,
-            total.array_cycles,
-            critical,
-        );
-        Ok(JobResult {
+        let steps = reduce_steps(&plan);
+        let result_len = plan.result_len;
+        let op_count = job.payload.op_count();
+        let batch = self.farm.submit(plan.tasks);
+        JobHandle {
             id: job.id,
-            values,
-            stats: total,
-            critical_cycles: critical,
-            block_runs: plan.tasks.len(),
-        })
+            op_count,
+            result_len,
+            steps,
+            batch,
+            n_blocks: self.farm.len(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Execute a job to completion (submit + wait).
+    pub fn run(&self, job: Job) -> Result<JobResult> {
+        self.submit(job).wait()
     }
 
     /// Convenience: integer matmul `x[m][k] @ w[k][n] -> int32 [m][n]`.
@@ -312,5 +385,55 @@ mod tests {
             let expect = a[i].add(b[i]).to_bits() as i64;
             assert_eq!(r.values[i], expect, "i={i}");
         }
+    }
+
+    #[test]
+    fn submitted_jobs_overlap_and_match_serialized_results() {
+        let c = coord();
+        let mut rng = Prng::new(1234);
+        let jobs: Vec<(Vec<i64>, Vec<i64>)> = (0..6)
+            .map(|_| {
+                let a: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
+                let b: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
+                (a, b)
+            })
+            .collect();
+        let mk = |a: &[i64], b: &[i64]| Job {
+            id: 0,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: a.to_vec(),
+                b: b.to_vec(),
+            },
+        };
+        // serialized: one at a time
+        let serial: Vec<Vec<i64>> =
+            jobs.iter().map(|(a, b)| c.run(mk(a, b)).unwrap().values).collect();
+        // pipelined: all in flight before the first wait
+        let handles: Vec<JobHandle> = jobs.iter().map(|(a, b)| c.submit(mk(a, b))).collect();
+        let piped: Vec<Vec<i64>> =
+            handles.into_iter().map(|h| h.wait().unwrap().values).collect();
+        assert_eq!(serial, piped, "pipelining must be bit-exact");
+    }
+
+    #[test]
+    fn job_result_reports_latency_split() {
+        let c = coord();
+        let r = c
+            .run(Job {
+                id: 7,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: vec![1; 500],
+                    b: vec![2; 500],
+                },
+            })
+            .unwrap();
+        assert!(r.exec_time > std::time::Duration::ZERO, "{:?}", r.exec_time);
+        let snap = c.metrics.snapshot();
+        assert!(snap.contains("queue_us="), "{snap}");
+        assert!(snap.contains("exec_us="), "{snap}");
     }
 }

@@ -2,10 +2,15 @@
 //!
 //! The request path is the shape of a serving router (cf. vLLM's router):
 //! clients submit small elementwise requests; the server **coalesces** all
-//! requests waiting in the queue into one block-filling batch before
+//! requests waiting in the queue into capacity-capped batches before
 //! dispatching to the farm, amortizing the block program over many
-//! requests. Python is never involved: the wire format is line-delimited
-//! JSON over TCP, parsed by [`crate::util::json`].
+//! requests. Since the submit/await split, the batching loop no longer
+//! blocks on execution: it submits a batch to the engine, hands the
+//! in-flight handle to a completer thread, and immediately goes back to
+//! admitting and coalescing new requests — several batches ride the farm
+//! concurrently, bounded by [`MAX_INFLIGHT_BATCHES`] for backpressure.
+//! Python is never involved: the wire format is line-delimited JSON over
+//! TCP, parsed by [`crate::util::json`].
 //!
 //! Wire format (one JSON object per line):
 //!
@@ -14,18 +19,26 @@
 //!   <- {"id": 1, "ok": true, "values": [5,7,9]}
 //! ```
 //!
-//! Supported ops: `add`, `sub`, `mul` (integer widths 2..=16).
+//! Supported ops: `add`, `sub`, `mul` (integer widths 2..=16). Ids and
+//! values are carried as [`Json::Int`], so 64-bit integers cross the wire
+//! without the 2^53 precision loss of an f64 path; request ids outside
+//! 0..=i64::MAX are rejected at parse time rather than echoed corrupted.
 
 use super::job::{EwOp, Job, JobPayload};
-use super::scheduler::Coordinator;
+use super::mapper;
+use super::scheduler::{Coordinator, JobHandle};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Coalesced batches allowed in flight on the farm before the batching
+/// loop stops admitting new ones (backpressure toward the TCP clients).
+const MAX_INFLIGHT_BATCHES: usize = 4;
 
 /// One parsed client request.
 #[derive(Clone, Debug)]
@@ -40,13 +53,14 @@ pub struct Request {
 /// Best-effort extraction of a request id from a line that may otherwise
 /// be invalid, so error responses can carry the client's own id (a client
 /// multiplexing requests over one connection cannot correlate an error
-/// reported against id 0).
+/// reported against id 0). Only ids [`parse_request`] would accept are
+/// recovered — echoing a truncated f64 id would tag the error with an id
+/// the client never sent.
 pub fn recover_request_id(line: &str) -> u64 {
-    Json::parse(line)
-        .ok()
-        .and_then(|v| v.get("id").and_then(Json::as_i64))
-        .map(|id| id as u64)
-        .unwrap_or(0)
+    match Json::parse(line).ok().as_ref().and_then(|v| v.get("id")) {
+        Some(&Json::Int(i)) if i >= 0 => i as u64,
+        _ => 0,
+    }
 }
 
 /// Parse one request line. Validation (op, width, operand range, and the
@@ -55,23 +69,41 @@ pub fn recover_request_id(line: &str) -> u64 {
 /// where it would poison a whole coalesced batch.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
-    let id = v.get("id").and_then(Json::as_i64).ok_or_else(|| anyhow!("missing id"))? as u64;
+    // ids must be exact integers in 0..=i64::MAX: a fractional, negative
+    // or beyond-i64 literal parses as (or saturates through) f64 and
+    // would echo back a *different* id, breaking client correlation —
+    // reject instead of corrupting
+    let id = match v.get("id") {
+        Some(&Json::Int(i)) if i >= 0 => i as u64,
+        Some(_) => bail!("id must be an integer in 0..={}", i64::MAX),
+        None => bail!("missing id"),
+    };
     let op = match v.get("op").and_then(Json::as_str) {
         Some("add") => EwOp::Add,
         Some("sub") => EwOp::Sub,
         Some("mul") => EwOp::Mul,
         other => bail!("unsupported op {other:?}"),
     };
-    let w = v.get("w").and_then(Json::as_i64).unwrap_or(8) as u32;
+    let w = match v.get("w") {
+        None => 8,
+        // out-of-u32 widths become 0 and fail the range check below
+        Some(&Json::Int(i)) => u32::try_from(i).unwrap_or(0),
+        Some(_) => bail!("width must be an integer"),
+    };
     if !(2..=16).contains(&w) {
         bail!("width {w} out of range 2..=16");
     }
+    // operands must be exact integers: a fractional literal would be
+    // silently truncated by an as_i64 path and compute on altered data
     let nums = |key: &str| -> Result<Vec<i64>> {
         v.get(key)
             .and_then(Json::as_arr)
             .ok_or_else(|| anyhow!("missing array {key}"))?
             .iter()
-            .map(|x| x.as_i64().ok_or_else(|| anyhow!("non-integer in {key}")))
+            .map(|x| match x {
+                Json::Int(i) => Ok(*i),
+                _ => Err(anyhow!("non-integer in {key}")),
+            })
             .collect()
     };
     let a = nums("a")?;
@@ -86,14 +118,15 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request { id, op, w, a, b })
 }
 
-/// Format a success response line.
+/// Format a success response line. Ids and values round-trip as exact
+/// 64-bit integers ([`Json::Int`]).
 pub fn format_response(id: u64, values: &[i64]) -> String {
     let mut obj = BTreeMap::new();
-    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("id".to_string(), Json::Int(id as i64));
     obj.insert("ok".to_string(), Json::Bool(true));
     obj.insert(
         "values".to_string(),
-        Json::Arr(values.iter().map(|&v| Json::Num(v as f64)).collect()),
+        Json::Arr(values.iter().map(|&v| Json::Int(v)).collect()),
     );
     Json::Obj(obj).dump()
 }
@@ -101,47 +134,33 @@ pub fn format_response(id: u64, values: &[i64]) -> String {
 /// Format an error response line.
 pub fn format_error(id: u64, msg: &str) -> String {
     let mut obj = BTreeMap::new();
-    obj.insert("id".to_string(), Json::Num(id as f64));
+    obj.insert("id".to_string(), Json::Int(id as i64));
     obj.insert("ok".to_string(), Json::Bool(false));
     obj.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(obj).dump()
 }
 
-/// The batching core, independent of the transport: drains the queue and
-/// coalesces same-(op, w) requests into single farm jobs.
-pub struct Batcher {
-    coordinator: Arc<Coordinator>,
+/// Span of one request inside a coalesced job: (request index, offset into
+/// the job's flat operands, length).
+type Span = (usize, usize, usize);
+
+/// A set of coalesced jobs submitted to the farm but not yet awaited.
+pub struct InFlightBatch {
+    jobs: Vec<(JobHandle, Vec<Span>)>,
+    n_reqs: usize,
 }
 
-impl Batcher {
-    pub fn new(coordinator: Arc<Coordinator>) -> Self {
-        Self { coordinator }
+impl InFlightBatch {
+    /// Number of farm jobs the batch coalesced into.
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
     }
 
-    /// Execute a batch of requests with coalescing; returns per-request
-    /// results in input order.
-    pub fn run_batch(&self, reqs: &[Request]) -> Vec<Result<Vec<i64>>> {
-        // group by (op, w)
-        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
-        for (i, r) in reqs.iter().enumerate() {
-            groups.entry((r.op as u8, r.w)).or_default().push(i);
-        }
-        let mut out: Vec<Option<Result<Vec<i64>>>> = (0..reqs.len()).map(|_| None).collect();
-        for ((_, w), idxs) in groups {
-            let op = reqs[idxs[0]].op;
-            // coalesce into one flat job
-            let mut a = Vec::new();
-            let mut b = Vec::new();
-            let mut spans = Vec::new();
-            for &i in &idxs {
-                spans.push((i, a.len(), reqs[i].a.len()));
-                a.extend_from_slice(&reqs[i].a);
-                b.extend_from_slice(&reqs[i].b);
-            }
-            match self.coordinator.run(Job {
-                id: 0,
-                payload: JobPayload::IntElementwise { op, w, a, b },
-            }) {
+    /// Await every job and scatter the per-request results in input order.
+    pub fn wait(self) -> Vec<Result<Vec<i64>>> {
+        let mut out: Vec<Option<Result<Vec<i64>>>> = (0..self.n_reqs).map(|_| None).collect();
+        for (handle, spans) in self.jobs {
+            match handle.wait() {
                 Ok(res) => {
                     for (i, off, len) in spans {
                         out[i] = Some(Ok(res.values[off..off + len].to_vec()));
@@ -159,12 +178,102 @@ impl Batcher {
     }
 }
 
+/// The batching core, independent of the transport: drains the queue and
+/// coalesces same-(op, w) requests into farm jobs, splitting any group at
+/// a block-capacity multiple so one huge request stream cannot fold every
+/// waiting client into a single giant job.
+pub struct Batcher {
+    coordinator: Arc<Coordinator>,
+    /// Maximum coalesced elements per job; `None` computes one farm-wave
+    /// (`ew_capacity x n_blocks`) per (op, w) group.
+    group_cap: Option<usize>,
+}
+
+impl Batcher {
+    pub fn new(coordinator: Arc<Coordinator>) -> Self {
+        Self { coordinator, group_cap: None }
+    }
+
+    /// Override the coalesced-group cap (elements per job) — used by tests
+    /// and deployments that want shorter convoys than a full farm wave.
+    pub fn with_group_cap(coordinator: Arc<Coordinator>, cap: usize) -> Self {
+        Self { coordinator, group_cap: Some(cap.max(1)) }
+    }
+
+    /// Coalesce `reqs` into capacity-capped jobs and submit them all to
+    /// the farm without waiting; returns the in-flight handle set.
+    pub fn submit_batch(&self, reqs: &[Request]) -> InFlightBatch {
+        // group by (op, w)
+        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            groups.entry((r.op as u8, r.w)).or_default().push(i);
+        }
+        let geom = self.coordinator.farm().geometry();
+        let n_blocks = self.coordinator.farm().len().max(1);
+        let mut jobs: Vec<(JobHandle, Vec<Span>)> = Vec::new();
+        for ((_, w), idxs) in groups {
+            let op = reqs[idxs[0]].op;
+            let cap = self
+                .group_cap
+                .unwrap_or_else(|| mapper::ew_capacity(geom, op, w).max(1) * n_blocks);
+            let mut a: Vec<i64> = Vec::new();
+            let mut b: Vec<i64> = Vec::new();
+            let mut spans: Vec<Span> = Vec::new();
+            for &i in &idxs {
+                // split the group before it exceeds the cap (a single
+                // oversized request still becomes its own job — the mapper
+                // chunks it across blocks — but it no longer convoys the
+                // other waiting clients)
+                if !spans.is_empty() && a.len() + reqs[i].a.len() > cap {
+                    jobs.push(self.submit_group(
+                        op,
+                        w,
+                        std::mem::take(&mut a),
+                        std::mem::take(&mut b),
+                        std::mem::take(&mut spans),
+                    ));
+                }
+                spans.push((i, a.len(), reqs[i].a.len()));
+                a.extend_from_slice(&reqs[i].a);
+                b.extend_from_slice(&reqs[i].b);
+            }
+            if !spans.is_empty() {
+                jobs.push(self.submit_group(op, w, a, b, spans));
+            }
+        }
+        InFlightBatch { jobs, n_reqs: reqs.len() }
+    }
+
+    fn submit_group(
+        &self,
+        op: EwOp,
+        w: u32,
+        a: Vec<i64>,
+        b: Vec<i64>,
+        spans: Vec<Span>,
+    ) -> (JobHandle, Vec<Span>) {
+        let handle = self.coordinator.submit(Job {
+            id: 0,
+            payload: JobPayload::IntElementwise { op, w, a, b },
+        });
+        (handle, spans)
+    }
+
+    /// Execute a batch of requests with coalescing; returns per-request
+    /// results in input order (submit + wait; the serialized path).
+    pub fn run_batch(&self, reqs: &[Request]) -> Vec<Result<Vec<i64>>> {
+        self.submit_batch(reqs).wait()
+    }
+}
+
 enum Work {
     Req(Request, Sender<String>),
 }
 
 /// The TCP server: one reader thread per connection feeding a central
-/// batching loop. `max_batch_wait` bounds added latency.
+/// batching loop that keeps up to [`MAX_INFLIGHT_BATCHES`] coalesced
+/// batches executing while it admits new work. `max_batch_wait` bounds
+/// added latency.
 pub struct PimServer {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
@@ -187,6 +296,23 @@ impl PimServer {
         let handle = std::thread::spawn(move || {
             let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
             let batcher = Batcher::new(coordinator);
+            // bounded pipeline: the batching loop submits, the completer
+            // awaits + replies; `send` blocks once MAX_INFLIGHT_BATCHES
+            // batches are executing (backpressure)
+            let (inflight_tx, inflight_rx) =
+                sync_channel::<(InFlightBatch, Vec<(u64, Sender<String>)>)>(MAX_INFLIGHT_BATCHES);
+            let completer = std::thread::spawn(move || {
+                while let Ok((batch, replies)) = inflight_rx.recv() {
+                    let results = batch.wait();
+                    for ((id, reply), result) in replies.into_iter().zip(results) {
+                        let line = match result {
+                            Ok(values) => format_response(id, &values),
+                            Err(e) => format_error(id, &format!("{e}")),
+                        };
+                        let _ = reply.send(line);
+                    }
+                }
+            });
             let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
                 Arc::new(Mutex::new(Vec::new()));
             loop {
@@ -220,16 +346,21 @@ impl PimServer {
                 if pending.is_empty() {
                     continue;
                 }
-                let reqs: Vec<Request> = pending.iter().map(|(r, _)| r.clone()).collect();
-                let results = batcher.run_batch(&reqs);
-                for ((req, reply), result) in pending.into_iter().zip(results) {
-                    let line = match result {
-                        Ok(values) => format_response(req.id, &values),
-                        Err(e) => format_error(req.id, &format!("{e}")),
-                    };
-                    let _ = reply.send(line);
+                // submit and hand off; earlier batches are still executing
+                // (split replies out by move — no deep copy of operands)
+                let mut reqs: Vec<Request> = Vec::with_capacity(pending.len());
+                let mut replies: Vec<(u64, Sender<String>)> = Vec::with_capacity(pending.len());
+                for (r, s) in pending {
+                    replies.push((r.id, s));
+                    reqs.push(r);
+                }
+                let inflight = batcher.submit_batch(&reqs);
+                if inflight_tx.send((inflight, replies)).is_err() {
+                    break;
                 }
             }
+            drop(inflight_tx);
+            let _ = completer.join();
         });
         Ok(PimServer { addr, shutdown, handle: Some(handle) })
     }
@@ -297,6 +428,35 @@ mod tests {
         assert!(parse_request(r#"{"id":1,"op":"add","w":8,"a":[1],"b":[1,2]}"#).is_err());
         assert!(parse_request(r#"{"id":1,"op":"add","w":4,"a":[100],"b":[1]}"#).is_err());
         assert!(parse_request(r#"{"id":1,"op":"add","w":99,"a":[1],"b":[1]}"#).is_err());
+        // ids that cannot round-trip exactly are rejected, not corrupted
+        assert!(parse_request(r#"{"id":9223372036854775808,"op":"add","a":[1],"b":[1]}"#)
+            .is_err());
+        assert!(parse_request(r#"{"id":-1,"op":"add","a":[1],"b":[1]}"#).is_err());
+        assert!(parse_request(r#"{"id":1.5,"op":"add","a":[1],"b":[1]}"#).is_err());
+        // fractional operands/widths would silently truncate: rejected
+        assert!(parse_request(r#"{"id":1,"op":"add","w":8,"a":[2.9],"b":[1]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"op":"add","w":8.5,"a":[1],"b":[1]}"#).is_err());
+    }
+
+    #[test]
+    fn response_ids_and_values_survive_beyond_2_pow_53() {
+        let big_id = (1u64 << 53) + 7;
+        let big_vals = [i64::MAX, i64::MIN, (1i64 << 53) + 1, -5];
+        let line = format_response(big_id, &big_vals);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_i64), Some(big_id as i64));
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, big_vals, "values must round-trip exactly");
+        let err_line = format_error(u64::MAX, "boom");
+        let e = Json::parse(&err_line).unwrap();
+        assert_eq!(e.get("id").and_then(Json::as_i64).map(|i| i as u64), Some(u64::MAX));
     }
 
     #[test]
@@ -314,6 +474,46 @@ mod tests {
         assert_eq!(out[2].as_ref().unwrap(), &vec![0]);
         // the two adds coalesced into one job: jobs=2 not 3
         assert!(coord.metrics.snapshot().contains("jobs=2"));
+    }
+
+    #[test]
+    fn coalesced_groups_split_at_the_capacity_cap() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
+        // cap of 200 elements: 4 x 100-element adds -> 2 jobs of 2 requests
+        let batcher = Batcher::with_group_cap(coord.clone(), 200);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                op: EwOp::Add,
+                w: 8,
+                a: vec![i as i64; 100],
+                b: vec![1; 100],
+            })
+            .collect();
+        let inflight = batcher.submit_batch(&reqs);
+        assert_eq!(inflight.job_count(), 2, "group must split at the cap");
+        let out = inflight.wait();
+        for (i, r) in out.iter().enumerate() {
+            let vals = r.as_ref().unwrap();
+            assert_eq!(vals.len(), 100);
+            assert!(vals.iter().all(|&v| v == i as i64 + 1), "req {i}");
+        }
+        assert!(coord.metrics.snapshot().contains("jobs=2"));
+    }
+
+    #[test]
+    fn oversized_single_request_does_not_convoy_others() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
+        let batcher = Batcher::with_group_cap(coord.clone(), 50);
+        let reqs = vec![
+            Request { id: 1, op: EwOp::Add, w: 8, a: vec![1; 500], b: vec![1; 500] },
+            Request { id: 2, op: EwOp::Add, w: 8, a: vec![2; 10], b: vec![2; 10] },
+        ];
+        let inflight = batcher.submit_batch(&reqs);
+        assert_eq!(inflight.job_count(), 2, "giant request gets its own job");
+        let out = inflight.wait();
+        assert!(out[0].as_ref().unwrap().iter().all(|&v| v == 2));
+        assert!(out[1].as_ref().unwrap().iter().all(|&v| v == 4));
     }
 
     #[test]
@@ -384,6 +584,10 @@ mod tests {
         assert_eq!(recover_request_id(r#"{"id": 9, "op": "div"}"#), 9);
         assert_eq!(recover_request_id("not json"), 0);
         assert_eq!(recover_request_id(r#"{"op": "add"}"#), 0);
+        // ids parse_request would reject are not echoed corrupted
+        assert_eq!(recover_request_id(r#"{"id": 1.5}"#), 0);
+        assert_eq!(recover_request_id(r#"{"id": -3}"#), 0);
+        assert_eq!(recover_request_id(r#"{"id": 9223372036854775808}"#), 0);
     }
 
     #[test]

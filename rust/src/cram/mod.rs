@@ -241,6 +241,21 @@ impl CramBlock {
         Ok(total)
     }
 
+    /// The `reset` input port: abort any in-flight computation and return
+    /// to storage mode. The instruction memory is configuration state, so
+    /// program residency and the load count survive; array contents are
+    /// whatever the aborted program left behind — callers re-stage
+    /// operands before the next run (as every `cram::ops` path does). The
+    /// farm's persistent workers use this to recover a block whose run
+    /// failed or panicked mid-program (`running` would otherwise stay
+    /// high and wedge the block in compute mode forever).
+    pub fn reset(&mut self) {
+        self.ctrl.reset();
+        self.periph.reset();
+        self.running = false;
+        self.mode = Mode::Storage;
+    }
+
     /// Stats of the last completed run.
     pub fn last_run_stats(&self) -> CycleStats {
         self.ctrl.stats()
@@ -291,6 +306,24 @@ mod tests {
         assert!(b.start().is_err()); // storage mode
         b.set_mode(Mode::Compute).unwrap();
         assert!(b.start().is_err()); // empty imem
+    }
+
+    #[test]
+    fn reset_recovers_a_block_mid_run() {
+        let mut b = CramBlock::new(Geometry::G512x40);
+        let (prog, _l) = ucode::int::add_sized(Geometry::G512x40, 8, 1);
+        b.load_program(&prog).unwrap();
+        let loads = b.program_loads();
+        b.set_mode(Mode::Compute).unwrap();
+        b.start().unwrap();
+        b.tick().unwrap();
+        assert!(!b.done(), "one tick into the program: still running");
+        assert!(b.set_mode(Mode::Storage).is_err(), "wedged until reset");
+        b.reset();
+        assert!(b.done());
+        b.set_mode(Mode::Storage).unwrap();
+        b.write(0, &LaneVec::zeros(40)).unwrap();
+        assert_eq!(b.program_loads(), loads, "reset preserves the load count");
     }
 
     #[test]

@@ -20,6 +20,9 @@
 //!   skips the instruction-memory reload entirely when a block already
 //!   holds the requested kernel — the common case for a farm worker
 //!   serving a stream of same-shaped batches.
+//! * The [`ResidencyMap`] lifts residency from a per-block accident into a
+//!   scheduling property: the farm's affinity router tracks which kernel
+//!   each worker holds and sends tasks to a matching worker first.
 //!
 //! Lifecycle (also documented in `DESIGN.md`):
 //!
@@ -33,6 +36,8 @@
 
 pub mod cache;
 pub mod kernel;
+pub mod residency;
 
 pub use cache::{CacheStats, KernelCache};
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
+pub use residency::{ResidencyMap, ResidencyStats};

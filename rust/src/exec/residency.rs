@@ -1,0 +1,195 @@
+//! The farm-level residency map: which kernel each worker's block holds.
+//!
+//! [`crate::cram::CramBlock::ensure_kernel`] makes a *single* block skip the
+//! instruction-memory reload when the requested kernel is already resident.
+//! That only pays if the scheduler keeps sending a kernel to a block that
+//! already holds it — otherwise residency hits are luck. [`ResidencyMap`]
+//! turns them into a scheduling property: the execution engine records the
+//! kernel each worker last held and routes new tasks to a matching worker
+//! (falling back to the least-loaded one), so a farm serving a stream of
+//! same-shaped batches converges to zero reloads.
+
+use super::kernel::KernelKey;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Router effectiveness counters (monotonic; shared across threads).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Tasks routed to a worker predicted to already hold their kernel.
+    pub affinity_hits: u64,
+    /// Tasks routed by load only (no worker held the kernel yet).
+    pub affinity_misses: u64,
+}
+
+impl ResidencyStats {
+    pub fn routed(&self) -> u64 {
+        self.affinity_hits + self.affinity_misses
+    }
+
+    /// Fraction of routing decisions that were affinity hits.
+    pub fn hit_rate(&self) -> f64 {
+        if self.routed() == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / self.routed() as f64
+        }
+    }
+}
+
+/// Per-worker record of the kernel (by [`KernelKey`]) each block is expected
+/// to hold, maintained by the execution engine: the router writes a
+/// *prediction* when it enqueues a task, and the worker overwrites it with
+/// the *actual* key when the task runs (work stealing can make the two
+/// diverge briefly; the actual write wins).
+#[derive(Debug)]
+pub struct ResidencyMap {
+    slots: Mutex<Vec<Option<KernelKey>>>,
+    affinity_hits: AtomicU64,
+    affinity_misses: AtomicU64,
+}
+
+impl ResidencyMap {
+    pub fn new(n_workers: usize) -> ResidencyMap {
+        ResidencyMap {
+            slots: Mutex::new(vec![None; n_workers]),
+            affinity_hits: AtomicU64::new(0),
+            affinity_misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The kernel `worker` is believed to hold.
+    pub fn resident(&self, worker: usize) -> Option<KernelKey> {
+        self.slots.lock().unwrap()[worker]
+    }
+
+    /// Record that `worker` now holds (or is about to hold) `key`.
+    pub fn note(&self, worker: usize, key: KernelKey) {
+        self.slots.lock().unwrap()[worker] = Some(key);
+    }
+
+    /// Pick a worker for a task running `key`, given the current per-worker
+    /// queue depths: a worker already holding `key` **among the least
+    /// loaded** if one exists (affinity hit), otherwise the least-loaded
+    /// worker overall (miss; the slot is updated so subsequent routing sees
+    /// the prediction). Affinity never outranks load: once every resident
+    /// worker is busier than an idle one, the idle worker gets the task and
+    /// the kernel — so a deep same-kernel submission spreads residency
+    /// deterministically across the farm instead of convoying one worker
+    /// and leaving the spread to steal-timing luck.
+    pub fn route(&self, key: KernelKey, queue_depths: &[usize]) -> usize {
+        let mut slots = self.slots.lock().unwrap();
+        debug_assert_eq!(slots.len(), queue_depths.len());
+        let min_depth = queue_depths.iter().copied().min().unwrap_or(0);
+        let hit = (0..slots.len())
+            .find(|&i| slots[i] == Some(key) && queue_depths[i] == min_depth);
+        match hit {
+            Some(i) => {
+                self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                i
+            }
+            None => {
+                let i = (0..queue_depths.len())
+                    .min_by_key(|&i| queue_depths[i])
+                    .unwrap_or(0);
+                self.affinity_misses.fetch_add(1, Ordering::Relaxed);
+                slots[i] = Some(key);
+                i
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ResidencyStats {
+        ResidencyStats {
+            affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
+            affinity_misses: self.affinity_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::exec::KernelOp;
+
+    fn key(w: u32) -> KernelKey {
+        KernelKey::int_ew_full(KernelOp::IntAdd, w, Geometry::G512x40)
+    }
+
+    #[test]
+    fn first_route_is_a_miss_to_the_least_loaded_worker() {
+        let map = ResidencyMap::new(3);
+        let w = map.route(key(8), &[2, 0, 1]);
+        assert_eq!(w, 1);
+        assert_eq!(map.stats(), ResidencyStats { affinity_hits: 0, affinity_misses: 1 });
+        assert_eq!(map.resident(1), Some(key(8)));
+    }
+
+    #[test]
+    fn repeat_route_hits_the_resident_worker_when_equally_loaded() {
+        let map = ResidencyMap::new(3);
+        assert_eq!(map.route(key(8), &[0, 0, 0]), 0);
+        assert_eq!(map.route(key(8), &[0, 0, 0]), 0, "idle resident worker wins");
+        assert_eq!(map.stats().affinity_hits, 1);
+    }
+
+    #[test]
+    fn load_outranks_affinity_spreading_residency() {
+        let map = ResidencyMap::new(3);
+        assert_eq!(map.route(key(8), &[0, 0, 0]), 0);
+        // the resident worker is busier than an idle sibling: the idle
+        // worker gets the task (and, predictively, the kernel) — this is
+        // what makes a deep same-kernel submission fan out deterministically
+        assert_eq!(map.route(key(8), &[1, 0, 0]), 1);
+        assert_eq!(map.route(key(8), &[1, 1, 0]), 2);
+        // all slots resident and equally loaded again: hits resume
+        assert_eq!(map.route(key(8), &[1, 1, 1]), 0);
+        assert_eq!(map.stats().affinity_misses, 3);
+        assert_eq!(map.stats().affinity_hits, 1);
+    }
+
+    #[test]
+    fn hit_requires_resident_worker_at_min_depth() {
+        let map = ResidencyMap::new(3);
+        map.note(0, key(8));
+        map.note(2, key(8));
+        // worker 1 is idle but not resident; resident worker 2 is deeper —
+        // the idle worker wins (miss) and becomes resident
+        assert_eq!(map.route(key(8), &[5, 0, 1]), 1);
+        assert_eq!(map.stats().affinity_misses, 1);
+        // now workers 1 and 2 tie at the min depth: lowest resident index
+        assert_eq!(map.route(key(8), &[5, 1, 1]), 1);
+        assert_eq!(map.stats().affinity_hits, 1);
+    }
+
+    #[test]
+    fn distinct_kernels_spread_over_workers() {
+        let map = ResidencyMap::new(2);
+        let mut depths = [0usize, 0];
+        let w4 = map.route(key(4), &depths);
+        depths[w4] += 1;
+        let w8 = map.route(key(8), &depths);
+        assert_ne!(w4, w8, "second kernel routes to the idle worker");
+        assert_eq!(map.stats().affinity_misses, 2);
+        assert_eq!(map.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn worker_note_overwrites_prediction() {
+        let map = ResidencyMap::new(1);
+        map.route(key(4), &[0]);
+        map.note(0, key(8)); // a stolen task actually ran int8 here
+        assert_eq!(map.resident(0), Some(key(8)));
+        assert_eq!(map.route(key(8), &[0]), 0);
+        assert_eq!(map.stats().affinity_hits, 1);
+    }
+}

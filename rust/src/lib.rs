@@ -19,7 +19,9 @@
 //!   residency, so the serving hot path stages data and runs without
 //!   re-assembling microcode or reloading instruction memories ([`exec`]);
 //! * a **coordinator** that maps vector and NN workloads across a farm of
-//!   Compute RAM blocks, with a batching server ([`coordinator`]);
+//!   Compute RAM blocks behind a persistent execution engine (per-worker
+//!   queues, work stealing, kernel-affinity routing) with submit/await job
+//!   handles and a pipelined batching server ([`coordinator`]);
 //! * a small **quantized-NN layer stack** that runs on the farm ([`nn`]);
 //! * a **PJRT runtime** that loads the AOT-compiled JAX/Pallas artifacts and
 //!   cross-checks the simulator's numerics (`runtime`, behind the

@@ -10,7 +10,7 @@
 //! `mlp_i8.hlo.txt` PJRT artifact, closing the loop between the simulator
 //! and the golden JAX model.
 
-use crate::coordinator::{Coordinator, JobPayload};
+use crate::coordinator::{Coordinator, Job, JobPayload};
 use anyhow::{ensure, Result};
 
 /// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
@@ -54,6 +54,16 @@ impl QuantLinear {
         })
     }
 
+    /// Add this layer's bias in int32 wraparound arithmetic (the shared
+    /// tail of every forward path, serialized or pipelined).
+    fn add_bias(&self, y: &mut [Vec<i64>]) {
+        for row in y {
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v = (*v + bias) as i32 as i64;
+            }
+        }
+    }
+
     /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
         ensure!(
@@ -63,11 +73,7 @@ impl QuantLinear {
             self.in_dim()
         );
         let mut y = coord.matmul(x, &self.w, 8)?;
-        for row in &mut y {
-            for (v, &bias) in row.iter_mut().zip(&self.b) {
-                *v = (*v + bias) as i32 as i64;
-            }
-        }
+        self.add_bias(&mut y);
         Ok(y)
     }
 }
@@ -114,6 +120,52 @@ impl MlpInt8 {
         let mut h = self.l1.forward(coord, x)?;
         relu_requant(&mut h, REQUANT_SHIFT);
         self.l2.forward(coord, &h)
+    }
+
+    /// Forward passes over several independent input batches with
+    /// cross-batch pipelining: batch `i+1`'s first-layer matmul is
+    /// submitted to the engine before batch `i`'s host-side requant and
+    /// second layer run, so the farm never idles between batches. Results
+    /// are bit-identical to calling [`MlpInt8::forward`] per batch.
+    pub fn forward_pipelined(
+        &self,
+        coord: &Coordinator,
+        batches: &[Vec<Vec<i64>>],
+    ) -> Result<Vec<Vec<Vec<i64>>>> {
+        for x in batches {
+            ensure!(
+                x.iter().all(|r| r.len() == self.l1.in_dim()),
+                "input width {} != layer in_dim {}",
+                x.first().map_or(0, Vec::len),
+                self.l1.in_dim()
+            );
+        }
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let submit_l1 = |x: &[Vec<i64>]| {
+            coord.submit(Job {
+                id: 0,
+                payload: JobPayload::IntMatmul { w: 8, x: x.to_vec(), wt: self.l1.w.clone() },
+            })
+        };
+        let hid = self.l1.out_dim();
+        let mut results = Vec::with_capacity(batches.len());
+        let mut inflight = Some(submit_l1(&batches[0]));
+        for i in 0..batches.len() {
+            let r1 = inflight.take().expect("layer-1 job in flight").wait()?;
+            if i + 1 < batches.len() {
+                inflight = Some(submit_l1(&batches[i + 1]));
+            }
+            // host-side reduction of batch i overlaps batch i+1's matmul
+            let m = batches[i].len();
+            let mut h: Vec<Vec<i64>> =
+                (0..m).map(|r| r1.values[r * hid..(r + 1) * hid].to_vec()).collect();
+            self.l1.add_bias(&mut h);
+            relu_requant(&mut h, REQUANT_SHIFT);
+            results.push(self.l2.forward(coord, &h)?);
+        }
+        Ok(results)
     }
 
     /// Pure-host reference (same arithmetic; no farm) for differential
@@ -218,6 +270,22 @@ mod tests {
         let farm = mlp.forward(&c, &x).unwrap();
         assert_eq!(farm, mlp.forward_host(&x));
         assert_eq!(c.kernel_cache().stats().misses, misses, "forward compiles nothing");
+    }
+
+    #[test]
+    fn pipelined_forward_matches_per_batch_forward() {
+        let c = coord();
+        let mlp = MlpInt8::synthetic(64, 32, 10, 77).unwrap();
+        let mut rng = Prng::new(53);
+        let batches: Vec<Vec<Vec<i64>>> = (0..4)
+            .map(|_| (0..6).map(|_| (0..64).map(|_| rng.int(8)).collect()).collect())
+            .collect();
+        let piped = mlp.forward_pipelined(&c, &batches).unwrap();
+        assert_eq!(piped.len(), 4);
+        for (i, x) in batches.iter().enumerate() {
+            assert_eq!(piped[i], mlp.forward_host(x), "batch {i}");
+        }
+        assert!(mlp.forward_pipelined(&c, &[]).unwrap().is_empty());
     }
 
     #[test]

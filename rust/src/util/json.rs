@@ -8,10 +8,17 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 /// A parsed JSON value.
+///
+/// Integer literals that fit an `i64` parse (and dump) as [`Json::Int`],
+/// preserving full 64-bit precision; everything else numeric is
+/// [`Json::Num`]. Routing integers through `f64` silently corrupts
+/// magnitudes >= 2^53 — fatal for the PIM server's request ids and result
+/// values, which are the main producers/consumers of this module.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     Null,
     Bool(bool),
+    Int(i64),
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
@@ -55,16 +62,24 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
             _ => None,
         }
     }
 
+    /// Non-negative integer value; `None` for negatives (rather than the
+    /// huge wrapped value an `as usize` cast would produce).
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        self.as_i64().and_then(|n| usize::try_from(n).ok())
     }
 
+    /// Integer value: exact for [`Json::Int`], truncating for [`Json::Num`].
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|n| n as i64)
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::Num(n) => Some(*n as i64),
+            _ => None,
+        }
     }
 
     /// Field access on objects; `None` for anything else.
@@ -83,6 +98,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => out.push_str(&i.to_string()),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
@@ -265,6 +281,13 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // integer literals keep full i64 precision; fractions, exponents
+        // and out-of-i64-range magnitudes fall back to f64
+        if !text.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) {
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -331,7 +354,32 @@ mod tests {
         assert_eq!(Json::parse("null").unwrap(), Json::Null);
         assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
         assert_eq!(Json::parse("-3.5e2").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse("42").unwrap(), Json::Int(42));
         assert_eq!(Json::parse("\"hi\\n\"").unwrap(), Json::Str("hi\n".into()));
+    }
+
+    #[test]
+    fn integers_preserve_full_i64_precision() {
+        // 2^53 + 1 is not representable in f64; the old Num(f64) path
+        // silently rounded it to 2^53
+        let v = Json::parse("9007199254740993").unwrap();
+        assert_eq!(v, Json::Int(9_007_199_254_740_993));
+        assert_eq!(v.as_i64(), Some((1i64 << 53) + 1));
+        assert_eq!(v.dump(), "9007199254740993");
+        for extreme in [i64::MAX, i64::MIN, i64::MAX - 1, -(1i64 << 53) - 1] {
+            let text = extreme.to_string();
+            let parsed = Json::parse(&text).unwrap();
+            assert_eq!(parsed.as_i64(), Some(extreme), "{text}");
+            assert_eq!(parsed.dump(), text);
+        }
+        // beyond i64 range falls back to f64 rather than failing
+        assert!(matches!(Json::parse("99999999999999999999").unwrap(), Json::Num(_)));
+        // fractional and exponent forms stay floats
+        assert!(matches!(Json::parse("1.0").unwrap(), Json::Num(_)));
+        assert!(matches!(Json::parse("1e3").unwrap(), Json::Num(_)));
+        // negatives are not a usize (no silent wrap)
+        assert_eq!(Json::Int(-1).as_usize(), None);
+        assert_eq!(Json::Int(7).as_usize(), Some(7));
     }
 
     #[test]

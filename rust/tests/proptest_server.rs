@@ -1,0 +1,188 @@
+//! Property tests for the server wire layer: `parse_request`,
+//! `format_response`, `format_error` and `recover_request_id` must
+//! round-trip arbitrary well-formed traffic exactly (including 64-bit
+//! integers beyond 2^53) and degrade gracefully on malformed lines.
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_ucode.rs` (offline build; failing cases print their seed).
+
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::server::{
+    format_error, format_response, parse_request, recover_request_id,
+};
+use comperam::util::{Json, Prng};
+
+fn op_name(op: EwOp) -> &'static str {
+    match op {
+        EwOp::Add => "add",
+        EwOp::Sub => "sub",
+        EwOp::Mul => "mul",
+    }
+}
+
+fn random_op(rng: &mut Prng) -> EwOp {
+    match rng.below(3) {
+        0 => EwOp::Add,
+        1 => EwOp::Sub,
+        _ => EwOp::Mul,
+    }
+}
+
+/// Build a wire line for a request, with randomized whitespace.
+fn request_line(rng: &mut Prng, id: u64, op: EwOp, w: u32, a: &[i64], b: &[i64]) -> String {
+    let sp = |rng: &mut Prng| if rng.chance(0.3) { " " } else { "" };
+    let arr = |v: &[i64]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"id\":{}{id},\"op\":{}\"{}\",\"w\":{w},{}\"a\":[{}],\"b\":{}[{}]}}",
+        sp(rng),
+        sp(rng),
+        op_name(op),
+        sp(rng),
+        arr(a),
+        sp(rng),
+        arr(b),
+    )
+}
+
+#[test]
+fn prop_parse_request_roundtrips_valid_lines() {
+    for seed in 0..300u64 {
+        let mut rng = Prng::new(0xA11CE ^ seed);
+        // valid ids live in 0..=i64::MAX (parse_request rejects the rest);
+        // this covers the whole 2^53..2^63 band the old Num(f64) path
+        // silently corrupted
+        let id = rng.next_u64() >> 1;
+        let op = random_op(&mut rng);
+        let w = rng.range(2, 17) as u32;
+        let n = rng.range(0, 40);
+        let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
+        let line = request_line(&mut rng, id, op, w, &a, &b);
+        let r = parse_request(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{line}"));
+        assert_eq!(r.id, id, "seed {seed}: id must survive the full valid range");
+        assert_eq!(r.op, op, "seed {seed}");
+        assert_eq!(r.w, w, "seed {seed}");
+        assert_eq!(r.a, a, "seed {seed}");
+        assert_eq!(r.b, b, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_response_roundtrips_full_i64_range() {
+    for seed in 0..300u64 {
+        let mut rng = Prng::new(0xBEEF ^ seed);
+        let id = rng.next_u64(); // ids live in the full u64 range
+        let n = rng.range(0, 30);
+        // values across the whole i64 range, where the old f64 path
+        // silently corrupted magnitudes >= 2^53
+        let values: Vec<i64> = (0..n)
+            .map(|_| match rng.below(4) {
+                0 => i64::MAX - rng.below(1000) as i64,
+                1 => i64::MIN + rng.below(1000) as i64,
+                2 => (1i64 << 53) + rng.int(20),
+                _ => rng.next_u64() as i64,
+            })
+            .collect();
+        let line = format_response(id, &values);
+        let v = Json::parse(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{line}"));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "seed {seed}");
+        assert_eq!(
+            v.get("id").and_then(Json::as_i64).map(|i| i as u64),
+            Some(id),
+            "seed {seed}: id corrupted"
+        );
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, values, "seed {seed}: values corrupted\n{line}");
+    }
+}
+
+#[test]
+fn prop_error_response_roundtrips_messages() {
+    let nasty = ['"', '\\', '\n', '\t', 'é', '✓', 'x'];
+    for seed in 0..200u64 {
+        let mut rng = Prng::new(0xE44 ^ seed);
+        let id = rng.next_u64();
+        let len = rng.range(0, 30);
+        let msg: String = (0..len).map(|_| nasty[rng.range(0, nasty.len())]).collect();
+        let line = format_error(id, &msg);
+        let v = Json::parse(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{line}"));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "seed {seed}");
+        assert_eq!(v.get("id").and_then(Json::as_i64).map(|i| i as u64), Some(id));
+        assert_eq!(v.get("error").and_then(Json::as_str), Some(msg.as_str()), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_recover_request_id_survives_mutations() {
+    for seed in 0..300u64 {
+        let mut rng = Prng::new(0x1D ^ seed);
+        let id = rng.next_u64() >> 1; // decimal-encodable id range
+        let op = random_op(&mut rng);
+        let a: Vec<i64> = (0..rng.range(1, 10)).map(|_| rng.int(8)).collect();
+        let b: Vec<i64> = (0..a.len()).map(|_| rng.int(8)).collect();
+        let line = request_line(&mut rng, id, op, 8, &a, &b);
+        // the intact line recovers its id exactly
+        assert_eq!(recover_request_id(&line), id, "seed {seed}");
+        // truncation anywhere must never panic (and usually loses the id)
+        let cut = rng.range(0, line.len());
+        let truncated: String = line.chars().take(cut).collect();
+        let _ = recover_request_id(&truncated);
+        // single-byte corruption must never panic either
+        let mut bytes = line.clone().into_bytes();
+        let pos = rng.range(0, bytes.len());
+        bytes[pos] = b"{}[],:x9\" "[rng.range(0, 10)];
+        if let Ok(mutated) = String::from_utf8(bytes) {
+            let _ = recover_request_id(&mutated);
+        }
+    }
+}
+
+#[test]
+fn prop_out_of_range_ids_rejected_not_corrupted() {
+    for seed in 0..100u64 {
+        let mut rng = Prng::new(0x1DBAD ^ seed);
+        // beyond i64::MAX, negative, or fractional: all would echo back a
+        // different id if accepted, so parse must reject them
+        let bad = match rng.below(3) {
+            0 => format!("{}", (1u128 << 63) + rng.below(1000) as u128),
+            1 => format!("-{}", 1 + rng.below(1000)),
+            _ => format!("{}.5", rng.below(1000)),
+        };
+        let line = format!(r#"{{"id":{bad},"op":"add","w":8,"a":[1],"b":[1]}}"#);
+        assert!(parse_request(&line).is_err(), "seed {seed}: id {bad} must be rejected");
+    }
+}
+
+#[test]
+fn prop_out_of_range_operands_rejected() {
+    for seed in 0..200u64 {
+        let mut rng = Prng::new(0x0B ^ seed);
+        let op = random_op(&mut rng);
+        let w = rng.range(2, 17) as u32;
+        let lim = 1i64 << (w - 1);
+        // one operand just past the signed range in either direction
+        let bad = if rng.chance(0.5) { lim } else { -lim - 1 };
+        let mut a: Vec<i64> = (0..rng.range(1, 8)).map(|_| rng.int(w)).collect();
+        let b: Vec<i64> = (0..a.len()).map(|_| rng.int(w)).collect();
+        let slot = rng.range(0, a.len());
+        a[slot] = bad;
+        let line = request_line(&mut rng, 1, op, w, &a, &b);
+        let err = parse_request(&line);
+        assert!(err.is_err(), "seed {seed}: {bad} must be rejected at w={w}\n{line}");
+        assert!(
+            format!("{}", err.unwrap_err()).contains("out of range"),
+            "seed {seed}: wrong error kind"
+        );
+        // the in-range boundaries themselves are accepted
+        a[slot] = lim - 1;
+        let line = request_line(&mut rng, 1, op, w, &a, &b);
+        parse_request(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
