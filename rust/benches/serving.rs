@@ -2,19 +2,22 @@
 //! batch-sized programs, program residency, and the pipelined execution
 //! engine.
 //!
-//! Two acceptance targets:
+//! Three acceptance targets:
 //!
 //! * cached vs uncached single-block serving (the exec layer): >= 2x;
 //! * pipelined multi-batch serving vs one-batch-at-a-time (the engine's
 //!   submit/await split): >= 1.5x on same-shaped request streams, bit-exact
 //!   results, and `program_loads()` flat across repeated same-kernel
-//!   batches (affinity routing keeps residency hits).
+//!   batches (affinity routing keeps residency hits);
+//! * resident-weight matmul vs inline operands (the storage layer):
+//!   >= 50% fewer host bytes moved and lower wall-clock, bit-exact.
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
-use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload};
+use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg};
 use comperam::cram::{ops, CramBlock};
 use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use comperam::nn::MlpInt8;
 use comperam::util::benchkit::{bench, black_box, ops_per_sec};
 use comperam::util::Prng;
 
@@ -158,5 +161,118 @@ fn main() {
         "  -> affinity router: {:?}; metrics: {}",
         pcoord.farm().affinity_stats(),
         pcoord.metrics.snapshot()
+    );
+
+    // ---- resident-weight matmul vs inline operands ------------------------
+    // The storage layer's payoff: weights written once into the blocks'
+    // storage reserves; every matmul ships only the activations. Same
+    // K-segmentation, same dot kernels, same parallelism (each segment
+    // slab is replicated on every block) — only the data movement differs.
+    let rblocks = 4;
+    let rcoord = Coordinator::with_storage(geom, rblocks, 192);
+    let (m, k, n) = (24usize, 48usize, 40usize);
+    let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(4)).collect()).collect();
+    let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(4)).collect()).collect();
+    let segments: Vec<MatSeg> = rcoord
+        .matmul_segments(4, k)
+        .into_iter()
+        .map(|(k0, k1)| {
+            let slab: Vec<i64> =
+                wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+            let handle = rcoord
+                .alloc_tensor_replicated(&slab, 4, rblocks)
+                .expect("weight slab fits the reserve");
+            MatSeg { k0, k1, handle }
+        })
+        .collect();
+    let inline_job = || Job {
+        id: 0,
+        payload: JobPayload::IntMatmul { w: 4, x: x.clone(), wt: wt.clone() },
+    };
+    let resident_job = || Job {
+        id: 0,
+        payload: JobPayload::IntMatmulResident {
+            w: 4,
+            x: x.clone(),
+            n,
+            segments: segments.clone(),
+        },
+    };
+    // correctness + traffic gates before timing
+    let r_inline = rcoord.run(inline_job()).unwrap();
+    let r_resident = rcoord.run(resident_job()).unwrap();
+    assert_eq!(
+        r_inline.values, r_resident.values,
+        "resident-weight matmul must be bit-exact"
+    );
+    let host: Vec<i64> = (0..m * n)
+        .map(|c| {
+            let (i, j) = (c / n, c % n);
+            (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum::<i64>() as i32 as i64
+        })
+        .collect();
+    assert_eq!(r_resident.values, host, "matmul must match the host reference");
+    assert!(
+        r_resident.host_bytes_in * 2 <= r_inline.host_bytes_in,
+        "acceptance: resident weights must move >= 50% fewer host bytes in \
+         (resident {} vs inline {})",
+        r_resident.host_bytes_in,
+        r_inline.host_bytes_in
+    );
+    let m_minline = bench("serving matmul 24x48x40 i4  inline weights", || {
+        black_box(rcoord.run(inline_job()).unwrap());
+    });
+    let m_mres = bench("serving matmul 24x48x40 i4  resident weights", || {
+        black_box(rcoord.run(resident_job()).unwrap());
+    });
+    let saved = 100.0
+        * (1.0 - r_resident.host_bytes_in as f64 / r_inline.host_bytes_in.max(1) as f64);
+    println!(
+        "  -> resident weights: {saved:.1}% fewer host bytes in \
+         ({} -> {} per matmul), {:.2}x wall-clock vs inline; data plane {:?}",
+        r_inline.host_bytes_in,
+        r_resident.host_bytes_in,
+        m_minline.mean.as_secs_f64() / m_mres.mean.as_secs_f64(),
+        rcoord.data_stats(),
+    );
+    assert!(
+        m_mres.mean < m_minline.mean,
+        "acceptance: resident-weight matmul must beat the inline path \
+         ({:?} vs {:?})",
+        m_mres.mean,
+        m_minline.mean
+    );
+
+    // ---- end-to-end: int8 MLP with resident weight matrices ---------------
+    let mcoord = Coordinator::with_storage(geom, rblocks, 192);
+    let mut mlp = MlpInt8::synthetic(32, 16, 8, 0xC0DE).unwrap();
+    let batch_x: Vec<Vec<i64>> =
+        (0..24).map(|_| (0..32).map(|_| rng.int(8)).collect()).collect();
+    let host_logits = mlp.forward_host(&batch_x);
+    let b0 = mcoord.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+    let inline_logits = mlp.forward(&mcoord, &batch_x).unwrap();
+    let mlp_inline_bytes =
+        mcoord.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - b0;
+    assert_eq!(inline_logits, host_logits);
+    mlp.make_resident(&mcoord, rblocks).unwrap();
+    let b1 = mcoord.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+    let resident_logits = mlp.forward(&mcoord, &batch_x).unwrap();
+    let mlp_resident_bytes =
+        mcoord.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - b1;
+    assert_eq!(resident_logits, host_logits, "resident MLP must be bit-exact");
+    assert!(
+        mlp_resident_bytes * 2 <= mlp_inline_bytes,
+        "acceptance: resident MLP forward must move >= 50% fewer host bytes \
+         (resident {mlp_resident_bytes} vs inline {mlp_inline_bytes})"
+    );
+    let m_mlp = bench("serving mlp 24x(32-16-8) i8  resident weights", || {
+        black_box(mlp.forward(&mcoord, &batch_x).unwrap());
+    });
+    println!(
+        "  -> resident MLP: {mlp_inline_bytes} -> {mlp_resident_bytes} host bytes in per \
+         forward ({:.1}% saved), {:.2} ms/forward; metrics: {}",
+        100.0 * (1.0 - mlp_resident_bytes as f64 / mlp_inline_bytes.max(1) as f64),
+        m_mlp.mean.as_secs_f64() * 1e3,
+        mcoord.metrics.snapshot(),
     );
 }

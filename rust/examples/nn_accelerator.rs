@@ -1,26 +1,107 @@
 //! End-to-end driver: an int8 MLP classifier served from a farm of Compute
-//! RAM blocks, validated against the AOT-compiled JAX artifact through
-//! PJRT, on a real (synthetic-digits) workload.
+//! RAM blocks, validated against a golden reference on a real
+//! (synthetic-digits) workload.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example nn_accelerator
+//! cargo run --release --example nn_accelerator
+//! make artifacts && cargo run --release --features xla-runtime --example nn_accelerator
 //! ```
 //!
 //! This is the repository's full-stack proof: L1 (Pallas bit-serial
 //! kernels) and L2 (JAX int8 MLP) were lowered once to `artifacts/`; the L3
 //! rust coordinator runs the same network on the bit-exact Compute RAM
-//! simulator farm; logits must agree element-for-element; throughput and
-//! per-layer cycle statistics are reported, plus an accuracy comparison on
-//! a synthetic 10-class pattern task.
+//! simulator farm; logits must agree element-for-element. With
+//! `--features xla-runtime` the golden logits come from the PJRT
+//! `mlp_i8.hlo.txt` artifact (the real cross-implementation check);
+//! default builds fall back to the crate's host-arithmetic reference so
+//! the example always compiles and runs offline.
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::Coordinator;
 use comperam::cost;
 use comperam::fabric::blocks::FREQ_CRAM_COMPUTE;
 use comperam::nn::{MlpInt8, QuantLinear};
-use comperam::runtime::{default_artifacts_dir, Runtime};
 use comperam::util::Prng;
 use std::time::Instant;
+
+/// The golden-logits source: PJRT artifact when the `xla-runtime` feature
+/// is enabled, the host-arithmetic reference otherwise.
+#[cfg(feature = "xla-runtime")]
+mod golden {
+    use comperam::runtime::{default_artifacts_dir, Runtime};
+
+    pub const SOURCE: &str = "PJRT artifact";
+
+    pub struct Golden {
+        rt: Runtime,
+    }
+
+    impl Golden {
+        /// Load the runtime; returns `(golden, [batch, d_in, d_hid, d_out])`.
+        pub fn load() -> anyhow::Result<(Golden, [usize; 4])> {
+            let rt = Runtime::load(default_artifacts_dir())?;
+            let dim = |name: &str, fallback: i64| {
+                rt.constant(&["mlp", name]).unwrap_or(fallback) as usize
+            };
+            let dims =
+                [dim("batch", 16), dim("d_in", 64), dim("d_hid", 32), dim("d_out", 10)];
+            Ok((Golden { rt }, dims))
+        }
+
+        pub fn logits(
+            &mut self,
+            x: &[Vec<i64>],
+            w1: &[Vec<i64>],
+            b1: &[i64],
+            w2: &[Vec<i64>],
+            b2: &[i64],
+        ) -> anyhow::Result<Vec<i32>> {
+            let flat = |m: &[Vec<i64>]| -> Vec<i32> {
+                m.iter().flat_map(|r| r.iter().map(|&v| v as i32)).collect()
+            };
+            let to32 = |v: &[i64]| -> Vec<i32> { v.iter().map(|&x| x as i32).collect() };
+            self.rt.exec_i32(
+                "mlp_i8",
+                &[flat(x), flat(w1), to32(b1), flat(w2), to32(b2)],
+            )
+        }
+    }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+mod golden {
+    use comperam::nn::{MlpInt8, QuantLinear};
+
+    pub const SOURCE: &str = "host reference (build with --features xla-runtime for PJRT)";
+
+    pub struct Golden {
+        mlp: Option<MlpInt8>,
+    }
+
+    impl Golden {
+        pub fn load() -> anyhow::Result<(Golden, [usize; 4])> {
+            Ok((Golden { mlp: None }, [16, 64, 32, 10]))
+        }
+
+        pub fn logits(
+            &mut self,
+            x: &[Vec<i64>],
+            w1: &[Vec<i64>],
+            b1: &[i64],
+            w2: &[Vec<i64>],
+            b2: &[i64],
+        ) -> anyhow::Result<Vec<i32>> {
+            if self.mlp.is_none() {
+                self.mlp = Some(MlpInt8::new(
+                    QuantLinear::new(w1.to_vec(), b1.to_vec())?,
+                    QuantLinear::new(w2.to_vec(), b2.to_vec())?,
+                )?);
+            }
+            let logits = self.mlp.as_ref().unwrap().forward_host(x);
+            Ok(logits.into_iter().flatten().map(|v| v as i32).collect())
+        }
+    }
+}
 
 /// Synthetic "digits": each class c has a base pattern; samples are the
 /// pattern plus noise. Linear-separable enough for an untrained random
@@ -44,12 +125,8 @@ fn make_dataset(n: usize, d: usize, rng: &mut Prng) -> (Vec<Vec<i64>>, Vec<usize
 }
 
 fn main() -> anyhow::Result<()> {
-    let mut rt = Runtime::load(default_artifacts_dir())?;
-    let batch = rt.constant(&["mlp", "batch"]).unwrap_or(16) as usize;
-    let d_in = rt.constant(&["mlp", "d_in"]).unwrap_or(64) as usize;
-    let d_hid = rt.constant(&["mlp", "d_hid"]).unwrap_or(32) as usize;
-    let d_out = rt.constant(&["mlp", "d_out"]).unwrap_or(10) as usize;
-    println!("mlp_i8 artifact: batch={batch} {d_in}->{d_hid}->{d_out}");
+    let (mut golden, [batch, d_in, d_hid, d_out]) = golden::Golden::load()?;
+    println!("mlp_i8: batch={batch} {d_in}->{d_hid}->{d_out} (golden: {})", golden::SOURCE);
 
     // deterministic int4 weights (same family the AOT tests use)
     let mut rng = Prng::new(20210508);
@@ -67,11 +144,6 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::new(Geometry::G512x40, 16);
     let (xs, ys) = make_dataset(8 * batch, d_in, &mut rng);
 
-    let flat = |m: &[Vec<i64>]| -> Vec<i32> {
-        m.iter().flat_map(|r| r.iter().map(|&v| v as i32)).collect()
-    };
-    let to32 = |v: &[i64]| -> Vec<i32> { v.iter().map(|&x| x as i32).collect() };
-
     let mut agree = 0usize;
     let mut total = 0usize;
     let mut class_consistent = 0usize;
@@ -83,13 +155,10 @@ fn main() -> anyhow::Result<()> {
         }
         // farm path (bit-exact simulator)
         let logits = mlp.forward(&coord, chunk)?;
-        // golden path (PJRT, JAX artifact)
-        let golden = rt.exec_i32(
-            "mlp_i8",
-            &[flat(chunk), flat(&w1), to32(&b1), flat(&w2), to32(&b2)],
-        )?;
+        // golden path (PJRT artifact or host reference)
+        let gold = golden.logits(chunk, &w1, &b1, &w2, &b2)?;
         for (i, row) in logits.iter().enumerate() {
-            let g = &golden[i * d_out..(i + 1) * d_out];
+            let g = &gold[i * d_out..(i + 1) * d_out];
             let same = row.iter().zip(g).all(|(&a, &b)| a as i32 == b);
             agree += same as usize;
             total += 1;
@@ -108,8 +177,8 @@ fn main() -> anyhow::Result<()> {
     }
     let dt = t0.elapsed();
     println!("batches: {}  samples: {total}", total / batch);
-    println!("logit agreement farm vs PJRT artifact: {agree}/{total}");
-    assert_eq!(agree, total, "simulator and JAX artifact disagree!");
+    println!("logit agreement farm vs golden: {agree}/{total}");
+    assert_eq!(agree, total, "simulator and golden reference disagree!");
     let macs = (total * (d_in * d_hid + d_hid * d_out)) as u64;
     println!(
         "simulated block cycles: {farm_cycles} ({} MACs; {:.1} sim-cycles/MAC)",

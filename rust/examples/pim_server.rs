@@ -21,9 +21,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
-    let coord = Arc::new(Coordinator::new(Geometry::G512x40, 8));
+    // 128 rows of every block are reserved for resident tensors, so
+    // clients can store operands once and compute against them by handle
+    let coord = Arc::new(Coordinator::with_storage(Geometry::G512x40, 8, 128));
     let server = PimServer::start(coord.clone(), Duration::from_millis(2))?;
-    println!("server on {} (8 blocks, 2 ms batch window)", server.addr);
+    println!("server on {} (8 blocks, 2 ms batch window, 128-row tensor reserve)", server.addr);
 
     let clients = 8;
     let reqs_per_client = 25;
@@ -96,6 +98,39 @@ fn main() -> anyhow::Result<()> {
          {queue_us} us queued vs {exec_us} us executing across {jobs} jobs; \
          affinity router {:?}",
         coord.farm().affinity_stats()
+    );
+
+    // ---- resident-tensor protocol: store once, compute by handle ----------
+    let mut conn = TcpStream::connect(server.addr)?;
+    conn.set_nodelay(true)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut ask = |line: String| -> anyhow::Result<Json> {
+        writeln!(conn, "{line}")?;
+        let mut resp = String::new();
+        reader.read_line(&mut resp)?;
+        Ok(Json::parse(resp.trim())?)
+    };
+    let stored: Vec<String> = (0..64).map(|i| ((i % 100) - 50).to_string()).collect();
+    let v = ask(format!(
+        r#"{{"id": 1, "op": "alloc", "w": 8, "values": [{}], "copies": 2}}"#,
+        stored.join(",")
+    ))?;
+    let handle = v.get("handle").and_then(Json::as_i64).expect("alloc returns a handle");
+    for i in 0..3 {
+        let b: Vec<String> = (0..64).map(|j| ((i + j) % 20).to_string()).collect();
+        let v = ask(format!(
+            r#"{{"id": {}, "op": "add", "w": 8, "a": {{"handle": {handle}}}, "b": [{}]}}"#,
+            10 + i,
+            b.join(",")
+        ))?;
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    }
+    let v = ask(format!(r#"{{"id": 20, "op": "free", "handle": {handle}}}"#))?;
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+    println!(
+        "tensor protocol: stored 64 values once (handle {handle}, 2 replicas), \
+         served 3 compute-by-handle requests; data plane {:?}",
+        coord.data_stats()
     );
     server.stop();
     Ok(())

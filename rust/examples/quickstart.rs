@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     // generate int8 add microcode and its layout contract
     let (prog, layout) = ucode::int::add(geom, 8);
     println!("microcode `{}`: {} instructions", prog.name, prog.len());
-    println!("{}", &prog.listing());
+    println!("{}", prog.listing());
 
     // storage mode: stage operands in the transposed (bit-serial) layout
     let a: Vec<i64> = (0..layout.total_ops() as i64).map(|i| (i % 200) - 100).collect();

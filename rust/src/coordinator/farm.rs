@@ -4,13 +4,23 @@
 //! Each worker thread permanently owns one [`CramBlock`] (models a shell
 //! that owns N physical Compute RAMs) and drains its own task queue,
 //! **stealing** from the deepest sibling queue when idle. Tasks are placed
-//! by a kernel-**affinity router** ([`ResidencyMap`]): a task goes to the
-//! least-loaded worker whose block already holds its [`KernelKey`] (so the
-//! instruction-memory load is skipped), falling back to the least-loaded
-//! worker overall — load outranks affinity, so deep same-kernel
-//! submissions spread residency across the farm deterministically. All
+//! by an affinity router with a strict precedence: **data affinity
+//! outranks kernel affinity, which outranks load**. A task referencing a
+//! resident tensor ([`PlacementMap`]) may only run on a worker holding a
+//! replica — such tasks are pinned and never stolen; within the allowed
+//! set (or for unpinned tasks, the whole farm) the kernel-affinity router
+//! ([`ResidencyMap`]) prefers the least-loaded worker already holding the
+//! task's [`KernelKey`], so the instruction-memory load is skipped. All
 //! workers resolve tasks against one shared [`KernelCache`], so each
 //! distinct kernel is assembled exactly once per farm.
+//!
+//! Farms built with [`BlockFarm::with_storage`] reserve rows of every
+//! block for **resident tensors** (see [`crate::cram::store`]): written
+//! once through [`BlockFarm::alloc_tensor`], computed against any number
+//! of times without re-crossing the host boundary, and spilled back to
+//! host memory by LRU eviction when the reserve fills. Per-task
+//! `host_bytes_in/out` accounting makes the saved data movement — the
+//! paper's central claim — measurable end to end.
 //!
 //! Unlike the old per-batch scoped-thread barrier, the engine accepts work
 //! from many batches at once: [`BlockFarm::submit`] enqueues a batch and
@@ -20,12 +30,16 @@
 //! applies backpressure: `submit` blocks once the farm has
 //! `QUEUE_DEPTH_PER_WORKER x len()` tasks waiting.
 
-use super::mapper::BlockTask;
+use super::mapper::{BlockTask, Operand};
 use crate::bitline::Geometry;
-use crate::cram::{ops, CramBlock};
+use crate::cram::{ops, store, CramBlock};
 use crate::ctrl::CycleStats;
-use crate::exec::{KernelCache, KernelKey, ResidencyMap, ResidencyStats};
-use anyhow::{anyhow, Result};
+use crate::exec::placement::{PlaceAttempt, ReadSource, Resolution};
+use crate::exec::{
+    DataStats, KernelCache, KernelKey, PlacementMap, ResidencyMap, ResidencyStats, TensorHandle,
+};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::borrow::Cow;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -64,12 +78,18 @@ pub fn aggregate_waves(outputs: &[TaskOutput], n_blocks: usize) -> (CycleStats, 
     (total, wave_max.iter().sum())
 }
 
-/// Result of one executed task.
+/// Result of one executed task, including its host-traffic accounting.
 #[derive(Clone, Debug)]
 pub struct TaskOutput {
     pub task_index: usize,
     pub values: Vec<i64>,
     pub stats: CycleStats,
+    /// Operand bytes that crossed host -> block for this task.
+    pub host_bytes_in: u64,
+    /// Result bytes read block -> host.
+    pub host_bytes_out: u64,
+    /// Resident operands resolved from block storage (no host traffic).
+    pub resident_hits: u64,
 }
 
 /// Queue-wait vs execution latency of a completed batch.
@@ -101,6 +121,7 @@ struct BatchProgress {
 pub struct BatchHandle {
     batch: Arc<BatchState>,
     n_tasks: usize,
+    submit_depths: Vec<usize>,
 }
 
 impl BatchHandle {
@@ -111,6 +132,33 @@ impl BatchHandle {
 
     pub fn is_empty(&self) -> bool {
         self.n_tasks == 0
+    }
+
+    /// Per-worker queue depths sampled when the batch was submitted (the
+    /// scheduler feeds these into the [`super::Metrics`] gauges).
+    pub fn submit_depths(&self) -> &[usize] {
+        &self.submit_depths
+    }
+
+    /// A pre-failed batch (planning errors surface at `wait`, keeping the
+    /// submit path infallible).
+    pub(crate) fn failed(err: anyhow::Error) -> BatchHandle {
+        let now = Instant::now();
+        BatchHandle {
+            batch: Arc::new(BatchState {
+                progress: Mutex::new(BatchProgress {
+                    outputs: Vec::new(),
+                    remaining: 0,
+                    first_error: Some(err),
+                    started_at: Some(now),
+                    finished_at: Some(now),
+                }),
+                done_cv: Condvar::new(),
+                submitted_at: now,
+            }),
+            n_tasks: 0,
+            submit_depths: Vec::new(),
+        }
     }
 
     /// Block until every task of the batch has run; returns the outputs in
@@ -144,12 +192,19 @@ struct TaskEnvelope {
     task: BlockTask,
     task_index: usize,
     batch: Arc<BatchState>,
+    /// Data-affinity pin: a pinned task references resident tensors and
+    /// must not be stolen off its home worker.
+    pinned: bool,
 }
 
 struct EngineState {
-    /// Per-worker FIFO queues; workers pop their own front and steal from
-    /// the deepest sibling's back.
+    /// Per-worker FIFO queues; workers pop their own front and steal
+    /// unpinned tasks from the deepest sibling's back.
     queues: Vec<VecDeque<TaskEnvelope>>,
+    /// Per-worker count of unpinned (stealable) tasks, so victim
+    /// selection stays O(workers) instead of scanning queue contents
+    /// under the engine mutex.
+    unpinned: Vec<usize>,
     /// Total queued (not yet dequeued) tasks, for backpressure.
     queued: usize,
 }
@@ -171,26 +226,50 @@ pub struct BlockFarm {
     blocks: Vec<Arc<Mutex<CramBlock>>>,
     cache: Arc<KernelCache>,
     residency: Arc<ResidencyMap>,
+    placement: Arc<PlacementMap>,
+    /// Serializes the tensor control plane (alloc/write/free/evict) so
+    /// placement decisions and the array writes they imply are atomic with
+    /// respect to each other. Workers never take this — they only
+    /// `resolve`.
+    tensor_lock: Mutex<()>,
     shared: Arc<EngineShared>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl BlockFarm {
     pub fn new(geometry: Geometry, n_blocks: usize) -> Self {
-        Self::with_cache(geometry, n_blocks, Arc::new(KernelCache::new()))
+        Self::with_options(geometry, n_blocks, Arc::new(KernelCache::new()), 0)
     }
 
     /// Build a farm sharing an existing kernel cache (several farms — or a
     /// farm and its server front-end — can amortize one compilation pool).
     pub fn with_cache(geometry: Geometry, n_blocks: usize, cache: Arc<KernelCache>) -> Self {
+        Self::with_options(geometry, n_blocks, cache, 0)
+    }
+
+    /// Build a farm whose blocks each reserve `storage_rows` rows for
+    /// resident tensors (see [`crate::cram::store`] for the row budget).
+    pub fn with_storage(geometry: Geometry, n_blocks: usize, storage_rows: usize) -> Self {
+        Self::with_options(geometry, n_blocks, Arc::new(KernelCache::new()), storage_rows)
+    }
+
+    /// The general constructor: shared cache + per-block storage reserve.
+    pub fn with_options(
+        geometry: Geometry,
+        n_blocks: usize,
+        cache: Arc<KernelCache>,
+        storage_rows: usize,
+    ) -> Self {
         assert!(n_blocks >= 1);
         let blocks: Vec<Arc<Mutex<CramBlock>>> = (0..n_blocks)
             .map(|_| Arc::new(Mutex::new(CramBlock::new(geometry))))
             .collect();
         let residency = Arc::new(ResidencyMap::new(n_blocks));
+        let placement = Arc::new(PlacementMap::new(n_blocks, geometry, storage_rows));
         let shared = Arc::new(EngineShared {
             state: Mutex::new(EngineState {
                 queues: (0..n_blocks).map(|_| VecDeque::new()).collect(),
+                unpinned: vec![0; n_blocks],
                 queued: 0,
             }),
             work_cv: Condvar::new(),
@@ -204,13 +283,23 @@ impl BlockFarm {
                 let block = blocks[i].clone();
                 let cache = cache.clone();
                 let residency = residency.clone();
+                let placement = placement.clone();
                 std::thread::Builder::new()
                     .name(format!("cram-worker-{i}"))
-                    .spawn(move || worker_loop(i, &shared, &block, &cache, &residency))
+                    .spawn(move || worker_loop(i, &shared, &block, &cache, &residency, &placement))
                     .expect("spawn farm worker")
             })
             .collect();
-        Self { geometry, blocks, cache, residency, shared, workers }
+        Self {
+            geometry,
+            blocks,
+            cache,
+            residency,
+            placement,
+            tensor_lock: Mutex::new(()),
+            shared,
+            workers,
+        }
     }
 
     pub fn geometry(&self) -> Geometry {
@@ -230,9 +319,19 @@ impl BlockFarm {
         &self.cache
     }
 
+    /// The tensor placement map (homes, occupancy, data-movement stats).
+    pub fn placement(&self) -> &Arc<PlacementMap> {
+        &self.placement
+    }
+
     /// Affinity-router effectiveness counters.
     pub fn affinity_stats(&self) -> ResidencyStats {
         self.residency.stats()
+    }
+
+    /// Tensor data-movement counters (control plane + resolution hits).
+    pub fn data_stats(&self) -> DataStats {
+        self.placement.stats()
     }
 
     /// Total instruction-memory loads across all blocks since construction
@@ -249,9 +348,157 @@ impl BlockFarm {
         }
     }
 
-    /// Enqueue a batch of tasks and return immediately. Tasks are routed by
-    /// kernel affinity (then least-loaded); blocks when the farm already has
-    /// its full backpressure quota of tasks queued.
+    // ---- the tensor control plane ----------------------------------------
+
+    /// Store a tensor on one block (a single replica); see
+    /// [`Self::alloc_tensor_replicated`].
+    pub fn alloc_tensor(&self, values: &[i64], w: u32) -> Result<TensorHandle> {
+        self.alloc_tensor_replicated(values, w, 1)
+    }
+
+    /// Store a tensor in the storage reserve of up to `copies` blocks
+    /// (most-free-first), evicting least-recently-used tensors to host
+    /// memory as needed. Replicas let the engine spread pinned tasks: a
+    /// task referencing the tensor may run on any replica holder. At least
+    /// one replica must fit or the call fails. Counts `len * 8` host bytes
+    /// in per replica written.
+    pub fn alloc_tensor_replicated(
+        &self,
+        values: &[i64],
+        w: u32,
+        copies: usize,
+    ) -> Result<TensorHandle> {
+        ensure!(
+            self.placement.reserve_rows() > 0,
+            "farm has no tensor-storage reserve (build it with with_storage)"
+        );
+        ensure!((2..=32).contains(&w), "tensor width {w} outside 2..=32");
+        ensure!(!values.is_empty(), "empty tensor");
+        ensure!(copies >= 1, "zero replicas requested");
+        store::check_int_range(values, w)?;
+        let rows = store::tensor_rows(self.geometry, w, values.len());
+        let (_, capacity) = self.placement.occupancy(0);
+        ensure!(
+            rows <= capacity,
+            "tensor needs {rows} storage rows, the per-block reserve holds {capacity}"
+        );
+        let _guard = self.tensor_lock.lock().unwrap();
+        let h = self.placement.register(w, values.len());
+        let mut placed = 0usize;
+        let mut tried: Vec<usize> = Vec::new();
+        while placed < copies.min(self.blocks.len()) {
+            let Some(worker) = self.placement.pick_worker(rows, &tried) else { break };
+            tried.push(worker);
+            if self.place_replica(h, worker, values, w)? {
+                placed += 1;
+            }
+        }
+        if placed == 0 {
+            self.placement.remove(h);
+            bail!("no storage space for a {rows}-row tensor on any block");
+        }
+        self.placement.add_host_bytes_in((values.len() * 8 * placed) as u64);
+        Ok(h)
+    }
+
+    /// Place one replica on `worker`, evicting LRU tensors until it fits.
+    /// Returns `false` if this worker cannot fit it at all.
+    fn place_replica(
+        &self,
+        h: TensorHandle,
+        worker: usize,
+        values: &[i64],
+        w: u32,
+    ) -> Result<bool> {
+        loop {
+            match self.placement.place(h, worker) {
+                PlaceAttempt::Placed { base } => {
+                    let mut block = self.blocks[worker].lock().unwrap();
+                    store::write_tensor_rows(block.array_mut(), values, w, base);
+                    return Ok(true);
+                }
+                PlaceAttempt::Evict { victim } => self.evict_replica(victim, worker)?,
+                PlaceAttempt::NoFit => return Ok(false),
+            }
+        }
+    }
+
+    /// Spill `victim`'s replica on `worker` back to host memory (loss-less:
+    /// the values are read out of the array first). Counts the read as
+    /// host-bound traffic.
+    fn evict_replica(&self, victim: TensorHandle, worker: usize) -> Result<()> {
+        let Some((base, w, len)) = self.placement.region_of(victim, worker) else {
+            return Ok(()); // already gone
+        };
+        let values = {
+            let block = self.blocks[worker].lock().unwrap();
+            store::read_tensor_rows(block.array(), len, w, base)
+        };
+        self.placement.add_host_bytes_out((values.len() * 8) as u64);
+        self.placement.evict(victim, worker, values);
+        Ok(())
+    }
+
+    /// Overwrite a tensor's values on every replica (length must match the
+    /// allocation). A fully evicted tensor's host copy is replaced instead.
+    pub fn write_tensor(&self, h: TensorHandle, values: &[i64]) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        let Some((w, len, homes)) = self.placement.write_targets(h) else {
+            bail!("unknown tensor handle {}", h.id());
+        };
+        ensure!(
+            values.len() == len,
+            "tensor {} holds {len} values, write has {}",
+            h.id(),
+            values.len()
+        );
+        store::check_int_range(values, w)?;
+        if homes.is_empty() {
+            self.placement.set_host_copy(h, values.to_vec());
+            return Ok(());
+        }
+        for (worker, base) in &homes {
+            let mut block = self.blocks[*worker].lock().unwrap();
+            store::write_tensor_rows(block.array_mut(), values, w, *base);
+        }
+        // a partially evicted tensor keeps a host backup alongside its
+        // replicas — refresh it so it can never go stale
+        self.placement.refresh_host_copy(h, values);
+        self.placement.add_host_bytes_in((values.len() * 8 * homes.len()) as u64);
+        Ok(())
+    }
+
+    /// Read a tensor's values back to the host (from a replica block, or
+    /// from the host copy if fully evicted).
+    pub fn read_tensor(&self, h: TensorHandle) -> Result<Vec<i64>> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        match self.placement.read_source(h) {
+            ReadSource::Block { worker, base, w, len } => {
+                let block = self.blocks[worker].lock().unwrap();
+                let values = store::read_tensor_rows(block.array(), len, w, base);
+                self.placement.add_host_bytes_out((values.len() * 8) as u64);
+                Ok(values)
+            }
+            ReadSource::Host(values) => Ok(values.as_ref().clone()),
+            ReadSource::Missing => bail!("unknown tensor handle {}", h.id()),
+        }
+    }
+
+    /// Free a tensor: every replica's rows return to the reserve.
+    pub fn free_tensor(&self, h: TensorHandle) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        ensure!(self.placement.remove(h), "unknown tensor handle {}", h.id());
+        Ok(())
+    }
+
+    // ---- the task plane ---------------------------------------------------
+
+    /// Enqueue a batch of tasks and return immediately. Routing precedence:
+    /// tasks referencing resident tensors are pinned to the workers holding
+    /// a replica (data affinity); within the allowed set the kernel-
+    /// affinity router prefers a least-loaded worker already holding the
+    /// kernel; load breaks every tie. Blocks when the farm already has its
+    /// full backpressure quota of tasks queued.
     pub fn submit(&self, tasks: Vec<BlockTask>) -> BatchHandle {
         let n = tasks.len();
         let now = Instant::now();
@@ -268,6 +515,7 @@ impl BlockFarm {
         });
         let mut depths: Vec<usize> = Vec::with_capacity(self.blocks.len());
         let mut st = self.shared.state.lock().unwrap();
+        let submit_depths: Vec<usize> = st.queues.iter().map(VecDeque::len).collect();
         for (task_index, task) in tasks.into_iter().enumerate() {
             let key = task.key();
             while st.queued >= self.shared.capacity {
@@ -277,15 +525,66 @@ impl BlockFarm {
             }
             depths.clear();
             depths.extend(st.queues.iter().map(VecDeque::len));
-            let w = self.residency.route(key, &depths);
-            st.queues[w].push_back(TaskEnvelope { task, task_index, batch: batch.clone() });
+            let pin = self.pin_workers(&task);
+            let (w, pinned) = match &pin {
+                Some(homes) => (self.residency.route_among(key, &depths, homes), true),
+                None => (self.residency.route(key, &depths), false),
+            };
+            st.queues[w].push_back(TaskEnvelope {
+                task,
+                task_index,
+                batch: batch.clone(),
+                pinned,
+            });
+            if !pinned {
+                st.unpinned[w] += 1;
+            }
             st.queued += 1;
-            // one task -> one wakeup; the woken worker takes it from its
-            // own queue or steals it, so the target need not be the waiter
-            self.shared.work_cv.notify_one();
+            if pinned {
+                // a pinned task can only run on its home worker: a single
+                // notify could wake a sibling that cannot steal it, which
+                // would re-sleep and strand the task — wake everyone so
+                // the home worker is guaranteed to see it
+                self.shared.work_cv.notify_all();
+            } else {
+                // one task -> one wakeup; the woken worker takes it from
+                // its own queue or steals it, so the target need not be
+                // the waiter
+                self.shared.work_cv.notify_one();
+            }
         }
         drop(st);
-        BatchHandle { batch, n_tasks: n }
+        BatchHandle { batch, n_tasks: n, submit_depths }
+    }
+
+    /// The workers a task is bound to by its resident operands: the
+    /// intersection of the operands' replica sets (falling back to the
+    /// first operand's set if the intersection is empty — the scheduler
+    /// materializes one side of disjoint pairs, so this is a last resort).
+    /// `None` means unpinned. A fully evicted tensor imposes no pin; the
+    /// worker falls back to its host copy.
+    fn pin_workers(&self, task: &BlockTask) -> Option<Vec<usize>> {
+        let handles = task.resident_handles();
+        let mut pin: Option<Vec<usize>> = None;
+        for h in handles {
+            let homes = self.placement.homes(h);
+            if homes.is_empty() {
+                continue;
+            }
+            pin = Some(match pin {
+                None => homes,
+                Some(prev) => {
+                    let both: Vec<usize> =
+                        prev.iter().copied().filter(|w| homes.contains(w)).collect();
+                    if both.is_empty() {
+                        prev
+                    } else {
+                        both
+                    }
+                }
+            });
+        }
+        pin
     }
 
     /// Run all tasks across the farm and wait for the results (submit +
@@ -316,26 +615,147 @@ impl Drop for BlockFarm {
     }
 }
 
+/// Outcome of one task on one worker, with traffic accounting.
+struct TaskRun {
+    values: Vec<i64>,
+    stats: CycleStats,
+    host_bytes_in: u64,
+    host_bytes_out: u64,
+    resident_hits: u64,
+}
+
+/// Resolve a task operand into values the ops layer can stage. Inline
+/// operands count their bytes as host traffic; resident operands are read
+/// from this worker's block in place (a hit) or from the host backing copy
+/// of an evicted tensor (a miss, at host-traffic cost).
+fn resolve_operand<'t>(
+    op: &'t Operand,
+    worker: usize,
+    block: &CramBlock,
+    placement: &PlacementMap,
+) -> Result<(Cow<'t, [i64]>, u64, u64)> {
+    match op {
+        Operand::Inline(v) => Ok((Cow::Borrowed(&v[..]), (v.len() * 8) as u64, 0)),
+        Operand::Resident(s) => match placement.resolve(s.handle, worker) {
+            Resolution::Local { base, w, len } => {
+                ensure!(
+                    s.offset + s.len <= len,
+                    "slice {}..{} exceeds tensor length {len}",
+                    s.offset,
+                    s.offset + s.len
+                );
+                let vals = store::read_tensor_slice(block.array(), w, base, s.offset, s.len);
+                Ok((Cow::Owned(vals), 0, 1))
+            }
+            Resolution::Host { values, .. } => {
+                ensure!(
+                    s.offset + s.len <= values.len(),
+                    "slice {}..{} exceeds tensor length {}",
+                    s.offset,
+                    s.offset + s.len,
+                    values.len()
+                );
+                let vals = values[s.offset..s.offset + s.len].to_vec();
+                let bytes = (vals.len() * 8) as u64;
+                Ok((Cow::Owned(vals), bytes, 0))
+            }
+            Resolution::Elsewhere { workers } => bail!(
+                "tensor {} is resident on workers {workers:?}, but the task ran on {worker}",
+                s.handle.id()
+            ),
+            Resolution::Missing => bail!("tensor handle {} is not allocated", s.handle.id()),
+        },
+    }
+}
+
 /// Execute one task on one worker's block using cached kernels.
 fn run_task(
+    worker: usize,
     block: &mut CramBlock,
     cache: &KernelCache,
+    placement: &PlacementMap,
     task: &BlockTask,
-) -> Result<(Vec<i64>, CycleStats)> {
+) -> Result<TaskRun> {
     let kernel = cache.get(task.key());
+    if placement.reserve_rows() > 0 {
+        // the storage reserve is only safe if no kernel body can reach it
+        ensure!(
+            kernel.body_rows() <= placement.compute_rows(),
+            "kernel {} spans {} rows, the reserve caps compute at {}",
+            kernel.name(),
+            kernel.body_rows(),
+            placement.compute_rows()
+        );
+    }
     match task {
         BlockTask::IntElementwise { a, b, .. } => {
-            let r = ops::int_ew_compiled(block, &kernel, a, b)?;
-            Ok((r.values, r.stats))
+            let (av, in_a, hit_a) = resolve_operand(a, worker, block, placement)?;
+            let (bv, in_b, hit_b) = resolve_operand(b, worker, block, placement)?;
+            let r = ops::int_ew_compiled(block, &kernel, &av, &bv)?;
+            Ok(TaskRun {
+                host_bytes_out: (r.values.len() * 8) as u64,
+                host_bytes_in: in_a + in_b,
+                resident_hits: hit_a + hit_b,
+                values: r.values,
+                stats: r.stats,
+            })
         }
         BlockTask::IntDot { a, b, .. } => {
             let r = ops::int_dot_compiled(block, &kernel, a, b)?;
             let n = a.first().map_or(0, Vec::len);
-            Ok((r.values[..n].to_vec(), r.stats))
+            let elems: usize = a.iter().chain(b.iter()).map(Vec::len).sum();
+            Ok(TaskRun {
+                values: r.values[..n].to_vec(),
+                stats: r.stats,
+                host_bytes_in: (elems * 8) as u64,
+                host_bytes_out: (n * 8) as u64,
+                resident_hits: 0,
+            })
         }
         BlockTask::Bf16Elementwise { a, b, .. } => {
             let r = ops::bf16_ew_compiled(block, &kernel, a, b)?;
-            Ok((r.values.iter().map(|v| v.to_bits() as i64).collect(), r.stats))
+            Ok(TaskRun {
+                values: r.values.iter().map(|v| v.to_bits() as i64).collect(),
+                stats: r.stats,
+                // bf16 payloads cross the boundary as 2-byte patterns
+                host_bytes_in: ((a.len() + b.len()) * 2) as u64,
+                host_bytes_out: (r.values.len() * 2) as u64,
+                resident_hits: 0,
+            })
+        }
+        BlockTask::MatmulResident { x, i0, weights, n, c0, c1, .. } => {
+            let (i0, n, c0, c1) = (*i0, *n, *c0, *c1);
+            let wop = Operand::Resident(*weights);
+            let (slab, in_w, hit_w) = resolve_operand(&wop, worker, block, placement)?;
+            let l = kernel.dot_layout()?;
+            let kseg = l.k;
+            ensure!(
+                x.iter().all(|r| r.len() == kseg),
+                "x tile width != segment k={kseg}"
+            );
+            ensure!(slab.len() == kseg * n, "weight slab length mismatch");
+            let ncols = c1 - c0;
+            // expand both dot operands block-side: only `x` crossed the
+            // host boundary, and only once per tile
+            let mut a = vec![vec![0i64; ncols]; kseg];
+            let mut b = vec![vec![0i64; ncols]; kseg];
+            for (ci, c) in (c0..c1).enumerate() {
+                let xi = c / n - i0;
+                let j = c % n;
+                for (kk, (arow, brow)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+                    arow[ci] = x[xi][kk];
+                    brow[ci] = slab[kk * n + j];
+                }
+            }
+            let r = ops::int_dot_compiled(block, &kernel, &a, &b)?;
+            let x_elems: usize = x.iter().map(Vec::len).sum();
+            Ok(TaskRun {
+                values: r.values[..ncols].to_vec(),
+                stats: r.stats,
+                host_bytes_in: (x_elems * 8) as u64 + in_w,
+                host_bytes_out: (ncols * 8) as u64,
+                resident_hits: hit_w,
+            })
         }
     }
 }
@@ -348,22 +768,34 @@ fn worker_loop(
     block: &Mutex<CramBlock>,
     cache: &KernelCache,
     residency: &ResidencyMap,
+    placement: &PlacementMap,
 ) {
     loop {
         let env = {
             let mut st = shared.state.lock().unwrap();
             loop {
-                let mut grabbed = st.queues[index].pop_front();
+                // (envelope, queue it was taken from) for the counters
+                let mut grabbed = st.queues[index].pop_front().map(|e| (e, index));
                 if grabbed.is_none() {
-                    // steal from the deepest sibling queue
+                    // steal an unpinned task from the back of the deepest
+                    // sibling queue holding one (pinned tasks must stay on
+                    // the worker whose block stores their tensors); the
+                    // per-queue counters keep victim selection O(workers)
                     let victim = (0..st.queues.len())
-                        .filter(|&j| j != index && !st.queues[j].is_empty())
+                        .filter(|&j| j != index && st.unpinned[j] > 0)
                         .max_by_key(|&j| st.queues[j].len());
                     if let Some(v) = victim {
-                        grabbed = st.queues[v].pop_back();
+                        let i = st.queues[v]
+                            .iter()
+                            .rposition(|e| !e.pinned)
+                            .expect("victim has an unpinned task");
+                        grabbed = st.queues[v].remove(i).map(|e| (e, v));
                     }
                 }
-                if let Some(env) = grabbed {
+                if let Some((env, src)) = grabbed {
+                    if !env.pinned {
+                        st.unpinned[src] -= 1;
+                    }
                     st.queued -= 1;
                     shared.space_cv.notify_all();
                     break Some(env);
@@ -394,7 +826,7 @@ fn worker_loop(
             // worker keeps serving. The old scoped-thread barrier
             // propagated the panic; a persistent engine must not die.
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_task(&mut block, cache, &env.task)
+                run_task(index, &mut block, cache, placement, &env.task)
             }))
             .unwrap_or_else(|payload| {
                 let msg = payload
@@ -409,7 +841,8 @@ fn worker_loop(
             // a failed (or panicked) run can leave the block mid-program
             // with `running` high, which would wedge this worker's block
             // in compute mode forever; abort it so the worker keeps
-            // serving (residency and load counts survive the reset)
+            // serving (the load count survives; the resident-kernel
+            // marker is cleared, so the next ensure_kernel reloads)
             let mut b = block.lock().unwrap();
             if !b.done() {
                 b.reset();
@@ -417,9 +850,15 @@ fn worker_loop(
         }
         let mut p = env.batch.progress.lock().unwrap();
         match result {
-            Ok((values, stats)) => {
-                p.outputs[env.task_index] =
-                    Some(TaskOutput { task_index: env.task_index, values, stats });
+            Ok(run) => {
+                p.outputs[env.task_index] = Some(TaskOutput {
+                    task_index: env.task_index,
+                    values: run.values,
+                    stats: run.stats,
+                    host_bytes_in: run.host_bytes_in,
+                    host_bytes_out: run.host_bytes_out,
+                    resident_hits: run.resident_hits,
+                });
             }
             Err(e) => {
                 p.first_error.get_or_insert(e);
@@ -442,7 +881,7 @@ mod tests {
 
     fn ew_task(op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64>) -> BlockTask {
         let key = KernelKey::int_ew_sized(ew_kernel_op(op), w, a.len(), Geometry::G512x40);
-        BlockTask::IntElementwise { key, a, b }
+        BlockTask::IntElementwise { key, a: Operand::Inline(a), b: Operand::Inline(b) }
     }
 
     #[test]
@@ -456,6 +895,9 @@ mod tests {
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.task_index, i);
             assert!(o.values.iter().all(|&v| v == i as i64 + 1));
+            assert_eq!(o.host_bytes_in, 160, "two 10-element inline operands");
+            assert_eq!(o.host_bytes_out, 80);
+            assert_eq!(o.resident_hits, 0);
         }
     }
 
@@ -577,11 +1019,194 @@ mod tests {
         let farm = BlockFarm::new(Geometry::G512x40, 2);
         // a task whose staged operands exceed its (1-tuple) kernel capacity
         let bad_key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1, Geometry::G512x40);
-        let bad = BlockTask::IntElementwise { key: bad_key, a: vec![1; 500], b: vec![1; 500] };
+        let bad = BlockTask::IntElementwise {
+            key: bad_key,
+            a: Operand::Inline(vec![1; 500]),
+            b: Operand::Inline(vec![1; 500]),
+        };
         let good = ew_task(EwOp::Add, 8, vec![1; 10], vec![2; 10]);
         assert!(farm.execute(vec![bad, good.clone()]).is_err());
         // the engine keeps serving after a failed batch
         let out = farm.execute(vec![good]).unwrap();
         assert!(out[0].values.iter().all(|&v| v == 3));
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_free() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 64);
+        let vals: Vec<i64> = (0..100).map(|i| (i % 17) - 8).collect();
+        let h = farm.alloc_tensor(&vals, 6).unwrap();
+        assert_eq!(farm.read_tensor(h).unwrap(), vals);
+        let vals2: Vec<i64> = vals.iter().map(|v| -v).collect();
+        farm.write_tensor(h, &vals2).unwrap();
+        assert_eq!(farm.read_tensor(h).unwrap(), vals2);
+        farm.free_tensor(h).unwrap();
+        assert!(farm.read_tensor(h).is_err());
+        assert!(farm.free_tensor(h).is_err());
+        let s = farm.data_stats();
+        assert!(s.host_bytes_in >= 2 * 800, "alloc + write counted: {s:?}");
+    }
+
+    #[test]
+    fn alloc_requires_a_reserve_and_valid_values() {
+        let farm = BlockFarm::new(Geometry::G512x40, 1);
+        assert!(farm.alloc_tensor(&[1, 2], 8).is_err(), "no reserve");
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 64);
+        assert!(farm.alloc_tensor(&[], 8).is_err(), "empty");
+        assert!(farm.alloc_tensor(&[200], 8).is_err(), "out of int8 range");
+        assert!(farm.alloc_tensor(&[1], 1).is_err(), "width too small");
+        // 64-row reserve cannot hold a 1000-element int8 tensor (200 rows)
+        assert!(farm.alloc_tensor(&[0; 1000], 8).is_err());
+    }
+
+    #[test]
+    fn resident_elementwise_resolves_in_place() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 64);
+        let a: Vec<i64> = (0..80).map(|i| (i % 23) - 11).collect();
+        let b: Vec<i64> = (0..80).map(|i| (i % 13) - 6).collect();
+        let h = farm.alloc_tensor(&a, 8).unwrap();
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, Geometry::G512x40);
+        let task = BlockTask::IntElementwise {
+            key,
+            a: Operand::Resident(crate::exec::TensorSlice { handle: h, offset: 0, len: 80 }),
+            b: Operand::Inline(b.clone()),
+        };
+        let out = farm.execute(vec![task]).unwrap();
+        for i in 0..80 {
+            assert_eq!(out[0].values[i], a[i] + b[i], "i={i}");
+        }
+        assert_eq!(out[0].resident_hits, 1);
+        assert_eq!(out[0].host_bytes_in, 640, "only b crossed the boundary");
+        // the tensor survives the compute run bit-exactly
+        assert_eq!(farm.read_tensor(h).unwrap(), a);
+    }
+
+    #[test]
+    fn single_pinned_task_wakes_its_home_worker() {
+        // regression: a pinned task's wakeup must reach the home worker
+        // even when every other (idle) worker is waiting on the same
+        // condvar — a single notify could be consumed by a sibling that
+        // cannot steal the pinned task, stranding it forever
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 4, 64);
+        let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let h = farm.alloc_tensor(&a, 8).unwrap();
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        for round in 0..20 {
+            // one pinned task at a time, farm otherwise idle
+            let task = BlockTask::IntElementwise {
+                key,
+                a: Operand::Resident(crate::exec::TensorSlice {
+                    handle: h,
+                    offset: 0,
+                    len: 40,
+                }),
+                b: Operand::Inline(vec![round; 40]),
+            };
+            let out = farm.execute(vec![task]).unwrap();
+            assert_eq!(out[0].values[0], a[0] + round, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pinned_tasks_run_on_the_replica_holder() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 4, 64);
+        let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let h = farm.alloc_tensor(&a, 8).unwrap();
+        let homes = farm.placement().homes(h);
+        assert_eq!(homes.len(), 1);
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        let tasks: Vec<BlockTask> = (0..12)
+            .map(|_| BlockTask::IntElementwise {
+                key,
+                a: Operand::Resident(crate::exec::TensorSlice {
+                    handle: h,
+                    offset: 0,
+                    len: 40,
+                }),
+                b: Operand::Inline(vec![1; 40]),
+            })
+            .collect();
+        let out = farm.execute(tasks).unwrap();
+        // every resolution was served from block storage — none fell back
+        // to the host copy, proving no task was stolen off the home worker
+        let hits: u64 = out.iter().map(|o| o.resident_hits).sum();
+        assert_eq!(hits, 12);
+        assert_eq!(farm.data_stats().resident_misses, 0);
+    }
+
+    #[test]
+    fn eviction_spills_lru_and_tasks_fall_back_to_host_copy() {
+        // reserve of 16 rows holds two 8-row tensors per block
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 16);
+        let t1: Vec<i64> = (0..40).map(|i| (i % 5) - 2).collect();
+        let t2: Vec<i64> = (0..40).map(|i| (i % 7) - 3).collect();
+        let t3: Vec<i64> = (0..40).map(|i| (i % 11) - 5).collect();
+        let h1 = farm.alloc_tensor(&t1, 8).unwrap();
+        let h2 = farm.alloc_tensor(&t2, 8).unwrap();
+        let h3 = farm.alloc_tensor(&t3, 8).unwrap(); // evicts h1 (LRU)
+        assert_eq!(farm.data_stats().evictions, 1);
+        assert!(farm.placement().homes(h1).is_empty(), "h1 spilled to host");
+        // all three read back bit-exactly, resident or not
+        assert_eq!(farm.read_tensor(h1).unwrap(), t1);
+        assert_eq!(farm.read_tensor(h2).unwrap(), t2);
+        assert_eq!(farm.read_tensor(h3).unwrap(), t3);
+        // computing against the evicted tensor works via the host copy
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        let task = BlockTask::IntElementwise {
+            key,
+            a: Operand::Resident(crate::exec::TensorSlice { handle: h1, offset: 0, len: 40 }),
+            b: Operand::Inline(vec![0; 40]),
+        };
+        let out = farm.execute(vec![task]).unwrap();
+        assert_eq!(out[0].values, t1);
+        assert_eq!(out[0].resident_hits, 0);
+        assert!(farm.data_stats().resident_misses >= 1);
+    }
+
+    #[test]
+    fn write_after_partial_eviction_refreshes_the_host_copy() {
+        use crate::exec::placement::Resolution;
+        // reserve of 8 rows: one 40-element int8 tensor per block
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 8);
+        let v0 = vec![1i64; 40];
+        let v1 = vec![2i64; 40];
+        let h = farm.alloc_tensor_replicated(&v0, 8, 2).unwrap();
+        assert_eq!(farm.placement().homes(h).len(), 2);
+        // filler evicts h's worker-0 replica, snapshotting v0 to host
+        let f1 = farm.alloc_tensor(&[9i64; 40], 8).unwrap();
+        assert_eq!(farm.placement().homes(h), vec![1]);
+        // overwrite while partially evicted: the replica AND the lingering
+        // host backup must both see the new values
+        farm.write_tensor(h, &v1).unwrap();
+        assert_eq!(farm.read_tensor(h).unwrap(), v1, "replica updated");
+        match farm.placement().resolve(h, 0) {
+            Resolution::Host { values, .. } => {
+                assert_eq!(*values, v1, "host backup must not be stale");
+            }
+            other => panic!("{other:?}"),
+        }
+        let _ = f1;
+    }
+
+    #[test]
+    fn oversized_kernel_body_rejected_on_reserved_farm() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 192);
+        // a full-block int4 add sweeps 42 * 12 = 504 rows — into the reserve
+        let key = KernelKey::int_ew_full(KernelOp::IntAdd, 4, Geometry::G512x40);
+        let task = BlockTask::IntElementwise {
+            key,
+            a: Operand::Inline(vec![1; 10]),
+            b: Operand::Inline(vec![1; 10]),
+        };
+        let err = farm.execute(vec![task]).unwrap_err();
+        assert!(err.to_string().contains("reserve"), "{err}");
+    }
+
+    #[test]
+    fn submit_depths_sampled_per_batch() {
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        let h = farm.submit(vec![ew_task(EwOp::Add, 8, vec![1; 10], vec![1; 10])]);
+        assert_eq!(h.submit_depths().len(), 2);
+        h.wait().unwrap();
     }
 }

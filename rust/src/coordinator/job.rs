@@ -1,6 +1,7 @@
 //! Workload descriptions accepted by the coordinator.
 
 use crate::ctrl::CycleStats;
+use crate::exec::TensorHandle;
 use crate::util::SoftBf16;
 
 /// Elementwise integer operator.
@@ -11,11 +12,46 @@ pub enum EwOp {
     Mul,
 }
 
+/// A job-level operand: literal values shipped from the host, or a
+/// reference to a tensor previously stored on the farm (see
+/// [`crate::coordinator::Coordinator::alloc_tensor`]). The mapper lowers
+/// tensor references to [`crate::coordinator::mapper::Operand::Resident`]
+/// slices, which the engine resolves on the block holding the data.
+#[derive(Clone, Debug)]
+pub enum OperandRef {
+    Values(Vec<i64>),
+    Tensor(TensorHandle),
+}
+
+impl OperandRef {
+    /// Length when host-known (`None` for tensor references — the mapper
+    /// resolves those against the placement map).
+    pub fn known_len(&self) -> Option<usize> {
+        match self {
+            OperandRef::Values(v) => Some(v.len()),
+            OperandRef::Tensor(_) => None,
+        }
+    }
+}
+
+/// One K-segment of a resident matmul: rows `k0..k1` of the weight matrix,
+/// flattened row-major into the tensor behind `handle` (length
+/// `(k1 - k0) * n`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatSeg {
+    pub k0: usize,
+    pub k1: usize,
+    pub handle: TensorHandle,
+}
+
 /// One unit of work submitted to the coordinator.
 #[derive(Clone, Debug)]
 pub enum JobPayload {
     /// Elementwise `a (op) b` at integer width `w`.
     IntElementwise { op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64> },
+    /// Elementwise with operand references: either side may be a resident
+    /// tensor, computed against in place on the block that stores it.
+    IntElementwiseRef { op: EwOp, w: u32, a: OperandRef, b: OperandRef },
     /// `n` independent dot products of length `k`: `a[k][n] . b[k][n]`,
     /// int32 accumulation.
     IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>> },
@@ -23,18 +59,31 @@ pub enum JobPayload {
     Bf16Elementwise { mul: bool, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
     /// Integer matmul `x[m][k] @ w[k][n] -> int32[m][n]` at width `w`.
     IntMatmul { w: u32, x: Vec<Vec<i64>>, wt: Vec<Vec<i64>> },
+    /// Integer matmul against **resident** weights: only `x` ships from
+    /// the host; the weight matrix lives on the farm as one tensor per
+    /// K-segment (see [`MatSeg`] and
+    /// [`crate::nn::QuantLinear::make_resident`]), and each segment's
+    /// tasks run on a block holding a replica.
+    IntMatmulResident { w: u32, x: Vec<Vec<i64>>, n: usize, segments: Vec<MatSeg> },
 }
 
 impl JobPayload {
-    /// Number of scalar results the job produces.
+    /// Number of scalar results the job produces. For
+    /// [`JobPayload::IntElementwiseRef`] with two tensor operands the
+    /// length is not host-known and `0` is returned; the mapper's plan
+    /// carries the authoritative length.
     pub fn result_len(&self) -> usize {
         match self {
             JobPayload::IntElementwise { a, .. } => a.len(),
+            JobPayload::IntElementwiseRef { a, b, .. } => {
+                a.known_len().or(b.known_len()).unwrap_or(0)
+            }
             JobPayload::IntDot { a, .. } => a.first().map_or(0, Vec::len),
             JobPayload::Bf16Elementwise { a, .. } => a.len(),
             JobPayload::IntMatmul { x, wt, .. } => {
                 x.len() * wt.first().map_or(0, Vec::len)
             }
+            JobPayload::IntMatmulResident { x, n, .. } => x.len() * n,
         }
     }
 
@@ -43,12 +92,17 @@ impl JobPayload {
     pub fn op_count(&self) -> u64 {
         match self {
             JobPayload::IntElementwise { a, .. } => a.len() as u64,
+            JobPayload::IntElementwiseRef { .. } => self.result_len() as u64,
             JobPayload::Bf16Elementwise { a, .. } => a.len() as u64,
             JobPayload::IntDot { a, .. } => {
                 (a.len() * a.first().map_or(0, Vec::len)) as u64
             }
             JobPayload::IntMatmul { x, wt, .. } => {
                 (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64
+            }
+            JobPayload::IntMatmulResident { x, n, segments, .. } => {
+                let k = segments.last().map_or(0, |s| s.k1);
+                (x.len() * k * n) as u64
             }
         }
     }
@@ -83,6 +137,20 @@ pub struct JobResult {
     /// Host wall-clock the job spent executing (first task dequeued ->
     /// last task finished).
     pub exec_time: std::time::Duration,
+    /// Bytes of operand data shipped host -> blocks for this job
+    /// (resident operands resolved in place contribute nothing).
+    pub host_bytes_in: u64,
+    /// Bytes of result data read blocks -> host for this job.
+    pub host_bytes_out: u64,
+    /// Resident-operand resolutions served from block storage (each one is
+    /// an operand that did **not** cross the host boundary).
+    pub resident_hits: u64,
+    /// Deepest per-worker task queue at submit time (scheduling-pressure
+    /// gauge; see [`crate::coordinator::Metrics`] for the running
+    /// per-worker max/mean).
+    pub queue_depth_max: usize,
+    /// Mean per-worker queue depth at submit time.
+    pub queue_depth_mean: f64,
 }
 
 #[cfg(test)]
@@ -121,5 +189,37 @@ mod tests {
         };
         assert_eq!(j.result_len(), 16 * 32);
         assert_eq!(j.op_count(), 16 * 64 * 32);
+    }
+
+    #[test]
+    fn result_len_elementwise_ref_uses_value_side() {
+        let j = JobPayload::IntElementwiseRef {
+            op: EwOp::Add,
+            w: 8,
+            a: OperandRef::Tensor(TensorHandle::from_id(1)),
+            b: OperandRef::Values(vec![0; 25]),
+        };
+        assert_eq!(j.result_len(), 25);
+        assert_eq!(j.op_count(), 25);
+        let both = JobPayload::IntElementwiseRef {
+            op: EwOp::Add,
+            w: 8,
+            a: OperandRef::Tensor(TensorHandle::from_id(1)),
+            b: OperandRef::Tensor(TensorHandle::from_id(2)),
+        };
+        assert_eq!(both.result_len(), 0, "host-unknown until planned");
+    }
+
+    #[test]
+    fn result_len_matmul_resident() {
+        let seg = |k0, k1, id| MatSeg { k0, k1, handle: TensorHandle::from_id(id) };
+        let j = JobPayload::IntMatmulResident {
+            w: 8,
+            x: vec![vec![0; 48]; 6],
+            n: 10,
+            segments: vec![seg(0, 30, 1), seg(30, 48, 2)],
+        };
+        assert_eq!(j.result_len(), 60);
+        assert_eq!(j.op_count(), 6 * 48 * 10);
     }
 }

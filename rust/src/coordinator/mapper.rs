@@ -10,11 +10,50 @@
 //!   "external logic" role);
 //! * matmuls lower to dot batches: output element `(i, j)` is the dot of
 //!   `x[i][..]` with column `j` of `w`, tiled over columns and K.
+//!
+//! Planning happens against a [`PlanEnv`]: the farm's geometry, the rows
+//! available to kernel bodies (smaller than the geometry on farms with a
+//! resident-tensor storage reserve), and the [`PlacementMap`] used to
+//! resolve tensor references. Task operands are [`Operand`]s — inline
+//! vectors shipped from the host, or [`TensorSlice`]s of resident tensors
+//! that the engine resolves in place on the block storing them.
 
-use super::job::{EwOp, JobPayload};
+use super::job::{EwOp, JobPayload, MatSeg, OperandRef};
 use crate::bitline::Geometry;
-use crate::exec::{KernelKey, KernelOp};
+use crate::exec::{KernelKey, KernelOp, PlacementMap, TensorHandle, TensorSlice};
 use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
+use anyhow::{bail, ensure, Result};
+
+/// A block-task operand: literal values staged from the host, or a slice
+/// of a resident tensor resolved from the executing block's own storage
+/// region (the data-movement saving the paper's dual-mode blocks exist
+/// for).
+#[derive(Clone, Debug)]
+pub enum Operand {
+    Inline(Vec<i64>),
+    Resident(TensorSlice),
+}
+
+impl Operand {
+    pub fn len(&self) -> usize {
+        match self {
+            Operand::Inline(v) => v.len(),
+            Operand::Resident(s) => s.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The tensor this operand is bound to, if resident.
+    pub fn handle(&self) -> Option<TensorHandle> {
+        match self {
+            Operand::Inline(_) => None,
+            Operand::Resident(s) => Some(s.handle),
+        }
+    }
+}
 
 /// One block-sized task. Every task carries the [`KernelKey`] of the
 /// program that executes it, so the farm resolves tasks against the shared
@@ -23,10 +62,28 @@ use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
 /// sized to its element count (cheaper to run, separately cached).
 #[derive(Clone, Debug)]
 pub enum BlockTask {
-    IntElementwise { key: KernelKey, a: Vec<i64>, b: Vec<i64> },
+    IntElementwise { key: KernelKey, a: Operand, b: Operand },
     /// Partial dot batch: contributes into `out[out_offset .. +n]`.
     IntDot { key: KernelKey, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
     Bf16Elementwise { key: KernelKey, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
+    /// Matmul tile against resident weights: only the `x` rows the tile
+    /// needs ship with the task; the weight slab is resolved from the
+    /// executing block's storage and both dot operands are expanded
+    /// block-side. Output columns `c0..c1` of an `m x n` grid
+    /// (`c = i * n + j`), accumulated at `out_offset` like a split-K dot.
+    MatmulResident {
+        key: KernelKey,
+        /// `x[i0..i1]`, each row already K-sliced to this segment.
+        x: Vec<Vec<i64>>,
+        /// Grid row index of `x[0]`.
+        i0: usize,
+        /// The segment's weight slab (`(k1 - k0) * n` values, row-major).
+        weights: TensorSlice,
+        n: usize,
+        c0: usize,
+        c1: usize,
+        out_offset: usize,
+    },
 }
 
 impl BlockTask {
@@ -35,8 +92,37 @@ impl BlockTask {
         match self {
             BlockTask::IntElementwise { key, .. }
             | BlockTask::IntDot { key, .. }
-            | BlockTask::Bf16Elementwise { key, .. } => *key,
+            | BlockTask::Bf16Elementwise { key, .. }
+            | BlockTask::MatmulResident { key, .. } => *key,
         }
+    }
+
+    /// Tensors this task must run next to (the engine's data-affinity
+    /// pin).
+    pub fn resident_handles(&self) -> Vec<TensorHandle> {
+        match self {
+            BlockTask::IntElementwise { a, b, .. } => {
+                a.handle().into_iter().chain(b.handle()).collect()
+            }
+            BlockTask::MatmulResident { weights, .. } => vec![weights.handle],
+            BlockTask::IntDot { .. } | BlockTask::Bf16Elementwise { .. } => Vec::new(),
+        }
+    }
+}
+
+/// Planning context: geometry, the rows kernel bodies may use (capped by
+/// the storage reserve), and the placement map for tensor references.
+#[derive(Clone, Copy)]
+pub struct PlanEnv<'a> {
+    pub geom: Geometry,
+    pub compute_rows: usize,
+    pub placement: Option<&'a PlacementMap>,
+}
+
+impl PlanEnv<'_> {
+    /// An environment with no storage reserve (full-geometry compute).
+    pub fn bare(geom: Geometry) -> PlanEnv<'static> {
+        PlanEnv { geom, compute_rows: geom.rows(), placement: None }
     }
 }
 
@@ -45,10 +131,49 @@ impl BlockTask {
 /// stores a double-width result, so its capacity is lower. Shared by the
 /// planner below and the server's coalesced-group cap.
 pub fn ew_capacity(geom: Geometry, op: EwOp, w: u32) -> usize {
-    match op {
-        EwOp::Mul => VecLayout::new(geom, w, 2 * w).total_ops(),
-        _ => VecLayout::new(geom, w, w).total_ops(),
+    ew_capacity_in(&PlanEnv::bare(geom), op, w)
+}
+
+/// [`ew_capacity`] under a planning environment (kernel bodies capped to
+/// `env.compute_rows` on farms with a storage reserve).
+pub fn ew_capacity_in(env: &PlanEnv, op: EwOp, w: u32) -> usize {
+    let l = match op {
+        EwOp::Mul => VecLayout::new(env.geom, w, 2 * w),
+        _ => VecLayout::new(env.geom, w, w),
+    };
+    let tuples = (env.compute_rows / l.tuple_bits).min(l.ops_per_col).max(1);
+    tuples * l.cols
+}
+
+/// Per-block bf16 elementwise capacity under `env` (scratch-clamped and
+/// reserve-capped).
+fn bf16_capacity_in(env: &PlanEnv) -> usize {
+    let tuple_bits = VecLayout::new(env.geom, 16, 16).tuple_bits;
+    let tuples = (env.compute_rows / tuple_bits).min(ucbf16::max_tuples(env.geom)).max(1);
+    tuples * env.geom.cols()
+}
+
+/// Longest K one dot-product kernel can hold under `env` (reserve-capped).
+fn max_dot_k(env: &PlanEnv, w: u32, acc_w: u32) -> usize {
+    let full = DotLayout::max_k(env.geom, w, acc_w).k;
+    let capped = env.compute_rows.saturating_sub(acc_w as usize) / (2 * w as usize);
+    full.min(capped).max(1)
+}
+
+/// The K-segmentation a matmul of inner dimension `k` lowers to under
+/// `env`. [`crate::nn::QuantLinear::make_resident`] allocates one weight
+/// slab per segment through this, so the resident plan and the tensors
+/// can never disagree on the split.
+pub fn matmul_segments(env: &PlanEnv, w: u32, k: usize) -> Vec<(usize, usize)> {
+    let max_k = max_dot_k(env, w, 32);
+    let mut segs = Vec::new();
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + max_k).min(k);
+        segs.push((k0, k1));
+        k0 = k1;
     }
+    segs
 }
 
 /// Integer elementwise operator -> kernel op.
@@ -71,54 +196,94 @@ pub struct Plan {
     pub ew_offsets: Vec<usize>,
 }
 
-/// Decompose a job for blocks of the given geometry.
-pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
+/// A borrowed view of one elementwise job operand, so the inline plan
+/// path never clones the full vectors — only the per-task chunks.
+#[derive(Clone, Copy)]
+enum EwSide<'a> {
+    Values(&'a [i64]),
+    Tensor(TensorHandle),
+}
+
+impl<'a> EwSide<'a> {
+    fn of(r: &'a OperandRef) -> EwSide<'a> {
+        match r {
+            OperandRef::Values(v) => EwSide::Values(v),
+            OperandRef::Tensor(h) => EwSide::Tensor(*h),
+        }
+    }
+}
+
+/// Resolve an operand view to its length (tensor lengths come from the
+/// placement map) and check width agreement.
+fn side_len(env: &PlanEnv, s: EwSide, w: u32) -> Result<usize> {
+    match s {
+        EwSide::Values(v) => Ok(v.len()),
+        EwSide::Tensor(h) => {
+            let Some(placement) = env.placement else {
+                bail!("tensor operand on a farm without a placement map");
+            };
+            let Some((tw, len)) = placement.info(h) else {
+                bail!("unknown tensor handle {}", h.id());
+            };
+            ensure!(
+                tw == w,
+                "tensor {} stores int{tw} values, job computes at int{w}",
+                h.id()
+            );
+            Ok(len)
+        }
+    }
+}
+
+/// Slice `[off, end)` of an operand view into a task operand.
+fn side_slice(s: EwSide, off: usize, end: usize) -> Operand {
+    match s {
+        EwSide::Values(v) => Operand::Inline(v[off..end].to_vec()),
+        EwSide::Tensor(h) => {
+            Operand::Resident(TensorSlice { handle: h, offset: off, len: end - off })
+        }
+    }
+}
+
+/// Decompose a job for blocks under the given planning environment.
+pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
     match payload {
         JobPayload::IntElementwise { op, w, a, b } => {
-            let kop = ew_kernel_op(*op);
-            let cap = ew_capacity(geom, *op, *w);
-            let mut tasks = Vec::new();
-            let mut ew_offsets = Vec::new();
-            let mut off = 0;
-            while off < a.len() {
-                let end = (off + cap).min(a.len());
-                tasks.push(BlockTask::IntElementwise {
-                    key: KernelKey::int_ew_sized(kop, *w, end - off, geom),
-                    a: a[off..end].to_vec(),
-                    b: b[off..end].to_vec(),
-                });
-                ew_offsets.push(off);
-                off = end;
-            }
-            Plan { tasks, result_len: a.len(), ew_offsets }
+            ensure!(a.len() == b.len(), "operand length mismatch");
+            plan_ew(env, *op, *w, EwSide::Values(a), EwSide::Values(b))
+        }
+        JobPayload::IntElementwiseRef { op, w, a, b } => {
+            plan_ew(env, *op, *w, EwSide::of(a), EwSide::of(b))
         }
         JobPayload::Bf16Elementwise { mul, a, b } => {
-            // bf16 layout caps tuples below the full geometry (scratch rows)
-            let cap = ucbf16::max_tuples(geom) * geom.cols();
+            ensure!(a.len() == b.len(), "operand length mismatch");
+            let cap = bf16_capacity_in(env);
             let mut tasks = Vec::new();
             let mut ew_offsets = Vec::new();
             let mut off = 0;
             while off < a.len() {
                 let end = (off + cap).min(a.len());
                 tasks.push(BlockTask::Bf16Elementwise {
-                    key: KernelKey::bf16_ew_sized(*mul, end - off, geom),
+                    key: KernelKey::bf16_ew_sized(*mul, end - off, env.geom),
                     a: a[off..end].to_vec(),
                     b: b[off..end].to_vec(),
                 });
                 ew_offsets.push(off);
                 off = end;
             }
-            Plan { tasks, result_len: a.len(), ew_offsets }
+            Ok(Plan { tasks, result_len: a.len(), ew_offsets })
         }
         JobPayload::IntDot { w, a, b } => {
+            ensure!(a.len() == b.len(), "K mismatch");
             let n = a.first().map_or(0, Vec::len);
-            plan_dot(geom, *w, a, b, n, 0)
+            Ok(plan_dot(env, *w, a, b, n, 0))
         }
         JobPayload::IntMatmul { w, x, wt } => {
             // lower to a dot batch: column c of the batch is output (i, j)
             let m = x.len();
             let k = wt.len();
             let n = wt.first().map_or(0, Vec::len);
+            ensure!(x.iter().all(|r| r.len() == k), "x width != k");
             let mut a = vec![vec![0i64; m * n]; k];
             let mut b = vec![vec![0i64; m * n]; k];
             for i in 0..m {
@@ -130,21 +295,111 @@ pub fn plan(geom: Geometry, payload: &JobPayload) -> Plan {
                     }
                 }
             }
-            plan_dot(geom, *w, &a, &b, m * n, 0)
+            Ok(plan_dot(env, *w, &a, &b, m * n, 0))
+        }
+        JobPayload::IntMatmulResident { w, x, n, segments } => {
+            plan_matmul_resident(env, *w, x, *n, segments)
         }
     }
 }
 
+fn plan_ew(env: &PlanEnv, op: EwOp, w: u32, a: EwSide, b: EwSide) -> Result<Plan> {
+    let alen = side_len(env, a, w)?;
+    let blen = side_len(env, b, w)?;
+    ensure!(alen == blen, "operand length mismatch: a={alen} b={blen}");
+    let kop = ew_kernel_op(op);
+    let cap = ew_capacity_in(env, op, w);
+    let mut tasks = Vec::new();
+    let mut ew_offsets = Vec::new();
+    let mut off = 0;
+    while off < alen {
+        let end = (off + cap).min(alen);
+        tasks.push(BlockTask::IntElementwise {
+            key: KernelKey::int_ew_sized(kop, w, end - off, env.geom),
+            a: side_slice(a, off, end),
+            b: side_slice(b, off, end),
+        });
+        ew_offsets.push(off);
+        off = end;
+    }
+    Ok(Plan { tasks, result_len: alen, ew_offsets })
+}
+
+fn plan_matmul_resident(
+    env: &PlanEnv,
+    w: u32,
+    x: &[Vec<i64>],
+    n: usize,
+    segments: &[MatSeg],
+) -> Result<Plan> {
+    ensure!(!segments.is_empty(), "resident matmul with no segments");
+    ensure!(n >= 1, "resident matmul with zero output columns");
+    let k = segments.last().map_or(0, |s| s.k1);
+    ensure!(segments[0].k0 == 0, "segments must start at k=0");
+    ensure!(
+        segments.windows(2).all(|p| p[0].k1 == p[1].k0),
+        "segments must be contiguous"
+    );
+    ensure!(segments.iter().all(|s| s.k1 > s.k0), "empty segment");
+    ensure!(x.iter().all(|r| r.len() == k), "x width != segmented k");
+    let Some(placement) = env.placement else {
+        bail!("resident matmul on a farm without a placement map");
+    };
+    let max_k = max_dot_k(env, w, 32);
+    let m = x.len();
+    let result_len = m * n;
+    let cols = env.geom.cols();
+    let mut tasks = Vec::new();
+    for seg in segments {
+        let kseg = seg.k1 - seg.k0;
+        ensure!(
+            kseg <= max_k,
+            "segment k={kseg} exceeds per-block dot capacity {max_k}"
+        );
+        let Some((tw, tlen)) = placement.info(seg.handle) else {
+            bail!("unknown weight tensor {}", seg.handle.id());
+        };
+        ensure!(tw == w, "weight tensor {} is int{tw}, matmul is int{w}", seg.handle.id());
+        ensure!(
+            tlen == kseg * n,
+            "weight tensor {} holds {tlen} values, segment needs {}",
+            seg.handle.id(),
+            kseg * n
+        );
+        let weights = TensorSlice { handle: seg.handle, offset: 0, len: tlen };
+        let mut c0 = 0;
+        while c0 < result_len {
+            let c1 = (c0 + cols).min(result_len);
+            let i0 = c0 / n;
+            let i1 = (c1 - 1) / n + 1;
+            let x_tile: Vec<Vec<i64>> =
+                x[i0..i1].iter().map(|row| row[seg.k0..seg.k1].to_vec()).collect();
+            tasks.push(BlockTask::MatmulResident {
+                key: KernelKey::int_dot(w, 32, kseg, env.geom),
+                x: x_tile,
+                i0,
+                weights,
+                n,
+                c0,
+                c1,
+                out_offset: c0,
+            });
+            c0 = c1;
+        }
+    }
+    Ok(Plan { tasks, result_len, ew_offsets: Vec::new() })
+}
+
 fn plan_dot(
-    geom: Geometry,
+    env: &PlanEnv,
     w: u32,
     a: &[Vec<i64>],
     b: &[Vec<i64>],
     result_len: usize,
     base_offset: usize,
 ) -> Plan {
-    let max_k = DotLayout::max_k(geom, w, 32).k;
-    let cols = geom.cols();
+    let max_k = max_dot_k(env, w, 32);
+    let cols = env.geom.cols();
     let k = a.len();
     let mut tasks = Vec::new();
     // split K into segments, columns into groups of `cols`
@@ -159,7 +414,7 @@ fn plan_dot(
             let sub_b: Vec<Vec<i64>> =
                 b[k0..k1].iter().map(|row| row[c0..c1].to_vec()).collect();
             tasks.push(BlockTask::IntDot {
-                key: KernelKey::int_dot(w, 32, k1 - k0, geom),
+                key: KernelKey::int_dot(w, 32, k1 - k0, env.geom),
                 a: sub_a,
                 b: sub_b,
                 out_offset: base_offset + c0,
@@ -175,12 +430,18 @@ fn plan_dot(
 mod tests {
     use super::*;
 
+    fn plan_bare(payload: &JobPayload) -> Plan {
+        plan(&PlanEnv::bare(Geometry::G512x40), payload).unwrap()
+    }
+
     #[test]
     fn small_elementwise_is_one_task() {
-        let p = plan(
-            Geometry::G512x40,
-            &JobPayload::IntElementwise { op: EwOp::Add, w: 8, a: vec![0; 100], b: vec![0; 100] },
-        );
+        let p = plan_bare(&JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 8,
+            a: vec![0; 100],
+            b: vec![0; 100],
+        });
         assert_eq!(p.tasks.len(), 1);
         assert_eq!(p.result_len, 100);
     }
@@ -189,10 +450,12 @@ mod tests {
     fn large_elementwise_chunks_by_block_capacity() {
         // int4 add capacity = 1680 per block
         let n = 5000;
-        let p = plan(
-            Geometry::G512x40,
-            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
-        );
+        let p = plan_bare(&JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 4,
+            a: vec![0; n],
+            b: vec![0; n],
+        });
         assert_eq!(p.tasks.len(), n.div_ceil(1680));
         assert_eq!(p.ew_offsets, vec![0, 1680, 3360]);
     }
@@ -204,7 +467,7 @@ mod tests {
         let n = 10;
         let a = vec![vec![1i64; n]; k];
         let b = vec![vec![1i64; n]; k];
-        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 8, a, b });
+        let p = plan_bare(&JobPayload::IntDot { w: 8, a, b });
         assert_eq!(p.tasks.len(), 3);
         // all tasks target offset 0 (partial sums)
         for t in &p.tasks {
@@ -221,7 +484,7 @@ mod tests {
         let n = 100; // > 40 columns
         let a = vec![vec![1i64; n]; k];
         let b = vec![vec![1i64; n]; k];
-        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 4, a, b });
+        let p = plan_bare(&JobPayload::IntDot { w: 4, a, b });
         assert_eq!(p.tasks.len(), 3); // 40 + 40 + 20
     }
 
@@ -229,7 +492,7 @@ mod tests {
     fn matmul_lowers_to_dots() {
         let x = vec![vec![1i64; 8]; 4]; // 4x8
         let wt = vec![vec![1i64; 6]; 8]; // 8x6
-        let p = plan(Geometry::G512x40, &JobPayload::IntMatmul { w: 8, x, wt });
+        let p = plan_bare(&JobPayload::IntMatmul { w: 8, x, wt });
         assert_eq!(p.result_len, 24);
         assert_eq!(p.tasks.len(), 1); // 24 cols, k=8 fits
     }
@@ -238,10 +501,12 @@ mod tests {
     fn chunk_kernels_share_full_block_key_except_tail() {
         let geom = Geometry::G512x40;
         let n = 4000; // int4 add: 1680 + 1680 + 640
-        let p = plan(
-            geom,
-            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
-        );
+        let p = plan_bare(&JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 4,
+            a: vec![0; n],
+            b: vec![0; n],
+        });
         let keys: Vec<KernelKey> = p.tasks.iter().map(|t| t.key()).collect();
         assert_eq!(keys.len(), 3);
         assert_eq!(keys[0], KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
@@ -255,7 +520,7 @@ mod tests {
         let k = 64;
         let a = vec![vec![1i64; 10]; k];
         let b = vec![vec![1i64; 10]; k];
-        let p = plan(Geometry::G512x40, &JobPayload::IntDot { w: 8, a, b });
+        let p = plan_bare(&JobPayload::IntDot { w: 8, a, b });
         let ks: Vec<u16> = p
             .tasks
             .iter()
@@ -270,15 +535,138 @@ mod tests {
     #[test]
     fn mul_capacity_differs_from_add() {
         let n = 1500; // > 1280 (mul cap) but < 1680 (add cap)
-        let add = plan(
-            Geometry::G512x40,
-            &JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![0; n], b: vec![0; n] },
-        );
-        let mul = plan(
-            Geometry::G512x40,
-            &JobPayload::IntElementwise { op: EwOp::Mul, w: 4, a: vec![0; n], b: vec![0; n] },
-        );
+        let add = plan_bare(&JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 4,
+            a: vec![0; n],
+            b: vec![0; n],
+        });
+        let mul = plan_bare(&JobPayload::IntElementwise {
+            op: EwOp::Mul,
+            w: 4,
+            a: vec![0; n],
+            b: vec![0; n],
+        });
         assert_eq!(add.tasks.len(), 1);
         assert_eq!(mul.tasks.len(), 2);
+    }
+
+    #[test]
+    fn storage_reserve_caps_capacities() {
+        let geom = Geometry::G512x40;
+        let bare = PlanEnv::bare(geom);
+        // reserve leaves 512 - 32 - 192 = 288 compute rows
+        let reserved = PlanEnv { geom, compute_rows: 288, placement: None };
+        // int4 add: 288 / 12 = 24 tuples (vs 42 full)
+        assert_eq!(ew_capacity_in(&bare, EwOp::Add, 4), 1680);
+        assert_eq!(ew_capacity_in(&reserved, EwOp::Add, 4), 24 * 40);
+        // int8 dot: (288 - 32) / 16 = 16 pairs (vs 30 full)
+        assert_eq!(max_dot_k(&bare, 8, 32), 30);
+        assert_eq!(max_dot_k(&reserved, 8, 32), 16);
+        assert_eq!(matmul_segments(&reserved, 8, 32), vec![(0, 16), (16, 32)]);
+        assert_eq!(matmul_segments(&bare, 8, 64), vec![(0, 30), (30, 60), (60, 64)]);
+        // reserve-capped plans split accordingly
+        let a = vec![vec![1i64; 4]; 32];
+        let p = plan(&reserved, &JobPayload::IntDot { w: 8, a: a.clone(), b: a }).unwrap();
+        assert_eq!(p.tasks.len(), 2);
+    }
+
+    #[test]
+    fn elementwise_ref_chunks_pin_tensor_slices() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let h = placement.register(4, 2000);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let p = plan(
+            &env,
+            &JobPayload::IntElementwiseRef {
+                op: EwOp::Add,
+                w: 4,
+                a: OperandRef::Tensor(h),
+                b: OperandRef::Values(vec![0; 2000]),
+            },
+        )
+        .unwrap();
+        // 288 / 12 = 24 tuples -> 960 elements per chunk
+        assert_eq!(p.tasks.len(), 3);
+        assert_eq!(p.result_len, 2000);
+        match &p.tasks[1] {
+            BlockTask::IntElementwise { a: Operand::Resident(s), b: Operand::Inline(v), .. } => {
+                assert_eq!((s.handle, s.offset, s.len), (h, 960, 960));
+                assert_eq!(v.len(), 960);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.tasks[1].resident_handles(), vec![h]);
+        // width mismatch rejected
+        assert!(plan(
+            &env,
+            &JobPayload::IntElementwiseRef {
+                op: EwOp::Add,
+                w: 8,
+                a: OperandRef::Tensor(h),
+                b: OperandRef::Values(vec![0; 2000]),
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn resident_matmul_tiles_columns_per_segment() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let (m, k, n) = (6, 32, 10);
+        let segs = matmul_segments(&env, 8, k);
+        assert_eq!(segs, vec![(0, 16), (16, 32)]);
+        let handles: Vec<MatSeg> = segs
+            .iter()
+            .map(|&(k0, k1)| MatSeg {
+                k0,
+                k1,
+                handle: placement.register(8, (k1 - k0) * n),
+            })
+            .collect();
+        let x = vec![vec![1i64; k]; m];
+        let p = plan(
+            &env,
+            &JobPayload::IntMatmulResident { w: 8, x, n, segments: handles.clone() },
+        )
+        .unwrap();
+        // 60 columns -> 2 tiles per segment, 2 segments
+        assert_eq!(p.result_len, 60);
+        assert_eq!(p.tasks.len(), 4);
+        match &p.tasks[1] {
+            BlockTask::MatmulResident { x, i0, weights, c0, c1, out_offset, .. } => {
+                assert_eq!((*c0, *c1, *out_offset), (40, 60, 40));
+                assert_eq!(*i0, 4);
+                assert_eq!(x.len(), 2, "grid rows 4..6");
+                assert_eq!(x[0].len(), 16, "K-sliced to the segment");
+                assert_eq!(weights.handle, handles[0].handle);
+            }
+            other => panic!("{other:?}"),
+        }
+        // a wrong-length weight tensor is rejected
+        let bad = vec![MatSeg { k0: 0, k1: 16, handle: placement.register(8, 5) }];
+        assert!(plan(
+            &env,
+            &JobPayload::IntMatmulResident { w: 8, x: vec![vec![0; 16]; 2], n, segments: bad },
+        )
+        .is_err());
+        // an oversized segment is rejected
+        let wide = vec![MatSeg { k0: 0, k1: 32, handle: handles[0].handle }];
+        assert!(plan(
+            &env,
+            &JobPayload::IntMatmulResident { w: 8, x: vec![vec![0; 32]; 2], n, segments: wide },
+        )
+        .is_err());
     }
 }

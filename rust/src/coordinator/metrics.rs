@@ -1,6 +1,48 @@
 //! Shared metrics for the coordinator and server.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Everything one completed job contributes to the counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JobSample {
+    pub ops: u64,
+    pub block_runs: u64,
+    pub cycles: u64,
+    pub array_cycles: u64,
+    pub critical_cycles: u64,
+    pub queue_wait_micros: u64,
+    pub exec_micros: u64,
+    /// Operand bytes shipped host -> blocks (resident operands resolved in
+    /// place contribute nothing — that is the point).
+    pub host_bytes_in: u64,
+    /// Result bytes read blocks -> host.
+    pub host_bytes_out: u64,
+    /// Resident-operand resolutions served from block storage.
+    pub resident_hits: u64,
+}
+
+/// Running max/mean of one worker's queue depth, sampled at job submit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DepthGauge {
+    pub max: u64,
+    sum: u64,
+    samples: u64,
+}
+
+impl DepthGauge {
+    pub fn mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.samples as f64
+        }
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
 
 /// Monotonic counters, shared across worker threads.
 #[derive(Debug, Default)]
@@ -19,6 +61,16 @@ pub struct Metrics {
     /// Summed host microseconds jobs spent executing (first task dequeued
     /// to last task finished).
     pub exec_micros: AtomicU64,
+    /// Summed operand bytes shipped host -> blocks across jobs.
+    pub host_bytes_in: AtomicU64,
+    /// Summed result bytes read blocks -> host across jobs.
+    pub host_bytes_out: AtomicU64,
+    /// Summed resident-operand hits across jobs (operands that never
+    /// crossed the host boundary).
+    pub resident_hits: AtomicU64,
+    /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
+    /// the widest farm seen).
+    queue_depths: Mutex<Vec<DepthGauge>>,
 }
 
 impl Metrics {
@@ -26,32 +78,48 @@ impl Metrics {
         Self::default()
     }
 
-    #[allow(clippy::too_many_arguments)]
-    pub fn record_job(
-        &self,
-        ops: u64,
-        block_runs: u64,
-        cycles: u64,
-        array_cycles: u64,
-        critical_cycles: u64,
-        queue_wait_micros: u64,
-        exec_micros: u64,
-    ) {
+    pub fn record_job(&self, s: JobSample) {
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
-        self.block_runs.fetch_add(block_runs, Ordering::Relaxed);
-        self.ops_executed.fetch_add(ops, Ordering::Relaxed);
-        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
-        self.sim_array_cycles.fetch_add(array_cycles, Ordering::Relaxed);
-        self.sim_critical_cycles.fetch_add(critical_cycles, Ordering::Relaxed);
-        self.queue_wait_micros.fetch_add(queue_wait_micros, Ordering::Relaxed);
-        self.exec_micros.fetch_add(exec_micros, Ordering::Relaxed);
+        self.block_runs.fetch_add(s.block_runs, Ordering::Relaxed);
+        self.ops_executed.fetch_add(s.ops, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(s.cycles, Ordering::Relaxed);
+        self.sim_array_cycles.fetch_add(s.array_cycles, Ordering::Relaxed);
+        self.sim_critical_cycles.fetch_add(s.critical_cycles, Ordering::Relaxed);
+        self.queue_wait_micros.fetch_add(s.queue_wait_micros, Ordering::Relaxed);
+        self.exec_micros.fetch_add(s.exec_micros, Ordering::Relaxed);
+        self.host_bytes_in.fetch_add(s.host_bytes_in, Ordering::Relaxed);
+        self.host_bytes_out.fetch_add(s.host_bytes_out, Ordering::Relaxed);
+        self.resident_hits.fetch_add(s.resident_hits, Ordering::Relaxed);
+    }
+
+    /// Fold one submit-time queue-depth sample (one entry per worker) into
+    /// the per-worker gauges.
+    pub fn record_queue_depths(&self, depths: &[usize]) {
+        let mut gauges = self.queue_depths.lock().unwrap();
+        if gauges.len() < depths.len() {
+            gauges.resize(depths.len(), DepthGauge::default());
+        }
+        for (g, &d) in gauges.iter_mut().zip(depths) {
+            g.max = g.max.max(d as u64);
+            g.sum += d as u64;
+            g.samples += 1;
+        }
+    }
+
+    /// Snapshot of the per-worker queue-depth gauges.
+    pub fn queue_depth_gauges(&self) -> Vec<DepthGauge> {
+        self.queue_depths.lock().unwrap().clone()
     }
 
     /// One-line text snapshot.
     pub fn snapshot(&self) -> String {
+        let gauges = self.queue_depth_gauges();
+        let qmax: Vec<String> = gauges.iter().map(|g| g.max.to_string()).collect();
+        let qmean: Vec<String> = gauges.iter().map(|g| format!("{:.1}", g.mean())).collect();
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
-             queue_us={} exec_us={}",
+             queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
+             qdepth_max=[{}] qdepth_mean=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
@@ -60,6 +128,11 @@ impl Metrics {
             self.sim_critical_cycles.load(Ordering::Relaxed),
             self.queue_wait_micros.load(Ordering::Relaxed),
             self.exec_micros.load(Ordering::Relaxed),
+            self.host_bytes_in.load(Ordering::Relaxed),
+            self.host_bytes_out.load(Ordering::Relaxed),
+            self.resident_hits.load(Ordering::Relaxed),
+            qmax.join(","),
+            qmean.join(","),
         )
     }
 }
@@ -71,17 +144,61 @@ mod tests {
     #[test]
     fn record_accumulates() {
         let m = Metrics::new();
-        m.record_job(100, 2, 500, 400, 260, 30, 70);
-        m.record_job(50, 1, 250, 200, 250, 10, 20);
+        m.record_job(JobSample {
+            ops: 100,
+            block_runs: 2,
+            cycles: 500,
+            array_cycles: 400,
+            critical_cycles: 260,
+            queue_wait_micros: 30,
+            exec_micros: 70,
+            host_bytes_in: 1600,
+            host_bytes_out: 800,
+            resident_hits: 3,
+        });
+        m.record_job(JobSample {
+            ops: 50,
+            block_runs: 1,
+            cycles: 250,
+            array_cycles: 200,
+            critical_cycles: 250,
+            queue_wait_micros: 10,
+            exec_micros: 20,
+            host_bytes_in: 400,
+            host_bytes_out: 400,
+            resident_hits: 0,
+        });
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
         assert_eq!(m.ops_executed.load(Ordering::Relaxed), 150);
         assert_eq!(m.sim_critical_cycles.load(Ordering::Relaxed), 510);
         assert_eq!(m.queue_wait_micros.load(Ordering::Relaxed), 40);
         assert_eq!(m.exec_micros.load(Ordering::Relaxed), 90);
+        assert_eq!(m.host_bytes_in.load(Ordering::Relaxed), 2000);
+        assert_eq!(m.host_bytes_out.load(Ordering::Relaxed), 1200);
+        assert_eq!(m.resident_hits.load(Ordering::Relaxed), 3);
         assert!(m.snapshot().contains("jobs=2"));
         assert!(m.snapshot().contains("critical_cycles=510"));
         assert!(m.snapshot().contains("queue_us=40"));
         assert!(m.snapshot().contains("exec_us=90"));
+        assert!(m.snapshot().contains("host_bytes_in=2000"));
+        assert!(m.snapshot().contains("resident_hits=3"));
+    }
+
+    #[test]
+    fn queue_depth_gauges_track_max_and_mean() {
+        let m = Metrics::new();
+        m.record_queue_depths(&[0, 4]);
+        m.record_queue_depths(&[2, 2]);
+        let g = m.queue_depth_gauges();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].max, 2);
+        assert_eq!(g[1].max, 4);
+        assert!((g[0].mean() - 1.0).abs() < 1e-9);
+        assert!((g[1].mean() - 3.0).abs() < 1e-9);
+        assert_eq!(g[0].samples(), 2);
+        let snap = m.snapshot();
+        assert!(snap.contains("qdepth_max=[2,4]"), "{snap}");
+        assert!(snap.contains("qdepth_mean=[1.0,3.0]"), "{snap}");
     }
 }

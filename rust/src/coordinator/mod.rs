@@ -14,21 +14,28 @@
 //!   packed capacity, including K-axis splitting for dot products longer
 //!   than a column (partial sums reduced on the host side, as the external
 //!   logic would); every task carries the [`crate::exec::KernelKey`] of
-//!   the program that executes it;
+//!   the program that executes it, and operands are
+//!   [`mapper::Operand`]s — inline host vectors or slices of **resident
+//!   tensors** stored on the blocks;
 //! * [`farm`] — the persistent execution engine: long-lived worker threads
 //!   each bound to one [`crate::cram::CramBlock`], fed by per-worker task
-//!   queues with work stealing and a kernel-affinity router
-//!   ([`crate::exec::ResidencyMap`]), resolving tasks against a shared
-//!   [`crate::exec::KernelCache`] with program residency;
+//!   queues with work stealing and an affinity router where data affinity
+//!   ([`crate::exec::PlacementMap`]) outranks kernel affinity
+//!   ([`crate::exec::ResidencyMap`]), which outranks load; also the
+//!   tensor control plane (`alloc`/`write`/`read`/`free` with LRU
+//!   eviction back to host);
 //! * [`scheduler`] — submit/await job handles over the engine
 //!   ([`scheduler::JobHandle`]), host-side reduction, and aggregate
 //!   metrics (summed cycles for energy, wave-max critical path for time,
-//!   queue-wait vs execute host latency);
+//!   queue-wait vs execute host latency, host-bytes moved vs resident
+//!   hits);
 //! * [`server`] — a TCP/JSON batching front-end (PIM-as-a-service), the
 //!   shape of a vLLM-style router: requests are coalesced into
-//!   capacity-capped groups and multiple batches stay in flight while new
-//!   work is admitted;
-//! * [`metrics`] — counters shared by all of the above.
+//!   capacity-capped groups, multiple batches stay in flight while new
+//!   work is admitted, and tensors can be allocated, written, computed
+//!   against by handle, read back and freed over the wire;
+//! * [`metrics`] — counters shared by all of the above, including
+//!   per-worker queue-depth gauges sampled at submit.
 
 pub mod farm;
 pub mod job;
@@ -38,6 +45,6 @@ pub mod scheduler;
 pub mod server;
 
 pub use farm::{BatchHandle, BatchTiming, BlockFarm};
-pub use job::{Job, JobPayload, JobResult};
-pub use metrics::Metrics;
+pub use job::{Job, JobPayload, JobResult, MatSeg, OperandRef};
+pub use metrics::{JobSample, Metrics};
 pub use scheduler::{Coordinator, JobHandle};

@@ -9,13 +9,21 @@
 //! jobs in flight — the server's pipelined batcher admits new batches while
 //! earlier ones execute, and the NN layer overlaps one batch's second layer
 //! with the next batch's first. [`Coordinator::run`] is submit + wait.
+//!
+//! Coordinators built with [`Coordinator::with_storage`] also own the
+//! resident-tensor control plane: [`Coordinator::alloc_tensor`] stores a
+//! tensor on the farm, jobs reference it through
+//! [`super::job::OperandRef::Tensor`] or
+//! [`super::job::JobPayload::IntMatmulResident`], and per-job
+//! `host_bytes_in/out` / `resident_hits` on [`JobResult`] (aggregated in
+//! [`Metrics`]) make the saved data movement measurable.
 
 use super::farm::{aggregate_waves, BatchHandle, BlockFarm};
-use super::job::{Job, JobPayload, JobResult};
-use super::mapper::{self, BlockTask, Plan};
-use super::metrics::Metrics;
+use super::job::{EwOp, Job, JobPayload, JobResult, OperandRef};
+use super::mapper::{self, BlockTask, Plan, PlanEnv};
+use super::metrics::{JobSample, Metrics};
 use crate::bitline::Geometry;
-use crate::exec::{KernelCache, KernelKey, KernelOp};
+use crate::exec::{DataStats, KernelCache, KernelKey, KernelOp, PlacementMap, TensorHandle};
 use anyhow::Result;
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -32,7 +40,8 @@ pub struct Coordinator {
 enum ReduceStep {
     /// Scatter the chunk at its offset in the result vector.
     Scatter { offset: usize },
-    /// Accumulate int32 partial sums at the offset (split-K dots).
+    /// Accumulate int32 partial sums at the offset (split-K dots and
+    /// resident-matmul segments).
     Accumulate { offset: usize },
 }
 
@@ -45,7 +54,10 @@ fn reduce_steps(plan: &Plan) -> Vec<ReduceStep> {
                 // ew_offsets is task-ordered (dot/ew are never mixed in one plan)
                 ReduceStep::Scatter { offset: plan.ew_offsets[i] }
             }
-            BlockTask::IntDot { out_offset, .. } => ReduceStep::Accumulate { offset: *out_offset },
+            BlockTask::IntDot { out_offset, .. }
+            | BlockTask::MatmulResident { out_offset, .. } => {
+                ReduceStep::Accumulate { offset: *out_offset }
+            }
         })
         .collect()
 }
@@ -72,10 +84,17 @@ impl JobHandle {
     /// Block until the job completes; reduce and record metrics.
     pub fn wait(self) -> Result<JobResult> {
         let block_runs = self.batch.len();
+        let depths = self.batch.submit_depths().to_vec();
         let (outputs, timing) = self.batch.wait()?;
         let (total, critical) = aggregate_waves(&outputs, self.n_blocks);
         let mut values = vec![0i64; self.result_len];
+        let mut host_bytes_in = 0u64;
+        let mut host_bytes_out = 0u64;
+        let mut resident_hits = 0u64;
         for (out, step) in outputs.iter().zip(&self.steps) {
+            host_bytes_in += out.host_bytes_in;
+            host_bytes_out += out.host_bytes_out;
+            resident_hits += out.resident_hits;
             match step {
                 ReduceStep::Scatter { offset } => {
                     values[*offset..*offset + out.values.len()].copy_from_slice(&out.values);
@@ -87,15 +106,25 @@ impl JobHandle {
                 }
             }
         }
-        self.metrics.record_job(
-            self.op_count,
-            block_runs as u64,
-            total.cycles,
-            total.array_cycles,
-            critical,
-            timing.queue_wait.as_micros() as u64,
-            timing.exec.as_micros() as u64,
-        );
+        let queue_depth_max = depths.iter().copied().max().unwrap_or(0);
+        let queue_depth_mean = if depths.is_empty() {
+            0.0
+        } else {
+            depths.iter().sum::<usize>() as f64 / depths.len() as f64
+        };
+        self.metrics.record_queue_depths(&depths);
+        self.metrics.record_job(JobSample {
+            ops: self.op_count,
+            block_runs: block_runs as u64,
+            cycles: total.cycles,
+            array_cycles: total.array_cycles,
+            critical_cycles: critical,
+            queue_wait_micros: timing.queue_wait.as_micros() as u64,
+            exec_micros: timing.exec.as_micros() as u64,
+            host_bytes_in,
+            host_bytes_out,
+            resident_hits,
+        });
         Ok(JobResult {
             id: self.id,
             values,
@@ -104,6 +133,11 @@ impl JobHandle {
             block_runs,
             queue_wait: timing.queue_wait,
             exec_time: timing.exec,
+            host_bytes_in,
+            host_bytes_out,
+            resident_hits,
+            queue_depth_max,
+            queue_depth_mean,
         })
     }
 }
@@ -112,6 +146,16 @@ impl Coordinator {
     pub fn new(geometry: Geometry, n_blocks: usize) -> Self {
         Self {
             farm: BlockFarm::new(geometry, n_blocks),
+            metrics: Arc::new(Metrics::new()),
+        }
+    }
+
+    /// A coordinator whose blocks each reserve `storage_rows` rows for
+    /// resident tensors (see [`crate::cram::store`] for the row budget;
+    /// every compute kernel is planned below the reserve).
+    pub fn with_storage(geometry: Geometry, n_blocks: usize, storage_rows: usize) -> Self {
+        Self {
+            farm: BlockFarm::with_storage(geometry, n_blocks, storage_rows),
             metrics: Arc::new(Metrics::new()),
         }
     }
@@ -125,12 +169,78 @@ impl Coordinator {
         self.farm.kernel_cache()
     }
 
+    /// The farm's tensor placement map.
+    pub fn placement(&self) -> &Arc<PlacementMap> {
+        self.farm.placement()
+    }
+
+    /// Tensor data-movement counters (control plane + resolution hits).
+    pub fn data_stats(&self) -> DataStats {
+        self.farm.data_stats()
+    }
+
+    // ---- resident tensors (delegating to the farm) ------------------------
+
+    /// Store a tensor on one block; see [`BlockFarm::alloc_tensor`].
+    pub fn alloc_tensor(&self, values: &[i64], w: u32) -> Result<TensorHandle> {
+        self.farm.alloc_tensor(values, w)
+    }
+
+    /// Store a tensor on up to `copies` blocks; see
+    /// [`BlockFarm::alloc_tensor_replicated`].
+    pub fn alloc_tensor_replicated(
+        &self,
+        values: &[i64],
+        w: u32,
+        copies: usize,
+    ) -> Result<TensorHandle> {
+        self.farm.alloc_tensor_replicated(values, w, copies)
+    }
+
+    /// Overwrite a resident tensor's values on every replica.
+    pub fn write_tensor(&self, h: TensorHandle, values: &[i64]) -> Result<()> {
+        self.farm.write_tensor(h, values)
+    }
+
+    /// Read a resident tensor back to the host.
+    pub fn read_tensor(&self, h: TensorHandle) -> Result<Vec<i64>> {
+        self.farm.read_tensor(h)
+    }
+
+    /// Free a resident tensor.
+    pub fn free_tensor(&self, h: TensorHandle) -> Result<()> {
+        self.farm.free_tensor(h)
+    }
+
+    /// The planning environment jobs are decomposed under.
+    fn plan_env(&self) -> PlanEnv<'_> {
+        PlanEnv {
+            geom: self.farm.geometry(),
+            compute_rows: self.farm.placement().compute_rows(),
+            placement: Some(self.farm.placement().as_ref()),
+        }
+    }
+
+    /// Per-block elementwise capacity under this coordinator's reserve
+    /// (the server's coalesced-group cap).
+    pub fn ew_capacity(&self, op: EwOp, w: u32) -> usize {
+        mapper::ew_capacity_in(&self.plan_env(), op, w)
+    }
+
+    /// The K-segmentation a matmul of inner dimension `k` lowers to on
+    /// this farm (used to shape resident weight slabs).
+    pub fn matmul_segments(&self, w: u32, k: usize) -> Vec<(usize, usize)> {
+        mapper::matmul_segments(&self.plan_env(), w, k)
+    }
+
     /// Compile every kernel a job of `payload`'s shape will need, without
     /// running anything. Layers and servers call this at construction so
     /// the first real batch pays no assembly. Returns the number of
     /// distinct kernels.
     pub fn precompile(&self, payload: &JobPayload) -> usize {
-        let plan = mapper::plan(self.farm.geometry(), payload);
+        let Ok(plan) = mapper::plan(&self.plan_env(), payload) else {
+            return 0;
+        };
         let mut seen: HashSet<KernelKey> = HashSet::new();
         for task in &plan.tasks {
             if seen.insert(task.key()) {
@@ -158,23 +268,79 @@ impl Coordinator {
         n
     }
 
+    /// When both elementwise operands are tensors resident on disjoint
+    /// worker sets, no single block holds both — materialize the `b` side
+    /// to host values (at its honest host-traffic cost) so every task can
+    /// resolve locally.
+    fn normalize(&self, payload: JobPayload) -> JobPayload {
+        let JobPayload::IntElementwiseRef {
+            op,
+            w,
+            a: OperandRef::Tensor(ha),
+            b: OperandRef::Tensor(hb),
+        } = payload
+        else {
+            return payload;
+        };
+        let pm = self.farm.placement();
+        let a_homes = pm.homes(ha);
+        let b_homes = pm.homes(hb);
+        let disjoint = !a_homes.is_empty()
+            && !b_homes.is_empty()
+            && a_homes.iter().all(|wk| !b_homes.contains(wk));
+        if disjoint {
+            if let Ok(values) = self.farm.read_tensor(hb) {
+                return JobPayload::IntElementwiseRef {
+                    op,
+                    w,
+                    a: OperandRef::Tensor(ha),
+                    b: OperandRef::Values(values),
+                };
+            }
+        }
+        JobPayload::IntElementwiseRef {
+            op,
+            w,
+            a: OperandRef::Tensor(ha),
+            b: OperandRef::Tensor(hb),
+        }
+    }
+
     /// Plan a job and hand its tasks to the execution engine; returns an
     /// awaitable handle immediately (backpressure: blocks only when the
-    /// farm's bounded task queue is full).
+    /// farm's bounded task queue is full). Planning errors — unknown
+    /// tensor handles, width mismatches — surface at [`JobHandle::wait`].
     pub fn submit(&self, job: Job) -> JobHandle {
-        let plan = mapper::plan(self.farm.geometry(), &job.payload);
-        let steps = reduce_steps(&plan);
-        let result_len = plan.result_len;
-        let op_count = job.payload.op_count();
-        let batch = self.farm.submit(plan.tasks);
-        JobHandle {
-            id: job.id,
-            op_count,
-            result_len,
-            steps,
-            batch,
-            n_blocks: self.farm.len(),
-            metrics: self.metrics.clone(),
+        let payload = self.normalize(job.payload);
+        let op_count = payload.op_count();
+        match mapper::plan(&self.plan_env(), &payload) {
+            Ok(plan) => {
+                let steps = reduce_steps(&plan);
+                let result_len = plan.result_len;
+                // a tensor-tensor elementwise job's op count is not
+                // host-knowable before planning (payload reports 0); the
+                // plan's result length is the executed op count
+                let op_count = if op_count == 0 { result_len as u64 } else { op_count };
+                let batch = self.farm.submit(plan.tasks);
+                JobHandle {
+                    id: job.id,
+                    op_count,
+                    result_len,
+                    steps,
+                    batch,
+                    n_blocks: self.farm.len(),
+                    metrics: self.metrics.clone(),
+                }
+            }
+            Err(e) => JobHandle {
+                id: job.id,
+                op_count,
+                result_len: 0,
+                steps: Vec::new(),
+                batch: BatchHandle::failed(e),
+                n_blocks: self.farm.len(),
+                metrics: self.metrics.clone(),
+            },
         }
     }
 
@@ -228,6 +394,10 @@ mod tests {
             let expect = crate::util::sext(crate::util::mask(a[i] + b[i], 4) as i64, 4);
             assert_eq!(r.values[i], expect, "i={i}");
         }
+        // every operand and result byte crossed the host boundary
+        assert_eq!(r.host_bytes_in, 2 * 8 * n as u64);
+        assert_eq!(r.host_bytes_out, 8 * n as u64);
+        assert_eq!(r.resident_hits, 0);
     }
 
     #[test]
@@ -287,6 +457,7 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert!(snap.contains("jobs=3"), "{snap}");
         assert!(snap.contains("ops=150"), "{snap}");
+        assert!(snap.contains("qdepth_max="), "{snap}");
     }
 
     #[test]
@@ -435,5 +606,115 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert!(snap.contains("queue_us="), "{snap}");
         assert!(snap.contains("exec_us="), "{snap}");
+    }
+
+    #[test]
+    fn plan_errors_surface_at_wait_not_submit() {
+        let c = coord();
+        let handle = c.submit(Job {
+            id: 3,
+            payload: JobPayload::IntElementwiseRef {
+                op: EwOp::Add,
+                w: 8,
+                a: OperandRef::Tensor(TensorHandle::from_id(999)),
+                b: OperandRef::Values(vec![1, 2]),
+            },
+        });
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("unknown tensor"), "{err}");
+    }
+
+    #[test]
+    fn resident_elementwise_job_matches_inline() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 96);
+        let mut rng = Prng::new(77);
+        let a: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
+        let b: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
+        let h = c.alloc_tensor(&a, 8).unwrap();
+        let inline = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: a.clone(),
+                    b: b.clone(),
+                },
+            })
+            .unwrap();
+        let resident = c
+            .run(Job {
+                id: 1,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: OperandRef::Tensor(h),
+                    b: OperandRef::Values(b.clone()),
+                },
+            })
+            .unwrap();
+        assert_eq!(inline.values, resident.values, "resident path is bit-exact");
+        assert!(resident.resident_hits >= 1);
+        assert!(
+            resident.host_bytes_in < inline.host_bytes_in,
+            "resident: {} inline: {}",
+            resident.host_bytes_in,
+            inline.host_bytes_in
+        );
+        // the tensor still reads back unchanged after the compute
+        assert_eq!(c.read_tensor(h).unwrap(), a);
+    }
+
+    #[test]
+    fn tensor_tensor_job_resolves_in_place_and_counts_ops() {
+        // single worker: both tensors share a home, so neither side is
+        // materialized — the op count must come from the plan
+        let c = Coordinator::with_storage(Geometry::G512x40, 1, 64);
+        let a: Vec<i64> = (0..50).map(|i| i - 25).collect();
+        let b: Vec<i64> = (0..50).map(|i| 25 - i).collect();
+        let ha = c.alloc_tensor(&a, 8).unwrap();
+        let hb = c.alloc_tensor(&b, 8).unwrap();
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: OperandRef::Tensor(ha),
+                    b: OperandRef::Tensor(hb),
+                },
+            })
+            .unwrap();
+        assert!(r.values.iter().all(|&v| v == 0));
+        assert_eq!(r.resident_hits, 2, "both operands resolved in place");
+        assert_eq!(r.host_bytes_in, 0, "nothing crossed the host boundary in");
+        assert_eq!(
+            c.metrics.ops_executed.load(std::sync::atomic::Ordering::Relaxed),
+            50,
+            "tensor-tensor jobs still count their executed ops"
+        );
+    }
+
+    #[test]
+    fn disjoint_tensor_pair_is_materialized_not_failed() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 64);
+        let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let b: Vec<i64> = (0..40).map(|i| 20 - i).collect();
+        // two single-replica tensors land on different (most-free) workers
+        let ha = c.alloc_tensor(&a, 8).unwrap();
+        let hb = c.alloc_tensor(&b, 8).unwrap();
+        assert_ne!(c.placement().homes(ha), c.placement().homes(hb));
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: OperandRef::Tensor(ha),
+                    b: OperandRef::Tensor(hb),
+                },
+            })
+            .unwrap();
+        assert!(r.values.iter().all(|&v| v == 0));
     }
 }

@@ -19,14 +19,30 @@
 //!   <- {"id": 1, "ok": true, "values": [5,7,9]}
 //! ```
 //!
-//! Supported ops: `add`, `sub`, `mul` (integer widths 2..=16). Ids and
-//! values are carried as [`Json::Int`], so 64-bit integers cross the wire
-//! without the 2^53 precision loss of an f64 path; request ids outside
-//! 0..=i64::MAX are rejected at parse time rather than echoed corrupted.
+//! Compute ops: `add`, `sub`, `mul` (integer widths 2..=16). Either
+//! operand may instead reference a **resident tensor** by handle —
+//! `"a": {"handle": 7}` — computed against in place on the block storing
+//! it. The tensor control plane rides the same field:
+//!
+//! ```text
+//!   -> {"id": 2, "op": "alloc", "w": 8, "values": [1,2,3], "copies": 2}
+//!   <- {"id": 2, "ok": true, "handle": 7}
+//!   -> {"id": 3, "op": "write", "handle": 7, "values": [4,5,6]}
+//!   -> {"id": 4, "op": "read",  "handle": 7}
+//!   <- {"id": 4, "ok": true, "values": [4,5,6]}
+//!   -> {"id": 5, "op": "free",  "handle": 7}
+//!   -> {"id": 6, "op": "stats"}
+//!   <- {"id": 6, "ok": true, "stats": "jobs=... qdepth_max=[...] ..."}
+//! ```
+//!
+//! Ids and values are carried as [`Json::Int`], so 64-bit integers cross
+//! the wire without the 2^53 precision loss of an f64 path; request ids
+//! outside 0..=i64::MAX are rejected at parse time rather than echoed
+//! corrupted.
 
-use super::job::{EwOp, Job, JobPayload};
-use super::mapper;
+use super::job::{EwOp, Job, JobPayload, OperandRef};
 use super::scheduler::{Coordinator, JobHandle};
+use crate::exec::TensorHandle;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -40,14 +56,55 @@ use std::time::Duration;
 /// loop stops admitting new ones (backpressure toward the TCP clients).
 const MAX_INFLIGHT_BATCHES: usize = 4;
 
-/// One parsed client request.
+/// A compute-request operand: literal values or a resident-tensor handle.
 #[derive(Clone, Debug)]
-pub struct Request {
+pub enum WireOperand {
+    Values(Vec<i64>),
+    Handle(TensorHandle),
+}
+
+impl WireOperand {
+    fn to_ref(&self) -> OperandRef {
+        match self {
+            WireOperand::Values(v) => OperandRef::Values(v.clone()),
+            WireOperand::Handle(h) => OperandRef::Tensor(*h),
+        }
+    }
+}
+
+/// One parsed compute request.
+#[derive(Clone, Debug)]
+pub struct ComputeReq {
     pub id: u64,
     pub op: EwOp,
     pub w: u32,
-    pub a: Vec<i64>,
-    pub b: Vec<i64>,
+    pub a: WireOperand,
+    pub b: WireOperand,
+}
+
+/// One parsed client request: elementwise compute, or a tensor
+/// control-plane operation.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Compute(ComputeReq),
+    Alloc { id: u64, w: u32, values: Vec<i64>, copies: usize },
+    WriteTensor { id: u64, handle: TensorHandle, values: Vec<i64> },
+    ReadTensor { id: u64, handle: TensorHandle },
+    Free { id: u64, handle: TensorHandle },
+    Stats { id: u64 },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Compute(r) => r.id,
+            Request::Alloc { id, .. }
+            | Request::WriteTensor { id, .. }
+            | Request::ReadTensor { id, .. }
+            | Request::Free { id, .. }
+            | Request::Stats { id } => *id,
+        }
+    }
 }
 
 /// Best-effort extraction of a request id from a line that may otherwise
@@ -63,10 +120,49 @@ pub fn recover_request_id(line: &str) -> u64 {
     }
 }
 
+/// Exact-integer array field (fractional literals would silently truncate
+/// through an `as_i64` path and compute on altered data).
+fn int_array(v: &Json, key: &str) -> Result<Vec<i64>> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing array {key}"))?
+        .iter()
+        .map(|x| match x {
+            Json::Int(i) => Ok(*i),
+            _ => Err(anyhow!("non-integer in {key}")),
+        })
+        .collect()
+}
+
+/// Tensor-handle field (`"handle": N`).
+fn handle_field(v: &Json) -> Result<TensorHandle> {
+    match v.get("handle") {
+        Some(&Json::Int(i)) if i >= 1 => Ok(TensorHandle::from_id(i as u64)),
+        Some(_) => bail!("handle must be a positive integer"),
+        None => bail!("missing handle"),
+    }
+}
+
+/// A compute operand: an integer array or `{"handle": N}`.
+fn operand_field(v: &Json, key: &str, w: u32) -> Result<WireOperand> {
+    match v.get(key) {
+        Some(Json::Arr(_)) => {
+            let values = int_array(v, key)?;
+            crate::cram::store::check_int_range(&values, w)
+                .map_err(|e| anyhow!("operand {key}: {e}"))?;
+            Ok(WireOperand::Values(values))
+        }
+        Some(obj @ Json::Obj(_)) => Ok(WireOperand::Handle(handle_field(obj)?)),
+        _ => bail!("missing operand {key} (array or {{\"handle\": N}})"),
+    }
+}
+
 /// Parse one request line. Validation (op, width, operand range, and the
 /// `a`/`b` length match) happens here, per request — a malformed request
 /// gets its own JSON error instead of failing deep inside `cram::ops`
-/// where it would poison a whole coalesced batch.
+/// where it would poison a whole coalesced batch. Handle-referencing
+/// operands are validated against the placement map at plan time, again
+/// per request.
 pub fn parse_request(line: &str) -> Result<Request> {
     let v = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     // ids must be exact integers in 0..=i64::MAX: a fractional, negative
@@ -78,44 +174,54 @@ pub fn parse_request(line: &str) -> Result<Request> {
         Some(_) => bail!("id must be an integer in 0..={}", i64::MAX),
         None => bail!("missing id"),
     };
-    let op = match v.get("op").and_then(Json::as_str) {
-        Some("add") => EwOp::Add,
-        Some("sub") => EwOp::Sub,
-        Some("mul") => EwOp::Mul,
-        other => bail!("unsupported op {other:?}"),
-    };
+    let op_name = v.get("op").and_then(Json::as_str).unwrap_or("");
     let w = match v.get("w") {
         None => 8,
         // out-of-u32 widths become 0 and fail the range check below
         Some(&Json::Int(i)) => u32::try_from(i).unwrap_or(0),
         Some(_) => bail!("width must be an integer"),
     };
-    if !(2..=16).contains(&w) {
-        bail!("width {w} out of range 2..=16");
+    match op_name {
+        "add" | "sub" | "mul" => {
+            let op = match op_name {
+                "add" => EwOp::Add,
+                "sub" => EwOp::Sub,
+                _ => EwOp::Mul,
+            };
+            if !(2..=16).contains(&w) {
+                bail!("width {w} out of range 2..=16");
+            }
+            let a = operand_field(&v, "a", w)?;
+            let b = operand_field(&v, "b", w)?;
+            if let (WireOperand::Values(av), WireOperand::Values(bv)) = (&a, &b) {
+                if av.len() != bv.len() {
+                    bail!("length mismatch: a={} b={}", av.len(), bv.len());
+                }
+            }
+            Ok(Request::Compute(ComputeReq { id, op, w, a, b }))
+        }
+        "alloc" => {
+            if !(2..=16).contains(&w) {
+                bail!("width {w} out of range 2..=16");
+            }
+            let values = int_array(&v, "values")?;
+            let copies = match v.get("copies") {
+                None => 1,
+                Some(&Json::Int(i)) if i >= 1 => i as usize,
+                Some(_) => bail!("copies must be a positive integer"),
+            };
+            Ok(Request::Alloc { id, w, values, copies })
+        }
+        "write" => Ok(Request::WriteTensor {
+            id,
+            handle: handle_field(&v)?,
+            values: int_array(&v, "values")?,
+        }),
+        "read" => Ok(Request::ReadTensor { id, handle: handle_field(&v)? }),
+        "free" => Ok(Request::Free { id, handle: handle_field(&v)? }),
+        "stats" => Ok(Request::Stats { id }),
+        other => bail!("unsupported op {other:?}"),
     }
-    // operands must be exact integers: a fractional literal would be
-    // silently truncated by an as_i64 path and compute on altered data
-    let nums = |key: &str| -> Result<Vec<i64>> {
-        v.get(key)
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing array {key}"))?
-            .iter()
-            .map(|x| match x {
-                Json::Int(i) => Ok(*i),
-                _ => Err(anyhow!("non-integer in {key}")),
-            })
-            .collect()
-    };
-    let a = nums("a")?;
-    let b = nums("b")?;
-    if a.len() != b.len() {
-        bail!("length mismatch: a={} b={}", a.len(), b.len());
-    }
-    let lim = 1i64 << (w - 1);
-    if a.iter().chain(&b).any(|&x| x < -lim || x >= lim) {
-        bail!("operand out of range for int{w}");
-    }
-    Ok(Request { id, op, w, a, b })
 }
 
 /// Format a success response line. Ids and values round-trip as exact
@@ -131,6 +237,32 @@ pub fn format_response(id: u64, values: &[i64]) -> String {
     Json::Obj(obj).dump()
 }
 
+/// Format a bare-acknowledgement response (write/free).
+pub fn format_ok(id: u64) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Int(id as i64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    Json::Obj(obj).dump()
+}
+
+/// Format an alloc response carrying the new tensor handle.
+pub fn format_handle(id: u64, handle: TensorHandle) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Int(id as i64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    obj.insert("handle".to_string(), Json::Int(handle.id() as i64));
+    Json::Obj(obj).dump()
+}
+
+/// Format a stats response.
+pub fn format_stats(id: u64, stats: &str) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Int(id as i64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    obj.insert("stats".to_string(), Json::Str(stats.to_string()));
+    Json::Obj(obj).dump()
+}
+
 /// Format an error response line.
 pub fn format_error(id: u64, msg: &str) -> String {
     let mut obj = BTreeMap::new();
@@ -140,9 +272,22 @@ pub fn format_error(id: u64, msg: &str) -> String {
     Json::Obj(obj).dump()
 }
 
-/// Span of one request inside a coalesced job: (request index, offset into
-/// the job's flat operands, length).
-type Span = (usize, usize, usize);
+/// Where one request's results live inside a coalesced job.
+#[derive(Clone, Copy, Debug)]
+enum Span {
+    /// Requests coalesced into a shared job: a slice of its values.
+    Slice { req: usize, offset: usize, len: usize },
+    /// A request that is its own job (handle operands): all of its values.
+    Whole { req: usize },
+}
+
+impl Span {
+    fn req(&self) -> usize {
+        match self {
+            Span::Slice { req, .. } | Span::Whole { req } => *req,
+        }
+    }
+}
 
 /// A set of coalesced jobs submitted to the farm but not yet awaited.
 pub struct InFlightBatch {
@@ -162,14 +307,20 @@ impl InFlightBatch {
         for (handle, spans) in self.jobs {
             match handle.wait() {
                 Ok(res) => {
-                    for (i, off, len) in spans {
-                        out[i] = Some(Ok(res.values[off..off + len].to_vec()));
+                    for span in spans {
+                        let values = match span {
+                            Span::Slice { offset, len, .. } => {
+                                res.values[offset..offset + len].to_vec()
+                            }
+                            Span::Whole { .. } => res.values.clone(),
+                        };
+                        out[span.req()] = Some(Ok(values));
                     }
                 }
                 Err(e) => {
                     let msg = format!("{e}");
-                    for (i, _, _) in spans {
-                        out[i] = Some(Err(anyhow!("{msg}")));
+                    for span in spans {
+                        out[span.req()] = Some(Err(anyhow!("{msg}")));
                     }
                 }
             }
@@ -179,9 +330,11 @@ impl InFlightBatch {
 }
 
 /// The batching core, independent of the transport: drains the queue and
-/// coalesces same-(op, w) requests into farm jobs, splitting any group at
-/// a block-capacity multiple so one huge request stream cannot fold every
-/// waiting client into a single giant job.
+/// coalesces same-(op, w) value requests into farm jobs, splitting any
+/// group at a block-capacity multiple so one huge request stream cannot
+/// fold every waiting client into a single giant job. Requests with a
+/// tensor-handle operand cannot concatenate with others and are submitted
+/// as their own (data-affinity-routed) jobs.
 pub struct Batcher {
     coordinator: Arc<Coordinator>,
     /// Maximum coalesced elements per job; `None` computes one farm-wave
@@ -202,29 +355,49 @@ impl Batcher {
 
     /// Coalesce `reqs` into capacity-capped jobs and submit them all to
     /// the farm without waiting; returns the in-flight handle set.
-    pub fn submit_batch(&self, reqs: &[Request]) -> InFlightBatch {
-        // group by (op, w)
-        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
-        for (i, r) in reqs.iter().enumerate() {
-            groups.entry((r.op as u8, r.w)).or_default().push(i);
-        }
-        let geom = self.coordinator.farm().geometry();
+    pub fn submit_batch(&self, reqs: &[ComputeReq]) -> InFlightBatch {
         let n_blocks = self.coordinator.farm().len().max(1);
         let mut jobs: Vec<(JobHandle, Vec<Span>)> = Vec::new();
+        // group coalescible (value, value) requests by (op, w)
+        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            match (&r.a, &r.b) {
+                (WireOperand::Values(_), WireOperand::Values(_)) => {
+                    groups.entry((r.op as u8, r.w)).or_default().push(i);
+                }
+                _ => {
+                    // handle operand: its own job, routed to the data
+                    let handle = self.coordinator.submit(Job {
+                        id: 0,
+                        payload: JobPayload::IntElementwiseRef {
+                            op: r.op,
+                            w: r.w,
+                            a: r.a.to_ref(),
+                            b: r.b.to_ref(),
+                        },
+                    });
+                    jobs.push((handle, vec![Span::Whole { req: i }]));
+                }
+            }
+        }
         for ((_, w), idxs) in groups {
             let op = reqs[idxs[0]].op;
             let cap = self
                 .group_cap
-                .unwrap_or_else(|| mapper::ew_capacity(geom, op, w).max(1) * n_blocks);
+                .unwrap_or_else(|| self.coordinator.ew_capacity(op, w).max(1) * n_blocks);
             let mut a: Vec<i64> = Vec::new();
             let mut b: Vec<i64> = Vec::new();
             let mut spans: Vec<Span> = Vec::new();
             for &i in &idxs {
+                let (WireOperand::Values(ra), WireOperand::Values(rb)) = (&reqs[i].a, &reqs[i].b)
+                else {
+                    unreachable!("grouped requests are value-value");
+                };
                 // split the group before it exceeds the cap (a single
                 // oversized request still becomes its own job — the mapper
                 // chunks it across blocks — but it no longer convoys the
                 // other waiting clients)
-                if !spans.is_empty() && a.len() + reqs[i].a.len() > cap {
+                if !spans.is_empty() && a.len() + ra.len() > cap {
                     jobs.push(self.submit_group(
                         op,
                         w,
@@ -233,9 +406,9 @@ impl Batcher {
                         std::mem::take(&mut spans),
                     ));
                 }
-                spans.push((i, a.len(), reqs[i].a.len()));
-                a.extend_from_slice(&reqs[i].a);
-                b.extend_from_slice(&reqs[i].b);
+                spans.push(Span::Slice { req: i, offset: a.len(), len: ra.len() });
+                a.extend_from_slice(ra);
+                b.extend_from_slice(rb);
             }
             if !spans.is_empty() {
                 jobs.push(self.submit_group(op, w, a, b, spans));
@@ -261,19 +434,54 @@ impl Batcher {
 
     /// Execute a batch of requests with coalescing; returns per-request
     /// results in input order (submit + wait; the serialized path).
-    pub fn run_batch(&self, reqs: &[Request]) -> Vec<Result<Vec<i64>>> {
+    pub fn run_batch(&self, reqs: &[ComputeReq]) -> Vec<Result<Vec<i64>>> {
         self.submit_batch(reqs).wait()
     }
 }
 
+/// Serve one tensor control-plane request against the coordinator. The
+/// batching loop dispatches these to a short-lived side thread: they are
+/// rare but may carry full tensor payloads (alloc/write/read) and take
+/// the farm's tensor lock, which must not stall compute admission.
+fn handle_control(coordinator: &Coordinator, req: &Request) -> String {
+    let id = req.id();
+    let outcome = match req {
+        Request::Alloc { w, values, copies, .. } => coordinator
+            .alloc_tensor_replicated(values, *w, *copies)
+            .map(|h| format_handle(id, h)),
+        Request::WriteTensor { handle, values, .. } => {
+            coordinator.write_tensor(*handle, values).map(|()| format_ok(id))
+        }
+        Request::ReadTensor { handle, .. } => {
+            coordinator.read_tensor(*handle).map(|values| format_response(id, &values))
+        }
+        Request::Free { handle, .. } => {
+            coordinator.free_tensor(*handle).map(|()| format_ok(id))
+        }
+        Request::Stats { .. } => {
+            let stats = format!(
+                "{} | data: {:?} | affinity: {:?}",
+                coordinator.metrics.snapshot(),
+                coordinator.data_stats(),
+                coordinator.farm().affinity_stats(),
+            );
+            Ok(format_stats(id, &stats))
+        }
+        Request::Compute(_) => Err(anyhow!("compute request on the control path")),
+    };
+    outcome.unwrap_or_else(|e| format_error(id, &format!("{e}")))
+}
+
 enum Work {
-    Req(Request, Sender<String>),
+    Req(ComputeReq, Sender<String>),
+    Ctrl(Request, Sender<String>),
 }
 
 /// The TCP server: one reader thread per connection feeding a central
 /// batching loop that keeps up to [`MAX_INFLIGHT_BATCHES`] coalesced
-/// batches executing while it admits new work. `max_batch_wait` bounds
-/// added latency.
+/// batches executing while it admits new work; tensor control requests
+/// are answered inline by the same loop. `max_batch_wait` bounds added
+/// latency.
 pub struct PimServer {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
@@ -295,6 +503,7 @@ impl PimServer {
         let sd = shutdown.clone();
         let handle = std::thread::spawn(move || {
             let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
+            let ctrl_coord = coordinator.clone();
             let batcher = Batcher::new(coordinator);
             // bounded pipeline: the batching loop submits, the completer
             // awaits + replies; `send` blocks once MAX_INFLIGHT_BATCHES
@@ -330,12 +539,23 @@ impl PimServer {
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
                     Err(_) => break,
                 }
-                // drain the queue into one batch
-                let mut pending: Vec<(Request, Sender<String>)> = Vec::new();
+                // drain the queue into one batch; control requests are
+                // answered as they arrive
+                let mut pending: Vec<(ComputeReq, Sender<String>)> = Vec::new();
                 let deadline = std::time::Instant::now() + max_batch_wait;
                 while std::time::Instant::now() < deadline {
                     match rx.recv_timeout(Duration::from_millis(1)) {
                         Ok(Work::Req(r, reply)) => pending.push((r, reply)),
+                        Ok(Work::Ctrl(req, reply)) => {
+                            // off the batching loop: an alloc/write/read
+                            // carries a full tensor payload and takes the
+                            // farm's tensor lock — running it inline would
+                            // head-of-line-block compute admission
+                            let coord = ctrl_coord.clone();
+                            std::thread::spawn(move || {
+                                let _ = reply.send(handle_control(&coord, &req));
+                            });
+                        }
                         Err(_) => {
                             if !pending.is_empty() {
                                 break;
@@ -348,7 +568,7 @@ impl PimServer {
                 }
                 // submit and hand off; earlier batches are still executing
                 // (split replies out by move — no deep copy of operands)
-                let mut reqs: Vec<Request> = Vec::with_capacity(pending.len());
+                let mut reqs: Vec<ComputeReq> = Vec::with_capacity(pending.len());
                 let mut replies: Vec<(u64, Sender<String>)> = Vec::with_capacity(pending.len());
                 for (r, s) in pending {
                     replies.push((r.id, s));
@@ -391,12 +611,20 @@ fn handle_conn(stream: TcpStream, tx: Sender<Work>) -> Result<()> {
         }
         let (reply_tx, reply_rx) = channel();
         match parse_request(trimmed) {
-            Ok(req) => {
+            Ok(Request::Compute(req)) => {
                 tx.send(Work::Req(req, reply_tx))
                     .map_err(|_| anyhow!("server shutting down"))?;
                 let resp = reply_rx
                     .recv_timeout(Duration::from_secs(30))
                     .map_err(|_| anyhow!("batch timeout"))?;
+                writeln!(writer, "{resp}")?;
+            }
+            Ok(ctrl) => {
+                tx.send(Work::Ctrl(ctrl, reply_tx))
+                    .map_err(|_| anyhow!("server shutting down"))?;
+                let resp = reply_rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| anyhow!("control timeout"))?;
                 writeln!(writer, "{resp}")?;
             }
             Err(e) => {
@@ -412,13 +640,61 @@ mod tests {
     use super::*;
     use crate::bitline::Geometry;
 
+    fn vals(v: Vec<i64>) -> WireOperand {
+        WireOperand::Values(v)
+    }
+
     #[test]
     fn parse_request_roundtrip() {
         let r = parse_request(r#"{"id": 3, "op": "mul", "w": 4, "a": [1, -2], "b": [3, 4]}"#)
             .unwrap();
+        let Request::Compute(r) = r else { panic!("not a compute request") };
         assert_eq!(r.id, 3);
         assert_eq!(r.op, EwOp::Mul);
-        assert_eq!(r.a, vec![1, -2]);
+        match r.a {
+            WireOperand::Values(a) => assert_eq!(a, vec![1, -2]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_handle_operand_and_control_requests() {
+        let r = parse_request(r#"{"id": 1, "op": "add", "w": 8, "a": {"handle": 7}, "b": [1]}"#)
+            .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        match r.a {
+            WireOperand::Handle(h) => assert_eq!(h.id(), 7),
+            other => panic!("{other:?}"),
+        }
+        let r = parse_request(r#"{"id": 2, "op": "alloc", "w": 4, "values": [1, -2], "copies": 3}"#)
+            .unwrap();
+        match r {
+            Request::Alloc { id, w, values, copies } => {
+                assert_eq!((id, w, copies), (2, 4, 3));
+                assert_eq!(values, vec![1, -2]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"id": 3, "op": "write", "handle": 5, "values": [9]}"#).unwrap(),
+            Request::WriteTensor { .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"id": 4, "op": "read", "handle": 5}"#).unwrap(),
+            Request::ReadTensor { .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"id": 5, "op": "free", "handle": 5}"#).unwrap(),
+            Request::Free { .. }
+        ));
+        assert!(matches!(
+            parse_request(r#"{"id": 6, "op": "stats"}"#).unwrap(),
+            Request::Stats { id: 6 }
+        ));
+        // malformed control requests
+        assert!(parse_request(r#"{"id": 7, "op": "read"}"#).is_err());
+        assert!(parse_request(r#"{"id": 8, "op": "free", "handle": 0}"#).is_err());
+        assert!(parse_request(r#"{"id": 9, "op": "alloc", "w": 99, "values": [1]}"#).is_err());
     }
 
     #[test]
@@ -464,9 +740,9 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
         let batcher = Batcher::new(coord.clone());
         let reqs = vec![
-            Request { id: 1, op: EwOp::Add, w: 8, a: vec![1, 2], b: vec![10, 20] },
-            Request { id: 2, op: EwOp::Mul, w: 8, a: vec![3], b: vec![5] },
-            Request { id: 3, op: EwOp::Add, w: 8, a: vec![7], b: vec![-7] },
+            ComputeReq { id: 1, op: EwOp::Add, w: 8, a: vals(vec![1, 2]), b: vals(vec![10, 20]) },
+            ComputeReq { id: 2, op: EwOp::Mul, w: 8, a: vals(vec![3]), b: vals(vec![5]) },
+            ComputeReq { id: 3, op: EwOp::Add, w: 8, a: vals(vec![7]), b: vals(vec![-7]) },
         ];
         let out = batcher.run_batch(&reqs);
         assert_eq!(out[0].as_ref().unwrap(), &vec![11, 22]);
@@ -481,22 +757,22 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
         // cap of 200 elements: 4 x 100-element adds -> 2 jobs of 2 requests
         let batcher = Batcher::with_group_cap(coord.clone(), 200);
-        let reqs: Vec<Request> = (0..4)
-            .map(|i| Request {
+        let reqs: Vec<ComputeReq> = (0..4)
+            .map(|i| ComputeReq {
                 id: i,
                 op: EwOp::Add,
                 w: 8,
-                a: vec![i as i64; 100],
-                b: vec![1; 100],
+                a: vals(vec![i as i64; 100]),
+                b: vals(vec![1; 100]),
             })
             .collect();
         let inflight = batcher.submit_batch(&reqs);
         assert_eq!(inflight.job_count(), 2, "group must split at the cap");
         let out = inflight.wait();
         for (i, r) in out.iter().enumerate() {
-            let vals = r.as_ref().unwrap();
-            assert_eq!(vals.len(), 100);
-            assert!(vals.iter().all(|&v| v == i as i64 + 1), "req {i}");
+            let values = r.as_ref().unwrap();
+            assert_eq!(values.len(), 100);
+            assert!(values.iter().all(|&v| v == i as i64 + 1), "req {i}");
         }
         assert!(coord.metrics.snapshot().contains("jobs=2"));
     }
@@ -506,14 +782,54 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
         let batcher = Batcher::with_group_cap(coord.clone(), 50);
         let reqs = vec![
-            Request { id: 1, op: EwOp::Add, w: 8, a: vec![1; 500], b: vec![1; 500] },
-            Request { id: 2, op: EwOp::Add, w: 8, a: vec![2; 10], b: vec![2; 10] },
+            ComputeReq { id: 1, op: EwOp::Add, w: 8, a: vals(vec![1; 500]), b: vals(vec![1; 500]) },
+            ComputeReq { id: 2, op: EwOp::Add, w: 8, a: vals(vec![2; 10]), b: vals(vec![2; 10]) },
         ];
         let inflight = batcher.submit_batch(&reqs);
         assert_eq!(inflight.job_count(), 2, "giant request gets its own job");
         let out = inflight.wait();
         assert!(out[0].as_ref().unwrap().iter().all(|&v| v == 2));
         assert!(out[1].as_ref().unwrap().iter().all(|&v| v == 4));
+    }
+
+    #[test]
+    fn handle_requests_ride_their_own_jobs() {
+        let coord = Arc::new(Coordinator::with_storage(Geometry::G512x40, 2, 96));
+        let stored: Vec<i64> = (0..50).map(|i| i - 25).collect();
+        let h = coord.alloc_tensor(&stored, 8).unwrap();
+        let batcher = Batcher::new(coord.clone());
+        let reqs = vec![
+            ComputeReq {
+                id: 1,
+                op: EwOp::Add,
+                w: 8,
+                a: WireOperand::Handle(h),
+                b: vals(vec![1; 50]),
+            },
+            ComputeReq { id: 2, op: EwOp::Add, w: 8, a: vals(vec![5]), b: vals(vec![6]) },
+        ];
+        let inflight = batcher.submit_batch(&reqs);
+        assert_eq!(inflight.job_count(), 2, "handle request cannot coalesce");
+        let out = inflight.wait();
+        let first = out[0].as_ref().unwrap();
+        for (i, v) in first.iter().enumerate() {
+            assert_eq!(*v, stored[i] + 1, "i={i}");
+        }
+        assert_eq!(out[1].as_ref().unwrap(), &vec![11]);
+        // a bad handle fails only its own request
+        let reqs = vec![
+            ComputeReq {
+                id: 3,
+                op: EwOp::Add,
+                w: 8,
+                a: WireOperand::Handle(TensorHandle::from_id(12345)),
+                b: vals(vec![1; 3]),
+            },
+            ComputeReq { id: 4, op: EwOp::Add, w: 8, a: vals(vec![2]), b: vals(vec![2]) },
+        ];
+        let out = batcher.run_batch(&reqs);
+        assert!(out[0].is_err());
+        assert_eq!(out[1].as_ref().unwrap(), &vec![4]);
     }
 
     #[test]
@@ -533,6 +849,63 @@ mod tests {
             v.get("values").unwrap().as_arr().unwrap().iter().map(|x| x.as_i64().unwrap()).collect::<Vec<_>>(),
             vec![6, 7]
         );
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_tensor_lifecycle_end_to_end() {
+        let coord = Arc::new(Coordinator::with_storage(Geometry::G512x40, 2, 96));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| -> Json {
+            writeln!(conn, "{line}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap()
+        };
+        // alloc -> handle
+        let v = ask(r#"{"id": 1, "op": "alloc", "w": 8, "values": [10, 20, 30]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let h = v.get("handle").and_then(Json::as_i64).unwrap();
+        assert!(h >= 1);
+        // compute against the handle
+        let v = ask(&format!(
+            r#"{{"id": 2, "op": "add", "w": 8, "a": {{"handle": {h}}}, "b": [1, 1, 1]}}"#
+        ));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![11, 21, 31]);
+        // overwrite and read back
+        let v = ask(&format!(r#"{{"id": 3, "op": "write", "handle": {h}, "values": [7, 8, 9]}}"#));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let v = ask(&format!(r#"{{"id": 4, "op": "read", "handle": {h}}}"#));
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![7, 8, 9]);
+        // stats reports the data plane
+        let v = ask(r#"{"id": 5, "op": "stats"}"#);
+        let stats = v.get("stats").and_then(Json::as_str).unwrap();
+        assert!(stats.contains("resident_hits"), "{stats}");
+        // free, then the handle is gone
+        let v = ask(&format!(r#"{{"id": 6, "op": "free", "handle": {h}}}"#));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let v = ask(&format!(r#"{{"id": 7, "op": "read", "handle": {h}}}"#));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v:?}");
         server.stop();
     }
 

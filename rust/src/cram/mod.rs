@@ -21,6 +21,7 @@
 //! array; `done` is asserted when the end instruction (`Halt`) retires.
 
 pub mod ops;
+pub mod store;
 
 use crate::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use crate::ctrl::{Controller, CycleStats, InstrMem};
@@ -242,16 +243,21 @@ impl CramBlock {
     }
 
     /// The `reset` input port: abort any in-flight computation and return
-    /// to storage mode. The instruction memory is configuration state, so
-    /// program residency and the load count survive; array contents are
-    /// whatever the aborted program left behind — callers re-stage
-    /// operands before the next run (as every `cram::ops` path does). The
-    /// farm's persistent workers use this to recover a block whose run
-    /// failed or panicked mid-program (`running` would otherwise stay
-    /// high and wedge the block in compute mode forever).
+    /// to storage mode. The instruction memory's *words* are configuration
+    /// state, so they and the load count survive — but the resident-kernel
+    /// marker is cleared: a block recovered from a failed or panicked run
+    /// must never falsely report residency, so the next
+    /// [`Self::ensure_kernel`] reloads instead of trusting pre-failure
+    /// bookkeeping. Array contents are whatever the aborted program left
+    /// behind — callers re-stage operands before the next run (as every
+    /// `cram::ops` path does). The farm's persistent workers use this to
+    /// recover a block whose run failed or panicked mid-program (`running`
+    /// would otherwise stay high and wedge the block in compute mode
+    /// forever).
     pub fn reset(&mut self) {
         self.ctrl.reset();
         self.periph.reset();
+        self.imem.clear_residency();
         self.running = false;
         self.mode = Mode::Storage;
     }
@@ -324,6 +330,27 @@ mod tests {
         b.set_mode(Mode::Storage).unwrap();
         b.write(0, &LaneVec::zeros(40)).unwrap();
         assert_eq!(b.program_loads(), loads, "reset preserves the load count");
+    }
+
+    #[test]
+    fn reset_clears_resident_kernel_marker() {
+        use crate::exec::{CompiledKernel, KernelKey, KernelOp};
+        let geom = Geometry::G512x40;
+        let mut b = CramBlock::new(geom);
+        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        assert!(b.ensure_kernel(&kernel).unwrap());
+        assert!(!b.ensure_kernel(&kernel).unwrap(), "resident before reset");
+        let loads = b.program_loads();
+        // simulate the farm's panic-recovery path mid-run
+        b.set_mode(Mode::Compute).unwrap();
+        b.start().unwrap();
+        b.tick().unwrap();
+        b.reset();
+        assert!(
+            b.ensure_kernel(&kernel).unwrap(),
+            "a recovered block must not falsely report residency"
+        );
+        assert_eq!(b.program_loads(), loads + 1);
     }
 
     #[test]

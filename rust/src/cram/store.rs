@@ -1,0 +1,243 @@
+//! Per-block storage-mode allocation: row regions of a Compute RAM block
+//! reserved for resident tensors.
+//!
+//! The paper's blocks are *adaptable*: the same array rows can hold
+//! application data (storage mode) or operands mid-computation (compute
+//! mode). This module manages the storage side of that split for one block:
+//! a [`BlockStore`] hands out disjoint row regions inside the block's
+//! **storage reserve** — a band of rows the mapper keeps every compute
+//! kernel out of — so tensors written once can survive any number of
+//! compute runs on the same block.
+//!
+//! Row budget of a reserved block (bottom to top):
+//!
+//! ```text
+//!   0 .. compute_rows           kernel operand/result layouts (mapper-capped)
+//!   compute_rows .. rows - 32   storage reserve (this allocator)
+//!   rows - 32 .. rows           bf16 scratch workspace (ucode::bf16)
+//! ```
+//!
+//! The 32-row guard at the top keeps the bf16 schedules' fixed scratch
+//! workspace ([`crate::ucode::bf16::SCRATCH_ROWS`]) from ever overlapping
+//! stored tensors. Which tensor lives in which region — and the LRU
+//! bookkeeping that decides eviction — is the job of
+//! [`crate::exec::PlacementMap`]; this type only does the row geometry.
+//!
+//! Resident tensors use the same transposed layout as staged operands
+//! (element `e` in column `e % cols`, slot `e / cols`, `w` rows per slot),
+//! via the [`write_tensor_rows`] / [`read_tensor_rows`] helpers.
+
+use crate::bitline::{transpose, BitlineArray, Geometry};
+use anyhow::{ensure, Result};
+
+/// Rows per column one tensor of `len` `w`-bit values occupies (see module
+/// docs for the layout).
+pub fn tensor_rows(geom: Geometry, w: u32, len: usize) -> usize {
+    len.div_ceil(geom.cols()) * w as usize
+}
+
+/// Check every value fits a signed `w`-bit integer — the payload
+/// validation shared by the farm's tensor control plane and the server's
+/// wire layer, so the width semantics can never diverge between them.
+pub fn check_int_range(values: &[i64], w: u32) -> Result<()> {
+    let lim = 1i64 << (w - 1);
+    ensure!(
+        values.iter().all(|&v| (-lim..lim).contains(&v)),
+        "value out of range for int{w}"
+    );
+    Ok(())
+}
+
+/// Write a tensor's values into its region (transposed, stride `w`).
+pub fn write_tensor_rows(arr: &mut BitlineArray, values: &[i64], w: u32, base: usize) {
+    transpose::store_ints(arr, values, w, base, w as usize);
+}
+
+/// Read a whole tensor back from its region.
+pub fn read_tensor_rows(arr: &BitlineArray, len: usize, w: u32, base: usize) -> Vec<i64> {
+    transpose::load_ints(arr, len, w, base, w as usize)
+}
+
+/// Read elements `offset .. offset + len` of a tensor without walking the
+/// slots below the slice's first row.
+pub fn read_tensor_slice(
+    arr: &BitlineArray,
+    w: u32,
+    base: usize,
+    offset: usize,
+    len: usize,
+) -> Vec<i64> {
+    let cols = arr.cols();
+    let slot0 = offset / cols;
+    let skip = offset - slot0 * cols;
+    let row0 = base + slot0 * w as usize;
+    let mut vals = transpose::load_ints(arr, skip + len, w, row0, w as usize);
+    vals.drain(..skip);
+    vals
+}
+
+/// An allocated row region inside a block's storage reserve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    /// First row of the region.
+    pub base: usize,
+    /// Rows the region spans.
+    pub rows: usize,
+}
+
+impl Region {
+    /// One past the last row.
+    pub fn end(&self) -> usize {
+        self.base + self.rows
+    }
+}
+
+/// First-fit row allocator over one block's storage reserve
+/// `[base, limit)`. Regions are identified by the owning tensor's handle
+/// id; the invariants (every region inside the reserve, no two regions
+/// overlapping) are property-tested in `tests/proptest_residency.rs`.
+#[derive(Clone, Debug)]
+pub struct BlockStore {
+    base: usize,
+    limit: usize,
+    /// `(handle id, region)`, sorted by `region.base`.
+    regions: Vec<(u64, Region)>,
+}
+
+impl BlockStore {
+    /// An allocator over rows `[base, limit)`.
+    pub fn new(base: usize, limit: usize) -> BlockStore {
+        assert!(base <= limit, "inverted storage reserve {base}..{limit}");
+        BlockStore { base, limit, regions: Vec::new() }
+    }
+
+    /// Total rows of the reserve.
+    pub fn capacity_rows(&self) -> usize {
+        self.limit - self.base
+    }
+
+    /// Rows currently allocated.
+    pub fn used_rows(&self) -> usize {
+        self.regions.iter().map(|(_, r)| r.rows).sum()
+    }
+
+    /// Rows currently free (not necessarily contiguous).
+    pub fn free_rows(&self) -> usize {
+        self.capacity_rows() - self.used_rows()
+    }
+
+    /// Number of allocated regions.
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    /// Ids of the tensors with a region here.
+    pub fn ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.regions.iter().map(|(id, _)| *id)
+    }
+
+    /// The region held by tensor `id`, if any.
+    pub fn region(&self, id: u64) -> Option<Region> {
+        self.regions.iter().find(|(i, _)| *i == id).map(|(_, r)| *r)
+    }
+
+    /// Allocate `rows` for tensor `id`, first-fit. Returns `None` when no
+    /// contiguous gap is large enough (the caller evicts and retries).
+    /// Allocating an id that already holds a region returns that region.
+    pub fn alloc(&mut self, id: u64, rows: usize) -> Option<Region> {
+        if let Some(existing) = self.region(id) {
+            return Some(existing);
+        }
+        if rows == 0 || rows > self.capacity_rows() {
+            return None;
+        }
+        let mut cursor = self.base;
+        let mut insert_at = self.regions.len();
+        for (i, (_, r)) in self.regions.iter().enumerate() {
+            if r.base - cursor >= rows {
+                insert_at = i;
+                break;
+            }
+            cursor = r.end();
+        }
+        if insert_at == self.regions.len() && self.limit - cursor < rows {
+            return None;
+        }
+        let region = Region { base: cursor, rows };
+        self.regions.insert(insert_at, (id, region));
+        Some(region)
+    }
+
+    /// Free tensor `id`'s region; returns it (or `None` if absent).
+    pub fn free(&mut self, id: u64) -> Option<Region> {
+        let i = self.regions.iter().position(|(r_id, _)| *r_id == id)?;
+        Some(self.regions.remove(i).1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_rows_rounds_up_to_column_slots() {
+        let g = Geometry::G512x40;
+        assert_eq!(tensor_rows(g, 8, 40), 8); // one full slot
+        assert_eq!(tensor_rows(g, 8, 41), 16); // spills into a second slot
+        assert_eq!(tensor_rows(g, 4, 1), 4);
+    }
+
+    #[test]
+    fn int_range_check_bounds() {
+        assert!(check_int_range(&[-128, 127], 8).is_ok());
+        assert!(check_int_range(&[128], 8).is_err());
+        assert!(check_int_range(&[-129], 8).is_err());
+        assert!(check_int_range(&[1 << 30, -(1 << 30)], 32).is_ok());
+        assert!(check_int_range(&[], 2).is_ok());
+    }
+
+    #[test]
+    fn first_fit_packs_and_reuses_gaps() {
+        let mut s = BlockStore::new(100, 200);
+        let a = s.alloc(1, 40).unwrap();
+        let b = s.alloc(2, 40).unwrap();
+        assert_eq!(a, Region { base: 100, rows: 40 });
+        assert_eq!(b, Region { base: 140, rows: 40 });
+        assert!(s.alloc(3, 40).is_none(), "only 20 rows left");
+        let c = s.alloc(3, 20).unwrap();
+        assert_eq!(c.base, 180);
+        assert_eq!(s.free_rows(), 0);
+        // free the middle region; a same-size alloc lands in the gap
+        assert_eq!(s.free(2), Some(b));
+        let d = s.alloc(4, 30).unwrap();
+        assert_eq!(d.base, 140);
+        assert_eq!(s.used_rows(), 90);
+    }
+
+    #[test]
+    fn alloc_is_idempotent_per_id_and_zero_rows_rejected() {
+        let mut s = BlockStore::new(0, 64);
+        let r = s.alloc(7, 16).unwrap();
+        assert_eq!(s.alloc(7, 16), Some(r), "re-alloc returns the region");
+        assert_eq!(s.len(), 1);
+        assert!(s.alloc(8, 0).is_none());
+        assert!(s.alloc(9, 65).is_none());
+        assert!(s.free(99).is_none());
+    }
+
+    #[test]
+    fn slice_reads_match_full_reads() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let vals: Vec<i64> = (0..100).map(|i| (i % 31) - 15).collect();
+        write_tensor_rows(&mut arr, &vals, 6, 200);
+        assert_eq!(read_tensor_rows(&arr, 100, 6, 200), vals);
+        assert_eq!(read_tensor_slice(&arr, 6, 200, 0, 100), vals);
+        assert_eq!(read_tensor_slice(&arr, 6, 200, 37, 20), vals[37..57].to_vec());
+        assert_eq!(read_tensor_slice(&arr, 6, 200, 80, 20), vals[80..100].to_vec());
+        assert_eq!(read_tensor_slice(&arr, 6, 200, 99, 1), vals[99..].to_vec());
+    }
+}

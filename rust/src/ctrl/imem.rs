@@ -99,6 +99,15 @@ impl InstrMem {
         self.resident = Some(id);
     }
 
+    /// Forget the resident-kernel marker without touching the words.
+    /// Called by [`crate::cram::CramBlock::reset`]: a block recovered from
+    /// an aborted run must be conservative about what its instruction
+    /// memory holds, so the next `ensure_kernel` reloads instead of
+    /// trusting a marker set before the failure.
+    pub fn clear_residency(&mut self) {
+        self.resident = None;
+    }
+
     /// Storage-mode read (application uses the imem as a small BRAM).
     pub fn read_word(&self, addr: usize) -> u16 {
         self.words[addr]
@@ -185,6 +194,10 @@ mod tests {
         m.mark_resident(9);
         m.load_config(&[Instr::Halt]).unwrap();
         assert_eq!(m.resident_kernel(), None, "config load invalidates");
+        m.mark_resident(11);
+        m.clear_residency();
+        assert_eq!(m.resident_kernel(), None, "explicit clear invalidates");
+        assert_eq!(m.len(), 1, "clear touches only the marker");
     }
 
     #[test]

@@ -217,6 +217,18 @@ impl CompiledKernel {
             KernelLayout::Dot(l) => l.cols,
         }
     }
+
+    /// Highest row (exclusive) the kernel's operand/result layout touches,
+    /// *excluding* the fixed bf16 scratch workspace at the very top of the
+    /// array. On farms with a resident-tensor storage reserve, every
+    /// kernel's body must stay below the reserve; the worker enforces
+    /// `body_rows() <= PlacementMap::compute_rows()`.
+    pub fn body_rows(&self) -> usize {
+        match self.layout {
+            KernelLayout::Vec(l) => l.ops_per_col * l.tuple_bits,
+            KernelLayout::Dot(l) => l.acc_row + l.acc_w as usize,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -268,5 +280,16 @@ mod tests {
     fn mac_kernel_has_two_phases() {
         let c = CompiledKernel::compile(KernelKey::bf16_mac(Geometry::G512x40));
         assert_eq!(c.phases.len(), 2);
+    }
+
+    #[test]
+    fn body_rows_tracks_sized_layouts() {
+        let g = Geometry::G512x40;
+        let sized = CompiledKernel::compile(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, g));
+        assert_eq!(sized.body_rows(), 2 * 24, "2 tuples x 24 rows");
+        let full = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 8, g));
+        assert_eq!(full.body_rows(), 21 * 24);
+        let dot = CompiledKernel::compile(KernelKey::int_dot(8, 32, 10, g));
+        assert_eq!(dot.body_rows(), 10 * 16 + 32);
     }
 }

@@ -23,6 +23,11 @@
 //! * The [`ResidencyMap`] lifts residency from a per-block accident into a
 //!   scheduling property: the farm's affinity router tracks which kernel
 //!   each worker holds and sends tasks to a matching worker first.
+//! * The [`PlacementMap`] does the same for **data**: resident tensors
+//!   ([`TensorHandle`]) live in per-block storage reserves, tasks that
+//!   reference them are routed to the worker holding a replica (data
+//!   affinity outranks kernel affinity, which outranks load), and LRU
+//!   eviction spills cold tensors back to host memory loss-lessly.
 //!
 //! Lifecycle (also documented in `DESIGN.md`):
 //!
@@ -36,8 +41,10 @@
 
 pub mod cache;
 pub mod kernel;
+pub mod placement;
 pub mod residency;
 
 pub use cache::{CacheStats, KernelCache};
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
+pub use placement::{DataStats, PlacementMap, TensorHandle, TensorSlice};
 pub use residency::{ResidencyMap, ResidencyStats};

@@ -1,0 +1,597 @@
+//! The farm-level placement map: which worker's block stores which
+//! resident tensor.
+//!
+//! The paper's headline claim is that Compute RAMs cut energy by *reducing
+//! data movement*: a block can hold data in storage mode and compute
+//! against it in place, so operands written once are used many times.
+//! [`PlacementMap`] is the scheduling half of that story — the sibling of
+//! [`super::ResidencyMap`], which does the same job for *programs*:
+//!
+//! * every resident tensor ([`TensorHandle`]) has one or more **homes** —
+//!   `(worker, base row)` replicas inside the per-block storage reserve
+//!   managed by a [`crate::cram::store::BlockStore`] per worker;
+//! * the execution engine routes a task referencing a resident tensor to a
+//!   home worker (**data affinity outranks kernel affinity outranks
+//!   load**) and resolves the operand from the block's array instead of
+//!   shipping it from the host;
+//! * when an allocation does not fit, the **least-recently-used** tensor on
+//!   the chosen block is evicted **back to host memory** (its values are
+//!   read out of the array first, so eviction is loss-less); an evicted
+//!   tensor still resolves — from the host backing copy, at host-traffic
+//!   cost — and the counters make the difference visible
+//!   (`resident_hits` vs `resident_misses`).
+//!
+//! The map holds only metadata and counters; the actual array reads/writes
+//! are done by [`crate::coordinator::farm::BlockFarm`], which owns the
+//! blocks. All mutating entry points are serialized by the farm's
+//! control-plane lock; workers only call [`PlacementMap::resolve`].
+
+use crate::bitline::Geometry;
+use crate::cram::store::{tensor_rows, BlockStore};
+use crate::ucode::bf16::SCRATCH_ROWS;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Identity of a resident tensor. Plain data — cheap to copy, meaningful
+/// only to the farm (and [`PlacementMap`]) that allocated it.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct TensorHandle(u64);
+
+impl TensorHandle {
+    /// The raw id (used by the server wire protocol).
+    pub fn id(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a handle from a wire id. An unknown id is not an error
+    /// here; it fails at resolution time.
+    pub fn from_id(id: u64) -> TensorHandle {
+        TensorHandle(id)
+    }
+}
+
+/// A contiguous element range of a resident tensor, referenced by a task
+/// operand.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct TensorSlice {
+    pub handle: TensorHandle,
+    /// First element of the slice.
+    pub offset: usize,
+    /// Elements in the slice.
+    pub len: usize,
+}
+
+/// Data-movement counters (monotonic; shared across threads).
+///
+/// `host_bytes_in`/`host_bytes_out` count the tensor **control plane**:
+/// bytes crossing the host/block boundary for `alloc`/`write`/`read` and
+/// evictions. Task-level operand/result traffic is accounted per job and
+/// aggregated by [`crate::coordinator::Metrics`]. `resident_hits`/`misses`
+/// count task-operand resolutions: a hit reads the block's array in place,
+/// a miss fell back to the host backing copy of an evicted tensor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DataStats {
+    pub host_bytes_in: u64,
+    pub host_bytes_out: u64,
+    pub resident_hits: u64,
+    pub resident_misses: u64,
+    pub evictions: u64,
+}
+
+/// Outcome of one placement attempt (see [`PlacementMap::place`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaceAttempt {
+    /// A region was reserved; the caller must now write the values.
+    Placed { base: usize },
+    /// No contiguous gap; evict this (least-recently-used) tensor first.
+    Evict { victim: TensorHandle },
+    /// The reserve cannot fit the tensor even when empty.
+    NoFit,
+}
+
+/// How a worker resolves a resident operand (see [`PlacementMap::resolve`]).
+#[derive(Clone, Debug)]
+pub enum Resolution {
+    /// Resident on this worker's block: read the array in place.
+    Local { base: usize, w: u32, len: usize },
+    /// Evicted (or never placed): values from the host backing copy
+    /// (shared, not cloned — callers slice what they need).
+    Host { values: Arc<Vec<i64>>, w: u32 },
+    /// Resident only on other workers and no host copy exists — the
+    /// router should have pinned the task to one of these.
+    Elsewhere { workers: Vec<usize> },
+    /// Unknown or freed handle.
+    Missing,
+}
+
+/// Where a whole-tensor read should be served from.
+#[derive(Clone, Debug)]
+pub enum ReadSource {
+    Block { worker: usize, base: usize, w: u32, len: usize },
+    Host(Arc<Vec<i64>>),
+    Missing,
+}
+
+struct Entry {
+    w: u32,
+    len: usize,
+    /// `(worker, base row)` replicas.
+    homes: Vec<(usize, usize)>,
+    /// Host backing copy (set on eviction; absent while fully resident).
+    host: Option<Arc<Vec<i64>>>,
+    last_touch: u64,
+}
+
+struct Inner {
+    stores: Vec<BlockStore>,
+    tensors: BTreeMap<u64, Entry>,
+    next_id: u64,
+    clock: u64,
+}
+
+/// See the module docs. One per [`crate::coordinator::farm::BlockFarm`].
+pub struct PlacementMap {
+    geometry: Geometry,
+    reserve_rows: usize,
+    inner: Mutex<Inner>,
+    host_bytes_in: AtomicU64,
+    host_bytes_out: AtomicU64,
+    resident_hits: AtomicU64,
+    resident_misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlacementMap {
+    /// Build the map for `n_workers` blocks of `geometry`, each reserving
+    /// `reserve_rows` rows for tensor storage directly below the bf16
+    /// scratch guard. `reserve_rows == 0` disables storage entirely (the
+    /// compute area is then the full geometry, exactly the pre-reserve
+    /// behavior).
+    pub fn new(n_workers: usize, geometry: Geometry, reserve_rows: usize) -> PlacementMap {
+        let rows = geometry.rows();
+        if reserve_rows > 0 {
+            // keep room for the scratch guard plus at least one tuple of
+            // the widest kernel (int16 mul / int16 dot: 64 rows)
+            assert!(
+                reserve_rows + SCRATCH_ROWS + 64 <= rows,
+                "storage reserve of {reserve_rows} rows leaves no compute area on {geometry:?}"
+            );
+        }
+        let (base, limit) = if reserve_rows == 0 {
+            (0, 0)
+        } else {
+            (rows - SCRATCH_ROWS - reserve_rows, rows - SCRATCH_ROWS)
+        };
+        PlacementMap {
+            geometry,
+            reserve_rows,
+            inner: Mutex::new(Inner {
+                stores: (0..n_workers).map(|_| BlockStore::new(base, limit)).collect(),
+                tensors: BTreeMap::new(),
+                next_id: 1,
+                clock: 0,
+            }),
+            host_bytes_in: AtomicU64::new(0),
+            host_bytes_out: AtomicU64::new(0),
+            resident_hits: AtomicU64::new(0),
+            resident_misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn geometry(&self) -> Geometry {
+        self.geometry
+    }
+
+    /// Rows of storage reserve per block (0 = storage disabled).
+    pub fn reserve_rows(&self) -> usize {
+        self.reserve_rows
+    }
+
+    /// Rows available to compute-kernel bodies (the mapper caps every
+    /// kernel at this; the worker enforces it).
+    pub fn compute_rows(&self) -> usize {
+        if self.reserve_rows == 0 {
+            self.geometry.rows()
+        } else {
+            self.geometry.rows() - SCRATCH_ROWS - self.reserve_rows
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.inner.lock().unwrap().stores.len()
+    }
+
+    /// Register a new tensor (no homes yet). The farm places replicas and
+    /// writes data right after; on total placement failure it calls
+    /// [`Self::remove`].
+    pub fn register(&self, w: u32, len: usize) -> TensorHandle {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let touch = inner.clock;
+        inner.clock += 1;
+        inner.tensors.insert(
+            id,
+            Entry { w, len, homes: Vec::new(), host: None, last_touch: touch },
+        );
+        TensorHandle(id)
+    }
+
+    /// `(width, length)` of a registered tensor.
+    pub fn info(&self, h: TensorHandle) -> Option<(u32, usize)> {
+        let inner = self.inner.lock().unwrap();
+        inner.tensors.get(&h.0).map(|e| (e.w, e.len))
+    }
+
+    /// Workers currently holding a replica.
+    pub fn homes(&self, h: TensorHandle) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tensors
+            .get(&h.0)
+            .map(|e| e.homes.iter().map(|&(w, _)| w).collect())
+            .unwrap_or_default()
+    }
+
+    /// `(worker, base)` replicas plus width/length — the farm's write
+    /// path. Touches the LRU clock: an actively rewritten tensor is in
+    /// use and must not be the preferred eviction victim.
+    pub fn write_targets(&self, h: TensorHandle) -> Option<(u32, usize, Vec<(usize, usize)>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let e = inner.tensors.get_mut(&h.0)?;
+        e.last_touch = touch;
+        Some((e.w, e.len, e.homes.clone()))
+    }
+
+    /// `(used, capacity)` storage rows of one worker's reserve.
+    pub fn occupancy(&self, worker: usize) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let s = &inner.stores[worker];
+        (s.used_rows(), s.capacity_rows())
+    }
+
+    /// The worker with the most free storage that could ever fit `rows`
+    /// (eviction may still be needed), excluding `exclude`. `None` when no
+    /// non-excluded worker has the capacity.
+    pub fn pick_worker(&self, rows: usize, exclude: &[usize]) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .stores
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| !exclude.contains(i) && s.capacity_rows() >= rows)
+            .max_by_key(|(i, s)| (s.free_rows(), usize::MAX - i))
+            .map(|(i, _)| i)
+    }
+
+    /// Try to reserve a region for `h` on `worker`. On `Evict`, the farm
+    /// reads the victim's values out of the block and calls
+    /// [`Self::evict`], then retries; each eviction frees rows, so the
+    /// loop terminates in `Placed` or `NoFit`.
+    pub fn place(&self, h: TensorHandle, worker: usize) -> PlaceAttempt {
+        let mut inner = self.inner.lock().unwrap();
+        let (w, len) = match inner.tensors.get(&h.0) {
+            Some(e) => (e.w, e.len),
+            None => return PlaceAttempt::NoFit,
+        };
+        let rows = tensor_rows(self.geometry, w, len);
+        if inner.stores[worker].capacity_rows() < rows {
+            return PlaceAttempt::NoFit;
+        }
+        if let Some(region) = inner.stores[worker].alloc(h.0, rows) {
+            let touch = inner.clock;
+            inner.clock += 1;
+            let e = inner.tensors.get_mut(&h.0).expect("entry exists");
+            if !e.homes.iter().any(|&(w, _)| w == worker) {
+                e.homes.push((worker, region.base));
+            }
+            e.last_touch = touch;
+            return PlaceAttempt::Placed { base: region.base };
+        }
+        // LRU victim among tensors homed on this worker (never `h` itself:
+        // `alloc` would have returned its existing region)
+        let victim = inner.stores[worker]
+            .ids()
+            .filter(|&id| id != h.0)
+            .min_by_key(|id| inner.tensors.get(id).map_or(0, |e| e.last_touch));
+        match victim {
+            Some(id) => PlaceAttempt::Evict { victim: TensorHandle(id) },
+            None => PlaceAttempt::NoFit,
+        }
+    }
+
+    /// `(base, w, len)` of `h`'s replica on `worker` (the farm reads the
+    /// victim's values through this before [`Self::evict`]).
+    pub fn region_of(&self, h: TensorHandle, worker: usize) -> Option<(usize, u32, usize)> {
+        let inner = self.inner.lock().unwrap();
+        let e = inner.tensors.get(&h.0)?;
+        let region = inner.stores[worker].region(h.0)?;
+        Some((region.base, e.w, e.len))
+    }
+
+    /// Drop `h`'s replica on `worker`, keeping `values` as the host
+    /// backing copy. The values were just read out of the block's array,
+    /// so they are always current — they **overwrite** any older backup
+    /// (an earlier partial eviction followed by a `write_tensor` would
+    /// otherwise leave a stale copy behind).
+    pub fn evict(&self, h: TensorHandle, worker: usize, values: Vec<i64>) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.stores[worker].free(h.0).is_none() {
+            return; // already gone
+        }
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            e.homes.retain(|&(w, _)| w != worker);
+            e.host = Some(Arc::new(values));
+        }
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Replace the host backing copy (the write path for fully evicted
+    /// tensors).
+    pub fn set_host_copy(&self, h: TensorHandle, values: Vec<i64>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            e.host = Some(Arc::new(values));
+        }
+    }
+
+    /// Refresh the host backing copy **if one exists** (the write path for
+    /// partially evicted tensors: the replicas get the new values, and a
+    /// lingering backup must not go stale).
+    pub fn refresh_host_copy(&self, h: TensorHandle, values: &[i64]) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            if e.host.is_some() {
+                e.host = Some(Arc::new(values.to_vec()));
+            }
+        }
+    }
+
+    /// Resolve a resident operand on `worker` (the worker's hot path; see
+    /// [`Resolution`]). Touches the LRU clock and the hit/miss counters.
+    pub fn resolve(&self, h: TensorHandle, worker: usize) -> Resolution {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let Some(e) = inner.tensors.get_mut(&h.0) else { return Resolution::Missing };
+        e.last_touch = touch;
+        if let Some(&(_, base)) = e.homes.iter().find(|&&(w, _)| w == worker) {
+            self.resident_hits.fetch_add(1, Ordering::Relaxed);
+            return Resolution::Local { base, w: e.w, len: e.len };
+        }
+        if let Some(values) = &e.host {
+            self.resident_misses.fetch_add(1, Ordering::Relaxed);
+            // Arc clone: the (possibly large) backup is shared, not copied
+            return Resolution::Host { values: Arc::clone(values), w: e.w };
+        }
+        Resolution::Elsewhere { workers: e.homes.iter().map(|&(w, _)| w).collect() }
+    }
+
+    /// Where a whole-tensor read should come from (first replica, else the
+    /// host copy). Touches the LRU clock: a tensor polled through the
+    /// control plane is in use and must not be the preferred eviction
+    /// victim.
+    pub fn read_source(&self, h: TensorHandle) -> ReadSource {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let Some(e) = inner.tensors.get_mut(&h.0) else { return ReadSource::Missing };
+        e.last_touch = touch;
+        if let Some(&(worker, base)) = e.homes.first() {
+            return ReadSource::Block { worker, base, w: e.w, len: e.len };
+        }
+        match &e.host {
+            Some(values) => ReadSource::Host(Arc::clone(values)),
+            None => ReadSource::Missing,
+        }
+    }
+
+    /// Free a tensor: all replicas' rows return to their stores, the entry
+    /// disappears. Returns whether the handle existed.
+    pub fn remove(&self, h: TensorHandle) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.tensors.remove(&h.0) else { return false };
+        for (worker, _) in e.homes {
+            inner.stores[worker].free(h.0);
+        }
+        true
+    }
+
+    /// Number of live tensors.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn add_host_bytes_in(&self, bytes: u64) {
+        self.host_bytes_in.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_host_bytes_out(&self, bytes: u64) {
+        self.host_bytes_out.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> DataStats {
+        DataStats {
+            host_bytes_in: self.host_bytes_in.load(Ordering::Relaxed),
+            host_bytes_out: self.host_bytes_out.load(Ordering::Relaxed),
+            resident_hits: self.resident_hits.load(Ordering::Relaxed),
+            resident_misses: self.resident_misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for PlacementMap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlacementMap")
+            .field("geometry", &self.geometry)
+            .field("reserve_rows", &self.reserve_rows)
+            .field("tensors", &self.len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(reserve: usize) -> PlacementMap {
+        PlacementMap::new(2, Geometry::G512x40, reserve)
+    }
+
+    #[test]
+    fn compute_rows_shrink_with_reserve() {
+        assert_eq!(map(0).compute_rows(), 512);
+        assert_eq!(map(0).reserve_rows(), 0);
+        let m = map(192);
+        assert_eq!(m.compute_rows(), 512 - 32 - 192);
+        assert_eq!(m.occupancy(0), (0, 192));
+    }
+
+    #[test]
+    #[should_panic(expected = "no compute area")]
+    fn oversized_reserve_rejected() {
+        map(512 - 32 - 63);
+    }
+
+    #[test]
+    fn place_resolve_roundtrip() {
+        let m = map(64);
+        let h = m.register(8, 40); // 8 rows
+        match m.place(h, 0) {
+            PlaceAttempt::Placed { base } => assert_eq!(base, 512 - 32 - 64),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(m.homes(h), vec![0]);
+        match m.resolve(h, 0) {
+            Resolution::Local { base, w, len } => {
+                assert_eq!((base, w, len), (512 - 32 - 64, 8, 40));
+            }
+            other => panic!("{other:?}"),
+        }
+        match m.resolve(h, 1) {
+            Resolution::Elsewhere { workers } => assert_eq!(workers, vec![0]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(m.stats().resident_hits, 1);
+        assert!(m.remove(h));
+        assert!(!m.remove(h));
+        assert!(matches!(m.resolve(h, 0), Resolution::Missing));
+    }
+
+    #[test]
+    fn lru_eviction_selects_least_recently_touched() {
+        let m = map(16); // fits two 8-row tensors
+        let a = m.register(8, 40);
+        let b = m.register(8, 40);
+        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(b, 0), PlaceAttempt::Placed { .. }));
+        // touch `a` so `b` is the LRU
+        m.resolve(a, 0);
+        let c = m.register(8, 40);
+        match m.place(c, 0) {
+            PlaceAttempt::Evict { victim } => assert_eq!(victim, b),
+            other => panic!("{other:?}"),
+        }
+        m.evict(b, 0, vec![7; 40]);
+        assert!(matches!(m.place(c, 0), PlaceAttempt::Placed { .. }));
+        // evicted tensor resolves from the host copy
+        match m.resolve(b, 0) {
+            Resolution::Host { values, w } => {
+                assert_eq!(w, 8);
+                assert_eq!(*values, vec![7; 40]);
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = m.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_misses, 1);
+    }
+
+    #[test]
+    fn control_plane_reads_and_writes_touch_the_lru_clock() {
+        let m = map(16); // two 8-row tensors fill one worker
+        let a = m.register(8, 40);
+        let b = m.register(8, 40);
+        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(b, 0), PlaceAttempt::Placed { .. }));
+        // poll `a` through the control plane (a server read request):
+        // it is in active use, so `b` must be the eviction victim
+        let _ = m.read_source(a);
+        let c = m.register(8, 40);
+        match m.place(c, 0) {
+            PlaceAttempt::Evict { victim } => assert_eq!(victim, b),
+            other => panic!("{other:?}"),
+        }
+        // same for the write path
+        m.evict(b, 0, vec![0; 40]);
+        assert!(matches!(m.place(c, 0), PlaceAttempt::Placed { .. }));
+        let _ = m.write_targets(a);
+        let d = m.register(8, 40);
+        match m.place(d, 0) {
+            PlaceAttempt::Evict { victim } => assert_eq!(victim, c),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn eviction_always_refreshes_the_host_copy() {
+        let m = map(64);
+        let h = m.register(8, 40);
+        assert!(matches!(m.place(h, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 1), PlaceAttempt::Placed { .. }));
+        // first replica evicted with the original values
+        m.evict(h, 0, vec![1; 40]);
+        // the surviving replica was overwritten (write path); the second
+        // eviction carries the NEW array contents and must win over the
+        // stale backup — this is the loss-less-eviction guarantee
+        m.evict(h, 1, vec![2; 40]);
+        match m.resolve(h, 0) {
+            Resolution::Host { values, .. } => assert_eq!(*values, vec![2; 40]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn pick_worker_prefers_most_free() {
+        let m = map(32);
+        let a = m.register(8, 40);
+        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
+        assert_eq!(m.pick_worker(8, &[]), Some(1), "worker 1 is emptier");
+        assert_eq!(m.pick_worker(8, &[1]), Some(0));
+        assert_eq!(m.pick_worker(8, &[0, 1]), None);
+        assert_eq!(m.pick_worker(33, &[]), None, "never fits the reserve");
+    }
+
+    #[test]
+    fn replicated_tensor_has_multiple_homes() {
+        let m = map(64);
+        let h = m.register(4, 10);
+        assert!(matches!(m.place(h, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 1), PlaceAttempt::Placed { .. }));
+        let mut homes = m.homes(h);
+        homes.sort_unstable();
+        assert_eq!(homes, vec![0, 1]);
+        assert!(matches!(m.resolve(h, 1), Resolution::Local { .. }));
+        // evicting one replica keeps the other resident
+        m.evict(h, 0, vec![0; 10]);
+        assert_eq!(m.homes(h), vec![1]);
+        assert!(matches!(m.resolve(h, 1), Resolution::Local { .. }));
+    }
+
+    #[test]
+    fn zero_reserve_cannot_place() {
+        let m = map(0);
+        let h = m.register(8, 40);
+        assert_eq!(m.place(h, 0), PlaceAttempt::NoFit);
+    }
+}

@@ -86,10 +86,28 @@ impl ResidencyMap {
     /// deterministically across the farm instead of convoying one worker
     /// and leaving the spread to steal-timing luck.
     pub fn route(&self, key: KernelKey, queue_depths: &[usize]) -> usize {
+        let all: Vec<usize> = (0..queue_depths.len()).collect();
+        self.route_among(key, queue_depths, &all)
+    }
+
+    /// [`Self::route`] restricted to `candidates` — the data-affinity path:
+    /// a task bound to a resident tensor may only run on the workers
+    /// holding a replica, so data affinity outranks kernel affinity, which
+    /// (within the candidate set) still outranks nothing but load. The
+    /// candidate list must be non-empty and hold valid worker indices.
+    pub fn route_among(
+        &self,
+        key: KernelKey,
+        queue_depths: &[usize],
+        candidates: &[usize],
+    ) -> usize {
         let mut slots = self.slots.lock().unwrap();
         debug_assert_eq!(slots.len(), queue_depths.len());
-        let min_depth = queue_depths.iter().copied().min().unwrap_or(0);
-        let hit = (0..slots.len())
+        assert!(!candidates.is_empty(), "route_among with no candidates");
+        let min_depth = candidates.iter().map(|&i| queue_depths[i]).min().unwrap_or(0);
+        let hit = candidates
+            .iter()
+            .copied()
             .find(|&i| slots[i] == Some(key) && queue_depths[i] == min_depth);
         match hit {
             Some(i) => {
@@ -97,9 +115,11 @@ impl ResidencyMap {
                 i
             }
             None => {
-                let i = (0..queue_depths.len())
+                let i = candidates
+                    .iter()
+                    .copied()
                     .min_by_key(|&i| queue_depths[i])
-                    .unwrap_or(0);
+                    .unwrap_or(candidates[0]);
                 self.affinity_misses.fetch_add(1, Ordering::Relaxed);
                 slots[i] = Some(key);
                 i
@@ -181,6 +201,20 @@ mod tests {
         assert_ne!(w4, w8, "second kernel routes to the idle worker");
         assert_eq!(map.stats().affinity_misses, 2);
         assert_eq!(map.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn route_among_restricts_to_candidates() {
+        let map = ResidencyMap::new(4);
+        map.note(0, key(8));
+        // worker 0 holds the kernel and is idle, but the task is pinned to
+        // workers 2/3 (data affinity outranks kernel affinity)
+        let w = map.route_among(key(8), &[0, 0, 3, 1], &[2, 3]);
+        assert_eq!(w, 3, "least-loaded candidate wins");
+        assert_eq!(map.stats().affinity_misses, 1);
+        // now worker 3 predicts the kernel: an equally-loaded repeat hits
+        assert_eq!(map.route_among(key(8), &[0, 0, 1, 1], &[2, 3]), 3);
+        assert_eq!(map.stats().affinity_hits, 1);
     }
 
     #[test]

@@ -9,12 +9,32 @@
 //! `nn_accelerator` example cross-checks the logits against the
 //! `mlp_i8.hlo.txt` PJRT artifact, closing the loop between the simulator
 //! and the golden JAX model.
+//!
+//! On a coordinator built with [`Coordinator::with_storage`], call
+//! [`MlpInt8::make_resident`] once: the weight matrices move into the
+//! blocks' storage reserves (one tensor per matmul K-segment, optionally
+//! replicated for parallelism) and every subsequent `forward` /
+//! `forward_pipelined` ships only the activations — the weights never
+//! re-cross the host boundary, which is the data-movement saving the
+//! paper's dual-mode blocks exist for. `JobResult::host_bytes_in` /
+//! `Metrics` make the reduction measurable; `benches/serving.rs` asserts
+//! it.
 
+use crate::coordinator::job::MatSeg;
 use crate::coordinator::{Coordinator, Job, JobPayload};
 use anyhow::{ensure, Result};
 
 /// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
 pub const REQUANT_SHIFT: u32 = 7;
+
+/// A weight matrix made resident on the farm: one tensor per K-segment of
+/// the matmul it backs. Dropping this does not free the tensors; call
+/// [`QuantLinear::release_resident`]. Clones share the same storage.
+#[derive(Clone, Debug)]
+pub struct ResidentWeights {
+    segments: Vec<MatSeg>,
+    n: usize,
+}
 
 /// An int8 linear layer (weights `[k][n]`, bias `[n]`, int32 accumulate).
 #[derive(Clone, Debug)]
@@ -54,6 +74,49 @@ impl QuantLinear {
         })
     }
 
+    /// Store this layer's weight matrix in the farm's block-storage
+    /// reserves: one tensor per matmul K-segment (shaped by
+    /// [`Coordinator::matmul_segments`], so the resident plan and the
+    /// slabs can never disagree), each replicated on up to `copies`
+    /// blocks so the segment's tiles can spread across workers. Requires
+    /// a coordinator built with [`Coordinator::with_storage`].
+    pub fn make_resident(&self, coord: &Coordinator, copies: usize) -> Result<ResidentWeights> {
+        let n = self.out_dim();
+        let mut segments: Vec<MatSeg> = Vec::new();
+        for (k0, k1) in coord.matmul_segments(8, self.in_dim()) {
+            let slab: Vec<i64> =
+                self.w[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+            match coord.alloc_tensor_replicated(&slab, 8, copies) {
+                Ok(handle) => segments.push(MatSeg { k0, k1, handle }),
+                Err(e) => {
+                    // roll back the segments already stored
+                    for seg in segments {
+                        let _ = coord.free_tensor(seg.handle);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ResidentWeights { segments, n })
+    }
+
+    /// Free the tensors behind a [`ResidentWeights`]. Best-effort: every
+    /// segment is freed even if one fails (e.g. a handle already freed
+    /// out-of-band); the first error is reported afterward, so a partial
+    /// failure can never strand the remaining handles.
+    pub fn release_resident(coord: &Coordinator, rw: ResidentWeights) -> Result<()> {
+        let mut first_err = None;
+        for seg in rw.segments {
+            if let Err(e) = coord.free_tensor(seg.handle) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// Add this layer's bias in int32 wraparound arithmetic (the shared
     /// tail of every forward path, serialized or pipelined).
     fn add_bias(&self, y: &mut [Vec<i64>]) {
@@ -64,17 +127,52 @@ impl QuantLinear {
         }
     }
 
-    /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
-    pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+    /// Submit this layer's matmul (resident weights when available); the
+    /// caller awaits the handle and applies the bias.
+    fn submit_matmul(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<i64>],
+        rw: Option<&ResidentWeights>,
+    ) -> crate::coordinator::JobHandle {
+        let payload = match rw {
+            Some(r) => JobPayload::IntMatmulResident {
+                w: 8,
+                x: x.to_vec(),
+                n: r.n,
+                segments: r.segments.clone(),
+            },
+            None => JobPayload::IntMatmul { w: 8, x: x.to_vec(), wt: self.w.clone() },
+        };
+        coord.submit(Job { id: 0, payload })
+    }
+
+    /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm,
+    /// optionally against resident weights.
+    pub fn forward_with(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<i64>],
+        rw: Option<&ResidentWeights>,
+    ) -> Result<Vec<Vec<i64>>> {
         ensure!(
             x.iter().all(|r| r.len() == self.in_dim()),
             "input width {} != layer in_dim {}",
             x.first().map_or(0, Vec::len),
             self.in_dim()
         );
-        let mut y = coord.matmul(x, &self.w, 8)?;
+        let m = x.len();
+        let n = self.out_dim();
+        let r = self.submit_matmul(coord, x, rw).wait()?;
+        let mut y: Vec<Vec<i64>> =
+            (0..m).map(|i| r.values[i * n..(i + 1) * n].to_vec()).collect();
         self.add_bias(&mut y);
         Ok(y)
+    }
+
+    /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
+    pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        self.forward_with(coord, x, None)
     }
 }
 
@@ -92,12 +190,15 @@ pub fn relu_requant(x: &mut [Vec<i64>], shift: u32) {
 pub struct MlpInt8 {
     pub l1: QuantLinear,
     pub l2: QuantLinear,
+    /// Resident weight tensors for (l1, l2), when
+    /// [`MlpInt8::make_resident`] has been called. Clones share them.
+    resident: Option<(ResidentWeights, ResidentWeights)>,
 }
 
 impl MlpInt8 {
     pub fn new(l1: QuantLinear, l2: QuantLinear) -> Result<Self> {
         ensure!(l1.out_dim() == l2.in_dim(), "layer dims mismatch");
-        Ok(Self { l1, l2 })
+        Ok(Self { l1, l2, resident: None })
     }
 
     /// Construct and immediately pre-compile both layers' kernels on
@@ -115,11 +216,55 @@ impl MlpInt8 {
         self.l1.precompile(coord) + self.l2.precompile(coord)
     }
 
+    /// Move both weight matrices into `coord`'s block-storage reserves
+    /// (each segment replicated on up to `copies` blocks). Subsequent
+    /// forwards ship only activations. The handles are bound to `coord` —
+    /// do not mix coordinators. Calling again (e.g. to change the replica
+    /// count) frees the previous generation's tensors first.
+    pub fn make_resident(&mut self, coord: &Coordinator, copies: usize) -> Result<()> {
+        self.release_resident(coord)?;
+        let r1 = self.l1.make_resident(coord, copies)?;
+        let r2 = match self.l2.make_resident(coord, copies) {
+            Ok(r2) => r2,
+            Err(e) => {
+                let _ = QuantLinear::release_resident(coord, r1);
+                return Err(e);
+            }
+        };
+        self.resident = Some((r1, r2));
+        Ok(())
+    }
+
+    /// Whether the weights are resident on a farm.
+    pub fn is_resident(&self) -> bool {
+        self.resident.is_some()
+    }
+
+    /// Free the resident weight tensors (no-op when not resident).
+    /// Best-effort across both layers: an error freeing one layer's
+    /// tensors does not leak the other's.
+    pub fn release_resident(&mut self, coord: &Coordinator) -> Result<()> {
+        let Some((r1, r2)) = self.resident.take() else {
+            return Ok(());
+        };
+        let e1 = QuantLinear::release_resident(coord, r1);
+        let e2 = QuantLinear::release_resident(coord, r2);
+        e1.and(e2)
+    }
+
+    fn resident_pair(&self) -> (Option<&ResidentWeights>, Option<&ResidentWeights>) {
+        match &self.resident {
+            Some((r1, r2)) => (Some(r1), Some(r2)),
+            None => (None, None),
+        }
+    }
+
     /// Forward pass on the Compute RAM farm -> int32 logits.
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
-        let mut h = self.l1.forward(coord, x)?;
+        let (r1, r2) = self.resident_pair();
+        let mut h = self.l1.forward_with(coord, x, r1)?;
         relu_requant(&mut h, REQUANT_SHIFT);
-        self.l2.forward(coord, &h)
+        self.l2.forward_with(coord, &h, r2)
     }
 
     /// Forward passes over several independent input batches with
@@ -143,27 +288,23 @@ impl MlpInt8 {
         if batches.is_empty() {
             return Ok(Vec::new());
         }
-        let submit_l1 = |x: &[Vec<i64>]| {
-            coord.submit(Job {
-                id: 0,
-                payload: JobPayload::IntMatmul { w: 8, x: x.to_vec(), wt: self.l1.w.clone() },
-            })
-        };
+        let (r1, r2) = self.resident_pair();
+        let submit_l1 = |x: &[Vec<i64>]| self.l1.submit_matmul(coord, x, r1);
         let hid = self.l1.out_dim();
         let mut results = Vec::with_capacity(batches.len());
         let mut inflight = Some(submit_l1(&batches[0]));
         for i in 0..batches.len() {
-            let r1 = inflight.take().expect("layer-1 job in flight").wait()?;
+            let r1_out = inflight.take().expect("layer-1 job in flight").wait()?;
             if i + 1 < batches.len() {
                 inflight = Some(submit_l1(&batches[i + 1]));
             }
             // host-side reduction of batch i overlaps batch i+1's matmul
             let m = batches[i].len();
             let mut h: Vec<Vec<i64>> =
-                (0..m).map(|r| r1.values[r * hid..(r + 1) * hid].to_vec()).collect();
+                (0..m).map(|r| r1_out.values[r * hid..(r + 1) * hid].to_vec()).collect();
             self.l1.add_bias(&mut h);
             relu_requant(&mut h, REQUANT_SHIFT);
-            results.push(self.l2.forward(coord, &h)?);
+            results.push(self.l2.forward_with(coord, &h, r2)?);
         }
         Ok(results)
     }
@@ -286,6 +427,75 @@ mod tests {
             assert_eq!(piped[i], mlp.forward_host(x), "batch {i}");
         }
         assert!(mlp.forward_pipelined(&c, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn resident_forward_is_bit_exact_and_ships_fewer_bytes() {
+        // reserve 192 rows -> compute 288 rows -> int8 dot max K = 16
+        let c = Coordinator::with_storage(Geometry::G512x40, 4, 192);
+        let mut mlp = MlpInt8::synthetic(32, 16, 8, 4242).unwrap();
+        let mut rng = Prng::new(54);
+        let x: Vec<Vec<i64>> =
+            (0..12).map(|_| (0..32).map(|_| rng.int(8)).collect()).collect();
+        let host = mlp.forward_host(&x);
+        // inline first, capturing its traffic
+        let in0 = c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+        let inline = mlp.forward(&c, &x).unwrap();
+        let inline_bytes =
+            c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - in0;
+        assert_eq!(inline, host);
+        // resident: same results, a fraction of the traffic
+        mlp.make_resident(&c, 4).unwrap();
+        assert!(mlp.is_resident());
+        let in1 = c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+        let resident = mlp.forward(&c, &x).unwrap();
+        let resident_bytes =
+            c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - in1;
+        assert_eq!(resident, host, "resident weights must be bit-exact");
+        assert!(
+            resident_bytes * 2 <= inline_bytes,
+            "resident {resident_bytes} vs inline {inline_bytes} bytes in"
+        );
+        let r = c.data_stats();
+        assert!(r.resident_hits > 0, "{r:?}");
+        // pipelined path shares the resident weights
+        let batches = vec![x.clone(), x.clone()];
+        let piped = mlp.forward_pipelined(&c, &batches).unwrap();
+        assert_eq!(piped[0], host);
+        assert_eq!(piped[1], host);
+        // re-making residency (e.g. to change the replica count) frees the
+        // previous generation: l1 has 2 K-segments, l2 has 1 -> 3 tensors
+        let live = c.placement().len();
+        mlp.make_resident(&c, 2).unwrap();
+        assert_eq!(c.placement().len(), live, "no leaked weight tensors");
+        assert_eq!(mlp.forward(&c, &x).unwrap(), host);
+        // releasing frees every tensor
+        mlp.release_resident(&c).unwrap();
+        assert!(!mlp.is_resident());
+        assert!(c.placement().is_empty());
+    }
+
+    #[test]
+    fn release_resident_is_best_effort() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 192);
+        let mut mlp = MlpInt8::synthetic(32, 16, 8, 7).unwrap();
+        mlp.make_resident(&c, 1).unwrap();
+        // free one weight tensor out-of-band (as a server client could)
+        let stray = mlp.resident.as_ref().unwrap().0.segments[0].handle;
+        c.free_tensor(stray).unwrap();
+        let err = mlp.release_resident(&c);
+        assert!(err.is_err(), "the stray free is reported");
+        assert!(!mlp.is_resident());
+        assert!(c.placement().is_empty(), "every other tensor was still freed");
+    }
+
+    #[test]
+    fn make_resident_requires_a_storage_reserve() {
+        let c = coord(); // no reserve
+        let mut mlp = MlpInt8::synthetic(32, 16, 8, 1).unwrap();
+        assert!(mlp.make_resident(&c, 1).is_err());
+        assert!(!mlp.is_resident());
+        assert!(c.placement().is_empty(), "failed make_resident leaks nothing");
     }
 
     #[test]

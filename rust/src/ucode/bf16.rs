@@ -96,8 +96,10 @@ impl Regs {
 }
 
 /// Scratch rows reserved at the top of the array (the paper §III-C: float
-/// operations "utilize some rows to store temporary results").
-const SCRATCH_ROWS: usize = 32;
+/// operations "utilize some rows to store temporary results"). The
+/// resident-tensor storage reserve ([`crate::cram::store`]) sits directly
+/// *below* these rows so stored tensors and bf16 scratch never collide.
+pub const SCRATCH_ROWS: usize = 32;
 
 /// Clamp the tuple count so the scratch workspace never collides with
 /// operand tuples, and return `(ops_per_col, scratch_base)`.

@@ -3,7 +3,7 @@
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
-use comperam::coordinator::server::{Batcher, PimServer, Request};
+use comperam::coordinator::server::{Batcher, ComputeReq, PimServer, WireOperand};
 use comperam::coordinator::{Coordinator, Job, JobPayload};
 use comperam::nn::MlpInt8;
 use comperam::util::{mask, sext, Prng, SoftBf16};
@@ -95,8 +95,20 @@ fn batcher_rejects_nothing_but_reports_per_request_errors() {
     let c = Arc::new(Coordinator::new(Geometry::G512x40, 2));
     let batcher = Batcher::new(c);
     let reqs = vec![
-        Request { id: 1, op: EwOp::Add, w: 8, a: vec![1], b: vec![2] },
-        Request { id: 2, op: EwOp::Add, w: 8, a: vec![], b: vec![] },
+        ComputeReq {
+            id: 1,
+            op: EwOp::Add,
+            w: 8,
+            a: WireOperand::Values(vec![1]),
+            b: WireOperand::Values(vec![2]),
+        },
+        ComputeReq {
+            id: 2,
+            op: EwOp::Add,
+            w: 8,
+            a: WireOperand::Values(vec![]),
+            b: WireOperand::Values(vec![]),
+        },
     ];
     let out = batcher.run_batch(&reqs);
     assert_eq!(out[0].as_ref().unwrap(), &vec![3]);

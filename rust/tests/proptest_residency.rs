@@ -1,0 +1,288 @@
+//! Property tests for the resident-tensor storage layer: the per-block
+//! allocator's region invariants, loss-less LRU eviction, isolation of
+//! stored tensors from interleaved compute, and bit-exactness of the
+//! compute-on-stored paths against their inline twins.
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_ucode.rs` (offline build; failing cases print their seed).
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::{Coordinator, Job, JobPayload, MatSeg, OperandRef};
+use comperam::cram::store::BlockStore;
+use comperam::util::{mask, sext, Prng};
+
+fn wrap(v: i64, w: u32) -> i64 {
+    sext(mask(v, w) as i64, w)
+}
+
+fn rand_tensor(rng: &mut Prng, w: u32, len: usize) -> Vec<i64> {
+    (0..len).map(|_| rng.int(w)).collect()
+}
+
+#[test]
+fn prop_blockstore_regions_never_overlap_and_free_returns_rows() {
+    for seed in 0..40u64 {
+        let mut rng = Prng::new(0xB10C + seed);
+        let base = rng.range(0, 100);
+        let cap = rng.range(32, 256);
+        let mut s = BlockStore::new(base, base + cap);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 1u64;
+        for _ in 0..200 {
+            if rng.chance(0.6) || live.is_empty() {
+                let rows = rng.range(1, cap / 2 + 2);
+                let id = next_id;
+                next_id += 1;
+                if let Some(region) = s.alloc(id, rows) {
+                    assert!(region.base >= base, "seed {seed}: region below base");
+                    assert!(
+                        region.end() <= base + cap,
+                        "seed {seed}: region beyond limit"
+                    );
+                    assert_eq!(region.rows, rows, "seed {seed}");
+                    live.push(id);
+                }
+            } else {
+                let i = rng.range(0, live.len());
+                let id = live.swap_remove(i);
+                assert!(s.free(id).is_some(), "seed {seed}: live region must free");
+            }
+            // invariants: bookkeeping consistent, no two regions overlap
+            assert_eq!(s.len(), live.len(), "seed {seed}");
+            assert_eq!(
+                s.used_rows() + s.free_rows(),
+                s.capacity_rows(),
+                "seed {seed}"
+            );
+            let mut regions: Vec<_> =
+                live.iter().map(|&id| s.region(id).expect("live region")).collect();
+            regions.sort_by_key(|r| r.base);
+            for pair in regions.windows(2) {
+                assert!(
+                    pair[0].end() <= pair[1].base,
+                    "seed {seed}: overlapping regions {pair:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tensor_alloc_write_read_roundtrip() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 3, 160);
+    let mut rng = Prng::new(0x7E45);
+    for case in 0..60u64 {
+        let w = [2, 4, 6, 8, 12, 16][rng.range(0, 6)] as u32;
+        let len = rng.range(1, 400);
+        let values = rand_tensor(&mut rng, w, len);
+        let copies = rng.range(1, 4);
+        let Ok(h) = c.alloc_tensor_replicated(&values, w, copies) else {
+            continue; // reserve momentarily full: not this test's concern
+        };
+        assert_eq!(c.read_tensor(h).unwrap(), values, "case {case} w={w} len={len}");
+        if rng.chance(0.5) {
+            let updated = rand_tensor(&mut rng, w, len);
+            c.write_tensor(h, &updated).unwrap();
+            assert_eq!(c.read_tensor(h).unwrap(), updated, "case {case} rewrite");
+        }
+        if rng.chance(0.7) {
+            c.free_tensor(h).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_eviction_preserves_contents_bit_exactly() {
+    for seed in 0..8u64 {
+        // a deliberately tiny reserve so allocations constantly evict
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 48);
+        let mut rng = Prng::new(0xE71C + seed);
+        let mut live: Vec<(comperam::exec::TensorHandle, Vec<i64>, u32)> = Vec::new();
+        for _ in 0..30 {
+            let w = [4, 8][rng.range(0, 2)] as u32;
+            let len = rng.range(1, 120);
+            let values = rand_tensor(&mut rng, w, len);
+            if let Ok(h) = c.alloc_tensor(&values, w) {
+                live.push((h, values, w));
+            }
+            // every tensor ever allocated still reads back exactly,
+            // resident or evicted
+            for (h, expect, w) in &live {
+                assert_eq!(
+                    &c.read_tensor(*h).unwrap(),
+                    expect,
+                    "seed {seed} w={w} len={}",
+                    expect.len()
+                );
+            }
+        }
+        assert!(
+            c.data_stats().evictions > 0,
+            "seed {seed}: the tiny reserve must have evicted"
+        );
+    }
+}
+
+#[test]
+fn prop_storage_unaffected_by_interleaved_compute() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 2, 128);
+    let mut rng = Prng::new(0x51DE);
+    // pin a few tensors down first
+    let tensors: Vec<(comperam::exec::TensorHandle, Vec<i64>, u32)> = (0..4)
+        .map(|_| {
+            let w = [4, 8, 16][rng.range(0, 3)] as u32;
+            let len = rng.range(10, 200);
+            let values = rand_tensor(&mut rng, w, len);
+            let h = c.alloc_tensor(&values, w).unwrap();
+            (h, values, w)
+        })
+        .collect();
+    for round in 0..12 {
+        // interleave every kind of compute job the mapper can plan
+        match round % 3 {
+            0 => {
+                let n = rng.range(1, 2000);
+                let a = rand_tensor(&mut rng, 8, n);
+                let b = rand_tensor(&mut rng, 8, n);
+                c.run(Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwise { op: EwOp::Mul, w: 8, a, b },
+                })
+                .unwrap();
+            }
+            1 => {
+                let k = rng.range(1, 40);
+                let n = rng.range(1, 90);
+                let a: Vec<Vec<i64>> =
+                    (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
+                let b: Vec<Vec<i64>> =
+                    (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
+                c.run(Job { id: 0, payload: JobPayload::IntDot { w: 8, a, b } }).unwrap();
+            }
+            _ => {
+                use comperam::util::SoftBf16;
+                let n = rng.range(1, 500);
+                let a: Vec<SoftBf16> =
+                    (0..n).map(|_| SoftBf16::from_f32(rng.int(8) as f32)).collect();
+                let b: Vec<SoftBf16> =
+                    (0..n).map(|_| SoftBf16::from_f32(rng.int(8) as f32)).collect();
+                c.run(Job {
+                    id: 0,
+                    payload: JobPayload::Bf16Elementwise { mul: round % 2 == 0, a, b },
+                })
+                .unwrap();
+            }
+        }
+        // storage-mode reads are unaffected by any of it
+        for (h, expect, w) in &tensors {
+            assert_eq!(
+                &c.read_tensor(*h).unwrap(),
+                expect,
+                "round {round} w={w} len={}",
+                expect.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_resident_elementwise_matches_inline() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 3, 128);
+    let mut rng = Prng::new(0xADD5);
+    for case in 0..25u64 {
+        let w = [2, 4, 8, 12][rng.range(0, 4)] as u32;
+        let op = [EwOp::Add, EwOp::Sub, EwOp::Mul][rng.range(0, 3)];
+        // the tensor must fit one block's 128-row reserve
+        let n = rng.range(1, (128 / w as usize) * 40 + 1);
+        let a = rand_tensor(&mut rng, w, n);
+        let b = rand_tensor(&mut rng, w, n);
+        let h = c.alloc_tensor(&a, w).unwrap();
+        let inline = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op,
+                    w,
+                    a: a.clone(),
+                    b: b.clone(),
+                },
+            })
+            .unwrap();
+        let resident = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwiseRef {
+                    op,
+                    w,
+                    a: OperandRef::Tensor(h),
+                    b: OperandRef::Values(b.clone()),
+                },
+            })
+            .unwrap();
+        assert_eq!(
+            inline.values, resident.values,
+            "case {case} {op:?} w={w} n={n}: resident != inline"
+        );
+        // spot-check against host arithmetic too
+        for i in 0..n {
+            let expect = match op {
+                EwOp::Add => wrap(a[i] + b[i], w),
+                EwOp::Sub => wrap(a[i] - b[i], w),
+                EwOp::Mul => a[i] * b[i],
+            };
+            assert_eq!(resident.values[i], expect, "case {case} i={i}");
+        }
+        assert!(resident.host_bytes_in < inline.host_bytes_in, "case {case}");
+        c.free_tensor(h).unwrap();
+    }
+}
+
+#[test]
+fn prop_resident_matmul_matches_host() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 4, 192);
+    let mut rng = Prng::new(0x3A7);
+    for case in 0..12u64 {
+        let m = rng.range(1, 12);
+        let k = rng.range(1, 40);
+        let n = rng.range(1, 30);
+        let x: Vec<Vec<i64>> = (0..m).map(|_| rand_tensor(&mut rng, 8, k)).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
+        let segments: Vec<MatSeg> = c
+            .matmul_segments(8, k)
+            .into_iter()
+            .map(|(k0, k1)| {
+                let slab: Vec<i64> =
+                    wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+                let handle = c.alloc_tensor_replicated(&slab, 8, 2).unwrap();
+                MatSeg { k0, k1, handle }
+            })
+            .collect();
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulResident {
+                    w: 8,
+                    x: x.clone(),
+                    n,
+                    segments: segments.clone(),
+                },
+            })
+            .unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let expect: i64 =
+                    (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum::<i64>() as i32 as i64;
+                assert_eq!(
+                    r.values[i * n + j],
+                    expect,
+                    "case {case} m={m} k={k} n={n} ({i},{j})"
+                );
+            }
+        }
+        assert!(r.resident_hits > 0, "case {case}: weights resolved in place");
+        for seg in segments {
+            c.free_tensor(seg.handle).unwrap();
+        }
+    }
+}

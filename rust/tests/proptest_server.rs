@@ -8,9 +8,17 @@
 
 use comperam::coordinator::job::EwOp;
 use comperam::coordinator::server::{
-    format_error, format_response, parse_request, recover_request_id,
+    format_error, format_response, parse_request, recover_request_id, Request, WireOperand,
 };
 use comperam::util::{Json, Prng};
+
+/// Unwrap a parsed compute request's literal operand.
+fn values(op: &WireOperand) -> &[i64] {
+    match op {
+        WireOperand::Values(v) => v,
+        WireOperand::Handle(h) => panic!("unexpected handle operand {}", h.id()),
+    }
+}
 
 fn op_name(op: EwOp) -> &'static str {
     match op {
@@ -59,11 +67,14 @@ fn prop_parse_request_roundtrips_valid_lines() {
         let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
         let line = request_line(&mut rng, id, op, w, &a, &b);
         let r = parse_request(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{line}"));
+        let Request::Compute(r) = r else {
+            panic!("seed {seed}: compute line parsed as control request");
+        };
         assert_eq!(r.id, id, "seed {seed}: id must survive the full valid range");
         assert_eq!(r.op, op, "seed {seed}");
         assert_eq!(r.w, w, "seed {seed}");
-        assert_eq!(r.a, a, "seed {seed}");
-        assert_eq!(r.b, b, "seed {seed}");
+        assert_eq!(values(&r.a), a, "seed {seed}");
+        assert_eq!(values(&r.b), b, "seed {seed}");
     }
 }
 
