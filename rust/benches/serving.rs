@@ -10,11 +10,15 @@
 //!   results, and `program_loads()` flat across repeated same-kernel
 //!   batches (affinity routing keeps residency hits);
 //! * resident-weight matmul vs inline operands (the storage layer):
-//!   >= 50% fewer host bytes moved and lower wall-clock, bit-exact.
+//!   >= 50% fewer host bytes moved and lower wall-clock, bit-exact;
+//! * on-fabric activation flow (the sharded-residency layer): the fused
+//!   pipelined MLP's layer-1 jobs move **zero** host bytes out — only the
+//!   final logits cross the boundary — at equal-or-lower wall-clock than
+//!   the host-roundtrip pipeline, bit-exact.
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
-use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg};
+use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg, MatX};
 use comperam::cram::{ops, CramBlock};
 use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
 use comperam::nn::MlpInt8;
@@ -180,7 +184,7 @@ fn main() {
             let slab: Vec<i64> =
                 wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
             let handle = rcoord
-                .alloc_tensor_replicated(&slab, 4, rblocks)
+                .alloc_tensor_aligned(&slab, 4, rblocks, n)
                 .expect("weight slab fits the reserve");
             MatSeg { k0, k1, handle }
         })
@@ -193,7 +197,7 @@ fn main() {
         id: 0,
         payload: JobPayload::IntMatmulResident {
             w: 4,
-            x: x.clone(),
+            x: MatX::Rows(x.clone()),
             n,
             segments: segments.clone(),
         },
@@ -274,5 +278,68 @@ fn main() {
         100.0 * (1.0 - mlp_resident_bytes as f64 / mlp_inline_bytes.max(1) as f64),
         m_mlp.mean.as_secs_f64() * 1e3,
         mcoord.metrics.snapshot(),
+    );
+
+    // ---- on-fabric activation flow: fused pipelined MLP --------------------
+    // Layer-1 output tiles are deposited straight into a fabric-resident
+    // activation tensor (bias/ReLU/requant applied block-side) and layer 2
+    // reads them in place: the inter-layer activations never cross the
+    // host boundary. Host-roundtrip pipelining (the PR 2/3 path) is the
+    // baseline; both must be bit-exact against the host reference.
+    let fcoord = Coordinator::with_storage(geom, rblocks, 192);
+    let mut fmlp = MlpInt8::synthetic(32, 16, 8, 0xFAB).unwrap();
+    let fb = 6usize; // batches per pipelined call
+    // 12 rows/batch: three in-flight activation tensors fit the reserves
+    // alongside the resident weights, so the comparison is eviction-free
+    let fm = 12usize;
+    let fbatches: Vec<Vec<Vec<i64>>> = (0..fb)
+        .map(|_| (0..fm).map(|_| (0..32).map(|_| rng.int(8)).collect()).collect())
+        .collect();
+    let host_ref: Vec<Vec<Vec<i64>>> =
+        fbatches.iter().map(|x| fmlp.forward_host(x)).collect();
+    fmlp.make_resident(&fcoord, rblocks).unwrap();
+    let out_before =
+        fcoord.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed);
+    let round = fmlp.forward_pipelined_roundtrip(&fcoord, &fbatches).unwrap();
+    let round_out =
+        fcoord.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed) - out_before;
+    let out_mid =
+        fcoord.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed);
+    let fused = fmlp.forward_pipelined(&fcoord, &fbatches).unwrap();
+    let fused_out =
+        fcoord.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed) - out_mid;
+    assert_eq!(round, host_ref, "host-roundtrip pipeline must match the host");
+    assert_eq!(fused, host_ref, "on-fabric pipeline must be bit-exact");
+    // acceptance: layer-1 -> layer-2 activation traffic is ~0 — only the
+    // logits (fb x fm x 8 outputs x 8 bytes) leave the fabric
+    let logits_bytes = (fb * fm * 8 * 8) as u64;
+    assert_eq!(
+        fused_out, logits_bytes,
+        "on-fabric pipeline must move only the logits out (layer-1 \
+         host_bytes_out ~0); roundtrip moved {round_out}"
+    );
+    assert!(fused_out < round_out, "fused must move fewer bytes than roundtrip");
+    let m_round = bench("serving mlp pipelined 6x24  host-roundtrip activations", || {
+        black_box(fmlp.forward_pipelined_roundtrip(&fcoord, &fbatches).unwrap());
+    });
+    let m_fused = bench("serving mlp pipelined 6x24  on-fabric activations", || {
+        black_box(fmlp.forward_pipelined(&fcoord, &fbatches).unwrap());
+    });
+    let ratio = m_round.mean.as_secs_f64() / m_fused.mean.as_secs_f64();
+    println!(
+        "  -> on-fabric activations: {round_out} -> {fused_out} host bytes out per \
+         pipelined run ({:.1}% saved), {ratio:.2}x wall-clock vs roundtrip; data {:?}",
+        100.0 * (1.0 - fused_out as f64 / round_out.max(1) as f64),
+        fcoord.data_stats(),
+    );
+    // acceptance: equal-or-lower wall-clock (10% tolerance for host noise —
+    // the same kernels run either way; the win is the removed host traffic
+    // and host-side epilogue)
+    assert!(
+        m_fused.mean.as_secs_f64() <= m_round.mean.as_secs_f64() * 1.10,
+        "on-fabric pipeline must not be slower than the roundtrip \
+         ({:?} vs {:?})",
+        m_fused.mean,
+        m_round.mean
     );
 }

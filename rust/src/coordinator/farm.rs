@@ -30,13 +30,14 @@
 //! applies backpressure: `submit` blocks once the farm has
 //! `QUEUE_DEPTH_PER_WORKER x len()` tasks waiting.
 
-use super::mapper::{BlockTask, Operand};
+use super::mapper::{BlockTask, Operand, TaskX};
 use crate::bitline::Geometry;
 use crate::cram::{ops, store, CramBlock};
 use crate::ctrl::CycleStats;
-use crate::exec::placement::{PlaceAttempt, ReadSource, Resolution};
+use crate::exec::placement::{PlaceAttempt, ShardSource, SlicePart, SliceResolution};
 use crate::exec::{
-    DataStats, KernelCache, KernelKey, PlacementMap, ResidencyMap, ResidencyStats, TensorHandle,
+    CompiledKernel, DataStats, KernelCache, KernelKey, PlacementMap, ResidencyMap,
+    ResidencyStats, TensorHandle, TensorSlice,
 };
 use anyhow::{anyhow, bail, ensure, Result};
 use std::borrow::Cow;
@@ -48,6 +49,18 @@ use std::time::{Duration, Instant};
 /// Queued (not yet running) tasks the farm accepts per worker before
 /// `submit` blocks for backpressure.
 const QUEUE_DEPTH_PER_WORKER: usize = 16;
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
 
 /// Sum cycle statistics (energy-relevant total; time uses the wave max).
 pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
@@ -353,20 +366,71 @@ impl BlockFarm {
     /// Store a tensor on one block (a single replica); see
     /// [`Self::alloc_tensor_replicated`].
     pub fn alloc_tensor(&self, values: &[i64], w: u32) -> Result<TensorHandle> {
-        self.alloc_tensor_replicated(values, w, 1)
+        self.alloc_tensor_aligned(values, w, 1, 1)
     }
 
     /// Store a tensor in the storage reserve of up to `copies` blocks
-    /// (most-free-first), evicting least-recently-used tensors to host
-    /// memory as needed. Replicas let the engine spread pinned tasks: a
-    /// task referencing the tensor may run on any replica holder. At least
-    /// one replica must fit or the call fails. Counts `len * 8` host bytes
-    /// in per replica written.
+    /// (most-free-first); see [`Self::alloc_tensor_aligned`].
     pub fn alloc_tensor_replicated(
         &self,
         values: &[i64],
         w: u32,
         copies: usize,
+    ) -> Result<TensorHandle> {
+        self.alloc_tensor_aligned(values, w, copies, 1)
+    }
+
+    /// Store a tensor across the farm's storage reserves. A tensor too
+    /// large for one block's reserve is split into **shards** (boundaries
+    /// on multiples of `align` — a matmul weight slab passes its row width
+    /// `n` so per-shard partial plans stay rectangular), each shard placed
+    /// on up to `copies` blocks (most-free-first), evicting
+    /// least-recently-used shards to host memory as needed. Every shard
+    /// must land at least one replica or the whole allocation fails (and
+    /// rolls back). Counts `len * 8` host bytes in per replica written.
+    pub fn alloc_tensor_aligned(
+        &self,
+        values: &[i64],
+        w: u32,
+        copies: usize,
+        align: usize,
+    ) -> Result<TensorHandle> {
+        self.alloc_tensor_inner(values, w, copies, align, None, true)
+    }
+
+    /// Allocate a zero-initialized **activation** tensor: a fabric-side
+    /// destination for fused compute (see
+    /// [`crate::coordinator::mapper::BlockTask::MatmulFused`]). Shards are
+    /// aligned to `align` elements (callers pass the row width so sink
+    /// tiles and row gathers stay inside one shard) and deliberately split
+    /// toward one shard per worker, so the tiles writing into it spread
+    /// across the farm. When the reserve allows, the alignment is widened
+    /// to the least common multiple of `align` and the column count, so
+    /// shard boundaries coincide with output-tile boundaries and the
+    /// mapper's tiles never fragment. The zeros are created block-side:
+    /// **no host bytes are counted** — that is the point of the on-fabric
+    /// path.
+    pub fn alloc_activation(&self, len: usize, w: u32, align: usize) -> Result<TensorHandle> {
+        let spread = len.div_ceil(self.blocks.len().max(1));
+        let zeros = vec![0; len];
+        let cols = self.geometry.cols();
+        let tile_align = lcm(align.max(1), cols);
+        match self.alloc_tensor_inner(&zeros, w, 1, tile_align, Some(spread), false) {
+            Ok(h) => Ok(h),
+            // a tile-aligned unit may not fit a small reserve; plain row
+            // alignment is always correct, just tile-fragmenting
+            Err(_) => self.alloc_tensor_inner(&zeros, w, 1, align, Some(spread), false),
+        }
+    }
+
+    fn alloc_tensor_inner(
+        &self,
+        values: &[i64],
+        w: u32,
+        copies: usize,
+        align: usize,
+        target_elems: Option<usize>,
+        count_bytes: bool,
     ) -> Result<TensorHandle> {
         ensure!(
             self.placement.reserve_rows() > 0,
@@ -376,74 +440,95 @@ impl BlockFarm {
         ensure!(!values.is_empty(), "empty tensor");
         ensure!(copies >= 1, "zero replicas requested");
         store::check_int_range(values, w)?;
-        let rows = store::tensor_rows(self.geometry, w, values.len());
-        let (_, capacity) = self.placement.occupancy(0);
-        ensure!(
-            rows <= capacity,
-            "tensor needs {rows} storage rows, the per-block reserve holds {capacity}"
-        );
         let _guard = self.tensor_lock.lock().unwrap();
-        let h = self.placement.register(w, values.len());
-        let mut placed = 0usize;
-        let mut tried: Vec<usize> = Vec::new();
-        while placed < copies.min(self.blocks.len()) {
-            let Some(worker) = self.placement.pick_worker(rows, &tried) else { break };
-            tried.push(worker);
-            if self.place_replica(h, worker, values, w)? {
-                placed += 1;
+        let Some(h) =
+            self.placement.register_sharded(w, values.len(), align, target_elems)
+        else {
+            let (_, capacity) = self.placement.occupancy(0);
+            bail!(
+                "a {align}-element unit of an int{w} tensor does not fit the \
+                 {capacity}-row per-block reserve"
+            );
+        };
+        let mut written = 0usize;
+        for (idx, (soff, slen)) in self.placement.shard_ranges(h).into_iter().enumerate() {
+            let rows = store::tensor_rows(self.geometry, w, slen);
+            let shard_vals = &values[soff..soff + slen];
+            let mut placed = 0usize;
+            let mut tried: Vec<usize> = Vec::new();
+            while placed < copies.min(self.blocks.len()) {
+                let Some(worker) = self.placement.pick_worker(rows, &tried) else { break };
+                tried.push(worker);
+                if self.place_shard(h, idx as u32, worker, shard_vals, w)? {
+                    placed += 1;
+                }
             }
+            if placed == 0 {
+                self.placement.remove(h);
+                bail!(
+                    "no storage space for shard {idx} ({rows} rows) of a \
+                     {}-element tensor on any block",
+                    values.len()
+                );
+            }
+            written += slen * placed;
         }
-        if placed == 0 {
-            self.placement.remove(h);
-            bail!("no storage space for a {rows}-row tensor on any block");
+        if count_bytes {
+            self.placement.add_host_bytes_in((written * 8) as u64);
         }
-        self.placement.add_host_bytes_in((values.len() * 8 * placed) as u64);
         Ok(h)
     }
 
-    /// Place one replica on `worker`, evicting LRU tensors until it fits.
-    /// Returns `false` if this worker cannot fit it at all.
-    fn place_replica(
+    /// Place one replica of shard `shard` on `worker`, evicting LRU shards
+    /// until it fits. Returns `false` if this worker cannot fit it at all.
+    fn place_shard(
         &self,
         h: TensorHandle,
+        shard: u32,
         worker: usize,
         values: &[i64],
         w: u32,
     ) -> Result<bool> {
         loop {
-            match self.placement.place(h, worker) {
+            match self.placement.place(h, shard, worker) {
                 PlaceAttempt::Placed { base } => {
                     let mut block = self.blocks[worker].lock().unwrap();
                     store::write_tensor_rows(block.array_mut(), values, w, base);
                     return Ok(true);
                 }
-                PlaceAttempt::Evict { victim } => self.evict_replica(victim, worker)?,
+                PlaceAttempt::Evict { victim, shard: vs } => {
+                    self.evict_replica(victim, vs, worker)?;
+                }
                 PlaceAttempt::NoFit => return Ok(false),
             }
         }
     }
 
-    /// Spill `victim`'s replica on `worker` back to host memory (loss-less:
-    /// the values are read out of the array first). Counts the read as
-    /// host-bound traffic.
-    fn evict_replica(&self, victim: TensorHandle, worker: usize) -> Result<()> {
-        let Some((base, w, len)) = self.placement.region_of(victim, worker) else {
+    /// Spill one shard replica of `victim` on `worker` back to host memory
+    /// (loss-less: the values are read out of the array first). Counts the
+    /// read as host-bound traffic. The victim's other shards stay
+    /// resident — eviction degrades a large tensor to a partial host
+    /// fallback, not a total one.
+    fn evict_replica(&self, victim: TensorHandle, shard: u32, worker: usize) -> Result<()> {
+        let Some((base, w, _soff, slen)) = self.placement.region_of(victim, shard, worker)
+        else {
             return Ok(()); // already gone
         };
         let values = {
             let block = self.blocks[worker].lock().unwrap();
-            store::read_tensor_rows(block.array(), len, w, base)
+            store::read_tensor_rows(block.array(), slen, w, base)
         };
         self.placement.add_host_bytes_out((values.len() * 8) as u64);
-        self.placement.evict(victim, worker, values);
+        self.placement.evict(victim, shard, worker, values);
         Ok(())
     }
 
-    /// Overwrite a tensor's values on every replica (length must match the
-    /// allocation). A fully evicted tensor's host copy is replaced instead.
+    /// Overwrite a tensor's values on every shard replica (length must
+    /// match the allocation) — a scatter across the shard homes. A fully
+    /// evicted shard's host copy is replaced instead.
     pub fn write_tensor(&self, h: TensorHandle, values: &[i64]) -> Result<()> {
         let _guard = self.tensor_lock.lock().unwrap();
-        let Some((w, len, homes)) = self.placement.write_targets(h) else {
+        let Some((w, len, shard_writes)) = self.placement.write_plan(h) else {
             bail!("unknown tensor handle {}", h.id());
         };
         ensure!(
@@ -453,35 +538,54 @@ impl BlockFarm {
             values.len()
         );
         store::check_int_range(values, w)?;
-        if homes.is_empty() {
-            self.placement.set_host_copy(h, values.to_vec());
-            return Ok(());
+        let mut bytes = 0usize;
+        for sw in shard_writes {
+            let shard_vals = &values[sw.offset..sw.offset + sw.len];
+            if sw.homes.is_empty() {
+                self.placement.set_host_copy(h, sw.index, shard_vals.to_vec());
+                continue;
+            }
+            for (worker, base) in &sw.homes {
+                let mut block = self.blocks[*worker].lock().unwrap();
+                store::write_tensor_rows(block.array_mut(), shard_vals, w, *base);
+            }
+            // a partially evicted shard keeps a host backup alongside its
+            // replicas — refresh it so it can never go stale
+            if sw.has_host {
+                self.placement.refresh_host_copy(h, sw.index, shard_vals);
+            }
+            bytes += sw.len * 8 * sw.homes.len();
         }
-        for (worker, base) in &homes {
-            let mut block = self.blocks[*worker].lock().unwrap();
-            store::write_tensor_rows(block.array_mut(), values, w, *base);
-        }
-        // a partially evicted tensor keeps a host backup alongside its
-        // replicas — refresh it so it can never go stale
-        self.placement.refresh_host_copy(h, values);
-        self.placement.add_host_bytes_in((values.len() * 8 * homes.len()) as u64);
+        self.placement.add_host_bytes_in(bytes as u64);
         Ok(())
     }
 
-    /// Read a tensor's values back to the host (from a replica block, or
-    /// from the host copy if fully evicted).
+    /// Read a tensor's values back to the host — a gather across the shard
+    /// homes (each shard from a replica block, or from its host copy if
+    /// evicted).
     pub fn read_tensor(&self, h: TensorHandle) -> Result<Vec<i64>> {
         let _guard = self.tensor_lock.lock().unwrap();
-        match self.placement.read_source(h) {
-            ReadSource::Block { worker, base, w, len } => {
-                let block = self.blocks[worker].lock().unwrap();
-                let values = store::read_tensor_rows(block.array(), len, w, base);
-                self.placement.add_host_bytes_out((values.len() * 8) as u64);
-                Ok(values)
+        let Some((w, len, reads)) = self.placement.read_plan(h) else {
+            bail!("unknown tensor handle {}", h.id());
+        };
+        let mut out: Vec<i64> = Vec::with_capacity(len);
+        let mut block_bytes = 0usize;
+        for r in reads {
+            match r.src {
+                ShardSource::Block { worker, base } => {
+                    let block = self.blocks[worker].lock().unwrap();
+                    out.extend(store::read_tensor_rows(block.array(), r.len, w, base));
+                    block_bytes += r.len * 8;
+                }
+                ShardSource::Host(values) => out.extend_from_slice(&values),
+                ShardSource::Missing => bail!(
+                    "tensor {} has a shard with no replica and no host copy",
+                    h.id()
+                ),
             }
-            ReadSource::Host(values) => Ok(values.as_ref().clone()),
-            ReadSource::Missing => bail!("unknown tensor handle {}", h.id()),
         }
+        self.placement.add_host_bytes_out(block_bytes as u64);
+        Ok(out)
     }
 
     /// Free a tensor: every replica's rows return to the reserve.
@@ -557,17 +661,18 @@ impl BlockFarm {
         BatchHandle { batch, n_tasks: n, submit_depths }
     }
 
-    /// The workers a task is bound to by its resident operands: the
-    /// intersection of the operands' replica sets (falling back to the
-    /// first operand's set if the intersection is empty — the scheduler
-    /// materializes one side of disjoint pairs, so this is a last resort).
-    /// `None` means unpinned. A fully evicted tensor imposes no pin; the
+    /// The workers a task is bound to by its resident slices: the
+    /// intersection of the slices' shard-home sets (falling back to the
+    /// first slice's set if the intersection is empty — the scheduler
+    /// materializes one side of disjoint pairs, and fused tasks list their
+    /// sink first, so the surviving set is the one that matters most).
+    /// `None` means unpinned. A fully evicted shard imposes no pin; the
     /// worker falls back to its host copy.
     fn pin_workers(&self, task: &BlockTask) -> Option<Vec<usize>> {
-        let handles = task.resident_handles();
+        let slices = task.resident_slices();
         let mut pin: Option<Vec<usize>> = None;
-        for h in handles {
-            let homes = self.placement.homes(h);
+        for s in slices {
+            let homes = self.placement.slice_homes(s.handle, s.offset, s.len);
             if homes.is_empty() {
                 continue;
             }
@@ -624,10 +729,62 @@ struct TaskRun {
     resident_hits: u64,
 }
 
+/// Gather the values of a resident-tensor slice on this worker: local
+/// shard parts read the block's array in place (hits), evicted parts fall
+/// back to their host copies (misses, at host-traffic cost), and parts
+/// resident only elsewhere are routing errors. Returns
+/// `(values, host_bytes_in, resident_hits)`.
+fn gather_slice(
+    s: &TensorSlice,
+    worker: usize,
+    block: &CramBlock,
+    placement: &PlacementMap,
+) -> Result<(Vec<i64>, u64, u64)> {
+    match placement.resolve_slice(s.handle, s.offset, s.len, worker) {
+        SliceResolution::Missing => {
+            bail!("tensor handle {} is not allocated", s.handle.id())
+        }
+        SliceResolution::OutOfRange { len } => bail!(
+            "slice {}..{} exceeds tensor length {len}",
+            s.offset,
+            s.offset + s.len
+        ),
+        SliceResolution::Parts { w, parts } => {
+            let mut vals: Vec<i64> = Vec::with_capacity(s.len);
+            let mut bytes = 0u64;
+            let mut hits = 0u64;
+            for part in parts {
+                match part {
+                    SlicePart::Local { base, start, len } => {
+                        vals.extend(store::read_tensor_slice(
+                            block.array(),
+                            w,
+                            base,
+                            start,
+                            len,
+                        ));
+                        hits += 1;
+                    }
+                    SlicePart::Host { values, start, len } => {
+                        vals.extend_from_slice(&values[start..start + len]);
+                        bytes += (len * 8) as u64;
+                    }
+                    SlicePart::Remote { workers } => bail!(
+                        "tensor {} is resident on workers {workers:?}, \
+                         but the task ran on {worker}",
+                        s.handle.id()
+                    ),
+                }
+            }
+            Ok((vals, bytes, hits))
+        }
+    }
+}
+
 /// Resolve a task operand into values the ops layer can stage. Inline
-/// operands count their bytes as host traffic; resident operands are read
-/// from this worker's block in place (a hit) or from the host backing copy
-/// of an evicted tensor (a miss, at host-traffic cost).
+/// operands count their bytes as host traffic; resident operands are
+/// gathered from this worker's block (and any evicted shards' host
+/// copies).
 fn resolve_operand<'t>(
     op: &'t Operand,
     worker: usize,
@@ -636,36 +793,116 @@ fn resolve_operand<'t>(
 ) -> Result<(Cow<'t, [i64]>, u64, u64)> {
     match op {
         Operand::Inline(v) => Ok((Cow::Borrowed(&v[..]), (v.len() * 8) as u64, 0)),
-        Operand::Resident(s) => match placement.resolve(s.handle, worker) {
-            Resolution::Local { base, w, len } => {
-                ensure!(
-                    s.offset + s.len <= len,
-                    "slice {}..{} exceeds tensor length {len}",
-                    s.offset,
-                    s.offset + s.len
-                );
-                let vals = store::read_tensor_slice(block.array(), w, base, s.offset, s.len);
-                Ok((Cow::Owned(vals), 0, 1))
-            }
-            Resolution::Host { values, .. } => {
-                ensure!(
-                    s.offset + s.len <= values.len(),
-                    "slice {}..{} exceeds tensor length {}",
-                    s.offset,
-                    s.offset + s.len,
-                    values.len()
-                );
-                let vals = values[s.offset..s.offset + s.len].to_vec();
-                let bytes = (vals.len() * 8) as u64;
-                Ok((Cow::Owned(vals), bytes, 0))
-            }
-            Resolution::Elsewhere { workers } => bail!(
-                "tensor {} is resident on workers {workers:?}, but the task ran on {worker}",
-                s.handle.id()
-            ),
-            Resolution::Missing => bail!("tensor handle {} is not allocated", s.handle.id()),
-        },
+        Operand::Resident(s) => {
+            let (vals, bytes, hits) = gather_slice(s, worker, block, placement)?;
+            Ok((Cow::Owned(vals), bytes, hits))
+        }
     }
+}
+
+/// Resolve the `x` rows a matmul tile needs, K-sliced to `[k0, k1)`:
+/// inline rows ship with the task (host traffic); resident rows gather
+/// from the activation tensor in place. Returns
+/// `(rows, host_bytes_in, resident_hits)`.
+#[allow(clippy::too_many_arguments)]
+fn resolve_x_rows(
+    x: &TaskX,
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+    worker: usize,
+    block: &CramBlock,
+    placement: &PlacementMap,
+) -> Result<(Vec<Vec<i64>>, u64, u64)> {
+    let kseg = k1 - k0;
+    match x {
+        TaskX::Inline(rows) => {
+            ensure!(rows.len() == i1 - i0, "x tile height mismatch");
+            let elems: usize = rows.iter().map(Vec::len).sum();
+            // inline fused rows carry the full K and are sliced here;
+            // inline resident-matmul rows are already K-sliced
+            let sliced: Vec<Vec<i64>> = rows
+                .iter()
+                .map(|r| {
+                    ensure!(r.len() >= kseg, "x row shorter than segment k={kseg}");
+                    Ok(if r.len() == kseg {
+                        r.clone()
+                    } else {
+                        r[k0..k1].to_vec()
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Ok((sliced, (elems * 8) as u64, 0))
+        }
+        TaskX::Resident { handle, k } => {
+            ensure!(k1 <= *k, "segment k-range exceeds x width {k}");
+            if kseg == *k {
+                // whole rows form one contiguous range: a single gather
+                // (one placement-lock acquisition) instead of one per row
+                let s = TensorSlice {
+                    handle: *handle,
+                    offset: i0 * k,
+                    len: (i1 - i0) * k,
+                };
+                let (flat, bytes, hits) = gather_slice(&s, worker, block, placement)?;
+                let rows = flat.chunks(*k).map(|c| c.to_vec()).collect();
+                return Ok((rows, bytes, hits));
+            }
+            let mut rows = Vec::with_capacity(i1 - i0);
+            let mut bytes = 0u64;
+            let mut hits = 0u64;
+            for i in i0..i1 {
+                let s = TensorSlice { handle: *handle, offset: i * k + k0, len: kseg };
+                let (v, b, h) = gather_slice(&s, worker, block, placement)?;
+                rows.push(v);
+                bytes += b;
+                hits += h;
+            }
+            Ok((rows, bytes, hits))
+        }
+    }
+}
+
+/// Expand a matmul tile into the two dot operands block-side: column `c`
+/// of the batch is output `(c / n, c % n)`.
+#[allow(clippy::too_many_arguments)]
+fn expand_dot_tile(
+    xrows: &[Vec<i64>],
+    xk0: usize,
+    slab: &[i64],
+    i0: usize,
+    n: usize,
+    c0: usize,
+    c1: usize,
+    kseg: usize,
+) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
+    let ncols = c1 - c0;
+    let mut a = vec![vec![0i64; ncols]; kseg];
+    let mut b = vec![vec![0i64; ncols]; kseg];
+    for (ci, c) in (c0..c1).enumerate() {
+        let xi = c / n - i0;
+        let j = c % n;
+        for (kk, (arow, brow)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            arow[ci] = xrows[xi][xk0 + kk];
+            brow[ci] = slab[kk * n + j];
+        }
+    }
+    (a, b)
+}
+
+/// The storage reserve is only safe if no kernel body can reach it.
+fn check_kernel_fits(kernel: &CompiledKernel, placement: &PlacementMap) -> Result<()> {
+    if placement.reserve_rows() > 0 {
+        ensure!(
+            kernel.body_rows() <= placement.compute_rows(),
+            "kernel {} spans {} rows, the reserve caps compute at {}",
+            kernel.name(),
+            kernel.body_rows(),
+            placement.compute_rows()
+        );
+    }
+    Ok(())
 }
 
 /// Execute one task on one worker's block using cached kernels.
@@ -677,16 +914,7 @@ fn run_task(
     task: &BlockTask,
 ) -> Result<TaskRun> {
     let kernel = cache.get(task.key());
-    if placement.reserve_rows() > 0 {
-        // the storage reserve is only safe if no kernel body can reach it
-        ensure!(
-            kernel.body_rows() <= placement.compute_rows(),
-            "kernel {} spans {} rows, the reserve caps compute at {}",
-            kernel.name(),
-            kernel.body_rows(),
-            placement.compute_rows()
-        );
-    }
+    check_kernel_fits(&kernel, placement)?;
     match task {
         BlockTask::IntElementwise { a, b, .. } => {
             let (av, in_a, hit_a) = resolve_operand(a, worker, block, placement)?;
@@ -723,38 +951,115 @@ fn run_task(
                 resident_hits: 0,
             })
         }
-        BlockTask::MatmulResident { x, i0, weights, n, c0, c1, .. } => {
-            let (i0, n, c0, c1) = (*i0, *n, *c0, *c1);
-            let wop = Operand::Resident(*weights);
-            let (slab, in_w, hit_w) = resolve_operand(&wop, worker, block, placement)?;
-            let l = kernel.dot_layout()?;
-            let kseg = l.k;
-            ensure!(
-                x.iter().all(|r| r.len() == kseg),
-                "x tile width != segment k={kseg}"
-            );
+        BlockTask::MatmulResident { x, i0, k0, k1, weights, n, c0, c1, .. } => {
+            let (i0, k0, k1, n, c0, c1) = (*i0, *k0, *k1, *n, *c0, *c1);
+            let kseg = k1 - k0;
+            let (slab, in_w, hit_w) = gather_slice(weights, worker, block, placement)?;
             ensure!(slab.len() == kseg * n, "weight slab length mismatch");
+            let i1 = (c1 - 1) / n + 1;
+            let (xrows, in_x, hit_x) =
+                resolve_x_rows(x, i0, i1, k0, k1, worker, block, placement)?;
             let ncols = c1 - c0;
-            // expand both dot operands block-side: only `x` crossed the
+            // expand both dot operands block-side: at most `x` crossed the
             // host boundary, and only once per tile
-            let mut a = vec![vec![0i64; ncols]; kseg];
-            let mut b = vec![vec![0i64; ncols]; kseg];
-            for (ci, c) in (c0..c1).enumerate() {
-                let xi = c / n - i0;
-                let j = c % n;
-                for (kk, (arow, brow)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
-                    arow[ci] = x[xi][kk];
-                    brow[ci] = slab[kk * n + j];
-                }
-            }
+            let (a, b) = expand_dot_tile(&xrows, 0, &slab, i0, n, c0, c1, kseg);
             let r = ops::int_dot_compiled(block, &kernel, &a, &b)?;
-            let x_elems: usize = x.iter().map(Vec::len).sum();
             Ok(TaskRun {
                 values: r.values[..ncols].to_vec(),
                 stats: r.stats,
-                host_bytes_in: (x_elems * 8) as u64 + in_w,
+                host_bytes_in: in_x + in_w,
                 host_bytes_out: (ncols * 8) as u64,
-                resident_hits: hit_w,
+                resident_hits: hit_w + hit_x,
+            })
+        }
+        BlockTask::MatmulFused { segs, x, i0, n, c0, c1, bias, relu_shift, sink } => {
+            let (i0, n, c0, c1) = (*i0, *n, *c0, *c1);
+            let ncols = c1 - c0;
+            let full_k = segs.last().map_or(0, |s| s.k1);
+            ensure!(full_k > 0, "fused matmul with no chunks");
+            let i1 = (c1 - 1) / n + 1;
+            // the full-K rows cross the boundary (or resolve in place)
+            // once; every chunk slices them block-side
+            let (xrows, in_x, hit_x) =
+                resolve_x_rows(x, i0, i1, 0, full_k, worker, block, placement)?;
+            let mut acc = vec![0i64; ncols];
+            let mut stats = CycleStats::default();
+            let mut bytes_in = in_x;
+            let mut hits = hit_x;
+            for seg in segs {
+                let kseg = seg.k1 - seg.k0;
+                let seg_kernel = cache.get(seg.key);
+                check_kernel_fits(&seg_kernel, placement)?;
+                let (slab, in_w, hit_w) =
+                    gather_slice(&seg.weights, worker, block, placement)?;
+                ensure!(slab.len() == kseg * n, "weight slab length mismatch");
+                bytes_in += in_w;
+                hits += hit_w;
+                let (a, b) = expand_dot_tile(&xrows, seg.k0, &slab, i0, n, c0, c1, kseg);
+                let r = ops::int_dot_compiled(block, &seg_kernel, &a, &b)?;
+                // combine the partials block-side, in the same int32
+                // wraparound the host reduction uses — bit-exact either way
+                for (ci, v) in r.values[..ncols].iter().enumerate() {
+                    acc[ci] = (acc[ci] + v) as i32 as i64;
+                }
+                stats.cycles += r.stats.cycles;
+                stats.array_cycles += r.stats.array_cycles;
+                stats.instructions += r.stats.instructions;
+            }
+            // epilogue: bias add, then ReLU + power-of-two requant — the
+            // block shell's "external logic" role, same arithmetic as
+            // crate::nn::relu_requant
+            if let Some(bias) = bias {
+                ensure!(bias.len() == n, "bias length mismatch");
+                for (ci, c) in (c0..c1).enumerate() {
+                    acc[ci] = (acc[ci] + bias[c % n]) as i32 as i64;
+                }
+            }
+            if let Some(shift) = relu_shift {
+                for v in &mut acc {
+                    *v = (v.max(0) >> shift).clamp(-128, 127);
+                }
+            }
+            if let Some(s) = sink {
+                // deposit the tile straight into the sink tensor's region
+                // on this block: the output never crosses the host
+                // boundary — the engine pinned the task here for exactly
+                // this reason
+                match placement.resolve_slice(s.handle, s.offset, s.len, worker) {
+                    SliceResolution::Parts { w: sw, parts } if parts.len() == 1 => {
+                        let SlicePart::Local { base, start, len } = &parts[0] else {
+                            bail!(
+                                "sink tensor {} is not resident on worker {worker}",
+                                s.handle.id()
+                            );
+                        };
+                        ensure!(*len == ncols, "sink slice length mismatch");
+                        store::check_int_range(&acc, sw).map_err(|e| {
+                            anyhow!("fused output does not fit the int{sw} sink: {e}")
+                        })?;
+                        store::write_tensor_slice(block.array_mut(), &acc, sw, *base, *start);
+                        placement.note_sink_write(s.handle, s.offset);
+                        hits += 1;
+                        return Ok(TaskRun {
+                            values: Vec::new(),
+                            stats,
+                            host_bytes_in: bytes_in,
+                            host_bytes_out: 0,
+                            resident_hits: hits,
+                        });
+                    }
+                    _ => bail!(
+                        "sink tensor {} is unavailable on worker {worker}",
+                        s.handle.id()
+                    ),
+                }
+            }
+            Ok(TaskRun {
+                values: acc,
+                stats,
+                host_bytes_in: bytes_in,
+                host_bytes_out: (ncols * 8) as u64,
+                resident_hits: hits,
             })
         }
     }
@@ -1165,7 +1470,6 @@ mod tests {
 
     #[test]
     fn write_after_partial_eviction_refreshes_the_host_copy() {
-        use crate::exec::placement::Resolution;
         // reserve of 8 rows: one 40-element int8 tensor per block
         let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 8);
         let v0 = vec![1i64; 40];
@@ -1179,13 +1483,36 @@ mod tests {
         // host backup must both see the new values
         farm.write_tensor(h, &v1).unwrap();
         assert_eq!(farm.read_tensor(h).unwrap(), v1, "replica updated");
-        match farm.placement().resolve(h, 0) {
-            Resolution::Host { values, .. } => {
-                assert_eq!(*values, v1, "host backup must not be stale");
-            }
+        match farm.placement().resolve_slice(h, 0, 40, 0) {
+            SliceResolution::Parts { parts, .. } => match &parts[0] {
+                SlicePart::Host { values, .. } => {
+                    assert_eq!(**values, v1, "host backup must not be stale");
+                }
+                other => panic!("{other:?}"),
+            },
             other => panic!("{other:?}"),
         }
         let _ = f1;
+    }
+
+    #[test]
+    fn oversized_tensor_shards_across_blocks_and_round_trips() {
+        // a 16-row int8 reserve holds 80 elements per shard; 120 elements
+        // need two shards, spread over the two workers
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 16);
+        let vals: Vec<i64> = (0..120).map(|i| (i % 23) - 11).collect();
+        let h = farm.alloc_tensor(&vals, 8).unwrap();
+        assert_eq!(farm.placement().shard_count(h), 2);
+        let mut homes = farm.placement().homes(h);
+        homes.sort_unstable();
+        assert_eq!(homes, vec![0, 1], "shards spread across the farm");
+        assert_eq!(farm.read_tensor(h).unwrap(), vals);
+        let vals2: Vec<i64> = vals.iter().map(|v| -v).collect();
+        farm.write_tensor(h, &vals2).unwrap();
+        assert_eq!(farm.read_tensor(h).unwrap(), vals2);
+        assert_eq!(farm.data_stats().shards, 2);
+        farm.free_tensor(h).unwrap();
+        assert_eq!(farm.data_stats().shards, 0);
     }
 
     #[test]

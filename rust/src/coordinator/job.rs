@@ -36,12 +36,34 @@ impl OperandRef {
 
 /// One K-segment of a resident matmul: rows `k0..k1` of the weight matrix,
 /// flattened row-major into the tensor behind `handle` (length
-/// `(k1 - k0) * n`).
+/// `(k1 - k0) * n`). A slab too large for one block's storage reserve is
+/// sharded by the allocator; the mapper then splits the segment further
+/// into per-shard partial plans.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MatSeg {
     pub k0: usize,
     pub k1: usize,
     pub handle: TensorHandle,
+}
+
+/// The `x` side of a matmul job: rows shipped from the host, or a
+/// row-major `m x k` tensor already resident on the fabric (e.g. the
+/// activations a previous fused layer deposited through its sink), so the
+/// input never re-crosses the host boundary.
+#[derive(Clone, Debug)]
+pub enum MatX {
+    Rows(Vec<Vec<i64>>),
+    Resident { handle: TensorHandle, m: usize },
+}
+
+impl MatX {
+    /// Number of grid rows.
+    pub fn m(&self) -> usize {
+        match self {
+            MatX::Rows(rows) => rows.len(),
+            MatX::Resident { m, .. } => *m,
+        }
+    }
 }
 
 /// One unit of work submitted to the coordinator.
@@ -59,12 +81,39 @@ pub enum JobPayload {
     Bf16Elementwise { mul: bool, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
     /// Integer matmul `x[m][k] @ w[k][n] -> int32[m][n]` at width `w`.
     IntMatmul { w: u32, x: Vec<Vec<i64>>, wt: Vec<Vec<i64>> },
-    /// Integer matmul against **resident** weights: only `x` ships from
-    /// the host; the weight matrix lives on the farm as one tensor per
-    /// K-segment (see [`MatSeg`] and
+    /// Integer matmul against **resident** weights: at most `x` ships from
+    /// the host (it may itself be a resident tensor); the weight matrix
+    /// lives on the farm as one tensor per K-segment (see [`MatSeg`] and
     /// [`crate::nn::QuantLinear::make_resident`]), and each segment's
-    /// tasks run on a block holding a replica.
-    IntMatmulResident { w: u32, x: Vec<Vec<i64>>, n: usize, segments: Vec<MatSeg> },
+    /// tasks run on a block holding a replica of the shard they read.
+    IntMatmulResident { w: u32, x: MatX, n: usize, segments: Vec<MatSeg> },
+    /// Resident matmul with a fused on-fabric epilogue: every K-chunk of
+    /// one output tile runs on the same block, the int32 partials combine
+    /// block-side, `bias`/ReLU/requant apply, and — when `sink` is set —
+    /// the tile is deposited straight into the sink tensor's home block.
+    /// With a sink the job returns **no values** and its `host_bytes_out`
+    /// is 0: the output never leaves the fabric (the on-fabric activation
+    /// path between pipelined NN layers).
+    ///
+    /// Co-residency contract: a fused task executes on its sink tile's
+    /// home worker, so every weight chunk must be resident there too (or
+    /// carry a host copy) — replicate the slabs on every block, as
+    /// [`crate::nn::MlpInt8::forward_pipelined`] checks before choosing
+    /// this path. A sink shard evicted before its tile is written (only
+    /// possible under *concurrent* tensor allocations) fails the job
+    /// honestly rather than spilling through the host.
+    IntMatmulFused {
+        w: u32,
+        x: MatX,
+        n: usize,
+        segments: Vec<MatSeg>,
+        /// Per-output-column bias (length `n`), added in int32 wraparound.
+        bias: Option<Vec<i64>>,
+        /// ReLU then `>> shift`, clamped to int8 (the L2 model's requant).
+        relu_requant_shift: Option<u32>,
+        /// Destination tensor (length `m * n`) for the epilogued tiles.
+        sink: Option<TensorHandle>,
+    },
 }
 
 impl JobPayload {
@@ -83,7 +132,14 @@ impl JobPayload {
             JobPayload::IntMatmul { x, wt, .. } => {
                 x.len() * wt.first().map_or(0, Vec::len)
             }
-            JobPayload::IntMatmulResident { x, n, .. } => x.len() * n,
+            JobPayload::IntMatmulResident { x, n, .. } => x.m() * n,
+            JobPayload::IntMatmulFused { x, n, sink, .. } => {
+                if sink.is_some() {
+                    0
+                } else {
+                    x.m() * n
+                }
+            }
         }
     }
 
@@ -100,9 +156,10 @@ impl JobPayload {
             JobPayload::IntMatmul { x, wt, .. } => {
                 (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64
             }
-            JobPayload::IntMatmulResident { x, n, segments, .. } => {
+            JobPayload::IntMatmulResident { x, n, segments, .. }
+            | JobPayload::IntMatmulFused { x, n, segments, .. } => {
                 let k = segments.last().map_or(0, |s| s.k1);
-                (x.len() * k * n) as u64
+                (x.m() * k * n) as u64
             }
         }
     }
@@ -215,11 +272,24 @@ mod tests {
         let seg = |k0, k1, id| MatSeg { k0, k1, handle: TensorHandle::from_id(id) };
         let j = JobPayload::IntMatmulResident {
             w: 8,
-            x: vec![vec![0; 48]; 6],
+            x: MatX::Rows(vec![vec![0; 48]; 6]),
             n: 10,
             segments: vec![seg(0, 30, 1), seg(30, 48, 2)],
         };
         assert_eq!(j.result_len(), 60);
         assert_eq!(j.op_count(), 6 * 48 * 10);
+        // a resident x reports its declared m; a sunk fused job returns
+        // nothing but still counts its executed ops
+        let fused = JobPayload::IntMatmulFused {
+            w: 8,
+            x: MatX::Resident { handle: TensorHandle::from_id(3), m: 6 },
+            n: 10,
+            segments: vec![seg(0, 48, 1)],
+            bias: None,
+            relu_requant_shift: None,
+            sink: Some(TensorHandle::from_id(4)),
+        };
+        assert_eq!(fused.result_len(), 0);
+        assert_eq!(fused.op_count(), 6 * 48 * 10);
     }
 }

@@ -3,13 +3,26 @@
 //! The mapper knows the packed capacity of one block for each operation
 //! (from [`crate::ucode::layout`]) and splits jobs accordingly:
 //!
-//! * elementwise vectors chunk by `total_ops()` per block;
+//! * elementwise vectors chunk by `total_ops()` per block, with chunk
+//!   boundaries clipped to the shard boundaries of any resident operand so
+//!   every task's slice resolves inside a single shard;
 //! * dot batches chunk by columns (one dot per column), and dot products
 //!   longer than the per-column pair budget are **split along K** into
 //!   partial dots whose int32 partials are summed by the host (the
 //!   "external logic" role);
 //! * matmuls lower to dot batches: output element `(i, j)` is the dot of
-//!   `x[i][..]` with column `j` of `w`, tiled over columns and K.
+//!   `x[i][..]` with column `j` of `w`, tiled over columns and K;
+//! * resident matmuls additionally split **per shard** of each weight
+//!   slab: a slab too large for one block's reserve spans shards on
+//!   different workers, so each shard becomes its own K-subrange of
+//!   partial-sum tasks pinned to that shard's home (see
+//!   [`matmul_chunks`]);
+//! * fused matmuls ([`BlockTask::MatmulFused`]) carry *all* K-chunks in
+//!   one task per output tile: the worker runs the chunks back to back,
+//!   combines the partials block-side, applies the bias/ReLU/requant
+//!   epilogue, and (optionally) writes the tile straight into a resident
+//!   **sink** tensor — the on-fabric activation path, where layer-N output
+//!   never crosses the host boundary on its way to layer-N+1.
 //!
 //! Planning happens against a [`PlanEnv`]: the farm's geometry, the rows
 //! available to kernel bodies (smaller than the geometry on farms with a
@@ -17,12 +30,17 @@
 //! resolve tensor references. Task operands are [`Operand`]s — inline
 //! vectors shipped from the host, or [`TensorSlice`]s of resident tensors
 //! that the engine resolves in place on the block storing them.
+//!
+//! Every plan carries its own [`ReduceStep`] per task, so the scheduler's
+//! host-side reduction is data-driven: scatter for elementwise chunks,
+//! accumulate for partial sums, nothing for tiles sunk on-fabric.
 
-use super::job::{EwOp, JobPayload, MatSeg, OperandRef};
+use super::job::{EwOp, JobPayload, MatSeg, MatX, OperandRef};
 use crate::bitline::Geometry;
 use crate::exec::{KernelKey, KernelOp, PlacementMap, TensorHandle, TensorSlice};
 use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
 use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
 
 /// A block-task operand: literal values staged from the host, or a slice
 /// of a resident tensor resolved from the executing block's own storage
@@ -46,13 +64,38 @@ impl Operand {
         self.len() == 0
     }
 
-    /// The tensor this operand is bound to, if resident.
-    pub fn handle(&self) -> Option<TensorHandle> {
+    /// The tensor slice this operand is bound to, if resident.
+    pub fn slice(&self) -> Option<TensorSlice> {
         match self {
             Operand::Inline(_) => None,
-            Operand::Resident(s) => Some(s.handle),
+            Operand::Resident(s) => Some(*s),
         }
     }
+}
+
+/// The `x` side of a matmul task: rows shipped with the task, or rows
+/// resolved from a resident (activation) tensor on the executing block.
+#[derive(Clone, Debug)]
+pub enum TaskX {
+    /// For [`BlockTask::MatmulResident`] the rows are already K-sliced to
+    /// the task's `[k0, k1)`; for [`BlockTask::MatmulFused`] they carry
+    /// the full K (the worker slices per chunk).
+    Inline(Vec<Vec<i64>>),
+    /// Row-major `m x k` resident tensor; the worker gathers the rows it
+    /// needs as slices.
+    Resident { handle: TensorHandle, k: usize },
+}
+
+/// One K-chunk of a resident matmul: the dot kernel for its K-range and
+/// the weight-slab slice it multiplies against. Chunks never cross a
+/// weight shard boundary, so each one resolves inside a single shard.
+#[derive(Clone, Debug)]
+pub struct FusedSeg {
+    pub key: KernelKey,
+    pub weights: TensorSlice,
+    /// K-range of this chunk within the full matmul.
+    pub k0: usize,
+    pub k1: usize,
 }
 
 /// One block-sized task. Every task carries the [`KernelKey`] of the
@@ -67,47 +110,126 @@ pub enum BlockTask {
     IntDot { key: KernelKey, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
     Bf16Elementwise { key: KernelKey, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
     /// Matmul tile against resident weights: only the `x` rows the tile
-    /// needs ship with the task; the weight slab is resolved from the
-    /// executing block's storage and both dot operands are expanded
-    /// block-side. Output columns `c0..c1` of an `m x n` grid
-    /// (`c = i * n + j`), accumulated at `out_offset` like a split-K dot.
+    /// needs ship with the task (or resolve from a resident activation
+    /// tensor); the weight slab slice is resolved from the executing
+    /// block's storage and both dot operands are expanded block-side.
+    /// Output columns `c0..c1` of an `m x n` grid (`c = i * n + j`),
+    /// accumulated at `out_offset` like a split-K dot.
     MatmulResident {
         key: KernelKey,
-        /// `x[i0..i1]`, each row already K-sliced to this segment.
-        x: Vec<Vec<i64>>,
-        /// Grid row index of `x[0]`.
+        x: TaskX,
+        /// Grid row index of the tile's first row.
         i0: usize,
-        /// The segment's weight slab (`(k1 - k0) * n` values, row-major).
+        /// K-range of this partial within the full matmul.
+        k0: usize,
+        k1: usize,
+        /// The chunk's weight slab slice (`(k1 - k0) * n` values,
+        /// row-major within the slab tensor).
         weights: TensorSlice,
         n: usize,
         c0: usize,
         c1: usize,
         out_offset: usize,
     },
+    /// One output tile of a fused matmul: every K-chunk runs back to back
+    /// on the same block, the int32 partials combine block-side, the
+    /// epilogue (bias add, then ReLU + power-of-two requant) applies, and
+    /// the tile either returns to the host or lands in `sink` — a
+    /// resident tensor on this worker — without crossing the host
+    /// boundary.
+    MatmulFused {
+        segs: Vec<FusedSeg>,
+        /// Full-K rows (the worker slices per chunk).
+        x: TaskX,
+        i0: usize,
+        n: usize,
+        c0: usize,
+        c1: usize,
+        /// Per-output-column bias (length `n`, indexed by `c % n`).
+        bias: Option<Arc<Vec<i64>>>,
+        /// ReLU + `>> shift`, clamped to int8, after the bias.
+        relu_shift: Option<u32>,
+        /// Destination slice (`offset == c0`, `len == c1 - c0`) of a
+        /// resident tensor homed on the executing worker.
+        sink: Option<TensorSlice>,
+    },
 }
 
 impl BlockTask {
-    /// The kernel this task runs.
+    /// The kernel this task is routed by (fused tasks run several kernels;
+    /// the first chunk's key drives kernel-affinity routing).
     pub fn key(&self) -> KernelKey {
         match self {
             BlockTask::IntElementwise { key, .. }
             | BlockTask::IntDot { key, .. }
             | BlockTask::Bf16Elementwise { key, .. }
             | BlockTask::MatmulResident { key, .. } => *key,
+            BlockTask::MatmulFused { segs, .. } => {
+                segs.first().expect("fused task has chunks").key
+            }
         }
     }
 
-    /// Tensors this task must run next to (the engine's data-affinity
-    /// pin).
-    pub fn resident_handles(&self) -> Vec<TensorHandle> {
+    /// Covering slice of the rows a matmul task reads from a resident `x`
+    /// tensor (`None` for inline rows).
+    fn x_slice(x: &TaskX, i0: usize, i1: usize) -> Option<TensorSlice> {
+        match x {
+            TaskX::Inline(_) => None,
+            TaskX::Resident { handle, k } => Some(TensorSlice {
+                handle: *handle,
+                offset: i0 * k,
+                len: (i1 - i0) * k,
+            }),
+        }
+    }
+
+    /// Tensor slices this task must run next to (the engine's
+    /// data-affinity pin). Order matters: the sink comes first, so when
+    /// the pin intersection collapses the sink's home wins — a fused
+    /// task's output tile can only be deposited locally.
+    pub fn resident_slices(&self) -> Vec<TensorSlice> {
         match self {
             BlockTask::IntElementwise { a, b, .. } => {
-                a.handle().into_iter().chain(b.handle()).collect()
+                a.slice().into_iter().chain(b.slice()).collect()
             }
-            BlockTask::MatmulResident { weights, .. } => vec![weights.handle],
+            BlockTask::MatmulResident { x, i0, weights, n, c1, .. } => {
+                let i1 = (c1 - 1) / n + 1;
+                let mut out = Vec::new();
+                if let Some(s) = Self::x_slice(x, *i0, i1) {
+                    out.push(s);
+                }
+                out.push(*weights);
+                out
+            }
+            BlockTask::MatmulFused { segs, x, i0, n, c1, sink, .. } => {
+                let i1 = (c1 - 1) / n + 1;
+                let mut out = Vec::new();
+                if let Some(s) = sink {
+                    out.push(*s);
+                }
+                if let Some(s) = Self::x_slice(x, *i0, i1) {
+                    out.push(s);
+                }
+                out.extend(segs.iter().map(|s| s.weights));
+                out
+            }
             BlockTask::IntDot { .. } | BlockTask::Bf16Elementwise { .. } => Vec::new(),
         }
     }
+}
+
+/// Host-side reduction step for one task's output, decided at plan time so
+/// the scheduler never re-derives it from task shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceStep {
+    /// Scatter the chunk at its offset in the result vector.
+    Scatter { offset: usize },
+    /// Accumulate int32 partial sums at the offset (split-K dots,
+    /// resident-matmul chunks).
+    Accumulate { offset: usize },
+    /// The tile was written into a resident sink tensor on-fabric; there
+    /// is nothing to reduce host-side.
+    Sunk,
 }
 
 /// Planning context: geometry, the rows kernel bodies may use (capped by
@@ -185,15 +307,15 @@ pub(crate) fn ew_kernel_op(op: EwOp) -> KernelOp {
     }
 }
 
-/// Task list + reduction plan for a job.
+/// Task list + per-task reduction plan for a job.
 #[derive(Clone, Debug)]
 pub struct Plan {
     pub tasks: Vec<BlockTask>,
-    /// Result vector length (partial dots accumulate into it).
+    /// Result vector length (partial dots accumulate into it; fully sunk
+    /// plans produce 0).
     pub result_len: usize,
-    /// Offset ranges in the result covered by elementwise chunks, in task
-    /// order (elementwise tasks only).
-    pub ew_offsets: Vec<usize>,
+    /// One step per task, in task order.
+    pub steps: Vec<ReduceStep>,
 }
 
 /// A borrowed view of one elementwise job operand, so the inline plan
@@ -235,6 +357,20 @@ fn side_len(env: &PlanEnv, s: EwSide, w: u32) -> Result<usize> {
     }
 }
 
+/// The next shard boundary of a tensor operand after `off` (`usize::MAX`
+/// for inline values): elementwise chunks never straddle a shard, so each
+/// task pins cleanly to one shard's home workers.
+fn side_boundary(env: &PlanEnv, s: EwSide, off: usize) -> usize {
+    let EwSide::Tensor(h) = s else { return usize::MAX };
+    let Some(placement) = env.placement else { return usize::MAX };
+    for (soff, slen) in placement.shard_ranges(h) {
+        if off < soff + slen {
+            return soff + slen;
+        }
+    }
+    usize::MAX
+}
+
 /// Slice `[off, end)` of an operand view into a task operand.
 fn side_slice(s: EwSide, off: usize, end: usize) -> Operand {
     match s {
@@ -259,7 +395,7 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
             ensure!(a.len() == b.len(), "operand length mismatch");
             let cap = bf16_capacity_in(env);
             let mut tasks = Vec::new();
-            let mut ew_offsets = Vec::new();
+            let mut steps = Vec::new();
             let mut off = 0;
             while off < a.len() {
                 let end = (off + cap).min(a.len());
@@ -268,10 +404,10 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
                     a: a[off..end].to_vec(),
                     b: b[off..end].to_vec(),
                 });
-                ew_offsets.push(off);
+                steps.push(ReduceStep::Scatter { offset: off });
                 off = end;
             }
-            Ok(Plan { tasks, result_len: a.len(), ew_offsets })
+            Ok(Plan { tasks, result_len: a.len(), steps })
         }
         JobPayload::IntDot { w, a, b } => {
             ensure!(a.len() == b.len(), "K mismatch");
@@ -300,6 +436,18 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
         JobPayload::IntMatmulResident { w, x, n, segments } => {
             plan_matmul_resident(env, *w, x, *n, segments)
         }
+        JobPayload::IntMatmulFused { w, x, n, segments, bias, relu_requant_shift, sink } => {
+            plan_matmul_fused(
+                env,
+                *w,
+                x,
+                *n,
+                segments,
+                bias.as_deref(),
+                *relu_requant_shift,
+                *sink,
+            )
+        }
     }
 }
 
@@ -310,52 +458,95 @@ fn plan_ew(env: &PlanEnv, op: EwOp, w: u32, a: EwSide, b: EwSide) -> Result<Plan
     let kop = ew_kernel_op(op);
     let cap = ew_capacity_in(env, op, w);
     let mut tasks = Vec::new();
-    let mut ew_offsets = Vec::new();
+    let mut steps = Vec::new();
     let mut off = 0;
     while off < alen {
-        let end = (off + cap).min(alen);
+        let end = (off + cap)
+            .min(alen)
+            .min(side_boundary(env, a, off))
+            .min(side_boundary(env, b, off));
         tasks.push(BlockTask::IntElementwise {
             key: KernelKey::int_ew_sized(kop, w, end - off, env.geom),
             a: side_slice(a, off, end),
             b: side_slice(b, off, end),
         });
-        ew_offsets.push(off);
+        steps.push(ReduceStep::Scatter { offset: off });
         off = end;
     }
-    Ok(Plan { tasks, result_len: alen, ew_offsets })
+    Ok(Plan { tasks, result_len: alen, steps })
 }
 
-fn plan_matmul_resident(
+/// Shared validation of a resident matmul's shape: segments contiguous
+/// from 0, `x` consistent with the segmented K. Returns `(m, k)`.
+fn check_matmul_shape(
     env: &PlanEnv,
     w: u32,
-    x: &[Vec<i64>],
+    x: &MatX,
     n: usize,
     segments: &[MatSeg],
-) -> Result<Plan> {
+) -> Result<(usize, usize)> {
     ensure!(!segments.is_empty(), "resident matmul with no segments");
     ensure!(n >= 1, "resident matmul with zero output columns");
-    let k = segments.last().map_or(0, |s| s.k1);
     ensure!(segments[0].k0 == 0, "segments must start at k=0");
     ensure!(
         segments.windows(2).all(|p| p[0].k1 == p[1].k0),
         "segments must be contiguous"
     );
     ensure!(segments.iter().all(|s| s.k1 > s.k0), "empty segment");
-    ensure!(x.iter().all(|r| r.len() == k), "x width != segmented k");
+    let k = segments.last().map_or(0, |s| s.k1);
+    let m = match x {
+        MatX::Rows(rows) => {
+            ensure!(rows.iter().all(|r| r.len() == k), "x width != segmented k");
+            rows.len()
+        }
+        MatX::Resident { handle, m } => {
+            let Some(placement) = env.placement else {
+                bail!("resident matmul x on a farm without a placement map");
+            };
+            let Some((tw, tlen)) = placement.info(*handle) else {
+                bail!("unknown x tensor {}", handle.id());
+            };
+            ensure!(tw == w, "x tensor {} is int{tw}, matmul is int{w}", handle.id());
+            ensure!(
+                tlen == m * k,
+                "x tensor {} holds {tlen} values, matmul needs {m} x {k}",
+                handle.id()
+            );
+            // shards must hold whole rows, or per-tile row gathers (and
+            // tile pinning) would straddle shards
+            ensure!(
+                placement
+                    .shard_ranges(*handle)
+                    .iter()
+                    .all(|(off, _)| off % k == 0),
+                "x tensor {} shards are not row-aligned (allocate with row alignment)",
+                handle.id()
+            );
+            *m
+        }
+    };
+    Ok((m, k))
+}
+
+/// Split every weight segment into K-chunks that respect both the
+/// per-block dot capacity **and** the slab's shard boundaries. Weight
+/// slabs are row-major `kseg x n`, so a shard boundary at element
+/// `s * n` is a K-boundary at `k0 + s` — each chunk's slice resolves
+/// inside one shard and pins to that shard's home workers. This is the
+/// per-shard partial plan: every chunk contributes an int32 partial sum.
+fn matmul_chunks(
+    env: &PlanEnv,
+    w: u32,
+    n: usize,
+    segments: &[MatSeg],
+) -> Result<Vec<FusedSeg>> {
     let Some(placement) = env.placement else {
         bail!("resident matmul on a farm without a placement map");
     };
     let max_k = max_dot_k(env, w, 32);
-    let m = x.len();
-    let result_len = m * n;
-    let cols = env.geom.cols();
-    let mut tasks = Vec::new();
+    let mut chunks = Vec::new();
     for seg in segments {
         let kseg = seg.k1 - seg.k0;
-        ensure!(
-            kseg <= max_k,
-            "segment k={kseg} exceeds per-block dot capacity {max_k}"
-        );
         let Some((tw, tlen)) = placement.info(seg.handle) else {
             bail!("unknown weight tensor {}", seg.handle.id());
         };
@@ -366,28 +557,189 @@ fn plan_matmul_resident(
             seg.handle.id(),
             kseg * n
         );
-        let weights = TensorSlice { handle: seg.handle, offset: 0, len: tlen };
+        let ranges = placement.shard_ranges(seg.handle);
+        ensure!(!ranges.is_empty(), "weight tensor {} has no shards", seg.handle.id());
+        for (soff, slen) in ranges {
+            ensure!(
+                soff % n == 0 && slen % n == 0,
+                "weight tensor {} shards are not aligned to n={n} \
+                 (allocate the slab with alloc_tensor_aligned)",
+                seg.handle.id()
+            );
+            let ks0 = seg.k0 + soff / n;
+            let ks1 = ks0 + slen / n;
+            let mut c = ks0;
+            while c < ks1 {
+                let ce = (c + max_k).min(ks1);
+                chunks.push(FusedSeg {
+                    key: KernelKey::int_dot(w, 32, ce - c, env.geom),
+                    weights: TensorSlice {
+                        handle: seg.handle,
+                        offset: (c - seg.k0) * n,
+                        len: (ce - c) * n,
+                    },
+                    k0: c,
+                    k1: ce,
+                });
+                c = ce;
+            }
+        }
+    }
+    Ok(chunks)
+}
+
+/// Output-tile boundaries beyond the column-group size: a tile must not
+/// straddle a shard of the resident `x` tensor (its row gathers would
+/// span homes) nor a shard of the sink tensor (its deposit must land in
+/// one region).
+fn tile_breaks(
+    env: &PlanEnv,
+    x: &MatX,
+    n: usize,
+    k: usize,
+    sink: Option<TensorHandle>,
+) -> Vec<usize> {
+    let Some(placement) = env.placement else { return Vec::new() };
+    let mut breaks = Vec::new();
+    if let MatX::Resident { handle, .. } = x {
+        for (soff, _) in placement.shard_ranges(*handle) {
+            if soff > 0 {
+                breaks.push(soff / k * n);
+            }
+        }
+    }
+    if let Some(h) = sink {
+        for (soff, _) in placement.shard_ranges(h) {
+            if soff > 0 {
+                breaks.push(soff);
+            }
+        }
+    }
+    breaks
+}
+
+/// End of the tile starting at `c0`: at most one column group, clipped to
+/// the result length and any shard break.
+fn tile_end(c0: usize, cols: usize, result_len: usize, breaks: &[usize]) -> usize {
+    let mut c1 = (c0 + cols).min(result_len);
+    for &b in breaks {
+        if b > c0 && b < c1 {
+            c1 = b;
+        }
+    }
+    c1
+}
+
+/// The rows of `x` a tile `c0..c1` needs, K-sliced to `[k0, k1)`.
+fn x_tile(rows: &[Vec<i64>], i0: usize, i1: usize, k0: usize, k1: usize) -> Vec<Vec<i64>> {
+    rows[i0..i1].iter().map(|row| row[k0..k1].to_vec()).collect()
+}
+
+fn plan_matmul_resident(
+    env: &PlanEnv,
+    w: u32,
+    x: &MatX,
+    n: usize,
+    segments: &[MatSeg],
+) -> Result<Plan> {
+    let (m, k) = check_matmul_shape(env, w, x, n, segments)?;
+    let chunks = matmul_chunks(env, w, n, segments)?;
+    let result_len = m * n;
+    let cols = env.geom.cols();
+    let breaks = tile_breaks(env, x, n, k, None);
+    let mut tasks = Vec::new();
+    let mut steps = Vec::new();
+    for chunk in &chunks {
         let mut c0 = 0;
         while c0 < result_len {
-            let c1 = (c0 + cols).min(result_len);
+            let c1 = tile_end(c0, cols, result_len, &breaks);
             let i0 = c0 / n;
             let i1 = (c1 - 1) / n + 1;
-            let x_tile: Vec<Vec<i64>> =
-                x[i0..i1].iter().map(|row| row[seg.k0..seg.k1].to_vec()).collect();
+            let task_x = match x {
+                MatX::Rows(rows) => TaskX::Inline(x_tile(rows, i0, i1, chunk.k0, chunk.k1)),
+                MatX::Resident { handle, .. } => TaskX::Resident { handle: *handle, k },
+            };
             tasks.push(BlockTask::MatmulResident {
-                key: KernelKey::int_dot(w, 32, kseg, env.geom),
-                x: x_tile,
+                key: chunk.key,
+                x: task_x,
                 i0,
-                weights,
+                k0: chunk.k0,
+                k1: chunk.k1,
+                weights: chunk.weights,
                 n,
                 c0,
                 c1,
                 out_offset: c0,
             });
+            steps.push(ReduceStep::Accumulate { offset: c0 });
             c0 = c1;
         }
     }
-    Ok(Plan { tasks, result_len, ew_offsets: Vec::new() })
+    Ok(Plan { tasks, result_len, steps })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn plan_matmul_fused(
+    env: &PlanEnv,
+    w: u32,
+    x: &MatX,
+    n: usize,
+    segments: &[MatSeg],
+    bias: Option<&[i64]>,
+    relu_shift: Option<u32>,
+    sink: Option<TensorHandle>,
+) -> Result<Plan> {
+    let (m, k) = check_matmul_shape(env, w, x, n, segments)?;
+    let chunks = matmul_chunks(env, w, n, segments)?;
+    let out_len = m * n;
+    if let Some(b) = bias {
+        ensure!(b.len() == n, "bias length {} != n={n}", b.len());
+    }
+    if let Some(h) = sink {
+        let placement = env.placement.expect("checked by check_matmul_shape");
+        let Some((_, slen)) = placement.info(h) else {
+            bail!("unknown sink tensor {}", h.id());
+        };
+        ensure!(
+            slen == out_len,
+            "sink tensor {} holds {slen} values, matmul produces {out_len}",
+            h.id()
+        );
+    }
+    let bias = bias.map(|b| Arc::new(b.to_vec()));
+    let cols = env.geom.cols();
+    let breaks = tile_breaks(env, x, n, k, sink);
+    let mut tasks = Vec::new();
+    let mut steps = Vec::new();
+    let mut c0 = 0;
+    while c0 < out_len {
+        let c1 = tile_end(c0, cols, out_len, &breaks);
+        let i0 = c0 / n;
+        let i1 = (c1 - 1) / n + 1;
+        let task_x = match x {
+            MatX::Rows(rows) => TaskX::Inline(x_tile(rows, i0, i1, 0, k)),
+            MatX::Resident { handle, .. } => TaskX::Resident { handle: *handle, k },
+        };
+        tasks.push(BlockTask::MatmulFused {
+            segs: chunks.clone(),
+            x: task_x,
+            i0,
+            n,
+            c0,
+            c1,
+            bias: bias.clone(),
+            relu_shift,
+            sink: sink.map(|h| TensorSlice { handle: h, offset: c0, len: c1 - c0 }),
+        });
+        steps.push(if sink.is_some() {
+            ReduceStep::Sunk
+        } else {
+            ReduceStep::Scatter { offset: c0 }
+        });
+        c0 = c1;
+    }
+    let result_len = if sink.is_some() { 0 } else { out_len };
+    Ok(Plan { tasks, result_len, steps })
 }
 
 fn plan_dot(
@@ -402,6 +754,7 @@ fn plan_dot(
     let cols = env.geom.cols();
     let k = a.len();
     let mut tasks = Vec::new();
+    let mut steps = Vec::new();
     // split K into segments, columns into groups of `cols`
     let mut k0 = 0;
     while k0 < k {
@@ -419,11 +772,12 @@ fn plan_dot(
                 b: sub_b,
                 out_offset: base_offset + c0,
             });
+            steps.push(ReduceStep::Accumulate { offset: base_offset + c0 });
             c0 = c1;
         }
         k0 = k1;
     }
-    Plan { tasks, result_len, ew_offsets: Vec::new() }
+    Plan { tasks, result_len, steps }
 }
 
 #[cfg(test)]
@@ -444,6 +798,7 @@ mod tests {
         });
         assert_eq!(p.tasks.len(), 1);
         assert_eq!(p.result_len, 100);
+        assert_eq!(p.steps, vec![ReduceStep::Scatter { offset: 0 }]);
     }
 
     #[test]
@@ -457,7 +812,14 @@ mod tests {
             b: vec![0; n],
         });
         assert_eq!(p.tasks.len(), n.div_ceil(1680));
-        assert_eq!(p.ew_offsets, vec![0, 1680, 3360]);
+        assert_eq!(
+            p.steps,
+            vec![
+                ReduceStep::Scatter { offset: 0 },
+                ReduceStep::Scatter { offset: 1680 },
+                ReduceStep::Scatter { offset: 3360 },
+            ]
+        );
     }
 
     #[test]
@@ -470,12 +832,7 @@ mod tests {
         let p = plan_bare(&JobPayload::IntDot { w: 8, a, b });
         assert_eq!(p.tasks.len(), 3);
         // all tasks target offset 0 (partial sums)
-        for t in &p.tasks {
-            match t {
-                BlockTask::IntDot { out_offset, .. } => assert_eq!(*out_offset, 0),
-                _ => panic!("wrong task kind"),
-            }
-        }
+        assert!(p.steps.iter().all(|s| *s == ReduceStep::Accumulate { offset: 0 }));
     }
 
     #[test]
@@ -601,7 +958,8 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
-        assert_eq!(p.tasks[1].resident_handles(), vec![h]);
+        assert_eq!(p.tasks[1].resident_slices().len(), 1);
+        assert_eq!(p.tasks[1].resident_slices()[0].handle, h);
         // width mismatch rejected
         assert!(plan(
             &env,
@@ -613,6 +971,41 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    #[test]
+    fn elementwise_chunks_clip_to_shard_boundaries() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 64);
+        // int8 capacity per 64-row reserve shard: 8 slots x 40 = 320
+        let h = placement.register_sharded(8, 500, 1, None).unwrap();
+        assert_eq!(placement.shard_ranges(h), vec![(0, 320), (320, 180)]);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let p = plan(
+            &env,
+            &JobPayload::IntElementwiseRef {
+                op: EwOp::Add,
+                w: 8,
+                a: OperandRef::Tensor(h),
+                b: OperandRef::Values(vec![0; 500]),
+            },
+        )
+        .unwrap();
+        // every task's tensor slice stays inside one shard
+        for t in &p.tasks {
+            let BlockTask::IntElementwise { a: Operand::Resident(s), .. } = t else {
+                panic!("{t:?}");
+            };
+            assert!(
+                s.offset + s.len <= 320 || s.offset >= 320,
+                "chunk {s:?} straddles the shard boundary"
+            );
+        }
+        assert_eq!(p.result_len, 500);
     }
 
     #[test]
@@ -638,35 +1031,218 @@ mod tests {
         let x = vec![vec![1i64; k]; m];
         let p = plan(
             &env,
-            &JobPayload::IntMatmulResident { w: 8, x, n, segments: handles.clone() },
+            &JobPayload::IntMatmulResident {
+                w: 8,
+                x: MatX::Rows(x),
+                n,
+                segments: handles.clone(),
+            },
         )
         .unwrap();
         // 60 columns -> 2 tiles per segment, 2 segments
         assert_eq!(p.result_len, 60);
         assert_eq!(p.tasks.len(), 4);
         match &p.tasks[1] {
-            BlockTask::MatmulResident { x, i0, weights, c0, c1, out_offset, .. } => {
+            BlockTask::MatmulResident { x, i0, k0, k1, weights, c0, c1, out_offset, .. } => {
                 assert_eq!((*c0, *c1, *out_offset), (40, 60, 40));
+                assert_eq!((*k0, *k1), (0, 16));
                 assert_eq!(*i0, 4);
-                assert_eq!(x.len(), 2, "grid rows 4..6");
-                assert_eq!(x[0].len(), 16, "K-sliced to the segment");
+                let TaskX::Inline(rows) = x else { panic!("{x:?}") };
+                assert_eq!(rows.len(), 2, "grid rows 4..6");
+                assert_eq!(rows[0].len(), 16, "K-sliced to the segment");
                 assert_eq!(weights.handle, handles[0].handle);
             }
             other => panic!("{other:?}"),
         }
+        assert_eq!(p.steps[1], ReduceStep::Accumulate { offset: 40 });
         // a wrong-length weight tensor is rejected
         let bad = vec![MatSeg { k0: 0, k1: 16, handle: placement.register(8, 5) }];
         assert!(plan(
             &env,
-            &JobPayload::IntMatmulResident { w: 8, x: vec![vec![0; 16]; 2], n, segments: bad },
+            &JobPayload::IntMatmulResident {
+                w: 8,
+                x: MatX::Rows(vec![vec![0; 16]; 2]),
+                n,
+                segments: bad,
+            },
         )
         .is_err());
-        // an oversized segment is rejected
+        // a wrong-length weight tensor reused across a wider segment too
         let wide = vec![MatSeg { k0: 0, k1: 32, handle: handles[0].handle }];
         assert!(plan(
             &env,
-            &JobPayload::IntMatmulResident { w: 8, x: vec![vec![0; 32]; 2], n, segments: wide },
+            &JobPayload::IntMatmulResident {
+                w: 8,
+                x: MatX::Rows(vec![vec![0; 32]; 2]),
+                n,
+                segments: wide,
+            },
         )
         .is_err());
+    }
+
+    #[test]
+    fn sharded_weight_slab_splits_into_per_shard_chunks() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 64);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        // one segment of K=12, n=40: slab = 480 elements; a 64-row int8
+        // reserve holds 320 -> shards (0, 320), (320, 160) = K rows 0..8, 8..12
+        let (k, n) = (12, 40);
+        let h = placement.register_sharded(8, k * n, n, None).unwrap();
+        assert_eq!(placement.shard_ranges(h), vec![(0, 320), (320, 160)]);
+        let segments = vec![MatSeg { k0: 0, k1: k, handle: h }];
+        let chunks = matmul_chunks(&env, 8, n, &segments).unwrap();
+        assert_eq!(chunks.len(), 2, "one chunk per shard");
+        assert_eq!((chunks[0].k0, chunks[0].k1), (0, 8));
+        assert_eq!((chunks[1].k0, chunks[1].k1), (8, 12));
+        assert_eq!(chunks[0].weights, TensorSlice { handle: h, offset: 0, len: 320 });
+        assert_eq!(chunks[1].weights, TensorSlice { handle: h, offset: 320, len: 160 });
+        // the plan turns each chunk into partial-sum tasks
+        let x = vec![vec![1i64; k]; 2];
+        let p = plan(
+            &env,
+            &JobPayload::IntMatmulResident { w: 8, x: MatX::Rows(x), n, segments },
+        )
+        .unwrap();
+        assert_eq!(p.tasks.len(), 4, "2 chunks x 2 column tiles");
+        assert!(p.steps.iter().all(|s| matches!(s, ReduceStep::Accumulate { .. })));
+    }
+
+    #[test]
+    fn fused_plan_sinks_tiles_and_reports_zero_result_len() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let (m, k, n) = (4, 16, 10);
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
+        let sink = placement.register(8, m * n);
+        let x = vec![vec![1i64; k]; m];
+        let p = plan(
+            &env,
+            &JobPayload::IntMatmulFused {
+                w: 8,
+                x: MatX::Rows(x.clone()),
+                n,
+                segments: vec![wseg],
+                bias: Some(vec![1; n]),
+                relu_requant_shift: Some(7),
+                sink: Some(sink),
+            },
+        )
+        .unwrap();
+        assert_eq!(p.result_len, 0, "fully sunk plan returns nothing");
+        assert_eq!(p.tasks.len(), 1, "40 columns fit one tile");
+        assert!(p.steps.iter().all(|s| *s == ReduceStep::Sunk));
+        match &p.tasks[0] {
+            BlockTask::MatmulFused { segs, sink: Some(s), bias: Some(b), .. } => {
+                assert_eq!(segs.len(), 1);
+                assert_eq!((s.handle, s.offset, s.len), (sink, 0, 40));
+                assert_eq!(b.len(), n);
+                // the sink slice leads the pin list
+                let slices = p.tasks[0].resident_slices();
+                assert_eq!(slices[0].handle, sink);
+            }
+            other => panic!("{other:?}"),
+        }
+        // a wrong-sized sink is rejected
+        let small = placement.register(8, 5);
+        assert!(plan(
+            &env,
+            &JobPayload::IntMatmulFused {
+                w: 8,
+                x: MatX::Rows(x),
+                n,
+                segments: vec![MatSeg {
+                    k0: 0,
+                    k1: k,
+                    handle: placement.register(8, k * n),
+                }],
+                bias: None,
+                relu_requant_shift: None,
+                sink: Some(small),
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fused_plan_without_sink_scatters_epilogued_tiles() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let (m, k, n) = (6, 16, 10);
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
+        let p = plan(
+            &env,
+            &JobPayload::IntMatmulFused {
+                w: 8,
+                x: MatX::Rows(vec![vec![1i64; k]; m]),
+                n,
+                segments: vec![wseg],
+                bias: Some(vec![0; n]),
+                relu_requant_shift: None,
+                sink: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(p.result_len, 60);
+        assert_eq!(p.tasks.len(), 2);
+        assert_eq!(
+            p.steps,
+            vec![ReduceStep::Scatter { offset: 0 }, ReduceStep::Scatter { offset: 40 }]
+        );
+    }
+
+    #[test]
+    fn resident_x_tiles_break_at_x_shard_rows() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 64);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        // x: 20 rows x 16 -> 320 elems = exactly one 64-row int8 shard;
+        // force two shards with a target, row-aligned (align = k = 16)
+        let (m, k, n) = (20, 16, 4);
+        let xh = placement.register_sharded(8, m * k, k, Some(m * k / 2)).unwrap();
+        assert_eq!(placement.shard_ranges(xh), vec![(0, 160), (160, 160)]);
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
+        let p = plan(
+            &env,
+            &JobPayload::IntMatmulResident {
+                w: 8,
+                x: MatX::Resident { handle: xh, m },
+                n,
+                segments: vec![wseg],
+            },
+        )
+        .unwrap();
+        // x shard boundary at element 160 = row 10 = output column 40;
+        // with n=4 the 80 output columns tile as [0,40), [40,80) and no
+        // tile straddles the x shard boundary
+        assert_eq!(p.result_len, 80);
+        for t in &p.tasks {
+            let BlockTask::MatmulResident { c0, c1, n, .. } = t else { panic!("{t:?}") };
+            let i0 = c0 / n;
+            let i1 = (c1 - 1) / n + 1;
+            assert!(
+                i1 <= 10 || i0 >= 10,
+                "tile rows {i0}..{i1} straddle the x shard boundary"
+            );
+        }
     }
 }

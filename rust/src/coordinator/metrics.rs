@@ -68,6 +68,12 @@ pub struct Metrics {
     /// Summed resident-operand hits across jobs (operands that never
     /// crossed the host boundary).
     pub resident_hits: AtomicU64,
+    /// Live resident-tensor shards (gauge; published from the placement
+    /// map via [`crate::coordinator::Coordinator::metrics_snapshot`]).
+    pub shards: AtomicU64,
+    /// Shard evictions of multi-shard tensors (gauge; same source) — the
+    /// signal that a large tensor degraded to a partial host fallback.
+    pub shard_evictions: AtomicU64,
     /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
     /// the widest farm seen).
     queue_depths: Mutex<Vec<DepthGauge>>,
@@ -90,6 +96,13 @@ impl Metrics {
         self.host_bytes_in.fetch_add(s.host_bytes_in, Ordering::Relaxed);
         self.host_bytes_out.fetch_add(s.host_bytes_out, Ordering::Relaxed);
         self.resident_hits.fetch_add(s.resident_hits, Ordering::Relaxed);
+    }
+
+    /// Publish the storage layer's shard gauges (live shards, shard
+    /// evictions) so they ride the same snapshot as the job counters.
+    pub fn set_storage_gauges(&self, shards: u64, shard_evictions: u64) {
+        self.shards.store(shards, Ordering::Relaxed);
+        self.shard_evictions.store(shard_evictions, Ordering::Relaxed);
     }
 
     /// Fold one submit-time queue-depth sample (one entry per worker) into
@@ -119,7 +132,7 @@ impl Metrics {
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
-             qdepth_max=[{}] qdepth_mean=[{}]",
+             shards={} shard_evictions={} qdepth_max=[{}] qdepth_mean=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
@@ -131,6 +144,8 @@ impl Metrics {
             self.host_bytes_in.load(Ordering::Relaxed),
             self.host_bytes_out.load(Ordering::Relaxed),
             self.resident_hits.load(Ordering::Relaxed),
+            self.shards.load(Ordering::Relaxed),
+            self.shard_evictions.load(Ordering::Relaxed),
             qmax.join(","),
             qmean.join(","),
         )
@@ -183,6 +198,9 @@ mod tests {
         assert!(m.snapshot().contains("exec_us=90"));
         assert!(m.snapshot().contains("host_bytes_in=2000"));
         assert!(m.snapshot().contains("resident_hits=3"));
+        m.set_storage_gauges(5, 2);
+        assert!(m.snapshot().contains("shards=5"));
+        assert!(m.snapshot().contains("shard_evictions=2"));
     }
 
     #[test]

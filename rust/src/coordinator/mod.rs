@@ -45,6 +45,6 @@ pub mod scheduler;
 pub mod server;
 
 pub use farm::{BatchHandle, BatchTiming, BlockFarm};
-pub use job::{Job, JobPayload, JobResult, MatSeg, OperandRef};
+pub use job::{Job, JobPayload, JobResult, MatSeg, MatX, OperandRef};
 pub use metrics::{JobSample, Metrics};
 pub use scheduler::{Coordinator, JobHandle};

@@ -20,7 +20,7 @@
 
 use super::farm::{aggregate_waves, BatchHandle, BlockFarm};
 use super::job::{EwOp, Job, JobPayload, JobResult, OperandRef};
-use super::mapper::{self, BlockTask, Plan, PlanEnv};
+use super::mapper::{self, PlanEnv, ReduceStep};
 use super::metrics::{JobSample, Metrics};
 use crate::bitline::Geometry;
 use crate::exec::{DataStats, KernelCache, KernelKey, KernelOp, PlacementMap, TensorHandle};
@@ -32,34 +32,6 @@ use std::sync::Arc;
 pub struct Coordinator {
     farm: BlockFarm,
     pub metrics: Arc<Metrics>,
-}
-
-/// Host-side reduction step for one task's output, precomputed at submit so
-/// the handle does not retain the (possibly large) task operands.
-#[derive(Clone, Copy, Debug)]
-enum ReduceStep {
-    /// Scatter the chunk at its offset in the result vector.
-    Scatter { offset: usize },
-    /// Accumulate int32 partial sums at the offset (split-K dots and
-    /// resident-matmul segments).
-    Accumulate { offset: usize },
-}
-
-fn reduce_steps(plan: &Plan) -> Vec<ReduceStep> {
-    plan.tasks
-        .iter()
-        .enumerate()
-        .map(|(i, t)| match t {
-            BlockTask::IntElementwise { .. } | BlockTask::Bf16Elementwise { .. } => {
-                // ew_offsets is task-ordered (dot/ew are never mixed in one plan)
-                ReduceStep::Scatter { offset: plan.ew_offsets[i] }
-            }
-            BlockTask::IntDot { out_offset, .. }
-            | BlockTask::MatmulResident { out_offset, .. } => {
-                ReduceStep::Accumulate { offset: *out_offset }
-            }
-        })
-        .collect()
 }
 
 /// An in-flight job. Obtain with [`Coordinator::submit`]; redeem with
@@ -104,6 +76,9 @@ impl JobHandle {
                         values[offset + i] = (values[offset + i] + v) as i32 as i64;
                     }
                 }
+                // the tile landed in a resident sink tensor on-fabric;
+                // nothing returns to the host
+                ReduceStep::Sunk => {}
             }
         }
         let queue_depth_max = depths.iter().copied().max().unwrap_or(0);
@@ -195,6 +170,24 @@ impl Coordinator {
         copies: usize,
     ) -> Result<TensorHandle> {
         self.farm.alloc_tensor_replicated(values, w, copies)
+    }
+
+    /// Store a (possibly sharded) tensor whose shard boundaries land on
+    /// multiples of `align`; see [`BlockFarm::alloc_tensor_aligned`].
+    pub fn alloc_tensor_aligned(
+        &self,
+        values: &[i64],
+        w: u32,
+        copies: usize,
+        align: usize,
+    ) -> Result<TensorHandle> {
+        self.farm.alloc_tensor_aligned(values, w, copies, align)
+    }
+
+    /// Allocate a zero-initialized fabric-side activation tensor (the
+    /// destination of fused compute); see [`BlockFarm::alloc_activation`].
+    pub fn alloc_activation(&self, len: usize, w: u32, align: usize) -> Result<TensorHandle> {
+        self.farm.alloc_activation(len, w, align)
     }
 
     /// Overwrite a resident tensor's values on every replica.
@@ -306,6 +299,15 @@ impl Coordinator {
         }
     }
 
+    /// Publish the placement map's shard gauges into [`Metrics`] and
+    /// return the one-line snapshot — the server's `stats` reply path, so
+    /// shard behaviour is observable from the wire.
+    pub fn metrics_snapshot(&self) -> String {
+        let d = self.data_stats();
+        self.metrics.set_storage_gauges(d.shards, d.shard_evictions);
+        self.metrics.snapshot()
+    }
+
     /// Plan a job and hand its tasks to the execution engine; returns an
     /// awaitable handle immediately (backpressure: blocks only when the
     /// farm's bounded task queue is full). Planning errors — unknown
@@ -315,13 +317,12 @@ impl Coordinator {
         let op_count = payload.op_count();
         match mapper::plan(&self.plan_env(), &payload) {
             Ok(plan) => {
-                let steps = reduce_steps(&plan);
-                let result_len = plan.result_len;
+                let mapper::Plan { tasks, result_len, steps } = plan;
                 // a tensor-tensor elementwise job's op count is not
                 // host-knowable before planning (payload reports 0); the
                 // plan's result length is the executed op count
                 let op_count = if op_count == 0 { result_len as u64 } else { op_count };
-                let batch = self.farm.submit(plan.tasks);
+                let batch = self.farm.submit(tasks);
                 JobHandle {
                     id: job.id,
                     op_count,
@@ -693,6 +694,110 @@ mod tests {
             50,
             "tensor-tensor jobs still count their executed ops"
         );
+    }
+
+    #[test]
+    fn sharded_weight_matmul_matches_host_reference() {
+        use crate::coordinator::job::{MatSeg, MatX};
+        // 64-row reserve: an int8 slab shard holds 320 elements, so a
+        // k=16 x n=40 slab (640 elements) spans two shards — more than
+        // one block's reserve, satisfied via per-shard partial plans
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 64);
+        let mut rng = Prng::new(0x5AAD);
+        let (m, k, n) = (3usize, 16usize, 40usize);
+        let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(8)).collect()).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let slab: Vec<i64> = wt.iter().flat_map(|row| row.iter().copied()).collect();
+        let h = c.alloc_tensor_aligned(&slab, 8, 1, n).unwrap();
+        assert!(c.placement().shard_count(h) > 1, "slab must shard");
+        assert_eq!(c.read_tensor(h).unwrap(), slab, "sharded slab reads back");
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulResident {
+                    w: 8,
+                    x: MatX::Rows(x.clone()),
+                    n,
+                    segments: vec![MatSeg { k0: 0, k1: k, handle: h }],
+                },
+            })
+            .unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let expect: i64 =
+                    (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum::<i64>() as i32 as i64;
+                assert_eq!(r.values[i * n + j], expect, "({i},{j})");
+            }
+        }
+        assert!(r.resident_hits > 0, "per-shard slices resolved in place");
+    }
+
+    #[test]
+    fn fused_matmul_sinks_activations_without_host_bytes_out() {
+        use crate::coordinator::job::{MatSeg, MatX};
+        use crate::nn::relu_requant;
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 192);
+        let mut rng = Prng::new(0xF0E);
+        let (m, k, n) = (4usize, 12usize, 10usize);
+        let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(8)).collect()).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let bias: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
+        let slab: Vec<i64> = wt.iter().flat_map(|row| row.iter().copied()).collect();
+        let wh = c.alloc_tensor_replicated(&slab, 8, 2).unwrap();
+        let act = c.alloc_activation(m * n, 8, n).unwrap();
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulFused {
+                    w: 8,
+                    x: MatX::Rows(x.clone()),
+                    n,
+                    segments: vec![MatSeg { k0: 0, k1: k, handle: wh }],
+                    bias: Some(bias.clone()),
+                    relu_requant_shift: Some(7),
+                    sink: Some(act),
+                },
+            })
+            .unwrap();
+        assert!(r.values.is_empty(), "sunk job returns nothing");
+        assert_eq!(r.host_bytes_out, 0, "output never left the fabric");
+        // host reference: matmul + bias, relu/requant
+        let mut expect: Vec<Vec<i64>> = (0..m)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        let s: i64 = (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum();
+                        (s + bias[j]) as i32 as i64
+                    })
+                    .collect()
+            })
+            .collect();
+        relu_requant(&mut expect, 7);
+        let flat: Vec<i64> = expect.iter().flatten().copied().collect();
+        assert_eq!(c.read_tensor(act).unwrap(), flat, "sink holds the epilogue output");
+        // a second matmul consumes the activations in place
+        let w2: Vec<Vec<i64>> = (0..n).map(|_| (0..3).map(|_| rng.int(8)).collect()).collect();
+        let slab2: Vec<i64> = w2.iter().flat_map(|row| row.iter().copied()).collect();
+        let wh2 = c.alloc_tensor_replicated(&slab2, 8, 2).unwrap();
+        let r2 = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulResident {
+                    w: 8,
+                    x: MatX::Resident { handle: act, m },
+                    n: 3,
+                    segments: vec![MatSeg { k0: 0, k1: n, handle: wh2 }],
+                },
+            })
+            .unwrap();
+        for i in 0..m {
+            for j in 0..3 {
+                let e: i64 =
+                    (0..n).map(|kk| expect[i][kk] * w2[kk][j]).sum::<i64>() as i32 as i64;
+                assert_eq!(r2.values[i * 3 + j], e, "({i},{j})");
+            }
+        }
+        c.free_tensor(act).unwrap();
     }
 
     #[test]

@@ -48,13 +48,56 @@ use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Coalesced batches allowed in flight on the farm before the batching
 /// loop stops admitting new ones (backpressure toward the TCP clients).
 const MAX_INFLIGHT_BATCHES: usize = 4;
+
+/// Floor of the adaptive batch window (see [`BatchWindow`]): low enough
+/// that a lone request is dispatched almost immediately in latency mode.
+const MIN_BATCH_WAIT: Duration = Duration::from_micros(100);
+
+/// The adaptive coalescing window. The configured `max_batch_wait` is a
+/// **cap**, not a constant: when the farm has nothing in flight the window
+/// collapses to the floor (latency mode — a lone request should not sit
+/// out an idle wait), and under sustained load it grows toward the cap
+/// (throughput mode — deeper coalescing amortizes the block programs while
+/// earlier batches keep the farm busy anyway).
+struct BatchWindow {
+    cap: Duration,
+    current: Duration,
+}
+
+impl BatchWindow {
+    fn new(cap: Duration) -> BatchWindow {
+        BatchWindow { cap: cap.max(MIN_BATCH_WAIT), current: MIN_BATCH_WAIT }
+    }
+
+    /// The window to apply to the batch being gathered now.
+    fn window(&self, inflight: usize) -> Duration {
+        if inflight == 0 {
+            MIN_BATCH_WAIT
+        } else {
+            self.current
+        }
+    }
+
+    /// Adapt after dispatching a batch of `reqs` requests: multiple
+    /// coalesced requests mean the stream is dense — grow toward the cap;
+    /// a lone request means the window is buying latency for nothing —
+    /// shrink back.
+    fn adapt(&mut self, reqs: usize) {
+        self.current = if reqs > 1 {
+            (self.current * 2).min(self.cap)
+        } else {
+            (self.current / 2).max(MIN_BATCH_WAIT)
+        };
+    }
+}
 
 /// A compute-request operand: literal values or a resident-tensor handle.
 #[derive(Clone, Debug)]
@@ -380,7 +423,11 @@ impl Batcher {
                 }
             }
         }
-        for ((_, w), idxs) in groups {
+        // oldest-request-first: dispatch the group whose earliest member
+        // has waited longest, not whatever (op, w) sorts first
+        let mut ordered: Vec<((u8, u32), Vec<usize>)> = groups.into_iter().collect();
+        ordered.sort_by_key(|(_, idxs)| idxs[0]);
+        for ((_, w), idxs) in ordered {
             let op = reqs[idxs[0]].op;
             let cap = self
                 .group_cap
@@ -461,7 +508,7 @@ fn handle_control(coordinator: &Coordinator, req: &Request) -> String {
         Request::Stats { .. } => {
             let stats = format!(
                 "{} | data: {:?} | affinity: {:?}",
-                coordinator.metrics.snapshot(),
+                coordinator.metrics_snapshot(),
                 coordinator.data_stats(),
                 coordinator.farm().affinity_stats(),
             );
@@ -475,17 +522,27 @@ fn handle_control(coordinator: &Coordinator, req: &Request) -> String {
 enum Work {
     Req(ComputeReq, Sender<String>),
     Ctrl(Request, Sender<String>),
+    Shutdown,
 }
 
-/// The TCP server: one reader thread per connection feeding a central
-/// batching loop that keeps up to [`MAX_INFLIGHT_BATCHES`] coalesced
-/// batches executing while it admits new work; tensor control requests
-/// are answered inline by the same loop. `max_batch_wait` bounds added
-/// latency.
+/// One submitted batch riding the completer pipeline: the in-flight farm
+/// handles plus each request's `(id, reply channel)`.
+type InFlightEntry = (InFlightBatch, Vec<(u64, Sender<String>)>);
+
+/// The TCP server: a blocking acceptor thread spawns one reader thread per
+/// connection, all feeding a central batching loop that keeps up to
+/// [`MAX_INFLIGHT_BATCHES`] coalesced batches executing while it admits
+/// new work; tensor control requests are dispatched off the loop. The
+/// batching loop **blocks on the request channel** — no polling: it sleeps
+/// until work arrives, then drains the channel with `recv_timeout` against
+/// the batch deadline. `max_batch_wait` caps the adaptive window (see
+/// [`BatchWindow`]).
 pub struct PimServer {
     pub addr: std::net::SocketAddr,
+    work_tx: Sender<Work>,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl PimServer {
@@ -498,18 +555,35 @@ impl PimServer {
         coordinator.prewarm_serving();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
+        let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
+
+        // the acceptor blocks in accept() — zero idle work; stop() sets
+        // the flag, then unblocks it with a throwaway connection
         let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let sd = shutdown.clone();
+        let accept_sd = shutdown.clone();
+        let accept_tx = tx.clone();
+        let acceptor = std::thread::spawn(move || {
+            while let Ok((stream, _)) = listener.accept() {
+                if accept_sd.load(Ordering::Relaxed) {
+                    break;
+                }
+                let tx = accept_tx.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, tx);
+                });
+            }
+        });
+
         let handle = std::thread::spawn(move || {
-            let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
             let ctrl_coord = coordinator.clone();
             let batcher = Batcher::new(coordinator);
             // bounded pipeline: the batching loop submits, the completer
             // awaits + replies; `send` blocks once MAX_INFLIGHT_BATCHES
             // batches are executing (backpressure)
             let (inflight_tx, inflight_rx) =
-                sync_channel::<(InFlightBatch, Vec<(u64, Sender<String>)>)>(MAX_INFLIGHT_BATCHES);
+                sync_channel::<InFlightEntry>(MAX_INFLIGHT_BATCHES);
+            let inflight_count = Arc::new(AtomicUsize::new(0));
+            let completer_count = inflight_count.clone();
             let completer = std::thread::spawn(move || {
                 while let Ok((batch, replies)) = inflight_rx.recv() {
                     let results = batch.wait();
@@ -520,77 +594,110 @@ impl PimServer {
                         };
                         let _ = reply.send(line);
                     }
+                    completer_count.fetch_sub(1, Ordering::Relaxed);
                 }
             });
-            let conns: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-                Arc::new(Mutex::new(Vec::new()));
-            loop {
-                if sd.load(std::sync::atomic::Ordering::Relaxed) {
-                    break;
-                }
-                // accept new connections (non-blocking)
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let tx = tx.clone();
-                        conns.lock().unwrap().push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, tx);
-                        }));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
-                    Err(_) => break,
-                }
-                // drain the queue into one batch; control requests are
-                // answered as they arrive
+            let dispatch_ctrl = |req: Request, reply: Sender<String>| {
+                // off the batching loop: an alloc/write/read carries a
+                // full tensor payload and takes the farm's tensor lock —
+                // running it inline would head-of-line-block compute
+                // admission
+                let coord = ctrl_coord.clone();
+                std::thread::spawn(move || {
+                    let _ = reply.send(handle_control(&coord, &req));
+                });
+            };
+            let mut window = BatchWindow::new(max_batch_wait);
+            'serve: loop {
+                // idle: block until the first piece of work arrives — the
+                // fix for the old `while Instant::now() < deadline` spin
                 let mut pending: Vec<(ComputeReq, Sender<String>)> = Vec::new();
-                let deadline = std::time::Instant::now() + max_batch_wait;
-                while std::time::Instant::now() < deadline {
-                    match rx.recv_timeout(Duration::from_millis(1)) {
+                match rx.recv() {
+                    Ok(Work::Req(r, reply)) => pending.push((r, reply)),
+                    Ok(Work::Ctrl(req, reply)) => {
+                        dispatch_ctrl(req, reply);
+                        continue;
+                    }
+                    Ok(Work::Shutdown) | Err(_) => break,
+                }
+                // a compute request opened a batch: coalesce until the
+                // adaptive deadline (latency mode when nothing is in
+                // flight, throughput mode under sustained load)
+                let deadline = Instant::now()
+                    + window.window(inflight_count.load(Ordering::Relaxed));
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
                         Ok(Work::Req(r, reply)) => pending.push((r, reply)),
-                        Ok(Work::Ctrl(req, reply)) => {
-                            // off the batching loop: an alloc/write/read
-                            // carries a full tensor payload and takes the
-                            // farm's tensor lock — running it inline would
-                            // head-of-line-block compute admission
-                            let coord = ctrl_coord.clone();
-                            std::thread::spawn(move || {
-                                let _ = reply.send(handle_control(&coord, &req));
-                            });
+                        Ok(Work::Ctrl(req, reply)) => dispatch_ctrl(req, reply),
+                        Ok(Work::Shutdown) => {
+                            dispatch(&batcher, &inflight_tx, &inflight_count, pending);
+                            break 'serve;
                         }
-                        Err(_) => {
-                            if !pending.is_empty() {
-                                break;
-                            }
-                        }
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                if pending.is_empty() {
-                    continue;
-                }
-                // submit and hand off; earlier batches are still executing
-                // (split replies out by move — no deep copy of operands)
-                let mut reqs: Vec<ComputeReq> = Vec::with_capacity(pending.len());
-                let mut replies: Vec<(u64, Sender<String>)> = Vec::with_capacity(pending.len());
-                for (r, s) in pending {
-                    replies.push((r.id, s));
-                    reqs.push(r);
-                }
-                let inflight = batcher.submit_batch(&reqs);
-                if inflight_tx.send((inflight, replies)).is_err() {
+                window.adapt(pending.len());
+                if !dispatch(&batcher, &inflight_tx, &inflight_count, pending) {
                     break;
                 }
             }
             drop(inflight_tx);
             let _ = completer.join();
         });
-        Ok(PimServer { addr, shutdown, handle: Some(handle) })
+        Ok(PimServer {
+            addr,
+            work_tx: tx,
+            shutdown,
+            handle: Some(handle),
+            acceptor: Some(acceptor),
+        })
     }
 
     pub fn stop(mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        // wake the batching loop, then the (blocking) acceptor: the flag
+        // makes the acceptor treat the throwaway connection as its exit
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = self.work_tx.send(Work::Shutdown);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
     }
+}
+
+/// Submit a gathered batch and hand it to the completer. Returns `false`
+/// when the pipeline is torn down.
+fn dispatch(
+    batcher: &Batcher,
+    inflight_tx: &std::sync::mpsc::SyncSender<InFlightEntry>,
+    inflight_count: &AtomicUsize,
+    pending: Vec<(ComputeReq, Sender<String>)>,
+) -> bool {
+    if pending.is_empty() {
+        return true;
+    }
+    // split replies out by move — no deep copy of operands
+    let mut reqs: Vec<ComputeReq> = Vec::with_capacity(pending.len());
+    let mut replies: Vec<(u64, Sender<String>)> = Vec::with_capacity(pending.len());
+    for (r, s) in pending {
+        replies.push((r.id, s));
+        reqs.push(r);
+    }
+    let inflight = batcher.submit_batch(&reqs);
+    inflight_count.fetch_add(1, Ordering::Relaxed);
+    if inflight_tx.send((inflight, replies)).is_err() {
+        inflight_count.fetch_sub(1, Ordering::Relaxed);
+        return false;
+    }
+    true
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Work>) -> Result<()> {
@@ -733,6 +840,23 @@ mod tests {
         let err_line = format_error(u64::MAX, "boom");
         let e = Json::parse(&err_line).unwrap();
         assert_eq!(e.get("id").and_then(Json::as_i64).map(|i| i as u64), Some(u64::MAX));
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_idle_and_grows_under_load() {
+        let mut w = BatchWindow::new(Duration::from_millis(8));
+        assert_eq!(w.window(0), MIN_BATCH_WAIT, "latency mode when nothing in flight");
+        // sustained multi-request batches grow the window toward the cap
+        for _ in 0..10 {
+            w.adapt(4);
+        }
+        assert_eq!(w.current, Duration::from_millis(8), "capped at max_batch_wait");
+        assert_eq!(w.window(2), Duration::from_millis(8));
+        // lone requests shrink it back to the floor
+        for _ in 0..20 {
+            w.adapt(1);
+        }
+        assert_eq!(w.current, MIN_BATCH_WAIT);
     }
 
     #[test]

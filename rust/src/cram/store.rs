@@ -28,7 +28,14 @@
 //! via the [`write_tensor_rows`] / [`read_tensor_rows`] helpers.
 
 use crate::bitline::{transpose, BitlineArray, Geometry};
+use crate::util::mask;
 use anyhow::{ensure, Result};
+
+/// Identity of one stored region: `(tensor id, shard index)`. A tensor
+/// small enough for one block's reserve is a single shard (index 0); a
+/// larger tensor spans several shards, each allocated — and evicted —
+/// independently (see [`crate::exec::PlacementMap`]).
+pub type RegionId = (u64, u32);
 
 /// Rows per column one tensor of `len` `w`-bit values occupies (see module
 /// docs for the layout).
@@ -56,6 +63,31 @@ pub fn write_tensor_rows(arr: &mut BitlineArray, values: &[i64], w: u32, base: u
 /// Read a whole tensor back from its region.
 pub fn read_tensor_rows(arr: &BitlineArray, len: usize, w: u32, base: usize) -> Vec<i64> {
     transpose::load_ints(arr, len, w, base, w as usize)
+}
+
+/// Write elements `offset .. offset + values.len()` of a tensor stored at
+/// `base`, leaving every other element of the region untouched. Used by
+/// the on-fabric activation sink: a compute task deposits its output tile
+/// directly into the destination tensor's region, so the write must not
+/// clobber neighbouring tiles sharing a column slot. Tiles are small
+/// (&le; one column group), so the per-bit path is not hot.
+pub fn write_tensor_slice(
+    arr: &mut BitlineArray,
+    values: &[i64],
+    w: u32,
+    base: usize,
+    offset: usize,
+) {
+    let cols = arr.cols();
+    for (i, &v) in values.iter().enumerate() {
+        let e = offset + i;
+        let col = e % cols;
+        let row0 = base + (e / cols) * w as usize;
+        let bits = mask(v, w);
+        for b in 0..w as usize {
+            arr.set_bit(row0 + b, col, (bits >> b) & 1 == 1);
+        }
+    }
 }
 
 /// Read elements `offset .. offset + len` of a tensor without walking the
@@ -93,15 +125,15 @@ impl Region {
 }
 
 /// First-fit row allocator over one block's storage reserve
-/// `[base, limit)`. Regions are identified by the owning tensor's handle
-/// id; the invariants (every region inside the reserve, no two regions
+/// `[base, limit)`. Regions are identified by the owning `(tensor, shard)`
+/// pair; the invariants (every region inside the reserve, no two regions
 /// overlapping) are property-tested in `tests/proptest_residency.rs`.
 #[derive(Clone, Debug)]
 pub struct BlockStore {
     base: usize,
     limit: usize,
-    /// `(handle id, region)`, sorted by `region.base`.
-    regions: Vec<(u64, Region)>,
+    /// `(region id, region)`, sorted by `region.base`.
+    regions: Vec<(RegionId, Region)>,
 }
 
 impl BlockStore {
@@ -135,20 +167,20 @@ impl BlockStore {
         self.regions.is_empty()
     }
 
-    /// Ids of the tensors with a region here.
-    pub fn ids(&self) -> impl Iterator<Item = u64> + '_ {
+    /// Ids of the tensor shards with a region here.
+    pub fn ids(&self) -> impl Iterator<Item = RegionId> + '_ {
         self.regions.iter().map(|(id, _)| *id)
     }
 
-    /// The region held by tensor `id`, if any.
-    pub fn region(&self, id: u64) -> Option<Region> {
+    /// The region held by shard `id`, if any.
+    pub fn region(&self, id: RegionId) -> Option<Region> {
         self.regions.iter().find(|(i, _)| *i == id).map(|(_, r)| *r)
     }
 
-    /// Allocate `rows` for tensor `id`, first-fit. Returns `None` when no
+    /// Allocate `rows` for shard `id`, first-fit. Returns `None` when no
     /// contiguous gap is large enough (the caller evicts and retries).
     /// Allocating an id that already holds a region returns that region.
-    pub fn alloc(&mut self, id: u64, rows: usize) -> Option<Region> {
+    pub fn alloc(&mut self, id: RegionId, rows: usize) -> Option<Region> {
         if let Some(existing) = self.region(id) {
             return Some(existing);
         }
@@ -172,8 +204,8 @@ impl BlockStore {
         Some(region)
     }
 
-    /// Free tensor `id`'s region; returns it (or `None` if absent).
-    pub fn free(&mut self, id: u64) -> Option<Region> {
+    /// Free shard `id`'s region; returns it (or `None` if absent).
+    pub fn free(&mut self, id: RegionId) -> Option<Region> {
         let i = self.regions.iter().position(|(r_id, _)| *r_id == id)?;
         Some(self.regions.remove(i).1)
     }
@@ -203,17 +235,17 @@ mod tests {
     #[test]
     fn first_fit_packs_and_reuses_gaps() {
         let mut s = BlockStore::new(100, 200);
-        let a = s.alloc(1, 40).unwrap();
-        let b = s.alloc(2, 40).unwrap();
+        let a = s.alloc((1, 0), 40).unwrap();
+        let b = s.alloc((2, 0), 40).unwrap();
         assert_eq!(a, Region { base: 100, rows: 40 });
         assert_eq!(b, Region { base: 140, rows: 40 });
-        assert!(s.alloc(3, 40).is_none(), "only 20 rows left");
-        let c = s.alloc(3, 20).unwrap();
+        assert!(s.alloc((3, 0), 40).is_none(), "only 20 rows left");
+        let c = s.alloc((3, 0), 20).unwrap();
         assert_eq!(c.base, 180);
         assert_eq!(s.free_rows(), 0);
         // free the middle region; a same-size alloc lands in the gap
-        assert_eq!(s.free(2), Some(b));
-        let d = s.alloc(4, 30).unwrap();
+        assert_eq!(s.free((2, 0)), Some(b));
+        let d = s.alloc((4, 0), 30).unwrap();
         assert_eq!(d.base, 140);
         assert_eq!(s.used_rows(), 90);
     }
@@ -221,12 +253,16 @@ mod tests {
     #[test]
     fn alloc_is_idempotent_per_id_and_zero_rows_rejected() {
         let mut s = BlockStore::new(0, 64);
-        let r = s.alloc(7, 16).unwrap();
-        assert_eq!(s.alloc(7, 16), Some(r), "re-alloc returns the region");
+        let r = s.alloc((7, 0), 16).unwrap();
+        assert_eq!(s.alloc((7, 0), 16), Some(r), "re-alloc returns the region");
         assert_eq!(s.len(), 1);
-        assert!(s.alloc(8, 0).is_none());
-        assert!(s.alloc(9, 65).is_none());
-        assert!(s.free(99).is_none());
+        // two shards of one tensor are distinct regions
+        let r2 = s.alloc((7, 1), 16).unwrap();
+        assert_ne!(r.base, r2.base);
+        assert_eq!(s.len(), 2);
+        assert!(s.alloc((8, 0), 0).is_none());
+        assert!(s.alloc((9, 0), 65).is_none());
+        assert!(s.free((99, 0)).is_none());
     }
 
     #[test]
@@ -239,5 +275,22 @@ mod tests {
         assert_eq!(read_tensor_slice(&arr, 6, 200, 37, 20), vals[37..57].to_vec());
         assert_eq!(read_tensor_slice(&arr, 6, 200, 80, 20), vals[80..100].to_vec());
         assert_eq!(read_tensor_slice(&arr, 6, 200, 99, 1), vals[99..].to_vec());
+    }
+
+    #[test]
+    fn slice_writes_merge_without_clobbering() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        let mut vals: Vec<i64> = (0..100).map(|i| (i % 29) - 14).collect();
+        write_tensor_rows(&mut arr, &vals, 6, 120);
+        // overwrite an unaligned interior slice (spans a slot boundary)
+        let patch: Vec<i64> = (0..30).map(|i| 14 - (i % 29)).collect();
+        write_tensor_slice(&mut arr, &patch, 6, 120, 25);
+        vals[25..55].copy_from_slice(&patch);
+        assert_eq!(read_tensor_rows(&arr, 100, 6, 120), vals);
+        // a tail patch reaching the last element
+        write_tensor_slice(&mut arr, &[-3, 7], 6, 120, 98);
+        vals[98] = -3;
+        vals[99] = 7;
+        assert_eq!(read_tensor_rows(&arr, 100, 6, 120), vals);
     }
 }

@@ -46,5 +46,7 @@ pub mod residency;
 
 pub use cache::{CacheStats, KernelCache};
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
-pub use placement::{DataStats, PlacementMap, TensorHandle, TensorSlice};
+pub use placement::{
+    DataStats, PlacementMap, SlicePart, SliceResolution, TensorHandle, TensorSlice,
+};
 pub use residency::{ResidencyMap, ResidencyStats};

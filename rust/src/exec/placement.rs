@@ -1,5 +1,5 @@
-//! The farm-level placement map: which worker's block stores which
-//! resident tensor.
+//! The farm-level placement map: which worker's block stores which shard
+//! of which resident tensor.
 //!
 //! The paper's headline claim is that Compute RAMs cut energy by *reducing
 //! data movement*: a block can hold data in storage mode and compute
@@ -7,27 +7,34 @@
 //! [`PlacementMap`] is the scheduling half of that story — the sibling of
 //! [`super::ResidencyMap`], which does the same job for *programs*:
 //!
-//! * every resident tensor ([`TensorHandle`]) has one or more **homes** —
-//!   `(worker, base row)` replicas inside the per-block storage reserve
-//!   managed by a [`crate::cram::store::BlockStore`] per worker;
-//! * the execution engine routes a task referencing a resident tensor to a
-//!   home worker (**data affinity outranks kernel affinity outranks
-//!   load**) and resolves the operand from the block's array instead of
-//!   shipping it from the host;
-//! * when an allocation does not fit, the **least-recently-used** tensor on
+//! * every resident tensor ([`TensorHandle`]) is an ordered table of
+//!   **shards** — contiguous element ranges, each small enough for one
+//!   block's storage reserve. A tensor that fits one reserve is a single
+//!   shard; a larger one spans several, so one handle can hold more data
+//!   than any single block (`register_sharded` decides the split);
+//! * every shard has one or more **homes** — `(worker, base row)` replicas
+//!   inside the per-block reserve managed by a
+//!   [`crate::cram::store::BlockStore`] per worker — plus its own LRU
+//!   clock and (after eviction) its own host backing copy;
+//! * the execution engine routes a task referencing a resident slice to a
+//!   worker holding the overlapped shards (**data affinity outranks kernel
+//!   affinity outranks load**) and resolves the operand from the block's
+//!   array instead of shipping it from the host;
+//! * when an allocation does not fit, the **least-recently-used** shard on
 //!   the chosen block is evicted **back to host memory** (its values are
 //!   read out of the array first, so eviction is loss-less); an evicted
-//!   tensor still resolves — from the host backing copy, at host-traffic
-//!   cost — and the counters make the difference visible
-//!   (`resident_hits` vs `resident_misses`).
+//!   shard still resolves — from its host backing copy, at host-traffic
+//!   cost — while the tensor's other shards stay resident (a *partial*
+//!   host fallback), and the counters make the difference visible
+//!   (`resident_hits` vs `resident_misses`, `shard_evictions`).
 //!
 //! The map holds only metadata and counters; the actual array reads/writes
 //! are done by [`crate::coordinator::farm::BlockFarm`], which owns the
 //! blocks. All mutating entry points are serialized by the farm's
-//! control-plane lock; workers only call [`PlacementMap::resolve`].
+//! control-plane lock; workers only call [`PlacementMap::resolve_slice`].
 
 use crate::bitline::Geometry;
-use crate::cram::store::{tensor_rows, BlockStore};
+use crate::cram::store::{tensor_rows, BlockStore, RegionId};
 use crate::ucode::bf16::SCRATCH_ROWS;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -62,14 +69,18 @@ pub struct TensorSlice {
     pub len: usize,
 }
 
-/// Data-movement counters (monotonic; shared across threads).
+/// Data-movement counters (monotonic except the `shards` gauge; shared
+/// across threads).
 ///
 /// `host_bytes_in`/`host_bytes_out` count the tensor **control plane**:
 /// bytes crossing the host/block boundary for `alloc`/`write`/`read` and
 /// evictions. Task-level operand/result traffic is accounted per job and
 /// aggregated by [`crate::coordinator::Metrics`]. `resident_hits`/`misses`
 /// count task-operand resolutions: a hit reads the block's array in place,
-/// a miss fell back to the host backing copy of an evicted tensor.
+/// a miss fell back to the host backing copy of an evicted shard.
+/// `evictions` counts every shard-replica spill; `shard_evictions` is the
+/// subset belonging to multi-shard tensors (the partial-fallback signal);
+/// `shards` is the live shard count at snapshot time.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DataStats {
     pub host_bytes_in: u64,
@@ -77,6 +88,8 @@ pub struct DataStats {
     pub resident_hits: u64,
     pub resident_misses: u64,
     pub evictions: u64,
+    pub shard_evictions: u64,
+    pub shards: u64,
 }
 
 /// Outcome of one placement attempt (see [`PlacementMap::place`]).
@@ -84,43 +97,94 @@ pub struct DataStats {
 pub enum PlaceAttempt {
     /// A region was reserved; the caller must now write the values.
     Placed { base: usize },
-    /// No contiguous gap; evict this (least-recently-used) tensor first.
-    Evict { victim: TensorHandle },
-    /// The reserve cannot fit the tensor even when empty.
+    /// No contiguous gap; evict this (least-recently-used) shard first.
+    Evict { victim: TensorHandle, shard: u32 },
+    /// The reserve cannot fit the shard even when empty.
     NoFit,
 }
 
-/// How a worker resolves a resident operand (see [`PlacementMap::resolve`]).
+/// One piece of a resolved slice, in element order (see
+/// [`PlacementMap::resolve_slice`]). A slice inside a single resident
+/// shard resolves to one `Local` part; a slice spanning shards — or
+/// touching an evicted one — gathers several parts.
 #[derive(Clone, Debug)]
-pub enum Resolution {
-    /// Resident on this worker's block: read the array in place.
-    Local { base: usize, w: u32, len: usize },
-    /// Evicted (or never placed): values from the host backing copy
-    /// (shared, not cloned — callers slice what they need).
-    Host { values: Arc<Vec<i64>>, w: u32 },
-    /// Resident only on other workers and no host copy exists — the
-    /// router should have pinned the task to one of these.
-    Elsewhere { workers: Vec<usize> },
+pub enum SlicePart {
+    /// Resident on this worker's block: read `len` elements starting
+    /// `start` elements into the shard region at row `base`.
+    Local { base: usize, start: usize, len: usize },
+    /// Evicted shard: `len` elements starting at `start` of the host
+    /// backing copy (shared, not cloned).
+    Host { values: Arc<Vec<i64>>, start: usize, len: usize },
+    /// This piece is resident only on other workers and has no host copy —
+    /// the router should have pinned the task to one of these.
+    Remote { workers: Vec<usize> },
+}
+
+/// How a slice of a resident tensor resolves on one worker.
+#[derive(Clone, Debug)]
+pub enum SliceResolution {
+    /// Gather these parts in order; widths are uniform per tensor.
+    Parts { w: u32, parts: Vec<SlicePart> },
+    /// The slice exceeds the tensor's length.
+    OutOfRange { len: usize },
     /// Unknown or freed handle.
     Missing,
 }
 
-/// Where a whole-tensor read should be served from.
+/// Where one shard's values live for a whole-tensor read (see
+/// [`PlacementMap::read_plan`]).
 #[derive(Clone, Debug)]
-pub enum ReadSource {
-    Block { worker: usize, base: usize, w: u32, len: usize },
+pub enum ShardSource {
+    Block { worker: usize, base: usize },
     Host(Arc<Vec<i64>>),
+    /// No replica and no host copy — a registered-but-never-placed handle
+    /// (the farm's allocation path cannot produce this; reads fail).
     Missing,
+}
+
+/// One shard of a whole-tensor read, in element order.
+#[derive(Clone, Debug)]
+pub struct ShardRead {
+    pub offset: usize,
+    pub len: usize,
+    pub src: ShardSource,
+}
+
+/// One shard of a whole-tensor write: the replicas to overwrite, and
+/// whether a (possibly stale) host backup must be refreshed alongside.
+#[derive(Clone, Debug)]
+pub struct ShardWrite {
+    pub index: u32,
+    pub offset: usize,
+    pub len: usize,
+    pub homes: Vec<(usize, usize)>,
+    pub has_host: bool,
+}
+
+/// One row-range shard of a resident tensor: element range, replica homes,
+/// per-shard host backup and LRU clock.
+struct Shard {
+    offset: usize,
+    len: usize,
+    /// `(worker, base row)` replicas.
+    homes: Vec<(usize, usize)>,
+    /// Host backing copy of this shard (set on eviction).
+    host: Option<Arc<Vec<i64>>>,
+    last_touch: u64,
 }
 
 struct Entry {
     w: u32,
     len: usize,
-    /// `(worker, base row)` replicas.
-    homes: Vec<(usize, usize)>,
-    /// Host backing copy (set on eviction; absent while fully resident).
-    host: Option<Arc<Vec<i64>>>,
-    last_touch: u64,
+    /// Ordered, contiguous, covering `0..len`.
+    shards: Vec<Shard>,
+}
+
+impl Entry {
+    /// Index of the shard containing element `e`.
+    fn shard_at(&self, e: usize) -> Option<usize> {
+        self.shards.iter().position(|s| e >= s.offset && e < s.offset + s.len)
+    }
 }
 
 struct Inner {
@@ -140,6 +204,7 @@ pub struct PlacementMap {
     resident_hits: AtomicU64,
     resident_misses: AtomicU64,
     evictions: AtomicU64,
+    shard_evictions: AtomicU64,
 }
 
 impl PlacementMap {
@@ -177,6 +242,7 @@ impl PlacementMap {
             resident_hits: AtomicU64::new(0),
             resident_misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            shard_evictions: AtomicU64::new(0),
         }
     }
 
@@ -203,9 +269,9 @@ impl PlacementMap {
         self.inner.lock().unwrap().stores.len()
     }
 
-    /// Register a new tensor (no homes yet). The farm places replicas and
-    /// writes data right after; on total placement failure it calls
-    /// [`Self::remove`].
+    /// Register a new single-shard tensor (no homes yet) regardless of
+    /// size. Kept for planners and tests that manage placement themselves;
+    /// the farm's allocation path uses [`Self::register_sharded`].
     pub fn register(&self, w: u32, len: usize) -> TensorHandle {
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
@@ -214,9 +280,71 @@ impl PlacementMap {
         inner.clock += 1;
         inner.tensors.insert(
             id,
-            Entry { w, len, homes: Vec::new(), host: None, last_touch: touch },
+            Entry {
+                w,
+                len,
+                shards: vec![Shard {
+                    offset: 0,
+                    len,
+                    homes: Vec::new(),
+                    host: None,
+                    last_touch: touch,
+                }],
+            },
         );
         TensorHandle(id)
+    }
+
+    /// Register a tensor split into shards that each fit one block's
+    /// reserve. Shard boundaries land on multiples of `align` (e.g. a
+    /// matmul weight slab aligns to its row width `n`, an activation
+    /// tensor to its feature width, so per-shard partial plans stay
+    /// rectangular). `target_elems` caps the shard size below the
+    /// capacity-derived maximum — the farm passes `len / n_workers` for
+    /// activation tensors so sink tiles spread across the farm. Returns
+    /// `None` when the reserve cannot hold even one `align`-element unit.
+    pub fn register_sharded(
+        &self,
+        w: u32,
+        len: usize,
+        align: usize,
+        target_elems: Option<usize>,
+    ) -> Option<TensorHandle> {
+        if self.reserve_rows == 0 || len == 0 {
+            return None;
+        }
+        let align = align.max(1);
+        let cols = self.geometry.cols();
+        let slots = self.reserve_rows / w as usize;
+        let cap_elems = (slots * cols / align) * align;
+        if cap_elems == 0 {
+            return None;
+        }
+        let mut shard_elems = cap_elems;
+        if let Some(t) = target_elems {
+            let t = t.div_ceil(align) * align;
+            shard_elems = shard_elems.min(t.max(align));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let touch = inner.clock;
+        inner.clock += 1;
+        let mut shards = Vec::new();
+        let mut off = 0;
+        while off < len {
+            let l = shard_elems.min(len - off);
+            shards.push(Shard {
+                offset: off,
+                len: l,
+                homes: Vec::new(),
+                host: None,
+                last_touch: touch,
+            });
+            off += l;
+        }
+        inner.tensors.insert(id, Entry { w, len, shards });
+        Some(TensorHandle(id))
     }
 
     /// `(width, length)` of a registered tensor.
@@ -225,26 +353,85 @@ impl PlacementMap {
         inner.tensors.get(&h.0).map(|e| (e.w, e.len))
     }
 
-    /// Workers currently holding a replica.
-    pub fn homes(&self, h: TensorHandle) -> Vec<usize> {
+    /// The `(offset, len)` element ranges of a tensor's shards, in order.
+    pub fn shard_ranges(&self, h: TensorHandle) -> Vec<(usize, usize)> {
         let inner = self.inner.lock().unwrap();
         inner
             .tensors
             .get(&h.0)
-            .map(|e| e.homes.iter().map(|&(w, _)| w).collect())
+            .map(|e| e.shards.iter().map(|s| (s.offset, s.len)).collect())
             .unwrap_or_default()
     }
 
-    /// `(worker, base)` replicas plus width/length — the farm's write
-    /// path. Touches the LRU clock: an actively rewritten tensor is in
-    /// use and must not be the preferred eviction victim.
-    pub fn write_targets(&self, h: TensorHandle) -> Option<(u32, usize, Vec<(usize, usize)>)> {
+    /// Number of shards of a tensor (0 for unknown handles).
+    pub fn shard_count(&self, h: TensorHandle) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.tensors.get(&h.0).map_or(0, |e| e.shards.len())
+    }
+
+    /// Workers currently holding a replica of **any** shard.
+    pub fn homes(&self, h: TensorHandle) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<usize> = Vec::new();
+        if let Some(e) = inner.tensors.get(&h.0) {
+            for s in &e.shards {
+                for &(w, _) in &s.homes {
+                    if !out.contains(&w) {
+                        out.push(w);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Workers holding **every** shard overlapping `[offset, offset+len)`
+    /// — the set a task reading that slice can resolve fully in place on.
+    /// Empty when no single worker covers the slice (the task then runs
+    /// unpinned and gathers host copies for the missing pieces).
+    pub fn slice_homes(&self, h: TensorHandle, offset: usize, len: usize) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        let Some(e) = inner.tensors.get(&h.0) else { return Vec::new() };
+        let end = offset + len;
+        let mut out: Option<Vec<usize>> = None;
+        for s in &e.shards {
+            if s.offset + s.len <= offset || s.offset >= end {
+                continue;
+            }
+            let shard_workers: Vec<usize> = s.homes.iter().map(|&(w, _)| w).collect();
+            out = Some(match out {
+                None => shard_workers,
+                Some(prev) => {
+                    prev.into_iter().filter(|w| shard_workers.contains(w)).collect()
+                }
+            });
+            if matches!(&out, Some(v) if v.is_empty()) {
+                return Vec::new();
+            }
+        }
+        out.unwrap_or_default()
+    }
+
+    /// Per-shard write plan: replicas plus width/length. Touches the LRU
+    /// clock: an actively rewritten tensor is in use and must not be the
+    /// preferred eviction victim.
+    pub fn write_plan(&self, h: TensorHandle) -> Option<(u32, usize, Vec<ShardWrite>)> {
         let mut inner = self.inner.lock().unwrap();
         let touch = inner.clock;
         inner.clock += 1;
         let e = inner.tensors.get_mut(&h.0)?;
-        e.last_touch = touch;
-        Some((e.w, e.len, e.homes.clone()))
+        let mut writes = Vec::with_capacity(e.shards.len());
+        for (i, s) in e.shards.iter_mut().enumerate() {
+            s.last_touch = touch;
+            writes.push(ShardWrite {
+                index: i as u32,
+                offset: s.offset,
+                len: s.len,
+                homes: s.homes.clone(),
+                has_host: s.host.is_some(),
+            });
+        }
+        Some((e.w, e.len, writes))
     }
 
     /// `(used, capacity)` storage rows of one worker's reserve.
@@ -268,135 +455,233 @@ impl PlacementMap {
             .map(|(i, _)| i)
     }
 
-    /// Try to reserve a region for `h` on `worker`. On `Evict`, the farm
-    /// reads the victim's values out of the block and calls
-    /// [`Self::evict`], then retries; each eviction frees rows, so the
-    /// loop terminates in `Placed` or `NoFit`.
-    pub fn place(&self, h: TensorHandle, worker: usize) -> PlaceAttempt {
+    /// Try to reserve a region for shard `shard` of `h` on `worker`. On
+    /// `Evict`, the farm reads the victim shard's values out of the block
+    /// and calls [`Self::evict`], then retries; each eviction frees rows,
+    /// so the loop terminates in `Placed` or `NoFit`. Shards of `h` itself
+    /// are never chosen as victims (a large tensor must not thrash its own
+    /// earlier shards while the later ones land).
+    pub fn place(&self, h: TensorHandle, shard: u32, worker: usize) -> PlaceAttempt {
         let mut inner = self.inner.lock().unwrap();
-        let (w, len) = match inner.tensors.get(&h.0) {
-            Some(e) => (e.w, e.len),
+        let (w, slen) = match inner.tensors.get(&h.0) {
+            Some(e) => match e.shards.get(shard as usize) {
+                Some(s) => (e.w, s.len),
+                None => return PlaceAttempt::NoFit,
+            },
             None => return PlaceAttempt::NoFit,
         };
-        let rows = tensor_rows(self.geometry, w, len);
+        let rows = tensor_rows(self.geometry, w, slen);
         if inner.stores[worker].capacity_rows() < rows {
             return PlaceAttempt::NoFit;
         }
-        if let Some(region) = inner.stores[worker].alloc(h.0, rows) {
+        if let Some(region) = inner.stores[worker].alloc((h.0, shard), rows) {
             let touch = inner.clock;
             inner.clock += 1;
             let e = inner.tensors.get_mut(&h.0).expect("entry exists");
-            if !e.homes.iter().any(|&(w, _)| w == worker) {
-                e.homes.push((worker, region.base));
+            let s = &mut e.shards[shard as usize];
+            if !s.homes.iter().any(|&(w, _)| w == worker) {
+                s.homes.push((worker, region.base));
             }
-            e.last_touch = touch;
+            s.last_touch = touch;
             return PlaceAttempt::Placed { base: region.base };
         }
-        // LRU victim among tensors homed on this worker (never `h` itself:
-        // `alloc` would have returned its existing region)
+        // LRU victim among shards homed on this worker (never a shard of
+        // `h` itself)
         let victim = inner.stores[worker]
             .ids()
-            .filter(|&id| id != h.0)
-            .min_by_key(|id| inner.tensors.get(id).map_or(0, |e| e.last_touch));
+            .filter(|&(tid, _)| tid != h.0)
+            .min_by_key(|&(tid, sidx)| {
+                inner
+                    .tensors
+                    .get(&tid)
+                    .and_then(|e| e.shards.get(sidx as usize))
+                    .map_or(0, |s| s.last_touch)
+            });
         match victim {
-            Some(id) => PlaceAttempt::Evict { victim: TensorHandle(id) },
+            Some((tid, sidx)) => {
+                PlaceAttempt::Evict { victim: TensorHandle(tid), shard: sidx }
+            }
             None => PlaceAttempt::NoFit,
         }
     }
 
-    /// `(base, w, len)` of `h`'s replica on `worker` (the farm reads the
-    /// victim's values through this before [`Self::evict`]).
-    pub fn region_of(&self, h: TensorHandle, worker: usize) -> Option<(usize, u32, usize)> {
+    /// `(base row, width, shard offset, shard len)` of shard `shard` of
+    /// `h` on `worker` (the farm reads the victim's values through this
+    /// before [`Self::evict`]).
+    pub fn region_of(
+        &self,
+        h: TensorHandle,
+        shard: u32,
+        worker: usize,
+    ) -> Option<(usize, u32, usize, usize)> {
         let inner = self.inner.lock().unwrap();
         let e = inner.tensors.get(&h.0)?;
-        let region = inner.stores[worker].region(h.0)?;
-        Some((region.base, e.w, e.len))
+        let s = e.shards.get(shard as usize)?;
+        let region = inner.stores[worker].region((h.0, shard))?;
+        Some((region.base, e.w, s.offset, s.len))
     }
 
-    /// Drop `h`'s replica on `worker`, keeping `values` as the host
-    /// backing copy. The values were just read out of the block's array,
-    /// so they are always current — they **overwrite** any older backup
-    /// (an earlier partial eviction followed by a `write_tensor` would
-    /// otherwise leave a stale copy behind).
-    pub fn evict(&self, h: TensorHandle, worker: usize, values: Vec<i64>) {
+    /// Drop shard `shard`'s replica on `worker`, keeping `values` as the
+    /// shard's host backing copy. The values were just read out of the
+    /// block's array, so they are always current — they **overwrite** any
+    /// older backup (an earlier partial eviction followed by a
+    /// `write_tensor` would otherwise leave a stale copy behind). The
+    /// tensor's other shards are untouched: eviction is per-shard, so a
+    /// large tensor degrades to a *partial* host fallback.
+    pub fn evict(&self, h: TensorHandle, shard: u32, worker: usize, values: Vec<i64>) {
         let mut inner = self.inner.lock().unwrap();
-        if inner.stores[worker].free(h.0).is_none() {
+        if inner.stores[worker].free((h.0, shard)).is_none() {
             return; // already gone
         }
+        let mut multi = false;
         if let Some(e) = inner.tensors.get_mut(&h.0) {
-            e.homes.retain(|&(w, _)| w != worker);
-            e.host = Some(Arc::new(values));
+            multi = e.shards.len() > 1;
+            if let Some(s) = e.shards.get_mut(shard as usize) {
+                s.homes.retain(|&(w, _)| w != worker);
+                s.host = Some(Arc::new(values));
+            }
         }
         self.evictions.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Replace the host backing copy (the write path for fully evicted
-    /// tensors).
-    pub fn set_host_copy(&self, h: TensorHandle, values: Vec<i64>) {
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(e) = inner.tensors.get_mut(&h.0) {
-            e.host = Some(Arc::new(values));
+        if multi {
+            self.shard_evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
 
-    /// Refresh the host backing copy **if one exists** (the write path for
-    /// partially evicted tensors: the replicas get the new values, and a
-    /// lingering backup must not go stale).
-    pub fn refresh_host_copy(&self, h: TensorHandle, values: &[i64]) {
+    /// Replace shard `shard`'s host backing copy (the write path for fully
+    /// evicted shards).
+    pub fn set_host_copy(&self, h: TensorHandle, shard: u32, values: Vec<i64>) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(e) = inner.tensors.get_mut(&h.0) {
-            if e.host.is_some() {
-                e.host = Some(Arc::new(values.to_vec()));
+            if let Some(s) = e.shards.get_mut(shard as usize) {
+                s.host = Some(Arc::new(values));
             }
         }
     }
 
-    /// Resolve a resident operand on `worker` (the worker's hot path; see
-    /// [`Resolution`]). Touches the LRU clock and the hit/miss counters.
-    pub fn resolve(&self, h: TensorHandle, worker: usize) -> Resolution {
+    /// Refresh shard `shard`'s host backing copy **if one exists** (the
+    /// write path for partially evicted shards: the replicas get the new
+    /// values, and a lingering backup must not go stale).
+    pub fn refresh_host_copy(&self, h: TensorHandle, shard: u32, values: &[i64]) {
         let mut inner = self.inner.lock().unwrap();
-        let touch = inner.clock;
-        inner.clock += 1;
-        let Some(e) = inner.tensors.get_mut(&h.0) else { return Resolution::Missing };
-        e.last_touch = touch;
-        if let Some(&(_, base)) = e.homes.iter().find(|&&(w, _)| w == worker) {
-            self.resident_hits.fetch_add(1, Ordering::Relaxed);
-            return Resolution::Local { base, w: e.w, len: e.len };
-        }
-        if let Some(values) = &e.host {
-            self.resident_misses.fetch_add(1, Ordering::Relaxed);
-            // Arc clone: the (possibly large) backup is shared, not copied
-            return Resolution::Host { values: Arc::clone(values), w: e.w };
-        }
-        Resolution::Elsewhere { workers: e.homes.iter().map(|&(w, _)| w).collect() }
-    }
-
-    /// Where a whole-tensor read should come from (first replica, else the
-    /// host copy). Touches the LRU clock: a tensor polled through the
-    /// control plane is in use and must not be the preferred eviction
-    /// victim.
-    pub fn read_source(&self, h: TensorHandle) -> ReadSource {
-        let mut inner = self.inner.lock().unwrap();
-        let touch = inner.clock;
-        inner.clock += 1;
-        let Some(e) = inner.tensors.get_mut(&h.0) else { return ReadSource::Missing };
-        e.last_touch = touch;
-        if let Some(&(worker, base)) = e.homes.first() {
-            return ReadSource::Block { worker, base, w: e.w, len: e.len };
-        }
-        match &e.host {
-            Some(values) => ReadSource::Host(Arc::clone(values)),
-            None => ReadSource::Missing,
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            if let Some(s) = e.shards.get_mut(shard as usize) {
+                if s.host.is_some() {
+                    s.host = Some(Arc::new(values.to_vec()));
+                }
+            }
         }
     }
 
-    /// Free a tensor: all replicas' rows return to their stores, the entry
-    /// disappears. Returns whether the handle existed.
+    /// A worker just wrote compute output directly into the shard holding
+    /// element `offset` (the on-fabric activation sink). Any host backup of
+    /// that shard is now stale; drop it — the resident replica is
+    /// authoritative, and the next eviction re-snapshots it loss-lessly.
+    pub fn note_sink_write(&self, h: TensorHandle, offset: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            if let Some(i) = e.shard_at(offset) {
+                let s = &mut e.shards[i];
+                if !s.homes.is_empty() {
+                    s.host = None;
+                }
+                s.last_touch = touch;
+            }
+        }
+    }
+
+    /// Resolve a slice of a resident tensor on `worker` (the worker's hot
+    /// path). Walks the overlapped shards in order: resident-here shards
+    /// yield `Local` parts (a hit), evicted shards yield `Host` parts (a
+    /// miss, at host-traffic cost), and shards resident only elsewhere
+    /// yield `Remote` (the router should have pinned the task). Touches
+    /// every overlapped shard's LRU clock.
+    pub fn resolve_slice(
+        &self,
+        h: TensorHandle,
+        offset: usize,
+        len: usize,
+        worker: usize,
+    ) -> SliceResolution {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let Some(e) = inner.tensors.get_mut(&h.0) else { return SliceResolution::Missing };
+        if offset + len > e.len {
+            return SliceResolution::OutOfRange { len: e.len };
+        }
+        let end = offset + len;
+        let mut parts = Vec::new();
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for s in &mut e.shards {
+            if s.offset + s.len <= offset || s.offset >= end {
+                continue;
+            }
+            s.last_touch = touch;
+            let ov0 = offset.max(s.offset);
+            let ov1 = end.min(s.offset + s.len);
+            if let Some(&(_, base)) = s.homes.iter().find(|&&(w, _)| w == worker) {
+                hits += 1;
+                parts.push(SlicePart::Local {
+                    base,
+                    start: ov0 - s.offset,
+                    len: ov1 - ov0,
+                });
+            } else if let Some(values) = &s.host {
+                misses += 1;
+                parts.push(SlicePart::Host {
+                    // Arc clone: the (possibly large) backup is shared
+                    values: Arc::clone(values),
+                    start: ov0 - s.offset,
+                    len: ov1 - ov0,
+                });
+            } else {
+                parts.push(SlicePart::Remote {
+                    workers: s.homes.iter().map(|&(w, _)| w).collect(),
+                });
+            }
+        }
+        self.resident_hits.fetch_add(hits, Ordering::Relaxed);
+        self.resident_misses.fetch_add(misses, Ordering::Relaxed);
+        SliceResolution::Parts { w: e.w, parts }
+    }
+
+    /// Per-shard sources for a whole-tensor read (first replica, else the
+    /// host copy; [`ShardSource::Missing`] for a never-placed shard, which
+    /// the farm's all-or-nothing allocation cannot produce). Touches the
+    /// LRU clocks: a tensor polled through the control plane is in use and
+    /// must not be the preferred eviction victim.
+    pub fn read_plan(&self, h: TensorHandle) -> Option<(u32, usize, Vec<ShardRead>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let e = inner.tensors.get_mut(&h.0)?;
+        let mut reads = Vec::with_capacity(e.shards.len());
+        for s in &mut e.shards {
+            s.last_touch = touch;
+            let src = if let Some(&(worker, base)) = s.homes.first() {
+                ShardSource::Block { worker, base }
+            } else if let Some(values) = &s.host {
+                ShardSource::Host(Arc::clone(values))
+            } else {
+                ShardSource::Missing
+            };
+            reads.push(ShardRead { offset: s.offset, len: s.len, src });
+        }
+        Some((e.w, e.len, reads))
+    }
+
+    /// Free a tensor: all shards' replica rows return to their stores, the
+    /// entry disappears. Returns whether the handle existed.
     pub fn remove(&self, h: TensorHandle) -> bool {
         let mut inner = self.inner.lock().unwrap();
         let Some(e) = inner.tensors.remove(&h.0) else { return false };
-        for (worker, _) in e.homes {
-            inner.stores[worker].free(h.0);
+        for (i, s) in e.shards.iter().enumerate() {
+            for &(worker, _) in &s.homes {
+                inner.stores[worker].free((h.0, i as u32));
+            }
         }
         true
     }
@@ -408,6 +693,12 @@ impl PlacementMap {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of live shards across all tensors.
+    pub fn live_shards(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.tensors.values().map(|e| e.shards.len()).sum()
     }
 
     pub fn add_host_bytes_in(&self, bytes: u64) {
@@ -425,6 +716,8 @@ impl PlacementMap {
             resident_hits: self.resident_hits.load(Ordering::Relaxed),
             resident_misses: self.resident_misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            shard_evictions: self.shard_evictions.load(Ordering::Relaxed),
+            shards: self.live_shards() as u64,
         }
     }
 }
@@ -448,6 +741,12 @@ mod tests {
         PlacementMap::new(2, Geometry::G512x40, reserve)
     }
 
+    /// Resolve a whole tensor on one worker (test shorthand).
+    fn resolve_all(m: &PlacementMap, h: TensorHandle, worker: usize) -> SliceResolution {
+        let len = m.info(h).map_or(0, |(_, l)| l);
+        m.resolve_slice(h, 0, len, worker)
+    }
+
     #[test]
     fn compute_rows_shrink_with_reserve() {
         assert_eq!(map(0).compute_rows(), 512);
@@ -466,26 +765,43 @@ mod tests {
     #[test]
     fn place_resolve_roundtrip() {
         let m = map(64);
-        let h = m.register(8, 40); // 8 rows
-        match m.place(h, 0) {
+        let h = m.register(8, 40); // 8 rows, one shard
+        assert_eq!(m.shard_count(h), 1);
+        assert_eq!(m.shard_ranges(h), vec![(0, 40)]);
+        match m.place(h, 0, 0) {
             PlaceAttempt::Placed { base } => assert_eq!(base, 512 - 32 - 64),
             other => panic!("{other:?}"),
         }
         assert_eq!(m.homes(h), vec![0]);
-        match m.resolve(h, 0) {
-            Resolution::Local { base, w, len } => {
-                assert_eq!((base, w, len), (512 - 32 - 64, 8, 40));
+        assert_eq!(m.slice_homes(h, 0, 40), vec![0]);
+        match resolve_all(&m, h, 0) {
+            SliceResolution::Parts { w, parts } => {
+                assert_eq!(w, 8);
+                assert_eq!(parts.len(), 1);
+                match &parts[0] {
+                    SlicePart::Local { base, start, len } => {
+                        assert_eq!((*base, *start, *len), (512 - 32 - 64, 0, 40));
+                    }
+                    other => panic!("{other:?}"),
+                }
             }
             other => panic!("{other:?}"),
         }
-        match m.resolve(h, 1) {
-            Resolution::Elsewhere { workers } => assert_eq!(workers, vec![0]),
+        match resolve_all(&m, h, 1) {
+            SliceResolution::Parts { parts, .. } => {
+                assert!(matches!(&parts[0], SlicePart::Remote { workers } if workers == &vec![0]));
+            }
             other => panic!("{other:?}"),
         }
+        assert!(matches!(
+            m.resolve_slice(h, 30, 20, 0),
+            SliceResolution::OutOfRange { len: 40 }
+        ));
         assert_eq!(m.stats().resident_hits, 1);
+        assert_eq!(m.stats().shards, 1);
         assert!(m.remove(h));
         assert!(!m.remove(h));
-        assert!(matches!(m.resolve(h, 0), Resolution::Missing));
+        assert!(matches!(resolve_all(&m, h, 0), SliceResolution::Missing));
     }
 
     #[test]
@@ -493,27 +809,33 @@ mod tests {
         let m = map(16); // fits two 8-row tensors
         let a = m.register(8, 40);
         let b = m.register(8, 40);
-        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
-        assert!(matches!(m.place(b, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(b, 0, 0), PlaceAttempt::Placed { .. }));
         // touch `a` so `b` is the LRU
-        m.resolve(a, 0);
+        resolve_all(&m, a, 0);
         let c = m.register(8, 40);
-        match m.place(c, 0) {
-            PlaceAttempt::Evict { victim } => assert_eq!(victim, b),
+        match m.place(c, 0, 0) {
+            PlaceAttempt::Evict { victim, shard } => {
+                assert_eq!((victim, shard), (b, 0));
+            }
             other => panic!("{other:?}"),
         }
-        m.evict(b, 0, vec![7; 40]);
-        assert!(matches!(m.place(c, 0), PlaceAttempt::Placed { .. }));
+        m.evict(b, 0, 0, vec![7; 40]);
+        assert!(matches!(m.place(c, 0, 0), PlaceAttempt::Placed { .. }));
         // evicted tensor resolves from the host copy
-        match m.resolve(b, 0) {
-            Resolution::Host { values, w } => {
-                assert_eq!(w, 8);
-                assert_eq!(*values, vec![7; 40]);
-            }
+        match resolve_all(&m, b, 0) {
+            SliceResolution::Parts { parts, .. } => match &parts[0] {
+                SlicePart::Host { values, start, len } => {
+                    assert_eq!((*start, *len), (0, 40));
+                    assert_eq!(**values, vec![7; 40]);
+                }
+                other => panic!("{other:?}"),
+            },
             other => panic!("{other:?}"),
         }
         let s = m.stats();
         assert_eq!(s.evictions, 1);
+        assert_eq!(s.shard_evictions, 0, "single-shard tensors");
         assert_eq!(s.resident_misses, 1);
     }
 
@@ -522,23 +844,23 @@ mod tests {
         let m = map(16); // two 8-row tensors fill one worker
         let a = m.register(8, 40);
         let b = m.register(8, 40);
-        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
-        assert!(matches!(m.place(b, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(b, 0, 0), PlaceAttempt::Placed { .. }));
         // poll `a` through the control plane (a server read request):
         // it is in active use, so `b` must be the eviction victim
-        let _ = m.read_source(a);
+        let _ = m.read_plan(a);
         let c = m.register(8, 40);
-        match m.place(c, 0) {
-            PlaceAttempt::Evict { victim } => assert_eq!(victim, b),
+        match m.place(c, 0, 0) {
+            PlaceAttempt::Evict { victim, .. } => assert_eq!(victim, b),
             other => panic!("{other:?}"),
         }
         // same for the write path
-        m.evict(b, 0, vec![0; 40]);
-        assert!(matches!(m.place(c, 0), PlaceAttempt::Placed { .. }));
-        let _ = m.write_targets(a);
+        m.evict(b, 0, 0, vec![0; 40]);
+        assert!(matches!(m.place(c, 0, 0), PlaceAttempt::Placed { .. }));
+        let _ = m.write_plan(a);
         let d = m.register(8, 40);
-        match m.place(d, 0) {
-            PlaceAttempt::Evict { victim } => assert_eq!(victim, c),
+        match m.place(d, 0, 0) {
+            PlaceAttempt::Evict { victim, .. } => assert_eq!(victim, c),
             other => panic!("{other:?}"),
         }
     }
@@ -547,16 +869,19 @@ mod tests {
     fn eviction_always_refreshes_the_host_copy() {
         let m = map(64);
         let h = m.register(8, 40);
-        assert!(matches!(m.place(h, 0), PlaceAttempt::Placed { .. }));
-        assert!(matches!(m.place(h, 1), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 0, 1), PlaceAttempt::Placed { .. }));
         // first replica evicted with the original values
-        m.evict(h, 0, vec![1; 40]);
+        m.evict(h, 0, 0, vec![1; 40]);
         // the surviving replica was overwritten (write path); the second
         // eviction carries the NEW array contents and must win over the
         // stale backup — this is the loss-less-eviction guarantee
-        m.evict(h, 1, vec![2; 40]);
-        match m.resolve(h, 0) {
-            Resolution::Host { values, .. } => assert_eq!(*values, vec![2; 40]),
+        m.evict(h, 0, 1, vec![2; 40]);
+        match resolve_all(&m, h, 0) {
+            SliceResolution::Parts { parts, .. } => match &parts[0] {
+                SlicePart::Host { values, .. } => assert_eq!(**values, vec![2; 40]),
+                other => panic!("{other:?}"),
+            },
             other => panic!("{other:?}"),
         }
     }
@@ -565,7 +890,7 @@ mod tests {
     fn pick_worker_prefers_most_free() {
         let m = map(32);
         let a = m.register(8, 40);
-        assert!(matches!(m.place(a, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
         assert_eq!(m.pick_worker(8, &[]), Some(1), "worker 1 is emptier");
         assert_eq!(m.pick_worker(8, &[1]), Some(0));
         assert_eq!(m.pick_worker(8, &[0, 1]), None);
@@ -576,22 +901,111 @@ mod tests {
     fn replicated_tensor_has_multiple_homes() {
         let m = map(64);
         let h = m.register(4, 10);
-        assert!(matches!(m.place(h, 0), PlaceAttempt::Placed { .. }));
-        assert!(matches!(m.place(h, 1), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 0, 1), PlaceAttempt::Placed { .. }));
         let mut homes = m.homes(h);
         homes.sort_unstable();
         assert_eq!(homes, vec![0, 1]);
-        assert!(matches!(m.resolve(h, 1), Resolution::Local { .. }));
+        assert!(matches!(
+            resolve_all(&m, h, 1),
+            SliceResolution::Parts { parts, .. } if matches!(parts[0], SlicePart::Local { .. })
+        ));
         // evicting one replica keeps the other resident
-        m.evict(h, 0, vec![0; 10]);
+        m.evict(h, 0, 0, vec![0; 10]);
         assert_eq!(m.homes(h), vec![1]);
-        assert!(matches!(m.resolve(h, 1), Resolution::Local { .. }));
+        assert!(matches!(
+            resolve_all(&m, h, 1),
+            SliceResolution::Parts { parts, .. } if matches!(parts[0], SlicePart::Local { .. })
+        ));
     }
 
     #[test]
     fn zero_reserve_cannot_place() {
         let m = map(0);
         let h = m.register(8, 40);
-        assert_eq!(m.place(h, 0), PlaceAttempt::NoFit);
+        assert_eq!(m.place(h, 0, 0), PlaceAttempt::NoFit);
+        assert!(m.register_sharded(8, 40, 1, None).is_none());
+    }
+
+    #[test]
+    fn register_sharded_splits_and_aligns() {
+        let m = map(16); // 16 rows: int8 capacity = 2 slots * 40 = 80 elems
+        let h = m.register_sharded(8, 200, 1, None).unwrap();
+        assert_eq!(m.shard_ranges(h), vec![(0, 80), (80, 80), (160, 40)]);
+        // alignment: shard boundaries land on multiples of 7 (cap 80 -> 77)
+        let h2 = m.register_sharded(8, 150, 7, None).unwrap();
+        assert_eq!(m.shard_ranges(h2), vec![(0, 77), (77, 73)]);
+        // a target below capacity caps the shard size
+        let h3 = m.register_sharded(8, 100, 1, Some(30)).unwrap();
+        assert_eq!(m.shard_ranges(h3), vec![(0, 30), (30, 30), (60, 30), (90, 10)]);
+        // an align unit wider than the reserve cannot shard
+        assert!(m.register_sharded(8, 100, 81, None).is_none());
+        assert_eq!(m.stats().shards, 3 + 2 + 4);
+    }
+
+    #[test]
+    fn sharded_tensor_resolves_per_shard_with_partial_fallback() {
+        let m = map(16); // 80 int8 elements per shard
+        let h = m.register_sharded(8, 120, 1, None).unwrap();
+        assert_eq!(m.shard_ranges(h), vec![(0, 80), (80, 40)]);
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 1, 1), PlaceAttempt::Placed { .. }));
+        // the union of homes spans both workers; no single worker covers
+        // the whole tensor
+        let mut homes = m.homes(h);
+        homes.sort_unstable();
+        assert_eq!(homes, vec![0, 1]);
+        assert!(m.slice_homes(h, 0, 120).is_empty());
+        assert_eq!(m.slice_homes(h, 0, 80), vec![0]);
+        assert_eq!(m.slice_homes(h, 80, 40), vec![1]);
+        assert_eq!(m.slice_homes(h, 10, 20), vec![0]);
+        // a cross-shard slice on worker 0: local + remote parts
+        match m.resolve_slice(h, 60, 40, 0) {
+            SliceResolution::Parts { parts, .. } => {
+                assert_eq!(parts.len(), 2);
+                assert!(
+                    matches!(parts[0], SlicePart::Local { start: 60, len: 20, .. }),
+                    "{parts:?}"
+                );
+                assert!(matches!(&parts[1], SlicePart::Remote { workers } if workers == &vec![1]));
+            }
+            other => panic!("{other:?}"),
+        }
+        // evict shard 1: the slice now gathers local + host (partial
+        // fallback), and the shard eviction is counted
+        m.evict(h, 1, 1, vec![9; 40]);
+        match m.resolve_slice(h, 60, 40, 0) {
+            SliceResolution::Parts { parts, .. } => {
+                assert!(matches!(parts[0], SlicePart::Local { .. }));
+                match &parts[1] {
+                    SlicePart::Host { values, start, len } => {
+                        assert_eq!((*start, *len), (0, 20));
+                        assert_eq!(**values, vec![9; 40]);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        let s = m.stats();
+        assert_eq!(s.shard_evictions, 1);
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn sink_write_drops_the_stale_host_backup() {
+        let m = map(64);
+        let h = m.register(8, 40);
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        // a lingering host backup from an earlier eviction cycle
+        m.set_host_copy(h, 0, vec![1; 40]);
+        m.note_sink_write(h, 0);
+        // the backup is gone; only the (authoritative) replica remains
+        match resolve_all(&m, h, 1) {
+            SliceResolution::Parts { parts, .. } => {
+                assert!(matches!(&parts[0], SlicePart::Remote { .. }), "{parts:?}");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

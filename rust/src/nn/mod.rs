@@ -13,15 +13,20 @@
 //! On a coordinator built with [`Coordinator::with_storage`], call
 //! [`MlpInt8::make_resident`] once: the weight matrices move into the
 //! blocks' storage reserves (one tensor per matmul K-segment, optionally
-//! replicated for parallelism) and every subsequent `forward` /
-//! `forward_pipelined` ships only the activations — the weights never
-//! re-cross the host boundary, which is the data-movement saving the
-//! paper's dual-mode blocks exist for. `JobResult::host_bytes_in` /
-//! `Metrics` make the reduction measurable; `benches/serving.rs` asserts
-//! it.
+//! replicated for parallelism; slabs larger than one block's reserve are
+//! sharded) and every subsequent `forward` ships only the activations —
+//! the weights never re-cross the host boundary, which is the
+//! data-movement saving the paper's dual-mode blocks exist for.
+//! [`MlpInt8::forward_pipelined`] goes further on resident models: layer
+//! 1 runs fused (bias/ReLU/requant block-side) into a fabric-resident
+//! activation tensor that layer 2 reads in place, so the inter-layer
+//! activations never leave the fabric at all — only the logits come back.
+//! `JobResult::host_bytes_in/out` / `Metrics` make the reduction
+//! measurable; `benches/serving.rs` asserts it.
 
-use crate::coordinator::job::MatSeg;
-use crate::coordinator::{Coordinator, Job, JobPayload};
+use crate::coordinator::job::{MatSeg, MatX};
+use crate::coordinator::{Coordinator, Job, JobHandle, JobPayload};
+use crate::exec::TensorHandle;
 use anyhow::{ensure, Result};
 
 /// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
@@ -86,7 +91,10 @@ impl QuantLinear {
         for (k0, k1) in coord.matmul_segments(8, self.in_dim()) {
             let slab: Vec<i64> =
                 self.w[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
-            match coord.alloc_tensor_replicated(&slab, 8, copies) {
+            // align shard boundaries to the slab's row width so a slab
+            // larger than one block's reserve splits into rectangular
+            // per-shard K-ranges the mapper can plan partial sums over
+            match coord.alloc_tensor_aligned(&slab, 8, copies, n) {
                 Ok(handle) => segments.push(MatSeg { k0, k1, handle }),
                 Err(e) => {
                     // roll back the segments already stored
@@ -134,11 +142,11 @@ impl QuantLinear {
         coord: &Coordinator,
         x: &[Vec<i64>],
         rw: Option<&ResidentWeights>,
-    ) -> crate::coordinator::JobHandle {
+    ) -> JobHandle {
         let payload = match rw {
             Some(r) => JobPayload::IntMatmulResident {
                 w: 8,
-                x: x.to_vec(),
+                x: MatX::Rows(x.to_vec()),
                 n: r.n,
                 segments: r.segments.clone(),
             },
@@ -259,6 +267,27 @@ impl MlpInt8 {
         }
     }
 
+    /// Whether the fused on-fabric path is viable: a fused task runs every
+    /// weight chunk on its sink tile's home worker, and the activation
+    /// tensor may land on **any** worker — so every weight slab must be
+    /// fully resident on every worker (replicated with `copies >=
+    /// n_blocks`, and not sharded across blocks). Anything less falls back
+    /// to the host-roundtrip pipeline, which has no co-residency needs.
+    fn fused_ready(&self, coord: &Coordinator) -> bool {
+        let Some((r1, r2)) = &self.resident else { return false };
+        let n_workers = coord.farm().len();
+        let covers_all = |rw: &ResidentWeights| {
+            rw.segments.iter().all(|seg| {
+                let Some((_, len)) = coord.placement().info(seg.handle) else {
+                    return false;
+                };
+                let homes = coord.placement().slice_homes(seg.handle, 0, len);
+                (0..n_workers).all(|w| homes.contains(&w))
+            })
+        };
+        covers_all(r1) && covers_all(r2)
+    }
+
     /// Forward pass on the Compute RAM farm -> int32 logits.
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
         let (r1, r2) = self.resident_pair();
@@ -268,11 +297,115 @@ impl MlpInt8 {
     }
 
     /// Forward passes over several independent input batches with
-    /// cross-batch pipelining: batch `i+1`'s first-layer matmul is
-    /// submitted to the engine before batch `i`'s host-side requant and
-    /// second layer run, so the farm never idles between batches. Results
-    /// are bit-identical to calling [`MlpInt8::forward`] per batch.
+    /// cross-batch pipelining. Results are bit-identical to calling
+    /// [`MlpInt8::forward`] per batch.
+    ///
+    /// On a storage-reserve coordinator with resident weights this takes
+    /// the **on-fabric activation path**: layer 1 runs as a fused matmul
+    /// (bias + ReLU + requant applied block-side) whose output tiles are
+    /// deposited straight into a fabric-resident activation tensor, and
+    /// layer 2 consumes that tensor in place — the inter-layer activations
+    /// never cross the host boundary, so the layer-1 jobs report
+    /// `host_bytes_out == 0`. Otherwise it falls back to
+    /// [`Self::forward_pipelined_roundtrip`].
     pub fn forward_pipelined(
+        &self,
+        coord: &Coordinator,
+        batches: &[Vec<Vec<i64>>],
+    ) -> Result<Vec<Vec<Vec<i64>>>> {
+        let fabric_ready = coord.placement().reserve_rows() > 0
+            && batches.iter().all(|x| !x.is_empty())
+            && self.fused_ready(coord);
+        if !fabric_ready {
+            return self.forward_pipelined_roundtrip(coord, batches);
+        }
+        for x in batches {
+            ensure!(
+                x.iter().all(|r| r.len() == self.l1.in_dim()),
+                "input width {} != layer in_dim {}",
+                x.first().map_or(0, Vec::len),
+                self.l1.in_dim()
+            );
+        }
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (r1, r2) = self.resident_pair();
+        let (r1, r2) = (r1.expect("resident"), r2.expect("resident"));
+        let hid = self.l1.out_dim();
+        let n_out = self.l2.out_dim();
+        // layer 1, fused: epilogue on the block, tiles sunk into a fresh
+        // activation tensor (row-aligned shards, spread across workers)
+        let submit_l1 = |x: &Vec<Vec<i64>>| -> Result<(JobHandle, TensorHandle)> {
+            let act = coord.alloc_activation(x.len() * hid, 8, hid)?;
+            let handle = coord.submit(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulFused {
+                    w: 8,
+                    x: MatX::Rows(x.clone()),
+                    n: hid,
+                    segments: r1.segments.clone(),
+                    bias: Some(self.l1.b.clone()),
+                    relu_requant_shift: Some(REQUANT_SHIFT),
+                    sink: Some(act),
+                },
+            });
+            Ok((handle, act))
+        };
+        // layer 2 reads the activations in place; its logits (the job's
+        // only host-bound bytes) return to the host
+        let submit_l2 = |act: TensorHandle, m: usize| -> JobHandle {
+            coord.submit(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulResident {
+                    w: 8,
+                    x: MatX::Resident { handle: act, m },
+                    n: n_out,
+                    segments: r2.segments.clone(),
+                },
+            })
+        };
+        let finish_l2 = |h2: JobHandle, act: TensorHandle, m: usize| -> Result<Vec<Vec<i64>>> {
+            let r = h2.wait()?;
+            coord.free_tensor(act)?;
+            let mut y: Vec<Vec<i64>> = (0..m)
+                .map(|i| r.values[i * n_out..(i + 1) * n_out].to_vec())
+                .collect();
+            self.l2.add_bias(&mut y);
+            Ok(y)
+        };
+        // software pipeline with two activation buffers in flight: while
+        // batch i's layer 2 executes, batch i+1's layer 1 is already
+        // running into its own activation tensor
+        let mut results = Vec::with_capacity(batches.len());
+        let mut l1_inflight = Some(submit_l1(&batches[0])?);
+        let mut l2_inflight: Option<(JobHandle, TensorHandle, usize)> = None;
+        for i in 0..batches.len() {
+            let (h1, act) = l1_inflight.take().expect("layer-1 job in flight");
+            h1.wait()?; // activations are now resident; no values returned
+            let m = batches[i].len();
+            let h2 = submit_l2(act, m);
+            if i + 1 < batches.len() {
+                l1_inflight = Some(submit_l1(&batches[i + 1])?);
+            }
+            if let Some((h2p, actp, mp)) = l2_inflight.take() {
+                results.push(finish_l2(h2p, actp, mp)?);
+            }
+            l2_inflight = Some((h2, act, m));
+        }
+        if let Some((h2p, actp, mp)) = l2_inflight.take() {
+            results.push(finish_l2(h2p, actp, mp)?);
+        }
+        Ok(results)
+    }
+
+    /// The host-roundtrip pipelined path: batch `i+1`'s first-layer matmul
+    /// is submitted to the engine before batch `i`'s host-side requant and
+    /// second layer run, so the farm never idles between batches — but
+    /// every inter-layer activation crosses the host boundary twice. Kept
+    /// as the fallback for non-resident models (and as the comparison
+    /// baseline `benches/serving.rs` measures the on-fabric path against).
+    pub fn forward_pipelined_roundtrip(
         &self,
         coord: &Coordinator,
         batches: &[Vec<Vec<i64>>],
@@ -473,6 +606,37 @@ mod tests {
         mlp.release_resident(&c).unwrap();
         assert!(!mlp.is_resident());
         assert!(c.placement().is_empty());
+    }
+
+    #[test]
+    fn under_replicated_weights_fall_back_to_the_roundtrip_pipeline() {
+        // weights on a single block of a 2-worker farm: the fused path's
+        // co-residency precondition fails, so forward_pipelined must pick
+        // the host-roundtrip pipeline and still be bit-exact
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 192);
+        let mut mlp = MlpInt8::synthetic(32, 16, 8, 21).unwrap();
+        mlp.make_resident(&c, 1).unwrap();
+        assert!(!mlp.fused_ready(&c));
+        let mut rng = Prng::new(22);
+        let batches: Vec<Vec<Vec<i64>>> = (0..3)
+            .map(|_| (0..5).map(|_| (0..32).map(|_| rng.int(8)).collect()).collect())
+            .collect();
+        let piped = mlp.forward_pipelined(&c, &batches).unwrap();
+        for (i, x) in batches.iter().enumerate() {
+            assert_eq!(piped[i], mlp.forward_host(x), "batch {i}");
+        }
+        // fully replicated weights re-enable the fused path
+        mlp.make_resident(&c, 2).unwrap();
+        assert!(mlp.fused_ready(&c));
+        let out0 = c.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed);
+        let fused = mlp.forward_pipelined(&c, &batches).unwrap();
+        let fused_out =
+            c.metrics.host_bytes_out.load(std::sync::atomic::Ordering::Relaxed) - out0;
+        for (i, x) in batches.iter().enumerate() {
+            assert_eq!(fused[i], mlp.forward_host(x), "fused batch {i}");
+        }
+        // only the logits crossed the host boundary
+        assert_eq!(fused_out, 3 * 5 * 8 * 8);
     }
 
     #[test]

@@ -27,12 +27,13 @@ fn prop_blockstore_regions_never_overlap_and_free_returns_rows() {
         let base = rng.range(0, 100);
         let cap = rng.range(32, 256);
         let mut s = BlockStore::new(base, base + cap);
-        let mut live: Vec<u64> = Vec::new();
+        let mut live: Vec<(u64, u32)> = Vec::new();
         let mut next_id = 1u64;
         for _ in 0..200 {
             if rng.chance(0.6) || live.is_empty() {
                 let rows = rng.range(1, cap / 2 + 2);
-                let id = next_id;
+                // exercise multi-shard region ids too
+                let id = (next_id, (next_id % 3) as u32);
                 next_id += 1;
                 if let Some(region) = s.alloc(id, rows) {
                     assert!(region.base >= base, "seed {seed}: region below base");
@@ -263,7 +264,7 @@ fn prop_resident_matmul_matches_host() {
                 id: 0,
                 payload: JobPayload::IntMatmulResident {
                     w: 8,
-                    x: x.clone(),
+                    x: comperam::coordinator::MatX::Rows(x.clone()),
                     n,
                     segments: segments.clone(),
                 },

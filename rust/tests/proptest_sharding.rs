@@ -1,0 +1,226 @@
+//! Property tests for the sharded resident-tensor layer: scatter/gather
+//! roundtrips of tensors larger than one block's storage reserve,
+//! per-shard partial-sum matmuls against the host reference, single-shard
+//! eviction forcing a *partial* host fallback, and the fused on-fabric
+//! activation sink.
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_ucode.rs` (offline build; failing cases print their seed).
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::{Coordinator, Job, JobPayload, MatSeg, MatX, OperandRef};
+use comperam::nn::relu_requant;
+use comperam::util::Prng;
+
+fn rand_tensor(rng: &mut Prng, w: u32, len: usize) -> Vec<i64> {
+    (0..len).map(|_| rng.int(w)).collect()
+}
+
+#[test]
+fn prop_sharded_alloc_write_read_free_roundtrip() {
+    // a 32-row reserve holds at most 160 int8 elements per shard, so most
+    // of these tensors shard; 3 workers give them somewhere to spread
+    let c = Coordinator::with_storage(Geometry::G512x40, 3, 32);
+    let mut rng = Prng::new(0x54A2D);
+    for case in 0..40u64 {
+        let w = [2, 4, 8][rng.range(0, 3)] as u32;
+        let len = rng.range(1, 700);
+        let values = rand_tensor(&mut rng, w, len);
+        let Ok(h) = c.alloc_tensor(&values, w) else {
+            continue; // larger than the farm's total storage: fine
+        };
+        let shards = c.placement().shard_count(h);
+        let rows_one_shard =
+            comperam::cram::store::tensor_rows(Geometry::G512x40, w, len);
+        if rows_one_shard > 32 {
+            assert!(shards > 1, "case {case}: {rows_one_shard} rows must shard");
+        }
+        // the shard table tiles the tensor contiguously
+        let ranges = c.placement().shard_ranges(h);
+        let mut expect_off = 0;
+        for (off, l) in &ranges {
+            assert_eq!(*off, expect_off, "case {case}: shard table has a gap");
+            assert!(*l > 0);
+            expect_off += l;
+        }
+        assert_eq!(expect_off, len, "case {case}: shard table covers the tensor");
+        // scatter/gather roundtrip
+        assert_eq!(c.read_tensor(h).unwrap(), values, "case {case} w={w} len={len}");
+        if rng.chance(0.5) {
+            let updated = rand_tensor(&mut rng, w, len);
+            c.write_tensor(h, &updated).unwrap();
+            assert_eq!(c.read_tensor(h).unwrap(), updated, "case {case} rewrite");
+        }
+        c.free_tensor(h).unwrap();
+        assert!(c.read_tensor(h).is_err(), "case {case}: freed handle is gone");
+    }
+    assert_eq!(c.data_stats().shards, 0, "every shard was freed");
+}
+
+#[test]
+fn prop_sharded_weight_matmul_matches_host_reference() {
+    // 64-row reserve: an int8 slab shard holds 320 elements, so slabs of
+    // k*n > 320 split into per-shard partial plans whose int32 partial
+    // sums the scheduler combines — bit-exact against the host
+    let c = Coordinator::with_storage(Geometry::G512x40, 3, 64);
+    let mut rng = Prng::new(0x3A2D);
+    for case in 0..10u64 {
+        let m = rng.range(1, 6);
+        let k = rng.range(8, 22);
+        let n = rng.range(20, 45);
+        let x: Vec<Vec<i64>> = (0..m).map(|_| rand_tensor(&mut rng, 8, k)).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
+        let segments: Vec<MatSeg> = c
+            .matmul_segments(8, k)
+            .into_iter()
+            .map(|(k0, k1)| {
+                let slab: Vec<i64> =
+                    wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+                let handle = c.alloc_tensor_aligned(&slab, 8, 1, n).unwrap();
+                MatSeg { k0, k1, handle }
+            })
+            .collect();
+        let sharded = segments
+            .iter()
+            .any(|s| c.placement().shard_count(s.handle) > 1);
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulResident {
+                    w: 8,
+                    x: MatX::Rows(x.clone()),
+                    n,
+                    segments: segments.clone(),
+                },
+            })
+            .unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let expect: i64 =
+                    (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum::<i64>() as i32 as i64;
+                assert_eq!(
+                    r.values[i * n + j],
+                    expect,
+                    "case {case} m={m} k={k} n={n} sharded={sharded} ({i},{j})"
+                );
+            }
+        }
+        for seg in segments {
+            c.free_tensor(seg.handle).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_single_shard_eviction_forces_partial_host_fallback() {
+    for seed in 0..6u64 {
+        // two workers with 32-row reserves (160 int8 elements each): a
+        // 300-element tensor takes two shards, one per worker, filling
+        // both reserves
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 32);
+        let mut rng = Prng::new(0xE71C + seed);
+        let big = rand_tensor(&mut rng, 8, 300);
+        let h = c.alloc_tensor(&big, 8).unwrap();
+        assert_eq!(c.placement().shard_count(h), 2);
+        // a filler allocation evicts exactly one LRU shard of `big`
+        let filler = rand_tensor(&mut rng, 8, 100);
+        let hf = c.alloc_tensor(&filler, 8).unwrap();
+        let stats = c.data_stats();
+        assert!(
+            stats.shard_evictions >= 1,
+            "seed {seed}: a shard of the big tensor must have spilled: {stats:?}"
+        );
+        assert!(
+            !c.placement().homes(h).is_empty(),
+            "seed {seed}: the other shard stays resident (partial fallback)"
+        );
+        // both tensors still read back bit-exactly (gather = resident
+        // shard from the block + evicted shard from its host copy)
+        assert_eq!(c.read_tensor(h).unwrap(), big, "seed {seed}");
+        assert_eq!(c.read_tensor(hf).unwrap(), filler, "seed {seed}");
+        // computing against the partially evicted tensor works: resident
+        // parts hit, evicted parts miss to the host copy
+        let other = rand_tensor(&mut rng, 8, 300);
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: OperandRef::Tensor(h),
+                    b: OperandRef::Values(other.clone()),
+                },
+            })
+            .unwrap();
+        for i in 0..300 {
+            let expect = comperam::util::sext(
+                comperam::util::mask(big[i] + other[i], 8) as i64,
+                8,
+            );
+            assert_eq!(r.values[i], expect, "seed {seed} i={i}");
+        }
+        let stats = c.data_stats();
+        assert!(stats.resident_hits >= 1, "seed {seed}: {stats:?}");
+        assert!(stats.resident_misses >= 1, "seed {seed}: {stats:?}");
+        // the tensor survives the compute run bit-exactly
+        assert_eq!(c.read_tensor(h).unwrap(), big, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_fused_sink_matches_host_epilogue() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 2, 192);
+    let mut rng = Prng::new(0xFAB5);
+    for case in 0..8u64 {
+        let m = rng.range(1, 8);
+        let k = rng.range(4, 20);
+        let n = rng.range(4, 30);
+        let x: Vec<Vec<i64>> = (0..m).map(|_| rand_tensor(&mut rng, 8, k)).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
+        let bias: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
+        let segments: Vec<MatSeg> = c
+            .matmul_segments(8, k)
+            .into_iter()
+            .map(|(k0, k1)| {
+                let slab: Vec<i64> =
+                    wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+                MatSeg { k0, k1, handle: c.alloc_tensor_replicated(&slab, 8, 2).unwrap() }
+            })
+            .collect();
+        let act = c.alloc_activation(m * n, 8, n).unwrap();
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntMatmulFused {
+                    w: 8,
+                    x: MatX::Rows(x.clone()),
+                    n,
+                    segments: segments.clone(),
+                    bias: Some(bias.clone()),
+                    relu_requant_shift: Some(7),
+                    sink: Some(act),
+                },
+            })
+            .unwrap();
+        assert!(r.values.is_empty(), "case {case}: sunk job returns nothing");
+        assert_eq!(r.host_bytes_out, 0, "case {case}: output stayed on-fabric");
+        let mut expect: Vec<Vec<i64>> = (0..m)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        let s: i64 = (0..k).map(|kk| x[i][kk] * wt[kk][j]).sum();
+                        (s + bias[j]) as i32 as i64
+                    })
+                    .collect()
+            })
+            .collect();
+        relu_requant(&mut expect, 7);
+        let flat: Vec<i64> = expect.iter().flatten().copied().collect();
+        assert_eq!(c.read_tensor(act).unwrap(), flat, "case {case} m={m} k={k} n={n}");
+        c.free_tensor(act).unwrap();
+        for seg in segments {
+            c.free_tensor(seg.handle).unwrap();
+        }
+    }
+}
