@@ -20,10 +20,10 @@ use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
 use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg, MatX};
 use comperam::cram::{ops, CramBlock};
-use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
-use comperam::nn::MlpInt8;
+use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
+use comperam::nn::{MlpBf16, MlpInt8};
 use comperam::util::benchkit::{bench, black_box, ops_per_sec};
-use comperam::util::Prng;
+use comperam::util::{Prng, SoftBf16};
 
 fn main() {
     let geom = Geometry::G512x40;
@@ -37,7 +37,7 @@ fn main() {
     // pre-refactor path: assemble the full-block program and reload the
     // instruction memory on every batch (fresh CompiledKernel = fresh
     // residency id, exactly what every op paid before the cache existed)
-    let key_full = KernelKey::int_ew_full(KernelOp::IntAdd, 8, geom);
+    let key_full = KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, geom);
     let mut cold = CramBlock::new(geom);
     let m_cold = bench("serving add_i8 x64  uncached full-block (assemble+reload)", || {
         let kernel = CompiledKernel::compile(key_full);
@@ -46,7 +46,7 @@ fn main() {
 
     // cached path: compiled once, sized to the batch, resident thereafter
     let cache = KernelCache::new();
-    let key_sized = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, n, geom);
+    let key_sized = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, n, geom);
     let mut hot = CramBlock::new(geom);
     let m_hot = bench("serving add_i8 x64  cached sized kernel (resident)", || {
         let kernel = cache.get(key_sized);
@@ -178,13 +178,13 @@ fn main() {
     let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(4)).collect()).collect();
     let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(4)).collect()).collect();
     let segments: Vec<MatSeg> = rcoord
-        .matmul_segments(4, k)
+        .matmul_segments(Dtype::INT4, k)
         .into_iter()
         .map(|(k0, k1)| {
             let slab: Vec<i64> =
                 wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
             let handle = rcoord
-                .alloc_tensor_aligned(&slab, 4, rblocks, n)
+                .alloc_tensor_aligned(&slab, Dtype::INT4, rblocks, n)
                 .expect("weight slab fits the reserve");
             MatSeg { k0, k1, handle }
         })
@@ -311,8 +311,8 @@ fn main() {
     assert_eq!(round, host_ref, "host-roundtrip pipeline must match the host");
     assert_eq!(fused, host_ref, "on-fabric pipeline must be bit-exact");
     // acceptance: layer-1 -> layer-2 activation traffic is ~0 — only the
-    // logits (fb x fm x 8 outputs x 8 bytes) leave the fabric
-    let logits_bytes = (fb * fm * 8 * 8) as u64;
+    // logits (fb x fm x 8 int32 outputs x 4 packed bytes) leave the fabric
+    let logits_bytes = (fb * fm * 8 * 4) as u64;
     assert_eq!(
         fused_out, logits_bytes,
         "on-fabric pipeline must move only the logits out (layer-1 \
@@ -341,5 +341,123 @@ fn main() {
          ({:?} vs {:?})",
         m_fused.mean,
         m_round.mean
+    );
+
+    // ---- adaptable precision: the same farm served at int8 vs bf16 --------
+    // The paper's headline claim, measured end to end: one coordinator
+    // takes int8 and bf16 jobs back to back. bf16's bit-serial float
+    // schedules cost far more cycles per element, so int8 should win
+    // throughput on the same blocks — the point is that *both* run, and
+    // the per-dtype metrics keep them distinguishable.
+    let pcoord2 = Coordinator::new(geom, 4);
+    pcoord2.prewarm_serving();
+    let pn = 800usize;
+    let ia: Vec<i64> = (0..pn).map(|_| rng.int(8)).collect();
+    let ib: Vec<i64> = (0..pn).map(|_| rng.int(8)).collect();
+    let fa: Vec<SoftBf16> = (0..pn).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect();
+    let fbv: Vec<SoftBf16> = (0..pn).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect();
+    // bit-exactness gates first
+    let ri = pcoord2
+        .run(Job {
+            id: 0,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: ia.clone(),
+                b: ib.clone(),
+            },
+        })
+        .unwrap();
+    for i in 0..pn {
+        let expect = comperam::util::sext(comperam::util::mask(ia[i] + ib[i], 8) as i64, 8);
+        assert_eq!(ri.values[i], expect, "int8 add i={i}");
+    }
+    let rf = pcoord2
+        .run(Job {
+            id: 0,
+            payload: JobPayload::Bf16Elementwise { mul: false, a: fa.clone(), b: fbv.clone() },
+        })
+        .unwrap();
+    for i in 0..pn {
+        assert_eq!(
+            rf.values[i],
+            fa[i].add(fbv[i]).to_bits() as i64,
+            "bf16 add must match SoftBf16 at i={i}"
+        );
+    }
+    let m_i8 = bench("serving add_i8  x800 on the shared farm", || {
+        black_box(
+            pcoord2
+                .run(Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwise {
+                        op: EwOp::Add,
+                        w: 8,
+                        a: ia.clone(),
+                        b: ib.clone(),
+                    },
+                })
+                .unwrap(),
+        );
+    });
+    let m_bf = bench("serving add_bf16 x800 on the shared farm", || {
+        black_box(
+            pcoord2
+                .run(Job {
+                    id: 0,
+                    payload: JobPayload::Bf16Elementwise {
+                        mul: false,
+                        a: fa.clone(),
+                        b: fbv.clone(),
+                    },
+                })
+                .unwrap(),
+        );
+    });
+    println!(
+        "  -> precision adaptability: int8 {:.2} M adds/s vs bf16 {:.2} M adds/s \
+         on the same blocks ({:.1}x int8 advantage, bit-serial float cost)",
+        ops_per_sec(pn as u64, &m_i8) / 1e6,
+        ops_per_sec(pn as u64, &m_bf) / 1e6,
+        m_bf.mean.as_secs_f64() / m_i8.mean.as_secs_f64(),
+    );
+    // bf16 MLP forward on the same farm shape as the int8 MLP above
+    let bcoord = Coordinator::with_storage(geom, rblocks, 192);
+    let mut bmlp = MlpBf16::synthetic(16, 8, 4, 0xBF).unwrap();
+    let bx: Vec<Vec<SoftBf16>> = (0..8)
+        .map(|_| (0..16).map(|_| SoftBf16::from_f32(rng.int(5) as f32)).collect())
+        .collect();
+    let bhost = bmlp.forward_host(&bx);
+    assert_eq!(bmlp.forward(&bcoord, &bx).unwrap(), bhost, "bf16 MLP bit-exact");
+    bmlp.make_resident(&bcoord, rblocks).unwrap();
+    assert_eq!(bmlp.forward(&bcoord, &bx).unwrap(), bhost, "resident bf16 MLP bit-exact");
+    let m_bmlp = bench("serving mlp 8x(16-8-4) bf16  resident weights", || {
+        black_box(bmlp.forward(&bcoord, &bx).unwrap());
+    });
+    println!(
+        "  -> bf16 MLP: {:.2} ms/forward (resident slabs); metrics: {}",
+        m_bmlp.mean.as_secs_f64() * 1e3,
+        bcoord.metrics.snapshot(),
+    );
+    // the packed-storage claim: the same tensor resident at int4 uses at
+    // most half the reserve rows and half the accounted host bytes of int8
+    let scoord = Coordinator::with_storage(geom, 1, 160);
+    let svals: Vec<i64> = (0..200).map(|_| rng.int(4)).collect();
+    let b0 = scoord.data_stats().host_bytes_in;
+    scoord.alloc_tensor(&svals, Dtype::INT8).unwrap();
+    let rows8 = scoord.placement().occupancy(0).0;
+    let bytes8 = scoord.data_stats().host_bytes_in - b0;
+    let scoord4 = Coordinator::with_storage(geom, 1, 160);
+    let b1 = scoord4.data_stats().host_bytes_in;
+    scoord4.alloc_tensor(&svals, Dtype::INT4).unwrap();
+    let rows4 = scoord4.placement().occupancy(0).0;
+    let bytes4 = scoord4.data_stats().host_bytes_in - b1;
+    assert!(
+        rows4 * 2 <= rows8 && bytes4 * 2 <= bytes8,
+        "int4 must pack: rows {rows4} vs {rows8}, bytes {bytes4} vs {bytes8}"
+    );
+    println!(
+        "  -> packed int4 storage: {rows4} rows / {bytes4} host bytes vs \
+         int8's {rows8} rows / {bytes8} bytes for the same 200 values",
     );
 }

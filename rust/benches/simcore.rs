@@ -89,7 +89,7 @@ fn main() {
 
     // 5. kernel cache: assembly cost vs cached lookup (the exec layer's
     // setup amortization; see benches/serving.rs for the end-to-end win)
-    let key = KernelKey::int_ew_full(KernelOp::IntMul, 8, Geometry::G512x40);
+    let key = KernelKey::int_ew_full(KernelOp::IntMul, comperam::Dtype::INT8, Geometry::G512x40);
     bench("kernel assembly mul_i8 (cache miss path)", || {
         black_box(CompiledKernel::compile(key));
     });

@@ -132,6 +132,19 @@ fn main() -> anyhow::Result<()> {
          served 3 compute-by-handle requests; data plane {:?}",
         coord.data_stats()
     );
+
+    // ---- adaptable precision: one connection, three dtypes ---------------
+    let v = ask(r#"{"id": 30, "op": "add", "dtype": "int4", "a": [3, -8], "b": [4, 7]}"#.into())?;
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let v = ask(r#"{"id": 31, "op": "mul", "dtype": "bf16", "a": [1.5, -2.0], "b": [0.25, 3.0]}"#.into())?;
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    let v = ask(r#"{"id": 32, "op": "dot", "dtype": "bf16", "a": [1.5, 2.0, -1.0], "b": [2.0, 0.5, 4.0]}"#.into())?;
+    assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+    println!(
+        "precision protocol: int4, bf16 elementwise and a bf16 dot served on \
+         the same farm; per-dtype metrics in: {}",
+        coord.metrics.snapshot()
+    );
     server.stop();
     Ok(())
 }

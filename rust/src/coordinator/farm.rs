@@ -36,9 +36,10 @@ use crate::cram::{ops, store, CramBlock};
 use crate::ctrl::CycleStats;
 use crate::exec::placement::{PlaceAttempt, ShardSource, SlicePart, SliceResolution};
 use crate::exec::{
-    CompiledKernel, DataStats, KernelCache, KernelKey, PlacementMap, ResidencyMap,
+    CompiledKernel, DataStats, Dtype, KernelCache, KernelKey, PlacementMap, ResidencyMap,
     ResidencyStats, TensorHandle, TensorSlice,
 };
+use crate::util::SoftBf16;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::borrow::Cow;
 use std::collections::VecDeque;
@@ -62,13 +63,19 @@ fn lcm(a: usize, b: usize) -> usize {
     a / gcd(a, b) * b
 }
 
+/// Fold one run's cycle statistics into an accumulator (multi-kernel
+/// tasks: fused matmul chunks, bf16 MAC waves).
+fn accumulate_stats(acc: &mut CycleStats, s: CycleStats) {
+    acc.cycles += s.cycles;
+    acc.array_cycles += s.array_cycles;
+    acc.instructions += s.instructions;
+}
+
 /// Sum cycle statistics (energy-relevant total; time uses the wave max).
 pub fn merge_stats(stats: impl IntoIterator<Item = CycleStats>) -> CycleStats {
     let mut out = CycleStats::default();
     for s in stats {
-        out.cycles += s.cycles;
-        out.array_cycles += s.array_cycles;
-        out.instructions += s.instructions;
+        accumulate_stats(&mut out, s);
     }
     out
 }
@@ -97,9 +104,10 @@ pub struct TaskOutput {
     pub task_index: usize,
     pub values: Vec<i64>,
     pub stats: CycleStats,
-    /// Operand bytes that crossed host -> block for this task.
+    /// Packed operand bytes ([`Dtype::slice_bytes`]) that crossed
+    /// host -> block for this task.
     pub host_bytes_in: u64,
-    /// Result bytes read block -> host.
+    /// Packed result bytes read block -> host.
     pub host_bytes_out: u64,
     /// Resident operands resolved from block storage (no host traffic).
     pub resident_hits: u64,
@@ -364,9 +372,10 @@ impl BlockFarm {
     // ---- the tensor control plane ----------------------------------------
 
     /// Store a tensor on one block (a single replica); see
-    /// [`Self::alloc_tensor_replicated`].
-    pub fn alloc_tensor(&self, values: &[i64], w: u32) -> Result<TensorHandle> {
-        self.alloc_tensor_aligned(values, w, 1, 1)
+    /// [`Self::alloc_tensor_replicated`]. Integer tensors carry signed
+    /// values; bf16 tensors carry raw 16-bit patterns.
+    pub fn alloc_tensor(&self, values: &[i64], dtype: Dtype) -> Result<TensorHandle> {
+        self.alloc_tensor_aligned(values, dtype, 1, 1)
     }
 
     /// Store a tensor in the storage reserve of up to `copies` blocks
@@ -374,10 +383,10 @@ impl BlockFarm {
     pub fn alloc_tensor_replicated(
         &self,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
         copies: usize,
     ) -> Result<TensorHandle> {
-        self.alloc_tensor_aligned(values, w, copies, 1)
+        self.alloc_tensor_aligned(values, dtype, copies, 1)
     }
 
     /// Store a tensor across the farm's storage reserves. A tensor too
@@ -387,15 +396,17 @@ impl BlockFarm {
     /// on up to `copies` blocks (most-free-first), evicting
     /// least-recently-used shards to host memory as needed. Every shard
     /// must land at least one replica or the whole allocation fails (and
-    /// rolls back). Counts `len * 8` host bytes in per replica written.
+    /// rolls back). Counts the **packed** bytes ([`Dtype::slice_bytes`])
+    /// in per replica written — an int4 tensor honestly costs half the
+    /// host traffic of the same tensor at int8.
     pub fn alloc_tensor_aligned(
         &self,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
         copies: usize,
         align: usize,
     ) -> Result<TensorHandle> {
-        self.alloc_tensor_inner(values, w, copies, align, None, true)
+        self.alloc_tensor_inner(values, dtype, copies, align, None, true)
     }
 
     /// Allocate a zero-initialized **activation** tensor: a fabric-side
@@ -410,23 +421,23 @@ impl BlockFarm {
     /// mapper's tiles never fragment. The zeros are created block-side:
     /// **no host bytes are counted** — that is the point of the on-fabric
     /// path.
-    pub fn alloc_activation(&self, len: usize, w: u32, align: usize) -> Result<TensorHandle> {
+    pub fn alloc_activation(&self, len: usize, dtype: Dtype, align: usize) -> Result<TensorHandle> {
         let spread = len.div_ceil(self.blocks.len().max(1));
         let zeros = vec![0; len];
         let cols = self.geometry.cols();
         let tile_align = lcm(align.max(1), cols);
-        match self.alloc_tensor_inner(&zeros, w, 1, tile_align, Some(spread), false) {
+        match self.alloc_tensor_inner(&zeros, dtype, 1, tile_align, Some(spread), false) {
             Ok(h) => Ok(h),
             // a tile-aligned unit may not fit a small reserve; plain row
             // alignment is always correct, just tile-fragmenting
-            Err(_) => self.alloc_tensor_inner(&zeros, w, 1, align, Some(spread), false),
+            Err(_) => self.alloc_tensor_inner(&zeros, dtype, 1, align, Some(spread), false),
         }
     }
 
     fn alloc_tensor_inner(
         &self,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
         copies: usize,
         align: usize,
         target_elems: Option<usize>,
@@ -436,30 +447,32 @@ impl BlockFarm {
             self.placement.reserve_rows() > 0,
             "farm has no tensor-storage reserve (build it with with_storage)"
         );
-        ensure!((2..=32).contains(&w), "tensor width {w} outside 2..=32");
+        if let Some(w) = dtype.int_width() {
+            ensure!((2..=32).contains(&w), "tensor width {w} outside 2..=32");
+        }
         ensure!(!values.is_empty(), "empty tensor");
         ensure!(copies >= 1, "zero replicas requested");
-        store::check_int_range(values, w)?;
+        dtype.check_values(values)?;
         let _guard = self.tensor_lock.lock().unwrap();
         let Some(h) =
-            self.placement.register_sharded(w, values.len(), align, target_elems)
+            self.placement.register_sharded(dtype, values.len(), align, target_elems)
         else {
             let (_, capacity) = self.placement.occupancy(0);
             bail!(
-                "a {align}-element unit of an int{w} tensor does not fit the \
+                "a {align}-element unit of a {dtype} tensor does not fit the \
                  {capacity}-row per-block reserve"
             );
         };
         let mut written = 0usize;
         for (idx, (soff, slen)) in self.placement.shard_ranges(h).into_iter().enumerate() {
-            let rows = store::tensor_rows(self.geometry, w, slen);
+            let rows = store::tensor_rows(self.geometry, dtype, slen);
             let shard_vals = &values[soff..soff + slen];
             let mut placed = 0usize;
             let mut tried: Vec<usize> = Vec::new();
             while placed < copies.min(self.blocks.len()) {
                 let Some(worker) = self.placement.pick_worker(rows, &tried) else { break };
                 tried.push(worker);
-                if self.place_shard(h, idx as u32, worker, shard_vals, w)? {
+                if self.place_shard(h, idx as u32, worker, shard_vals, dtype)? {
                     placed += 1;
                 }
             }
@@ -474,7 +487,7 @@ impl BlockFarm {
             written += slen * placed;
         }
         if count_bytes {
-            self.placement.add_host_bytes_in((written * 8) as u64);
+            self.placement.add_host_bytes_in(dtype.slice_bytes(written));
         }
         Ok(h)
     }
@@ -487,13 +500,13 @@ impl BlockFarm {
         shard: u32,
         worker: usize,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
     ) -> Result<bool> {
         loop {
             match self.placement.place(h, shard, worker) {
                 PlaceAttempt::Placed { base } => {
                     let mut block = self.blocks[worker].lock().unwrap();
-                    store::write_tensor_rows(block.array_mut(), values, w, base);
+                    store::write_tensor_rows(block.array_mut(), values, dtype, base);
                     return Ok(true);
                 }
                 PlaceAttempt::Evict { victim, shard: vs } => {
@@ -510,15 +523,15 @@ impl BlockFarm {
     /// resident — eviction degrades a large tensor to a partial host
     /// fallback, not a total one.
     fn evict_replica(&self, victim: TensorHandle, shard: u32, worker: usize) -> Result<()> {
-        let Some((base, w, _soff, slen)) = self.placement.region_of(victim, shard, worker)
+        let Some((base, dtype, _soff, slen)) = self.placement.region_of(victim, shard, worker)
         else {
             return Ok(()); // already gone
         };
         let values = {
             let block = self.blocks[worker].lock().unwrap();
-            store::read_tensor_rows(block.array(), slen, w, base)
+            store::read_tensor_rows(block.array(), slen, dtype, base)
         };
-        self.placement.add_host_bytes_out((values.len() * 8) as u64);
+        self.placement.add_host_bytes_out(dtype.slice_bytes(values.len()));
         self.placement.evict(victim, shard, worker, values);
         Ok(())
     }
@@ -528,7 +541,7 @@ impl BlockFarm {
     /// evicted shard's host copy is replaced instead.
     pub fn write_tensor(&self, h: TensorHandle, values: &[i64]) -> Result<()> {
         let _guard = self.tensor_lock.lock().unwrap();
-        let Some((w, len, shard_writes)) = self.placement.write_plan(h) else {
+        let Some((dtype, len, shard_writes)) = self.placement.write_plan(h) else {
             bail!("unknown tensor handle {}", h.id());
         };
         ensure!(
@@ -537,8 +550,8 @@ impl BlockFarm {
             h.id(),
             values.len()
         );
-        store::check_int_range(values, w)?;
-        let mut bytes = 0usize;
+        dtype.check_values(values)?;
+        let mut bytes = 0u64;
         for sw in shard_writes {
             let shard_vals = &values[sw.offset..sw.offset + sw.len];
             if sw.homes.is_empty() {
@@ -547,16 +560,16 @@ impl BlockFarm {
             }
             for (worker, base) in &sw.homes {
                 let mut block = self.blocks[*worker].lock().unwrap();
-                store::write_tensor_rows(block.array_mut(), shard_vals, w, *base);
+                store::write_tensor_rows(block.array_mut(), shard_vals, dtype, *base);
             }
             // a partially evicted shard keeps a host backup alongside its
             // replicas — refresh it so it can never go stale
             if sw.has_host {
                 self.placement.refresh_host_copy(h, sw.index, shard_vals);
             }
-            bytes += sw.len * 8 * sw.homes.len();
+            bytes += dtype.slice_bytes(sw.len) * sw.homes.len() as u64;
         }
-        self.placement.add_host_bytes_in(bytes as u64);
+        self.placement.add_host_bytes_in(bytes);
         Ok(())
     }
 
@@ -565,17 +578,17 @@ impl BlockFarm {
     /// evicted).
     pub fn read_tensor(&self, h: TensorHandle) -> Result<Vec<i64>> {
         let _guard = self.tensor_lock.lock().unwrap();
-        let Some((w, len, reads)) = self.placement.read_plan(h) else {
+        let Some((dtype, len, reads)) = self.placement.read_plan(h) else {
             bail!("unknown tensor handle {}", h.id());
         };
         let mut out: Vec<i64> = Vec::with_capacity(len);
-        let mut block_bytes = 0usize;
+        let mut block_bytes = 0u64;
         for r in reads {
             match r.src {
                 ShardSource::Block { worker, base } => {
                     let block = self.blocks[worker].lock().unwrap();
-                    out.extend(store::read_tensor_rows(block.array(), r.len, w, base));
-                    block_bytes += r.len * 8;
+                    out.extend(store::read_tensor_rows(block.array(), r.len, dtype, base));
+                    block_bytes += dtype.slice_bytes(r.len);
                 }
                 ShardSource::Host(values) => out.extend_from_slice(&values),
                 ShardSource::Missing => bail!(
@@ -584,7 +597,7 @@ impl BlockFarm {
                 ),
             }
         }
-        self.placement.add_host_bytes_out(block_bytes as u64);
+        self.placement.add_host_bytes_out(block_bytes);
         Ok(out)
     }
 
@@ -731,15 +744,15 @@ struct TaskRun {
 
 /// Gather the values of a resident-tensor slice on this worker: local
 /// shard parts read the block's array in place (hits), evicted parts fall
-/// back to their host copies (misses, at host-traffic cost), and parts
-/// resident only elsewhere are routing errors. Returns
-/// `(values, host_bytes_in, resident_hits)`.
+/// back to their host copies (misses, at packed host-traffic cost), and
+/// parts resident only elsewhere are routing errors. Returns
+/// `(values, dtype, host_bytes_in, resident_hits)`.
 fn gather_slice(
     s: &TensorSlice,
     worker: usize,
     block: &CramBlock,
     placement: &PlacementMap,
-) -> Result<(Vec<i64>, u64, u64)> {
+) -> Result<(Vec<i64>, Dtype, u64, u64)> {
     match placement.resolve_slice(s.handle, s.offset, s.len, worker) {
         SliceResolution::Missing => {
             bail!("tensor handle {} is not allocated", s.handle.id())
@@ -749,7 +762,7 @@ fn gather_slice(
             s.offset,
             s.offset + s.len
         ),
-        SliceResolution::Parts { w, parts } => {
+        SliceResolution::Parts { dtype, parts } => {
             let mut vals: Vec<i64> = Vec::with_capacity(s.len);
             let mut bytes = 0u64;
             let mut hits = 0u64;
@@ -758,7 +771,7 @@ fn gather_slice(
                     SlicePart::Local { base, start, len } => {
                         vals.extend(store::read_tensor_slice(
                             block.array(),
-                            w,
+                            dtype,
                             base,
                             start,
                             len,
@@ -767,7 +780,7 @@ fn gather_slice(
                     }
                     SlicePart::Host { values, start, len } => {
                         vals.extend_from_slice(&values[start..start + len]);
-                        bytes += (len * 8) as u64;
+                        bytes += dtype.slice_bytes(len);
                     }
                     SlicePart::Remote { workers } => bail!(
                         "tensor {} is resident on workers {workers:?}, \
@@ -776,25 +789,26 @@ fn gather_slice(
                     ),
                 }
             }
-            Ok((vals, bytes, hits))
+            Ok((vals, dtype, bytes, hits))
         }
     }
 }
 
 /// Resolve a task operand into values the ops layer can stage. Inline
-/// operands count their bytes as host traffic; resident operands are
-/// gathered from this worker's block (and any evicted shards' host
-/// copies).
+/// operands count their packed bytes (at the task's `dtype`) as host
+/// traffic; resident operands are gathered from this worker's block (and
+/// any evicted shards' host copies).
 fn resolve_operand<'t>(
     op: &'t Operand,
+    dtype: Dtype,
     worker: usize,
     block: &CramBlock,
     placement: &PlacementMap,
 ) -> Result<(Cow<'t, [i64]>, u64, u64)> {
     match op {
-        Operand::Inline(v) => Ok((Cow::Borrowed(&v[..]), (v.len() * 8) as u64, 0)),
+        Operand::Inline(v) => Ok((Cow::Borrowed(&v[..]), dtype.slice_bytes(v.len()), 0)),
         Operand::Resident(s) => {
-            let (vals, bytes, hits) = gather_slice(s, worker, block, placement)?;
+            let (vals, _, bytes, hits) = gather_slice(s, worker, block, placement)?;
             Ok((Cow::Owned(vals), bytes, hits))
         }
     }
@@ -807,6 +821,7 @@ fn resolve_operand<'t>(
 #[allow(clippy::too_many_arguments)]
 fn resolve_x_rows(
     x: &TaskX,
+    dtype: Dtype,
     i0: usize,
     i1: usize,
     k0: usize,
@@ -833,7 +848,7 @@ fn resolve_x_rows(
                     })
                 })
                 .collect::<Result<_>>()?;
-            Ok((sliced, (elems * 8) as u64, 0))
+            Ok((sliced, dtype.slice_bytes(elems), 0))
         }
         TaskX::Resident { handle, k } => {
             ensure!(k1 <= *k, "segment k-range exceeds x width {k}");
@@ -845,7 +860,7 @@ fn resolve_x_rows(
                     offset: i0 * k,
                     len: (i1 - i0) * k,
                 };
-                let (flat, bytes, hits) = gather_slice(&s, worker, block, placement)?;
+                let (flat, _, bytes, hits) = gather_slice(&s, worker, block, placement)?;
                 let rows = flat.chunks(*k).map(|c| c.to_vec()).collect();
                 return Ok((rows, bytes, hits));
             }
@@ -854,7 +869,7 @@ fn resolve_x_rows(
             let mut hits = 0u64;
             for i in i0..i1 {
                 let s = TensorSlice { handle: *handle, offset: i * k + k0, len: kseg };
-                let (v, b, h) = gather_slice(&s, worker, block, placement)?;
+                let (v, _, b, h) = gather_slice(&s, worker, block, placement)?;
                 rows.push(v);
                 bytes += b;
                 hits += h;
@@ -916,27 +931,31 @@ fn run_task(
     let kernel = cache.get(task.key());
     check_kernel_fits(&kernel, placement)?;
     match task {
-        BlockTask::IntElementwise { a, b, .. } => {
-            let (av, in_a, hit_a) = resolve_operand(a, worker, block, placement)?;
-            let (bv, in_b, hit_b) = resolve_operand(b, worker, block, placement)?;
+        BlockTask::IntElementwise { key, a, b } => {
+            let dt = key.dtype;
+            let (av, in_a, hit_a) = resolve_operand(a, dt, worker, block, placement)?;
+            let (bv, in_b, hit_b) = resolve_operand(b, dt, worker, block, placement)?;
             let r = ops::int_ew_compiled(block, &kernel, &av, &bv)?;
+            // results read back at the kernel's result width (2W for mul)
+            let result_dt = Dtype::Int { w: kernel.vec_layout()?.result_w };
             Ok(TaskRun {
-                host_bytes_out: (r.values.len() * 8) as u64,
+                host_bytes_out: result_dt.slice_bytes(r.values.len()),
                 host_bytes_in: in_a + in_b,
                 resident_hits: hit_a + hit_b,
                 values: r.values,
                 stats: r.stats,
             })
         }
-        BlockTask::IntDot { a, b, .. } => {
+        BlockTask::IntDot { key, a, b, .. } => {
             let r = ops::int_dot_compiled(block, &kernel, a, b)?;
             let n = a.first().map_or(0, Vec::len);
             let elems: usize = a.iter().chain(b.iter()).map(Vec::len).sum();
+            let acc_dt = Dtype::Int { w: kernel.dot_layout()?.acc_w };
             Ok(TaskRun {
                 values: r.values[..n].to_vec(),
                 stats: r.stats,
-                host_bytes_in: (elems * 8) as u64,
-                host_bytes_out: (n * 8) as u64,
+                host_bytes_in: key.dtype.slice_bytes(elems),
+                host_bytes_out: acc_dt.slice_bytes(n),
                 resident_hits: 0,
             })
         }
@@ -946,29 +965,89 @@ fn run_task(
                 values: r.values.iter().map(|v| v.to_bits() as i64).collect(),
                 stats: r.stats,
                 // bf16 payloads cross the boundary as 2-byte patterns
-                host_bytes_in: ((a.len() + b.len()) * 2) as u64,
-                host_bytes_out: (r.values.len() * 2) as u64,
+                host_bytes_in: Dtype::Bf16.slice_bytes(a.len() + b.len()),
+                host_bytes_out: Dtype::Bf16.slice_bytes(r.values.len()),
                 resident_hits: 0,
             })
         }
-        BlockTask::MatmulResident { x, i0, k0, k1, weights, n, c0, c1, .. } => {
+        BlockTask::Bf16Dot { a, b, .. } => {
+            // K sequential MAC waves on this block: the accumulation order
+            // (K ascending from +0.0) is the *defined* result for floats,
+            // bit-exact against SoftBf16's host recurrence
+            let n = a.first().map_or(0, Vec::len);
+            ensure!(n > 0, "empty bf16 dot batch");
+            let elems: usize = a.iter().chain(b.iter()).map(Vec::len).sum();
+            let mut acc = vec![SoftBf16::ZERO; n];
+            let mut stats = CycleStats::default();
+            for (ak, bk) in a.iter().zip(b) {
+                let r = ops::bf16_mac_compiled(block, &kernel, ak, bk, &acc)?;
+                acc = r.values;
+                accumulate_stats(&mut stats, r.stats);
+            }
+            Ok(TaskRun {
+                values: acc.iter().map(|v| v.to_bits() as i64).collect(),
+                stats,
+                host_bytes_in: Dtype::Bf16.slice_bytes(elems),
+                host_bytes_out: Dtype::Bf16.slice_bytes(n),
+                resident_hits: 0,
+            })
+        }
+        BlockTask::Bf16MatmulResident { x, i0, weights, n, c0, c1, .. } => {
+            let (i0, n, c0, c1) = (*i0, *n, *c0, *c1);
+            let ncols = c1 - c0;
+            let k = x.first().map_or(0, Vec::len);
+            ensure!(k > 0, "empty bf16 matmul tile");
+            let (slab_bits, slab_dt, in_w, hit_w) =
+                gather_slice(weights, worker, block, placement)?;
+            ensure!(slab_dt == Dtype::Bf16, "weight slab is {slab_dt}, expected bf16");
+            ensure!(slab_bits.len() == k * n, "weight slab length mismatch");
+            let slab: Vec<SoftBf16> =
+                slab_bits.iter().map(|&v| SoftBf16::from_bits(v as u16)).collect();
+            // expand the tile's dot operands block-side, then run the
+            // sequential MAC recurrence — same order as the host reference
+            let mut acc = vec![SoftBf16::ZERO; ncols];
+            let mut stats = CycleStats::default();
+            let mut ak = vec![SoftBf16::ZERO; ncols];
+            let mut bk = vec![SoftBf16::ZERO; ncols];
+            for kk in 0..k {
+                for (ci, c) in (c0..c1).enumerate() {
+                    let xi = c / n - i0;
+                    ensure!(xi < x.len(), "x tile height mismatch");
+                    ak[ci] = x[xi][kk];
+                    bk[ci] = slab[kk * n + c % n];
+                }
+                let r = ops::bf16_mac_compiled(block, &kernel, &ak, &bk, &acc)?;
+                acc = r.values;
+                accumulate_stats(&mut stats, r.stats);
+            }
+            let in_x = Dtype::Bf16.slice_bytes(x.iter().map(Vec::len).sum());
+            Ok(TaskRun {
+                values: acc.iter().map(|v| v.to_bits() as i64).collect(),
+                stats,
+                host_bytes_in: in_x + in_w,
+                host_bytes_out: Dtype::Bf16.slice_bytes(ncols),
+                resident_hits: hit_w,
+            })
+        }
+        BlockTask::MatmulResident { key, x, i0, k0, k1, weights, n, c0, c1, .. } => {
             let (i0, k0, k1, n, c0, c1) = (*i0, *k0, *k1, *n, *c0, *c1);
             let kseg = k1 - k0;
-            let (slab, in_w, hit_w) = gather_slice(weights, worker, block, placement)?;
+            let (slab, _, in_w, hit_w) = gather_slice(weights, worker, block, placement)?;
             ensure!(slab.len() == kseg * n, "weight slab length mismatch");
             let i1 = (c1 - 1) / n + 1;
             let (xrows, in_x, hit_x) =
-                resolve_x_rows(x, i0, i1, k0, k1, worker, block, placement)?;
+                resolve_x_rows(x, key.dtype, i0, i1, k0, k1, worker, block, placement)?;
             let ncols = c1 - c0;
             // expand both dot operands block-side: at most `x` crossed the
             // host boundary, and only once per tile
             let (a, b) = expand_dot_tile(&xrows, 0, &slab, i0, n, c0, c1, kseg);
             let r = ops::int_dot_compiled(block, &kernel, &a, &b)?;
+            let acc_dt = Dtype::Int { w: kernel.dot_layout()?.acc_w };
             Ok(TaskRun {
                 values: r.values[..ncols].to_vec(),
                 stats: r.stats,
                 host_bytes_in: in_x + in_w,
-                host_bytes_out: (ncols * 8) as u64,
+                host_bytes_out: acc_dt.slice_bytes(ncols),
                 resident_hits: hit_w + hit_x,
             })
         }
@@ -978,10 +1057,11 @@ fn run_task(
             let full_k = segs.last().map_or(0, |s| s.k1);
             ensure!(full_k > 0, "fused matmul with no chunks");
             let i1 = (c1 - 1) / n + 1;
+            let x_dt = segs.first().expect("fused task has chunks").key.dtype;
             // the full-K rows cross the boundary (or resolve in place)
             // once; every chunk slices them block-side
             let (xrows, in_x, hit_x) =
-                resolve_x_rows(x, i0, i1, 0, full_k, worker, block, placement)?;
+                resolve_x_rows(x, x_dt, i0, i1, 0, full_k, worker, block, placement)?;
             let mut acc = vec![0i64; ncols];
             let mut stats = CycleStats::default();
             let mut bytes_in = in_x;
@@ -990,7 +1070,7 @@ fn run_task(
                 let kseg = seg.k1 - seg.k0;
                 let seg_kernel = cache.get(seg.key);
                 check_kernel_fits(&seg_kernel, placement)?;
-                let (slab, in_w, hit_w) =
+                let (slab, _, in_w, hit_w) =
                     gather_slice(&seg.weights, worker, block, placement)?;
                 ensure!(slab.len() == kseg * n, "weight slab length mismatch");
                 bytes_in += in_w;
@@ -1002,9 +1082,7 @@ fn run_task(
                 for (ci, v) in r.values[..ncols].iter().enumerate() {
                     acc[ci] = (acc[ci] + v) as i32 as i64;
                 }
-                stats.cycles += r.stats.cycles;
-                stats.array_cycles += r.stats.array_cycles;
-                stats.instructions += r.stats.instructions;
+                accumulate_stats(&mut stats, r.stats);
             }
             // epilogue: bias add, then ReLU + power-of-two requant — the
             // block shell's "external logic" role, same arithmetic as
@@ -1026,7 +1104,7 @@ fn run_task(
                 // boundary — the engine pinned the task here for exactly
                 // this reason
                 match placement.resolve_slice(s.handle, s.offset, s.len, worker) {
-                    SliceResolution::Parts { w: sw, parts } if parts.len() == 1 => {
+                    SliceResolution::Parts { dtype: sink_dt, parts } if parts.len() == 1 => {
                         let SlicePart::Local { base, start, len } = &parts[0] else {
                             bail!(
                                 "sink tensor {} is not resident on worker {worker}",
@@ -1034,10 +1112,10 @@ fn run_task(
                             );
                         };
                         ensure!(*len == ncols, "sink slice length mismatch");
-                        store::check_int_range(&acc, sw).map_err(|e| {
-                            anyhow!("fused output does not fit the int{sw} sink: {e}")
+                        sink_dt.check_values(&acc).map_err(|e| {
+                            anyhow!("fused output does not fit the {sink_dt} sink: {e}")
                         })?;
-                        store::write_tensor_slice(block.array_mut(), &acc, sw, *base, *start);
+                        store::write_tensor_slice(block.array_mut(), &acc, sink_dt, *base, *start);
                         placement.note_sink_write(s.handle, s.offset);
                         hits += 1;
                         return Ok(TaskRun {
@@ -1057,8 +1135,9 @@ fn run_task(
             Ok(TaskRun {
                 values: acc,
                 stats,
+                // epilogued tiles return as int32 accumulator values
                 host_bytes_in: bytes_in,
-                host_bytes_out: (ncols * 8) as u64,
+                host_bytes_out: Dtype::Int { w: 32 }.slice_bytes(ncols),
                 resident_hits: hits,
             })
         }
@@ -1185,7 +1264,12 @@ mod tests {
     use crate::exec::KernelOp;
 
     fn ew_task(op: EwOp, w: u32, a: Vec<i64>, b: Vec<i64>) -> BlockTask {
-        let key = KernelKey::int_ew_sized(ew_kernel_op(op), w, a.len(), Geometry::G512x40);
+        let key = KernelKey::int_ew_sized(
+            ew_kernel_op(op),
+            Dtype::Int { w },
+            a.len(),
+            Geometry::G512x40,
+        );
         BlockTask::IntElementwise { key, a: Operand::Inline(a), b: Operand::Inline(b) }
     }
 
@@ -1200,8 +1284,8 @@ mod tests {
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.task_index, i);
             assert!(o.values.iter().all(|&v| v == i as i64 + 1));
-            assert_eq!(o.host_bytes_in, 160, "two 10-element inline operands");
-            assert_eq!(o.host_bytes_out, 80);
+            assert_eq!(o.host_bytes_in, 20, "two 10-element int8 operands, packed");
+            assert_eq!(o.host_bytes_out, 10);
             assert_eq!(o.resident_hits, 0);
         }
     }
@@ -1255,7 +1339,7 @@ mod tests {
     #[test]
     fn prewarm_populates_cache_without_running() {
         let farm = BlockFarm::new(Geometry::G512x40, 1);
-        let key = KernelKey::int_ew_full(KernelOp::IntMul, 8, Geometry::G512x40);
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT8, Geometry::G512x40);
         farm.prewarm(&[key]);
         assert!(farm.kernel_cache().peek(key).is_some());
         assert_eq!(farm.program_loads(), 0);
@@ -1323,7 +1407,7 @@ mod tests {
     fn task_error_fails_its_batch_but_farm_survives() {
         let farm = BlockFarm::new(Geometry::G512x40, 2);
         // a task whose staged operands exceed its (1-tuple) kernel capacity
-        let bad_key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1, Geometry::G512x40);
+        let bad_key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 1, Geometry::G512x40);
         let bad = BlockTask::IntElementwise {
             key: bad_key,
             a: Operand::Inline(vec![1; 500]),
@@ -1340,7 +1424,7 @@ mod tests {
     fn tensor_roundtrip_and_free() {
         let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 64);
         let vals: Vec<i64> = (0..100).map(|i| (i % 17) - 8).collect();
-        let h = farm.alloc_tensor(&vals, 6).unwrap();
+        let h = farm.alloc_tensor(&vals, Dtype::Int { w: 6 }).unwrap();
         assert_eq!(farm.read_tensor(h).unwrap(), vals);
         let vals2: Vec<i64> = vals.iter().map(|v| -v).collect();
         farm.write_tensor(h, &vals2).unwrap();
@@ -1349,19 +1433,23 @@ mod tests {
         assert!(farm.read_tensor(h).is_err());
         assert!(farm.free_tensor(h).is_err());
         let s = farm.data_stats();
-        assert!(s.host_bytes_in >= 2 * 800, "alloc + write counted: {s:?}");
+        // packed: 100 int6 values = 75 bytes per replica write
+        assert!(s.host_bytes_in >= 2 * 75, "alloc + write counted: {s:?}");
     }
 
     #[test]
     fn alloc_requires_a_reserve_and_valid_values() {
         let farm = BlockFarm::new(Geometry::G512x40, 1);
-        assert!(farm.alloc_tensor(&[1, 2], 8).is_err(), "no reserve");
+        assert!(farm.alloc_tensor(&[1, 2], Dtype::INT8).is_err(), "no reserve");
         let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 64);
-        assert!(farm.alloc_tensor(&[], 8).is_err(), "empty");
-        assert!(farm.alloc_tensor(&[200], 8).is_err(), "out of int8 range");
-        assert!(farm.alloc_tensor(&[1], 1).is_err(), "width too small");
+        assert!(farm.alloc_tensor(&[], Dtype::INT8).is_err(), "empty");
+        assert!(farm.alloc_tensor(&[200], Dtype::INT8).is_err(), "out of int8 range");
+        assert!(farm.alloc_tensor(&[1], Dtype::Int { w: 1 }).is_err(), "width too small");
+        // bf16 payloads must be raw 16-bit patterns
+        assert!(farm.alloc_tensor(&[-1], Dtype::Bf16).is_err());
+        assert!(farm.alloc_tensor(&[0x1_0000], Dtype::Bf16).is_err());
         // 64-row reserve cannot hold a 1000-element int8 tensor (200 rows)
-        assert!(farm.alloc_tensor(&[0; 1000], 8).is_err());
+        assert!(farm.alloc_tensor(&[0; 1000], Dtype::INT8).is_err());
     }
 
     #[test]
@@ -1369,8 +1457,8 @@ mod tests {
         let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 64);
         let a: Vec<i64> = (0..80).map(|i| (i % 23) - 11).collect();
         let b: Vec<i64> = (0..80).map(|i| (i % 13) - 6).collect();
-        let h = farm.alloc_tensor(&a, 8).unwrap();
-        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, Geometry::G512x40);
+        let h = farm.alloc_tensor(&a, Dtype::INT8).unwrap();
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 80, Geometry::G512x40);
         let task = BlockTask::IntElementwise {
             key,
             a: Operand::Resident(crate::exec::TensorSlice { handle: h, offset: 0, len: 80 }),
@@ -1381,7 +1469,7 @@ mod tests {
             assert_eq!(out[0].values[i], a[i] + b[i], "i={i}");
         }
         assert_eq!(out[0].resident_hits, 1);
-        assert_eq!(out[0].host_bytes_in, 640, "only b crossed the boundary");
+        assert_eq!(out[0].host_bytes_in, 80, "only b crossed the boundary (packed)");
         // the tensor survives the compute run bit-exactly
         assert_eq!(farm.read_tensor(h).unwrap(), a);
     }
@@ -1394,8 +1482,8 @@ mod tests {
         // cannot steal the pinned task, stranding it forever
         let farm = BlockFarm::with_storage(Geometry::G512x40, 4, 64);
         let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
-        let h = farm.alloc_tensor(&a, 8).unwrap();
-        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        let h = farm.alloc_tensor(&a, Dtype::INT8).unwrap();
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, Geometry::G512x40);
         for round in 0..20 {
             // one pinned task at a time, farm otherwise idle
             let task = BlockTask::IntElementwise {
@@ -1416,10 +1504,10 @@ mod tests {
     fn pinned_tasks_run_on_the_replica_holder() {
         let farm = BlockFarm::with_storage(Geometry::G512x40, 4, 64);
         let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
-        let h = farm.alloc_tensor(&a, 8).unwrap();
+        let h = farm.alloc_tensor(&a, Dtype::INT8).unwrap();
         let homes = farm.placement().homes(h);
         assert_eq!(homes.len(), 1);
-        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, Geometry::G512x40);
         let tasks: Vec<BlockTask> = (0..12)
             .map(|_| BlockTask::IntElementwise {
                 key,
@@ -1446,9 +1534,9 @@ mod tests {
         let t1: Vec<i64> = (0..40).map(|i| (i % 5) - 2).collect();
         let t2: Vec<i64> = (0..40).map(|i| (i % 7) - 3).collect();
         let t3: Vec<i64> = (0..40).map(|i| (i % 11) - 5).collect();
-        let h1 = farm.alloc_tensor(&t1, 8).unwrap();
-        let h2 = farm.alloc_tensor(&t2, 8).unwrap();
-        let h3 = farm.alloc_tensor(&t3, 8).unwrap(); // evicts h1 (LRU)
+        let h1 = farm.alloc_tensor(&t1, Dtype::INT8).unwrap();
+        let h2 = farm.alloc_tensor(&t2, Dtype::INT8).unwrap();
+        let h3 = farm.alloc_tensor(&t3, Dtype::INT8).unwrap(); // evicts h1 (LRU)
         assert_eq!(farm.data_stats().evictions, 1);
         assert!(farm.placement().homes(h1).is_empty(), "h1 spilled to host");
         // all three read back bit-exactly, resident or not
@@ -1456,7 +1544,7 @@ mod tests {
         assert_eq!(farm.read_tensor(h2).unwrap(), t2);
         assert_eq!(farm.read_tensor(h3).unwrap(), t3);
         // computing against the evicted tensor works via the host copy
-        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, Geometry::G512x40);
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, Geometry::G512x40);
         let task = BlockTask::IntElementwise {
             key,
             a: Operand::Resident(crate::exec::TensorSlice { handle: h1, offset: 0, len: 40 }),
@@ -1474,10 +1562,10 @@ mod tests {
         let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 8);
         let v0 = vec![1i64; 40];
         let v1 = vec![2i64; 40];
-        let h = farm.alloc_tensor_replicated(&v0, 8, 2).unwrap();
+        let h = farm.alloc_tensor_replicated(&v0, Dtype::INT8, 2).unwrap();
         assert_eq!(farm.placement().homes(h).len(), 2);
         // filler evicts h's worker-0 replica, snapshotting v0 to host
-        let f1 = farm.alloc_tensor(&[9i64; 40], 8).unwrap();
+        let f1 = farm.alloc_tensor(&[9i64; 40], Dtype::INT8).unwrap();
         assert_eq!(farm.placement().homes(h), vec![1]);
         // overwrite while partially evicted: the replica AND the lingering
         // host backup must both see the new values
@@ -1501,7 +1589,7 @@ mod tests {
         // need two shards, spread over the two workers
         let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 16);
         let vals: Vec<i64> = (0..120).map(|i| (i % 23) - 11).collect();
-        let h = farm.alloc_tensor(&vals, 8).unwrap();
+        let h = farm.alloc_tensor(&vals, Dtype::INT8).unwrap();
         assert_eq!(farm.placement().shard_count(h), 2);
         let mut homes = farm.placement().homes(h);
         homes.sort_unstable();
@@ -1519,7 +1607,7 @@ mod tests {
     fn oversized_kernel_body_rejected_on_reserved_farm() {
         let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 192);
         // a full-block int4 add sweeps 42 * 12 = 504 rows — into the reserve
-        let key = KernelKey::int_ew_full(KernelOp::IntAdd, 4, Geometry::G512x40);
+        let key = KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, Geometry::G512x40);
         let task = BlockTask::IntElementwise {
             key,
             a: Operand::Inline(vec![1; 10]),

@@ -1,7 +1,7 @@
 //! Workload descriptions accepted by the coordinator.
 
 use crate::ctrl::CycleStats;
-use crate::exec::TensorHandle;
+use crate::exec::{Dtype, TensorHandle};
 use crate::util::SoftBf16;
 
 /// Elementwise integer operator.
@@ -79,6 +79,22 @@ pub enum JobPayload {
     IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>> },
     /// Elementwise bfloat16 add/mul.
     Bf16Elementwise { mul: bool, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
+    /// `n` independent **complete** bfloat16 dot products of length `k`:
+    /// `a[k][n] . b[k][n]`, evaluated as a sequential MAC recurrence
+    /// (`acc = round_bf16(acc + round_bf16(a*b))`, K ascending from +0.0)
+    /// entirely on one block per column group — the accumulation order is
+    /// part of a float result, so K never splits across blocks and the
+    /// outcome is bit-exact against [`SoftBf16`].
+    Bf16Dot { a: Vec<Vec<SoftBf16>>, b: Vec<Vec<SoftBf16>> },
+    /// bfloat16 matmul `x[m][k] @ w[k][n] -> bf16[m][n]`, lowered to a
+    /// [`JobPayload::Bf16Dot`] batch (column `c` = output `(c / n, c % n)`).
+    Bf16Matmul { x: Vec<Vec<SoftBf16>>, wt: Vec<Vec<SoftBf16>> },
+    /// bfloat16 matmul against a **resident** weight slab: one whole-K
+    /// [`MatSeg`] whose tensor holds the `k x n` slab as bf16 bit patterns
+    /// (see [`crate::nn::LinearBf16::make_resident`]). Tiles pin to the
+    /// workers holding the complete slab, gather it in place, and run the
+    /// same sequential MAC recurrence as [`JobPayload::Bf16Dot`].
+    Bf16MatmulResident { x: Vec<Vec<SoftBf16>>, n: usize, segments: Vec<MatSeg> },
     /// Integer matmul `x[m][k] @ w[k][n] -> int32[m][n]` at width `w`.
     IntMatmul { w: u32, x: Vec<Vec<i64>>, wt: Vec<Vec<i64>> },
     /// Integer matmul against **resident** weights: at most `x` ships from
@@ -117,6 +133,23 @@ pub enum JobPayload {
 }
 
 impl JobPayload {
+    /// The element type the job computes on — the label every per-dtype
+    /// counter is keyed by.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            JobPayload::IntElementwise { w, .. }
+            | JobPayload::IntElementwiseRef { w, .. }
+            | JobPayload::IntDot { w, .. }
+            | JobPayload::IntMatmul { w, .. }
+            | JobPayload::IntMatmulResident { w, .. }
+            | JobPayload::IntMatmulFused { w, .. } => Dtype::Int { w: *w },
+            JobPayload::Bf16Elementwise { .. }
+            | JobPayload::Bf16Dot { .. }
+            | JobPayload::Bf16Matmul { .. }
+            | JobPayload::Bf16MatmulResident { .. } => Dtype::Bf16,
+        }
+    }
+
     /// Number of scalar results the job produces. For
     /// [`JobPayload::IntElementwiseRef`] with two tensor operands the
     /// length is not host-known and `0` is returned; the mapper's plan
@@ -128,10 +161,15 @@ impl JobPayload {
                 a.known_len().or(b.known_len()).unwrap_or(0)
             }
             JobPayload::IntDot { a, .. } => a.first().map_or(0, Vec::len),
+            JobPayload::Bf16Dot { a, .. } => a.first().map_or(0, Vec::len),
             JobPayload::Bf16Elementwise { a, .. } => a.len(),
             JobPayload::IntMatmul { x, wt, .. } => {
                 x.len() * wt.first().map_or(0, Vec::len)
             }
+            JobPayload::Bf16Matmul { x, wt } => {
+                x.len() * wt.first().map_or(0, Vec::len)
+            }
+            JobPayload::Bf16MatmulResident { x, n, .. } => x.len() * n,
             JobPayload::IntMatmulResident { x, n, .. } => x.m() * n,
             JobPayload::IntMatmulFused { x, n, sink, .. } => {
                 if sink.is_some() {
@@ -153,8 +191,18 @@ impl JobPayload {
             JobPayload::IntDot { a, .. } => {
                 (a.len() * a.first().map_or(0, Vec::len)) as u64
             }
+            JobPayload::Bf16Dot { a, .. } => {
+                (a.len() * a.first().map_or(0, Vec::len)) as u64
+            }
             JobPayload::IntMatmul { x, wt, .. } => {
                 (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64
+            }
+            JobPayload::Bf16Matmul { x, wt } => {
+                (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64
+            }
+            JobPayload::Bf16MatmulResident { x, n, segments } => {
+                let k = segments.last().map_or(0, |s| s.k1);
+                (x.len() * k * n) as u64
             }
             JobPayload::IntMatmulResident { x, n, segments, .. }
             | JobPayload::IntMatmulFused { x, n, segments, .. } => {
@@ -194,10 +242,13 @@ pub struct JobResult {
     /// Host wall-clock the job spent executing (first task dequeued ->
     /// last task finished).
     pub exec_time: std::time::Duration,
-    /// Bytes of operand data shipped host -> blocks for this job
-    /// (resident operands resolved in place contribute nothing).
+    /// Packed bytes of operand data shipped host -> blocks for this job
+    /// ([`Dtype::slice_bytes`]: two int4 values per byte, two bytes per
+    /// bf16 value; resident operands resolved in place contribute
+    /// nothing).
     pub host_bytes_in: u64,
-    /// Bytes of result data read blocks -> host for this job.
+    /// Packed bytes of result data read blocks -> host for this job
+    /// (int32 accumulator results count four bytes each).
     pub host_bytes_out: u64,
     /// Resident-operand resolutions served from block storage (each one is
     /// an operand that did **not** cross the host boundary).
@@ -213,6 +264,25 @@ pub struct JobResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn payload_dtype_labels() {
+        let int = JobPayload::IntElementwise { op: EwOp::Add, w: 4, a: vec![], b: vec![] };
+        assert_eq!(int.dtype(), Dtype::INT4);
+        let bf = JobPayload::Bf16Dot {
+            a: vec![vec![SoftBf16::ZERO; 2]; 3],
+            b: vec![vec![SoftBf16::ZERO; 2]; 3],
+        };
+        assert_eq!(bf.dtype(), Dtype::Bf16);
+        assert_eq!(bf.result_len(), 2);
+        assert_eq!(bf.op_count(), 6);
+        let bm = JobPayload::Bf16Matmul {
+            x: vec![vec![SoftBf16::ZERO; 4]; 2],
+            wt: vec![vec![SoftBf16::ZERO; 3]; 4],
+        };
+        assert_eq!(bm.result_len(), 6);
+        assert_eq!(bm.op_count(), 24);
+    }
 
     #[test]
     fn result_len_elementwise() {

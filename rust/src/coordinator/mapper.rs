@@ -37,8 +37,9 @@
 
 use super::job::{EwOp, JobPayload, MatSeg, MatX, OperandRef};
 use crate::bitline::Geometry;
-use crate::exec::{KernelKey, KernelOp, PlacementMap, TensorHandle, TensorSlice};
+use crate::exec::{Dtype, KernelKey, KernelOp, PlacementMap, TensorHandle, TensorSlice};
 use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
+use crate::util::SoftBf16;
 use anyhow::{bail, ensure, Result};
 use std::sync::Arc;
 
@@ -108,7 +109,34 @@ pub enum BlockTask {
     IntElementwise { key: KernelKey, a: Operand, b: Operand },
     /// Partial dot batch: contributes into `out[out_offset .. +n]`.
     IntDot { key: KernelKey, a: Vec<Vec<i64>>, b: Vec<Vec<i64>>, out_offset: usize },
-    Bf16Elementwise { key: KernelKey, a: Vec<crate::util::SoftBf16>, b: Vec<crate::util::SoftBf16> },
+    Bf16Elementwise { key: KernelKey, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
+    /// A batch of **complete** bf16 dot products: `a[k][n] . b[k][n]`, run
+    /// as K sequential MAC waves on one block (the accumulation order is
+    /// part of the result for floats, so K never splits across blocks; see
+    /// [`matmul_segments`]). Scatters `n` bf16 bit patterns at
+    /// `out_offset`.
+    Bf16Dot {
+        key: KernelKey,
+        a: Vec<Vec<SoftBf16>>,
+        b: Vec<Vec<SoftBf16>>,
+        out_offset: usize,
+    },
+    /// One output tile of a bf16 matmul against a **resident** weight slab
+    /// (row-major `k x n` bf16 bit patterns). The worker gathers the slab
+    /// from its own storage reserve, expands the tile's dot operands
+    /// block-side, and runs the sequential MAC recurrence — whole-K, so
+    /// the tile is bit-exact against [`SoftBf16`].
+    Bf16MatmulResident {
+        key: KernelKey,
+        /// The tile's `x` rows (grid rows `i0 ..`), full K.
+        x: Vec<Vec<SoftBf16>>,
+        i0: usize,
+        /// The whole slab (a pin to the workers holding every shard).
+        weights: TensorSlice,
+        n: usize,
+        c0: usize,
+        c1: usize,
+    },
     /// Matmul tile against resident weights: only the `x` rows the tile
     /// needs ship with the task (or resolve from a resident activation
     /// tensor); the weight slab slice is resolved from the executing
@@ -163,6 +191,8 @@ impl BlockTask {
             BlockTask::IntElementwise { key, .. }
             | BlockTask::IntDot { key, .. }
             | BlockTask::Bf16Elementwise { key, .. }
+            | BlockTask::Bf16Dot { key, .. }
+            | BlockTask::Bf16MatmulResident { key, .. }
             | BlockTask::MatmulResident { key, .. } => *key,
             BlockTask::MatmulFused { segs, .. } => {
                 segs.first().expect("fused task has chunks").key
@@ -213,7 +243,10 @@ impl BlockTask {
                 out.extend(segs.iter().map(|s| s.weights));
                 out
             }
-            BlockTask::IntDot { .. } | BlockTask::Bf16Elementwise { .. } => Vec::new(),
+            BlockTask::Bf16MatmulResident { weights, .. } => vec![*weights],
+            BlockTask::IntDot { .. }
+            | BlockTask::Bf16Elementwise { .. }
+            | BlockTask::Bf16Dot { .. } => Vec::new(),
         }
     }
 }
@@ -248,17 +281,21 @@ impl PlanEnv<'_> {
     }
 }
 
-/// Packed per-block capacity (elements) of an integer elementwise op: how
-/// many `a (op) b` pairs one block holds at width `w`. Multiplication
-/// stores a double-width result, so its capacity is lower. Shared by the
-/// planner below and the server's coalesced-group cap.
-pub fn ew_capacity(geom: Geometry, op: EwOp, w: u32) -> usize {
-    ew_capacity_in(&PlanEnv::bare(geom), op, w)
+/// Packed per-block capacity (elements) of an elementwise op at `dtype`:
+/// how many `a (op) b` pairs one block holds. Integer multiplication
+/// stores a double-width result, so its capacity is lower; bf16 tuples
+/// are scratch-clamped. Shared by the planner below and the server's
+/// coalesced-group cap.
+pub fn ew_capacity(geom: Geometry, op: EwOp, dtype: Dtype) -> usize {
+    ew_capacity_in(&PlanEnv::bare(geom), op, dtype)
 }
 
 /// [`ew_capacity`] under a planning environment (kernel bodies capped to
 /// `env.compute_rows` on farms with a storage reserve).
-pub fn ew_capacity_in(env: &PlanEnv, op: EwOp, w: u32) -> usize {
+pub fn ew_capacity_in(env: &PlanEnv, op: EwOp, dtype: Dtype) -> usize {
+    let Some(w) = dtype.int_width() else {
+        return bf16_capacity_in(env);
+    };
     let l = match op {
         EwOp::Mul => VecLayout::new(env.geom, w, 2 * w),
         _ => VecLayout::new(env.geom, w, w),
@@ -267,16 +304,19 @@ pub fn ew_capacity_in(env: &PlanEnv, op: EwOp, w: u32) -> usize {
     tuples * l.cols
 }
 
-/// Per-block bf16 elementwise capacity under `env` (scratch-clamped and
-/// reserve-capped).
+/// Per-block bf16 elementwise/MAC capacity under `env` (scratch-clamped
+/// and reserve-capped). The MAC kernel shares the 48-bit tuple layout, so
+/// one capacity covers both.
 fn bf16_capacity_in(env: &PlanEnv) -> usize {
     let tuple_bits = VecLayout::new(env.geom, 16, 16).tuple_bits;
     let tuples = (env.compute_rows / tuple_bits).min(ucbf16::max_tuples(env.geom)).max(1);
     tuples * env.geom.cols()
 }
 
-/// Longest K one dot-product kernel can hold under `env` (reserve-capped).
-fn max_dot_k(env: &PlanEnv, w: u32, acc_w: u32) -> usize {
+/// Longest K one integer dot-product kernel can hold under `env`
+/// (reserve-capped).
+fn max_dot_k(env: &PlanEnv, dtype: Dtype, acc_w: u32) -> usize {
+    let w = dtype.int_width().expect("integer dot kernels need an int dtype");
     let full = DotLayout::max_k(env.geom, w, acc_w).k;
     let capped = env.compute_rows.saturating_sub(acc_w as usize) / (2 * w as usize);
     full.min(capped).max(1)
@@ -286,8 +326,18 @@ fn max_dot_k(env: &PlanEnv, w: u32, acc_w: u32) -> usize {
 /// `env`. [`crate::nn::QuantLinear::make_resident`] allocates one weight
 /// slab per segment through this, so the resident plan and the tensors
 /// can never disagree on the split.
-pub fn matmul_segments(env: &PlanEnv, w: u32, k: usize) -> Vec<(usize, usize)> {
-    let max_k = max_dot_k(env, w, 32);
+///
+/// Integer matmuls split K by the per-block dot capacity (their int32
+/// partial sums combine associatively). A bf16 matmul is **never**
+/// K-split: it runs as a sequential MAC recurrence whose rounding is
+/// order-dependent, so the whole K must stay on one block for the result
+/// to stay bit-exact against [`SoftBf16`] — and the MAC loop stages one
+/// K step at a time, so K is not capacity-limited either.
+pub fn matmul_segments(env: &PlanEnv, dtype: Dtype, k: usize) -> Vec<(usize, usize)> {
+    if !dtype.is_int() {
+        return if k == 0 { Vec::new() } else { vec![(0, k)] };
+    }
+    let max_k = max_dot_k(env, dtype, 32);
     let mut segs = Vec::new();
     let mut k0 = 0;
     while k0 < k {
@@ -336,20 +386,20 @@ impl<'a> EwSide<'a> {
 }
 
 /// Resolve an operand view to its length (tensor lengths come from the
-/// placement map) and check width agreement.
-fn side_len(env: &PlanEnv, s: EwSide, w: u32) -> Result<usize> {
+/// placement map) and check dtype agreement.
+fn side_len(env: &PlanEnv, s: EwSide, dtype: Dtype) -> Result<usize> {
     match s {
         EwSide::Values(v) => Ok(v.len()),
         EwSide::Tensor(h) => {
             let Some(placement) = env.placement else {
                 bail!("tensor operand on a farm without a placement map");
             };
-            let Some((tw, len)) = placement.info(h) else {
+            let Some((td, len)) = placement.info(h) else {
                 bail!("unknown tensor handle {}", h.id());
             };
             ensure!(
-                tw == w,
-                "tensor {} stores int{tw} values, job computes at int{w}",
+                td == dtype,
+                "tensor {} stores {td} values, job computes at {dtype}",
                 h.id()
             );
             Ok(len)
@@ -386,10 +436,10 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
     match payload {
         JobPayload::IntElementwise { op, w, a, b } => {
             ensure!(a.len() == b.len(), "operand length mismatch");
-            plan_ew(env, *op, *w, EwSide::Values(a), EwSide::Values(b))
+            plan_ew(env, *op, Dtype::Int { w: *w }, EwSide::Values(a), EwSide::Values(b))
         }
         JobPayload::IntElementwiseRef { op, w, a, b } => {
-            plan_ew(env, *op, *w, EwSide::of(a), EwSide::of(b))
+            plan_ew(env, *op, Dtype::Int { w: *w }, EwSide::of(a), EwSide::of(b))
         }
         JobPayload::Bf16Elementwise { mul, a, b } => {
             ensure!(a.len() == b.len(), "operand length mismatch");
@@ -412,7 +462,17 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
         JobPayload::IntDot { w, a, b } => {
             ensure!(a.len() == b.len(), "K mismatch");
             let n = a.first().map_or(0, Vec::len);
-            Ok(plan_dot(env, *w, a, b, n, 0))
+            Ok(plan_dot(env, Dtype::Int { w: *w }, a, b, n, 0))
+        }
+        JobPayload::Bf16Dot { a, b } => {
+            ensure!(a.len() == b.len(), "K mismatch");
+            ensure!(!a.is_empty(), "empty bf16 dot");
+            let n = a[0].len();
+            ensure!(
+                a.iter().chain(b.iter()).all(|r| r.len() == n),
+                "bf16 dot columns ragged"
+            );
+            Ok(plan_bf16_dot(env, a, b, n))
         }
         JobPayload::IntMatmul { w, x, wt } => {
             // lower to a dot batch: column c of the batch is output (i, j)
@@ -431,15 +491,40 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
                     }
                 }
             }
-            Ok(plan_dot(env, *w, &a, &b, m * n, 0))
+            Ok(plan_dot(env, Dtype::Int { w: *w }, &a, &b, m * n, 0))
+        }
+        JobPayload::Bf16Matmul { x, wt } => {
+            // same lowering, bf16: column c of the dot batch is output
+            // (i, j); the whole K stays in one task (sequential MACs)
+            let m = x.len();
+            let k = wt.len();
+            ensure!(k > 0, "empty bf16 matmul");
+            let n = wt.first().map_or(0, Vec::len);
+            ensure!(x.iter().all(|r| r.len() == k), "x width != k");
+            ensure!(wt.iter().all(|r| r.len() == n), "wt columns ragged");
+            let mut a = vec![vec![SoftBf16::ZERO; m * n]; k];
+            let mut b = vec![vec![SoftBf16::ZERO; m * n]; k];
+            for i in 0..m {
+                for j in 0..n {
+                    let c = i * n + j;
+                    for kk in 0..k {
+                        a[kk][c] = x[i][kk];
+                        b[kk][c] = wt[kk][j];
+                    }
+                }
+            }
+            Ok(plan_bf16_dot(env, &a, &b, m * n))
+        }
+        JobPayload::Bf16MatmulResident { x, n, segments } => {
+            plan_bf16_matmul_resident(env, x, *n, segments)
         }
         JobPayload::IntMatmulResident { w, x, n, segments } => {
-            plan_matmul_resident(env, *w, x, *n, segments)
+            plan_matmul_resident(env, Dtype::Int { w: *w }, x, *n, segments)
         }
         JobPayload::IntMatmulFused { w, x, n, segments, bias, relu_requant_shift, sink } => {
             plan_matmul_fused(
                 env,
-                *w,
+                Dtype::Int { w: *w },
                 x,
                 *n,
                 segments,
@@ -451,12 +536,110 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
     }
 }
 
-fn plan_ew(env: &PlanEnv, op: EwOp, w: u32, a: EwSide, b: EwSide) -> Result<Plan> {
-    let alen = side_len(env, a, w)?;
-    let blen = side_len(env, b, w)?;
+/// Column-tile a batch of bf16 dot products: each task carries the whole K
+/// for its columns (order-preserving sequential MACs) and scatters bf16
+/// bit patterns at its column offset.
+fn plan_bf16_dot(
+    env: &PlanEnv,
+    a: &[Vec<SoftBf16>],
+    b: &[Vec<SoftBf16>],
+    n: usize,
+) -> Plan {
+    let cap = bf16_capacity_in(env);
+    let mut tasks = Vec::new();
+    let mut steps = Vec::new();
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + cap).min(n);
+        let sub_a: Vec<Vec<SoftBf16>> =
+            a.iter().map(|row| row[c0..c1].to_vec()).collect();
+        let sub_b: Vec<Vec<SoftBf16>> =
+            b.iter().map(|row| row[c0..c1].to_vec()).collect();
+        tasks.push(BlockTask::Bf16Dot {
+            key: KernelKey::bf16_mac_sized(c1 - c0, env.geom),
+            a: sub_a,
+            b: sub_b,
+            out_offset: c0,
+        });
+        steps.push(ReduceStep::Scatter { offset: c0 });
+        c0 = c1;
+    }
+    Plan { tasks, result_len: n, steps }
+}
+
+/// Plan a bf16 matmul against a resident weight slab. The slab is a single
+/// whole-K segment ([`matmul_segments`] never splits bf16), referenced in
+/// full by every tile so the data-affinity router pins each tile to a
+/// worker holding the complete slab — allocate bf16 weight slabs
+/// replicated (and small enough not to shard) or the gather fails
+/// honestly with a routing error.
+fn plan_bf16_matmul_resident(
+    env: &PlanEnv,
+    x: &[Vec<SoftBf16>],
+    n: usize,
+    segments: &[MatSeg],
+) -> Result<Plan> {
+    let Some(placement) = env.placement else {
+        bail!("resident matmul on a farm without a placement map");
+    };
+    ensure!(n >= 1, "resident matmul with zero output columns");
+    ensure!(
+        segments.len() == 1,
+        "bf16 resident matmul takes exactly one whole-K segment \
+         (bf16 never K-splits; got {})",
+        segments.len()
+    );
+    let seg = &segments[0];
+    ensure!(seg.k0 == 0 && seg.k1 > 0, "bf16 segment must cover 0..k");
+    let k = seg.k1;
+    ensure!(x.iter().all(|r| r.len() == k), "x width != k");
+    let Some((td, tlen)) = placement.info(seg.handle) else {
+        bail!("unknown weight tensor {}", seg.handle.id());
+    };
+    ensure!(
+        td == Dtype::Bf16,
+        "weight tensor {} is {td}, matmul is bf16",
+        seg.handle.id()
+    );
+    ensure!(
+        tlen == k * n,
+        "weight tensor {} holds {tlen} values, matmul needs {k} x {n}",
+        seg.handle.id()
+    );
+    let m = x.len();
+    let result_len = m * n;
+    // tiles fill the full MAC capacity (the worker expands multi-row
+    // tiles itself); smaller tiles would re-run the K waves per fragment
+    let cap = bf16_capacity_in(env);
+    let whole_slab = TensorSlice { handle: seg.handle, offset: 0, len: k * n };
+    let mut tasks = Vec::new();
+    let mut steps = Vec::new();
+    let mut c0 = 0;
+    while c0 < result_len {
+        let c1 = (c0 + cap).min(result_len);
+        let i0 = c0 / n;
+        let i1 = (c1 - 1) / n + 1;
+        tasks.push(BlockTask::Bf16MatmulResident {
+            key: KernelKey::bf16_mac_sized(c1 - c0, env.geom),
+            x: x[i0..i1].to_vec(),
+            i0,
+            weights: whole_slab,
+            n,
+            c0,
+            c1,
+        });
+        steps.push(ReduceStep::Scatter { offset: c0 });
+        c0 = c1;
+    }
+    Ok(Plan { tasks, result_len, steps })
+}
+
+fn plan_ew(env: &PlanEnv, op: EwOp, dtype: Dtype, a: EwSide, b: EwSide) -> Result<Plan> {
+    let alen = side_len(env, a, dtype)?;
+    let blen = side_len(env, b, dtype)?;
     ensure!(alen == blen, "operand length mismatch: a={alen} b={blen}");
     let kop = ew_kernel_op(op);
-    let cap = ew_capacity_in(env, op, w);
+    let cap = ew_capacity_in(env, op, dtype);
     let mut tasks = Vec::new();
     let mut steps = Vec::new();
     let mut off = 0;
@@ -466,7 +649,7 @@ fn plan_ew(env: &PlanEnv, op: EwOp, w: u32, a: EwSide, b: EwSide) -> Result<Plan
             .min(side_boundary(env, a, off))
             .min(side_boundary(env, b, off));
         tasks.push(BlockTask::IntElementwise {
-            key: KernelKey::int_ew_sized(kop, w, end - off, env.geom),
+            key: KernelKey::int_ew_sized(kop, dtype, end - off, env.geom),
             a: side_slice(a, off, end),
             b: side_slice(b, off, end),
         });
@@ -480,7 +663,7 @@ fn plan_ew(env: &PlanEnv, op: EwOp, w: u32, a: EwSide, b: EwSide) -> Result<Plan
 /// from 0, `x` consistent with the segmented K. Returns `(m, k)`.
 fn check_matmul_shape(
     env: &PlanEnv,
-    w: u32,
+    dtype: Dtype,
     x: &MatX,
     n: usize,
     segments: &[MatSeg],
@@ -503,10 +686,10 @@ fn check_matmul_shape(
             let Some(placement) = env.placement else {
                 bail!("resident matmul x on a farm without a placement map");
             };
-            let Some((tw, tlen)) = placement.info(*handle) else {
+            let Some((td, tlen)) = placement.info(*handle) else {
                 bail!("unknown x tensor {}", handle.id());
             };
-            ensure!(tw == w, "x tensor {} is int{tw}, matmul is int{w}", handle.id());
+            ensure!(td == dtype, "x tensor {} is {td}, matmul is {dtype}", handle.id());
             ensure!(
                 tlen == m * k,
                 "x tensor {} holds {tlen} values, matmul needs {m} x {k}",
@@ -536,21 +719,25 @@ fn check_matmul_shape(
 /// per-shard partial plan: every chunk contributes an int32 partial sum.
 fn matmul_chunks(
     env: &PlanEnv,
-    w: u32,
+    dtype: Dtype,
     n: usize,
     segments: &[MatSeg],
 ) -> Result<Vec<FusedSeg>> {
     let Some(placement) = env.placement else {
         bail!("resident matmul on a farm without a placement map");
     };
-    let max_k = max_dot_k(env, w, 32);
+    let max_k = max_dot_k(env, dtype, 32);
     let mut chunks = Vec::new();
     for seg in segments {
         let kseg = seg.k1 - seg.k0;
-        let Some((tw, tlen)) = placement.info(seg.handle) else {
+        let Some((td, tlen)) = placement.info(seg.handle) else {
             bail!("unknown weight tensor {}", seg.handle.id());
         };
-        ensure!(tw == w, "weight tensor {} is int{tw}, matmul is int{w}", seg.handle.id());
+        ensure!(
+            td == dtype,
+            "weight tensor {} is {td}, matmul is {dtype}",
+            seg.handle.id()
+        );
         ensure!(
             tlen == kseg * n,
             "weight tensor {} holds {tlen} values, segment needs {}",
@@ -572,7 +759,7 @@ fn matmul_chunks(
             while c < ks1 {
                 let ce = (c + max_k).min(ks1);
                 chunks.push(FusedSeg {
-                    key: KernelKey::int_dot(w, 32, ce - c, env.geom),
+                    key: KernelKey::int_dot(dtype, 32, ce - c, env.geom),
                     weights: TensorSlice {
                         handle: seg.handle,
                         offset: (c - seg.k0) * n,
@@ -637,13 +824,13 @@ fn x_tile(rows: &[Vec<i64>], i0: usize, i1: usize, k0: usize, k1: usize) -> Vec<
 
 fn plan_matmul_resident(
     env: &PlanEnv,
-    w: u32,
+    dtype: Dtype,
     x: &MatX,
     n: usize,
     segments: &[MatSeg],
 ) -> Result<Plan> {
-    let (m, k) = check_matmul_shape(env, w, x, n, segments)?;
-    let chunks = matmul_chunks(env, w, n, segments)?;
+    let (m, k) = check_matmul_shape(env, dtype, x, n, segments)?;
+    let chunks = matmul_chunks(env, dtype, n, segments)?;
     let result_len = m * n;
     let cols = env.geom.cols();
     let breaks = tile_breaks(env, x, n, k, None);
@@ -681,7 +868,7 @@ fn plan_matmul_resident(
 #[allow(clippy::too_many_arguments)]
 fn plan_matmul_fused(
     env: &PlanEnv,
-    w: u32,
+    dtype: Dtype,
     x: &MatX,
     n: usize,
     segments: &[MatSeg],
@@ -689,17 +876,25 @@ fn plan_matmul_fused(
     relu_shift: Option<u32>,
     sink: Option<TensorHandle>,
 ) -> Result<Plan> {
-    let (m, k) = check_matmul_shape(env, w, x, n, segments)?;
-    let chunks = matmul_chunks(env, w, n, segments)?;
+    let (m, k) = check_matmul_shape(env, dtype, x, n, segments)?;
+    let chunks = matmul_chunks(env, dtype, n, segments)?;
     let out_len = m * n;
     if let Some(b) = bias {
         ensure!(b.len() == n, "bias length {} != n={n}", b.len());
     }
     if let Some(h) = sink {
         let placement = env.placement.expect("checked by check_matmul_shape");
-        let Some((_, slen)) = placement.info(h) else {
+        let Some((sdt, slen)) = placement.info(h) else {
             bail!("unknown sink tensor {}", h.id());
         };
+        // the fused epilogue produces integers (int32 partials, int8
+        // after requant); a bf16 sink would silently store them as float
+        // bit patterns
+        ensure!(
+            sdt.is_int(),
+            "sink tensor {} is {sdt}; fused matmul tiles are integer",
+            h.id()
+        );
         ensure!(
             slen == out_len,
             "sink tensor {} holds {slen} values, matmul produces {out_len}",
@@ -744,13 +939,13 @@ fn plan_matmul_fused(
 
 fn plan_dot(
     env: &PlanEnv,
-    w: u32,
+    dtype: Dtype,
     a: &[Vec<i64>],
     b: &[Vec<i64>],
     result_len: usize,
     base_offset: usize,
 ) -> Plan {
-    let max_k = max_dot_k(env, w, 32);
+    let max_k = max_dot_k(env, dtype, 32);
     let cols = env.geom.cols();
     let k = a.len();
     let mut tasks = Vec::new();
@@ -767,7 +962,7 @@ fn plan_dot(
             let sub_b: Vec<Vec<i64>> =
                 b[k0..k1].iter().map(|row| row[c0..c1].to_vec()).collect();
             tasks.push(BlockTask::IntDot {
-                key: KernelKey::int_dot(w, 32, k1 - k0, env.geom),
+                key: KernelKey::int_dot(dtype, 32, k1 - k0, env.geom),
                 a: sub_a,
                 b: sub_b,
                 out_offset: base_offset + c0,
@@ -866,7 +1061,7 @@ mod tests {
         });
         let keys: Vec<KernelKey> = p.tasks.iter().map(|t| t.key()).collect();
         assert_eq!(keys.len(), 3);
-        assert_eq!(keys[0], KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        assert_eq!(keys[0], KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, geom));
         assert_eq!(keys[0], keys[1], "full chunks share one cached kernel");
         assert_eq!(keys[2].tuples, 16, "tail chunk right-sized: 640 ops / 40 cols");
     }
@@ -915,13 +1110,13 @@ mod tests {
         // reserve leaves 512 - 32 - 192 = 288 compute rows
         let reserved = PlanEnv { geom, compute_rows: 288, placement: None };
         // int4 add: 288 / 12 = 24 tuples (vs 42 full)
-        assert_eq!(ew_capacity_in(&bare, EwOp::Add, 4), 1680);
-        assert_eq!(ew_capacity_in(&reserved, EwOp::Add, 4), 24 * 40);
+        assert_eq!(ew_capacity_in(&bare, EwOp::Add, Dtype::INT4), 1680);
+        assert_eq!(ew_capacity_in(&reserved, EwOp::Add, Dtype::INT4), 24 * 40);
         // int8 dot: (288 - 32) / 16 = 16 pairs (vs 30 full)
-        assert_eq!(max_dot_k(&bare, 8, 32), 30);
-        assert_eq!(max_dot_k(&reserved, 8, 32), 16);
-        assert_eq!(matmul_segments(&reserved, 8, 32), vec![(0, 16), (16, 32)]);
-        assert_eq!(matmul_segments(&bare, 8, 64), vec![(0, 30), (30, 60), (60, 64)]);
+        assert_eq!(max_dot_k(&bare, Dtype::INT8, 32), 30);
+        assert_eq!(max_dot_k(&reserved, Dtype::INT8, 32), 16);
+        assert_eq!(matmul_segments(&reserved, Dtype::INT8, 32), vec![(0, 16), (16, 32)]);
+        assert_eq!(matmul_segments(&bare, Dtype::INT8, 64), vec![(0, 30), (30, 60), (60, 64)]);
         // reserve-capped plans split accordingly
         let a = vec![vec![1i64; 4]; 32];
         let p = plan(&reserved, &JobPayload::IntDot { w: 8, a: a.clone(), b: a }).unwrap();
@@ -932,7 +1127,7 @@ mod tests {
     fn elementwise_ref_chunks_pin_tensor_slices() {
         let geom = Geometry::G512x40;
         let placement = PlacementMap::new(2, geom, 192);
-        let h = placement.register(4, 2000);
+        let h = placement.register(Dtype::INT4, 2000);
         let env = PlanEnv {
             geom,
             compute_rows: placement.compute_rows(),
@@ -978,7 +1173,7 @@ mod tests {
         let geom = Geometry::G512x40;
         let placement = PlacementMap::new(2, geom, 64);
         // int8 capacity per 64-row reserve shard: 8 slots x 40 = 320
-        let h = placement.register_sharded(8, 500, 1, None).unwrap();
+        let h = placement.register_sharded(Dtype::INT8, 500, 1, None).unwrap();
         assert_eq!(placement.shard_ranges(h), vec![(0, 320), (320, 180)]);
         let env = PlanEnv {
             geom,
@@ -1018,14 +1213,14 @@ mod tests {
             placement: Some(&placement),
         };
         let (m, k, n) = (6, 32, 10);
-        let segs = matmul_segments(&env, 8, k);
+        let segs = matmul_segments(&env, Dtype::INT8, k);
         assert_eq!(segs, vec![(0, 16), (16, 32)]);
         let handles: Vec<MatSeg> = segs
             .iter()
             .map(|&(k0, k1)| MatSeg {
                 k0,
                 k1,
-                handle: placement.register(8, (k1 - k0) * n),
+                handle: placement.register(Dtype::INT8, (k1 - k0) * n),
             })
             .collect();
         let x = vec![vec![1i64; k]; m];
@@ -1056,7 +1251,7 @@ mod tests {
         }
         assert_eq!(p.steps[1], ReduceStep::Accumulate { offset: 40 });
         // a wrong-length weight tensor is rejected
-        let bad = vec![MatSeg { k0: 0, k1: 16, handle: placement.register(8, 5) }];
+        let bad = vec![MatSeg { k0: 0, k1: 16, handle: placement.register(Dtype::INT8, 5) }];
         assert!(plan(
             &env,
             &JobPayload::IntMatmulResident {
@@ -1093,10 +1288,10 @@ mod tests {
         // one segment of K=12, n=40: slab = 480 elements; a 64-row int8
         // reserve holds 320 -> shards (0, 320), (320, 160) = K rows 0..8, 8..12
         let (k, n) = (12, 40);
-        let h = placement.register_sharded(8, k * n, n, None).unwrap();
+        let h = placement.register_sharded(Dtype::INT8, k * n, n, None).unwrap();
         assert_eq!(placement.shard_ranges(h), vec![(0, 320), (320, 160)]);
         let segments = vec![MatSeg { k0: 0, k1: k, handle: h }];
-        let chunks = matmul_chunks(&env, 8, n, &segments).unwrap();
+        let chunks = matmul_chunks(&env, Dtype::INT8, n, &segments).unwrap();
         assert_eq!(chunks.len(), 2, "one chunk per shard");
         assert_eq!((chunks[0].k0, chunks[0].k1), (0, 8));
         assert_eq!((chunks[1].k0, chunks[1].k1), (8, 12));
@@ -1123,8 +1318,8 @@ mod tests {
             placement: Some(&placement),
         };
         let (m, k, n) = (4, 16, 10);
-        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
-        let sink = placement.register(8, m * n);
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(Dtype::INT8, k * n) };
+        let sink = placement.register(Dtype::INT8, m * n);
         let x = vec![vec![1i64; k]; m];
         let p = plan(
             &env,
@@ -1154,7 +1349,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // a wrong-sized sink is rejected
-        let small = placement.register(8, 5);
+        let small = placement.register(Dtype::INT8, 5);
         assert!(plan(
             &env,
             &JobPayload::IntMatmulFused {
@@ -1164,7 +1359,7 @@ mod tests {
                 segments: vec![MatSeg {
                     k0: 0,
                     k1: k,
-                    handle: placement.register(8, k * n),
+                    handle: placement.register(Dtype::INT8, k * n),
                 }],
                 bias: None,
                 relu_requant_shift: None,
@@ -1184,7 +1379,7 @@ mod tests {
             placement: Some(&placement),
         };
         let (m, k, n) = (6, 16, 10);
-        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(Dtype::INT8, k * n) };
         let p = plan(
             &env,
             &JobPayload::IntMatmulFused {
@@ -1218,9 +1413,9 @@ mod tests {
         // x: 20 rows x 16 -> 320 elems = exactly one 64-row int8 shard;
         // force two shards with a target, row-aligned (align = k = 16)
         let (m, k, n) = (20, 16, 4);
-        let xh = placement.register_sharded(8, m * k, k, Some(m * k / 2)).unwrap();
+        let xh = placement.register_sharded(Dtype::INT8, m * k, k, Some(m * k / 2)).unwrap();
         assert_eq!(placement.shard_ranges(xh), vec![(0, 160), (160, 160)]);
-        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(8, k * n) };
+        let wseg = MatSeg { k0: 0, k1: k, handle: placement.register(Dtype::INT8, k * n) };
         let p = plan(
             &env,
             &JobPayload::IntMatmulResident {
@@ -1244,5 +1439,104 @@ mod tests {
                 "tile rows {i0}..{i1} straddle the x shard boundary"
             );
         }
+    }
+
+    #[test]
+    fn bf16_dot_plans_whole_k_per_task() {
+        use crate::util::SoftBf16;
+        // K = 25, n = 900 > one block's 400-element bf16 capacity:
+        // columns tile, K never splits
+        let k = 25;
+        let n = 900;
+        let a = vec![vec![SoftBf16::from_f32(1.0); n]; k];
+        let b = vec![vec![SoftBf16::from_f32(2.0); n]; k];
+        let p = plan_bare(&JobPayload::Bf16Dot { a, b });
+        assert_eq!(p.result_len, n);
+        assert_eq!(p.tasks.len(), 3, "900 columns / 400 per block");
+        for t in &p.tasks {
+            let BlockTask::Bf16Dot { a, key, .. } = t else { panic!("{t:?}") };
+            assert_eq!(a.len(), k, "every task carries the whole K");
+            assert!(matches!(key.op, KernelOp::Bf16Mac));
+        }
+        assert!(p.steps.iter().all(|s| matches!(s, ReduceStep::Scatter { .. })));
+    }
+
+    #[test]
+    fn bf16_matmul_segments_never_split() {
+        let geom = Geometry::G512x40;
+        let bare = PlanEnv::bare(geom);
+        assert_eq!(matmul_segments(&bare, Dtype::Bf16, 500), vec![(0, 500)]);
+        assert_eq!(matmul_segments(&bare, Dtype::Bf16, 0), Vec::<(usize, usize)>::new());
+        // int K-splitting is unchanged
+        assert_eq!(matmul_segments(&bare, Dtype::INT8, 64).len(), 3);
+    }
+
+    #[test]
+    fn bf16_resident_matmul_pins_the_whole_slab() {
+        use crate::util::SoftBf16;
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let (m, k, n) = (4, 20, 10);
+        let h = placement.register(Dtype::Bf16, k * n);
+        let x = vec![vec![SoftBf16::from_f32(1.0); k]; m];
+        let p = plan(
+            &env,
+            &JobPayload::Bf16MatmulResident {
+                x: x.clone(),
+                n,
+                segments: vec![MatSeg { k0: 0, k1: k, handle: h }],
+            },
+        )
+        .unwrap();
+        assert_eq!(p.result_len, m * n);
+        for t in &p.tasks {
+            let slices = t.resident_slices();
+            assert_eq!(slices.len(), 1);
+            assert_eq!(
+                (slices[0].handle, slices[0].offset, slices[0].len),
+                (h, 0, k * n),
+                "every tile pins the complete slab"
+            );
+        }
+        // dtype mismatch is rejected
+        let wrong = placement.register(Dtype::INT8, k * n);
+        assert!(plan(
+            &env,
+            &JobPayload::Bf16MatmulResident {
+                x: x.clone(),
+                n,
+                segments: vec![MatSeg { k0: 0, k1: k, handle: wrong }],
+            },
+        )
+        .is_err());
+        // multi-segment bf16 matmuls are rejected (no K splits for floats)
+        assert!(plan(
+            &env,
+            &JobPayload::Bf16MatmulResident {
+                x,
+                n,
+                segments: vec![
+                    MatSeg { k0: 0, k1: 10, handle: h },
+                    MatSeg { k0: 10, k1: 20, handle: h },
+                ],
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn ew_capacity_covers_bf16() {
+        let geom = Geometry::G512x40;
+        assert_eq!(ew_capacity(geom, EwOp::Add, Dtype::Bf16), 400);
+        assert_eq!(ew_capacity(geom, EwOp::Mul, Dtype::Bf16), 400);
+        assert_eq!(ew_capacity(geom, EwOp::Add, Dtype::INT4), 1680);
+        // the reserve caps bf16 capacity like everything else
+        let reserved = PlanEnv { geom, compute_rows: 288, placement: None };
+        assert_eq!(ew_capacity_in(&reserved, EwOp::Add, Dtype::Bf16), 6 * 40);
     }
 }

@@ -1,5 +1,7 @@
 //! Shared metrics for the coordinator and server.
 
+use crate::exec::Dtype;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -7,6 +9,9 @@ use std::sync::Mutex;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct JobSample {
     pub ops: u64,
+    /// The job's element type (`None` for legacy callers); feeds the
+    /// per-dtype job and host-byte counters.
+    pub dtype: Option<Dtype>,
     pub block_runs: u64,
     pub cycles: u64,
     pub array_cycles: u64,
@@ -20,6 +25,18 @@ pub struct JobSample {
     pub host_bytes_out: u64,
     /// Resident-operand resolutions served from block storage.
     pub resident_hits: u64,
+}
+
+/// Per-dtype counters: jobs completed and packed host bytes moved, keyed
+/// by the [`Dtype`] of the job ([`crate::coordinator::JobPayload::dtype`]).
+/// The precision-adaptability story is only real if it is observable: the
+/// server's `stats` reply carries these, so a mixed int4/int8/bf16 request
+/// stream shows up as exactly that.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DtypeCounts {
+    pub jobs: u64,
+    pub host_bytes_in: u64,
+    pub host_bytes_out: u64,
 }
 
 /// Running max/mean of one worker's queue depth, sampled at job submit.
@@ -77,6 +94,8 @@ pub struct Metrics {
     /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
     /// the widest farm seen).
     queue_depths: Mutex<Vec<DepthGauge>>,
+    /// Per-dtype job/byte counters (see [`DtypeCounts`]).
+    by_dtype: Mutex<BTreeMap<Dtype, DtypeCounts>>,
 }
 
 impl Metrics {
@@ -85,6 +104,13 @@ impl Metrics {
     }
 
     pub fn record_job(&self, s: JobSample) {
+        if let Some(dt) = s.dtype {
+            let mut map = self.by_dtype.lock().unwrap();
+            let c = map.entry(dt).or_default();
+            c.jobs += 1;
+            c.host_bytes_in += s.host_bytes_in;
+            c.host_bytes_out += s.host_bytes_out;
+        }
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.block_runs.fetch_add(s.block_runs, Ordering::Relaxed);
         self.ops_executed.fetch_add(s.ops, Ordering::Relaxed);
@@ -124,15 +150,27 @@ impl Metrics {
         self.queue_depths.lock().unwrap().clone()
     }
 
+    /// Snapshot of the per-dtype counters, dtype-sorted.
+    pub fn dtype_counts(&self) -> Vec<(Dtype, DtypeCounts)> {
+        self.by_dtype.lock().unwrap().iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
     /// One-line text snapshot.
     pub fn snapshot(&self) -> String {
         let gauges = self.queue_depth_gauges();
         let qmax: Vec<String> = gauges.iter().map(|g| g.max.to_string()).collect();
         let qmean: Vec<String> = gauges.iter().map(|g| format!("{:.1}", g.mean())).collect();
+        let dtypes: Vec<String> = self
+            .dtype_counts()
+            .into_iter()
+            .map(|(dt, c)| {
+                format!("{dt}:jobs={},in={},out={}", c.jobs, c.host_bytes_in, c.host_bytes_out)
+            })
+            .collect();
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
-             shards={} shard_evictions={} qdepth_max=[{}] qdepth_mean=[{}]",
+             shards={} shard_evictions={} qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
@@ -148,6 +186,7 @@ impl Metrics {
             self.shard_evictions.load(Ordering::Relaxed),
             qmax.join(","),
             qmean.join(","),
+            dtypes.join(","),
         )
     }
 }
@@ -161,6 +200,7 @@ mod tests {
         let m = Metrics::new();
         m.record_job(JobSample {
             ops: 100,
+            dtype: Some(Dtype::INT8),
             block_runs: 2,
             cycles: 500,
             array_cycles: 400,
@@ -173,6 +213,7 @@ mod tests {
         });
         m.record_job(JobSample {
             ops: 50,
+            dtype: Some(Dtype::Bf16),
             block_runs: 1,
             cycles: 250,
             array_cycles: 200,
@@ -201,6 +242,20 @@ mod tests {
         m.set_storage_gauges(5, 2);
         assert!(m.snapshot().contains("shards=5"));
         assert!(m.snapshot().contains("shard_evictions=2"));
+        // per-dtype counters rode the same samples
+        let by = m.dtype_counts();
+        assert_eq!(by.len(), 2);
+        assert_eq!(
+            by[0],
+            (Dtype::INT8, DtypeCounts { jobs: 1, host_bytes_in: 1600, host_bytes_out: 800 })
+        );
+        assert_eq!(
+            by[1],
+            (Dtype::Bf16, DtypeCounts { jobs: 1, host_bytes_in: 400, host_bytes_out: 400 })
+        );
+        let snap = m.snapshot();
+        assert!(snap.contains("int8:jobs=1,in=1600,out=800"), "{snap}");
+        assert!(snap.contains("bf16:jobs=1,in=400,out=400"), "{snap}");
     }
 
     #[test]

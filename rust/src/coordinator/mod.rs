@@ -46,5 +46,5 @@ pub mod server;
 
 pub use farm::{BatchHandle, BatchTiming, BlockFarm};
 pub use job::{Job, JobPayload, JobResult, MatSeg, MatX, OperandRef};
-pub use metrics::{JobSample, Metrics};
+pub use metrics::{DtypeCounts, JobSample, Metrics};
 pub use scheduler::{Coordinator, JobHandle};

@@ -23,7 +23,7 @@ use super::job::{EwOp, Job, JobPayload, JobResult, OperandRef};
 use super::mapper::{self, PlanEnv, ReduceStep};
 use super::metrics::{JobSample, Metrics};
 use crate::bitline::Geometry;
-use crate::exec::{DataStats, KernelCache, KernelKey, KernelOp, PlacementMap, TensorHandle};
+use crate::exec::{DataStats, Dtype, KernelCache, KernelKey, KernelOp, PlacementMap, TensorHandle};
 use anyhow::Result;
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -40,6 +40,7 @@ pub struct Coordinator {
 pub struct JobHandle {
     id: u64,
     op_count: u64,
+    dtype: Dtype,
     result_len: usize,
     steps: Vec<ReduceStep>,
     batch: BatchHandle,
@@ -90,6 +91,7 @@ impl JobHandle {
         self.metrics.record_queue_depths(&depths);
         self.metrics.record_job(JobSample {
             ops: self.op_count,
+            dtype: Some(self.dtype),
             block_runs: block_runs as u64,
             cycles: total.cycles,
             array_cycles: total.array_cycles,
@@ -157,8 +159,8 @@ impl Coordinator {
     // ---- resident tensors (delegating to the farm) ------------------------
 
     /// Store a tensor on one block; see [`BlockFarm::alloc_tensor`].
-    pub fn alloc_tensor(&self, values: &[i64], w: u32) -> Result<TensorHandle> {
-        self.farm.alloc_tensor(values, w)
+    pub fn alloc_tensor(&self, values: &[i64], dtype: Dtype) -> Result<TensorHandle> {
+        self.farm.alloc_tensor(values, dtype)
     }
 
     /// Store a tensor on up to `copies` blocks; see
@@ -166,10 +168,10 @@ impl Coordinator {
     pub fn alloc_tensor_replicated(
         &self,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
         copies: usize,
     ) -> Result<TensorHandle> {
-        self.farm.alloc_tensor_replicated(values, w, copies)
+        self.farm.alloc_tensor_replicated(values, dtype, copies)
     }
 
     /// Store a (possibly sharded) tensor whose shard boundaries land on
@@ -177,17 +179,17 @@ impl Coordinator {
     pub fn alloc_tensor_aligned(
         &self,
         values: &[i64],
-        w: u32,
+        dtype: Dtype,
         copies: usize,
         align: usize,
     ) -> Result<TensorHandle> {
-        self.farm.alloc_tensor_aligned(values, w, copies, align)
+        self.farm.alloc_tensor_aligned(values, dtype, copies, align)
     }
 
     /// Allocate a zero-initialized fabric-side activation tensor (the
     /// destination of fused compute); see [`BlockFarm::alloc_activation`].
-    pub fn alloc_activation(&self, len: usize, w: u32, align: usize) -> Result<TensorHandle> {
-        self.farm.alloc_activation(len, w, align)
+    pub fn alloc_activation(&self, len: usize, dtype: Dtype, align: usize) -> Result<TensorHandle> {
+        self.farm.alloc_activation(len, dtype, align)
     }
 
     /// Overwrite a resident tensor's values on every replica.
@@ -216,14 +218,16 @@ impl Coordinator {
 
     /// Per-block elementwise capacity under this coordinator's reserve
     /// (the server's coalesced-group cap).
-    pub fn ew_capacity(&self, op: EwOp, w: u32) -> usize {
-        mapper::ew_capacity_in(&self.plan_env(), op, w)
+    pub fn ew_capacity(&self, op: EwOp, dtype: Dtype) -> usize {
+        mapper::ew_capacity_in(&self.plan_env(), op, dtype)
     }
 
     /// The K-segmentation a matmul of inner dimension `k` lowers to on
-    /// this farm (used to shape resident weight slabs).
-    pub fn matmul_segments(&self, w: u32, k: usize) -> Vec<(usize, usize)> {
-        mapper::matmul_segments(&self.plan_env(), w, k)
+    /// this farm (used to shape resident weight slabs). bf16 matmuls
+    /// never K-split (their MAC recurrence is order-dependent), so bf16
+    /// always yields a single whole-K segment.
+    pub fn matmul_segments(&self, dtype: Dtype, k: usize) -> Vec<(usize, usize)> {
+        mapper::matmul_segments(&self.plan_env(), dtype, k)
     }
 
     /// Compile every kernel a job of `payload`'s shape will need, without
@@ -254,9 +258,17 @@ impl Coordinator {
         let mut n = 0;
         for w in 2..=16u32 {
             for op in [KernelOp::IntAdd, KernelOp::IntSub, KernelOp::IntMul] {
-                self.farm.kernel_cache().get(KernelKey::int_ew_full(op, w, geom));
+                self.farm
+                    .kernel_cache()
+                    .get(KernelKey::int_ew_full(op, Dtype::Int { w }, geom));
                 n += 1;
             }
+        }
+        // the bf16 serving path: elementwise add/mul (sub is served as
+        // add-with-negated-b, an exact IEEE identity)
+        for mul in [false, true] {
+            self.farm.kernel_cache().get(KernelKey::bf16_ew_full(mul, geom));
+            n += 1;
         }
         n
     }
@@ -315,6 +327,7 @@ impl Coordinator {
     pub fn submit(&self, job: Job) -> JobHandle {
         let payload = self.normalize(job.payload);
         let op_count = payload.op_count();
+        let dtype = payload.dtype();
         match mapper::plan(&self.plan_env(), &payload) {
             Ok(plan) => {
                 let mapper::Plan { tasks, result_len, steps } = plan;
@@ -326,6 +339,7 @@ impl Coordinator {
                 JobHandle {
                     id: job.id,
                     op_count,
+                    dtype,
                     result_len,
                     steps,
                     batch,
@@ -336,6 +350,7 @@ impl Coordinator {
             Err(e) => JobHandle {
                 id: job.id,
                 op_count,
+                dtype,
                 result_len: 0,
                 steps: Vec::new(),
                 batch: BatchHandle::failed(e),
@@ -395,9 +410,10 @@ mod tests {
             let expect = crate::util::sext(crate::util::mask(a[i] + b[i], 4) as i64, 4);
             assert_eq!(r.values[i], expect, "i={i}");
         }
-        // every operand and result byte crossed the host boundary
-        assert_eq!(r.host_bytes_in, 2 * 8 * n as u64);
-        assert_eq!(r.host_bytes_out, 8 * n as u64);
+        // every operand and result crossed the host boundary, at packed
+        // int4 cost: half a byte per value each way
+        assert_eq!(r.host_bytes_in, n as u64);
+        assert_eq!(r.host_bytes_out, n as u64 / 2);
         assert_eq!(r.resident_hits, 0);
     }
 
@@ -631,7 +647,7 @@ mod tests {
         let mut rng = Prng::new(77);
         let a: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
         let b: Vec<i64> = (0..300).map(|_| rng.int(8)).collect();
-        let h = c.alloc_tensor(&a, 8).unwrap();
+        let h = c.alloc_tensor(&a, Dtype::INT8).unwrap();
         let inline = c
             .run(Job {
                 id: 0,
@@ -673,8 +689,8 @@ mod tests {
         let c = Coordinator::with_storage(Geometry::G512x40, 1, 64);
         let a: Vec<i64> = (0..50).map(|i| i - 25).collect();
         let b: Vec<i64> = (0..50).map(|i| 25 - i).collect();
-        let ha = c.alloc_tensor(&a, 8).unwrap();
-        let hb = c.alloc_tensor(&b, 8).unwrap();
+        let ha = c.alloc_tensor(&a, Dtype::INT8).unwrap();
+        let hb = c.alloc_tensor(&b, Dtype::INT8).unwrap();
         let r = c
             .run(Job {
                 id: 0,
@@ -708,7 +724,7 @@ mod tests {
         let x: Vec<Vec<i64>> = (0..m).map(|_| (0..k).map(|_| rng.int(8)).collect()).collect();
         let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
         let slab: Vec<i64> = wt.iter().flat_map(|row| row.iter().copied()).collect();
-        let h = c.alloc_tensor_aligned(&slab, 8, 1, n).unwrap();
+        let h = c.alloc_tensor_aligned(&slab, Dtype::INT8, 1, n).unwrap();
         assert!(c.placement().shard_count(h) > 1, "slab must shard");
         assert_eq!(c.read_tensor(h).unwrap(), slab, "sharded slab reads back");
         let r = c
@@ -743,8 +759,8 @@ mod tests {
         let wt: Vec<Vec<i64>> = (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
         let bias: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
         let slab: Vec<i64> = wt.iter().flat_map(|row| row.iter().copied()).collect();
-        let wh = c.alloc_tensor_replicated(&slab, 8, 2).unwrap();
-        let act = c.alloc_activation(m * n, 8, n).unwrap();
+        let wh = c.alloc_tensor_replicated(&slab, Dtype::INT8, 2).unwrap();
+        let act = c.alloc_activation(m * n, Dtype::INT8, n).unwrap();
         let r = c
             .run(Job {
                 id: 0,
@@ -778,7 +794,7 @@ mod tests {
         // a second matmul consumes the activations in place
         let w2: Vec<Vec<i64>> = (0..n).map(|_| (0..3).map(|_| rng.int(8)).collect()).collect();
         let slab2: Vec<i64> = w2.iter().flat_map(|row| row.iter().copied()).collect();
-        let wh2 = c.alloc_tensor_replicated(&slab2, 8, 2).unwrap();
+        let wh2 = c.alloc_tensor_replicated(&slab2, Dtype::INT8, 2).unwrap();
         let r2 = c
             .run(Job {
                 id: 0,
@@ -806,8 +822,8 @@ mod tests {
         let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
         let b: Vec<i64> = (0..40).map(|i| 20 - i).collect();
         // two single-replica tensors land on different (most-free) workers
-        let ha = c.alloc_tensor(&a, 8).unwrap();
-        let hb = c.alloc_tensor(&b, 8).unwrap();
+        let ha = c.alloc_tensor(&a, Dtype::INT8).unwrap();
+        let hb = c.alloc_tensor(&b, Dtype::INT8).unwrap();
         assert_ne!(c.placement().homes(ha), c.placement().homes(hb));
         let r = c
             .run(Job {

@@ -19,31 +19,48 @@
 //!   <- {"id": 1, "ok": true, "values": [5,7,9]}
 //! ```
 //!
-//! Compute ops: `add`, `sub`, `mul` (integer widths 2..=16). Either
-//! operand may instead reference a **resident tensor** by handle —
-//! `"a": {"handle": 7}` — computed against in place on the block storing
-//! it. The tensor control plane rides the same field:
+//! Compute ops: `add`, `sub`, `mul` (elementwise) and `dot` (one dot
+//! product per request). **Precision is per-request**: a `"dtype"` field
+//! selects `"int4"`, `"int8"` (any `"intN"`, N in 2..=16) or `"bf16"`
+//! against the same blocks (the legacy `"w"` integer field still works):
 //!
 //! ```text
-//!   -> {"id": 2, "op": "alloc", "w": 8, "values": [1,2,3], "copies": 2}
+//!   -> {"id": 7, "op": "add", "dtype": "int4", "a": [1,2], "b": [3,-4]}
+//!   -> {"id": 8, "op": "mul", "dtype": "bf16", "a": [1.5, -2.0], "b": [0.25, 3.0]}
+//!   <- {"id": 8, "ok": true, "values": [0.375, -6]}
+//!   -> {"id": 9, "op": "dot", "dtype": "bf16", "a": [1.5, 2.0], "b": [2.0, 0.5]}
+//!   <- {"id": 9, "ok": true, "values": [4]}
+//! ```
+//!
+//! bf16 values travel as JSON floats both ways — validated at parse time
+//! (non-finite or out-of-bf16-range operands are per-request errors, never
+//! truncated) and printed with f64's shortest-roundtrip formatting, which
+//! is exact for every bf16 value. Either integer elementwise operand may
+//! instead reference a **resident tensor** by handle — `"a": {"handle":
+//! 7}` — computed against in place on the block storing it. The tensor
+//! control plane rides the same fields (`alloc` takes a `dtype` too, so
+//! int4 tensors pack two values per byte and bf16 tensors take floats):
+//!
+//! ```text
+//!   -> {"id": 2, "op": "alloc", "dtype": "int8", "values": [1,2,3], "copies": 2}
 //!   <- {"id": 2, "ok": true, "handle": 7}
 //!   -> {"id": 3, "op": "write", "handle": 7, "values": [4,5,6]}
 //!   -> {"id": 4, "op": "read",  "handle": 7}
 //!   <- {"id": 4, "ok": true, "values": [4,5,6]}
 //!   -> {"id": 5, "op": "free",  "handle": 7}
 //!   -> {"id": 6, "op": "stats"}
-//!   <- {"id": 6, "ok": true, "stats": "jobs=... qdepth_max=[...] ..."}
+//!   <- {"id": 6, "ok": true, "stats": "jobs=... dtypes=[int8:jobs=..] ..."}
 //! ```
 //!
-//! Ids and values are carried as [`Json::Int`], so 64-bit integers cross
-//! the wire without the 2^53 precision loss of an f64 path; request ids
-//! outside 0..=i64::MAX are rejected at parse time rather than echoed
+//! Ids and integer values are carried as [`Json::Int`], so 64-bit integers
+//! cross the wire without the 2^53 precision loss of an f64 path; request
+//! ids outside 0..=i64::MAX are rejected at parse time rather than echoed
 //! corrupted.
 
 use super::job::{EwOp, Job, JobPayload, OperandRef};
 use super::scheduler::{Coordinator, JobHandle};
-use crate::exec::TensorHandle;
-use crate::util::Json;
+use crate::exec::{Dtype, TensorHandle};
+use crate::util::{Json, SoftBf16};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -100,6 +117,8 @@ impl BatchWindow {
 }
 
 /// A compute-request operand: literal values or a resident-tensor handle.
+/// For bf16 requests the values are raw bf16 bit patterns (converted from
+/// the wire's float literals at parse time).
 #[derive(Clone, Debug)]
 pub enum WireOperand {
     Values(Vec<i64>),
@@ -115,23 +134,41 @@ impl WireOperand {
     }
 }
 
-/// One parsed compute request.
+/// The compute operation of a request: elementwise, or one dot product
+/// (`a . b` over the full operand length).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ComputeKind {
+    Ew(EwOp),
+    Dot,
+}
+
+/// One parsed compute request. `dtype` is first-class: the same wire shape
+/// serves int4, int8 (any width 2..=16) and bf16 against the same blocks.
 #[derive(Clone, Debug)]
 pub struct ComputeReq {
     pub id: u64,
-    pub op: EwOp,
-    pub w: u32,
+    pub kind: ComputeKind,
+    pub dtype: Dtype,
     pub a: WireOperand,
     pub b: WireOperand,
 }
 
-/// One parsed client request: elementwise compute, or a tensor
-/// control-plane operation.
+/// A number as it appeared on the wire: exact integer or float literal.
+/// Tensor writes keep both until the tensor's dtype is known (integer
+/// tensors demand exact ints; bf16 tensors take floats).
+#[derive(Clone, Copy, Debug)]
+pub enum WireNum {
+    Int(i64),
+    Num(f64),
+}
+
+/// One parsed client request: compute, or a tensor control-plane
+/// operation.
 #[derive(Clone, Debug)]
 pub enum Request {
     Compute(ComputeReq),
-    Alloc { id: u64, w: u32, values: Vec<i64>, copies: usize },
-    WriteTensor { id: u64, handle: TensorHandle, values: Vec<i64> },
+    Alloc { id: u64, dtype: Dtype, values: Vec<i64>, copies: usize },
+    WriteTensor { id: u64, handle: TensorHandle, values: Vec<WireNum> },
     ReadTensor { id: u64, handle: TensorHandle },
     Free { id: u64, handle: TensorHandle },
     Stats { id: u64 },
@@ -163,6 +200,18 @@ pub fn recover_request_id(line: &str) -> u64 {
     }
 }
 
+/// The exact integer value of a wire number, if it is one: an integer
+/// literal, or the legal JSON spelling `-0` (which the parser keeps as
+/// `Num(-0.0)` so bf16 responses preserve its sign, but which integer
+/// consumers must keep accepting as plain zero).
+fn exact_int(x: &Json) -> Option<i64> {
+    match x {
+        Json::Int(i) => Some(*i),
+        Json::Num(n) if *n == 0.0 && n.is_sign_negative() => Some(0),
+        _ => None,
+    }
+}
+
 /// Exact-integer array field (fractional literals would silently truncate
 /// through an `as_i64` path and compute on altered data).
 fn int_array(v: &Json, key: &str) -> Result<Vec<i64>> {
@@ -170,9 +219,60 @@ fn int_array(v: &Json, key: &str) -> Result<Vec<i64>> {
         .and_then(Json::as_arr)
         .ok_or_else(|| anyhow!("missing array {key}"))?
         .iter()
-        .map(|x| match x {
-            Json::Int(i) => Ok(*i),
-            _ => Err(anyhow!("non-integer in {key}")),
+        .map(|x| exact_int(x).ok_or_else(|| anyhow!("non-integer in {key}")))
+        .collect()
+}
+
+/// Round an f64 to f32 with **round-to-odd**: truncate toward zero, then
+/// set the sticky LSB if inexact. An intermediate with >= 2p+2 bits
+/// rounded to odd makes a following round-to-nearest exact (f32's 24 bits
+/// vs bf16's 8), so `f64 -> f32 -> bf16` never double-rounds.
+fn f32_round_to_odd(x: f64) -> f32 {
+    let f = x as f32; // round-to-nearest-even
+    if f as f64 == x {
+        return f; // exactly representable (covers 0.0 and -0.0)
+    }
+    let mut bits = f.to_bits();
+    // step back to truncation-toward-zero if RNE overshot the magnitude
+    // (the f32 encoding is magnitude-monotone, so +-1 on the bits walks
+    // one ulp, across binades and into/out of the subnormal range)
+    if (f as f64).abs() > x.abs() {
+        bits -= 1;
+    }
+    f32::from_bits(bits | 1)
+}
+
+/// Convert one wire number to a bf16 bit pattern, rounding the f64 value
+/// to bf16 in a **single** nearest-even step (a plain `x as f32` cast
+/// first would double-round at bf16 tie midpoints). Rejected (never
+/// truncated): non-finite literals, and finite literals whose rounded
+/// bf16 value overflows to infinity — the bf16 counterpart of the
+/// integer range check.
+fn bf16_from_f64(x: f64) -> Result<u16> {
+    if !x.is_finite() {
+        bail!("non-finite bf16 operand");
+    }
+    let v = SoftBf16::from_f32(f32_round_to_odd(x));
+    if !v.to_f32().is_finite() {
+        bail!("operand {x:e} out of bf16 range");
+    }
+    Ok(v.to_bits())
+}
+
+/// bf16 array field: float (or integer) literals, validated and converted
+/// to bit patterns.
+fn bf16_array(v: &Json, key: &str) -> Result<Vec<i64>> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing array {key}"))?
+        .iter()
+        .map(|x| {
+            let f = match x {
+                Json::Int(i) => *i as f64,
+                Json::Num(n) => *n,
+                _ => bail!("non-number in {key}"),
+            };
+            bf16_from_f64(f).map(|bits| bits as i64).map_err(|e| anyhow!("{key}: {e}"))
         })
         .collect()
 }
@@ -186,15 +286,45 @@ fn handle_field(v: &Json) -> Result<TensorHandle> {
     }
 }
 
-/// A compute operand: an integer array or `{"handle": N}`.
-fn operand_field(v: &Json, key: &str, w: u32) -> Result<WireOperand> {
-    match v.get(key) {
-        Some(Json::Arr(_)) => {
-            let values = int_array(v, key)?;
-            crate::cram::store::check_int_range(&values, w)
-                .map_err(|e| anyhow!("operand {key}: {e}"))?;
-            Ok(WireOperand::Values(values))
+/// The request's element type: a `"dtype"` string (`"int4"` / `"int8"` /
+/// `"bf16"` / any `"intN"`), or the legacy `"w"` integer width (default
+/// int8). Integer widths are capped at 16 on the wire, as before.
+fn dtype_field(v: &Json) -> Result<Dtype> {
+    let dtype = match v.get("dtype") {
+        Some(Json::Str(s)) => {
+            if v.get("w").is_some() {
+                bail!("specify either dtype or w, not both");
+            }
+            Dtype::parse(s)?
         }
+        Some(_) => bail!("dtype must be a string"),
+        None => match v.get("w") {
+            None => Dtype::INT8,
+            // out-of-u32 widths become 0 and fail the range check below
+            Some(&Json::Int(i)) => Dtype::Int { w: u32::try_from(i).unwrap_or(0) },
+            Some(_) => bail!("width must be an integer"),
+        },
+    };
+    if let Some(w) = dtype.int_width() {
+        if !(2..=16).contains(&w) {
+            bail!("width {w} out of range 2..=16");
+        }
+    }
+    Ok(dtype)
+}
+
+/// A compute operand: a value array (ints for integer dtypes, floats for
+/// bf16) or `{"handle": N}`.
+fn operand_field(v: &Json, key: &str, dtype: Dtype) -> Result<WireOperand> {
+    match v.get(key) {
+        Some(Json::Arr(_)) => match dtype.int_width() {
+            Some(_) => {
+                let values = int_array(v, key)?;
+                dtype.check_values(&values).map_err(|e| anyhow!("operand {key}: {e}"))?;
+                Ok(WireOperand::Values(values))
+            }
+            None => Ok(WireOperand::Values(bf16_array(v, key)?)),
+        },
         Some(obj @ Json::Obj(_)) => Ok(WireOperand::Handle(handle_field(obj)?)),
         _ => bail!("missing operand {key} (array or {{\"handle\": N}})"),
     }
@@ -212,18 +342,12 @@ pub fn parse_request(line: &str) -> Result<Request> {
     // or beyond-i64 literal parses as (or saturates through) f64 and
     // would echo back a *different* id, breaking client correlation —
     // reject instead of corrupting
-    let id = match v.get("id") {
-        Some(&Json::Int(i)) if i >= 0 => i as u64,
+    let id = match v.get("id").map(exact_int) {
+        Some(Some(i)) if i >= 0 => i as u64,
         Some(_) => bail!("id must be an integer in 0..={}", i64::MAX),
         None => bail!("missing id"),
     };
     let op_name = v.get("op").and_then(Json::as_str).unwrap_or("");
-    let w = match v.get("w") {
-        None => 8,
-        // out-of-u32 widths become 0 and fail the range check below
-        Some(&Json::Int(i)) => u32::try_from(i).unwrap_or(0),
-        Some(_) => bail!("width must be an integer"),
-    };
     match op_name {
         "add" | "sub" | "mul" => {
             let op = match op_name {
@@ -231,35 +355,65 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 "sub" => EwOp::Sub,
                 _ => EwOp::Mul,
             };
-            if !(2..=16).contains(&w) {
-                bail!("width {w} out of range 2..=16");
+            let dtype = dtype_field(&v)?;
+            let a = operand_field(&v, "a", dtype)?;
+            let b = operand_field(&v, "b", dtype)?;
+            if dtype == Dtype::Bf16 {
+                // the bf16 elementwise path resolves no resident operands
+                if matches!(a, WireOperand::Handle(_)) || matches!(b, WireOperand::Handle(_))
+                {
+                    bail!("bf16 compute operands must be inline values");
+                }
             }
-            let a = operand_field(&v, "a", w)?;
-            let b = operand_field(&v, "b", w)?;
             if let (WireOperand::Values(av), WireOperand::Values(bv)) = (&a, &b) {
                 if av.len() != bv.len() {
                     bail!("length mismatch: a={} b={}", av.len(), bv.len());
                 }
             }
-            Ok(Request::Compute(ComputeReq { id, op, w, a, b }))
+            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Ew(op), dtype, a, b }))
+        }
+        "dot" => {
+            let dtype = dtype_field(&v)?;
+            let a = operand_field(&v, "a", dtype)?;
+            let b = operand_field(&v, "b", dtype)?;
+            let (WireOperand::Values(av), WireOperand::Values(bv)) = (&a, &b) else {
+                bail!("dot operands must be inline values");
+            };
+            if av.len() != bv.len() {
+                bail!("length mismatch: a={} b={}", av.len(), bv.len());
+            }
+            if av.is_empty() {
+                bail!("empty dot product");
+            }
+            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Dot, dtype, a, b }))
         }
         "alloc" => {
-            if !(2..=16).contains(&w) {
-                bail!("width {w} out of range 2..=16");
-            }
-            let values = int_array(&v, "values")?;
+            let dtype = dtype_field(&v)?;
+            let values = match dtype.int_width() {
+                Some(_) => int_array(&v, "values")?,
+                None => bf16_array(&v, "values")?,
+            };
             let copies = match v.get("copies") {
                 None => 1,
                 Some(&Json::Int(i)) if i >= 1 => i as usize,
                 Some(_) => bail!("copies must be a positive integer"),
             };
-            Ok(Request::Alloc { id, w, values, copies })
+            Ok(Request::Alloc { id, dtype, values, copies })
         }
-        "write" => Ok(Request::WriteTensor {
-            id,
-            handle: handle_field(&v)?,
-            values: int_array(&v, "values")?,
-        }),
+        "write" => {
+            let values = v
+                .get("values")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing array values"))?
+                .iter()
+                .map(|x| match (exact_int(x), x) {
+                    (Some(i), _) => Ok(WireNum::Int(i)),
+                    (None, Json::Num(n)) => Ok(WireNum::Num(*n)),
+                    _ => Err(anyhow!("non-number in values")),
+                })
+                .collect::<Result<Vec<WireNum>>>()?;
+            Ok(Request::WriteTensor { id, handle: handle_field(&v)?, values })
+        }
         "read" => Ok(Request::ReadTensor { id, handle: handle_field(&v)? }),
         "free" => Ok(Request::Free { id, handle: handle_field(&v)? }),
         "stats" => Ok(Request::Stats { id }),
@@ -278,6 +432,47 @@ pub fn format_response(id: u64, values: &[i64]) -> String {
         Json::Arr(values.iter().map(|&v| Json::Int(v)).collect()),
     );
     Json::Obj(obj).dump()
+}
+
+/// Format a bf16 success response: bit patterns become float literals
+/// (f64's shortest-roundtrip printing is exact for every bf16 value, so
+/// the wire encoding is loss-less). Non-finite results — inputs are
+/// validated finite, but bf16 arithmetic can overflow to infinity — are
+/// encoded as the strings `"Infinity"` / `"-Infinity"` / `"NaN"`, since
+/// JSON has no non-finite literals.
+pub fn format_bf16_response(id: u64, bits: &[i64]) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Int(id as i64));
+    obj.insert("ok".to_string(), Json::Bool(true));
+    obj.insert(
+        "values".to_string(),
+        Json::Arr(
+            bits.iter()
+                .map(|&v| {
+                    let f = SoftBf16::from_bits(v as u16).to_f32();
+                    if f.is_finite() {
+                        Json::Num(f as f64)
+                    } else if f.is_nan() {
+                        Json::Str("NaN".to_string())
+                    } else if f > 0.0 {
+                        Json::Str("Infinity".to_string())
+                    } else {
+                        Json::Str("-Infinity".to_string())
+                    }
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(obj).dump()
+}
+
+/// Format a compute response at the request's dtype.
+fn format_typed_response(id: u64, dtype: Dtype, values: &[i64]) -> String {
+    if dtype == Dtype::Bf16 {
+        format_bf16_response(id, values)
+    } else {
+        format_response(id, values)
+    }
 }
 
 /// Format a bare-acknowledgement response (write/free).
@@ -401,20 +596,26 @@ impl Batcher {
     pub fn submit_batch(&self, reqs: &[ComputeReq]) -> InFlightBatch {
         let n_blocks = self.coordinator.farm().len().max(1);
         let mut jobs: Vec<(JobHandle, Vec<Span>)> = Vec::new();
-        // group coalescible (value, value) requests by (op, w)
-        let mut groups: BTreeMap<(u8, u32), Vec<usize>> = BTreeMap::new();
+        // group coalescible elementwise (value, value) requests by
+        // (op, dtype); dot products and handle operands ride alone
+        let mut groups: BTreeMap<(u8, Dtype), Vec<usize>> = BTreeMap::new();
         for (i, r) in reqs.iter().enumerate() {
-            match (&r.a, &r.b) {
-                (WireOperand::Values(_), WireOperand::Values(_)) => {
-                    groups.entry((r.op as u8, r.w)).or_default().push(i);
+            match (r.kind, &r.a, &r.b) {
+                (ComputeKind::Ew(op), WireOperand::Values(_), WireOperand::Values(_)) => {
+                    groups.entry((op as u8, r.dtype)).or_default().push(i);
                 }
-                _ => {
+                (ComputeKind::Dot, _, _) => {
+                    let handle = self.submit_dot(r);
+                    jobs.push((handle, vec![Span::Whole { req: i }]));
+                }
+                (ComputeKind::Ew(op), _, _) => {
                     // handle operand: its own job, routed to the data
+                    let w = r.dtype.int_width().unwrap_or(8);
                     let handle = self.coordinator.submit(Job {
                         id: 0,
                         payload: JobPayload::IntElementwiseRef {
-                            op: r.op,
-                            w: r.w,
+                            op,
+                            w,
                             a: r.a.to_ref(),
                             b: r.b.to_ref(),
                         },
@@ -424,14 +625,16 @@ impl Batcher {
             }
         }
         // oldest-request-first: dispatch the group whose earliest member
-        // has waited longest, not whatever (op, w) sorts first
-        let mut ordered: Vec<((u8, u32), Vec<usize>)> = groups.into_iter().collect();
+        // has waited longest, not whatever (op, dtype) sorts first
+        let mut ordered: Vec<((u8, Dtype), Vec<usize>)> = groups.into_iter().collect();
         ordered.sort_by_key(|(_, idxs)| idxs[0]);
-        for ((_, w), idxs) in ordered {
-            let op = reqs[idxs[0]].op;
+        for ((_, dtype), idxs) in ordered {
+            let ComputeKind::Ew(op) = reqs[idxs[0]].kind else {
+                unreachable!("grouped requests are elementwise");
+            };
             let cap = self
                 .group_cap
-                .unwrap_or_else(|| self.coordinator.ew_capacity(op, w).max(1) * n_blocks);
+                .unwrap_or_else(|| self.coordinator.ew_capacity(op, dtype).max(1) * n_blocks);
             let mut a: Vec<i64> = Vec::new();
             let mut b: Vec<i64> = Vec::new();
             let mut spans: Vec<Span> = Vec::new();
@@ -447,7 +650,7 @@ impl Batcher {
                 if !spans.is_empty() && a.len() + ra.len() > cap {
                     jobs.push(self.submit_group(
                         op,
-                        w,
+                        dtype,
                         std::mem::take(&mut a),
                         std::mem::take(&mut b),
                         std::mem::take(&mut spans),
@@ -458,24 +661,57 @@ impl Batcher {
                 b.extend_from_slice(rb);
             }
             if !spans.is_empty() {
-                jobs.push(self.submit_group(op, w, a, b, spans));
+                jobs.push(self.submit_group(op, dtype, a, b, spans));
             }
         }
         InFlightBatch { jobs, n_reqs: reqs.len() }
     }
 
+    /// Submit one dot-product request as its own job (`n = 1` column).
+    fn submit_dot(&self, r: &ComputeReq) -> JobHandle {
+        let (WireOperand::Values(av), WireOperand::Values(bv)) = (&r.a, &r.b) else {
+            unreachable!("parse_request enforces inline dot operands");
+        };
+        let payload = match r.dtype.int_width() {
+            Some(w) => JobPayload::IntDot {
+                w,
+                a: av.iter().map(|&v| vec![v]).collect(),
+                b: bv.iter().map(|&v| vec![v]).collect(),
+            },
+            None => JobPayload::Bf16Dot {
+                a: av.iter().map(|&v| vec![SoftBf16::from_bits(v as u16)]).collect(),
+                b: bv.iter().map(|&v| vec![SoftBf16::from_bits(v as u16)]).collect(),
+            },
+        };
+        self.coordinator.submit(Job { id: 0, payload })
+    }
+
     fn submit_group(
         &self,
         op: EwOp,
-        w: u32,
+        dtype: Dtype,
         a: Vec<i64>,
         b: Vec<i64>,
         spans: Vec<Span>,
     ) -> (JobHandle, Vec<Span>) {
-        let handle = self.coordinator.submit(Job {
-            id: 0,
-            payload: JobPayload::IntElementwise { op, w, a, b },
-        });
+        let payload = match dtype.int_width() {
+            Some(w) => JobPayload::IntElementwise { op, w, a, b },
+            None => {
+                let to_bf = |v: Vec<i64>| -> Vec<SoftBf16> {
+                    v.into_iter().map(|x| SoftBf16::from_bits(x as u16)).collect()
+                };
+                // bf16 sub is served as add-with-negated-b: `a - b` and
+                // `a + (-b)` are the same IEEE operation, and the sign
+                // flip is exact
+                let (mul, b) = match op {
+                    EwOp::Mul => (true, b),
+                    EwOp::Add => (false, b),
+                    EwOp::Sub => (false, b.into_iter().map(|x| x ^ 0x8000).collect()),
+                };
+                JobPayload::Bf16Elementwise { mul, a: to_bf(a), b: to_bf(b) }
+            }
+        };
+        let handle = self.coordinator.submit(Job { id: 0, payload });
         (handle, spans)
     }
 
@@ -493,15 +729,48 @@ impl Batcher {
 fn handle_control(coordinator: &Coordinator, req: &Request) -> String {
     let id = req.id();
     let outcome = match req {
-        Request::Alloc { w, values, copies, .. } => coordinator
-            .alloc_tensor_replicated(values, *w, *copies)
+        Request::Alloc { dtype, values, copies, .. } => coordinator
+            .alloc_tensor_replicated(values, *dtype, *copies)
             .map(|h| format_handle(id, h)),
         Request::WriteTensor { handle, values, .. } => {
-            coordinator.write_tensor(*handle, values).map(|()| format_ok(id))
+            // the tensor's dtype decides the wire decoding: integer
+            // tensors demand exact ints, bf16 tensors take floats
+            (|| -> Result<String> {
+                let Some((dtype, _)) = coordinator.placement().info(*handle) else {
+                    bail!("unknown tensor handle {}", handle.id());
+                };
+                let decoded: Vec<i64> = match dtype.int_width() {
+                    Some(_) => values
+                        .iter()
+                        .map(|v| match v {
+                            WireNum::Int(i) => Ok(*i),
+                            WireNum::Num(_) => {
+                                Err(anyhow!("non-integer in values for {dtype} tensor"))
+                            }
+                        })
+                        .collect::<Result<_>>()?,
+                    None => values
+                        .iter()
+                        .map(|v| {
+                            let f = match v {
+                                WireNum::Int(i) => *i as f64,
+                                WireNum::Num(n) => *n,
+                            };
+                            bf16_from_f64(f).map(|bits| bits as i64)
+                        })
+                        .collect::<Result<_>>()?,
+                };
+                coordinator.write_tensor(*handle, &decoded)?;
+                Ok(format_ok(id))
+            })()
         }
-        Request::ReadTensor { handle, .. } => {
-            coordinator.read_tensor(*handle).map(|values| format_response(id, &values))
-        }
+        Request::ReadTensor { handle, .. } => (|| -> Result<String> {
+            let Some((dtype, _)) = coordinator.placement().info(*handle) else {
+                bail!("unknown tensor handle {}", handle.id());
+            };
+            let values = coordinator.read_tensor(*handle)?;
+            Ok(format_typed_response(id, dtype, &values))
+        })(),
         Request::Free { handle, .. } => {
             coordinator.free_tensor(*handle).map(|()| format_ok(id))
         }
@@ -526,8 +795,9 @@ enum Work {
 }
 
 /// One submitted batch riding the completer pipeline: the in-flight farm
-/// handles plus each request's `(id, reply channel)`.
-type InFlightEntry = (InFlightBatch, Vec<(u64, Sender<String>)>);
+/// handles plus each request's `(id, dtype, reply channel)` — the dtype
+/// picks the response encoding (ints vs floats).
+type InFlightEntry = (InFlightBatch, Vec<(u64, Dtype, Sender<String>)>);
 
 /// The TCP server: a blocking acceptor thread spawns one reader thread per
 /// connection, all feeding a central batching loop that keeps up to
@@ -587,9 +857,9 @@ impl PimServer {
             let completer = std::thread::spawn(move || {
                 while let Ok((batch, replies)) = inflight_rx.recv() {
                     let results = batch.wait();
-                    for ((id, reply), result) in replies.into_iter().zip(results) {
+                    for ((id, dtype, reply), result) in replies.into_iter().zip(results) {
                         let line = match result {
-                            Ok(values) => format_response(id, &values),
+                            Ok(values) => format_typed_response(id, dtype, &values),
                             Err(e) => format_error(id, &format!("{e}")),
                         };
                         let _ = reply.send(line);
@@ -686,9 +956,9 @@ fn dispatch(
     }
     // split replies out by move — no deep copy of operands
     let mut reqs: Vec<ComputeReq> = Vec::with_capacity(pending.len());
-    let mut replies: Vec<(u64, Sender<String>)> = Vec::with_capacity(pending.len());
+    let mut replies: Vec<(u64, Dtype, Sender<String>)> = Vec::with_capacity(pending.len());
     for (r, s) in pending {
-        replies.push((r.id, s));
+        replies.push((r.id, r.dtype, s));
         reqs.push(r);
     }
     let inflight = batcher.submit_batch(&reqs);
@@ -751,17 +1021,153 @@ mod tests {
         WireOperand::Values(v)
     }
 
+    fn ew_req(id: u64, op: EwOp, w: u32, a: WireOperand, b: WireOperand) -> ComputeReq {
+        ComputeReq { id, kind: ComputeKind::Ew(op), dtype: Dtype::Int { w }, a, b }
+    }
+
     #[test]
     fn parse_request_roundtrip() {
         let r = parse_request(r#"{"id": 3, "op": "mul", "w": 4, "a": [1, -2], "b": [3, 4]}"#)
             .unwrap();
         let Request::Compute(r) = r else { panic!("not a compute request") };
         assert_eq!(r.id, 3);
-        assert_eq!(r.op, EwOp::Mul);
+        assert_eq!(r.kind, ComputeKind::Ew(EwOp::Mul));
+        assert_eq!(r.dtype, Dtype::INT4);
         match r.a {
             WireOperand::Values(a) => assert_eq!(a, vec![1, -2]),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_dtype_field_and_bf16_operands() {
+        // dtype shorthands select the precision per request
+        let r = parse_request(r#"{"id": 1, "op": "add", "dtype": "int4", "a": [7], "b": [-8]}"#)
+            .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.dtype, Dtype::INT4);
+        // bf16 operands are floats, converted to bit patterns at parse
+        let r = parse_request(
+            r#"{"id": 2, "op": "mul", "dtype": "bf16", "a": [1.5, -2], "b": [0.25, 4]}"#,
+        )
+        .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.dtype, Dtype::Bf16);
+        match &r.a {
+            WireOperand::Values(bits) => {
+                assert_eq!(bits[0], SoftBf16::from_f32(1.5).to_bits() as i64);
+                assert_eq!(bits[1], SoftBf16::from_f32(-2.0).to_bits() as i64);
+            }
+            other => panic!("{other:?}"),
+        }
+        // a dot request parses with inline operands only
+        let r = parse_request(
+            r#"{"id": 3, "op": "dot", "dtype": "bf16", "a": [1.5, 2], "b": [2, 0.5]}"#,
+        )
+        .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.kind, ComputeKind::Dot);
+        // int dot works too (and rejects handles)
+        assert!(parse_request(r#"{"id": 4, "op": "dot", "w": 8, "a": [1], "b": [2]}"#).is_ok());
+        assert!(parse_request(
+            r#"{"id": 5, "op": "dot", "w": 8, "a": {"handle": 3}, "b": [2]}"#
+        )
+        .is_err());
+        assert!(
+            parse_request(r#"{"id": 6, "op": "dot", "w": 8, "a": [], "b": []}"#).is_err(),
+            "empty dot rejected"
+        );
+        // bf16 alloc takes floats
+        let r = parse_request(
+            r#"{"id": 7, "op": "alloc", "dtype": "bf16", "values": [1.5, -0.5]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Alloc { dtype, values, .. } => {
+                assert_eq!(dtype, Dtype::Bf16);
+                assert_eq!(values[0], SoftBf16::from_f32(1.5).to_bits() as i64);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bf16_wire_rounding_is_single_step() {
+        // 1.00390625 is the exact midpoint between bf16 0x3F80 and 0x3F81.
+        // The midpoint itself ties to even:
+        assert_eq!(bf16_from_f64(1.00390625).unwrap(), 0x3F80);
+        // A value a hair above the midpoint must round UP — but an f64 ->
+        // f32 -> bf16 cascade first collapses it onto the midpoint (f32
+        // RNE), then ties down to even: the classic double-rounding error.
+        let above = 1.00390625f64 + f64::powi(2.0, -40);
+        assert_eq!(bf16_from_f64(above).unwrap(), 0x3F81, "no double rounding");
+        // ...and a hair below rounds down
+        let below = 1.00390625f64 - f64::powi(2.0, -40);
+        assert_eq!(bf16_from_f64(below).unwrap(), 0x3F80);
+        // exact values and signed zero pass through untouched
+        assert_eq!(bf16_from_f64(1.5).unwrap(), SoftBf16::from_f32(1.5).to_bits());
+        assert_eq!(bf16_from_f64(0.0).unwrap(), 0x0000);
+        assert_eq!(bf16_from_f64(-0.0).unwrap(), 0x8000);
+        // tiny magnitudes underflow to the correctly signed zero
+        assert_eq!(bf16_from_f64(1e-300).unwrap(), 0x0000);
+        assert_eq!(bf16_from_f64(-1e-300).unwrap(), 0x8000);
+    }
+
+    #[test]
+    fn negative_zero_integer_literals_still_parse() {
+        // the JSON literal -0 parses as Num(-0.0) (so bf16 responses keep
+        // its sign) but integer consumers must keep accepting it as zero
+        let r = parse_request(r#"{"id": -0, "op": "add", "w": 8, "a": [-0, 2], "b": [1, -0]}"#)
+            .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.id, 0);
+        match (&r.a, &r.b) {
+            (WireOperand::Values(a), WireOperand::Values(b)) => {
+                assert_eq!(a, &vec![0, 2]);
+                assert_eq!(b, &vec![1, 0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"id": 1, "op": "write", "handle": 3, "values": [-0]}"#).unwrap(),
+            Request::WriteTensor { .. }
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_nonfinite_and_out_of_range_bf16() {
+        // bf16 max is ~3.39e38; anything rounding to infinity is rejected
+        // with a per-request error, never truncated
+        for bad in ["1e39", "-1e39", "3.4e38", "1e999"] {
+            let line =
+                format!(r#"{{"id": 1, "op": "add", "dtype": "bf16", "a": [{bad}], "b": [1]}}"#);
+            let err = parse_request(&line);
+            assert!(err.is_err(), "{bad} must be rejected");
+        }
+        // the largest finite bf16 passes
+        let max_bf16 = SoftBf16::from_bits(0x7F7F).to_f32();
+        let line = format!(
+            r#"{{"id": 1, "op": "add", "dtype": "bf16", "a": [{max_bf16:e}], "b": [1]}}"#
+        );
+        parse_request(&line).unwrap();
+        // dtype/w conflicts and unknown dtypes are rejected
+        assert!(parse_request(
+            r#"{"id": 1, "op": "add", "dtype": "int8", "w": 8, "a": [1], "b": [1]}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id": 1, "op": "add", "dtype": "fp8", "a": [1], "b": [1]}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id": 1, "op": "add", "dtype": "int32", "a": [1], "b": [1]}"#
+        )
+        .is_err(), "wire int widths stay capped at 16");
+        // bf16 compute cannot take handle operands
+        assert!(parse_request(
+            r#"{"id": 1, "op": "add", "dtype": "bf16", "a": {"handle": 2}, "b": [1]}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -776,8 +1182,8 @@ mod tests {
         let r = parse_request(r#"{"id": 2, "op": "alloc", "w": 4, "values": [1, -2], "copies": 3}"#)
             .unwrap();
         match r {
-            Request::Alloc { id, w, values, copies } => {
-                assert_eq!((id, w, copies), (2, 4, 3));
+            Request::Alloc { id, dtype, values, copies } => {
+                assert_eq!((id, dtype, copies), (2, Dtype::INT4, 3));
                 assert_eq!(values, vec![1, -2]);
             }
             other => panic!("{other:?}"),
@@ -864,9 +1270,9 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
         let batcher = Batcher::new(coord.clone());
         let reqs = vec![
-            ComputeReq { id: 1, op: EwOp::Add, w: 8, a: vals(vec![1, 2]), b: vals(vec![10, 20]) },
-            ComputeReq { id: 2, op: EwOp::Mul, w: 8, a: vals(vec![3]), b: vals(vec![5]) },
-            ComputeReq { id: 3, op: EwOp::Add, w: 8, a: vals(vec![7]), b: vals(vec![-7]) },
+            ew_req(1, EwOp::Add, 8, vals(vec![1, 2]), vals(vec![10, 20])),
+            ew_req(2, EwOp::Mul, 8, vals(vec![3]), vals(vec![5])),
+            ew_req(3, EwOp::Add, 8, vals(vec![7]), vals(vec![-7])),
         ];
         let out = batcher.run_batch(&reqs);
         assert_eq!(out[0].as_ref().unwrap(), &vec![11, 22]);
@@ -882,13 +1288,7 @@ mod tests {
         // cap of 200 elements: 4 x 100-element adds -> 2 jobs of 2 requests
         let batcher = Batcher::with_group_cap(coord.clone(), 200);
         let reqs: Vec<ComputeReq> = (0..4)
-            .map(|i| ComputeReq {
-                id: i,
-                op: EwOp::Add,
-                w: 8,
-                a: vals(vec![i as i64; 100]),
-                b: vals(vec![1; 100]),
-            })
+            .map(|i| ew_req(i, EwOp::Add, 8, vals(vec![i as i64; 100]), vals(vec![1; 100])))
             .collect();
         let inflight = batcher.submit_batch(&reqs);
         assert_eq!(inflight.job_count(), 2, "group must split at the cap");
@@ -906,8 +1306,8 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
         let batcher = Batcher::with_group_cap(coord.clone(), 50);
         let reqs = vec![
-            ComputeReq { id: 1, op: EwOp::Add, w: 8, a: vals(vec![1; 500]), b: vals(vec![1; 500]) },
-            ComputeReq { id: 2, op: EwOp::Add, w: 8, a: vals(vec![2; 10]), b: vals(vec![2; 10]) },
+            ew_req(1, EwOp::Add, 8, vals(vec![1; 500]), vals(vec![1; 500])),
+            ew_req(2, EwOp::Add, 8, vals(vec![2; 10]), vals(vec![2; 10])),
         ];
         let inflight = batcher.submit_batch(&reqs);
         assert_eq!(inflight.job_count(), 2, "giant request gets its own job");
@@ -920,17 +1320,11 @@ mod tests {
     fn handle_requests_ride_their_own_jobs() {
         let coord = Arc::new(Coordinator::with_storage(Geometry::G512x40, 2, 96));
         let stored: Vec<i64> = (0..50).map(|i| i - 25).collect();
-        let h = coord.alloc_tensor(&stored, 8).unwrap();
+        let h = coord.alloc_tensor(&stored, Dtype::INT8).unwrap();
         let batcher = Batcher::new(coord.clone());
         let reqs = vec![
-            ComputeReq {
-                id: 1,
-                op: EwOp::Add,
-                w: 8,
-                a: WireOperand::Handle(h),
-                b: vals(vec![1; 50]),
-            },
-            ComputeReq { id: 2, op: EwOp::Add, w: 8, a: vals(vec![5]), b: vals(vec![6]) },
+            ew_req(1, EwOp::Add, 8, WireOperand::Handle(h), vals(vec![1; 50])),
+            ew_req(2, EwOp::Add, 8, vals(vec![5]), vals(vec![6])),
         ];
         let inflight = batcher.submit_batch(&reqs);
         assert_eq!(inflight.job_count(), 2, "handle request cannot coalesce");
@@ -942,14 +1336,14 @@ mod tests {
         assert_eq!(out[1].as_ref().unwrap(), &vec![11]);
         // a bad handle fails only its own request
         let reqs = vec![
-            ComputeReq {
-                id: 3,
-                op: EwOp::Add,
-                w: 8,
-                a: WireOperand::Handle(TensorHandle::from_id(12345)),
-                b: vals(vec![1; 3]),
-            },
-            ComputeReq { id: 4, op: EwOp::Add, w: 8, a: vals(vec![2]), b: vals(vec![2]) },
+            ew_req(
+                3,
+                EwOp::Add,
+                8,
+                WireOperand::Handle(TensorHandle::from_id(12345)),
+                vals(vec![1; 3]),
+            ),
+            ew_req(4, EwOp::Add, 8, vals(vec![2]), vals(vec![2])),
         ];
         let out = batcher.run_batch(&reqs);
         assert!(out[0].is_err());
@@ -1034,6 +1428,113 @@ mod tests {
     }
 
     #[test]
+    fn tcp_bf16_end_to_end() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| -> Json {
+            writeln!(conn, "{line}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap()
+        };
+        let floats = |v: &Json| -> Vec<f32> {
+            v.get("values")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as f32)
+                .collect()
+        };
+        // add: 1.5 + 0.25 = 1.75 (exact in bf16)
+        let v = ask(r#"{"id": 1, "op": "add", "dtype": "bf16", "a": [1.5, -2], "b": [0.25, 0.5]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        assert_eq!(floats(&v), vec![1.75, -1.5]);
+        // sub is served as add-with-negated-b, exactly
+        let v = ask(r#"{"id": 2, "op": "sub", "dtype": "bf16", "a": [1.5], "b": [0.25]}"#);
+        assert_eq!(floats(&v), vec![1.25]);
+        // mul rounds to nearest-even like SoftBf16
+        let v = ask(r#"{"id": 3, "op": "mul", "dtype": "bf16", "a": [1.5], "b": [3]}"#);
+        assert_eq!(floats(&v), vec![4.5]);
+        // dot: sequential MAC over K
+        let v = ask(
+            r#"{"id": 4, "op": "dot", "dtype": "bf16", "a": [1.5, 2, -1], "b": [2, 0.5, 4]}"#,
+        );
+        let expect = SoftBf16::ZERO
+            .mac(SoftBf16::from_f32(1.5), SoftBf16::from_f32(2.0))
+            .mac(SoftBf16::from_f32(2.0), SoftBf16::from_f32(0.5))
+            .mac(SoftBf16::from_f32(-1.0), SoftBf16::from_f32(4.0));
+        assert_eq!(floats(&v), vec![expect.to_f32()]);
+        // a non-finite operand is a per-request error with the request id
+        let v = ask(r#"{"id": 5, "op": "add", "dtype": "bf16", "a": [1e39], "b": [1]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v:?}");
+        assert_eq!(v.get("id").and_then(Json::as_i64), Some(5));
+        // ...and the connection keeps serving
+        let v = ask(r#"{"id": 6, "op": "add", "dtype": "int4", "a": [3], "b": [4]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn tcp_bf16_tensor_lifecycle() {
+        let coord = Arc::new(Coordinator::with_storage(Geometry::G512x40, 2, 96));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| -> Json {
+            writeln!(conn, "{line}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap()
+        };
+        let v = ask(r#"{"id": 1, "op": "alloc", "dtype": "bf16", "values": [1.5, -0.75, 3]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let h = v.get("handle").and_then(Json::as_i64).unwrap();
+        // read returns the floats back exactly
+        let v = ask(&format!(r#"{{"id": 2, "op": "read", "handle": {h}}}"#));
+        let got: Vec<f32> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(got, vec![1.5, -0.75, 3.0]);
+        // write floats, read back
+        let v = ask(&format!(
+            r#"{{"id": 3, "op": "write", "handle": {h}, "values": [0.5, 2, -4]}}"#
+        ));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let v = ask(&format!(r#"{{"id": 4, "op": "read", "handle": {h}}}"#));
+        let got: Vec<f32> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(got, vec![0.5, 2.0, -4.0]);
+        // an out-of-range write is rejected per-request
+        let v = ask(&format!(
+            r#"{{"id": 5, "op": "write", "handle": {h}, "values": [1e39, 0, 0]}}"#
+        ));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v:?}");
+        // stats now breaks jobs down per dtype
+        let v = ask(r#"{"id": 6, "op": "stats"}"#);
+        let stats = v.get("stats").and_then(Json::as_str).unwrap();
+        assert!(stats.contains("dtypes=["), "{stats}");
+        let v = ask(&format!(r#"{{"id": 7, "op": "free", "handle": {h}}}"#));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        server.stop();
+    }
+
+    #[test]
     fn tcp_reports_errors() {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
         let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
@@ -1092,8 +1593,8 @@ mod tests {
         let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
         assert!(coord.kernel_cache().is_empty());
         let server = PimServer::start(coord.clone(), Duration::from_millis(5)).unwrap();
-        // add/sub/mul x widths 2..=16
-        assert_eq!(coord.kernel_cache().len(), 45);
+        // add/sub/mul x widths 2..=16, plus bf16 add/mul
+        assert_eq!(coord.kernel_cache().len(), 47);
         server.stop();
     }
 }

@@ -334,10 +334,10 @@ mod tests {
 
     #[test]
     fn reset_clears_resident_kernel_marker() {
-        use crate::exec::{CompiledKernel, KernelKey, KernelOp};
+        use crate::exec::{CompiledKernel, Dtype, KernelKey, KernelOp};
         let geom = Geometry::G512x40;
         let mut b = CramBlock::new(geom);
-        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, geom));
         assert!(b.ensure_kernel(&kernel).unwrap());
         assert!(!b.ensure_kernel(&kernel).unwrap(), "resident before reset");
         let loads = b.program_loads();
@@ -424,10 +424,10 @@ mod tests {
 
     #[test]
     fn ensure_kernel_skips_reload_when_resident() {
-        use crate::exec::{CompiledKernel, KernelKey, KernelOp};
+        use crate::exec::{CompiledKernel, Dtype, KernelKey, KernelOp};
         let geom = Geometry::G512x40;
         let mut b = CramBlock::new(geom);
-        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 4, geom));
+        let kernel = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, geom));
         assert!(b.ensure_kernel(&kernel).unwrap());
         assert_eq!(b.program_loads(), 1);
         assert!(!b.ensure_kernel(&kernel).unwrap(), "resident kernel must not reload");

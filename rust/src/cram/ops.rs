@@ -24,7 +24,7 @@
 use super::{CramBlock, Mode};
 use crate::bitline::transpose;
 use crate::ctrl::CycleStats;
-use crate::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use crate::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
 use crate::util::SoftBf16;
 use anyhow::{ensure, Result};
 
@@ -198,14 +198,15 @@ pub fn int_addsub(
     subtract: bool,
 ) -> Result<OpResult<i64>> {
     let op = if subtract { KernelOp::IntSub } else { KernelOp::IntAdd };
-    let kernel = KernelCache::global().get(KernelKey::int_ew_full(op, w, block.geometry()));
+    let kernel = KernelCache::global()
+        .get(KernelKey::int_ew_full(op, Dtype::Int { w }, block.geometry()));
     int_ew_compiled(block, &kernel, a, b)
 }
 
 /// Elementwise signed multiply (W x W -> 2W) on one block.
 pub fn int_mul(block: &mut CramBlock, a: &[i64], b: &[i64], w: u32) -> Result<OpResult<i64>> {
     let kernel = KernelCache::global()
-        .get(KernelKey::int_ew_full(KernelOp::IntMul, w, block.geometry()));
+        .get(KernelKey::int_ew_full(KernelOp::IntMul, Dtype::Int { w }, block.geometry()));
     int_ew_compiled(block, &kernel, a, b)
 }
 
@@ -228,7 +229,7 @@ pub fn int_dot(
         a.len()
     );
     let kernel = KernelCache::global()
-        .get(KernelKey::int_dot(w, acc_w, a.len(), block.geometry()));
+        .get(KernelKey::int_dot(Dtype::Int { w }, acc_w, a.len(), block.geometry()));
     int_dot_compiled(block, &kernel, a, b)
 }
 
@@ -327,14 +328,14 @@ mod tests {
     fn compiled_path_skips_reload_on_second_op() {
         let geom = Geometry::G512x40;
         let cache = KernelCache::new();
-        let kernel = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
+        let kernel = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, geom));
         let mut b = CramBlock::new(geom);
         let r1 = int_ew_compiled(&mut b, &kernel, &[1, 2], &[3, 4]).unwrap();
         assert_eq!(r1.values, vec![4, 6]);
         let loads = b.program_loads();
         assert_eq!(loads, 1);
         // same kernel again: zero re-assembly (cache) and zero reload (residency)
-        let kernel2 = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
+        let kernel2 = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, geom));
         let r2 = int_ew_compiled(&mut b, &kernel2, &[10, -5], &[1, 5]).unwrap();
         assert_eq!(r2.values, vec![11, 0]);
         assert_eq!(b.program_loads(), loads, "second op must not reload imem");
@@ -349,8 +350,8 @@ mod tests {
         // full-block sweep the legacy path uses
         let geom = Geometry::G512x40;
         let cache = KernelCache::new();
-        let sized = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 40, geom));
-        let full = cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, geom));
+        let sized = cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, geom));
+        let full = cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, geom));
         let a = vec![3i64; 40];
         let b = vec![4i64; 40];
         let mut blk = CramBlock::new(geom);
@@ -364,7 +365,8 @@ mod tests {
     #[test]
     fn kernel_geometry_mismatch_rejected() {
         let cache = KernelCache::new();
-        let kernel = cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, Geometry::G1024x20));
+        let kernel =
+            cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, Geometry::G1024x20));
         let mut b = CramBlock::new(Geometry::G512x40);
         assert!(int_ew_compiled(&mut b, &kernel, &[1], &[2]).is_err());
     }
@@ -382,7 +384,7 @@ mod tests {
     fn dot_kernel_k_mismatch_rejected() {
         let cache = KernelCache::new();
         let geom = Geometry::G512x40;
-        let kernel = cache.get(KernelKey::int_dot(8, 32, 4, geom));
+        let kernel = cache.get(KernelKey::int_dot(Dtype::INT8, 32, 4, geom));
         let mut b = CramBlock::new(geom);
         let a = vec![vec![1i64; 4]; 3]; // K = 3, kernel wants 4
         assert!(int_dot_compiled(&mut b, &kernel, &a, &a).is_err());

@@ -24,10 +24,16 @@
 //! [`crate::exec::PlacementMap`]; this type only does the row geometry.
 //!
 //! Resident tensors use the same transposed layout as staged operands
-//! (element `e` in column `e % cols`, slot `e / cols`, `w` rows per slot),
-//! via the [`write_tensor_rows`] / [`read_tensor_rows`] helpers.
+//! (element `e` in column `e % cols`, slot `e / cols`, [`Dtype::bits`] rows
+//! per slot), via the [`write_tensor_rows`] / [`read_tensor_rows`] helpers.
+//! The [`Dtype`] decides both the row stride and the value encoding: int
+//! tensors store two's-complement values (sign-extended on read), bf16
+//! tensors store raw 16-bit patterns (an int4 tensor therefore occupies
+//! exactly half the rows — and half the accounted bytes — of the same
+//! tensor at int8).
 
 use crate::bitline::{transpose, BitlineArray, Geometry};
+use crate::exec::Dtype;
 use crate::util::mask;
 use anyhow::{ensure, Result};
 
@@ -37,16 +43,16 @@ use anyhow::{ensure, Result};
 /// independently (see [`crate::exec::PlacementMap`]).
 pub type RegionId = (u64, u32);
 
-/// Rows per column one tensor of `len` `w`-bit values occupies (see module
+/// Rows per column one tensor of `len` `dtype` values occupies (see module
 /// docs for the layout).
-pub fn tensor_rows(geom: Geometry, w: u32, len: usize) -> usize {
-    len.div_ceil(geom.cols()) * w as usize
+pub fn tensor_rows(geom: Geometry, dtype: Dtype, len: usize) -> usize {
+    len.div_ceil(geom.cols()) * dtype.bits() as usize
 }
 
-/// Check every value fits a signed `w`-bit integer — the payload
-/// validation shared by the farm's tensor control plane and the server's
-/// wire layer, so the width semantics can never diverge between them.
-pub fn check_int_range(values: &[i64], w: u32) -> Result<()> {
+/// Check every value fits a signed `w`-bit integer. Internal helper:
+/// every public entry point goes through [`Dtype::check_values`], so the
+/// element-type semantics live in one place.
+pub(crate) fn check_int_range(values: &[i64], w: u32) -> Result<()> {
     let lim = 1i64 << (w - 1);
     ensure!(
         values.iter().all(|&v| (-lim..lim).contains(&v)),
@@ -55,14 +61,25 @@ pub fn check_int_range(values: &[i64], w: u32) -> Result<()> {
     Ok(())
 }
 
-/// Write a tensor's values into its region (transposed, stride `w`).
-pub fn write_tensor_rows(arr: &mut BitlineArray, values: &[i64], w: u32, base: usize) {
-    transpose::store_ints(arr, values, w, base, w as usize);
+/// Write a tensor's values into its region (transposed, stride
+/// `dtype.bits()`). bf16 values are raw bit patterns, which the masked
+/// integer store writes verbatim.
+pub fn write_tensor_rows(arr: &mut BitlineArray, values: &[i64], dtype: Dtype, base: usize) {
+    let bits = dtype.bits();
+    transpose::store_ints(arr, values, bits, base, bits as usize);
 }
 
-/// Read a whole tensor back from its region.
-pub fn read_tensor_rows(arr: &BitlineArray, len: usize, w: u32, base: usize) -> Vec<i64> {
-    transpose::load_ints(arr, len, w, base, w as usize)
+/// Read a whole tensor back from its region: sign-extended for integer
+/// dtypes, raw 16-bit patterns for bf16.
+pub fn read_tensor_rows(arr: &BitlineArray, len: usize, dtype: Dtype, base: usize) -> Vec<i64> {
+    let bits = dtype.bits();
+    match dtype {
+        Dtype::Int { .. } => transpose::load_ints(arr, len, bits, base, bits as usize),
+        Dtype::Bf16 => transpose::load_uints(arr, len, bits, base, bits as usize)
+            .into_iter()
+            .map(|b| b as i64)
+            .collect(),
+    }
 }
 
 /// Write elements `offset .. offset + values.len()` of a tensor stored at
@@ -74,10 +91,11 @@ pub fn read_tensor_rows(arr: &BitlineArray, len: usize, w: u32, base: usize) -> 
 pub fn write_tensor_slice(
     arr: &mut BitlineArray,
     values: &[i64],
-    w: u32,
+    dtype: Dtype,
     base: usize,
     offset: usize,
 ) {
+    let w = dtype.bits();
     let cols = arr.cols();
     for (i, &v) in values.iter().enumerate() {
         let e = offset + i;
@@ -94,7 +112,7 @@ pub fn write_tensor_slice(
 /// slots below the slice's first row.
 pub fn read_tensor_slice(
     arr: &BitlineArray,
-    w: u32,
+    dtype: Dtype,
     base: usize,
     offset: usize,
     len: usize,
@@ -102,8 +120,8 @@ pub fn read_tensor_slice(
     let cols = arr.cols();
     let slot0 = offset / cols;
     let skip = offset - slot0 * cols;
-    let row0 = base + slot0 * w as usize;
-    let mut vals = transpose::load_ints(arr, skip + len, w, row0, w as usize);
+    let row0 = base + slot0 * dtype.bits() as usize;
+    let mut vals = read_tensor_rows(arr, skip + len, dtype, row0);
     vals.drain(..skip);
     vals
 }
@@ -214,13 +232,22 @@ impl BlockStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::SoftBf16;
 
     #[test]
     fn tensor_rows_rounds_up_to_column_slots() {
         let g = Geometry::G512x40;
-        assert_eq!(tensor_rows(g, 8, 40), 8); // one full slot
-        assert_eq!(tensor_rows(g, 8, 41), 16); // spills into a second slot
-        assert_eq!(tensor_rows(g, 4, 1), 4);
+        assert_eq!(tensor_rows(g, Dtype::INT8, 40), 8); // one full slot
+        assert_eq!(tensor_rows(g, Dtype::INT8, 41), 16); // spills into a second slot
+        assert_eq!(tensor_rows(g, Dtype::INT4, 1), 4);
+        assert_eq!(tensor_rows(g, Dtype::Bf16, 40), 16);
+        // the packed layouts: int4 takes exactly half the rows of int8
+        for len in [1usize, 40, 41, 400] {
+            assert_eq!(
+                tensor_rows(g, Dtype::INT4, len) * 2,
+                tensor_rows(g, Dtype::INT8, len)
+            );
+        }
     }
 
     #[test]
@@ -268,29 +295,51 @@ mod tests {
     #[test]
     fn slice_reads_match_full_reads() {
         let mut arr = BitlineArray::new(Geometry::G512x40);
+        let dt = Dtype::Int { w: 6 };
         let vals: Vec<i64> = (0..100).map(|i| (i % 31) - 15).collect();
-        write_tensor_rows(&mut arr, &vals, 6, 200);
-        assert_eq!(read_tensor_rows(&arr, 100, 6, 200), vals);
-        assert_eq!(read_tensor_slice(&arr, 6, 200, 0, 100), vals);
-        assert_eq!(read_tensor_slice(&arr, 6, 200, 37, 20), vals[37..57].to_vec());
-        assert_eq!(read_tensor_slice(&arr, 6, 200, 80, 20), vals[80..100].to_vec());
-        assert_eq!(read_tensor_slice(&arr, 6, 200, 99, 1), vals[99..].to_vec());
+        write_tensor_rows(&mut arr, &vals, dt, 200);
+        assert_eq!(read_tensor_rows(&arr, 100, dt, 200), vals);
+        assert_eq!(read_tensor_slice(&arr, dt, 200, 0, 100), vals);
+        assert_eq!(read_tensor_slice(&arr, dt, 200, 37, 20), vals[37..57].to_vec());
+        assert_eq!(read_tensor_slice(&arr, dt, 200, 80, 20), vals[80..100].to_vec());
+        assert_eq!(read_tensor_slice(&arr, dt, 200, 99, 1), vals[99..].to_vec());
     }
 
     #[test]
     fn slice_writes_merge_without_clobbering() {
         let mut arr = BitlineArray::new(Geometry::G512x40);
+        let dt = Dtype::Int { w: 6 };
         let mut vals: Vec<i64> = (0..100).map(|i| (i % 29) - 14).collect();
-        write_tensor_rows(&mut arr, &vals, 6, 120);
+        write_tensor_rows(&mut arr, &vals, dt, 120);
         // overwrite an unaligned interior slice (spans a slot boundary)
         let patch: Vec<i64> = (0..30).map(|i| 14 - (i % 29)).collect();
-        write_tensor_slice(&mut arr, &patch, 6, 120, 25);
+        write_tensor_slice(&mut arr, &patch, dt, 120, 25);
         vals[25..55].copy_from_slice(&patch);
-        assert_eq!(read_tensor_rows(&arr, 100, 6, 120), vals);
+        assert_eq!(read_tensor_rows(&arr, 100, dt, 120), vals);
         // a tail patch reaching the last element
-        write_tensor_slice(&mut arr, &[-3, 7], 6, 120, 98);
+        write_tensor_slice(&mut arr, &[-3, 7], dt, 120, 98);
         vals[98] = -3;
         vals[99] = 7;
-        assert_eq!(read_tensor_rows(&arr, 100, 6, 120), vals);
+        assert_eq!(read_tensor_rows(&arr, 100, dt, 120), vals);
+    }
+
+    #[test]
+    fn bf16_patterns_roundtrip_without_sign_extension() {
+        let mut arr = BitlineArray::new(Geometry::G512x40);
+        // patterns with the top bit set (negative floats) must read back
+        // as raw unsigned patterns, not sign-extended integers
+        let vals: Vec<i64> = [1.5f32, -2.25, 0.0, -0.0, 3.0e38, -1.0e-38]
+            .iter()
+            .map(|&x| SoftBf16::from_f32(x).to_bits() as i64)
+            .collect();
+        write_tensor_rows(&mut arr, &vals, Dtype::Bf16, 64);
+        assert_eq!(read_tensor_rows(&arr, vals.len(), Dtype::Bf16, 64), vals);
+        assert_eq!(read_tensor_slice(&arr, Dtype::Bf16, 64, 1, 3), vals[1..4].to_vec());
+        // a slice write of patterns merges like the int path
+        write_tensor_slice(&mut arr, &[0xFFFF, 0x8000], Dtype::Bf16, 64, 2);
+        let got = read_tensor_rows(&arr, vals.len(), Dtype::Bf16, 64);
+        assert_eq!(got[2], 0xFFFF);
+        assert_eq!(got[3], 0x8000);
+        assert_eq!(got[0], vals[0]);
     }
 }

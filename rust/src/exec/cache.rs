@@ -95,12 +95,12 @@ impl KernelCache {
 mod tests {
     use super::*;
     use crate::bitline::Geometry;
-    use crate::exec::KernelOp;
+    use crate::exec::{Dtype, KernelOp};
 
     #[test]
     fn second_lookup_is_a_hit_sharing_one_compilation() {
         let cache = KernelCache::new();
-        let key = KernelKey::int_ew_full(KernelOp::IntAdd, 8, Geometry::G512x40);
+        let key = KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, Geometry::G512x40);
         let a = cache.get(key);
         let b = cache.get(key);
         assert!(Arc::ptr_eq(&a, &b), "cache must share one compilation");
@@ -113,10 +113,10 @@ mod tests {
     fn distinct_keys_compile_distinct_kernels() {
         let cache = KernelCache::new();
         let g = Geometry::G512x40;
-        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 8, g));
-        cache.get(KernelKey::int_ew_full(KernelOp::IntSub, 8, g));
-        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, 4, g));
-        cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1, g));
+        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, g));
+        cache.get(KernelKey::int_ew_full(KernelOp::IntSub, Dtype::INT8, g));
+        cache.get(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, g));
+        cache.get(KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 1, g));
         assert_eq!(cache.len(), 4);
         assert_eq!(cache.stats().misses, 4);
         assert_eq!(cache.stats().hit_rate(), 0.0);
@@ -125,7 +125,7 @@ mod tests {
     #[test]
     fn peek_never_compiles() {
         let cache = KernelCache::new();
-        let key = KernelKey::int_ew_full(KernelOp::IntMul, 4, Geometry::G1024x20);
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT4, Geometry::G1024x20);
         assert!(cache.peek(key).is_none());
         cache.get(key);
         assert!(cache.peek(key).is_some());

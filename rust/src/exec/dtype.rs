@@ -1,0 +1,175 @@
+//! First-class element types: the paper's *adaptable precision* claim as a
+//! type.
+//!
+//! Compute RAMs evaluate the same operations across int4, int8 and bfloat16
+//! (paper §V): precision is a property of the *request*, not of the block.
+//! [`Dtype`] is the single source of truth for everything that depends on
+//! the element type — the row stride of the transposed storage layout, the
+//! packed host-byte cost of moving a slice across the host/fabric boundary
+//! (two int4 values per byte, two bytes per bf16 value), the payload
+//! validation rules, and the wire spelling (`"int4"` / `"int8"` /
+//! `"bf16"`). Every layer from the server's JSON parser down to the
+//! per-block row allocator takes a `Dtype` instead of a bare `w: u32`, so
+//! the width semantics can never diverge between layers.
+//!
+//! Integer values travel as `i64` in the signed range of the width; bf16
+//! values travel as `i64` **raw bit patterns** (`0..=0xFFFF`), converted at
+//! the edges ([`crate::util::SoftBf16`] on the host, IEEE-754 fields in the
+//! array rows).
+
+use anyhow::{bail, ensure, Result};
+
+/// Element type of a tensor, operand or kernel.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub enum Dtype {
+    /// Signed two's-complement integer of `w` bits (2..=32).
+    Int { w: u32 },
+    /// bfloat16 (1 sign + 8 exponent + 7 mantissa bits).
+    Bf16,
+}
+
+impl Dtype {
+    pub const INT4: Dtype = Dtype::Int { w: 4 };
+    pub const INT8: Dtype = Dtype::Int { w: 8 };
+    pub const INT16: Dtype = Dtype::Int { w: 16 };
+
+    /// Bits per element — the row stride of the transposed tensor layout
+    /// (one bit per row) and the packed wire width.
+    pub fn bits(self) -> u32 {
+        match self {
+            Dtype::Int { w } => w,
+            Dtype::Bf16 => 16,
+        }
+    }
+
+    /// Integer width, or `None` for bf16.
+    pub fn int_width(self) -> Option<u32> {
+        match self {
+            Dtype::Int { w } => Some(w),
+            Dtype::Bf16 => None,
+        }
+    }
+
+    pub fn is_int(self) -> bool {
+        matches!(self, Dtype::Int { .. })
+    }
+
+    /// Packed bytes a slice of `len` elements occupies crossing the host
+    /// boundary: sub-byte widths pack (two int4 values per byte), bf16 is
+    /// two bytes per value. This is the unit of every `host_bytes_in/out`
+    /// counter, so an int4 tensor honestly costs half an int8 one.
+    pub fn slice_bytes(self, len: usize) -> u64 {
+        ((len as u64) * self.bits() as u64).div_ceil(8)
+    }
+
+    /// Validate a payload carried as `i64`s: integers must fit the signed
+    /// range; bf16 values must be raw 16-bit patterns. The single entry
+    /// point for payload validation — the farm's tensor control plane and
+    /// the server's wire layer both come through here, so the width
+    /// semantics can never diverge between them.
+    pub fn check_values(self, values: &[i64]) -> Result<()> {
+        match self {
+            Dtype::Int { w } => crate::cram::store::check_int_range(values, w)?,
+            Dtype::Bf16 => {
+                ensure!(
+                    values.iter().all(|&v| (0..=0xFFFF).contains(&v)),
+                    "bf16 payload must be raw 16-bit patterns"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the wire spelling: `"bf16"`, or `"intN"` for N in 2..=32
+    /// (`"int4"` / `"int8"` being the shorthands the server documents).
+    pub fn parse(s: &str) -> Result<Dtype> {
+        if s == "bf16" {
+            return Ok(Dtype::Bf16);
+        }
+        if let Some(num) = s.strip_prefix("int") {
+            // reject "int+4", "int 4", "int04" style spellings: the wire
+            // name must round-trip through Display exactly
+            if !num.is_empty()
+                && num.chars().all(|c| c.is_ascii_digit())
+                && !(num.len() > 1 && num.starts_with('0'))
+            {
+                if let Ok(w) = num.parse::<u32>() {
+                    ensure!((2..=32).contains(&w), "int width {w} outside 2..=32");
+                    return Ok(Dtype::Int { w });
+                }
+            }
+        }
+        bail!("unknown dtype {s:?} (expected \"intN\" or \"bf16\")");
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dtype::Int { w } => write!(f, "int{w}"),
+            Dtype::Bf16 => write!(f, "bf16"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_widths() {
+        assert_eq!(Dtype::INT4.bits(), 4);
+        assert_eq!(Dtype::INT8.bits(), 8);
+        assert_eq!(Dtype::Bf16.bits(), 16);
+        assert_eq!(Dtype::Int { w: 6 }.int_width(), Some(6));
+        assert_eq!(Dtype::Bf16.int_width(), None);
+        assert!(Dtype::INT4.is_int());
+        assert!(!Dtype::Bf16.is_int());
+    }
+
+    #[test]
+    fn packed_slice_bytes() {
+        // two int4 values per byte — the sub-byte packing the paper's
+        // adaptable blocks make worthwhile
+        assert_eq!(Dtype::INT4.slice_bytes(100), 50);
+        assert_eq!(Dtype::INT4.slice_bytes(101), 51, "odd tail rounds up");
+        assert_eq!(Dtype::INT8.slice_bytes(100), 100);
+        assert_eq!(Dtype::Bf16.slice_bytes(100), 200);
+        assert_eq!(Dtype::Int { w: 2 }.slice_bytes(7), 2);
+        assert_eq!(Dtype::INT4.slice_bytes(0), 0);
+        // int4 is exactly half of int8 at even lengths
+        for len in [2usize, 40, 1680] {
+            assert_eq!(
+                Dtype::INT4.slice_bytes(len) * 2,
+                Dtype::INT8.slice_bytes(len)
+            );
+        }
+    }
+
+    #[test]
+    fn value_validation_per_dtype() {
+        assert!(Dtype::INT8.check_values(&[-128, 127]).is_ok());
+        assert!(Dtype::INT8.check_values(&[128]).is_err());
+        assert!(Dtype::INT4.check_values(&[-9]).is_err());
+        assert!(Dtype::Bf16.check_values(&[0, 0xFFFF, 0x3F80]).is_ok());
+        assert!(Dtype::Bf16.check_values(&[0x1_0000]).is_err());
+        assert!(Dtype::Bf16.check_values(&[-1]).is_err());
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        assert_eq!(Dtype::parse("int4").unwrap(), Dtype::INT4);
+        assert_eq!(Dtype::parse("int8").unwrap(), Dtype::INT8);
+        assert_eq!(Dtype::parse("bf16").unwrap(), Dtype::Bf16);
+        assert_eq!(Dtype::parse("int12").unwrap(), Dtype::Int { w: 12 });
+        assert!(Dtype::parse("int1").is_err());
+        assert!(Dtype::parse("int33").is_err());
+        assert!(Dtype::parse("int04").is_err());
+        assert!(Dtype::parse("int").is_err());
+        assert!(Dtype::parse("fp16").is_err());
+        assert!(Dtype::parse("").is_err());
+        for d in [Dtype::INT4, Dtype::INT8, Dtype::Int { w: 12 }, Dtype::Bf16] {
+            assert_eq!(Dtype::parse(&d.to_string()).unwrap(), d);
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Kernel identity ([`KernelKey`]) and the compiled artifact
 //! ([`CompiledKernel`]).
 
+use super::Dtype;
 use crate::bitline::Geometry;
 use crate::ucode::{self, bf16 as ucbf16, DotLayout, Program, VecLayout};
 use anyhow::{bail, Result};
@@ -45,8 +46,9 @@ fn ew_result_w(op: KernelOp, w: u32) -> u32 {
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct KernelKey {
     pub op: KernelOp,
-    /// Operand width in bits (16 for the bf16 ops).
-    pub w: u32,
+    /// Element type the kernel computes on ([`Dtype::Bf16`] for the bf16
+    /// ops; the single source of truth for the operand width).
+    pub dtype: Dtype,
     /// Tuple slots per column the program covers. Sizing the program to the
     /// batch (instead of always sweeping the full block) is what makes
     /// small repeated requests cheap; a full-block key is the special case
@@ -57,27 +59,41 @@ pub struct KernelKey {
 }
 
 impl KernelKey {
+    /// Integer width of the key's dtype (the int kernel generators need it;
+    /// the constructors guarantee it exists).
+    fn int_w(&self) -> u32 {
+        self.dtype.int_width().expect("integer kernel key has an int dtype")
+    }
+
     /// Full-block integer elementwise kernel (pre-refactor semantics: the
     /// program sweeps every tuple slot of the geometry).
-    pub fn int_ew_full(op: KernelOp, w: u32, geometry: Geometry) -> KernelKey {
+    pub fn int_ew_full(op: KernelOp, dtype: Dtype, geometry: Geometry) -> KernelKey {
         assert!(op.is_int_ew(), "not an integer elementwise op: {op:?}");
+        let w = dtype.int_width().expect("integer elementwise kernel needs an int dtype");
         let l = VecLayout::new(geometry, w, ew_result_w(op, w));
-        KernelKey { op, w, tuples: l.ops_per_col as u16, geometry }
+        KernelKey { op, dtype, tuples: l.ops_per_col as u16, geometry }
     }
 
     /// Integer elementwise kernel sized to `n_ops` staged elements.
-    pub fn int_ew_sized(op: KernelOp, w: u32, n_ops: usize, geometry: Geometry) -> KernelKey {
+    pub fn int_ew_sized(
+        op: KernelOp,
+        dtype: Dtype,
+        n_ops: usize,
+        geometry: Geometry,
+    ) -> KernelKey {
         assert!(op.is_int_ew(), "not an integer elementwise op: {op:?}");
+        let w = dtype.int_width().expect("integer elementwise kernel needs an int dtype");
         let l = VecLayout::new(geometry, w, ew_result_w(op, w));
         let tuples = n_ops.div_ceil(geometry.cols()).clamp(1, l.ops_per_col);
-        KernelKey { op, w, tuples: tuples as u16, geometry }
+        KernelKey { op, dtype, tuples: tuples as u16, geometry }
     }
 
-    /// Dot-product kernel: `k` pairs of width `w`, `acc_w`-bit accumulator.
-    pub fn int_dot(w: u32, acc_w: u32, k: usize, geometry: Geometry) -> KernelKey {
+    /// Dot-product kernel: `k` pairs of `dtype`, `acc_w`-bit accumulator.
+    pub fn int_dot(dtype: Dtype, acc_w: u32, k: usize, geometry: Geometry) -> KernelKey {
+        assert!(dtype.is_int(), "integer dot kernel needs an int dtype");
         KernelKey {
             op: KernelOp::IntDot { acc_w, k: k as u16 },
-            w,
+            dtype,
             tuples: 1,
             geometry,
         }
@@ -86,7 +102,12 @@ impl KernelKey {
     /// Full-block bfloat16 elementwise kernel.
     pub fn bf16_ew_full(mul: bool, geometry: Geometry) -> KernelKey {
         let op = if mul { KernelOp::Bf16Mul } else { KernelOp::Bf16Add };
-        KernelKey { op, w: 16, tuples: ucbf16::max_tuples(geometry) as u16, geometry }
+        KernelKey {
+            op,
+            dtype: Dtype::Bf16,
+            tuples: ucbf16::max_tuples(geometry) as u16,
+            geometry,
+        }
     }
 
     /// bfloat16 elementwise kernel sized to `n_ops` staged elements.
@@ -94,17 +115,26 @@ impl KernelKey {
         let op = if mul { KernelOp::Bf16Mul } else { KernelOp::Bf16Add };
         let max = ucbf16::max_tuples(geometry);
         let tuples = n_ops.div_ceil(geometry.cols()).clamp(1, max);
-        KernelKey { op, w: 16, tuples: tuples as u16, geometry }
+        KernelKey { op, dtype: Dtype::Bf16, tuples: tuples as u16, geometry }
     }
 
-    /// Two-phase bfloat16 MAC kernel (always full-block).
+    /// Two-phase bfloat16 MAC kernel (full-block).
     pub fn bf16_mac(geometry: Geometry) -> KernelKey {
         KernelKey {
             op: KernelOp::Bf16Mac,
-            w: 16,
+            dtype: Dtype::Bf16,
             tuples: ucbf16::max_tuples(geometry) as u16,
             geometry,
         }
+    }
+
+    /// Two-phase bfloat16 MAC kernel sized to `n_ops` staged elements
+    /// (the bf16 dot/matmul planner runs one MAC wave per K step, so the
+    /// tuple count is the dot *batch* width, not K).
+    pub fn bf16_mac_sized(n_ops: usize, geometry: Geometry) -> KernelKey {
+        let max = ucbf16::max_tuples(geometry);
+        let tuples = n_ops.div_ceil(geometry.cols()).clamp(1, max);
+        KernelKey { op: KernelOp::Bf16Mac, dtype: Dtype::Bf16, tuples: tuples as u16, geometry }
     }
 }
 
@@ -143,19 +173,19 @@ impl CompiledKernel {
         let tuples = key.tuples as usize;
         let (phases, layout) = match key.op {
             KernelOp::IntAdd => {
-                let (p, l) = ucode::int::add_sized(geom, key.w, tuples);
+                let (p, l) = ucode::int::add_sized(geom, key.int_w(), tuples);
                 (vec![p], KernelLayout::Vec(l))
             }
             KernelOp::IntSub => {
-                let (p, l) = ucode::int::sub_sized(geom, key.w, tuples);
+                let (p, l) = ucode::int::sub_sized(geom, key.int_w(), tuples);
                 (vec![p], KernelLayout::Vec(l))
             }
             KernelOp::IntMul => {
-                let (p, l) = ucode::int::mul_sized(geom, key.w, tuples);
+                let (p, l) = ucode::int::mul_sized(geom, key.int_w(), tuples);
                 (vec![p], KernelLayout::Vec(l))
             }
             KernelOp::IntDot { acc_w, k } => {
-                let (p, l) = ucode::int::dot(geom, key.w, acc_w, k as usize);
+                let (p, l) = ucode::int::dot(geom, key.int_w(), acc_w, k as usize);
                 (vec![p], KernelLayout::Dot(l))
             }
             KernelOp::Bf16Add => {
@@ -167,7 +197,7 @@ impl CompiledKernel {
                 (vec![p], KernelLayout::Vec(l))
             }
             KernelOp::Bf16Mac => {
-                let (phases, l) = ucbf16::mac(geom);
+                let (phases, l) = ucbf16::mac_sized(geom, tuples);
                 (phases, KernelLayout::Vec(l))
             }
         };
@@ -237,7 +267,7 @@ mod tests {
 
     #[test]
     fn full_key_matches_layout_capacity() {
-        let k = KernelKey::int_ew_full(KernelOp::IntAdd, 4, Geometry::G512x40);
+        let k = KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, Geometry::G512x40);
         assert_eq!(k.tuples, 42); // 512 / 12
         let c = CompiledKernel::compile(k);
         assert_eq!(c.capacity(), 1680);
@@ -246,19 +276,22 @@ mod tests {
     #[test]
     fn sized_key_rounds_up_to_column_slots() {
         let g = Geometry::G512x40;
-        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 41, g);
+        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 41, g);
         assert_eq!(k.tuples, 2); // 41 ops > 1 slot of 40 columns
         assert_eq!(CompiledKernel::compile(k).capacity(), 80);
         // sizing never exceeds the geometry
-        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 1_000_000, g);
+        let k = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 1_000_000, g);
         assert_eq!(k.tuples, 21);
         // and never goes below one slot
-        assert_eq!(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 0, g).tuples, 1);
+        assert_eq!(
+            KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 0, g).tuples,
+            1
+        );
     }
 
     #[test]
     fn compile_ids_are_unique_even_for_equal_keys() {
-        let key = KernelKey::int_ew_full(KernelOp::IntMul, 4, Geometry::G512x40);
+        let key = KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT4, Geometry::G512x40);
         let a = CompiledKernel::compile(key);
         let b = CompiledKernel::compile(key);
         assert_eq!(a.key, b.key);
@@ -268,7 +301,7 @@ mod tests {
 
     #[test]
     fn dot_key_carries_k_and_acc_width() {
-        let key = KernelKey::int_dot(8, 32, 30, Geometry::G512x40);
+        let key = KernelKey::int_dot(Dtype::INT8, 32, 30, Geometry::G512x40);
         let c = CompiledKernel::compile(key);
         let l = c.dot_layout().unwrap();
         assert_eq!(l.k, 30);
@@ -280,16 +313,30 @@ mod tests {
     fn mac_kernel_has_two_phases() {
         let c = CompiledKernel::compile(KernelKey::bf16_mac(Geometry::G512x40));
         assert_eq!(c.phases.len(), 2);
+        assert_eq!(c.key.dtype, Dtype::Bf16);
+    }
+
+    #[test]
+    fn sized_mac_kernel_shrinks_its_body() {
+        let g = Geometry::G512x40;
+        let sized = CompiledKernel::compile(KernelKey::bf16_mac_sized(80, g));
+        assert_eq!(sized.key.tuples, 2, "80 MACs / 40 columns");
+        assert_eq!(sized.body_rows(), 2 * 48);
+        assert_eq!(sized.phases.len(), 2);
+        let full = CompiledKernel::compile(KernelKey::bf16_mac(g));
+        assert!(full.body_rows() > sized.body_rows());
     }
 
     #[test]
     fn body_rows_tracks_sized_layouts() {
         let g = Geometry::G512x40;
-        let sized = CompiledKernel::compile(KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, g));
+        let sized =
+            CompiledKernel::compile(KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 80, g));
         assert_eq!(sized.body_rows(), 2 * 24, "2 tuples x 24 rows");
-        let full = CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, 8, g));
+        let full =
+            CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, g));
         assert_eq!(full.body_rows(), 21 * 24);
-        let dot = CompiledKernel::compile(KernelKey::int_dot(8, 32, 10, g));
+        let dot = CompiledKernel::compile(KernelKey::int_dot(Dtype::INT8, 32, 10, g));
         assert_eq!(dot.body_rows(), 10 * 16 + 32);
     }
 }

@@ -40,11 +40,13 @@
 //! ```
 
 pub mod cache;
+pub mod dtype;
 pub mod kernel;
 pub mod placement;
 pub mod residency;
 
 pub use cache::{CacheStats, KernelCache};
+pub use dtype::Dtype;
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
 pub use placement::{
     DataStats, PlacementMap, SlicePart, SliceResolution, TensorHandle, TensorSlice,

@@ -33,6 +33,7 @@
 //! blocks. All mutating entry points are serialized by the farm's
 //! control-plane lock; workers only call [`PlacementMap::resolve_slice`].
 
+use super::Dtype;
 use crate::bitline::Geometry;
 use crate::cram::store::{tensor_rows, BlockStore, RegionId};
 use crate::ucode::bf16::SCRATCH_ROWS;
@@ -123,8 +124,8 @@ pub enum SlicePart {
 /// How a slice of a resident tensor resolves on one worker.
 #[derive(Clone, Debug)]
 pub enum SliceResolution {
-    /// Gather these parts in order; widths are uniform per tensor.
-    Parts { w: u32, parts: Vec<SlicePart> },
+    /// Gather these parts in order; the element type is uniform per tensor.
+    Parts { dtype: Dtype, parts: Vec<SlicePart> },
     /// The slice exceeds the tensor's length.
     OutOfRange { len: usize },
     /// Unknown or freed handle.
@@ -174,7 +175,7 @@ struct Shard {
 }
 
 struct Entry {
-    w: u32,
+    dtype: Dtype,
     len: usize,
     /// Ordered, contiguous, covering `0..len`.
     shards: Vec<Shard>,
@@ -272,7 +273,7 @@ impl PlacementMap {
     /// Register a new single-shard tensor (no homes yet) regardless of
     /// size. Kept for planners and tests that manage placement themselves;
     /// the farm's allocation path uses [`Self::register_sharded`].
-    pub fn register(&self, w: u32, len: usize) -> TensorHandle {
+    pub fn register(&self, dtype: Dtype, len: usize) -> TensorHandle {
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
@@ -281,7 +282,7 @@ impl PlacementMap {
         inner.tensors.insert(
             id,
             Entry {
-                w,
+                dtype,
                 len,
                 shards: vec![Shard {
                     offset: 0,
@@ -305,7 +306,7 @@ impl PlacementMap {
     /// `None` when the reserve cannot hold even one `align`-element unit.
     pub fn register_sharded(
         &self,
-        w: u32,
+        dtype: Dtype,
         len: usize,
         align: usize,
         target_elems: Option<usize>,
@@ -315,7 +316,7 @@ impl PlacementMap {
         }
         let align = align.max(1);
         let cols = self.geometry.cols();
-        let slots = self.reserve_rows / w as usize;
+        let slots = self.reserve_rows / dtype.bits() as usize;
         let cap_elems = (slots * cols / align) * align;
         if cap_elems == 0 {
             return None;
@@ -343,14 +344,14 @@ impl PlacementMap {
             });
             off += l;
         }
-        inner.tensors.insert(id, Entry { w, len, shards });
+        inner.tensors.insert(id, Entry { dtype, len, shards });
         Some(TensorHandle(id))
     }
 
-    /// `(width, length)` of a registered tensor.
-    pub fn info(&self, h: TensorHandle) -> Option<(u32, usize)> {
+    /// `(dtype, length)` of a registered tensor.
+    pub fn info(&self, h: TensorHandle) -> Option<(Dtype, usize)> {
         let inner = self.inner.lock().unwrap();
-        inner.tensors.get(&h.0).map(|e| (e.w, e.len))
+        inner.tensors.get(&h.0).map(|e| (e.dtype, e.len))
     }
 
     /// The `(offset, len)` element ranges of a tensor's shards, in order.
@@ -412,10 +413,10 @@ impl PlacementMap {
         out.unwrap_or_default()
     }
 
-    /// Per-shard write plan: replicas plus width/length. Touches the LRU
+    /// Per-shard write plan: replicas plus dtype/length. Touches the LRU
     /// clock: an actively rewritten tensor is in use and must not be the
     /// preferred eviction victim.
-    pub fn write_plan(&self, h: TensorHandle) -> Option<(u32, usize, Vec<ShardWrite>)> {
+    pub fn write_plan(&self, h: TensorHandle) -> Option<(Dtype, usize, Vec<ShardWrite>)> {
         let mut inner = self.inner.lock().unwrap();
         let touch = inner.clock;
         inner.clock += 1;
@@ -431,7 +432,7 @@ impl PlacementMap {
                 has_host: s.host.is_some(),
             });
         }
-        Some((e.w, e.len, writes))
+        Some((e.dtype, e.len, writes))
     }
 
     /// `(used, capacity)` storage rows of one worker's reserve.
@@ -463,14 +464,14 @@ impl PlacementMap {
     /// earlier shards while the later ones land).
     pub fn place(&self, h: TensorHandle, shard: u32, worker: usize) -> PlaceAttempt {
         let mut inner = self.inner.lock().unwrap();
-        let (w, slen) = match inner.tensors.get(&h.0) {
+        let (dtype, slen) = match inner.tensors.get(&h.0) {
             Some(e) => match e.shards.get(shard as usize) {
-                Some(s) => (e.w, s.len),
+                Some(s) => (e.dtype, s.len),
                 None => return PlaceAttempt::NoFit,
             },
             None => return PlaceAttempt::NoFit,
         };
-        let rows = tensor_rows(self.geometry, w, slen);
+        let rows = tensor_rows(self.geometry, dtype, slen);
         if inner.stores[worker].capacity_rows() < rows {
             return PlaceAttempt::NoFit;
         }
@@ -505,7 +506,7 @@ impl PlacementMap {
         }
     }
 
-    /// `(base row, width, shard offset, shard len)` of shard `shard` of
+    /// `(base row, dtype, shard offset, shard len)` of shard `shard` of
     /// `h` on `worker` (the farm reads the victim's values through this
     /// before [`Self::evict`]).
     pub fn region_of(
@@ -513,12 +514,12 @@ impl PlacementMap {
         h: TensorHandle,
         shard: u32,
         worker: usize,
-    ) -> Option<(usize, u32, usize, usize)> {
+    ) -> Option<(usize, Dtype, usize, usize)> {
         let inner = self.inner.lock().unwrap();
         let e = inner.tensors.get(&h.0)?;
         let s = e.shards.get(shard as usize)?;
         let region = inner.stores[worker].region((h.0, shard))?;
-        Some((region.base, e.w, s.offset, s.len))
+        Some((region.base, e.dtype, s.offset, s.len))
     }
 
     /// Drop shard `shard`'s replica on `worker`, keeping `values` as the
@@ -645,7 +646,7 @@ impl PlacementMap {
         }
         self.resident_hits.fetch_add(hits, Ordering::Relaxed);
         self.resident_misses.fetch_add(misses, Ordering::Relaxed);
-        SliceResolution::Parts { w: e.w, parts }
+        SliceResolution::Parts { dtype: e.dtype, parts }
     }
 
     /// Per-shard sources for a whole-tensor read (first replica, else the
@@ -653,7 +654,7 @@ impl PlacementMap {
     /// the farm's all-or-nothing allocation cannot produce). Touches the
     /// LRU clocks: a tensor polled through the control plane is in use and
     /// must not be the preferred eviction victim.
-    pub fn read_plan(&self, h: TensorHandle) -> Option<(u32, usize, Vec<ShardRead>)> {
+    pub fn read_plan(&self, h: TensorHandle) -> Option<(Dtype, usize, Vec<ShardRead>)> {
         let mut inner = self.inner.lock().unwrap();
         let touch = inner.clock;
         inner.clock += 1;
@@ -670,7 +671,7 @@ impl PlacementMap {
             };
             reads.push(ShardRead { offset: s.offset, len: s.len, src });
         }
-        Some((e.w, e.len, reads))
+        Some((e.dtype, e.len, reads))
     }
 
     /// Free a tensor: all shards' replica rows return to their stores, the
@@ -765,7 +766,7 @@ mod tests {
     #[test]
     fn place_resolve_roundtrip() {
         let m = map(64);
-        let h = m.register(8, 40); // 8 rows, one shard
+        let h = m.register(Dtype::INT8, 40); // 8 rows, one shard
         assert_eq!(m.shard_count(h), 1);
         assert_eq!(m.shard_ranges(h), vec![(0, 40)]);
         match m.place(h, 0, 0) {
@@ -775,8 +776,8 @@ mod tests {
         assert_eq!(m.homes(h), vec![0]);
         assert_eq!(m.slice_homes(h, 0, 40), vec![0]);
         match resolve_all(&m, h, 0) {
-            SliceResolution::Parts { w, parts } => {
-                assert_eq!(w, 8);
+            SliceResolution::Parts { dtype, parts } => {
+                assert_eq!(dtype, Dtype::INT8);
                 assert_eq!(parts.len(), 1);
                 match &parts[0] {
                     SlicePart::Local { base, start, len } => {
@@ -807,13 +808,13 @@ mod tests {
     #[test]
     fn lru_eviction_selects_least_recently_touched() {
         let m = map(16); // fits two 8-row tensors
-        let a = m.register(8, 40);
-        let b = m.register(8, 40);
+        let a = m.register(Dtype::INT8, 40);
+        let b = m.register(Dtype::INT8, 40);
         assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
         assert!(matches!(m.place(b, 0, 0), PlaceAttempt::Placed { .. }));
         // touch `a` so `b` is the LRU
         resolve_all(&m, a, 0);
-        let c = m.register(8, 40);
+        let c = m.register(Dtype::INT8, 40);
         match m.place(c, 0, 0) {
             PlaceAttempt::Evict { victim, shard } => {
                 assert_eq!((victim, shard), (b, 0));
@@ -842,14 +843,14 @@ mod tests {
     #[test]
     fn control_plane_reads_and_writes_touch_the_lru_clock() {
         let m = map(16); // two 8-row tensors fill one worker
-        let a = m.register(8, 40);
-        let b = m.register(8, 40);
+        let a = m.register(Dtype::INT8, 40);
+        let b = m.register(Dtype::INT8, 40);
         assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
         assert!(matches!(m.place(b, 0, 0), PlaceAttempt::Placed { .. }));
         // poll `a` through the control plane (a server read request):
         // it is in active use, so `b` must be the eviction victim
         let _ = m.read_plan(a);
-        let c = m.register(8, 40);
+        let c = m.register(Dtype::INT8, 40);
         match m.place(c, 0, 0) {
             PlaceAttempt::Evict { victim, .. } => assert_eq!(victim, b),
             other => panic!("{other:?}"),
@@ -858,7 +859,7 @@ mod tests {
         m.evict(b, 0, 0, vec![0; 40]);
         assert!(matches!(m.place(c, 0, 0), PlaceAttempt::Placed { .. }));
         let _ = m.write_plan(a);
-        let d = m.register(8, 40);
+        let d = m.register(Dtype::INT8, 40);
         match m.place(d, 0, 0) {
             PlaceAttempt::Evict { victim, .. } => assert_eq!(victim, c),
             other => panic!("{other:?}"),
@@ -868,7 +869,7 @@ mod tests {
     #[test]
     fn eviction_always_refreshes_the_host_copy() {
         let m = map(64);
-        let h = m.register(8, 40);
+        let h = m.register(Dtype::INT8, 40);
         assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
         assert!(matches!(m.place(h, 0, 1), PlaceAttempt::Placed { .. }));
         // first replica evicted with the original values
@@ -889,7 +890,7 @@ mod tests {
     #[test]
     fn pick_worker_prefers_most_free() {
         let m = map(32);
-        let a = m.register(8, 40);
+        let a = m.register(Dtype::INT8, 40);
         assert!(matches!(m.place(a, 0, 0), PlaceAttempt::Placed { .. }));
         assert_eq!(m.pick_worker(8, &[]), Some(1), "worker 1 is emptier");
         assert_eq!(m.pick_worker(8, &[1]), Some(0));
@@ -900,7 +901,7 @@ mod tests {
     #[test]
     fn replicated_tensor_has_multiple_homes() {
         let m = map(64);
-        let h = m.register(4, 10);
+        let h = m.register(Dtype::INT4, 10);
         assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
         assert!(matches!(m.place(h, 0, 1), PlaceAttempt::Placed { .. }));
         let mut homes = m.homes(h);
@@ -922,31 +923,31 @@ mod tests {
     #[test]
     fn zero_reserve_cannot_place() {
         let m = map(0);
-        let h = m.register(8, 40);
+        let h = m.register(Dtype::INT8, 40);
         assert_eq!(m.place(h, 0, 0), PlaceAttempt::NoFit);
-        assert!(m.register_sharded(8, 40, 1, None).is_none());
+        assert!(m.register_sharded(Dtype::INT8, 40, 1, None).is_none());
     }
 
     #[test]
     fn register_sharded_splits_and_aligns() {
         let m = map(16); // 16 rows: int8 capacity = 2 slots * 40 = 80 elems
-        let h = m.register_sharded(8, 200, 1, None).unwrap();
+        let h = m.register_sharded(Dtype::INT8, 200, 1, None).unwrap();
         assert_eq!(m.shard_ranges(h), vec![(0, 80), (80, 80), (160, 40)]);
         // alignment: shard boundaries land on multiples of 7 (cap 80 -> 77)
-        let h2 = m.register_sharded(8, 150, 7, None).unwrap();
+        let h2 = m.register_sharded(Dtype::INT8, 150, 7, None).unwrap();
         assert_eq!(m.shard_ranges(h2), vec![(0, 77), (77, 73)]);
         // a target below capacity caps the shard size
-        let h3 = m.register_sharded(8, 100, 1, Some(30)).unwrap();
+        let h3 = m.register_sharded(Dtype::INT8, 100, 1, Some(30)).unwrap();
         assert_eq!(m.shard_ranges(h3), vec![(0, 30), (30, 30), (60, 30), (90, 10)]);
         // an align unit wider than the reserve cannot shard
-        assert!(m.register_sharded(8, 100, 81, None).is_none());
+        assert!(m.register_sharded(Dtype::INT8, 100, 81, None).is_none());
         assert_eq!(m.stats().shards, 3 + 2 + 4);
     }
 
     #[test]
     fn sharded_tensor_resolves_per_shard_with_partial_fallback() {
         let m = map(16); // 80 int8 elements per shard
-        let h = m.register_sharded(8, 120, 1, None).unwrap();
+        let h = m.register_sharded(Dtype::INT8, 120, 1, None).unwrap();
         assert_eq!(m.shard_ranges(h), vec![(0, 80), (80, 40)]);
         assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
         assert!(matches!(m.place(h, 1, 1), PlaceAttempt::Placed { .. }));
@@ -995,7 +996,7 @@ mod tests {
     #[test]
     fn sink_write_drops_the_stale_host_backup() {
         let m = map(64);
-        let h = m.register(8, 40);
+        let h = m.register(Dtype::INT8, 40);
         assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
         // a lingering host backup from an earlier eviction cycle
         m.set_host_copy(h, 0, vec![1; 40]);

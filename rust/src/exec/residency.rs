@@ -142,7 +142,7 @@ mod tests {
     use crate::exec::KernelOp;
 
     fn key(w: u32) -> KernelKey {
-        KernelKey::int_ew_full(KernelOp::IntAdd, w, Geometry::G512x40)
+        KernelKey::int_ew_full(KernelOp::IntAdd, crate::exec::Dtype::Int { w }, Geometry::G512x40)
     }
 
     #[test]

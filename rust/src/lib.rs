@@ -54,7 +54,7 @@ pub mod ucode;
 pub mod util;
 
 pub use cram::CramBlock;
-pub use exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+pub use exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
 pub use isa::{Instr, Pred};
 pub use ucode::Program;
 

@@ -26,7 +26,8 @@
 
 use crate::coordinator::job::{MatSeg, MatX};
 use crate::coordinator::{Coordinator, Job, JobHandle, JobPayload};
-use crate::exec::TensorHandle;
+use crate::exec::{Dtype, TensorHandle};
+use crate::util::SoftBf16;
 use anyhow::{ensure, Result};
 
 /// Requantization shift used by the reference model (manifest: `mlp.requant_shift`).
@@ -88,13 +89,13 @@ impl QuantLinear {
     pub fn make_resident(&self, coord: &Coordinator, copies: usize) -> Result<ResidentWeights> {
         let n = self.out_dim();
         let mut segments: Vec<MatSeg> = Vec::new();
-        for (k0, k1) in coord.matmul_segments(8, self.in_dim()) {
+        for (k0, k1) in coord.matmul_segments(Dtype::INT8, self.in_dim()) {
             let slab: Vec<i64> =
                 self.w[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
             // align shard boundaries to the slab's row width so a slab
             // larger than one block's reserve splits into rectangular
             // per-shard K-ranges the mapper can plan partial sums over
-            match coord.alloc_tensor_aligned(&slab, 8, copies, n) {
+            match coord.alloc_tensor_aligned(&slab, Dtype::INT8, copies, n) {
                 Ok(handle) => segments.push(MatSeg { k0, k1, handle }),
                 Err(e) => {
                     // roll back the segments already stored
@@ -337,7 +338,7 @@ impl MlpInt8 {
         // layer 1, fused: epilogue on the block, tiles sunk into a fresh
         // activation tensor (row-aligned shards, spread across workers)
         let submit_l1 = |x: &Vec<Vec<i64>>| -> Result<(JobHandle, TensorHandle)> {
-            let act = coord.alloc_activation(x.len() * hid, 8, hid)?;
+            let act = coord.alloc_activation(x.len() * hid, Dtype::INT8, hid)?;
             let handle = coord.submit(Job {
                 id: 0,
                 payload: JobPayload::IntMatmulFused {
@@ -475,6 +476,290 @@ impl MlpInt8 {
         let w2 = mk(&mut rng, d_hid, d_out);
         let b2: Vec<i64> = (0..d_out).map(|_| rng.int(6)).collect();
         Self::new(QuantLinear::new(w1, b1)?, QuantLinear::new(w2, b2)?)
+    }
+}
+
+/// ReLU in bfloat16: `max(x, +0.0)` (negative zero normalizes to `+0.0`,
+/// matching XLA's `max` lowering for ReLU).
+pub fn relu_bf16(x: &mut [Vec<SoftBf16>]) {
+    for row in x {
+        for v in row.iter_mut() {
+            let f = v.to_f32();
+            if f <= 0.0 || f.is_nan() {
+                *v = SoftBf16::ZERO;
+            }
+        }
+    }
+}
+
+/// A bfloat16 linear layer (weights `[k][n]`, bias `[n]`). The matmul runs
+/// on the farm as a sequential MAC recurrence (see
+/// [`JobPayload::Bf16Dot`]); the bias is added host-side in bf16, after the
+/// dot — the same operation order as [`MlpBf16::forward_host`], so farm and
+/// host are bit-identical.
+#[derive(Clone, Debug)]
+pub struct LinearBf16 {
+    pub w: Vec<Vec<SoftBf16>>,
+    pub b: Vec<SoftBf16>,
+}
+
+impl LinearBf16 {
+    pub fn new(w: Vec<Vec<SoftBf16>>, b: Vec<SoftBf16>) -> Result<Self> {
+        ensure!(!w.is_empty(), "empty weight");
+        ensure!(w.iter().all(|r| r.len() == b.len()), "bias/width mismatch");
+        Ok(Self { w, b })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Store this layer's weight matrix in the farm's storage reserves as
+    /// **one whole-K bf16 slab** (bf16 matmuls never K-split — the MAC
+    /// recurrence is order-dependent), replicated on up to `copies`
+    /// blocks. Every matmul tile must gather the complete slab on one
+    /// worker, so the allocation is verified to leave at least one worker
+    /// holding every shard; allocate with enough replicas (`copies >=
+    /// n_blocks` spreads tiles farm-wide).
+    pub fn make_resident(&self, coord: &Coordinator, copies: usize) -> Result<ResidentWeights> {
+        let k = self.in_dim();
+        let n = self.out_dim();
+        let slab: Vec<i64> = self
+            .w
+            .iter()
+            .flat_map(|row| row.iter().map(|v| v.to_bits() as i64))
+            .collect();
+        let handle = coord.alloc_tensor_aligned(&slab, Dtype::Bf16, copies, n)?;
+        if coord.placement().slice_homes(handle, 0, k * n).is_empty() {
+            let _ = coord.free_tensor(handle);
+            anyhow::bail!(
+                "bf16 weight slab sharded across workers with no complete \
+                 replica; raise the replica count or the storage reserve"
+            );
+        }
+        Ok(ResidentWeights { segments: vec![MatSeg { k0: 0, k1: k, handle }], n })
+    }
+
+    /// Add this layer's bias in bf16 (round-to-nearest-even per element).
+    fn add_bias(&self, y: &mut [Vec<SoftBf16>]) {
+        for row in y {
+            for (v, &bias) in row.iter_mut().zip(&self.b) {
+                *v = v.add(bias);
+            }
+        }
+    }
+
+    /// Submit this layer's matmul (resident slab when available).
+    fn submit_matmul(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<SoftBf16>],
+        rw: Option<&ResidentWeights>,
+    ) -> JobHandle {
+        let payload = match rw {
+            Some(r) => JobPayload::Bf16MatmulResident {
+                x: x.to_vec(),
+                n: r.n,
+                segments: r.segments.clone(),
+            },
+            None => JobPayload::Bf16Matmul { x: x.to_vec(), wt: self.w.clone() },
+        };
+        coord.submit(Job { id: 0, payload })
+    }
+
+    /// `x [m][k] @ w [k][n] + b -> bf16 [m][n]` on the farm.
+    pub fn forward_with(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<SoftBf16>],
+        rw: Option<&ResidentWeights>,
+    ) -> Result<Vec<Vec<SoftBf16>>> {
+        ensure!(
+            x.iter().all(|r| r.len() == self.in_dim()),
+            "input width {} != layer in_dim {}",
+            x.first().map_or(0, Vec::len),
+            self.in_dim()
+        );
+        let m = x.len();
+        let n = self.out_dim();
+        let r = self.submit_matmul(coord, x, rw).wait()?;
+        let mut y: Vec<Vec<SoftBf16>> = (0..m)
+            .map(|i| {
+                r.values[i * n..(i + 1) * n]
+                    .iter()
+                    .map(|&bits| SoftBf16::from_bits(bits as u16))
+                    .collect()
+            })
+            .collect();
+        self.add_bias(&mut y);
+        Ok(y)
+    }
+
+    pub fn forward(&self, coord: &Coordinator, x: &[Vec<SoftBf16>]) -> Result<Vec<Vec<SoftBf16>>> {
+        self.forward_with(coord, x, None)
+    }
+}
+
+/// The two-layer bfloat16 MLP: the same shape as [`MlpInt8`] served at a
+/// different precision against the same blocks — the paper's adaptability
+/// claim at the application level. Shares the resident-weight machinery
+/// ([`ResidentWeights`]) and the cross-batch pipelining structure with the
+/// int8 stack; there is no requant (bf16 activations stay bf16 through
+/// ReLU).
+#[derive(Clone, Debug)]
+pub struct MlpBf16 {
+    pub l1: LinearBf16,
+    pub l2: LinearBf16,
+    resident: Option<(ResidentWeights, ResidentWeights)>,
+}
+
+impl MlpBf16 {
+    pub fn new(l1: LinearBf16, l2: LinearBf16) -> Result<Self> {
+        ensure!(l1.out_dim() == l2.in_dim(), "layer dims mismatch");
+        Ok(Self { l1, l2, resident: None })
+    }
+
+    /// Move both weight slabs into `coord`'s storage reserves (each
+    /// replicated on up to `copies` blocks). Calling again frees the
+    /// previous generation first.
+    pub fn make_resident(&mut self, coord: &Coordinator, copies: usize) -> Result<()> {
+        self.release_resident(coord)?;
+        let r1 = self.l1.make_resident(coord, copies)?;
+        let r2 = match self.l2.make_resident(coord, copies) {
+            Ok(r2) => r2,
+            Err(e) => {
+                let _ = QuantLinear::release_resident(coord, r1);
+                return Err(e);
+            }
+        };
+        self.resident = Some((r1, r2));
+        Ok(())
+    }
+
+    pub fn is_resident(&self) -> bool {
+        self.resident.is_some()
+    }
+
+    /// Free the resident weight slabs (no-op when not resident).
+    pub fn release_resident(&mut self, coord: &Coordinator) -> Result<()> {
+        let Some((r1, r2)) = self.resident.take() else {
+            return Ok(());
+        };
+        let e1 = QuantLinear::release_resident(coord, r1);
+        let e2 = QuantLinear::release_resident(coord, r2);
+        e1.and(e2)
+    }
+
+    fn resident_pair(&self) -> (Option<&ResidentWeights>, Option<&ResidentWeights>) {
+        match &self.resident {
+            Some((r1, r2)) => (Some(r1), Some(r2)),
+            None => (None, None),
+        }
+    }
+
+    /// Forward pass on the Compute RAM farm -> bf16 logits.
+    pub fn forward(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<SoftBf16>],
+    ) -> Result<Vec<Vec<SoftBf16>>> {
+        let (r1, r2) = self.resident_pair();
+        let mut h = self.l1.forward_with(coord, x, r1)?;
+        relu_bf16(&mut h);
+        self.l2.forward_with(coord, &h, r2)
+    }
+
+    /// Forward passes over several batches with cross-batch pipelining:
+    /// batch `i+1`'s first-layer matmul is in flight while batch `i`'s
+    /// host-side bias/ReLU and second layer run. Results are bit-identical
+    /// to per-batch [`MlpBf16::forward`].
+    pub fn forward_pipelined(
+        &self,
+        coord: &Coordinator,
+        batches: &[Vec<Vec<SoftBf16>>],
+    ) -> Result<Vec<Vec<Vec<SoftBf16>>>> {
+        for x in batches {
+            ensure!(
+                x.iter().all(|r| r.len() == self.l1.in_dim()),
+                "input width {} != layer in_dim {}",
+                x.first().map_or(0, Vec::len),
+                self.l1.in_dim()
+            );
+        }
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (r1, r2) = self.resident_pair();
+        let submit_l1 = |x: &[Vec<SoftBf16>]| self.l1.submit_matmul(coord, x, r1);
+        let hid = self.l1.out_dim();
+        let mut results = Vec::with_capacity(batches.len());
+        let mut inflight = Some(submit_l1(&batches[0]));
+        for i in 0..batches.len() {
+            let r1_out = inflight.take().expect("layer-1 job in flight").wait()?;
+            if i + 1 < batches.len() {
+                inflight = Some(submit_l1(&batches[i + 1]));
+            }
+            let m = batches[i].len();
+            let mut h: Vec<Vec<SoftBf16>> = (0..m)
+                .map(|r| {
+                    r1_out.values[r * hid..(r + 1) * hid]
+                        .iter()
+                        .map(|&bits| SoftBf16::from_bits(bits as u16))
+                        .collect()
+                })
+                .collect();
+            self.l1.add_bias(&mut h);
+            relu_bf16(&mut h);
+            results.push(self.l2.forward_with(coord, &h, r2)?);
+        }
+        Ok(results)
+    }
+
+    /// Pure-host reference: the same sequential-MAC dot recurrence the
+    /// blocks run (K ascending from +0.0), bias after, so farm and host
+    /// are bit-identical.
+    pub fn forward_host(&self, x: &[Vec<SoftBf16>]) -> Vec<Vec<SoftBf16>> {
+        let matmul = |x: &[Vec<SoftBf16>], w: &[Vec<SoftBf16>], b: &[SoftBf16]| {
+            x.iter()
+                .map(|row| {
+                    (0..b.len())
+                        .map(|j| {
+                            let mut acc = SoftBf16::ZERO;
+                            for (xi, wr) in row.iter().zip(w) {
+                                acc = acc.mac(*xi, wr[j]);
+                            }
+                            acc.add(b[j])
+                        })
+                        .collect::<Vec<SoftBf16>>()
+                })
+                .collect::<Vec<Vec<SoftBf16>>>()
+        };
+        let mut h = matmul(x, &self.l1.w, &self.l1.b);
+        relu_bf16(&mut h);
+        matmul(&h, &self.l2.w, &self.l2.b)
+    }
+
+    /// Deterministic synthetic weights (small integer-valued floats, so
+    /// every value is exactly representable), for examples/tests/benches.
+    pub fn synthetic(d_in: usize, d_hid: usize, d_out: usize, seed: u64) -> Result<Self> {
+        let mut rng = crate::util::Prng::new(seed);
+        let val = |rng: &mut crate::util::Prng, w: u32| -> SoftBf16 {
+            SoftBf16::from_f32(rng.int(w) as f32)
+        };
+        let mk = |rng: &mut crate::util::Prng, k: usize, n: usize| -> Vec<Vec<SoftBf16>> {
+            (0..k)
+                .map(|_| (0..n).map(|_| SoftBf16::from_f32(rng.int(4) as f32)).collect())
+                .collect()
+        };
+        let w1 = mk(&mut rng, d_in, d_hid);
+        let b1: Vec<SoftBf16> = (0..d_hid).map(|_| val(&mut rng, 6)).collect();
+        let w2 = mk(&mut rng, d_hid, d_out);
+        let b2: Vec<SoftBf16> = (0..d_out).map(|_| val(&mut rng, 6)).collect();
+        Self::new(LinearBf16::new(w1, b1)?, LinearBf16::new(w2, b2)?)
     }
 }
 
@@ -635,8 +920,9 @@ mod tests {
         for (i, x) in batches.iter().enumerate() {
             assert_eq!(fused[i], mlp.forward_host(x), "fused batch {i}");
         }
-        // only the logits crossed the host boundary
-        assert_eq!(fused_out, 3 * 5 * 8 * 8);
+        // only the logits crossed the host boundary (int32 accumulator
+        // results: four packed bytes each)
+        assert_eq!(fused_out, 3 * 5 * 8 * 4);
     }
 
     #[test]
@@ -672,5 +958,92 @@ mod tests {
     #[test]
     fn weight_range_enforced() {
         assert!(QuantLinear::new(vec![vec![200i64]], vec![0]).is_err());
+    }
+
+    #[test]
+    fn bf16_linear_matches_host_recurrence() {
+        let c = coord();
+        let mlp = MlpBf16::synthetic(16, 8, 4, 0xB16).unwrap();
+        let mut rng = Prng::new(60);
+        let x: Vec<Vec<SoftBf16>> = (0..5)
+            .map(|_| (0..16).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect())
+            .collect();
+        let farm = mlp.forward(&c, &x).unwrap();
+        let host = mlp.forward_host(&x);
+        assert_eq!(farm, host, "bf16 farm forward must be bit-exact vs SoftBf16");
+    }
+
+    #[test]
+    fn bf16_pipelined_matches_per_batch_forward() {
+        let c = coord();
+        let mlp = MlpBf16::synthetic(12, 6, 3, 0xB17).unwrap();
+        let mut rng = Prng::new(61);
+        let batches: Vec<Vec<Vec<SoftBf16>>> = (0..3)
+            .map(|_| {
+                (0..4)
+                    .map(|_| (0..12).map(|_| SoftBf16::from_f32(rng.int(5) as f32)).collect())
+                    .collect()
+            })
+            .collect();
+        let piped = mlp.forward_pipelined(&c, &batches).unwrap();
+        for (i, x) in batches.iter().enumerate() {
+            assert_eq!(piped[i], mlp.forward_host(x), "batch {i}");
+        }
+        assert!(mlp.forward_pipelined(&c, &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bf16_resident_weights_are_bit_exact_and_cut_traffic() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 192);
+        let mut mlp = MlpBf16::synthetic(12, 8, 4, 0xB18).unwrap();
+        let mut rng = Prng::new(62);
+        let x: Vec<Vec<SoftBf16>> = (0..6)
+            .map(|_| (0..12).map(|_| SoftBf16::from_f32(rng.int(5) as f32)).collect())
+            .collect();
+        let host = mlp.forward_host(&x);
+        let in0 = c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+        let inline = mlp.forward(&c, &x).unwrap();
+        let inline_bytes =
+            c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - in0;
+        assert_eq!(inline, host);
+        mlp.make_resident(&c, 2).unwrap();
+        assert!(mlp.is_resident());
+        let in1 = c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed);
+        let resident = mlp.forward(&c, &x).unwrap();
+        let resident_bytes =
+            c.metrics.host_bytes_in.load(std::sync::atomic::Ordering::Relaxed) - in1;
+        assert_eq!(resident, host, "resident bf16 weights must be bit-exact");
+        assert!(
+            resident_bytes < inline_bytes,
+            "resident {resident_bytes} vs inline {inline_bytes} bytes in"
+        );
+        // the pipelined path shares the resident slabs
+        let piped = mlp.forward_pipelined(&c, &[x.clone(), x.clone()]).unwrap();
+        assert_eq!(piped[0], host);
+        assert_eq!(piped[1], host);
+        mlp.release_resident(&c).unwrap();
+        assert!(c.placement().is_empty());
+    }
+
+    #[test]
+    fn bf16_make_resident_requires_a_reserve() {
+        let c = coord(); // no storage reserve
+        let mut mlp = MlpBf16::synthetic(8, 4, 2, 1).unwrap();
+        assert!(mlp.make_resident(&c, 1).is_err());
+        assert!(!mlp.is_resident());
+        assert!(c.placement().is_empty());
+    }
+
+    #[test]
+    fn relu_bf16_semantics() {
+        let neg = SoftBf16::from_f32(-2.5);
+        let negz = SoftBf16::from_f32(-0.0);
+        let pos = SoftBf16::from_f32(0.75);
+        let mut x = vec![vec![neg, negz, SoftBf16::ZERO, pos]];
+        relu_bf16(&mut x);
+        assert_eq!(x[0][0], SoftBf16::ZERO);
+        assert_eq!(x[0][1], SoftBf16::ZERO, "-0.0 normalizes to +0.0");
+        assert_eq!(x[0][2], SoftBf16::ZERO);
+        assert_eq!(x[0][3], pos);
     }
 }

@@ -495,8 +495,15 @@ pub fn mul_sized(geom: Geometry, tuples: usize) -> (Program, VecLayout) {
 /// them back-to-back with [`crate::cram::CramBlock::run_chained`], which
 /// models the dynamic reload.
 pub fn mac(geom: Geometry) -> (Vec<Program>, VecLayout) {
-    let (m, l) = mul(geom);
-    let (a, _) = add(geom);
+    mac_sized(geom, usize::MAX)
+}
+
+/// [`mac`] sized to at most `tuples` slots per column (see [`add_sized`]).
+/// The bf16 dot-product planner runs one MAC wave per K step, so the tuple
+/// count is the width of the dot *batch*, not the dot length.
+pub fn mac_sized(geom: Geometry, tuples: usize) -> (Vec<Program>, VecLayout) {
+    let (m, l) = mul_sized(geom, tuples);
+    let (a, _) = add_sized(geom, tuples);
     (vec![m, a], l)
 }
 

@@ -100,7 +100,10 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Int(i) => out.push_str(&i.to_string()),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // the sign of -0.0 must survive the integer fast-path
+                // (bf16 responses carry it; `-0.0 as i64` would drop it)
+                if n.fract() == 0.0 && n.abs() < 9e15 && !(*n == 0.0 && n.is_sign_negative())
+                {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -281,9 +284,10 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        // integer literals keep full i64 precision; fractions, exponents
-        // and out-of-i64-range magnitudes fall back to f64
-        if !text.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) {
+        // integer literals keep full i64 precision; fractions, exponents,
+        // out-of-i64-range magnitudes — and the signed zero "-0", which
+        // only f64 can represent — fall back to f64
+        if !text.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) && text != "-0" {
             if let Ok(i) = text.parse::<i64>() {
                 return Ok(Json::Int(i));
             }
@@ -348,6 +352,23 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn negative_zero_survives_the_roundtrip() {
+        // bf16 responses carry -0.0; the integer fast-path must not eat
+        // its sign in either direction
+        let v = Json::parse("-0").unwrap();
+        let Json::Num(n) = v else { panic!("-0 must parse as a float, got {v:?}") };
+        assert_eq!(n, 0.0);
+        assert!(n.is_sign_negative(), "sign of -0 lost in parse");
+        let dumped = Json::Num(-0.0).dump();
+        let back = Json::parse(&dumped).unwrap();
+        let Json::Num(n) = back else { panic!("{dumped} reparsed as {back:?}") };
+        assert!(n.is_sign_negative(), "sign of -0 lost in dump ({dumped})");
+        // plain zero stays an exact integer
+        assert_eq!(Json::parse("0").unwrap(), Json::Int(0));
+        assert_eq!(Json::Num(0.0).dump(), "0");
+    }
 
     #[test]
     fn parse_scalars() {

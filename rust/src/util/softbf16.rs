@@ -181,6 +181,148 @@ mod tests {
         }
     }
 
+    /// Reference round-to-nearest-even, computed a *different* way than
+    /// `from_f32`'s bias trick: pick the nearer of the two neighbouring
+    /// bf16 values in exact (f64) arithmetic, ties to the even mantissa.
+    fn rne_reference(x: f32) -> u16 {
+        if x.is_nan() {
+            return ((x.to_bits() >> 16) as u16) | 0x0040;
+        }
+        let bits = x.to_bits();
+        let lo = (bits >> 16) as u16; // truncation toward zero
+        if bits & 0xFFFF == 0 {
+            return lo; // exactly representable (covers inf too)
+        }
+        // hi is the next bf16 away from zero; the u16 increment walks the
+        // magnitude line, overflowing into the infinity encoding correctly
+        let hi = lo.wrapping_add(1);
+        let xv = x as f64;
+        let lov = SoftBf16::from_bits(lo).to_f32() as f64;
+        // hi may be +-inf; compare against the extended-real midpoint by
+        // using the unrounded 2^128 boundary value instead
+        let hiv = if SoftBf16::from_bits(hi).to_f32().is_finite() {
+            SoftBf16::from_bits(hi).to_f32() as f64
+        } else {
+            f64::powi(2.0, 128) * if x < 0.0 { -1.0 } else { 1.0 }
+        };
+        let dlo = (xv - lov).abs();
+        let dhi = (hiv - xv).abs();
+        if dlo < dhi {
+            lo
+        } else if dhi < dlo {
+            hi
+        } else if lo & 1 == 0 {
+            lo
+        } else {
+            hi
+        }
+    }
+
+    #[test]
+    fn prop_rne_matches_independent_reference() {
+        // sweep a pseudo-random sample of the full f32 space (finite and
+        // not): the bias-trick rounding must equal the exact nearest-even
+        // reference everywhere, including subnormals and the overflow
+        // boundary
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..20_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let bits = (state >> 32) as u32;
+            let x = f32::from_bits(bits);
+            let got = SoftBf16::from_f32(x).to_bits();
+            let expect = rne_reference(x);
+            assert_eq!(
+                got, expect,
+                "x={x:e} (bits {bits:#010x}): got {got:#06x}, expect {expect:#06x}"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_propagates_through_arithmetic() {
+        let nan = SoftBf16::from_f32(f32::NAN);
+        let x = bf(1.5);
+        for r in [
+            nan.add(x),
+            x.add(nan),
+            nan.mul(x),
+            x.mul(nan),
+            nan.sub(x),
+            x.mac(nan, x),
+            x.mac(x, nan),
+            nan.mac(x, x),
+        ] {
+            assert!(r.to_f32().is_nan(), "NaN must propagate, got {r:?}");
+        }
+        // inf - inf and 0 * inf are the canonical NaN factories
+        let inf = bf(f32::INFINITY);
+        assert!(inf.sub(inf).to_f32().is_nan());
+        assert!(bf(0.0).mul(inf).to_f32().is_nan());
+        // quieting keeps the sign
+        let neg_nan = SoftBf16::from_f32(f32::from_bits(0xFFC0_0001));
+        assert!(neg_nan.sign());
+        assert!(neg_nan.to_f32().is_nan());
+    }
+
+    #[test]
+    fn inf_arithmetic_and_overflow() {
+        let inf = bf(f32::INFINITY);
+        let ninf = bf(f32::NEG_INFINITY);
+        assert_eq!(inf.to_bits(), 0x7F80);
+        assert_eq!(ninf.to_bits(), 0xFF80);
+        assert_eq!(inf.mul(bf(-2.0)).to_bits(), 0xFF80);
+        assert_eq!(inf.add(ninf.mul(bf(-1.0))).to_bits(), 0x7F80);
+        // finite overflow: max_bf16 + max_bf16 rounds to +inf
+        let max = SoftBf16::from_bits(0x7F7F);
+        assert_eq!(max.add(max).to_bits(), 0x7F80);
+        // f32::MAX is above the bf16 overflow midpoint: rounds to inf
+        assert_eq!(SoftBf16::from_f32(f32::MAX).to_bits(), 0x7F80);
+        // but the largest f32 that rounds down stays finite: anything
+        // strictly below the 0x7F7F/inf midpoint
+        let below_mid = f32::from_bits(0x7F7F_7FFF);
+        assert_eq!(SoftBf16::from_f32(below_mid).to_bits(), 0x7F7F);
+    }
+
+    #[test]
+    fn subnormals_round_and_compute_like_f32() {
+        // bf16 subnormals (exponent field 0, mantissa != 0) are first-class
+        // in the XLA semantics SoftBf16 mirrors: no flush-to-zero on
+        // conversion...
+        let sub = SoftBf16::from_bits(0x0001); // smallest positive subnormal
+        assert!(sub.to_f32() > 0.0);
+        assert_eq!(SoftBf16::from_f32(sub.to_f32()).to_bits(), 0x0001);
+        // ...and arithmetic on subnormals follows f32 exactly (bf16
+        // shares f32's exponent range, so bf16 subnormals widen to f32
+        // subnormals — Rust's f32 is strict IEEE, no flush-to-zero)
+        assert_eq!(sub.add(sub).to_bits(), 0x0002);
+        assert_eq!(sub.sub(sub).to_bits(), 0x0000);
+        let big_sub = SoftBf16::from_bits(0x007F); // largest subnormal
+        let norm = big_sub.add(sub); // crosses into the normal range
+        assert_eq!(norm.to_bits(), 0x0080, "subnormal + ulp = smallest normal");
+        // an f32 halfway between two bf16 subnormals rounds to even
+        let lo = SoftBf16::from_bits(0x0002).to_f32();
+        let hi = SoftBf16::from_bits(0x0003).to_f32();
+        let mid = (lo as f64 + hi as f64) / 2.0;
+        assert_eq!(SoftBf16::from_f32(mid as f32).to_bits(), 0x0002, "ties to even");
+        // multiplying two subnormals underflows to zero, keeping the sign
+        assert_eq!(sub.mul(sub).to_bits(), 0x0000);
+        assert_eq!(sub.mul(SoftBf16::from_bits(0x8001)).to_bits(), 0x8000, "-0");
+    }
+
+    #[test]
+    fn signed_zero_semantics() {
+        let pz = bf(0.0);
+        let nz = bf(-0.0);
+        assert_eq!(pz.to_bits(), 0x0000);
+        assert_eq!(nz.to_bits(), 0x8000);
+        // IEEE: (+0) + (-0) = +0 in round-to-nearest; (-0) + (-0) = -0
+        assert_eq!(pz.add(nz).to_bits(), 0x0000);
+        assert_eq!(nz.add(nz).to_bits(), 0x8000);
+        // x - x = +0 for finite x
+        let x = bf(2.5);
+        assert_eq!(x.sub(x).to_bits(), 0x0000);
+    }
+
     #[test]
     fn ulp_distance_basics() {
         assert_eq!(bf(1.0).ulp_distance(bf(1.0)), 0);

@@ -8,7 +8,7 @@
 
 use comperam::bitline::Geometry;
 use comperam::cram::{ops, CramBlock};
-use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
 use comperam::util::{mask, sext, Prng};
 
 fn wrap(v: i64, w: u32) -> i64 {
@@ -37,12 +37,12 @@ fn check_case(
 ) {
     let geom = reused.geometry();
     let mut rng = Prng::new(seed);
-    let full = KernelKey::int_ew_full(op, w, geom);
+    let full = KernelKey::int_ew_full(op, Dtype::Int { w }, geom);
     let capacity = CompiledKernel::compile(full).capacity();
     let n = rng.range(1, capacity + 1);
     let a: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
     let b: Vec<i64> = (0..n).map(|_| rng.int(w)).collect();
-    let key = KernelKey::int_ew_sized(op, w, n, geom);
+    let key = KernelKey::int_ew_sized(op, Dtype::Int { w }, n, geom);
 
     let cached = cache.get(key);
     let got = ops::int_ew_compiled(reused, &cached, &a, &b)
@@ -122,7 +122,7 @@ fn prop_cached_dot_bit_exact_including_chunked_k_loops() {
                 (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
             let b: Vec<Vec<i64>> =
                 (0..k).map(|_| (0..cols).map(|_| rng.int(w)).collect()).collect();
-            let key = KernelKey::int_dot(w, 32, k, geom);
+            let key = KernelKey::int_dot(Dtype::Int { w }, 32, k, geom);
             let cached = cache.get(key);
             let got = ops::int_dot_compiled(&mut reused, &cached, &a, &b)
                 .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
@@ -149,7 +149,7 @@ fn second_op_with_same_key_does_zero_assembly_and_zero_loads() {
     let geom = Geometry::G512x40;
     let cache = KernelCache::new();
     let mut block = CramBlock::new(geom);
-    let key = KernelKey::int_ew_sized(KernelOp::IntAdd, 8, 80, geom);
+    let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 80, geom);
 
     let (a1, b1) = (vec![7i64; 80], vec![-3i64; 80]);
     let k1 = cache.get(key);

@@ -10,6 +10,7 @@ use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
 use comperam::coordinator::{Coordinator, Job, JobPayload, MatSeg, OperandRef};
 use comperam::cram::store::BlockStore;
+use comperam::exec::Dtype;
 use comperam::util::{mask, sext, Prng};
 
 fn wrap(v: i64, w: u32) -> i64 {
@@ -78,7 +79,7 @@ fn prop_tensor_alloc_write_read_roundtrip() {
         let len = rng.range(1, 400);
         let values = rand_tensor(&mut rng, w, len);
         let copies = rng.range(1, 4);
-        let Ok(h) = c.alloc_tensor_replicated(&values, w, copies) else {
+        let Ok(h) = c.alloc_tensor_replicated(&values, Dtype::Int { w }, copies) else {
             continue; // reserve momentarily full: not this test's concern
         };
         assert_eq!(c.read_tensor(h).unwrap(), values, "case {case} w={w} len={len}");
@@ -104,7 +105,7 @@ fn prop_eviction_preserves_contents_bit_exactly() {
             let w = [4, 8][rng.range(0, 2)] as u32;
             let len = rng.range(1, 120);
             let values = rand_tensor(&mut rng, w, len);
-            if let Ok(h) = c.alloc_tensor(&values, w) {
+            if let Ok(h) = c.alloc_tensor(&values, Dtype::Int { w }) {
                 live.push((h, values, w));
             }
             // every tensor ever allocated still reads back exactly,
@@ -135,7 +136,7 @@ fn prop_storage_unaffected_by_interleaved_compute() {
             let w = [4, 8, 16][rng.range(0, 3)] as u32;
             let len = rng.range(10, 200);
             let values = rand_tensor(&mut rng, w, len);
-            let h = c.alloc_tensor(&values, w).unwrap();
+            let h = c.alloc_tensor(&values, Dtype::Int { w }).unwrap();
             (h, values, w)
         })
         .collect();
@@ -198,7 +199,7 @@ fn prop_resident_elementwise_matches_inline() {
         let n = rng.range(1, (128 / w as usize) * 40 + 1);
         let a = rand_tensor(&mut rng, w, n);
         let b = rand_tensor(&mut rng, w, n);
-        let h = c.alloc_tensor(&a, w).unwrap();
+        let h = c.alloc_tensor(&a, Dtype::Int { w }).unwrap();
         let inline = c
             .run(Job {
                 id: 0,
@@ -250,12 +251,12 @@ fn prop_resident_matmul_matches_host() {
         let x: Vec<Vec<i64>> = (0..m).map(|_| rand_tensor(&mut rng, 8, k)).collect();
         let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
         let segments: Vec<MatSeg> = c
-            .matmul_segments(8, k)
+            .matmul_segments(Dtype::INT8, k)
             .into_iter()
             .map(|(k0, k1)| {
                 let slab: Vec<i64> =
                     wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
-                let handle = c.alloc_tensor_replicated(&slab, 8, 2).unwrap();
+                let handle = c.alloc_tensor_replicated(&slab, Dtype::INT8, 2).unwrap();
                 MatSeg { k0, k1, handle }
             })
             .collect();
@@ -285,5 +286,74 @@ fn prop_resident_matmul_matches_host() {
         for seg in segments {
             c.free_tensor(seg.handle).unwrap();
         }
+    }
+}
+
+#[test]
+fn prop_int4_tensor_uses_half_the_storage_of_int8() {
+    // the packed sub-byte layout: the same values stored at int4 must
+    // consume at most half the reserve rows — and half the accounted host
+    // bytes — of the int8 allocation (the acceptance bar for Dtype-aware
+    // region sizing)
+    let mut rng = Prng::new(0x4B17);
+    for case in 0..20u64 {
+        // even lengths: an odd int4 tail costs a rounding byte, which
+        // would make "exactly half" an off-by-one claim
+        let len = rng.range(1, 150) * 2;
+        let values: Vec<i64> = (0..len).map(|_| rng.int(4)).collect();
+
+        let c8 = Coordinator::with_storage(Geometry::G512x40, 1, 160);
+        let b8_0 = c8.data_stats().host_bytes_in;
+        let h8 = c8.alloc_tensor(&values, Dtype::INT8).unwrap();
+        let rows8 = c8.placement().occupancy(0).0;
+        let bytes8 = c8.data_stats().host_bytes_in - b8_0;
+
+        let c4 = Coordinator::with_storage(Geometry::G512x40, 1, 160);
+        let b4_0 = c4.data_stats().host_bytes_in;
+        let h4 = c4.alloc_tensor(&values, Dtype::INT4).unwrap();
+        let rows4 = c4.placement().occupancy(0).0;
+        let bytes4 = c4.data_stats().host_bytes_in - b4_0;
+
+        assert!(
+            rows4 * 2 <= rows8,
+            "case {case} len={len}: int4 rows {rows4} vs int8 rows {rows8}"
+        );
+        assert!(
+            bytes4 * 2 <= bytes8,
+            "case {case} len={len}: int4 bytes {bytes4} vs int8 bytes {bytes8}"
+        );
+        // both read back bit-exactly
+        assert_eq!(c8.read_tensor(h8).unwrap(), values, "case {case}");
+        assert_eq!(c4.read_tensor(h4).unwrap(), values, "case {case}");
+    }
+}
+
+#[test]
+fn prop_bf16_tensor_roundtrip() {
+    use comperam::util::SoftBf16;
+    // bf16 tensors store raw bit patterns: every pattern (including
+    // negative floats, whose top bit is set) must round-trip unchanged
+    let c = Coordinator::with_storage(Geometry::G512x40, 2, 128);
+    let mut rng = Prng::new(0xBF16);
+    for case in 0..30u64 {
+        let len = rng.range(1, 250);
+        let values: Vec<i64> =
+            (0..len).map(|_| rng.bf16_bits(100, 150) as i64).collect();
+        let h = c.alloc_tensor(&values, Dtype::Bf16).unwrap();
+        assert_eq!(c.read_tensor(h).unwrap(), values, "case {case} len={len}");
+        // the patterns decode to the same floats SoftBf16 sees
+        for (&bits, &orig) in c.read_tensor(h).unwrap().iter().zip(values.iter()) {
+            assert_eq!(
+                SoftBf16::from_bits(bits as u16).to_bits(),
+                SoftBf16::from_bits(orig as u16).to_bits()
+            );
+        }
+        if rng.chance(0.5) {
+            let updated: Vec<i64> =
+                (0..len).map(|_| rng.bf16_bits(90, 160) as i64).collect();
+            c.write_tensor(h, &updated).unwrap();
+            assert_eq!(c.read_tensor(h).unwrap(), updated, "case {case} rewrite");
+        }
+        c.free_tensor(h).unwrap();
     }
 }

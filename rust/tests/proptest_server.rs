@@ -8,9 +8,16 @@
 
 use comperam::coordinator::job::EwOp;
 use comperam::coordinator::server::{
-    format_error, format_response, parse_request, recover_request_id, Request, WireOperand,
+    format_error, format_response, parse_request, recover_request_id, ComputeKind, PimServer,
+    Request, WireOperand,
 };
-use comperam::util::{Json, Prng};
+use comperam::coordinator::Coordinator;
+use comperam::exec::Dtype;
+use comperam::util::{Json, Prng, SoftBf16};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Unwrap a parsed compute request's literal operand.
 fn values(op: &WireOperand) -> &[i64] {
@@ -71,8 +78,8 @@ fn prop_parse_request_roundtrips_valid_lines() {
             panic!("seed {seed}: compute line parsed as control request");
         };
         assert_eq!(r.id, id, "seed {seed}: id must survive the full valid range");
-        assert_eq!(r.op, op, "seed {seed}");
-        assert_eq!(r.w, w, "seed {seed}");
+        assert_eq!(r.kind, ComputeKind::Ew(op), "seed {seed}");
+        assert_eq!(r.dtype, Dtype::Int { w }, "seed {seed}");
         assert_eq!(values(&r.a), a, "seed {seed}");
         assert_eq!(values(&r.b), b, "seed {seed}");
     }
@@ -196,4 +203,131 @@ fn prop_out_of_range_operands_rejected() {
         let line = request_line(&mut rng, 1, op, w, &a, &b);
         parse_request(&line).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
     }
+}
+
+/// Format a bf16 value as a wire float literal (f64 Display is
+/// shortest-roundtrip, so the encoding is exact).
+fn bf16_wire(v: SoftBf16) -> String {
+    format!("{}", v.to_f32() as f64)
+}
+
+/// One finite random bf16 value in a moderate exponent band.
+fn rand_bf16(rng: &mut Prng) -> SoftBf16 {
+    SoftBf16::from_bits(rng.bf16_bits(110, 140))
+}
+
+#[test]
+fn prop_bf16_server_matches_softbf16_reference() {
+    // the full server path — TCP, JSON floats, batching, the farm's MAC /
+    // elementwise kernels, float responses — must be bit-exact against
+    // the SoftBf16 host recurrence
+    let coord = Arc::new(Coordinator::new(comperam::bitline::Geometry::G512x40, 2));
+    let server = PimServer::start(coord, Duration::from_millis(2)).unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ask = |line: &str| -> Json {
+        writeln!(conn, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap_or_else(|e| panic!("{e}\n{resp}"))
+    };
+    let mut rng = Prng::new(0xB16E2E);
+    for case in 0..40u64 {
+        let n = rng.range(1, 12);
+        let a: Vec<SoftBf16> = (0..n).map(|_| rand_bf16(&mut rng)).collect();
+        let b: Vec<SoftBf16> = (0..n).map(|_| rand_bf16(&mut rng)).collect();
+        let arr = |v: &[SoftBf16]| -> String {
+            v.iter().map(|&x| bf16_wire(x)).collect::<Vec<_>>().join(",")
+        };
+        let (op, reference): (&str, Vec<SoftBf16>) = match rng.below(4) {
+            0 => ("add", a.iter().zip(&b).map(|(&x, &y)| x.add(y)).collect()),
+            1 => ("sub", a.iter().zip(&b).map(|(&x, &y)| x.sub(y)).collect()),
+            2 => ("mul", a.iter().zip(&b).map(|(&x, &y)| x.mul(y)).collect()),
+            _ => {
+                // one dot product: the sequential MAC recurrence
+                let mut acc = SoftBf16::ZERO;
+                for (&x, &y) in a.iter().zip(&b) {
+                    acc = acc.mac(x, y);
+                }
+                ("dot", vec![acc])
+            }
+        };
+        let line = format!(
+            r#"{{"id":{case},"op":"{op}","dtype":"bf16","a":[{}],"b":[{}]}}"#,
+            arr(&a),
+            arr(&b),
+        );
+        let v = ask(&line);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "case {case} {op}: {v:?}");
+        assert_eq!(v.get("id").and_then(Json::as_i64), Some(case as i64));
+        let got: Vec<u16> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| SoftBf16::from_f32(x.as_f64().unwrap() as f32).to_bits())
+            .collect();
+        let expect: Vec<u16> = reference.iter().map(|r| r.to_bits()).collect();
+        assert_eq!(got, expect, "case {case} {op}: wire result != SoftBf16");
+    }
+    server.stop();
+}
+
+#[test]
+fn prop_mixed_dtype_stream_serves_every_request() {
+    // int4, int8 and bf16 requests interleaved on one connection: each is
+    // answered at its own precision with its own id
+    let coord = Arc::new(Coordinator::new(comperam::bitline::Geometry::G512x40, 2));
+    let server = PimServer::start(coord, Duration::from_millis(2)).unwrap();
+    let mut conn = TcpStream::connect(server.addr).unwrap();
+    conn.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ask = |line: &str| -> Json {
+        writeln!(conn, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).unwrap()
+    };
+    let mut rng = Prng::new(0xD117);
+    for case in 0..30u64 {
+        match rng.below(3) {
+            0 => {
+                let x = rng.int(4);
+                let y = rng.int(4);
+                let v = ask(&format!(
+                    r#"{{"id":{case},"op":"add","dtype":"int4","a":[{x}],"b":[{y}]}}"#
+                ));
+                assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "case {case}: {v:?}");
+                let got = v.get("values").unwrap().as_arr().unwrap()[0].as_i64().unwrap();
+                let expect =
+                    comperam::util::sext(comperam::util::mask(x + y, 4) as i64, 4);
+                assert_eq!(got, expect, "case {case} int4");
+            }
+            1 => {
+                let x = rng.int(8);
+                let y = rng.int(8);
+                let v = ask(&format!(
+                    r#"{{"id":{case},"op":"mul","dtype":"int8","a":[{x}],"b":[{y}]}}"#
+                ));
+                let got = v.get("values").unwrap().as_arr().unwrap()[0].as_i64().unwrap();
+                assert_eq!(got, x * y, "case {case} int8");
+            }
+            _ => {
+                let x = rand_bf16(&mut rng);
+                let y = rand_bf16(&mut rng);
+                let v = ask(&format!(
+                    r#"{{"id":{case},"op":"add","dtype":"bf16","a":[{}],"b":[{}]}}"#,
+                    bf16_wire(x),
+                    bf16_wire(y),
+                ));
+                let got = SoftBf16::from_f32(
+                    v.get("values").unwrap().as_arr().unwrap()[0].as_f64().unwrap() as f32,
+                );
+                assert_eq!(got.to_bits(), x.add(y).to_bits(), "case {case} bf16");
+            }
+        }
+    }
+    server.stop();
 }

@@ -10,6 +10,7 @@
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
 use comperam::coordinator::{Coordinator, Job, JobPayload, MatSeg, MatX, OperandRef};
+use comperam::exec::Dtype;
 use comperam::nn::relu_requant;
 use comperam::util::Prng;
 
@@ -27,12 +28,12 @@ fn prop_sharded_alloc_write_read_free_roundtrip() {
         let w = [2, 4, 8][rng.range(0, 3)] as u32;
         let len = rng.range(1, 700);
         let values = rand_tensor(&mut rng, w, len);
-        let Ok(h) = c.alloc_tensor(&values, w) else {
+        let Ok(h) = c.alloc_tensor(&values, Dtype::Int { w }) else {
             continue; // larger than the farm's total storage: fine
         };
         let shards = c.placement().shard_count(h);
         let rows_one_shard =
-            comperam::cram::store::tensor_rows(Geometry::G512x40, w, len);
+            comperam::cram::store::tensor_rows(Geometry::G512x40, Dtype::Int { w }, len);
         if rows_one_shard > 32 {
             assert!(shards > 1, "case {case}: {rows_one_shard} rows must shard");
         }
@@ -72,12 +73,12 @@ fn prop_sharded_weight_matmul_matches_host_reference() {
         let x: Vec<Vec<i64>> = (0..m).map(|_| rand_tensor(&mut rng, 8, k)).collect();
         let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
         let segments: Vec<MatSeg> = c
-            .matmul_segments(8, k)
+            .matmul_segments(Dtype::INT8, k)
             .into_iter()
             .map(|(k0, k1)| {
                 let slab: Vec<i64> =
                     wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
-                let handle = c.alloc_tensor_aligned(&slab, 8, 1, n).unwrap();
+                let handle = c.alloc_tensor_aligned(&slab, Dtype::INT8, 1, n).unwrap();
                 MatSeg { k0, k1, handle }
             })
             .collect();
@@ -121,11 +122,11 @@ fn prop_single_shard_eviction_forces_partial_host_fallback() {
         let c = Coordinator::with_storage(Geometry::G512x40, 2, 32);
         let mut rng = Prng::new(0xE71C + seed);
         let big = rand_tensor(&mut rng, 8, 300);
-        let h = c.alloc_tensor(&big, 8).unwrap();
+        let h = c.alloc_tensor(&big, Dtype::INT8).unwrap();
         assert_eq!(c.placement().shard_count(h), 2);
         // a filler allocation evicts exactly one LRU shard of `big`
         let filler = rand_tensor(&mut rng, 8, 100);
-        let hf = c.alloc_tensor(&filler, 8).unwrap();
+        let hf = c.alloc_tensor(&filler, Dtype::INT8).unwrap();
         let stats = c.data_stats();
         assert!(
             stats.shard_evictions >= 1,
@@ -180,15 +181,15 @@ fn prop_fused_sink_matches_host_epilogue() {
         let wt: Vec<Vec<i64>> = (0..k).map(|_| rand_tensor(&mut rng, 8, n)).collect();
         let bias: Vec<i64> = (0..n).map(|_| rng.int(6)).collect();
         let segments: Vec<MatSeg> = c
-            .matmul_segments(8, k)
+            .matmul_segments(Dtype::INT8, k)
             .into_iter()
             .map(|(k0, k1)| {
                 let slab: Vec<i64> =
                     wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
-                MatSeg { k0, k1, handle: c.alloc_tensor_replicated(&slab, 8, 2).unwrap() }
+                MatSeg { k0, k1, handle: c.alloc_tensor_replicated(&slab, Dtype::INT8, 2).unwrap() }
             })
             .collect();
-        let act = c.alloc_activation(m * n, 8, n).unwrap();
+        let act = c.alloc_activation(m * n, Dtype::INT8, n).unwrap();
         let r = c
             .run(Job {
                 id: 0,
@@ -222,5 +223,56 @@ fn prop_fused_sink_matches_host_epilogue() {
         for seg in segments {
             c.free_tensor(seg.handle).unwrap();
         }
+    }
+}
+
+#[test]
+fn prop_int4_sharded_tensor_packs_and_survives_eviction() {
+    // the int4 twins of the sharding properties: packed shards hold twice
+    // the elements per reserve row, shard tables stay contiguous, and a
+    // single-shard eviction degrades to a partial host fallback with the
+    // tensor still reading back bit-exactly
+    for seed in 0..6u64 {
+        // 32-row reserves: 320 int4 elements per shard (vs 160 at int8)
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 32);
+        let mut rng = Prng::new(0x14C + seed);
+        let big: Vec<i64> = (0..600).map(|_| rng.int(4)).collect();
+        let h = c.alloc_tensor(&big, Dtype::INT4).unwrap();
+        assert_eq!(
+            c.placement().shard_count(h),
+            2,
+            "seed {seed}: 600 int4 elements = two 320-capacity shards"
+        );
+        let ranges = c.placement().shard_ranges(h);
+        assert_eq!(ranges[0], (0, 320), "seed {seed}: packed shard capacity");
+        assert_eq!(c.read_tensor(h).unwrap(), big, "seed {seed}");
+        // evict one shard with a filler; the rest stays resident
+        let filler: Vec<i64> = (0..200).map(|_| rng.int(4)).collect();
+        let hf = c.alloc_tensor(&filler, Dtype::INT4).unwrap();
+        assert!(c.data_stats().shard_evictions >= 1, "seed {seed}");
+        assert!(!c.placement().homes(h).is_empty(), "seed {seed}: partial fallback");
+        assert_eq!(c.read_tensor(h).unwrap(), big, "seed {seed} after eviction");
+        assert_eq!(c.read_tensor(hf).unwrap(), filler, "seed {seed}");
+        // compute against the partially evicted int4 tensor
+        let other: Vec<i64> = (0..600).map(|_| rng.int(4)).collect();
+        let r = c
+            .run(Job {
+                id: 0,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 4,
+                    a: OperandRef::Tensor(h),
+                    b: OperandRef::Values(other.clone()),
+                },
+            })
+            .unwrap();
+        for i in 0..600 {
+            let expect = comperam::util::sext(
+                comperam::util::mask(big[i] + other[i], 4) as i64,
+                4,
+            );
+            assert_eq!(r.values[i], expect, "seed {seed} i={i}");
+        }
+        assert_eq!(c.read_tensor(h).unwrap(), big, "seed {seed} after compute");
     }
 }
