@@ -15,6 +15,9 @@
 //!   pipelined MLP's layer-1 jobs move **zero** host bytes out — only the
 //!   final logits cross the boundary — at equal-or-lower wall-clock than
 //!   the host-roundtrip pipeline, bit-exact.
+//!
+//! Every measurement lands in the `serving` section of the repo-root
+//! `BENCH_serving.json` (see `util::benchkit::write_bench_json`).
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
@@ -22,7 +25,7 @@ use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg, Mat
 use comperam::cram::{ops, CramBlock};
 use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
 use comperam::nn::{MlpBf16, MlpInt8};
-use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::benchkit::{bench, black_box, ops_per_sec, write_bench_json};
 use comperam::util::{Prng, SoftBf16};
 
 fn main() {
@@ -459,5 +462,15 @@ fn main() {
     println!(
         "  -> packed int4 storage: {rows4} rows / {bytes4} host bytes vs \
          int8's {rows8} rows / {bytes8} bytes for the same 200 values",
+    );
+
+    // persist the run into the repo-root perf trajectory (the `serving`
+    // section of BENCH_serving.json)
+    write_bench_json(
+        "serving",
+        &[
+            m_cold, m_hot, m_farm, m_serial, m_piped, m_minline, m_mres, m_mlp, m_round,
+            m_fused, m_i8, m_bf, m_bmlp,
+        ],
     );
 }

@@ -2,23 +2,34 @@
 //!
 //! * bit-line array sense + write-back (word-parallel lane math);
 //! * controller dispatch (instructions/second);
+//! * trace executor vs step interpreter on library kernels — the
+//!   acceptance target is >= 3x controller-dispatch throughput
+//!   (instructions/s) for trace-executed kernels;
 //! * full-block microcode runs (column-bit-ops/second) — the DESIGN.md
 //!   target is >= 1e8 column-bit-ops/s on the array inner loop;
 //! * coordinator fan-out across a farm;
 //! * fabric flow (place + route + time) per design.
+//!
+//! Every measurement lands in the `simcore` section of the repo-root
+//! `BENCH_serving.json` (see `util::benchkit::write_bench_json`). Set
+//! `BENCH_SMOKE=1` for a seconds-long validation run (CI does); the >= 3x
+//! dispatch assertion is enforced only on full-quality runs.
 
 use comperam::baseline::designs::{baseline_design, BaselineKind};
 use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use comperam::coordinator::{Coordinator, Job, JobPayload};
 use comperam::cram::{ops, CramBlock};
 use comperam::ctrl::{Controller, InstrMem};
-use comperam::exec::{CompiledKernel, KernelCache, KernelKey, KernelOp};
+use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
 use comperam::fabric::{implement, FpgaArch};
 use comperam::ucode;
-use comperam::util::benchkit::{bench, black_box, ops_per_sec};
+use comperam::util::benchkit::{bench, black_box, ops_per_sec, write_bench_json};
 use comperam::util::{LaneVec, Prng};
 
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let mut ms = Vec::new();
+
     // 1. raw array primitive
     let mut arr = BitlineArray::new(Geometry::G512x40);
     let mut periph = ColumnPeriph::new(40);
@@ -36,6 +47,7 @@ fn main() {
         ops_per_sec(1, &m) / 1e6,
         ops_per_sec(40, &m) / 1e9
     );
+    ms.push(m);
 
     // 2. controller dispatch rate on a loop-heavy program
     let (prog, _) = ucode::int::add(Geometry::G512x40, 8);
@@ -49,8 +61,57 @@ fn main() {
     });
     // 21 tuples x 9 array cycles + overhead ~ 336 cycles/run
     println!("  -> {:.1} M sim-cycles/s", ops_per_sec(336, &m) / 1e6);
+    ms.push(m);
 
-    // 3. full-block dot (the heaviest microcode)
+    // 3. trace executor vs step interpreter: pure controller dispatch on
+    // the serving kernels (the trace engine's acceptance criterion). Both
+    // sides run the same pre-loaded program on a persistent array, so the
+    // difference is exactly fetch/decode/loop-stack vs the flat trace.
+    let geom = Geometry::G512x40;
+    let cases = [
+        ("dot_i8 k=30", CompiledKernel::compile(KernelKey::int_dot(Dtype::INT8, 32, 30, geom))),
+        ("mac_bf16 x40", CompiledKernel::compile(KernelKey::bf16_mac_sized(40, geom))),
+    ];
+    for (label, kernel) in &cases {
+        for (pi, phase) in kernel.phases.iter().enumerate() {
+            let trace = kernel.trace(pi).expect("library kernels are fully traceable");
+            let instrs = trace.stats().instructions;
+            let mut imem = InstrMem::new();
+            imem.load_config(&phase.instrs).unwrap();
+            let mut arr_i = BitlineArray::new(geom);
+            let mut per_i = ColumnPeriph::new(geom.cols());
+            let m_interp = bench(&format!("dispatch {label} p{pi}  step interpreter"), || {
+                per_i.reset();
+                let mut ctrl = Controller::new();
+                black_box(ctrl.run(&imem, &mut arr_i, &mut per_i, 50_000_000).unwrap());
+            });
+            let mut arr_t = BitlineArray::new(geom);
+            let mut per_t = ColumnPeriph::new(geom.cols());
+            let m_trace = bench(&format!("dispatch {label} p{pi}  trace executor"), || {
+                per_t.reset();
+                black_box(trace.execute(&mut arr_t, &mut per_t));
+            });
+            let ratio = m_interp.mean.as_secs_f64() / m_trace.mean.as_secs_f64();
+            println!(
+                "  -> {:.1} M instr/s interpreted vs {:.1} M instr/s traced = {ratio:.2}x \
+                 (acceptance target >= 3x, {instrs} instrs/run, {} micro-ops)",
+                ops_per_sec(instrs, &m_interp) / 1e6,
+                ops_per_sec(instrs, &m_trace) / 1e6,
+                trace.len(),
+            );
+            if !smoke {
+                assert!(
+                    ratio >= 3.0,
+                    "acceptance: trace dispatch must be >= 3x the interpreter \
+                     on {label} p{pi}, got {ratio:.2}x"
+                );
+            }
+            ms.push(m_interp);
+            ms.push(m_trace);
+        }
+    }
+
+    // 4. full-block dot (the heaviest microcode)
     let mut rng = Prng::new(0x51);
     let a: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
     let b: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
@@ -64,8 +125,9 @@ fn main() {
         ops_per_sec(array_cycles * 40, &m) / 1e9,
         array_cycles
     );
+    ms.push(m);
 
-    // 4. coordinator fan-out
+    // 5. coordinator fan-out
     let coord = Coordinator::new(Geometry::G512x40, 8);
     let n = 1680 * 8;
     let av: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
@@ -86,23 +148,26 @@ fn main() {
         );
     });
     println!("  -> {:.2} M adds/s through the farm", ops_per_sec(n as u64, &m) / 1e6);
+    ms.push(m);
 
-    // 5. kernel cache: assembly cost vs cached lookup (the exec layer's
+    // 6. kernel cache: assembly cost vs cached lookup (the exec layer's
     // setup amortization; see benches/serving.rs for the end-to-end win)
     let key = KernelKey::int_ew_full(KernelOp::IntMul, comperam::Dtype::INT8, Geometry::G512x40);
-    bench("kernel assembly mul_i8 (cache miss path)", || {
+    ms.push(bench("kernel assembly mul_i8 (cache miss path)", || {
         black_box(CompiledKernel::compile(key));
-    });
+    }));
     let cache = KernelCache::new();
     cache.get(key);
-    bench("kernel cache hit mul_i8 (Arc clone)", || {
+    ms.push(bench("kernel cache hit mul_i8 (Arc clone)", || {
         black_box(cache.get(key));
-    });
+    }));
 
-    // 6. fabric flow
+    // 7. fabric flow
     let arch = FpgaArch::agilex_like();
     let d = baseline_design(BaselineKind::DotI4 { k: 60 });
-    bench("fabric place+route+time (dot baseline netlist)", || {
+    ms.push(bench("fabric place+route+time (dot baseline netlist)", || {
         black_box(implement(&arch, &d.netlist, black_box(1)).unwrap());
-    });
+    }));
+
+    write_bench_json("simcore", &ms);
 }

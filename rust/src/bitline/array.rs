@@ -249,6 +249,73 @@ impl BitlineArray {
         }
     }
 
+    // -- fused trace macro-ops (§Perf): one call per fused run ---------------
+    //
+    // The trace compiler ([`crate::exec::KernelTrace`]) collapses runs of
+    // unpredicated post-increment ops into these block kernels. They compute
+    // exactly what the per-instruction kernels above compute, in the same
+    // per-word order, so array and latch state come out bit-identical.
+
+    /// Fused run of `w` unpredicated full-adder/subtractor cycles walking
+    /// `a0+k, b0+k -> d0+k` for `k in 0..w` — the bit-serial ripple of a
+    /// W-bit add. Executed word-major: for each 64-column word block the
+    /// carry rides in a scalar register across all `w` bit-rows instead of
+    /// round-tripping the carry `LaneVec` per row. Equivalent to the
+    /// row-major interpreter order because step `k` touches only word `i`
+    /// of its rows during pass `i`, and within a pass the `k` order is
+    /// preserved (the carry chain is per-column).
+    pub fn ripple_sweep(
+        &mut self,
+        a0: usize,
+        b0: usize,
+        d0: usize,
+        w: usize,
+        subtract: bool,
+        periph: &mut super::ColumnPeriph,
+    ) {
+        let (carry, _) = periph.carry_and_mask();
+        let nw = carry.word_len();
+        for i in 0..nw {
+            let tail = self.rows[a0].tail_mask(i);
+            let mut c = carry.word(i);
+            for k in 0..w {
+                let mut wa = self.rows[a0 + k].word(i);
+                if subtract {
+                    wa = !wa & tail;
+                }
+                let wb = self.rows[b0 + k].word(i);
+                let axb = wa ^ wb;
+                self.rows[d0 + k].set_word(i, axb ^ c);
+                c = (wa & wb) | (axb & c);
+            }
+            carry.set_word(i, c);
+        }
+    }
+
+    /// Fused run of `n` unpredicated `CopyRow` cycles (`a0+j -> d0+j`),
+    /// row-at-a-time in program order so overlapping ranges stay exact.
+    pub fn block_copy(&mut self, a0: usize, d0: usize, n: usize) {
+        for j in 0..n {
+            let (src, dst) = (a0 + j, d0 + j);
+            if src == dst {
+                continue;
+            }
+            for i in 0..self.rows[src].word_len() {
+                let v = self.rows[src].word(i);
+                self.rows[dst].set_word(i, v);
+            }
+        }
+    }
+
+    /// Fused run of `n` unpredicated `Zero` cycles (`d0..d0+n`).
+    pub fn block_zero(&mut self, d0: usize, n: usize) {
+        for j in 0..n {
+            for w in self.rows[d0 + j].words_mut() {
+                *w = 0;
+            }
+        }
+    }
+
     /// Masked write of a latch plane (carry or tag snapshot) into `rd`.
     #[inline]
     pub fn write_plane_inplace(
@@ -332,6 +399,59 @@ mod tests {
         let mask = LaneVec::from_fn(40, |i| i < 10);
         arr.write_back(5, &ones, &mask);
         assert_eq!(arr.read_row(5).count_ones(), 10);
+    }
+
+    #[test]
+    fn ripple_sweep_matches_per_row_fas() {
+        use super::super::ColumnPeriph;
+        // 72 columns: two packed words with a partial tail
+        let mut a = BitlineArray::new(Geometry::G285x72);
+        for r in 0..24 {
+            let v = LaneVec::from_fn(72, |i| (i * 31 + r * 7) % 5 < 2);
+            a.write_row(r, &v);
+        }
+        let mut b = a.clone();
+        for &subtract in &[false, true] {
+            let mut pa = ColumnPeriph::new(72);
+            let mut pb = ColumnPeriph::new(72);
+            if subtract {
+                pa.set_carry();
+                pb.set_carry();
+            }
+            for k in 0..8 {
+                pa.resolve_mask(crate::isa::Pred::Always);
+                a.fas_inplace(k, 8 + k, 16 + k, &mut pa, subtract);
+            }
+            b.ripple_sweep(0, 8, 16, 8, subtract, &mut pb);
+            for r in 16..24 {
+                assert_eq!(a.read_row(r), b.read_row(r), "row {r} subtract={subtract}");
+            }
+            assert_eq!(pa.carry(), pb.carry(), "carry-out subtract={subtract}");
+        }
+    }
+
+    #[test]
+    fn block_copy_and_zero_match_per_row_moves() {
+        use super::super::ColumnPeriph;
+        let mut a = BitlineArray::new(Geometry::G512x40);
+        for r in 0..6 {
+            let v = LaneVec::from_fn(40, |i| (i + r) % 3 == 0);
+            a.write_row(r, &v);
+        }
+        let mut b = a.clone();
+        let mut p = ColumnPeriph::new(40);
+        for j in 0..6 {
+            p.resolve_mask(crate::isa::Pred::Always);
+            a.move_inplace(0, j, 10 + j, &p);
+        }
+        b.block_copy(0, 10, 6);
+        for r in 10..16 {
+            assert_eq!(a.read_row(r), b.read_row(r), "copy row {r}");
+        }
+        a.block_zero(0, 6);
+        for r in 0..6 {
+            assert!(a.read_row(r).is_zero(), "zero row {r}");
+        }
     }
 
     #[test]

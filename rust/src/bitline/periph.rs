@@ -112,6 +112,16 @@ impl ColumnPeriph {
         self.tag = row.not();
     }
 
+    /// `TLDN` hot path (§Perf): complement straight from the row's packed
+    /// words into the tag latch — no `LaneVec` clones on the way.
+    #[inline]
+    pub(crate) fn load_tag_not_inplace(&mut self, row: &LaneVec) {
+        debug_assert_eq!(row.len(), self.cols);
+        for i in 0..self.tag.word_len() {
+            self.tag.set_word(i, !row.word(i) & row.tail_mask(i));
+        }
+    }
+
     /// `TNOT` — complement the tag latch.
     pub fn invert_tag(&mut self) {
         self.tag = self.tag.not();
@@ -282,6 +292,18 @@ mod tests {
         assert_eq!(p.mask(Pred::Tag), lanes(&[0, 1, 0, 1]));
         p.load_tag_not(&lanes(&[0, 1, 1, 1]));
         assert_eq!(p.mask(Pred::Tag), lanes(&[1, 0, 0, 0]));
+    }
+
+    #[test]
+    fn inplace_tag_complement_matches_allocating() {
+        // 70 lanes: exercises the partial tail word
+        let row = LaneVec::from_fn(70, |i| (i * 13) % 3 == 0);
+        let mut a = ColumnPeriph::new(70);
+        let mut b = ColumnPeriph::new(70);
+        a.load_tag_not(&row);
+        b.load_tag_not_inplace(&row);
+        assert_eq!(a.tag(), b.tag());
+        assert_eq!(b.tag().count_ones(), 70 - row.count_ones());
     }
 
     #[test]

@@ -361,6 +361,16 @@ impl BlockFarm {
         self.blocks.iter().map(|b| b.lock().unwrap().program_loads()).sum()
     }
 
+    /// Trace-engine effectiveness across all blocks:
+    /// `(trace_hits, interp_fallbacks)` — kernel runs executed from a
+    /// pre-compiled micro-op trace vs. the step interpreter.
+    pub fn trace_stats(&self) -> (u64, u64) {
+        self.blocks.iter().fold((0, 0), |(h, f), b| {
+            let b = b.lock().unwrap();
+            (h + b.trace_hits(), f + b.interp_fallbacks())
+        })
+    }
+
     /// Compile (or fetch) the kernels for `keys` into the shared cache so
     /// the first batch does not pay assembly.
     pub fn prewarm(&self, keys: &[KernelKey]) {
@@ -879,8 +889,52 @@ fn resolve_x_rows(
     }
 }
 
+/// Per-worker reusable state, living for the worker thread's whole life:
+/// the last kernel handle the worker resolved (consecutive same-key tasks
+/// — the common case under the affinity router — skip the shared cache's
+/// lock entirely) and the dot-tile expansion buffers, whose allocations
+/// survive from tile to tile instead of being rebuilt per task.
+struct WorkerScratch {
+    kernel: Option<Arc<CompiledKernel>>,
+    a: Vec<Vec<i64>>,
+    b: Vec<Vec<i64>>,
+}
+
+impl WorkerScratch {
+    fn new() -> Self {
+        WorkerScratch { kernel: None, a: Vec::new(), b: Vec::new() }
+    }
+
+    /// Resolve `key` through the per-worker memo, falling back to (and
+    /// re-priming from) the shared cache on a key change.
+    fn resolve(&mut self, cache: &KernelCache, key: KernelKey) -> Arc<CompiledKernel> {
+        match &self.kernel {
+            Some(k) if k.key == key => Arc::clone(k),
+            _ => {
+                let k = cache.get(key);
+                self.kernel = Some(Arc::clone(&k));
+                k
+            }
+        }
+    }
+}
+
+/// Shape a scratch tile buffer to `kseg` rows of `ncols`, keeping the row
+/// allocations it already holds.
+fn shape_tile(buf: &mut Vec<Vec<i64>>, kseg: usize, ncols: usize) {
+    buf.truncate(kseg);
+    for row in buf.iter_mut() {
+        row.clear();
+        row.resize(ncols, 0);
+    }
+    while buf.len() < kseg {
+        buf.push(vec![0i64; ncols]);
+    }
+}
+
 /// Expand a matmul tile into the two dot operands block-side: column `c`
-/// of the batch is output `(c / n, c % n)`.
+/// of the batch is output `(c / n, c % n)`. Fills the caller's scratch
+/// buffers instead of allocating.
 #[allow(clippy::too_many_arguments)]
 fn expand_dot_tile(
     xrows: &[Vec<i64>],
@@ -891,10 +945,12 @@ fn expand_dot_tile(
     c0: usize,
     c1: usize,
     kseg: usize,
-) -> (Vec<Vec<i64>>, Vec<Vec<i64>>) {
+    a: &mut Vec<Vec<i64>>,
+    b: &mut Vec<Vec<i64>>,
+) {
     let ncols = c1 - c0;
-    let mut a = vec![vec![0i64; ncols]; kseg];
-    let mut b = vec![vec![0i64; ncols]; kseg];
+    shape_tile(a, kseg, ncols);
+    shape_tile(b, kseg, ncols);
     for (ci, c) in (c0..c1).enumerate() {
         let xi = c / n - i0;
         let j = c % n;
@@ -903,7 +959,6 @@ fn expand_dot_tile(
             brow[ci] = slab[kk * n + j];
         }
     }
-    (a, b)
 }
 
 /// The storage reserve is only safe if no kernel body can reach it.
@@ -920,15 +975,18 @@ fn check_kernel_fits(kernel: &CompiledKernel, placement: &PlacementMap) -> Resul
     Ok(())
 }
 
-/// Execute one task on one worker's block using cached kernels.
+/// Execute one task on one worker's block using cached kernels. `scratch`
+/// amortizes per-task dispatch: the kernel handle is memoized per worker
+/// and the dot-tile buffers are reused across tiles.
 fn run_task(
     worker: usize,
     block: &mut CramBlock,
     cache: &KernelCache,
     placement: &PlacementMap,
+    scratch: &mut WorkerScratch,
     task: &BlockTask,
 ) -> Result<TaskRun> {
-    let kernel = cache.get(task.key());
+    let kernel = scratch.resolve(cache, task.key());
     check_kernel_fits(&kernel, placement)?;
     match task {
         BlockTask::IntElementwise { key, a, b } => {
@@ -1040,8 +1098,9 @@ fn run_task(
             let ncols = c1 - c0;
             // expand both dot operands block-side: at most `x` crossed the
             // host boundary, and only once per tile
-            let (a, b) = expand_dot_tile(&xrows, 0, &slab, i0, n, c0, c1, kseg);
-            let r = ops::int_dot_compiled(block, &kernel, &a, &b)?;
+            let WorkerScratch { a, b, .. } = scratch;
+            expand_dot_tile(&xrows, 0, &slab, i0, n, c0, c1, kseg, a, b);
+            let r = ops::int_dot_compiled(block, &kernel, a, b)?;
             let acc_dt = Dtype::Int { w: kernel.dot_layout()?.acc_w };
             Ok(TaskRun {
                 values: r.values[..ncols].to_vec(),
@@ -1075,8 +1134,9 @@ fn run_task(
                 ensure!(slab.len() == kseg * n, "weight slab length mismatch");
                 bytes_in += in_w;
                 hits += hit_w;
-                let (a, b) = expand_dot_tile(&xrows, seg.k0, &slab, i0, n, c0, c1, kseg);
-                let r = ops::int_dot_compiled(block, &seg_kernel, &a, &b)?;
+                let WorkerScratch { a, b, .. } = scratch;
+                expand_dot_tile(&xrows, seg.k0, &slab, i0, n, c0, c1, kseg, a, b);
+                let r = ops::int_dot_compiled(block, &seg_kernel, a, b)?;
                 // combine the partials block-side, in the same int32
                 // wraparound the host reduction uses — bit-exact either way
                 for (ci, v) in r.values[..ncols].iter().enumerate() {
@@ -1154,6 +1214,9 @@ fn worker_loop(
     residency: &ResidencyMap,
     placement: &PlacementMap,
 ) {
+    // per-worker scratch outlives every task: the memoized kernel handle
+    // and the tile buffers amortize dispatch across a stream of tasks
+    let mut scratch = WorkerScratch::new();
     loop {
         let env = {
             let mut st = shared.state.lock().unwrap();
@@ -1210,7 +1273,7 @@ fn worker_loop(
             // worker keeps serving. The old scoped-thread barrier
             // propagated the panic; a persistent engine must not die.
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_task(index, &mut block, cache, placement, &env.task)
+                run_task(index, &mut block, cache, placement, &mut scratch, &env.task)
             }))
             .unwrap_or_else(|payload| {
                 let msg = payload
@@ -1281,6 +1344,11 @@ mod tests {
             .collect();
         let out = farm.execute(tasks).unwrap();
         assert_eq!(out.len(), 8);
+        // every library kernel is statically traceable, so all 8 runs go
+        // through the trace engine and none fall back to the interpreter
+        let (trace_hits, interp_fallbacks) = farm.trace_stats();
+        assert_eq!(trace_hits, 8);
+        assert_eq!(interp_fallbacks, 0);
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.task_index, i);
             assert!(o.values.iter().all(|&v| v == i as i64 + 1));
@@ -1324,7 +1392,9 @@ mod tests {
         farm.execute(tasks.clone()).unwrap();
         let stats = farm.kernel_cache().stats();
         assert_eq!(stats.misses, 1, "one shared compilation for 6 same-key tasks");
-        assert_eq!(stats.hits, 5);
+        // the per-worker kernel memo serves repeat keys without touching
+        // the shared cache, so hits stay below the task count
+        assert!(stats.hits <= 5, "hits {}", stats.hits);
         // each worker loaded the program at most once
         assert!(farm.program_loads() <= 2, "loads {}", farm.program_loads());
         // more batches with the same key: zero new compilations, and loads

@@ -91,6 +91,14 @@ pub struct Metrics {
     /// Shard evictions of multi-shard tensors (gauge; same source) — the
     /// signal that a large tensor degraded to a partial host fallback.
     pub shard_evictions: AtomicU64,
+    /// Kernel runs executed from a pre-compiled micro-op trace (gauge;
+    /// published from the farm's per-block counters via
+    /// [`crate::coordinator::Coordinator::metrics_snapshot`]).
+    pub trace_hits: AtomicU64,
+    /// Kernel runs that fell back to the step interpreter because no
+    /// statically resolvable trace existed (gauge; same source). Nonzero
+    /// values mean dispatch is paying full fetch/decode cost somewhere.
+    pub interp_fallbacks: AtomicU64,
     /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
     /// the widest farm seen).
     queue_depths: Mutex<Vec<DepthGauge>>,
@@ -129,6 +137,13 @@ impl Metrics {
     pub fn set_storage_gauges(&self, shards: u64, shard_evictions: u64) {
         self.shards.store(shards, Ordering::Relaxed);
         self.shard_evictions.store(shard_evictions, Ordering::Relaxed);
+    }
+
+    /// Publish the trace engine's effectiveness counters (trace-executed
+    /// runs vs. interpreter fallbacks) from the farm's per-block totals.
+    pub fn set_trace_gauges(&self, trace_hits: u64, interp_fallbacks: u64) {
+        self.trace_hits.store(trace_hits, Ordering::Relaxed);
+        self.interp_fallbacks.store(interp_fallbacks, Ordering::Relaxed);
     }
 
     /// Fold one submit-time queue-depth sample (one entry per worker) into
@@ -170,7 +185,8 @@ impl Metrics {
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
-             shards={} shard_evictions={} qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
+             shards={} shard_evictions={} trace_hits={} interp_fallbacks={} \
+             qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
             self.ops_executed.load(Ordering::Relaxed),
@@ -184,6 +200,8 @@ impl Metrics {
             self.resident_hits.load(Ordering::Relaxed),
             self.shards.load(Ordering::Relaxed),
             self.shard_evictions.load(Ordering::Relaxed),
+            self.trace_hits.load(Ordering::Relaxed),
+            self.interp_fallbacks.load(Ordering::Relaxed),
             qmax.join(","),
             qmean.join(","),
             dtypes.join(","),
@@ -242,6 +260,9 @@ mod tests {
         m.set_storage_gauges(5, 2);
         assert!(m.snapshot().contains("shards=5"));
         assert!(m.snapshot().contains("shard_evictions=2"));
+        m.set_trace_gauges(7, 1);
+        assert!(m.snapshot().contains("trace_hits=7"));
+        assert!(m.snapshot().contains("interp_fallbacks=1"));
         // per-dtype counters rode the same samples
         let by = m.dtype_counts();
         assert_eq!(by.len(), 2);

@@ -311,12 +311,15 @@ impl Coordinator {
         }
     }
 
-    /// Publish the placement map's shard gauges into [`Metrics`] and
-    /// return the one-line snapshot — the server's `stats` reply path, so
-    /// shard behaviour is observable from the wire.
+    /// Publish the placement map's shard gauges and the farm's
+    /// trace-engine counters into [`Metrics`] and return the one-line
+    /// snapshot — the server's `stats` reply path, so shard behaviour and
+    /// trace effectiveness are observable from the wire.
     pub fn metrics_snapshot(&self) -> String {
         let d = self.data_stats();
         self.metrics.set_storage_gauges(d.shards, d.shard_evictions);
+        let (trace_hits, interp_fallbacks) = self.farm.trace_stats();
+        self.metrics.set_trace_gauges(trace_hits, interp_fallbacks);
         self.metrics.snapshot()
     }
 

@@ -1415,10 +1415,12 @@ mod tests {
             .map(|x| x.as_i64().unwrap())
             .collect();
         assert_eq!(got, vec![7, 8, 9]);
-        // stats reports the data plane
+        // stats reports the data plane and the trace engine
         let v = ask(r#"{"id": 5, "op": "stats"}"#);
         let stats = v.get("stats").and_then(Json::as_str).unwrap();
         assert!(stats.contains("resident_hits"), "{stats}");
+        assert!(stats.contains("trace_hits="), "{stats}");
+        assert!(stats.contains("interp_fallbacks=0"), "{stats}");
         // free, then the handle is gone
         let v = ask(&format!(r#"{{"id": 6, "op": "free", "handle": {h}}}"#));
         assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");

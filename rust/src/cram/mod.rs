@@ -58,6 +58,12 @@ pub struct CramBlock {
     /// residency-aware, chained). The kernel-cache tests observe this to
     /// prove cache hits skip `load_program` entirely.
     program_loads: u64,
+    /// Kernel phases executed via a pre-compiled trace (§Perf).
+    trace_hits: u64,
+    /// Kernel phases that fell back to the step interpreter because no
+    /// trace was available. Nonzero values on a serving farm mean some
+    /// workload regressed to the slow path.
+    interp_fallbacks: u64,
 }
 
 impl CramBlock {
@@ -72,6 +78,8 @@ impl CramBlock {
             running: false,
             total_stats: CycleStats::default(),
             program_loads: 0,
+            trace_hits: 0,
+            interp_fallbacks: 0,
         }
     }
 
@@ -240,6 +248,96 @@ impl CramBlock {
             total.instructions += s.instructions;
         }
         Ok(total)
+    }
+
+    // ---- trace-aware execution (§Perf) ---------------------------------------
+
+    /// Run a single-phase compiled kernel to completion: via its
+    /// pre-compiled trace when one exists, via the step interpreter
+    /// otherwise. Same port protocol, same resulting array/latch state and
+    /// bit-identical [`CycleStats`] either way; the trace just skips the
+    /// per-instruction fetch/decode/loop-stack work. The caller stages
+    /// operands and sets compute mode exactly as for [`Self::run_to_done`].
+    pub fn run_kernel(&mut self, kernel: &CompiledKernel, max_cycles: u64) -> Result<CycleStats> {
+        match kernel.trace(0) {
+            Some(trace) if trace.rows() == self.array.rows() => {
+                self.run_trace(trace, max_cycles)
+            }
+            _ => {
+                self.interp_fallbacks += 1;
+                self.run_to_done(max_cycles)
+            }
+        }
+    }
+
+    /// Run a multi-phase kernel with the dynamic instruction-memory reload
+    /// between phases, executing each phase's trace when available.
+    /// Observable behavior matches [`Self::run_chained`] on the kernel's
+    /// phases: same per-phase `program_loads`, same imem contents, same
+    /// summed statistics.
+    pub fn run_chained_kernel(
+        &mut self,
+        kernel: &CompiledKernel,
+        max_cycles: u64,
+    ) -> Result<CycleStats> {
+        let mut total = CycleStats::default();
+        for (phase, prog) in kernel.phases.iter().enumerate() {
+            self.set_mode(Mode::Storage)?;
+            self.program_loads += 1;
+            for (i, instr) in prog.instrs.iter().enumerate() {
+                self.write_imem_word(i, instr.encode())?;
+            }
+            self.set_mode(Mode::Compute)?;
+            let s = match kernel.trace(phase) {
+                Some(trace) if trace.rows() == self.array.rows() => {
+                    self.run_trace(trace, max_cycles)?
+                }
+                _ => {
+                    self.interp_fallbacks += 1;
+                    self.run_to_done(max_cycles)?
+                }
+            };
+            total.cycles += s.cycles;
+            total.array_cycles += s.array_cycles;
+            total.instructions += s.instructions;
+        }
+        Ok(total)
+    }
+
+    /// Execute one pre-compiled trace under the block's port protocol.
+    fn run_trace(&mut self, trace: &crate::exec::KernelTrace, max_cycles: u64) -> Result<CycleStats> {
+        if self.mode != Mode::Compute {
+            bail!("start asserted in storage mode");
+        }
+        if self.imem.is_empty() {
+            bail!("start with empty instruction memory");
+        }
+        // the interpreter's budget guard runs before every tick, so its
+        // last observable value is the pre-Halt count (total - 1): a run
+        // completes iff `total - 1 <= max_cycles`
+        if trace.stats().cycles.saturating_sub(1) > max_cycles {
+            bail!("computation exceeded cycle budget {max_cycles}");
+        }
+        self.ctrl.reset();
+        self.periph.reset();
+        let s = trace.execute(&mut self.array, &mut self.periph);
+        // keep `last_run_stats` truthful for trace runs too
+        self.ctrl.adopt_stats(s);
+        self.total_stats.cycles += s.cycles;
+        self.total_stats.array_cycles += s.array_cycles;
+        self.total_stats.instructions += s.instructions;
+        self.trace_hits += 1;
+        Ok(s)
+    }
+
+    /// Kernel phases executed via a pre-compiled trace.
+    pub fn trace_hits(&self) -> u64 {
+        self.trace_hits
+    }
+
+    /// Kernel phases that fell back to the step interpreter.
+    pub fn interp_fallbacks(&self) -> u64 {
+        self.interp_fallbacks
     }
 
     /// The `reset` input port: abort any in-flight computation and return
@@ -440,6 +538,85 @@ mod tests {
         b.write_imem_word(0, Instr::Halt.encode()).unwrap();
         assert!(b.ensure_kernel(&other).unwrap());
         assert_eq!(b.program_loads(), 3);
+    }
+
+    #[test]
+    fn run_kernel_traces_and_matches_interpreter() {
+        use crate::exec::{CompiledKernel, Dtype, KernelKey, KernelOp};
+        let geom = Geometry::G512x40;
+        let key = KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, 40, geom);
+        let kernel = CompiledKernel::compile(key);
+        let stage = |b: &mut CramBlock| {
+            let l = kernel.vec_layout().unwrap();
+            crate::bitline::transpose::store_ints(
+                b.array_mut(),
+                &(0..40).map(|i| i - 20).collect::<Vec<i64>>(),
+                8,
+                0,
+                l.tuple_bits,
+            );
+            crate::bitline::transpose::store_ints(
+                b.array_mut(),
+                &(0..40).map(|i| 3 * i - 10).collect::<Vec<i64>>(),
+                8,
+                8,
+                l.tuple_bits,
+            );
+        };
+        // trace path
+        let mut bt = CramBlock::new(geom);
+        stage(&mut bt);
+        bt.ensure_kernel(&kernel).unwrap();
+        bt.set_mode(Mode::Compute).unwrap();
+        let st = bt.run_kernel(&kernel, 1_000_000).unwrap();
+        assert_eq!(bt.trace_hits(), 1);
+        assert_eq!(bt.interp_fallbacks(), 0);
+        assert_eq!(bt.last_run_stats(), st, "trace runs report through last_run_stats");
+        assert_eq!(bt.total_stats(), st);
+        // forced interpreter path on an identical block
+        let mut stripped = CompiledKernel::compile(key);
+        stripped.strip_traces();
+        let mut bi = CramBlock::new(geom);
+        stage(&mut bi);
+        bi.ensure_kernel(&stripped).unwrap();
+        bi.set_mode(Mode::Compute).unwrap();
+        let si = bi.run_kernel(&stripped, 1_000_000).unwrap();
+        assert_eq!(bi.trace_hits(), 0);
+        assert_eq!(bi.interp_fallbacks(), 1);
+        assert_eq!(st, si, "analytic stats match the interpreter");
+        for r in 0..64 {
+            assert_eq!(bt.array().read_row(r), bi.array().read_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn run_chained_kernel_matches_run_chained() {
+        use crate::exec::{CompiledKernel, KernelKey};
+        let geom = Geometry::G512x40;
+        let kernel = CompiledKernel::compile(KernelKey::bf16_mac_sized(40, geom));
+        let mut bt = CramBlock::new(geom);
+        let mut bi = CramBlock::new(geom);
+        let st = bt.run_chained_kernel(&kernel, 50_000_000).unwrap();
+        let si = bi.run_chained(&kernel.phases, 50_000_000).unwrap();
+        assert_eq!(st, si);
+        assert_eq!(bt.program_loads(), bi.program_loads(), "per-phase load accounting");
+        assert_eq!(bt.trace_hits(), 2, "both MAC phases trace");
+        for r in 0..geom.rows() {
+            assert_eq!(bt.array().read_row(r), bi.array().read_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn trace_run_honors_cycle_budget() {
+        use crate::exec::{CompiledKernel, Dtype, KernelKey, KernelOp};
+        let geom = Geometry::G512x40;
+        let kernel =
+            CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT8, geom));
+        let mut b = CramBlock::new(geom);
+        b.ensure_kernel(&kernel).unwrap();
+        b.set_mode(Mode::Compute).unwrap();
+        assert!(b.run_kernel(&kernel, 10).is_err(), "budget bail, like the interpreter");
+        assert!(b.run_kernel(&kernel, 50_000_000).is_ok());
     }
 
     #[test]

@@ -73,7 +73,7 @@ pub fn int_ew_compiled(
     transpose::store_ints(block.array_mut(), b, l.w, l.w as usize, l.tuple_bits);
     block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
-    let stats = block.run_to_done(BUDGET)?;
+    let stats = block.run_kernel(kernel, BUDGET)?;
     block.set_mode(Mode::Storage)?;
     let values =
         transpose::load_ints(block.array(), a.len(), l.result_w, l.r_row(0), l.tuple_bits);
@@ -108,7 +108,7 @@ pub fn int_dot_compiled(
     transpose::store_dot_operand(block.array_mut(), b, l.w, l.w as usize, l.pair_bits);
     block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
-    let stats = block.run_to_done(BUDGET)?;
+    let stats = block.run_kernel(kernel, BUDGET)?;
     block.set_mode(Mode::Storage)?;
     let values = transpose::load_ints(block.array(), a[0].len(), l.acc_w, l.acc_row, 0);
     Ok(OpResult { values, stats })
@@ -142,7 +142,7 @@ pub fn bf16_ew_compiled(
     transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
     block.ensure_kernel(kernel)?;
     block.set_mode(Mode::Compute)?;
-    let stats = block.run_to_done(BUDGET)?;
+    let stats = block.run_kernel(kernel, BUDGET)?;
     block.set_mode(Mode::Storage)?;
     // functional value path (see module docs): deposit exact bf16 results
     let values: Vec<SoftBf16> = a
@@ -178,7 +178,7 @@ pub fn bf16_mac_compiled(
     transpose::store_bf16(block.array_mut(), a, 0, l.tuple_bits);
     transpose::store_bf16(block.array_mut(), b, 16, l.tuple_bits);
     transpose::store_bf16(block.array_mut(), c, 32, l.tuple_bits);
-    let stats = block.run_chained(&kernel.phases, BUDGET)?;
+    let stats = block.run_chained_kernel(kernel, BUDGET)?;
     block.set_mode(Mode::Storage)?;
     let values: Vec<SoftBf16> =
         a.iter().zip(b).zip(c).map(|((&x, &y), &z)| z.mac(x, y)).collect();

@@ -36,6 +36,12 @@ pub struct InstrMem {
     /// [`InstrMem::mark_resident`] sets it. Purely host-side bookkeeping —
     /// no modeled hardware state.
     resident: Option<u64>,
+    /// Per-address `Loopi`/`Loopr` -> past-matching-`EndL` skip targets,
+    /// rebuilt on every write (§Perf): the loop controller pre-decodes the
+    /// match at load time so a zero-trip loop skips its body in one cycle
+    /// instead of rescanning the instruction stream per execution. Entry 0
+    /// means "no matching `EndL`" (a real skip target is always >= 2).
+    loop_skip: [u16; IMEM_CAPACITY],
 }
 
 impl Default for InstrMem {
@@ -52,6 +58,37 @@ impl InstrMem {
             decoded: [None; IMEM_CAPACITY],
             loaded_len: 0,
             resident: None,
+            loop_skip: [0; IMEM_CAPACITY],
+        }
+    }
+
+    /// Rebuild the `Loopi`/`Loopr` -> `EndL` match table from the decoded
+    /// mirror. A single stack pass pairs each loop open with the `EndL`
+    /// that closes it (nesting-aware); opens that never close keep the 0
+    /// sentinel and fault at execution, matching the old per-run scan.
+    fn rebuild_loop_skip(&mut self) {
+        self.loop_skip = [0; IMEM_CAPACITY];
+        let mut open: Vec<usize> = Vec::new();
+        for pc in 0..IMEM_CAPACITY {
+            match self.decoded[pc] {
+                Some(Instr::Loopi { .. }) | Some(Instr::Loopr { .. }) => open.push(pc),
+                Some(Instr::EndL) => {
+                    if let Some(start) = open.pop() {
+                        self.loop_skip[start] = (pc + 1) as u16;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Skip target for a zero-trip loop at `pc`: the address just past the
+    /// matching `EndL`, or `None` if the loop never closes.
+    #[inline]
+    pub fn loop_skip(&self, pc: usize) -> Option<usize> {
+        match self.loop_skip.get(pc) {
+            Some(&t) if t != 0 => Some(t as usize),
+            _ => None,
         }
     }
 
@@ -72,6 +109,7 @@ impl InstrMem {
         }
         self.loaded_len = prog.len();
         self.resident = None;
+        self.rebuild_loop_skip();
         Ok(())
     }
 
@@ -84,6 +122,7 @@ impl InstrMem {
         self.decoded[addr] = Instr::decode(word);
         self.loaded_len = self.loaded_len.max(addr + 1);
         self.resident = None;
+        self.rebuild_loop_skip();
         Ok(())
     }
 
@@ -198,6 +237,28 @@ mod tests {
         m.clear_residency();
         assert_eq!(m.resident_kernel(), None, "explicit clear invalidates");
         assert_eq!(m.len(), 1, "clear touches only the marker");
+    }
+
+    #[test]
+    fn loop_skip_table_matches_nesting() {
+        let mut m = InstrMem::new();
+        // 0: loopi 2, 1: loopi 3, 2: nop, 3: endl, 4: endl, 5: halt
+        m.load_config(&[
+            Instr::Loopi { count: 2 },
+            Instr::Loopi { count: 3 },
+            Instr::Nop,
+            Instr::EndL,
+            Instr::EndL,
+            Instr::Halt,
+        ])
+        .unwrap();
+        assert_eq!(m.loop_skip(0), Some(5), "outer skips past both ENDLs");
+        assert_eq!(m.loop_skip(1), Some(4), "inner skips past its own ENDL");
+        assert_eq!(m.loop_skip(2), None, "non-loop addresses have no target");
+        // overwrite the outer ENDL: the outer loop no longer closes
+        m.write_word(4, Instr::Nop.encode()).unwrap();
+        assert_eq!(m.loop_skip(0), None, "table rebuilt on bus writes");
+        assert_eq!(m.loop_skip(1), Some(4));
     }
 
     #[test]

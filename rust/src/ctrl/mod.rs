@@ -80,6 +80,15 @@ impl Controller {
         self.stats
     }
 
+    /// Adopt an externally computed run's statistics. Used by the trace
+    /// executor ([`crate::exec::KernelTrace`]): the trace carries analytic
+    /// `CycleStats`, and adopting them here keeps
+    /// [`crate::cram::CramBlock::last_run_stats`] truthful for trace runs.
+    pub(crate) fn adopt_stats(&mut self, stats: CycleStats) {
+        self.stats = stats;
+        self.halted = true;
+    }
+
     pub fn pc(&self) -> usize {
         self.pc
     }
@@ -180,22 +189,12 @@ impl Controller {
 
     fn enter_loop(&mut self, count: u16, imem: &InstrMem) -> Result<()> {
         if count == 0 {
-            // zero-trip loop: the loop controller skips the body by scanning
-            // to the matching ENDL (pre-decoded at loop setup; no extra cycles)
-            let mut depth = 1usize;
-            let mut pc = self.pc + 1;
-            while depth > 0 {
-                if pc >= IMEM_CAPACITY {
-                    bail!("controller fault: LOOP with no matching ENDL");
-                }
-                match imem.fetch(pc) {
-                    Some(Instr::Loopi { .. }) | Some(Instr::Loopr { .. }) => depth += 1,
-                    Some(Instr::EndL) => depth -= 1,
-                    _ => {}
-                }
-                pc += 1;
-            }
-            self.pc = pc;
+            // zero-trip loop: the match table is pre-decoded at load time,
+            // so the loop controller skips the body in this one cycle
+            let Some(skip) = imem.loop_skip(self.pc) else {
+                bail!("controller fault: LOOP with no matching ENDL");
+            };
+            self.pc = skip;
             return Ok(());
         }
         if self.loop_stack.len() >= LOOP_DEPTH {
@@ -306,8 +305,7 @@ impl Controller {
             }
             Tldn { ra, inc } => {
                 let a = row!(ra);
-                let (_, blb) = array.sense_one(a);
-                periph.load_tag(&blb);
+                periph.load_tag_not_inplace(array.read_row(a));
                 bump!(inc, ra);
             }
             Wrc { rd, pred, inc } => {

@@ -1,7 +1,7 @@
 //! Kernel identity ([`KernelKey`]) and the compiled artifact
 //! ([`CompiledKernel`]).
 
-use super::Dtype;
+use super::{Dtype, KernelTrace};
 use crate::bitline::Geometry;
 use crate::ucode::{self, bf16 as ucbf16, DotLayout, Program, VecLayout};
 use anyhow::{bail, Result};
@@ -162,6 +162,10 @@ pub struct CompiledKernel {
     /// run with a dynamic reload between two phases.
     pub phases: Vec<Program>,
     pub layout: KernelLayout,
+    /// Pre-compiled execution traces, one per phase. `None` marks a phase
+    /// the trace compiler could not statically resolve; blocks fall back to
+    /// the step interpreter for it (see [`crate::exec::KernelTrace`]).
+    traces: Vec<Option<KernelTrace>>,
 }
 
 impl CompiledKernel {
@@ -201,11 +205,31 @@ impl CompiledKernel {
                 (phases, KernelLayout::Vec(l))
             }
         };
+        let traces = phases
+            .iter()
+            .map(|p| KernelTrace::compile(&p.instrs, geom.rows()))
+            .collect();
         CompiledKernel {
             id: NEXT_KERNEL_ID.fetch_add(1, Ordering::Relaxed),
             key,
             phases,
             layout,
+            traces,
+        }
+    }
+
+    /// The pre-compiled trace of phase `phase`, if that phase was
+    /// statically resolvable.
+    pub fn trace(&self, phase: usize) -> Option<&KernelTrace> {
+        self.traces.get(phase).and_then(|t| t.as_ref())
+    }
+
+    /// Drop all traces, forcing every run of this kernel down the step
+    /// interpreter (tests exercise the fallback path with this).
+    #[cfg(test)]
+    pub(crate) fn strip_traces(&mut self) {
+        for t in &mut self.traces {
+            *t = None;
         }
     }
 
@@ -325,6 +349,30 @@ mod tests {
         assert_eq!(sized.phases.len(), 2);
         let full = CompiledKernel::compile(KernelKey::bf16_mac(g));
         assert!(full.body_rows() > sized.body_rows());
+    }
+
+    #[test]
+    fn every_library_kernel_is_fully_traceable() {
+        // the ucode generators emit only statically resolvable control
+        // flow, so no compiled kernel should ever need the interpreter
+        let g = Geometry::G512x40;
+        let keys = [
+            KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, g),
+            KernelKey::int_ew_sized(KernelOp::IntSub, Dtype::INT4, 80, g),
+            KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT4, g),
+            KernelKey::int_dot(Dtype::INT8, 32, 30, g),
+            KernelKey::bf16_ew_full(false, g),
+            KernelKey::bf16_ew_full(true, g),
+            KernelKey::bf16_mac_sized(80, g),
+        ];
+        for key in keys {
+            let c = CompiledKernel::compile(key);
+            for (i, _) in c.phases.iter().enumerate() {
+                let t = c.trace(i).unwrap_or_else(|| panic!("{}: phase {i} untraced", c.name()));
+                assert!(!t.is_empty());
+                assert_eq!(t.rows(), g.rows());
+            }
+        }
     }
 
     #[test]

@@ -23,6 +23,10 @@
 //! * The [`ResidencyMap`] lifts residency from a per-block accident into a
 //!   scheduling property: the farm's affinity router tracks which kernel
 //!   each worker holds and sends tasks to a matching worker first.
+//! * A [`KernelTrace`] per phase (built at compile time, cached with the
+//!   kernel) replaces the controller's fetch/decode/loop-stack work with a
+//!   flat, fused micro-op stream and analytic cycle statistics; blocks run
+//!   it when present and fall back to the step interpreter otherwise.
 //! * The [`PlacementMap`] does the same for **data**: resident tensors
 //!   ([`TensorHandle`]) live in per-block storage reserves, tasks that
 //!   reference them are routed to the worker holding a replica (data
@@ -44,10 +48,12 @@ pub mod dtype;
 pub mod kernel;
 pub mod placement;
 pub mod residency;
+pub mod trace;
 
 pub use cache::{CacheStats, KernelCache};
 pub use dtype::Dtype;
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
+pub use trace::{KernelTrace, MicroOp};
 pub use placement::{
     DataStats, PlacementMap, SlicePart, SliceResolution, TensorHandle, TensorSlice,
 };

@@ -1,0 +1,519 @@
+//! Trace-compiled kernel execution (§Perf).
+//!
+//! Compiled kernels are completely static: every `Loopi` count, every
+//! `Movi`/`Addi`/`Addr` register value and every post-increment bump is
+//! known at compile time. Paying the full `Controller::step`
+//! fetch/decode/loop-stack path for each of their array cycles is therefore
+//! pure overhead — the same amortize-the-static-structure argument GEMM
+//! dataflow accelerators make for their schedules.
+//!
+//! [`KernelTrace::compile`] symbolically executes the controller over a
+//! program once, flattening it into a linear [`MicroOp`] vector with row
+//! addresses fully resolved and bounds-checked, then fuses recurring idioms
+//! into macro-ops:
+//!
+//! * a run of W unpredicated post-increment `Fas`/`Fss` steps becomes one
+//!   [`MicroOp::RippleSweep`] — executed word-major with the carry in a
+//!   scalar register ([`BitlineArray::ripple_sweep`]);
+//! * runs of unpredicated `CopyRow`/`Zero` become single
+//!   [`MicroOp::BlockCopy`]/[`MicroOp::BlockZero`] moves.
+//!
+//! The trace carries **analytic [`CycleStats`]** counted during symbolic
+//! execution with the interpreter's exact rules, so a trace run reports
+//! bit-identical cycle numbers without counting anything at run time.
+//!
+//! Anything not statically resolvable — `Loopr`/`Brnz`/`Brz` on runtime
+//! register values, loop-stack overflow, out-of-range rows, a fetch past
+//! the program — makes `compile` return `None`, and the caller falls back
+//! to the step interpreter (which reproduces the fault or handles the
+//! dynamic control flow).
+
+use crate::bitline::{BitlineArray, ColumnPeriph};
+use crate::ctrl::{CycleStats, LOOP_DEPTH};
+use crate::isa::{Instr, LogicOp, Pred};
+
+/// Symbolic-execution step budget: a backstop against runaway raw programs
+/// handed to the trace compiler. Far above any real kernel (the largest
+/// library kernels flatten to tens of thousands of dynamic instructions);
+/// exceeding it returns `None` and the interpreter's own cycle budget
+/// handles the program at run time.
+const COMPILE_STEP_BUDGET: u64 = 4_000_000;
+
+/// One pre-decoded trace operation: a fully resolved array command, or a
+/// fused macro-op covering a whole run of them.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MicroOp {
+    /// Fused `w`-step full-adder/subtractor ripple (`a0+k, b0+k -> d0+k`).
+    RippleSweep { a0: usize, b0: usize, d0: usize, w: usize, subtract: bool },
+    /// Fused unpredicated row-range copy (`a0+j -> d0+j` for `j in 0..n`).
+    BlockCopy { a0: usize, d0: usize, n: usize },
+    /// Fused unpredicated row-range zero (`d0..d0+n`).
+    BlockZero { d0: usize, n: usize },
+    /// Single full-adder/subtractor cycle (unfused: predicated or isolated).
+    Fas { a: usize, b: usize, d: usize, pred: Pred, subtract: bool },
+    Logic { op: LogicOp, a: usize, b: usize, d: usize, pred: Pred },
+    NotRow { a: usize, d: usize, pred: Pred },
+    CopyRow { a: usize, d: usize, pred: Pred },
+    Zero { d: usize, pred: Pred },
+    Clc,
+    Sec,
+    Tnot,
+    Tcar,
+    Tld { a: usize },
+    Tldn { a: usize },
+    Wrc { d: usize, pred: Pred },
+    Wrt { d: usize, pred: Pred },
+}
+
+/// A compiled execution trace: the flattened, fused micro-op sequence plus
+/// the analytic cycle statistics of the run it replaces.
+#[derive(Clone, Debug)]
+pub struct KernelTrace {
+    ops: Vec<MicroOp>,
+    stats: CycleStats,
+    /// Row count the addresses were bounds-checked against; a trace only
+    /// runs on arrays with exactly this many rows.
+    rows: usize,
+}
+
+impl KernelTrace {
+    /// Symbolically execute `prog` against an array of `rows` rows.
+    ///
+    /// Returns `None` when the program is not statically resolvable (see
+    /// module docs) — the caller keeps the step interpreter as fallback.
+    pub fn compile(prog: &[Instr], rows: usize) -> Option<KernelTrace> {
+        let mut regs = [0u16; 8];
+        let mut pc = 0usize;
+        let mut loop_stack: Vec<(usize, u16)> = Vec::new();
+        let mut stats = CycleStats::default();
+        let mut ops: Vec<MicroOp> = Vec::new();
+        loop {
+            if stats.instructions >= COMPILE_STEP_BUDGET {
+                return None;
+            }
+            // a fetch past the program is the interpreter's invalid-fetch fault
+            let instr = *prog.get(pc)?;
+            stats.instructions += 1;
+            if !matches!(instr, Instr::EndL) {
+                stats.cycles += 1;
+            }
+            if instr.is_array_op() {
+                stats.array_cycles += 1;
+                ops.push(lower_array(instr, &mut regs, rows)?);
+                pc += 1;
+                continue;
+            }
+            use Instr::*;
+            match instr {
+                Halt => break,
+                Nop => pc += 1,
+                Movi { rd, imm } => {
+                    regs[rd as usize] = imm as u16;
+                    pc += 1;
+                }
+                MoviH { rd, imm } => {
+                    let r = &mut regs[rd as usize];
+                    *r = ((imm as u16) << 8) | (*r & 0xFF);
+                    pc += 1;
+                }
+                Addi { rd, imm } => {
+                    let r = &mut regs[rd as usize];
+                    *r = r.wrapping_add(imm as i16 as u16);
+                    pc += 1;
+                }
+                Addr { rd, rs } => {
+                    regs[rd as usize] = regs[rd as usize].wrapping_add(regs[rs as usize]);
+                    pc += 1;
+                }
+                Movr { rd, rs } => {
+                    regs[rd as usize] = regs[rs as usize];
+                    pc += 1;
+                }
+                Loopi { count } => {
+                    if count == 0 {
+                        pc = skip_loop(prog, pc)?;
+                    } else {
+                        if loop_stack.len() >= LOOP_DEPTH {
+                            return None; // interpreter faults here
+                        }
+                        loop_stack.push((pc + 1, count as u16));
+                        pc += 1;
+                    }
+                }
+                EndL => {
+                    // empty loop stack is the interpreter's ENDL fault
+                    let (start, remaining) = loop_stack.last_mut()?;
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        loop_stack.pop();
+                        pc += 1;
+                    } else {
+                        pc = *start;
+                    }
+                }
+                // runtime-value control flow: not statically resolvable
+                Loopr { .. } | Brnz { .. } | Brz { .. } => return None,
+                _ => unreachable!("array op handled above"),
+            }
+        }
+        Some(KernelTrace { ops: fuse(ops), stats, rows })
+    }
+
+    /// Execute the trace against an array + peripherals. No fetch, no
+    /// decode, no loop stack: one match per (possibly fused) micro-op.
+    ///
+    /// The caller resets the peripherals first (as `CramBlock::start`
+    /// does); the returned stats are the precomputed analytic counts.
+    pub fn execute(&self, array: &mut BitlineArray, periph: &mut ColumnPeriph) -> CycleStats {
+        debug_assert_eq!(array.rows(), self.rows, "trace compiled for another geometry");
+        for &op in &self.ops {
+            match op {
+                MicroOp::RippleSweep { a0, b0, d0, w, subtract } => {
+                    array.ripple_sweep(a0, b0, d0, w, subtract, periph);
+                }
+                MicroOp::BlockCopy { a0, d0, n } => array.block_copy(a0, d0, n),
+                MicroOp::BlockZero { d0, n } => array.block_zero(d0, n),
+                MicroOp::Fas { a, b, d, pred, subtract } => {
+                    periph.resolve_mask(pred);
+                    array.fas_inplace(a, b, d, periph, subtract);
+                }
+                MicroOp::Logic { op, a, b, d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.logic_inplace(op, a, b, d, periph);
+                }
+                MicroOp::NotRow { a, d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.move_inplace(1, a, d, periph);
+                }
+                MicroOp::CopyRow { a, d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.move_inplace(0, a, d, periph);
+                }
+                MicroOp::Zero { d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.move_inplace(2, 0, d, periph);
+                }
+                MicroOp::Clc => periph.clear_carry(),
+                MicroOp::Sec => periph.set_carry(),
+                MicroOp::Tnot => periph.invert_tag(),
+                MicroOp::Tcar => periph.tag_from_carry(),
+                MicroOp::Tld { a } => {
+                    periph.tag_mut().copy_from_words(array.read_row(a).words());
+                }
+                MicroOp::Tldn { a } => periph.load_tag_not_inplace(array.read_row(a)),
+                MicroOp::Wrc { d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.write_plane_inplace(false, d, periph);
+                }
+                MicroOp::Wrt { d, pred } => {
+                    periph.resolve_mask(pred);
+                    array.write_plane_inplace(true, d, periph);
+                }
+            }
+        }
+        self.stats
+    }
+
+    /// Analytic cycle statistics of one execution of this trace.
+    pub fn stats(&self) -> CycleStats {
+        self.stats
+    }
+
+    /// Row count the trace was compiled (and bounds-checked) against.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of micro-ops after fusion.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Micro-op view (diagnostics and tests).
+    pub fn ops(&self) -> &[MicroOp] {
+        &self.ops
+    }
+}
+
+/// Resolve one array instruction's row operands against the symbolic
+/// registers, emit the unfused micro-op, and apply the post-increment
+/// bumps. `None` on an out-of-range row (the interpreter's fault).
+fn lower_array(instr: Instr, regs: &mut [u16; 8], rows: usize) -> Option<MicroOp> {
+    macro_rules! row {
+        ($r:expr) => {{
+            let v = regs[$r as usize] as usize;
+            if v >= rows {
+                return None;
+            }
+            v
+        }};
+    }
+    // post-increment each *distinct* pointer register once (same rule as
+    // `Controller::exec_array`)
+    fn bump_regs(regs: &mut [u16; 8], rs: &[u8]) {
+        let mut seen = [false; 8];
+        for &r in rs {
+            if !seen[r as usize] {
+                seen[r as usize] = true;
+                regs[r as usize] = regs[r as usize].wrapping_add(1);
+            }
+        }
+    }
+    macro_rules! bump {
+        ($inc:expr, $($r:expr),+) => {
+            if $inc {
+                bump_regs(regs, &[$($r),+]);
+            }
+        };
+    }
+    use Instr::*;
+    Some(match instr {
+        Fas { ra, rb, rd, pred, inc } => {
+            let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+            bump!(inc, ra, rb, rd);
+            MicroOp::Fas { a, b, d, pred, subtract: false }
+        }
+        Fss { ra, rb, rd, pred, inc } => {
+            let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+            bump!(inc, ra, rb, rd);
+            MicroOp::Fas { a, b, d, pred, subtract: true }
+        }
+        Logic { op, ra, rb, rd, pred, inc } => {
+            let (a, b, d) = (row!(ra), row!(rb), row!(rd));
+            bump!(inc, ra, rb, rd);
+            MicroOp::Logic { op, a, b, d, pred }
+        }
+        NotRow { ra, rd, pred, inc } => {
+            let (a, d) = (row!(ra), row!(rd));
+            bump!(inc, ra, rd);
+            MicroOp::NotRow { a, d, pred }
+        }
+        CopyRow { ra, rd, pred, inc } => {
+            let (a, d) = (row!(ra), row!(rd));
+            bump!(inc, ra, rd);
+            MicroOp::CopyRow { a, d, pred }
+        }
+        Zero { rd, pred, inc } => {
+            let d = row!(rd);
+            bump!(inc, rd);
+            MicroOp::Zero { d, pred }
+        }
+        Clc => MicroOp::Clc,
+        Sec => MicroOp::Sec,
+        Tnot => MicroOp::Tnot,
+        Tcar => MicroOp::Tcar,
+        Tld { ra, inc } => {
+            let a = row!(ra);
+            bump!(inc, ra);
+            MicroOp::Tld { a }
+        }
+        Tldn { ra, inc } => {
+            let a = row!(ra);
+            bump!(inc, ra);
+            MicroOp::Tldn { a }
+        }
+        Wrc { rd, pred, inc } => {
+            let d = row!(rd);
+            bump!(inc, rd);
+            MicroOp::Wrc { d, pred }
+        }
+        Wrt { rd, pred, inc } => {
+            let d = row!(rd);
+            bump!(inc, rd);
+            MicroOp::Wrt { d, pred }
+        }
+        _ => unreachable!("non-array op routed to lower_array"),
+    })
+}
+
+/// Zero-trip `Loopi`: scan to just past the matching `EndL` within the
+/// program (nesting-aware). `None` when the loop never closes — the
+/// interpreter's "LOOP with no matching ENDL" fault.
+fn skip_loop(prog: &[Instr], pc: usize) -> Option<usize> {
+    let mut depth = 1usize;
+    let mut p = pc + 1;
+    while depth > 0 {
+        match prog.get(p)? {
+            Instr::Loopi { .. } | Instr::Loopr { .. } => depth += 1,
+            Instr::EndL => depth -= 1,
+            _ => {}
+        }
+        p += 1;
+    }
+    Some(p)
+}
+
+/// Peephole fusion over the flat micro-op stream.
+///
+/// Rules (all require `Pred::Always` — predicated ops never fuse):
+///
+/// * >= 2 consecutive `Fas` with the same `subtract` flag whose `a`/`b`/`d`
+///   each advance by exactly +1 per step -> [`MicroOp::RippleSweep`].
+///   Word-major execution is order-equivalent (see
+///   [`BitlineArray::ripple_sweep`]); the carry latch state flows in and
+///   the final per-column carry is written back, so a preceding `Clc`/`Sec`
+///   and any later `Wrc`/carry-predicated op see exactly the interpreter's
+///   values.
+/// * >= 2 consecutive `CopyRow` with `a`/`d` advancing by +1 ->
+///   [`MicroOp::BlockCopy`] (executed in program order, overlap-safe).
+/// * >= 2 consecutive `Zero` with `d` advancing by +1 ->
+///   [`MicroOp::BlockZero`].
+fn fuse(ops: Vec<MicroOp>) -> Vec<MicroOp> {
+    let mut out = Vec::with_capacity(ops.len());
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            MicroOp::Fas { a, b, d, pred: Pred::Always, subtract } => {
+                let mut w = 1;
+                while let Some(&MicroOp::Fas {
+                    a: a2,
+                    b: b2,
+                    d: d2,
+                    pred: Pred::Always,
+                    subtract: s2,
+                }) = ops.get(i + w)
+                {
+                    if s2 == subtract && a2 == a + w && b2 == b + w && d2 == d + w {
+                        w += 1;
+                    } else {
+                        break;
+                    }
+                }
+                if w >= 2 {
+                    out.push(MicroOp::RippleSweep { a0: a, b0: b, d0: d, w, subtract });
+                } else {
+                    out.push(ops[i]);
+                }
+                i += w;
+            }
+            MicroOp::CopyRow { a, d, pred: Pred::Always } => {
+                let mut n = 1;
+                while let Some(&MicroOp::CopyRow { a: a2, d: d2, pred: Pred::Always }) =
+                    ops.get(i + n)
+                {
+                    if a2 == a + n && d2 == d + n {
+                        n += 1;
+                    } else {
+                        break;
+                    }
+                }
+                if n >= 2 {
+                    out.push(MicroOp::BlockCopy { a0: a, d0: d, n });
+                } else {
+                    out.push(ops[i]);
+                }
+                i += n;
+            }
+            MicroOp::Zero { d, pred: Pred::Always } => {
+                let mut n = 1;
+                while let Some(&MicroOp::Zero { d: d2, pred: Pred::Always }) = ops.get(i + n) {
+                    if d2 == d + n {
+                        n += 1;
+                    } else {
+                        break;
+                    }
+                }
+                if n >= 2 {
+                    out.push(MicroOp::BlockZero { d0: d, n });
+                } else {
+                    out.push(ops[i]);
+                }
+                i += n;
+            }
+            op => {
+                out.push(op);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitline::Geometry;
+    use crate::ctrl::{Controller, InstrMem};
+    use crate::isa::asm::assemble;
+
+    fn compile_asm(src: &str, rows: usize) -> Option<KernelTrace> {
+        KernelTrace::compile(&assemble(src).unwrap(), rows)
+    }
+
+    #[test]
+    fn fuses_clc_fas_run_into_ripple_sweep() {
+        let t = compile_asm(
+            "movi r1, 0\nmovi r2, 8\nmovi r3, 16\nclc\nloopi 8\nfas @r1+, @r2+, @r3+\nendl\nhalt",
+            512,
+        )
+        .unwrap();
+        assert_eq!(
+            t.ops(),
+            &[
+                MicroOp::Clc,
+                MicroOp::RippleSweep { a0: 0, b0: 8, d0: 16, w: 8, subtract: false }
+            ]
+        );
+        // clc + 8 fas array cycles; 3 movi + clc + loopi + 8 fas + halt cycles
+        assert_eq!(t.stats().array_cycles, 9);
+        assert_eq!(t.stats().cycles, 3 + 1 + 1 + 8 + 1);
+    }
+
+    #[test]
+    fn predicated_ops_do_not_fuse() {
+        let t = compile_asm(
+            "movi r1, 0\nmovi r2, 8\nmovi r3, 16\nloopi 4\nfas @r1+, @r2+, @r3+ ?t\nendl\nhalt",
+            512,
+        )
+        .unwrap();
+        assert_eq!(t.ops().len(), 4);
+        assert!(t
+            .ops()
+            .iter()
+            .all(|op| matches!(op, MicroOp::Fas { pred: Pred::Tag, .. })));
+    }
+
+    #[test]
+    fn untraceable_programs_return_none() {
+        // Loopr: count is a runtime register value
+        assert!(compile_asm("movi r1, 3\nloopr r1\nnop\nendl\nhalt", 512).is_none());
+        // Brnz: runtime branch
+        assert!(compile_asm("movi r1, 1\naddi r1, -1\nbrnz r1, -1\nhalt", 512).is_none());
+        // out-of-range row (faults in the interpreter too)
+        assert!(compile_asm("movi r1, 255\nmovih r1, 255\ncopy @r1, @r2\nhalt", 512).is_none());
+        // missing halt: runs off the end
+        assert!(compile_asm("nop\nnop", 512).is_none());
+    }
+
+    #[test]
+    fn trace_matches_interpreter_on_an_add_program() {
+        let src = "movi r1, 0\nmovi r2, 8\nmovi r3, 16\nclc\nloopi 8\nfas @r1+, @r2+, @r3+\nendl\nwrc @r3\nhalt";
+        let prog = assemble(src).unwrap();
+        let geom = Geometry::G512x40;
+        let mut arr_i = BitlineArray::new(geom);
+        for r in 0..16 {
+            for c in 0..40 {
+                arr_i.set_bit(r, c, (r * 7 + c * 3) % 4 < 2);
+            }
+        }
+        let mut arr_t = arr_i.clone();
+        let mut per_i = ColumnPeriph::new(40);
+        let mut per_t = ColumnPeriph::new(40);
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        let si = ctrl.run(&imem, &mut arr_i, &mut per_i, 1_000_000).unwrap();
+        let trace = KernelTrace::compile(&prog, geom.rows()).unwrap();
+        let st = trace.execute(&mut arr_t, &mut per_t);
+        assert_eq!(si, st, "analytic stats match the interpreter");
+        for r in 0..24 {
+            assert_eq!(arr_i.read_row(r), arr_t.read_row(r), "row {r}");
+        }
+        assert_eq!(per_i.carry(), per_t.carry());
+        assert_eq!(per_i.tag(), per_t.tag());
+    }
+}

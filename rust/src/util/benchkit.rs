@@ -5,7 +5,20 @@
 //! prints one `bench: <name> ...` line per measurement plus the paper-table
 //! rows it regenerates, so `cargo bench | tee bench_output.txt` captures both
 //! machine-readable timings and the reproduced tables.
+//!
+//! Beyond the console lines, every bench target persists its measurements
+//! into **`BENCH_serving.json` at the repository root** via
+//! [`write_bench_json`]: one `sections` entry per target, replaced
+//! wholesale on each run so the file is a self-updating perf trajectory —
+//! commit it alongside perf-relevant changes and the diff *is* the
+//! before/after. Setting the `BENCH_SMOKE` environment variable shrinks
+//! the calibration target (~200ms -> ~10ms per measurement) so CI can
+//! smoke-run a bench target and validate the JSON without paying full
+//! measurement quality.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One timed measurement.
@@ -30,12 +43,15 @@ impl Measurement {
 /// Run `f` with warmup, auto-scaling iteration count to target ~200ms of
 /// total measured time (capped), then report statistics over per-iter times.
 pub fn bench(name: &str, mut f: impl FnMut()) -> Measurement {
-    // Warmup + calibration.
+    // Warmup + calibration. BENCH_SMOKE trades measurement quality for
+    // wall-clock so CI can validate a whole bench target in seconds.
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let t0 = Instant::now();
     f();
     let one = t0.elapsed().max(Duration::from_nanos(50));
-    let target = Duration::from_millis(200);
-    let iters = ((target.as_nanos() / one.as_nanos()).clamp(5, 1000)) as u32;
+    let target = Duration::from_millis(if smoke { 10 } else { 200 });
+    let (lo, cap) = if smoke { (3, 20) } else { (5, 1000) };
+    let iters = ((target.as_nanos() / one.as_nanos()).clamp(lo, cap)) as u32;
 
     let mut samples = Vec::with_capacity(iters as usize);
     for _ in 0..iters {
@@ -76,6 +92,63 @@ pub fn ops_per_sec(ops: u64, m: &Measurement) -> f64 {
     ops as f64 / m.mean.as_secs_f64()
 }
 
+/// Location of the persistent perf trajectory: `BENCH_serving.json` at the
+/// repository root (the parent of the cargo manifest dir, so it sits next
+/// to `DESIGN.md` rather than inside `rust/`).
+pub fn bench_json_path() -> PathBuf {
+    let manifest = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".to_string());
+    let mut p = PathBuf::from(manifest);
+    p.pop();
+    p.push("BENCH_serving.json");
+    p
+}
+
+/// Serialize one measurement into its JSON record.
+fn measurement_json(m: &Measurement) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("iters".to_string(), Json::Int(m.iters as i64));
+    o.insert("mean_ns".to_string(), Json::Int(m.mean.as_nanos() as i64));
+    o.insert("stddev_ns".to_string(), Json::Int(m.stddev.as_nanos() as i64));
+    o.insert("min_ns".to_string(), Json::Int(m.min.as_nanos() as i64));
+    o.insert("ops_per_sec_1".to_string(), Json::Num(ops_per_sec(1, m)));
+    Json::Obj(o)
+}
+
+/// Merge `section` (one bench target's measurements, keyed by bench name)
+/// into `BENCH_serving.json`, replacing that section wholesale and leaving
+/// the others untouched, so each `cargo bench --bench <target>` run
+/// refreshes only its own slice of the trajectory. Write failures are
+/// reported, not fatal: a read-only checkout still gets console output.
+pub fn write_bench_json(section: &str, measurements: &[Measurement]) {
+    let path = bench_json_path();
+    let mut root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.as_obj().cloned())
+        .unwrap_or_default();
+    root.insert("version".to_string(), Json::Int(1));
+    root.insert(
+        "generated".to_string(),
+        Json::Str("cargo bench (comperam benchkit)".to_string()),
+    );
+    let mut sections = root
+        .get("sections")
+        .and_then(Json::as_obj)
+        .cloned()
+        .unwrap_or_default();
+    let mut entries = BTreeMap::new();
+    for m in measurements {
+        entries.insert(m.name.clone(), measurement_json(m));
+    }
+    sections.insert(section.to_string(), Json::Obj(entries));
+    root.insert("sections".to_string(), Json::Obj(sections));
+    let text = Json::Obj(root).dump();
+    match std::fs::write(&path, text + "\n") {
+        Ok(()) => println!("perf trajectory: {} section updated in {}", section, path.display()),
+        Err(e) => eprintln!("perf trajectory: could not write {}: {e}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +164,34 @@ mod tests {
         });
         assert!(m.iters >= 5);
         assert!(m.mean >= m.min);
+    }
+
+    #[test]
+    fn bench_json_path_sits_at_the_repo_root() {
+        let p = bench_json_path();
+        assert_eq!(p.file_name().unwrap(), "BENCH_serving.json");
+        // under cargo the parent is the manifest dir's parent (repo root),
+        // i.e. not the rust/ crate dir itself
+        if std::env::var("CARGO_MANIFEST_DIR").is_ok() {
+            assert_ne!(p.parent().unwrap().file_name().unwrap(), "rust");
+        }
+    }
+
+    #[test]
+    fn measurement_json_has_the_wire_fields() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_millis(2),
+            stddev: Duration::from_micros(3),
+            min: Duration::from_millis(1),
+        };
+        let j = measurement_json(&m);
+        assert_eq!(j.get("iters").and_then(Json::as_i64), Some(10));
+        assert_eq!(j.get("mean_ns").and_then(Json::as_i64), Some(2_000_000));
+        assert_eq!(j.get("stddev_ns").and_then(Json::as_i64), Some(3_000));
+        assert_eq!(j.get("min_ns").and_then(Json::as_i64), Some(1_000_000));
+        assert!(j.get("ops_per_sec_1").and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]
