@@ -14,16 +14,21 @@
 //! * on-fabric activation flow (the sharded-residency layer): the fused
 //!   pipelined MLP's layer-1 jobs move **zero** host bytes out — only the
 //!   final logits cross the boundary — at equal-or-lower wall-clock than
-//!   the host-roundtrip pipeline, bit-exact.
+//!   the host-roundtrip pipeline, bit-exact;
+//! * hybrid routing (the exec router + cost model): a mixed request
+//!   stream under `route=auto` must be bit-identical to both pure
+//!   policies and no slower than the cheaper of pure-PIM / pure-host,
+//!   plus a small-shape crossover sweep of the model's predictions.
 //!
 //! Every measurement lands in the `serving` section of the repo-root
 //! `BENCH_serving.json` (see `util::benchkit::write_bench_json`).
 
 use comperam::bitline::Geometry;
 use comperam::coordinator::job::EwOp;
-use comperam::coordinator::{Coordinator, Job, JobHandle, JobPayload, MatSeg, MatX};
+use comperam::coordinator::{mapper, Coordinator, Job, JobHandle, JobPayload, MatSeg, MatX};
+use comperam::cost::HostCostModel;
 use comperam::cram::{ops, CramBlock};
-use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
+use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp, Route};
 use comperam::nn::{MlpBf16, MlpInt8};
 use comperam::util::benchkit::{bench, black_box, ops_per_sec, write_bench_json};
 use comperam::util::{Prng, SoftBf16};
@@ -464,13 +469,123 @@ fn main() {
          int8's {rows8} rows / {bytes8} bytes for the same 200 values",
     );
 
+    // ---- hybrid routing: auto vs pure-PIM vs pure-host --------------------
+    // The router's payoff, end to end: a mixed request stream where small
+    // inline ops are cheaper on the calibrated host fast path (the
+    // simulator pays tens of ns per simulated cycle) while the farm still
+    // takes whatever the model prices lower. All three routes must return
+    // bit-identical values; auto must not lose to either pure policy.
+    let hcoord = Coordinator::new(geom, 4);
+    hcoord.prewarm_serving();
+    let hmix: Vec<Job> = {
+        let iv = |rng: &mut Prng, n: usize| (0..n).map(|_| rng.int(8)).collect::<Vec<i64>>();
+        let bfv = |rng: &mut Prng, n: usize| {
+            (0..n).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect::<Vec<SoftBf16>>()
+        };
+        vec![
+            // small add: host territory under the fitted model
+            Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: iv(&mut rng, 96),
+                    b: iv(&mut rng, 96),
+                },
+            },
+            // farm-filling add: four blocks' worth of tuples
+            Job {
+                id: 0,
+                payload: JobPayload::IntElementwise {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: iv(&mut rng, 3360),
+                    b: iv(&mut rng, 3360),
+                },
+            },
+            // one block-tile dot batch
+            Job {
+                id: 0,
+                payload: JobPayload::IntDot {
+                    w: 8,
+                    a: (0..30).map(|_| iv(&mut rng, 40)).collect(),
+                    b: (0..30).map(|_| iv(&mut rng, 40)).collect(),
+                },
+            },
+            // bf16 elementwise (bit-serial float: heavy per-element on-block)
+            Job {
+                id: 0,
+                payload: JobPayload::Bf16Elementwise {
+                    mul: true,
+                    a: bfv(&mut rng, 200),
+                    b: bfv(&mut rng, 200),
+                },
+            },
+        ]
+    };
+    let run_mix = |route: Route| -> Vec<Vec<i64>> {
+        hmix.iter().map(|j| hcoord.run_routed(j.clone(), route).unwrap().values).collect()
+    };
+    let vals_pim = run_mix(Route::Pim);
+    assert_eq!(vals_pim, run_mix(Route::Host), "host route must be bit-exact");
+    assert_eq!(vals_pim, run_mix(Route::Auto), "auto route must be bit-exact");
+    let m_hpim = bench("serving hybrid mix  route=pim", || {
+        black_box(run_mix(Route::Pim));
+    });
+    let m_hhost = bench("serving hybrid mix  route=host", || {
+        black_box(run_mix(Route::Host));
+    });
+    let m_hauto = bench("serving hybrid mix  route=auto", || {
+        black_box(run_mix(Route::Auto));
+    });
+    let floor = m_hpim.mean.min(m_hhost.mean);
+    println!(
+        "  -> hybrid routing: auto {:.2} ms vs pure-pim {:.2} ms / pure-host {:.2} ms \
+         per mix; metrics: {}",
+        m_hauto.mean.as_secs_f64() * 1e3,
+        m_hpim.mean.as_secs_f64() * 1e3,
+        m_hhost.mean.as_secs_f64() * 1e3,
+        hcoord.metrics.snapshot(),
+    );
+    // acceptance: the cost model's picks must not lose to either fixed
+    // policy (15% tolerance for scheduling noise on a loaded machine)
+    assert!(
+        m_hauto.mean.as_secs_f64() <= floor.as_secs_f64() * 1.15,
+        "auto route must track the cheaper side (auto {:?} vs floor {floor:?})",
+        m_hauto.mean
+    );
+
+    // small-shape crossover sweep: the model's two predictions side by
+    // side for single-block int8 adds of rising size, and the side auto
+    // actually took (single-block shapes -> exactly one task to dispatch)
+    let model = HostCostModel::calibrated();
+    println!("  -> crossover sweep (int8 add, single-block shapes):");
+    for n in [16usize, 64, 256, 512, 840] {
+        let a: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let b: Vec<i64> = (0..n).map(|_| rng.int(8)).collect();
+        let payload =
+            JobPayload::IntElementwise { op: EwOp::Add, w: 8, a: a.clone(), b: b.clone() };
+        let cycles = hcoord
+            .predict_pim_cycles(&payload)
+            .expect("int add kernels are fully traceable");
+        let pim_ns = model.pim_ns(1, cycles, mapper::payload_io_bytes(&payload, n));
+        let host_ns =
+            model.host_ns(mapper::payload_host_op(&payload).expect("inline op").work());
+        let r = hcoord.run_routed(Job { id: 0, payload }, Route::Auto).unwrap();
+        println!(
+            "     n={n:4}: predicted pim {pim_ns:9.0} ns ({cycles} cycles) vs \
+             host {host_ns:7.0} ns -> auto took {}",
+            if r.host_routed { "host" } else { "pim" },
+        );
+    }
+
     // persist the run into the repo-root perf trajectory (the `serving`
     // section of BENCH_serving.json)
     write_bench_json(
         "serving",
         &[
             m_cold, m_hot, m_farm, m_serial, m_piped, m_minline, m_mres, m_mlp, m_round,
-            m_fused, m_i8, m_bf, m_bmlp,
+            m_fused, m_i8, m_bf, m_bmlp, m_hpim, m_hhost, m_hauto,
         ],
     );
 }

@@ -8,7 +8,10 @@
 //! * full-block microcode runs (column-bit-ops/second) — the DESIGN.md
 //!   target is >= 1e8 column-bit-ops/s on the array inner loop;
 //! * coordinator fan-out across a farm;
-//! * fabric flow (place + route + time) per design.
+//! * fabric flow (place + route + time) per design;
+//! * the routing-calibration workloads (`cal/*` entries): persisted so
+//!   `HostCostModel::refresh_from_trajectory` can refit the hybrid
+//!   router's cost model from real measurements on this machine.
 //!
 //! Every measurement lands in the `simcore` section of the repo-root
 //! `BENCH_serving.json` (see `util::benchkit::write_bench_json`). Set
@@ -18,6 +21,7 @@
 use comperam::baseline::designs::{baseline_design, BaselineKind};
 use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use comperam::coordinator::{Coordinator, Job, JobPayload};
+use comperam::cost;
 use comperam::cram::{ops, CramBlock};
 use comperam::ctrl::{Controller, InstrMem};
 use comperam::exec::{CompiledKernel, Dtype, KernelCache, KernelKey, KernelOp};
@@ -168,6 +172,32 @@ fn main() {
     ms.push(bench("fabric place+route+time (dot baseline netlist)", || {
         black_box(implement(&arch, &d.netlist, black_box(1)).unwrap());
     }));
+
+    // 8. routing calibration: the same workloads HostCostModel::fit times
+    // at startup, persisted under their stable cal/* names so a later
+    // process refits from these higher-quality measurements
+    // (HostCostModel::refresh_from_trajectory) instead of its quick fit.
+    for (name, op, ops) in cost::cal_host_workloads() {
+        let m = bench(name, || {
+            black_box(op.execute());
+        });
+        println!("  -> {:.1} M host ops/s", ops_per_sec(ops, &m) / 1e6);
+        ms.push(m);
+    }
+    let cal_key = cost::cal_sim_kernel_key();
+    let cal_kernel = CompiledKernel::compile(cal_key);
+    let cal_cycles = comperam::exec::kernel_cycles(&cal_kernel)
+        .expect("calibration kernel is fully traceable");
+    let mut cal_block = CramBlock::new(cal_key.geometry);
+    let cal_a: Vec<i64> = (0..cost::CAL_SIM_OPS).map(|i| (i % 17) as i64 - 8).collect();
+    let m = bench(cost::CAL_SIM_TRACE, || {
+        black_box(ops::int_ew_compiled(&mut cal_block, &cal_kernel, &cal_a, &cal_a).unwrap());
+    });
+    println!(
+        "  -> {:.1} ns/simulated-cycle ({cal_cycles} cycles/run)",
+        m.mean.as_nanos() as f64 / cal_cycles as f64
+    );
+    ms.push(m);
 
     write_bench_json("simcore", &ms);
 }

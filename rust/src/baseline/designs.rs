@@ -220,6 +220,30 @@ pub fn cram_design(kind: BaselineKind, cr_cycles: u64) -> DesignPoint {
     }
 }
 
+/// Predicted wall-clock of the same workload on the serving host's
+/// calibrated fast path (see [`crate::exec::router`]): the third column of
+/// the §IV-C comparison, next to the baseline netlist and the Compute RAM.
+/// Elementwise experiments map to elementwise host work; the dot maps to
+/// MACs. Uses [`HostCostModel::host_ns`], so a model refreshed from a bench
+/// trajectory changes these numbers the same way it changes routing.
+pub fn host_fastpath_ns(kind: BaselineKind, model: &crate::cost::HostCostModel) -> f64 {
+    let geom = Geometry::G512x40;
+    let mut work = crate::exec::HostWork::default();
+    match kind {
+        BaselineKind::IntAdd { w } => {
+            work.int_ew = VecLayout::new(geom, w, w).total_ops() as u64;
+        }
+        BaselineKind::IntMul { w } => {
+            work.int_ew = VecLayout::new(geom, w, 2 * w).total_ops() as u64;
+        }
+        BaselineKind::Bf16Add | BaselineKind::Bf16Mul => work.bf16_ew = 400,
+        BaselineKind::DotI4 { k } => {
+            work.int_mac = (k * DotLayout::with_k(geom, 4, 32, k).cols) as u64;
+        }
+    }
+    model.host_ns(work)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -268,6 +292,27 @@ mod tests {
         assert_eq!(d.total_ops, 640);
         // 640 ops x 16 operand bits / 40-bit rows = 256 read rows; writes equal
         assert_eq!(d.cycles, 256 + 256 + 4);
+    }
+
+    #[test]
+    fn host_fastpath_tracks_op_counts_and_rates() {
+        let model = crate::cost::HostCostModel::default();
+        for kind in [
+            BaselineKind::IntAdd { w: 4 },
+            BaselineKind::IntMul { w: 8 },
+            BaselineKind::Bf16Add,
+            BaselineKind::DotI4 { k: 60 },
+        ] {
+            let d = baseline_design(kind);
+            let expect = d.total_ops as f64
+                * match kind {
+                    BaselineKind::Bf16Add | BaselineKind::Bf16Mul => model.ns_per_bf16_ew,
+                    BaselineKind::DotI4 { .. } => model.ns_per_int_mac,
+                    _ => model.ns_per_int_ew,
+                };
+            let got = host_fastpath_ns(kind, &model);
+            assert!((got - expect).abs() < 1e-9, "{kind:?}: {got} vs {expect}");
+        }
     }
 
     #[test]

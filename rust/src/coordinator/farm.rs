@@ -653,9 +653,14 @@ impl BlockFarm {
             depths.clear();
             depths.extend(st.queues.iter().map(VecDeque::len));
             let pin = self.pin_workers(&task);
-            let (w, pinned) = match &pin {
-                Some(homes) => (self.residency.route_among(key, &depths, homes), true),
-                None => (self.residency.route(key, &depths), false),
+            let (w, pinned) = match (&pin, key) {
+                (Some(homes), Some(key)) => {
+                    (self.residency.route_among(key, &depths, homes), true)
+                }
+                (None, Some(key)) => (self.residency.route(key, &depths), false),
+                // keyless host tasks have no kernel affinity to consult:
+                // load alone decides, and they stay unpinned and stealable
+                (_, None) => (least_loaded(&depths), false),
             };
             st.queues[w].push_back(TaskEnvelope {
                 task,
@@ -961,6 +966,17 @@ fn expand_dot_tile(
     }
 }
 
+/// The shallowest queue wins; index order breaks ties. Used for keyless
+/// host tasks, which carry no kernel the affinity router could match.
+fn least_loaded(depths: &[usize]) -> usize {
+    depths
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, d)| **d)
+        .map(|(i, _)| i)
+        .expect("farm has at least one worker")
+}
+
 /// The storage reserve is only safe if no kernel body can reach it.
 fn check_kernel_fits(kernel: &CompiledKernel, placement: &PlacementMap) -> Result<()> {
     if placement.reserve_rows() > 0 {
@@ -986,7 +1002,19 @@ fn run_task(
     scratch: &mut WorkerScratch,
     task: &BlockTask,
 ) -> Result<TaskRun> {
-    let kernel = scratch.resolve(cache, task.key());
+    // Host fast path: no kernel, no staging, no block cycles — the op runs
+    // right here on the worker thread, bit-exact with the PIM plan.
+    if let BlockTask::Host(op) = task {
+        return Ok(TaskRun {
+            values: op.execute(),
+            stats: CycleStats::default(),
+            host_bytes_in: 0,
+            host_bytes_out: 0,
+            resident_hits: 0,
+        });
+    }
+    let key = task.key().expect("non-host tasks carry a kernel key");
+    let kernel = scratch.resolve(cache, key);
     check_kernel_fits(&kernel, placement)?;
     match task {
         BlockTask::IntElementwise { key, a, b } => {
@@ -1201,6 +1229,7 @@ fn run_task(
                 resident_hits: hits,
             })
         }
+        BlockTask::Host(_) => unreachable!("host tasks return before kernel resolution"),
     }
 }
 
@@ -1263,8 +1292,10 @@ fn worker_loop(
             }
         }
         // record *actual* residency (a stolen task lands here, not where
-        // the router predicted)
-        residency.note(index, env.task.key());
+        // the router predicted); keyless host tasks leave it untouched
+        if let Some(key) = env.task.key() {
+            residency.note(index, key);
+        }
         let result = {
             let mut block = block.lock().unwrap();
             // Contain panics from the ops/ucode path: the unwind stops
@@ -1356,6 +1387,32 @@ mod tests {
             assert_eq!(o.host_bytes_out, 10);
             assert_eq!(o.resident_hits, 0);
         }
+    }
+
+    #[test]
+    fn host_tasks_run_without_touching_a_block_or_the_cache() {
+        use crate::exec::{HostEwOp, HostOp};
+        let farm = BlockFarm::new(Geometry::G512x40, 2);
+        let tasks: Vec<BlockTask> = (0..4)
+            .map(|i| {
+                BlockTask::Host(HostOp::IntElementwise {
+                    op: HostEwOp::Add,
+                    w: 8,
+                    a: vec![i as i64; 6],
+                    b: vec![1; 6],
+                })
+            })
+            .collect();
+        let out = farm.execute(tasks).unwrap();
+        assert_eq!(out.len(), 4);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.task_index, i);
+            assert!(o.values.iter().all(|&v| v == i as i64 + 1));
+            assert_eq!(o.stats.cycles, 0, "host path spends no block cycles");
+            assert_eq!(o.host_bytes_in + o.host_bytes_out, 0);
+        }
+        assert!(farm.kernel_cache().is_empty(), "no kernel compiled for host tasks");
+        assert_eq!(farm.program_loads(), 0, "no program touched a block");
     }
 
     #[test]

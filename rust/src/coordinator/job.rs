@@ -1,7 +1,7 @@
 //! Workload descriptions accepted by the coordinator.
 
 use crate::ctrl::CycleStats;
-use crate::exec::{Dtype, TensorHandle};
+use crate::exec::{Dtype, HostOp, TensorHandle};
 use crate::util::SoftBf16;
 
 /// Elementwise integer operator.
@@ -130,6 +130,13 @@ pub enum JobPayload {
         /// Destination tensor (length `m * n`) for the epilogued tiles.
         sink: Option<TensorHandle>,
     },
+    /// A routed host fast-path execution: the op runs on a farm worker
+    /// thread without touching a block, bit-exact with the PIM plan for
+    /// the same payload (see [`crate::exec::router`]). Produced by the
+    /// mapper when a job is routed `host` (or `auto` picks the host
+    /// side) — callers submit the ordinary payloads above and let
+    /// [`crate::coordinator::Coordinator::submit_routed`] lower them.
+    Host(HostOp),
 }
 
 impl JobPayload {
@@ -147,6 +154,7 @@ impl JobPayload {
             | JobPayload::Bf16Dot { .. }
             | JobPayload::Bf16Matmul { .. }
             | JobPayload::Bf16MatmulResident { .. } => Dtype::Bf16,
+            JobPayload::Host(op) => op.dtype(),
         }
     }
 
@@ -178,6 +186,7 @@ impl JobPayload {
                     x.m() * n
                 }
             }
+            JobPayload::Host(op) => op.result_len(),
         }
     }
 
@@ -209,6 +218,7 @@ impl JobPayload {
                 let k = segments.last().map_or(0, |s| s.k1);
                 (x.m() * k * n) as u64
             }
+            JobPayload::Host(op) => op.op_count(),
         }
     }
 }
@@ -259,6 +269,13 @@ pub struct JobResult {
     pub queue_depth_max: usize,
     /// Mean per-worker queue depth at submit time.
     pub queue_depth_mean: f64,
+    /// `true` when the job ran on the host fast path (a routed
+    /// [`JobPayload::Host`] execution) instead of block tasks.
+    pub host_routed: bool,
+    /// The router's analytic prediction of `stats.cycles` for the PIM
+    /// plan, when one was made (`auto`-routed jobs that stayed on PIM
+    /// carry it; the differential tests pin predicted == actual exactly).
+    pub predicted_cycles: Option<u64>,
 }
 
 #[cfg(test)]
@@ -282,6 +299,15 @@ mod tests {
         };
         assert_eq!(bm.result_len(), 6);
         assert_eq!(bm.op_count(), 24);
+    }
+
+    #[test]
+    fn host_payload_delegates_to_the_op() {
+        let op = HostOp::IntDot { w: 8, a: vec![vec![1; 4]; 6], b: vec![vec![1; 4]; 6] };
+        let j = JobPayload::Host(op);
+        assert_eq!(j.dtype(), Dtype::INT8);
+        assert_eq!(j.result_len(), 4);
+        assert_eq!(j.op_count(), 24);
     }
 
     #[test]

@@ -37,7 +37,11 @@
 
 use super::job::{EwOp, JobPayload, MatSeg, MatX, OperandRef};
 use crate::bitline::Geometry;
-use crate::exec::{Dtype, KernelKey, KernelOp, PlacementMap, TensorHandle, TensorSlice};
+use crate::cost::HostCostModel;
+use crate::exec::{
+    kernel_cycles, Dtype, HostEwOp, HostOp, KernelCache, KernelKey, KernelOp, PlacementMap,
+    Route, TensorHandle, TensorSlice,
+};
 use crate::ucode::{bf16 as ucbf16, DotLayout, VecLayout};
 use crate::util::SoftBf16;
 use anyhow::{bail, ensure, Result};
@@ -181,22 +185,28 @@ pub enum BlockTask {
         /// resident tensor homed on the executing worker.
         sink: Option<TensorSlice>,
     },
+    /// A routed host fast-path execution: runs `op` on the worker thread
+    /// without touching the block (no kernel, no staging, no cycles).
+    /// Keyless, unpinned and stealable — any worker may take it.
+    Host(HostOp),
 }
 
 impl BlockTask {
     /// The kernel this task is routed by (fused tasks run several kernels;
-    /// the first chunk's key drives kernel-affinity routing).
-    pub fn key(&self) -> KernelKey {
+    /// the first chunk's key drives kernel-affinity routing). `None` for
+    /// host fast-path tasks, which run no block program at all.
+    pub fn key(&self) -> Option<KernelKey> {
         match self {
             BlockTask::IntElementwise { key, .. }
             | BlockTask::IntDot { key, .. }
             | BlockTask::Bf16Elementwise { key, .. }
             | BlockTask::Bf16Dot { key, .. }
             | BlockTask::Bf16MatmulResident { key, .. }
-            | BlockTask::MatmulResident { key, .. } => *key,
+            | BlockTask::MatmulResident { key, .. } => Some(*key),
             BlockTask::MatmulFused { segs, .. } => {
-                segs.first().expect("fused task has chunks").key
+                Some(segs.first().expect("fused task has chunks").key)
             }
+            BlockTask::Host(_) => None,
         }
     }
 
@@ -246,7 +256,8 @@ impl BlockTask {
             BlockTask::Bf16MatmulResident { weights, .. } => vec![*weights],
             BlockTask::IntDot { .. }
             | BlockTask::Bf16Elementwise { .. }
-            | BlockTask::Bf16Dot { .. } => Vec::new(),
+            | BlockTask::Bf16Dot { .. }
+            | BlockTask::Host(_) => Vec::new(),
         }
     }
 }
@@ -533,6 +544,224 @@ pub fn plan(env: &PlanEnv, payload: &JobPayload) -> Result<Plan> {
                 *sink,
             )
         }
+        JobPayload::Host(op) => Ok(host_plan(op.clone())),
+    }
+}
+
+/// The single-task plan of a host fast-path execution: one keyless
+/// [`BlockTask::Host`] whose output scatters at offset 0.
+fn host_plan(op: HostOp) -> Plan {
+    let result_len = op.result_len();
+    Plan {
+        tasks: vec![BlockTask::Host(op)],
+        result_len,
+        steps: vec![ReduceStep::Scatter { offset: 0 }],
+    }
+}
+
+/// Integer elementwise operator -> host fast-path operator.
+fn host_ew_op(op: EwOp) -> HostEwOp {
+    match op {
+        EwOp::Add => HostEwOp::Add,
+        EwOp::Sub => HostEwOp::Sub,
+        EwOp::Mul => HostEwOp::Mul,
+    }
+}
+
+/// The host fast-path equivalent of a payload, when one exists. Payloads
+/// whose data lives on the fabric (tensor references, resident matmuls,
+/// fused sinks) return `None`: routing them host would ship resident data
+/// back out, defeating the placement layer — they always stay on PIM.
+pub fn payload_host_op(payload: &JobPayload) -> Option<HostOp> {
+    match payload {
+        JobPayload::IntElementwise { op, w, a, b } => Some(HostOp::IntElementwise {
+            op: host_ew_op(*op),
+            w: *w,
+            a: a.clone(),
+            b: b.clone(),
+        }),
+        JobPayload::IntDot { w, a, b } => {
+            Some(HostOp::IntDot { w: *w, a: a.clone(), b: b.clone() })
+        }
+        JobPayload::IntMatmul { w, x, wt } => {
+            Some(HostOp::IntMatmul { w: *w, x: x.clone(), wt: wt.clone() })
+        }
+        JobPayload::Bf16Elementwise { mul, a, b } => {
+            Some(HostOp::Bf16Elementwise { mul: *mul, a: a.clone(), b: b.clone() })
+        }
+        JobPayload::Bf16Dot { a, b } => {
+            Some(HostOp::Bf16Dot { a: a.clone(), b: b.clone() })
+        }
+        JobPayload::Bf16Matmul { x, wt } => {
+            Some(HostOp::Bf16Matmul { x: x.clone(), wt: wt.clone() })
+        }
+        JobPayload::IntElementwiseRef { .. }
+        | JobPayload::Bf16MatmulResident { .. }
+        | JobPayload::IntMatmulResident { .. }
+        | JobPayload::IntMatmulFused { .. }
+        | JobPayload::Host(_) => None,
+    }
+}
+
+/// Packed bytes a PIM execution of `payload` moves across the host
+/// boundary: both inline operands in, the result out (int32 accumulator
+/// results are 4 bytes each, like the farm's accounting). Only meaningful
+/// for the host-eligible payloads of [`payload_host_op`] — everything is
+/// inline there by construction.
+pub fn payload_io_bytes(payload: &JobPayload, result_len: usize) -> u64 {
+    let dt = payload.dtype();
+    let acc_out = 4 * result_len as u64;
+    match payload {
+        JobPayload::IntElementwise { op, w, a, b } => {
+            let out_w = if *op == EwOp::Mul { 2 * *w } else { *w };
+            dt.slice_bytes(a.len())
+                + dt.slice_bytes(b.len())
+                + Dtype::Int { w: out_w }.slice_bytes(result_len)
+        }
+        JobPayload::Bf16Elementwise { a, b, .. } => {
+            dt.slice_bytes(a.len()) + dt.slice_bytes(b.len()) + dt.slice_bytes(result_len)
+        }
+        JobPayload::IntDot { a, .. } => {
+            let vals = a.len() * a.first().map_or(0, Vec::len);
+            2 * dt.slice_bytes(vals) + acc_out
+        }
+        JobPayload::Bf16Dot { a, .. } => {
+            let vals = a.len() * a.first().map_or(0, Vec::len);
+            2 * dt.slice_bytes(vals) + dt.slice_bytes(result_len)
+        }
+        JobPayload::IntMatmul { x, wt, .. } => {
+            let xin = x.len() * wt.len();
+            let win = wt.len() * wt.first().map_or(0, Vec::len);
+            dt.slice_bytes(xin) + dt.slice_bytes(win) + acc_out
+        }
+        JobPayload::Bf16Matmul { x, wt } => {
+            let xin = x.len() * wt.len();
+            let win = wt.len() * wt.first().map_or(0, Vec::len);
+            dt.slice_bytes(xin) + dt.slice_bytes(win) + dt.slice_bytes(result_len)
+        }
+        _ => 0,
+    }
+}
+
+/// Analytic prediction of the total simulated cycles a plan will execute:
+/// for each task, the per-run cycle count of its kernel (the sum of its
+/// phases' trace statistics) times the number of runs the farm will make.
+/// Matches the executed `JobResult.stats.cycles` **exactly** — trace
+/// statistics are the interpreter's (`tests/proptest_trace.rs`), and run
+/// counts mirror `farm::run_task`: one run per task, except bf16 MAC
+/// recurrences (one run per K step) and fused matmuls (one per K-chunk).
+/// `None` when any kernel has a phase the trace compiler refused.
+pub fn predicted_plan_cycles(plan: &Plan, cache: &KernelCache) -> Option<u64> {
+    let mut total: u64 = 0;
+    for task in &plan.tasks {
+        let per_key = |key: KernelKey| kernel_cycles(&cache.get(key));
+        total += match task {
+            BlockTask::Host(_) => 0,
+            BlockTask::IntElementwise { key, .. }
+            | BlockTask::IntDot { key, .. }
+            | BlockTask::Bf16Elementwise { key, .. }
+            | BlockTask::MatmulResident { key, .. } => per_key(*key)?,
+            BlockTask::Bf16Dot { key, a, .. } => a.len() as u64 * per_key(*key)?,
+            BlockTask::Bf16MatmulResident { key, x, .. } => {
+                x.first().map_or(0, Vec::len) as u64 * per_key(*key)?
+            }
+            BlockTask::MatmulFused { segs, .. } => {
+                let mut t = 0u64;
+                for seg in segs {
+                    t += per_key(seg.key)?;
+                }
+                t
+            }
+        };
+    }
+    Some(total)
+}
+
+/// What the router decided for one job, alongside the plan it produced.
+#[derive(Clone, Copy, Debug)]
+pub struct RouteDecision {
+    /// The side the job will execute on (`Pim` or `Host`, never `Auto`).
+    pub taken: Route,
+    /// The analytic PIM cycle prediction, when one was made (`auto` with
+    /// traceable kernels). Compared against the executed cycles by
+    /// [`crate::coordinator::Metrics`] for the predicted-vs-actual gauge.
+    pub predicted_cycles: Option<u64>,
+    /// Predicted PIM wall-clock (ns), when `auto` priced both sides.
+    pub predicted_pim_ns: Option<f64>,
+    /// Predicted host wall-clock (ns), when `auto` priced both sides.
+    pub predicted_host_ns: Option<f64>,
+}
+
+impl RouteDecision {
+    /// The no-model decision: execute on PIM, nothing predicted.
+    pub fn pim() -> RouteDecision {
+        RouteDecision {
+            taken: Route::Pim,
+            predicted_cycles: None,
+            predicted_pim_ns: None,
+            predicted_host_ns: None,
+        }
+    }
+}
+
+/// Decompose a job under a routing policy.
+///
+/// The PIM plan is always built first — it validates shapes and tensor
+/// references for every route, and `auto` needs it to predict cycles. The
+/// decision tree:
+///
+/// * `pim` — the PIM plan, no prediction (identical to [`plan`]).
+/// * `host` — a host fast-path plan when the payload is host-eligible
+///   (all-inline operands); otherwise fall back to PIM.
+/// * `auto` — price both sides with the calibrated `model`: PIM as
+///   dispatch + analytic cycles + host-boundary bytes, host as the op's
+///   [`HostWork`]. Take the host only when it is strictly cheaper; stay
+///   on PIM when the prediction is unavailable (untraceable kernel).
+pub fn plan_routed(
+    env: &PlanEnv,
+    payload: &JobPayload,
+    route: Route,
+    cache: &KernelCache,
+    model: &HostCostModel,
+) -> Result<(Plan, RouteDecision)> {
+    let pim_plan = plan(env, payload)?;
+    if route == Route::Pim {
+        return Ok((pim_plan, RouteDecision::pim()));
+    }
+    let Some(op) = payload_host_op(payload) else {
+        return Ok((pim_plan, RouteDecision::pim()));
+    };
+    match route {
+        Route::Host => {
+            let decision = RouteDecision {
+                taken: Route::Host,
+                predicted_cycles: None,
+                predicted_pim_ns: None,
+                predicted_host_ns: None,
+            };
+            Ok((host_plan(op), decision))
+        }
+        Route::Auto => {
+            let Some(cycles) = predicted_plan_cycles(&pim_plan, cache) else {
+                return Ok((pim_plan, RouteDecision::pim()));
+            };
+            let io_bytes = payload_io_bytes(payload, pim_plan.result_len);
+            let pim_ns = model.pim_ns(pim_plan.tasks.len(), cycles, io_bytes);
+            let host_ns = model.host_ns(op.work());
+            let taken = if host_ns < pim_ns { Route::Host } else { Route::Pim };
+            let decision = RouteDecision {
+                taken,
+                predicted_cycles: Some(cycles),
+                predicted_pim_ns: Some(pim_ns),
+                predicted_host_ns: Some(host_ns),
+            };
+            if taken == Route::Host {
+                Ok((host_plan(op), decision))
+            } else {
+                Ok((pim_plan, decision))
+            }
+        }
+        Route::Pim => unreachable!("handled above"),
     }
 }
 
@@ -1059,7 +1288,7 @@ mod tests {
             a: vec![0; n],
             b: vec![0; n],
         });
-        let keys: Vec<KernelKey> = p.tasks.iter().map(|t| t.key()).collect();
+        let keys: Vec<KernelKey> = p.tasks.iter().map(|t| t.key().unwrap()).collect();
         assert_eq!(keys.len(), 3);
         assert_eq!(keys[0], KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT4, geom));
         assert_eq!(keys[0], keys[1], "full chunks share one cached kernel");
@@ -1076,7 +1305,7 @@ mod tests {
         let ks: Vec<u16> = p
             .tasks
             .iter()
-            .map(|t| match t.key().op {
+            .map(|t| match t.key().unwrap().op {
                 KernelOp::IntDot { k, .. } => k,
                 other => panic!("wrong kernel op {other:?}"),
             })
@@ -1527,6 +1756,136 @@ mod tests {
             },
         )
         .is_err());
+    }
+
+    #[test]
+    fn host_route_emits_one_keyless_task() {
+        let env = PlanEnv::bare(Geometry::G512x40);
+        let cache = KernelCache::new();
+        let model = HostCostModel::default();
+        let payload = JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 8,
+            a: vec![1; 100],
+            b: vec![2; 100],
+        };
+        let (p, d) = plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
+        assert_eq!(d.taken, Route::Host);
+        assert_eq!(p.tasks.len(), 1);
+        assert_eq!(p.result_len, 100);
+        assert_eq!(p.steps, vec![ReduceStep::Scatter { offset: 0 }]);
+        let BlockTask::Host(op) = &p.tasks[0] else { panic!("{:?}", p.tasks[0]) };
+        assert_eq!(p.tasks[0].key(), None, "host tasks are keyless");
+        assert!(p.tasks[0].resident_slices().is_empty());
+        assert_eq!(op.execute(), vec![3i64; 100]);
+    }
+
+    #[test]
+    fn pim_route_never_consults_the_model_or_cache() {
+        let env = PlanEnv::bare(Geometry::G512x40);
+        let cache = KernelCache::new();
+        let model = HostCostModel::default();
+        let payload = JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 8,
+            a: vec![1; 100],
+            b: vec![2; 100],
+        };
+        let (p, d) = plan_routed(&env, &payload, Route::Pim, &cache, &model).unwrap();
+        assert_eq!(d.taken, Route::Pim);
+        assert_eq!(d.predicted_cycles, None);
+        assert!(matches!(p.tasks[0], BlockTask::IntElementwise { .. }));
+        assert!(cache.is_empty(), "pim route must not compile kernels for prediction");
+    }
+
+    #[test]
+    fn host_route_falls_back_to_pim_for_fabric_data() {
+        let geom = Geometry::G512x40;
+        let placement = PlacementMap::new(2, geom, 192);
+        let h = placement.register(Dtype::INT8, 50);
+        let env = PlanEnv {
+            geom,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let cache = KernelCache::new();
+        let model = HostCostModel::default();
+        let payload = JobPayload::IntElementwiseRef {
+            op: EwOp::Add,
+            w: 8,
+            a: OperandRef::Tensor(h),
+            b: OperandRef::Values(vec![0; 50]),
+        };
+        let (p, d) = plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
+        assert_eq!(d.taken, Route::Pim, "resident operands stay on the fabric");
+        assert!(matches!(p.tasks[0], BlockTask::IntElementwise { .. }));
+        assert!(payload_host_op(&payload).is_none());
+    }
+
+    #[test]
+    fn auto_routes_a_small_inline_op_to_the_host() {
+        // with the default constants a 100-element add costs ~100 ns on
+        // the host vs >= one dispatch (2000 ns) plus simulated cycles on
+        // the fabric — auto must take the host and carry both predictions
+        let env = PlanEnv::bare(Geometry::G512x40);
+        let cache = KernelCache::new();
+        let model = HostCostModel::default();
+        let payload = JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 8,
+            a: vec![1; 100],
+            b: vec![2; 100],
+        };
+        let (p, d) = plan_routed(&env, &payload, Route::Auto, &cache, &model).unwrap();
+        assert_eq!(d.taken, Route::Host);
+        assert!(matches!(p.tasks[0], BlockTask::Host(_)));
+        let cycles = d.predicted_cycles.expect("auto predicts cycles");
+        assert!(cycles > 0);
+        assert!(d.predicted_host_ns.unwrap() < d.predicted_pim_ns.unwrap());
+        // the prediction matches the PIM plan's analytic count
+        let pim = plan(&env, &payload).unwrap();
+        assert_eq!(predicted_plan_cycles(&pim, &cache), Some(cycles));
+    }
+
+    #[test]
+    fn predicted_cycles_scale_with_bf16_mac_runs() {
+        // a bf16 dot runs its MAC kernel once per K step: prediction is
+        // K times the single-kernel trace count
+        let env = PlanEnv::bare(Geometry::G512x40);
+        let cache = KernelCache::new();
+        let k = 7;
+        let a = vec![vec![SoftBf16::from_f32(1.0); 5]; k];
+        let p = plan(&env, &JobPayload::Bf16Dot { a: a.clone(), b: a }).unwrap();
+        assert_eq!(p.tasks.len(), 1);
+        let key = p.tasks[0].key().unwrap();
+        let one = kernel_cycles(&cache.get(key)).unwrap();
+        assert_eq!(predicted_plan_cycles(&p, &cache), Some(k as u64 * one));
+    }
+
+    #[test]
+    fn io_bytes_count_packed_operands_and_results() {
+        // int4 ew add: 200 values in each side at 2/byte + 100 out
+        let p = JobPayload::IntElementwise {
+            op: EwOp::Add,
+            w: 4,
+            a: vec![0; 200],
+            b: vec![0; 200],
+        };
+        assert_eq!(payload_io_bytes(&p, 200), 100 + 100 + 100);
+        // int8 dot: K=10 x n=4 operands in, 4 x int32 out
+        let d = JobPayload::IntDot {
+            w: 8,
+            a: vec![vec![0; 4]; 10],
+            b: vec![vec![0; 4]; 10],
+        };
+        assert_eq!(payload_io_bytes(&d, 4), 40 + 40 + 16);
+        // bf16 ew: 2 bytes per value everywhere
+        let b = JobPayload::Bf16Elementwise {
+            mul: false,
+            a: vec![SoftBf16::ZERO; 8],
+            b: vec![SoftBf16::ZERO; 8],
+        };
+        assert_eq!(payload_io_bytes(&b, 8), 16 + 16 + 16);
     }
 
     #[test]

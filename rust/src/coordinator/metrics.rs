@@ -25,6 +25,13 @@ pub struct JobSample {
     pub host_bytes_out: u64,
     /// Resident-operand resolutions served from block storage.
     pub resident_hits: u64,
+    /// True when the router sent this job down the host fast path
+    /// (no block was touched; `cycles` is 0 by construction).
+    pub host_routed: bool,
+    /// The analytic PIM cycle count the router predicted at plan time
+    /// (`Some` only for `auto`-routed jobs). For jobs that then ran on the
+    /// fabric this is compared against `cycles` to track model error.
+    pub predicted_cycles: Option<u64>,
 }
 
 /// Per-dtype counters: jobs completed and packed host bytes moved, keyed
@@ -37,6 +44,10 @@ pub struct DtypeCounts {
     pub jobs: u64,
     pub host_bytes_in: u64,
     pub host_bytes_out: u64,
+    /// Jobs of this dtype executed on the PIM fabric.
+    pub pim_jobs: u64,
+    /// Jobs of this dtype served by the host fast path.
+    pub host_jobs: u64,
 }
 
 /// Running max/mean of one worker's queue depth, sampled at job submit.
@@ -99,6 +110,17 @@ pub struct Metrics {
     /// statically resolvable trace existed (gauge; same source). Nonzero
     /// values mean dispatch is paying full fetch/decode cost somewhere.
     pub interp_fallbacks: AtomicU64,
+    /// Jobs executed on the PIM fabric (the complement of `host_jobs`;
+    /// together they partition `jobs_completed`).
+    pub pim_jobs: AtomicU64,
+    /// Jobs served by the router's bit-exact host fast path.
+    pub host_jobs: AtomicU64,
+    /// Summed |predicted - actual| block cycles over fabric-executed jobs
+    /// that carried an `auto`-route prediction. The analytic trace should
+    /// keep this at exactly 0; any drift is a router-model bug.
+    pub route_cycle_err_sum: AtomicU64,
+    /// Number of samples folded into `route_cycle_err_sum`.
+    pub route_cycle_pred_samples: AtomicU64,
     /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
     /// the widest farm seen).
     queue_depths: Mutex<Vec<DepthGauge>>,
@@ -118,6 +140,22 @@ impl Metrics {
             c.jobs += 1;
             c.host_bytes_in += s.host_bytes_in;
             c.host_bytes_out += s.host_bytes_out;
+            if s.host_routed {
+                c.host_jobs += 1;
+            } else {
+                c.pim_jobs += 1;
+            }
+        }
+        if s.host_routed {
+            self.host_jobs.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.pim_jobs.fetch_add(1, Ordering::Relaxed);
+            // only fabric-executed jobs can check the prediction against
+            // reality (a host-routed job's PIM prediction never ran)
+            if let Some(p) = s.predicted_cycles {
+                self.route_cycle_err_sum.fetch_add(p.abs_diff(s.cycles), Ordering::Relaxed);
+                self.route_cycle_pred_samples.fetch_add(1, Ordering::Relaxed);
+            }
         }
         self.jobs_completed.fetch_add(1, Ordering::Relaxed);
         self.block_runs.fetch_add(s.block_runs, Ordering::Relaxed);
@@ -179,13 +217,23 @@ impl Metrics {
             .dtype_counts()
             .into_iter()
             .map(|(dt, c)| {
-                format!("{dt}:jobs={},in={},out={}", c.jobs, c.host_bytes_in, c.host_bytes_out)
+                format!(
+                    "{dt}:jobs={},in={},out={},pim={},host={}",
+                    c.jobs, c.host_bytes_in, c.host_bytes_out, c.pim_jobs, c.host_jobs
+                )
             })
             .collect();
+        let pred_samples = self.route_cycle_pred_samples.load(Ordering::Relaxed);
+        let err_mean = if pred_samples == 0 {
+            0.0
+        } else {
+            self.route_cycle_err_sum.load(Ordering::Relaxed) as f64 / pred_samples as f64
+        };
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
              shards={} shard_evictions={} trace_hits={} interp_fallbacks={} \
+             pim_jobs={} host_jobs={} route_cycle_err_mean={err_mean:.1} \
              qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
@@ -202,6 +250,8 @@ impl Metrics {
             self.shard_evictions.load(Ordering::Relaxed),
             self.trace_hits.load(Ordering::Relaxed),
             self.interp_fallbacks.load(Ordering::Relaxed),
+            self.pim_jobs.load(Ordering::Relaxed),
+            self.host_jobs.load(Ordering::Relaxed),
             qmax.join(","),
             qmean.join(","),
             dtypes.join(","),
@@ -228,6 +278,8 @@ mod tests {
             host_bytes_in: 1600,
             host_bytes_out: 800,
             resident_hits: 3,
+            host_routed: false,
+            predicted_cycles: Some(500),
         });
         m.record_job(JobSample {
             ops: 50,
@@ -241,6 +293,8 @@ mod tests {
             host_bytes_in: 400,
             host_bytes_out: 400,
             resident_hits: 0,
+            host_routed: true,
+            predicted_cycles: None,
         });
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
@@ -268,15 +322,62 @@ mod tests {
         assert_eq!(by.len(), 2);
         assert_eq!(
             by[0],
-            (Dtype::INT8, DtypeCounts { jobs: 1, host_bytes_in: 1600, host_bytes_out: 800 })
+            (
+                Dtype::INT8,
+                DtypeCounts {
+                    jobs: 1,
+                    host_bytes_in: 1600,
+                    host_bytes_out: 800,
+                    pim_jobs: 1,
+                    host_jobs: 0,
+                }
+            )
         );
         assert_eq!(
             by[1],
-            (Dtype::Bf16, DtypeCounts { jobs: 1, host_bytes_in: 400, host_bytes_out: 400 })
+            (
+                Dtype::Bf16,
+                DtypeCounts {
+                    jobs: 1,
+                    host_bytes_in: 400,
+                    host_bytes_out: 400,
+                    pim_jobs: 0,
+                    host_jobs: 1,
+                }
+            )
         );
         let snap = m.snapshot();
         assert!(snap.contains("int8:jobs=1,in=1600,out=800"), "{snap}");
         assert!(snap.contains("bf16:jobs=1,in=400,out=400"), "{snap}");
+        // the routing split rode the same two samples
+        assert!(snap.contains("pim_jobs=1 host_jobs=1"), "{snap}");
+        // the one fabric job carried an exact prediction: zero error
+        assert!(snap.contains("route_cycle_err_mean=0.0"), "{snap}");
+    }
+
+    #[test]
+    fn route_prediction_error_averages_fabric_samples_only() {
+        let m = Metrics::new();
+        let fabric = |cycles, predicted| JobSample {
+            cycles,
+            predicted_cycles: Some(predicted),
+            dtype: Some(Dtype::INT8),
+            ..JobSample::default()
+        };
+        m.record_job(fabric(100, 110)); // err 10
+        m.record_job(fabric(100, 96)); // err 4
+        // a host-routed job's prediction never ran: excluded from the mean
+        m.record_job(JobSample {
+            host_routed: true,
+            predicted_cycles: Some(1_000_000),
+            ..JobSample::default()
+        });
+        assert_eq!(m.route_cycle_pred_samples.load(Ordering::Relaxed), 2);
+        assert_eq!(m.route_cycle_err_sum.load(Ordering::Relaxed), 14);
+        let snap = m.snapshot();
+        assert!(snap.contains("route_cycle_err_mean=7.0"), "{snap}");
+        assert!(snap.contains("pim_jobs=2 host_jobs=1"), "{snap}");
+        assert!(snap.contains("int8:jobs=2,in=0,out=0,pim=2,host=0"), "{snap}");
     }
 
     #[test]

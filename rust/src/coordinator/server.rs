@@ -32,6 +32,18 @@
 //!   <- {"id": 9, "ok": true, "values": [4]}
 //! ```
 //!
+//! An optional `"route"` field steers execution placement per request:
+//! `"pim"` forces the fabric, `"host"` forces the bit-exact host fast
+//! path (requests whose operands live on-fabric still run there), and
+//! `"auto"` — the default when the field is absent — lets the calibrated
+//! cost model pick whichever side it predicts is faster. Responses are
+//! bit-identical whichever way a request is routed:
+//!
+//! ```text
+//!   -> {"id": 10, "op": "mul", "w": 8, "route": "host", "a": [3], "b": [-2]}
+//!   <- {"id": 10, "ok": true, "values": [-6]}
+//! ```
+//!
 //! bf16 values travel as JSON floats both ways — validated at parse time
 //! (non-finite or out-of-bf16-range operands are per-request errors, never
 //! truncated) and printed with f64's shortest-roundtrip formatting, which
@@ -59,7 +71,7 @@
 
 use super::job::{EwOp, Job, JobPayload, OperandRef};
 use super::scheduler::{Coordinator, JobHandle};
-use crate::exec::{Dtype, TensorHandle};
+use crate::exec::{Dtype, Route, TensorHandle};
 use crate::util::{Json, SoftBf16};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -151,6 +163,9 @@ pub struct ComputeReq {
     pub dtype: Dtype,
     pub a: WireOperand,
     pub b: WireOperand,
+    /// Execution-route override (`"route"` on the wire); absent means
+    /// [`Route::Auto`].
+    pub route: Route,
 }
 
 /// A number as it appeared on the wire: exact integer or float literal.
@@ -313,6 +328,19 @@ fn dtype_field(v: &Json) -> Result<Dtype> {
     Ok(dtype)
 }
 
+/// The `"route"` override of a compute request; absent means `auto`.
+/// Unknown strings are rejected rather than silently defaulted — a client
+/// that asked for a specific placement must not silently get another.
+fn route_field(v: &Json) -> Result<Route> {
+    match v.get("route") {
+        None => Ok(Route::Auto),
+        Some(Json::Str(s)) => {
+            Route::parse(s).ok_or_else(|| anyhow!("unknown route {s:?} (pim, host or auto)"))
+        }
+        Some(_) => bail!("route must be a string"),
+    }
+}
+
 /// A compute operand: a value array (ints for integer dtypes, floats for
 /// bf16) or `{"handle": N}`.
 fn operand_field(v: &Json, key: &str, dtype: Dtype) -> Result<WireOperand> {
@@ -370,7 +398,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
                     bail!("length mismatch: a={} b={}", av.len(), bv.len());
                 }
             }
-            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Ew(op), dtype, a, b }))
+            let route = route_field(&v)?;
+            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Ew(op), dtype, a, b, route }))
         }
         "dot" => {
             let dtype = dtype_field(&v)?;
@@ -385,7 +414,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
             if av.is_empty() {
                 bail!("empty dot product");
             }
-            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Dot, dtype, a, b }))
+            let route = route_field(&v)?;
+            Ok(Request::Compute(ComputeReq { id, kind: ComputeKind::Dot, dtype, a, b, route }))
         }
         "alloc" => {
             let dtype = dtype_field(&v)?;
@@ -597,38 +627,44 @@ impl Batcher {
         let n_blocks = self.coordinator.farm().len().max(1);
         let mut jobs: Vec<(JobHandle, Vec<Span>)> = Vec::new();
         // group coalescible elementwise (value, value) requests by
-        // (op, dtype); dot products and handle operands ride alone
-        let mut groups: BTreeMap<(u8, Dtype), Vec<usize>> = BTreeMap::new();
+        // (op, dtype, route) — a `"pim"` request must not ride a job the
+        // router may send to the host; dot products and handle operands
+        // ride alone
+        let mut groups: BTreeMap<(u8, Dtype, Route), Vec<usize>> = BTreeMap::new();
         for (i, r) in reqs.iter().enumerate() {
             match (r.kind, &r.a, &r.b) {
                 (ComputeKind::Ew(op), WireOperand::Values(_), WireOperand::Values(_)) => {
-                    groups.entry((op as u8, r.dtype)).or_default().push(i);
+                    groups.entry((op as u8, r.dtype, r.route)).or_default().push(i);
                 }
                 (ComputeKind::Dot, _, _) => {
                     let handle = self.submit_dot(r);
                     jobs.push((handle, vec![Span::Whole { req: i }]));
                 }
                 (ComputeKind::Ew(op), _, _) => {
-                    // handle operand: its own job, routed to the data
+                    // handle operand: its own job, routed to the data (a
+                    // host route falls back to the fabric at plan time)
                     let w = r.dtype.int_width().unwrap_or(8);
-                    let handle = self.coordinator.submit(Job {
-                        id: 0,
-                        payload: JobPayload::IntElementwiseRef {
-                            op,
-                            w,
-                            a: r.a.to_ref(),
-                            b: r.b.to_ref(),
+                    let handle = self.coordinator.submit_routed(
+                        Job {
+                            id: 0,
+                            payload: JobPayload::IntElementwiseRef {
+                                op,
+                                w,
+                                a: r.a.to_ref(),
+                                b: r.b.to_ref(),
+                            },
                         },
-                    });
+                        r.route,
+                    );
                     jobs.push((handle, vec![Span::Whole { req: i }]));
                 }
             }
         }
         // oldest-request-first: dispatch the group whose earliest member
         // has waited longest, not whatever (op, dtype) sorts first
-        let mut ordered: Vec<((u8, Dtype), Vec<usize>)> = groups.into_iter().collect();
+        let mut ordered: Vec<((u8, Dtype, Route), Vec<usize>)> = groups.into_iter().collect();
         ordered.sort_by_key(|(_, idxs)| idxs[0]);
-        for ((_, dtype), idxs) in ordered {
+        for ((_, dtype, route), idxs) in ordered {
             let ComputeKind::Ew(op) = reqs[idxs[0]].kind else {
                 unreachable!("grouped requests are elementwise");
             };
@@ -651,6 +687,7 @@ impl Batcher {
                     jobs.push(self.submit_group(
                         op,
                         dtype,
+                        route,
                         std::mem::take(&mut a),
                         std::mem::take(&mut b),
                         std::mem::take(&mut spans),
@@ -661,7 +698,7 @@ impl Batcher {
                 b.extend_from_slice(rb);
             }
             if !spans.is_empty() {
-                jobs.push(self.submit_group(op, dtype, a, b, spans));
+                jobs.push(self.submit_group(op, dtype, route, a, b, spans));
             }
         }
         InFlightBatch { jobs, n_reqs: reqs.len() }
@@ -683,13 +720,14 @@ impl Batcher {
                 b: bv.iter().map(|&v| vec![SoftBf16::from_bits(v as u16)]).collect(),
             },
         };
-        self.coordinator.submit(Job { id: 0, payload })
+        self.coordinator.submit_routed(Job { id: 0, payload }, r.route)
     }
 
     fn submit_group(
         &self,
         op: EwOp,
         dtype: Dtype,
+        route: Route,
         a: Vec<i64>,
         b: Vec<i64>,
         spans: Vec<Span>,
@@ -711,7 +749,7 @@ impl Batcher {
                 JobPayload::Bf16Elementwise { mul, a: to_bf(a), b: to_bf(b) }
             }
         };
-        let handle = self.coordinator.submit(Job { id: 0, payload });
+        let handle = self.coordinator.submit_routed(Job { id: 0, payload }, route);
         (handle, spans)
     }
 
@@ -1022,7 +1060,14 @@ mod tests {
     }
 
     fn ew_req(id: u64, op: EwOp, w: u32, a: WireOperand, b: WireOperand) -> ComputeReq {
-        ComputeReq { id, kind: ComputeKind::Ew(op), dtype: Dtype::Int { w }, a, b }
+        ComputeReq {
+            id,
+            kind: ComputeKind::Ew(op),
+            dtype: Dtype::Int { w },
+            a,
+            b,
+            route: Route::Auto,
+        }
     }
 
     #[test]
@@ -1089,6 +1134,98 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_route_field_overrides_and_rejects() {
+        let r = parse_request(
+            r#"{"id": 1, "op": "add", "w": 8, "route": "host", "a": [1], "b": [2]}"#,
+        )
+        .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.route, Route::Host);
+        let r = parse_request(
+            r#"{"id": 2, "op": "dot", "w": 8, "route": "pim", "a": [1], "b": [2]}"#,
+        )
+        .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.route, Route::Pim);
+        // absent -> auto; the model decides
+        let r = parse_request(r#"{"id": 3, "op": "add", "w": 8, "a": [1], "b": [2]}"#).unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.route, Route::Auto);
+        // unknown or non-string routes are per-request errors, not defaults
+        assert!(parse_request(
+            r#"{"id": 4, "op": "add", "w": 8, "route": "gpu", "a": [1], "b": [2]}"#
+        )
+        .is_err());
+        assert!(parse_request(
+            r#"{"id": 5, "op": "add", "w": 8, "route": 3, "a": [1], "b": [2]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn batcher_splits_groups_by_route_and_stays_bit_exact() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 2));
+        let batcher = Batcher::new(coord.clone());
+        let mut pim = ew_req(1, EwOp::Mul, 8, vals(vec![7, -3]), vals(vec![5, 9]));
+        pim.route = Route::Pim;
+        let mut host = ew_req(2, EwOp::Mul, 8, vals(vec![7, -3]), vals(vec![5, 9]));
+        host.route = Route::Host;
+        let out = batcher.run_batch(&[pim, host]);
+        assert_eq!(out[0].as_ref().unwrap(), &vec![35, -27]);
+        assert_eq!(out[0].as_ref().unwrap(), out[1].as_ref().unwrap(), "routes agree bit-exactly");
+        // distinct routes must not coalesce into one job: a pim request
+        // must never ride a job the router sends to the host
+        let snap = coord.metrics.snapshot();
+        assert!(snap.contains("jobs=2"), "{snap}");
+        assert!(snap.contains("pim_jobs=1 host_jobs=1"), "{snap}");
+        // the pim job moved 4 operand bytes in and 4 result bytes out
+        // (int8 mul reads back at 2W = int16); the host job moved none
+        assert!(snap.contains("int8:jobs=2,in=4,out=4,pim=1,host=1"), "{snap}");
+    }
+
+    #[test]
+    fn tcp_route_override_end_to_end() {
+        let coord = Arc::new(Coordinator::new(Geometry::G512x40, 1));
+        let server = PimServer::start(coord, Duration::from_millis(5)).unwrap();
+        let mut conn = TcpStream::connect(server.addr).unwrap();
+        conn.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| -> Json {
+            writeln!(conn, "{line}").unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            Json::parse(resp.trim()).unwrap()
+        };
+        let v = ask(r#"{"id": 1, "op": "mul", "w": 8, "route": "host", "a": [3, 4], "b": [-2, 5]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![-6, 20]);
+        let v = ask(r#"{"id": 2, "op": "mul", "w": 8, "route": "pim", "a": [3, 4], "b": [-2, 5]}"#);
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![-6, 20], "pim route returns the identical bits");
+        // the routing split is observable from the wire
+        let v = ask(r#"{"id": 3, "op": "stats"}"#);
+        let stats = v.get("stats").and_then(Json::as_str).unwrap();
+        assert!(stats.contains("host_jobs=1"), "{stats}");
+        assert!(stats.contains("pim_jobs=1"), "{stats}");
+        server.stop();
     }
 
     #[test]

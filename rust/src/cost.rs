@@ -19,9 +19,19 @@
 //! the per-operation arithmetic the paper's tables and figures are built
 //! from.
 
+use crate::bitline::Geometry;
+use crate::cram::{ops::int_ew_compiled, CramBlock};
+use crate::exec::{
+    kernel_cycles, CompiledKernel, Dtype, HostEwOp, HostOp, HostWork, KernelKey, KernelOp,
+};
 use crate::fabric::blocks::{
     FREQ_CRAM_COMPUTE, FREQ_DSP_FIXED, FREQ_DSP_FLOAT, FREQ_LB,
 };
+use crate::util::json::Json;
+use crate::util::SoftBf16;
+use std::path::Path;
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Which cycle account to evaluate with.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -118,6 +128,261 @@ pub fn time_us(cycles: u64, freq_mhz: f64) -> f64 {
     cycles as f64 / freq_mhz
 }
 
+// ---------------------------------------------------------------------------
+// Hybrid-routing cost model: predicted wall-clock of running one op on the
+// simulated fabric vs. a specialized host kernel. Unlike the paper-calibrated
+// arithmetic above (which models the *hardware*), this model prices the
+// *simulation* — what the serving stack actually pays per job — so the
+// router's `auto` decisions optimize real wall-clock on this machine.
+// ---------------------------------------------------------------------------
+
+/// Stable bench-entry names shared between [`HostCostModel::fit`],
+/// `benches/simcore.rs`'s calibration section and
+/// [`HostCostModel::refresh_from_trajectory`]: the bench persists these
+/// into `BENCH_serving.json`, and a later process can refit the model from
+/// the higher-quality persisted measurements instead of its own quick fit.
+pub const CAL_SIM_TRACE: &str = "cal/sim_trace_int8_add";
+pub const CAL_HOST_INT_EW: &str = "cal/host_int_ew";
+pub const CAL_HOST_INT_MAC: &str = "cal/host_int_mac";
+pub const CAL_HOST_BF16_EW: &str = "cal/host_bf16_ew";
+pub const CAL_HOST_BF16_MAC: &str = "cal/host_bf16_mac";
+
+/// Elementwise op count in each `CAL_HOST_*_EW` calibration workload.
+pub const CAL_EW_OPS: usize = 4096;
+/// MAC count in each `CAL_HOST_*_MAC` calibration workload (40 columns of
+/// K=30 dot products — one full-width block tile).
+pub const CAL_MAC_OPS: usize = 40 * 30;
+/// Elementwise op count in the `CAL_SIM_TRACE` workload (fits one block:
+/// int8 add on G512x40 holds ~21 tuples/column).
+pub const CAL_SIM_OPS: usize = 512;
+
+/// The four host workloads timed by both [`HostCostModel::fit`] and the
+/// simcore bench's calibration section: `(bench name, op, op count)`.
+pub fn cal_host_workloads() -> Vec<(&'static str, HostOp, u64)> {
+    let iv = |n: usize| (0..n).map(|i| (i % 17) as i64 - 8).collect::<Vec<i64>>();
+    let bv = |n: usize| {
+        (0..n)
+            .map(|i| SoftBf16::from_f32((i % 17) as f32 - 8.0))
+            .collect::<Vec<SoftBf16>>()
+    };
+    let k = 30;
+    let n = CAL_MAC_OPS / k;
+    vec![
+        (
+            CAL_HOST_INT_EW,
+            HostOp::IntElementwise {
+                op: HostEwOp::Add,
+                w: 8,
+                a: iv(CAL_EW_OPS),
+                b: iv(CAL_EW_OPS),
+            },
+            CAL_EW_OPS as u64,
+        ),
+        (
+            CAL_HOST_INT_MAC,
+            HostOp::IntDot { w: 8, a: vec![iv(n); k], b: vec![iv(n); k] },
+            CAL_MAC_OPS as u64,
+        ),
+        (
+            CAL_HOST_BF16_EW,
+            HostOp::Bf16Elementwise { mul: false, a: bv(CAL_EW_OPS), b: bv(CAL_EW_OPS) },
+            CAL_EW_OPS as u64,
+        ),
+        (
+            CAL_HOST_BF16_MAC,
+            HostOp::Bf16Dot { a: vec![bv(n); k], b: vec![bv(n); k] },
+            CAL_MAC_OPS as u64,
+        ),
+    ]
+}
+
+/// The kernel timed by the `CAL_SIM_TRACE` workload: an int8 add sized for
+/// [`CAL_SIM_OPS`] elements on the paper's default geometry. `fit`, the
+/// simcore bench and `refresh_from_trajectory` all derive
+/// `sim_ns_per_cycle` from this same kernel so the persisted measurement
+/// divides by the same analytic cycle count.
+pub fn cal_sim_kernel_key() -> KernelKey {
+    KernelKey::int_ew_sized(KernelOp::IntAdd, Dtype::INT8, CAL_SIM_OPS, Geometry::G512x40)
+}
+
+/// Minimum wall-clock of `reps` runs of `f`, in nanoseconds.
+fn min_elapsed_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_nanos() as f64);
+    }
+    best
+}
+
+/// Floor for fitted per-op rates: a 0 ns measurement (timer granularity)
+/// must not make a whole execution class look free.
+const RATE_FLOOR_NS: f64 = 1e-3;
+
+/// Calibrated wall-clock model for the PIM-vs-host routing decision.
+///
+/// `host_ns` prices a [`HostOp`] from per-op-class rates; `pim_ns` prices
+/// a planned block job from its analytic cycle count (the trace engine's
+/// exact [`crate::ctrl::CycleStats`]), task count and host-boundary byte
+/// traffic. Both are in nanoseconds of *this process's* wall-clock: the
+/// simulator spends tens of ns per simulated cycle, so the honest
+/// crossover strongly favors the host for small inline ops — on real
+/// Compute RAM silicon `sim_ns_per_cycle` would be the hardware clock
+/// period (~1.6 ns at 609 MHz) and the decision tree would flip. The
+/// constants are the model; nothing else in the router hard-codes a side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostCostModel {
+    /// ns per integer elementwise op on the host fast path.
+    pub ns_per_int_ew: f64,
+    /// ns per integer multiply-accumulate on the host fast path.
+    pub ns_per_int_mac: f64,
+    /// ns per [`SoftBf16`] elementwise op on the host fast path.
+    pub ns_per_bf16_ew: f64,
+    /// ns per [`SoftBf16`] fused multiply-accumulate on the host fast path.
+    pub ns_per_bf16_mac: f64,
+    /// ns of simulator wall-clock per simulated block cycle (staging +
+    /// trace execution + readback, amortized over the kernel's cycles).
+    pub sim_ns_per_cycle: f64,
+    /// ns per packed byte crossing the host boundary (transpose staging
+    /// is folded into `sim_ns_per_cycle`; this prices the extra copy for
+    /// non-resident operands). Default, not fitted: the ~GB/s-scale
+    /// memcpy rate is noise next to the simulation itself.
+    pub ns_per_io_byte: f64,
+    /// Fixed ns per block task (queue hop, worker wakeup, plan/dispatch
+    /// bookkeeping). Default, not fitted: measuring it would need the
+    /// whole farm, and its only role is a small-shape tiebreak.
+    pub pim_dispatch_ns: f64,
+}
+
+impl Default for HostCostModel {
+    fn default() -> Self {
+        // Rough magnitudes for a modern x86 core interpreting the
+        // simulator; `fit()` replaces the first five with measurements.
+        HostCostModel {
+            ns_per_int_ew: 1.0,
+            ns_per_int_mac: 1.0,
+            ns_per_bf16_ew: 8.0,
+            ns_per_bf16_mac: 12.0,
+            sim_ns_per_cycle: 30.0,
+            ns_per_io_byte: 0.2,
+            pim_dispatch_ns: 2000.0,
+        }
+    }
+}
+
+impl HostCostModel {
+    /// Fit the measurable rates at startup: time each host calibration
+    /// workload ([`cal_host_workloads`]) and one trace-executed block run
+    /// of [`cal_sim_kernel_key`], keeping the minimum of three reps
+    /// (loaded machines only ever measure *slower*).
+    pub fn fit() -> HostCostModel {
+        let mut m = HostCostModel::default();
+        for (name, op, ops) in cal_host_workloads() {
+            let ns = min_elapsed_ns(3, || {
+                std::hint::black_box(op.execute());
+            });
+            let per = (ns / ops as f64).max(RATE_FLOOR_NS);
+            match name {
+                CAL_HOST_INT_EW => m.ns_per_int_ew = per,
+                CAL_HOST_INT_MAC => m.ns_per_int_mac = per,
+                CAL_HOST_BF16_EW => m.ns_per_bf16_ew = per,
+                CAL_HOST_BF16_MAC => m.ns_per_bf16_mac = per,
+                _ => unreachable!("unknown calibration workload {name}"),
+            }
+        }
+        let key = cal_sim_kernel_key();
+        let kernel = CompiledKernel::compile(key);
+        if let Some(cycles) = kernel_cycles(&kernel).filter(|&c| c > 0) {
+            let mut block = CramBlock::new(key.geometry);
+            let a: Vec<i64> = (0..CAL_SIM_OPS).map(|i| (i % 17) as i64 - 8).collect();
+            let ns = min_elapsed_ns(3, || {
+                let r = int_ew_compiled(&mut block, &kernel, &a, &a)
+                    .expect("calibration kernel run");
+                std::hint::black_box(r.values);
+            });
+            m.sim_ns_per_cycle = (ns / cycles as f64).max(RATE_FLOOR_NS);
+        }
+        m
+    }
+
+    /// The process-wide model the coordinator routes with: fitted once on
+    /// first use, then refined from `BENCH_serving.json` when the perf
+    /// trajectory holds higher-quality calibration measurements (missing
+    /// or stale files are ignored — the quick fit stands).
+    pub fn calibrated() -> &'static HostCostModel {
+        static MODEL: OnceLock<HostCostModel> = OnceLock::new();
+        MODEL.get_or_init(|| {
+            let mut m = HostCostModel::fit();
+            m.refresh_from_trajectory(&crate::util::benchkit::bench_json_path());
+            m
+        })
+    }
+
+    /// Refresh fitted rates from a persisted perf trajectory (the
+    /// `sections.simcore` calibration entries written by
+    /// `benches/simcore.rs`). Returns how many rates were updated; a
+    /// missing file, unparsable JSON, absent entries or non-finite /
+    /// non-positive means leave the corresponding rate untouched.
+    pub fn refresh_from_trajectory(&mut self, path: &Path) -> usize {
+        let Ok(text) = std::fs::read_to_string(path) else { return 0 };
+        let Ok(json) = Json::parse(&text) else { return 0 };
+        let Some(sec) = json.get("sections").and_then(|s| s.get("simcore")) else {
+            return 0;
+        };
+        let mut updated = 0;
+        let ew = CAL_EW_OPS as f64;
+        let mac = CAL_MAC_OPS as f64;
+        for (name, ops, field) in [
+            (CAL_HOST_INT_EW, ew, &mut self.ns_per_int_ew),
+            (CAL_HOST_INT_MAC, mac, &mut self.ns_per_int_mac),
+            (CAL_HOST_BF16_EW, ew, &mut self.ns_per_bf16_ew),
+            (CAL_HOST_BF16_MAC, mac, &mut self.ns_per_bf16_mac),
+        ] {
+            if let Some(per) = trajectory_rate(sec, name, ops) {
+                *field = per;
+                updated += 1;
+            }
+        }
+        let kernel = CompiledKernel::compile(cal_sim_kernel_key());
+        if let Some(cycles) = kernel_cycles(&kernel).filter(|&c| c > 0) {
+            if let Some(per) = trajectory_rate(sec, CAL_SIM_TRACE, cycles as f64) {
+                self.sim_ns_per_cycle = per;
+                updated += 1;
+            }
+        }
+        updated
+    }
+
+    /// Predicted host wall-clock (ns) for a [`HostOp`]'s work summary.
+    pub fn host_ns(&self, work: HostWork) -> f64 {
+        work.int_ew as f64 * self.ns_per_int_ew
+            + work.int_mac as f64 * self.ns_per_int_mac
+            + work.bf16_ew as f64 * self.ns_per_bf16_ew
+            + work.bf16_mac as f64 * self.ns_per_bf16_mac
+    }
+
+    /// Predicted PIM wall-clock (ns) for a planned job: `n_tasks` block
+    /// dispatches, `cycles` total simulated cycles (the analytic trace
+    /// count), `io_bytes` of packed operand/result traffic crossing the
+    /// host boundary for non-resident data.
+    pub fn pim_ns(&self, n_tasks: usize, cycles: u64, io_bytes: u64) -> f64 {
+        n_tasks as f64 * self.pim_dispatch_ns
+            + cycles as f64 * self.sim_ns_per_cycle
+            + io_bytes as f64 * self.ns_per_io_byte
+    }
+}
+
+/// `mean_ns / ops` for one trajectory entry, when present and sane.
+fn trajectory_rate(sec: &Json, name: &str, ops: f64) -> Option<f64> {
+    let ns = sec.get(name)?.get("mean_ns")?.as_f64()?;
+    if ns.is_finite() && ns > 0.0 && ops > 0.0 {
+        Some((ns / ops).max(RATE_FLOOR_NS))
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +445,91 @@ mod tests {
     #[test]
     fn time_us_arithmetic() {
         assert!((time_us(609, 609.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn host_cost_model_arithmetic() {
+        let m = HostCostModel::default();
+        let work = HostWork { int_ew: 100, int_mac: 10, bf16_ew: 5, bf16_mac: 2 };
+        let expect = 100.0 * m.ns_per_int_ew
+            + 10.0 * m.ns_per_int_mac
+            + 5.0 * m.ns_per_bf16_ew
+            + 2.0 * m.ns_per_bf16_mac;
+        assert!((m.host_ns(work) - expect).abs() < 1e-9);
+        assert!((m.pim_ns(0, 0, 0) - 0.0).abs() < 1e-9);
+        let one_task = m.pim_ns(1, 1000, 64);
+        assert!(one_task > m.pim_dispatch_ns, "dispatch floor priced in");
+        assert!(m.pim_ns(2, 1000, 64) > one_task, "monotonic in tasks");
+        assert!(m.pim_ns(1, 2000, 64) > one_task, "monotonic in cycles");
+    }
+
+    #[test]
+    fn fit_produces_positive_finite_rates() {
+        let m = HostCostModel::fit();
+        for (label, v) in [
+            ("int_ew", m.ns_per_int_ew),
+            ("int_mac", m.ns_per_int_mac),
+            ("bf16_ew", m.ns_per_bf16_ew),
+            ("bf16_mac", m.ns_per_bf16_mac),
+            ("sim", m.sim_ns_per_cycle),
+        ] {
+            assert!(v.is_finite() && v > 0.0, "{label} = {v}");
+        }
+        // the simulated fabric costs orders of magnitude more wall-clock
+        // per primitive op than the host fast path — the premise the
+        // whole hybrid router rests on; the calibration kernel spends
+        // several cycles per element, each tens of ns
+        assert!(
+            m.sim_ns_per_cycle > m.ns_per_int_ew / 100.0,
+            "sim {} vs host ew {}",
+            m.sim_ns_per_cycle,
+            m.ns_per_int_ew
+        );
+    }
+
+    #[test]
+    fn calibration_workloads_cover_every_fitted_class() {
+        let names: Vec<&str> = cal_host_workloads().iter().map(|(n, _, _)| *n).collect();
+        assert_eq!(
+            names,
+            vec![CAL_HOST_INT_EW, CAL_HOST_INT_MAC, CAL_HOST_BF16_EW, CAL_HOST_BF16_MAC]
+        );
+        for (name, op, ops) in cal_host_workloads() {
+            assert_eq!(op.op_count(), ops, "{name} op count");
+            assert!(!op.execute().is_empty(), "{name} executes");
+        }
+        let kernel = CompiledKernel::compile(cal_sim_kernel_key());
+        assert!(kernel_cycles(&kernel).unwrap_or(0) > 0, "cal kernel traces");
+    }
+
+    #[test]
+    fn refresh_from_trajectory_updates_only_sane_entries() {
+        let mut m = HostCostModel::default();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("comperam-cost-refresh-{}.json", std::process::id()));
+        // int_ew present and sane; int_mac non-positive (ignored); sim
+        // trace present; the bf16 entries absent (ignored)
+        let text = format!(
+            concat!(
+                "{{\"sections\": {{\"simcore\": {{",
+                "\"{}\": {{\"mean_ns\": 8192, \"iters\": 5}},",
+                "\"{}\": {{\"mean_ns\": 0, \"iters\": 5}},",
+                "\"{}\": {{\"mean_ns\": 123456789, \"iters\": 5}}",
+                "}}}}}}"
+            ),
+            CAL_HOST_INT_EW, CAL_HOST_INT_MAC, CAL_SIM_TRACE
+        );
+        std::fs::write(&path, text).unwrap();
+        let updated = m.refresh_from_trajectory(&path);
+        std::fs::remove_file(&path).ok();
+        assert_eq!(updated, 2);
+        assert!((m.ns_per_int_ew - 8192.0 / CAL_EW_OPS as f64).abs() < 1e-9);
+        let d = HostCostModel::default();
+        assert_eq!(m.ns_per_int_mac, d.ns_per_int_mac, "insane entry ignored");
+        assert_ne!(m.sim_ns_per_cycle, d.sim_ns_per_cycle, "sim rate refitted");
+        // missing file: no updates, model untouched
+        let mut m2 = HostCostModel::default();
+        assert_eq!(m2.refresh_from_trajectory(Path::new("/nonexistent/b.json")), 0);
+        assert_eq!(m2, HostCostModel::default());
     }
 }

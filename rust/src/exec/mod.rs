@@ -32,6 +32,11 @@
 //!   reference them are routed to the worker holding a replica (data
 //!   affinity outranks kernel affinity, which outranks load), and LRU
 //!   eviction spills cold tensors back to host memory loss-lessly.
+//! * The [`router`] module closes the loop on *whether to use the fabric
+//!   at all*: bit-exact host fast-path kernels ([`HostOp`]), the
+//!   [`Route`] policy knob, and the analytic per-kernel cycle count
+//!   ([`kernel_cycles`]) the calibrated cost model weighs against a host
+//!   execution when a request is routed `auto`.
 //!
 //! Lifecycle (also documented in `DESIGN.md`):
 //!
@@ -48,11 +53,13 @@ pub mod dtype;
 pub mod kernel;
 pub mod placement;
 pub mod residency;
+pub mod router;
 pub mod trace;
 
 pub use cache::{CacheStats, KernelCache};
 pub use dtype::Dtype;
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
+pub use router::{kernel_cycles, HostEwOp, HostOp, HostWork, Route};
 pub use trace::{KernelTrace, MicroOp};
 pub use placement::{
     DataStats, PlacementMap, SlicePart, SliceResolution, TensorHandle, TensorSlice,

@@ -1,0 +1,393 @@
+//! Hybrid PIM/host routing: host fast-path kernels and route selection.
+//!
+//! The paper's bit-serial blocks win by amortizing one microcoded program
+//! over thousands of columns — but that win has a floor. Every block run
+//! pays transpose staging, instruction dispatch and `O(w)`–`O(w²)` serial
+//! cycles per element, so a *small* or awkwardly shaped op can finish
+//! sooner on the host CPU than the fabric simulation can even stage it
+//! (the same observation "Boosting FPGA Performance with Direct BRAM-DSP
+//! Paths" makes for real silicon: mixing BRAM-side compute with a direct
+//! datapath beats either pure mode).
+//!
+//! This module contributes the pieces that are independent of the
+//! coordinator:
+//!
+//! * [`Route`] — the per-request policy knob (`pim` / `host` / `auto`)
+//!   carried on the wire and through [`crate::coordinator::Coordinator`].
+//! * [`HostOp`] — a specialized, allocation-lean host kernel per hot op
+//!   (int add/sub/mul/dot/matmul, bf16 ew/dot/matmul over
+//!   [`SoftBf16`]). Each kernel reproduces the block result **bit
+//!   exactly**: integer elementwise results are masked and sign-extended
+//!   at the kernel's result width, integer accumulation wraps mod 2³²
+//!   like the 32-bit in-array accumulator, and bf16 reductions replay the
+//!   whole-K sequential MAC recurrence (accumulation order is part of a
+//!   float result).
+//! * [`HostWork`] — the op-count summary the calibrated cost model
+//!   ([`crate::cost::HostCostModel`]) prices a host execution from.
+//! * [`kernel_cycles`] — the analytic PIM cycle count for one compiled
+//!   kernel, summed over its phases' [`crate::exec::trace::KernelTrace`]
+//!   statistics. The mapper multiplies this by per-task run counts to
+//!   predict a job's total `CycleStats.cycles` *exactly* (the trace
+//!   engine's stats are the interpreter's, proven by
+//!   `tests/proptest_trace.rs`).
+//!
+//! The decision itself (predict both costs, pick the cheaper side) lives
+//! in `coordinator::mapper::plan_routed`, which is where plans, placement
+//! and the kernel cache meet.
+
+use crate::exec::kernel::CompiledKernel;
+use crate::exec::Dtype;
+use crate::util::{mask, sext, SoftBf16};
+
+/// Where a job is allowed to execute.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Route {
+    /// Always plan block tasks (the pre-router behavior).
+    Pim,
+    /// Run on a host fast path when the op has one (ops whose operands
+    /// live on the fabric fall back to PIM — shipping a resident tensor
+    /// to the host just to compute would defeat the placement layer).
+    Host,
+    /// Let the calibrated cost model pick the cheaper side per op.
+    #[default]
+    Auto,
+}
+
+impl Route {
+    /// Parse the wire-level spelling (`"pim"` / `"host"` / `"auto"`).
+    pub fn parse(s: &str) -> Option<Route> {
+        match s {
+            "pim" => Some(Route::Pim),
+            "host" => Some(Route::Host),
+            "auto" => Some(Route::Auto),
+            _ => None,
+        }
+    }
+
+    /// The wire-level spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Route::Pim => "pim",
+            Route::Host => "host",
+            Route::Auto => "auto",
+        }
+    }
+}
+
+impl std::fmt::Display for Route {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Elementwise operator for the host fast path. Mirrors the coordinator's
+/// `EwOp` without importing it — `exec` sits below `coordinator` in the
+/// layering, so the mapper converts at the boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostEwOp {
+    Add,
+    Sub,
+    Mul,
+}
+
+/// Op-count summary of a host execution, priced by
+/// [`crate::cost::HostCostModel::host_ns`]. Each field counts primitive
+/// operations of one calibrated class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostWork {
+    /// Integer elementwise ops (mask + sign-extend per element).
+    pub int_ew: u64,
+    /// Integer multiply-accumulates (dot/matmul inner loops).
+    pub int_mac: u64,
+    /// bf16 elementwise ops (one [`SoftBf16`] add or mul each).
+    pub bf16_ew: u64,
+    /// bf16 fused multiply-accumulates (two roundings each).
+    pub bf16_mac: u64,
+}
+
+/// A self-contained op the farm can run on a worker thread without
+/// touching a block: operands inline, result bit-exact with the PIM path.
+///
+/// Values use the same conventions as the job layer: integers are signed
+/// `i64` holding `w`-bit two's-complement values, bf16 results are
+/// returned as raw bit patterns widened to `i64`.
+#[derive(Clone, Debug)]
+pub enum HostOp {
+    /// Elementwise `a (op) b` at integer width `w`. Add/sub results are
+    /// `w` bits, mul results `2w` bits — the widths the block kernels
+    /// read back — masked then sign-extended.
+    IntElementwise { op: HostEwOp, w: u32, a: Vec<i64>, b: Vec<i64> },
+    /// `n` independent dot products of length `k` (`a[k][n] . b[k][n]`),
+    /// accumulated mod 2³² like the 32-bit in-array accumulator (and the
+    /// split-K `ReduceStep::Accumulate` combine, which is associative
+    /// precisely because everything wraps at 32 bits).
+    IntDot { w: u32, a: Vec<Vec<i64>>, b: Vec<Vec<i64>> },
+    /// `x[m][k] @ wt[k][n] -> int32[m][n]`, row-major output.
+    IntMatmul { w: u32, x: Vec<Vec<i64>>, wt: Vec<Vec<i64>> },
+    /// Elementwise bf16 add (or mul), one [`SoftBf16`] op per element.
+    Bf16Elementwise { mul: bool, a: Vec<SoftBf16>, b: Vec<SoftBf16> },
+    /// `n` independent bf16 dot products, evaluated as the same
+    /// sequential MAC recurrence the blocks run: `acc = acc.mac(a, b)`,
+    /// K ascending from +0.0. Order is part of the result.
+    Bf16Dot { a: Vec<Vec<SoftBf16>>, b: Vec<Vec<SoftBf16>> },
+    /// `x[m][k] @ wt[k][n] -> bf16[m][n]`, row-major output, each output
+    /// a whole-K sequential MAC recurrence.
+    Bf16Matmul { x: Vec<Vec<SoftBf16>>, wt: Vec<Vec<SoftBf16>> },
+}
+
+impl HostOp {
+    /// The element type the op computes on (per-dtype routing counters).
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostOp::IntElementwise { w, .. }
+            | HostOp::IntDot { w, .. }
+            | HostOp::IntMatmul { w, .. } => Dtype::Int { w: *w },
+            HostOp::Bf16Elementwise { .. }
+            | HostOp::Bf16Dot { .. }
+            | HostOp::Bf16Matmul { .. } => Dtype::Bf16,
+        }
+    }
+
+    /// Number of scalar results the op produces.
+    pub fn result_len(&self) -> usize {
+        match self {
+            HostOp::IntElementwise { a, .. } => a.len(),
+            HostOp::Bf16Elementwise { a, .. } => a.len(),
+            HostOp::IntDot { a, .. } => a.first().map_or(0, Vec::len),
+            HostOp::Bf16Dot { a, .. } => a.first().map_or(0, Vec::len),
+            HostOp::IntMatmul { x, wt, .. } => x.len() * wt.first().map_or(0, Vec::len),
+            HostOp::Bf16Matmul { x, wt } => x.len() * wt.first().map_or(0, Vec::len),
+        }
+    }
+
+    /// Number of primitive operations (throughput accounting; matches the
+    /// job layer's `op_count`).
+    pub fn op_count(&self) -> u64 {
+        let w = self.work();
+        w.int_ew + w.int_mac + w.bf16_ew + w.bf16_mac
+    }
+
+    /// The op-count summary the cost model prices this execution from.
+    pub fn work(&self) -> HostWork {
+        let mut work = HostWork::default();
+        match self {
+            HostOp::IntElementwise { a, .. } => work.int_ew = a.len() as u64,
+            HostOp::Bf16Elementwise { a, .. } => work.bf16_ew = a.len() as u64,
+            HostOp::IntDot { a, .. } => {
+                work.int_mac = (a.len() * a.first().map_or(0, Vec::len)) as u64;
+            }
+            HostOp::Bf16Dot { a, .. } => {
+                work.bf16_mac = (a.len() * a.first().map_or(0, Vec::len)) as u64;
+            }
+            HostOp::IntMatmul { x, wt, .. } => {
+                work.int_mac = (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64;
+            }
+            HostOp::Bf16Matmul { x, wt } => {
+                work.bf16_mac = (x.len() * wt.len() * wt.first().map_or(0, Vec::len)) as u64;
+            }
+        }
+        work
+    }
+
+    /// Run the op on the calling thread. Returns results in the job
+    /// layer's value convention (integers sign-extended, bf16 as bit
+    /// patterns) — bit-exact with the block path for the same payload.
+    pub fn execute(&self) -> Vec<i64> {
+        match self {
+            HostOp::IntElementwise { op, w, a, b } => int_ew_host(*op, *w, a, b),
+            HostOp::IntDot { a, b, .. } => int_dot_host(a, b),
+            HostOp::IntMatmul { x, wt, .. } => int_matmul_host(x, wt),
+            HostOp::Bf16Elementwise { mul, a, b } => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let r = if *mul { x.mul(y) } else { x.add(y) };
+                    r.to_bits() as i64
+                })
+                .collect(),
+            HostOp::Bf16Dot { a, b } => bf16_dot_host(a, b),
+            HostOp::Bf16Matmul { x, wt } => bf16_matmul_host(x, wt),
+        }
+    }
+}
+
+/// Integer elementwise fast path. Result widths mirror the block kernels
+/// (`ew_result_w`): add/sub read back `w` bits, mul reads back `2w`.
+fn int_ew_host(op: HostEwOp, w: u32, a: &[i64], b: &[i64]) -> Vec<i64> {
+    let result_w = match op {
+        HostEwOp::Add | HostEwOp::Sub => w,
+        HostEwOp::Mul => 2 * w,
+    };
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let raw = match op {
+                HostEwOp::Add => x.wrapping_add(y),
+                HostEwOp::Sub => x.wrapping_sub(y),
+                HostEwOp::Mul => x.wrapping_mul(y),
+            };
+            sext(mask(raw, result_w) as i64, result_w)
+        })
+        .collect()
+}
+
+/// Per-column integer dot products with 32-bit wraparound accumulation.
+fn int_dot_host(a: &[Vec<i64>], b: &[Vec<i64>]) -> Vec<i64> {
+    let n = a.first().map_or(0, Vec::len);
+    (0..n)
+        .map(|j| {
+            let acc = a.iter().zip(b).fold(0i64, |acc, (ar, br)| {
+                acc.wrapping_add(ar[j].wrapping_mul(br[j]))
+            });
+            acc as i32 as i64
+        })
+        .collect()
+}
+
+/// Row-major integer matmul, one 32-bit wraparound dot per output.
+fn int_matmul_host(x: &[Vec<i64>], wt: &[Vec<i64>]) -> Vec<i64> {
+    let n = wt.first().map_or(0, Vec::len);
+    let mut out = Vec::with_capacity(x.len() * n);
+    for row in x {
+        for j in 0..n {
+            let acc = row.iter().zip(wt).fold(0i64, |acc, (&xv, wrow)| {
+                acc.wrapping_add(xv.wrapping_mul(wrow[j]))
+            });
+            out.push(acc as i32 as i64);
+        }
+    }
+    out
+}
+
+/// Per-column bf16 dot products: the whole-K sequential MAC recurrence.
+fn bf16_dot_host(a: &[Vec<SoftBf16>], b: &[Vec<SoftBf16>]) -> Vec<i64> {
+    let n = a.first().map_or(0, Vec::len);
+    (0..n)
+        .map(|j| {
+            let acc = a
+                .iter()
+                .zip(b)
+                .fold(SoftBf16::ZERO, |acc, (ar, br)| acc.mac(ar[j], br[j]));
+            acc.to_bits() as i64
+        })
+        .collect()
+}
+
+/// Row-major bf16 matmul, one sequential MAC recurrence per output.
+fn bf16_matmul_host(x: &[Vec<SoftBf16>], wt: &[Vec<SoftBf16>]) -> Vec<i64> {
+    let n = wt.first().map_or(0, Vec::len);
+    let mut out = Vec::with_capacity(x.len() * n);
+    for row in x {
+        for j in 0..n {
+            let acc = row
+                .iter()
+                .zip(wt)
+                .fold(SoftBf16::ZERO, |acc, (&xv, wrow)| acc.mac(xv, wrow[j]));
+            out.push(acc.to_bits() as i64);
+        }
+    }
+    out
+}
+
+/// Analytic PIM cycles for **one run** of `kernel`: the sum of its
+/// phases' trace statistics. `None` when any phase failed trace
+/// compilation (runtime control flow) — the router then has no exact
+/// prediction and `auto` stays on the PIM side.
+pub fn kernel_cycles(kernel: &CompiledKernel) -> Option<u64> {
+    let mut total = 0u64;
+    for phase in 0..kernel.phases.len() {
+        total += kernel.trace(phase)?.stats().cycles;
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_parse_display_roundtrip() {
+        for r in [Route::Pim, Route::Host, Route::Auto] {
+            assert_eq!(Route::parse(r.as_str()), Some(r));
+            assert_eq!(r.to_string(), r.as_str());
+        }
+        assert_eq!(Route::parse("fpga"), None);
+        assert_eq!(Route::default(), Route::Auto);
+    }
+
+    #[test]
+    fn int_ew_masks_at_result_width() {
+        // 4-bit add wraps at 4 bits: 7 + 1 = -8
+        let add = HostOp::IntElementwise {
+            op: HostEwOp::Add,
+            w: 4,
+            a: vec![7, -8, 3],
+            b: vec![1, -1, -3],
+        };
+        assert_eq!(add.execute(), vec![-8, 7, 0]);
+        // 4-bit mul reads back 8 bits: 7 * 7 = 49 fits, -8 * -8 = 64 fits
+        let mul = HostOp::IntElementwise {
+            op: HostEwOp::Mul,
+            w: 4,
+            a: vec![7, -8],
+            b: vec![7, -8],
+        };
+        assert_eq!(mul.execute(), vec![49, 64]);
+    }
+
+    #[test]
+    fn int_dot_wraps_mod_2_32() {
+        // K identical products that overflow 32 bits in total
+        let k = 3;
+        let a = vec![vec![1 << 15]; k];
+        let b = vec![vec![1 << 15]; k];
+        let dot = HostOp::IntDot { w: 16, a, b };
+        let expect = ((k as i64) * (1i64 << 30)) as i32 as i64;
+        assert_eq!(dot.execute(), vec![expect]);
+    }
+
+    #[test]
+    fn bf16_dot_is_sequential() {
+        // a sequence whose sum depends on accumulation order: big, -big,
+        // small — sequential gives small, any reassociation that sums
+        // the small value into the big one first loses it
+        let big = SoftBf16::from_f32(1.0e8);
+        let neg = SoftBf16::from_f32(-1.0e8);
+        let small = SoftBf16::from_f32(1.0);
+        let one = SoftBf16::from_f32(1.0);
+        let a = vec![vec![big], vec![neg], vec![small]];
+        let b = vec![vec![one]; 3];
+        let dot = HostOp::Bf16Dot { a, b };
+        let got = dot.execute();
+        assert_eq!(got, vec![SoftBf16::from_f32(1.0).to_bits() as i64]);
+    }
+
+    #[test]
+    fn matmul_is_row_major() {
+        // x = [[1, 0], [0, 1]], wt = [[1, 2], [3, 4]] -> identity @ wt
+        let x = vec![vec![1, 0], vec![0, 1]];
+        let wt = vec![vec![1, 2], vec![3, 4]];
+        let mm = HostOp::IntMatmul { w: 8, x, wt };
+        assert_eq!(mm.execute(), vec![1, 2, 3, 4]);
+        assert_eq!(mm.result_len(), 4);
+        assert_eq!(mm.op_count(), 8);
+    }
+
+    #[test]
+    fn work_counts_by_class() {
+        let dot = HostOp::IntDot {
+            w: 8,
+            a: vec![vec![0; 5]; 7],
+            b: vec![vec![0; 5]; 7],
+        };
+        assert_eq!(dot.work(), HostWork { int_mac: 35, ..Default::default() });
+        let ew = HostOp::Bf16Elementwise {
+            mul: false,
+            a: vec![SoftBf16::ZERO; 9],
+            b: vec![SoftBf16::ZERO; 9],
+        };
+        assert_eq!(ew.work(), HostWork { bf16_ew: 9, ..Default::default() });
+        assert_eq!(ew.dtype(), Dtype::Bf16);
+        assert_eq!(dot.dtype(), Dtype::INT8);
+    }
+}

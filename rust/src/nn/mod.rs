@@ -26,7 +26,7 @@
 
 use crate::coordinator::job::{MatSeg, MatX};
 use crate::coordinator::{Coordinator, Job, JobHandle, JobPayload};
-use crate::exec::{Dtype, TensorHandle};
+use crate::exec::{Dtype, Route, TensorHandle};
 use crate::util::SoftBf16;
 use anyhow::{ensure, Result};
 
@@ -136,13 +136,17 @@ impl QuantLinear {
         }
     }
 
-    /// Submit this layer's matmul (resident weights when available); the
-    /// caller awaits the handle and applies the bias.
+    /// Submit this layer's matmul (resident weights when available) under
+    /// the given execution route; the caller awaits the handle and applies
+    /// the bias. Resident payloads carry fabric data, so a `Host` route
+    /// falls back to the blocks at plan time — results are bit-identical
+    /// either way.
     fn submit_matmul(
         &self,
         coord: &Coordinator,
         x: &[Vec<i64>],
         rw: Option<&ResidentWeights>,
+        route: Route,
     ) -> JobHandle {
         let payload = match rw {
             Some(r) => JobPayload::IntMatmulResident {
@@ -153,16 +157,17 @@ impl QuantLinear {
             },
             None => JobPayload::IntMatmul { w: 8, x: x.to_vec(), wt: self.w.clone() },
         };
-        coord.submit(Job { id: 0, payload })
+        coord.submit_routed(Job { id: 0, payload }, route)
     }
 
     /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm,
-    /// optionally against resident weights.
+    /// optionally against resident weights, under an explicit route.
     pub fn forward_with(
         &self,
         coord: &Coordinator,
         x: &[Vec<i64>],
         rw: Option<&ResidentWeights>,
+        route: Route,
     ) -> Result<Vec<Vec<i64>>> {
         ensure!(
             x.iter().all(|r| r.len() == self.in_dim()),
@@ -172,7 +177,7 @@ impl QuantLinear {
         );
         let m = x.len();
         let n = self.out_dim();
-        let r = self.submit_matmul(coord, x, rw).wait()?;
+        let r = self.submit_matmul(coord, x, rw, route).wait()?;
         let mut y: Vec<Vec<i64>> =
             (0..m).map(|i| r.values[i * n..(i + 1) * n].to_vec()).collect();
         self.add_bias(&mut y);
@@ -181,7 +186,7 @@ impl QuantLinear {
 
     /// `x [m][k] @ w [k][n] + b -> int32 [m][n]`, matmul on the farm.
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
-        self.forward_with(coord, x, None)
+        self.forward_with(coord, x, None, Route::Pim)
     }
 }
 
@@ -291,10 +296,24 @@ impl MlpInt8 {
 
     /// Forward pass on the Compute RAM farm -> int32 logits.
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<i64>]) -> Result<Vec<Vec<i64>>> {
+        self.forward_routed(coord, x, Route::Pim)
+    }
+
+    /// Forward pass under an explicit execution route: `Route::Pim` pins
+    /// the matmuls to the blocks, `Route::Host` asks for the calibrated
+    /// host fast path (resident weights stay on the fabric regardless),
+    /// and `Route::Auto` lets the cost model pick per job. All three are
+    /// bit-identical to [`MlpInt8::forward_host`].
+    pub fn forward_routed(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<i64>],
+        route: Route,
+    ) -> Result<Vec<Vec<i64>>> {
         let (r1, r2) = self.resident_pair();
-        let mut h = self.l1.forward_with(coord, x, r1)?;
+        let mut h = self.l1.forward_with(coord, x, r1, route)?;
         relu_requant(&mut h, REQUANT_SHIFT);
-        self.l2.forward_with(coord, &h, r2)
+        self.l2.forward_with(coord, &h, r2, route)
     }
 
     /// Forward passes over several independent input batches with
@@ -423,7 +442,7 @@ impl MlpInt8 {
             return Ok(Vec::new());
         }
         let (r1, r2) = self.resident_pair();
-        let submit_l1 = |x: &[Vec<i64>]| self.l1.submit_matmul(coord, x, r1);
+        let submit_l1 = |x: &[Vec<i64>]| self.l1.submit_matmul(coord, x, r1, Route::Pim);
         let hid = self.l1.out_dim();
         let mut results = Vec::with_capacity(batches.len());
         let mut inflight = Some(submit_l1(&batches[0]));
@@ -438,7 +457,7 @@ impl MlpInt8 {
                 (0..m).map(|r| r1_out.values[r * hid..(r + 1) * hid].to_vec()).collect();
             self.l1.add_bias(&mut h);
             relu_requant(&mut h, REQUANT_SHIFT);
-            results.push(self.l2.forward_with(coord, &h, r2)?);
+            results.push(self.l2.forward_with(coord, &h, r2, Route::Pim)?);
         }
         Ok(results)
     }
@@ -553,12 +572,16 @@ impl LinearBf16 {
         }
     }
 
-    /// Submit this layer's matmul (resident slab when available).
+    /// Submit this layer's matmul (resident slab when available) under the
+    /// given execution route. Resident payloads always run on the fabric;
+    /// inline ones honor the route bit-exactly (the host fast path replays
+    /// the same sequential MAC recurrence).
     fn submit_matmul(
         &self,
         coord: &Coordinator,
         x: &[Vec<SoftBf16>],
         rw: Option<&ResidentWeights>,
+        route: Route,
     ) -> JobHandle {
         let payload = match rw {
             Some(r) => JobPayload::Bf16MatmulResident {
@@ -568,15 +591,17 @@ impl LinearBf16 {
             },
             None => JobPayload::Bf16Matmul { x: x.to_vec(), wt: self.w.clone() },
         };
-        coord.submit(Job { id: 0, payload })
+        coord.submit_routed(Job { id: 0, payload }, route)
     }
 
-    /// `x [m][k] @ w [k][n] + b -> bf16 [m][n]` on the farm.
+    /// `x [m][k] @ w [k][n] + b -> bf16 [m][n]` on the farm, under an
+    /// explicit route.
     pub fn forward_with(
         &self,
         coord: &Coordinator,
         x: &[Vec<SoftBf16>],
         rw: Option<&ResidentWeights>,
+        route: Route,
     ) -> Result<Vec<Vec<SoftBf16>>> {
         ensure!(
             x.iter().all(|r| r.len() == self.in_dim()),
@@ -586,7 +611,7 @@ impl LinearBf16 {
         );
         let m = x.len();
         let n = self.out_dim();
-        let r = self.submit_matmul(coord, x, rw).wait()?;
+        let r = self.submit_matmul(coord, x, rw, route).wait()?;
         let mut y: Vec<Vec<SoftBf16>> = (0..m)
             .map(|i| {
                 r.values[i * n..(i + 1) * n]
@@ -600,7 +625,7 @@ impl LinearBf16 {
     }
 
     pub fn forward(&self, coord: &Coordinator, x: &[Vec<SoftBf16>]) -> Result<Vec<Vec<SoftBf16>>> {
-        self.forward_with(coord, x, None)
+        self.forward_with(coord, x, None, Route::Pim)
     }
 }
 
@@ -667,10 +692,23 @@ impl MlpBf16 {
         coord: &Coordinator,
         x: &[Vec<SoftBf16>],
     ) -> Result<Vec<Vec<SoftBf16>>> {
+        self.forward_routed(coord, x, Route::Pim)
+    }
+
+    /// Forward pass under an explicit execution route (see
+    /// [`MlpInt8::forward_routed`]); every route is bit-identical to
+    /// [`MlpBf16::forward_host`] because the host fast path reproduces the
+    /// blocks' sequential MAC recurrence exactly.
+    pub fn forward_routed(
+        &self,
+        coord: &Coordinator,
+        x: &[Vec<SoftBf16>],
+        route: Route,
+    ) -> Result<Vec<Vec<SoftBf16>>> {
         let (r1, r2) = self.resident_pair();
-        let mut h = self.l1.forward_with(coord, x, r1)?;
+        let mut h = self.l1.forward_with(coord, x, r1, route)?;
         relu_bf16(&mut h);
-        self.l2.forward_with(coord, &h, r2)
+        self.l2.forward_with(coord, &h, r2, route)
     }
 
     /// Forward passes over several batches with cross-batch pipelining:
@@ -694,7 +732,7 @@ impl MlpBf16 {
             return Ok(Vec::new());
         }
         let (r1, r2) = self.resident_pair();
-        let submit_l1 = |x: &[Vec<SoftBf16>]| self.l1.submit_matmul(coord, x, r1);
+        let submit_l1 = |x: &[Vec<SoftBf16>]| self.l1.submit_matmul(coord, x, r1, Route::Pim);
         let hid = self.l1.out_dim();
         let mut results = Vec::with_capacity(batches.len());
         let mut inflight = Some(submit_l1(&batches[0]));
@@ -714,7 +752,7 @@ impl MlpBf16 {
                 .collect();
             self.l1.add_bias(&mut h);
             relu_bf16(&mut h);
-            results.push(self.l2.forward_with(coord, &h, r2)?);
+            results.push(self.l2.forward_with(coord, &h, r2, Route::Pim)?);
         }
         Ok(results)
     }
@@ -1032,6 +1070,39 @@ mod tests {
         assert!(mlp.make_resident(&c, 1).is_err());
         assert!(!mlp.is_resident());
         assert!(c.placement().is_empty());
+    }
+
+    #[test]
+    fn mlp_forward_routed_matches_host_on_every_route() {
+        let c = coord();
+        let mlp = MlpInt8::synthetic(48, 24, 8, 123).unwrap();
+        let mut rng = Prng::new(55);
+        let x: Vec<Vec<i64>> =
+            (0..10).map(|_| (0..48).map(|_| rng.int(8)).collect()).collect();
+        let host = mlp.forward_host(&x);
+        for route in [Route::Pim, Route::Host, Route::Auto] {
+            let got = mlp.forward_routed(&c, &x, route).unwrap();
+            assert_eq!(got, host, "route {route} must be bit-exact");
+        }
+        assert_eq!(mlp.forward(&c, &x).unwrap(), host);
+        // the Host-routed pass ran both matmuls on the fast path
+        let host_jobs = c.metrics.host_jobs.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(host_jobs >= 2, "host fast path took {host_jobs} jobs");
+    }
+
+    #[test]
+    fn bf16_forward_routed_matches_host_on_every_route() {
+        let c = coord();
+        let mlp = MlpBf16::synthetic(14, 7, 3, 0xB19).unwrap();
+        let mut rng = Prng::new(63);
+        let x: Vec<Vec<SoftBf16>> = (0..5)
+            .map(|_| (0..14).map(|_| SoftBf16::from_f32(rng.int(5) as f32)).collect())
+            .collect();
+        let host = mlp.forward_host(&x);
+        for route in [Route::Pim, Route::Host, Route::Auto] {
+            let got = mlp.forward_routed(&c, &x, route).unwrap();
+            assert_eq!(got, host, "route {route} must be bit-exact");
+        }
     }
 
     #[test]

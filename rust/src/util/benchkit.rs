@@ -120,8 +120,15 @@ fn measurement_json(m: &Measurement) -> Json {
 /// refreshes only its own slice of the trajectory. Write failures are
 /// reported, not fatal: a read-only checkout still gets console output.
 pub fn write_bench_json(section: &str, measurements: &[Measurement]) {
-    let path = bench_json_path();
-    let mut root = std::fs::read_to_string(&path)
+    write_bench_json_to(&bench_json_path(), section, measurements);
+}
+
+/// [`write_bench_json`] against an explicit path (testable without touching
+/// the real trajectory). The `generated` note is always rewritten to the
+/// benchkit stamp, so a seed file carrying a `placeholder:` note loses it
+/// on the first real bench run.
+pub fn write_bench_json_to(path: &std::path::Path, section: &str, measurements: &[Measurement]) {
+    let mut root = std::fs::read_to_string(path)
         .ok()
         .and_then(|text| Json::parse(&text).ok())
         .and_then(|j| j.as_obj().cloned())
@@ -143,7 +150,7 @@ pub fn write_bench_json(section: &str, measurements: &[Measurement]) {
     sections.insert(section.to_string(), Json::Obj(entries));
     root.insert("sections".to_string(), Json::Obj(sections));
     let text = Json::Obj(root).dump();
-    match std::fs::write(&path, text + "\n") {
+    match std::fs::write(path, text + "\n") {
         Ok(()) => println!("perf trajectory: {} section updated in {}", section, path.display()),
         Err(e) => eprintln!("perf trajectory: could not write {}: {e}", path.display()),
     }
@@ -192,6 +199,36 @@ mod tests {
         assert_eq!(j.get("stddev_ns").and_then(Json::as_i64), Some(3_000));
         assert_eq!(j.get("min_ns").and_then(Json::as_i64), Some(1_000_000));
         assert!(j.get("ops_per_sec_1").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn first_real_write_replaces_a_placeholder_note() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("comperam-benchkit-test-{}.json", std::process::id()));
+        std::fs::write(
+            &path,
+            "{\"generated\": \"placeholder: no toolchain\", \"sections\": {}, \"version\": 1}\n",
+        )
+        .unwrap();
+        let m = Measurement {
+            name: "cal/host_int_ew".into(),
+            iters: 3,
+            mean: Duration::from_micros(5),
+            stddev: Duration::ZERO,
+            min: Duration::from_micros(5),
+        };
+        write_bench_json_to(&path, "simcore", &[m]);
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let note = root.get("generated").and_then(Json::as_str).unwrap();
+        assert!(!note.starts_with("placeholder"), "stale note survived: {note}");
+        assert_eq!(note, "cargo bench (comperam benchkit)");
+        let entry = root
+            .get("sections")
+            .and_then(|s| s.get("simcore"))
+            .and_then(|s| s.get("cal/host_int_ew"))
+            .expect("section entry written");
+        assert_eq!(entry.get("mean_ns").and_then(Json::as_i64), Some(5_000));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -1,0 +1,265 @@
+//! Differential property tests for the hybrid execution router: every
+//! route (`pim` / `host` / `auto`) must return bit-identical values for
+//! every op class at every dtype (int4 / int8 / bf16), inline and
+//! resident; the analytic cycle prediction must equal the executed trace
+//! cycles *exactly*; and the calibrated host-time prediction must land
+//! within a generous band of a fresh measurement.
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_ucode.rs` (offline build; failing cases print their seed).
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::{mapper, Coordinator, Job, JobPayload, MatSeg, MatX, OperandRef};
+use comperam::cost::HostCostModel;
+use comperam::exec::{Dtype, Route};
+use comperam::util::{Prng, SoftBf16};
+
+fn coord() -> Coordinator {
+    Coordinator::new(Geometry::G512x40, 3)
+}
+
+fn iv(rng: &mut Prng, w: u32, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.int(w)).collect()
+}
+
+fn bv(rng: &mut Prng, n: usize) -> Vec<SoftBf16> {
+    (0..n).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect()
+}
+
+/// One random payload of the given class; `w` is ignored for bf16 classes.
+fn payload_case(rng: &mut Prng, class: usize, w: u32) -> JobPayload {
+    match class {
+        0 => {
+            let op = [EwOp::Add, EwOp::Sub, EwOp::Mul][rng.range(0, 3)];
+            let n = rng.range(1, 1200);
+            JobPayload::IntElementwise { op, w, a: iv(rng, w, n), b: iv(rng, w, n) }
+        }
+        1 => {
+            let k = rng.range(1, 35);
+            let n = rng.range(1, 60);
+            JobPayload::IntDot {
+                w,
+                a: (0..k).map(|_| iv(rng, w, n)).collect(),
+                b: (0..k).map(|_| iv(rng, w, n)).collect(),
+            }
+        }
+        2 => {
+            let (m, k, n) = (rng.range(1, 8), rng.range(1, 20), rng.range(1, 12));
+            JobPayload::IntMatmul {
+                w,
+                x: (0..m).map(|_| iv(rng, w, k)).collect(),
+                wt: (0..k).map(|_| iv(rng, w, n)).collect(),
+            }
+        }
+        3 => {
+            let n = rng.range(1, 300);
+            JobPayload::Bf16Elementwise { mul: rng.chance(0.5), a: bv(rng, n), b: bv(rng, n) }
+        }
+        4 => {
+            let k = rng.range(1, 12);
+            let n = rng.range(1, 20);
+            JobPayload::Bf16Dot {
+                a: (0..k).map(|_| bv(rng, n)).collect(),
+                b: (0..k).map(|_| bv(rng, n)).collect(),
+            }
+        }
+        _ => {
+            let (m, k, n) = (rng.range(1, 5), rng.range(1, 10), rng.range(1, 8));
+            JobPayload::Bf16Matmul {
+                x: (0..m).map(|_| bv(rng, k)).collect(),
+                wt: (0..k).map(|_| bv(rng, n)).collect(),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_every_route_is_bit_exact_for_every_op_and_dtype() {
+    let c = coord();
+    let mut rng = Prng::new(0x40C7E5);
+    // int classes at int4 and int8, bf16 classes once: 9 (class, dtype)
+    // combinations, several random shapes each
+    let combos: Vec<(usize, u32)> = (0..3)
+        .flat_map(|class| [4u32, 8].map(|w| (class, w)))
+        .chain((3..6).map(|class| (class, 16)))
+        .collect();
+    for (class, w) in combos {
+        for case in 0..4u64 {
+            let payload = payload_case(&mut rng, class, w);
+            let base = c.run_routed(Job { id: 0, payload: payload.clone() }, Route::Pim).unwrap();
+            assert!(!base.host_routed, "class {class} w={w} case {case}: pim stays on-fabric");
+            for route in [Route::Host, Route::Auto] {
+                let r = c.run_routed(Job { id: 0, payload: payload.clone() }, route).unwrap();
+                assert_eq!(
+                    base.values, r.values,
+                    "class {class} w={w} case {case}: route {route} diverged"
+                );
+            }
+            // inline payloads really take the fast path when told to
+            let rh = c.run_routed(Job { id: 0, payload }, Route::Host).unwrap();
+            assert!(rh.host_routed, "class {class} w={w} case {case}: host route honored");
+            assert_eq!(rh.stats.cycles, 0, "host jobs burn no block cycles");
+            assert_eq!(rh.host_bytes_in + rh.host_bytes_out, 0, "no staging traffic");
+        }
+    }
+}
+
+#[test]
+fn prop_fabric_data_payloads_fall_back_to_pim_under_host_route() {
+    let c = Coordinator::with_storage(Geometry::G512x40, 3, 192);
+    let mut rng = Prng::new(0xFA11BAC);
+    for case in 0..10u64 {
+        // resident elementwise operand
+        let w = [4u32, 8][rng.range(0, 2)];
+        let n = rng.range(1, 400);
+        let (a, b) = (iv(&mut rng, w, n), iv(&mut rng, w, n));
+        let h = c.alloc_tensor(&a, Dtype::Int { w }).unwrap();
+        let inline = c
+            .run_routed(
+                Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwise {
+                        op: EwOp::Add,
+                        w,
+                        a: a.clone(),
+                        b: b.clone(),
+                    },
+                },
+                Route::Pim,
+            )
+            .unwrap();
+        let r = c
+            .run_routed(
+                Job {
+                    id: 0,
+                    payload: JobPayload::IntElementwiseRef {
+                        op: EwOp::Add,
+                        w,
+                        a: OperandRef::Tensor(h),
+                        b: OperandRef::Values(b),
+                    },
+                },
+                Route::Host,
+            )
+            .unwrap();
+        assert!(!r.host_routed, "case {case}: fabric data cannot leave for the host");
+        assert_eq!(r.values, inline.values, "case {case} w={w} n={n}");
+        c.free_tensor(h).unwrap();
+
+        // resident int matmul
+        let (m, k, nn) = (rng.range(1, 6), rng.range(1, 30), rng.range(1, 12));
+        let x: Vec<Vec<i64>> = (0..m).map(|_| iv(&mut rng, 8, k)).collect();
+        let wt: Vec<Vec<i64>> = (0..k).map(|_| iv(&mut rng, 8, nn)).collect();
+        let segments: Vec<MatSeg> = c
+            .matmul_segments(Dtype::INT8, k)
+            .into_iter()
+            .map(|(k0, k1)| {
+                let slab: Vec<i64> =
+                    wt[k0..k1].iter().flat_map(|row| row.iter().copied()).collect();
+                MatSeg { k0, k1, handle: c.alloc_tensor(&slab, Dtype::INT8).unwrap() }
+            })
+            .collect();
+        let want = c
+            .run_routed(
+                Job {
+                    id: 0,
+                    payload: JobPayload::IntMatmul { w: 8, x: x.clone(), wt: wt.clone() },
+                },
+                Route::Host,
+            )
+            .unwrap();
+        let res = c
+            .run_routed(
+                Job {
+                    id: 0,
+                    payload: JobPayload::IntMatmulResident {
+                        w: 8,
+                        x: MatX::Rows(x),
+                        n: nn,
+                        segments: segments.clone(),
+                    },
+                },
+                Route::Host,
+            )
+            .unwrap();
+        assert!(!res.host_routed, "case {case}: resident matmul stays on-fabric");
+        assert_eq!(res.values, want.values, "case {case} m={m} k={k} n={nn}");
+        for seg in segments {
+            c.free_tensor(seg.handle).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_predicted_pim_cycles_equal_executed_trace_cycles() {
+    let c = coord();
+    let mut rng = Prng::new(0xC1C7E5);
+    for case in 0..24u64 {
+        let class = rng.range(0, 6);
+        let w = [4u32, 8][rng.range(0, 2)];
+        let payload = payload_case(&mut rng, class, w);
+        let Some(predicted) = c.predict_pim_cycles(&payload) else {
+            panic!("case {case} class {class}: serving kernels must be traceable");
+        };
+        let r = c.run_routed(Job { id: 0, payload: payload.clone() }, Route::Pim).unwrap();
+        assert_eq!(
+            predicted, r.stats.cycles,
+            "case {case} class {class} w={w}: analytic cycles must be exact"
+        );
+        // the auto route carries the same prediction into the result
+        let ra = c.run_routed(Job { id: 0, payload }, Route::Auto).unwrap();
+        if !ra.host_routed {
+            assert_eq!(
+                ra.predicted_cycles,
+                Some(ra.stats.cycles),
+                "case {case} class {class}: auto-pim prediction must be exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_host_time_prediction_lands_within_a_generous_band() {
+    // Wall-clock is noisy (shared CI machines, turbo, the works), so this
+    // is a sanity band, not a tight bound: the model's prediction for a
+    // big op must be within 128x of a fresh min-of-3 measurement either
+    // way. What it catches is unit mistakes (ns vs us), swapped rates,
+    // and op-count miscounts — each of which blows past 128x.
+    let model = HostCostModel::fit();
+    let mut rng = Prng::new(0x7157BAD);
+    let payloads = [
+        JobPayload::IntElementwise {
+            op: EwOp::Mul,
+            w: 8,
+            a: iv(&mut rng, 8, 8192),
+            b: iv(&mut rng, 8, 8192),
+        },
+        JobPayload::IntDot {
+            w: 8,
+            a: (0..64).map(|_| iv(&mut rng, 8, 64)).collect(),
+            b: (0..64).map(|_| iv(&mut rng, 8, 64)).collect(),
+        },
+        JobPayload::Bf16Elementwise { mul: true, a: bv(&mut rng, 4096), b: bv(&mut rng, 4096) },
+        JobPayload::Bf16Dot {
+            a: (0..64).map(|_| bv(&mut rng, 64)).collect(),
+            b: (0..64).map(|_| bv(&mut rng, 64)).collect(),
+        },
+    ];
+    for (i, payload) in payloads.iter().enumerate() {
+        let op = mapper::payload_host_op(payload).expect("inline payloads have a host twin");
+        let predicted = model.host_ns(op.work());
+        let mut measured = f64::INFINITY;
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            std::hint::black_box(op.execute());
+            measured = measured.min(t.elapsed().as_nanos() as f64);
+        }
+        let measured = measured.max(1.0);
+        assert!(
+            predicted <= measured * 128.0 && measured <= predicted * 128.0,
+            "payload {i}: predicted {predicted:.0} ns vs measured {measured:.0} ns \
+             is outside the 128x sanity band"
+        );
+    }
+}
