@@ -34,10 +34,10 @@ use super::mapper::{BlockTask, Operand, TaskX};
 use crate::bitline::Geometry;
 use crate::cram::{ops, store, CramBlock};
 use crate::ctrl::CycleStats;
-use crate::exec::placement::{PlaceAttempt, ShardSource, SlicePart, SliceResolution};
+use crate::exec::placement::{PlaceAttempt, RowsResolution, ShardSource, SlicePart, SliceResolution};
 use crate::exec::{
-    CompiledKernel, DataStats, Dtype, KernelCache, KernelKey, PlacementMap, ResidencyMap,
-    ResidencyStats, TensorHandle, TensorSlice,
+    CompiledKernel, DataStats, Dtype, KernelCache, KernelKey, PlacementMap, PlacementMove,
+    PlacementSnapshot, ResidencyMap, ResidencyStats, TensorHandle, TensorSlice,
 };
 use crate::util::SoftBf16;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -228,6 +228,10 @@ struct EngineState {
     unpinned: Vec<usize>,
     /// Total queued (not yet dequeued) tasks, for backpressure.
     queued: usize,
+    /// Tasks currently executing on a worker (dequeued, not yet
+    /// completed) — with `queued`, lets the optimizer quiesce the farm
+    /// before moving a reserve boundary.
+    active: usize,
 }
 
 struct EngineShared {
@@ -236,6 +240,8 @@ struct EngineShared {
     work_cv: Condvar,
     /// Submitters wait here for queue space.
     space_cv: Condvar,
+    /// Reserve-boundary moves wait here for `queued == 0 && active == 0`.
+    idle_cv: Condvar,
     shutdown: AtomicBool,
     capacity: usize,
 }
@@ -292,9 +298,11 @@ impl BlockFarm {
                 queues: (0..n_blocks).map(|_| VecDeque::new()).collect(),
                 unpinned: vec![0; n_blocks],
                 queued: 0,
+                active: 0,
             }),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             capacity: QUEUE_DEPTH_PER_WORKER * n_blocks,
         });
@@ -537,6 +545,12 @@ impl BlockFarm {
         else {
             return Ok(()); // already gone
         };
+        // Mark the replica draining *before* reading it out: `submit` does
+        // not take the tensor lock, so a concurrently routed task must not
+        // be pinned to this worker only to find the replica gone (unless
+        // it is the shard's only home, in which case the host backup this
+        // eviction writes will serve the task's resolve).
+        self.placement.begin_drain(victim, shard, worker);
         let values = {
             let block = self.blocks[worker].lock().unwrap();
             store::read_tensor_rows(block.array(), slen, dtype, base)
@@ -616,6 +630,210 @@ impl BlockFarm {
         let _guard = self.tensor_lock.lock().unwrap();
         ensure!(self.placement.remove(h), "unknown tensor handle {}", h.id());
         Ok(())
+    }
+
+    // ---- optimizer moves --------------------------------------------------
+    //
+    // Every move holds the tensor lock (serial with alloc/write/evict) and
+    // follows the staged-placement protocol: a new replica's region stays
+    // invisible to routing, resolution and victim selection until its rows
+    // hold data, so a concurrent task can never observe a half-written
+    // replica. See `crate::exec::optimizer` for the decision side.
+
+    /// Read one shard's values (from its first replica, else the host
+    /// backup). Returns `(dtype, values, read_from_block)`.
+    fn shard_values(&self, h: TensorHandle, shard: u32) -> Result<(Dtype, Vec<i64>, bool)> {
+        let Some((dtype, _, reads)) = self.placement.read_plan(h) else {
+            bail!("unknown tensor handle {}", h.id());
+        };
+        let r = reads
+            .into_iter()
+            .nth(shard as usize)
+            .ok_or_else(|| anyhow!("tensor {} has no shard {shard}", h.id()))?;
+        match r.src {
+            ShardSource::Block { worker, base } => {
+                let block = self.blocks[worker].lock().unwrap();
+                Ok((dtype, store::read_tensor_rows(block.array(), r.len, dtype, base), true))
+            }
+            ShardSource::Host(values) => Ok((dtype, values.to_vec(), false)),
+            ShardSource::Missing => {
+                bail!("shard {shard} of tensor {} has no replica and no host copy", h.id())
+            }
+        }
+    }
+
+    /// Clone one shard onto `worker` through a staged region, evicting LRU
+    /// shards on the target as needed. The block-side write happens before
+    /// the home is published ([`PlacementMap::commit_home`]). Traffic is
+    /// priced as a host round trip: replicas clone block -> host -> block
+    /// (both directions), re-pins come straight from the backup (one).
+    fn clone_shard_to(&self, h: TensorHandle, shard: u32, worker: usize) -> Result<()> {
+        let (dtype, values, from_block) = self.shard_values(h, shard)?;
+        loop {
+            match self.placement.place_staged(h, shard, worker) {
+                PlaceAttempt::Placed { base } => {
+                    {
+                        let mut block = self.blocks[worker].lock().unwrap();
+                        store::write_tensor_rows(block.array_mut(), &values, dtype, base);
+                    }
+                    ensure!(
+                        self.placement.commit_home(h, shard, worker),
+                        "staged region of tensor {} vanished before commit",
+                        h.id()
+                    );
+                    let bytes = dtype.slice_bytes(values.len());
+                    if from_block {
+                        self.placement.add_host_bytes_out(bytes);
+                    }
+                    self.placement.add_host_bytes_in(bytes);
+                    return Ok(());
+                }
+                PlaceAttempt::Evict { victim, shard: vs } => {
+                    self.evict_replica(victim, vs, worker)?;
+                }
+                PlaceAttempt::NoFit => bail!(
+                    "shard {shard} of tensor {} does not fit worker {worker}'s reserve",
+                    h.id()
+                ),
+            }
+        }
+    }
+
+    /// Re-pin a fully evicted shard from its host backup into `worker`'s
+    /// reserve (an optimizer move; loss-less and bit-exact — the backup
+    /// *is* the data).
+    pub fn repin_shard(&self, h: TensorHandle, shard: u32, worker: usize) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        ensure!(
+            self.placement.shard_homes(h, shard).is_empty(),
+            "repin target: shard {shard} of tensor {} is already resident",
+            h.id()
+        );
+        self.clone_shard_to(h, shard, worker)
+    }
+
+    /// Add a replica of a resident shard on another worker (an optimizer
+    /// move): a block-to-block clone, staged so no reader ever resolves
+    /// against a half-written copy.
+    pub fn replicate_shard(&self, h: TensorHandle, shard: u32, worker: usize) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        let homes = self.placement.shard_homes(h, shard);
+        ensure!(
+            !homes.is_empty(),
+            "cannot replicate evicted shard {shard} of tensor {} (repin it instead)",
+            h.id()
+        );
+        ensure!(
+            !homes.contains(&worker),
+            "worker {worker} already holds shard {shard} of tensor {}",
+            h.id()
+        );
+        self.clone_shard_to(h, shard, worker)
+    }
+
+    /// Split a shard in two at element `at` — the optimizer's re-shard
+    /// move for slabs too large for any one block's free rows. The cut is
+    /// snapped onto the tensor's alignment grid first
+    /// ([`super::mapper::reshard_cut`]: a weight slab only cuts on matmul
+    /// chunk boundaries, so per-shard partial plans stay rectangular).
+    /// Any replicas are spilled loss-lessly before the table changes: the
+    /// split itself operates on host backups, and the halves re-pin
+    /// independently afterwards.
+    pub fn reshard_split(&self, h: TensorHandle, shard: u32, at: usize) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        let align = self.placement.align_of(h).unwrap_or(1);
+        let at = super::mapper::reshard_cut(align, at)
+            .ok_or_else(|| anyhow!("no legal re-shard cut at or below element {at}"))?;
+        for worker in self.placement.shard_homes(h, shard) {
+            self.evict_replica(h, shard, worker)?;
+        }
+        self.placement.split_shard(h, shard, at)
+    }
+
+    /// Grow `worker`'s storage reserve to `rows` (an optimizer promote).
+    /// The boundary only moves over an **idle, admission-blocked** farm:
+    /// this waits up to `timeout` for every queued and running task to
+    /// drain while holding the engine lock, so no in-flight kernel sized
+    /// against the old compute area can overlap the new reserve and no
+    /// new task is admitted mid-move. The published cap
+    /// ([`PlacementMap::publish_reserve_cap`]) then makes every
+    /// subsequently planned kernel size itself for the post-move fabric;
+    /// a plan raced against the cap is rejected by the run-time
+    /// `check_kernel_fits` backstop rather than corrupting the reserve.
+    pub fn promote_reserve(&self, worker: usize, rows: usize, timeout: Duration) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        while st.queued > 0 || st.active > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("farm did not quiesce within {timeout:?}; promote aborted");
+            }
+            let (s, _) = self.shared.idle_cv.wait_timeout(st, deadline - now).unwrap();
+            st = s;
+        }
+        self.placement.publish_reserve_cap(rows)?;
+        self.placement.commit_block_reserve(worker, rows)?;
+        drop(st);
+        Ok(())
+    }
+
+    /// Shrink `worker`'s storage reserve to `rows` (an optimizer demote),
+    /// spilling every shard whose region lies below the new boundary to
+    /// its host backup first (loss-less). The compute area only grows, so
+    /// in-flight kernels are unaffected and no quiesce is needed.
+    pub fn demote_reserve(&self, worker: usize, rows: usize) -> Result<()> {
+        let _guard = self.tensor_lock.lock().unwrap();
+        for (h, shard) in self.placement.regions_below_reserve(worker, rows) {
+            self.evict_replica(h, shard, worker)?;
+        }
+        self.placement.commit_block_reserve(worker, rows)
+    }
+
+    /// Apply one optimizer move (see [`crate::exec::optimizer`]).
+    pub fn apply_move(&self, mv: &PlacementMove) -> Result<()> {
+        match *mv {
+            PlacementMove::Promote { worker, reserve_rows } => {
+                self.promote_reserve(worker, reserve_rows, Duration::from_millis(200))
+            }
+            PlacementMove::Demote { worker, reserve_rows } => {
+                self.demote_reserve(worker, reserve_rows)
+            }
+            PlacementMove::Split { tensor, shard, at } => self.reshard_split(tensor, shard, at),
+            PlacementMove::Repin { tensor, shard, worker } => {
+                self.repin_shard(tensor, shard, worker)
+            }
+            PlacementMove::Replicate { tensor, shard, worker } => {
+                self.replicate_shard(tensor, shard, worker)
+            }
+        }
+    }
+
+    /// Apply a chosen move list in order. A move that has gone stale by
+    /// apply time (tensor freed, farm busy, shard re-homed by a
+    /// concurrent eviction) is skipped, not fatal — the next optimizer
+    /// round re-scores from current state. Returns the applied count.
+    pub fn apply_moves(&self, moves: &[PlacementMove]) -> usize {
+        moves.iter().filter(|mv| self.apply_move(mv).is_ok()).count()
+    }
+
+    /// Per-worker queue depths right now (the optimizer's load signal).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        let st = self.shared.state.lock().unwrap();
+        st.queues.iter().map(VecDeque::len).collect()
+    }
+
+    /// A placement snapshot for the optimizer: storage occupancy, the
+    /// live workload window (optionally reset for the next period) and
+    /// current queue depths.
+    pub fn optimizer_snapshot(&self, reset_window: bool) -> PlacementSnapshot {
+        let mut snap = self.placement.snapshot(reset_window);
+        for (w, d) in self.queue_depths().into_iter().enumerate() {
+            if let Some(ws) = snap.workers.get_mut(w) {
+                ws.queue_depth = d;
+            }
+        }
+        snap
     }
 
     // ---- the task plane ---------------------------------------------------
@@ -757,6 +975,38 @@ struct TaskRun {
     resident_hits: u64,
 }
 
+/// Materialize resolved slice parts into values on this worker's block:
+/// `Local` parts read the array in place, `Host` parts copy from the
+/// backup (counted as packed host traffic), `Remote` parts are routing
+/// errors. Returns `(values, host_bytes_in)`.
+fn assemble_parts(
+    parts: Vec<SlicePart>,
+    dtype: Dtype,
+    tensor: TensorHandle,
+    worker: usize,
+    block: &CramBlock,
+) -> Result<(Vec<i64>, u64)> {
+    let mut vals: Vec<i64> = Vec::new();
+    let mut bytes = 0u64;
+    for part in parts {
+        match part {
+            SlicePart::Local { base, start, len } => {
+                vals.extend(store::read_tensor_slice(block.array(), dtype, base, start, len));
+            }
+            SlicePart::Host { values, start, len } => {
+                vals.extend_from_slice(&values[start..start + len]);
+                bytes += dtype.slice_bytes(len);
+            }
+            SlicePart::Remote { workers } => bail!(
+                "tensor {} is resident on workers {workers:?}, \
+                 but the task ran on {worker}",
+                tensor.id()
+            ),
+        }
+    }
+    Ok((vals, bytes))
+}
+
 /// Gather the values of a resident-tensor slice on this worker: local
 /// shard parts read the block's array in place (hits), evicted parts fall
 /// back to their host copies (misses, at packed host-traffic cost), and
@@ -778,32 +1028,9 @@ fn gather_slice(
             s.offset + s.len
         ),
         SliceResolution::Parts { dtype, parts } => {
-            let mut vals: Vec<i64> = Vec::with_capacity(s.len);
-            let mut bytes = 0u64;
-            let mut hits = 0u64;
-            for part in parts {
-                match part {
-                    SlicePart::Local { base, start, len } => {
-                        vals.extend(store::read_tensor_slice(
-                            block.array(),
-                            dtype,
-                            base,
-                            start,
-                            len,
-                        ));
-                        hits += 1;
-                    }
-                    SlicePart::Host { values, start, len } => {
-                        vals.extend_from_slice(&values[start..start + len]);
-                        bytes += dtype.slice_bytes(len);
-                    }
-                    SlicePart::Remote { workers } => bail!(
-                        "tensor {} is resident on workers {workers:?}, \
-                         but the task ran on {worker}",
-                        s.handle.id()
-                    ),
-                }
-            }
+            let hits =
+                parts.iter().filter(|p| matches!(p, SlicePart::Local { .. })).count() as u64;
+            let (vals, bytes) = assemble_parts(parts, dtype, s.handle, worker, block)?;
             Ok((vals, dtype, bytes, hits))
         }
     }
@@ -879,17 +1106,30 @@ fn resolve_x_rows(
                 let rows = flat.chunks(*k).map(|c| c.to_vec()).collect();
                 return Ok((rows, bytes, hits));
             }
-            let mut rows = Vec::with_capacity(i1 - i0);
-            let mut bytes = 0u64;
-            let mut hits = 0u64;
-            for i in i0..i1 {
-                let s = TensorSlice { handle: *handle, offset: i * k + k0, len: kseg };
-                let (v, _, b, h) = gather_slice(&s, worker, block, placement)?;
-                rows.push(v);
-                bytes += b;
-                hits += h;
+            // K-sliced rows resolve in ONE placement-lock acquisition, and
+            // — the accounting contract — count each distinct resident
+            // shard as one hit for the whole operand. The old per-row
+            // gather loop counted a hit per row per shard, inflating
+            // `resident_hits` by the tile height; with replicas in play
+            // that skewed every stat the optimizer now feeds on.
+            match placement.resolve_rows(*handle, *k, i0, i1, k0, k1, worker) {
+                RowsResolution::Missing => {
+                    bail!("tensor handle {} is not allocated", handle.id())
+                }
+                RowsResolution::OutOfRange { len } => {
+                    bail!("rows {i0}..{i1} of width {k} exceed tensor length {len}")
+                }
+                RowsResolution::Rows { dtype: dt, rows: row_parts, hits } => {
+                    let mut rows = Vec::with_capacity(row_parts.len());
+                    let mut bytes = 0u64;
+                    for parts in row_parts {
+                        let (v, b) = assemble_parts(parts, dt, *handle, worker, block)?;
+                        rows.push(v);
+                        bytes += b;
+                    }
+                    Ok((rows, bytes, hits))
+                }
             }
-            Ok((rows, bytes, hits))
         }
     }
 }
@@ -1273,6 +1513,7 @@ fn worker_loop(
                         st.unpinned[src] -= 1;
                     }
                     st.queued -= 1;
+                    st.active += 1;
                     shared.space_cv.notify_all();
                     break Some(env);
                 }
@@ -1346,6 +1587,12 @@ fn worker_loop(
         if p.remaining == 0 {
             p.finished_at = Some(Instant::now());
             env.batch.done_cv.notify_all();
+        }
+        drop(p);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 && st.queued == 0 {
+            shared.idle_cv.notify_all();
         }
     }
 }
@@ -1750,5 +1997,122 @@ mod tests {
         let h = farm.submit(vec![ew_task(EwOp::Add, 8, vec![1; 10], vec![1; 10])]);
         assert_eq!(h.submit_depths().len(), 2);
         h.wait().unwrap();
+    }
+
+    #[test]
+    fn repin_restores_an_evicted_shard_bit_exact() {
+        // 16-row reserve: two 8-row tensors per block; the third alloc
+        // evicts the LRU one
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 16);
+        let t1: Vec<i64> = (0..40).map(|i| (i % 5) - 2).collect();
+        let h1 = farm.alloc_tensor(&t1, Dtype::INT8).unwrap();
+        let h2 = farm.alloc_tensor(&[7i64; 40], Dtype::INT8).unwrap();
+        let _h3 = farm.alloc_tensor(&[9i64; 40], Dtype::INT8).unwrap();
+        assert!(farm.placement().homes(h1).is_empty(), "h1 spilled");
+        // make room, then move h1 back in from its host backup
+        farm.free_tensor(h2).unwrap();
+        farm.repin_shard(h1, 0, 0).unwrap();
+        assert_eq!(farm.placement().homes(h1), vec![0]);
+        assert_eq!(farm.read_tensor(h1).unwrap(), t1, "repin is loss-less");
+        // resolving on the worker now yields a Local part again
+        match farm.placement().resolve_slice(h1, 0, 40, 0) {
+            SliceResolution::Parts { parts, .. } => {
+                assert!(matches!(parts[0], SlicePart::Local { .. }), "{parts:?}")
+            }
+            other => panic!("{other:?}"),
+        }
+        // a second repin of the now-resident shard is refused
+        assert!(farm.repin_shard(h1, 0, 0).is_err());
+    }
+
+    #[test]
+    fn replicate_clones_a_resident_shard_to_another_worker() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 8);
+        let t: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let h = farm.alloc_tensor(&t, Dtype::INT8).unwrap();
+        let homes = farm.placement().homes(h);
+        assert_eq!(homes.len(), 1);
+        let other = 1 - homes[0];
+        farm.replicate_shard(h, 0, other).unwrap();
+        assert_eq!(farm.placement().homes(h).len(), 2);
+        assert_eq!(farm.read_tensor(h).unwrap(), t);
+        // both workers resolve the slice locally now
+        for w in 0..2 {
+            match farm.placement().resolve_slice(h, 0, 40, w) {
+                SliceResolution::Parts { parts, .. } => {
+                    assert!(matches!(parts[0], SlicePart::Local { .. }), "worker {w}")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // replicating onto a worker that already holds it is refused
+        assert!(farm.replicate_shard(h, 0, other).is_err());
+    }
+
+    #[test]
+    fn reshard_split_halves_repin_independently() {
+        // one worker, 16-row reserve: an 80-element tensor fills it whole
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 16);
+        let t: Vec<i64> = (0..80).map(|i| (i % 17) - 8).collect();
+        let h = farm.alloc_tensor(&t, Dtype::INT8).unwrap();
+        let f = farm.alloc_tensor(&[3i64; 80], Dtype::INT8).unwrap(); // evicts h
+        assert!(farm.placement().homes(h).is_empty());
+        farm.reshard_split(h, 0, 40).unwrap();
+        assert_eq!(farm.placement().shard_count(h), 2);
+        farm.free_tensor(f).unwrap();
+        farm.repin_shard(h, 0, 0).unwrap();
+        farm.repin_shard(h, 1, 0).unwrap();
+        assert_eq!(farm.read_tensor(h).unwrap(), t, "split + repin is loss-less");
+    }
+
+    #[test]
+    fn promote_grows_the_reserve_and_demote_spills_it_back() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 1, 16);
+        farm.promote_reserve(0, 32, Duration::from_millis(500)).unwrap();
+        assert_eq!(farm.placement().block_reserves(), vec![32]);
+        // three 8-row tensors fit the widened reserve without eviction
+        let vals: Vec<Vec<i64>> =
+            (0..3).map(|t| (0..40).map(|i| ((i + t * 13) % 9) - 4).collect()).collect();
+        let hs: Vec<TensorHandle> =
+            vals.iter().map(|v| farm.alloc_tensor(v, Dtype::INT8).unwrap()).collect();
+        assert_eq!(farm.data_stats().evictions, 0);
+        // shrinking back spills whatever sits below the new boundary,
+        // loss-lessly
+        farm.demote_reserve(0, 16).unwrap();
+        assert_eq!(farm.placement().block_reserves(), vec![16]);
+        assert_eq!(farm.placement().reserve_rows(), 16, "published cap relaxed");
+        assert!(farm.data_stats().evictions >= 1);
+        for (h, v) in hs.iter().zip(&vals) {
+            assert_eq!(farm.read_tensor(*h).unwrap(), *v, "demote is loss-less");
+        }
+    }
+
+    #[test]
+    fn apply_moves_skips_stale_moves_and_counts_applied() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 8);
+        let t: Vec<i64> = (0..40).map(|i| i % 6).collect();
+        let h = farm.alloc_tensor(&t, Dtype::INT8).unwrap();
+        let home = farm.placement().homes(h)[0];
+        let moves = [
+            // stale: the shard is resident, repin refuses
+            PlacementMove::Repin { tensor: h, shard: 0, worker: home },
+            // valid: clone it to the other worker
+            PlacementMove::Replicate { tensor: h, shard: 0, worker: 1 - home },
+        ];
+        assert_eq!(farm.apply_moves(&moves), 1);
+        assert_eq!(farm.placement().homes(h).len(), 2);
+        assert_eq!(farm.read_tensor(h).unwrap(), t);
+    }
+
+    #[test]
+    fn optimizer_snapshot_reports_workers_and_queue_depths() {
+        let farm = BlockFarm::with_storage(Geometry::G512x40, 2, 16);
+        let t: Vec<i64> = (0..40).map(|i| i % 4).collect();
+        let _h = farm.alloc_tensor(&t, Dtype::INT8).unwrap();
+        let snap = farm.optimizer_snapshot(false);
+        assert_eq!(snap.workers.len(), 2);
+        assert!(snap.workers.iter().all(|w| w.queue_depth == 0), "idle farm");
+        assert_eq!(snap.tensors.len(), 1);
+        assert_eq!(snap.cols, 40);
     }
 }

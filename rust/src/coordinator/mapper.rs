@@ -359,6 +359,20 @@ pub fn matmul_segments(env: &PlanEnv, dtype: Dtype, k: usize) -> Vec<(usize, usi
     segs
 }
 
+/// Snap a proposed re-shard cut (in slab elements) down onto a tensor's
+/// shard-alignment grid. Weight slabs are row-major `k x n` and align to
+/// their row width `n`, so a legal cut sits on a multiple of `n`: each
+/// side of the cut is then a whole K-subrange that [`matmul_chunks`]
+/// plans as its own rectangular partial-sum chunk — a cut anywhere else
+/// would split a dot product between blocks. The farm routes every
+/// optimizer `Split` move through this before touching the shard table.
+/// Returns `None` when no interior grid point exists at or below `at`.
+pub fn reshard_cut(align: usize, at: usize) -> Option<usize> {
+    let align = align.max(1);
+    let snapped = at / align * align;
+    (snapped > 0).then_some(snapped)
+}
+
 /// Integer elementwise operator -> kernel op.
 pub(crate) fn ew_kernel_op(op: EwOp) -> KernelOp {
     match op {
@@ -1267,6 +1281,18 @@ mod tests {
         let b = vec![vec![1i64; n]; k];
         let p = plan_bare(&JobPayload::IntDot { w: 4, a, b });
         assert_eq!(p.tasks.len(), 3); // 40 + 40 + 20
+    }
+
+    #[test]
+    fn reshard_cut_snaps_onto_the_chunk_grid() {
+        // a k x n weight slab aligns to n = 40: cuts snap down to whole-K
+        // boundaries so neither half splits a dot product
+        assert_eq!(reshard_cut(40, 100), Some(80));
+        assert_eq!(reshard_cut(40, 80), Some(80));
+        assert_eq!(reshard_cut(40, 39), None, "no interior boundary below one row");
+        assert_eq!(reshard_cut(1, 7), Some(7), "unaligned tensors cut anywhere");
+        assert_eq!(reshard_cut(0, 7), Some(7), "degenerate align behaves as 1");
+        assert_eq!(reshard_cut(8, 0), None);
     }
 
     #[test]

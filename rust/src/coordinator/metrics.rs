@@ -102,6 +102,19 @@ pub struct Metrics {
     /// Shard evictions of multi-shard tensors (gauge; same source) — the
     /// signal that a large tensor degraded to a partial host fallback.
     pub shard_evictions: AtomicU64,
+    /// Total shard replicas across resident tensors (gauge; published
+    /// alongside the per-block storage gauges — exceeds the shard count
+    /// exactly when the optimizer has fanned hot slabs out).
+    pub replicas: AtomicU64,
+    /// Placement-optimizer rounds run (periodic + alloc-pressure).
+    pub opt_rounds: AtomicU64,
+    /// Optimizer moves applied (re-pins, replications, splits, boundary
+    /// moves — the applied count, not the chosen count).
+    pub opt_moves: AtomicU64,
+    /// Reserve-boundary promotions (storage grew) among applied moves.
+    pub opt_promotions: AtomicU64,
+    /// Reserve-boundary demotions (storage shrank) among applied moves.
+    pub opt_demotions: AtomicU64,
     /// Kernel runs executed from a pre-compiled micro-op trace (gauge;
     /// published from the farm's per-block counters via
     /// [`crate::coordinator::Coordinator::metrics_snapshot`]).
@@ -121,6 +134,11 @@ pub struct Metrics {
     pub route_cycle_err_sum: AtomicU64,
     /// Number of samples folded into `route_cycle_err_sum`.
     pub route_cycle_pred_samples: AtomicU64,
+    /// Per-block storage gauges `(used_bytes, reserved_bytes)`: packed
+    /// bytes of resident-tensor rows vs. the committed reserve boundary
+    /// per block (published via `Coordinator::metrics_snapshot`; moves
+    /// when the optimizer promotes/demotes a boundary).
+    block_storage: Mutex<Vec<(u64, u64)>>,
     /// Per-worker queue-depth gauges, sampled at submit (grown lazily to
     /// the widest farm seen).
     queue_depths: Mutex<Vec<DepthGauge>>,
@@ -184,6 +202,27 @@ impl Metrics {
         self.interp_fallbacks.store(interp_fallbacks, Ordering::Relaxed);
     }
 
+    /// Publish the placement layer's occupancy gauges: per-block
+    /// `(used_bytes, reserved_bytes)` and the farm-wide replica count.
+    pub fn set_placement_gauges(&self, per_block: &[(u64, u64)], replicas: u64) {
+        *self.block_storage.lock().unwrap() = per_block.to_vec();
+        self.replicas.store(replicas, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the per-block storage gauges.
+    pub fn block_storage_gauges(&self) -> Vec<(u64, u64)> {
+        self.block_storage.lock().unwrap().clone()
+    }
+
+    /// Fold one placement-optimizer round into the counters: moves is the
+    /// *applied* count, promotions/demotions the boundary moves among it.
+    pub fn record_optimizer_round(&self, moves: u64, promotions: u64, demotions: u64) {
+        self.opt_rounds.fetch_add(1, Ordering::Relaxed);
+        self.opt_moves.fetch_add(moves, Ordering::Relaxed);
+        self.opt_promotions.fetch_add(promotions, Ordering::Relaxed);
+        self.opt_demotions.fetch_add(demotions, Ordering::Relaxed);
+    }
+
     /// Fold one submit-time queue-depth sample (one entry per worker) into
     /// the per-worker gauges.
     pub fn record_queue_depths(&self, depths: &[usize]) {
@@ -229,10 +268,17 @@ impl Metrics {
         } else {
             self.route_cycle_err_sum.load(Ordering::Relaxed) as f64 / pred_samples as f64
         };
+        let storage: Vec<String> = self
+            .block_storage_gauges()
+            .iter()
+            .map(|(used, reserved)| format!("{used}/{reserved}"))
+            .collect();
         format!(
             "jobs={} block_runs={} ops={} cycles={} array_cycles={} critical_cycles={} \
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
-             shards={} shard_evictions={} trace_hits={} interp_fallbacks={} \
+             shards={} shard_evictions={} replicas={} storage=[{}] \
+             opt_rounds={} opt_moves={} opt_promotions={} opt_demotions={} \
+             trace_hits={} interp_fallbacks={} \
              pim_jobs={} host_jobs={} route_cycle_err_mean={err_mean:.1} \
              qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
@@ -248,6 +294,12 @@ impl Metrics {
             self.resident_hits.load(Ordering::Relaxed),
             self.shards.load(Ordering::Relaxed),
             self.shard_evictions.load(Ordering::Relaxed),
+            self.replicas.load(Ordering::Relaxed),
+            storage.join(","),
+            self.opt_rounds.load(Ordering::Relaxed),
+            self.opt_moves.load(Ordering::Relaxed),
+            self.opt_promotions.load(Ordering::Relaxed),
+            self.opt_demotions.load(Ordering::Relaxed),
             self.trace_hits.load(Ordering::Relaxed),
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.pim_jobs.load(Ordering::Relaxed),
@@ -317,6 +369,16 @@ mod tests {
         m.set_trace_gauges(7, 1);
         assert!(m.snapshot().contains("trace_hits=7"));
         assert!(m.snapshot().contains("interp_fallbacks=1"));
+        m.set_placement_gauges(&[(40, 320), (0, 320)], 6);
+        assert!(m.snapshot().contains("replicas=6"));
+        assert!(m.snapshot().contains("storage=[40/320,0/320]"));
+        m.record_optimizer_round(3, 1, 0);
+        m.record_optimizer_round(2, 0, 1);
+        let snap = m.snapshot();
+        assert!(snap.contains("opt_rounds=2"), "{snap}");
+        assert!(snap.contains("opt_moves=5"), "{snap}");
+        assert!(snap.contains("opt_promotions=1"), "{snap}");
+        assert!(snap.contains("opt_demotions=1"), "{snap}");
         // per-dtype counters rode the same samples
         let by = m.dtype_counts();
         assert_eq!(by.len(), 2);

@@ -25,16 +25,30 @@ use super::metrics::{JobSample, Metrics};
 use crate::bitline::Geometry;
 use crate::cost::HostCostModel;
 use crate::exec::{
-    DataStats, Dtype, KernelCache, KernelKey, KernelOp, PlacementMap, Route, TensorHandle,
+    optimizer, DataStats, Dtype, KernelCache, KernelKey, KernelOp, OptimizerPolicy,
+    OptimizerReport, PlacementMap, Route, TensorHandle,
 };
 use anyhow::Result;
 use std::collections::HashSet;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// The top-level coordinator.
 pub struct Coordinator {
     farm: BlockFarm,
     pub metrics: Arc<Metrics>,
+    /// Plan/optimize exclusion. A plan reads `compute_rows` and then
+    /// enqueues its tasks; a reserve promote between the two would let a
+    /// kernel sized for the old compute area reach a shrunken block (the
+    /// worker's `check_kernel_fits` would fail it — safe, but a spurious
+    /// job error). Submitters hold the read side across plan→enqueue, the
+    /// optimizer holds the write side across its moves.
+    plan_gate: RwLock<()>,
+    /// Placement-optimizer knobs (wire-settable via the server's
+    /// `optimize` request).
+    opt_policy: Mutex<OptimizerPolicy>,
+    /// Jobs submitted since the last optimizer pass (periodic trigger).
+    submits_since_opt: AtomicU64,
 }
 
 /// An in-flight job. Obtain with [`Coordinator::submit`]; redeem with
@@ -133,6 +147,9 @@ impl Coordinator {
         Self {
             farm: BlockFarm::new(geometry, n_blocks),
             metrics: Arc::new(Metrics::new()),
+            plan_gate: RwLock::new(()),
+            opt_policy: Mutex::new(OptimizerPolicy::default()),
+            submits_since_opt: AtomicU64::new(0),
         }
     }
 
@@ -143,6 +160,9 @@ impl Coordinator {
         Self {
             farm: BlockFarm::with_storage(geometry, n_blocks, storage_rows),
             metrics: Arc::new(Metrics::new()),
+            plan_gate: RwLock::new(()),
+            opt_policy: Mutex::new(OptimizerPolicy::default()),
+            submits_since_opt: AtomicU64::new(0),
         }
     }
 
@@ -167,9 +187,25 @@ impl Coordinator {
 
     // ---- resident tensors (delegating to the farm) ------------------------
 
+    /// Alloc-pressure hook: when an allocation fails and the optimizer is
+    /// enabled, run one pass (it may demote idle reserves or re-home cold
+    /// layouts) and retry the allocation once before surfacing the error.
+    fn with_pressure_retry<T>(&self, alloc: impl Fn() -> Result<T>) -> Result<T> {
+        match alloc() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if !self.optimizer_policy().enabled {
+                    return Err(e);
+                }
+                self.optimize_now();
+                alloc()
+            }
+        }
+    }
+
     /// Store a tensor on one block; see [`BlockFarm::alloc_tensor`].
     pub fn alloc_tensor(&self, values: &[i64], dtype: Dtype) -> Result<TensorHandle> {
-        self.farm.alloc_tensor(values, dtype)
+        self.with_pressure_retry(|| self.farm.alloc_tensor(values, dtype))
     }
 
     /// Store a tensor on up to `copies` blocks; see
@@ -180,7 +216,7 @@ impl Coordinator {
         dtype: Dtype,
         copies: usize,
     ) -> Result<TensorHandle> {
-        self.farm.alloc_tensor_replicated(values, dtype, copies)
+        self.with_pressure_retry(|| self.farm.alloc_tensor_replicated(values, dtype, copies))
     }
 
     /// Store a (possibly sharded) tensor whose shard boundaries land on
@@ -192,13 +228,13 @@ impl Coordinator {
         copies: usize,
         align: usize,
     ) -> Result<TensorHandle> {
-        self.farm.alloc_tensor_aligned(values, dtype, copies, align)
+        self.with_pressure_retry(|| self.farm.alloc_tensor_aligned(values, dtype, copies, align))
     }
 
     /// Allocate a zero-initialized fabric-side activation tensor (the
     /// destination of fused compute); see [`BlockFarm::alloc_activation`].
     pub fn alloc_activation(&self, len: usize, dtype: Dtype, align: usize) -> Result<TensorHandle> {
-        self.farm.alloc_activation(len, dtype, align)
+        self.with_pressure_retry(|| self.farm.alloc_activation(len, dtype, align))
     }
 
     /// Overwrite a resident tensor's values on every replica.
@@ -323,15 +359,91 @@ impl Coordinator {
         }
     }
 
-    /// Publish the placement map's shard gauges and the farm's
-    /// trace-engine counters into [`Metrics`] and return the one-line
-    /// snapshot — the server's `stats` reply path, so shard behaviour and
-    /// trace effectiveness are observable from the wire.
+    // ---- placement optimizer ----------------------------------------------
+
+    /// The current optimizer policy.
+    pub fn optimizer_policy(&self) -> OptimizerPolicy {
+        *self.opt_policy.lock().unwrap()
+    }
+
+    /// Replace the optimizer policy (the server's `optimize` knobs).
+    pub fn set_optimizer_policy(&self, policy: OptimizerPolicy) {
+        *self.opt_policy.lock().unwrap() = policy;
+    }
+
+    /// Run one optimizer pass now: snapshot the placement state (resetting
+    /// the workload window), score candidate layouts, and apply the chosen
+    /// moves through the farm's loss-less move protocol. The write side of
+    /// the plan gate is held across the moves so no job plans against a
+    /// compute area that changes under it. Returns the pass report; stale
+    /// moves (the layout changed since the snapshot) are skipped, and the
+    /// applied count lands in [`Metrics`].
+    pub fn optimize_now(&self) -> OptimizerReport {
+        let policy = self.optimizer_policy();
+        let snap = self.farm.optimizer_snapshot(true);
+        let report = optimizer::choose(
+            &snap,
+            &policy,
+            &HostCostModel::calibrated(),
+            self.placement().max_reserve_rows(),
+        );
+        let applied = if report.moves.is_empty() {
+            0
+        } else {
+            let _gate = self.plan_gate.write().unwrap();
+            self.farm.apply_moves(&report.moves)
+        };
+        self.metrics.record_optimizer_round(
+            applied as u64,
+            report.promotions() as u64,
+            report.demotions() as u64,
+        );
+        report
+    }
+
+    /// Periodic trigger: every `policy.period` submitted jobs, run a pass.
+    /// Called on the submit path *before* the plan gate is taken (the pass
+    /// takes the write side).
+    fn maybe_optimize(&self) {
+        let policy = self.optimizer_policy();
+        if !policy.enabled || policy.period == 0 {
+            return;
+        }
+        let n = self.submits_since_opt.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= policy.period {
+            self.submits_since_opt.store(0, Ordering::Relaxed);
+            self.optimize_now();
+        }
+    }
+
+    /// Publish the placement map's shard gauges, per-block storage
+    /// occupancy, replica count, and the farm's trace-engine counters into
+    /// [`Metrics`] and return the one-line snapshot — the server's `stats`
+    /// reply path, so shard behaviour, optimizer activity and trace
+    /// effectiveness are observable from the wire.
     pub fn metrics_snapshot(&self) -> String {
         let d = self.data_stats();
         self.metrics.set_storage_gauges(d.shards, d.shard_evictions);
         let (trace_hits, interp_fallbacks) = self.farm.trace_stats();
         self.metrics.set_trace_gauges(trace_hits, interp_fallbacks);
+        // per-block storage occupancy in bytes: a storage row holds one
+        // bit per column
+        let cols = self.farm.geometry().cols() as u64;
+        let pm = self.placement();
+        let per_block: Vec<(u64, u64)> = (0..self.farm.len())
+            .map(|w| {
+                let (used, cap) = pm.occupancy(w);
+                (used as u64 * cols / 8, cap as u64 * cols / 8)
+            })
+            .collect();
+        let snap = self.farm.optimizer_snapshot(false);
+        let replicas: u64 = snap
+            .tensors
+            .iter()
+            .flat_map(|t| t.shards.iter())
+            .map(|s| s.homes.len() as u64)
+            .sum();
+        self.metrics.set_placement_gauges(&per_block, replicas);
         self.metrics.snapshot()
     }
 
@@ -352,6 +464,11 @@ impl Coordinator {
     /// live on-fabric), and `Route::Auto` lets the calibrated cost model
     /// pick whichever side the analytic trace predicts is faster.
     pub fn submit_routed(&self, job: Job, route: Route) -> JobHandle {
+        self.maybe_optimize();
+        // hold the plan gate (read side) from plan to enqueue so a
+        // concurrent optimizer pass cannot move a reserve boundary under a
+        // plan sized against the old compute area
+        let _plan_gate = self.plan_gate.read().unwrap();
         let payload = self.normalize(job.payload);
         let op_count = payload.op_count();
         let dtype = payload.dtype();
@@ -933,6 +1050,101 @@ mod tests {
             }
         }
         c.free_tensor(act).unwrap();
+    }
+
+    #[test]
+    fn optimize_now_repins_a_hot_evicted_tensor() {
+        use crate::exec::PlacementMove;
+        let c = Coordinator::with_storage(Geometry::G512x40, 1, 96);
+        let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let h = c.alloc_tensor(&a, Dtype::INT8).unwrap();
+        // build a traffic window against the tensor
+        for id in 0..3 {
+            let r = c
+                .run(Job {
+                    id,
+                    payload: JobPayload::IntElementwiseRef {
+                        op: EwOp::Add,
+                        w: 8,
+                        a: OperandRef::Tensor(h),
+                        b: OperandRef::Values(vec![1; 40]),
+                    },
+                })
+                .unwrap();
+            assert_eq!(r.resident_hits, 1);
+        }
+        // a full-reserve filler evicts the hot tensor, then frees its rows
+        let filler = c.alloc_tensor(&vec![7; 480], Dtype::INT8).unwrap();
+        assert!(c.placement().homes(h).is_empty(), "filler must evict");
+        c.free_tensor(filler).unwrap();
+        // the pass sees a hot homeless shard with free rows: repin wins
+        let r = c.optimize_now();
+        assert!(
+            r.moves.iter().any(|m| matches!(m, PlacementMove::Repin { .. })),
+            "{:?}",
+            r.moves
+        );
+        assert!(r.chosen_score < r.incumbent_score);
+        assert!(!c.placement().homes(h).is_empty(), "tensor re-pinned");
+        assert_eq!(c.read_tensor(h).unwrap(), a, "re-pin is bit-exact");
+        let snap = c.metrics_snapshot();
+        assert!(snap.contains("opt_rounds=1"), "{snap}");
+        assert!(snap.contains("opt_moves=1"), "{snap}");
+    }
+
+    #[test]
+    fn periodic_submits_trigger_optimizer_passes() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 1, 64);
+        let mut policy = c.optimizer_policy();
+        policy.period = 3;
+        c.set_optimizer_policy(policy);
+        let job = |id| Job {
+            id,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: vec![1; 20],
+                b: vec![2; 20],
+            },
+        };
+        for id in 0..3 {
+            c.run(job(id)).unwrap();
+        }
+        assert!(c.metrics_snapshot().contains("opt_rounds=1"));
+        for id in 3..6 {
+            c.run(job(id)).unwrap();
+        }
+        assert!(c.metrics_snapshot().contains("opt_rounds=2"));
+        // disabled policy stops the ticker
+        policy.enabled = false;
+        c.set_optimizer_policy(policy);
+        for id in 6..12 {
+            c.run(job(id)).unwrap();
+        }
+        assert!(c.metrics_snapshot().contains("opt_rounds=2"));
+    }
+
+    #[test]
+    fn metrics_snapshot_reports_per_block_storage_and_replicas() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 64);
+        let h = c.alloc_tensor(&vec![3; 40], Dtype::INT8).unwrap();
+        // 8 used rows of 40 columns = 40 bytes against a 320-byte reserve
+        let snap = c.metrics_snapshot();
+        assert!(snap.contains("storage=[40/320,0/320]"), "{snap}");
+        assert!(snap.contains("replicas=1"), "{snap}");
+        c.free_tensor(h).unwrap();
+        let snap = c.metrics_snapshot();
+        assert!(snap.contains("storage=[0/320,0/320]"), "{snap}");
+        assert!(snap.contains("replicas=0"), "{snap}");
+    }
+
+    #[test]
+    fn alloc_pressure_runs_an_optimizer_pass_before_failing() {
+        let c = Coordinator::with_storage(Geometry::G512x40, 1, 64);
+        // 96 rows can never fit a 64-row reserve: the alloc fails, but the
+        // pressure hook must have run (and recorded) one optimizer pass
+        assert!(c.alloc_tensor(&vec![1; 480], Dtype::INT8).is_err());
+        assert!(c.metrics_snapshot().contains("opt_rounds=1"));
     }
 
     #[test]

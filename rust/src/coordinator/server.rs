@@ -64,6 +64,16 @@
 //!   <- {"id": 6, "ok": true, "stats": "jobs=... dtypes=[int8:jobs=..] ..."}
 //! ```
 //!
+//! `optimize` runs one placement-optimizer pass immediately and reports
+//! the outcome; optional fields adjust the standing policy first
+//! (`"enabled"` toggles the periodic trigger, `"period"` sets its job
+//! count, `"replicas"` caps copies per shard):
+//!
+//! ```text
+//!   -> {"id": 11, "op": "optimize", "period": 32, "replicas": 2}
+//!   <- {"id": 11, "ok": true, "stats": "optimizer: candidates=.. moves=.. ..."}
+//! ```
+//!
 //! Ids and integer values are carried as [`Json::Int`], so 64-bit integers
 //! cross the wire without the 2^53 precision loss of an f64 path; request
 //! ids outside 0..=i64::MAX are rejected at parse time rather than echoed
@@ -187,6 +197,7 @@ pub enum Request {
     ReadTensor { id: u64, handle: TensorHandle },
     Free { id: u64, handle: TensorHandle },
     Stats { id: u64 },
+    Optimize { id: u64, enabled: Option<bool>, period: Option<u64>, max_replicas: Option<usize> },
 }
 
 impl Request {
@@ -197,7 +208,8 @@ impl Request {
             | Request::WriteTensor { id, .. }
             | Request::ReadTensor { id, .. }
             | Request::Free { id, .. }
-            | Request::Stats { id } => *id,
+            | Request::Stats { id }
+            | Request::Optimize { id, .. } => *id,
         }
     }
 }
@@ -447,6 +459,24 @@ pub fn parse_request(line: &str) -> Result<Request> {
         "read" => Ok(Request::ReadTensor { id, handle: handle_field(&v)? }),
         "free" => Ok(Request::Free { id, handle: handle_field(&v)? }),
         "stats" => Ok(Request::Stats { id }),
+        "optimize" => {
+            let enabled = match v.get("enabled") {
+                None => None,
+                Some(Json::Bool(b)) => Some(*b),
+                Some(_) => bail!("enabled must be a boolean"),
+            };
+            let period = match v.get("period") {
+                None => None,
+                Some(&Json::Int(i)) if i >= 1 => Some(i as u64),
+                Some(_) => bail!("period must be a positive integer"),
+            };
+            let max_replicas = match v.get("replicas") {
+                None => None,
+                Some(&Json::Int(i)) if i >= 1 => Some(i as usize),
+                Some(_) => bail!("replicas must be a positive integer"),
+            };
+            Ok(Request::Optimize { id, enabled, period, max_replicas })
+        }
         other => bail!("unsupported op {other:?}"),
     }
 }
@@ -818,6 +848,34 @@ fn handle_control(coordinator: &Coordinator, req: &Request) -> String {
                 coordinator.metrics_snapshot(),
                 coordinator.data_stats(),
                 coordinator.farm().affinity_stats(),
+            );
+            Ok(format_stats(id, &stats))
+        }
+        Request::Optimize { enabled, period, max_replicas, .. } => {
+            let mut policy = coordinator.optimizer_policy();
+            if let Some(on) = enabled {
+                policy.enabled = *on;
+            }
+            if let Some(p) = period {
+                policy.period = *p;
+            }
+            if let Some(r) = max_replicas {
+                policy.max_replicas = *r;
+            }
+            coordinator.set_optimizer_policy(policy);
+            let report = coordinator.optimize_now();
+            let stats = format!(
+                "optimizer: candidates={} moves={} promotions={} demotions={} \
+                 incumbent={:.1} chosen={:.1} enabled={} period={} replicas={}",
+                report.candidates,
+                report.moves.len(),
+                report.promotions(),
+                report.demotions(),
+                report.incumbent_score,
+                report.chosen_score,
+                policy.enabled,
+                policy.period,
+                policy.max_replicas,
             );
             Ok(format_stats(id, &stats))
         }
@@ -1341,6 +1399,26 @@ mod tests {
             parse_request(r#"{"id": 6, "op": "stats"}"#).unwrap(),
             Request::Stats { id: 6 }
         ));
+        match parse_request(
+            r#"{"id": 10, "op": "optimize", "enabled": false, "period": 32, "replicas": 2}"#,
+        )
+        .unwrap()
+        {
+            Request::Optimize { id, enabled, period, max_replicas } => {
+                assert_eq!(
+                    (id, enabled, period, max_replicas),
+                    (10, Some(false), Some(32), Some(2))
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"id": 11, "op": "optimize"}"#).unwrap(),
+            Request::Optimize { enabled: None, period: None, max_replicas: None, .. }
+        ));
+        assert!(parse_request(r#"{"id": 12, "op": "optimize", "period": 0}"#).is_err());
+        assert!(parse_request(r#"{"id": 13, "op": "optimize", "enabled": 1}"#).is_err());
+        assert!(parse_request(r#"{"id": 14, "op": "optimize", "replicas": -2}"#).is_err());
         // malformed control requests
         assert!(parse_request(r#"{"id": 7, "op": "read"}"#).is_err());
         assert!(parse_request(r#"{"id": 8, "op": "free", "handle": 0}"#).is_err());
@@ -1564,6 +1642,30 @@ mod tests {
         let v = ask(&format!(r#"{{"id": 7, "op": "read", "handle": {h}}}"#));
         assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{v:?}");
         server.stop();
+    }
+
+    #[test]
+    fn optimize_request_adjusts_policy_and_reports_a_pass() {
+        let coord = Coordinator::with_storage(Geometry::G512x40, 2, 96);
+        let req =
+            parse_request(r#"{"id": 9, "op": "optimize", "period": 32, "replicas": 3}"#).unwrap();
+        let v = Json::parse(&handle_control(&coord, &req)).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let stats = v.get("stats").and_then(Json::as_str).unwrap();
+        assert!(stats.contains("optimizer: candidates="), "{stats}");
+        assert!(stats.contains("period=32"), "{stats}");
+        assert!(stats.contains("replicas=3"), "{stats}");
+        let policy = coord.optimizer_policy();
+        assert_eq!((policy.period, policy.max_replicas), (32, 3));
+        assert!(policy.enabled);
+        // disabling the periodic trigger sticks, and the on-demand pass
+        // still runs (and still counts in the metrics)
+        let req = parse_request(r#"{"id": 10, "op": "optimize", "enabled": false}"#).unwrap();
+        let v = Json::parse(&handle_control(&coord, &req)).unwrap();
+        let stats = v.get("stats").and_then(Json::as_str).unwrap();
+        assert!(stats.contains("enabled=false"), "{stats}");
+        assert!(!coord.optimizer_policy().enabled);
+        assert!(coord.metrics_snapshot().contains("opt_rounds=2"));
     }
 
     #[test]

@@ -371,6 +371,21 @@ impl HostCostModel {
             + cycles as f64 * self.sim_ns_per_cycle
             + io_bytes as f64 * self.ns_per_io_byte
     }
+
+    /// Differential placement cost of one operand resolution against a
+    /// shard, the unit the farm optimizer (`exec::optimizer`) scores
+    /// candidate layouts in. A homeless shard pays its packed `bytes` of
+    /// host traffic plus a host-gather share of the dispatch cost on every
+    /// touch; a resident one pays only a small block-occupancy share.
+    /// Only the *difference* between the two sides is priced — the task
+    /// dispatch itself is spent either way.
+    pub fn placement_touch_ns(&self, resident: bool, bytes: u64) -> f64 {
+        if resident {
+            self.pim_dispatch_ns / 20.0
+        } else {
+            bytes as f64 * self.ns_per_io_byte + self.pim_dispatch_ns / 4.0
+        }
+    }
 }
 
 /// `mean_ns / ops` for one trajectory entry, when present and sane.
@@ -461,6 +476,21 @@ mod tests {
         assert!(one_task > m.pim_dispatch_ns, "dispatch floor priced in");
         assert!(m.pim_ns(2, 1000, 64) > one_task, "monotonic in tasks");
         assert!(m.pim_ns(1, 2000, 64) > one_task, "monotonic in cycles");
+    }
+
+    #[test]
+    fn placement_touch_pricing_orders_the_optimizer_correctly() {
+        let m = HostCostModel::default();
+        let resident = m.placement_touch_ns(true, 0);
+        let homeless = m.placement_touch_ns(false, 320);
+        assert!(resident > 0.0);
+        assert!(
+            homeless > resident,
+            "a host round-trip must always out-cost a resident touch"
+        );
+        // homeless cost grows with shard size; resident cost ignores it
+        assert!(m.placement_touch_ns(false, 64_000) > homeless);
+        assert_eq!(m.placement_touch_ns(true, 64_000), resident);
     }
 
     #[test]

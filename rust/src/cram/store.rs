@@ -227,6 +227,30 @@ impl BlockStore {
         let i = self.regions.iter().position(|(r_id, _)| *r_id == id)?;
         Some(self.regions.remove(i).1)
     }
+
+    /// First row of the reserve.
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Move the reserve's lower boundary — the storage/compute split of
+    /// this block. Lowering `base` **promotes** rows from compute to
+    /// storage (always succeeds: the new band is empty); raising it
+    /// **demotes** rows back to compute, which only succeeds if no region
+    /// sits below the new boundary. The caller owns the compute-side
+    /// safety protocol (publish the shrunken compute area and drain
+    /// in-flight kernels *before* promoting; see
+    /// `PlacementMap::commit_block_reserve`).
+    pub fn set_base(&mut self, base: usize) -> bool {
+        if base > self.limit {
+            return false;
+        }
+        if self.regions.iter().any(|(_, r)| r.base < base) {
+            return false;
+        }
+        self.base = base;
+        true
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +314,30 @@ mod tests {
         assert!(s.alloc((8, 0), 0).is_none());
         assert!(s.alloc((9, 0), 65).is_none());
         assert!(s.free((99, 0)).is_none());
+    }
+
+    #[test]
+    fn set_base_promotes_freely_and_demotes_only_empty_bands() {
+        let mut s = BlockStore::new(100, 200);
+        let a = s.alloc((1, 0), 40).unwrap();
+        assert_eq!(a.base, 100);
+        // promote: lower the boundary, capacity grows, regions untouched
+        assert!(s.set_base(60));
+        assert_eq!(s.base(), 60);
+        assert_eq!(s.capacity_rows(), 140);
+        assert_eq!(s.region((1, 0)), Some(a));
+        // a fresh alloc lands in the newly promoted band (first fit)
+        let b = s.alloc((2, 0), 30).unwrap();
+        assert_eq!(b.base, 60);
+        // demote across a live region fails; the store is unchanged
+        assert!(!s.set_base(80));
+        assert_eq!(s.base(), 60);
+        // free the low region, then the same demote succeeds
+        s.free((2, 0));
+        assert!(s.set_base(80));
+        assert_eq!(s.capacity_rows(), 120);
+        // past the limit is rejected outright
+        assert!(!s.set_base(201));
     }
 
     #[test]

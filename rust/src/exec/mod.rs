@@ -37,6 +37,11 @@
 //!   [`Route`] policy knob, and the analytic per-kernel cycle count
 //!   ([`kernel_cycles`]) the calibrated cost model weighs against a host
 //!   execution when a request is routed `auto`.
+//! * The [`optimizer`] module makes the paper's storage-vs-compute mode
+//!   split a *decision*, not a constant: it scores candidate placements
+//!   (reserve promote/demote, hot-slab replication, re-shard splits,
+//!   re-pins) against the live workload window and drives loss-less
+//!   background moves through the farm.
 //!
 //! Lifecycle (also documented in `DESIGN.md`):
 //!
@@ -51,6 +56,7 @@
 pub mod cache;
 pub mod dtype;
 pub mod kernel;
+pub mod optimizer;
 pub mod placement;
 pub mod residency;
 pub mod router;
@@ -61,7 +67,9 @@ pub use dtype::Dtype;
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
 pub use router::{kernel_cycles, HostEwOp, HostOp, HostWork, Route};
 pub use trace::{KernelTrace, MicroOp};
+pub use optimizer::{OptimizerPolicy, OptimizerReport, PlacementMove};
 pub use placement::{
-    DataStats, PlacementMap, SlicePart, SliceResolution, TensorHandle, TensorSlice,
+    DataStats, PlacementMap, PlacementSnapshot, RowsResolution, SlicePart,
+    SliceResolution, TensorHandle, TensorSlice,
 };
 pub use residency::{ResidencyMap, ResidencyStats};

@@ -1,0 +1,665 @@
+//! The farm-level placement optimizer: candidate enumeration + cost
+//! scoring over the live workload window.
+//!
+//! The paper's core claim is that each Compute RAM *chooses* between
+//! storage and compute mode; before this module the repo hard-coded that
+//! choice (a fixed per-block reserve) and reacted to pressure with LRU
+//! eviction only. The optimizer turns three static decisions — reserve
+//! size, shard homes, replica count — into one feedback loop, shaped like
+//! RAPID-map's logical-RAM mapper: enumerate a handful of candidate
+//! placements, score each against observed traffic with a **geomean**
+//! cost, keep the incumbent unless a candidate clearly wins.
+//!
+//! The module is pure decision logic over a [`PlacementSnapshot`]: it
+//! never touches blocks, locks, or tensors. The coordinator takes the
+//! chosen [`PlacementMove`]s and applies them through the farm's loss-less
+//! move protocol (staged placement, drain markers, publish-then-commit
+//! reserve boundaries — see `DESIGN.md` "Placement optimizer").
+//!
+//! Scoring. For a (projected) snapshot, every tensor with window traffic
+//! gets a predicted service time in nanoseconds:
+//!
+//! ```text
+//!   tensor_ns = 1 + Σ_shards  touches × ( homeless:  bytes·io_ns + miss
+//!                                       ; resident:  hit / n_homes    )
+//! ```
+//!
+//! — the per-touch prices come from
+//! [`HostCostModel::placement_touch_ns`]: a homeless shard pays host
+//! traffic plus a fixed host-gather overhead on every touch; a resident
+//! one pays only a block-occupancy share, divided by its replica count
+//! because replicas relieve hot-block queueing. Only the *differential* cost of placement appears — the task
+//! dispatch itself is paid either way, so including it on both sides would
+//! wash out the signal. The snapshot score is the geomean of the tensor
+//! costs plus a small rent per committed reserve row, so an idle farm
+//! prefers *smaller* reserves (demote) and a promote must buy real traffic
+//! reduction to win. The incumbent layout is always candidate #0, which
+//! gives the safety property the proptests pin down: the chosen
+//! candidate's score is never above the incumbent's.
+
+use super::placement::{PlacementSnapshot, ShardSnap, TensorSnap};
+use super::TensorHandle;
+use crate::cost::HostCostModel;
+
+/// Rent in ns-units per committed reserve row, added to the geomean. Small
+/// enough that any live traffic dominates, large enough that a fully idle
+/// window makes demotion the winning candidate.
+const RESERVE_RENT_NS: f64 = 0.5;
+
+/// Policy knobs for the placement optimizer (wire-settable through the
+/// server's `optimize` request).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptimizerPolicy {
+    /// Master switch: when false, `maybe_optimize` never runs a pass.
+    pub enabled: bool,
+    /// Run a pass every this many submitted jobs (alloc-pressure events
+    /// also trigger one).
+    pub period: u64,
+    /// Max replicas per shard (including the primary home).
+    pub max_replicas: usize,
+    /// Required relative score improvement before moves are applied; below
+    /// it the incumbent stays (hysteresis against churn).
+    pub min_gain: f64,
+    /// Reserve-boundary step in rows for promote/demote candidates.
+    pub reserve_step: usize,
+    /// Cap on moves applied per pass (each move costs block I/O).
+    pub max_moves: usize,
+}
+
+impl Default for OptimizerPolicy {
+    fn default() -> OptimizerPolicy {
+        OptimizerPolicy {
+            enabled: true,
+            period: 64,
+            max_replicas: 2,
+            min_gain: 0.05,
+            reserve_step: 64,
+            max_moves: 8,
+        }
+    }
+}
+
+/// One background move the coordinator applies through the farm. Moves
+/// within a chosen candidate are ordered: reserve changes first (they make
+/// room), then splits, then re-pins/replications that fill the room.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMove {
+    /// Grow `worker`'s storage reserve to `reserve_rows` (publish, quiesce,
+    /// commit).
+    Promote { worker: usize, reserve_rows: usize },
+    /// Shrink `worker`'s storage reserve to `reserve_rows` (only succeeds
+    /// if the vacated band is empty).
+    Demote { worker: usize, reserve_rows: usize },
+    /// Split a homeless shard at absolute element `at` so its halves can
+    /// be re-pinned independently.
+    Split { tensor: TensorHandle, shard: u32, at: usize },
+    /// Re-pin an evicted (homeless) shard from its host backup onto
+    /// `worker`.
+    Repin { tensor: TensorHandle, shard: u32, worker: usize },
+    /// Clone a resident shard block-to-block onto `worker` as an extra
+    /// replica.
+    Replicate { tensor: TensorHandle, shard: u32, worker: usize },
+}
+
+/// Outcome of one optimizer pass.
+#[derive(Clone, Debug, Default)]
+pub struct OptimizerReport {
+    /// Score of the current layout under the window.
+    pub incumbent_score: f64,
+    /// Score of the chosen candidate (== incumbent when `moves` is empty).
+    pub chosen_score: f64,
+    /// Moves to apply, in order. Empty = keep the incumbent.
+    pub moves: Vec<PlacementMove>,
+    /// Candidates enumerated (incumbent included).
+    pub candidates: usize,
+}
+
+impl OptimizerReport {
+    pub fn promotions(&self) -> usize {
+        self.moves.iter().filter(|m| matches!(m, PlacementMove::Promote { .. })).count()
+    }
+
+    pub fn demotions(&self) -> usize {
+        self.moves.iter().filter(|m| matches!(m, PlacementMove::Demote { .. })).count()
+    }
+}
+
+/// Storage rows `len` elements of `dtype` occupy on a `cols`-column block
+/// (mirrors `cram::store::tensor_rows` without needing the `Geometry`).
+fn rows_for(dtype: crate::exec::Dtype, len: usize, cols: usize) -> usize {
+    len.div_ceil(cols.max(1)) * dtype.bits() as usize
+}
+
+/// Mutable projection of a snapshot a candidate's moves are applied to
+/// before scoring. Tracks only what the score reads: free rows per worker
+/// and homes/traffic per shard.
+#[derive(Clone)]
+struct Projection {
+    cols: usize,
+    free_rows: Vec<usize>,
+    reserve_rows: Vec<usize>,
+    tensors: Vec<TensorSnap>,
+}
+
+impl Projection {
+    fn of(snap: &PlacementSnapshot) -> Projection {
+        Projection {
+            cols: snap.cols,
+            free_rows: snap
+                .workers
+                .iter()
+                .map(|w| w.capacity_rows.saturating_sub(w.used_rows))
+                .collect(),
+            reserve_rows: snap.workers.iter().map(|w| w.capacity_rows).collect(),
+            tensors: snap.tensors.clone(),
+        }
+    }
+
+    fn shard_mut(&mut self, t: TensorHandle, shard: u32) -> Option<&mut ShardSnap> {
+        self.tensors
+            .iter_mut()
+            .find(|e| e.handle == t)
+            .and_then(|e| e.shards.iter_mut().find(|s| s.index == shard))
+    }
+
+    /// Apply one move; returns false (projection unchanged in spirit) when
+    /// the move cannot apply — enumeration avoids generating those, so a
+    /// false here only guards against pathological candidates.
+    fn apply(&mut self, mv: PlacementMove) -> bool {
+        match mv {
+            PlacementMove::Promote { worker, reserve_rows } => {
+                let Some(cur) = self.reserve_rows.get(worker).copied() else {
+                    return false;
+                };
+                if reserve_rows <= cur {
+                    return false;
+                }
+                self.free_rows[worker] += reserve_rows - cur;
+                self.reserve_rows[worker] = reserve_rows;
+                true
+            }
+            PlacementMove::Demote { worker, reserve_rows } => {
+                let Some(cur) = self.reserve_rows.get(worker).copied() else {
+                    return false;
+                };
+                if reserve_rows >= cur || self.free_rows[worker] < cur - reserve_rows {
+                    return false;
+                }
+                self.free_rows[worker] -= cur - reserve_rows;
+                self.reserve_rows[worker] = reserve_rows;
+                true
+            }
+            PlacementMove::Split { tensor, shard, at } => {
+                let cols = self.cols;
+                let Some(e) = self.tensors.iter_mut().find(|e| e.handle == tensor)
+                else {
+                    return false;
+                };
+                let dtype = e.dtype;
+                let Some(pos) = e.shards.iter().position(|s| s.index == shard) else {
+                    return false;
+                };
+                let s = &e.shards[pos];
+                if !s.homes.is_empty() || at <= s.offset || at >= s.offset + s.len {
+                    return false;
+                }
+                let head_len = at - s.offset;
+                let tail_len = s.offset + s.len - at;
+                let frac = head_len as f64 / s.len as f64;
+                let head_miss = (s.miss_elems as f64 * frac) as u64;
+                let head = ShardSnap {
+                    index: s.index,
+                    offset: s.offset,
+                    len: head_len,
+                    rows: rows_for(dtype, head_len, cols),
+                    homes: Vec::new(),
+                    has_host: s.has_host,
+                    // both halves see the whole touch stream
+                    touches: s.touches,
+                    miss_elems: head_miss,
+                };
+                let tail = ShardSnap {
+                    index: s.index + 1,
+                    offset: at,
+                    len: tail_len,
+                    rows: rows_for(dtype, tail_len, cols),
+                    homes: Vec::new(),
+                    has_host: s.has_host,
+                    touches: s.touches,
+                    miss_elems: s.miss_elems - head_miss,
+                };
+                for later in e.shards.iter_mut().skip(pos + 1) {
+                    later.index += 1;
+                }
+                e.shards[pos] = head;
+                e.shards.insert(pos + 1, tail);
+                true
+            }
+            PlacementMove::Repin { tensor, shard, worker }
+            | PlacementMove::Replicate { tensor, shard, worker } => {
+                let replicate = matches!(mv, PlacementMove::Replicate { .. });
+                let free = match self.free_rows.get(worker) {
+                    Some(&f) => f,
+                    None => return false,
+                };
+                let Some(s) = self.shard_mut(tensor, shard) else { return false };
+                if s.homes.contains(&worker) || (replicate == s.homes.is_empty()) {
+                    return false;
+                }
+                let rows = s.rows;
+                if free < rows {
+                    return false;
+                }
+                s.homes.push(worker);
+                s.miss_elems = 0;
+                self.free_rows[worker] -= rows;
+                true
+            }
+        }
+    }
+
+    /// Geomean service cost of the projected layout (see module docs).
+    fn score(&self, model: &HostCostModel) -> f64 {
+        let mut ln_sum = 0.0;
+        let mut n = 0usize;
+        for t in &self.tensors {
+            let total: u64 = t.shards.iter().map(|s| s.touches).sum();
+            if total == 0 {
+                continue;
+            }
+            let mut tensor_ns = 1.0;
+            for s in &t.shards {
+                if s.touches == 0 {
+                    continue;
+                }
+                let per_touch = if s.homes.is_empty() {
+                    model.placement_touch_ns(false, t.dtype.slice_bytes(s.len))
+                } else {
+                    // replicas relieve hot-block queueing: share the cost
+                    model.placement_touch_ns(true, 0) / s.homes.len() as f64
+                };
+                tensor_ns += s.touches as f64 * per_touch;
+            }
+            ln_sum += tensor_ns.ln();
+            n += 1;
+        }
+        let geomean = if n == 0 { 1.0 } else { (ln_sum / n as f64).exp() };
+        let rent: usize = self.reserve_rows.iter().sum();
+        geomean + rent as f64 * RESERVE_RENT_NS
+    }
+}
+
+/// One enumerated candidate: a labelled move list plus its projected score.
+#[derive(Clone, Debug)]
+struct Candidate {
+    moves: Vec<PlacementMove>,
+    score: f64,
+}
+
+/// Greedy re-pins of hot homeless shards into a projection's free rows,
+/// hottest (by missed bytes) first. Mutates `proj` and appends the moves.
+fn greedy_repins(
+    proj: &mut Projection,
+    moves: &mut Vec<PlacementMove>,
+    budget: usize,
+) {
+    let mut hot: Vec<(u64, TensorHandle, u32, usize)> = proj
+        .tensors
+        .iter()
+        .flat_map(|t| {
+            let (h, d) = (t.handle, t.dtype);
+            t.shards
+                .iter()
+                .filter(|s| s.homes.is_empty() && s.touches > 0 && s.has_host)
+                .map(move |s| (s.touches * d.slice_bytes(s.len), h, s.index, s.rows))
+        })
+        .collect();
+    hot.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, tensor, shard, rows) in hot {
+        if moves.len() >= budget {
+            break;
+        }
+        // most-free worker that can take the shard
+        let Some(worker) = proj
+            .free_rows
+            .iter()
+            .enumerate()
+            .filter(|&(_, &f)| f >= rows)
+            .max_by_key(|&(i, &f)| (f, usize::MAX - i))
+            .map(|(i, _)| i)
+        else {
+            continue;
+        };
+        let mv = PlacementMove::Repin { tensor, shard, worker };
+        if proj.apply(mv) {
+            moves.push(mv);
+        }
+    }
+}
+
+/// Enumerate candidates and pick the best. The incumbent (no moves) is
+/// always in the pool, so `chosen_score <= incumbent_score` by
+/// construction; `moves` is non-empty only when the winner beats the
+/// incumbent by at least `policy.min_gain`.
+pub fn choose(
+    snap: &PlacementSnapshot,
+    policy: &OptimizerPolicy,
+    model: &HostCostModel,
+    max_reserve_rows: usize,
+) -> OptimizerReport {
+    let incumbent = Projection::of(snap);
+    let incumbent_score = incumbent.score(model);
+    let mut best = Candidate { moves: Vec::new(), score: incumbent_score };
+    let mut candidates = 1usize;
+
+    let mut consider = |moves: Vec<PlacementMove>, proj: &Projection| {
+        candidates += 1;
+        let score = proj.score(model);
+        if score < best.score {
+            best = Candidate { moves, score };
+        }
+    };
+
+    // 1. re-pin hot evicted shards into existing free rows
+    {
+        let mut proj = incumbent.clone();
+        let mut moves = Vec::new();
+        greedy_repins(&mut proj, &mut moves, policy.max_moves);
+        if !moves.is_empty() {
+            consider(moves, &proj);
+        }
+    }
+
+    // 2. promote each block's reserve by one or two steps, then re-pin
+    for worker in 0..incumbent.reserve_rows.len() {
+        for steps in [1usize, 2] {
+            let target = incumbent.reserve_rows[worker] + steps * policy.reserve_step;
+            if target > max_reserve_rows {
+                continue;
+            }
+            let mut proj = incumbent.clone();
+            let mut moves = Vec::new();
+            let mv = PlacementMove::Promote { worker, reserve_rows: target };
+            if !proj.apply(mv) {
+                continue;
+            }
+            moves.push(mv);
+            greedy_repins(&mut proj, &mut moves, policy.max_moves);
+            if moves.len() > 1 {
+                consider(moves, &proj);
+            }
+        }
+    }
+
+    // 3. replicate the hottest resident shards onto the freest other block
+    {
+        let mut hot: Vec<(u64, TensorHandle, u32, usize, Vec<usize>)> = incumbent
+            .tensors
+            .iter()
+            .flat_map(|t| {
+                let h = t.handle;
+                t.shards
+                    .iter()
+                    .filter(|s| {
+                        !s.homes.is_empty()
+                            && s.homes.len() < policy.max_replicas
+                            && s.touches > 1
+                    })
+                    .map(move |s| (s.touches, h, s.index, s.rows, s.homes.clone()))
+            })
+            .collect();
+        hot.sort_by(|a, b| b.0.cmp(&a.0));
+        for (_, tensor, shard, rows, homes) in hot.into_iter().take(4) {
+            let Some(worker) = incumbent
+                .free_rows
+                .iter()
+                .enumerate()
+                .filter(|&(i, &f)| f >= rows && !homes.contains(&i))
+                .max_by_key(|&(i, &f)| (f, usize::MAX - i))
+                .map(|(i, _)| i)
+            else {
+                continue;
+            };
+            let mut proj = incumbent.clone();
+            let mv = PlacementMove::Replicate { tensor, shard, worker };
+            if proj.apply(mv) {
+                consider(vec![mv], &proj);
+            }
+        }
+    }
+
+    // 4. split a hot homeless shard too big for any block's free rows,
+    //    then re-pin the halves
+    for t in &incumbent.tensors {
+        for s in &t.shards {
+            if !s.homes.is_empty() || s.touches == 0 || !s.has_host || s.len < 2 {
+                continue;
+            }
+            let max_free = incumbent.free_rows.iter().copied().max().unwrap_or(0);
+            if s.rows <= max_free {
+                continue; // a plain re-pin handles it
+            }
+            let mid = s.offset + s.len / 2;
+            let at = (mid / t.align) * t.align;
+            if at <= s.offset || at >= s.offset + s.len {
+                continue;
+            }
+            let mut proj = incumbent.clone();
+            let mut moves = Vec::new();
+            let mv = PlacementMove::Split { tensor: t.handle, shard: s.index, at };
+            if !proj.apply(mv) {
+                continue;
+            }
+            moves.push(mv);
+            greedy_repins(&mut proj, &mut moves, policy.max_moves);
+            if moves.len() > 1 {
+                consider(moves, &proj);
+            }
+        }
+    }
+
+    // 5. demote blocks whose reserve is mostly idle free rows
+    for worker in 0..incumbent.reserve_rows.len() {
+        let cur = incumbent.reserve_rows[worker];
+        if cur < 2 * policy.reserve_step
+            || incumbent.free_rows[worker] < policy.reserve_step
+        {
+            continue;
+        }
+        let mut proj = incumbent.clone();
+        let mv =
+            PlacementMove::Demote { worker, reserve_rows: cur - policy.reserve_step };
+        if proj.apply(mv) {
+            consider(vec![mv], &proj);
+        }
+    }
+
+    let apply = !best.moves.is_empty()
+        && best.score < incumbent_score * (1.0 - policy.min_gain);
+    OptimizerReport {
+        incumbent_score,
+        chosen_score: if apply { best.score } else { incumbent_score },
+        moves: if apply { best.moves } else { Vec::new() },
+        candidates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::placement::WorkerSnap;
+    use crate::exec::Dtype;
+
+    fn model() -> HostCostModel {
+        HostCostModel::default()
+    }
+
+    fn worker(used: usize, cap: usize) -> WorkerSnap {
+        WorkerSnap { used_rows: used, capacity_rows: cap, queue_depth: 0 }
+    }
+
+    fn shard(
+        index: u32,
+        offset: usize,
+        len: usize,
+        rows: usize,
+        homes: Vec<usize>,
+        touches: u64,
+    ) -> ShardSnap {
+        ShardSnap {
+            index,
+            offset,
+            len,
+            rows,
+            homes,
+            has_host: true,
+            touches,
+            miss_elems: 0,
+        }
+    }
+
+    fn tensor(id: u64, len: usize, shards: Vec<ShardSnap>) -> TensorSnap {
+        TensorSnap {
+            handle: TensorHandle::from_id(id),
+            dtype: Dtype::INT8,
+            len,
+            align: 1,
+            shards,
+        }
+    }
+
+    #[test]
+    fn keep_wins_on_an_idle_window() {
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(8, 64), worker(0, 64)],
+            tensors: vec![tensor(1, 40, vec![shard(0, 0, 40, 8, vec![0], 0)])],
+        };
+        let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+        assert!(r.moves.is_empty());
+        assert_eq!(r.chosen_score, r.incumbent_score);
+        assert!(r.candidates >= 1);
+    }
+
+    #[test]
+    fn hot_homeless_shard_repins_into_free_rows() {
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(0, 96), worker(0, 96)],
+            tensors: vec![tensor(1, 400, vec![shard(0, 0, 400, 80, vec![], 50)])],
+        };
+        let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+        assert_eq!(
+            r.moves,
+            vec![PlacementMove::Repin {
+                tensor: TensorHandle::from_id(1),
+                shard: 0,
+                worker: 0
+            }]
+        );
+        assert!(r.chosen_score < r.incumbent_score);
+    }
+
+    #[test]
+    fn pressure_promotes_the_reserve_then_repins() {
+        // both blocks full; the hot shard (80 rows) only fits after a
+        // promote by at least one 64-row step... use step 2 coverage
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(64, 64), worker(64, 64)],
+            tensors: vec![
+                tensor(1, 400, vec![shard(0, 0, 400, 80, vec![], 200)]),
+                tensor(2, 320, vec![shard(0, 0, 320, 64, vec![0], 1)]),
+                tensor(3, 320, vec![shard(0, 0, 320, 64, vec![1], 1)]),
+            ],
+        };
+        let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+        assert!(r.promotions() == 1, "{:?}", r.moves);
+        assert!(
+            r.moves.iter().any(|m| matches!(m, PlacementMove::Repin { .. })),
+            "{:?}",
+            r.moves
+        );
+        assert!(r.chosen_score < r.incumbent_score);
+    }
+
+    #[test]
+    fn hot_resident_shard_replicates() {
+        // shard is resident and very hot; plenty of free rows elsewhere,
+        // no homeless traffic to repin
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(8, 64), worker(0, 64)],
+            tensors: vec![tensor(1, 40, vec![shard(0, 0, 40, 8, vec![0], 500)])],
+        };
+        let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+        assert_eq!(
+            r.moves,
+            vec![PlacementMove::Replicate {
+                tensor: TensorHandle::from_id(1),
+                shard: 0,
+                worker: 1
+            }]
+        );
+    }
+
+    #[test]
+    fn oversized_hot_shard_splits_then_repins() {
+        // 160-row shard, each block has only 96 free rows: whole-shard
+        // repin is impossible, split + two repins wins
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(0, 96), worker(0, 96)],
+            tensors: vec![tensor(1, 800, vec![shard(0, 0, 800, 160, vec![], 80)])],
+        };
+        let mut policy = OptimizerPolicy::default();
+        policy.reserve_step = 512; // promotes impossible: force the split path
+        let r = choose(&snap, &policy, &model(), 416);
+        assert!(
+            r.moves.iter().any(|m| matches!(m, PlacementMove::Split { .. })),
+            "{:?}",
+            r.moves
+        );
+        assert!(
+            r.moves.iter().filter(|m| matches!(m, PlacementMove::Repin { .. })).count()
+                >= 1,
+            "{:?}",
+            r.moves
+        );
+    }
+
+    #[test]
+    fn idle_oversized_reserve_demotes() {
+        let snap = PlacementSnapshot {
+            cols: 40,
+            workers: vec![worker(0, 192), worker(0, 192)],
+            tensors: vec![],
+        };
+        let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+        assert_eq!(r.demotions(), 1, "{:?}", r.moves);
+        assert!(r.chosen_score < r.incumbent_score);
+    }
+
+    #[test]
+    fn chosen_score_never_exceeds_the_incumbent() {
+        // a grab-bag of layouts; the Keep candidate guarantees the bound
+        for touches in [0u64, 1, 10, 1000] {
+            for homes in [vec![], vec![0], vec![0, 1]] {
+                let snap = PlacementSnapshot {
+                    cols: 40,
+                    workers: vec![worker(32, 64), worker(8, 64)],
+                    tensors: vec![tensor(
+                        1,
+                        400,
+                        vec![shard(0, 0, 400, 80, homes.clone(), touches)],
+                    )],
+                };
+                let r = choose(&snap, &OptimizerPolicy::default(), &model(), 416);
+                assert!(
+                    r.chosen_score <= r.incumbent_score,
+                    "touches={touches} homes={homes:?}"
+                );
+            }
+        }
+    }
+}

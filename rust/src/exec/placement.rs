@@ -35,10 +35,11 @@
 
 use super::Dtype;
 use crate::bitline::Geometry;
-use crate::cram::store::{tensor_rows, BlockStore, RegionId};
+use crate::cram::store::{tensor_rows, BlockStore};
 use crate::ucode::bf16::SCRATCH_ROWS;
+use anyhow::{bail, ensure, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Identity of a resident tensor. Plain data — cheap to copy, meaningful
@@ -132,6 +133,20 @@ pub enum SliceResolution {
     Missing,
 }
 
+/// How a K-sliced row range of a resident tensor resolves on one worker
+/// (see [`PlacementMap::resolve_rows`]).
+#[derive(Clone, Debug)]
+pub enum RowsResolution {
+    /// Per-row parts in row order; `hits` is the number of distinct
+    /// resident-here shards the whole range touched (the per-operand
+    /// resident-hit count, deduplicated across rows).
+    Rows { dtype: Dtype, rows: Vec<Vec<SlicePart>>, hits: u64 },
+    /// The row range exceeds the tensor's length.
+    OutOfRange { len: usize },
+    /// Unknown or freed handle.
+    Missing,
+}
+
 /// Where one shard's values live for a whole-tensor read (see
 /// [`PlacementMap::read_plan`]).
 #[derive(Clone, Debug)]
@@ -162,21 +177,103 @@ pub struct ShardWrite {
     pub has_host: bool,
 }
 
+/// Point-in-time view of one worker's storage reserve (see
+/// [`PlacementMap::snapshot`]). `queue_depth` is filled in by the farm —
+/// the map does not see the task queues.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSnap {
+    pub used_rows: usize,
+    pub capacity_rows: usize,
+    pub queue_depth: usize,
+}
+
+/// Point-in-time view of one shard for the optimizer.
+#[derive(Clone, Debug)]
+pub struct ShardSnap {
+    pub index: u32,
+    pub offset: usize,
+    pub len: usize,
+    /// Storage rows one replica of this shard occupies.
+    pub rows: usize,
+    pub homes: Vec<usize>,
+    pub has_host: bool,
+    /// Operand resolutions that touched this shard in the window.
+    pub touches: u64,
+    /// Elements served from the host backup in the window.
+    pub miss_elems: u64,
+}
+
+/// Point-in-time view of one resident tensor for the optimizer.
+#[derive(Clone, Debug)]
+pub struct TensorSnap {
+    pub handle: TensorHandle,
+    pub dtype: Dtype,
+    pub len: usize,
+    /// Shard-boundary alignment unit; re-shard splits must respect it.
+    pub align: usize,
+    pub shards: Vec<ShardSnap>,
+}
+
+/// A consistent snapshot of the whole placement state plus the live
+/// workload window — the optimizer's only input (see
+/// [`super::optimizer`]).
+#[derive(Clone, Debug, Default)]
+pub struct PlacementSnapshot {
+    /// Columns of the block geometry (for row-size math on split shards).
+    pub cols: usize,
+    pub workers: Vec<WorkerSnap>,
+    pub tensors: Vec<TensorSnap>,
+}
+
 /// One row-range shard of a resident tensor: element range, replica homes,
 /// per-shard host backup and LRU clock.
 struct Shard {
+    /// Stable id within the tensor: survives re-shard splits, unlike the
+    /// positional index, so [`BlockStore`] regions stay keyed correctly
+    /// while the shard table mutates around them.
+    uid: u32,
     offset: usize,
     len: usize,
     /// `(worker, base row)` replicas.
     homes: Vec<(usize, usize)>,
+    /// Replicas currently being spilled: the data is still valid in the
+    /// array, but the router must not create *new* pins against them (see
+    /// [`PlacementMap::begin_drain`]).
+    draining: Vec<usize>,
     /// Host backing copy of this shard (set on eviction).
     host: Option<Arc<Vec<i64>>>,
     last_touch: u64,
+    /// Optimizer workload window: operand resolutions touching this shard
+    /// since the last [`PlacementMap::snapshot`] reset.
+    window_touches: u64,
+    /// Elements of this shard served from the host backup in the window.
+    window_miss_elems: u64,
+}
+
+impl Shard {
+    fn fresh(uid: u32, offset: usize, len: usize, touch: u64) -> Shard {
+        Shard {
+            uid,
+            offset,
+            len,
+            homes: Vec::new(),
+            draining: Vec::new(),
+            host: None,
+            last_touch: touch,
+            window_touches: 0,
+            window_miss_elems: 0,
+        }
+    }
 }
 
 struct Entry {
     dtype: Dtype,
     len: usize,
+    /// Shard-boundary alignment unit from registration (1 for `register`):
+    /// re-shard splits must also land on multiples of it.
+    align: usize,
+    /// Next shard uid for this tensor.
+    next_uid: u32,
     /// Ordered, contiguous, covering `0..len`.
     shards: Vec<Shard>,
 }
@@ -186,11 +283,20 @@ impl Entry {
     fn shard_at(&self, e: usize) -> Option<usize> {
         self.shards.iter().position(|s| e >= s.offset && e < s.offset + s.len)
     }
+
+    /// Shard index holding region uid `uid` (the inverse of `Shard::uid`).
+    fn shard_by_uid(&self, uid: u32) -> Option<usize> {
+        self.shards.iter().position(|s| s.uid == uid)
+    }
 }
 
 struct Inner {
     stores: Vec<BlockStore>,
     tensors: BTreeMap<u64, Entry>,
+    /// Regions allocated by [`PlacementMap::place_staged`] whose values are
+    /// not written yet: `(tensor id, shard uid, worker)`. Invisible to
+    /// resolution and never picked as eviction victims.
+    staged: Vec<(u64, u32, usize)>,
     next_id: u64,
     clock: u64,
 }
@@ -198,7 +304,15 @@ struct Inner {
 /// See the module docs. One per [`crate::coordinator::farm::BlockFarm`].
 pub struct PlacementMap {
     geometry: Geometry,
-    reserve_rows: usize,
+    /// Initial per-block reserve from construction. `0` disables storage
+    /// permanently; otherwise the optimizer may move each block's boundary
+    /// via [`Self::publish_reserve_cap`] / [`Self::commit_block_reserve`].
+    initial_reserve_rows: usize,
+    /// Max reserve rows *published* across blocks — the compute-area cap
+    /// every new plan must respect. Raised before a promote commits (so no
+    /// plan targets rows about to become storage) and lowered only after a
+    /// demote commits.
+    published_reserve: AtomicUsize,
     inner: Mutex<Inner>,
     host_bytes_in: AtomicU64,
     host_bytes_out: AtomicU64,
@@ -231,10 +345,12 @@ impl PlacementMap {
         };
         PlacementMap {
             geometry,
-            reserve_rows,
+            initial_reserve_rows: reserve_rows,
+            published_reserve: AtomicUsize::new(reserve_rows),
             inner: Mutex::new(Inner {
                 stores: (0..n_workers).map(|_| BlockStore::new(base, limit)).collect(),
                 tensors: BTreeMap::new(),
+                staged: Vec::new(),
                 next_id: 1,
                 clock: 0,
             }),
@@ -251,19 +367,90 @@ impl PlacementMap {
         self.geometry
     }
 
-    /// Rows of storage reserve per block (0 = storage disabled).
+    /// The published storage-reserve cap in rows: the *max* reserve any
+    /// block may currently hold (0 = storage disabled). Plans size kernel
+    /// bodies against this, so it only grows before a promote commits and
+    /// only shrinks after a demote commits.
     pub fn reserve_rows(&self) -> usize {
-        self.reserve_rows
+        self.published_reserve.load(Ordering::Acquire)
     }
 
     /// Rows available to compute-kernel bodies (the mapper caps every
     /// kernel at this; the worker enforces it).
     pub fn compute_rows(&self) -> usize {
-        if self.reserve_rows == 0 {
+        let reserve = self.reserve_rows();
+        if reserve == 0 {
             self.geometry.rows()
         } else {
-            self.geometry.rows() - SCRATCH_ROWS - self.reserve_rows
+            self.geometry.rows() - SCRATCH_ROWS - reserve
         }
+    }
+
+    /// Largest reserve a block may be promoted to on this geometry (room
+    /// for the scratch guard plus one widest-kernel tuple must remain).
+    pub fn max_reserve_rows(&self) -> usize {
+        self.geometry.rows().saturating_sub(SCRATCH_ROWS + 64)
+    }
+
+    /// Committed reserve rows per block (each block's `BlockStore`
+    /// capacity). Differs from [`Self::reserve_rows`] mid-promote.
+    pub fn block_reserves(&self) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner.stores.iter().map(|s| s.capacity_rows()).collect()
+    }
+
+    /// Raise the published reserve cap to at least `rows` ahead of a
+    /// promote. After this returns, every *new* plan sizes kernels for the
+    /// shrunken compute area; the caller must still quiesce in-flight
+    /// kernels (planned against the old cap) before committing the store
+    /// boundary with [`Self::commit_block_reserve`].
+    pub fn publish_reserve_cap(&self, rows: usize) -> Result<()> {
+        ensure!(self.initial_reserve_rows > 0, "storage is disabled on this farm");
+        ensure!(
+            rows + SCRATCH_ROWS + 64 <= self.geometry.rows(),
+            "reserve of {rows} rows leaves no compute area on {:?}",
+            self.geometry
+        );
+        self.published_reserve.fetch_max(rows, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Move `worker`'s committed storage boundary so its reserve is `rows`.
+    /// Promotion (growing the reserve) always succeeds once published;
+    /// demotion requires the vacated band to be empty (the caller evicts or
+    /// re-pins its shards first) and then lowers the published cap back to
+    /// the max committed reserve. The scratch guard band never moves.
+    pub fn commit_block_reserve(&self, worker: usize, rows: usize) -> Result<()> {
+        ensure!(self.initial_reserve_rows > 0, "storage is disabled on this farm");
+        ensure!(rows > 0, "cannot demote a block's reserve to zero");
+        ensure!(
+            rows + SCRATCH_ROWS + 64 <= self.geometry.rows(),
+            "reserve of {rows} rows leaves no compute area on {:?}",
+            self.geometry
+        );
+        ensure!(
+            rows <= self.reserve_rows(),
+            "reserve of {rows} rows exceeds the published cap of {} — \
+             call publish_reserve_cap (and quiesce) first",
+            self.reserve_rows()
+        );
+        let mut inner = self.inner.lock().unwrap();
+        ensure!(worker < inner.stores.len(), "unknown worker {worker}");
+        let base = self.geometry.rows() - SCRATCH_ROWS - rows;
+        ensure!(
+            inner.stores[worker].set_base(base),
+            "demote to {rows} rows blocked: block {worker} still holds \
+             regions below row {base}"
+        );
+        // after a demote the cap may shrink back to the widest committed
+        // reserve (never below: other blocks' plans depend on it)
+        let max_committed =
+            inner.stores.iter().map(|s| s.capacity_rows()).max().unwrap_or(0);
+        let cur = self.published_reserve.load(Ordering::Acquire);
+        if max_committed < cur {
+            self.published_reserve.store(max_committed, Ordering::Release);
+        }
+        Ok(())
     }
 
     pub fn n_workers(&self) -> usize {
@@ -284,13 +471,9 @@ impl PlacementMap {
             Entry {
                 dtype,
                 len,
-                shards: vec![Shard {
-                    offset: 0,
-                    len,
-                    homes: Vec::new(),
-                    host: None,
-                    last_touch: touch,
-                }],
+                align: 1,
+                next_uid: 1,
+                shards: vec![Shard::fresh(0, 0, len, touch)],
             },
         );
         TensorHandle(id)
@@ -311,12 +494,16 @@ impl PlacementMap {
         align: usize,
         target_elems: Option<usize>,
     ) -> Option<TensorHandle> {
-        if self.reserve_rows == 0 || len == 0 {
+        if self.initial_reserve_rows == 0 || len == 0 {
             return None;
         }
         let align = align.max(1);
         let cols = self.geometry.cols();
-        let slots = self.reserve_rows / dtype.bits() as usize;
+        let mut inner = self.inner.lock().unwrap();
+        // size shards for the widest *committed* reserve: a shard must be
+        // able to live somewhere right now, not after a future promote
+        let reserve = inner.stores.iter().map(|s| s.capacity_rows()).max().unwrap_or(0);
+        let slots = reserve / dtype.bits() as usize;
         let cap_elems = (slots * cols / align) * align;
         if cap_elems == 0 {
             return None;
@@ -326,7 +513,6 @@ impl PlacementMap {
             let t = t.div_ceil(align) * align;
             shard_elems = shard_elems.min(t.max(align));
         }
-        let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
         let touch = inner.clock;
@@ -335,16 +521,11 @@ impl PlacementMap {
         let mut off = 0;
         while off < len {
             let l = shard_elems.min(len - off);
-            shards.push(Shard {
-                offset: off,
-                len: l,
-                homes: Vec::new(),
-                host: None,
-                last_touch: touch,
-            });
+            shards.push(Shard::fresh(shards.len() as u32, off, l, touch));
             off += l;
         }
-        inner.tensors.insert(id, Entry { dtype, len, shards });
+        let next_uid = shards.len() as u32;
+        inner.tensors.insert(id, Entry { dtype, len, align, next_uid, shards });
         Some(TensorHandle(id))
     }
 
@@ -352,6 +533,13 @@ impl PlacementMap {
     pub fn info(&self, h: TensorHandle) -> Option<(Dtype, usize)> {
         let inner = self.inner.lock().unwrap();
         inner.tensors.get(&h.0).map(|e| (e.dtype, e.len))
+    }
+
+    /// The shard-boundary alignment unit of a registered tensor (1 for
+    /// unaligned tensors); re-shard cuts must land on its multiples.
+    pub fn align_of(&self, h: TensorHandle) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner.tensors.get(&h.0).map(|e| e.align)
     }
 
     /// The `(offset, len)` element ranges of a tensor's shards, in order.
@@ -368,6 +556,36 @@ impl PlacementMap {
     pub fn shard_count(&self, h: TensorHandle) -> usize {
         let inner = self.inner.lock().unwrap();
         inner.tensors.get(&h.0).map_or(0, |e| e.shards.len())
+    }
+
+    /// Workers holding a replica of shard `shard` (empty for unknown
+    /// handles/shards or fully evicted shards).
+    pub fn shard_homes(&self, h: TensorHandle, shard: u32) -> Vec<usize> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tensors
+            .get(&h.0)
+            .and_then(|e| e.shards.get(shard as usize))
+            .map(|s| s.homes.iter().map(|&(w, _)| w).collect())
+            .unwrap_or_default()
+    }
+
+    /// `(tensor, shard index)` of every region on `worker` that lies below
+    /// the boundary a demote to `rows` reserve rows would set — the shards
+    /// the farm must evict before [`Self::commit_block_reserve`] can
+    /// shrink the store.
+    pub fn regions_below_reserve(&self, worker: usize, rows: usize) -> Vec<(TensorHandle, u32)> {
+        let new_base = self.geometry.rows() - SCRATCH_ROWS - rows;
+        let inner = self.inner.lock().unwrap();
+        let Some(store) = inner.stores.get(worker) else { return Vec::new() };
+        store
+            .ids()
+            .filter(|&id| store.region(id).is_some_and(|r| r.base < new_base))
+            .filter_map(|(tid, uid)| {
+                let idx = inner.tensors.get(&tid)?.shard_by_uid(uid)?;
+                Some((TensorHandle(tid), idx as u32))
+            })
+            .collect()
     }
 
     /// Workers currently holding a replica of **any** shard.
@@ -390,6 +608,13 @@ impl PlacementMap {
     /// — the set a task reading that slice can resolve fully in place on.
     /// Empty when no single worker covers the slice (the task then runs
     /// unpinned and gathers host copies for the missing pieces).
+    ///
+    /// A replica that is mid-eviction ([`Self::begin_drain`]) is excluded
+    /// whenever the shard has another live replica — pinning new work to it
+    /// would race the spill. If the draining replica is the shard's *only*
+    /// home it stays eligible: its data is valid until [`Self::evict`]
+    /// lands, after which the host backup takes over, and excluding it
+    /// would leave a resident shard with no route at all.
     pub fn slice_homes(&self, h: TensorHandle, offset: usize, len: usize) -> Vec<usize> {
         let inner = self.inner.lock().unwrap();
         let Some(e) = inner.tensors.get(&h.0) else { return Vec::new() };
@@ -399,7 +624,17 @@ impl PlacementMap {
             if s.offset + s.len <= offset || s.offset >= end {
                 continue;
             }
-            let shard_workers: Vec<usize> = s.homes.iter().map(|&(w, _)| w).collect();
+            let mut shard_workers: Vec<usize> = s.homes.iter().map(|&(w, _)| w).collect();
+            if !s.draining.is_empty() {
+                let live: Vec<usize> = shard_workers
+                    .iter()
+                    .copied()
+                    .filter(|w| !s.draining.contains(w))
+                    .collect();
+                if !live.is_empty() {
+                    shard_workers = live;
+                }
+            }
             out = Some(match out {
                 None => shard_workers,
                 Some(prev) => {
@@ -463,47 +698,251 @@ impl PlacementMap {
     /// are never chosen as victims (a large tensor must not thrash its own
     /// earlier shards while the later ones land).
     pub fn place(&self, h: TensorHandle, shard: u32, worker: usize) -> PlaceAttempt {
+        self.place_inner(h, shard, worker, true)
+    }
+
+    /// Like [`Self::place`], but the new region stays **staged**: no home
+    /// is published, so concurrent resolutions keep reading the shard's
+    /// existing replicas or host backup. The caller writes the values into
+    /// the region and then flips it live with [`Self::commit_home`] (or
+    /// abandons it with [`Self::abort_staged`]). This is the move protocol
+    /// for replicating or re-pinning a *live* tensor: a home must never be
+    /// visible before its rows hold the data.
+    pub fn place_staged(&self, h: TensorHandle, shard: u32, worker: usize) -> PlaceAttempt {
+        self.place_inner(h, shard, worker, false)
+    }
+
+    fn place_inner(
+        &self,
+        h: TensorHandle,
+        shard: u32,
+        worker: usize,
+        publish_home: bool,
+    ) -> PlaceAttempt {
         let mut inner = self.inner.lock().unwrap();
-        let (dtype, slen) = match inner.tensors.get(&h.0) {
+        let (dtype, slen, uid, already_home) = match inner.tensors.get(&h.0) {
             Some(e) => match e.shards.get(shard as usize) {
-                Some(s) => (e.dtype, s.len),
+                Some(s) => {
+                    (e.dtype, s.len, s.uid, s.homes.iter().any(|&(w, _)| w == worker))
+                }
                 None => return PlaceAttempt::NoFit,
             },
             None => return PlaceAttempt::NoFit,
         };
+        if !publish_home && already_home {
+            // a replica already lives here; a staged clone would collide
+            // with its region key
+            return PlaceAttempt::NoFit;
+        }
         let rows = tensor_rows(self.geometry, dtype, slen);
         if inner.stores[worker].capacity_rows() < rows {
             return PlaceAttempt::NoFit;
         }
-        if let Some(region) = inner.stores[worker].alloc((h.0, shard), rows) {
-            let touch = inner.clock;
-            inner.clock += 1;
-            let e = inner.tensors.get_mut(&h.0).expect("entry exists");
-            let s = &mut e.shards[shard as usize];
-            if !s.homes.iter().any(|&(w, _)| w == worker) {
-                s.homes.push((worker, region.base));
+        if let Some(region) = inner.stores[worker].alloc((h.0, uid), rows) {
+            let base = region.base;
+            if publish_home {
+                let touch = inner.clock;
+                inner.clock += 1;
+                let e = inner.tensors.get_mut(&h.0).expect("entry exists");
+                let s = &mut e.shards[shard as usize];
+                if !already_home {
+                    s.homes.push((worker, base));
+                }
+                s.last_touch = touch;
+            } else {
+                inner.staged.push((h.0, uid, worker));
             }
-            s.last_touch = touch;
-            return PlaceAttempt::Placed { base: region.base };
+            return PlaceAttempt::Placed { base };
         }
         // LRU victim among shards homed on this worker (never a shard of
-        // `h` itself)
+        // `h` itself, never a staged region — its values are not written)
         let victim = inner.stores[worker]
             .ids()
-            .filter(|&(tid, _)| tid != h.0)
-            .min_by_key(|&(tid, sidx)| {
-                inner
-                    .tensors
-                    .get(&tid)
-                    .and_then(|e| e.shards.get(sidx as usize))
-                    .map_or(0, |s| s.last_touch)
-            });
+            .filter(|&(tid, uid)| {
+                tid != h.0 && !inner.staged.contains(&(tid, uid, worker))
+            })
+            .filter_map(|(tid, uid)| {
+                let e = inner.tensors.get(&tid)?;
+                let idx = e.shard_by_uid(uid)?;
+                Some((tid, idx as u32, e.shards[idx].last_touch))
+            })
+            .min_by_key(|&(_, _, touch)| touch);
         match victim {
-            Some((tid, sidx)) => {
+            Some((tid, sidx, _)) => {
                 PlaceAttempt::Evict { victim: TensorHandle(tid), shard: sidx }
             }
             None => PlaceAttempt::NoFit,
         }
+    }
+
+    /// Publish a region staged by [`Self::place_staged`] as a live home —
+    /// the caller has finished writing the shard's values into it. Returns
+    /// `false` if no such staged region exists.
+    pub fn commit_home(&self, h: TensorHandle, shard: u32, worker: usize) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(uid) = inner
+            .tensors
+            .get(&h.0)
+            .and_then(|e| e.shards.get(shard as usize))
+            .map(|s| s.uid)
+        else {
+            return false;
+        };
+        let Some(pos) = inner.staged.iter().position(|&st| st == (h.0, uid, worker))
+        else {
+            return false;
+        };
+        inner.staged.remove(pos);
+        let Some(base) = inner.stores[worker].region((h.0, uid)).map(|r| r.base) else {
+            return false;
+        };
+        let touch = inner.clock;
+        inner.clock += 1;
+        let e = inner.tensors.get_mut(&h.0).expect("entry exists");
+        let s = &mut e.shards[shard as usize];
+        if !s.homes.iter().any(|&(w, _)| w == worker) {
+            s.homes.push((worker, base));
+        }
+        s.last_touch = touch;
+        true
+    }
+
+    /// Abandon a staged region (move failed): the rows return to the store
+    /// and no home is published.
+    pub fn abort_staged(&self, h: TensorHandle, shard: u32, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(uid) = inner
+            .tensors
+            .get(&h.0)
+            .and_then(|e| e.shards.get(shard as usize))
+            .map(|s| s.uid)
+        else {
+            return;
+        };
+        if let Some(pos) = inner.staged.iter().position(|&st| st == (h.0, uid, worker)) {
+            inner.staged.remove(pos);
+            inner.stores[worker].free((h.0, uid));
+        }
+    }
+
+    /// Mark shard `shard`'s replica on `worker` as draining: an eviction
+    /// has started reading it out. The data stays valid (resolutions keep
+    /// hitting it) but [`Self::slice_homes`] stops offering the replica for
+    /// *new* pins whenever another live home can serve instead — otherwise
+    /// a task could be pinned to a replica that is gone by the time the
+    /// task runs, forcing a Remote bail. Cleared by [`Self::evict`].
+    pub fn begin_drain(&self, h: TensorHandle, shard: u32, worker: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.tensors.get_mut(&h.0) {
+            if let Some(s) = e.shards.get_mut(shard as usize) {
+                if s.homes.iter().any(|&(w, _)| w == worker)
+                    && !s.draining.contains(&worker)
+                {
+                    s.draining.push(worker);
+                }
+            }
+        }
+    }
+
+    /// Split shard `shard` of `h` at element `at` (absolute offset within
+    /// the tensor) into two shards. Only a **homeless** shard may split —
+    /// the move protocol evicts its replicas first, so the split merely
+    /// slices the host backup and can never tear a live region. `at` must
+    /// fall strictly inside the shard on a multiple of the tensor's
+    /// alignment unit (so per-shard matmul chunk plans stay rectangular).
+    pub fn split_shard(&self, h: TensorHandle, shard: u32, at: usize) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.tensors.get_mut(&h.0) else {
+            bail!("unknown tensor {}", h.0)
+        };
+        let align = e.align;
+        let n_uid = e.next_uid;
+        let Some(s) = e.shards.get_mut(shard as usize) else {
+            bail!("tensor {} has no shard {shard}", h.0)
+        };
+        ensure!(
+            s.homes.is_empty() && s.draining.is_empty(),
+            "shard {shard} of tensor {} still has replicas; evict before splitting",
+            h.0
+        );
+        ensure!(
+            at > s.offset && at < s.offset + s.len,
+            "split point {at} outside shard [{}, {})",
+            s.offset,
+            s.offset + s.len
+        );
+        ensure!(
+            at % align == 0,
+            "split point {at} off the tensor's {align}-element alignment grid"
+        );
+        let head_len = at - s.offset;
+        let tail_len = s.offset + s.len - at;
+        let (head_host, tail_host) = match &s.host {
+            Some(v) => (
+                Some(Arc::new(v[..head_len].to_vec())),
+                Some(Arc::new(v[head_len..].to_vec())),
+            ),
+            None => (None, None),
+        };
+        let mut tail = Shard::fresh(n_uid, at, tail_len, s.last_touch);
+        tail.host = tail_host;
+        tail.window_touches = s.window_touches;
+        tail.window_miss_elems = s.window_miss_elems / 2;
+        s.uid = n_uid + 1;
+        s.len = head_len;
+        s.host = head_host;
+        s.window_miss_elems -= tail.window_miss_elems;
+        e.next_uid += 2;
+        e.shards.insert(shard as usize + 1, tail);
+        Ok(())
+    }
+
+    /// A consistent snapshot of stores, shard tables, and the per-shard
+    /// workload window for the optimizer. `reset_window` zeroes the window
+    /// counters so the next snapshot sees only fresh traffic.
+    pub fn snapshot(&self, reset_window: bool) -> PlacementSnapshot {
+        let mut inner = self.inner.lock().unwrap();
+        let workers = inner
+            .stores
+            .iter()
+            .map(|s| WorkerSnap {
+                used_rows: s.used_rows(),
+                capacity_rows: s.capacity_rows(),
+                queue_depth: 0,
+            })
+            .collect();
+        let geometry = self.geometry;
+        let tensors = inner
+            .tensors
+            .iter_mut()
+            .map(|(&id, e)| {
+                let (dtype, len, align) = (e.dtype, e.len, e.align);
+                let shards = e
+                    .shards
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let snap = ShardSnap {
+                            index: i as u32,
+                            offset: s.offset,
+                            len: s.len,
+                            rows: tensor_rows(geometry, dtype, s.len),
+                            homes: s.homes.iter().map(|&(w, _)| w).collect(),
+                            has_host: s.host.is_some(),
+                            touches: s.window_touches,
+                            miss_elems: s.window_miss_elems,
+                        };
+                        if reset_window {
+                            s.window_touches = 0;
+                            s.window_miss_elems = 0;
+                        }
+                        snap
+                    })
+                    .collect();
+                TensorSnap { handle: TensorHandle(id), dtype, len, align, shards }
+            })
+            .collect();
+        PlacementSnapshot { cols: geometry.cols(), workers, tensors }
     }
 
     /// `(base row, dtype, shard offset, shard len)` of shard `shard` of
@@ -518,7 +957,7 @@ impl PlacementMap {
         let inner = self.inner.lock().unwrap();
         let e = inner.tensors.get(&h.0)?;
         let s = e.shards.get(shard as usize)?;
-        let region = inner.stores[worker].region((h.0, shard))?;
+        let region = inner.stores[worker].region((h.0, s.uid))?;
         Some((region.base, e.dtype, s.offset, s.len))
     }
 
@@ -531,7 +970,15 @@ impl PlacementMap {
     /// large tensor degrades to a *partial* host fallback.
     pub fn evict(&self, h: TensorHandle, shard: u32, worker: usize, values: Vec<i64>) {
         let mut inner = self.inner.lock().unwrap();
-        if inner.stores[worker].free((h.0, shard)).is_none() {
+        let Some(uid) = inner
+            .tensors
+            .get(&h.0)
+            .and_then(|e| e.shards.get(shard as usize))
+            .map(|s| s.uid)
+        else {
+            return;
+        };
+        if inner.stores[worker].free((h.0, uid)).is_none() {
             return; // already gone
         }
         let mut multi = false;
@@ -539,6 +986,7 @@ impl PlacementMap {
             multi = e.shards.len() > 1;
             if let Some(s) = e.shards.get_mut(shard as usize) {
                 s.homes.retain(|&(w, _)| w != worker);
+                s.draining.retain(|&w| w != worker);
                 s.host = Some(Arc::new(values));
             }
         }
@@ -621,6 +1069,7 @@ impl PlacementMap {
                 continue;
             }
             s.last_touch = touch;
+            s.window_touches += 1;
             let ov0 = offset.max(s.offset);
             let ov1 = end.min(s.offset + s.len);
             if let Some(&(_, base)) = s.homes.iter().find(|&&(w, _)| w == worker) {
@@ -632,6 +1081,7 @@ impl PlacementMap {
                 });
             } else if let Some(values) = &s.host {
                 misses += 1;
+                s.window_miss_elems += (ov1 - ov0) as u64;
                 parts.push(SlicePart::Host {
                     // Arc clone: the (possibly large) backup is shared
                     values: Arc::clone(values),
@@ -647,6 +1097,88 @@ impl PlacementMap {
         self.resident_hits.fetch_add(hits, Ordering::Relaxed);
         self.resident_misses.fetch_add(misses, Ordering::Relaxed);
         SliceResolution::Parts { dtype: e.dtype, parts }
+    }
+
+    /// Resolve the K-sliced rows `i0..i1` × columns `[k0, k1)` of a
+    /// row-major resident tensor with row width `k`, under **one** lock
+    /// acquisition. Per-row parts come back in row order, exactly as a
+    /// per-row [`Self::resolve_slice`] loop would produce them — but each
+    /// overlapped shard's LRU clock, workload-window counters and the
+    /// global hit/miss counters are bumped **once per call**, not once per
+    /// row: a task gathering many rows of one resident shard is one
+    /// operand resolution, not `rows` of them. (The per-row loop the farm
+    /// used previously inflated `resident_hits` in proportion to the row
+    /// count, which skewed the replica-aware routing stats the optimizer
+    /// now feeds on.) Host-part `window_miss_elems` still accumulate per
+    /// row — that traffic is real; only the hit/miss *counts* dedup.
+    pub fn resolve_rows(
+        &self,
+        h: TensorHandle,
+        k: usize,
+        i0: usize,
+        i1: usize,
+        k0: usize,
+        k1: usize,
+        worker: usize,
+    ) -> RowsResolution {
+        let mut inner = self.inner.lock().unwrap();
+        let touch = inner.clock;
+        inner.clock += 1;
+        let Some(e) = inner.tensors.get_mut(&h.0) else { return RowsResolution::Missing };
+        if i1 > i0 && (i1 - 1) * k + k1 > e.len {
+            return RowsResolution::OutOfRange { len: e.len };
+        }
+        let n_shards = e.shards.len();
+        let mut touched = vec![false; n_shards];
+        let mut hit = vec![false; n_shards];
+        let mut missed = vec![false; n_shards];
+        let mut rows = Vec::with_capacity(i1.saturating_sub(i0));
+        for i in i0..i1 {
+            let (offset, end) = (i * k + k0, i * k + k1);
+            let mut parts = Vec::new();
+            for (si, s) in e.shards.iter_mut().enumerate() {
+                if s.offset + s.len <= offset || s.offset >= end {
+                    continue;
+                }
+                touched[si] = true;
+                let ov0 = offset.max(s.offset);
+                let ov1 = end.min(s.offset + s.len);
+                if let Some(&(_, base)) = s.homes.iter().find(|&&(w, _)| w == worker) {
+                    hit[si] = true;
+                    parts.push(SlicePart::Local {
+                        base,
+                        start: ov0 - s.offset,
+                        len: ov1 - ov0,
+                    });
+                } else if let Some(values) = &s.host {
+                    missed[si] = true;
+                    s.window_miss_elems += (ov1 - ov0) as u64;
+                    parts.push(SlicePart::Host {
+                        values: Arc::clone(values),
+                        start: ov0 - s.offset,
+                        len: ov1 - ov0,
+                    });
+                } else {
+                    parts.push(SlicePart::Remote {
+                        workers: s.homes.iter().map(|&(w, _)| w).collect(),
+                    });
+                }
+            }
+            rows.push(parts);
+        }
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        for (si, s) in e.shards.iter_mut().enumerate() {
+            if touched[si] {
+                s.last_touch = touch;
+                s.window_touches += 1;
+            }
+            hits += u64::from(hit[si]);
+            misses += u64::from(missed[si]);
+        }
+        self.resident_hits.fetch_add(hits, Ordering::Relaxed);
+        self.resident_misses.fetch_add(misses, Ordering::Relaxed);
+        RowsResolution::Rows { dtype: e.dtype, rows, hits }
     }
 
     /// Per-shard sources for a whole-tensor read (first replica, else the
@@ -679,10 +1211,17 @@ impl PlacementMap {
     pub fn remove(&self, h: TensorHandle) -> bool {
         let mut inner = self.inner.lock().unwrap();
         let Some(e) = inner.tensors.remove(&h.0) else { return false };
-        for (i, s) in e.shards.iter().enumerate() {
+        for s in &e.shards {
             for &(worker, _) in &s.homes {
-                inner.stores[worker].free((h.0, i as u32));
+                inner.stores[worker].free((h.0, s.uid));
             }
+        }
+        // any staged (mid-move) regions of the freed tensor go too
+        let stale: Vec<(u64, u32, usize)> =
+            inner.staged.iter().filter(|&&(tid, _, _)| tid == h.0).copied().collect();
+        for (tid, uid, worker) in stale {
+            inner.stores[worker].free((tid, uid));
+            inner.staged.retain(|&st| st != (tid, uid, worker));
         }
         true
     }
@@ -727,7 +1266,7 @@ impl std::fmt::Debug for PlacementMap {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("PlacementMap")
             .field("geometry", &self.geometry)
-            .field("reserve_rows", &self.reserve_rows)
+            .field("reserve_rows", &self.reserve_rows())
             .field("tensors", &self.len())
             .field("stats", &self.stats())
             .finish()
@@ -746,6 +1285,52 @@ mod tests {
     fn resolve_all(m: &PlacementMap, h: TensorHandle, worker: usize) -> SliceResolution {
         let len = m.info(h).map_or(0, |(_, l)| l);
         m.resolve_slice(h, 0, len, worker)
+    }
+
+    #[test]
+    fn resolve_rows_counts_one_hit_per_shard_not_per_row() {
+        // regression: the farm's K-sliced row gather used to resolve one
+        // slice per row, counting a resident hit per row per shard — a
+        // 10-row tile inflated `resident_hits` tenfold, skewing every
+        // stat replica-aware routing and the optimizer feed on
+        let m = map(64);
+        let h = m.register(Dtype::INT8, 120); // 10 rows of k=12, one shard
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        match m.resolve_rows(h, 12, 0, 10, 4, 8, 0) {
+            RowsResolution::Rows { dtype, rows, hits } => {
+                assert_eq!(dtype, Dtype::INT8);
+                assert_eq!(rows.len(), 10);
+                for (i, parts) in rows.iter().enumerate() {
+                    assert_eq!(parts.len(), 1);
+                    match &parts[0] {
+                        SlicePart::Local { start, len, .. } => {
+                            assert_eq!((*start, *len), (i * 12 + 4, 4));
+                        }
+                        other => panic!("{other:?}"),
+                    }
+                }
+                assert_eq!(hits, 1, "ten rows of one shard = one operand hit");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(m.stats().resident_hits, 1);
+        // the workload window saw one touch, not ten
+        let snap = m.snapshot(true);
+        assert_eq!(snap.tensors[0].shards[0].touches, 1);
+        assert_eq!(snap.tensors[0].shards[0].miss_elems, 0);
+        // evicted: misses dedup the same way, but the byte traffic stays
+        // honest — every row's host elements count
+        m.evict(h, 0, 0, vec![0; 120]);
+        match m.resolve_rows(h, 12, 0, 10, 4, 8, 0) {
+            RowsResolution::Rows { rows, hits, .. } => {
+                assert_eq!(hits, 0);
+                assert!(rows.iter().all(|p| matches!(p[0], SlicePart::Host { .. })));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(m.stats().resident_misses, 1);
+        let snap = m.snapshot(false);
+        assert_eq!(snap.tensors[0].shards[0].miss_elems, 40, "10 rows x 4 elems");
     }
 
     #[test]
@@ -1008,5 +1593,186 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn staged_region_is_invisible_until_committed() {
+        let m = map(64);
+        let h = m.register(Dtype::INT8, 40);
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        // stage a replica clone on worker 1: no home appears yet
+        assert!(matches!(m.place_staged(h, 0, 1), PlaceAttempt::Placed { .. }));
+        assert_eq!(m.homes(h), vec![0]);
+        assert_eq!(m.slice_homes(h, 0, 40), vec![0]);
+        // the rows ARE reserved on worker 1 (a competing alloc can't take
+        // them), even though resolution ignores them
+        assert_eq!(m.occupancy(1).0, 8);
+        assert!(m.commit_home(h, 0, 1));
+        let mut homes = m.homes(h);
+        homes.sort_unstable();
+        assert_eq!(homes, vec![0, 1]);
+        // a second commit is a no-op
+        assert!(!m.commit_home(h, 0, 1));
+    }
+
+    #[test]
+    fn aborted_stage_frees_the_rows() {
+        let m = map(64);
+        let h = m.register(Dtype::INT8, 40);
+        assert!(matches!(m.place_staged(h, 0, 1), PlaceAttempt::Placed { .. }));
+        assert_eq!(m.occupancy(1).0, 8);
+        m.abort_staged(h, 0, 1);
+        assert_eq!(m.occupancy(1).0, 0);
+        assert!(m.homes(h).is_empty());
+        // staging onto a worker already holding a replica is refused
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert_eq!(m.place_staged(h, 0, 0), PlaceAttempt::NoFit);
+    }
+
+    #[test]
+    fn staged_region_is_never_the_eviction_victim() {
+        let m = map(8); // exactly one 8-row tensor per block
+        let a = m.register(Dtype::INT8, 40);
+        assert!(matches!(m.place_staged(a, 0, 0), PlaceAttempt::Placed { .. }));
+        // the block is full, but the staged region has no written values —
+        // evicting it would snapshot garbage; the alloc must fail instead
+        let b = m.register(Dtype::INT8, 40);
+        assert_eq!(m.place(b, 0, 0), PlaceAttempt::NoFit);
+        assert!(m.commit_home(a, 0, 0));
+        // once live, it is a legitimate victim again
+        assert!(matches!(m.place(b, 0, 0), PlaceAttempt::Evict { victim, .. } if victim == a));
+    }
+
+    #[test]
+    fn draining_replica_loses_new_pins_unless_it_is_the_only_home() {
+        let m = map(64);
+        let h = m.register(Dtype::INT8, 40);
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 0, 1), PlaceAttempt::Placed { .. }));
+        // replica on worker 0 starts spilling: new pins go to worker 1 only
+        m.begin_drain(h, 0, 0);
+        assert_eq!(m.slice_homes(h, 0, 40), vec![1]);
+        // but a resolution already running on worker 0 still hits in place
+        assert!(matches!(
+            resolve_all(&m, h, 0),
+            SliceResolution::Parts { parts, .. } if matches!(parts[0], SlicePart::Local { .. })
+        ));
+        // the eviction lands; worker 1 remains the only home
+        m.evict(h, 0, 0, vec![3; 40]);
+        assert_eq!(m.slice_homes(h, 0, 40), vec![1]);
+        // drain the LAST replica: it must stay pinnable (data is valid
+        // until the spill completes, and there is no alternative home)
+        m.begin_drain(h, 0, 1);
+        assert_eq!(m.slice_homes(h, 0, 40), vec![1]);
+        m.evict(h, 0, 1, vec![3; 40]);
+        assert!(m.slice_homes(h, 0, 40).is_empty());
+    }
+
+    #[test]
+    fn split_requires_homeless_shard_and_alignment() {
+        let m = map(16); // 80 int8 elems per shard
+        let h = m.register_sharded(Dtype::INT8, 80, 10, None).unwrap();
+        assert_eq!(m.shard_ranges(h), vec![(0, 80)]);
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        // resident shards refuse to split (evict first)
+        assert!(m.split_shard(h, 0, 40).is_err());
+        m.evict(h, 0, 0, (0..80).collect());
+        // off-grid and out-of-range split points refuse
+        assert!(m.split_shard(h, 0, 35).is_err());
+        assert!(m.split_shard(h, 0, 0).is_err());
+        assert!(m.split_shard(h, 0, 80).is_err());
+        m.split_shard(h, 0, 40).unwrap();
+        assert_eq!(m.shard_ranges(h), vec![(0, 40), (40, 40)]);
+        // both halves carry the right slice of the backup
+        match m.resolve_slice(h, 0, 80, 0) {
+            SliceResolution::Parts { parts, .. } => {
+                assert_eq!(parts.len(), 2);
+                match (&parts[0], &parts[1]) {
+                    (
+                        SlicePart::Host { values: v0, .. },
+                        SlicePart::Host { values: v1, .. },
+                    ) => {
+                        assert_eq!(**v0, (0..40).collect::<Vec<i64>>());
+                        assert_eq!(**v1, (40..80).collect::<Vec<i64>>());
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // the halves place and evict independently under their new uids
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 1, 1), PlaceAttempt::Placed { .. }));
+        assert_eq!(m.slice_homes(h, 0, 40), vec![0]);
+        assert_eq!(m.slice_homes(h, 40, 40), vec![1]);
+        m.evict(h, 1, 1, (40..80).collect());
+        assert_eq!(m.slice_homes(h, 40, 40), Vec::<usize>::new());
+        assert!(m.remove(h));
+    }
+
+    #[test]
+    fn reserve_promote_and_demote_move_the_committed_boundary() {
+        let m = map(64);
+        assert_eq!(m.reserve_rows(), 64);
+        assert_eq!(m.compute_rows(), 512 - 32 - 64);
+        assert_eq!(m.block_reserves(), vec![64, 64]);
+        // promote block 0 to 128 rows: publish first (shrinks the compute
+        // cap for new plans), then commit the store boundary
+        m.publish_reserve_cap(128).unwrap();
+        assert_eq!(m.reserve_rows(), 128);
+        assert_eq!(m.compute_rows(), 512 - 32 - 128);
+        // committing above the published cap is refused
+        assert!(m.commit_block_reserve(0, 192).is_err());
+        m.commit_block_reserve(0, 128).unwrap();
+        assert_eq!(m.block_reserves(), vec![128, 64]);
+        assert_eq!(m.occupancy(0), (0, 128));
+        // a shard placed in the promoted band pins the boundary: demote
+        // below it is refused until the shard is evicted
+        let h = m.register(Dtype::INT8, 600); // 120 rows
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(m.commit_block_reserve(0, 64).is_err());
+        m.evict(h, 0, 0, vec![0; 600]);
+        m.commit_block_reserve(0, 64).unwrap();
+        // the cap relaxes back to the max committed reserve
+        assert_eq!(m.reserve_rows(), 64);
+        assert_eq!(m.compute_rows(), 512 - 32 - 64);
+        // the guard band never moves: an over-wide promote is refused
+        assert!(m.publish_reserve_cap(512 - 32 - 63).is_err());
+        // zero-reserve farms cannot promote into storage at all
+        let z = map(0);
+        assert!(z.publish_reserve_cap(64).is_err());
+        assert!(z.commit_block_reserve(0, 64).is_err());
+    }
+
+    #[test]
+    fn snapshot_reports_and_resets_the_workload_window() {
+        let m = map(16);
+        let h = m.register_sharded(Dtype::INT8, 120, 1, None).unwrap();
+        assert!(matches!(m.place(h, 0, 0), PlaceAttempt::Placed { .. }));
+        assert!(matches!(m.place(h, 1, 1), PlaceAttempt::Placed { .. }));
+        m.evict(h, 1, 1, vec![5; 40]);
+        // two resolutions on worker 0: shard 0 hits, shard 1 misses 40
+        // elements each time
+        let _ = m.resolve_slice(h, 0, 120, 0);
+        let _ = m.resolve_slice(h, 0, 120, 0);
+        let snap = m.snapshot(true);
+        assert_eq!(snap.workers.len(), 2);
+        assert_eq!(snap.workers[0].capacity_rows, 16);
+        assert_eq!(snap.workers[0].used_rows, 16);
+        let t = &snap.tensors[0];
+        assert_eq!(t.handle, h);
+        assert_eq!(t.shards.len(), 2);
+        assert_eq!(t.shards[0].touches, 2);
+        assert_eq!(t.shards[0].miss_elems, 0);
+        assert_eq!(t.shards[0].homes, vec![0]);
+        assert_eq!(t.shards[1].touches, 2);
+        assert_eq!(t.shards[1].miss_elems, 80);
+        assert!(t.shards[1].homes.is_empty());
+        assert!(t.shards[1].has_host);
+        assert_eq!(t.shards[0].rows, 16);
+        // the reset wiped the window
+        let again = m.snapshot(false);
+        assert_eq!(again.tensors[0].shards[0].touches, 0);
+        assert_eq!(again.tensors[0].shards[1].miss_elems, 0);
     }
 }

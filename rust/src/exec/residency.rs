@@ -95,6 +95,13 @@ impl ResidencyMap {
     /// holding a replica, so data affinity outranks kernel affinity, which
     /// (within the candidate set) still outranks nothing but load. The
     /// candidate list must be non-empty and hold valid worker indices.
+    ///
+    /// Replicated-tensor contract: one call = one routing decision = one
+    /// counter bump, no matter how many replicas are in `candidates` —
+    /// the stats must count *tasks*, not candidate workers. Mid-eviction
+    /// replicas never reach this function: the farm's pin set comes from
+    /// [`crate::exec::PlacementMap::slice_homes`], which excludes
+    /// draining replicas whenever another live home remains.
     pub fn route_among(
         &self,
         key: KernelKey,
@@ -215,6 +222,26 @@ mod tests {
         // now worker 3 predicts the kernel: an equally-loaded repeat hits
         assert_eq!(map.route_among(key(8), &[0, 0, 1, 1], &[2, 3]), 3);
         assert_eq!(map.stats().affinity_hits, 1);
+    }
+
+    #[test]
+    fn replicated_candidates_count_one_decision_per_task() {
+        // regression: a task pinned to a replicated tensor routes among
+        // several candidate homes — the stats must advance by exactly one
+        // per task, never once per replica
+        let map = ResidencyMap::new(4);
+        let replicas = [1usize, 3];
+        let mut depths = [0usize; 4];
+        for task in 1..=10u64 {
+            let w = map.route_among(key(8), &depths, &replicas);
+            assert!(replicas.contains(&w), "pinned task escaped its replica set");
+            depths[w] += 1;
+            let s = map.stats();
+            assert_eq!(s.routed(), task, "one decision per task");
+        }
+        // load stayed balanced across the two replicas
+        assert_eq!(depths[1] + depths[3], 10);
+        assert!(depths[1].abs_diff(depths[3]) <= 1, "{depths:?}");
     }
 
     #[test]

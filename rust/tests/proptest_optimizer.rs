@@ -1,0 +1,254 @@
+//! Property tests for the farm placement optimizer: any sequence of
+//! optimizer moves — re-pins, replicas, re-shard splits, reserve
+//! promotes/demotes, valid or stale — must keep every tensor read
+//! bit-exact against its host backup, and the candidate search must
+//! never pick a layout scored worse than the incumbent (the incumbent
+//! is always candidate #0, so this is the structural guarantee the
+//! whole subsystem leans on).
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_residency.rs` (offline build; failing cases print their
+//! seed).
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::{Coordinator, Job, JobPayload, OperandRef};
+use comperam::cost::HostCostModel;
+use comperam::exec::placement::{PlacementSnapshot, ShardSnap, TensorSnap, WorkerSnap};
+use comperam::exec::{optimizer, Dtype, OptimizerPolicy, PlacementMove, TensorHandle};
+use comperam::util::{mask, sext, Prng};
+
+fn wrap(v: i64, w: u32) -> i64 {
+    sext(mask(v, w) as i64, w)
+}
+
+fn rand_tensor(rng: &mut Prng, w: u32, len: usize) -> Vec<i64> {
+    (0..len).map(|_| rng.int(w)).collect()
+}
+
+/// Draw one random optimizer move against the farm's current placement
+/// snapshot. Deliberately allowed to be stale or illegal (re-pin of a
+/// resident shard, replicate onto the holder, oversized promote):
+/// `apply_moves` must skip those, never corrupt.
+fn rand_move(rng: &mut Prng, snap: &PlacementSnapshot) -> Option<PlacementMove> {
+    let n_workers = snap.workers.len();
+    let worker = rng.range(0, n_workers);
+    if snap.tensors.is_empty() || rng.chance(0.25) {
+        let reserve_rows = rng.range(8, 200);
+        return Some(if rng.chance(0.5) {
+            PlacementMove::Promote { worker, reserve_rows }
+        } else {
+            PlacementMove::Demote { worker, reserve_rows }
+        });
+    }
+    let t = &snap.tensors[rng.range(0, snap.tensors.len())];
+    let s = &t.shards[rng.range(0, t.shards.len())];
+    Some(match rng.range(0, 3) {
+        0 => PlacementMove::Repin { tensor: t.handle, shard: s.index, worker },
+        1 => PlacementMove::Replicate { tensor: t.handle, shard: s.index, worker },
+        _ => {
+            if s.len < 2 {
+                return None;
+            }
+            PlacementMove::Split {
+                tensor: t.handle,
+                shard: s.index,
+                at: rng.range(1, s.len),
+            }
+        }
+    })
+}
+
+#[test]
+fn prop_random_move_sequences_keep_every_read_bit_exact() {
+    for seed in 0..10u64 {
+        let c = Coordinator::with_storage(Geometry::G512x40, 3, 96);
+        let mut rng = Prng::new(0x0F71 + seed);
+        let mut live: Vec<(TensorHandle, Vec<i64>, u32)> = Vec::new();
+        for round in 0..60 {
+            // churn the tensor population a little
+            if rng.chance(0.4) || live.is_empty() {
+                let w = [4, 8][rng.range(0, 2)] as u32;
+                let len = rng.range(1, 300);
+                let values = rand_tensor(&mut rng, w, len);
+                if let Ok(h) = c.alloc_tensor(&values, Dtype::Int { w }) {
+                    live.push((h, values, w));
+                }
+            } else if rng.chance(0.2) {
+                let i = rng.range(0, live.len());
+                let (h, _, _) = live.swap_remove(i);
+                c.free_tensor(h).unwrap();
+            }
+            // fire a burst of random moves, legal or not
+            let snap = c.farm().optimizer_snapshot(false);
+            let moves: Vec<PlacementMove> =
+                (0..rng.range(1, 5)).filter_map(|_| rand_move(&mut rng, &snap)).collect();
+            c.farm().apply_moves(&moves);
+            // every live tensor still reads back exactly, resident,
+            // replicated, re-sharded or evicted
+            for (h, expect, w) in &live {
+                assert_eq!(
+                    &c.read_tensor(*h).unwrap(),
+                    expect,
+                    "seed {seed} round {round} w={w} len={} after {moves:?}",
+                    expect.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_optimizer_rounds_on_a_live_farm_stay_bit_exact_and_never_regress() {
+    for seed in 0..6u64 {
+        let c = Coordinator::with_storage(Geometry::G512x40, 2, 96);
+        let mut rng = Prng::new(0x09_7e + seed);
+        let mut live: Vec<(TensorHandle, Vec<i64>)> = Vec::new();
+        for round in 0..12 {
+            // allocate, and touch a random subset so the workload window
+            // has real traffic for the optimizer to weigh
+            let len = rng.range(1, 200);
+            let values = rand_tensor(&mut rng, 8, len);
+            if let Ok(h) = c.alloc_tensor(&values, Dtype::INT8) {
+                live.push((h, values));
+            }
+            for _ in 0..rng.range(0, 4) {
+                if live.is_empty() {
+                    break;
+                }
+                let (h, expect) = &live[rng.range(0, live.len())];
+                let b = rand_tensor(&mut rng, 8, expect.len());
+                let r = c
+                    .run(Job {
+                        id: 0,
+                        payload: JobPayload::IntElementwiseRef {
+                            op: EwOp::Add,
+                            w: 8,
+                            a: OperandRef::Tensor(*h),
+                            b: OperandRef::Values(b.clone()),
+                        },
+                    })
+                    .unwrap();
+                for (i, got) in r.values.iter().enumerate() {
+                    assert_eq!(
+                        *got,
+                        wrap(expect[i] + b[i], 8),
+                        "seed {seed} round {round} i={i}"
+                    );
+                }
+            }
+            // an optimizer pass may re-pin, replicate, split or move the
+            // reserve boundary — the decision must never score worse than
+            // keeping the incumbent layout, and data must survive it
+            let report = c.optimize_now();
+            assert!(
+                report.chosen_score <= report.incumbent_score + 1e-9,
+                "seed {seed} round {round}: chosen {} > incumbent {}",
+                report.chosen_score,
+                report.incumbent_score
+            );
+            for (h, expect) in &live {
+                assert_eq!(
+                    &c.read_tensor(*h).unwrap(),
+                    expect,
+                    "seed {seed} round {round} len={}",
+                    expect.len()
+                );
+            }
+        }
+    }
+}
+
+/// A random but internally consistent placement snapshot: contiguous
+/// shards covering each tensor, homes drawn from the worker set
+/// (possibly empty — an evicted shard), occupancy within capacity.
+fn rand_snapshot(rng: &mut Prng) -> PlacementSnapshot {
+    let n_workers = rng.range(1, 5);
+    let workers: Vec<WorkerSnap> = (0..n_workers)
+        .map(|_| {
+            let capacity_rows = rng.range(0, 417);
+            WorkerSnap {
+                used_rows: rng.range(0, capacity_rows + 1),
+                capacity_rows,
+                queue_depth: rng.range(0, 9),
+            }
+        })
+        .collect();
+    let tensors: Vec<TensorSnap> = (0..rng.range(0, 7))
+        .map(|i| {
+            let w = [4u32, 8, 16][rng.range(0, 3)];
+            let len = rng.range(1, 600);
+            let align = if rng.chance(0.5) { rng.range(1, 60) } else { 1 };
+            let n_shards = rng.range(1, 4).min(len);
+            let mut cuts: Vec<usize> = (0..n_shards - 1).map(|_| rng.range(1, len)).collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            cuts.push(len);
+            let mut offset = 0;
+            let shards = cuts
+                .iter()
+                .enumerate()
+                .map(|(j, &end)| {
+                    let slen = end - offset;
+                    let homes: Vec<usize> =
+                        (0..n_workers).filter(|_| rng.chance(0.4)).collect();
+                    let s = ShardSnap {
+                        index: j as u32,
+                        offset,
+                        len: slen,
+                        rows: (slen * w as usize).div_ceil(40).max(1),
+                        homes,
+                        has_host: true,
+                        touches: rng.range(0, 120) as u64,
+                        miss_elems: rng.range(0, 2000) as u64,
+                    };
+                    offset = end;
+                    s
+                })
+                .collect();
+            TensorSnap {
+                handle: TensorHandle::from_id(i as u64 + 1),
+                dtype: Dtype::Int { w },
+                len,
+                align,
+                shards,
+            }
+        })
+        .collect();
+    PlacementSnapshot { cols: 40, workers, tensors }
+}
+
+#[test]
+fn prop_chosen_candidate_never_scores_worse_than_the_incumbent() {
+    let model = HostCostModel::calibrated();
+    for seed in 0..400u64 {
+        let mut rng = Prng::new(0x5C0E + seed);
+        let snap = rand_snapshot(&mut rng);
+        let policy = OptimizerPolicy {
+            enabled: true,
+            period: 64,
+            max_replicas: rng.range(1, 4),
+            min_gain: [0.0, 0.05, 0.3][rng.range(0, 3)],
+            reserve_step: rng.range(8, 128),
+            max_moves: rng.range(1, 10),
+        };
+        let report = optimizer::choose(&snap, &policy, model, 416);
+        assert!(
+            report.chosen_score <= report.incumbent_score + 1e-9,
+            "seed {seed}: chosen {} > incumbent {} ({} candidates)",
+            report.chosen_score,
+            report.incumbent_score,
+            report.candidates
+        );
+        assert!(
+            report.moves.len() <= policy.max_moves,
+            "seed {seed}: {} moves exceed policy cap {}",
+            report.moves.len(),
+            policy.max_moves
+        );
+        assert!(report.candidates >= 1, "seed {seed}: incumbent must always be scored");
+        // scores are costs over a finite workload window: finite, positive
+        assert!(report.incumbent_score.is_finite() && report.incumbent_score >= 0.0);
+        assert!(report.chosen_score.is_finite() && report.chosen_score >= 0.0);
+    }
+}
