@@ -5,6 +5,10 @@
 //! * trace executor vs step interpreter on library kernels — the
 //!   acceptance target is >= 3x controller-dispatch throughput
 //!   (instructions/s) for trace-executed kernels;
+//! * super-op executor vs trace executor (`superop */*` entries) — the
+//!   value-level tier must stay bit-identical to the micro-op trace and
+//!   reach >= 5x its dispatch throughput on int8 add/mul/dot and the
+//!   bf16 MAC;
 //! * full-block microcode runs (column-bit-ops/second) — the DESIGN.md
 //!   target is >= 1e8 column-bit-ops/s on the array inner loop;
 //! * coordinator fan-out across a farm;
@@ -16,7 +20,8 @@
 //! Every measurement lands in the `simcore` section of the repo-root
 //! `BENCH_serving.json` (see `util::benchkit::write_bench_json`). Set
 //! `BENCH_SMOKE=1` for a seconds-long validation run (CI does); the >= 3x
-//! dispatch assertion is enforced only on full-quality runs.
+//! and >= 5x dispatch assertions are enforced only on full-quality runs
+//! (bit-identity between the tiers is asserted on every run).
 
 use comperam::baseline::designs::{baseline_design, BaselineKind};
 use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
@@ -41,8 +46,10 @@ fn main() {
     arr.write_row(0, &data);
     arr.write_row(1, &data.not());
     let mask = LaneVec::ones(40);
+    let mut bl = LaneVec::zeros(40);
+    let mut blb = LaneVec::zeros(40);
     let m = bench("array sense+fulladd+writeback (1 cycle, 40 cols)", || {
-        let (bl, blb) = arr.sense(black_box(0), black_box(1));
+        arr.sense_into(black_box(0), black_box(1), &mut bl, &mut blb);
         let sum = periph.full_add_masked(&bl, &blb, &mask);
         arr.write_back(2, &sum, &mask);
     });
@@ -115,7 +122,78 @@ fn main() {
         }
     }
 
-    // 4. full-block dot (the heaviest microcode)
+    // 4. super-op executor vs trace executor: the value-level tier's
+    // acceptance criterion. Each lifted phase replays as word-major host
+    // arithmetic over the operand bit-plane slabs; the trace side replays
+    // the same phase micro-op by micro-op on its own array. Rows, latches,
+    // and analytic stats must be bit-identical — checked on every run,
+    // including smoke — and the >= 5x dispatch ratio is enforced on
+    // full-quality runs.
+    let mut srng = Prng::new(0x9e);
+    let super_cases = [
+        (
+            "add_i8 full",
+            CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, geom)),
+        ),
+        (
+            "mul_i8 full",
+            CompiledKernel::compile(KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT8, geom)),
+        ),
+        ("dot_i8 k=30", CompiledKernel::compile(KernelKey::int_dot(Dtype::INT8, 32, 30, geom))),
+        ("mac_bf16 x40", CompiledKernel::compile(KernelKey::bf16_mac_sized(40, geom))),
+    ];
+    for (label, kernel) in &super_cases {
+        for pi in 0..kernel.phases.len() {
+            let trace = kernel.trace(pi).expect("library kernels are fully traceable");
+            let sup = kernel.super_trace(pi).expect("library kernels lift to super-ops");
+            let instrs = trace.stats().instructions;
+            let mut arr_t = BitlineArray::new(geom);
+            let mut arr_s = BitlineArray::new(geom);
+            for r in 0..geom.rows() {
+                let row = LaneVec::from_fn(geom.cols(), |_| srng.chance(0.5));
+                arr_t.write_row(r, &row);
+                arr_s.write_row(r, &row);
+            }
+            let mut per_t = ColumnPeriph::new(geom.cols());
+            let mut per_s = ColumnPeriph::new(geom.cols());
+            let st = trace.execute(&mut arr_t, &mut per_t);
+            let ss = sup.execute(&mut arr_s, &mut per_s);
+            assert_eq!(ss, st, "super-op stats must match the trace on {label} p{pi}");
+            assert_eq!(per_s.carry(), per_t.carry(), "{label} p{pi}: carry latch diverged");
+            assert_eq!(per_s.tag(), per_t.tag(), "{label} p{pi}: tag latch diverged");
+            for r in 0..geom.rows() {
+                assert_eq!(arr_s.read_row(r), arr_t.read_row(r), "{label} p{pi}: row {r}");
+            }
+            let m_trace = bench(&format!("superop {label} p{pi}  micro-op trace"), || {
+                per_t.reset();
+                black_box(trace.execute(&mut arr_t, &mut per_t));
+            });
+            let m_super = bench(&format!("superop {label} p{pi}  super-op executor"), || {
+                per_s.reset();
+                black_box(sup.execute(&mut arr_s, &mut per_s));
+            });
+            let ratio = m_trace.mean.as_secs_f64() / m_super.mean.as_secs_f64();
+            println!(
+                "  -> {:.1} M instr/s traced vs {:.1} M instr/s super-op = {ratio:.2}x \
+                 (acceptance target >= 5x, {} super-ops over {} micro-ops)",
+                ops_per_sec(instrs, &m_trace) / 1e6,
+                ops_per_sec(instrs, &m_super) / 1e6,
+                sup.super_ops(),
+                trace.len(),
+            );
+            if !smoke {
+                assert!(
+                    ratio >= 5.0,
+                    "acceptance: super-op dispatch must be >= 5x the micro-op trace \
+                     on {label} p{pi}, got {ratio:.2}x"
+                );
+            }
+            ms.push(m_trace);
+            ms.push(m_super);
+        }
+    }
+
+    // 5. full-block dot (the heaviest microcode)
     let mut rng = Prng::new(0x51);
     let a: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
     let b: Vec<Vec<i64>> = (0..60).map(|_| (0..40).map(|_| rng.int(4)).collect()).collect();
@@ -131,7 +209,7 @@ fn main() {
     );
     ms.push(m);
 
-    // 5. coordinator fan-out
+    // 6. coordinator fan-out
     let coord = Coordinator::new(Geometry::G512x40, 8);
     let n = 1680 * 8;
     let av: Vec<i64> = (0..n).map(|_| rng.int(4)).collect();
@@ -154,7 +232,7 @@ fn main() {
     println!("  -> {:.2} M adds/s through the farm", ops_per_sec(n as u64, &m) / 1e6);
     ms.push(m);
 
-    // 6. kernel cache: assembly cost vs cached lookup (the exec layer's
+    // 7. kernel cache: assembly cost vs cached lookup (the exec layer's
     // setup amortization; see benches/serving.rs for the end-to-end win)
     let key = KernelKey::int_ew_full(KernelOp::IntMul, comperam::Dtype::INT8, Geometry::G512x40);
     ms.push(bench("kernel assembly mul_i8 (cache miss path)", || {
@@ -166,14 +244,14 @@ fn main() {
         black_box(cache.get(key));
     }));
 
-    // 7. fabric flow
+    // 8. fabric flow
     let arch = FpgaArch::agilex_like();
     let d = baseline_design(BaselineKind::DotI4 { k: 60 });
     ms.push(bench("fabric place+route+time (dot baseline netlist)", || {
         black_box(implement(&arch, &d.netlist, black_box(1)).unwrap());
     }));
 
-    // 8. routing calibration: the same workloads HostCostModel::fit times
+    // 9. routing calibration: the same workloads HostCostModel::fit times
     // at startup, persisted under their stable cal/* names so a later
     // process refits from these higher-quality measurements
     // (HostCostModel::refresh_from_trajectory) instead of its quick fit.

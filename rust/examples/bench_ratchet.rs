@@ -1,0 +1,75 @@
+//! CI perf ratchet: diff a fresh `BENCH_serving.json` against the
+//! committed baseline and fail on throughput regressions.
+//!
+//! Usage: `bench_ratchet <baseline.json> <fresh.json> [tolerance]`
+//!
+//! Compares every (section, entry) pair present in *both* files and exits
+//! nonzero when any fresh `mean_ns` exceeds the baseline's by more than
+//! `tolerance` (default 0.25 = +25%). A baseline that is still the growth
+//! seed's placeholder, or that shares nothing with the fresh run, is
+//! reported and skipped with exit 0 — the ratchet arms itself the first
+//! time a real trajectory is committed. CI runs this after the
+//! `BENCH_SMOKE=1` smoke benches, against a pre-bench copy of the
+//! committed file (the bench run rewrites it in place).
+
+use comperam::util::benchkit::{compare_bench_json, RatchetOutcome};
+use comperam::util::json::Json;
+use std::process::ExitCode;
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    let (old_path, new_path) = match (args.get(1), args.get(2)) {
+        (Some(o), Some(n)) => (o.clone(), n.clone()),
+        _ => {
+            eprintln!("usage: bench_ratchet <baseline.json> <fresh.json> [tolerance]");
+            return ExitCode::from(2);
+        }
+    };
+    let tolerance: f64 = match args.get(3) {
+        Some(t) => match t.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("bench_ratchet: tolerance must be a number, got {t:?}");
+                return ExitCode::from(2);
+            }
+        },
+        None => 0.25,
+    };
+    let (old, new) = match (load(&old_path), load(&new_path)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench_ratchet: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match compare_bench_json(&old, &new, tolerance) {
+        RatchetOutcome::Skipped { reason } => {
+            println!("ratchet: skipped ({reason})");
+            ExitCode::SUCCESS
+        }
+        RatchetOutcome::Ok { compared } => {
+            println!(
+                "ratchet: ok — {compared} shared entries within {:.0}% of baseline",
+                tolerance * 100.0
+            );
+            ExitCode::SUCCESS
+        }
+        RatchetOutcome::Regressions(regs) => {
+            for r in &regs {
+                eprintln!("{}", r.report());
+            }
+            eprintln!(
+                "ratchet: {} of the shared entries regressed beyond {:.0}%",
+                regs.len(),
+                tolerance * 100.0
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

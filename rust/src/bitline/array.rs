@@ -115,15 +115,54 @@ impl BitlineArray {
     /// non-destructive — hence `&self`.
     #[inline]
     pub fn sense(&self, ra: usize, rb: usize) -> (LaneVec, LaneVec) {
+        let mut bl = LaneVec::zeros(self.cols());
+        let mut blb = LaneVec::zeros(self.cols());
+        self.sense_into(ra, rb, &mut bl, &mut blb);
+        (bl, blb)
+    }
+
+    /// [`Self::sense`] into caller-owned buffers (§Perf): the hot sense
+    /// path allocates nothing — repeated senses reuse the same two
+    /// `LaneVec`s. Buffers of the wrong width are re-sized once.
+    pub fn sense_into(&self, ra: usize, rb: usize, bl: &mut LaneVec, blb: &mut LaneVec) {
         let a = &self.rows[ra];
         let b = &self.rows[rb];
-        (a.and(b), a.nor(b))
+        if bl.len() != a.len() {
+            *bl = LaneVec::zeros(a.len());
+        }
+        if blb.len() != a.len() {
+            *blb = LaneVec::zeros(a.len());
+        }
+        for i in 0..a.word_len() {
+            let (wa, wb) = (a.word(i), b.word(i));
+            bl.set_word(i, wa & wb);
+            blb.set_word(i, !(wa | wb) & a.tail_mask(i));
+        }
     }
 
     /// Single-row sense (degenerate activation): `BL = A`, `BLB = NOT A`.
     #[inline]
     pub fn sense_one(&self, r: usize) -> (LaneVec, LaneVec) {
-        (self.rows[r].clone(), self.rows[r].not())
+        let mut bl = LaneVec::zeros(self.cols());
+        let mut blb = LaneVec::zeros(self.cols());
+        self.sense_one_into(r, &mut bl, &mut blb);
+        (bl, blb)
+    }
+
+    /// [`Self::sense_one`] into caller-owned buffers (allocation-free).
+    pub fn sense_one_into(&self, r: usize, bl: &mut LaneVec, blb: &mut LaneVec) {
+        let a = &self.rows[r];
+        if bl.len() != a.len() {
+            *bl = LaneVec::zeros(a.len());
+        }
+        if blb.len() != a.len() {
+            *blb = LaneVec::zeros(a.len());
+        }
+        for i in 0..a.word_len() {
+            let wa = a.word(i);
+            bl.set_word(i, wa);
+            blb.set_word(i, !wa & a.tail_mask(i));
+        }
     }
 
     /// Compute-mode write-back in the second half of the same cycle:
@@ -337,6 +376,262 @@ impl BitlineArray {
             self.rows[rd].set_word(i, (v & m) | (old & !m));
         }
     }
+
+    // -- super-op batch kernels (§Perf) --------------------------------------
+    //
+    // The super-op tier ([`crate::exec::SuperTrace`]) batches whole runs of
+    // word-local micro-ops into a single word-major pass: for each packed
+    // 64-column word the carry and tag latches are lifted into scalar
+    // registers once, the entire run executes as straight u64 lane
+    // arithmetic over the bit-plane slabs, and the latches are stored back
+    // once. Every micro-op touches only word `i` of its rows while
+    // processing word `i`, so a per-word in-order replay is bit-identical
+    // to the per-op interpreter for *any* program — including carry-
+    // predicated chains and aliased rows. The predication mask is
+    // recomputed from the live scalars before each op, which is exactly
+    // `ColumnPeriph::resolve_mask`'s start-of-cycle snapshot.
+
+    /// Batched vector add/sub: each group is one recognized
+    /// `Clc`/`Sec` + ripple-sweep pair ([`AddSubGroup`]). The carry preset
+    /// and the whole W-step ripple run on scalar carries with no latch
+    /// round-trips between tuples.
+    pub fn vec_addsub_batch(
+        &mut self,
+        groups: &[AddSubGroup],
+        periph: &mut super::ColumnPeriph,
+    ) {
+        let nw = self.rows[0].word_len();
+        for i in 0..nw {
+            let tail = self.rows[0].tail_mask(i);
+            let (mut c, t) = periph.latch_words(i);
+            for g in groups {
+                c = if g.sec { tail } else { 0 };
+                for k in 0..g.w {
+                    let mut wa = self.rows[g.a0 + k].word(i);
+                    if g.subtract {
+                        wa = !wa & tail;
+                    }
+                    let wb = self.rows[g.b0 + k].word(i);
+                    let axb = wa ^ wb;
+                    self.rows[g.d0 + k].set_word(i, axb ^ c);
+                    c = (wa & wb) | (axb & c);
+                }
+            }
+            periph.set_latch_words(i, c, t);
+        }
+    }
+
+    /// Batched shift-and-add multiply/accumulate: each [`MacGroup`] loads
+    /// the tag from a multiplier bit plane, optionally presets the carry,
+    /// runs its tag-predicated adder chain (`steps[g.steps]`), then writes
+    /// latch planes under the same tag (`writes[g.writes]`). The tag is
+    /// loop-invariant within a group (no step writes the latches), so the
+    /// mask lives in a register for the whole chain.
+    pub fn mul_acc_batch(
+        &mut self,
+        groups: &[MacGroup],
+        steps: &[MacStep],
+        writes: &[(bool, usize)],
+        periph: &mut super::ColumnPeriph,
+    ) {
+        let nw = self.rows[0].word_len();
+        for i in 0..nw {
+            let tail = self.rows[0].tail_mask(i);
+            let (mut c, mut t) = periph.latch_words(i);
+            for g in groups {
+                t = self.rows[g.tag_row].word(i);
+                if g.tag_not {
+                    t = !t & tail;
+                }
+                match g.preset {
+                    Some(true) => c = tail,
+                    Some(false) => c = 0,
+                    None => {}
+                }
+                let m = t;
+                for s in &steps[g.steps.0 as usize..g.steps.1 as usize] {
+                    let mut wa = self.rows[s.a].word(i);
+                    if s.subtract {
+                        wa = !wa & tail;
+                    }
+                    let wb = self.rows[s.b].word(i);
+                    let axb = wa ^ wb;
+                    let sum = axb ^ c;
+                    let newc = (wa & wb) | (axb & c);
+                    c = (newc & m) | (c & !m);
+                    let old = self.rows[s.d].word(i);
+                    self.rows[s.d].set_word(i, (sum & m) | (old & !m));
+                }
+                for &(is_tag, d) in &writes[g.writes.0 as usize..g.writes.1 as usize] {
+                    let v = if is_tag { t } else { c };
+                    let old = self.rows[d].word(i);
+                    self.rows[d].set_word(i, (v & m) | (old & !m));
+                }
+            }
+            periph.set_latch_words(i, c, t);
+        }
+    }
+
+    /// Generic word-major batch: replay an arbitrary run of micro-ops with
+    /// the latches in scalars (the `VecMac16` super-op — the bf16 MAC
+    /// recurrences and requant/mask epilogues batch through here). One
+    /// latch load/store per word instead of per op, and the predication
+    /// mask is a register value instead of a resolved buffer.
+    pub fn plane_batch(
+        &mut self,
+        ops: &[crate::exec::MicroOp],
+        periph: &mut super::ColumnPeriph,
+    ) {
+        use crate::exec::MicroOp as Op;
+        use crate::isa::{LogicOp, Pred};
+        let nw = self.rows[0].word_len();
+        for i in 0..nw {
+            let tail = self.rows[0].tail_mask(i);
+            let (mut c, mut t) = periph.latch_words(i);
+            // start-of-cycle mask snapshot from the live scalars, exactly
+            // `resolve_mask` against the current latch state
+            macro_rules! mask {
+                ($pred:expr) => {
+                    match $pred {
+                        Pred::Always => tail,
+                        Pred::Tag => t,
+                        Pred::Carry => c,
+                        Pred::NCarry => !c & tail,
+                    }
+                };
+            }
+            for &op in ops {
+                match op {
+                    Op::RippleSweep { a0, b0, d0, w, subtract } => {
+                        for k in 0..w {
+                            let mut wa = self.rows[a0 + k].word(i);
+                            if subtract {
+                                wa = !wa & tail;
+                            }
+                            let wb = self.rows[b0 + k].word(i);
+                            let axb = wa ^ wb;
+                            self.rows[d0 + k].set_word(i, axb ^ c);
+                            c = (wa & wb) | (axb & c);
+                        }
+                    }
+                    Op::BlockCopy { a0, d0, n } => {
+                        for j in 0..n {
+                            if a0 + j != d0 + j {
+                                let v = self.rows[a0 + j].word(i);
+                                self.rows[d0 + j].set_word(i, v);
+                            }
+                        }
+                    }
+                    Op::BlockZero { d0, n } => {
+                        for j in 0..n {
+                            self.rows[d0 + j].set_word(i, 0);
+                        }
+                    }
+                    Op::Fas { a, b, d, pred, subtract } => {
+                        let m = mask!(pred);
+                        let mut wa = self.rows[a].word(i);
+                        if subtract {
+                            wa = !wa & tail;
+                        }
+                        let wb = self.rows[b].word(i);
+                        let axb = wa ^ wb;
+                        let sum = axb ^ c;
+                        let newc = (wa & wb) | (axb & c);
+                        c = (newc & m) | (c & !m);
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (sum & m) | (old & !m));
+                    }
+                    Op::Logic { op, a, b, d, pred } => {
+                        let m = mask!(pred);
+                        let wa = self.rows[a].word(i);
+                        let wb = self.rows[b].word(i);
+                        let v = match op {
+                            LogicOp::And => wa & wb,
+                            LogicOp::Or => wa | wb,
+                            LogicOp::Xor => wa ^ wb,
+                            LogicOp::Nor => !(wa | wb) & tail,
+                        };
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (v & m) | (old & !m));
+                    }
+                    Op::NotRow { a, d, pred } => {
+                        let m = mask!(pred);
+                        let v = !self.rows[a].word(i) & tail;
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (v & m) | (old & !m));
+                    }
+                    Op::CopyRow { a, d, pred } => {
+                        let m = mask!(pred);
+                        let v = self.rows[a].word(i);
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (v & m) | (old & !m));
+                    }
+                    Op::Zero { d, pred } => {
+                        let m = mask!(pred);
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, old & !m);
+                    }
+                    Op::Clc => c = 0,
+                    Op::Sec => c = tail,
+                    Op::Tnot => t = !t & tail,
+                    Op::Tcar => t = c,
+                    Op::Tld { a } => t = self.rows[a].word(i),
+                    Op::Tldn { a } => t = !self.rows[a].word(i) & tail,
+                    Op::Wrc { d, pred } => {
+                        let m = mask!(pred);
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (c & m) | (old & !m));
+                    }
+                    Op::Wrt { d, pred } => {
+                        let m = mask!(pred);
+                        let old = self.rows[d].word(i);
+                        self.rows[d].set_word(i, (t & m) | (old & !m));
+                    }
+                }
+            }
+            periph.set_latch_words(i, c, t);
+        }
+    }
+}
+
+/// One recognized `Clc`/`Sec` + ripple-sweep pair: a whole W-bit vector
+/// add/sub over one tuple slab, executed by
+/// [`BitlineArray::vec_addsub_batch`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AddSubGroup {
+    /// Carry preset: `true` = `Sec` (subtraction's +1), `false` = `Clc`.
+    pub sec: bool,
+    pub a0: usize,
+    pub b0: usize,
+    pub d0: usize,
+    pub w: usize,
+    pub subtract: bool,
+}
+
+/// One tag-predicated full-adder/subtractor step of a [`MacGroup`] chain.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct MacStep {
+    pub a: usize,
+    pub b: usize,
+    pub d: usize,
+    pub subtract: bool,
+}
+
+/// One shift-and-add multiply group: tag load, optional carry preset, a
+/// tag-predicated adder chain, then tag-predicated latch-plane writes.
+/// `steps`/`writes` index into the flattened vectors the owning
+/// [`crate::exec::SuperOp::VecMulAcc`] carries.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct MacGroup {
+    pub tag_row: usize,
+    /// Tag loaded complemented (`Tldn`) rather than plain (`Tld`).
+    pub tag_not: bool,
+    /// `Some(false)` = `Clc`, `Some(true)` = `Sec`, `None` = keep carry.
+    pub preset: Option<bool>,
+    /// `steps[steps.0 .. steps.1]` range of the flattened step vector.
+    pub steps: (u32, u32),
+    /// `writes[writes.0 .. writes.1]` range of the flattened write vector.
+    pub writes: (u32, u32),
 }
 
 #[cfg(test)]

@@ -18,7 +18,7 @@ pub mod array;
 pub mod periph;
 pub mod transpose;
 
-pub use array::{BitlineArray, Geometry};
+pub use array::{AddSubGroup, BitlineArray, Geometry, MacGroup, MacStep};
 pub use periph::ColumnPeriph;
 
 #[cfg(test)]

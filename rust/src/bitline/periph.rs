@@ -73,6 +73,23 @@ impl ColumnPeriph {
         self.mask_buf.word(i)
     }
 
+    /// Word `i` of both latches as `(carry, tag)` scalars — the super-op
+    /// tier lifts the latch state into registers for a whole word-major
+    /// pass ([`crate::exec::SuperTrace`]).
+    #[inline]
+    pub(crate) fn latch_words(&self, i: usize) -> (u64, u64) {
+        (self.carry.word(i), self.tag.word(i))
+    }
+
+    /// Store word `i` of both latches back from scalars. The caller keeps
+    /// the tail bits zero (every latch-producing op masks with the tail),
+    /// preserving the `LaneVec` trimmed-tail invariant.
+    #[inline]
+    pub(crate) fn set_latch_words(&mut self, i: usize, carry: u64, tag: u64) {
+        self.carry.set_word(i, carry);
+        self.tag.set_word(i, tag);
+    }
+
     pub fn cols(&self) -> usize {
         self.cols
     }

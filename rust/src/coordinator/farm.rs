@@ -369,13 +369,14 @@ impl BlockFarm {
         self.blocks.iter().map(|b| b.lock().unwrap().program_loads()).sum()
     }
 
-    /// Trace-engine effectiveness across all blocks:
-    /// `(trace_hits, interp_fallbacks)` — kernel runs executed from a
-    /// pre-compiled micro-op trace vs. the step interpreter.
-    pub fn trace_stats(&self) -> (u64, u64) {
-        self.blocks.iter().fold((0, 0), |(h, f), b| {
+    /// Execution-tier effectiveness across all blocks:
+    /// `(superop_hits, trace_hits, interp_fallbacks)` — kernel phases
+    /// executed from a value-level super-op trace vs. a pre-compiled
+    /// micro-op trace vs. the step interpreter.
+    pub fn trace_stats(&self) -> (u64, u64, u64) {
+        self.blocks.iter().fold((0, 0, 0), |(s, h, f), b| {
             let b = b.lock().unwrap();
-            (h + b.trace_hits(), f + b.interp_fallbacks())
+            (s + b.superop_hits(), h + b.trace_hits(), f + b.interp_fallbacks())
         })
     }
 
@@ -1137,17 +1138,26 @@ fn resolve_x_rows(
 /// Per-worker reusable state, living for the worker thread's whole life:
 /// the last kernel handle the worker resolved (consecutive same-key tasks
 /// — the common case under the affinity router — skip the shared cache's
-/// lock entirely) and the dot-tile expansion buffers, whose allocations
-/// survive from tile to tile instead of being rebuilt per task.
+/// lock entirely), the dot-tile expansion buffers, and the bf16 MAC wave
+/// operand buffers — all of whose allocations survive from tile to tile
+/// (and K step to K step) instead of being rebuilt per task.
 struct WorkerScratch {
     kernel: Option<Arc<CompiledKernel>>,
     a: Vec<Vec<i64>>,
     b: Vec<Vec<i64>>,
+    fa: Vec<SoftBf16>,
+    fb: Vec<SoftBf16>,
 }
 
 impl WorkerScratch {
     fn new() -> Self {
-        WorkerScratch { kernel: None, a: Vec::new(), b: Vec::new() }
+        WorkerScratch {
+            kernel: None,
+            a: Vec::new(),
+            b: Vec::new(),
+            fa: Vec::new(),
+            fb: Vec::new(),
+        }
     }
 
     /// Resolve `key` through the per-worker memo, falling back to (and
@@ -1333,8 +1343,11 @@ fn run_task(
             // sequential MAC recurrence — same order as the host reference
             let mut acc = vec![SoftBf16::ZERO; ncols];
             let mut stats = CycleStats::default();
-            let mut ak = vec![SoftBf16::ZERO; ncols];
-            let mut bk = vec![SoftBf16::ZERO; ncols];
+            let WorkerScratch { fa: ak, fb: bk, .. } = scratch;
+            ak.clear();
+            ak.resize(ncols, SoftBf16::ZERO);
+            bk.clear();
+            bk.resize(ncols, SoftBf16::ZERO);
             for kk in 0..k {
                 for (ci, c) in (c0..c1).enumerate() {
                     let xi = c / n - i0;
@@ -1342,7 +1355,7 @@ fn run_task(
                     ak[ci] = x[xi][kk];
                     bk[ci] = slab[kk * n + c % n];
                 }
-                let r = ops::bf16_mac_compiled(block, &kernel, &ak, &bk, &acc)?;
+                let r = ops::bf16_mac_compiled(block, &kernel, &ak[..], &bk[..], &acc)?;
                 acc = r.values;
                 accumulate_stats(&mut stats, r.stats);
             }
@@ -1622,10 +1635,11 @@ mod tests {
             .collect();
         let out = farm.execute(tasks).unwrap();
         assert_eq!(out.len(), 8);
-        // every library kernel is statically traceable, so all 8 runs go
-        // through the trace engine and none fall back to the interpreter
-        let (trace_hits, interp_fallbacks) = farm.trace_stats();
-        assert_eq!(trace_hits, 8);
+        // every library kernel is statically traceable AND lifts, so all 8
+        // runs go through the super-op tier and none fall down the ladder
+        let (superop_hits, trace_hits, interp_fallbacks) = farm.trace_stats();
+        assert_eq!(superop_hits, 8);
+        assert_eq!(trace_hits, 0);
         assert_eq!(interp_fallbacks, 0);
         for (i, o) in out.iter().enumerate() {
             assert_eq!(o.task_index, i);

@@ -115,9 +115,13 @@ pub struct Metrics {
     pub opt_promotions: AtomicU64,
     /// Reserve-boundary demotions (storage shrank) among applied moves.
     pub opt_demotions: AtomicU64,
+    /// Kernel runs executed from a value-level super-op trace — the top
+    /// execution tier (gauge; published from the farm's per-block counters
+    /// via [`crate::coordinator::Coordinator::metrics_snapshot`]).
+    pub superop_hits: AtomicU64,
     /// Kernel runs executed from a pre-compiled micro-op trace (gauge;
-    /// published from the farm's per-block counters via
-    /// [`crate::coordinator::Coordinator::metrics_snapshot`]).
+    /// same source). Nonzero values mean some phase failed to lift to the
+    /// super-op tier and is paying per-bit-plane dispatch.
     pub trace_hits: AtomicU64,
     /// Kernel runs that fell back to the step interpreter because no
     /// statically resolvable trace existed (gauge; same source). Nonzero
@@ -195,9 +199,11 @@ impl Metrics {
         self.shard_evictions.store(shard_evictions, Ordering::Relaxed);
     }
 
-    /// Publish the trace engine's effectiveness counters (trace-executed
-    /// runs vs. interpreter fallbacks) from the farm's per-block totals.
-    pub fn set_trace_gauges(&self, trace_hits: u64, interp_fallbacks: u64) {
+    /// Publish the execution-tier effectiveness counters (super-op runs
+    /// vs. micro-op trace runs vs. interpreter fallbacks) from the farm's
+    /// per-block totals.
+    pub fn set_trace_gauges(&self, superop_hits: u64, trace_hits: u64, interp_fallbacks: u64) {
+        self.superop_hits.store(superop_hits, Ordering::Relaxed);
         self.trace_hits.store(trace_hits, Ordering::Relaxed);
         self.interp_fallbacks.store(interp_fallbacks, Ordering::Relaxed);
     }
@@ -278,7 +284,7 @@ impl Metrics {
              queue_us={} exec_us={} host_bytes_in={} host_bytes_out={} resident_hits={} \
              shards={} shard_evictions={} replicas={} storage=[{}] \
              opt_rounds={} opt_moves={} opt_promotions={} opt_demotions={} \
-             trace_hits={} interp_fallbacks={} \
+             superop_hits={} trace_hits={} interp_fallbacks={} \
              pim_jobs={} host_jobs={} route_cycle_err_mean={err_mean:.1} \
              qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
@@ -300,6 +306,7 @@ impl Metrics {
             self.opt_moves.load(Ordering::Relaxed),
             self.opt_promotions.load(Ordering::Relaxed),
             self.opt_demotions.load(Ordering::Relaxed),
+            self.superop_hits.load(Ordering::Relaxed),
             self.trace_hits.load(Ordering::Relaxed),
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.pim_jobs.load(Ordering::Relaxed),
@@ -366,7 +373,8 @@ mod tests {
         m.set_storage_gauges(5, 2);
         assert!(m.snapshot().contains("shards=5"));
         assert!(m.snapshot().contains("shard_evictions=2"));
-        m.set_trace_gauges(7, 1);
+        m.set_trace_gauges(9, 7, 1);
+        assert!(m.snapshot().contains("superop_hits=9"));
         assert!(m.snapshot().contains("trace_hits=7"));
         assert!(m.snapshot().contains("interp_fallbacks=1"));
         m.set_placement_gauges(&[(40, 320), (0, 320)], 6);

@@ -30,8 +30,9 @@ use crate::exec::{
 };
 use anyhow::Result;
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::Duration;
 
 /// The top-level coordinator.
 pub struct Coordinator {
@@ -49,6 +50,31 @@ pub struct Coordinator {
     opt_policy: Mutex<OptimizerPolicy>,
     /// Jobs submitted since the last optimizer pass (periodic trigger).
     submits_since_opt: AtomicU64,
+    /// When set, periodic passes are handed to the background ticker
+    /// thread instead of running inline on the submit path.
+    background_opt: AtomicBool,
+    /// The background ticker, when attached (see
+    /// [`Coordinator::attach_background_optimizer`]). Joined on drop.
+    opt_ticker: Mutex<Option<OptTicker>>,
+}
+
+/// Wake-up channel between the submit path and the background optimizer
+/// thread. The submit side is lock-free (an atomic bump + a condvar
+/// notify); the ticker side recovers any racily missed notify through a
+/// bounded wait timeout.
+struct TickerShared {
+    /// Passes requested since the ticker last drained (saturating "work
+    /// exists" signal; N queued requests collapse into one pass).
+    pending: AtomicU64,
+    stop: AtomicBool,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Handle to the background optimizer thread.
+struct OptTicker {
+    shared: Arc<TickerShared>,
+    handle: std::thread::JoinHandle<()>,
 }
 
 /// An in-flight job. Obtain with [`Coordinator::submit`]; redeem with
@@ -150,6 +176,8 @@ impl Coordinator {
             plan_gate: RwLock::new(()),
             opt_policy: Mutex::new(OptimizerPolicy::default()),
             submits_since_opt: AtomicU64::new(0),
+            background_opt: AtomicBool::new(false),
+            opt_ticker: Mutex::new(None),
         }
     }
 
@@ -163,6 +191,8 @@ impl Coordinator {
             plan_gate: RwLock::new(()),
             opt_policy: Mutex::new(OptimizerPolicy::default()),
             submits_since_opt: AtomicU64::new(0),
+            background_opt: AtomicBool::new(false),
+            opt_ticker: Mutex::new(None),
         }
     }
 
@@ -403,17 +433,70 @@ impl Coordinator {
 
     /// Periodic trigger: every `policy.period` submitted jobs, run a pass.
     /// Called on the submit path *before* the plan gate is taken (the pass
-    /// takes the write side).
+    /// takes the write side). With a background ticker attached, the pass
+    /// is merely *requested* here — an atomic bump and a condvar notify —
+    /// so submits never ride the tail of an optimizer pass.
     fn maybe_optimize(&self) {
         let policy = self.optimizer_policy();
         if !policy.enabled || policy.period == 0 {
             return;
         }
         let n = self.submits_since_opt.fetch_add(1, Ordering::Relaxed) + 1;
-        if n >= policy.period {
-            self.submits_since_opt.store(0, Ordering::Relaxed);
-            self.optimize_now();
+        if n < policy.period {
+            return;
         }
+        self.submits_since_opt.store(0, Ordering::Relaxed);
+        if self.background_opt.load(Ordering::Relaxed) {
+            if let Some(t) = &*self.opt_ticker.lock().unwrap() {
+                t.shared.pending.fetch_add(1, Ordering::Release);
+                t.shared.cv.notify_one();
+                return;
+            }
+        }
+        self.optimize_now();
+    }
+
+    /// Attach a background optimizer thread: periodic passes stop running
+    /// inline on the submit path and are instead executed by a dedicated
+    /// ticker, woken on demand (with a bounded-timeout heartbeat covering
+    /// racily missed wake-ups). Idempotent; the thread holds only a `Weak`
+    /// back-reference between passes and shuts down cleanly when the
+    /// coordinator drops. [`Coordinator::optimize_now`] stays available
+    /// for synchronous passes (the server's `optimize now` request).
+    pub fn attach_background_optimizer(self: &Arc<Self>) {
+        let mut slot = self.opt_ticker.lock().unwrap();
+        if slot.is_some() {
+            return;
+        }
+        let shared = Arc::new(TickerShared {
+            pending: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let weak: Weak<Coordinator> = Arc::downgrade(self);
+        let ts = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name("cram-opt-ticker".into())
+            .spawn(move || loop {
+                if ts.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if ts.pending.swap(0, Ordering::AcqRel) > 0 {
+                    // the coordinator may be gone: the ticker must never
+                    // keep it alive, so passes go through a Weak upgrade
+                    let Some(c) = weak.upgrade() else { return };
+                    c.optimize_now();
+                    continue;
+                }
+                let guard = ts.lock.lock().unwrap();
+                // the heartbeat bounds how late a pass can run if a
+                // notify raced between the pending check and this wait
+                let _ = ts.cv.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+            })
+            .expect("spawn optimizer ticker thread");
+        self.background_opt.store(true, Ordering::Relaxed);
+        *slot = Some(OptTicker { shared, handle });
     }
 
     /// Publish the placement map's shard gauges, per-block storage
@@ -424,8 +507,8 @@ impl Coordinator {
     pub fn metrics_snapshot(&self) -> String {
         let d = self.data_stats();
         self.metrics.set_storage_gauges(d.shards, d.shard_evictions);
-        let (trace_hits, interp_fallbacks) = self.farm.trace_stats();
-        self.metrics.set_trace_gauges(trace_hits, interp_fallbacks);
+        let (superop_hits, trace_hits, interp_fallbacks) = self.farm.trace_stats();
+        self.metrics.set_trace_gauges(superop_hits, trace_hits, interp_fallbacks);
         // per-block storage occupancy in bytes: a storage row holds one
         // bit per column
         let cols = self.farm.geometry().cols() as u64;
@@ -548,6 +631,22 @@ impl Coordinator {
             payload: JobPayload::IntMatmul { w, x: x.to_vec(), wt: wt.to_vec() },
         })?;
         Ok((0..m).map(|i| r.values[i * n..(i + 1) * n].to_vec()).collect())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(t) = self.opt_ticker.lock().unwrap().take() {
+            t.shared.stop.store(true, Ordering::Release);
+            t.shared.cv.notify_all();
+            // the last strong reference can be the ticker's own mid-pass
+            // upgrade, in which case this drop runs *on* the ticker
+            // thread — joining ourselves would deadlock; the loop's stop
+            // check retires the thread right after this returns
+            if t.handle.thread().id() != std::thread::current().id() {
+                let _ = t.handle.join();
+            }
+        }
     }
 }
 
@@ -1122,6 +1221,98 @@ mod tests {
             c.run(job(id)).unwrap();
         }
         assert!(c.metrics_snapshot().contains("opt_rounds=2"));
+    }
+
+    #[test]
+    fn background_optimizer_keeps_passes_off_the_submit_path() {
+        let c = Arc::new(Coordinator::with_storage(Geometry::G512x40, 1, 64));
+        let mut policy = c.optimizer_policy();
+        policy.period = 1;
+        c.set_optimizer_policy(policy);
+        c.attach_background_optimizer();
+        c.attach_background_optimizer(); // idempotent: one thread only
+        let job = |id| Job {
+            id,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: vec![1; 20],
+                b: vec![2; 20],
+            },
+        };
+        // Pin the ticker inside its wait by holding its wake-up lock: any
+        // optimizer pass that runs while we hold it must have run inline
+        // on the submit path — exactly what the ticker exists to prevent.
+        {
+            let ticker_guard = {
+                let slot = c.opt_ticker.lock().unwrap();
+                let shared = Arc::clone(&slot.as_ref().expect("ticker attached").shared);
+                drop(slot);
+                shared
+            };
+            let _pin = ticker_guard.lock.lock().unwrap();
+            for id in 0..4 {
+                c.run(job(id)).unwrap();
+            }
+            assert_eq!(
+                c.metrics.opt_rounds.load(Ordering::Relaxed),
+                0,
+                "submits queued passes instead of running them inline"
+            );
+        }
+        // released: the ticker drains the queued requests
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while c.metrics.opt_rounds.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "background pass never ran");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // clean shutdown: drop joins the ticker thread
+        drop(c);
+    }
+
+    #[test]
+    fn background_optimizer_passes_still_apply_moves() {
+        // same scenario as optimize_now_repins_a_hot_evicted_tensor, but
+        // the pass is driven by the ticker thread instead of the caller
+        let c = Arc::new(Coordinator::with_storage(Geometry::G512x40, 1, 96));
+        let a: Vec<i64> = (0..40).map(|i| i - 20).collect();
+        let h = c.alloc_tensor(&a, Dtype::INT8).unwrap();
+        for id in 0..3 {
+            c.run(Job {
+                id,
+                payload: JobPayload::IntElementwiseRef {
+                    op: EwOp::Add,
+                    w: 8,
+                    a: OperandRef::Tensor(h),
+                    b: OperandRef::Values(vec![1; 40]),
+                },
+            })
+            .unwrap();
+        }
+        let filler = c.alloc_tensor(&vec![7; 480], Dtype::INT8).unwrap();
+        assert!(c.placement().homes(h).is_empty(), "filler must evict");
+        c.free_tensor(filler).unwrap();
+        let mut policy = c.optimizer_policy();
+        policy.period = 1;
+        c.set_optimizer_policy(policy);
+        c.attach_background_optimizer();
+        // one more submit queues the pass; the repin lands asynchronously
+        c.run(Job {
+            id: 9,
+            payload: JobPayload::IntElementwise {
+                op: EwOp::Add,
+                w: 8,
+                a: vec![1; 20],
+                b: vec![2; 20],
+            },
+        })
+        .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while c.placement().homes(h).is_empty() {
+            assert!(std::time::Instant::now() < deadline, "background repin never landed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(c.read_tensor(h).unwrap(), a, "background re-pin is bit-exact");
     }
 
     #[test]

@@ -916,9 +916,12 @@ impl PimServer {
     /// cache is prewarmed with the full-block elementwise kernels, so the
     /// block-filling chunks of coalesced batches never pay microcode
     /// assembly; a batch's tail chunk compiles one sized kernel on first
-    /// sight of that size and is a cache hit thereafter.
+    /// sight of that size and is a cache hit thereafter. Periodic
+    /// placement-optimizer passes run on the coordinator's background
+    /// ticker, so request submits never ride an optimizer pass's tail.
     pub fn start(coordinator: Arc<Coordinator>, max_batch_wait: Duration) -> Result<PimServer> {
         coordinator.prewarm_serving();
+        coordinator.attach_background_optimizer();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
         let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
@@ -1630,10 +1633,11 @@ mod tests {
             .map(|x| x.as_i64().unwrap())
             .collect();
         assert_eq!(got, vec![7, 8, 9]);
-        // stats reports the data plane and the trace engine
+        // stats reports the data plane and the execution-tier counters
         let v = ask(r#"{"id": 5, "op": "stats"}"#);
         let stats = v.get("stats").and_then(Json::as_str).unwrap();
         assert!(stats.contains("resident_hits"), "{stats}");
+        assert!(stats.contains("superop_hits="), "{stats}");
         assert!(stats.contains("trace_hits="), "{stats}");
         assert!(stats.contains("interp_fallbacks=0"), "{stats}");
         // free, then the handle is gone

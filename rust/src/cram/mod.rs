@@ -58,7 +58,10 @@ pub struct CramBlock {
     /// residency-aware, chained). The kernel-cache tests observe this to
     /// prove cache hits skip `load_program` entirely.
     program_loads: u64,
-    /// Kernel phases executed via a pre-compiled trace (§Perf).
+    /// Kernel phases executed via a value-level super-op trace (§Perf) —
+    /// the fastest tier; the steady state for library kernels.
+    superop_hits: u64,
+    /// Kernel phases executed via a pre-compiled micro-op trace (§Perf).
     trace_hits: u64,
     /// Kernel phases that fell back to the step interpreter because no
     /// trace was available. Nonzero values on a serving farm mean some
@@ -78,6 +81,7 @@ impl CramBlock {
             running: false,
             total_stats: CycleStats::default(),
             program_loads: 0,
+            superop_hits: 0,
             trace_hits: 0,
             interp_fallbacks: 0,
         }
@@ -252,13 +256,21 @@ impl CramBlock {
 
     // ---- trace-aware execution (§Perf) ---------------------------------------
 
-    /// Run a single-phase compiled kernel to completion: via its
-    /// pre-compiled trace when one exists, via the step interpreter
-    /// otherwise. Same port protocol, same resulting array/latch state and
-    /// bit-identical [`CycleStats`] either way; the trace just skips the
-    /// per-instruction fetch/decode/loop-stack work. The caller stages
-    /// operands and sets compute mode exactly as for [`Self::run_to_done`].
+    /// Run a single-phase compiled kernel to completion, descending the
+    /// execution-tier ladder: the value-level super-op trace when the
+    /// phase lifted, the micro-op trace when it only compiled, the step
+    /// interpreter otherwise. Same port protocol, same resulting
+    /// array/latch state and bit-identical [`CycleStats`] on every tier;
+    /// the faster tiers just skip per-instruction (and, for super-ops,
+    /// per-bit-plane) dispatch work. The caller stages operands and sets
+    /// compute mode exactly as for [`Self::run_to_done`].
     pub fn run_kernel(&mut self, kernel: &CompiledKernel, max_cycles: u64) -> Result<CycleStats> {
+        match kernel.super_trace(0) {
+            Some(sup) if sup.rows() == self.array.rows() => {
+                return self.run_super(sup, max_cycles);
+            }
+            _ => {}
+        }
         match kernel.trace(0) {
             Some(trace) if trace.rows() == self.array.rows() => {
                 self.run_trace(trace, max_cycles)
@@ -271,7 +283,8 @@ impl CramBlock {
     }
 
     /// Run a multi-phase kernel with the dynamic instruction-memory reload
-    /// between phases, executing each phase's trace when available.
+    /// between phases, descending the tier ladder (super-op trace,
+    /// micro-op trace, interpreter) independently **per phase**.
     /// Observable behavior matches [`Self::run_chained`] on the kernel's
     /// phases: same per-phase `program_loads`, same imem contents, same
     /// summed statistics.
@@ -288,13 +301,21 @@ impl CramBlock {
                 self.write_imem_word(i, instr.encode())?;
             }
             self.set_mode(Mode::Compute)?;
-            let s = match kernel.trace(phase) {
-                Some(trace) if trace.rows() == self.array.rows() => {
-                    self.run_trace(trace, max_cycles)?
-                }
-                _ => {
-                    self.interp_fallbacks += 1;
-                    self.run_to_done(max_cycles)?
+            let sup = match kernel.super_trace(phase) {
+                Some(s) if s.rows() == self.array.rows() => Some(s),
+                _ => None,
+            };
+            let s = if let Some(sup) = sup {
+                self.run_super(sup, max_cycles)?
+            } else {
+                match kernel.trace(phase) {
+                    Some(trace) if trace.rows() == self.array.rows() => {
+                        self.run_trace(trace, max_cycles)?
+                    }
+                    _ => {
+                        self.interp_fallbacks += 1;
+                        self.run_to_done(max_cycles)?
+                    }
                 }
             };
             total.cycles += s.cycles;
@@ -330,7 +351,37 @@ impl CramBlock {
         Ok(s)
     }
 
-    /// Kernel phases executed via a pre-compiled trace.
+    /// Execute one super-op lift under the block's port protocol. Identical
+    /// protocol, budget rule and bookkeeping to [`Self::run_trace`] — a
+    /// lift carries the same analytic [`CycleStats`] as the trace it came
+    /// from, so the budget check is equivalent on either tier.
+    fn run_super(&mut self, sup: &crate::exec::SuperTrace, max_cycles: u64) -> Result<CycleStats> {
+        if self.mode != Mode::Compute {
+            bail!("start asserted in storage mode");
+        }
+        if self.imem.is_empty() {
+            bail!("start with empty instruction memory");
+        }
+        if sup.stats().cycles.saturating_sub(1) > max_cycles {
+            bail!("computation exceeded cycle budget {max_cycles}");
+        }
+        self.ctrl.reset();
+        self.periph.reset();
+        let s = sup.execute(&mut self.array, &mut self.periph);
+        self.ctrl.adopt_stats(s);
+        self.total_stats.cycles += s.cycles;
+        self.total_stats.array_cycles += s.array_cycles;
+        self.total_stats.instructions += s.instructions;
+        self.superop_hits += 1;
+        Ok(s)
+    }
+
+    /// Kernel phases executed via a value-level super-op trace.
+    pub fn superop_hits(&self) -> u64 {
+        self.superop_hits
+    }
+
+    /// Kernel phases executed via a pre-compiled micro-op trace.
     pub fn trace_hits(&self) -> u64 {
         self.trace_hits
     }
@@ -563,16 +614,28 @@ mod tests {
                 l.tuple_bits,
             );
         };
-        // trace path
+        // super-op path (the default tier for library kernels)
         let mut bt = CramBlock::new(geom);
         stage(&mut bt);
         bt.ensure_kernel(&kernel).unwrap();
         bt.set_mode(Mode::Compute).unwrap();
         let st = bt.run_kernel(&kernel, 1_000_000).unwrap();
-        assert_eq!(bt.trace_hits(), 1);
+        assert_eq!(bt.superop_hits(), 1);
+        assert_eq!(bt.trace_hits(), 0);
         assert_eq!(bt.interp_fallbacks(), 0);
-        assert_eq!(bt.last_run_stats(), st, "trace runs report through last_run_stats");
+        assert_eq!(bt.last_run_stats(), st, "super runs report through last_run_stats");
         assert_eq!(bt.total_stats(), st);
+        // forced micro-op trace path on an identical block
+        let mut unlifted = CompiledKernel::compile(key);
+        unlifted.strip_super_traces();
+        let mut bm = CramBlock::new(geom);
+        stage(&mut bm);
+        bm.ensure_kernel(&unlifted).unwrap();
+        bm.set_mode(Mode::Compute).unwrap();
+        let sm = bm.run_kernel(&unlifted, 1_000_000).unwrap();
+        assert_eq!(bm.superop_hits(), 0);
+        assert_eq!(bm.trace_hits(), 1);
+        assert_eq!(bm.interp_fallbacks(), 0);
         // forced interpreter path on an identical block
         let mut stripped = CompiledKernel::compile(key);
         stripped.strip_traces();
@@ -581,11 +644,14 @@ mod tests {
         bi.ensure_kernel(&stripped).unwrap();
         bi.set_mode(Mode::Compute).unwrap();
         let si = bi.run_kernel(&stripped, 1_000_000).unwrap();
+        assert_eq!(bi.superop_hits(), 0);
         assert_eq!(bi.trace_hits(), 0);
         assert_eq!(bi.interp_fallbacks(), 1);
         assert_eq!(st, si, "analytic stats match the interpreter");
+        assert_eq!(st, sm, "all three tiers report identical stats");
         for r in 0..64 {
             assert_eq!(bt.array().read_row(r), bi.array().read_row(r), "row {r}");
+            assert_eq!(bm.array().read_row(r), bi.array().read_row(r), "row {r} (micro)");
         }
     }
 
@@ -600,9 +666,40 @@ mod tests {
         let si = bi.run_chained(&kernel.phases, 50_000_000).unwrap();
         assert_eq!(st, si);
         assert_eq!(bt.program_loads(), bi.program_loads(), "per-phase load accounting");
-        assert_eq!(bt.trace_hits(), 2, "both MAC phases trace");
+        assert_eq!(bt.superop_hits(), 2, "both MAC phases lift to super-ops");
+        assert_eq!(bt.trace_hits(), 0);
         for r in 0..geom.rows() {
             assert_eq!(bt.array().read_row(r), bi.array().read_row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn chained_kernel_falls_back_per_phase_not_per_kernel() {
+        use crate::exec::{CompiledKernel, KernelKey};
+        let geom = Geometry::G512x40;
+        // reference: both phases on the super tier
+        let full = CompiledKernel::compile(KernelKey::bf16_mac_sized(40, geom));
+        let mut br = CramBlock::new(geom);
+        let sr = br.run_chained_kernel(&full, 50_000_000).unwrap();
+        // strip only phase 0's lift: that phase alone drops exactly one
+        // rung, to its micro-op trace; phase 1 stays on the super tier
+        let mut mixed = CompiledKernel::compile(full.key);
+        mixed.strip_super_trace(0);
+        let mut bm = CramBlock::new(geom);
+        let sm = bm.run_chained_kernel(&mixed, 50_000_000).unwrap();
+        assert_eq!((bm.superop_hits(), bm.trace_hits(), bm.interp_fallbacks()), (1, 1, 0));
+        assert_eq!(sr, sm, "tier choice never changes the stats");
+        // strip every lift: both phases land on the micro-op trace — still
+        // never the interpreter
+        let mut unlifted = CompiledKernel::compile(full.key);
+        unlifted.strip_super_traces();
+        let mut bu = CramBlock::new(geom);
+        let su = bu.run_chained_kernel(&unlifted, 50_000_000).unwrap();
+        assert_eq!((bu.superop_hits(), bu.trace_hits(), bu.interp_fallbacks()), (0, 2, 0));
+        assert_eq!(sr, su);
+        for r in 0..geom.rows() {
+            assert_eq!(br.array().read_row(r), bm.array().read_row(r), "row {r}");
+            assert_eq!(br.array().read_row(r), bu.array().read_row(r), "row {r} (unlifted)");
         }
     }
 

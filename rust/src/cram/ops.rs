@@ -12,9 +12,12 @@
 //!
 //! * the `*_compiled` entry points take a pre-assembled
 //!   [`CompiledKernel`] (from a [`KernelCache`]) and only **stage + run +
-//!   read back** — no microcode generation on this path, and the
+//!   read back** — no microcode generation on this path, the
 //!   instruction-memory load is skipped when the block already holds the
-//!   kernel ([`CramBlock::ensure_kernel`]);
+//!   kernel ([`CramBlock::ensure_kernel`]), and the run itself descends
+//!   the block's execution-tier ladder (value-level super-op trace, then
+//!   micro-op trace, then the step interpreter — see
+//!   [`CramBlock::run_kernel`]);
 //! * the legacy-named wrappers ([`int_addsub`], [`int_mul`], [`int_dot`],
 //!   [`bf16_op`], [`bf16_mac`]) keep the original signatures and compile
 //!   full-block kernels through the process-wide [`KernelCache::global`],

@@ -1,7 +1,7 @@
 //! Kernel identity ([`KernelKey`]) and the compiled artifact
 //! ([`CompiledKernel`]).
 
-use super::{Dtype, KernelTrace};
+use super::{Dtype, KernelTrace, SuperTrace};
 use crate::bitline::Geometry;
 use crate::ucode::{self, bf16 as ucbf16, DotLayout, Program, VecLayout};
 use anyhow::{bail, Result};
@@ -166,6 +166,11 @@ pub struct CompiledKernel {
     /// the trace compiler could not statically resolve; blocks fall back to
     /// the step interpreter for it (see [`crate::exec::KernelTrace`]).
     traces: Vec<Option<KernelTrace>>,
+    /// Super-op lifts of the traces, one per phase. `None` marks a phase
+    /// the recognizer could not lift; blocks fall back to that phase's
+    /// micro-op trace (see [`crate::exec::SuperTrace`]) — per phase, not
+    /// per kernel.
+    supers: Vec<Option<SuperTrace>>,
 }
 
 impl CompiledKernel {
@@ -205,16 +210,18 @@ impl CompiledKernel {
                 (phases, KernelLayout::Vec(l))
             }
         };
-        let traces = phases
+        let traces: Vec<Option<KernelTrace>> = phases
             .iter()
             .map(|p| KernelTrace::compile(&p.instrs, geom.rows()))
             .collect();
+        let supers = traces.iter().map(|t| t.as_ref().and_then(SuperTrace::lift)).collect();
         CompiledKernel {
             id: NEXT_KERNEL_ID.fetch_add(1, Ordering::Relaxed),
             key,
             phases,
             layout,
             traces,
+            supers,
         }
     }
 
@@ -224,13 +231,36 @@ impl CompiledKernel {
         self.traces.get(phase).and_then(|t| t.as_ref())
     }
 
-    /// Drop all traces, forcing every run of this kernel down the step
-    /// interpreter (tests exercise the fallback path with this).
+    /// The super-op lift of phase `phase`, if the recognizer lifted it.
+    pub fn super_trace(&self, phase: usize) -> Option<&SuperTrace> {
+        self.supers.get(phase).and_then(|s| s.as_ref())
+    }
+
+    /// Drop all traces (and their lifts), forcing every run of this kernel
+    /// down the step interpreter (tests exercise the fallback path with
+    /// this).
     #[cfg(test)]
     pub(crate) fn strip_traces(&mut self) {
         for t in &mut self.traces {
             *t = None;
         }
+        self.strip_super_traces();
+    }
+
+    /// Drop only the super-op lifts, forcing runs down the micro-op trace
+    /// tier (tests exercise the per-phase fallback ladder with this).
+    #[cfg(test)]
+    pub(crate) fn strip_super_traces(&mut self) {
+        for s in &mut self.supers {
+            *s = None;
+        }
+    }
+
+    /// Drop one phase's super-op lift, leaving the others intact (tests
+    /// prove fallback is per phase, not per kernel, with this).
+    #[cfg(test)]
+    pub(crate) fn strip_super_trace(&mut self, phase: usize) {
+        self.supers[phase] = None;
     }
 
     /// Residency identity (compilation-unique, not key-unique).
@@ -371,6 +401,12 @@ mod tests {
                 let t = c.trace(i).unwrap_or_else(|| panic!("{}: phase {i} untraced", c.name()));
                 assert!(!t.is_empty());
                 assert_eq!(t.rows(), g.rows());
+                // ... and every traced library phase lifts to the super tier
+                let s = c
+                    .super_trace(i)
+                    .unwrap_or_else(|| panic!("{}: phase {i} unlifted", c.name()));
+                assert!(s.super_ops() > 0, "{}: phase {i} lifted without super ops", c.name());
+                assert_eq!(s.stats(), t.stats(), "{}: phase {i} stats drifted", c.name());
             }
         }
     }

@@ -27,6 +27,13 @@
 //!   kernel) replaces the controller's fetch/decode/loop-stack work with a
 //!   flat, fused micro-op stream and analytic cycle statistics; blocks run
 //!   it when present and fall back to the step interpreter otherwise.
+//! * A [`SuperTrace`] per phase (lifted from the micro-op trace, also at
+//!   compile time) batches recognized phase shapes — ripple add/sub
+//!   chains, predicated shift-and-add multiply groups, generic plane runs
+//!   — into value-level super-ops executed word-major over whole bit-plane
+//!   slabs, with the carry/tag latches held in scalar registers. Blocks
+//!   prefer it over the micro-op trace; an unlifted phase falls back per
+//!   phase, not per kernel.
 //! * The [`PlacementMap`] does the same for **data**: resident tensors
 //!   ([`TensorHandle`]) live in per-block storage reserves, tasks that
 //!   reference them are routed to the worker holding a replica (data
@@ -66,7 +73,7 @@ pub use cache::{CacheStats, KernelCache};
 pub use dtype::Dtype;
 pub use kernel::{CompiledKernel, KernelKey, KernelLayout, KernelOp};
 pub use router::{kernel_cycles, HostEwOp, HostOp, HostWork, Route};
-pub use trace::{KernelTrace, MicroOp};
+pub use trace::{KernelTrace, MicroOp, SuperOp, SuperStep, SuperTrace};
 pub use optimizer::{OptimizerPolicy, OptimizerReport, PlacementMove};
 pub use placement::{
     DataStats, PlacementMap, PlacementSnapshot, RowsResolution, SlicePart,

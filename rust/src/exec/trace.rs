@@ -27,8 +27,20 @@
 //! the program — makes `compile` return `None`, and the caller falls back
 //! to the step interpreter (which reproduces the fault or handles the
 //! dynamic control flow).
+//!
+//! On top of the micro-op trace sits the **super-op tier**
+//! ([`SuperTrace::lift`]): whole kernel-phase idioms — carry-preset +
+//! ripple-sweep vector add/sub chains, tag-predicated shift-and-add
+//! multiply loops, and arbitrary word-local runs (bf16 MAC recurrences,
+//! requant/mask epilogues) — are pattern-matched into [`SuperOp`]s that
+//! execute word-major at value level, with the carry/tag latches lifted
+//! into scalar registers for a whole pass (see the batch kernels on
+//! [`BitlineArray`]). Rows, latches and [`CycleStats`] stay bit-identical
+//! to both lower tiers; a phase that doesn't lift stays on its micro-op
+//! trace (per-phase fallback), and a phase with no trace at all stays on
+//! the interpreter — the full ladder is interpreter → trace → super-op.
 
-use crate::bitline::{BitlineArray, ColumnPeriph};
+use crate::bitline::{AddSubGroup, BitlineArray, ColumnPeriph, MacGroup, MacStep};
 use crate::ctrl::{CycleStats, LOOP_DEPTH};
 use crate::isa::{Instr, LogicOp, Pred};
 
@@ -167,49 +179,7 @@ impl KernelTrace {
     pub fn execute(&self, array: &mut BitlineArray, periph: &mut ColumnPeriph) -> CycleStats {
         debug_assert_eq!(array.rows(), self.rows, "trace compiled for another geometry");
         for &op in &self.ops {
-            match op {
-                MicroOp::RippleSweep { a0, b0, d0, w, subtract } => {
-                    array.ripple_sweep(a0, b0, d0, w, subtract, periph);
-                }
-                MicroOp::BlockCopy { a0, d0, n } => array.block_copy(a0, d0, n),
-                MicroOp::BlockZero { d0, n } => array.block_zero(d0, n),
-                MicroOp::Fas { a, b, d, pred, subtract } => {
-                    periph.resolve_mask(pred);
-                    array.fas_inplace(a, b, d, periph, subtract);
-                }
-                MicroOp::Logic { op, a, b, d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.logic_inplace(op, a, b, d, periph);
-                }
-                MicroOp::NotRow { a, d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.move_inplace(1, a, d, periph);
-                }
-                MicroOp::CopyRow { a, d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.move_inplace(0, a, d, periph);
-                }
-                MicroOp::Zero { d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.move_inplace(2, 0, d, periph);
-                }
-                MicroOp::Clc => periph.clear_carry(),
-                MicroOp::Sec => periph.set_carry(),
-                MicroOp::Tnot => periph.invert_tag(),
-                MicroOp::Tcar => periph.tag_from_carry(),
-                MicroOp::Tld { a } => {
-                    periph.tag_mut().copy_from_words(array.read_row(a).words());
-                }
-                MicroOp::Tldn { a } => periph.load_tag_not_inplace(array.read_row(a)),
-                MicroOp::Wrc { d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.write_plane_inplace(false, d, periph);
-                }
-                MicroOp::Wrt { d, pred } => {
-                    periph.resolve_mask(pred);
-                    array.write_plane_inplace(true, d, periph);
-                }
-            }
+            exec_micro(op, array, periph);
         }
         self.stats
     }
@@ -236,6 +206,56 @@ impl KernelTrace {
     /// Micro-op view (diagnostics and tests).
     pub fn ops(&self) -> &[MicroOp] {
         &self.ops
+    }
+}
+
+/// Execute one micro-op against the array + peripherals: resolve the
+/// predication mask, then run the matching in-place kernel. Shared by the
+/// micro-op trace tier and the [`SuperTrace`] tier's unlifted leftovers.
+#[inline]
+pub(crate) fn exec_micro(op: MicroOp, array: &mut BitlineArray, periph: &mut ColumnPeriph) {
+    match op {
+        MicroOp::RippleSweep { a0, b0, d0, w, subtract } => {
+            array.ripple_sweep(a0, b0, d0, w, subtract, periph);
+        }
+        MicroOp::BlockCopy { a0, d0, n } => array.block_copy(a0, d0, n),
+        MicroOp::BlockZero { d0, n } => array.block_zero(d0, n),
+        MicroOp::Fas { a, b, d, pred, subtract } => {
+            periph.resolve_mask(pred);
+            array.fas_inplace(a, b, d, periph, subtract);
+        }
+        MicroOp::Logic { op, a, b, d, pred } => {
+            periph.resolve_mask(pred);
+            array.logic_inplace(op, a, b, d, periph);
+        }
+        MicroOp::NotRow { a, d, pred } => {
+            periph.resolve_mask(pred);
+            array.move_inplace(1, a, d, periph);
+        }
+        MicroOp::CopyRow { a, d, pred } => {
+            periph.resolve_mask(pred);
+            array.move_inplace(0, a, d, periph);
+        }
+        MicroOp::Zero { d, pred } => {
+            periph.resolve_mask(pred);
+            array.move_inplace(2, 0, d, periph);
+        }
+        MicroOp::Clc => periph.clear_carry(),
+        MicroOp::Sec => periph.set_carry(),
+        MicroOp::Tnot => periph.invert_tag(),
+        MicroOp::Tcar => periph.tag_from_carry(),
+        MicroOp::Tld { a } => {
+            periph.tag_mut().copy_from_words(array.read_row(a).words());
+        }
+        MicroOp::Tldn { a } => periph.load_tag_not_inplace(array.read_row(a)),
+        MicroOp::Wrc { d, pred } => {
+            periph.resolve_mask(pred);
+            array.write_plane_inplace(false, d, periph);
+        }
+        MicroOp::Wrt { d, pred } => {
+            periph.resolve_mask(pred);
+            array.write_plane_inplace(true, d, periph);
+        }
     }
 }
 
@@ -433,6 +453,261 @@ fn fuse(ops: Vec<MicroOp>) -> Vec<MicroOp> {
     out
 }
 
+// ---- super-op tier (§Perf) --------------------------------------------------
+
+/// Minimum generic-run length worth batching into a [`SuperOp::VecMac16`]:
+/// shorter leftovers stay micro-ops (the per-word latch lift costs more
+/// than it saves on one or two ops).
+const MIN_BATCH: usize = 4;
+
+/// One value-level super-op: a whole recognized kernel phase fragment,
+/// executed word-major with the carry/tag latches in scalar registers
+/// (see the batch kernels on [`BitlineArray`]).
+#[derive(Clone, Debug)]
+pub enum SuperOp {
+    /// A run of carry-preset + ripple-sweep pairs: the multi-plane vector
+    /// add/sub chain of the integer elementwise kernels.
+    VecAddSub { groups: Vec<AddSubGroup> },
+    /// A run of shift-and-add multiply groups (tag load from a multiplier
+    /// bit plane, carry preset, tag-predicated adder chain, tag-predicated
+    /// latch writes): the integer multiply loops, the dot product's MAC
+    /// body, and the bf16 mantissa multiply inner loop.
+    VecMulAcc {
+        groups: Vec<MacGroup>,
+        steps: Vec<MacStep>,
+        writes: Vec<(bool, usize)>,
+    },
+    /// Generic word-major scalar-latch batch over an arbitrary micro-op
+    /// run: the bf16 MAC recurrences and requant/mask epilogues lift
+    /// through here.
+    VecMac16 { ops: Vec<MicroOp> },
+}
+
+/// One step of a [`SuperTrace`]: a lifted super-op, or a leftover micro-op
+/// (fused block moves and sub-[`MIN_BATCH`] runs) executed exactly as the
+/// micro-op tier would.
+#[derive(Clone, Debug)]
+pub enum SuperStep {
+    Super(SuperOp),
+    Micro(MicroOp),
+}
+
+/// The super-op compilation of a [`KernelTrace`]: recognized value-level
+/// phases plus micro-op leftovers, with the same analytic [`CycleStats`].
+///
+/// Execution is bit-identical to the micro-op tier (rows, carry/tag
+/// latches, stats) by the word-locality argument on the batch kernels:
+/// every micro-op touches only word `i` of its rows while processing word
+/// `i`, so a per-word in-order replay with scalar latches reproduces the
+/// per-op interpreter exactly, predication snapshots included.
+#[derive(Clone, Debug)]
+pub struct SuperTrace {
+    steps: Vec<SuperStep>,
+    stats: CycleStats,
+    rows: usize,
+}
+
+impl SuperTrace {
+    /// Pattern-match `trace` into super-ops. Returns `None` when nothing
+    /// lifts (no recognized pattern and no batchable run) — the caller
+    /// keeps that phase on the micro-op trace, per phase, not per kernel.
+    pub fn lift(trace: &KernelTrace) -> Option<SuperTrace> {
+        let ops = trace.ops();
+        let mut steps: Vec<SuperStep> = Vec::new();
+        let mut pending: Vec<MicroOp> = Vec::new();
+        let mut any_super = false;
+        let mut flush = |pending: &mut Vec<MicroOp>, steps: &mut Vec<SuperStep>, any: &mut bool| {
+            if pending.len() >= MIN_BATCH {
+                steps.push(SuperStep::Super(SuperOp::VecMac16 { ops: std::mem::take(pending) }));
+                *any = true;
+            } else {
+                for op in pending.drain(..) {
+                    steps.push(SuperStep::Micro(op));
+                }
+            }
+        };
+        let mut i = 0;
+        while i < ops.len() {
+            if let Some((groups, used)) = scan_addsub(ops, i) {
+                flush(&mut pending, &mut steps, &mut any_super);
+                steps.push(SuperStep::Super(SuperOp::VecAddSub { groups }));
+                any_super = true;
+                i += used;
+                continue;
+            }
+            if let Some((groups, mac_steps, writes, used)) = scan_mul_acc(ops, i) {
+                flush(&mut pending, &mut steps, &mut any_super);
+                steps.push(SuperStep::Super(SuperOp::VecMulAcc {
+                    groups,
+                    steps: mac_steps,
+                    writes,
+                }));
+                any_super = true;
+                i += used;
+                continue;
+            }
+            match ops[i] {
+                // block moves are already single fused calls — batching
+                // them per word would only redo the row walk per word
+                op @ (MicroOp::BlockCopy { .. } | MicroOp::BlockZero { .. }) => {
+                    flush(&mut pending, &mut steps, &mut any_super);
+                    steps.push(SuperStep::Micro(op));
+                }
+                op => pending.push(op),
+            }
+            i += 1;
+        }
+        flush(&mut pending, &mut steps, &mut any_super);
+        if !any_super {
+            return None;
+        }
+        Some(SuperTrace { steps, stats: trace.stats(), rows: trace.rows() })
+    }
+
+    /// Execute the lifted trace. Same contract as [`KernelTrace::execute`]:
+    /// the caller resets the peripherals first; rows, latches and the
+    /// returned analytic stats are bit-identical to the micro-op tier.
+    pub fn execute(&self, array: &mut BitlineArray, periph: &mut ColumnPeriph) -> CycleStats {
+        debug_assert_eq!(array.rows(), self.rows, "super-trace compiled for another geometry");
+        for step in &self.steps {
+            match step {
+                SuperStep::Super(SuperOp::VecAddSub { groups }) => {
+                    array.vec_addsub_batch(groups, periph);
+                }
+                SuperStep::Super(SuperOp::VecMulAcc { groups, steps, writes }) => {
+                    array.mul_acc_batch(groups, steps, writes, periph);
+                }
+                SuperStep::Super(SuperOp::VecMac16 { ops }) => {
+                    array.plane_batch(ops, periph);
+                }
+                SuperStep::Micro(op) => exec_micro(*op, array, periph),
+            }
+        }
+        self.stats
+    }
+
+    /// Analytic cycle statistics of one execution (same as the source
+    /// trace's).
+    pub fn stats(&self) -> CycleStats {
+        self.stats
+    }
+
+    /// Row count the source trace was bounds-checked against.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Step view (diagnostics and tests).
+    pub fn steps(&self) -> &[SuperStep] {
+        &self.steps
+    }
+
+    /// Number of lifted super-ops (at least 1 by construction).
+    pub fn super_ops(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| matches!(s, SuperStep::Super(_)))
+            .count()
+    }
+}
+
+/// Recognize a run of `Clc`/`Sec` + `RippleSweep` pairs starting at
+/// `start`: the carry preset and W-plane ripple of one vector add/sub
+/// tuple each. Returns the groups and the op count consumed.
+fn scan_addsub(ops: &[MicroOp], start: usize) -> Option<(Vec<AddSubGroup>, usize)> {
+    let mut groups = Vec::new();
+    let mut i = start;
+    while i + 1 < ops.len() {
+        let sec = match ops[i] {
+            MicroOp::Clc => false,
+            MicroOp::Sec => true,
+            _ => break,
+        };
+        let MicroOp::RippleSweep { a0, b0, d0, w, subtract } = ops[i + 1] else {
+            break;
+        };
+        groups.push(AddSubGroup { sec, a0, b0, d0, w, subtract });
+        i += 2;
+    }
+    if groups.is_empty() {
+        None
+    } else {
+        Some((groups, i - start))
+    }
+}
+
+/// Recognize a run of shift-and-add multiply groups starting at `start`:
+/// `Tld`/`Tldn`, optional `Clc`/`Sec`, >= 2 tag-predicated `Fas`, then any
+/// tag-predicated `Wrc`/`Wrt` writes. Returns the flattened groups and the
+/// op count consumed.
+#[allow(clippy::type_complexity)]
+fn scan_mul_acc(
+    ops: &[MicroOp],
+    start: usize,
+) -> Option<(Vec<MacGroup>, Vec<MacStep>, Vec<(bool, usize)>, usize)> {
+    let mut groups = Vec::new();
+    let mut steps: Vec<MacStep> = Vec::new();
+    let mut writes: Vec<(bool, usize)> = Vec::new();
+    let mut i = start;
+    while let Some(&op) = ops.get(i) {
+        let (tag_row, tag_not) = match op {
+            MicroOp::Tld { a } => (a, false),
+            MicroOp::Tldn { a } => (a, true),
+            _ => break,
+        };
+        let mut j = i + 1;
+        let preset = match ops.get(j) {
+            Some(MicroOp::Clc) => {
+                j += 1;
+                Some(false)
+            }
+            Some(MicroOp::Sec) => {
+                j += 1;
+                Some(true)
+            }
+            _ => None,
+        };
+        let s0 = steps.len();
+        while let Some(&MicroOp::Fas { a, b, d, pred: Pred::Tag, subtract }) = ops.get(j) {
+            steps.push(MacStep { a, b, d, subtract });
+            j += 1;
+        }
+        if steps.len() - s0 < 2 {
+            // not a multiply group after all: leave `i` at the tag load so
+            // the ops fall through to the generic batch
+            steps.truncate(s0);
+            break;
+        }
+        let w0 = writes.len();
+        loop {
+            match ops.get(j) {
+                Some(&MicroOp::Wrc { d, pred: Pred::Tag }) => {
+                    writes.push((false, d));
+                    j += 1;
+                }
+                Some(&MicroOp::Wrt { d, pred: Pred::Tag }) => {
+                    writes.push((true, d));
+                    j += 1;
+                }
+                _ => break,
+            }
+        }
+        groups.push(MacGroup {
+            tag_row,
+            tag_not,
+            preset,
+            steps: (s0 as u32, steps.len() as u32),
+            writes: (w0 as u32, writes.len() as u32),
+        });
+        i = j;
+    }
+    if groups.is_empty() {
+        None
+    } else {
+        Some((groups, steps, writes, i - start))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -487,6 +762,88 @@ mod tests {
         assert!(compile_asm("movi r1, 255\nmovih r1, 255\ncopy @r1, @r2\nhalt", 512).is_none());
         // missing halt: runs off the end
         assert!(compile_asm("nop\nnop", 512).is_none());
+    }
+
+    #[test]
+    fn lift_recognizes_addsub_chains() {
+        let t = compile_asm(
+            "movi r1, 0\nmovi r2, 8\nmovi r3, 16\nclc\nloopi 8\nfas @r1+, @r2+, @r3+\nendl\nhalt",
+            512,
+        )
+        .unwrap();
+        let s = SuperTrace::lift(&t).unwrap();
+        assert_eq!(s.super_ops(), 1);
+        let [SuperStep::Super(SuperOp::VecAddSub { groups })] = s.steps() else {
+            panic!("expected one VecAddSub, got {:?}", s.steps());
+        };
+        assert_eq!(
+            groups.as_slice(),
+            &[AddSubGroup { sec: false, a0: 0, b0: 8, d0: 16, w: 8, subtract: false }]
+        );
+        assert_eq!(s.stats(), t.stats());
+    }
+
+    #[test]
+    fn lift_recognizes_mul_acc_groups() {
+        // one shift-and-add group: tag from row 0, clc, predicated chain
+        let t = compile_asm(
+            "movi r1, 4\nmovi r2, 8\nmovi r3, 12\ntld @r0\nclc\nloopi 3\nfas @r1+, @r2+, @r3+ ?t\nendl\nwrc @r3 ?t\nhalt",
+            512,
+        )
+        .unwrap();
+        let s = SuperTrace::lift(&t).unwrap();
+        let [SuperStep::Super(SuperOp::VecMulAcc { groups, steps, writes })] = s.steps() else {
+            panic!("expected one VecMulAcc, got {:?}", s.steps());
+        };
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].tag_row, 0);
+        assert_eq!(groups[0].preset, Some(false));
+        assert_eq!(steps.len(), 3);
+        assert_eq!(writes.as_slice(), &[(false, 15)]);
+    }
+
+    #[test]
+    fn unliftable_traces_return_none() {
+        // two non-adjacent copies: neither block-fusable nor batch-worthy
+        let t = compile_asm("copy @r1, @r2\ncopy @r1, @r2\nhalt", 512).unwrap();
+        assert!(SuperTrace::lift(&t).is_none());
+        // a lone fused block move has nothing to lift either
+        let t = compile_asm(
+            "movi r1, 0\nmovi r2, 16\nloopi 8\ncopy @r1+, @r2+\nendl\nhalt",
+            512,
+        )
+        .unwrap();
+        assert_eq!(t.len(), 1, "fused to one BlockCopy");
+        assert!(SuperTrace::lift(&t).is_none());
+    }
+
+    #[test]
+    fn super_trace_matches_interpreter_on_an_add_program() {
+        let src = "movi r1, 0\nmovi r2, 8\nmovi r3, 16\nclc\nloopi 8\nfas @r1+, @r2+, @r3+\nendl\nwrc @r3\nhalt";
+        let prog = assemble(src).unwrap();
+        let geom = Geometry::G512x40;
+        let mut arr_i = BitlineArray::new(geom);
+        for r in 0..16 {
+            for c in 0..40 {
+                arr_i.set_bit(r, c, (r * 11 + c * 5) % 3 < 1);
+            }
+        }
+        let mut arr_s = arr_i.clone();
+        let mut per_i = ColumnPeriph::new(40);
+        let mut per_s = ColumnPeriph::new(40);
+        let mut imem = InstrMem::new();
+        imem.load_config(&prog).unwrap();
+        let mut ctrl = Controller::new();
+        let si = ctrl.run(&imem, &mut arr_i, &mut per_i, 1_000_000).unwrap();
+        let trace = KernelTrace::compile(&prog, geom.rows()).unwrap();
+        let sup = SuperTrace::lift(&trace).unwrap();
+        let ss = sup.execute(&mut arr_s, &mut per_s);
+        assert_eq!(si, ss, "analytic stats match the interpreter");
+        for r in 0..24 {
+            assert_eq!(arr_i.read_row(r), arr_s.read_row(r), "row {r}");
+        }
+        assert_eq!(per_i.carry(), per_s.carry());
+        assert_eq!(per_i.tag(), per_s.tag());
     }
 
     #[test]

@@ -156,6 +156,105 @@ pub fn write_bench_json_to(path: &std::path::Path, section: &str, measurements: 
     }
 }
 
+// ---- perf ratchet -----------------------------------------------------------
+
+/// Outcome of ratcheting a fresh trajectory against a committed baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RatchetOutcome {
+    /// The baseline is a seed placeholder or carries no sections — nothing
+    /// to ratchet against yet.
+    Skipped { reason: String },
+    /// Every shared (section, entry) pair stayed within tolerance.
+    Ok { compared: usize },
+    /// At least one shared entry regressed beyond tolerance.
+    Regressions(Vec<RatchetRegression>),
+}
+
+/// One entry whose fresh mean crossed the ratchet threshold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RatchetRegression {
+    pub section: String,
+    pub entry: String,
+    pub old_mean_ns: i64,
+    pub new_mean_ns: i64,
+}
+
+impl RatchetRegression {
+    pub fn report(&self) -> String {
+        format!(
+            "ratchet: {}/{} regressed {:.1}% (mean {} ns -> {} ns)",
+            self.section,
+            self.entry,
+            (self.new_mean_ns as f64 / self.old_mean_ns as f64 - 1.0) * 100.0,
+            self.old_mean_ns,
+            self.new_mean_ns
+        )
+    }
+}
+
+/// Compare a fresh `BENCH_serving.json` (`new`) against a committed
+/// baseline (`old`): a shared entry regresses when its fresh `mean_ns`
+/// exceeds the baseline's by more than `tolerance` (0.25 = +25%). Entries
+/// present on only one side are ignored — a new bench is not a
+/// regression, a retired one is not a win. A baseline whose `generated`
+/// note still starts with `placeholder` (the growth seed) or that carries
+/// no sections yields [`RatchetOutcome::Skipped`], so the ratchet arms
+/// itself only once a real trajectory has been committed.
+pub fn compare_bench_json(old: &Json, new: &Json, tolerance: f64) -> RatchetOutcome {
+    if let Some(note) = old.get("generated").and_then(Json::as_str) {
+        if note.starts_with("placeholder") {
+            return RatchetOutcome::Skipped {
+                reason: format!("baseline is a placeholder ({note})"),
+            };
+        }
+    }
+    let old_sections = old.get("sections").and_then(Json::as_obj);
+    let new_sections = new.get("sections").and_then(Json::as_obj);
+    let (Some(old_sections), Some(new_sections)) = (old_sections, new_sections) else {
+        return RatchetOutcome::Skipped { reason: "missing sections object".to_string() };
+    };
+    if old_sections.is_empty() {
+        return RatchetOutcome::Skipped { reason: "baseline has no sections".to_string() };
+    }
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    for (section, old_entries) in old_sections {
+        let Some(old_entries) = old_entries.as_obj() else { continue };
+        let Some(new_entries) = new_sections.get(section).and_then(Json::as_obj) else {
+            continue;
+        };
+        for (entry, old_m) in old_entries {
+            let Some(old_mean) = old_m.get("mean_ns").and_then(Json::as_i64) else { continue };
+            let Some(new_mean) = new_entries
+                .get(entry)
+                .and_then(|m| m.get("mean_ns"))
+                .and_then(Json::as_i64)
+            else {
+                continue;
+            };
+            compared += 1;
+            if old_mean > 0 && new_mean as f64 > old_mean as f64 * (1.0 + tolerance) {
+                regressions.push(RatchetRegression {
+                    section: section.clone(),
+                    entry: entry.clone(),
+                    old_mean_ns: old_mean,
+                    new_mean_ns: new_mean,
+                });
+            }
+        }
+    }
+    if compared == 0 {
+        return RatchetOutcome::Skipped {
+            reason: "no shared (section, entry) pairs".to_string(),
+        };
+    }
+    if regressions.is_empty() {
+        RatchetOutcome::Ok { compared }
+    } else {
+        RatchetOutcome::Regressions(regressions)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +328,77 @@ mod tests {
             .expect("section entry written");
         assert_eq!(entry.get("mean_ns").and_then(Json::as_i64), Some(5_000));
         std::fs::remove_file(&path).unwrap();
+    }
+
+    fn trajectory(note: &str, entries: &[(&str, &str, i64)]) -> Json {
+        let mut sections: BTreeMap<String, BTreeMap<String, Json>> = BTreeMap::new();
+        for &(section, entry, mean_ns) in entries {
+            let mut m = BTreeMap::new();
+            m.insert("mean_ns".to_string(), Json::Int(mean_ns));
+            sections
+                .entry(section.to_string())
+                .or_default()
+                .insert(entry.to_string(), Json::Obj(m));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Int(1));
+        root.insert("generated".to_string(), Json::Str(note.to_string()));
+        root.insert(
+            "sections".to_string(),
+            Json::Obj(sections.into_iter().map(|(k, v)| (k, Json::Obj(v))).collect()),
+        );
+        Json::Obj(root)
+    }
+
+    const STAMP: &str = "cargo bench (comperam benchkit)";
+
+    #[test]
+    fn ratchet_passes_within_tolerance_and_ignores_one_sided_entries() {
+        let old = trajectory(STAMP, &[("simcore", "a", 1000), ("simcore", "retired", 50)]);
+        let new = trajectory(
+            STAMP,
+            &[("simcore", "a", 1200), ("simcore", "brand_new", 9_999_999)],
+        );
+        // +20% is inside the 25% tolerance; retired/new entries don't count
+        assert_eq!(compare_bench_json(&old, &new, 0.25), RatchetOutcome::Ok { compared: 1 });
+    }
+
+    #[test]
+    fn ratchet_flags_a_regression_beyond_tolerance() {
+        let old = trajectory(STAMP, &[("simcore", "a", 1000), ("serving", "b", 2000)]);
+        let new = trajectory(STAMP, &[("simcore", "a", 1300), ("serving", "b", 1900)]);
+        let RatchetOutcome::Regressions(regs) = compare_bench_json(&old, &new, 0.25) else {
+            panic!("+30% must trip a 25% ratchet");
+        };
+        assert_eq!(regs.len(), 1);
+        assert_eq!((regs[0].section.as_str(), regs[0].entry.as_str()), ("simcore", "a"));
+        assert_eq!((regs[0].old_mean_ns, regs[0].new_mean_ns), (1000, 1300));
+        assert!(regs[0].report().contains("simcore/a"), "{}", regs[0].report());
+    }
+
+    #[test]
+    fn ratchet_skips_placeholder_and_empty_baselines() {
+        let new = trajectory(STAMP, &[("simcore", "a", 1000)]);
+        let seed = Json::parse(
+            "{\"generated\": \"placeholder: pending first cargo bench run\", \
+             \"sections\": {}, \"version\": 1}",
+        )
+        .unwrap();
+        assert!(matches!(
+            compare_bench_json(&seed, &new, 0.25),
+            RatchetOutcome::Skipped { .. }
+        ));
+        let empty = trajectory(STAMP, &[]);
+        assert!(matches!(
+            compare_bench_json(&empty, &new, 0.25),
+            RatchetOutcome::Skipped { .. }
+        ));
+        // disjoint sections: nothing shared to compare
+        let other = trajectory(STAMP, &[("placement", "x", 10)]);
+        assert!(matches!(
+            compare_bench_json(&other, &new, 0.25),
+            RatchetOutcome::Skipped { .. }
+        ));
     }
 
     #[test]

@@ -16,28 +16,37 @@
 //!  * loops wider than 255 iterations (emitted as chunked `Loopi` blocks)
 //!    fuse across the chunk boundary and still match;
 //!  * programs with run-time-only control flow refuse to compile instead
-//!    of compiling wrong.
+//!    of compiling wrong;
+//!  * the value-level super-op tier ([`comperam::exec::SuperTrace`]) is a
+//!    *third* differential leg: whenever a trace lifts, its word-major
+//!    replay must leave the array, latches and stats exactly as the other
+//!    two tiers do — on randomized programs and on every library kernel
+//!    across all four geometries.
 
 use comperam::bitline::{BitlineArray, ColumnPeriph, Geometry};
 use comperam::ctrl::{Controller, InstrMem};
-use comperam::exec::{CompiledKernel, Dtype, KernelKey, KernelOp, KernelTrace, MicroOp};
+use comperam::exec::{CompiledKernel, Dtype, KernelKey, KernelOp, KernelTrace, MicroOp, SuperTrace};
 use comperam::isa::{Instr, LogicOp, Pred};
 use comperam::util::Prng;
 
 const BUDGET: u64 = 10_000_000;
 
-/// Seed two arrays with identical random bits, run `prog` through the
-/// step interpreter on one and the compiled trace on the other, and
-/// assert bit-identical array state, peripheral latches and statistics.
+/// Seed three arrays with identical random bits, run `prog` through the
+/// step interpreter on one, the compiled trace on the second and — when
+/// the trace lifts — the super-op tier on the third, and assert
+/// bit-identical array state, peripheral latches and statistics across
+/// every tier that ran.
 fn assert_trace_matches_interpreter(prog: &[Instr], geom: Geometry, rng: &mut Prng, seed: u64) {
     let (rows, cols) = (geom.rows(), geom.cols());
     let mut arr_i = BitlineArray::new(geom);
     let mut arr_t = BitlineArray::new(geom);
+    let mut arr_s = BitlineArray::new(geom);
     for r in 0..rows {
         for c in 0..cols {
             if rng.chance(0.5) {
                 arr_i.set_bit(r, c, true);
                 arr_t.set_bit(r, c, true);
+                arr_s.set_bit(r, c, true);
             }
         }
     }
@@ -59,6 +68,17 @@ fn assert_trace_matches_interpreter(prog: &[Instr], geom: Geometry, rng: &mut Pr
     }
     assert_eq!(per_i.carry(), per_t.carry(), "seed {seed}: carry latch diverges");
     assert_eq!(per_i.tag(), per_t.tag(), "seed {seed}: tag latch diverges");
+    if let Some(sup) = SuperTrace::lift(&trace) {
+        assert_eq!(sup.stats(), want, "seed {seed}: super-op analytic stats diverge");
+        let mut per_s = ColumnPeriph::new(cols);
+        let got_s = sup.execute(&mut arr_s, &mut per_s);
+        assert_eq!(got_s, want, "seed {seed}: super-op executed stats diverge");
+        for r in 0..rows {
+            assert_eq!(arr_i.read_row(r), arr_s.read_row(r), "seed {seed}: super row {r}");
+        }
+        assert_eq!(per_i.carry(), per_s.carry(), "seed {seed}: super carry latch diverges");
+        assert_eq!(per_i.tag(), per_s.tag(), "seed {seed}: super tag latch diverges");
+    }
 }
 
 /// Random-program generator that tracks a per-register upper bound so
@@ -219,6 +239,45 @@ fn prop_library_kernel_phases_replay_bit_identically() {
                 &mut rng,
                 seed,
             );
+        }
+    }
+}
+
+#[test]
+fn prop_superop_tier_matches_on_every_library_kernel_and_geometry() {
+    // every library kernel shape, on every geometry the simulator models
+    // (including the two-word G285x72 layout): each phase must lift to the
+    // super-op tier and replay bit-identically through all three tiers.
+    // The dot depth is 8 so the operand planes fit the 285-row geometry.
+    let geoms =
+        [Geometry::G512x40, Geometry::G1024x20, Geometry::G2048x10, Geometry::G285x72];
+    for (gi, geom) in geoms.into_iter().enumerate() {
+        let keys = [
+            KernelKey::int_ew_full(KernelOp::IntAdd, Dtype::INT8, geom),
+            KernelKey::int_ew_sized(KernelOp::IntSub, Dtype::INT4, 100, geom),
+            KernelKey::int_ew_full(KernelOp::IntMul, Dtype::INT4, geom),
+            KernelKey::int_dot(Dtype::INT8, 32, 8, geom),
+            KernelKey::bf16_ew_full(false, geom),
+            KernelKey::bf16_ew_full(true, geom),
+            KernelKey::bf16_mac_sized(40, geom),
+        ];
+        for (ki, key) in keys.into_iter().enumerate() {
+            let kernel = CompiledKernel::compile(key);
+            for phase in 0..kernel.phases.len() {
+                let seed = 0xA500 + (gi * 64 + ki * 8 + phase) as u64;
+                let mut rng = Prng::new(seed);
+                assert!(
+                    kernel.super_trace(phase).is_some(),
+                    "{}: phase {phase} failed to lift on {geom:?}",
+                    kernel.name()
+                );
+                assert_trace_matches_interpreter(
+                    &kernel.phases[phase].instrs,
+                    geom,
+                    &mut rng,
+                    seed,
+                );
+            }
         }
     }
 }
