@@ -19,13 +19,17 @@
 //!   stream under `route=auto` must be bit-identical to both pure
 //!   policies and no slower than the cheaper of pure-PIM / pure-host,
 //!   plus a small-shape crossover sweep of the model's predictions;
+//! * task-granular split (the split planner + twin rebalance): one wide
+//!   bf16 elementwise job under `route=split` must be bit-identical to
+//!   both pure policies and >= 1.2x faster than the better one — the
+//!   water-filled halves co-execute across the farm's workers;
 //! * placement optimizer (the farm-level mode/placement layer): on a
 //!   hot-read skewed stream whose hot slab was evicted by churn, the
 //!   optimizer-on farm must move >= 20% fewer host bytes in than
 //!   optimizer-off, bit-exact either way.
 //!
-//! Every measurement lands in the `serving` and `placement` sections of
-//! the repo-root `BENCH_serving.json` (see
+//! Every measurement lands in the `serving`, `hybrid_split` and
+//! `placement` sections of the repo-root `BENCH_serving.json` (see
 //! `util::benchkit::write_bench_json`). Wall-clock acceptance asserts are
 //! skipped under `BENCH_SMOKE` (CI smoke runs trade measurement quality
 //! for speed); the bit-exactness and byte-traffic gates always run.
@@ -593,6 +597,60 @@ fn main() {
         );
     }
 
+    // ---- task-granular split: co-executing the PIM and host halves --------
+    // The split planner's payoff, end to end: one wide bf16 elementwise
+    // job spans a dozen block chunks, and neither pure policy can use the
+    // farm well — pure host runs the whole payload as a single
+    // single-threaded fast-path task, pure PIM pays the simulator for
+    // every chunk. `route=split` prices each chunk on both sides and
+    // water-fills, so the four workers chew both halves concurrently
+    // (host twins execute on worker threads). Bit-exact always;
+    // acceptance is >= 1.2x throughput over the better pure route.
+    let scoord = Coordinator::new(geom, 4);
+    scoord.prewarm_serving();
+    let sn = 4800; // ~a dozen bf16 chunks on G512x40
+    let sjobs: Vec<Job> = (0..2)
+        .map(|i| Job {
+            id: 0,
+            payload: JobPayload::Bf16Elementwise {
+                mul: i % 2 == 0,
+                a: (0..sn).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect(),
+                b: (0..sn).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect(),
+            },
+        })
+        .collect();
+    let run_split_mix = |route: Route| -> Vec<Vec<i64>> {
+        sjobs.iter().map(|j| scoord.run_routed(j.clone(), route).unwrap().values).collect()
+    };
+    let svals = run_split_mix(Route::Pim);
+    assert_eq!(svals, run_split_mix(Route::Host), "split bench: host route must be bit-exact");
+    assert_eq!(svals, run_split_mix(Route::Split), "split bench: split route must be bit-exact");
+    let m_spim = bench("hybrid_split bf16 ew x4800  route=pim", || {
+        black_box(run_split_mix(Route::Pim));
+    });
+    let m_shost = bench("hybrid_split bf16 ew x4800  route=host", || {
+        black_box(run_split_mix(Route::Host));
+    });
+    let m_ssplit = bench("hybrid_split bf16 ew x4800  route=split", || {
+        black_box(run_split_mix(Route::Split));
+    });
+    let best_pure = m_spim.mean.min(m_shost.mean);
+    println!(
+        "  -> hybrid split: {:.2} ms vs pure-pim {:.2} ms / pure-host {:.2} ms per \
+         pair ({:.2}x over the better pure route); metrics: {}",
+        m_ssplit.mean.as_secs_f64() * 1e3,
+        m_spim.mean.as_secs_f64() * 1e3,
+        m_shost.mean.as_secs_f64() * 1e3,
+        best_pure.as_secs_f64() / m_ssplit.mean.as_secs_f64(),
+        scoord.metrics_snapshot(),
+    );
+    assert!(
+        smoke || m_ssplit.mean.as_secs_f64() * 1.2 <= best_pure.as_secs_f64(),
+        "acceptance: co-executing the split halves must beat the better pure \
+         route by >= 1.2x (split {:?} vs floor {best_pure:?})",
+        m_ssplit.mean
+    );
+
     // ---- placement optimizer: hot-read skewed stream, on vs off -----------
     // The farm optimizer's payoff, end to end: a serving stream whose
     // reads skew 8:1 toward one tensor that storage churn evicted. With
@@ -681,8 +739,8 @@ fn main() {
         on_coord.metrics_snapshot(),
     );
 
-    // persist the run into the repo-root perf trajectory (the `serving`
-    // and `placement` sections of BENCH_serving.json)
+    // persist the run into the repo-root perf trajectory (the `serving`,
+    // `hybrid_split` and `placement` sections of BENCH_serving.json)
     write_bench_json(
         "serving",
         &[
@@ -690,5 +748,6 @@ fn main() {
             m_fused, m_i8, m_bf, m_bmlp, m_hpim, m_hhost, m_hauto,
         ],
     );
+    write_bench_json("hybrid_split", &[m_spim, m_shost, m_ssplit]);
     write_bench_json("placement", &[m_popt_off, m_popt_on]);
 }

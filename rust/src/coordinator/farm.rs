@@ -43,7 +43,7 @@ use crate::util::SoftBf16;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::borrow::Cow;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -216,6 +216,14 @@ struct TaskEnvelope {
     /// Data-affinity pin: a pinned task references resident tensors and
     /// must not be stolen off its home worker.
     pinned: bool,
+    /// The bit-exact other-side representation of a split plan's task
+    /// (see `mapper::RoutedPlan::twins`): a PIM task's host fast-path
+    /// form, or a host task's PIM form. Attached only when the cost model
+    /// priced the twin's side strictly cheaper in isolation; a *steal*
+    /// executes the twin instead — the planned pool ran dry first, so the
+    /// task rebalances across the PIM/host boundary at the last moment.
+    /// Twins never attach to pinned tasks.
+    twin: Option<Box<BlockTask>>,
 }
 
 struct EngineState {
@@ -244,6 +252,9 @@ struct EngineShared {
     idle_cv: Condvar,
     shutdown: AtomicBool,
     capacity: usize,
+    /// Cross-boundary conversions: stolen envelopes whose twin ran in
+    /// place of the planned representation (split-plan late rebalance).
+    split_rebalances: AtomicU64,
 }
 
 /// A pool of blocks behind persistent worker threads, each permanently
@@ -305,6 +316,7 @@ impl BlockFarm {
             idle_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             capacity: QUEUE_DEPTH_PER_WORKER * n_blocks,
+            split_rebalances: AtomicU64::new(0),
         });
         let workers = (0..n_blocks)
             .map(|i| {
@@ -818,6 +830,13 @@ impl BlockFarm {
         moves.iter().filter(|mv| self.apply_move(mv).is_ok()).count()
     }
 
+    /// Cross-boundary task conversions performed by steal-time rebalance
+    /// (split plans only; see [`submit_planned`](Self::submit_planned)).
+    /// Monotonic over the farm's lifetime.
+    pub fn split_rebalances(&self) -> u64 {
+        self.shared.split_rebalances.load(Ordering::Relaxed)
+    }
+
     /// Per-worker queue depths right now (the optimizer's load signal).
     pub fn queue_depths(&self) -> Vec<usize> {
         let st = self.shared.state.lock().unwrap();
@@ -846,7 +865,25 @@ impl BlockFarm {
     /// kernel; load breaks every tie. Blocks when the farm already has its
     /// full backpressure quota of tasks queued.
     pub fn submit(&self, tasks: Vec<BlockTask>) -> BatchHandle {
+        self.submit_planned(tasks, Vec::new())
+    }
+
+    /// [`submit`](Self::submit) for a split plan: `twins[i]`, when
+    /// present, is the bit-exact other-side representation of `tasks[i]`
+    /// and rides in the envelope. Workers execute the twin instead of the
+    /// planned form when they obtain the envelope by *stealing* — the
+    /// stealing worker's pool ran dry first, so the task converts toward
+    /// its cheaper side (counted by
+    /// [`split_rebalances`](Self::split_rebalances)). `twins` is either
+    /// empty (no rebalance candidates) or `tasks.len()` long; twins on
+    /// pinned tasks are dropped, since pinned tasks cannot be stolen.
+    pub fn submit_planned(
+        &self,
+        tasks: Vec<BlockTask>,
+        mut twins: Vec<Option<BlockTask>>,
+    ) -> BatchHandle {
         let n = tasks.len();
+        debug_assert!(twins.is_empty() || twins.len() == n);
         let now = Instant::now();
         let batch = Arc::new(BatchState {
             progress: Mutex::new(BatchProgress {
@@ -881,11 +918,13 @@ impl BlockFarm {
                 // load alone decides, and they stay unpinned and stealable
                 (_, None) => (least_loaded(&depths), false),
             };
+            let twin = twins.get_mut(task_index).and_then(Option::take);
             st.queues[w].push_back(TaskEnvelope {
                 task,
                 task_index,
                 batch: batch.clone(),
                 pinned,
+                twin: if pinned { None } else { twin.map(Box::new) },
             });
             if !pinned {
                 st.unpinned[w] += 1;
@@ -1528,7 +1567,7 @@ fn worker_loop(
                     st.queued -= 1;
                     st.active += 1;
                     shared.space_cv.notify_all();
-                    break Some(env);
+                    break Some((env, src));
                 }
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break None;
@@ -1536,7 +1575,18 @@ fn worker_loop(
                 st = shared.work_cv.wait(st).unwrap();
             }
         };
-        let Some(env) = env else { return };
+        let Some((mut env, src)) = env else { return };
+        if src != index {
+            // a steal means this worker's own pool ran dry before the
+            // victim's drained: if the envelope carries a cross-boundary
+            // twin, execute that instead — the task was balanced away
+            // from its cheaper side at plan time, and the drained pool
+            // can now take it back (split-plan late-binding rebalance)
+            if let Some(twin) = env.twin.take() {
+                env.task = *twin;
+                shared.split_rebalances.fetch_add(1, Ordering::Relaxed);
+            }
+        }
 
         let start = Instant::now();
         {
@@ -1674,6 +1724,45 @@ mod tests {
         }
         assert!(farm.kernel_cache().is_empty(), "no kernel compiled for host tasks");
         assert_eq!(farm.program_loads(), 0, "no program touched a block");
+    }
+
+    #[test]
+    fn split_twins_are_bit_exact_under_stealing_and_inert_without_it() {
+        use crate::exec::{HostEwOp, HostOp};
+        let host_twin = |a: Vec<i64>, b: Vec<i64>| {
+            Some(BlockTask::Host(HostOp::IntElementwise { op: HostEwOp::Add, w: 8, a, b }))
+        };
+        // every PIM task carries its genuine host twin: whichever
+        // representation a steal picks, the values must be identical
+        let farm = BlockFarm::new(Geometry::G512x40, 3);
+        let n = 24;
+        let tasks: Vec<BlockTask> = (0..n)
+            .map(|i| ew_task(EwOp::Add, 8, vec![i as i64; 10], vec![1; 10]))
+            .collect();
+        let twins: Vec<Option<BlockTask>> =
+            (0..n).map(|i| host_twin(vec![i as i64; 10], vec![1; 10])).collect();
+        let (out, _) = farm.submit_planned(tasks, twins).wait().unwrap();
+        assert_eq!(out.len(), n);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.task_index, i);
+            assert!(o.values.iter().all(|&v| v == i as i64 + 1), "task {i}");
+        }
+        assert!(farm.split_rebalances() <= n as u64);
+
+        // a single-worker farm can never steal, so twins must be inert:
+        // plant twins that would produce *different* values and check the
+        // planned representation is the one that ran
+        let solo = BlockFarm::new(Geometry::G512x40, 1);
+        let tasks: Vec<BlockTask> = (0..4)
+            .map(|i| ew_task(EwOp::Add, 8, vec![i as i64; 5], vec![2; 5]))
+            .collect();
+        let twins: Vec<Option<BlockTask>> =
+            (0..4).map(|_| host_twin(vec![90; 5], vec![9; 5])).collect();
+        let (out, _) = solo.submit_planned(tasks, twins).wait().unwrap();
+        for (i, o) in out.iter().enumerate() {
+            assert!(o.values.iter().all(|&v| v == i as i64 + 2), "twin must not run");
+        }
+        assert_eq!(solo.split_rebalances(), 0, "no steals on a single worker");
     }
 
     #[test]

@@ -272,10 +272,20 @@ pub struct JobResult {
     /// `true` when the job ran on the host fast path (a routed
     /// [`JobPayload::Host`] execution) instead of block tasks.
     pub host_routed: bool,
+    /// `true` when the split planner co-executed the job across both
+    /// pools: its waves interleaved PIM tasks and host fast-path tasks
+    /// in one batch, with steal-time rebalance free to convert tasks
+    /// across the boundary.
+    pub split_routed: bool,
     /// The router's analytic prediction of `stats.cycles` for the PIM
     /// plan, when one was made (`auto`-routed jobs that stayed on PIM
-    /// carry it; the differential tests pin predicted == actual exactly).
+    /// carry it; the differential tests pin predicted == actual exactly —
+    /// except split jobs, whose PIM-pool prediction may legally diverge
+    /// after rebalance).
     pub predicted_cycles: Option<u64>,
+    /// The split planner's predicted makespan in ns — `max` of the two
+    /// pools' predicted totals. `None` for pure routes.
+    pub predicted_makespan_ns: Option<f64>,
 }
 
 #[cfg(test)]

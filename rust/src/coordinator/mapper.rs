@@ -668,42 +668,157 @@ pub fn payload_io_bytes(payload: &JobPayload, result_len: usize) -> u64 {
 pub fn predicted_plan_cycles(plan: &Plan, cache: &KernelCache) -> Option<u64> {
     let mut total: u64 = 0;
     for task in &plan.tasks {
-        let per_key = |key: KernelKey| kernel_cycles(&cache.get(key));
-        total += match task {
-            BlockTask::Host(_) => 0,
-            BlockTask::IntElementwise { key, .. }
-            | BlockTask::IntDot { key, .. }
-            | BlockTask::Bf16Elementwise { key, .. }
-            | BlockTask::MatmulResident { key, .. } => per_key(*key)?,
-            BlockTask::Bf16Dot { key, a, .. } => a.len() as u64 * per_key(*key)?,
-            BlockTask::Bf16MatmulResident { key, x, .. } => {
-                x.first().map_or(0, Vec::len) as u64 * per_key(*key)?
-            }
-            BlockTask::MatmulFused { segs, .. } => {
-                let mut t = 0u64;
-                for seg in segs {
-                    t += per_key(seg.key)?;
-                }
-                t
-            }
-        };
+        total += predicted_task_cycles(task, cache)?;
     }
     Some(total)
 }
 
+/// Analytic cycles for **one** planned task — the per-task unit
+/// [`predicted_plan_cycles`] sums, and the PIM-side price the split
+/// planner water-fills over. Host tasks run no block program (0); `None`
+/// when the task's kernel has a phase the trace compiler refused.
+pub fn predicted_task_cycles(task: &BlockTask, cache: &KernelCache) -> Option<u64> {
+    let per_key = |key: KernelKey| kernel_cycles(&cache.get(key));
+    match task {
+        BlockTask::Host(_) => Some(0),
+        BlockTask::IntElementwise { key, .. }
+        | BlockTask::IntDot { key, .. }
+        | BlockTask::Bf16Elementwise { key, .. }
+        | BlockTask::MatmulResident { key, .. } => per_key(*key),
+        BlockTask::Bf16Dot { key, a, .. } => Some(a.len() as u64 * per_key(*key)?),
+        BlockTask::Bf16MatmulResident { key, x, .. } => {
+            Some(x.first().map_or(0, Vec::len) as u64 * per_key(*key)?)
+        }
+        BlockTask::MatmulFused { segs, .. } => {
+            let mut t = 0u64;
+            for seg in segs {
+                t += per_key(seg.key)?;
+            }
+            Some(t)
+        }
+    }
+}
+
+/// The bit-exact host fast-path twin of one planned block task, when the
+/// task is movable across the PIM/host boundary. Movable means: no
+/// resident operands (the PR 7 pinning rule, applied per task instead of
+/// per job) and an op class whose host kernel reproduces the block result
+/// exactly — int elementwise chunks (masked / sign-extended at the
+/// kernel's result width), split-K int dot partials (mod-2³² accumulation
+/// is associative, so host and block partials mix freely under
+/// [`ReduceStep::Accumulate`]), bf16 elementwise chunks, and whole-K bf16
+/// dot tiles (the sequential MAC recurrence never splits, so relocating a
+/// whole tile preserves its order). Tasks touching resident tensors,
+/// fused epilogues and host tasks return `None`.
+pub fn task_host_twin(task: &BlockTask) -> Option<HostOp> {
+    match task {
+        BlockTask::IntElementwise {
+            key,
+            a: Operand::Inline(a),
+            b: Operand::Inline(b),
+        } => {
+            let w = key.dtype.int_width()?;
+            let op = match key.op {
+                KernelOp::IntAdd => HostEwOp::Add,
+                KernelOp::IntSub => HostEwOp::Sub,
+                KernelOp::IntMul => HostEwOp::Mul,
+                _ => return None,
+            };
+            Some(HostOp::IntElementwise { op, w, a: a.clone(), b: b.clone() })
+        }
+        BlockTask::IntDot { key, a, b, .. } => {
+            let w = key.dtype.int_width()?;
+            Some(HostOp::IntDot { w, a: a.clone(), b: b.clone() })
+        }
+        BlockTask::Bf16Elementwise { key, a, b } => Some(HostOp::Bf16Elementwise {
+            mul: key.op == KernelOp::Bf16Mul,
+            a: a.clone(),
+            b: b.clone(),
+        }),
+        BlockTask::Bf16Dot { a, b, .. } => {
+            Some(HostOp::Bf16Dot { a: a.clone(), b: b.clone() })
+        }
+        _ => None,
+    }
+}
+
+/// Packed bytes one task's PIM execution moves across the host boundary —
+/// the per-task analogue of [`payload_io_bytes`]: inline operands in, the
+/// readback out. Resident slices and sunk tiles ship nothing.
+fn task_io_bytes(task: &BlockTask) -> u64 {
+    let inline_bytes = |dt: Dtype, o: &Operand| match o {
+        Operand::Inline(v) => dt.slice_bytes(v.len()),
+        Operand::Resident(_) => 0,
+    };
+    match task {
+        BlockTask::Host(_) => 0,
+        BlockTask::IntElementwise { key, a, b } => {
+            let w = key.dtype.int_width().unwrap_or(8);
+            let out_w = if key.op == KernelOp::IntMul { 2 * w } else { w };
+            inline_bytes(key.dtype, a)
+                + inline_bytes(key.dtype, b)
+                + Dtype::Int { w: out_w }.slice_bytes(a.len())
+        }
+        BlockTask::IntDot { key, a, .. } => {
+            let n = a.first().map_or(0, Vec::len);
+            2 * key.dtype.slice_bytes(a.len() * n) + 4 * n as u64
+        }
+        BlockTask::Bf16Elementwise { a, .. } => 3 * Dtype::Bf16.slice_bytes(a.len()),
+        BlockTask::Bf16Dot { a, .. } => {
+            let n = a.first().map_or(0, Vec::len);
+            2 * Dtype::Bf16.slice_bytes(a.len() * n) + Dtype::Bf16.slice_bytes(n)
+        }
+        BlockTask::MatmulResident { key, x, k0, k1, c0, c1, n, .. } => {
+            let rows = (c1 - 1) / n + 1 - c0 / n;
+            let x_in = match x {
+                TaskX::Inline(_) => key.dtype.slice_bytes(rows * (k1 - k0)),
+                TaskX::Resident { .. } => 0,
+            };
+            x_in + 4 * (c1 - c0) as u64
+        }
+        BlockTask::Bf16MatmulResident { x, c0, c1, .. } => {
+            let elems: usize = x.iter().map(Vec::len).sum();
+            Dtype::Bf16.slice_bytes(elems) + Dtype::Bf16.slice_bytes(c1 - c0)
+        }
+        BlockTask::MatmulFused { segs, x, c0, c1, n, sink, .. } => {
+            let rows = (c1 - 1) / n + 1 - c0 / n;
+            let k: usize = segs.iter().map(|s| s.k1 - s.k0).sum();
+            let dt = segs.first().map_or(Dtype::INT8, |s| s.key.dtype);
+            let x_in = match x {
+                TaskX::Inline(_) => dt.slice_bytes(rows * k),
+                TaskX::Resident { .. } => 0,
+            };
+            x_in + if sink.is_some() { 0 } else { 4 * (c1 - c0) as u64 }
+        }
+    }
+}
+
 /// What the router decided for one job, alongside the plan it produced.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RouteDecision {
-    /// The side the job will execute on (`Pim` or `Host`, never `Auto`).
+    /// The side the job will execute on (`Pim`, `Host` or `Split` — never
+    /// `Auto`).
     pub taken: Route,
     /// The analytic PIM cycle prediction, when one was made (`auto` with
-    /// traceable kernels). Compared against the executed cycles by
-    /// [`crate::coordinator::Metrics`] for the predicted-vs-actual gauge.
+    /// traceable kernels; for splits, the PIM pool's cycles). Compared
+    /// against the executed cycles by [`crate::coordinator::Metrics`] for
+    /// the predicted-vs-actual gauge (split jobs are excluded there —
+    /// late-binding rebalance moves work after the prediction).
     pub predicted_cycles: Option<u64>,
-    /// Predicted PIM wall-clock (ns), when `auto` priced both sides.
+    /// Predicted PIM wall-clock (ns). For `auto`, the whole-job PIM
+    /// price; for splits, the PIM pool's total.
     pub predicted_pim_ns: Option<f64>,
-    /// Predicted host wall-clock (ns), when `auto` priced both sides.
+    /// Predicted host wall-clock (ns). For `auto`, the whole-job host
+    /// price; for splits, the host pool's total.
     pub predicted_host_ns: Option<f64>,
+    /// Predicted makespan of a split plan:
+    /// `max(predicted_pim_ns, predicted_host_ns)` over the two pools.
+    /// `None` for pure routes.
+    pub predicted_makespan_ns: Option<f64>,
+    /// Per-task side assignment of a split plan (`assignment[i]` is the
+    /// pool task `i` was placed in, `Pim` or `Host`). `None` for pure
+    /// routes.
+    pub assignment: Option<Vec<Route>>,
 }
 
 impl RouteDecision {
@@ -714,68 +829,260 @@ impl RouteDecision {
             predicted_cycles: None,
             predicted_pim_ns: None,
             predicted_host_ns: None,
+            predicted_makespan_ns: None,
+            assignment: None,
         }
     }
+}
+
+/// A routed plan bundled with its decision record and, for split plans,
+/// the per-task cross-pool twins that back late-binding rebalance.
+#[derive(Clone, Debug)]
+pub struct RoutedPlan {
+    pub plan: Plan,
+    pub decision: RouteDecision,
+    /// Cross-pool twins (split plans only; empty otherwise — when
+    /// non-empty, `twins.len() == plan.tasks.len()`). `twins[i]` is the
+    /// bit-exact other-side representation of task `i`, attached when the
+    /// model priced that side strictly cheaper in isolation (the task was
+    /// balanced away from its best side to level the pools). The farm
+    /// executes the twin when the task is *stolen* — a steal means the
+    /// planned pool ran dry first, so the task converts back toward its
+    /// cheaper side (see `BlockFarm::split_rebalances`).
+    pub twins: Vec<Option<BlockTask>>,
+}
+
+impl RoutedPlan {
+    /// The fallback outcome: execute the plan on PIM, nothing predicted.
+    pub fn pim(plan: Plan) -> RoutedPlan {
+        RoutedPlan { plan, decision: RouteDecision::pim(), twins: Vec::new() }
+    }
+}
+
+/// The makespan-minimizing split planner. Prices every task of the PIM
+/// plan on both sides — PIM as dispatch + analytic kernel cycles +
+/// per-task boundary bytes, host as the twin's [`HostWork`](crate::exec::HostWork) — then
+/// water-fills: immovable tasks seed their pool (resident-pinned tasks
+/// stay PIM, host-only tasks stay host), movable tasks are taken in
+/// descending order of their cheaper-side cost and each goes to the pool
+/// that minimizes the resulting `max(pim_total, host_total)`, host only
+/// on strict improvement (ties stay PIM).
+///
+/// Host-assigned movables are materialized as [`BlockTask::Host`] twins
+/// under the *same* [`ReduceStep`] — bit-exactness is the twin's contract
+/// (see [`task_host_twin`]). A task balanced away from its strictly
+/// cheaper side carries that side's representation as its envelope twin
+/// for steal-time conversion. Returns `None` when any PIM task is
+/// untraceable (no analytic price — the caller falls back to pure PIM).
+fn plan_split(
+    pim_plan: &Plan,
+    cache: &KernelCache,
+    model: &HostCostModel,
+) -> Option<(Plan, Vec<Option<BlockTask>>, RouteDecision)> {
+    let n = pim_plan.tasks.len();
+    let mut pim_cost = vec![0f64; n];
+    let mut host_cost = vec![0f64; n];
+    let mut task_cycles = vec![0u64; n];
+    let mut twin_op: Vec<Option<(HostOp, f64)>> = Vec::with_capacity(n);
+    let mut side: Vec<Route> = Vec::with_capacity(n);
+    let (mut pim_total, mut host_total) = (0f64, 0f64);
+    let mut movable: Vec<usize> = Vec::new();
+    for (i, task) in pim_plan.tasks.iter().enumerate() {
+        if let BlockTask::Host(op) = task {
+            // host-only payload task: seeds the host pool
+            host_cost[i] = model.host_ns(op.work());
+            host_total += host_cost[i];
+            twin_op.push(None);
+            side.push(Route::Host);
+            continue;
+        }
+        let cycles = predicted_task_cycles(task, cache)?;
+        task_cycles[i] = cycles;
+        pim_cost[i] = model.pim_ns(1, cycles, task_io_bytes(task));
+        match task_host_twin(task) {
+            Some(op) => {
+                host_cost[i] = model.host_ns(op.work());
+                twin_op.push(Some((op, host_cost[i])));
+                movable.push(i);
+                side.push(Route::Pim); // provisional; water-fill decides
+            }
+            None => {
+                // pinned to resident data (or fused): seeds the PIM pool
+                pim_total += pim_cost[i];
+                twin_op.push(None);
+                side.push(Route::Pim);
+            }
+        }
+    }
+    // Water-fill, biggest tasks first so small tasks level the remainder.
+    movable.sort_by(|&x, &y| {
+        let sx = pim_cost[x].min(host_cost[x]);
+        let sy = pim_cost[y].min(host_cost[y]);
+        sy.total_cmp(&sx)
+    });
+    for &i in &movable {
+        let if_pim = (pim_total + pim_cost[i]).max(host_total);
+        let if_host = pim_total.max(host_total + host_cost[i]);
+        if if_host < if_pim {
+            side[i] = Route::Host;
+            host_total += host_cost[i];
+        } else {
+            pim_total += pim_cost[i];
+        }
+    }
+    // Materialize the interleaved plan + twins.
+    let mut tasks = Vec::with_capacity(n);
+    let mut twins: Vec<Option<BlockTask>> = Vec::with_capacity(n);
+    let (mut n_pim, mut n_host) = (0usize, 0usize);
+    let mut pim_cycles = 0u64;
+    for (i, task) in pim_plan.tasks.iter().enumerate() {
+        match (side[i], twin_op[i].take()) {
+            (Route::Host, Some((op, host_ns))) => {
+                // movable assigned host: runs as its twin; the PIM form
+                // rides along only when PIM was its cheaper side in
+                // isolation (balance compromise — a steal converts back)
+                n_host += 1;
+                twins.push((pim_cost[i] < host_ns).then(|| task.clone()));
+                tasks.push(BlockTask::Host(op));
+            }
+            (Route::Host, None) => {
+                // a host-only task of the original payload
+                n_host += 1;
+                twins.push(None);
+                tasks.push(task.clone());
+            }
+            (_, twin) => {
+                n_pim += 1;
+                pim_cycles += task_cycles[i];
+                twins.push(
+                    twin.filter(|(_, host_ns)| *host_ns < pim_cost[i])
+                        .map(|(op, _)| BlockTask::Host(op)),
+                );
+                tasks.push(task.clone());
+            }
+        }
+    }
+    let taken = match (n_pim > 0, n_host > 0) {
+        (true, true) => Route::Split,
+        (false, true) => Route::Host,
+        _ => Route::Pim,
+    };
+    if taken != Route::Split {
+        // degenerate: one pool ended empty, so this is a pure route and
+        // no cross-pool conversion can help — drop the twins
+        twins.clear();
+    }
+    let assignment = side;
+    let plan = Plan {
+        tasks,
+        result_len: pim_plan.result_len,
+        steps: pim_plan.steps.clone(),
+    };
+    let decision = RouteDecision {
+        taken,
+        predicted_cycles: Some(pim_cycles),
+        predicted_pim_ns: Some(pim_total),
+        predicted_host_ns: Some(host_total),
+        predicted_makespan_ns: Some(pim_total.max(host_total)),
+        assignment: Some(assignment),
+    };
+    Some((plan, twins, decision))
 }
 
 /// Decompose a job under a routing policy.
 ///
 /// The PIM plan is always built first — it validates shapes and tensor
-/// references for every route, and `auto` needs it to predict cycles. The
+/// references for every route, and `auto`/`split` price its tasks. The
 /// decision tree:
 ///
 /// * `pim` — the PIM plan, no prediction (identical to [`plan`]).
 /// * `host` — a host fast-path plan when the payload is host-eligible
 ///   (all-inline operands); otherwise fall back to PIM.
-/// * `auto` — price both sides with the calibrated `model`: PIM as
-///   dispatch + analytic cycles + host-boundary bytes, host as the op's
-///   [`HostWork`]. Take the host only when it is strictly cheaper; stay
-///   on PIM when the prediction is unavailable (untraceable kernel).
+/// * `split` — force the task-granular split planner ([`plan_split`]);
+///   fall back to PIM when any task is untraceable. May degenerate to a
+///   pure route when the water-fill empties one pool.
+/// * `auto` — price the whole job on both sides with the calibrated
+///   `model` (PIM as dispatch + analytic cycles + host-boundary bytes,
+///   host as the op's [`HostWork`](crate::exec::HostWork)), then run the
+///   split planner: a genuine split is taken only when its predicted
+///   makespan strictly beats *both* pure prices. Otherwise take the host
+///   only when it is strictly cheaper; stay on PIM when the prediction
+///   is unavailable (untraceable kernel).
 pub fn plan_routed(
     env: &PlanEnv,
     payload: &JobPayload,
     route: Route,
     cache: &KernelCache,
     model: &HostCostModel,
-) -> Result<(Plan, RouteDecision)> {
+) -> Result<RoutedPlan> {
     let pim_plan = plan(env, payload)?;
-    if route == Route::Pim {
-        return Ok((pim_plan, RouteDecision::pim()));
-    }
-    let Some(op) = payload_host_op(payload) else {
-        return Ok((pim_plan, RouteDecision::pim()));
-    };
     match route {
+        Route::Pim => Ok(RoutedPlan::pim(pim_plan)),
         Route::Host => {
+            let Some(op) = payload_host_op(payload) else {
+                return Ok(RoutedPlan::pim(pim_plan));
+            };
             let decision = RouteDecision {
                 taken: Route::Host,
                 predicted_cycles: None,
                 predicted_pim_ns: None,
                 predicted_host_ns: None,
+                predicted_makespan_ns: None,
+                assignment: None,
             };
-            Ok((host_plan(op), decision))
+            Ok(RoutedPlan { plan: host_plan(op), decision, twins: Vec::new() })
         }
+        Route::Split => match plan_split(&pim_plan, cache, model) {
+            Some((plan, twins, decision)) => Ok(RoutedPlan { plan, decision, twins }),
+            None => Ok(RoutedPlan::pim(pim_plan)),
+        },
         Route::Auto => {
             let Some(cycles) = predicted_plan_cycles(&pim_plan, cache) else {
-                return Ok((pim_plan, RouteDecision::pim()));
+                return Ok(RoutedPlan::pim(pim_plan));
             };
             let io_bytes = payload_io_bytes(payload, pim_plan.result_len);
             let pim_ns = model.pim_ns(pim_plan.tasks.len(), cycles, io_bytes);
-            let host_ns = model.host_ns(op.work());
+            let host_op = payload_host_op(payload);
+            let host_ns = host_op.as_ref().map(|op| model.host_ns(op.work()));
+            // A genuine split must strictly beat both pure policies.
+            let split = plan_split(&pim_plan, cache, model).filter(|(_, _, d)| {
+                let mk = d.predicted_makespan_ns.unwrap_or(f64::INFINITY);
+                d.taken == Route::Split
+                    && mk < pim_ns
+                    && host_ns.map_or(true, |h| mk < h)
+            });
+            if let Some((plan, twins, decision)) = split {
+                return Ok(RoutedPlan { plan, decision, twins });
+            }
+            let Some(host_ns) = host_ns else {
+                // no whole-payload host twin (tensor references): stay on
+                // PIM but keep the cycle prediction for the gauges
+                let decision = RouteDecision {
+                    taken: Route::Pim,
+                    predicted_cycles: Some(cycles),
+                    predicted_pim_ns: Some(pim_ns),
+                    predicted_host_ns: None,
+                    predicted_makespan_ns: None,
+                    assignment: None,
+                };
+                return Ok(RoutedPlan { plan: pim_plan, decision, twins: Vec::new() });
+            };
             let taken = if host_ns < pim_ns { Route::Host } else { Route::Pim };
             let decision = RouteDecision {
                 taken,
                 predicted_cycles: Some(cycles),
                 predicted_pim_ns: Some(pim_ns),
                 predicted_host_ns: Some(host_ns),
+                predicted_makespan_ns: None,
+                assignment: None,
             };
-            if taken == Route::Host {
-                Ok((host_plan(op), decision))
+            let plan = if taken == Route::Host {
+                host_plan(host_op.expect("host price implies host op"))
             } else {
-                Ok((pim_plan, decision))
-            }
+                pim_plan
+            };
+            Ok(RoutedPlan { plan, decision, twins: Vec::new() })
         }
-        Route::Pim => unreachable!("handled above"),
     }
 }
 
@@ -1795,8 +2102,10 @@ mod tests {
             a: vec![1; 100],
             b: vec![2; 100],
         };
-        let (p, d) = plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
+        let RoutedPlan { plan: p, decision: d, twins } =
+            plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
         assert_eq!(d.taken, Route::Host);
+        assert!(twins.is_empty(), "pure routes carry no twins");
         assert_eq!(p.tasks.len(), 1);
         assert_eq!(p.result_len, 100);
         assert_eq!(p.steps, vec![ReduceStep::Scatter { offset: 0 }]);
@@ -1817,7 +2126,8 @@ mod tests {
             a: vec![1; 100],
             b: vec![2; 100],
         };
-        let (p, d) = plan_routed(&env, &payload, Route::Pim, &cache, &model).unwrap();
+        let RoutedPlan { plan: p, decision: d, .. } =
+            plan_routed(&env, &payload, Route::Pim, &cache, &model).unwrap();
         assert_eq!(d.taken, Route::Pim);
         assert_eq!(d.predicted_cycles, None);
         assert!(matches!(p.tasks[0], BlockTask::IntElementwise { .. }));
@@ -1842,7 +2152,8 @@ mod tests {
             a: OperandRef::Tensor(h),
             b: OperandRef::Values(vec![0; 50]),
         };
-        let (p, d) = plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
+        let RoutedPlan { plan: p, decision: d, .. } =
+            plan_routed(&env, &payload, Route::Host, &cache, &model).unwrap();
         assert_eq!(d.taken, Route::Pim, "resident operands stay on the fabric");
         assert!(matches!(p.tasks[0], BlockTask::IntElementwise { .. }));
         assert!(payload_host_op(&payload).is_none());
@@ -1862,7 +2173,8 @@ mod tests {
             a: vec![1; 100],
             b: vec![2; 100],
         };
-        let (p, d) = plan_routed(&env, &payload, Route::Auto, &cache, &model).unwrap();
+        let RoutedPlan { plan: p, decision: d, .. } =
+            plan_routed(&env, &payload, Route::Auto, &cache, &model).unwrap();
         assert_eq!(d.taken, Route::Host);
         assert!(matches!(p.tasks[0], BlockTask::Host(_)));
         let cycles = d.predicted_cycles.expect("auto predicts cycles");
@@ -1871,6 +2183,70 @@ mod tests {
         // the prediction matches the PIM plan's analytic count
         let pim = plan(&env, &payload).unwrap();
         assert_eq!(predicted_plan_cycles(&pim, &cache), Some(cycles));
+    }
+
+    #[test]
+    fn split_route_fills_both_pools_and_degenerates_for_pinned_payloads() {
+        let env = PlanEnv::bare(Geometry::G512x40);
+        let cache = KernelCache::new();
+        // flat per-task PIM price (dispatch only) against a host price in
+        // the same range: the water-fill must land tasks in both pools
+        let model = HostCostModel {
+            ns_per_int_mac: 4.0,
+            sim_ns_per_cycle: 0.0,
+            ns_per_io_byte: 0.0,
+            pim_dispatch_ns: 1000.0,
+            ..HostCostModel::default()
+        };
+        let k = 8;
+        let n = 100;
+        let a = vec![vec![3i64; n]; k];
+        let payload = JobPayload::IntDot { w: 8, a: a.clone(), b: a };
+        let RoutedPlan { plan: p, decision: d, twins } =
+            plan_routed(&env, &payload, Route::Split, &cache, &model).unwrap();
+        assert_eq!(d.taken, Route::Split);
+        assert!(p.tasks.len() >= 2, "a {n}-column dot spans several tasks");
+        let assignment = d.assignment.as_ref().expect("split carries an assignment");
+        assert_eq!(assignment.len(), p.tasks.len());
+        assert_eq!(twins.len(), p.tasks.len());
+        for (task, side) in p.tasks.iter().zip(assignment) {
+            match side {
+                Route::Host => assert!(matches!(task, BlockTask::Host(_))),
+                Route::Pim => assert!(!matches!(task, BlockTask::Host(_))),
+                _ => panic!("assignment must be Pim or Host, got {side:?}"),
+            }
+        }
+        assert!(assignment.iter().any(|s| *s == Route::Pim));
+        assert!(assignment.iter().any(|s| *s == Route::Host));
+        // the decision records both pool totals and their makespan
+        let pim_ns = d.predicted_pim_ns.unwrap();
+        let host_ns = d.predicted_host_ns.unwrap();
+        assert_eq!(d.predicted_makespan_ns.unwrap(), pim_ns.max(host_ns));
+        // the reduce steps are untouched: twins are value-level identical
+        let pure = plan(&env, &payload).unwrap();
+        assert_eq!(p.steps, pure.steps);
+        assert_eq!(p.result_len, pure.result_len);
+
+        // a resident payload has no movable tasks: split degenerates to
+        // pure PIM (per-task pinning, the PR 7 rule at finer grain)
+        let placement = PlacementMap::new(2, Geometry::G512x40, 192);
+        let h = placement.register(Dtype::INT8, 50);
+        let renv = PlanEnv {
+            geom: Geometry::G512x40,
+            compute_rows: placement.compute_rows(),
+            placement: Some(&placement),
+        };
+        let pinned = JobPayload::IntElementwiseRef {
+            op: EwOp::Add,
+            w: 8,
+            a: OperandRef::Tensor(h),
+            b: OperandRef::Values(vec![0; 50]),
+        };
+        let RoutedPlan { plan: rp, decision: rd, twins: rtwins } =
+            plan_routed(&renv, &pinned, Route::Split, &cache, &model).unwrap();
+        assert_eq!(rd.taken, Route::Pim);
+        assert!(rtwins.is_empty(), "degenerate splits drop their twins");
+        assert!(rp.tasks.iter().all(|t| !matches!(t, BlockTask::Host(_))));
     }
 
     #[test]

@@ -28,10 +28,20 @@ pub struct JobSample {
     /// True when the router sent this job down the host fast path
     /// (no block was touched; `cycles` is 0 by construction).
     pub host_routed: bool,
+    /// True when the split planner co-scheduled this job across both
+    /// pools (PIM tasks and host fast-path tasks in one batch).
+    pub split_routed: bool,
     /// The analytic PIM cycle count the router predicted at plan time
     /// (`Some` only for `auto`-routed jobs). For jobs that then ran on the
     /// fabric this is compared against `cycles` to track model error.
+    /// Split jobs are excluded from that comparison: late-binding
+    /// rebalance legitimately moves work after the prediction, so their
+    /// accuracy is tracked by the makespan gauge instead.
     pub predicted_cycles: Option<u64>,
+    /// The split planner's predicted makespan (ns) for split jobs;
+    /// compared against the executed wall-clock for
+    /// `split_makespan_err_mean`.
+    pub predicted_makespan_ns: Option<f64>,
 }
 
 /// Per-dtype counters: jobs completed and packed host bytes moved, keyed
@@ -48,6 +58,9 @@ pub struct DtypeCounts {
     pub pim_jobs: u64,
     /// Jobs of this dtype served by the host fast path.
     pub host_jobs: u64,
+    /// Jobs of this dtype co-executed across both pools by the split
+    /// planner.
+    pub split_jobs: u64,
 }
 
 /// Running max/mean of one worker's queue depth, sampled at job submit.
@@ -127,11 +140,23 @@ pub struct Metrics {
     /// statically resolvable trace existed (gauge; same source). Nonzero
     /// values mean dispatch is paying full fetch/decode cost somewhere.
     pub interp_fallbacks: AtomicU64,
-    /// Jobs executed on the PIM fabric (the complement of `host_jobs`;
-    /// together they partition `jobs_completed`).
+    /// Jobs executed on the PIM fabric (with `host_jobs` and
+    /// `split_jobs`, a three-way partition of `jobs_completed`).
     pub pim_jobs: AtomicU64,
     /// Jobs served by the router's bit-exact host fast path.
     pub host_jobs: AtomicU64,
+    /// Jobs the split planner co-executed across both pools.
+    pub split_jobs: AtomicU64,
+    /// Steal-time cross-boundary task conversions (farm-wide gauge,
+    /// published via `Coordinator::metrics_snapshot`).
+    pub split_rebalances: AtomicU64,
+    /// Summed |predicted - executed| wall-clock ns over split jobs that
+    /// carried a makespan prediction (nonzero is expected — queueing and
+    /// rebalance are not in the analytic model; the gauge tracks how far
+    /// off the water-fill's pricing runs).
+    pub split_makespan_err_sum: AtomicU64,
+    /// Number of samples folded into `split_makespan_err_sum`.
+    pub split_makespan_samples: AtomicU64,
     /// Summed |predicted - actual| block cycles over fabric-executed jobs
     /// that carried an `auto`-route prediction. The analytic trace should
     /// keep this at exactly 0; any drift is a router-model bug.
@@ -164,12 +189,25 @@ impl Metrics {
             c.host_bytes_out += s.host_bytes_out;
             if s.host_routed {
                 c.host_jobs += 1;
+            } else if s.split_routed {
+                c.split_jobs += 1;
             } else {
                 c.pim_jobs += 1;
             }
         }
         if s.host_routed {
             self.host_jobs.fetch_add(1, Ordering::Relaxed);
+        } else if s.split_routed {
+            self.split_jobs.fetch_add(1, Ordering::Relaxed);
+            // split predictions are wall-clock makespans, not cycles:
+            // rebalance moves work after planning, so the cycle gauge
+            // would misreport model error. Track makespan error instead.
+            if let Some(p) = s.predicted_makespan_ns {
+                let actual_ns = s.exec_micros.saturating_mul(1000);
+                let err = (p - actual_ns as f64).abs() as u64;
+                self.split_makespan_err_sum.fetch_add(err, Ordering::Relaxed);
+                self.split_makespan_samples.fetch_add(1, Ordering::Relaxed);
+            }
         } else {
             self.pim_jobs.fetch_add(1, Ordering::Relaxed);
             // only fabric-executed jobs can check the prediction against
@@ -206,6 +244,12 @@ impl Metrics {
         self.superop_hits.store(superop_hits, Ordering::Relaxed);
         self.trace_hits.store(trace_hits, Ordering::Relaxed);
         self.interp_fallbacks.store(interp_fallbacks, Ordering::Relaxed);
+    }
+
+    /// Publish the farm's steal-time cross-boundary conversion count
+    /// (split-plan late rebalance; monotonic over the farm's lifetime).
+    pub fn set_split_rebalances(&self, rebalances: u64) {
+        self.split_rebalances.store(rebalances, Ordering::Relaxed);
     }
 
     /// Publish the placement layer's occupancy gauges: per-block
@@ -263,8 +307,9 @@ impl Metrics {
             .into_iter()
             .map(|(dt, c)| {
                 format!(
-                    "{dt}:jobs={},in={},out={},pim={},host={}",
-                    c.jobs, c.host_bytes_in, c.host_bytes_out, c.pim_jobs, c.host_jobs
+                    "{dt}:jobs={},in={},out={},pim={},host={},split={}",
+                    c.jobs, c.host_bytes_in, c.host_bytes_out, c.pim_jobs, c.host_jobs,
+                    c.split_jobs
                 )
             })
             .collect();
@@ -273,6 +318,12 @@ impl Metrics {
             0.0
         } else {
             self.route_cycle_err_sum.load(Ordering::Relaxed) as f64 / pred_samples as f64
+        };
+        let mk_samples = self.split_makespan_samples.load(Ordering::Relaxed);
+        let mk_err_mean = if mk_samples == 0 {
+            0.0
+        } else {
+            self.split_makespan_err_sum.load(Ordering::Relaxed) as f64 / mk_samples as f64
         };
         let storage: Vec<String> = self
             .block_storage_gauges()
@@ -286,6 +337,7 @@ impl Metrics {
              opt_rounds={} opt_moves={} opt_promotions={} opt_demotions={} \
              superop_hits={} trace_hits={} interp_fallbacks={} \
              pim_jobs={} host_jobs={} route_cycle_err_mean={err_mean:.1} \
+             split_jobs={} split_rebalances={} split_makespan_err_mean={mk_err_mean:.1} \
              qdepth_max=[{}] qdepth_mean=[{}] dtypes=[{}]",
             self.jobs_completed.load(Ordering::Relaxed),
             self.block_runs.load(Ordering::Relaxed),
@@ -311,6 +363,8 @@ impl Metrics {
             self.interp_fallbacks.load(Ordering::Relaxed),
             self.pim_jobs.load(Ordering::Relaxed),
             self.host_jobs.load(Ordering::Relaxed),
+            self.split_jobs.load(Ordering::Relaxed),
+            self.split_rebalances.load(Ordering::Relaxed),
             qmax.join(","),
             qmean.join(","),
             dtypes.join(","),
@@ -338,7 +392,9 @@ mod tests {
             host_bytes_out: 800,
             resident_hits: 3,
             host_routed: false,
+            split_routed: false,
             predicted_cycles: Some(500),
+            predicted_makespan_ns: None,
         });
         m.record_job(JobSample {
             ops: 50,
@@ -353,7 +409,9 @@ mod tests {
             host_bytes_out: 400,
             resident_hits: 0,
             host_routed: true,
+            split_routed: false,
             predicted_cycles: None,
+            predicted_makespan_ns: None,
         });
         assert_eq!(m.jobs_completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.block_runs.load(Ordering::Relaxed), 3);
@@ -400,6 +458,7 @@ mod tests {
                     host_bytes_out: 800,
                     pim_jobs: 1,
                     host_jobs: 0,
+                    split_jobs: 0,
                 }
             )
         );
@@ -413,6 +472,7 @@ mod tests {
                     host_bytes_out: 400,
                     pim_jobs: 0,
                     host_jobs: 1,
+                    split_jobs: 0,
                 }
             )
         );
@@ -448,6 +508,41 @@ mod tests {
         assert!(snap.contains("route_cycle_err_mean=7.0"), "{snap}");
         assert!(snap.contains("pim_jobs=2 host_jobs=1"), "{snap}");
         assert!(snap.contains("int8:jobs=2,in=0,out=0,pim=2,host=0"), "{snap}");
+    }
+
+    #[test]
+    fn split_jobs_partition_separately_and_track_makespan_error() {
+        let m = Metrics::new();
+        // a split job: excluded from the cycle-error gauge even though it
+        // carries a cycle prediction, folded into the makespan gauge
+        m.record_job(JobSample {
+            dtype: Some(Dtype::INT8),
+            cycles: 900,
+            exec_micros: 10, // 10_000 ns executed
+            split_routed: true,
+            predicted_cycles: Some(123),
+            predicted_makespan_ns: Some(12_500.0), // err 2_500 ns
+            ..JobSample::default()
+        });
+        m.record_job(JobSample {
+            dtype: Some(Dtype::INT8),
+            exec_micros: 4, // 4_000 ns executed
+            split_routed: true,
+            predicted_makespan_ns: Some(3_500.0), // err 500 ns
+            ..JobSample::default()
+        });
+        m.record_job(JobSample { dtype: Some(Dtype::INT8), ..JobSample::default() });
+        assert_eq!(m.split_jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pim_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.route_cycle_pred_samples.load(Ordering::Relaxed), 0);
+        assert_eq!(m.split_makespan_samples.load(Ordering::Relaxed), 2);
+        assert_eq!(m.split_makespan_err_sum.load(Ordering::Relaxed), 3_000);
+        m.set_split_rebalances(7);
+        let snap = m.snapshot();
+        assert!(snap.contains("split_jobs=2"), "{snap}");
+        assert!(snap.contains("split_rebalances=7"), "{snap}");
+        assert!(snap.contains("split_makespan_err_mean=1500.0"), "{snap}");
+        assert!(snap.contains("int8:jobs=3,in=0,out=0,pim=1,host=0,split=2"), "{snap}");
     }
 
     #[test]

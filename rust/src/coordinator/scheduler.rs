@@ -20,7 +20,7 @@
 
 use super::farm::{aggregate_waves, BatchHandle, BlockFarm};
 use super::job::{EwOp, Job, JobPayload, JobResult, OperandRef};
-use super::mapper::{self, PlanEnv, ReduceStep, RouteDecision};
+use super::mapper::{self, PlanEnv, ReduceStep};
 use super::metrics::{JobSample, Metrics};
 use crate::bitline::Geometry;
 use crate::cost::HostCostModel;
@@ -90,7 +90,15 @@ pub struct JobHandle {
     n_blocks: usize,
     metrics: Arc<Metrics>,
     host_routed: bool,
+    split_routed: bool,
     predicted_cycles: Option<u64>,
+    /// Predicted wall-clock fed back into the global [`HostCostModel`]
+    /// when the job completes: the host price of an auto host-routed job,
+    /// or a split plan's predicted makespan. `None` for PIM jobs (their
+    /// exec time is dominated by simulation, not host arithmetic) and
+    /// forced routes (nothing was predicted).
+    predicted_cost_ns: Option<f64>,
+    predicted_makespan_ns: Option<f64>,
 }
 
 impl JobHandle {
@@ -127,6 +135,16 @@ impl JobHandle {
                 ReduceStep::Sunk => {}
             }
         }
+        // close the feedback loop: observed (predicted, executed) pairs
+        // correct the global host cost model's rates (EWMA, clamped), so
+        // the auto/split decision point tracks the machine instead of the
+        // startup calibration
+        if let Some(predicted_ns) = self.predicted_cost_ns {
+            let exec_ns = timing.exec.as_nanos() as f64;
+            if exec_ns > 0.0 {
+                HostCostModel::observe_global(self.dtype, predicted_ns, exec_ns);
+            }
+        }
         let queue_depth_max = depths.iter().copied().max().unwrap_or(0);
         let queue_depth_mean = if depths.is_empty() {
             0.0
@@ -147,7 +165,9 @@ impl JobHandle {
             host_bytes_out,
             resident_hits,
             host_routed: self.host_routed,
+            split_routed: self.split_routed,
             predicted_cycles: self.predicted_cycles,
+            predicted_makespan_ns: self.predicted_makespan_ns,
         });
         Ok(JobResult {
             id: self.id,
@@ -163,7 +183,9 @@ impl JobHandle {
             queue_depth_max,
             queue_depth_mean,
             host_routed: self.host_routed,
+            split_routed: self.split_routed,
             predicted_cycles: self.predicted_cycles,
+            predicted_makespan_ns: self.predicted_makespan_ns,
         })
     }
 }
@@ -527,6 +549,7 @@ impl Coordinator {
             .map(|s| s.homes.len() as u64)
             .sum();
         self.metrics.set_placement_gauges(&per_block, replicas);
+        self.metrics.set_split_rebalances(self.farm.split_rebalances());
         self.metrics.snapshot()
     }
 
@@ -544,8 +567,15 @@ impl Coordinator {
     /// Like [`Coordinator::submit`], but under an execution-route policy:
     /// `Route::Pim` is the classic fabric path, `Route::Host` forces the
     /// bit-exact host fast path (falling back to PIM when the operands
-    /// live on-fabric), and `Route::Auto` lets the calibrated cost model
-    /// pick whichever side the analytic trace predicts is faster.
+    /// live on-fabric), `Route::Split` forces the task-granular split
+    /// planner, and `Route::Auto` lets the calibrated cost model pick —
+    /// pure PIM, pure host, or a split whose predicted makespan beats
+    /// both. A split job's waves interleave [`BlockTask::Host`] and PIM
+    /// tasks in one batch, so farm workers drain both pools concurrently
+    /// and steal-time rebalance converts tasks across the boundary (see
+    /// `BlockFarm::submit_planned`).
+    ///
+    /// [`BlockTask::Host`]: super::mapper::BlockTask::Host
     pub fn submit_routed(&self, job: Job, route: Route) -> JobHandle {
         self.maybe_optimize();
         // hold the plan gate (read side) from plan to enqueue so a
@@ -558,24 +588,34 @@ impl Coordinator {
         let planned = if route == Route::Pim {
             // the default path stays off the cost model entirely: no
             // calibration fit, no cache probes beyond the plan's own keys
-            mapper::plan(&self.plan_env(), &payload).map(|p| (p, RouteDecision::pim()))
+            mapper::plan(&self.plan_env(), &payload).map(mapper::RoutedPlan::pim)
         } else {
             mapper::plan_routed(
                 &self.plan_env(),
                 &payload,
                 route,
                 self.farm.kernel_cache(),
-                HostCostModel::calibrated(),
+                &HostCostModel::calibrated(),
             )
         };
         match planned {
-            Ok((plan, decision)) => {
+            Ok(mapper::RoutedPlan { plan, decision, twins }) => {
                 let mapper::Plan { tasks, result_len, steps } = plan;
                 // a tensor-tensor elementwise job's op count is not
                 // host-knowable before planning (payload reports 0); the
                 // plan's result length is the executed op count
                 let op_count = if op_count == 0 { result_len as u64 } else { op_count };
-                let batch = self.farm.submit(tasks);
+                let batch = self.farm.submit_planned(tasks, twins);
+                let split_routed = decision.taken == Route::Split;
+                // the feedback pair: what the model promised for the work
+                // it priced end to end (host fast path or split makespan)
+                let predicted_cost_ns = if split_routed {
+                    decision.predicted_makespan_ns
+                } else if decision.taken == Route::Host {
+                    decision.predicted_host_ns
+                } else {
+                    None
+                };
                 JobHandle {
                     id: job.id,
                     op_count,
@@ -586,7 +626,10 @@ impl Coordinator {
                     n_blocks: self.farm.len(),
                     metrics: self.metrics.clone(),
                     host_routed: decision.taken == Route::Host,
+                    split_routed,
                     predicted_cycles: decision.predicted_cycles,
+                    predicted_cost_ns,
+                    predicted_makespan_ns: decision.predicted_makespan_ns,
                 }
             }
             Err(e) => JobHandle {
@@ -599,7 +642,10 @@ impl Coordinator {
                 n_blocks: self.farm.len(),
                 metrics: self.metrics.clone(),
                 host_routed: false,
+                split_routed: false,
                 predicted_cycles: None,
+                predicted_cost_ns: None,
+                predicted_makespan_ns: None,
             },
         }
     }
@@ -951,13 +997,44 @@ mod tests {
             b: vec![4; 2000],
         };
         let r = c.run_routed(Job { id: 0, payload }, Route::Auto).unwrap();
-        if !r.host_routed {
+        if !r.host_routed && !r.split_routed {
             assert_eq!(
                 r.predicted_cycles,
                 Some(r.stats.cycles),
                 "auto-pim jobs carry an exact cycle prediction"
             );
         }
+    }
+
+    #[test]
+    fn split_route_is_bit_exact_and_reports_its_makespan() {
+        let c = coord();
+        let mut rng = Prng::new(0x5B17);
+        let k = 48;
+        let n = 90;
+        let a: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let b: Vec<Vec<i64>> =
+            (0..k).map(|_| (0..n).map(|_| rng.int(8)).collect()).collect();
+        let mk = || Job {
+            id: 0,
+            payload: JobPayload::IntDot { w: 8, a: a.clone(), b: b.clone() },
+        };
+        let pim = c.run_routed(mk(), Route::Pim).unwrap();
+        let split = c.run_routed(mk(), Route::Split).unwrap();
+        assert_eq!(pim.values, split.values, "split must be bit-exact vs pure PIM");
+        if split.split_routed {
+            let mk_ns = split.predicted_makespan_ns.expect("split predicts a makespan");
+            assert!(mk_ns > 0.0);
+            assert!(
+                split.block_runs >= 2,
+                "a split job interleaves tasks from both pools"
+            );
+        }
+        // the snapshot renders the split counters
+        let snap = c.metrics_snapshot();
+        assert!(snap.contains("split_jobs="), "{snap}");
+        assert!(snap.contains("split_rebalances="), "{snap}");
     }
 
     #[test]

@@ -34,10 +34,13 @@
 //!
 //! An optional `"route"` field steers execution placement per request:
 //! `"pim"` forces the fabric, `"host"` forces the bit-exact host fast
-//! path (requests whose operands live on-fabric still run there), and
-//! `"auto"` — the default when the field is absent — lets the calibrated
-//! cost model pick whichever side it predicts is faster. Responses are
-//! bit-identical whichever way a request is routed:
+//! path (requests whose operands live on-fabric still run there),
+//! `"split"` forces the task-granular split planner (the job's tasks are
+//! water-filled across the PIM farm and the host fast path to minimize
+//! predicted makespan), and `"auto"` — the default when the field is
+//! absent — lets the calibrated cost model pick: pure PIM, pure host, or
+//! a split that beats both. Responses are bit-identical whichever way a
+//! request is routed:
 //!
 //! ```text
 //!   -> {"id": 10, "op": "mul", "w": 8, "route": "host", "a": [3], "b": [-2]}
@@ -347,7 +350,8 @@ fn route_field(v: &Json) -> Result<Route> {
     match v.get("route") {
         None => Ok(Route::Auto),
         Some(Json::Str(s)) => {
-            Route::parse(s).ok_or_else(|| anyhow!("unknown route {s:?} (pim, host or auto)"))
+            Route::parse(s)
+                .ok_or_else(|| anyhow!("unknown route {s:?} (pim, host, auto or split)"))
         }
         Some(_) => bail!("route must be a string"),
     }
@@ -1211,6 +1215,12 @@ mod tests {
         .unwrap();
         let Request::Compute(r) = r else { panic!("not compute") };
         assert_eq!(r.route, Route::Pim);
+        let r = parse_request(
+            r#"{"id": 6, "op": "dot", "w": 8, "route": "split", "a": [1], "b": [2]}"#,
+        )
+        .unwrap();
+        let Request::Compute(r) = r else { panic!("not compute") };
+        assert_eq!(r.route, Route::Split);
         // absent -> auto; the model decides
         let r = parse_request(r#"{"id": 3, "op": "add", "w": 8, "a": [1], "b": [2]}"#).unwrap();
         let Request::Compute(r) = r else { panic!("not compute") };
@@ -1281,11 +1291,27 @@ mod tests {
             .map(|x| x.as_i64().unwrap())
             .collect();
         assert_eq!(got, vec![-6, 20], "pim route returns the identical bits");
+        // "split" is accepted on the wire and stays bit-exact (on a
+        // one-worker farm the planner may degenerate to a pure route;
+        // either way the values are identical)
+        let v = ask(r#"{"id": 4, "op": "mul", "w": 8, "route": "split", "a": [3, 4], "b": [-2, 5]}"#);
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let got: Vec<i64> = v
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_i64().unwrap())
+            .collect();
+        assert_eq!(got, vec![-6, 20], "split route returns the identical bits");
         // the routing split is observable from the wire
         let v = ask(r#"{"id": 3, "op": "stats"}"#);
         let stats = v.get("stats").and_then(Json::as_str).unwrap();
         assert!(stats.contains("host_jobs=1"), "{stats}");
-        assert!(stats.contains("pim_jobs=1"), "{stats}");
+        assert!(stats.contains("pim_jobs="), "{stats}");
+        assert!(stats.contains("split_jobs="), "{stats}");
+        assert!(stats.contains("split_rebalances="), "{stats}");
         server.stop();
     }
 

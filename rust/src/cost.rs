@@ -30,7 +30,7 @@ use crate::fabric::blocks::{
 use crate::util::json::Json;
 use crate::util::SoftBf16;
 use std::path::Path;
-use std::sync::OnceLock;
+use std::sync::{OnceLock, RwLock};
 use std::time::Instant;
 
 /// Which cycle account to evaluate with.
@@ -253,6 +253,15 @@ pub struct HostCostModel {
     /// bookkeeping). Default, not fitted: measuring it would need the
     /// whole farm, and its only role is a small-shape tiebreak.
     pub pim_dispatch_ns: f64,
+    /// Online EWMA correction applied to the integer host rates
+    /// ([`HostCostModel::observe`]): dimensionless, starts at 1.0, clamped
+    /// to `[OBSERVE_SCALE_MIN, OBSERVE_SCALE_MAX]`. The startup fit only
+    /// sees unloaded single-threaded microbenchmarks; observed per-job
+    /// `(predicted, executed)` pairs pull the rates toward the machine's
+    /// live behavior so the split point tracks reality, not calibration.
+    pub int_scale: f64,
+    /// Online EWMA correction applied to the bf16 host rates.
+    pub bf16_scale: f64,
 }
 
 impl Default for HostCostModel {
@@ -267,9 +276,24 @@ impl Default for HostCostModel {
             sim_ns_per_cycle: 30.0,
             ns_per_io_byte: 0.2,
             pim_dispatch_ns: 2000.0,
+            int_scale: 1.0,
+            bf16_scale: 1.0,
         }
     }
 }
+
+/// EWMA smoothing factor for [`HostCostModel::observe`]: each observation
+/// moves the dtype's correction scale a quarter of the way toward the
+/// observed predicted-vs-actual ratio.
+pub const OBSERVE_ALPHA: f64 = 0.25;
+/// Per-observation clamp on the `actual / predicted` ratio: one wild
+/// outlier (a descheduled thread, a cold cache) can move a scale by at
+/// most this factor's worth of EWMA step.
+pub const OBSERVE_RATIO_CLAMP: (f64, f64) = (0.25, 4.0);
+/// Absolute clamp on the correction scales: online feedback may swing a
+/// rate class by at most 8x in either direction from its fitted value, so
+/// a pathological feedback stream can never price a side into oblivion.
+pub const OBSERVE_SCALE_CLAMP: (f64, f64) = (0.125, 8.0);
 
 impl HostCostModel {
     /// Fit the measurable rates at startup: time each host calibration
@@ -306,17 +330,58 @@ impl HostCostModel {
         m
     }
 
-    /// The process-wide model the coordinator routes with: fitted once on
-    /// first use, then refined from `BENCH_serving.json` when the perf
-    /// trajectory holds higher-quality calibration measurements (missing
-    /// or stale files are ignored — the quick fit stands).
-    pub fn calibrated() -> &'static HostCostModel {
-        static MODEL: OnceLock<HostCostModel> = OnceLock::new();
+    /// The process-wide model behind [`HostCostModel::calibrated`] /
+    /// [`HostCostModel::observe_global`]: fitted once on first use, then
+    /// refined from `BENCH_serving.json` when the perf trajectory holds
+    /// higher-quality calibration measurements (missing or stale files are
+    /// ignored — the quick fit stands), then corrected online as jobs
+    /// complete.
+    fn global() -> &'static RwLock<HostCostModel> {
+        static MODEL: OnceLock<RwLock<HostCostModel>> = OnceLock::new();
         MODEL.get_or_init(|| {
             let mut m = HostCostModel::fit();
             m.refresh_from_trajectory(&crate::util::benchkit::bench_json_path());
-            m
+            RwLock::new(m)
         })
+    }
+
+    /// A snapshot of the process-wide model the coordinator routes with.
+    /// The struct is `Copy`; callers price a whole plan against one
+    /// consistent snapshot rather than holding the lock across planning.
+    pub fn calibrated() -> HostCostModel {
+        *Self::global().read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Feed one completed job's `(predicted, actual)` wall-clock pair back
+    /// into the process-wide model (see [`HostCostModel::observe`]).
+    pub fn observe_global(dtype: Dtype, predicted_ns: f64, actual_ns: f64) {
+        let mut m = Self::global().write().unwrap_or_else(|e| e.into_inner());
+        m.observe(dtype, predicted_ns, actual_ns);
+    }
+
+    /// Online EWMA rate correction: one observed `(predicted, actual)`
+    /// wall-clock pair for a completed job of `dtype` nudges that dtype
+    /// class's correction scale toward the observed ratio. Both the
+    /// per-observation ratio and the cumulative scale are clamped
+    /// ([`OBSERVE_RATIO_CLAMP`], [`OBSERVE_SCALE_CLAMP`]), so repeated
+    /// one-sided feedback converges to the scale clamp instead of running
+    /// away, and garbage inputs (non-finite, non-positive) are ignored.
+    pub fn observe(&mut self, dtype: Dtype, predicted_ns: f64, actual_ns: f64) {
+        if !predicted_ns.is_finite()
+            || !actual_ns.is_finite()
+            || predicted_ns <= 0.0
+            || actual_ns <= 0.0
+        {
+            return;
+        }
+        let (rlo, rhi) = OBSERVE_RATIO_CLAMP;
+        let ratio = (actual_ns / predicted_ns).clamp(rlo, rhi);
+        let scale = match dtype {
+            Dtype::Bf16 => &mut self.bf16_scale,
+            _ => &mut self.int_scale,
+        };
+        let (slo, shi) = OBSERVE_SCALE_CLAMP;
+        *scale = (*scale * (1.0 - OBSERVE_ALPHA + OBSERVE_ALPHA * ratio)).clamp(slo, shi);
     }
 
     /// Refresh fitted rates from a persisted perf trajectory (the
@@ -354,12 +419,15 @@ impl HostCostModel {
         updated
     }
 
-    /// Predicted host wall-clock (ns) for a [`HostOp`]'s work summary.
+    /// Predicted host wall-clock (ns) for a [`HostOp`]'s work summary,
+    /// including the online per-dtype EWMA corrections.
     pub fn host_ns(&self, work: HostWork) -> f64 {
-        work.int_ew as f64 * self.ns_per_int_ew
-            + work.int_mac as f64 * self.ns_per_int_mac
-            + work.bf16_ew as f64 * self.ns_per_bf16_ew
-            + work.bf16_mac as f64 * self.ns_per_bf16_mac
+        (work.int_ew as f64 * self.ns_per_int_ew
+            + work.int_mac as f64 * self.ns_per_int_mac)
+            * self.int_scale
+            + (work.bf16_ew as f64 * self.ns_per_bf16_ew
+                + work.bf16_mac as f64 * self.ns_per_bf16_mac)
+                * self.bf16_scale
     }
 
     /// Predicted PIM wall-clock (ns) for a planned job: `n_tasks` block
@@ -530,6 +598,45 @@ mod tests {
         }
         let kernel = CompiledKernel::compile(cal_sim_kernel_key());
         assert!(kernel_cycles(&kernel).unwrap_or(0) > 0, "cal kernel traces");
+    }
+
+    #[test]
+    fn observe_applies_clamped_ewma_per_dtype() {
+        // one 2x-slow int8 observation moves the int scale by exactly one
+        // EWMA step and leaves bf16 untouched
+        let mut m = HostCostModel::default();
+        m.observe(Dtype::INT8, 100.0, 200.0);
+        let one_step = 1.0 - OBSERVE_ALPHA + OBSERVE_ALPHA * 2.0;
+        assert!((m.int_scale - one_step).abs() < 1e-12, "int {}", m.int_scale);
+        assert_eq!(m.bf16_scale, 1.0);
+        let work = HostWork { int_ew: 100, int_mac: 0, bf16_ew: 0, bf16_mac: 0 };
+        let expect = 100.0 * m.ns_per_int_ew * m.int_scale;
+        assert!((m.host_ns(work) - expect).abs() < 1e-9, "scale prices in");
+
+        // a wild outlier is ratio-clamped: 1000x actual steps as if 4x
+        let mut m2 = HostCostModel::default();
+        m2.observe(Dtype::INT8, 1.0, 1000.0);
+        let capped = 1.0 - OBSERVE_ALPHA + OBSERVE_ALPHA * OBSERVE_RATIO_CLAMP.1;
+        assert!((m2.int_scale - capped).abs() < 1e-12);
+
+        // repeated one-sided feedback converges to the scale clamp (and
+        // stays there) instead of running away; dtype classes independent
+        let (mut hi, mut lo) = (HostCostModel::default(), HostCostModel::default());
+        for _ in 0..200 {
+            hi.observe(Dtype::INT8, 100.0, 1e9);
+            lo.observe(Dtype::Bf16, 1e9, 100.0);
+        }
+        assert_eq!(hi.int_scale, OBSERVE_SCALE_CLAMP.1, "converges to the cap");
+        assert_eq!(lo.bf16_scale, OBSERVE_SCALE_CLAMP.0, "converges to the floor");
+        assert_eq!(hi.bf16_scale, 1.0);
+        assert_eq!(lo.int_scale, 1.0);
+
+        // garbage pairs are ignored outright
+        let mut g = HostCostModel::default();
+        g.observe(Dtype::INT8, 0.0, 50.0);
+        g.observe(Dtype::INT8, 50.0, f64::NAN);
+        g.observe(Dtype::Bf16, -1.0, 50.0);
+        assert_eq!(g, HostCostModel::default());
     }
 
     #[test]

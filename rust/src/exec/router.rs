@@ -12,8 +12,9 @@
 //! This module contributes the pieces that are independent of the
 //! coordinator:
 //!
-//! * [`Route`] — the per-request policy knob (`pim` / `host` / `auto`)
-//!   carried on the wire and through [`crate::coordinator::Coordinator`].
+//! * [`Route`] — the per-request policy knob (`pim` / `host` / `auto` /
+//!   `split`) carried on the wire and through
+//!   [`crate::coordinator::Coordinator`].
 //! * [`HostOp`] — a specialized, allocation-lean host kernel per hot op
 //!   (int add/sub/mul/dot/matmul, bf16 ew/dot/matmul over
 //!   [`SoftBf16`]). Each kernel reproduces the block result **bit
@@ -48,18 +49,27 @@ pub enum Route {
     /// live on the fabric fall back to PIM — shipping a resident tensor
     /// to the host just to compute would defeat the placement layer).
     Host,
-    /// Let the calibrated cost model pick the cheaper side per op.
+    /// Let the calibrated cost model pick the cheapest execution per op:
+    /// pure PIM, pure host, or a task-granular split of the plan across
+    /// both pools when co-execution beats either pure side.
     #[default]
     Auto,
+    /// Force the task-granular split planner: each movable task of the
+    /// plan is assigned to the pool the makespan-minimizing water-fill
+    /// picks (tasks touching resident data stay PIM, host-only payloads
+    /// stay host). Degenerates to a pure route when one pool ends empty.
+    Split,
 }
 
 impl Route {
-    /// Parse the wire-level spelling (`"pim"` / `"host"` / `"auto"`).
+    /// Parse the wire-level spelling (`"pim"` / `"host"` / `"auto"` /
+    /// `"split"`).
     pub fn parse(s: &str) -> Option<Route> {
         match s {
             "pim" => Some(Route::Pim),
             "host" => Some(Route::Host),
             "auto" => Some(Route::Auto),
+            "split" => Some(Route::Split),
             _ => None,
         }
     }
@@ -70,6 +80,7 @@ impl Route {
             Route::Pim => "pim",
             Route::Host => "host",
             Route::Auto => "auto",
+            Route::Split => "split",
         }
     }
 }
@@ -307,7 +318,7 @@ mod tests {
 
     #[test]
     fn route_parse_display_roundtrip() {
-        for r in [Route::Pim, Route::Host, Route::Auto] {
+        for r in [Route::Pim, Route::Host, Route::Auto, Route::Split] {
             assert_eq!(Route::parse(r.as_str()), Some(r));
             assert_eq!(r.to_string(), r.as_str());
         }

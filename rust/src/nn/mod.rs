@@ -302,8 +302,10 @@ impl MlpInt8 {
     /// Forward pass under an explicit execution route: `Route::Pim` pins
     /// the matmuls to the blocks, `Route::Host` asks for the calibrated
     /// host fast path (resident weights stay on the fabric regardless),
-    /// and `Route::Auto` lets the cost model pick per job. All three are
-    /// bit-identical to [`MlpInt8::forward_host`].
+    /// `Route::Auto` lets the cost model pick per job, and `Route::Split`
+    /// co-executes the PIM and host halves of each layer under the
+    /// makespan-minimizing task split. All routes are bit-identical to
+    /// [`MlpInt8::forward_host`].
     pub fn forward_routed(
         &self,
         coord: &Coordinator,
@@ -1080,7 +1082,7 @@ mod tests {
         let x: Vec<Vec<i64>> =
             (0..10).map(|_| (0..48).map(|_| rng.int(8)).collect()).collect();
         let host = mlp.forward_host(&x);
-        for route in [Route::Pim, Route::Host, Route::Auto] {
+        for route in [Route::Pim, Route::Host, Route::Auto, Route::Split] {
             let got = mlp.forward_routed(&c, &x, route).unwrap();
             assert_eq!(got, host, "route {route} must be bit-exact");
         }
@@ -1099,7 +1101,7 @@ mod tests {
             .map(|_| (0..14).map(|_| SoftBf16::from_f32(rng.int(5) as f32)).collect())
             .collect();
         let host = mlp.forward_host(&x);
-        for route in [Route::Pim, Route::Host, Route::Auto] {
+        for route in [Route::Pim, Route::Host, Route::Auto, Route::Split] {
             let got = mlp.forward_routed(&c, &x, route).unwrap();
             assert_eq!(got, host, "route {route} must be bit-exact");
         }

@@ -232,7 +232,7 @@ fn prop_chosen_candidate_never_scores_worse_than_the_incumbent() {
             reserve_step: rng.range(8, 128),
             max_moves: rng.range(1, 10),
         };
-        let report = optimizer::choose(&snap, &policy, model, 416);
+        let report = optimizer::choose(&snap, &policy, &model, 416);
         assert!(
             report.chosen_score <= report.incumbent_score + 1e-9,
             "seed {seed}: chosen {} > incumbent {} ({} candidates)",

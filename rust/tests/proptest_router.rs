@@ -1,5 +1,5 @@
 //! Differential property tests for the hybrid execution router: every
-//! route (`pim` / `host` / `auto`) must return bit-identical values for
+//! route (`pim` / `host` / `auto` / `split`) must return bit-identical values for
 //! every op class at every dtype (int4 / int8 / bf16), inline and
 //! resident; the analytic cycle prediction must equal the executed trace
 //! cycles *exactly*; and the calibrated host-time prediction must land
@@ -89,7 +89,7 @@ fn prop_every_route_is_bit_exact_for_every_op_and_dtype() {
             let payload = payload_case(&mut rng, class, w);
             let base = c.run_routed(Job { id: 0, payload: payload.clone() }, Route::Pim).unwrap();
             assert!(!base.host_routed, "class {class} w={w} case {case}: pim stays on-fabric");
-            for route in [Route::Host, Route::Auto] {
+            for route in [Route::Host, Route::Auto, Route::Split] {
                 let r = c.run_routed(Job { id: 0, payload: payload.clone() }, route).unwrap();
                 assert_eq!(
                     base.values, r.values,
@@ -209,7 +209,7 @@ fn prop_predicted_pim_cycles_equal_executed_trace_cycles() {
         );
         // the auto route carries the same prediction into the result
         let ra = c.run_routed(Job { id: 0, payload }, Route::Auto).unwrap();
-        if !ra.host_routed {
+        if !ra.host_routed && !ra.split_routed {
             assert_eq!(
                 ra.predicted_cycles,
                 Some(ra.stats.cycles),

@@ -1,0 +1,229 @@
+//! Differential property tests for the task-granular split planner:
+//! `Route::Split` must return values bit-identical to pure PIM *and* the
+//! pure host fast path for every inline op class; the planner's per-task
+//! assignment must keep resident-pinned tasks on the fabric no matter how
+//! cheap the model prices the host; and the predicted makespan must equal
+//! the max of the two pools' predicted totals exactly.
+//!
+//! Harness: the same hand-rolled SplitMix64 property style as
+//! `proptest_router.rs` (offline build; failing cases print their seed).
+
+use comperam::bitline::Geometry;
+use comperam::coordinator::job::EwOp;
+use comperam::coordinator::mapper::{self, BlockTask, PlanEnv};
+use comperam::coordinator::{Coordinator, Job, JobPayload, OperandRef};
+use comperam::cost::HostCostModel;
+use comperam::exec::{Dtype, PlacementMap, Route};
+use comperam::util::{Prng, SoftBf16};
+use comperam::KernelCache;
+
+fn iv(rng: &mut Prng, w: u32, n: usize) -> Vec<i64> {
+    (0..n).map(|_| rng.int(w)).collect()
+}
+
+fn bv(rng: &mut Prng, n: usize) -> Vec<SoftBf16> {
+    (0..n).map(|_| SoftBf16::from_f32(rng.int(6) as f32)).collect()
+}
+
+/// One random inline payload of the given class, sized to span several
+/// block tasks so the water-fill has something to balance.
+fn payload_case(rng: &mut Prng, class: usize, w: u32) -> JobPayload {
+    match class {
+        0 => {
+            let op = [EwOp::Add, EwOp::Sub, EwOp::Mul][rng.range(0, 3)];
+            let n = rng.range(200, 2500);
+            JobPayload::IntElementwise { op, w, a: iv(rng, w, n), b: iv(rng, w, n) }
+        }
+        1 => {
+            let k = rng.range(2, 35);
+            let n = rng.range(20, 200);
+            JobPayload::IntDot {
+                w,
+                a: (0..k).map(|_| iv(rng, w, n)).collect(),
+                b: (0..k).map(|_| iv(rng, w, n)).collect(),
+            }
+        }
+        2 => {
+            let n = rng.range(100, 900);
+            JobPayload::Bf16Elementwise { mul: rng.chance(0.5), a: bv(rng, n), b: bv(rng, n) }
+        }
+        _ => {
+            let k = rng.range(2, 12);
+            let n = rng.range(10, 60);
+            JobPayload::Bf16Dot {
+                a: (0..k).map(|_| bv(rng, n)).collect(),
+                b: (0..k).map(|_| bv(rng, n)).collect(),
+            }
+        }
+    }
+}
+
+/// A model that makes splitting attractive: a flat 1us dispatch price per
+/// PIM task (sim and io rates zeroed) against a priced host — the same
+/// rigging as the mapper's split unit test, so genuine two-pool splits
+/// are reachable from small payloads.
+fn split_happy_model() -> HostCostModel {
+    HostCostModel {
+        ns_per_int_mac: 4.0,
+        sim_ns_per_cycle: 0.0,
+        ns_per_io_byte: 0.0,
+        pim_dispatch_ns: 1000.0,
+        ..HostCostModel::default()
+    }
+}
+
+#[test]
+fn prop_split_route_is_bit_exact_vs_both_pure_routes() {
+    let c = Coordinator::new(Geometry::G512x40, 4);
+    let mut rng = Prng::new(0x59117B17);
+    let combos: Vec<(usize, u32)> = (0..2)
+        .flat_map(|class| [4u32, 8].map(|w| (class, w)))
+        .chain((2..4).map(|class| (class, 16)))
+        .collect();
+    for (class, w) in combos {
+        for case in 0..4u64 {
+            let payload = payload_case(&mut rng, class, w);
+            let pim = c.run_routed(Job { id: 0, payload: payload.clone() }, Route::Pim).unwrap();
+            let host = c.run_routed(Job { id: 0, payload: payload.clone() }, Route::Host).unwrap();
+            assert_eq!(
+                pim.values, host.values,
+                "class {class} w={w} case {case}: pure routes disagree"
+            );
+            let split = c.run_routed(Job { id: 0, payload }, Route::Split).unwrap();
+            assert_eq!(
+                pim.values, split.values,
+                "class {class} w={w} case {case}: split diverged from the pure routes"
+            );
+            if split.split_routed {
+                assert!(
+                    split.predicted_makespan_ns.unwrap_or(0.0) > 0.0,
+                    "class {class} w={w} case {case}: split jobs carry their makespan"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_split_predicted_makespan_is_the_max_of_its_pools() {
+    let geom = Geometry::G512x40;
+    let env = PlanEnv::bare(geom);
+    let cache = KernelCache::new();
+    let model = split_happy_model();
+    let mut rng = Prng::new(0xA11C0DE);
+    let mut genuine_splits = 0usize;
+    // the mapper's known-good split shape first, then random ones
+    let mut cases: Vec<JobPayload> = vec![JobPayload::IntDot {
+        w: 8,
+        a: (0..8).map(|_| iv(&mut rng, 8, 100)).collect(),
+        b: (0..8).map(|_| iv(&mut rng, 8, 100)).collect(),
+    }];
+    for _ in 0..24 {
+        let class = rng.range(0, 4);
+        let w = [4u32, 8][rng.range(0, 2)];
+        cases.push(payload_case(&mut rng, class, w));
+    }
+    for (case, payload) in cases.iter().enumerate() {
+        let rp = mapper::plan_routed(&env, payload, Route::Split, &cache, &model).unwrap();
+        let d = &rp.decision;
+        assert!(
+            rp.twins.is_empty() || rp.twins.len() == rp.plan.tasks.len(),
+            "case {case}: twins must be absent or task-aligned"
+        );
+        let Some(assignment) = d.assignment.as_ref() else {
+            panic!("case {case}: inline serving payloads are traceable, split must price them");
+        };
+        assert_eq!(assignment.len(), rp.plan.tasks.len(), "case {case}");
+        // the decision's makespan is exactly the max of its two pools
+        let (pim_ns, host_ns) = (d.predicted_pim_ns.unwrap(), d.predicted_host_ns.unwrap());
+        assert_eq!(
+            d.predicted_makespan_ns.unwrap(),
+            pim_ns.max(host_ns),
+            "case {case}: makespan must be the max of the pools"
+        );
+        // the assignment is the plan: host-assigned tasks are host tasks
+        let mut n_host = 0usize;
+        for (i, task) in rp.plan.tasks.iter().enumerate() {
+            let is_host = matches!(task, BlockTask::Host(_));
+            assert_eq!(
+                assignment[i] == Route::Host,
+                is_host,
+                "case {case} task {i}: assignment and materialized plan disagree"
+            );
+            n_host += is_host as usize;
+        }
+        match d.taken {
+            Route::Split => {
+                assert!(
+                    n_host > 0 && n_host < rp.plan.tasks.len(),
+                    "case {case}: a genuine split fills both pools"
+                );
+                genuine_splits += 1;
+            }
+            Route::Host => assert_eq!(n_host, rp.plan.tasks.len(), "case {case}"),
+            _ => {
+                assert_eq!(n_host, 0, "case {case}: degenerate pim split has no host tasks");
+                assert!(rp.twins.is_empty(), "case {case}: pure routes carry no twins");
+            }
+        }
+    }
+    assert!(
+        genuine_splits >= 1,
+        "the rigged model must produce at least one genuine two-pool split"
+    );
+}
+
+#[test]
+fn prop_split_assignment_respects_resident_pinning() {
+    let geom = Geometry::G512x40;
+    let cache = KernelCache::new();
+    // price the host absurdly cheap and the fabric absurdly dear: any
+    // movable task would leave, so whatever stays PIM stays because it
+    // is pinned to resident data
+    let model = HostCostModel {
+        ns_per_int_ew: 0.0001,
+        ns_per_int_mac: 0.0001,
+        sim_ns_per_cycle: 100.0,
+        pim_dispatch_ns: 1_000_000.0,
+        ..HostCostModel::default()
+    };
+    let mut rng = Prng::new(0xF1A7ED);
+    for case in 0..12u64 {
+        let placement = PlacementMap::new(2, geom, 192);
+        let w = [4u32, 8][rng.range(0, 2)];
+        let n = rng.range(100, 2500);
+        let h = placement.register(Dtype::Int { w }, n);
+        let env =
+            PlanEnv { geom, compute_rows: placement.compute_rows(), placement: Some(&placement) };
+        let payload = JobPayload::IntElementwiseRef {
+            op: [EwOp::Add, EwOp::Sub, EwOp::Mul][rng.range(0, 3)],
+            w,
+            a: OperandRef::Tensor(h),
+            b: OperandRef::Values(iv(&mut rng, w, n)),
+        };
+        let rp = mapper::plan_routed(&env, &payload, Route::Split, &cache, &model).unwrap();
+        let assignment = rp.decision.assignment.as_ref();
+        for (i, task) in rp.plan.tasks.iter().enumerate() {
+            if task.resident_slices().is_empty() {
+                continue;
+            }
+            assert!(
+                !matches!(task, BlockTask::Host(_)),
+                "case {case} w={w} n={n} task {i}: fabric data cannot leave for the host"
+            );
+            if let Some(assignment) = assignment {
+                assert_eq!(
+                    assignment[i],
+                    Route::Pim,
+                    "case {case} w={w} n={n} task {i}: resident task left the PIM pool"
+                );
+            }
+            if !rp.twins.is_empty() {
+                assert!(
+                    rp.twins[i].is_none(),
+                    "case {case} w={w} n={n} task {i}: pinned tasks carry no cross-pool twin"
+                );
+            }
+        }
+    }
+}
